@@ -1,0 +1,86 @@
+//! Codesign comparison (experiment E3, across the whole workload library):
+//! enumerated hardware–software splits vs the related-work baseline of one
+//! engine per kernel type (Hadjis & Olukotun, FPL'19 — the paper's §4).
+//!
+//! For each workload, prints the baseline point and the best enumerated
+//! design at (a) the baseline's area budget and (b) unlimited area — the
+//! concrete version of the paper's claim that rewriting finds "more
+//! complex (but potentially more profitable) splits".
+//!
+//! ```sh
+//! cargo run --release --example codesign_compare
+//! ```
+
+use hwsplit::coordinator::{explore, ExploreConfig, RuleSet};
+use hwsplit::egraph::RunnerLimits;
+use hwsplit::relay::all_workloads;
+use hwsplit::report::{fmt_f64, Table};
+
+fn main() {
+    let mut t = Table::new(
+        "enumerated splits vs one-engine-per-kernel-type baseline",
+        &[
+            "workload",
+            "base-area",
+            "base-lat",
+            "best-lat@base-area",
+            "speedup",
+            "best-lat-any",
+            "min-area(<=base-lat)",
+            "area-ratio",
+        ],
+    );
+
+    for w in all_workloads() {
+        let cfg = ExploreConfig {
+            iters: 5,
+            samples: 48,
+            rules: RuleSet::Paper,
+            limits: RunnerLimits { max_nodes: 50_000, ..Default::default() },
+            ..Default::default()
+        };
+        let ex = explore(&w, &cfg);
+        let b = &ex.baseline.cost;
+
+        // Best latency among designs within the baseline's area budget.
+        let within = ex
+            .designs
+            .iter()
+            .filter(|d| d.point.cost.area <= b.area * 1.0001)
+            .map(|d| d.point.cost.latency)
+            .fold(f64::INFINITY, f64::min);
+        // Best latency anywhere.
+        let best = ex
+            .designs
+            .iter()
+            .map(|d| d.point.cost.latency)
+            .fold(f64::INFINITY, f64::min);
+        // Smallest area at baseline-or-better latency.
+        let min_area = ex
+            .designs
+            .iter()
+            .filter(|d| d.point.cost.latency <= b.latency * 1.0001)
+            .map(|d| d.point.cost.area)
+            .fold(f64::INFINITY, f64::min);
+
+        t.row(&[
+            w.name.to_string(),
+            fmt_f64(b.area),
+            fmt_f64(b.latency),
+            fmt_f64(within),
+            if within.is_finite() { format!("{:.2}x", b.latency / within) } else { "-".into() },
+            fmt_f64(best),
+            fmt_f64(min_area),
+            if min_area.is_finite() {
+                format!("{:.2}x", b.area / min_area)
+            } else {
+                "-".into()
+            },
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "\nspeedup  = baseline latency / best enumerated latency at the same area budget\n\
+         area-ratio = baseline area / smallest enumerated area at the same latency"
+    );
+}

@@ -1,0 +1,92 @@
+//! Full design-space exploration of the LeNet workload: the paper's §3
+//! evaluation methodology made concrete.
+//!
+//! Pipeline: Relay graph → EngineIR reification → rewrite enumeration →
+//! diverse design sampling → analytic + simulated evaluation on a worker
+//! pool → Pareto frontier vs the one-engine-per-kernel-type baseline.
+//!
+//! ```sh
+//! cargo run --release --example explore_lenet
+//! ```
+
+use hwsplit::coordinator::{explore, ExploreConfig, RuleSet};
+use hwsplit::egraph::RunnerLimits;
+use hwsplit::relay::workloads;
+use hwsplit::report::{fmt_f64, Table};
+
+fn main() {
+    let w = workloads::lenet();
+    let cfg = ExploreConfig {
+        iters: 5,
+        samples: 48,
+        rules: RuleSet::Paper,
+        limits: RunnerLimits { max_nodes: 60_000, ..Default::default() },
+        ..Default::default()
+    };
+    println!("exploring `{}` ({} Relay ops) with {:?} rules…\n", w.name, w.expr.len(), cfg.rules);
+    let ex = explore(&w, &cfg);
+
+    println!("enumeration:");
+    println!("{}", ex.report.table());
+
+    // Diversity: the structural spread of the sampled designs (E2).
+    let mut t = Table::new(
+        "design diversity (E2)",
+        &["origin", "engines", "instances", "invokes", "depth", "loops", "pars", "bufKB"],
+    );
+    for d in &ex.designs {
+        let s = &d.point.stats;
+        t.row(&[
+            d.point.origin.clone(),
+            s.engines.to_string(),
+            format!("{:.0}", s.engine_instances),
+            s.invokes.to_string(),
+            s.sched_depth.to_string(),
+            s.loops.to_string(),
+            s.pars.to_string(),
+            format!("{:.1}", s.buffer_bytes / 1024.0),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // Mean pairwise distance — one number for "how diverse".
+    let pts = &ex.designs;
+    let mut dist = 0.0;
+    let mut n = 0;
+    for i in 0..pts.len() {
+        for j in i + 1..pts.len() {
+            dist += pts[i].point.stats.distance(&pts[j].point.stats);
+            n += 1;
+        }
+    }
+    println!("mean pairwise design distance: {:.3}\n", dist / n.max(1) as f64);
+
+    // Usefulness: Pareto frontier vs baseline (E3).
+    let mut f = Table::new(
+        "Pareto frontier vs one-engine-per-kernel-type baseline (E3)",
+        &["design", "area", "latency", "sim-cycles", "util%"],
+    );
+    for p in &ex.frontier {
+        let sim = ex
+            .designs
+            .iter()
+            .find(|d| d.point.origin == p.origin)
+            .map(|d| (d.sim.cycles, d.sim.utilization));
+        f.row(&[
+            p.origin.clone(),
+            fmt_f64(p.cost.area),
+            fmt_f64(p.cost.latency),
+            sim.map(|s| fmt_f64(s.0)).unwrap_or_default(),
+            sim.map(|s| format!("{:.0}", s.1 * 100.0)).unwrap_or_default(),
+        ]);
+    }
+    f.row(&[
+        "BASELINE (FPL'19)".into(),
+        fmt_f64(ex.baseline.cost.area),
+        fmt_f64(ex.baseline.cost.latency),
+        String::new(),
+        String::new(),
+    ]);
+    print!("{}", f.render());
+    println!("{}", ex.frontier_vs_baseline());
+}

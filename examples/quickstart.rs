@@ -1,0 +1,54 @@
+//! Quickstart: the paper's Fig. 2, replayed end to end.
+//!
+//! A single 128-wide ReLU invocation is enumerated with the paper's two
+//! rewrites (shrink-engine-add-loop; parallelize-loop-add-hardware); the
+//! e-graph then holds the whole time/space-multiplexing spectrum at once.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use hwsplit::cost::{analyze, CostParams};
+use hwsplit::egraph::Runner;
+use hwsplit::extract::{sample_designs, Extractor};
+use hwsplit::ir::parse_expr;
+use hwsplit::rewrites;
+use hwsplit::tensor::{eval_expr, Env};
+
+fn main() {
+    // The Fig. 2 starting point: one invocation of one 128-wide ReLU unit.
+    let program = parse_expr("(invoke-relu (relu-engine 128) (input x [128]))").unwrap();
+    println!("initial program:\n  {program}\n");
+
+    // Enumerate with the paper's two rewrites.
+    let mut runner = Runner::new(program.clone(), rewrites::fig2_rules());
+    let report = runner.run(8);
+    println!("e-graph growth per rewrite iteration:");
+    println!("{}", report.table());
+
+    // Pull out some of the equivalent designs the e-graph now represents.
+    let params = CostParams::default();
+    let points = sample_designs(&runner.egraph, runner.root, 16, &params);
+    println!("{} distinct designs sampled; a few of them:\n", points.len());
+    for p in points.iter().take(6) {
+        println!("  area={:>8.1} latency={:>7.1}  {}", p.cost.area, p.cost.latency, p.expr);
+    }
+
+    // Every design computes the same function (differential check).
+    let want = eval_expr(&program, &mut Env::random_for(&program, 7)).unwrap();
+    for p in &points {
+        let got = eval_expr(&p.expr, &mut Env::random_for(&p.expr, 7)).unwrap();
+        assert!(want.allclose(&got, 1e-5), "a sampled design diverged!");
+    }
+    println!("\nall {} sampled designs are functionally identical ✔", points.len());
+
+    // The two extremes the paper describes: lots of hardware vs deep loops.
+    let fast = Extractor::new(&runner.egraph, hwsplit::extract::latency_cost)
+        .extract(&runner.egraph, runner.root);
+    let small = Extractor::new(&runner.egraph, hwsplit::extract::area_cost)
+        .extract(&runner.egraph, runner.root);
+    let (cf, _) = analyze(&fast, &params);
+    let (cs, _) = analyze(&small, &params);
+    println!("\nlatency-optimal: area={:.1} latency={:.1}\n  {fast}", cf.area, cf.latency);
+    println!("\narea-optimal:    area={:.1} latency={:.1}\n  {small}", cs.area, cs.latency);
+}

@@ -1,0 +1,3 @@
+"""Build-time Python package: Layer-1 Pallas engine kernels, the Layer-2
+JAX workload models, and the AOT lowering that emits `artifacts/*.hlo.txt`
+for the Rust runtime. Never imported on the request path."""

@@ -1,0 +1,210 @@
+"""AOT lowering: Layer-1/2 JAX programs -> HLO *text* artifacts for the
+Rust PJRT runtime.
+
+Run once at build time (`make artifacts`); the Rust binary is self-contained
+afterwards. Python never executes on the request path.
+
+Interchange format is HLO TEXT, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` crate links) rejects; the text parser reassigns
+ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifact naming (must match `rust/src/runtime/mod.rs::artifact_name`):
+
+    mm_{m}x{k}x{n}.hlo.txt
+    mmrelu_{m}x{k}x{n}.hlo.txt
+    relu_{w}.hlo.txt
+    add_{w}.hlo.txt
+    conv_{oh}x{ow}x{c}x{k}x{kh}x{s}.hlo.txt
+    pool_{oh}x{ow}x{c}x{k}x{s}.hlo.txt
+    model_mlp.hlo.txt                      (full Layer-2 forward)
+
+`manifest.txt` lists every emitted artifact (one name per line); the Rust
+runtime reads it to know what is available.
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import (
+    add_engine,
+    conv_engine,
+    mm_engine,
+    mm_relu_engine,
+    pool_engine,
+    relu_engine,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """jax.jit(...).lower(...) -> XLA HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+# ----------------------------------------------------------------------
+# Engine spec registry: spec string -> (artifact name, fn, example args)
+# ----------------------------------------------------------------------
+
+
+def build_engine(spec: str):
+    """Parse an engine spec like 'mm 1 784 128' into (name, fn, args)."""
+    parts = spec.split()
+    kind, params = parts[0], [int(p) for p in parts[1:]]
+    if kind == "mm":
+        m, k, n = params
+        return f"mm_{m}x{k}x{n}", mm_engine(m, k, n), (f32(m, k), f32(k, n))
+    if kind == "mmrelu":
+        m, k, n = params
+        return f"mmrelu_{m}x{k}x{n}", mm_relu_engine(m, k, n), (f32(m, k), f32(k, n))
+    if kind == "relu":
+        (w,) = params
+        return f"relu_{w}", relu_engine(w), (f32(w),)
+    if kind == "add":
+        (w,) = params
+        return f"add_{w}", add_engine(w), (f32(w), f32(w))
+    if kind == "conv":
+        oh, ow, c, k, kh, s = params
+        ih, iw = (oh - 1) * s + kh, (ow - 1) * s + kh
+        return (
+            f"conv_{oh}x{ow}x{c}x{k}x{kh}x{s}",
+            conv_engine(oh, ow, c, k, kh, s),
+            (f32(c, ih, iw), f32(k, c, kh, kh)),
+        )
+    if kind == "pool":
+        oh, ow, c, k, s = params
+        ih, iw = (oh - 1) * s + k, (ow - 1) * s + k
+        return f"pool_{oh}x{ow}x{c}x{k}x{s}", pool_engine(oh, ow, c, k, s), (f32(c, ih, iw),)
+    raise ValueError(f"unknown engine spec: {spec!r}")
+
+
+# The default engine library: every engine in the *initial* (one engine per
+# call site) designs of the `mlp` and `lenet` workloads, plus a set of split
+# variants so the e2e example can also run a rewritten design.
+DEFAULT_SPECS = [
+    # mlp initial design
+    "mm 1 784 128",
+    "add 128",
+    "relu 128",
+    "mm 1 128 64",
+    "add 64",
+    "relu 64",
+    "mm 1 64 10",
+    "add 10",
+    # mlp split variants (k-split fc1, n-split fc1/fc2, narrow elementwise)
+    "mm 1 392 128",
+    "mm 1 784 64",
+    "mm 1 128 32",
+    "mm 1 64 32",
+    "relu 32",
+    "add 32",
+    "mmrelu 1 128 64",
+    # lenet initial design
+    "conv 28 28 1 8 5 1",
+    "add 6272",
+    "relu 6272",
+    "pool 14 14 8 2 2",
+    "conv 10 10 8 16 5 1",
+    "add 1600",
+    "relu 1600",
+    "pool 5 5 16 2 2",
+    "mm 1 400 120",
+    "add 120",
+    "relu 120",
+    "mm 1 120 84",
+    "add 84",
+    "relu 84",
+    "mm 1 84 10",
+    # lenet split variants (channel-split conv2, row-split pool1)
+    "conv 10 10 8 8 5 1",
+    "pool 7 14 8 2 2",
+]
+
+# The MLP parameter order for the full-model artifact (documented contract
+# with rust/src/runtime: inputs are [x, fc1_w, fc1_b, fc2_w, fc2_b, fc3_w,
+# fc3_b] in this exact order).
+MLP_PARAM_ORDER = ["fc1_w", "fc1_b", "fc2_w", "fc2_b", "fc3_w", "fc3_b"]
+
+
+def mlp_flat(x, fc1_w, fc1_b, fc2_w, fc2_b, fc3_w, fc3_b):
+    params = {
+        "fc1_w": fc1_w,
+        "fc1_b": fc1_b,
+        "fc2_w": fc2_w,
+        "fc2_b": fc2_b,
+        "fc3_w": fc3_w,
+        "fc3_b": fc3_b,
+    }
+    return model.mlp_forward(params, x)
+
+
+def model_artifacts():
+    """Full Layer-2 model artifacts: (name, fn, example args)."""
+    mlp_args = (
+        f32(1, 784),
+        f32(784, 128),
+        f32(128,),
+        f32(128, 64),
+        f32(64,),
+        f32(64, 10),
+        f32(10,),
+    )
+    return [("model_mlp", mlp_flat, mlp_args)]
+
+
+def emit(name: str, fn, args, out_dir: str, force: bool) -> str:
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    if not force and os.path.exists(path):
+        return path
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return path
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--specs", help="file with one engine spec per line (default: built-in set)")
+    ap.add_argument("--force", action="store_true", help="re-lower even if the file exists")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    specs = DEFAULT_SPECS
+    if args.specs:
+        with open(args.specs) as f:
+            specs = [l.strip() for l in f if l.strip() and not l.startswith("#")]
+
+    names = []
+    for spec in specs:
+        name, fn, ex = build_engine(spec)
+        emit(name, fn, ex, args.out_dir, args.force)
+        names.append(name)
+        print(f"  engine {name}")
+    for name, fn, ex in model_artifacts():
+        emit(name, fn, ex, args.out_dir, args.force)
+        names.append(name)
+        print(f"  model  {name}")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(names) + "\n")
+    print(f"wrote {len(names)} artifacts to {args.out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,19 @@
+"""Layer-1 Pallas engine kernels.
+
+Each function here is one *hardware engine declaration* from EngineIR,
+parameterized exactly like the Rust `Op` variants:
+
+- ``mm.mm_engine(m, k, n)``           — `(mm-engine m k n)`
+- ``mm.mm_relu_engine(m, k, n)``      — `(mm-relu-engine m k n)`
+- ``elementwise.relu_engine(w)``      — `(relu-engine w)`
+- ``elementwise.add_engine(w)``       — `(add-engine w)`
+- ``conv.conv_engine(oh,ow,c,k,kh,s)``— `(conv-engine oh ow c k kh s)`
+- ``conv.pool_engine(oh,ow,c,k,s)``   — `(pool-engine oh ow c k s)`
+
+``ref`` holds the pure-jnp oracles the kernels are tested against.
+"""
+
+from . import conv, elementwise, mm, ref  # noqa: F401
+from .conv import conv_engine, pool_engine  # noqa: F401
+from .elementwise import add_engine, relu_engine  # noqa: F401
+from .mm import mm_engine, mm_relu_engine  # noqa: F401

@@ -1,0 +1,67 @@
+"""Convolution and pooling engines (Layer 1).
+
+`conv-engine` is realized as im2col staging + the Pallas matmul engine —
+the same algebraic identity as rewrite R4 (`conv-as-im2col-mm`), which is
+also how TPUs actually execute convolutions on the MXU. The im2col gather
+is the HBM->VMEM staging step; the MACs all run in the mm kernel.
+
+`pool-engine` is a Pallas kernel over channel blocks: each grid step loads
+one channel tile of the input window into VMEM and reduces the k*k
+shifted views with `jnp.maximum` (VPU work, no MXU).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .mm import mm_engine
+
+
+@functools.lru_cache(maxsize=None)
+def conv_engine(oh: int, ow: int, c: int, k: int, kh: int, stride: int):
+    """The `(conv-engine oh ow c k kh stride)` unit.
+
+    Callable ``(x:(c,ih,iw), w:(k,c,kh,kh)) -> (k,oh,ow)`` with
+    ``ih = (oh-1)*stride + kh`` (valid conv over a pre-padded tile).
+    """
+    ckk = c * kh * kh
+    mm = mm_engine(k, ckk, oh * ow)
+
+    def run(x, w):
+        cols = ref.im2col(x, kh, stride)  # staging (data movement)
+        wmat = w.reshape(k, ckk)
+        return mm(wmat, cols).reshape(k, oh, ow)
+
+    return run
+
+
+def _pool_kernel(x_ref, o_ref, *, k, stride, oh, ow):
+    x = x_ref[...]  # (bc, ih, iw)
+    out = jnp.full((x.shape[0], oh, ow), -jnp.inf, dtype=x.dtype)
+    for dy in range(k):
+        for dx in range(k):
+            out = jnp.maximum(
+                out, x[:, dy : dy + oh * stride : stride, dx : dx + ow * stride : stride]
+            )
+    o_ref[...] = out
+
+
+@functools.lru_cache(maxsize=None)
+def pool_engine(oh: int, ow: int, c: int, k: int, stride: int):
+    """The `(pool-engine oh ow c k stride)` unit: `(c,ih,iw) -> (c,oh,ow)`."""
+    ih = (oh - 1) * stride + k
+    iw = (ow - 1) * stride + k
+    # One channel per grid step keeps the VMEM tile minimal; channels are
+    # independent so this is also the natural split axis in hardware.
+    body = functools.partial(_pool_kernel, k=k, stride=stride, oh=oh, ow=ow)
+    return pl.pallas_call(
+        body,
+        grid=(c,),
+        in_specs=[pl.BlockSpec((1, ih, iw), lambda ci: (ci, 0, 0))],
+        out_specs=pl.BlockSpec((1, oh, ow), lambda ci: (ci, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, oh, ow), jnp.float32),
+        interpret=True,
+    )

@@ -1,0 +1,65 @@
+"""Vector elementwise engines (Layer 1): the paper Fig. 2 `relu-engine W`
+and the `add-engine W` used by reified bias/residual adds.
+
+These map to the TPU VPU (8x128 vector lanes): the BlockSpec streams the
+flat vector through VMEM in lane-aligned chunks. Width is the engine's
+*hardware* parameter — rewrites shrink/grow it, which on real hardware is
+the number of physical lanes instantiated.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Chunk bound: keeps the VMEM working set small for very wide engines.
+MAX_BLOCK_W = 4096
+
+
+def pick_block_w(w: int) -> int:
+    if w <= MAX_BLOCK_W:
+        return w
+    for bw in range(MAX_BLOCK_W, 0, -1):
+        if w % bw == 0:
+            return bw
+    return 1
+
+
+def _relu_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.maximum(x_ref[...], 0.0)
+
+
+def _add_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] + y_ref[...]
+
+
+@functools.lru_cache(maxsize=None)
+def relu_engine(w: int):
+    """The `(relu-engine w)` unit as a callable ``x -> relu(x)``."""
+    bw = pick_block_w(w)
+    return pl.pallas_call(
+        _relu_kernel,
+        grid=(w // bw,),
+        in_specs=[pl.BlockSpec((bw,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((bw,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((w,), jnp.float32),
+        interpret=True,
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def add_engine(w: int):
+    """The `(add-engine w)` unit as a callable ``(x, y) -> x + y``."""
+    bw = pick_block_w(w)
+    return pl.pallas_call(
+        _add_kernel,
+        grid=(w // bw,),
+        in_specs=[
+            pl.BlockSpec((bw,), lambda i: (i,)),
+            pl.BlockSpec((bw,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bw,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((w,), jnp.float32),
+        interpret=True,
+    )

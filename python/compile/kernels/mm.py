@@ -1,0 +1,100 @@
+"""The matmul engine (Layer 1): a Pallas kernel computing a fixed-size
+``(m,k) @ (k,n)`` — the paper's `mm-engine M K N` hardware unit.
+
+TPU adaptation notes (DESIGN.md §Hardware-Adaptation): the engine targets
+the MXU systolic array, so the kernel is expressed as a K-blocked
+accumulation whose BlockSpecs describe the HBM->VMEM streaming schedule;
+block sizes are chosen to bound the VMEM working set (see
+``vmem_footprint``). On this image Pallas must run ``interpret=True``
+(CPU PJRT cannot execute Mosaic custom-calls), so the kernel's *structure*
+— not its wallclock — is what carries the performance claims; real-TPU
+efficiency is estimated analytically in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Upper bound on the K-block so a (m, bk) + (bk, n) + (m, n) working set
+# stays comfortably inside a ~16 MiB VMEM budget for the engine sizes the
+# workload library produces. Perf iteration (EXPERIMENTS.md §Perf): raised
+# 512 -> 1024 so every engine in the default library runs as a single
+# K-pass (the (1,784,128) engine previously split into a 2-step grid whose
+# accumulate round-trip dominated); worst-case working set at 1024 is
+# 4*(16*1024 + 1024*128 + 16*128) ≈ 0.6 MiB — far under budget.
+MAX_BLOCK_K = 1024
+
+
+def pick_block_k(k: int) -> int:
+    """Largest divisor of ``k`` that is <= MAX_BLOCK_K (k itself if small)."""
+    if k <= MAX_BLOCK_K:
+        return k
+    for bk in range(MAX_BLOCK_K, 0, -1):
+        if k % bk == 0:
+            return bk
+    return 1  # unreachable: 1 divides k
+
+
+def vmem_footprint(m: int, k: int, n: int) -> int:
+    """Bytes of VMEM the kernel holds live per grid step (f32)."""
+    bk = pick_block_k(k)
+    return 4 * (m * bk + bk * n + m * n)
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    kidx = pl.program_id(0)
+
+    @pl.when(kidx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.matmul(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _mm_relu_kernel(a_ref, b_ref, o_ref):
+    kidx = pl.program_id(0)
+    nk = pl.num_programs(0)
+
+    @pl.when(kidx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.matmul(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(kidx == nk - 1)
+    def _epilogue():
+        o_ref[...] = jnp.maximum(o_ref[...], 0.0)
+
+
+def _build(kernel_body, m: int, k: int, n: int):
+    bk = pick_block_k(k)
+    grid = (k // bk,)
+    return pl.pallas_call(
+        kernel_body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, bk), lambda kk: (0, kk)),
+            pl.BlockSpec((bk, n), lambda kk: (kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, n), lambda kk: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def mm_engine(m: int, k: int, n: int):
+    """The `(mm-engine m k n)` hardware unit as a callable ``(a, b) -> out``."""
+    return _build(_mm_kernel, m, k, n)
+
+
+@functools.lru_cache(maxsize=None)
+def mm_relu_engine(m: int, k: int, n: int):
+    """The fused `(mm-relu-engine m k n)` unit (rewrite R7's target)."""
+    return _build(_mm_relu_kernel, m, k, n)

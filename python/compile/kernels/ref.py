@@ -1,0 +1,69 @@
+"""Pure-jnp reference oracles for every engine kernel.
+
+These are the *specification*: each Pallas kernel in this package must be
+allclose to its oracle (pytest enforces it across a hypothesis sweep of
+shapes), and the Rust-side evaluator mirrors the same semantics.
+"""
+
+import jax.numpy as jnp
+
+
+def mm(a, b):
+    """(m,k) @ (k,n) -> (m,n), f32 accumulate."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def mm_relu(a, b):
+    """Fused matmul + ReLU epilogue."""
+    return jnp.maximum(mm(a, b), 0.0)
+
+
+def relu(x):
+    """Elementwise ReLU on a flat vector."""
+    return jnp.maximum(x, 0.0)
+
+
+def add(x, y):
+    """Elementwise add on flat vectors."""
+    return x + y
+
+
+def conv2d(x, w, stride=1):
+    """Valid (pre-padded) conv: x:(C,H,W), w:(K,C,KH,KW) -> (K,OH,OW)."""
+    c, h, wd = x.shape
+    k, c2, kh, kw = w.shape
+    assert c == c2
+    oh = (h - kh) // stride + 1
+    ow = (wd - kw) // stride + 1
+    # im2col formulation (the same identity rewrite R4 uses).
+    cols = im2col(x, kh, stride)  # (c*kh*kw, oh*ow)
+    wmat = w.reshape(k, c * kh * kw)
+    return mm(wmat, cols).reshape(k, oh, ow)
+
+
+def im2col(x, kh, stride=1):
+    """(C,H,W) -> (C*KH*KH, OH*OW) patch matrix (row-major patch order)."""
+    c, h, w = x.shape
+    oh = (h - kh) // stride + 1
+    ow = (w - kh) // stride + 1
+    rows = []
+    for ci in range(c):
+        for dy in range(kh):
+            for dx in range(kh):
+                patch = x[ci, dy : dy + oh * stride : stride, dx : dx + ow * stride : stride]
+                rows.append(patch.reshape(-1))
+    return jnp.stack(rows)
+
+
+def maxpool2d(x, k, stride):
+    """(C,H,W) max pool."""
+    c, h, w = x.shape
+    oh = (h - k) // stride + 1
+    ow = (w - k) // stride + 1
+    out = jnp.full((c, oh, ow), -jnp.inf, dtype=x.dtype)
+    for dy in range(k):
+        for dx in range(k):
+            out = jnp.maximum(
+                out, x[:, dy : dy + oh * stride : stride, dx : dx + ow * stride : stride]
+            )
+    return out

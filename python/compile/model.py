@@ -1,0 +1,132 @@
+"""Layer 2: JAX forward passes for the workload library, composed from the
+Layer-1 Pallas engine kernels.
+
+Each function mirrors — by construction, layer for layer and weight name
+for weight name — the corresponding Rust workload in
+`rust/src/relay/workloads.rs`, so the end-to-end example can hand the same
+parameters to both sides and compare numerics.
+
+These graphs are what `aot.py` lowers to HLO text: jitted once at build
+time, never traced at runtime.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import add_engine, conv_engine, mm_engine, pool_engine, relu_engine
+
+# ----------------------------------------------------------------------
+# Parameter initialization (deterministic; mirrors Tensor::random on the
+# Rust side only in spirit — the e2e test ships actual arrays across).
+# ----------------------------------------------------------------------
+
+
+def init_mlp_params(key=None):
+    """784 -> 128 -> 64 -> 10, names matching the Rust `mlp` workload."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 6)
+    scale = 0.1
+    return {
+        "fc1_w": scale * jax.random.normal(ks[0], (784, 128), jnp.float32),
+        "fc1_b": scale * jax.random.normal(ks[1], (128,), jnp.float32),
+        "fc2_w": scale * jax.random.normal(ks[2], (128, 64), jnp.float32),
+        "fc2_b": scale * jax.random.normal(ks[3], (64,), jnp.float32),
+        "fc3_w": scale * jax.random.normal(ks[4], (64, 10), jnp.float32),
+        "fc3_b": scale * jax.random.normal(ks[5], (10,), jnp.float32),
+    }
+
+
+def init_lenet_params(key=None):
+    """Names matching the Rust `lenet` workload."""
+    key = key if key is not None else jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 10)
+    s = 0.1
+    return {
+        "c1_w": s * jax.random.normal(ks[0], (8, 1, 5, 5), jnp.float32),
+        "c1_b": s * jax.random.normal(ks[1], (8,), jnp.float32),
+        "c2_w": s * jax.random.normal(ks[2], (16, 8, 5, 5), jnp.float32),
+        "c2_b": s * jax.random.normal(ks[3], (16,), jnp.float32),
+        "fc1_w": s * jax.random.normal(ks[4], (400, 120), jnp.float32),
+        "fc1_b": s * jax.random.normal(ks[5], (120,), jnp.float32),
+        "fc2_w": s * jax.random.normal(ks[6], (120, 84), jnp.float32),
+        "fc2_b": s * jax.random.normal(ks[7], (84,), jnp.float32),
+        "fc3_w": s * jax.random.normal(ks[8], (84, 10), jnp.float32),
+        "fc3_b": s * jax.random.normal(ks[9], (10,), jnp.float32),
+    }
+
+
+# ----------------------------------------------------------------------
+# Engine-composed layers (the "initial design point": one full-size engine
+# per call, exactly what lower::lower_default produces on the Rust side).
+# ----------------------------------------------------------------------
+
+
+def _dense_layer(x, w, b, apply_relu):
+    m, k = x.shape
+    n = w.shape[1]
+    y = mm_engine(m, k, n)(x, w)
+    flat = y.reshape(-1)
+    bb = jnp.broadcast_to(b, (m, n)).reshape(-1)
+    flat = add_engine(flat.shape[0])(flat, bb)
+    if apply_relu:
+        flat = relu_engine(flat.shape[0])(flat)
+    return flat.reshape(m, n)
+
+
+def mlp_forward(params, x):
+    """MLP inference for one (1, 784) input."""
+    h = _dense_layer(x, params["fc1_w"], params["fc1_b"], True)
+    h = _dense_layer(h, params["fc2_w"], params["fc2_b"], True)
+    return _dense_layer(h, params["fc3_w"], params["fc3_b"], False)
+
+
+def _conv_layer(x, w, b, pad, stride):
+    c, h, wd = x.shape
+    k, _, kh, _ = w.shape
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    oh = (x.shape[1] - kh) // stride + 1
+    ow = (x.shape[2] - kh) // stride + 1
+    y = conv_engine(oh, ow, c, k, kh, stride)(x, w)
+    flat = y.reshape(-1)
+    bb = jnp.broadcast_to(b[:, None, None], y.shape).reshape(-1)
+    flat = add_engine(flat.shape[0])(flat, bb)
+    flat = relu_engine(flat.shape[0])(flat)
+    return flat.reshape(k, oh, ow)
+
+
+def lenet_forward(params, x):
+    """LeNet inference for one (1, 28, 28) input."""
+    h = _conv_layer(x, params["c1_w"], params["c1_b"], pad=2, stride=1)  # (8,28,28)
+    h = pool_engine(14, 14, 8, 2, 2)(h)  # (8,14,14)
+    h = _conv_layer(h, params["c2_w"], params["c2_b"], pad=0, stride=1)  # (16,10,10)
+    h = pool_engine(5, 5, 16, 2, 2)(h)  # (16,5,5)
+    h = h.reshape(1, 400)
+    h = _dense_layer(h, params["fc1_w"], params["fc1_b"], True)
+    h = _dense_layer(h, params["fc2_w"], params["fc2_b"], True)
+    return _dense_layer(h, params["fc3_w"], params["fc3_b"], False)
+
+
+# ----------------------------------------------------------------------
+# Pure-jnp references (Layer-2 oracle, used by pytest).
+# ----------------------------------------------------------------------
+
+
+def mlp_reference(params, x):
+    h = jnp.maximum(x @ params["fc1_w"] + params["fc1_b"], 0.0)
+    h = jnp.maximum(h @ params["fc2_w"] + params["fc2_b"], 0.0)
+    return h @ params["fc3_w"] + params["fc3_b"]
+
+
+def lenet_reference(params, x):
+    from .kernels import ref
+
+    h = jnp.pad(x, ((0, 0), (2, 2), (2, 2)))
+    h = jnp.maximum(ref.conv2d(h, params["c1_w"]) + params["c1_b"][:, None, None], 0.0)
+    h = ref.maxpool2d(h, 2, 2)
+    h = jnp.maximum(ref.conv2d(h, params["c2_w"]) + params["c2_b"][:, None, None], 0.0)
+    h = ref.maxpool2d(h, 2, 2)
+    h = h.reshape(1, 400)
+    h = jnp.maximum(h @ params["fc1_w"] + params["fc1_b"], 0.0)
+    h = jnp.maximum(h @ params["fc2_w"] + params["fc2_b"], 0.0)
+    return h @ params["fc3_w"] + params["fc3_b"]

@@ -1,0 +1,176 @@
+"""Layer-1 correctness: every Pallas engine kernel vs its pure-jnp oracle,
+with hypothesis sweeping the engine parameter space. This is the CORE
+correctness signal for the compute layer."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    add_engine,
+    conv_engine,
+    mm_engine,
+    mm_relu_engine,
+    pool_engine,
+    ref,
+    relu_engine,
+)
+from compile.kernels.mm import pick_block_k, vmem_footprint
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ----------------------------------------------------------------------
+# matmul engine
+# ----------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.sampled_from([1, 2, 4, 8, 16]),
+    k=st.sampled_from([4, 16, 64, 256, 784]),
+    n=st.sampled_from([4, 10, 32, 128]),
+)
+def test_mm_engine_matches_ref(m, k, n):
+    a, b = rand(m * 7 + k, m, k), rand(n * 13 + k, k, n)
+    got = mm_engine(m, k, n)(a, b)
+    want = ref.mm(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.sampled_from([1, 4, 8]),
+    k=st.sampled_from([16, 128]),
+    n=st.sampled_from([8, 64]),
+)
+def test_mm_relu_engine_matches_ref(m, k, n):
+    a, b = rand(m + k, m, k), rand(n + k, k, n)
+    got = mm_relu_engine(m, k, n)(a, b)
+    want = ref.mm_relu(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    assert (np.asarray(got) >= 0).all()
+
+
+def test_mm_k_blocking_engages_for_large_k():
+    # k = 784 fits a single block now; 1568 exercises the blocked grid.
+    assert pick_block_k(784) == 784  # single pass since MAX_BLOCK_K=1024
+    assert pick_block_k(1568) == 784  # blocked grid engages above the cap
+    a, b = rand(1, 1, 1568), rand(2, 1568, 16)
+    np.testing.assert_allclose(
+        mm_engine(1, 1568, 16)(a, b), ref.mm(a, b), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_vmem_footprint_bounded():
+    # The largest engine in the default library must fit a 16 MiB VMEM.
+    for (m, k, n) in [(1, 784, 128), (1, 400, 120), (8, 200, 784)]:
+        assert vmem_footprint(m, k, n) < 16 * 1024 * 1024
+
+
+# ----------------------------------------------------------------------
+# elementwise engines
+# ----------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(w=st.sampled_from([4, 10, 32, 100, 128, 1600, 6272]))
+def test_relu_engine_matches_ref(w):
+    x = rand(w, w)
+    np.testing.assert_allclose(relu_engine(w)(x), ref.relu(x), rtol=0, atol=0)
+
+
+@settings(**SETTINGS)
+@given(w=st.sampled_from([4, 10, 64, 128, 1600]))
+def test_add_engine_matches_ref(w):
+    x, y = rand(w, w), rand(w + 1, w)
+    np.testing.assert_allclose(add_engine(w)(x, y), ref.add(x, y), rtol=1e-6, atol=1e-6)
+
+
+def test_relu_engine_edge_values():
+    w = 8
+    x = jnp.array([0.0, -0.0, 1e30, -1e30, jnp.inf, -jnp.inf, 1e-38, -1e-38], jnp.float32)
+    got = np.asarray(relu_engine(w)(x))
+    want = np.asarray(ref.relu(x))
+    np.testing.assert_array_equal(got, want)
+
+
+# ----------------------------------------------------------------------
+# conv / pool engines
+# ----------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    c=st.sampled_from([1, 3, 8]),
+    k=st.sampled_from([4, 8, 16]),
+    kh=st.sampled_from([3, 5]),
+    oh=st.sampled_from([4, 8, 10]),
+    stride=st.sampled_from([1, 2]),
+)
+def test_conv_engine_matches_ref(c, k, kh, oh, stride):
+    ow = oh
+    ih = (oh - 1) * stride + kh
+    x = rand(c * 31 + kh, c, ih, ih)
+    w = rand(k * 17 + kh, k, c, kh, kh)
+    got = conv_engine(oh, ow, c, k, kh, stride)(x, w)
+    want = ref.conv2d(x, w, stride)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    c=st.sampled_from([1, 8, 16]),
+    k=st.sampled_from([2, 3]),
+    oh=st.sampled_from([5, 7, 14]),
+    stride=st.sampled_from([1, 2]),
+)
+def test_pool_engine_matches_ref(c, k, oh, stride):
+    ow = oh
+    ih = (oh - 1) * stride + k
+    x = rand(c * 3 + oh, c, ih, ih)
+    got = pool_engine(oh, ow, c, k, stride)(x)
+    want = ref.maxpool2d(x, k, stride)
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+def test_im2col_matches_conv_identity():
+    # The R4 rewrite identity at the numpy level.
+    x = rand(3, 3, 8, 8)
+    w = rand(4, 4, 3, 3, 3)
+    direct = ref.conv2d(x, w, 1)
+    via = ref.mm(w.reshape(4, 27), ref.im2col(x, 3, 1)).reshape(4, 6, 6)
+    np.testing.assert_allclose(direct, via, rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# engine split identities (the paper's rewrites, validated at the kernel
+# level: big engine == schedule over small engines)
+# ----------------------------------------------------------------------
+
+
+def test_fig2_split_identity_on_kernels():
+    x = rand(99, 128)
+    whole = relu_engine(128)(x)
+    halves = jnp.concatenate([relu_engine(64)(x[:64]), relu_engine(64)(x[64:])])
+    np.testing.assert_array_equal(np.asarray(whole), np.asarray(halves))
+
+
+def test_mm_k_split_identity_on_kernels():
+    a, b = rand(1, 4, 16), rand(2, 16, 4)
+    whole = mm_engine(4, 16, 4)(a, b)
+    parts = mm_engine(4, 8, 4)(a[:, :8], b[:8]) + mm_engine(4, 8, 4)(a[:, 8:], b[8:])
+    np.testing.assert_allclose(whole, parts, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_dtype_contract(dtype):
+    # Engines are f32-in/f32-out by contract (the Rust runtime ships f32).
+    out = mm_engine(2, 4, 2)(jnp.zeros((2, 4), dtype), jnp.zeros((4, 2), dtype))
+    assert out.dtype == jnp.float32

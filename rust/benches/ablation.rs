@@ -1,0 +1,78 @@
+//! Ablation — which rewrites buy what? (DESIGN.md design-choice ablation.)
+//!
+//! Runs the ffn and convblock workloads under increasing rule sets
+//! (fig2 ⊂ paper ⊂ all) and under paper-minus-one-group variants, and
+//! reports design-space size and the best achievable latency/area at a
+//! fixed extraction budget. Shows each rewrite group's marginal value —
+//! e.g. without `conv-as-im2col-mm` the conv workloads cannot share a
+//! matmul engine and the area floor rises.
+//!
+//! Run: `cargo bench --bench ablation`
+
+use hwsplit::coordinator::RuleSet;
+use hwsplit::cost::CostParams;
+use hwsplit::egraph::{Rewrite, Runner, RunnerLimits};
+use hwsplit::extract::sample_designs;
+use hwsplit::lower::lower_default;
+use hwsplit::relay::workloads;
+use hwsplit::report::{fmt_f64, Table};
+
+fn run_variant(
+    name: &str,
+    workload: &hwsplit::relay::Workload,
+    rules: Vec<Rewrite>,
+    t: &mut Table,
+) {
+    let lowered = lower_default(&workload.expr);
+    let mut runner = Runner::new(lowered, rules)
+        .with_limits(RunnerLimits { max_nodes: 30_000, ..Default::default() });
+    let report = runner.run(5);
+    let pts = sample_designs(&runner.egraph, runner.root, 32, &CostParams::default());
+    let best_lat = pts.iter().map(|p| p.cost.latency).fold(f64::INFINITY, f64::min);
+    let best_area = pts.iter().map(|p| p.cost.area).fold(f64::INFINITY, f64::min);
+    t.row(&[
+        workload.name.to_string(),
+        name.to_string(),
+        report.nodes.to_string(),
+        format!("{:.2e}", report.designs_lower_bound),
+        fmt_f64(best_lat),
+        fmt_f64(best_area),
+    ]);
+}
+
+fn main() {
+    let mut t = Table::new(
+        "rewrite-set ablation (5 iters, 30k nodes, 32 samples)",
+        &["workload", "rules", "e-nodes", "designs", "best-latency", "best-area"],
+    );
+    for w in [workloads::ffn_block(), workloads::convblock()] {
+        run_variant("fig2-only", &w, RuleSet::Fig2.rules(), &mut t);
+        run_variant("paper", &w, RuleSet::Paper.rules(), &mut t);
+        run_variant("all(+ext)", &w, RuleSet::All.rules(), &mut t);
+
+        // paper minus each group
+        let no_par: Vec<Rewrite> = RuleSet::Paper
+            .rules()
+            .into_iter()
+            .filter(|r| r.name != "parallelize" && r.name != "serialize")
+            .collect();
+        run_variant("paper - par", &w, no_par, &mut t);
+
+        let no_im2col: Vec<Rewrite> = RuleSet::Paper
+            .rules()
+            .into_iter()
+            .filter(|r| r.name != "conv-as-im2col-mm")
+            .collect();
+        run_variant("paper - im2col", &w, no_im2col, &mut t);
+
+        let no_splits: Vec<Rewrite> = RuleSet::Paper
+            .rules()
+            .into_iter()
+            .filter(|r| !r.name.starts_with("split-"))
+            .collect();
+        run_variant("paper - splits", &w, no_splits, &mut t);
+    }
+    print!("{}", t.render());
+    t.write_csv("bench_results/ablation.csv").ok();
+    println!("wrote bench_results/ablation.csv");
+}

@@ -1,0 +1,96 @@
+//! Bench E2 — design diversity (paper §3: "a diverse set of designs should
+//! include many design points which differ significantly from each other").
+//!
+//! For each workload: enumerate, sample designs, and report the spread of
+//! structural features (engine count, instance count, schedule depth,
+//! par degree, buffer bytes) plus the mean pairwise feature distance —
+//! including the paper's two named extremes: designs that "instantiate an
+//! engine for every kernel invocation" and designs with "complex software
+//! schedules and very little hardware".
+//!
+//! Run: `cargo bench --bench diversity`
+
+use hwsplit::coordinator::{explore, ExploreConfig, RuleSet};
+use hwsplit::egraph::RunnerLimits;
+use hwsplit::relay::all_workloads;
+use hwsplit::report::{fmt_f64, Table};
+
+fn main() {
+    let mut csv = Table::new(
+        "diversity summary",
+        &[
+            "workload",
+            "designs",
+            "mean-dist",
+            "min-engines",
+            "max-engines",
+            "max-depth",
+            "max-instances",
+            "min-instances",
+        ],
+    );
+    for w in all_workloads() {
+        let cfg = ExploreConfig {
+            iters: 5,
+            samples: 64,
+            rules: RuleSet::Paper,
+            limits: RunnerLimits { max_nodes: 60_000, ..Default::default() },
+            ..Default::default()
+        };
+        let ex = explore(&w, &cfg);
+
+        let stats: Vec<_> = ex.designs.iter().map(|d| &d.point.stats).collect();
+        let mut dist = 0.0;
+        let mut pairs = 0usize;
+        for i in 0..stats.len() {
+            for j in i + 1..stats.len() {
+                dist += stats[i].distance(stats[j]);
+                pairs += 1;
+            }
+        }
+        let mean_dist = dist / pairs.max(1) as f64;
+        let min_e = stats.iter().map(|s| s.engines).min().unwrap_or(0);
+        let max_e = stats.iter().map(|s| s.engines).max().unwrap_or(0);
+        let max_d = stats.iter().map(|s| s.sched_depth).max().unwrap_or(0);
+        let max_i = stats.iter().map(|s| s.engine_instances).fold(0.0, f64::max);
+        let min_i = stats.iter().map(|s| s.engine_instances).fold(f64::INFINITY, f64::min);
+
+        let mut t = Table::new(
+            &format!("E2 diversity: {} ({} distinct designs)", w.name, ex.designs.len()),
+            &["feature", "min", "max"],
+        );
+        t.row(&["distinct engines".into(), min_e.to_string(), max_e.to_string()]);
+        t.row(&["engine instances".into(), fmt_f64(min_i), fmt_f64(max_i)]);
+        t.row(&[
+            "sched depth".into(),
+            stats.iter().map(|s| s.sched_depth).min().unwrap_or(0).to_string(),
+            max_d.to_string(),
+        ]);
+        t.row(&[
+            "buffer KiB".into(),
+            fmt_f64(stats.iter().map(|s| s.buffer_bytes).fold(f64::INFINITY, f64::min) / 1024.0),
+            fmt_f64(stats.iter().map(|s| s.buffer_bytes).fold(0.0, f64::max) / 1024.0),
+        ]);
+        print!("{}", t.render());
+        println!("mean pairwise distance: {mean_dist:.3}\n");
+
+        csv.row(&[
+            w.name.to_string(),
+            ex.designs.len().to_string(),
+            format!("{mean_dist:.4}"),
+            min_e.to_string(),
+            max_e.to_string(),
+            max_d.to_string(),
+            fmt_f64(max_i),
+            fmt_f64(min_i),
+        ]);
+
+        // Shape assertions: the sampled set must actually be diverse.
+        if ex.designs.len() >= 8 {
+            assert!(mean_dist > 0.2, "{}: designs too similar ({mean_dist:.3})", w.name);
+            assert!(max_d > 0, "{}: no schedules sampled at all", w.name);
+        }
+    }
+    csv.write_csv("bench_results/diversity.csv").ok();
+    println!("wrote bench_results/diversity.csv");
+}

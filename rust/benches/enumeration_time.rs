@@ -1,0 +1,129 @@
+//! Bench E4 — enumeration cost: wall-clock to saturation or node budget
+//! per workload, plus microbenchmarks of the e-graph substrate itself
+//! (insert+rebuild throughput, e-matching throughput, extraction) — the
+//! §Perf numbers for Layer 3.
+//!
+//! Run: `cargo bench --bench enumeration_time`
+
+use hwsplit::bench_util::{bench, black_box};
+use hwsplit::egraph::{EGraph, Runner, RunnerLimits};
+use hwsplit::extract::{latency_cost, Extractor};
+use hwsplit::ir::{parse_expr, Node, Op, RecExpr, Shape, Symbol};
+use hwsplit::lower::lower_default;
+use hwsplit::relay::all_workloads;
+use hwsplit::report::Table;
+use hwsplit::rewrites;
+
+fn main() {
+    // ---- end-to-end enumeration per workload ----
+    let mut t = Table::new(
+        "E4 enumeration cost (paper rules, 8 iters, 80k node budget)",
+        &["workload", "lowered-nodes", "e-nodes", "e-classes", "designs-lb", "time", "stop"],
+    );
+    let mut csv_rows: Vec<Vec<String>> = vec![];
+    for w in all_workloads() {
+        let lowered = lower_default(&w.expr);
+        let n0 = lowered.len();
+        let t0 = std::time::Instant::now();
+        let mut runner = Runner::new(lowered, rewrites::paper_rules()).with_limits(
+            RunnerLimits { max_nodes: 80_000, ..Default::default() },
+        );
+        let report = runner.run(8);
+        let dt = t0.elapsed();
+        t.row(&[
+            w.name.to_string(),
+            n0.to_string(),
+            report.nodes.to_string(),
+            report.classes.to_string(),
+            format!("{:.3e}", report.designs_lower_bound),
+            format!("{dt:.2?}"),
+            format!("{:?}", report.stop),
+        ]);
+        csv_rows.push(vec![
+            w.name.to_string(),
+            report.nodes.to_string(),
+            format!("{:.3}", dt.as_secs_f64()),
+        ]);
+    }
+    print!("{}", t.render());
+    let mut csv = Table::new("", &["workload", "e_nodes", "seconds"]);
+    for r in csv_rows {
+        csv.row(&r);
+    }
+    csv.write_csv("bench_results/enumeration_time.csv").ok();
+
+    // ---- substrate microbenches (Layer-3 §Perf targets) ----
+    println!("\n== e-graph substrate microbenchmarks ==");
+
+    // Insert + congruence throughput: chains of relu nodes over fresh
+    // inputs, then unions + rebuild.
+    let r = bench("egraph insert 100k nodes", 1, 5, || {
+        let mut eg = EGraph::new();
+        let mut prev =
+            eg.add(Node::leaf(Op::Input(Symbol::new("x"), Shape::new(&[4]))));
+        for _ in 0..100_000 {
+            prev = eg.add(Node::new(Op::Relu, vec![prev]));
+        }
+        black_box(eg.total_nodes());
+    });
+    let nodes_per_sec = 100_000.0 / r.median.as_secs_f64();
+    println!("  -> {:.2}M e-nodes/s inserted (target >= 1M/s)", nodes_per_sec / 1e6);
+
+    bench("union+rebuild 10k congruent pairs", 1, 5, || {
+        let mut eg = EGraph::new();
+        let mut lhs = vec![];
+        let mut rhs = vec![];
+        for i in 0..10_000 {
+            let a = eg.add(Node::leaf(Op::Input(
+                Symbol::new(&format!("a{i}")),
+                Shape::new(&[4]),
+            )));
+            let b = eg.add(Node::leaf(Op::Input(
+                Symbol::new(&format!("b{i}")),
+                Shape::new(&[4]),
+            )));
+            lhs.push(eg.add(Node::new(Op::Relu, vec![a])));
+            rhs.push(eg.add(Node::new(Op::Relu, vec![b])));
+            eg.union(a, b);
+        }
+        eg.rebuild();
+        for (l, r) in lhs.into_iter().zip(rhs) {
+            assert_eq!(eg.find(l), eg.find(r));
+        }
+    });
+
+    // E-matching throughput over a saturated mlp e-graph.
+    let lowered = lower_default(&all_workloads()[4].expr); // mlp
+    let mut runner = Runner::new(lowered, rewrites::paper_rules())
+        .with_limits(RunnerLimits { max_nodes: 50_000, ..Default::default() });
+    runner.run(6);
+    let eg = runner.egraph;
+    let nodes = eg.total_nodes();
+    let rules = rewrites::paper_rules();
+    let r = bench(&format!("search {} rules over {} nodes", rules.len(), nodes), 1, 10, || {
+        let mut total = 0usize;
+        for rule in &rules {
+            total += rule.search(&eg).len();
+        }
+        black_box(total);
+    });
+    println!(
+        "  -> {:.2}M node-rule visits/s",
+        (nodes * rules.len()) as f64 / r.median.as_secs_f64() / 1e6
+    );
+
+    // Extraction at scale.
+    let root = runner.root;
+    bench(&format!("greedy extraction over {nodes} nodes"), 1, 10, || {
+        let ex = Extractor::new(&eg, latency_cost);
+        black_box(ex.extract(&eg, root).len());
+    });
+
+    // Parser/printer round-trip (tooling hot path).
+    let big: RecExpr = lower_default(&all_workloads()[5].expr); // lenet
+    let text = big.to_string();
+    bench("parse+print lenet EngineIR", 3, 30, || {
+        let e = parse_expr(&text).unwrap();
+        black_box(e.to_string().len());
+    });
+}

@@ -1,0 +1,96 @@
+//! Bench F2 — reproduces **paper Figure 2**: the 128-bit-wide ReLU e-graph
+//! after rewrite 1 (shrink engine + add loop) and rewrite 2 (parallelize
+//! loop + add hardware), reporting the e-graph contents the figure draws
+//! plus enumeration timing.
+//!
+//! Run: `cargo bench --bench fig2_relu`
+
+use hwsplit::bench_util::bench;
+use hwsplit::egraph::{EGraph, Runner};
+use hwsplit::ir::{parse_expr, Op};
+use hwsplit::report::Table;
+use hwsplit::rewrites::{sched, split};
+
+fn class_snapshot(eg: &EGraph, root: hwsplit::egraph::Id) -> Vec<String> {
+    let mut v: Vec<String> =
+        eg.class(root).nodes.iter().map(|n| format!("{}", n.op)).collect();
+    v.sort();
+    v
+}
+
+fn main() {
+    println!("== paper Fig. 2 reproduction ==\n");
+    let src = "(invoke-relu (relu-engine 128) (input x [128]))";
+    let expr = parse_expr(src).unwrap();
+    println!("initial program: {src}");
+
+    // --- Rewrite 1: shrink the ReLU unit, add a software loop. ---
+    let mut eg = EGraph::new();
+    let root = eg.add_expr(&expr);
+    println!("\ninitial e-graph: {} e-nodes, {} e-classes", eg.total_nodes(), eg.num_classes());
+    let r1 = split::split_relu(2);
+    for (id, s) in r1.search(&eg) {
+        r1.apply(&mut eg, id, &s);
+    }
+    eg.rebuild();
+    println!(
+        "after rewrite 1 (split-relu-x2): {} e-nodes, {} e-classes; root class = {:?}",
+        eg.total_nodes(),
+        eg.num_classes(),
+        class_snapshot(&eg, root)
+    );
+
+    // --- Rewrite 2: parallelize the loop, instantiating more hardware. ---
+    let r2 = sched::parallelize();
+    for (id, s) in r2.search(&eg) {
+        r2.apply(&mut eg, id, &s);
+    }
+    eg.rebuild();
+    println!(
+        "after rewrite 2 (parallelize):   {} e-nodes, {} e-classes; root class = {:?}",
+        eg.total_nodes(),
+        eg.num_classes(),
+        class_snapshot(&eg, root)
+    );
+    let designs = hwsplit::egraph::count::designs(&eg, root, 64);
+    println!("distinct designs represented: {designs}");
+    assert!(designs >= 3.0, "Fig. 2 must represent >= 3 programs");
+
+    // --- Saturation: run both rules to fixpoint (engines 4..128). ---
+    let mut t = Table::new(
+        "fig2 saturation (rules: split-relu-x2 + parallelize/serialize)",
+        &["iter", "e-nodes", "e-classes", "designs(lb)"],
+    );
+    let mut runner = Runner::new(expr.clone(), hwsplit::rewrites::fig2_rules());
+    let report = runner.run(12);
+    for it in &report.iterations {
+        t.row(&[
+            it.iteration.to_string(),
+            it.nodes.to_string(),
+            it.classes.to_string(),
+            format!("{:.3e}", it.designs_lower_bound),
+        ]);
+    }
+    print!("\n{}", t.render());
+    t.write_csv("bench_results/fig2_growth.csv").ok();
+
+    // --- Timing: full Fig. 2 enumeration to saturation. ---
+    bench("fig2 enumerate-to-saturation", 2, 10, || {
+        let mut r = Runner::new(expr.clone(), hwsplit::rewrites::fig2_rules());
+        let rep = r.run(12);
+        assert!(rep.designs_lower_bound >= 3.0);
+    });
+
+    // Engine inventory after saturation: the hardware design points found.
+    let mut widths: Vec<usize> = vec![];
+    for class in runner.egraph.classes() {
+        for n in &class.nodes {
+            if let Op::ReluEngine { w } = n.op {
+                widths.push(w);
+            }
+        }
+    }
+    widths.sort();
+    widths.dedup();
+    println!("\nReLU engine widths represented: {widths:?}");
+}

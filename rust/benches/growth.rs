@@ -1,0 +1,80 @@
+//! Bench E1 — design-space growth: e-nodes, e-classes and the
+//! distinct-design lower bound per rewrite iteration, for every workload.
+//! This regenerates the paper's core claim that the e-graph comes to
+//! represent "an exponential number of equivalent hardware-software
+//! programs".
+//!
+//! Run: `cargo bench --bench growth`
+
+use hwsplit::egraph::{Runner, RunnerLimits};
+use hwsplit::lower::lower_default;
+use hwsplit::relay::all_workloads;
+use hwsplit::report::Table;
+use hwsplit::rewrites;
+
+fn main() {
+    let mut csv = Table::new(
+        "growth per iteration (all workloads)",
+        &["workload", "iter", "e-nodes", "e-classes", "designs-lb", "ms"],
+    );
+    for w in all_workloads() {
+        let lowered = lower_default(&w.expr);
+        let mut runner = Runner::new(lowered, rewrites::paper_rules()).with_limits(
+            RunnerLimits { max_nodes: 80_000, ..Default::default() },
+        );
+        let report = runner.run(8);
+
+        let mut t = Table::new(
+            &format!("E1 growth: {}", w.name),
+            &["iter", "e-nodes", "e-classes", "designs(lb)", "elapsed"],
+        );
+        for it in &report.iterations {
+            t.row(&[
+                it.iteration.to_string(),
+                it.nodes.to_string(),
+                it.classes.to_string(),
+                format!("{:.3e}", it.designs_lower_bound),
+                format!("{:.1?}", it.elapsed),
+            ]);
+            csv.row(&[
+                w.name.to_string(),
+                it.iteration.to_string(),
+                it.nodes.to_string(),
+                it.classes.to_string(),
+                format!("{:.6e}", it.designs_lower_bound),
+                format!("{:.3}", it.elapsed.as_secs_f64() * 1e3),
+            ]);
+        }
+        print!("{}", t.render());
+        println!("stop: {:?}\n", report.stop);
+
+        // Shape assertion (the paper's claim): growth is super-linear —
+        // the design count must exceed the e-node count by orders of
+        // magnitude once a few iterations have run.
+        if report.iterations.len() >= 3 {
+            let last = report.iterations.last().unwrap();
+            assert!(
+                last.designs_lower_bound > last.nodes as f64,
+                "{}: designs ({:.2e}) should exceed e-nodes ({}) — the compact-\
+                 representation claim",
+                w.name,
+                last.designs_lower_bound,
+                last.nodes
+            );
+            // And growth must be super-linear across iterations.
+            let first = report
+                .iterations
+                .iter()
+                .find(|it| it.designs_lower_bound > 1.0)
+                .unwrap_or(last);
+            assert!(
+                last.designs_lower_bound >= 4.0 * first.designs_lower_bound
+                    || report.stop == hwsplit::egraph::StopReason::Saturated,
+                "{}: no growth",
+                w.name
+            );
+        }
+    }
+    csv.write_csv("bench_results/growth.csv").ok();
+    println!("wrote bench_results/growth.csv");
+}

@@ -1,0 +1,152 @@
+//! Bench E5 — PJRT engine runtime: per-engine invocation latency, compile
+//! (cache-miss) cost, and end-to-end MLP inference through the composed
+//! design — initial vs rewritten split. The Layer-3 hot-path numbers for
+//! §Perf.
+//!
+//! Requires `make artifacts`; skips gracefully when artifacts are missing.
+//!
+//! Run: `cargo bench --bench runtime_engines`
+
+use hwsplit::bench_util::{bench, black_box};
+use hwsplit::egraph::Runner;
+use hwsplit::extract::sample_design;
+use hwsplit::ir::{Op, Shape};
+use hwsplit::lower::lower_default;
+use hwsplit::relay::workloads;
+use hwsplit::rewrites;
+use hwsplit::runtime::{default_artifact_dir, engine_out_shape, EngineRuntime, PjrtBackend};
+use hwsplit::report::Table;
+use hwsplit::tensor::{eval_expr, eval_expr_backend, Env, Tensor};
+
+fn main() {
+    let mut rt = match EngineRuntime::new(default_artifact_dir()) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("SKIP runtime benches: {e:#}");
+            return;
+        }
+    };
+    println!("artifact library: {} engines\n", rt.available().len());
+
+    // ---- per-engine invocation latency ----
+    let engines = [
+        Op::ReluEngine { w: 128 },
+        Op::AddEngine { w: 128 },
+        Op::MmEngine { m: 1, k: 784, n: 128 },
+        Op::MmEngine { m: 1, k: 128, n: 64 },
+        Op::MmReluEngine { m: 1, k: 128, n: 64 },
+        Op::ConvEngine { oh: 28, ow: 28, c: 1, k: 8, kh: 5, stride: 1 },
+        Op::PoolEngine { oh: 14, ow: 14, c: 8, k: 2, stride: 2 },
+    ];
+    let mut t = Table::new(
+        "PJRT engine invocation latency",
+        &["engine", "compile(first)", "median-invoke", "MFLOP/s-ish"],
+    );
+    for e in &engines {
+        if !rt.has_engine(e) {
+            println!("  (skip {e}: not in manifest)");
+            continue;
+        }
+        let args = example_args(e);
+        // First call includes compilation (cache miss).
+        let t0 = std::time::Instant::now();
+        rt.execute_engine(e, &args).unwrap();
+        let compile = t0.elapsed();
+        let r = bench(&format!("invoke {e}"), 5, 50, || {
+            black_box(rt.execute_engine(e, &args).unwrap());
+        });
+        let flops = 2.0 * e.engine_macs() as f64;
+        t.row(&[
+            e.to_string(),
+            format!("{compile:.2?}"),
+            format!("{:?}", r.median),
+            format!("{:.1}", flops / r.median.as_secs_f64() / 1e6),
+        ]);
+    }
+    print!("\n{}", t.render());
+
+    // ---- end-to-end MLP inference: initial vs split design ----
+    let w = workloads::mlp();
+    let initial = lower_default(&w.expr);
+    let mut runner = Runner::new(initial.clone(), rewrites::paper_rules());
+    runner.run(4);
+    let mut split = hwsplit::runtime::extract_covered(&runner.egraph, runner.root, &rt, true)
+        .filter(|d| d.count(|op| op.is_sched()) > 0);
+    if split.is_none() {
+        for seed in 0..400u64 {
+            let cand = sample_design(&runner.egraph, runner.root, seed);
+            if cand.count(|op| op.is_sched()) > 0
+                && cand.engines().iter().all(|e| rt.has_engine(e))
+            {
+                split = Some(cand);
+                break;
+            }
+        }
+    }
+
+    let mut backend = PjrtBackend::new(rt);
+    let mut csv = Table::new("", &["design", "median_us", "inf_per_s"]);
+    for (name, design) in
+        [("mlp-initial", Some(initial)), ("mlp-rewritten-split", split)]
+    {
+        let Some(design) = design else {
+            println!("(no artifact-covered split design found)");
+            continue;
+        };
+        let env0 = Env::random_for(&design, 42);
+        // correctness first
+        let want = eval_expr(&design, &mut env0.clone()).unwrap();
+        let got = eval_expr_backend(&design, &mut env0.clone(), &mut backend).unwrap();
+        assert!(got.allclose(&want, 1e-3), "numerics diverged for {name}");
+
+        let r = bench(&format!("e2e inference {name}"), 3, 30, || {
+            let mut env = env0.clone();
+            black_box(eval_expr_backend(&design, &mut env, &mut backend).unwrap());
+        });
+        csv.row(&[
+            name.into(),
+            format!("{:.1}", r.median.as_secs_f64() * 1e6),
+            format!("{:.1}", 1.0 / r.median.as_secs_f64()),
+        ]);
+    }
+    print!("\n{}", csv.render());
+    csv.write_csv("bench_results/runtime_engines.csv").ok();
+
+    // Oracle-only comparison: how much does PJRT dispatch cost vs pure
+    // Rust math for the same design?
+    let design = lower_default(&w.expr);
+    let env0 = Env::random_for(&design, 42);
+    bench("e2e inference mlp-initial (pure-Rust oracle)", 3, 30, || {
+        let mut env = env0.clone();
+        black_box(eval_expr(&design, &mut env).unwrap());
+    });
+}
+
+fn example_args(e: &Op) -> Vec<Tensor> {
+    let out = engine_out_shape(e);
+    match *e {
+        Op::MmEngine { m, k, n } | Op::MmReluEngine { m, k, n } => vec![
+            Tensor::random(Shape::new(&[m, k]), 1),
+            Tensor::random(Shape::new(&[k, n]), 2),
+        ],
+        Op::ReluEngine { w } => vec![Tensor::random(Shape::new(&[w]), 3)],
+        Op::AddEngine { w } => vec![
+            Tensor::random(Shape::new(&[w]), 4),
+            Tensor::random(Shape::new(&[w]), 5),
+        ],
+        Op::ConvEngine { oh, ow, c, k, kh, stride } => {
+            let ih = (oh - 1) * stride + kh;
+            let iw = (ow - 1) * stride + kh;
+            vec![
+                Tensor::random(Shape::new(&[c, ih, iw]), 6),
+                Tensor::random(Shape::new(&[k, c, kh, kh]), 7),
+            ]
+        }
+        Op::PoolEngine { oh, ow, c, k, stride } => {
+            let ih = (oh - 1) * stride + k;
+            let iw = (ow - 1) * stride + k;
+            vec![Tensor::random(Shape::new(&[c, ih, iw]), 8)]
+        }
+        _ => vec![Tensor::zeros(out)],
+    }
+}

@@ -1,0 +1,94 @@
+//! Bench E3 — design usefulness (paper §3: the set "should also include
+//! many useful design points; that is, designs which could turn into
+//! efficient hardware").
+//!
+//! Concretely: the area/latency Pareto frontier of the enumerated designs
+//! versus the one-engine-per-kernel-type baseline (Hadjis & Olukotun
+//! FPL'19 — the paper's §4 related work), plus simulator utilization for
+//! every frontier point.
+//!
+//! Run: `cargo bench --bench usefulness`
+
+use hwsplit::coordinator::{explore, ExploreConfig, RuleSet};
+use hwsplit::egraph::RunnerLimits;
+use hwsplit::relay::all_workloads;
+use hwsplit::report::{fmt_f64, Table};
+
+fn main() {
+    let mut csv = Table::new(
+        "usefulness",
+        &["workload", "design", "origin", "area", "latency", "sim_cycles", "util"],
+    );
+    for w in all_workloads() {
+        let cfg = ExploreConfig {
+            iters: 5,
+            samples: 64,
+            rules: RuleSet::Paper,
+            limits: RunnerLimits { max_nodes: 60_000, ..Default::default() },
+            ..Default::default()
+        };
+        let ex = explore(&w, &cfg);
+        let b = &ex.baseline.cost;
+
+        let mut t = Table::new(
+            &format!("E3 frontier vs baseline: {}", w.name),
+            &["design", "area", "latency", "sim-cycles", "util%"],
+        );
+        for p in &ex.frontier {
+            let sim = ex.designs.iter().find(|d| d.point.origin == p.origin).map(|d| &d.sim);
+            t.row(&[
+                p.origin.clone(),
+                fmt_f64(p.cost.area),
+                fmt_f64(p.cost.latency),
+                sim.map(|s| fmt_f64(s.cycles)).unwrap_or_default(),
+                sim.map(|s| format!("{:.0}", s.utilization * 100.0)).unwrap_or_default(),
+            ]);
+            csv.row(&[
+                w.name.into(),
+                "frontier".into(),
+                p.origin.clone(),
+                fmt_f64(p.cost.area),
+                fmt_f64(p.cost.latency),
+                sim.map(|s| fmt_f64(s.cycles)).unwrap_or_default(),
+                sim.map(|s| format!("{:.3}", s.utilization)).unwrap_or_default(),
+            ]);
+        }
+        t.row(&[
+            "BASELINE(FPL19)".into(),
+            fmt_f64(b.area),
+            fmt_f64(b.latency),
+            String::new(),
+            String::new(),
+        ]);
+        csv.row(&[
+            w.name.into(),
+            "baseline".into(),
+            "one-engine-per-kind".into(),
+            fmt_f64(b.area),
+            fmt_f64(b.latency),
+            String::new(),
+            String::new(),
+        ]);
+        print!("{}", t.render());
+        println!("{}\n", ex.frontier_vs_baseline());
+
+        // Shape assertions (who wins, roughly where):
+        // 1. enumeration reaches strictly smaller area than the baseline
+        //    (deep loops over small engines);
+        let min_area =
+            ex.designs.iter().map(|d| d.point.cost.area).fold(f64::INFINITY, f64::min);
+        assert!(
+            min_area < b.area,
+            "{}: enumerated min area {min_area} !< baseline {}",
+            w.name,
+            b.area
+        );
+        // 2. the frontier is non-trivial (>= 2 points) for multi-op
+        //    workloads — a single point would mean no real tradeoff found.
+        if w.expr.len() > 3 {
+            assert!(ex.frontier.len() >= 2, "{}: degenerate frontier", w.name);
+        }
+    }
+    csv.write_csv("bench_results/usefulness.csv").ok();
+    println!("wrote bench_results/usefulness.csv");
+}

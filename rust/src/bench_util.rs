@@ -1,0 +1,95 @@
+//! A tiny benchmarking harness for the `harness = false` bench binaries
+//! (criterion is not in the vendored dependency set). Provides warmup,
+//! repeated timed runs, and median/mean/min reporting, plus a `black_box`
+//! to defeat constant folding.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+/// Re-export of `std::hint::black_box` under the criterion-familiar name.
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// Timing summary of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub runs: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<40} runs={:<3} min={:>12.3?} median={:>12.3?} mean={:>12.3?}",
+            self.name, self.runs, self.min, self.median, self.mean
+        )
+    }
+
+    /// Median in nanoseconds (for CSV output).
+    pub fn median_ns(&self) -> u128 {
+        self.median.as_nanos()
+    }
+}
+
+/// Run `f` with warmup then `runs` timed iterations.
+pub fn bench(name: &str, warmup: usize, runs: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<Duration> = Vec::with_capacity(runs);
+    for _ in 0..runs {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    let mean = times.iter().sum::<Duration>() / runs.max(1) as u32;
+    let result = BenchResult {
+        name: name.to_string(),
+        runs,
+        mean,
+        median: times[times.len() / 2],
+        min: times[0],
+        max: *times.last().unwrap(),
+    };
+    println!("{}", result.line());
+    result
+}
+
+/// Auto-calibrating variant: picks an iteration count so the whole
+/// measurement takes roughly `target` wall-clock.
+pub fn bench_auto(name: &str, target: Duration, mut f: impl FnMut()) -> BenchResult {
+    // Calibrate.
+    let t0 = Instant::now();
+    f();
+    let one = t0.elapsed().max(Duration::from_nanos(100));
+    let runs = (target.as_nanos() / one.as_nanos()).clamp(3, 1000) as usize;
+    bench(name, runs.min(3), runs, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let r = bench("noop", 1, 11, || {
+            black_box(1 + 1);
+        });
+        assert_eq!(r.runs, 11);
+        assert!(r.min <= r.median && r.median <= r.max);
+    }
+
+    #[test]
+    fn bench_auto_clamps_runs() {
+        let r = bench_auto("sleepless", Duration::from_millis(5), || {
+            black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.runs >= 3);
+    }
+}

@@ -1,0 +1,282 @@
+//! The design-space-exploration coordinator: Rust owns the whole loop.
+//!
+//! One exploration = lower the workload → enumerate with rewrites (the
+//! search phase is fanned out across threads per rule) → sample candidate
+//! designs → evaluate each with the analytic model *and* the simulator on
+//! a worker pool → reduce to the Pareto frontier and compare against the
+//! one-engine-per-kernel-type baseline.
+//!
+//! No async runtime is required (and none is in the vendored dep set):
+//! exploration is a batch pipeline, so scoped OS threads + channels are the
+//! right tool. The e-graph is read-shared (`&EGraph`) during parallel
+//! search/extraction and mutated only in the single-threaded apply phase —
+//! the same discipline the rewrite `Runner` uses.
+
+use crate::cost::{analyze, baseline, Baseline, CostParams};
+use crate::egraph::{EGraph, Id, Rewrite, Runner, RunnerLimits, RunnerReport};
+use crate::extract::{pareto_frontier, sample_design, DesignPoint, Extractor};
+use crate::ir::RecExpr;
+use crate::lower::lower_default;
+use crate::relay::Workload;
+use crate::rewrites;
+use crate::sim::{simulate, SimConfig, SimReport};
+
+/// Which rewrite set to enumerate with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RuleSet {
+    /// Only paper Fig. 2's two rewrites (ReLU split + parallelize).
+    Fig2,
+    /// Everything §2 describes.
+    Paper,
+    /// Paper + extensions (fusion, loop reorder, double buffering).
+    All,
+}
+
+impl RuleSet {
+    pub fn rules(self) -> Vec<Rewrite> {
+        match self {
+            RuleSet::Fig2 => rewrites::fig2_rules(),
+            RuleSet::Paper => rewrites::paper_rules(),
+            RuleSet::All => rewrites::all_rules(),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "fig2" => RuleSet::Fig2,
+            "paper" => RuleSet::Paper,
+            "all" => RuleSet::All,
+            _ => return None,
+        })
+    }
+}
+
+/// Exploration configuration.
+#[derive(Debug, Clone)]
+pub struct ExploreConfig {
+    pub iters: usize,
+    pub samples: usize,
+    pub workers: usize,
+    pub rules: RuleSet,
+    pub limits: RunnerLimits,
+    pub params: CostParams,
+}
+
+impl Default for ExploreConfig {
+    fn default() -> Self {
+        ExploreConfig {
+            iters: 8,
+            samples: 64,
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            rules: RuleSet::Paper,
+            limits: RunnerLimits::default(),
+            params: CostParams::default(),
+        }
+    }
+}
+
+/// One evaluated design point: analytic cost + simulator report.
+#[derive(Debug, Clone)]
+pub struct EvaluatedDesign {
+    pub point: DesignPoint,
+    pub sim: SimReport,
+}
+
+/// The result of one exploration.
+#[derive(Debug)]
+pub struct Exploration {
+    pub workload: String,
+    pub lowered: RecExpr,
+    pub report: RunnerReport,
+    pub egraph: EGraph,
+    pub root: Id,
+    pub designs: Vec<EvaluatedDesign>,
+    pub frontier: Vec<DesignPoint>,
+    pub baseline: Baseline,
+}
+
+fn vlog(phase: &str, t0: std::time::Instant) {
+    if std::env::var_os("HWSPLIT_VERBOSE").is_some() {
+        eprintln!("[explore] {phase}: {:.2?}", t0.elapsed());
+    }
+}
+
+/// Run the full pipeline for one workload.
+pub fn explore(workload: &Workload, cfg: &ExploreConfig) -> Exploration {
+    // 1. Reify (paper Fig. 1).
+    let lowered = lower_default(&workload.expr);
+
+    // 2. Enumerate (paper Fig. 2 & §2).
+    let t0 = std::time::Instant::now();
+    let mut runner =
+        Runner::new(lowered.clone(), cfg.rules.rules()).with_limits(cfg.limits.clone());
+    let report = runner.run(cfg.iters);
+    let (egraph, root) = (runner.egraph, runner.root);
+    vlog("enumerate", t0);
+
+    // 3. Sample candidate designs (greedy endpoints + randomized costs),
+    //    extracting in parallel — extraction only reads the e-graph.
+    let t0 = std::time::Instant::now();
+    let mut exprs: Vec<(String, RecExpr)> = Vec::new();
+    exprs.push((
+        "greedy-latency".into(),
+        Extractor::new(&egraph, crate::extract::latency_cost).extract(&egraph, root),
+    ));
+    exprs.push((
+        "greedy-area".into(),
+        Extractor::new(&egraph, crate::extract::area_cost).extract(&egraph, root),
+    ));
+    vlog("greedy extraction", t0);
+    let t0 = std::time::Instant::now();
+    let sampled: Vec<(String, RecExpr)> = parallel_map(
+        cfg.workers,
+        (0..cfg.samples).collect(),
+        |seed: &usize| (format!("sample-{seed}"), sample_design(&egraph, root, *seed as u64)),
+    );
+    exprs.extend(sampled);
+    vlog("sampling", t0);
+    // Deduplicate structurally identical designs.
+    let t0 = std::time::Instant::now();
+    let mut seen = std::collections::HashSet::new();
+    exprs.retain(|(_, e)| seen.insert(e.to_string()));
+    vlog("dedup", t0);
+
+    // 4. Evaluate each design (analytic + simulator) on the worker pool.
+    let t0 = std::time::Instant::now();
+    let params = cfg.params.clone();
+    let designs: Vec<EvaluatedDesign> = parallel_map(cfg.workers, exprs, |(origin, expr)| {
+        let (cost, stats) = analyze(expr, &params);
+        let sim = simulate(expr, &SimConfig { params: params.clone() });
+        EvaluatedDesign {
+            point: DesignPoint { expr: expr.clone(), cost, stats, origin: origin.clone() },
+            sim,
+        }
+    });
+    vlog("evaluate", t0);
+
+    // 5. Reduce.
+    let frontier = pareto_frontier(&designs.iter().map(|d| d.point.clone()).collect::<Vec<_>>());
+    let base = baseline(&lowered, &cfg.params);
+
+    Exploration {
+        workload: workload.name.to_string(),
+        lowered,
+        report,
+        egraph,
+        root,
+        designs,
+        frontier,
+        baseline: base,
+    }
+}
+
+/// Scoped-thread parallel map preserving input order.
+pub fn parallel_map<T: Send + Sync, R: Send>(
+    workers: usize,
+    items: Vec<T>,
+    f: impl Fn(&T) -> R + Sync,
+) -> Vec<R> {
+    if items.is_empty() {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, items.len());
+    let results: Vec<std::sync::Mutex<Option<R>>> =
+        items.iter().map(|_| std::sync::Mutex::new(None)).collect();
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(&items[i]);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    results.into_iter().map(|m| m.into_inner().unwrap().unwrap()).collect()
+}
+
+impl Exploration {
+    /// Experiment E3 summary: does the enumerated frontier dominate the
+    /// baseline point, and from which side?
+    pub fn frontier_vs_baseline(&self) -> String {
+        let b = &self.baseline.cost;
+        let dominating =
+            self.frontier.iter().filter(|p| p.cost.dominates(b)).count();
+        let smaller = self
+            .frontier
+            .iter()
+            .filter(|p| p.cost.area < b.area)
+            .count();
+        let faster = self
+            .frontier
+            .iter()
+            .filter(|p| p.cost.latency < b.latency)
+            .count();
+        format!(
+            "baseline(area={:.1}, lat={:.1}) | frontier: {} points, {} dominate baseline, \
+             {} smaller-area, {} lower-latency",
+            b.area,
+            b.latency,
+            self.frontier.len(),
+            dominating,
+            smaller,
+            faster
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::relay::workloads;
+    use crate::tensor::{eval_expr, Env};
+
+    fn small_cfg() -> ExploreConfig {
+        ExploreConfig {
+            iters: 4,
+            samples: 12,
+            workers: 4,
+            rules: RuleSet::Paper,
+            limits: RunnerLimits { max_nodes: 30_000, ..Default::default() },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map(8, (0..100).collect::<Vec<_>>(), |x| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn explore_ffn_end_to_end() {
+        let w = workloads::ffn_block();
+        let ex = explore(&w, &small_cfg());
+        assert!(ex.report.designs_lower_bound > 1.0, "enumeration found nothing");
+        assert!(ex.designs.len() >= 3, "need diverse designs");
+        assert!(!ex.frontier.is_empty());
+        // Every sampled design is semantically the workload.
+        let want = eval_expr(&w.expr, &mut Env::random_for(&w.expr, 5)).unwrap();
+        for d in ex.designs.iter().take(6) {
+            let got = eval_expr(&d.point.expr, &mut Env::random_for(&d.point.expr, 5)).unwrap();
+            assert!(want.allclose(&got, 1e-4), "{} diverged", d.point.origin);
+        }
+    }
+
+    #[test]
+    fn explore_relu128_frontier_beats_baseline_somewhere() {
+        let w = workloads::relu128();
+        let ex = explore(&w, &small_cfg());
+        let b = &ex.baseline.cost;
+        // The enumerated set must contain a smaller-area design than the
+        // baseline (deep loop over a narrow engine).
+        assert!(
+            ex.designs.iter().any(|d| d.point.cost.area < b.area),
+            "no smaller-than-baseline design found: {}",
+            ex.frontier_vs_baseline()
+        );
+    }
+}

@@ -1,0 +1,189 @@
+//! The related-work baseline: **one engine per kernel type** (Hadjis &
+//! Olukotun, FPL'19 — the paper's §4 comparison point).
+//!
+//! Their compiler instantiates exactly one hardware engine for each *type*
+//! of kernel in the workload, sized for the largest call, and time-
+//! multiplexes every call of that type through it. The paper's pitch is
+//! that rewrite-based enumeration finds "more complex (but potentially
+//! more profitable) splits" than this; experiment E3 measures exactly that
+//! by comparing the enumerated Pareto frontier against this point.
+
+use super::{engine_area, engine_cycles, CostParams, DesignCost};
+use crate::ir::{Op, OpKind, RecExpr, Ty};
+use std::collections::HashMap;
+
+/// Per-kind shared engine chosen by the baseline, plus its call count.
+#[derive(Debug, Clone)]
+pub struct BaselineEngine {
+    pub engine: Op,
+    pub calls: usize,
+}
+
+/// The baseline design summary.
+#[derive(Debug, Clone)]
+pub struct Baseline {
+    pub engines: Vec<BaselineEngine>,
+    pub cost: DesignCost,
+}
+
+fn kind_key(op: &Op) -> OpKind {
+    op.kind()
+}
+
+/// Merge two engines of the same kind into the elementwise-max-parameter
+/// engine (the baseline's "sized for the largest call").
+fn max_engine(a: &Op, b: &Op) -> Op {
+    use Op::*;
+    match (a, b) {
+        (MmEngine { m, k, n }, MmEngine { m: m2, k: k2, n: n2 }) => {
+            MmEngine { m: (*m).max(*m2), k: (*k).max(*k2), n: (*n).max(*n2) }
+        }
+        (MmReluEngine { m, k, n }, MmReluEngine { m: m2, k: k2, n: n2 }) => {
+            MmReluEngine { m: (*m).max(*m2), k: (*k).max(*k2), n: (*n).max(*n2) }
+        }
+        (ReluEngine { w }, ReluEngine { w: w2 }) => ReluEngine { w: (*w).max(*w2) },
+        (AddEngine { w }, AddEngine { w: w2 }) => AddEngine { w: (*w).max(*w2) },
+        (
+            ConvEngine { oh, ow, c, k, kh, stride },
+            ConvEngine { oh: a1, ow: a2, c: a3, k: a4, kh: a5, stride: _ },
+        ) => ConvEngine {
+            oh: (*oh).max(*a1),
+            ow: (*ow).max(*a2),
+            c: (*c).max(*a3),
+            k: (*k).max(*a4),
+            kh: (*kh).max(*a5),
+            stride: *stride,
+        },
+        (
+            PoolEngine { oh, ow, c, k, stride },
+            PoolEngine { oh: b1, ow: b2, c: b3, k: b4, stride: _ },
+        ) => PoolEngine {
+            oh: (*oh).max(*b1),
+            ow: (*ow).max(*b2),
+            c: (*c).max(*b3),
+            k: (*k).max(*b4),
+            stride: *stride,
+        },
+        _ => a.clone(),
+    }
+}
+
+/// Engine I/O element count for one (maximal) invocation.
+fn engine_io(op: &Op) -> f64 {
+    match *op {
+        Op::MmEngine { m, k, n } | Op::MmReluEngine { m, k, n } => (m * k + k * n + m * n) as f64,
+        Op::ReluEngine { w } => 2.0 * w as f64,
+        Op::AddEngine { w } => 3.0 * w as f64,
+        Op::ConvEngine { oh, ow, c, k, kh, stride } => {
+            let ih = (oh - 1) * stride + kh;
+            let iw = (ow - 1) * stride + kh;
+            (c * ih * iw + k * c * kh * kh + k * oh * ow) as f64
+        }
+        Op::PoolEngine { oh, ow, c, k, stride } => {
+            let ih = (oh - 1) * stride + k;
+            let iw = (ow - 1) * stride + k;
+            (c * ih * iw + c * oh * ow) as f64
+        }
+        _ => 0.0,
+    }
+}
+
+/// Build the one-engine-per-kernel-type baseline for a lowered workload.
+pub fn baseline(lowered: &RecExpr, p: &CostParams) -> Baseline {
+    let tys = lowered.types().expect("baseline: lowered must typecheck");
+    // Group call sites by engine kind; size each shared engine to the max.
+    let mut shared: HashMap<OpKind, (Op, usize)> = HashMap::new();
+    let mut sram_bytes = 0.0;
+    for (slot, node) in lowered.nodes().iter().enumerate() {
+        if node.op.is_invoke() {
+            let engine = lowered.node(node.children[0]).op.clone();
+            shared
+                .entry(kind_key(&engine))
+                .and_modify(|(e, c)| {
+                    *e = max_engine(e, &engine);
+                    *c += 1;
+                })
+                .or_insert((engine, 1));
+        }
+        if matches!(node.op, Op::Buffer { kind: crate::ir::BufKind::Sram })
+            || matches!(node.op, Op::DblBuffer { kind: crate::ir::BufKind::Sram })
+        {
+            if let Ty::Tensor(s) = &tys[slot] {
+                sram_bytes += s.numel() as f64 * 4.0;
+            }
+        }
+    }
+
+    let mut engines: Vec<BaselineEngine> = shared
+        .into_values()
+        .map(|(engine, calls)| BaselineEngine { engine, calls })
+        .collect();
+    engines.sort_by_key(|b| format!("{}", b.engine));
+
+    let mut area = sram_bytes * p.sram_byte_area;
+    let mut latency = 0.0;
+    let mut energy = 0.0;
+    let mut engine_area_total = 0.0;
+    for be in &engines {
+        engine_area_total += engine_area(&be.engine, p);
+        // Every call streams through the (oversized) shared engine.
+        let per_call = engine_cycles(&be.engine, engine_io(&be.engine), p);
+        latency += be.calls as f64 * per_call;
+        energy += be.calls as f64 * be.engine.engine_macs() as f64 * p.e_mac;
+    }
+    area += engine_area_total;
+    // Buffer read/write traffic, as in the analytic model.
+    latency += 2.0 * (sram_bytes / 4.0) / p.sram_bw;
+
+    Baseline {
+        engines,
+        cost: DesignCost {
+            area,
+            latency,
+            energy,
+            engine_area: engine_area_total,
+            sram_area: sram_bytes * p.sram_byte_area,
+            dram_traffic: 0.0,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lower::lower_default;
+    use crate::relay::workloads;
+
+    #[test]
+    fn mlp_baseline_has_two_engine_types_plus_relu() {
+        // mlp lowers to mm + add + relu invokes -> 3 kinds.
+        let lo = lower_default(&workloads::mlp().expr);
+        let b = baseline(&lo, &CostParams::default());
+        assert_eq!(b.engines.len(), 3);
+        let mm = b.engines.iter().find(|e| matches!(e.engine, Op::MmEngine { .. })).unwrap();
+        // Shared mm engine sized to the largest call: 1x784x128.
+        assert_eq!(mm.engine, Op::MmEngine { m: 1, k: 784, n: 128 });
+        assert_eq!(mm.calls, 3);
+    }
+
+    #[test]
+    fn lenet_baseline_covers_all_kinds() {
+        let lo = lower_default(&workloads::lenet().expr);
+        let b = baseline(&lo, &CostParams::default());
+        let kinds: Vec<OpKind> = b.engines.iter().map(|e| e.engine.kind()).collect();
+        assert!(kinds.contains(&OpKind::ConvEngine));
+        assert!(kinds.contains(&OpKind::PoolEngine));
+        assert!(kinds.contains(&OpKind::MmEngine));
+        assert!(b.cost.area > 0.0 && b.cost.latency > 0.0);
+    }
+
+    #[test]
+    fn baseline_area_at_most_initial_design() {
+        // Sharing engines can only reduce engine area vs one-per-call-site
+        // (per kind the baseline keeps the max engine only).
+        let lo = lower_default(&workloads::mlp().expr);
+        let b = baseline(&lo, &CostParams::default());
+        let (init, _) = crate::cost::analyze(&lo, &CostParams::default());
+        assert!(b.cost.engine_area <= init.engine_area + 1e-9);
+    }
+}

@@ -1,0 +1,470 @@
+//! Analytic hardware cost models over concrete EngineIR designs.
+//!
+//! The paper's evaluation needs designs ranked by whether they "could turn
+//! into efficient hardware" (§3 *usefulness*) and spread over the split
+//! spectrum (§3 *diversity*). This module provides:
+//!
+//! * [`CostParams`] — technology constants (per-MAC area, port widths,
+//!   memory bandwidths), loosely calibrated to an FPGA-class substrate;
+//! * [`cost_of`] — area / latency / energy of a design (a [`RecExpr`]);
+//! * [`DesignStats`] — structural diversity features (distinct engines,
+//!   schedule depth, parallel degree, buffer bytes).
+//!
+//! Model shape (deliberately simple, monotone, and documented — the paper's
+//! claims are about *relative* orderings, not absolute LUT counts):
+//!
+//! * an engine is **spatial**: its area is proportional to its MAC count,
+//!   and one invocation streams its operands through fixed-width ports, so
+//!   `cycles ≈ startup + io_elems / port_width`;
+//! * `sched-loop` time-multiplexes one engine instance (`extent ×` body
+//!   cycles + per-iteration control overhead); `sched-par` replicates the
+//!   engine (`max` of bodies ≈ body cycles + a merge term) and multiplies
+//!   *area*;
+//! * `sched-reduce` is a sequential dependency chain with an accumulate;
+//! * buffers cost SRAM area and read+write traffic; DRAM buffers are
+//!   area-free but slow; double buffers overlap producer/consumer (half
+//!   visible traffic latency, double storage area);
+//! * un-reified Relay ops fall back to "host execution" with a large
+//!   penalty — enumerated designs that leave work in software-on-host are
+//!   legal but rarely *useful*.
+
+pub mod baseline;
+
+pub use baseline::{baseline, Baseline, BaselineEngine};
+
+use crate::ir::{BufKind, Op, RecExpr, Shape, Ty};
+
+/// Technology / substrate constants.
+#[derive(Debug, Clone)]
+pub struct CostParams {
+    /// Area units per multiply-accumulate of a matmul/conv engine.
+    pub mac_area: f64,
+    /// Area units per lane of elementwise engines (relu/add/pool compare).
+    pub lane_area: f64,
+    /// Area units per byte of SRAM buffer.
+    pub sram_byte_area: f64,
+    /// Elements per cycle through an engine's streaming ports.
+    pub port_width: f64,
+    /// Engine invocation startup cycles (control, pipeline fill).
+    pub startup: f64,
+    /// Per-iteration loop control overhead, cycles.
+    pub loop_overhead: f64,
+    /// Elements per cycle to/from SRAM buffers.
+    pub sram_bw: f64,
+    /// Elements per cycle to/from DRAM.
+    pub dram_bw: f64,
+    /// Cycles per MAC when an op is left un-reified (host fallback).
+    pub host_penalty: f64,
+    /// Energy per MAC (pJ-ish arbitrary units).
+    pub e_mac: f64,
+    /// Energy per element moved through SRAM.
+    pub e_sram: f64,
+    /// Energy per element moved through DRAM.
+    pub e_dram: f64,
+}
+
+impl Default for CostParams {
+    fn default() -> Self {
+        CostParams {
+            mac_area: 1.0,
+            lane_area: 0.1,
+            sram_byte_area: 0.01,
+            port_width: 16.0,
+            startup: 4.0,
+            loop_overhead: 2.0,
+            sram_bw: 32.0,
+            dram_bw: 4.0,
+            host_penalty: 100.0,
+            e_mac: 1.0,
+            e_sram: 0.5,
+            e_dram: 8.0,
+        }
+    }
+}
+
+/// Unit area of one instance of an engine declaration.
+pub fn engine_area(op: &Op, p: &CostParams) -> f64 {
+    let macs = op.engine_macs() as f64;
+    match op {
+        Op::MmEngine { .. } | Op::MmReluEngine { .. } | Op::ConvEngine { .. } => macs * p.mac_area,
+        Op::ReluEngine { .. } | Op::AddEngine { .. } | Op::PoolEngine { .. } => {
+            macs * p.lane_area
+        }
+        _ => 0.0,
+    }
+}
+
+/// Cycles for one invocation of an engine (streaming model).
+pub fn engine_cycles(op: &Op, io_elems: f64, p: &CostParams) -> f64 {
+    let _ = op;
+    p.startup + io_elems / p.port_width
+}
+
+/// Full cost breakdown of one concrete design.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DesignCost {
+    /// Engine area + SRAM area (arbitrary units).
+    pub area: f64,
+    /// End-to-end cycles for one inference.
+    pub latency: f64,
+    /// Energy estimate.
+    pub energy: f64,
+    /// Engine area alone.
+    pub engine_area: f64,
+    /// SRAM buffer area alone.
+    pub sram_area: f64,
+    /// Total DRAM element traffic.
+    pub dram_traffic: f64,
+}
+
+impl DesignCost {
+    /// Scalar objective: weighted geometric blend used by guided extraction.
+    pub fn scalar(&self, area_weight: f64) -> f64 {
+        self.latency * (1.0 - area_weight) + self.area * area_weight
+    }
+
+    /// Pareto dominance on (area, latency).
+    pub fn dominates(&self, other: &DesignCost) -> bool {
+        (self.area <= other.area && self.latency < other.latency)
+            || (self.area < other.area && self.latency <= other.latency)
+    }
+}
+
+/// Structural diversity features of a design (experiment E2).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DesignStats {
+    /// Distinct engine declarations.
+    pub engines: usize,
+    /// Total engine instances after `sched-par` replication.
+    pub engine_instances: f64,
+    /// Engine invocation sites.
+    pub invokes: usize,
+    /// Maximum schedule nesting depth.
+    pub sched_depth: usize,
+    /// Number of schedule nodes that are loops / pars / reduces.
+    pub loops: usize,
+    pub pars: usize,
+    pub reduces: usize,
+    /// Bytes of SRAM buffering.
+    pub buffer_bytes: f64,
+    /// Relay ops left un-reified.
+    pub unreified: usize,
+}
+
+impl DesignStats {
+    /// L1 distance in a normalized feature space — "how different are two
+    /// design points" for the diversity experiment.
+    pub fn distance(&self, other: &DesignStats) -> f64 {
+        let f = |a: f64, b: f64| {
+            let m = a.max(b).max(1.0);
+            (a - b).abs() / m
+        };
+        f(self.engines as f64, other.engines as f64)
+            + f(self.engine_instances, other.engine_instances)
+            + f(self.invokes as f64, other.invokes as f64)
+            + f(self.sched_depth as f64, other.sched_depth as f64)
+            + f(self.loops as f64, other.loops as f64)
+            + f(self.pars as f64, other.pars as f64)
+            + f(self.buffer_bytes, other.buffer_bytes)
+    }
+}
+
+struct Analyzer<'a> {
+    expr: &'a RecExpr,
+    tys: Vec<Ty>,
+    p: &'a CostParams,
+    /// engine op -> max concurrent instances demanded (par replication)
+    instances: std::collections::HashMap<Op, f64>,
+    sram_bytes: f64,
+    dram_traffic: f64,
+    energy: f64,
+    stats: DesignStats,
+    /// Per-slot free loop variables: loop-invariant subtrees (empty set)
+    /// are *hoisted* — priced once, not once per consumer iteration.
+    free: Vec<Vec<crate::ir::Symbol>>,
+    hoisted: f64,
+    visited: Vec<bool>,
+}
+
+impl<'a> Analyzer<'a> {
+    fn shape(&self, id: crate::egraph::Id) -> &Shape {
+        match &self.tys[id.index()] {
+            Ty::Tensor(s) => s,
+            _ => panic!("cost: expected tensor"),
+        }
+    }
+
+    /// Latency contribution of the subtree at its consumption site.
+    /// Loop-invariant subtrees are priced once into `self.hoisted`
+    /// (producer materializes before the consuming schedule runs) and
+    /// contribute 0 at each use — without this, a shared producer inside a
+    /// consumer loop would be (mis)priced once per iteration, and nested
+    /// layers would compound exponentially.
+    fn walk(&mut self, id: crate::egraph::Id, par_mult: f64, depth: usize) -> f64 {
+        let slot = id.index();
+        if self.free[slot].is_empty() {
+            if !self.visited[slot] {
+                self.visited[slot] = true;
+                // A hoisted producer executes ONCE regardless of how deep
+                // inside consumer `sched-par`s it is referenced, so it
+                // demands exactly one engine instance (par_mult = 1).
+                let lat = self.walk_node(id, 1.0, depth);
+                self.hoisted += lat;
+            }
+            return 0.0;
+        }
+        self.walk_node(id, par_mult, depth)
+    }
+
+    /// Price one node (see [`Self::walk`] for the hoisting wrapper).
+    fn walk_node(&mut self, id: crate::egraph::Id, par_mult: f64, depth: usize) -> f64 {
+        let node = self.expr.node(id).clone();
+        let c = &node.children;
+        match &node.op {
+            Op::Int(_) | Op::LVar(_) | Op::IMul | Op::IAdd => 0.0,
+            Op::Input(..) | Op::Weight(..) => 0.0,
+
+            // Engine declarations: area accounted at invocation sites.
+            op if op.is_engine() => 0.0,
+
+            op if op.is_invoke() => {
+                let engine = self.expr.node(c[0]).op.clone();
+                let inst = self.instances.entry(engine.clone()).or_insert(0.0);
+                *inst = inst.max(par_mult);
+                self.stats.invokes += 1;
+
+                // Operand latencies (operands stream in sequence with the
+                // invocation in the simple model: sum).
+                let mut lat = 0.0;
+                let mut io: f64 = self.shape(id).numel() as f64; // output
+                for &arg in &c[1..] {
+                    lat += self.walk(arg, par_mult, depth);
+                    io += self.shape(arg).numel() as f64;
+                }
+                self.energy += engine.engine_macs() as f64 * self.p.e_mac;
+                lat + engine_cycles(&engine, io, self.p)
+            }
+
+            Op::SchedLoop { extent, .. } => {
+                self.stats.loops += 1;
+                self.stats.sched_depth = self.stats.sched_depth.max(depth + 1);
+                let body = self.walk(c[0], par_mult, depth + 1);
+                *extent as f64 * (body + self.p.loop_overhead)
+            }
+            Op::SchedPar { extent, .. } => {
+                self.stats.pars += 1;
+                self.stats.sched_depth = self.stats.sched_depth.max(depth + 1);
+                let body = self.walk(c[0], par_mult * *extent as f64, depth + 1);
+                // Concurrent bodies + a log-depth merge network.
+                body + (*extent as f64).log2().ceil() * self.p.loop_overhead
+            }
+            Op::SchedReduce { extent, .. } => {
+                self.stats.reduces += 1;
+                self.stats.sched_depth = self.stats.sched_depth.max(depth + 1);
+                let body = self.walk(c[0], par_mult, depth + 1);
+                let out = self.shape(id).numel() as f64;
+                let acc = out / self.p.port_width;
+                *extent as f64 * (body + self.p.loop_overhead) + (*extent as f64 - 1.0) * acc
+            }
+
+            Op::SliceAx { .. } => self.walk(c[1], par_mult, depth), // addressing is free
+            Op::Reshape(_) => self.walk(c[0], par_mult, depth),     // view
+            Op::Bcast(_) => self.walk(c[0], par_mult, depth),       // wiring
+            Op::Pad2d { .. } | Op::Im2Col { .. } => {
+                let lat = self.walk(c[0], par_mult, depth);
+                let out = self.shape(id).numel() as f64;
+                self.energy += out * self.p.e_sram;
+                lat + out / self.p.sram_bw
+            }
+
+            Op::Buffer { kind } | Op::DblBuffer { kind } => {
+                let elems = self.shape(id).numel() as f64;
+                let bytes = elems * 4.0;
+                let dbl = matches!(node.op, Op::DblBuffer { .. });
+                let lat = self.walk(c[0], par_mult, depth);
+                match kind {
+                    BufKind::Sram => {
+                        self.sram_bytes += bytes * if dbl { 2.0 } else { 1.0 } * par_mult;
+                        self.stats.buffer_bytes += bytes * if dbl { 2.0 } else { 1.0 };
+                        self.energy += 2.0 * elems * self.p.e_sram;
+                        // write+read; double-buffering overlaps one side.
+                        lat + (if dbl { 1.0 } else { 2.0 }) * elems / self.p.sram_bw
+                    }
+                    BufKind::Dram => {
+                        self.dram_traffic += 2.0 * elems;
+                        self.energy += 2.0 * elems * self.p.e_dram;
+                        lat + (if dbl { 1.0 } else { 2.0 }) * elems / self.p.dram_bw
+                    }
+                }
+            }
+
+            // Un-reified Relay compute: host fallback.
+            op => {
+                self.stats.unreified += 1;
+                let mut lat = 0.0;
+                for &arg in c {
+                    lat += self.walk(arg, par_mult, depth);
+                }
+                let out = self.shape(id).numel() as f64;
+                let work = match op {
+                    Op::Conv2d { .. } | Op::Dense => {
+                        // MACs: out * reduction length
+                        let red = match op {
+                            Op::Dense => self.shape(c[0]).dim(1) as f64,
+                            _ => {
+                                let w = self.shape(c[1]);
+                                (w.dim(1) * w.dim(2) * w.dim(3)) as f64
+                            }
+                        };
+                        out * red
+                    }
+                    _ => out,
+                };
+                lat + work * self.p.host_penalty
+            }
+        }
+    }
+}
+
+/// Compute the full cost breakdown and diversity stats of a design.
+pub fn analyze(expr: &RecExpr, p: &CostParams) -> (DesignCost, DesignStats) {
+    let tys = expr.types().expect("cost: design must be well-typed");
+    let mut a = Analyzer {
+        expr,
+        tys,
+        p,
+        instances: Default::default(),
+        sram_bytes: 0.0,
+        dram_traffic: 0.0,
+        energy: 0.0,
+        stats: DesignStats::default(),
+        free: expr.free_lvars(),
+        hoisted: 0.0,
+        visited: vec![false; expr.len()],
+    };
+    let residual = a.walk(expr.root(), 1.0, 0);
+    // The root is loop-invariant, so its full latency lands in `hoisted`.
+    let latency = a.hoisted + residual;
+
+    let mut engine_area_total = 0.0;
+    for (op, inst) in &a.instances {
+        engine_area_total += engine_area(op, p) * inst;
+    }
+    a.stats.engines = a.instances.len();
+    a.stats.engine_instances = a.instances.values().sum();
+
+    let sram_area = a.sram_bytes * p.sram_byte_area;
+    let cost = DesignCost {
+        area: engine_area_total + sram_area,
+        latency,
+        energy: a.energy,
+        engine_area: engine_area_total,
+        sram_area,
+        dram_traffic: a.dram_traffic,
+    };
+    (cost, a.stats)
+}
+
+/// Cost only (convenience).
+pub fn cost_of(expr: &RecExpr, p: &CostParams) -> DesignCost {
+    analyze(expr, p).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parse_expr;
+
+    fn c(src: &str) -> (DesignCost, DesignStats) {
+        analyze(&parse_expr(src).unwrap(), &CostParams::default())
+    }
+
+    const WHOLE: &str = "(invoke-relu (relu-engine 128) (input x [128]))";
+    const LOOPED: &str = "(sched-loop i0 0 2 (invoke-relu (relu-engine 64) \
+        (slice 0 64 (imul (lvar i0) 64) (input x [128]))))";
+    const PARRED: &str = "(sched-par i0 0 2 (invoke-relu (relu-engine 64) \
+        (slice 0 64 (imul (lvar i0) 64) (input x [128]))))";
+
+    /// The paper's Fig. 2 economics: looping halves hardware but costs
+    /// time; parallelizing buys the time back with more hardware.
+    #[test]
+    fn fig2_cost_ordering() {
+        let (whole, _) = c(WHOLE);
+        let (looped, _) = c(LOOPED);
+        let (parred, _) = c(PARRED);
+        // Area: looped (one 64-wide engine) < whole (one 128-wide)
+        //       and parred (two 64-wide) == whole.
+        assert!(looped.area < whole.area, "{} vs {}", looped.area, whole.area);
+        assert!((parred.area - whole.area).abs() < 1e-9);
+        // Latency: looped > whole; parred < looped.
+        assert!(looped.latency > whole.latency);
+        assert!(parred.latency < looped.latency);
+    }
+
+    #[test]
+    fn par_replicates_instances() {
+        let (_, s_loop) = c(LOOPED);
+        let (_, s_par) = c(PARRED);
+        assert_eq!(s_loop.engine_instances, 1.0);
+        assert_eq!(s_par.engine_instances, 2.0);
+    }
+
+    #[test]
+    fn sram_buffer_adds_area_dram_adds_traffic() {
+        let (sram, _) = c("(buffer sram (invoke-relu (relu-engine 16) (input x [16])))");
+        let (dram, _) = c("(buffer dram (invoke-relu (relu-engine 16) (input x [16])))");
+        assert!(sram.sram_area > 0.0);
+        assert_eq!(dram.sram_area, 0.0);
+        assert!(dram.dram_traffic > 0.0);
+        assert!(dram.latency > sram.latency, "DRAM must be slower");
+        assert!(dram.area < sram.area, "DRAM must be cheaper in area");
+    }
+
+    #[test]
+    fn double_buffer_trades_area_for_latency() {
+        let (single, _) = c("(buffer sram (invoke-relu (relu-engine 16) (input x [16])))");
+        let (double, _) = c("(dbl-buffer sram (invoke-relu (relu-engine 16) (input x [16])))");
+        assert!(double.area > single.area);
+        assert!(double.latency < single.latency);
+    }
+
+    #[test]
+    fn unreified_relay_pays_host_penalty() {
+        let (relay, _) = c("(relu (input x [128]))");
+        let (engine, _) = c(WHOLE);
+        assert!(relay.latency > 10.0 * engine.latency);
+    }
+
+    #[test]
+    fn engine_sharing_shrinks_area() {
+        // Two invocations of the SAME engine declaration cost one engine of
+        // area (time-multiplexed) but twice the invocation latency.
+        let one = "(invoke-relu (relu-engine 64) (input x [64]))";
+        let two = "(invoke-relu (relu-engine 64) (invoke-relu (relu-engine 64) (input x [64])))";
+        let (a, sa) = c(one);
+        let (b, sb) = c(two);
+        assert_eq!(sa.engines, 1);
+        assert_eq!(sb.engines, 1);
+        assert_eq!(sb.invokes, 2);
+        assert!((a.area - b.area).abs() < 1e-9, "shared engine = same area");
+        assert!(b.latency > a.latency);
+    }
+
+    #[test]
+    fn dominance_is_strict() {
+        let a = DesignCost { area: 1.0, latency: 1.0, ..Default::default() };
+        let b = DesignCost { area: 2.0, latency: 2.0, ..Default::default() };
+        assert!(a.dominates(&b));
+        assert!(!b.dominates(&a));
+        assert!(!a.dominates(&a));
+    }
+
+    #[test]
+    fn stats_distance_symmetric_zero_on_self() {
+        let (_, s1) = c(LOOPED);
+        let (_, s2) = c(PARRED);
+        assert_eq!(s1.distance(&s1), 0.0);
+        assert!((s1.distance(&s2) - s2.distance(&s1)).abs() < 1e-12);
+        assert!(s1.distance(&s2) > 0.0);
+    }
+}

@@ -1,0 +1,386 @@
+//! The e-graph proper: hashcons + e-classes + deferred congruence closure,
+//! with a shape/type analysis on every class.
+
+use super::unionfind::UnionFind;
+use super::Id;
+use crate::ir::{infer_ty_ref, Node, RecExpr, Ty};
+use rustc_hash::FxHashMap as HashMap;
+
+/// An equivalence class of e-nodes, all computing the same value.
+#[derive(Debug, Clone)]
+pub struct EClass {
+    /// Canonical id (valid as of the last rebuild).
+    pub id: Id,
+    /// The e-nodes in this class. Children are canonical as of the last
+    /// rebuild; use [`EGraph::find`] when chasing them after unions.
+    pub nodes: Vec<Node>,
+    /// Parent e-nodes (as indices into the e-graph's node arena) and the
+    /// class each was memoized into — the congruence-closure back-edges.
+    /// Indices instead of owned nodes: `add` is the hot path and cloning
+    /// the node once per child measurably hurts insert throughput.
+    pub(crate) parents: Vec<(u32, Id)>,
+    /// Analysis data: the type (index / tensor shape / engine signature).
+    /// Every member of a class must agree — this is the semantic guardrail
+    /// that catches broken rewrites at union time.
+    pub ty: Ty,
+}
+
+/// The e-graph. See the module docs of [`crate::egraph`].
+#[derive(Debug, Clone, Default)]
+pub struct EGraph {
+    uf: UnionFind,
+    classes: Vec<Option<EClass>>, // indexed by Id; None once merged away
+    memo: HashMap<Node, Id>,
+    /// Arena of all inserted (canonical-at-insert-time) nodes; parent
+    /// back-edges index into this.
+    arena: Vec<Node>,
+    /// Classes whose parents must be re-canonicalized (deferred congruence).
+    pending: Vec<Id>,
+    /// Cumulative union count (a cheap "how much did rewrites do" metric).
+    pub n_unions: usize,
+    /// True when `union` has run since the last `rebuild`.
+    dirty: bool,
+}
+
+impl EGraph {
+    pub fn new() -> Self {
+        EGraph::default()
+    }
+
+    /// Canonical id of `id`.
+    #[inline]
+    pub fn find(&mut self, id: Id) -> Id {
+        self.uf.find(id)
+    }
+
+    /// Canonical id without path compression (for `&self` contexts).
+    #[inline]
+    pub fn find_ref(&self, id: Id) -> Id {
+        self.uf.find_immutable(id)
+    }
+
+    /// Number of live e-classes.
+    pub fn num_classes(&self) -> usize {
+        self.classes.iter().filter(|c| c.is_some()).count()
+    }
+
+    /// Total number of e-nodes across live classes.
+    pub fn total_nodes(&self) -> usize {
+        self.classes.iter().flatten().map(|c| c.nodes.len()).sum()
+    }
+
+    /// O(1) proxy for [`Self::total_nodes`]: the hashcons size (exact after
+    /// a rebuild, slight overcount between unions). Use in hot loops.
+    pub fn approx_nodes(&self) -> usize {
+        self.memo.len()
+    }
+
+    /// The class of (canonical) `id`.
+    pub fn class(&self, id: Id) -> &EClass {
+        let id = self.find_ref(id);
+        self.classes[id.index()].as_ref().expect("stale class id")
+    }
+
+    fn class_mut(&mut self, id: Id) -> &mut EClass {
+        let id = self.uf.find(id);
+        self.classes[id.index()].as_mut().expect("stale class id")
+    }
+
+    /// Iterate over live classes.
+    pub fn classes(&self) -> impl Iterator<Item = &EClass> {
+        self.classes.iter().flatten()
+    }
+
+    /// Ids of all live classes (snapshot; safe to mutate while iterating).
+    pub fn class_ids(&self) -> Vec<Id> {
+        self.classes.iter().flatten().map(|c| c.id).collect()
+    }
+
+    /// Type of `id`'s class.
+    pub fn ty(&self, id: Id) -> &Ty {
+        &self.class(id).ty
+    }
+
+    #[inline]
+    fn canonicalize(&mut self, node: &Node) -> Node {
+        let mut n = node.clone();
+        for c in &mut n.children {
+            *c = self.uf.find(*c);
+        }
+        n
+    }
+
+    /// Look up a node without inserting it.
+    pub fn lookup(&mut self, node: &Node) -> Option<Id> {
+        let n = self.canonicalize(node);
+        self.memo.get(&n).map(|&id| self.uf.find(id))
+    }
+
+    /// Insert an e-node (children must be existing class ids), returning its
+    /// class. Hash-consing makes this idempotent; this is where the paper's
+    /// "identical engine declarations are one piece of hardware" property
+    /// comes from.
+    pub fn add(&mut self, mut node: Node) -> Id {
+        // Canonicalize in place — `add` owns the node, no clone needed.
+        for c in &mut node.children {
+            *c = self.uf.find(*c);
+        }
+        if let Some(&id) = self.memo.get(&node) {
+            return self.uf.find(id);
+        }
+        // Compute the analysis before allocating the class (by reference:
+        // cloning child types would allocate per child on the hot path).
+        let ty = {
+            let child_tys: Vec<&Ty> =
+                node.children.iter().map(|&c| &self.class(c).ty).collect();
+            infer_ty_ref(&node.op, &child_tys).unwrap_or_else(|e| {
+                panic!("ill-typed e-node {}: {e}", node.op);
+            })
+        };
+
+        let id = self.uf.make_set();
+        debug_assert_eq!(id.index(), self.classes.len());
+        let arena_idx = self.arena.len() as u32;
+        self.arena.push(node.clone());
+        for &c in &node.children {
+            self.class_mut(c).parents.push((arena_idx, id));
+        }
+        self.classes.push(Some(EClass { id, nodes: vec![node.clone()], parents: vec![], ty }));
+        self.memo.insert(node, id);
+        id
+    }
+
+    /// Insert a whole expression; returns the root's class.
+    pub fn add_expr(&mut self, expr: &RecExpr) -> Id {
+        let mut map: Vec<Id> = Vec::with_capacity(expr.len());
+        for node in expr.nodes() {
+            let n = node.map_children(|c| map[c.index()]);
+            map.push(self.add(n));
+        }
+        *map.last().expect("empty expr")
+    }
+
+    /// Assert `a` and `b` compute the same value. Returns the surviving
+    /// canonical id and whether anything changed. Congruence repair is
+    /// deferred to [`EGraph::rebuild`].
+    pub fn union(&mut self, a: Id, b: Id) -> (Id, bool) {
+        let ra = self.uf.find(a);
+        let rb = self.uf.find(b);
+        if ra == rb {
+            return (ra, false);
+        }
+        // Analysis guardrail: merging classes of different type means a
+        // rewrite produced a semantically different program.
+        let ta = &self.classes[ra.index()].as_ref().unwrap().ty;
+        let tb = &self.classes[rb.index()].as_ref().unwrap().ty;
+        assert_eq!(
+            ta, tb,
+            "union of incompatible classes: {ta:?} vs {tb:?} — a rewrite is unsound"
+        );
+
+        let keep = self.uf.union(ra, rb);
+        let merge = if keep == ra { rb } else { ra };
+        let merged = self.classes[merge.index()].take().expect("double merge");
+        let kept = self.classes[keep.index()].as_mut().expect("lost keeper");
+        kept.nodes.extend(merged.nodes);
+        kept.parents.extend(merged.parents);
+        self.n_unions += 1;
+        self.dirty = true;
+        self.pending.push(keep);
+        (keep, true)
+    }
+
+    /// Restore the congruence invariant after a batch of unions, and
+    /// re-canonicalize + dedup the touched classes. Must be called before
+    /// matching again; the [`super::Runner`] does this once per iteration.
+    pub fn rebuild(&mut self) -> usize {
+        let mut repairs = 0;
+        while let Some(id) = self.pending.pop() {
+            let id = self.uf.find(id);
+            if self.classes[id.index()].is_none() {
+                continue;
+            }
+            repairs += 1;
+            self.repair(id);
+        }
+        // Compact: canonicalize and dedup every class's nodes so matching
+        // and counting see a canonical view.
+        if self.dirty {
+            self.compact();
+            self.dirty = false;
+        }
+        repairs
+    }
+
+    fn repair(&mut self, id: Id) {
+        let parents = std::mem::take(&mut self.class_mut(id).parents);
+        let mut new_parents: HashMap<Node, (u32, Id)> =
+            HashMap::with_capacity_and_hasher(parents.len(), Default::default());
+        for (pidx, pid) in parents {
+            // The parent node's key in the memo may be stale; remove it.
+            let stale = self.arena[pidx as usize].clone();
+            self.memo.remove(&stale);
+            let pnode = self.canonicalize(&stale);
+            let pid = self.uf.find(pid);
+            if let Some(&existing) = self.memo.get(&pnode) {
+                let existing = self.uf.find(existing);
+                if existing != pid {
+                    // Congruence: same op, same (canonical) children, two
+                    // classes -> they must be equal.
+                    let (keep, _) = self.union(existing, pid);
+                    new_parents.insert(pnode, (pidx, keep));
+                    continue;
+                }
+            }
+            // Keep the arena entry canonical so future repairs start from
+            // fresher children (memo key must match what we insert).
+            self.arena[pidx as usize] = pnode.clone();
+            self.memo.insert(pnode.clone(), pid);
+            new_parents.insert(pnode, (pidx, pid));
+        }
+        let id = self.uf.find(id);
+        self.class_mut(id).parents = new_parents.into_values().collect();
+    }
+
+    fn compact(&mut self) {
+        let ids = self.class_ids();
+        let mut seen: HashMap<Node, ()> = HashMap::default();
+        for id in ids {
+            let id = self.uf.find(id);
+            let mut nodes = std::mem::take(&mut self.class_mut(id).nodes);
+            for n in &mut nodes {
+                for c in &mut n.children {
+                    *c = self.uf.find(*c);
+                }
+            }
+            // Dedup canonical nodes, preserving first-seen order (cheap and
+            // deterministic; sorting by Debug strings is catastrophically
+            // slow at scale).
+            seen.clear();
+            nodes.retain(|n| seen.insert(n.clone(), ()).is_none());
+            self.class_mut(id).nodes = nodes;
+        }
+    }
+
+    /// Quick structural sanity check used by tests and debug assertions:
+    /// every node's children are live canonical classes, and the memo maps
+    /// every canonical node to its canonical class.
+    pub fn check_invariants(&self) {
+        for class in self.classes() {
+            assert_eq!(self.find_ref(class.id), class.id, "class id not canonical");
+            for node in &class.nodes {
+                for &c in &node.children {
+                    let c = self.find_ref(c);
+                    assert!(
+                        self.classes[c.index()].is_some(),
+                        "dangling child {c:?} in class {:?}",
+                        class.id
+                    );
+                }
+            }
+        }
+        for (node, &id) in &self.memo {
+            let canon_ok = node.children.iter().all(|&c| self.find_ref(c) == c);
+            if canon_ok {
+                let id = self.find_ref(id);
+                assert!(self.classes[id.index()].is_some(), "memo points at dead class");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Op, Shape, Symbol};
+
+    fn input(name: &str, dims: &[usize]) -> Node {
+        Node::leaf(Op::Input(Symbol::new(name), Shape::new(dims)))
+    }
+
+    #[test]
+    fn hashcons_dedups() {
+        let mut eg = EGraph::new();
+        let a = eg.add(input("x", &[4]));
+        let b = eg.add(input("x", &[4]));
+        assert_eq!(a, b);
+        assert_eq!(eg.num_classes(), 1);
+    }
+
+    #[test]
+    fn engines_share_by_structure() {
+        let mut eg = EGraph::new();
+        let e1 = eg.add(Node::leaf(Op::MmEngine { m: 16, k: 16, n: 16 }));
+        let e2 = eg.add(Node::leaf(Op::MmEngine { m: 16, k: 16, n: 16 }));
+        let e3 = eg.add(Node::leaf(Op::MmEngine { m: 16, k: 16, n: 8 }));
+        assert_eq!(e1, e2);
+        assert_ne!(e1, e3);
+    }
+
+    #[test]
+    fn union_then_congruence() {
+        // relu(x) and relu(y): unioning x=y must merge the relus.
+        let mut eg = EGraph::new();
+        let x = eg.add(input("x", &[4]));
+        let y = eg.add(input("y", &[4]));
+        let rx = eg.add(Node::new(Op::Relu, vec![x]));
+        let ry = eg.add(Node::new(Op::Relu, vec![y]));
+        assert_ne!(eg.find(rx), eg.find(ry));
+        eg.union(x, y);
+        eg.rebuild();
+        assert_eq!(eg.find(rx), eg.find(ry));
+        eg.check_invariants();
+    }
+
+    #[test]
+    fn congruence_cascades() {
+        // deep chain: relu^3(x), relu^3(y); union x=y merges all levels.
+        let mut eg = EGraph::new();
+        let x = eg.add(input("x", &[4]));
+        let y = eg.add(input("y", &[4]));
+        let (mut cx, mut cy) = (x, y);
+        let mut tops = vec![];
+        for _ in 0..3 {
+            cx = eg.add(Node::new(Op::Relu, vec![cx]));
+            cy = eg.add(Node::new(Op::Relu, vec![cy]));
+            tops.push((cx, cy));
+        }
+        eg.union(x, y);
+        eg.rebuild();
+        for (a, b) in tops {
+            assert_eq!(eg.find(a), eg.find(b));
+        }
+        eg.check_invariants();
+    }
+
+    #[test]
+    #[should_panic(expected = "unsound")]
+    fn union_rejects_shape_mismatch() {
+        let mut eg = EGraph::new();
+        let a = eg.add(input("a", &[4]));
+        let b = eg.add(input("b", &[8]));
+        eg.union(a, b);
+    }
+
+    #[test]
+    fn add_expr_roundtrip() {
+        let e = crate::ir::parse::parse_expr(
+            "(invoke-relu (relu-engine 128) (input x [128]))",
+        )
+        .unwrap();
+        let mut eg = EGraph::new();
+        let root = eg.add_expr(&e);
+        assert_eq!(eg.num_classes(), 3);
+        assert_eq!(eg.ty(root), &Ty::Tensor(Shape::new(&[128])));
+    }
+
+    #[test]
+    fn rebuild_is_idempotent() {
+        let mut eg = EGraph::new();
+        let x = eg.add(input("x", &[4]));
+        let y = eg.add(input("y", &[4]));
+        eg.union(x, y);
+        assert!(eg.rebuild() > 0);
+        assert_eq!(eg.rebuild(), 0);
+    }
+}

@@ -1,0 +1,67 @@
+//! A from-scratch e-graph (equality graph) implementation.
+//!
+//! E-graphs — the data structure the paper adopts from the program
+//! verification literature (Nelson 1980) — compactly represent an
+//! exponential number of equivalent programs: nodes whose operator and
+//! (canonical) children are equal are hash-consed into one *e-node*, and
+//! equivalent e-nodes are grouped into *e-classes* by a union-find.
+//!
+//! The implementation follows the modern "rebuild-deferred" discipline
+//! (congruence closure restored in batches after a round of unions), with:
+//!
+//! * [`unionfind`] — path-halving union-find over [`Id`]s;
+//! * [`graph`] — the [`EGraph`] itself: hashcons, e-classes, deferred
+//!   congruence closure, and a shape/type *analysis* attached to every
+//!   e-class (broken rewrites are caught as analysis merge conflicts);
+//! * [`pattern`] — pattern ASTs with variables and op-kind matchers;
+//! * [`matcher`] — backtracking e-matching over the e-graph;
+//! * [`rewrite`] — rewrite = searcher pattern + (possibly dynamic) applier;
+//! * [`runner`] — the iteration engine with node/time budgets, saturation
+//!   detection, and per-iteration growth metrics (the data behind the
+//!   paper's "exponential design space" claim);
+//! * [`count`] — counting the number of distinct terms an e-graph
+//!   represents (the size of the enumerated design space).
+
+pub mod count;
+pub mod graph;
+pub mod matcher;
+pub mod pattern;
+pub mod rewrite;
+pub mod runner;
+pub mod unionfind;
+
+pub use graph::{EClass, EGraph};
+pub use pattern::{Pattern, Subst};
+pub use rewrite::{Applier, Rewrite};
+pub use runner::{IterationStats, Runner, RunnerLimits, RunnerReport, StopReason};
+pub use unionfind::UnionFind;
+
+/// An e-class id (also used as the node index inside a
+/// [`crate::ir::RecExpr`]). A plain `u32` newtype: cheap to copy, hash and
+/// store in the hashcons.
+#[derive(Copy, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Id(u32);
+
+impl Id {
+    #[inline]
+    pub fn from_index(i: usize) -> Self {
+        Id(u32::try_from(i).expect("e-graph overflow: more than u32::MAX classes"))
+    }
+
+    #[inline]
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl std::fmt::Debug for Id {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "e{}", self.0)
+    }
+}
+
+impl std::fmt::Display for Id {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "e{}", self.0)
+    }
+}

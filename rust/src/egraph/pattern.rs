@@ -1,0 +1,106 @@
+//! Patterns over EngineIR e-graphs.
+//!
+//! A pattern is a term with **pattern variables** (matching any e-class) and
+//! **op matchers** that either require an exact op or any op of a given
+//! [`OpKind`] (optionally binding the matched op so the applier can read its
+//! parameters — engine sizes, schedule extents, …).
+
+use super::Id;
+use crate::ir::{Node, Op, OpKind, Symbol};
+use std::collections::HashMap;
+
+/// How a pattern node matches an e-node's operator.
+#[derive(Clone, Debug)]
+pub enum OpMatch {
+    /// Exactly this op (including its scalar parameters).
+    Exact(Op),
+    /// Any op of this kind; if a binder is given, the concrete op is
+    /// recorded in the substitution under that name.
+    Kind(OpKind, Option<Symbol>),
+}
+
+impl OpMatch {
+    pub fn matches(&self, op: &Op) -> bool {
+        match self {
+            OpMatch::Exact(want) => want == op,
+            OpMatch::Kind(kind, _) => op.kind() == *kind,
+        }
+    }
+}
+
+/// A pattern AST.
+#[derive(Clone, Debug)]
+pub enum Pattern {
+    /// Matches any e-class, binding it.
+    Var(Symbol),
+    /// Matches an e-node whose op satisfies the matcher and whose children
+    /// match the sub-patterns.
+    Node { op: OpMatch, children: Vec<Pattern> },
+}
+
+/// Build a pattern variable.
+pub fn pvar(name: &str) -> Pattern {
+    Pattern::Var(Symbol::new(name))
+}
+
+/// Build an exact-op pattern node.
+pub fn pexact(op: Op, children: Vec<Pattern>) -> Pattern {
+    Pattern::Node { op: OpMatch::Exact(op), children }
+}
+
+/// Build a kind pattern node binding the concrete op as `binder`.
+pub fn pkind(kind: OpKind, binder: &str, children: Vec<Pattern>) -> Pattern {
+    Pattern::Node { op: OpMatch::Kind(kind, Some(Symbol::new(binder))), children }
+}
+
+/// Build a kind pattern node without binding the op.
+pub fn pkind_(kind: OpKind, children: Vec<Pattern>) -> Pattern {
+    Pattern::Node { op: OpMatch::Kind(kind, None), children }
+}
+
+/// The result of a successful match: class bindings for pattern variables,
+/// op bindings for kind matchers, and — for node-scan rewrites — the
+/// concrete matched e-node.
+#[derive(Clone, Debug, Default)]
+pub struct Subst {
+    pub vars: HashMap<Symbol, Id>,
+    pub ops: HashMap<Symbol, Op>,
+    /// The root e-node matched by a node-scan searcher.
+    pub node: Option<Node>,
+}
+
+impl Subst {
+    /// Class bound to pattern variable `name` (panics if unbound — rewrite
+    /// authoring error).
+    pub fn class(&self, name: &str) -> Id {
+        self.vars[&Symbol::new(name)]
+    }
+
+    /// Op bound by kind matcher `name`.
+    pub fn op(&self, name: &str) -> &Op {
+        &self.ops[&Symbol::new(name)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opmatch_exact_and_kind() {
+        let e = Op::ReluEngine { w: 64 };
+        assert!(OpMatch::Exact(Op::ReluEngine { w: 64 }).matches(&e));
+        assert!(!OpMatch::Exact(Op::ReluEngine { w: 32 }).matches(&e));
+        assert!(OpMatch::Kind(OpKind::ReluEngine, None).matches(&e));
+        assert!(!OpMatch::Kind(OpKind::AddEngine, None).matches(&e));
+    }
+
+    #[test]
+    fn builders_build() {
+        let p = pkind(OpKind::InvokeRelu, "inv", vec![pvar("?e"), pvar("?x")]);
+        match p {
+            Pattern::Node { children, .. } => assert_eq!(children.len(), 2),
+            _ => panic!(),
+        }
+    }
+}

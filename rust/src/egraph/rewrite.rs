@@ -1,0 +1,161 @@
+//! Rewrites: a searcher (pattern or e-node scan) plus an applier that builds
+//! the equivalent right-hand side directly into the e-graph.
+//!
+//! Two searcher styles:
+//!
+//! * **Pattern** — generic e-matching ([`super::matcher`]); used by
+//!   multi-level structural rules (e.g. fusing `invoke-relu ∘ invoke-mm`).
+//! * **NodeScan** — iterate e-nodes of one [`OpKind`]; used by rules that
+//!   must *compute* new scalar parameters (splitting a `(relu-engine 128)`
+//!   into a loop over `(relu-engine 64)` needs `128/2`), which plain
+//!   pattern/template rewriting cannot express.
+//!
+//! Appliers return the id of the newly built equivalent class (or `None` to
+//! decline); the [`super::Runner`] unions it with the matched class.
+
+use super::graph::EGraph;
+use super::matcher;
+use super::pattern::{Pattern, Subst};
+use super::Id;
+use crate::ir::OpKind;
+use std::sync::Arc;
+
+/// Applier callback: build the RHS for a match, returning its class.
+pub type Applier = Arc<dyn Fn(&mut EGraph, Id, &Subst) -> Option<Id> + Send + Sync>;
+
+enum Searcher {
+    Pattern(Pattern),
+    NodeScan(OpKind),
+}
+
+/// A named, semantics-preserving rewrite rule.
+pub struct Rewrite {
+    pub name: String,
+    searcher: Searcher,
+    applier: Applier,
+}
+
+impl std::fmt::Debug for Rewrite {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Rewrite({})", self.name)
+    }
+}
+
+impl Clone for Rewrite {
+    fn clone(&self) -> Self {
+        Rewrite {
+            name: self.name.clone(),
+            searcher: match &self.searcher {
+                Searcher::Pattern(p) => Searcher::Pattern(p.clone()),
+                Searcher::NodeScan(k) => Searcher::NodeScan(*k),
+            },
+            applier: Arc::clone(&self.applier),
+        }
+    }
+}
+
+impl Rewrite {
+    /// A pattern-searched rewrite.
+    pub fn pattern(
+        name: &str,
+        pat: Pattern,
+        applier: impl Fn(&mut EGraph, Id, &Subst) -> Option<Id> + Send + Sync + 'static,
+    ) -> Self {
+        Rewrite { name: name.into(), searcher: Searcher::Pattern(pat), applier: Arc::new(applier) }
+    }
+
+    /// A node-scan rewrite over all e-nodes of `kind`. The applier receives
+    /// the matched node via `subst.node`.
+    pub fn node_scan(
+        name: &str,
+        kind: OpKind,
+        applier: impl Fn(&mut EGraph, Id, &Subst) -> Option<Id> + Send + Sync + 'static,
+    ) -> Self {
+        Rewrite {
+            name: name.into(),
+            searcher: Searcher::NodeScan(kind),
+            applier: Arc::new(applier),
+        }
+    }
+
+    /// Find all matches in the current e-graph (no mutation).
+    pub fn search(&self, eg: &EGraph) -> Vec<(Id, Subst)> {
+        match &self.searcher {
+            Searcher::Pattern(p) => matcher::search(eg, p),
+            Searcher::NodeScan(kind) => {
+                let mut out = Vec::new();
+                for class in eg.classes() {
+                    for node in &class.nodes {
+                        if node.op.kind() == *kind {
+                            let subst = Subst { node: Some(node.clone()), ..Default::default() };
+                            out.push((class.id, subst));
+                        }
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Apply to one match; returns true if the union changed the e-graph.
+    pub fn apply(&self, eg: &mut EGraph, class: Id, subst: &Subst) -> bool {
+        if let Some(rhs) = (self.applier)(eg, class, subst) {
+            let (_, changed) = eg.union(class, rhs);
+            changed
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{parse_expr, Node, Op};
+
+    /// A toy rewrite: eadd(x, y) => eadd(y, x).
+    fn commute() -> Rewrite {
+        Rewrite::node_scan("commute-eadd", OpKind::EAdd, |eg, _id, subst| {
+            let n = subst.node.as_ref().unwrap();
+            let swapped = Node::new(Op::EAdd, vec![n.children[1], n.children[0]]);
+            Some(eg.add(swapped))
+        })
+    }
+
+    #[test]
+    fn node_scan_applies_and_saturates() {
+        let e = parse_expr("(eadd (input a [4]) (input b [4]))").unwrap();
+        let mut eg = EGraph::new();
+        let root = eg.add_expr(&e);
+        let rw = commute();
+
+        let matches = rw.search(&eg);
+        assert_eq!(matches.len(), 1);
+        for (id, s) in matches {
+            rw.apply(&mut eg, id, &s);
+        }
+        eg.rebuild();
+        // Both orders now live in the root class.
+        assert_eq!(eg.class(root).nodes.len(), 2);
+
+        // Re-applying discovers the swapped node but unions are no-ops.
+        let matches = rw.search(&eg);
+        assert_eq!(matches.len(), 2);
+        let changed: Vec<bool> =
+            matches.into_iter().map(|(id, s)| rw.apply(&mut eg, id, &s)).collect();
+        assert!(changed.iter().all(|&c| !c));
+    }
+
+    #[test]
+    fn declining_applier_changes_nothing() {
+        let rw = Rewrite::node_scan("never", OpKind::EAdd, |_, _, _| None);
+        let e = parse_expr("(eadd (input a [4]) (input b [4]))").unwrap();
+        let mut eg = EGraph::new();
+        eg.add_expr(&e);
+        let before = eg.total_nodes();
+        for (id, s) in rw.search(&eg) {
+            rw.apply(&mut eg, id, &s);
+        }
+        assert_eq!(eg.total_nodes(), before);
+    }
+}

@@ -1,0 +1,257 @@
+//! The rewrite iteration engine: search all rules, apply all matches, union,
+//! rebuild; repeat until saturation or a budget trips. Records per-iteration
+//! growth statistics — the raw data for the paper's design-space-size
+//! experiments (E1/E4 in DESIGN.md).
+
+use super::count;
+use super::graph::EGraph;
+use super::rewrite::Rewrite;
+use super::Id;
+use crate::ir::RecExpr;
+use std::time::{Duration, Instant};
+
+/// Why a run stopped.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StopReason {
+    /// No rule produced a new fact: the space is fully enumerated.
+    Saturated,
+    /// Hit the iteration budget.
+    IterLimit,
+    /// Hit the e-node budget.
+    NodeLimit,
+    /// Hit the wall-clock budget.
+    TimeLimit,
+}
+
+/// Budgets for a run. Defaults are sized for interactive exploration.
+#[derive(Debug, Clone)]
+pub struct RunnerLimits {
+    pub max_iters: usize,
+    pub max_nodes: usize,
+    pub max_time: Duration,
+    /// Per-rule, per-iteration match cap: a crude fairness throttle so one
+    /// explosive rule cannot starve the rest within an iteration.
+    pub max_matches_per_rule: usize,
+}
+
+impl Default for RunnerLimits {
+    fn default() -> Self {
+        RunnerLimits {
+            max_iters: 16,
+            max_nodes: 200_000,
+            max_time: Duration::from_secs(30),
+            max_matches_per_rule: 50_000,
+        }
+    }
+}
+
+/// Growth metrics after one iteration.
+#[derive(Debug, Clone)]
+pub struct IterationStats {
+    pub iteration: usize,
+    pub nodes: usize,
+    pub classes: usize,
+    pub applied: usize,
+    pub unions_total: usize,
+    /// Lower bound on the number of distinct designs rooted at the
+    /// workload (see [`super::count`]).
+    pub designs_lower_bound: f64,
+    pub elapsed: Duration,
+}
+
+/// Summary of a completed run.
+#[derive(Debug, Clone)]
+pub struct RunnerReport {
+    pub stop: StopReason,
+    pub iterations: Vec<IterationStats>,
+    pub nodes: usize,
+    pub classes: usize,
+    pub designs_lower_bound: f64,
+    pub elapsed: Duration,
+}
+
+impl RunnerReport {
+    /// Render as an aligned text table (used by examples and benches).
+    pub fn table(&self) -> String {
+        let mut s = String::from(
+            "iter    e-nodes  e-classes    applied     designs(lb)   elapsed\n",
+        );
+        for it in &self.iterations {
+            s.push_str(&format!(
+                "{:<4} {:>10} {:>10} {:>10} {:>15.4e} {:>9.1?}\n",
+                it.iteration, it.nodes, it.classes, it.applied, it.designs_lower_bound,
+                it.elapsed,
+            ));
+        }
+        s.push_str(&format!("stop: {:?}\n", self.stop));
+        s
+    }
+}
+
+/// Drives rewrites over an [`EGraph`] holding one workload.
+pub struct Runner {
+    pub egraph: EGraph,
+    pub root: Id,
+    pub rules: Vec<Rewrite>,
+    pub limits: RunnerLimits,
+    pub stats: Vec<IterationStats>,
+}
+
+impl Runner {
+    /// Build a runner seeded with `expr` (the lowered workload).
+    pub fn new(expr: RecExpr, rules: Vec<Rewrite>) -> Self {
+        let mut egraph = EGraph::new();
+        let root = egraph.add_expr(&expr);
+        Runner { egraph, root, rules, limits: RunnerLimits::default(), stats: Vec::new() }
+    }
+
+    pub fn with_limits(mut self, limits: RunnerLimits) -> Self {
+        self.limits = limits;
+        self
+    }
+
+    /// Run up to `iters` iterations (further bounded by `self.limits`).
+    pub fn run(&mut self, iters: usize) -> RunnerReport {
+        let start = Instant::now();
+        let mut stop = StopReason::IterLimit;
+        let iters = iters.min(self.limits.max_iters);
+        for i in 0..iters {
+            let applied = self.run_one();
+            let designs = count::designs(&self.egraph, self.root, 64);
+            self.stats.push(IterationStats {
+                iteration: i,
+                nodes: self.egraph.total_nodes(),
+                classes: self.egraph.num_classes(),
+                applied,
+                unions_total: self.egraph.n_unions,
+                designs_lower_bound: designs,
+                elapsed: start.elapsed(),
+            });
+            if applied == 0 {
+                stop = StopReason::Saturated;
+                break;
+            }
+            if self.egraph.total_nodes() >= self.limits.max_nodes {
+                stop = StopReason::NodeLimit;
+                break;
+            }
+            if start.elapsed() >= self.limits.max_time {
+                stop = StopReason::TimeLimit;
+                break;
+            }
+        }
+        RunnerReport {
+            stop,
+            iterations: self.stats.clone(),
+            nodes: self.egraph.total_nodes(),
+            classes: self.egraph.num_classes(),
+            designs_lower_bound: count::designs(&self.egraph, self.root, 64),
+            elapsed: start.elapsed(),
+        }
+    }
+
+    /// One search-then-apply round; returns how many applications changed
+    /// the e-graph.
+    fn run_one(&mut self) -> usize {
+        // Phase 1: search everything against the frozen e-graph.
+        let mut all: Vec<(usize, Id, super::pattern::Subst)> = Vec::new();
+        for (ri, rule) in self.rules.iter().enumerate() {
+            let mut matches = rule.search(&self.egraph);
+            if matches.len() > self.limits.max_matches_per_rule {
+                matches.truncate(self.limits.max_matches_per_rule);
+            }
+            for (id, s) in matches {
+                all.push((ri, id, s));
+            }
+        }
+        // Phase 2: apply (mutates; matched ids may need re-canonicalizing,
+        // which `EGraph::union` does internally via find).
+        let mut changed = 0;
+        let rules = self.rules.clone();
+        for (ri, id, subst) in all {
+            if rules[ri].apply(&mut self.egraph, id, &subst) {
+                changed += 1;
+            }
+            if self.egraph.approx_nodes() >= self.limits.max_nodes * 2 {
+                break; // hard brake mid-iteration if a rule explodes
+            }
+        }
+        // Phase 3: restore congruence.
+        self.egraph.rebuild();
+        changed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::egraph::rewrite::Rewrite;
+    use crate::ir::{parse_expr, Node, Op, OpKind};
+
+    fn commute() -> Rewrite {
+        Rewrite::node_scan("commute-eadd", OpKind::EAdd, |eg, _, s| {
+            let n = s.node.as_ref().unwrap();
+            Some(eg.add(Node::new(Op::EAdd, vec![n.children[1], n.children[0]])))
+        })
+    }
+
+    #[test]
+    fn saturates_on_commutativity() {
+        let e = parse_expr("(eadd (input a [4]) (input b [4]))").unwrap();
+        let mut r = Runner::new(e, vec![commute()]);
+        let rep = r.run(10);
+        assert_eq!(rep.stop, StopReason::Saturated);
+        // a+b and b+a: two designs.
+        assert_eq!(rep.designs_lower_bound, 2.0);
+        assert!(rep.iterations.len() <= 3);
+    }
+
+    #[test]
+    fn node_limit_trips() {
+        // A rule that keeps minting fresh integer leaves — never saturates.
+        // (Nesting rules do NOT work for this: the e-graph folds infinite
+        // regress into a cycle and saturates — see `count` tests.)
+        let pump = Rewrite::node_scan("pump", OpKind::Int, |eg, _, s| {
+            let n = s.node.as_ref().unwrap();
+            match n.op {
+                Op::Int(v) => Some(eg.add(Node::leaf(Op::Int(v + 1)))),
+                _ => None,
+            }
+        });
+        let e = parse_expr("(slice 0 2 0 (input x [4]))").unwrap();
+        let mut r = Runner::new(e, vec![pump]).with_limits(RunnerLimits {
+            max_nodes: 50,
+            max_iters: 1000,
+            ..Default::default()
+        });
+        let rep = r.run(1000);
+        assert_eq!(rep.stop, StopReason::NodeLimit);
+    }
+
+    #[test]
+    fn nesting_rule_folds_into_cycle_and_saturates() {
+        // relu(x) => relu(relu(x)): hashcons + union collapse the tower
+        // into a self-referential class; the runner detects saturation and
+        // the design count lower bound saturates upward.
+        let pump = Rewrite::node_scan("nest", OpKind::Relu, |eg, _, s| {
+            let n = s.node.as_ref().unwrap();
+            let inner = eg.add(n.clone());
+            Some(eg.add(Node::new(Op::Relu, vec![inner])))
+        });
+        let e = parse_expr("(relu (input x [4]))").unwrap();
+        let mut r = Runner::new(e, vec![pump]);
+        let rep = r.run(10);
+        assert_eq!(rep.stop, StopReason::Saturated);
+        assert!(rep.designs_lower_bound > 1.0);
+    }
+
+    #[test]
+    fn report_table_renders() {
+        let e = parse_expr("(eadd (input a [4]) (input b [4]))").unwrap();
+        let mut r = Runner::new(e, vec![commute()]);
+        let rep = r.run(4);
+        let t = rep.table();
+        assert!(t.contains("e-nodes"));
+        assert!(t.contains("Saturated"));
+    }
+}

@@ -1,0 +1,131 @@
+//! Union-find over [`Id`]s with path halving. The hot core of congruence
+//! closure: `find` is called for every child of every canonicalized node on
+//! every rebuild, so it is kept allocation-free and branch-light.
+
+use super::Id;
+
+/// Disjoint-set forest. `parents[i] == i` marks a root.
+#[derive(Debug, Clone, Default)]
+pub struct UnionFind {
+    parents: Vec<u32>,
+}
+
+impl UnionFind {
+    pub fn new() -> Self {
+        UnionFind { parents: Vec::new() }
+    }
+
+    /// Add a fresh singleton set, returning its id.
+    pub fn make_set(&mut self) -> Id {
+        let id = self.parents.len() as u32;
+        self.parents.push(id);
+        Id::from_index(id as usize)
+    }
+
+    pub fn len(&self) -> usize {
+        self.parents.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parents.is_empty()
+    }
+
+    /// Canonical representative of `id`'s set (with path halving).
+    #[inline]
+    pub fn find(&mut self, id: Id) -> Id {
+        let mut cur = id.index() as u32;
+        loop {
+            let parent = self.parents[cur as usize];
+            if parent == cur {
+                return Id::from_index(cur as usize);
+            }
+            // Path halving: point at grandparent on the way up.
+            let grand = self.parents[parent as usize];
+            self.parents[cur as usize] = grand;
+            cur = grand;
+        }
+    }
+
+    /// Read-only find (no compression) for immutable contexts.
+    #[inline]
+    pub fn find_immutable(&self, id: Id) -> Id {
+        let mut cur = id.index() as u32;
+        loop {
+            let parent = self.parents[cur as usize];
+            if parent == cur {
+                return Id::from_index(cur as usize);
+            }
+            cur = parent;
+        }
+    }
+
+    /// Merge the sets of `a` and `b`; returns the surviving root.
+    /// The *lower* id wins, keeping canonical ids stable over time (useful
+    /// for deterministic extraction and for tests).
+    pub fn union(&mut self, a: Id, b: Id) -> Id {
+        let ra = self.find(a);
+        let rb = self.find(b);
+        if ra == rb {
+            return ra;
+        }
+        let (keep, merge) = if ra < rb { (ra, rb) } else { (rb, ra) };
+        self.parents[merge.index()] = keep.index() as u32;
+        keep
+    }
+
+    pub fn same(&mut self, a: Id, b: Id) -> bool {
+        self.find(a) == self.find(b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn singletons_are_their_own_roots() {
+        let mut uf = UnionFind::new();
+        let ids: Vec<Id> = (0..10).map(|_| uf.make_set()).collect();
+        for &id in &ids {
+            assert_eq!(uf.find(id), id);
+        }
+    }
+
+    #[test]
+    fn union_merges_and_lower_id_wins() {
+        let mut uf = UnionFind::new();
+        let a = uf.make_set();
+        let b = uf.make_set();
+        let c = uf.make_set();
+        assert_eq!(uf.union(b, c), b);
+        assert_eq!(uf.union(c, a), a);
+        assert_eq!(uf.find(b), a);
+        assert_eq!(uf.find(c), a);
+        assert!(uf.same(a, c));
+    }
+
+    #[test]
+    fn transitive_chains_compress() {
+        let mut uf = UnionFind::new();
+        let ids: Vec<Id> = (0..100).map(|_| uf.make_set()).collect();
+        for w in ids.windows(2) {
+            uf.union(w[0], w[1]);
+        }
+        for &id in &ids {
+            assert_eq!(uf.find(id), ids[0]);
+        }
+        // After compression every element points (nearly) at the root.
+        assert!(uf.parents.iter().filter(|&&p| p == 0).count() >= 50);
+    }
+
+    #[test]
+    fn find_immutable_agrees_with_find() {
+        let mut uf = UnionFind::new();
+        let ids: Vec<Id> = (0..20).map(|_| uf.make_set()).collect();
+        uf.union(ids[3], ids[7]);
+        uf.union(ids[7], ids[11]);
+        for &id in &ids {
+            assert_eq!(uf.find_immutable(id), uf.find(id));
+        }
+    }
+}

@@ -1,0 +1,334 @@
+//! Extraction: picking concrete designs back out of the e-graph.
+//!
+//! The paper explicitly scopes extraction out ("the extraction procedure is
+//! out of the scope of this early work") — but the evaluation methodology
+//! (§3 diversity + usefulness) needs concrete design points, so we
+//! implement it as a first-class extension:
+//!
+//! * [`Extractor`] — classic bottom-up fixpoint extraction with a pluggable
+//!   per-node cost function (monotone in child costs ⇒ termination and
+//!   optimality for tree costs);
+//! * [`latency_cost`] / [`size_cost`] — built-in cost functions;
+//! * [`sample_designs`] — randomized-cost extraction: each sample perturbs
+//!   node costs with seeded noise, yielding a *diverse* set of valid
+//!   designs (the paper's diversity experiment);
+//! * [`ParetoExplorer`] — samples + greedy endpoints, evaluated with the
+//!   analytic models, reduced to the area/latency Pareto frontier (the
+//!   usefulness experiment).
+
+use crate::cost::{analyze, CostParams, DesignCost, DesignStats};
+use crate::egraph::{EGraph, Id};
+use crate::ir::{Node, Op, RecExpr};
+use crate::prop::Rng;
+use rustc_hash::FxHashMap as HashMap;
+
+/// A per-node extraction cost: receives the candidate e-node and the cost
+/// of each child *class* (already minimized); returns the node's total.
+pub type NodeCost<'a> = dyn Fn(&EGraph, &Node, &dyn Fn(Id) -> f64) -> f64 + 'a;
+
+/// Bottom-up fixpoint extractor.
+pub struct Extractor<'c> {
+    cost_fn: Box<NodeCost<'c>>,
+    /// class -> (best cost, best node)
+    best: HashMap<Id, (f64, Node)>,
+}
+
+impl<'c> Extractor<'c> {
+    /// Run the fixpoint against `eg` with `cost_fn`.
+    pub fn new(eg: &EGraph, cost_fn: impl Fn(&EGraph, &Node, &dyn Fn(Id) -> f64) -> f64 + 'c) -> Self {
+        let mut ex = Extractor { cost_fn: Box::new(cost_fn), best: HashMap::default() };
+        ex.fixpoint(eg);
+        ex
+    }
+
+    /// Worklist fixpoint: when a class's best cost improves, only the
+    /// e-nodes that reference it are re-evaluated (near-linear in
+    /// practice; the naive repeat-all-passes version is quadratic and
+    /// dominates exploration time on large e-graphs).
+    fn fixpoint(&mut self, eg: &EGraph) {
+        // Snapshot nodes and build a child -> referencing-nodes index.
+        let mut nodes: Vec<(Id, Node)> = Vec::new();
+        for class in eg.classes() {
+            for node in &class.nodes {
+                nodes.push((class.id, node.clone()));
+            }
+        }
+        let mut parents: HashMap<Id, Vec<usize>> = HashMap::default();
+        for (i, (_, node)) in nodes.iter().enumerate() {
+            for &c in &node.children {
+                parents.entry(eg.find_ref(c)).or_default().push(i);
+            }
+        }
+        // Seed with every node; drain with re-push on improvement.
+        let mut queue: std::collections::VecDeque<usize> = (0..nodes.len()).collect();
+        let mut queued: Vec<bool> = vec![true; nodes.len()];
+        while let Some(i) = queue.pop_front() {
+            queued[i] = false;
+            let (cid, node) = &nodes[i];
+            let ready =
+                node.children.iter().all(|&c| self.best.contains_key(&eg.find_ref(c)));
+            if !ready {
+                continue;
+            }
+            let lookup = |id: Id| self.best[&eg.find_ref(id)].0;
+            let cost = (self.cost_fn)(eg, node, &lookup);
+            let improves = self.best.get(cid).map_or(true, |(old, _)| cost < *old);
+            if improves {
+                self.best.insert(*cid, (cost, node.clone()));
+                if let Some(ps) = parents.get(cid) {
+                    for &p in ps {
+                        if !queued[p] {
+                            queued[p] = true;
+                            queue.push_back(p);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Best cost of a class, if extractable.
+    pub fn cost(&self, eg: &EGraph, id: Id) -> Option<f64> {
+        self.best.get(&eg.find_ref(id)).map(|(c, _)| *c)
+    }
+
+    /// Extract the best design rooted at `root`.
+    pub fn extract(&self, eg: &EGraph, root: Id) -> RecExpr {
+        let mut expr = RecExpr::new();
+        let mut memo: HashMap<Id, Id> = HashMap::default();
+        let id = self.extract_rec(eg, eg.find_ref(root), &mut expr, &mut memo);
+        debug_assert_eq!(id, expr.root());
+        expr
+    }
+
+    fn extract_rec(
+        &self,
+        eg: &EGraph,
+        id: Id,
+        expr: &mut RecExpr,
+        memo: &mut HashMap<Id, Id>,
+    ) -> Id {
+        let id = eg.find_ref(id);
+        if let Some(&done) = memo.get(&id) {
+            return done;
+        }
+        let (_, node) = self.best.get(&id).expect("extract: class has no finite cost");
+        let children: Vec<Id> = node
+            .children
+            .iter()
+            .map(|&c| self.extract_rec(eg, c, expr, memo))
+            .collect();
+        let new_id = expr.add(Node::new(node.op.clone(), children));
+        memo.insert(id, new_id);
+        new_id
+    }
+}
+
+/// Node-count cost (smallest term).
+pub fn size_cost(_eg: &EGraph, node: &Node, child: &dyn Fn(Id) -> f64) -> f64 {
+    1.0 + node.children.iter().map(|&c| child(c)).sum::<f64>()
+}
+
+/// A local approximation of the latency model in [`crate::cost`]: enough to
+/// steer greedy extraction toward fast designs (the exact model runs on the
+/// extracted tree afterwards).
+pub fn latency_cost(eg: &EGraph, node: &Node, child: &dyn Fn(Id) -> f64) -> f64 {
+    let p = CostParams::default();
+    let kids: f64 = node.children.iter().map(|&c| child(c)).sum();
+    let out_elems = |id: Id| -> f64 {
+        eg.ty(id).shape().map(|s| s.numel() as f64).unwrap_or(0.0)
+    };
+    match &node.op {
+        op if op.is_invoke() => {
+            let mut io = 0.0;
+            for &a in &node.children[1..] {
+                io += out_elems(a);
+            }
+            kids + p.startup + io / p.port_width
+        }
+        Op::SchedLoop { extent, .. } => *extent as f64 * (kids + p.loop_overhead),
+        Op::SchedPar { extent, .. } => kids + (*extent as f64).log2().ceil() * p.loop_overhead,
+        Op::SchedReduce { extent, .. } => *extent as f64 * (kids + p.loop_overhead),
+        Op::Buffer { .. } | Op::DblBuffer { .. } => kids + 1.0,
+        Op::Pad2d { .. } | Op::Im2Col { .. } => kids + 4.0,
+        op if op.is_relay() => kids + 1e7, // host fallback: avoid at all costs
+        _ => kids,
+    }
+}
+
+/// Area-leaning cost: engine MACs dominate (steers toward small shared
+/// engines and deep loops).
+pub fn area_cost(_eg: &EGraph, node: &Node, child: &dyn Fn(Id) -> f64) -> f64 {
+    let kids: f64 = node.children.iter().map(|&c| child(c)).sum();
+    match &node.op {
+        op if op.is_engine() => op.engine_macs() as f64,
+        // NOTE: tree-cost approximation double-counts shared engines; the
+        // exact DAG-aware area is computed on the extracted tree.
+        Op::SchedPar { extent, .. } => kids * *extent as f64,
+        op if op.is_relay() => kids + 1e7,
+        _ => kids + 0.001, // slight size pressure
+    }
+}
+
+/// One extracted design point with its evaluation.
+#[derive(Debug, Clone)]
+pub struct DesignPoint {
+    pub expr: RecExpr,
+    pub cost: DesignCost,
+    pub stats: DesignStats,
+    /// How this point was produced (greedy-latency / greedy-area / sample-i).
+    pub origin: String,
+}
+
+/// Randomized-cost extraction: seeded multiplicative noise on
+/// [`latency_cost`] yields distinct valid designs per seed.
+pub fn sample_design(eg: &EGraph, root: Id, seed: u64) -> RecExpr {
+    // Per-node deterministic noise (cheap structural hash — this runs in
+    // the extraction inner loop).
+    let noise = move |node: &Node| {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        seed.hash(&mut h);
+        node.hash(&mut h);
+        let mut r = Rng::new(h.finish() | 1);
+        // Noise in [0.25, 4.0) — enough to flip most local decisions.
+        0.25 * (1.0 + 15.0 * r.f64())
+    };
+    let ex = Extractor::new(eg, move |eg, node, child| {
+        latency_cost(eg, node, child) * noise(node) + 1.0
+    });
+    ex.extract(eg, root)
+}
+
+/// Draw `n` sampled designs plus the two greedy endpoints; deduplicate by
+/// printed form.
+pub fn sample_designs(eg: &EGraph, root: Id, n: usize, params: &CostParams) -> Vec<DesignPoint> {
+    let mut out: Vec<DesignPoint> = Vec::new();
+    let mut seen = std::collections::HashSet::new();
+    let mut push = |expr: RecExpr, origin: String, out: &mut Vec<DesignPoint>| {
+        let key = expr.to_string();
+        if seen.insert(key) {
+            let (cost, stats) = analyze(&expr, params);
+            out.push(DesignPoint { expr, cost, stats, origin });
+        }
+    };
+    push(
+        Extractor::new(eg, latency_cost).extract(eg, root),
+        "greedy-latency".into(),
+        &mut out,
+    );
+    push(Extractor::new(eg, area_cost).extract(eg, root), "greedy-area".into(), &mut out);
+    for i in 0..n {
+        push(sample_design(eg, root, i as u64), format!("sample-{i}"), &mut out);
+    }
+    out
+}
+
+/// The area/latency Pareto frontier over a set of design points.
+pub fn pareto_frontier(points: &[DesignPoint]) -> Vec<DesignPoint> {
+    let mut frontier: Vec<DesignPoint> = Vec::new();
+    for p in points {
+        if points.iter().any(|q| q.cost.dominates(&p.cost)) {
+            continue;
+        }
+        if !frontier.iter().any(|q| q.cost.area == p.cost.area && q.cost.latency == p.cost.latency)
+        {
+            frontier.push(p.clone());
+        }
+    }
+    frontier.sort_by(|a, b| a.cost.area.total_cmp(&b.cost.area));
+    frontier
+}
+
+/// High-level helper: enumerate (via a prepared e-graph) then sample then
+/// reduce to the frontier.
+pub struct ParetoExplorer {
+    pub samples: usize,
+    pub params: CostParams,
+}
+
+impl Default for ParetoExplorer {
+    fn default() -> Self {
+        ParetoExplorer { samples: 64, params: CostParams::default() }
+    }
+}
+
+impl ParetoExplorer {
+    pub fn explore(&self, eg: &EGraph, root: Id) -> (Vec<DesignPoint>, Vec<DesignPoint>) {
+        let pts = sample_designs(eg, root, self.samples, &self.params);
+        let frontier = pareto_frontier(&pts);
+        (pts, frontier)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::egraph::Runner;
+    use crate::ir::parse_expr;
+    use crate::rewrites;
+    use crate::tensor::{eval_expr, Env};
+
+    fn enumerated(src: &str, iters: usize) -> (EGraph, Id) {
+        let e = parse_expr(src).unwrap();
+        let mut runner = Runner::new(e, rewrites::paper_rules());
+        runner.run(iters);
+        let root = runner.root;
+        (runner.egraph, root)
+    }
+
+    const FIG2: &str = "(invoke-relu (relu-engine 128) (input x [128]))";
+
+    #[test]
+    fn extract_returns_wellformed_equivalent() {
+        let (eg, root) = enumerated(FIG2, 6);
+        let ex = Extractor::new(&eg, size_cost);
+        let d = ex.extract(&eg, root);
+        d.typecheck().expect("extracted design must typecheck");
+        // Differential: design evaluates to the same values.
+        let orig = parse_expr(FIG2).unwrap();
+        let a = eval_expr(&orig, &mut Env::random_for(&orig, 3)).unwrap();
+        let b = eval_expr(&d, &mut Env::random_for(&d, 3)).unwrap();
+        assert!(a.allclose(&b, 1e-5));
+    }
+
+    #[test]
+    fn size_cost_recovers_smallest() {
+        let (eg, root) = enumerated(FIG2, 6);
+        let ex = Extractor::new(&eg, size_cost);
+        let d = ex.extract(&eg, root);
+        // The original 3-node program is the smallest member.
+        assert_eq!(d.len(), 3, "{d}");
+    }
+
+    #[test]
+    fn samples_are_diverse_and_all_equivalent() {
+        let (eg, root) = enumerated(FIG2, 6);
+        let pts = sample_designs(&eg, root, 24, &CostParams::default());
+        assert!(pts.len() >= 5, "only {} distinct designs", pts.len());
+        let orig = parse_expr(FIG2).unwrap();
+        let want = eval_expr(&orig, &mut Env::random_for(&orig, 1)).unwrap();
+        for p in &pts {
+            p.expr.typecheck().unwrap();
+            let got = eval_expr(&p.expr, &mut Env::random_for(&p.expr, 1)).unwrap();
+            assert!(want.allclose(&got, 1e-5), "diverged: {}", p.expr);
+        }
+    }
+
+    #[test]
+    fn frontier_is_mutually_nondominated() {
+        let (eg, root) = enumerated(FIG2, 6);
+        let (pts, frontier) = ParetoExplorer::default().explore(&eg, root);
+        assert!(!frontier.is_empty());
+        assert!(frontier.len() <= pts.len());
+        for a in &frontier {
+            for b in &frontier {
+                assert!(!a.cost.dominates(&b.cost) || a.cost == b.cost);
+            }
+        }
+        // And the frontier spans a real area range (diversity of splits).
+        if frontier.len() >= 2 {
+            assert!(frontier[0].cost.area < frontier.last().unwrap().cost.area);
+        }
+    }
+}

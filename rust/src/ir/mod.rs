@@ -1,0 +1,32 @@
+//! EngineIR: the term language over which designs are enumerated.
+//!
+//! EngineIR reifies the three components the paper identifies in an
+//! accelerated ML inference workload (§2):
+//!
+//! * **hardware engines** — fixed-size compute units, declared with concrete
+//!   parameters (e.g. `(mm-engine 16 16 16)` is a 16×16×16 matrix-multiply
+//!   unit, `(relu-engine 128)` a 128-wide ReLU unit);
+//! * **software schedules** — loops (`sched-loop`) and parallel maps
+//!   (`sched-par`) that expand fixed-size engine invocations to
+//!   arbitrary-size tensors, plus reductions (`sched-reduce`);
+//! * **storage** — explicit `buffer` / `dbl-buffer` materialization points
+//!   carrying intermediates between invocations.
+//!
+//! Relay-level operators (`conv2d`, `dense`, `relu`, …) are also terms of the
+//! language, so a *partially reified* program (some ops still at the Relay
+//! level, some already split into engines + schedules) is representable —
+//! that is what lets rewrites explore the hardware–software split
+//! incrementally inside one e-graph.
+
+pub mod op;
+pub mod parse;
+pub mod print;
+pub mod recexpr;
+pub mod shape;
+pub mod symbol;
+
+pub use op::{BufKind, Op, OpKind};
+pub use parse::parse_expr;
+pub use recexpr::{Node, RecExpr};
+pub use shape::{infer as infer_ty, infer_ref as infer_ty_ref, in_dim, out_dim, EngineSig, Shape, Ty, TypeError};
+pub use symbol::Symbol;

@@ -1,0 +1,429 @@
+//! The operator set of EngineIR.
+//!
+//! Design notes:
+//!
+//! * Scalar parameters that rewrites must *compute over* (engine sizes,
+//!   schedule extents, slice lengths) are stored **in the op itself** rather
+//!   than as child e-nodes. This keeps e-nodes small, makes hashcons sharing
+//!   of engine declarations exact (the paper's "engine reuse across call
+//!   sites" falls out of structural equality), and lets rewrites synthesize
+//!   new parameters (`m/2`, `(oh-1)*stride+kh`, …) directly.
+//! * Only *dynamic indices* — slice starts that depend on a schedule's loop
+//!   variable — are child expressions (`Int` / `LVar` / `IMul` / `IAdd`).
+//! * Schedules bind **named** loop variables ([`Op::SchedLoop`] etc. carry a
+//!   [`Symbol`]); rewrites always bind fresh names, so there is no capture
+//!   and no de Bruijn shifting inside the e-graph.
+
+use super::shape::Shape;
+use super::symbol::Symbol;
+use std::fmt;
+
+/// Storage kind for explicit buffer materialization points.
+#[derive(Copy, Clone, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+pub enum BufKind {
+    /// On-chip scratchpad (VMEM/BRAM-class): fast, area-costly.
+    Sram,
+    /// Off-chip memory (HBM/DRAM-class): free area, slow.
+    Dram,
+}
+
+impl BufKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BufKind::Sram => "sram",
+            BufKind::Dram => "dram",
+        }
+    }
+}
+
+/// An EngineIR operator. See the module docs for the sub-language split
+/// (index scalars / Relay ops / engines / invocations / schedules / storage).
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+pub enum Op {
+    // ------------------------------------------------------------------
+    // Index scalars (children of `SliceAx` starts only)
+    // ------------------------------------------------------------------
+    /// Integer literal.
+    Int(i64),
+    /// Reference to an enclosing schedule's loop variable.
+    LVar(Symbol),
+    /// Integer multiply; children `[a, b]`.
+    IMul,
+    /// Integer add; children `[a, b]`.
+    IAdd,
+
+    // ------------------------------------------------------------------
+    // Workload tensors (leaves)
+    // ------------------------------------------------------------------
+    /// Named workload input with static shape.
+    Input(Symbol, Shape),
+    /// Named trained parameter with static shape.
+    Weight(Symbol, Shape),
+
+    // ------------------------------------------------------------------
+    // Relay-level operators (pre-reification; N=1 inference, CHW layout)
+    // ------------------------------------------------------------------
+    /// 2-D convolution; children `[x:(C,H,W), w:(K,C,KH,KW)]`.
+    Conv2d { stride: usize, pad: usize },
+    /// Dense / fully-connected; children `[x:(M,K), w:(K,N)]`.
+    Dense,
+    /// Elementwise ReLU; children `[x]` (any shape).
+    Relu,
+    /// Bias add; children `[x, b]`, `b` broadcast along `x`'s leading dim
+    /// (rank-3 `x`) or trailing dim (rank-2 `x`).
+    BiasAdd,
+    /// Elementwise add; children `[x, y]` (same shape).
+    EAdd,
+    /// Max pooling; children `[x:(C,H,W)]`.
+    MaxPool2d { k: usize, stride: usize },
+    /// Flatten to `(1, numel)`; children `[x]`.
+    Flatten,
+    /// Global average pool `(C,H,W) -> (C)`; children `[x]`.
+    GlobalAvgPool,
+
+    // ------------------------------------------------------------------
+    // Hardware engine declarations (leaves; paper Fig. 1)
+    // ------------------------------------------------------------------
+    /// Matrix-multiply engine computing `(m,k) @ (k,n)`.
+    MmEngine { m: usize, k: usize, n: usize },
+    /// Fused matmul+ReLU engine (extension rewrite R7).
+    MmReluEngine { m: usize, k: usize, n: usize },
+    /// `w`-wide vector ReLU unit (paper Fig. 2).
+    ReluEngine { w: usize },
+    /// `w`-wide vector adder.
+    AddEngine { w: usize },
+    /// Direct convolution engine producing an `(k, oh, ow)` output tile from
+    /// a `(c, ih, iw)` input tile with a square `kh` kernel (paper Fig. 1's
+    /// `conv_engine<H, W, C, K>`).
+    ConvEngine { oh: usize, ow: usize, c: usize, k: usize, kh: usize, stride: usize },
+    /// Max-pool engine producing `(c, oh, ow)` from `(c, ih, iw)`.
+    PoolEngine { oh: usize, ow: usize, c: usize, k: usize, stride: usize },
+
+    // ------------------------------------------------------------------
+    // Engine invocations: children `[engine, tensor args...]`
+    // ------------------------------------------------------------------
+    /// `[e:MmEngine, a:(m,k), b:(k,n)] -> (m,n)`.
+    InvokeMm,
+    /// `[e:MmReluEngine, a, b] -> relu(a@b)`.
+    InvokeMmRelu,
+    /// `[e:ReluEngine, x:(w,)] -> (w,)`.
+    InvokeRelu,
+    /// `[e:AddEngine, x:(w,), y:(w,)] -> (w,)`.
+    InvokeAdd,
+    /// `[e:ConvEngine, x:(c,ih,iw), w:(k,c,kh,kh)] -> (k,oh,ow)`.
+    InvokeConv,
+    /// `[e:PoolEngine, x:(c,ih,iw)] -> (c,oh,ow)`.
+    InvokePool,
+
+    // ------------------------------------------------------------------
+    // Software schedules: children `[body]`
+    // ------------------------------------------------------------------
+    /// Sequential loop: run `body` `extent` times (binding `var` to
+    /// `0..extent`), concatenating results along `axis`. One engine
+    /// instance, time-multiplexed — paper Fig. 2 rewrite 1.
+    SchedLoop { var: Symbol, axis: usize, extent: usize },
+    /// Parallel map: same semantics as `SchedLoop`, but `extent` hardware
+    /// instances run concurrently — paper Fig. 2 rewrite 2.
+    SchedPar { var: Symbol, axis: usize, extent: usize },
+    /// Reduction schedule: run `body` `extent` times and sum the results
+    /// elementwise (used by matmul K-splitting).
+    SchedReduce { var: Symbol, extent: usize },
+
+    // ------------------------------------------------------------------
+    // Data movement & storage
+    // ------------------------------------------------------------------
+    /// Slice `len` elements along `axis`; children `[start:index, x]`.
+    SliceAx { axis: usize, len: usize },
+    /// Reshape to a static shape; children `[x]`.
+    Reshape(Shape),
+    /// Broadcast a 1-D tensor to `shape` along dim 0 (rank-3 result) or
+    /// dim 1 (rank-2 result); children `[b]`.
+    Bcast(Shape),
+    /// Zero-pad H and W of a `(C,H,W)` tensor; children `[x]`.
+    Pad2d { pad: usize },
+    /// im2col: `(c,ih,iw) -> (c*kh*kh, oh*ow)` patch matrix; children `[x]`.
+    Im2Col { kh: usize, stride: usize },
+    /// Materialize the child into an explicit storage buffer.
+    Buffer { kind: BufKind },
+    /// Double-buffered materialization (pipelining rewrite R6).
+    DblBuffer { kind: BufKind },
+}
+
+/// Coarse operator classification used by pattern matching ([`OpKind`]
+/// matchers bind any op of a kind) and by cost/statistics code.
+#[derive(Copy, Clone, PartialEq, Eq, Hash, Debug)]
+pub enum OpKind {
+    Int,
+    LVar,
+    IMul,
+    IAdd,
+    Input,
+    Weight,
+    Conv2d,
+    Dense,
+    Relu,
+    BiasAdd,
+    EAdd,
+    MaxPool2d,
+    Flatten,
+    GlobalAvgPool,
+    MmEngine,
+    MmReluEngine,
+    ReluEngine,
+    AddEngine,
+    ConvEngine,
+    PoolEngine,
+    InvokeMm,
+    InvokeMmRelu,
+    InvokeRelu,
+    InvokeAdd,
+    InvokeConv,
+    InvokePool,
+    SchedLoop,
+    SchedPar,
+    SchedReduce,
+    SliceAx,
+    Reshape,
+    Bcast,
+    Pad2d,
+    Im2Col,
+    Buffer,
+    DblBuffer,
+}
+
+impl Op {
+    /// The coarse kind of this op.
+    pub fn kind(&self) -> OpKind {
+        match self {
+            Op::Int(_) => OpKind::Int,
+            Op::LVar(_) => OpKind::LVar,
+            Op::IMul => OpKind::IMul,
+            Op::IAdd => OpKind::IAdd,
+            Op::Input(..) => OpKind::Input,
+            Op::Weight(..) => OpKind::Weight,
+            Op::Conv2d { .. } => OpKind::Conv2d,
+            Op::Dense => OpKind::Dense,
+            Op::Relu => OpKind::Relu,
+            Op::BiasAdd => OpKind::BiasAdd,
+            Op::EAdd => OpKind::EAdd,
+            Op::MaxPool2d { .. } => OpKind::MaxPool2d,
+            Op::Flatten => OpKind::Flatten,
+            Op::GlobalAvgPool => OpKind::GlobalAvgPool,
+            Op::MmEngine { .. } => OpKind::MmEngine,
+            Op::MmReluEngine { .. } => OpKind::MmReluEngine,
+            Op::ReluEngine { .. } => OpKind::ReluEngine,
+            Op::AddEngine { .. } => OpKind::AddEngine,
+            Op::ConvEngine { .. } => OpKind::ConvEngine,
+            Op::PoolEngine { .. } => OpKind::PoolEngine,
+            Op::InvokeMm => OpKind::InvokeMm,
+            Op::InvokeMmRelu => OpKind::InvokeMmRelu,
+            Op::InvokeRelu => OpKind::InvokeRelu,
+            Op::InvokeAdd => OpKind::InvokeAdd,
+            Op::InvokeConv => OpKind::InvokeConv,
+            Op::InvokePool => OpKind::InvokePool,
+            Op::SchedLoop { .. } => OpKind::SchedLoop,
+            Op::SchedPar { .. } => OpKind::SchedPar,
+            Op::SchedReduce { .. } => OpKind::SchedReduce,
+            Op::SliceAx { .. } => OpKind::SliceAx,
+            Op::Reshape(_) => OpKind::Reshape,
+            Op::Bcast(_) => OpKind::Bcast,
+            Op::Pad2d { .. } => OpKind::Pad2d,
+            Op::Im2Col { .. } => OpKind::Im2Col,
+            Op::Buffer { .. } => OpKind::Buffer,
+            Op::DblBuffer { .. } => OpKind::DblBuffer,
+        }
+    }
+
+    /// Number of children this op expects, if fixed (all EngineIR ops have
+    /// fixed arity; this is `None` only for future variadic ops).
+    pub fn arity(&self) -> Option<usize> {
+        Some(match self.kind() {
+            OpKind::Int
+            | OpKind::LVar
+            | OpKind::Input
+            | OpKind::Weight
+            | OpKind::MmEngine
+            | OpKind::MmReluEngine
+            | OpKind::ReluEngine
+            | OpKind::AddEngine
+            | OpKind::ConvEngine
+            | OpKind::PoolEngine => 0,
+            OpKind::Relu
+            | OpKind::Flatten
+            | OpKind::GlobalAvgPool
+            | OpKind::MaxPool2d
+            | OpKind::Reshape
+            | OpKind::Bcast
+            | OpKind::Pad2d
+            | OpKind::Im2Col
+            | OpKind::Buffer
+            | OpKind::DblBuffer
+            | OpKind::SchedLoop
+            | OpKind::SchedPar
+            | OpKind::SchedReduce => 1,
+            OpKind::IMul
+            | OpKind::IAdd
+            | OpKind::Conv2d
+            | OpKind::Dense
+            | OpKind::BiasAdd
+            | OpKind::EAdd
+            | OpKind::InvokeRelu
+            | OpKind::InvokePool
+            | OpKind::SliceAx => 2,
+            OpKind::InvokeMm
+            | OpKind::InvokeMmRelu
+            | OpKind::InvokeAdd
+            | OpKind::InvokeConv => 3,
+        })
+    }
+
+    /// True for hardware engine declarations.
+    pub fn is_engine(&self) -> bool {
+        matches!(
+            self.kind(),
+            OpKind::MmEngine
+                | OpKind::MmReluEngine
+                | OpKind::ReluEngine
+                | OpKind::AddEngine
+                | OpKind::ConvEngine
+                | OpKind::PoolEngine
+        )
+    }
+
+    /// True for engine invocations.
+    pub fn is_invoke(&self) -> bool {
+        matches!(
+            self.kind(),
+            OpKind::InvokeMm
+                | OpKind::InvokeMmRelu
+                | OpKind::InvokeRelu
+                | OpKind::InvokeAdd
+                | OpKind::InvokeConv
+                | OpKind::InvokePool
+        )
+    }
+
+    /// True for software schedule combinators.
+    pub fn is_sched(&self) -> bool {
+        matches!(self.kind(), OpKind::SchedLoop | OpKind::SchedPar | OpKind::SchedReduce)
+    }
+
+    /// True for Relay-level (unreified) operators.
+    pub fn is_relay(&self) -> bool {
+        matches!(
+            self.kind(),
+            OpKind::Conv2d
+                | OpKind::Dense
+                | OpKind::Relu
+                | OpKind::BiasAdd
+                | OpKind::EAdd
+                | OpKind::MaxPool2d
+                | OpKind::Flatten
+                | OpKind::GlobalAvgPool
+        )
+    }
+
+    /// Multiply–accumulate count of one invocation of an engine declaration
+    /// (0 for non-engines). The basis of the area and latency models.
+    pub fn engine_macs(&self) -> u64 {
+        match *self {
+            Op::MmEngine { m, k, n } | Op::MmReluEngine { m, k, n } => (m * k * n) as u64,
+            Op::ReluEngine { w } | Op::AddEngine { w } => w as u64,
+            Op::ConvEngine { oh, ow, c, k, kh, .. } => (oh * ow * c * k * kh * kh) as u64,
+            Op::PoolEngine { oh, ow, c, k, .. } => (oh * ow * c * k * k) as u64,
+            _ => 0,
+        }
+    }
+}
+
+impl fmt::Display for Op {
+    /// Head symbol used by the s-expression printer/parser.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Op::Int(v) => write!(f, "{v}"),
+            Op::LVar(s) => write!(f, "(lvar {s})"),
+            Op::IMul => write!(f, "imul"),
+            Op::IAdd => write!(f, "iadd"),
+            Op::Input(s, sh) => write!(f, "(input {s}{sh})"),
+            Op::Weight(s, sh) => write!(f, "(weight {s}{sh})"),
+            Op::Conv2d { stride, pad } => write!(f, "conv2d[s{stride},p{pad}]"),
+            Op::Dense => write!(f, "dense"),
+            Op::Relu => write!(f, "relu"),
+            Op::BiasAdd => write!(f, "bias-add"),
+            Op::EAdd => write!(f, "eadd"),
+            Op::MaxPool2d { k, stride } => write!(f, "maxpool2d[k{k},s{stride}]"),
+            Op::Flatten => write!(f, "flatten"),
+            Op::GlobalAvgPool => write!(f, "gap"),
+            Op::MmEngine { m, k, n } => write!(f, "(mm-engine {m} {k} {n})"),
+            Op::MmReluEngine { m, k, n } => write!(f, "(mm-relu-engine {m} {k} {n})"),
+            Op::ReluEngine { w } => write!(f, "(relu-engine {w})"),
+            Op::AddEngine { w } => write!(f, "(add-engine {w})"),
+            Op::ConvEngine { oh, ow, c, k, kh, stride } => {
+                write!(f, "(conv-engine {oh} {ow} {c} {k} {kh} {stride})")
+            }
+            Op::PoolEngine { oh, ow, c, k, stride } => {
+                write!(f, "(pool-engine {oh} {ow} {c} {k} {stride})")
+            }
+            Op::InvokeMm => write!(f, "invoke-mm"),
+            Op::InvokeMmRelu => write!(f, "invoke-mm-relu"),
+            Op::InvokeRelu => write!(f, "invoke-relu"),
+            Op::InvokeAdd => write!(f, "invoke-add"),
+            Op::InvokeConv => write!(f, "invoke-conv"),
+            Op::InvokePool => write!(f, "invoke-pool"),
+            Op::SchedLoop { var, axis, extent } => {
+                write!(f, "sched-loop[{var},a{axis},x{extent}]")
+            }
+            Op::SchedPar { var, axis, extent } => {
+                write!(f, "sched-par[{var},a{axis},x{extent}]")
+            }
+            Op::SchedReduce { var, extent } => write!(f, "sched-reduce[{var},x{extent}]"),
+            Op::SliceAx { axis, len } => write!(f, "slice[a{axis},l{len}]"),
+            Op::Reshape(sh) => write!(f, "reshape{sh}"),
+            Op::Bcast(sh) => write!(f, "bcast{sh}"),
+            Op::Pad2d { pad } => write!(f, "pad2d[{pad}]"),
+            Op::Im2Col { kh, stride } => write!(f, "im2col[k{kh},s{stride}]"),
+            Op::Buffer { kind } => write!(f, "buffer[{}]", kind.as_str()),
+            Op::DblBuffer { kind } => write!(f, "dbl-buffer[{}]", kind.as_str()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arity_matches_docs() {
+        assert_eq!(Op::InvokeMm.arity(), Some(3));
+        assert_eq!(Op::Relu.arity(), Some(1));
+        assert_eq!(Op::MmEngine { m: 4, k: 4, n: 4 }.arity(), Some(0));
+        assert_eq!(Op::SliceAx { axis: 0, len: 4 }.arity(), Some(2));
+    }
+
+    #[test]
+    fn engine_classification() {
+        assert!(Op::ReluEngine { w: 8 }.is_engine());
+        assert!(!Op::InvokeRelu.is_engine());
+        assert!(Op::InvokeRelu.is_invoke());
+        assert!(Op::SchedLoop { var: Symbol::new("i"), axis: 0, extent: 2 }.is_sched());
+        assert!(Op::Dense.is_relay());
+    }
+
+    #[test]
+    fn engine_macs_scale_with_params() {
+        let small = Op::MmEngine { m: 4, k: 4, n: 4 }.engine_macs();
+        let big = Op::MmEngine { m: 8, k: 4, n: 4 }.engine_macs();
+        assert_eq!(big, 2 * small);
+        assert_eq!(Op::ReluEngine { w: 128 }.engine_macs(), 128);
+    }
+
+    #[test]
+    fn ops_hash_structurally() {
+        use std::collections::HashSet;
+        let mut s = HashSet::new();
+        s.insert(Op::MmEngine { m: 16, k: 16, n: 16 });
+        // Same parameters -> same engine declaration -> shared hardware.
+        assert!(s.contains(&Op::MmEngine { m: 16, k: 16, n: 16 }));
+        assert!(!s.contains(&Op::MmEngine { m: 16, k: 16, n: 8 }));
+    }
+}

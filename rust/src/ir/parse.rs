@@ -1,0 +1,320 @@
+//! S-expression parser for EngineIR — the inverse of [`super::print`].
+//!
+//! Grammar (informal):
+//!
+//! ```text
+//! expr   := INT | (lvar SYM) | (imul e e) | (iadd e e)
+//!         | (input SYM shape) | (weight SYM shape)
+//!         | (conv2d STRIDE PAD e e) | (dense e e) | (relu e) | ...
+//!         | (mm-engine M K N) | (relu-engine W) | ...
+//!         | (invoke-mm e e e) | ...
+//!         | (sched-loop SYM AXIS EXTENT e) | (sched-par ...) | (sched-reduce SYM EXTENT e)
+//!         | (slice AXIS LEN e e) | (reshape shape e) | (buffer KIND e) | ...
+//! shape  := '[' INT* ']'
+//! ```
+
+use super::op::{BufKind, Op};
+use super::recexpr::{Node, RecExpr};
+use super::shape::Shape;
+use super::symbol::Symbol;
+use crate::egraph::Id;
+
+/// A parse failure, with a human-readable message.
+#[derive(Debug, Clone, thiserror::Error)]
+#[error("parse error: {0}")]
+pub struct ParseError(pub String);
+
+type Result<T> = std::result::Result<T, ParseError>;
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    LParen,
+    RParen,
+    LBrack,
+    RBrack,
+    Atom(String),
+}
+
+fn lex(src: &str) -> Vec<Tok> {
+    let mut toks = Vec::new();
+    let mut cur = String::new();
+    let flush = |cur: &mut String, toks: &mut Vec<Tok>| {
+        if !cur.is_empty() {
+            toks.push(Tok::Atom(std::mem::take(cur)));
+        }
+    };
+    for ch in src.chars() {
+        match ch {
+            '(' => {
+                flush(&mut cur, &mut toks);
+                toks.push(Tok::LParen);
+            }
+            ')' => {
+                flush(&mut cur, &mut toks);
+                toks.push(Tok::RParen);
+            }
+            '[' => {
+                flush(&mut cur, &mut toks);
+                toks.push(Tok::LBrack);
+            }
+            ']' => {
+                flush(&mut cur, &mut toks);
+                toks.push(Tok::RBrack);
+            }
+            c if c.is_whitespace() => flush(&mut cur, &mut toks),
+            c => cur.push(c),
+        }
+    }
+    flush(&mut cur, &mut toks);
+    toks
+}
+
+struct Parser<'a> {
+    toks: &'a [Tok],
+    pos: usize,
+    expr: RecExpr,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.pos)
+    }
+
+    fn next(&mut self) -> Result<&Tok> {
+        let t = self.toks.get(self.pos).ok_or_else(|| ParseError("unexpected EOF".into()))?;
+        self.pos += 1;
+        Ok(t)
+    }
+
+    fn expect(&mut self, tok: Tok) -> Result<()> {
+        let t = self.next()?;
+        if *t == tok {
+            Ok(())
+        } else {
+            Err(ParseError(format!("expected {tok:?}, got {t:?}")))
+        }
+    }
+
+    fn atom(&mut self) -> Result<String> {
+        match self.next()? {
+            Tok::Atom(s) => Ok(s.clone()),
+            t => Err(ParseError(format!("expected atom, got {t:?}"))),
+        }
+    }
+
+    fn usize_atom(&mut self) -> Result<usize> {
+        let a = self.atom()?;
+        a.parse().map_err(|_| ParseError(format!("expected integer, got '{a}'")))
+    }
+
+    fn sym_atom(&mut self) -> Result<Symbol> {
+        Ok(Symbol::new(&self.atom()?))
+    }
+
+    fn shape(&mut self) -> Result<Shape> {
+        self.expect(Tok::LBrack)?;
+        let mut dims = Vec::new();
+        loop {
+            match self.peek() {
+                Some(Tok::RBrack) => {
+                    self.pos += 1;
+                    return Ok(Shape(dims));
+                }
+                Some(Tok::Atom(_)) => dims.push(self.usize_atom()?),
+                t => return Err(ParseError(format!("bad shape token {t:?}"))),
+            }
+        }
+    }
+
+    fn bufkind(&mut self) -> Result<BufKind> {
+        match self.atom()?.as_str() {
+            "sram" => Ok(BufKind::Sram),
+            "dram" => Ok(BufKind::Dram),
+            s => Err(ParseError(format!("unknown buffer kind '{s}'"))),
+        }
+    }
+
+    fn expr(&mut self) -> Result<Id> {
+        match self.next()?.clone() {
+            Tok::Atom(a) => {
+                let v: i64 =
+                    a.parse().map_err(|_| ParseError(format!("bare atom '{a}' is not int")))?;
+                Ok(self.expr.add_leaf(Op::Int(v)))
+            }
+            Tok::LParen => {
+                let head = self.atom()?;
+                let id = self.form(&head)?;
+                self.expect(Tok::RParen)?;
+                Ok(id)
+            }
+            t => Err(ParseError(format!("unexpected token {t:?}"))),
+        }
+    }
+
+    fn children(&mut self, n: usize) -> Result<Vec<Id>> {
+        (0..n).map(|_| self.expr()).collect()
+    }
+
+    fn form(&mut self, head: &str) -> Result<Id> {
+        let e = match head {
+            "lvar" => Node::leaf(Op::LVar(self.sym_atom()?)),
+            "imul" => Node::new(Op::IMul, self.children(2)?),
+            "iadd" => Node::new(Op::IAdd, self.children(2)?),
+            "input" => {
+                let s = self.sym_atom()?;
+                Node::leaf(Op::Input(s, self.shape()?))
+            }
+            "weight" => {
+                let s = self.sym_atom()?;
+                Node::leaf(Op::Weight(s, self.shape()?))
+            }
+            "conv2d" => {
+                let stride = self.usize_atom()?;
+                let pad = self.usize_atom()?;
+                Node::new(Op::Conv2d { stride, pad }, self.children(2)?)
+            }
+            "dense" => Node::new(Op::Dense, self.children(2)?),
+            "relu" => Node::new(Op::Relu, self.children(1)?),
+            "bias-add" => Node::new(Op::BiasAdd, self.children(2)?),
+            "eadd" => Node::new(Op::EAdd, self.children(2)?),
+            "maxpool2d" => {
+                let k = self.usize_atom()?;
+                let stride = self.usize_atom()?;
+                Node::new(Op::MaxPool2d { k, stride }, self.children(1)?)
+            }
+            "flatten" => Node::new(Op::Flatten, self.children(1)?),
+            "gap" => Node::new(Op::GlobalAvgPool, self.children(1)?),
+            "mm-engine" => {
+                let (m, k, n) = (self.usize_atom()?, self.usize_atom()?, self.usize_atom()?);
+                Node::leaf(Op::MmEngine { m, k, n })
+            }
+            "mm-relu-engine" => {
+                let (m, k, n) = (self.usize_atom()?, self.usize_atom()?, self.usize_atom()?);
+                Node::leaf(Op::MmReluEngine { m, k, n })
+            }
+            "relu-engine" => Node::leaf(Op::ReluEngine { w: self.usize_atom()? }),
+            "add-engine" => Node::leaf(Op::AddEngine { w: self.usize_atom()? }),
+            "conv-engine" => {
+                let oh = self.usize_atom()?;
+                let ow = self.usize_atom()?;
+                let c = self.usize_atom()?;
+                let k = self.usize_atom()?;
+                let kh = self.usize_atom()?;
+                let stride = self.usize_atom()?;
+                Node::leaf(Op::ConvEngine { oh, ow, c, k, kh, stride })
+            }
+            "pool-engine" => {
+                let oh = self.usize_atom()?;
+                let ow = self.usize_atom()?;
+                let c = self.usize_atom()?;
+                let k = self.usize_atom()?;
+                let stride = self.usize_atom()?;
+                Node::leaf(Op::PoolEngine { oh, ow, c, k, stride })
+            }
+            "invoke-mm" => Node::new(Op::InvokeMm, self.children(3)?),
+            "invoke-mm-relu" => Node::new(Op::InvokeMmRelu, self.children(3)?),
+            "invoke-relu" => Node::new(Op::InvokeRelu, self.children(2)?),
+            "invoke-add" => Node::new(Op::InvokeAdd, self.children(3)?),
+            "invoke-conv" => Node::new(Op::InvokeConv, self.children(3)?),
+            "invoke-pool" => Node::new(Op::InvokePool, self.children(2)?),
+            "sched-loop" | "sched-par" => {
+                let var = self.sym_atom()?;
+                let axis = self.usize_atom()?;
+                let extent = self.usize_atom()?;
+                let kids = self.children(1)?;
+                let op = if head == "sched-loop" {
+                    Op::SchedLoop { var, axis, extent }
+                } else {
+                    Op::SchedPar { var, axis, extent }
+                };
+                Node::new(op, kids)
+            }
+            "sched-reduce" => {
+                let var = self.sym_atom()?;
+                let extent = self.usize_atom()?;
+                Node::new(Op::SchedReduce { var, extent }, self.children(1)?)
+            }
+            "slice" => {
+                let axis = self.usize_atom()?;
+                let len = self.usize_atom()?;
+                Node::new(Op::SliceAx { axis, len }, self.children(2)?)
+            }
+            "reshape" => {
+                let sh = self.shape()?;
+                Node::new(Op::Reshape(sh), self.children(1)?)
+            }
+            "bcast" => {
+                let sh = self.shape()?;
+                Node::new(Op::Bcast(sh), self.children(1)?)
+            }
+            "pad2d" => Node::new(Op::Pad2d { pad: self.usize_atom()? }, self.children(1)?),
+            "im2col" => {
+                let kh = self.usize_atom()?;
+                let stride = self.usize_atom()?;
+                Node::new(Op::Im2Col { kh, stride }, self.children(1)?)
+            }
+            "buffer" => Node::new(Op::Buffer { kind: self.bufkind()? }, self.children(1)?),
+            "dbl-buffer" => Node::new(Op::DblBuffer { kind: self.bufkind()? }, self.children(1)?),
+            other => return Err(ParseError(format!("unknown form '{other}'"))),
+        };
+        Ok(self.expr.add(e))
+    }
+}
+
+/// Parse a single EngineIR expression.
+pub fn parse_expr(src: &str) -> Result<RecExpr> {
+    let toks = lex(src);
+    let mut p = Parser { toks: &toks, pos: 0, expr: RecExpr::new() };
+    p.expr()?;
+    if p.pos != p.toks.len() {
+        return Err(ParseError(format!("trailing tokens at {}", p.pos)));
+    }
+    Ok(p.expr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CASES: &[&str] = &[
+        "(invoke-relu (relu-engine 128) (input x [128]))",
+        "(sched-loop i0 0 2 (invoke-relu (relu-engine 64) (slice 0 64 (imul (lvar i0) 64) (input x [128]))))",
+        "(sched-par p1 0 2 (invoke-relu (relu-engine 64) (slice 0 64 (imul (lvar p1) 64) (input x [128]))))",
+        "(invoke-mm (mm-engine 16 16 16) (input a [16 16]) (weight w [16 16]))",
+        "(dense (flatten (maxpool2d 2 2 (relu (conv2d 1 1 (input img [3 32 32]) (weight k1 [8 3 3 3]))))) (weight w2 [2048 10]))",
+        "(invoke-conv (conv-engine 2 4 3 8 3 1) (slice 1 4 (imul (lvar i) 2) (pad2d 1 (input img [3 8 8]))) (weight k [8 3 3 3]))",
+        "(sched-reduce r0 2 (invoke-mm (mm-engine 4 8 4) (slice 1 8 (imul (lvar r0) 8) (input a [4 16])) (slice 0 8 (imul (lvar r0) 8) (weight b [16 4]))))",
+        "(buffer sram (reshape [1 16] (invoke-relu (relu-engine 16) (reshape [16] (input x [4 4])))))",
+        "(eadd (bcast [8] (weight b [8])) (gap (input t [8 5 5])))",
+    ];
+
+    #[test]
+    fn roundtrip_print_parse() {
+        for src in CASES {
+            let e = parse_expr(src).unwrap_or_else(|err| panic!("{src}: {err}"));
+            assert_eq!(&e.to_string(), src);
+        }
+    }
+
+    #[test]
+    fn parses_shapes() {
+        let e = parse_expr("(input x [3 32 32])").unwrap();
+        assert_eq!(e.len(), 1);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_expr("(frobnicate 1 2)").is_err());
+        assert!(parse_expr("(relu").is_err());
+        assert!(parse_expr("(relu (input x [4])) trailing").is_err());
+        assert!(parse_expr("").is_err());
+    }
+
+    #[test]
+    fn typechecks_parsed_workload() {
+        // a small conv -> relu -> pool -> flatten -> dense chain
+        let e = parse_expr(CASES[4]).unwrap();
+        let ty = e.typecheck().unwrap();
+        assert_eq!(ty, crate::ir::Ty::Tensor(crate::ir::Shape::new(&[1, 10])));
+    }
+}

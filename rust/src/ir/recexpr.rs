@@ -1,0 +1,270 @@
+//! `RecExpr`: a flattened expression DAG (postorder array of nodes whose
+//! children are indices into the same array). This is both the concrete
+//! program representation (what the parser yields, what extraction returns,
+//! what the evaluator/simulator consume) and the unit of insertion into the
+//! e-graph.
+
+use super::op::Op;
+use super::shape::{infer, Ty, TypeError};
+use super::symbol::Symbol;
+use crate::egraph::Id;
+use std::fmt;
+
+/// One operator application; children point at e-classes (in an
+/// [`crate::egraph::EGraph`]) or at earlier `RecExpr` slots.
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+pub struct Node {
+    pub op: Op,
+    pub children: Vec<Id>,
+}
+
+impl Node {
+    pub fn new(op: Op, children: Vec<Id>) -> Self {
+        debug_assert!(
+            op.arity().map_or(true, |a| a == children.len()),
+            "arity mismatch for {op}: got {}",
+            children.len()
+        );
+        Node { op, children }
+    }
+
+    pub fn leaf(op: Op) -> Self {
+        Node::new(op, vec![])
+    }
+
+    /// Copy with children rewritten through `f` (used by canonicalization
+    /// and by e-graph insertion).
+    pub fn map_children(&self, mut f: impl FnMut(Id) -> Id) -> Node {
+        Node { op: self.op.clone(), children: self.children.iter().map(|&c| f(c)).collect() }
+    }
+}
+
+/// A self-contained expression: `nodes[i]`'s children all have index < `i`;
+/// the root is the last node.
+#[derive(Clone, PartialEq, Eq, Debug, Default)]
+pub struct RecExpr {
+    nodes: Vec<Node>,
+}
+
+impl RecExpr {
+    pub fn new() -> Self {
+        RecExpr { nodes: Vec::new() }
+    }
+
+    /// Append a node; children must reference earlier slots.
+    pub fn add(&mut self, node: Node) -> Id {
+        for &c in &node.children {
+            assert!((c.index()) < self.nodes.len(), "RecExpr child out of range");
+        }
+        self.nodes.push(node);
+        Id::from_index(self.nodes.len() - 1)
+    }
+
+    /// Convenience: append `op` applied to `children`.
+    pub fn add_op(&mut self, op: Op, children: &[Id]) -> Id {
+        self.add(Node::new(op, children.to_vec()))
+    }
+
+    pub fn add_leaf(&mut self, op: Op) -> Id {
+        self.add(Node::leaf(op))
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn node(&self, id: Id) -> &Node {
+        &self.nodes[id.index()]
+    }
+
+    /// Root node id (the last slot).
+    pub fn root(&self) -> Id {
+        assert!(!self.nodes.is_empty(), "empty RecExpr has no root");
+        Id::from_index(self.nodes.len() - 1)
+    }
+
+    /// Type-check the whole expression; returns the root type.
+    /// Duplicate work is shared: each slot is inferred once.
+    pub fn typecheck(&self) -> Result<Ty, TypeError> {
+        let mut tys: Vec<Ty> = Vec::with_capacity(self.nodes.len());
+        for node in &self.nodes {
+            let child_tys: Vec<Ty> =
+                node.children.iter().map(|c| tys[c.index()].clone()).collect();
+            tys.push(infer(&node.op, &child_tys)?);
+        }
+        Ok(tys.last().cloned().expect("empty expr"))
+    }
+
+    /// Per-slot types (same traversal as [`Self::typecheck`]).
+    pub fn types(&self) -> Result<Vec<Ty>, TypeError> {
+        let mut tys: Vec<Ty> = Vec::with_capacity(self.nodes.len());
+        for node in &self.nodes {
+            let child_tys: Vec<Ty> =
+                node.children.iter().map(|c| tys[c.index()].clone()).collect();
+            tys.push(infer(&node.op, &child_tys)?);
+        }
+        Ok(tys)
+    }
+
+    /// Copy the subtree rooted at `root` in `other` into `self`, returning
+    /// the new root id. Structurally identical nodes — including ones
+    /// already present in `self` from earlier appends — are deduplicated,
+    /// so repeated appends of the same subtree are idempotent.
+    pub fn append_subtree(&mut self, other: &RecExpr, root: Id) -> Id {
+        let mut existing: std::collections::HashMap<Node, Id> = self
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.clone(), Id::from_index(i)))
+            .collect();
+        let mut map: Vec<Option<Id>> = vec![None; other.len()];
+        self.append_rec(other, root, &mut map, &mut existing)
+    }
+
+    fn append_rec(
+        &mut self,
+        other: &RecExpr,
+        id: Id,
+        map: &mut Vec<Option<Id>>,
+        existing: &mut std::collections::HashMap<Node, Id>,
+    ) -> Id {
+        if let Some(done) = map[id.index()] {
+            return done;
+        }
+        let node = other.node(id);
+        let children: Vec<Id> = node
+            .children
+            .iter()
+            .map(|&c| self.append_rec(other, c, map, existing))
+            .collect();
+        let candidate = Node::new(node.op.clone(), children);
+        let new_id = if let Some(&found) = existing.get(&candidate) {
+            found
+        } else {
+            let id = self.add(candidate.clone());
+            existing.insert(candidate, id);
+            id
+        };
+        map[id.index()] = Some(new_id);
+        new_id
+    }
+
+    /// Count of nodes with `pred` true.
+    pub fn count(&self, pred: impl Fn(&Op) -> bool) -> usize {
+        self.nodes.iter().filter(|n| pred(&n.op)).count()
+    }
+
+    /// Per-slot free schedule variables: `free()[i]` is the set of loop
+    /// variables slot `i` depends on. A slot with an empty set is
+    /// *loop-invariant*: it computes the same value on every iteration of
+    /// every enclosing schedule, so the evaluator memoizes it and the cost
+    /// model/simulator treat it as materialized once (hoisted) rather than
+    /// recomputed per iteration.
+    pub fn free_lvars(&self) -> Vec<Vec<Symbol>> {
+        let mut free: Vec<Vec<Symbol>> = Vec::with_capacity(self.len());
+        for node in &self.nodes {
+            let mut f: Vec<Symbol> = match &node.op {
+                Op::LVar(s) => vec![*s],
+                _ => vec![],
+            };
+            for &c in &node.children {
+                for s in &free[c.index()] {
+                    if !f.contains(s) {
+                        f.push(*s);
+                    }
+                }
+            }
+            // A schedule binds its variable: it is no longer free above.
+            if let Op::SchedLoop { var, .. }
+            | Op::SchedPar { var, .. }
+            | Op::SchedReduce { var, .. } = &node.op
+            {
+                f.retain(|s| s != var);
+            }
+            f.sort();
+            free.push(f);
+        }
+        free
+    }
+
+    /// The distinct engine declarations appearing in this design.
+    pub fn engines(&self) -> Vec<Op> {
+        let mut v: Vec<Op> = Vec::new();
+        for n in &self.nodes {
+            if n.op.is_engine() && !v.contains(&n.op) {
+                v.push(n.op.clone());
+            }
+        }
+        v
+    }
+}
+
+impl fmt::Display for RecExpr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.nodes.is_empty() {
+            return write!(f, "()");
+        }
+        write!(f, "{}", super::print::to_sexpr(self, self.root()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Shape, Symbol};
+
+    fn relu128() -> RecExpr {
+        let mut e = RecExpr::new();
+        let x = e.add_leaf(Op::Input(Symbol::new("x"), Shape::new(&[128])));
+        let eng = e.add_leaf(Op::ReluEngine { w: 128 });
+        e.add_op(Op::InvokeRelu, &[eng, x]);
+        e
+    }
+
+    #[test]
+    fn build_and_typecheck() {
+        let e = relu128();
+        assert_eq!(e.typecheck().unwrap(), Ty::Tensor(Shape::new(&[128])));
+    }
+
+    #[test]
+    fn root_is_last() {
+        let e = relu128();
+        assert_eq!(e.node(e.root()).op, Op::InvokeRelu);
+    }
+
+    #[test]
+    fn append_subtree_dedups() {
+        let src = relu128();
+        let mut dst = RecExpr::new();
+        let a = dst.append_subtree(&src, src.root());
+        let b = dst.append_subtree(&src, src.root());
+        assert_eq!(dst.node(a), dst.node(b));
+    }
+
+    #[test]
+    fn engines_deduplicated() {
+        let mut e = RecExpr::new();
+        let x = e.add_leaf(Op::Input(Symbol::new("x"), Shape::new(&[4])));
+        let eng = e.add_leaf(Op::ReluEngine { w: 4 });
+        let r1 = e.add_op(Op::InvokeRelu, &[eng, x]);
+        let eng2 = e.add_leaf(Op::ReluEngine { w: 4 });
+        let _r2 = e.add_op(Op::InvokeRelu, &[eng2, r1]);
+        assert_eq!(e.engines().len(), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn add_rejects_forward_refs() {
+        let mut e = RecExpr::new();
+        e.add(Node::new(Op::Relu, vec![Id::from_index(3)]));
+    }
+}

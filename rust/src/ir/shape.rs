@@ -1,0 +1,504 @@
+//! Shapes and the EngineIR type system.
+//!
+//! Every e-class carries a [`Ty`] computed by the e-graph's analysis: an
+//! integer index expression, a tensor of static shape, or a hardware engine
+//! signature. Rewrites are *shape-preserving by construction*, and the
+//! analysis double-checks this: a [`TypeError`] on `union` indicates a
+//! broken rewrite (this is exercised heavily by the differential tests).
+
+use super::op::Op;
+use std::fmt;
+
+/// A static tensor shape (row-major, element type f32 throughout).
+#[derive(Clone, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+pub struct Shape(pub Vec<usize>);
+
+impl Shape {
+    pub fn new(dims: &[usize]) -> Self {
+        Shape(dims.to_vec())
+    }
+
+    /// Number of dimensions.
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+
+    /// Total element count.
+    pub fn numel(&self) -> usize {
+        self.0.iter().product()
+    }
+
+    /// Size along `axis`.
+    pub fn dim(&self, axis: usize) -> usize {
+        self.0[axis]
+    }
+
+    /// Copy with `axis` set to `len`.
+    pub fn with_dim(&self, axis: usize, len: usize) -> Shape {
+        let mut d = self.0.clone();
+        d[axis] = len;
+        Shape(d)
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[")?;
+        for (i, d) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{d}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// Signature of a hardware engine declaration: the op itself (parameters are
+/// data on the op, so the op *is* the signature).
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+pub struct EngineSig(pub Op);
+
+/// The type of an EngineIR e-class.
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+pub enum Ty {
+    /// Integer index expression (slice starts, loop arithmetic).
+    Index,
+    /// Tensor with static shape.
+    Tensor(Shape),
+    /// Hardware engine declaration.
+    Engine(EngineSig),
+}
+
+impl Ty {
+    /// Shape if this is a tensor type.
+    pub fn shape(&self) -> Option<&Shape> {
+        match self {
+            Ty::Tensor(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Engine op if this is an engine type.
+    pub fn engine(&self) -> Option<&Op> {
+        match self {
+            Ty::Engine(EngineSig(op)) => Some(op),
+            _ => None,
+        }
+    }
+}
+
+/// A shape/type inference failure.
+#[derive(Debug, Clone, thiserror::Error)]
+pub enum TypeError {
+    #[error("op {op} expected {expected} children, got {got}")]
+    Arity { op: String, expected: usize, got: usize },
+    #[error("op {op}: child {child} has type {got:?}, expected {expected}")]
+    Child { op: String, child: usize, got: Ty, expected: String },
+    #[error("op {op}: shape mismatch: {msg}")]
+    Shape { op: String, msg: String },
+    #[error("union merged incompatible types {a:?} and {b:?}")]
+    Merge { a: Ty, b: Ty },
+}
+
+fn tensor<'a>(op: &Op, i: usize, tys: &[&'a Ty]) -> Result<&'a Shape, TypeError> {
+    tys[i].shape().ok_or_else(|| TypeError::Child {
+        op: op.to_string(),
+        child: i,
+        got: tys[i].clone(),
+        expected: "tensor".into(),
+    })
+}
+
+fn index(op: &Op, i: usize, tys: &[&Ty]) -> Result<(), TypeError> {
+    if matches!(tys[i], &Ty::Index) {
+        Ok(())
+    } else {
+        Err(TypeError::Child {
+            op: op.to_string(),
+            child: i,
+            got: tys[i].clone(),
+            expected: "index".into(),
+        })
+    }
+}
+
+fn engine<'a>(op: &Op, i: usize, tys: &[&'a Ty]) -> Result<&'a Op, TypeError> {
+    tys[i].engine().ok_or_else(|| TypeError::Child {
+        op: op.to_string(),
+        child: i,
+        got: tys[i].clone(),
+        expected: "engine".into(),
+    })
+}
+
+fn shape_err(op: &Op, msg: impl Into<String>) -> TypeError {
+    TypeError::Shape { op: op.to_string(), msg: msg.into() }
+}
+
+/// Output tile side for a valid (pre-padded) convolution/pool window sweep.
+pub fn out_dim(i: usize, k: usize, stride: usize) -> Option<usize> {
+    if i < k {
+        return None;
+    }
+    if (i - k) % stride != 0 {
+        return None;
+    }
+    Some((i - k) / stride + 1)
+}
+
+/// Input tile side needed to produce `o` outputs with window `k`, `stride`.
+pub fn in_dim(o: usize, k: usize, stride: usize) -> usize {
+    (o - 1) * stride + k
+}
+
+/// Infer the type of `op` given its children's types. This is the single
+/// source of truth for EngineIR's static semantics.
+pub fn infer(op: &Op, tys: &[Ty]) -> Result<Ty, TypeError> {
+    let refs: Vec<&Ty> = tys.iter().collect();
+    infer_ref(op, &refs)
+}
+
+/// By-reference variant of [`infer`] — the e-graph hot path uses this to
+/// avoid cloning child types (shapes allocate) on every node insertion.
+pub fn infer_ref(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
+    if let Some(a) = op.arity() {
+        if tys.len() != a {
+            return Err(TypeError::Arity { op: op.to_string(), expected: a, got: tys.len() });
+        }
+    }
+    match op {
+        Op::Int(_) | Op::LVar(_) => Ok(Ty::Index),
+        Op::IMul | Op::IAdd => {
+            index(op, 0, tys)?;
+            index(op, 1, tys)?;
+            Ok(Ty::Index)
+        }
+        Op::Input(_, sh) | Op::Weight(_, sh) => Ok(Ty::Tensor(sh.clone())),
+
+        // ---- Relay level ----
+        Op::Conv2d { stride, pad } => {
+            let x = tensor(op, 0, tys)?;
+            let w = tensor(op, 1, tys)?;
+            if x.rank() != 3 || w.rank() != 4 {
+                return Err(shape_err(op, format!("want x rank 3, w rank 4; got {x} {w}")));
+            }
+            let (c, h, wd) = (x.dim(0), x.dim(1), x.dim(2));
+            let (kout, cin, kh, kw) = (w.dim(0), w.dim(1), w.dim(2), w.dim(3));
+            if cin != c || kh != kw {
+                return Err(shape_err(op, format!("channels/kernel mismatch: x{x} w{w}")));
+            }
+            let oh = out_dim(h + 2 * pad, kh, *stride)
+                .ok_or_else(|| shape_err(op, "H does not tile"))?;
+            let ow = out_dim(wd + 2 * pad, kw, *stride)
+                .ok_or_else(|| shape_err(op, "W does not tile"))?;
+            Ok(Ty::Tensor(Shape::new(&[kout, oh, ow])))
+        }
+        Op::Dense => {
+            let x = tensor(op, 0, tys)?;
+            let w = tensor(op, 1, tys)?;
+            if x.rank() != 2 || w.rank() != 2 || x.dim(1) != w.dim(0) {
+                return Err(shape_err(op, format!("dense shapes x{x} w{w}")));
+            }
+            Ok(Ty::Tensor(Shape::new(&[x.dim(0), w.dim(1)])))
+        }
+        Op::Relu => Ok(Ty::Tensor(tensor(op, 0, tys)?.clone())),
+        Op::BiasAdd => {
+            let x = tensor(op, 0, tys)?;
+            let b = tensor(op, 1, tys)?;
+            if b.rank() != 1 {
+                return Err(shape_err(op, format!("bias must be rank 1, got {b}")));
+            }
+            let want = match x.rank() {
+                3 => x.dim(0),
+                2 => x.dim(1),
+                _ => return Err(shape_err(op, format!("bias-add on rank {}", x.rank()))),
+            };
+            if b.dim(0) != want {
+                return Err(shape_err(op, format!("bias {b} vs x {x}")));
+            }
+            Ok(Ty::Tensor(x.clone()))
+        }
+        Op::EAdd => {
+            let x = tensor(op, 0, tys)?;
+            let y = tensor(op, 1, tys)?;
+            if x != y {
+                return Err(shape_err(op, format!("eadd {x} vs {y}")));
+            }
+            Ok(Ty::Tensor(x.clone()))
+        }
+        Op::MaxPool2d { k, stride } => {
+            let x = tensor(op, 0, tys)?;
+            if x.rank() != 3 {
+                return Err(shape_err(op, format!("maxpool on {x}")));
+            }
+            let oh =
+                out_dim(x.dim(1), *k, *stride).ok_or_else(|| shape_err(op, "H does not tile"))?;
+            let ow =
+                out_dim(x.dim(2), *k, *stride).ok_or_else(|| shape_err(op, "W does not tile"))?;
+            Ok(Ty::Tensor(Shape::new(&[x.dim(0), oh, ow])))
+        }
+        Op::Flatten => {
+            let x = tensor(op, 0, tys)?;
+            Ok(Ty::Tensor(Shape::new(&[1, x.numel()])))
+        }
+        Op::GlobalAvgPool => {
+            let x = tensor(op, 0, tys)?;
+            if x.rank() != 3 {
+                return Err(shape_err(op, format!("gap on {x}")));
+            }
+            Ok(Ty::Tensor(Shape::new(&[x.dim(0)])))
+        }
+
+        // ---- engines ----
+        Op::MmEngine { .. }
+        | Op::MmReluEngine { .. }
+        | Op::ReluEngine { .. }
+        | Op::AddEngine { .. }
+        | Op::ConvEngine { .. }
+        | Op::PoolEngine { .. } => Ok(Ty::Engine(EngineSig(op.clone()))),
+
+        // ---- invocations ----
+        Op::InvokeMm | Op::InvokeMmRelu => {
+            let e = engine(op, 0, tys)?;
+            let (m, k, n) = match (op, e) {
+                (Op::InvokeMm, Op::MmEngine { m, k, n }) => (*m, *k, *n),
+                (Op::InvokeMmRelu, Op::MmReluEngine { m, k, n }) => (*m, *k, *n),
+                _ => return Err(shape_err(op, format!("wrong engine {e}"))),
+            };
+            let a = tensor(op, 1, tys)?;
+            let b = tensor(op, 2, tys)?;
+            if a != &Shape::new(&[m, k]) || b != &Shape::new(&[k, n]) {
+                return Err(shape_err(op, format!("mm({m},{k},{n}) got a{a} b{b}")));
+            }
+            Ok(Ty::Tensor(Shape::new(&[m, n])))
+        }
+        Op::InvokeRelu => {
+            let e = engine(op, 0, tys)?;
+            let w = match e {
+                Op::ReluEngine { w } => *w,
+                _ => return Err(shape_err(op, format!("wrong engine {e}"))),
+            };
+            let x = tensor(op, 1, tys)?;
+            if x != &Shape::new(&[w]) {
+                return Err(shape_err(op, format!("relu({w}) got {x}")));
+            }
+            Ok(Ty::Tensor(x.clone()))
+        }
+        Op::InvokeAdd => {
+            let e = engine(op, 0, tys)?;
+            let w = match e {
+                Op::AddEngine { w } => *w,
+                _ => return Err(shape_err(op, format!("wrong engine {e}"))),
+            };
+            let x = tensor(op, 1, tys)?;
+            let y = tensor(op, 2, tys)?;
+            if x != &Shape::new(&[w]) || y != &Shape::new(&[w]) {
+                return Err(shape_err(op, format!("add({w}) got {x} {y}")));
+            }
+            Ok(Ty::Tensor(x.clone()))
+        }
+        Op::InvokeConv => {
+            let e = engine(op, 0, tys)?;
+            let (oh, ow, c, k, kh, stride) = match e {
+                Op::ConvEngine { oh, ow, c, k, kh, stride } => (*oh, *ow, *c, *k, *kh, *stride),
+                _ => return Err(shape_err(op, format!("wrong engine {e}"))),
+            };
+            let x = tensor(op, 1, tys)?;
+            let w = tensor(op, 2, tys)?;
+            let want_x = Shape::new(&[c, in_dim(oh, kh, stride), in_dim(ow, kh, stride)]);
+            let want_w = Shape::new(&[k, c, kh, kh]);
+            if x != &want_x || w != &want_w {
+                return Err(shape_err(
+                    op,
+                    format!("conv engine wants x{want_x} w{want_w}; got x{x} w{w}"),
+                ));
+            }
+            Ok(Ty::Tensor(Shape::new(&[k, oh, ow])))
+        }
+        Op::InvokePool => {
+            let e = engine(op, 0, tys)?;
+            let (oh, ow, c, k, stride) = match e {
+                Op::PoolEngine { oh, ow, c, k, stride } => (*oh, *ow, *c, *k, *stride),
+                _ => return Err(shape_err(op, format!("wrong engine {e}"))),
+            };
+            let x = tensor(op, 1, tys)?;
+            let want = Shape::new(&[c, in_dim(oh, k, stride), in_dim(ow, k, stride)]);
+            if x != &want {
+                return Err(shape_err(op, format!("pool engine wants {want}; got {x}")));
+            }
+            Ok(Ty::Tensor(Shape::new(&[c, oh, ow])))
+        }
+
+        // ---- schedules ----
+        Op::SchedLoop { axis, extent, .. } | Op::SchedPar { axis, extent, .. } => {
+            let b = tensor(op, 0, tys)?;
+            if *axis >= b.rank() {
+                return Err(shape_err(op, format!("axis {axis} out of range for {b}")));
+            }
+            Ok(Ty::Tensor(b.with_dim(*axis, b.dim(*axis) * extent)))
+        }
+        Op::SchedReduce { .. } => Ok(Ty::Tensor(tensor(op, 0, tys)?.clone())),
+
+        // ---- data movement / storage ----
+        Op::SliceAx { axis, len } => {
+            index(op, 0, tys)?;
+            let x = tensor(op, 1, tys)?;
+            if *axis >= x.rank() || *len > x.dim(*axis) {
+                return Err(shape_err(op, format!("slice a{axis} l{len} of {x}")));
+            }
+            Ok(Ty::Tensor(x.with_dim(*axis, *len)))
+        }
+        Op::Reshape(sh) => {
+            let x = tensor(op, 0, tys)?;
+            if x.numel() != sh.numel() {
+                return Err(shape_err(op, format!("reshape {x} -> {sh}")));
+            }
+            Ok(Ty::Tensor(sh.clone()))
+        }
+        Op::Bcast(sh) => {
+            let b = tensor(op, 0, tys)?;
+            if b.rank() != 1 {
+                return Err(shape_err(op, format!("bcast of rank {}", b.rank())));
+            }
+            let ok = match sh.rank() {
+                3 => sh.dim(0) == b.dim(0),
+                2 => sh.dim(1) == b.dim(0),
+                1 => sh.dim(0) == b.dim(0),
+                _ => false,
+            };
+            if !ok {
+                return Err(shape_err(op, format!("bcast {b} -> {sh}")));
+            }
+            Ok(Ty::Tensor(sh.clone()))
+        }
+        Op::Pad2d { pad } => {
+            let x = tensor(op, 0, tys)?;
+            if x.rank() != 3 {
+                return Err(shape_err(op, format!("pad2d on {x}")));
+            }
+            Ok(Ty::Tensor(Shape::new(&[x.dim(0), x.dim(1) + 2 * pad, x.dim(2) + 2 * pad])))
+        }
+        Op::Im2Col { kh, stride } => {
+            let x = tensor(op, 0, tys)?;
+            if x.rank() != 3 {
+                return Err(shape_err(op, format!("im2col on {x}")));
+            }
+            let oh = out_dim(x.dim(1), *kh, *stride)
+                .ok_or_else(|| shape_err(op, "H does not tile"))?;
+            let ow = out_dim(x.dim(2), *kh, *stride)
+                .ok_or_else(|| shape_err(op, "W does not tile"))?;
+            Ok(Ty::Tensor(Shape::new(&[x.dim(0) * kh * kh, oh * ow])))
+        }
+        Op::Buffer { .. } | Op::DblBuffer { .. } => Ok(Ty::Tensor(tensor(op, 0, tys)?.clone())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Symbol;
+
+    fn t(dims: &[usize]) -> Ty {
+        Ty::Tensor(Shape::new(dims))
+    }
+
+    #[test]
+    fn conv2d_shape() {
+        let ty = infer(
+            &Op::Conv2d { stride: 1, pad: 1 },
+            &[t(&[3, 32, 32]), t(&[8, 3, 3, 3])],
+        )
+        .unwrap();
+        assert_eq!(ty, t(&[8, 32, 32]));
+    }
+
+    #[test]
+    fn conv2d_stride2() {
+        let ty = infer(
+            &Op::Conv2d { stride: 2, pad: 0 },
+            &[t(&[3, 33, 33]), t(&[8, 3, 3, 3])],
+        )
+        .unwrap();
+        assert_eq!(ty, t(&[8, 16, 16]));
+    }
+
+    #[test]
+    fn conv2d_rejects_channel_mismatch() {
+        assert!(infer(
+            &Op::Conv2d { stride: 1, pad: 0 },
+            &[t(&[4, 8, 8]), t(&[8, 3, 3, 3])]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn dense_shape() {
+        assert_eq!(infer(&Op::Dense, &[t(&[1, 784]), t(&[784, 128])]).unwrap(), t(&[1, 128]));
+        assert!(infer(&Op::Dense, &[t(&[1, 784]), t(&[783, 128])]).is_err());
+    }
+
+    #[test]
+    fn invoke_mm_checks_engine_params() {
+        let e = Ty::Engine(EngineSig(Op::MmEngine { m: 4, k: 8, n: 2 }));
+        assert_eq!(
+            infer(&Op::InvokeMm, &[e.clone(), t(&[4, 8]), t(&[8, 2])]).unwrap(),
+            t(&[4, 2])
+        );
+        assert!(infer(&Op::InvokeMm, &[e, t(&[4, 8]), t(&[8, 3])]).is_err());
+    }
+
+    #[test]
+    fn invoke_conv_halo_shape() {
+        // 2x4 output tile, 3x3 kernel, stride 1 -> needs (2-1)+3 = 4 rows in.
+        let e = Ty::Engine(EngineSig(Op::ConvEngine {
+            oh: 2,
+            ow: 4,
+            c: 3,
+            k: 8,
+            kh: 3,
+            stride: 1,
+        }));
+        let ty = infer(&Op::InvokeConv, &[e, t(&[3, 4, 6]), t(&[8, 3, 3, 3])]).unwrap();
+        assert_eq!(ty, t(&[8, 2, 4]));
+    }
+
+    #[test]
+    fn sched_loop_multiplies_axis() {
+        let v = Symbol::new("i");
+        let ty =
+            infer(&Op::SchedLoop { var: v, axis: 1, extent: 4 }, &[t(&[8, 2, 4])]).unwrap();
+        assert_eq!(ty, t(&[8, 8, 4]));
+    }
+
+    #[test]
+    fn slice_keeps_static_shape_with_dynamic_start() {
+        let ty = infer(&Op::SliceAx { axis: 1, len: 16 }, &[Ty::Index, t(&[3, 32, 32])]).unwrap();
+        assert_eq!(ty, t(&[3, 16, 32]));
+    }
+
+    #[test]
+    fn reshape_checks_numel() {
+        assert!(infer(&Op::Reshape(Shape::new(&[2, 8])), &[t(&[4, 4])]).is_ok());
+        assert!(infer(&Op::Reshape(Shape::new(&[2, 9])), &[t(&[4, 4])]).is_err());
+    }
+
+    #[test]
+    fn im2col_shape() {
+        // (3,32,32) with 3x3 stride 1 -> (27, 900)
+        let ty = infer(&Op::Im2Col { kh: 3, stride: 1 }, &[t(&[3, 32, 32])]).unwrap();
+        assert_eq!(ty, t(&[27, 900]));
+    }
+
+    #[test]
+    fn out_in_dims_roundtrip() {
+        for stride in 1..4 {
+            for k in 1..5 {
+                for o in 1..10 {
+                    let i = in_dim(o, k, stride);
+                    assert_eq!(out_dim(i, k, stride), Some(o));
+                }
+            }
+        }
+    }
+}

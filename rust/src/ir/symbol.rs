@@ -1,0 +1,102 @@
+//! Interned strings. `Symbol` is a 4-byte handle into a global intern table;
+//! equality/hashing are O(1), which matters because symbols appear in every
+//! hashconsed e-node (loop variables, tensor names, buffer kinds).
+
+use once_cell::sync::Lazy;
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Mutex;
+
+struct Interner {
+    names: Vec<&'static str>,
+    ids: HashMap<&'static str, u32>,
+}
+
+static INTERNER: Lazy<Mutex<Interner>> = Lazy::new(|| {
+    Mutex::new(Interner { names: Vec::new(), ids: HashMap::new() })
+});
+
+/// Monotonic counter backing [`Symbol::fresh`]. Fresh names are how rewrite
+/// appliers introduce loop variables without capture: every generated
+/// schedule binds a globally unique variable.
+static FRESH: AtomicU32 = AtomicU32::new(0);
+
+/// An interned string.
+#[derive(Copy, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Symbol(u32);
+
+impl Symbol {
+    /// Intern `s`, returning its handle. Idempotent.
+    pub fn new(s: &str) -> Self {
+        let mut t = INTERNER.lock().unwrap();
+        if let Some(&id) = t.ids.get(s) {
+            return Symbol(id);
+        }
+        let leaked: &'static str = Box::leak(s.to_owned().into_boxed_str());
+        let id = t.names.len() as u32;
+        t.names.push(leaked);
+        t.ids.insert(leaked, id);
+        Symbol(id)
+    }
+
+    /// A globally-fresh symbol `<prefix><n>`; used for schedule loop
+    /// variables introduced by rewrites (capture-free by construction).
+    pub fn fresh(prefix: &str) -> Self {
+        let n = FRESH.fetch_add(1, Ordering::Relaxed);
+        Symbol::new(&format!("{prefix}{n}"))
+    }
+
+    /// The interned string.
+    pub fn as_str(&self) -> &'static str {
+        INTERNER.lock().unwrap().names[self.0 as usize]
+    }
+}
+
+impl fmt::Display for Symbol {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl fmt::Debug for Symbol {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.as_str())
+    }
+}
+
+impl From<&str> for Symbol {
+    fn from(s: &str) -> Self {
+        Symbol::new(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intern_is_idempotent() {
+        assert_eq!(Symbol::new("x"), Symbol::new("x"));
+        assert_ne!(Symbol::new("x"), Symbol::new("y"));
+    }
+
+    #[test]
+    fn roundtrips_text() {
+        assert_eq!(Symbol::new("conv1_weight").as_str(), "conv1_weight");
+    }
+
+    #[test]
+    fn fresh_symbols_are_distinct() {
+        let a = Symbol::fresh("i");
+        let b = Symbol::fresh("i");
+        assert_ne!(a, b);
+        assert!(a.as_str().starts_with('i'));
+    }
+
+    #[test]
+    fn display_matches_str() {
+        let s = Symbol::new("hello");
+        assert_eq!(format!("{s}"), "hello");
+    }
+}

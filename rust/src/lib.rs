@@ -1,0 +1,49 @@
+//! # hwsplit — Enumerating Hardware–Software Splits with Program Rewriting
+//!
+//! A reproduction of Smith, Tatlock & Ceze (UW, 2020): machine-learning
+//! inference workloads are lowered from a Relay-like operator IR into
+//! **EngineIR**, a language that reifies the three components of an
+//! accelerated workload — fixed-size *hardware engines*, *software
+//! schedules* (loops / parallelism), and *storage buffers* — and the space
+//! of functionally-equivalent hardware–software designs is enumerated by
+//! running semantics-preserving rewrites over an e-graph.
+//!
+//! ## Crate layout
+//!
+//! | module | role |
+//! |---|---|
+//! | [`ir`] | EngineIR term language: ops, `RecExpr`, parser, printer, shapes |
+//! | [`egraph`] | from-scratch e-graph: union-find, hashcons, congruence closure, e-matching, rewrite runner |
+//! | [`relay`] | Relay-like frontend operator graphs + workload library |
+//! | [`lower`] | Relay → EngineIR reification (paper Fig. 1) |
+//! | [`rewrites`] | the split-altering rewrite library (paper Fig. 2 + extensions) |
+//! | [`tensor`] | pure-Rust tensor math + EngineIR evaluator (semantics oracle) |
+//! | [`cost`] | analytic area / latency / energy models over designs |
+//! | [`extract`] | greedy, cost-directed and Pareto design extraction |
+//! | [`sim`] | cycle-approximate accelerator simulator (usefulness oracle) |
+//! | [`runtime`] | PJRT executor for AOT-compiled Pallas engine kernels |
+//! | [`coordinator`] | threaded design-space-exploration driver |
+//! | [`prop`] | tiny property-testing helpers (PRNG + runners) |
+//! | [`report`] | table / CSV emitters shared by benches |
+
+pub mod bench_util;
+pub mod coordinator;
+pub mod cost;
+pub mod egraph;
+pub mod extract;
+pub mod ir;
+pub mod lower;
+pub mod prop;
+pub mod relay;
+pub mod report;
+pub mod rewrites;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+
+/// Convenient re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::egraph::{EGraph, Id, Runner};
+    pub use crate::ir::{Op, RecExpr, Symbol};
+    pub use crate::rewrites;
+}

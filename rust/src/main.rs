@@ -1,0 +1,278 @@
+//! `hwsplit` CLI: the leader entrypoint for enumeration, exploration,
+//! simulation and PJRT execution.
+//!
+//! ```text
+//! hwsplit workloads
+//! hwsplit lower     --workload convblock
+//! hwsplit fig2
+//! hwsplit enumerate --workload mlp --iters 8 --rules paper
+//! hwsplit explore   --workload lenet --samples 64 --iters 6 [--csv dir]
+//! hwsplit simulate  --workload mlp [--seed 3]
+//! hwsplit run       --workload mlp [--design split] [--artifacts DIR]
+//! ```
+
+use hwsplit::coordinator::{explore, ExploreConfig, RuleSet};
+use hwsplit::egraph::{Runner, RunnerLimits};
+use hwsplit::extract::{sample_design, Extractor};
+use hwsplit::ir::{parse_expr, print::pretty, RecExpr};
+use hwsplit::lower::lower_default;
+use hwsplit::relay::{all_workloads, workload_by_name};
+use hwsplit::report::{fmt_f64, Table};
+use hwsplit::rewrites;
+use hwsplit::runtime::{EngineRuntime, PjrtBackend};
+use hwsplit::sim::{simulate, SimConfig};
+use hwsplit::tensor::{eval_expr, eval_expr_backend, Env};
+use std::time::Instant;
+
+/// Minimal flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                let val = argv.get(i + 1).cloned().unwrap_or_default();
+                flags.insert(key.to_string(), val);
+                i += 2;
+            } else {
+                i += 1;
+            }
+        }
+        Args { flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn workload_or_die(args: &Args) -> hwsplit::relay::Workload {
+    let name = args.get("workload").unwrap_or("relu128");
+    workload_by_name(name).unwrap_or_else(|| {
+        eprintln!("unknown workload '{name}' — try `hwsplit workloads`");
+        std::process::exit(2);
+    })
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(String::as_str).unwrap_or("help");
+    let args = Args::parse(&argv[1.min(argv.len())..]);
+    match cmd {
+        "workloads" => cmd_workloads(),
+        "lower" => cmd_lower(&args),
+        "fig2" => cmd_fig2(),
+        "enumerate" => cmd_enumerate(&args),
+        "explore" => cmd_explore(&args),
+        "simulate" => cmd_simulate(&args),
+        "run" => cmd_run(&args),
+        _ => {
+            println!("{}", include_str!("usage.txt"));
+        }
+    }
+}
+
+fn cmd_workloads() {
+    let mut t = Table::new("workloads", &["name", "ops", "description"]);
+    for w in all_workloads() {
+        t.row(&[w.name.into(), w.expr.len().to_string(), w.description.into()]);
+    }
+    print!("{}", t.render());
+}
+
+fn cmd_lower(args: &Args) {
+    let w = workload_or_die(args);
+    println!("-- Relay-level operator graph ({}):\n", w.name);
+    println!("{}", pretty(&w.expr));
+    let lo = lower_default(&w.expr);
+    println!("-- EngineIR after reification (paper Fig. 1):\n");
+    println!("{}", pretty(&lo));
+    let engines = lo.engines();
+    println!("-- {} engine declarations:", engines.len());
+    for e in engines {
+        println!("   {e}");
+    }
+}
+
+/// The paper's Fig. 2, replayed exactly: one 128-wide ReLU, rewrite 1
+/// (shrink engine + loop), rewrite 2 (parallelize loop).
+fn cmd_fig2() {
+    let expr = parse_expr("(invoke-relu (relu-engine 128) (input x [128]))").unwrap();
+    println!("initial program (one 128-wide ReLU engine):\n  {expr}\n");
+
+    let mut runner = Runner::new(expr, rewrites::fig2_rules());
+    let report = runner.run(8);
+    println!("{}", report.table());
+
+    println!("representative members of the root e-class:");
+    let eg = &runner.egraph;
+    for (i, seed) in [0u64, 2, 5, 9].iter().enumerate() {
+        let d = sample_design(eg, runner.root, *seed);
+        println!("  [{}] {}", i, d);
+    }
+    let best = Extractor::new(eg, hwsplit::extract::latency_cost).extract(eg, runner.root);
+    println!("\nlatency-greedy extraction:\n  {best}");
+}
+
+fn cmd_enumerate(args: &Args) {
+    let w = workload_or_die(args);
+    let rules = RuleSet::parse(args.get("rules").unwrap_or("paper")).unwrap_or(RuleSet::Paper);
+    let iters = args.usize("iters", 8);
+    let max_nodes = args.usize("max-nodes", 200_000);
+    let lo = lower_default(&w.expr);
+    println!("workload {} lowered to {} EngineIR nodes", w.name, lo.len());
+    let mut runner = Runner::new(lo, rules.rules())
+        .with_limits(RunnerLimits { max_nodes, ..Default::default() });
+    let t0 = Instant::now();
+    let report = runner.run(iters);
+    println!("{}", report.table());
+    println!(
+        "designs(lower bound) = {} in {:.2?}",
+        fmt_f64(report.designs_lower_bound),
+        t0.elapsed()
+    );
+}
+
+fn cmd_explore(args: &Args) {
+    let w = workload_or_die(args);
+    let cfg = ExploreConfig {
+        iters: args.usize("iters", 6),
+        samples: args.usize("samples", 64),
+        workers: args.usize("workers", ExploreConfig::default().workers),
+        rules: RuleSet::parse(args.get("rules").unwrap_or("paper")).unwrap_or(RuleSet::Paper),
+        limits: RunnerLimits {
+            max_nodes: args.usize("max-nodes", 100_000),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let ex = explore(&w, &cfg);
+    println!("{}", ex.report.table());
+
+    let mut t = Table::new(
+        &format!("sampled designs for {}", w.name),
+        &["origin", "area", "latency", "sim-cycles", "util%", "engines", "depth", "pars"],
+    );
+    for d in &ex.designs {
+        t.row(&[
+            d.point.origin.clone(),
+            fmt_f64(d.point.cost.area),
+            fmt_f64(d.point.cost.latency),
+            fmt_f64(d.sim.cycles),
+            format!("{:.0}", d.sim.utilization * 100.0),
+            d.point.stats.engines.to_string(),
+            d.point.stats.sched_depth.to_string(),
+            d.point.stats.pars.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+
+    let mut f = Table::new("Pareto frontier (area vs latency)", &["origin", "area", "latency"]);
+    for p in &ex.frontier {
+        f.row(&[p.origin.clone(), fmt_f64(p.cost.area), fmt_f64(p.cost.latency)]);
+    }
+    print!("{}", f.render());
+    println!("{}", ex.frontier_vs_baseline());
+    println!("explored in {:.2?}", t0.elapsed());
+
+    if let Some(dir) = args.get("csv") {
+        t.write_csv(format!("{dir}/{}_designs.csv", w.name)).expect("write csv");
+        f.write_csv(format!("{dir}/{}_frontier.csv", w.name)).expect("write csv");
+        println!("wrote CSVs to {dir}/");
+    }
+}
+
+fn cmd_simulate(args: &Args) {
+    let w = workload_or_die(args);
+    let lo = lower_default(&w.expr);
+    let seed = args.usize("seed", 0);
+    let design = if args.get("seed").is_some() {
+        let mut runner = Runner::new(lo.clone(), rewrites::paper_rules());
+        runner.run(args.usize("iters", 5));
+        sample_design(&runner.egraph, runner.root, seed as u64)
+    } else {
+        lo
+    };
+    println!("design:\n{}", pretty(&design));
+    let rep = simulate(&design, &SimConfig::default());
+    println!("sim: {}", rep.line());
+    let mut t = Table::new("engine activity", &["engine", "instances", "busy-cycles"]);
+    for (op, busy) in &rep.engine_busy {
+        t.row(&[
+            op.to_string(),
+            rep.engine_instances.get(op).copied().unwrap_or(0).to_string(),
+            fmt_f64(*busy),
+        ]);
+    }
+    print!("{}", t.render());
+}
+
+/// End-to-end: execute a design for the workload with engine invocations on
+/// PJRT-compiled Pallas kernels, validating against the Rust oracle.
+fn cmd_run(args: &Args) {
+    let w = workload_or_die(args);
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(hwsplit::runtime::default_artifact_dir);
+    let rt = EngineRuntime::new(&dir).unwrap_or_else(|e| {
+        eprintln!("{e:#}");
+        std::process::exit(2);
+    });
+    let design: RecExpr = match args.get("design").unwrap_or("initial") {
+        "initial" => lower_default(&w.expr),
+        "split" => {
+            // Enumerate, then extract a design constrained to engines with
+            // artifacts (prefer a genuinely rewritten one).
+            let lo = lower_default(&w.expr);
+            let mut runner = Runner::new(lo.clone(), rewrites::paper_rules());
+            runner.run(4);
+            hwsplit::runtime::extract_covered(&runner.egraph, runner.root, &rt, true)
+                .filter(|d| d.count(|op| op.is_sched()) > 0)
+                .or_else(|| {
+                    (0..200u64)
+                        .map(|s| sample_design(&runner.egraph, runner.root, s))
+                        .find(|c| {
+                            c.count(|op| op.is_sched()) > 0
+                                && c.engines().iter().all(|e| rt.has_engine(e))
+                        })
+                })
+                .unwrap_or(lo)
+        }
+        other => {
+            eprintln!("unknown --design '{other}' (initial|split)");
+            std::process::exit(2);
+        }
+    };
+    println!("design ({} nodes, {} engines):", design.len(), design.engines().len());
+    println!("{}", pretty(&design));
+
+    let mut env = Env::random_for(&design, 42);
+    let want = eval_expr(&design, &mut env.clone()).expect("oracle eval");
+    let mut backend = PjrtBackend::new(rt);
+    let t0 = Instant::now();
+    let got = eval_expr_backend(&design, &mut env, &mut backend).unwrap_or_else(|e| {
+        eprintln!("PJRT execution failed: {e}");
+        std::process::exit(1);
+    });
+    let dt = t0.elapsed();
+    let diff = got.max_abs_diff(&want).unwrap_or(f32::INFINITY);
+    println!(
+        "PJRT inference: {:.2?} ({} engine calls, {} executables compiled)",
+        dt,
+        backend.pjrt_calls,
+        backend.runtime.compiled()
+    );
+    println!("max |PJRT - oracle| = {diff:.3e}");
+    assert!(diff < 1e-3, "numerics diverged");
+    println!("OK");
+}

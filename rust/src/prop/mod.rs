@@ -1,0 +1,114 @@
+//! Minimal property-based-testing helpers (no external deps are available
+//! in this build environment, so this is a tiny, deterministic stand-in for
+//! `proptest`): a fast xorshift PRNG plus a case runner that reports the
+//! failing seed for reproduction.
+
+/// xorshift64* PRNG — deterministic, seedable, good enough for test-case
+/// generation (NOT for cryptography).
+#[derive(Debug, Clone)]
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng(seed.max(1))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in `[0, n)`.
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform in `[lo, hi]`.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform f64 in `[0,1)`.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len())]
+    }
+
+    /// A power of two in `[lo, hi]` (both must be powers of two).
+    pub fn pow2(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo.is_power_of_two() && hi.is_power_of_two());
+        let lo_bits = lo.trailing_zeros();
+        let hi_bits = hi.trailing_zeros();
+        1 << self.range(lo_bits as usize, hi_bits as usize)
+    }
+}
+
+/// Run `f` on `cases` seeded RNGs; panics with the failing seed on error so
+/// the case can be replayed with `Rng::new(seed)`.
+pub fn check(name: &str, cases: usize, mut f: impl FnMut(&mut Rng)) {
+    for case in 0..cases {
+        let seed = 0x9E37_79B9 ^ (case as u64).wrapping_mul(0x517c_c1b7_2722_0a95);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property '{name}' failed on case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_is_in_range() {
+        let mut r = Rng::new(3);
+        for _ in 0..1000 {
+            assert!(r.below(10) < 10);
+            let v = r.range(5, 9);
+            assert!((5..=9).contains(&v));
+        }
+    }
+
+    #[test]
+    fn pow2_yields_powers() {
+        let mut r = Rng::new(4);
+        for _ in 0..100 {
+            let v = r.pow2(2, 64);
+            assert!(v.is_power_of_two() && (2..=64).contains(&v));
+        }
+    }
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut n = 0;
+        check("counts", 17, |_| n += 1);
+        assert_eq!(n, 17);
+    }
+
+    #[test]
+    #[should_panic]
+    fn check_propagates_failure() {
+        check("fails", 5, |rng| assert!(rng.below(10) > 100));
+    }
+}

@@ -1,0 +1,178 @@
+//! The Relay-like frontend.
+//!
+//! The paper starts from workloads "written in Relay, … the intermediate
+//! representation used by the TVM compiler", which it consumes purely as a
+//! graph of operator calls. This module provides exactly that surface: a
+//! typed builder for operator graphs over the Relay-level subset of
+//! [`crate::ir::Op`] (`conv2d`, `dense`, `relu`, …) plus a library of
+//! benchmark workloads ([`workloads`]).
+//!
+//! A "Relay program" here *is* an EngineIR [`RecExpr`] that happens to use
+//! only Relay-level ops — which is what lets [`crate::lower`] reify it
+//! incrementally and lets the e-graph hold half-lowered hybrids.
+
+pub mod workloads;
+
+pub use workloads::{all_workloads, workload_by_name, Workload};
+
+use crate::egraph::Id;
+use crate::ir::{Op, RecExpr, Shape, Symbol, Ty};
+
+/// A typed builder for Relay-level operator graphs. Every method checks
+/// shapes eagerly (via the EngineIR type checker), so a workload that
+/// builds is well-formed by construction.
+#[derive(Debug, Default)]
+pub struct GraphBuilder {
+    expr: RecExpr,
+}
+
+impl GraphBuilder {
+    pub fn new() -> Self {
+        GraphBuilder { expr: RecExpr::new() }
+    }
+
+    fn push(&mut self, op: Op, children: &[Id]) -> Id {
+        let id = self.expr.add_op(op, children);
+        // Eager validation: typecheck the growing prefix. O(n²) overall but
+        // workload construction is tiny and this catches authoring bugs at
+        // the exact offending layer.
+        if let Err(e) = self.expr.typecheck() {
+            panic!("GraphBuilder produced ill-typed graph: {e}");
+        }
+        id
+    }
+
+    /// Workload input tensor.
+    pub fn input(&mut self, name: &str, dims: &[usize]) -> Id {
+        self.push(Op::Input(Symbol::new(name), Shape::new(dims)), &[])
+    }
+
+    /// Trained parameter.
+    pub fn weight(&mut self, name: &str, dims: &[usize]) -> Id {
+        self.push(Op::Weight(Symbol::new(name), Shape::new(dims)), &[])
+    }
+
+    pub fn conv2d(&mut self, x: Id, w: Id, stride: usize, pad: usize) -> Id {
+        self.push(Op::Conv2d { stride, pad }, &[x, w])
+    }
+
+    pub fn dense(&mut self, x: Id, w: Id) -> Id {
+        self.push(Op::Dense, &[x, w])
+    }
+
+    pub fn relu(&mut self, x: Id) -> Id {
+        self.push(Op::Relu, &[x])
+    }
+
+    pub fn bias_add(&mut self, x: Id, b: Id) -> Id {
+        self.push(Op::BiasAdd, &[x, b])
+    }
+
+    pub fn add(&mut self, x: Id, y: Id) -> Id {
+        self.push(Op::EAdd, &[x, y])
+    }
+
+    pub fn maxpool2d(&mut self, x: Id, k: usize, stride: usize) -> Id {
+        self.push(Op::MaxPool2d { k, stride }, &[x])
+    }
+
+    pub fn flatten(&mut self, x: Id) -> Id {
+        self.push(Op::Flatten, &[x])
+    }
+
+    /// Shape of an already-built node (for layer helpers).
+    pub fn shape_of(&self, id: Id) -> Shape {
+        match self.expr.types().expect("builder keeps graphs well-typed")[id.index()].clone() {
+            Ty::Tensor(s) => s,
+            other => panic!("node {id:?} is not a tensor: {other:?}"),
+        }
+    }
+
+    // ---- compound layers -------------------------------------------------
+
+    /// `relu(conv(x) + bias)` — the standard conv block.
+    pub fn conv_relu(
+        &mut self,
+        x: Id,
+        name: &str,
+        out_ch: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Id {
+        let in_ch = self.shape_of(x).dim(0);
+        let w = self.weight(&format!("{name}_w"), &[out_ch, in_ch, k, k]);
+        let b = self.weight(&format!("{name}_b"), &[out_ch]);
+        let c = self.conv2d(x, w, stride, pad);
+        let c = self.bias_add(c, b);
+        self.relu(c)
+    }
+
+    /// `relu(x @ W + b)` (or without relu for logits).
+    pub fn dense_layer(&mut self, x: Id, name: &str, out: usize, relu: bool) -> Id {
+        let in_dim = self.shape_of(x).dim(1);
+        let w = self.weight(&format!("{name}_w"), &[in_dim, out]);
+        let b = self.weight(&format!("{name}_b"), &[out]);
+        let d = self.dense(x, w);
+        let d = self.bias_add(d, b);
+        if relu {
+            self.relu(d)
+        } else {
+            d
+        }
+    }
+
+    /// Finish, returning the operator graph rooted at the last-added node.
+    pub fn finish(self) -> RecExpr {
+        assert!(!self.expr.is_empty(), "empty workload");
+        self.expr
+    }
+
+    /// Finish with an explicit root (must be the last node added).
+    pub fn finish_at(self, root: Id) -> RecExpr {
+        assert_eq!(root, self.expr.root(), "root must be the final node");
+        self.expr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_checks_shapes_eagerly() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[1, 10]);
+        let w = b.weight("w", &[10, 4]);
+        let d = b.dense(x, w);
+        assert_eq!(b.shape_of(d), Shape::new(&[1, 4]));
+    }
+
+    #[test]
+    #[should_panic(expected = "ill-typed")]
+    fn builder_rejects_bad_dense() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[1, 10]);
+        let w = b.weight("w", &[11, 4]);
+        b.dense(x, w);
+    }
+
+    #[test]
+    fn conv_relu_layer_shapes() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("img", &[3, 32, 32]);
+        let y = b.conv_relu(x, "c1", 8, 3, 1, 1);
+        assert_eq!(b.shape_of(y), Shape::new(&[8, 32, 32]));
+    }
+
+    #[test]
+    fn dense_layer_roundtrip_text() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[1, 16]);
+        let y = b.dense_layer(x, "fc", 4, true);
+        let e = b.finish_at(y);
+        let txt = e.to_string();
+        let back = crate::ir::parse_expr(&txt).unwrap();
+        assert_eq!(back.to_string(), txt);
+    }
+}

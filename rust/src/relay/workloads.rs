@@ -1,0 +1,166 @@
+//! The benchmark workload library: the ML inference programs whose
+//! hardware–software design spaces the experiments enumerate.
+//!
+//! Sizes are chosen so that (a) every dimension is power-of-two-friendly for
+//! the halving/splitting rewrites, and (b) e-graph saturation at the default
+//! budgets finishes interactively. `relu128` is the paper's own Fig. 2
+//! running example.
+
+use super::GraphBuilder;
+use crate::ir::RecExpr;
+
+/// A named workload: a Relay-level operator graph plus metadata.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: &'static str,
+    pub description: &'static str,
+    pub expr: RecExpr,
+}
+
+/// Paper Fig. 2: a single 128-wide ReLU kernel invocation.
+pub fn relu128() -> Workload {
+    let mut b = GraphBuilder::new();
+    let x = b.input("x", &[128]);
+    b.relu(x);
+    Workload {
+        name: "relu128",
+        description: "Fig. 2 running example: one 128-wide ReLU",
+        expr: b.finish(),
+    }
+}
+
+/// A 3-layer MLP (MNIST-shaped): 784 -> 128 -> 64 -> 10.
+pub fn mlp() -> Workload {
+    let mut b = GraphBuilder::new();
+    let x = b.input("x", &[1, 784]);
+    let h1 = b.dense_layer(x, "fc1", 128, true);
+    let h2 = b.dense_layer(h1, "fc2", 64, true);
+    b.dense_layer(h2, "fc3", 10, false);
+    Workload {
+        name: "mlp",
+        description: "3-layer MLP 784-128-64-10 (dense + bias + relu)",
+        expr: b.finish(),
+    }
+}
+
+/// A LeNet-style CNN on 1×28×28 input.
+pub fn lenet() -> Workload {
+    let mut b = GraphBuilder::new();
+    let x = b.input("img", &[1, 28, 28]);
+    let c1 = b.conv_relu(x, "c1", 8, 5, 1, 2); // (8,28,28)
+    let p1 = b.maxpool2d(c1, 2, 2); // (8,14,14)
+    let c2 = b.conv_relu(p1, "c2", 16, 5, 1, 0); // (16,10,10)
+    let p2 = b.maxpool2d(c2, 2, 2); // (16,5,5)
+    let f = b.flatten(p2); // (1,400)
+    let d1 = b.dense_layer(f, "fc1", 120, true);
+    let d2 = b.dense_layer(d1, "fc2", 84, true);
+    b.dense_layer(d2, "fc3", 10, false);
+    Workload {
+        name: "lenet",
+        description: "LeNet-style CNN: 2x(conv+relu+pool) + 3 dense layers",
+        expr: b.finish(),
+    }
+}
+
+/// A single conv block (the unit the paper's Fig. 1 reifies).
+pub fn convblock() -> Workload {
+    let mut b = GraphBuilder::new();
+    let x = b.input("img", &[3, 16, 16]);
+    b.conv_relu(x, "c1", 8, 3, 1, 1);
+    Workload {
+        name: "convblock",
+        description: "One 3x3 conv (3->8 ch, 16x16, pad 1) + bias + relu — Fig. 1's unit",
+        expr: b.finish(),
+    }
+}
+
+/// A residual block: two 3×3 convs with a skip connection.
+pub fn resnet_block() -> Workload {
+    let mut b = GraphBuilder::new();
+    let x = b.input("img", &[8, 16, 16]);
+    let c1 = b.conv_relu(x, "c1", 8, 3, 1, 1);
+    let w2 = b.weight("c2_w", &[8, 8, 3, 3]);
+    let c2 = b.conv2d(c1, w2, 1, 1);
+    let s = b.add(c2, x);
+    b.relu(s);
+    Workload {
+        name: "resnet_block",
+        description: "Residual block: conv-relu-conv + skip add + relu (8ch, 16x16)",
+        expr: b.finish(),
+    }
+}
+
+/// A transformer-style feed-forward block: two dense layers + residual.
+pub fn ffn_block() -> Workload {
+    let mut b = GraphBuilder::new();
+    let x = b.input("x", &[1, 64]);
+    let h = b.dense_layer(x, "up", 256, true);
+    let d = b.dense_layer(h, "down", 64, false);
+    let s = b.add(d, x);
+    b.relu(s);
+    Workload {
+        name: "ffn_block",
+        description: "Transformer FFN: dense 64->256->64 + residual add",
+        expr: b.finish(),
+    }
+}
+
+/// All workloads, in rough size order.
+pub fn all_workloads() -> Vec<Workload> {
+    vec![relu128(), convblock(), ffn_block(), resnet_block(), mlp(), lenet()]
+}
+
+/// Look up a workload by CLI name.
+pub fn workload_by_name(name: &str) -> Option<Workload> {
+    all_workloads().into_iter().find(|w| w.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Shape, Ty};
+    use crate::tensor::{eval_expr, Env};
+
+    #[test]
+    fn all_workloads_typecheck() {
+        for w in all_workloads() {
+            let ty = w.expr.typecheck().unwrap_or_else(|e| panic!("{}: {e}", w.name));
+            assert!(matches!(ty, Ty::Tensor(_)), "{}", w.name);
+        }
+    }
+
+    #[test]
+    fn all_workloads_evaluate() {
+        for w in all_workloads() {
+            let mut env = Env::random_for(&w.expr, 1);
+            let out = eval_expr(&w.expr, &mut env).unwrap_or_else(|e| panic!("{}: {e}", w.name));
+            assert!(out.data.iter().all(|v| v.is_finite()), "{}", w.name);
+        }
+    }
+
+    #[test]
+    fn classifier_shapes() {
+        assert_eq!(
+            mlp().expr.typecheck().unwrap(),
+            Ty::Tensor(Shape::new(&[1, 10]))
+        );
+        assert_eq!(
+            lenet().expr.typecheck().unwrap(),
+            Ty::Tensor(Shape::new(&[1, 10]))
+        );
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(workload_by_name("lenet").is_some());
+        assert!(workload_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn workloads_have_distinct_names() {
+        let names: Vec<_> = all_workloads().iter().map(|w| w.name).collect();
+        let mut dedup = names.clone();
+        dedup.dedup();
+        assert_eq!(names.len(), dedup.len());
+    }
+}

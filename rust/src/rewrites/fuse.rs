@@ -1,0 +1,201 @@
+//! Engine-sharing and engine-fusion rewrites.
+//!
+//! `conv-as-im2col-mm` (R4) is the classic *cross-kernel engine sharing*
+//! move: a convolution engine call becomes a matmul engine call over the
+//! im2col patch matrix — after which the hashconsed `mm-engine` may be the
+//! same physical unit a `dense` layer already uses (the paper's motivation
+//! for exploring "more complex (but potentially more profitable) splits"
+//! than one-engine-per-kernel-type).
+//!
+//! `fuse-mm-relu` (R7, extension) goes the other way: specialize two
+//! engines into one fused unit, removing a buffer round-trip.
+
+use super::engine_of;
+use crate::egraph::{Rewrite};
+use crate::ir::{Node, Op, OpKind, Shape, Symbol};
+
+/// `(invoke-conv (conv-engine oh ow c k kh s) x w)` ⇒
+/// `(reshape [k oh ow] (invoke-mm (mm-engine k c*kh*kh oh*ow)
+///     (reshape [k c*kh*kh] w) (im2col kh s x)))`
+pub fn conv_as_im2col_mm() -> Rewrite {
+    Rewrite::node_scan("conv-as-im2col-mm", OpKind::InvokeConv, |eg, _, s| {
+        let n = s.node.as_ref().unwrap();
+        let (oh, ow, c, k, kh, stride) = match engine_of(eg, n)? {
+            Op::ConvEngine { oh, ow, c, k, kh, stride } => (oh, ow, c, k, kh, stride),
+            _ => return None,
+        };
+        let ckk = c * kh * kh;
+        let wmat = eg.add(Node::new(Op::Reshape(Shape::new(&[k, ckk])), vec![n.children[2]]));
+        let col = eg.add(Node::new(Op::Im2Col { kh, stride }, vec![n.children[1]]));
+        let e = eg.add(Node::leaf(Op::MmEngine { m: k, k: ckk, n: oh * ow }));
+        let mm = eg.add(Node::new(Op::InvokeMm, vec![e, wmat, col]));
+        Some(eg.add(Node::new(Op::Reshape(Shape::new(&[k, oh, ow])), vec![mm])))
+    })
+}
+
+/// Fuse `invoke-relu ∘ (reshape) ∘ (buffer) ∘ invoke-mm` into a single
+/// `invoke-mm-relu` on a fused engine. Walks through at most one reshape
+/// and one buffer (the shapes the lowering produces).
+pub fn fuse_mm_relu() -> Rewrite {
+    Rewrite::node_scan("fuse-mm-relu", OpKind::InvokeRelu, |eg, _, s| {
+        let n = s.node.as_ref().unwrap();
+        // Peel: relu's input may be reshape(buffer(mm)) / buffer(mm) /
+        // reshape(mm) / mm.
+        let mut cur = n.children[1];
+        let mut reshaped = false;
+        for _ in 0..3 {
+            if let Some(mm) = super::find_in_class(eg, cur, OpKind::InvokeMm) {
+                let (m, k, nn) = match engine_of(eg, &mm)? {
+                    Op::MmEngine { m, k, n } => (m, k, n),
+                    _ => return None,
+                };
+                let e = eg.add(Node::leaf(Op::MmReluEngine { m, k, n: nn }));
+                let fused =
+                    eg.add(Node::new(Op::InvokeMmRelu, vec![e, mm.children[1], mm.children[2]]));
+                // Rebuild the same view the relu had of the data.
+                return Some(if reshaped {
+                    eg.add(Node::new(Op::Reshape(Shape::new(&[m * nn])), vec![fused]))
+                } else {
+                    fused
+                });
+            }
+            if let Some(rs) = super::find_in_class(eg, cur, OpKind::Reshape) {
+                reshaped = true;
+                cur = rs.children[0];
+                continue;
+            }
+            if let Some(buf) = super::find_in_class(eg, cur, OpKind::Buffer) {
+                cur = buf.children[0];
+                continue;
+            }
+            break;
+        }
+        None
+    })
+}
+
+/// Split a fused mm-relu engine along M (elementwise epilogue splits freely;
+/// K must NOT be split — relu(a+b) ≠ relu(a)+relu(b), so no such rule
+/// exists, and the soundness tests check it stays that way).
+pub fn split_mmrelu_m(factor: usize) -> Rewrite {
+    Rewrite::node_scan(
+        &format!("split-mmrelu-m-x{factor}"),
+        OpKind::InvokeMmRelu,
+        move |eg, _, s| {
+            let n = s.node.as_ref().unwrap();
+            let (m, k, nn) = match engine_of(eg, n)? {
+                Op::MmReluEngine { m, k, n } => (m, k, n),
+                _ => return None,
+            };
+            if m % factor != 0 || m < 2 {
+                return None;
+            }
+            let chunk = m / factor;
+            let var = Symbol::fresh("fm");
+            let sa = super::slice_for_loop(eg, var, 0, chunk, chunk, n.children[1]);
+            let e = eg.add(Node::leaf(Op::MmReluEngine { m: chunk, k, n: nn }));
+            let inv = eg.add(Node::new(Op::InvokeMmRelu, vec![e, sa, n.children[2]]));
+            Some(eg.add(Node::new(Op::SchedLoop { var, axis: 0, extent: factor }, vec![inv])))
+        },
+    )
+}
+
+/// Split a fused mm-relu engine along N.
+pub fn split_mmrelu_n(factor: usize) -> Rewrite {
+    Rewrite::node_scan(
+        &format!("split-mmrelu-n-x{factor}"),
+        OpKind::InvokeMmRelu,
+        move |eg, _, s| {
+            let n = s.node.as_ref().unwrap();
+            let (m, k, nn) = match engine_of(eg, n)? {
+                Op::MmReluEngine { m, k, n } => (m, k, n),
+                _ => return None,
+            };
+            if nn % factor != 0 || nn / factor < super::split::MIN_DIM {
+                return None;
+            }
+            let chunk = nn / factor;
+            let var = Symbol::fresh("fn");
+            let sb = super::slice_for_loop(eg, var, 1, chunk, chunk, n.children[2]);
+            let e = eg.add(Node::leaf(Op::MmReluEngine { m, k, n: chunk }));
+            let inv = eg.add(Node::new(Op::InvokeMmRelu, vec![e, n.children[1], sb]));
+            Some(eg.add(Node::new(Op::SchedLoop { var, axis: 1, extent: factor }, vec![inv])))
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::egraph::EGraph;
+    use crate::ir::parse_expr;
+
+    fn apply_once(src: &str, rule: Rewrite) -> (EGraph, crate::egraph::Id, usize) {
+        let e = parse_expr(src).unwrap();
+        let mut eg = EGraph::new();
+        let root = eg.add_expr(&e);
+        let mut applied = 0;
+        for (id, s) in rule.search(&eg) {
+            if rule.apply(&mut eg, id, &s) {
+                applied += 1;
+            }
+        }
+        eg.rebuild();
+        (eg, root, applied)
+    }
+
+    #[test]
+    fn im2col_rewrite_fires_and_introduces_mm_engine() {
+        let (eg, _, applied) = apply_once(
+            "(invoke-conv (conv-engine 6 6 3 4 3 1) (input x [3 8 8]) (weight w [4 3 3 3]))",
+            conv_as_im2col_mm(),
+        );
+        assert_eq!(applied, 1);
+        let mut found = false;
+        for class in eg.classes() {
+            for n in &class.nodes {
+                if n.op == (Op::MmEngine { m: 4, k: 27, n: 36 }) {
+                    found = true;
+                }
+            }
+        }
+        assert!(found, "expected (mm-engine 4 27 36)");
+    }
+
+    #[test]
+    fn fuse_fires_through_buffer_and_reshape() {
+        // The exact shape `lower` produces for relu(dense(x,w)) (no bias).
+        let src = "(invoke-relu (relu-engine 32) (reshape [32] (buffer sram \
+                     (invoke-mm (mm-engine 4 8 8) (input a [4 8]) (weight w [8 8])))))";
+        let (eg, root, applied) = apply_once(src, fuse_mm_relu());
+        assert_eq!(applied, 1);
+        // Root class should now reach an invoke-mm-relu behind a reshape.
+        let reshapes: Vec<_> = eg
+            .class(root)
+            .nodes
+            .iter()
+            .filter(|n| n.op.kind() == OpKind::Reshape)
+            .cloned()
+            .collect();
+        let fused = reshapes.iter().any(|rs| {
+            super::super::find_in_class(&eg, rs.children[0], OpKind::InvokeMmRelu).is_some()
+        });
+        assert!(fused);
+    }
+
+    #[test]
+    fn fuse_fires_direct() {
+        let src = "(invoke-relu (relu-engine 32) (reshape [32] \
+                     (invoke-mm (mm-engine 4 8 8) (input a [4 8]) (weight w [8 8]))))";
+        let (_, _, applied) = apply_once(src, fuse_mm_relu());
+        assert_eq!(applied, 1);
+    }
+
+    #[test]
+    fn mmrelu_splits_fire() {
+        let src = "(invoke-mm-relu (mm-relu-engine 4 8 8) (input a [4 8]) (weight w [8 8]))";
+        let (_, _, a1) = apply_once(src, split_mmrelu_m(2));
+        let (_, _, a2) = apply_once(src, split_mmrelu_n(2));
+        assert_eq!((a1, a2), (1, 1));
+    }
+}

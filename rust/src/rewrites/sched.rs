@@ -1,0 +1,128 @@
+//! Schedule rewrites: the software side of the split.
+//!
+//! `parallelize` is paper Fig. 2 rewrite 2 — "we can parallelize a software
+//! for loop by instantiating more hardware": a `sched-loop` (one engine,
+//! time-multiplexed) becomes a `sched-par` (extent-many engine instances).
+//! `serialize` is its inverse; having both makes every schedule class
+//! contain both design points, which is how the e-graph holds the whole
+//! time/space-multiplexing spectrum at once.
+
+use crate::egraph::{Rewrite};
+use crate::ir::{Node, Op, OpKind};
+
+/// `(sched-loop v a f body)` ⇒ `(sched-par v a f body)`.
+pub fn parallelize() -> Rewrite {
+    Rewrite::node_scan("parallelize", OpKind::SchedLoop, |eg, _, s| {
+        let n = s.node.as_ref().unwrap();
+        let (var, axis, extent) = match n.op {
+            Op::SchedLoop { var, axis, extent } => (var, axis, extent),
+            _ => return None,
+        };
+        Some(eg.add(Node::new(Op::SchedPar { var, axis, extent }, n.children.clone())))
+    })
+}
+
+/// `(sched-par v a f body)` ⇒ `(sched-loop v a f body)`.
+pub fn serialize() -> Rewrite {
+    Rewrite::node_scan("serialize", OpKind::SchedPar, |eg, _, s| {
+        let n = s.node.as_ref().unwrap();
+        let (var, axis, extent) = match n.op {
+            Op::SchedPar { var, axis, extent } => (var, axis, extent),
+            _ => return None,
+        };
+        Some(eg.add(Node::new(Op::SchedLoop { var, axis, extent }, n.children.clone())))
+    })
+}
+
+/// Reorder two directly nested sequential loops over *different* axes:
+/// `(sched-loop v1 a1 f1 (sched-loop v2 a2 f2 B))` ⇒ swapped order.
+/// Valid because block-concatenation along distinct axes commutes.
+pub fn loop_reorder() -> Rewrite {
+    Rewrite::node_scan("loop-reorder", OpKind::SchedLoop, |eg, _, s| {
+        let outer = s.node.as_ref().unwrap();
+        let (v1, a1, f1) = match outer.op {
+            Op::SchedLoop { var, axis, extent } => (var, axis, extent),
+            _ => return None,
+        };
+        // Find a directly nested sched-loop over a different axis.
+        let inner = super::find_in_class(eg, outer.children[0], OpKind::SchedLoop)?;
+        let (v2, a2, f2) = match inner.op {
+            Op::SchedLoop { var, axis, extent } => (var, axis, extent),
+            _ => return None,
+        };
+        if a1 == a2 {
+            return None;
+        }
+        let body = inner.children[0];
+        let new_inner =
+            eg.add(Node::new(Op::SchedLoop { var: v1, axis: a1, extent: f1 }, vec![body]));
+        Some(eg.add(Node::new(Op::SchedLoop { var: v2, axis: a2, extent: f2 }, vec![new_inner])))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::egraph::{EGraph, Runner};
+    use crate::ir::parse_expr;
+    use crate::tensor::{eval_expr, Env};
+
+    const LOOPED: &str = "(sched-loop i0 0 2 (invoke-relu (relu-engine 64) \
+        (slice 0 64 (imul (lvar i0) 64) (input x [128]))))";
+
+    #[test]
+    fn parallelize_reaches_par_form() {
+        let e = parse_expr(LOOPED).unwrap();
+        let mut eg = EGraph::new();
+        let root = eg.add_expr(&e);
+        let rw = parallelize();
+        for (id, s) in rw.search(&eg) {
+            rw.apply(&mut eg, id, &s);
+        }
+        eg.rebuild();
+        assert!(eg.class(root).nodes.iter().any(|n| matches!(n.op, Op::SchedPar { .. })));
+    }
+
+    #[test]
+    fn loop_par_roundtrip_is_stable() {
+        let e = parse_expr(LOOPED).unwrap();
+        let mut runner = Runner::new(e, vec![parallelize(), serialize()]);
+        let report = runner.run(10);
+        assert_eq!(report.stop, crate::egraph::StopReason::Saturated);
+        // loop + par variants -> exactly 2 designs for this program.
+        assert_eq!(report.designs_lower_bound, 2.0);
+    }
+
+    #[test]
+    fn loop_reorder_swaps_axes_and_preserves_semantics() {
+        // 2-D relu-ish schedule over a matrix: loop rows then cols.
+        let src = "(sched-loop r 0 2 (sched-loop c 1 2 \
+            (slice 1 2 (imul (lvar c) 2) (slice 0 2 (imul (lvar r) 2) (input x [4 4])))))";
+        let e = parse_expr(src).unwrap();
+        let mut eg = EGraph::new();
+        let root = eg.add_expr(&e);
+        let rw = loop_reorder();
+        let matches = rw.search(&eg);
+        assert!(!matches.is_empty());
+        for (id, s) in matches {
+            rw.apply(&mut eg, id, &s);
+        }
+        eg.rebuild();
+        // The class now holds a loop whose outer axis is 1.
+        let has_swapped = eg
+            .class(root)
+            .nodes
+            .iter()
+            .any(|n| matches!(n.op, Op::SchedLoop { axis: 1, .. }));
+        assert!(has_swapped);
+
+        // Differential check of the textual swap.
+        let swapped = "(sched-loop c 1 2 (sched-loop r 0 2 \
+            (slice 1 2 (imul (lvar c) 2) (slice 0 2 (imul (lvar r) 2) (input x [4 4])))))";
+        let e1 = parse_expr(src).unwrap();
+        let e2 = parse_expr(swapped).unwrap();
+        let a = eval_expr(&e1, &mut Env::random_for(&e1, 9)).unwrap();
+        let b = eval_expr(&e2, &mut Env::random_for(&e2, 9)).unwrap();
+        assert!(a.allclose(&b, 0.0));
+    }
+}

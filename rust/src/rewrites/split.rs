@@ -1,0 +1,393 @@
+//! Engine-splitting rewrites — paper Fig. 2 rewrite 1, generalized to every
+//! engine kind and every divisible dimension.
+//!
+//! Shape of every rule: an invocation of a big engine is equivalent to a
+//! software schedule (`sched-loop`) over `factor` invocations of a smaller
+//! engine on slices of the operands. K-dimension and channel splits produce
+//! partial sums, so they use `sched-reduce` instead.
+//!
+//! These rules cannot be written as static pattern→template pairs: the RHS
+//! engine parameters are *computed* (`w/factor`, halo sizes
+//! `(oh/f-1)*stride+kh`, …), which is exactly why the rewrite module uses
+//! dynamic node-scan appliers.
+
+use super::{engine_of, slice_for_loop};
+use crate::egraph::{EGraph, Id, Rewrite, Subst};
+use crate::ir::{in_dim, Node, Op, OpKind, Symbol};
+
+/// Smallest engine dimension worth creating: splits below this are declined
+/// (they bloat the space without adding interesting hardware points).
+pub const MIN_DIM: usize = 4;
+
+fn fresh(prefix: &str) -> Symbol {
+    Symbol::fresh(prefix)
+}
+
+/// `(invoke-relu (relu-engine w) x)` ⇒
+/// `(sched-loop i 0 f (invoke-relu (relu-engine w/f) (slice 0 w/f (imul (lvar i) w/f) x)))`
+pub fn split_relu(factor: usize) -> Rewrite {
+    Rewrite::node_scan(
+        &format!("split-relu-x{factor}"),
+        OpKind::InvokeRelu,
+        move |eg: &mut EGraph, _id: Id, s: &Subst| {
+            let n = s.node.as_ref().unwrap();
+            let w = match engine_of(eg, n)? {
+                Op::ReluEngine { w } => w,
+                _ => return None,
+            };
+            if w % factor != 0 || w / factor < MIN_DIM {
+                return None;
+            }
+            let chunk = w / factor;
+            let var = fresh("i");
+            let slice = slice_for_loop(eg, var, 0, chunk, chunk, n.children[1]);
+            let e = eg.add(Node::leaf(Op::ReluEngine { w: chunk }));
+            let inv = eg.add(Node::new(Op::InvokeRelu, vec![e, slice]));
+            Some(eg.add(Node::new(Op::SchedLoop { var, axis: 0, extent: factor }, vec![inv])))
+        },
+    )
+}
+
+/// Same shape as [`split_relu`] for the vector adder (slices both inputs).
+pub fn split_add(factor: usize) -> Rewrite {
+    Rewrite::node_scan(
+        &format!("split-add-x{factor}"),
+        OpKind::InvokeAdd,
+        move |eg, _, s| {
+            let n = s.node.as_ref().unwrap();
+            let w = match engine_of(eg, n)? {
+                Op::AddEngine { w } => w,
+                _ => return None,
+            };
+            if w % factor != 0 || w / factor < MIN_DIM {
+                return None;
+            }
+            let chunk = w / factor;
+            let var = fresh("i");
+            let sa = slice_for_loop(eg, var, 0, chunk, chunk, n.children[1]);
+            let sb = slice_for_loop(eg, var, 0, chunk, chunk, n.children[2]);
+            let e = eg.add(Node::leaf(Op::AddEngine { w: chunk }));
+            let inv = eg.add(Node::new(Op::InvokeAdd, vec![e, sa, sb]));
+            Some(eg.add(Node::new(Op::SchedLoop { var, axis: 0, extent: factor }, vec![inv])))
+        },
+    )
+}
+
+/// Split matmul along M: loop over row blocks of `a`.
+pub fn split_mm_m(factor: usize) -> Rewrite {
+    Rewrite::node_scan(&format!("split-mm-m-x{factor}"), OpKind::InvokeMm, move |eg, _, s| {
+        let n = s.node.as_ref().unwrap();
+        let (m, k, nn) = match engine_of(eg, n)? {
+            Op::MmEngine { m, k, n } => (m, k, n),
+            _ => return None,
+        };
+        // M is the batch-ish dim and legitimately tiny (often 1): allow any
+        // divisible split down to single rows.
+        if m % factor != 0 || m < 2 {
+            return None;
+        }
+        let chunk = m / factor;
+        let var = fresh("m");
+        let sa = slice_for_loop(eg, var, 0, chunk, chunk, n.children[1]);
+        let e = eg.add(Node::leaf(Op::MmEngine { m: chunk, k, n: nn }));
+        let inv = eg.add(Node::new(Op::InvokeMm, vec![e, sa, n.children[2]]));
+        Some(eg.add(Node::new(Op::SchedLoop { var, axis: 0, extent: factor }, vec![inv])))
+    })
+}
+
+/// Split matmul along N: loop over column blocks of `b`.
+pub fn split_mm_n(factor: usize) -> Rewrite {
+    Rewrite::node_scan(&format!("split-mm-n-x{factor}"), OpKind::InvokeMm, move |eg, _, s| {
+        let n = s.node.as_ref().unwrap();
+        let (m, k, nn) = match engine_of(eg, n)? {
+            Op::MmEngine { m, k, n } => (m, k, n),
+            _ => return None,
+        };
+        if nn % factor != 0 || nn / factor < MIN_DIM {
+            return None;
+        }
+        let chunk = nn / factor;
+        let var = fresh("n");
+        let sb = slice_for_loop(eg, var, 1, chunk, chunk, n.children[2]);
+        let e = eg.add(Node::leaf(Op::MmEngine { m, k, n: chunk }));
+        let inv = eg.add(Node::new(Op::InvokeMm, vec![e, n.children[1], sb]));
+        Some(eg.add(Node::new(Op::SchedLoop { var, axis: 1, extent: factor }, vec![inv])))
+    })
+}
+
+/// Split matmul along K (the reduction dim): partial products summed by a
+/// `sched-reduce`.
+pub fn split_mm_k(factor: usize) -> Rewrite {
+    Rewrite::node_scan(&format!("split-mm-k-x{factor}"), OpKind::InvokeMm, move |eg, _, s| {
+        let n = s.node.as_ref().unwrap();
+        let (m, k, nn) = match engine_of(eg, n)? {
+            Op::MmEngine { m, k, n } => (m, k, n),
+            _ => return None,
+        };
+        if k % factor != 0 || k / factor < MIN_DIM {
+            return None;
+        }
+        let chunk = k / factor;
+        let var = fresh("k");
+        let sa = slice_for_loop(eg, var, 1, chunk, chunk, n.children[1]);
+        let sb = slice_for_loop(eg, var, 0, chunk, chunk, n.children[2]);
+        let e = eg.add(Node::leaf(Op::MmEngine { m, k: chunk, n: nn }));
+        let inv = eg.add(Node::new(Op::InvokeMm, vec![e, sa, sb]));
+        Some(eg.add(Node::new(Op::SchedReduce { var, extent: factor }, vec![inv])))
+    })
+}
+
+/// Split a conv engine along output rows (with halo on the input slice).
+pub fn split_conv_oh(factor: usize) -> Rewrite {
+    Rewrite::node_scan(
+        &format!("split-conv-oh-x{factor}"),
+        OpKind::InvokeConv,
+        move |eg, _, s| {
+            let n = s.node.as_ref().unwrap();
+            let (oh, ow, c, k, kh, stride) = match engine_of(eg, n)? {
+                Op::ConvEngine { oh, ow, c, k, kh, stride } => (oh, ow, c, k, kh, stride),
+                _ => return None,
+            };
+            if oh % factor != 0 || oh / factor < 1 || oh / factor == oh {
+                return None;
+            }
+            let ohc = oh / factor;
+            // Input rows per output chunk (the halo): (ohc-1)*stride + kh.
+            let in_rows = in_dim(ohc, kh, stride);
+            let var = fresh("r");
+            // Row chunk i starts at input row i*ohc*stride.
+            let sx = slice_for_loop(eg, var, 1, ohc * stride, in_rows, n.children[1]);
+            let e = eg.add(Node::leaf(Op::ConvEngine { oh: ohc, ow, c, k, kh, stride }));
+            let inv = eg.add(Node::new(Op::InvokeConv, vec![e, sx, n.children[2]]));
+            Some(eg.add(Node::new(Op::SchedLoop { var, axis: 1, extent: factor }, vec![inv])))
+        },
+    )
+}
+
+/// Split a conv engine along output columns (halo along W).
+pub fn split_conv_ow(factor: usize) -> Rewrite {
+    Rewrite::node_scan(
+        &format!("split-conv-ow-x{factor}"),
+        OpKind::InvokeConv,
+        move |eg, _, s| {
+            let n = s.node.as_ref().unwrap();
+            let (oh, ow, c, k, kh, stride) = match engine_of(eg, n)? {
+                Op::ConvEngine { oh, ow, c, k, kh, stride } => (oh, ow, c, k, kh, stride),
+                _ => return None,
+            };
+            if ow % factor != 0 || ow / factor < 1 || ow / factor == ow {
+                return None;
+            }
+            let owc = ow / factor;
+            let in_cols = in_dim(owc, kh, stride);
+            let var = fresh("q");
+            let sx = slice_for_loop(eg, var, 2, owc * stride, in_cols, n.children[1]);
+            let e = eg.add(Node::leaf(Op::ConvEngine { oh, ow: owc, c, k, kh, stride }));
+            let inv = eg.add(Node::new(Op::InvokeConv, vec![e, sx, n.children[2]]));
+            Some(eg.add(Node::new(Op::SchedLoop { var, axis: 2, extent: factor }, vec![inv])))
+        },
+    )
+}
+
+/// Split a conv engine along output channels (slice the weights).
+pub fn split_conv_k(factor: usize) -> Rewrite {
+    Rewrite::node_scan(
+        &format!("split-conv-k-x{factor}"),
+        OpKind::InvokeConv,
+        move |eg, _, s| {
+            let n = s.node.as_ref().unwrap();
+            let (oh, ow, c, k, kh, stride) = match engine_of(eg, n)? {
+                Op::ConvEngine { oh, ow, c, k, kh, stride } => (oh, ow, c, k, kh, stride),
+                _ => return None,
+            };
+            if k % factor != 0 || k / factor < 1 || k / factor == k {
+                return None;
+            }
+            let kc = k / factor;
+            let var = fresh("g");
+            let sw = slice_for_loop(eg, var, 0, kc, kc, n.children[2]);
+            let e = eg.add(Node::leaf(Op::ConvEngine { oh, ow, c, k: kc, kh, stride }));
+            let inv = eg.add(Node::new(Op::InvokeConv, vec![e, n.children[1], sw]));
+            Some(eg.add(Node::new(Op::SchedLoop { var, axis: 0, extent: factor }, vec![inv])))
+        },
+    )
+}
+
+/// Split a conv engine along *input* channels: partial sums reduced.
+pub fn split_conv_c(factor: usize) -> Rewrite {
+    Rewrite::node_scan(
+        &format!("split-conv-c-x{factor}"),
+        OpKind::InvokeConv,
+        move |eg, _, s| {
+            let n = s.node.as_ref().unwrap();
+            let (oh, ow, c, k, kh, stride) = match engine_of(eg, n)? {
+                Op::ConvEngine { oh, ow, c, k, kh, stride } => (oh, ow, c, k, kh, stride),
+                _ => return None,
+            };
+            if c % factor != 0 || c / factor < 1 || c / factor == c {
+                return None;
+            }
+            let cc = c / factor;
+            let var = fresh("c");
+            let sx = slice_for_loop(eg, var, 0, cc, cc, n.children[1]);
+            let sw = slice_for_loop(eg, var, 1, cc, cc, n.children[2]);
+            let e = eg.add(Node::leaf(Op::ConvEngine { oh, ow, c: cc, k, kh, stride }));
+            let inv = eg.add(Node::new(Op::InvokeConv, vec![e, sx, sw]));
+            Some(eg.add(Node::new(Op::SchedReduce { var, extent: factor }, vec![inv])))
+        },
+    )
+}
+
+/// Split a pool engine along channels (pooling is channelwise).
+pub fn split_pool_c(factor: usize) -> Rewrite {
+    Rewrite::node_scan(
+        &format!("split-pool-c-x{factor}"),
+        OpKind::InvokePool,
+        move |eg, _, s| {
+            let n = s.node.as_ref().unwrap();
+            let (oh, ow, c, k, stride) = match engine_of(eg, n)? {
+                Op::PoolEngine { oh, ow, c, k, stride } => (oh, ow, c, k, stride),
+                _ => return None,
+            };
+            if c % factor != 0 || c / factor < 1 || c / factor == c {
+                return None;
+            }
+            let cc = c / factor;
+            let var = fresh("pc");
+            let sx = slice_for_loop(eg, var, 0, cc, cc, n.children[1]);
+            let e = eg.add(Node::leaf(Op::PoolEngine { oh, ow, c: cc, k, stride }));
+            let inv = eg.add(Node::new(Op::InvokePool, vec![e, sx]));
+            Some(eg.add(Node::new(Op::SchedLoop { var, axis: 0, extent: factor }, vec![inv])))
+        },
+    )
+}
+
+/// Split a pool engine along output rows (halo slices, like conv).
+pub fn split_pool_oh(factor: usize) -> Rewrite {
+    Rewrite::node_scan(
+        &format!("split-pool-oh-x{factor}"),
+        OpKind::InvokePool,
+        move |eg, _, s| {
+            let n = s.node.as_ref().unwrap();
+            let (oh, ow, c, k, stride) = match engine_of(eg, n)? {
+                Op::PoolEngine { oh, ow, c, k, stride } => (oh, ow, c, k, stride),
+                _ => return None,
+            };
+            if oh % factor != 0 || oh / factor < 1 || oh / factor == oh {
+                return None;
+            }
+            let ohc = oh / factor;
+            let in_rows = in_dim(ohc, k, stride);
+            let var = fresh("pr");
+            let sx = slice_for_loop(eg, var, 1, ohc * stride, in_rows, n.children[1]);
+            let e = eg.add(Node::leaf(Op::PoolEngine { oh: ohc, ow, c, k, stride }));
+            let inv = eg.add(Node::new(Op::InvokePool, vec![e, sx]));
+            Some(eg.add(Node::new(Op::SchedLoop { var, axis: 1, extent: factor }, vec![inv])))
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::egraph::Runner;
+    use crate::ir::parse_expr;
+
+    /// Apply one rule once to a seed program and return the e-graph.
+    fn apply_once(src: &str, rule: Rewrite) -> (EGraph, Id, usize) {
+        let e = parse_expr(src).unwrap();
+        let mut eg = EGraph::new();
+        let root = eg.add_expr(&e);
+        let matches = rule.search(&eg);
+        let mut applied = 0;
+        for (id, s) in matches {
+            if rule.apply(&mut eg, id, &s) {
+                applied += 1;
+            }
+        }
+        eg.rebuild();
+        (eg, root, applied)
+    }
+
+    #[test]
+    fn split_relu_fires_and_adds_schedule() {
+        let (eg, root, applied) = apply_once(
+            "(invoke-relu (relu-engine 128) (input x [128]))",
+            split_relu(2),
+        );
+        assert_eq!(applied, 1);
+        // The root class now also contains a sched-loop node.
+        let has_loop =
+            eg.class(root).nodes.iter().any(|n| matches!(n.op, Op::SchedLoop { .. }));
+        assert!(has_loop);
+    }
+
+    #[test]
+    fn split_relu_declines_non_divisible() {
+        let (_, _, applied) =
+            apply_once("(invoke-relu (relu-engine 127) (input x [127]))", split_relu(2));
+        assert_eq!(applied, 0);
+    }
+
+    #[test]
+    fn split_relu_declines_below_min() {
+        let (_, _, applied) =
+            apply_once("(invoke-relu (relu-engine 4) (input x [4]))", split_relu(2));
+        assert_eq!(applied, 0);
+    }
+
+    #[test]
+    fn splits_iterate_to_all_power_of_two_engines() {
+        let e = parse_expr("(invoke-relu (relu-engine 64) (input x [64]))").unwrap();
+        let mut runner = Runner::new(e, vec![split_relu(2)]);
+        runner.run(8);
+        // Engines 64, 32, 16, 8, 4 should all exist as e-nodes.
+        let mut widths: Vec<usize> = vec![];
+        for class in runner.egraph.classes() {
+            for n in &class.nodes {
+                if let Op::ReluEngine { w } = n.op {
+                    widths.push(w);
+                }
+            }
+        }
+        widths.sort();
+        widths.dedup();
+        assert_eq!(widths, vec![4, 8, 16, 32, 64]);
+    }
+
+    #[test]
+    fn mm_k_split_uses_reduce() {
+        let (eg, root, applied) = apply_once(
+            "(invoke-mm (mm-engine 4 16 4) (input a [4 16]) (weight b [16 4]))",
+            split_mm_k(2),
+        );
+        assert_eq!(applied, 1);
+        let has_reduce =
+            eg.class(root).nodes.iter().any(|n| matches!(n.op, Op::SchedReduce { .. }));
+        assert!(has_reduce);
+    }
+
+    #[test]
+    fn conv_splits_fire() {
+        let src =
+            "(invoke-conv (conv-engine 8 8 4 8 3 1) (input x [4 10 10]) (weight w [8 4 3 3]))";
+        for (rule, expect) in [
+            (split_conv_oh(2), 1),
+            (split_conv_ow(2), 1),
+            (split_conv_k(2), 1),
+            (split_conv_c(2), 1),
+        ] {
+            let name = rule.name.clone();
+            let (_, _, applied) = apply_once(src, rule);
+            assert_eq!(applied, expect, "{name}");
+        }
+    }
+
+    #[test]
+    fn pool_splits_fire() {
+        let src = "(invoke-pool (pool-engine 4 4 8 2 2) (input x [8 8 8]))";
+        let (_, _, a1) = apply_once(src, split_pool_c(2));
+        let (_, _, a2) = apply_once(src, split_pool_oh(2));
+        assert_eq!((a1, a2), (1, 1));
+    }
+}

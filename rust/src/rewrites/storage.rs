@@ -1,0 +1,82 @@
+//! Storage rewrites: where intermediates live (paper §2's third component).
+//!
+//! Semantically all of these are identity — buffers are transparent to the
+//! evaluator — but each choice lands at a different point in the
+//! area/latency space: SRAM buffers cost area but are fast, DRAM is free
+//! area but slow, and double-buffering doubles the storage to overlap
+//! producer and consumer (pipelining).
+
+use crate::egraph::Rewrite;
+use crate::ir::{BufKind, Node, Op, OpKind};
+
+/// `(buffer sram x)` ⇒ `(buffer dram x)`.
+pub fn sram_to_dram() -> Rewrite {
+    Rewrite::node_scan("sram-to-dram", OpKind::Buffer, |eg, _, s| {
+        let n = s.node.as_ref().unwrap();
+        match n.op {
+            Op::Buffer { kind: BufKind::Sram } => {
+                Some(eg.add(Node::new(Op::Buffer { kind: BufKind::Dram }, n.children.clone())))
+            }
+            _ => None,
+        }
+    })
+}
+
+/// `(buffer dram x)` ⇒ `(buffer sram x)`.
+pub fn dram_to_sram() -> Rewrite {
+    Rewrite::node_scan("dram-to-sram", OpKind::Buffer, |eg, _, s| {
+        let n = s.node.as_ref().unwrap();
+        match n.op {
+            Op::Buffer { kind: BufKind::Dram } => {
+                Some(eg.add(Node::new(Op::Buffer { kind: BufKind::Sram }, n.children.clone())))
+            }
+            _ => None,
+        }
+    })
+}
+
+/// `(buffer k x)` ⇒ `(dbl-buffer k x)` — pipeline the producer/consumer.
+pub fn double_buffer() -> Rewrite {
+    Rewrite::node_scan("double-buffer", OpKind::Buffer, |eg, _, s| {
+        let n = s.node.as_ref().unwrap();
+        let kind = match n.op {
+            Op::Buffer { kind } => kind,
+            _ => return None,
+        };
+        Some(eg.add(Node::new(Op::DblBuffer { kind }, n.children.clone())))
+    })
+}
+
+/// `(dbl-buffer k x)` ⇒ `(buffer k x)`.
+pub fn undouble_buffer() -> Rewrite {
+    Rewrite::node_scan("undouble-buffer", OpKind::DblBuffer, |eg, _, s| {
+        let n = s.node.as_ref().unwrap();
+        let kind = match n.op {
+            Op::DblBuffer { kind } => kind,
+            _ => return None,
+        };
+        Some(eg.add(Node::new(Op::Buffer { kind }, n.children.clone())))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::egraph::Runner;
+    use crate::ir::parse_expr;
+
+    #[test]
+    fn storage_choices_multiply_designs() {
+        // One buffered invoke: sram/dram x single/double = 4 storage
+        // variants of the same program.
+        let e = parse_expr("(buffer sram (invoke-relu (relu-engine 4) (input x [4])))")
+            .unwrap();
+        let mut runner = Runner::new(
+            e,
+            vec![sram_to_dram(), dram_to_sram(), double_buffer(), undouble_buffer()],
+        );
+        let rep = runner.run(10);
+        assert_eq!(rep.stop, crate::egraph::StopReason::Saturated);
+        assert_eq!(rep.designs_lower_bound, 4.0);
+    }
+}

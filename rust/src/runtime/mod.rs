@@ -1,0 +1,357 @@
+//! The PJRT engine runtime: loads the AOT-compiled Pallas engine kernels
+//! (`artifacts/*.hlo.txt`, produced once by `make artifacts`) and executes
+//! them from the Rust hot path via the `xla` crate's PJRT CPU client.
+//!
+//! Python is **never** on this path: artifacts are HLO text on disk; the
+//! runtime compiles each one once (lazily, cached) and then serves engine
+//! invocations as pure in-process calls.
+//!
+//! Two entry points:
+//!
+//! * [`EngineRuntime`] — name-indexed engine executor (compile cache,
+//!   literal marshalling);
+//! * [`PjrtBackend`] — adapts the runtime to the evaluator's
+//!   [`EngineBackend`] trait, so *any extracted design* can run its
+//!   invocations on real compiled kernels while the Rust side plays the
+//!   software schedule (slices, loops, buffers) — the hardware–software
+//!   split, executed literally.
+
+use crate::ir::{Op, Shape};
+use crate::tensor::{EngineBackend, EvalError, Tensor};
+use anyhow::{anyhow, Context, Result};
+use std::collections::{HashMap, HashSet};
+use std::path::{Path, PathBuf};
+
+/// Locate the artifacts directory: `$HWSPLIT_ARTIFACTS` or `<repo>/artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("HWSPLIT_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// The artifact base name for an engine declaration (the naming contract
+/// with `python/compile/aot.py`).
+pub fn artifact_name(op: &Op) -> Option<String> {
+    Some(match *op {
+        Op::MmEngine { m, k, n } => format!("mm_{m}x{k}x{n}"),
+        Op::MmReluEngine { m, k, n } => format!("mmrelu_{m}x{k}x{n}"),
+        Op::ReluEngine { w } => format!("relu_{w}"),
+        Op::AddEngine { w } => format!("add_{w}"),
+        Op::ConvEngine { oh, ow, c, k, kh, stride } => {
+            format!("conv_{oh}x{ow}x{c}x{k}x{kh}x{stride}")
+        }
+        Op::PoolEngine { oh, ow, c, k, stride } => format!("pool_{oh}x{ow}x{c}x{k}x{stride}"),
+        _ => return None,
+    })
+}
+
+/// Loads, compiles (once) and executes AOT engine artifacts.
+pub struct EngineRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    available: HashSet<String>,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Executions served per artifact (metrics).
+    pub calls: HashMap<String, u64>,
+}
+
+impl EngineRuntime {
+    /// Open the runtime over an artifact directory (reads `manifest.txt`).
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = dir.join("manifest.txt");
+        let listing = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {manifest:?} — run `make artifacts` first"))?;
+        let available: HashSet<String> =
+            listing.lines().map(|l| l.trim().to_string()).filter(|l| !l.is_empty()).collect();
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(EngineRuntime { client, dir, available, cache: HashMap::new(), calls: HashMap::new() })
+    }
+
+    /// Open over the default directory.
+    pub fn open_default() -> Result<Self> {
+        Self::new(default_artifact_dir())
+    }
+
+    /// Artifact names listed in the manifest.
+    pub fn available(&self) -> &HashSet<String> {
+        &self.available
+    }
+
+    /// True if the engine declaration has a compiled artifact available.
+    pub fn has_engine(&self, op: &Op) -> bool {
+        artifact_name(op).is_some_and(|n| self.available.contains(&n))
+    }
+
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .map_err(|e| anyhow!("loading {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe =
+                self.client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Number of artifacts compiled so far (cache size).
+    pub fn compiled(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Execute artifact `name` on `inputs`, expecting `out_shape` back.
+    pub fn execute_named(
+        &mut self,
+        name: &str,
+        inputs: &[Tensor],
+        out_shape: &Shape,
+    ) -> Result<Tensor> {
+        *self.calls.entry(name.to_string()).or_insert(0) += 1;
+        let exe = self.executable(name)?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for t in inputs {
+            let dims: Vec<i64> = t.shape.0.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(&t.data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape literal: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        let data = out.to_vec::<f32>().map_err(|e| anyhow!("download {name}: {e:?}"))?;
+        if data.len() != out_shape.numel() {
+            return Err(anyhow!(
+                "{name}: output has {} elems, expected {} ({out_shape})",
+                data.len(),
+                out_shape.numel()
+            ));
+        }
+        Ok(Tensor::new(out_shape.clone(), data))
+    }
+
+    /// Execute an engine invocation.
+    pub fn execute_engine(&mut self, engine: &Op, inputs: &[Tensor]) -> Result<Tensor> {
+        let name =
+            artifact_name(engine).ok_or_else(|| anyhow!("not an engine: {engine}"))?;
+        let out_shape = engine_out_shape(engine);
+        self.execute_named(&name, inputs, &out_shape)
+    }
+}
+
+/// Output shape of one engine invocation (mirrors `ir::shape::infer`).
+pub fn engine_out_shape(engine: &Op) -> Shape {
+    match *engine {
+        Op::MmEngine { m, n, .. } | Op::MmReluEngine { m, n, .. } => Shape::new(&[m, n]),
+        Op::ReluEngine { w } | Op::AddEngine { w } => Shape::new(&[w]),
+        Op::ConvEngine { oh, ow, k, .. } => Shape::new(&[k, oh, ow]),
+        Op::PoolEngine { oh, ow, c, .. } => Shape::new(&[c, oh, ow]),
+        _ => panic!("not an engine: {engine}"),
+    }
+}
+
+/// Extract a design whose engines are all covered by the artifact library:
+/// the usual greedy cost plus a prohibitive penalty on uncovered engine
+/// declarations. With `prefer_small` the cost leans toward smaller engines
+/// and deeper schedules (a genuinely *rewritten* design), otherwise toward
+/// latency. Returns `None` if no fully-covered design exists in the
+/// e-graph.
+pub fn extract_covered(
+    eg: &crate::egraph::EGraph,
+    root: crate::egraph::Id,
+    rt: &EngineRuntime,
+    prefer_small: bool,
+) -> Option<crate::ir::RecExpr> {
+    let ex = crate::extract::Extractor::new(eg, |eg2, node, child| {
+        let base = if prefer_small {
+            crate::extract::area_cost(eg2, node, child)
+        } else {
+            crate::extract::latency_cost(eg2, node, child)
+        };
+        if node.op.is_engine() && !rt.has_engine(&node.op) {
+            base + 1e12
+        } else {
+            base
+        }
+    });
+    let d = ex.extract(eg, root);
+    if d.engines().iter().all(|e| rt.has_engine(e)) {
+        Some(d)
+    } else {
+        None
+    }
+}
+
+/// [`EngineBackend`] adapter: designs evaluate with their invocations on
+/// PJRT. With `fallback_to_oracle`, engines missing from the manifest run
+/// on the Rust oracle instead (useful for exploring designs whose engine
+/// library has not been AOT-built yet); in strict mode they error.
+pub struct PjrtBackend {
+    pub runtime: EngineRuntime,
+    pub fallback_to_oracle: bool,
+    /// Invocations served by PJRT vs the oracle (metrics).
+    pub pjrt_calls: u64,
+    pub oracle_calls: u64,
+}
+
+impl PjrtBackend {
+    pub fn new(runtime: EngineRuntime) -> Self {
+        PjrtBackend { runtime, fallback_to_oracle: false, pjrt_calls: 0, oracle_calls: 0 }
+    }
+
+    pub fn with_fallback(mut self) -> Self {
+        self.fallback_to_oracle = true;
+        self
+    }
+}
+
+impl EngineBackend for PjrtBackend {
+    fn invoke(
+        &mut self,
+        engine: &Op,
+        kind: crate::ir::OpKind,
+        args: &[Tensor],
+    ) -> Result<Tensor, EvalError> {
+        if self.runtime.has_engine(engine) {
+            self.pjrt_calls += 1;
+            self.runtime
+                .execute_engine(engine, args)
+                .map_err(|e| EvalError::Backend(format!("{e:#}")))
+        } else if self.fallback_to_oracle {
+            self.oracle_calls += 1;
+            crate::tensor::Oracle.invoke(engine, kind, args)
+        } else {
+            Err(EvalError::Backend(format!(
+                "no artifact for engine {engine} (run `make artifacts` or extend aot.py's \
+                 DEFAULT_SPECS)"
+            )))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parse_expr;
+    use crate::tensor::{eval_expr, eval_expr_backend, Env};
+
+    /// Artifacts are a build product; tests that need them skip when absent
+    /// (CI runs `make artifacts` first — see Makefile `test` target).
+    fn runtime() -> Option<EngineRuntime> {
+        EngineRuntime::new(default_artifact_dir()).ok()
+    }
+
+    #[test]
+    fn artifact_names_match_contract() {
+        assert_eq!(
+            artifact_name(&Op::MmEngine { m: 1, k: 784, n: 128 }).unwrap(),
+            "mm_1x784x128"
+        );
+        assert_eq!(artifact_name(&Op::ReluEngine { w: 128 }).unwrap(), "relu_128");
+        assert_eq!(
+            artifact_name(&Op::ConvEngine { oh: 28, ow: 28, c: 1, k: 8, kh: 5, stride: 1 })
+                .unwrap(),
+            "conv_28x28x1x8x5x1"
+        );
+        assert_eq!(artifact_name(&Op::Relu), None);
+    }
+
+    #[test]
+    fn engine_out_shapes() {
+        assert_eq!(
+            engine_out_shape(&Op::MmEngine { m: 2, k: 3, n: 4 }),
+            Shape::new(&[2, 4])
+        );
+        assert_eq!(
+            engine_out_shape(&Op::PoolEngine { oh: 5, ow: 5, c: 16, k: 2, stride: 2 }),
+            Shape::new(&[16, 5, 5])
+        );
+    }
+
+    #[test]
+    fn pjrt_relu_matches_oracle() {
+        let Some(mut rt) = runtime() else { return };
+        let x = Tensor::random(Shape::new(&[128]), 7);
+        let engine = Op::ReluEngine { w: 128 };
+        if !rt.has_engine(&engine) {
+            return;
+        }
+        let got = rt.execute_engine(&engine, &[x.clone()]).unwrap();
+        assert!(got.allclose(&x.relu(), 1e-6));
+    }
+
+    #[test]
+    fn pjrt_mm_matches_oracle() {
+        let Some(mut rt) = runtime() else { return };
+        let engine = Op::MmEngine { m: 1, k: 128, n: 64 };
+        if !rt.has_engine(&engine) {
+            return;
+        }
+        let a = Tensor::random(Shape::new(&[1, 128]), 1);
+        let b = Tensor::random(Shape::new(&[128, 64]), 2);
+        let got = rt.execute_engine(&engine, &[a.clone(), b.clone()]).unwrap();
+        assert!(got.allclose(&a.matmul(&b), 1e-4), "{:?}", got.max_abs_diff(&a.matmul(&b)));
+    }
+
+    #[test]
+    fn design_runs_on_pjrt_and_matches_oracle_eval() {
+        let Some(rt) = runtime() else { return };
+        // A split design: loop over relu-64 (both engines in the manifest).
+        let src = "(sched-loop i0 0 2 (invoke-relu (relu-engine 64) \
+                    (slice 0 64 (imul (lvar i0) 64) (input x [128]))))";
+        let e = parse_expr(src).unwrap();
+        let mut backend = PjrtBackend::new(rt);
+        if !backend.runtime.has_engine(&Op::ReluEngine { w: 64 }) {
+            return;
+        }
+        let mut env = Env::random_for(&e, 11);
+        let got = eval_expr_backend(&e, &mut env.clone(), &mut backend).unwrap();
+        let want = eval_expr(&e, &mut env).unwrap();
+        assert!(got.allclose(&want, 1e-5));
+        assert_eq!(backend.pjrt_calls, 2);
+    }
+
+    #[test]
+    fn strict_mode_errors_on_missing_engine() {
+        let Some(rt) = runtime() else { return };
+        let e = parse_expr("(invoke-relu (relu-engine 77) (input x [77]))").unwrap();
+        let mut backend = PjrtBackend::new(rt);
+        let mut env = Env::random_for(&e, 1);
+        let err = eval_expr_backend(&e, &mut env, &mut backend);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn fallback_mode_uses_oracle() {
+        let Some(rt) = runtime() else { return };
+        let e = parse_expr("(invoke-relu (relu-engine 77) (input x [77]))").unwrap();
+        let mut backend = PjrtBackend::new(rt).with_fallback();
+        let mut env = Env::random_for(&e, 1);
+        let out = eval_expr_backend(&e, &mut env, &mut backend).unwrap();
+        assert_eq!(out.shape, Shape::new(&[77]));
+        assert_eq!(backend.oracle_calls, 1);
+    }
+
+    #[test]
+    fn executable_cache_compiles_once() {
+        let Some(mut rt) = runtime() else { return };
+        let engine = Op::ReluEngine { w: 128 };
+        if !rt.has_engine(&engine) {
+            return;
+        }
+        let x = Tensor::random(Shape::new(&[128]), 3);
+        rt.execute_engine(&engine, &[x.clone()]).unwrap();
+        rt.execute_engine(&engine, &[x]).unwrap();
+        assert_eq!(rt.compiled(), 1);
+        assert_eq!(rt.calls["relu_128"], 2);
+    }
+}

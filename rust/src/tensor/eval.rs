@@ -1,0 +1,392 @@
+//! The EngineIR evaluator: executes any (well-typed) EngineIR term on
+//! concrete data. This defines the language's *semantics*; every rewrite in
+//! [`crate::rewrites`] is differential-tested with it (LHS ≡ RHS on random
+//! inputs), and the PJRT runtime is validated against it end-to-end.
+//!
+//! Schedules evaluate numerically identically whether sequential
+//! (`sched-loop`) or parallel (`sched-par`) — they differ only in cost —
+//! which is exactly the paper's "functional equivalence across splits".
+
+use super::Tensor;
+use crate::egraph::Id;
+use crate::ir::{Op, OpKind, RecExpr, Symbol};
+use std::collections::HashMap;
+
+/// Evaluation failure (unbound names, ill-formed programs the type checker
+/// would also reject).
+#[derive(Debug, Clone, thiserror::Error)]
+pub enum EvalError {
+    #[error("unbound tensor '{0}'")]
+    UnboundTensor(Symbol),
+    #[error("unbound loop variable '{0}'")]
+    UnboundLVar(Symbol),
+    #[error("expected an index expression at {0:?}")]
+    NotAnIndex(Id),
+    #[error("expected a tensor at {0:?} (engines have no value)")]
+    NotATensor(Id),
+    #[error("engine backend: {0}")]
+    Backend(String),
+}
+
+/// How engine invocations execute. The default [`Oracle`] computes them
+/// with the pure-Rust tensor ops; [`crate::runtime::PjrtBackend`] routes
+/// them to AOT-compiled Pallas kernels on the PJRT CPU client. Everything
+/// *around* the invocations — schedules, slices, buffers — always runs in
+/// Rust: that is the software side of the hardware–software split.
+pub trait EngineBackend {
+    fn invoke(&mut self, engine: &Op, kind: OpKind, args: &[Tensor])
+        -> Result<Tensor, EvalError>;
+}
+
+/// Reference backend: engine semantics via the tensor oracle.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Oracle;
+
+impl EngineBackend for Oracle {
+    fn invoke(
+        &mut self,
+        engine: &Op,
+        kind: OpKind,
+        args: &[Tensor],
+    ) -> Result<Tensor, EvalError> {
+        Ok(match kind {
+            OpKind::InvokeMm => args[0].matmul(&args[1]),
+            OpKind::InvokeMmRelu => args[0].matmul(&args[1]).relu(),
+            OpKind::InvokeRelu => args[0].relu(),
+            OpKind::InvokeAdd => args[0].eadd(&args[1]),
+            OpKind::InvokeConv => {
+                let stride = match engine {
+                    Op::ConvEngine { stride, .. } => *stride,
+                    _ => 1,
+                };
+                args[0].conv2d(&args[1], stride)
+            }
+            OpKind::InvokePool => {
+                let (k, stride) = match engine {
+                    Op::PoolEngine { k, stride, .. } => (*k, *stride),
+                    _ => (1, 1),
+                };
+                args[0].maxpool2d(k, stride)
+            }
+            other => return Err(EvalError::Backend(format!("not an invoke kind: {other:?}"))),
+        })
+    }
+}
+
+/// Binding environment: named workload tensors plus the enclosing schedule
+/// loop variables.
+#[derive(Debug, Clone, Default)]
+pub struct Env {
+    pub tensors: HashMap<Symbol, Tensor>,
+    loops: Vec<(Symbol, i64)>,
+}
+
+impl Env {
+    pub fn new() -> Self {
+        Env::default()
+    }
+
+    /// Bind every `input`/`weight` leaf of `expr` to a deterministic random
+    /// tensor derived from its name — the standard differential-test setup.
+    pub fn random_for(expr: &RecExpr, seed: u64) -> Self {
+        let mut env = Env::new();
+        for node in expr.nodes() {
+            if let Op::Input(name, sh) | Op::Weight(name, sh) = &node.op {
+                let mut h = seed;
+                for b in name.as_str().bytes() {
+                    h = h.wrapping_mul(0x100000001b3).wrapping_add(b as u64);
+                }
+                env.tensors.insert(*name, Tensor::random(sh.clone(), h));
+            }
+        }
+        env
+    }
+
+    pub fn bind(&mut self, name: &str, t: Tensor) {
+        self.tensors.insert(Symbol::new(name), t);
+    }
+
+    fn lvar(&self, s: Symbol) -> Option<i64> {
+        self.loops.iter().rev().find(|(v, _)| *v == s).map(|&(_, i)| i)
+    }
+}
+
+enum Value {
+    Tensor(Tensor),
+    Index(i64),
+}
+
+struct Evaluator<'a, 'b> {
+    expr: &'a RecExpr,
+    /// Per-slot free loop variables, for memo keys.
+    free: Vec<Vec<Symbol>>,
+    /// Memo: (slot, values of its free lvars) -> tensor.
+    memo: HashMap<(usize, Vec<i64>), Tensor>,
+    backend: &'b mut dyn EngineBackend,
+}
+
+
+impl<'a, 'b> Evaluator<'a, 'b> {
+    fn eval(&mut self, id: Id, env: &mut Env) -> Result<Value, EvalError> {
+        let slot = id.index();
+        let node = self.expr.node(id).clone();
+
+        // Memo lookup (tensors only; index exprs are cheap).
+        let key: Option<(usize, Vec<i64>)> = {
+            let vals: Option<Vec<i64>> =
+                self.free[slot].iter().map(|&s| env.lvar(s)).collect();
+            vals.map(|v| (slot, v))
+        };
+        if let Some(k) = &key {
+            if let Some(t) = self.memo.get(k) {
+                return Ok(Value::Tensor(t.clone()));
+            }
+        }
+
+        let value = self.eval_node(&node, env)?;
+        if let (Some(k), Value::Tensor(t)) = (key, &value) {
+            self.memo.insert(k, t.clone());
+        }
+        Ok(value)
+    }
+
+    fn tensor(&mut self, id: Id, env: &mut Env) -> Result<Tensor, EvalError> {
+        match self.eval(id, env)? {
+            Value::Tensor(t) => Ok(t),
+            Value::Index(_) => Err(EvalError::NotATensor(id)),
+        }
+    }
+
+    fn index(&mut self, id: Id, env: &mut Env) -> Result<i64, EvalError> {
+        match self.eval(id, env)? {
+            Value::Index(i) => Ok(i),
+            Value::Tensor(_) => Err(EvalError::NotAnIndex(id)),
+        }
+    }
+
+    fn eval_node(&mut self, node: &crate::ir::Node, env: &mut Env) -> Result<Value, EvalError> {
+        use Value::*;
+        let c = &node.children;
+        Ok(match &node.op {
+            Op::Int(v) => Index(*v),
+            Op::LVar(s) => Index(env.lvar(*s).ok_or(EvalError::UnboundLVar(*s))?),
+            Op::IMul => Index(self.index(c[0], env)? * self.index(c[1], env)?),
+            Op::IAdd => Index(self.index(c[0], env)? + self.index(c[1], env)?),
+
+            Op::Input(name, _) | Op::Weight(name, _) => Tensor(
+                env.tensors.get(name).cloned().ok_or(EvalError::UnboundTensor(*name))?,
+            ),
+
+            // Relay level — direct oracle calls.
+            Op::Conv2d { stride, pad } => {
+                let x = self.tensor(c[0], env)?;
+                let w = self.tensor(c[1], env)?;
+                let x = if *pad > 0 { x.pad2d(*pad) } else { x };
+                Tensor(x.conv2d(&w, *stride))
+            }
+            Op::Dense => Tensor(self.tensor(c[0], env)?.matmul(&self.tensor(c[1], env)?)),
+            Op::Relu => Tensor(self.tensor(c[0], env)?.relu()),
+            Op::BiasAdd => Tensor(self.tensor(c[0], env)?.bias_add(&self.tensor(c[1], env)?)),
+            Op::EAdd => Tensor(self.tensor(c[0], env)?.eadd(&self.tensor(c[1], env)?)),
+            Op::MaxPool2d { k, stride } => Tensor(self.tensor(c[0], env)?.maxpool2d(*k, *stride)),
+            Op::Flatten => {
+                let x = self.tensor(c[0], env)?;
+                let n = x.numel();
+                Tensor(x.reshape(crate::ir::Shape::new(&[1, n])))
+            }
+            Op::GlobalAvgPool => Tensor(self.tensor(c[0], env)?.gap()),
+
+            // Engines have no runtime value; invocations ignore slot 0's
+            // "value" and use the engine op's semantics directly.
+            Op::MmEngine { .. }
+            | Op::MmReluEngine { .. }
+            | Op::ReluEngine { .. }
+            | Op::AddEngine { .. }
+            | Op::ConvEngine { .. }
+            | Op::PoolEngine { .. } => return Err(EvalError::NotATensor(Id::from_index(0))),
+
+            Op::InvokeMm
+            | Op::InvokeMmRelu
+            | Op::InvokeRelu
+            | Op::InvokeAdd
+            | Op::InvokeConv
+            | Op::InvokePool => {
+                let engine = self.expr.node(c[0]).op.clone();
+                let mut args = Vec::with_capacity(c.len() - 1);
+                for &a in &c[1..] {
+                    args.push(self.tensor(a, env)?);
+                }
+                Tensor(self.backend.invoke(&engine, node.op.kind(), &args)?)
+            }
+
+            Op::SchedLoop { var, axis, extent } | Op::SchedPar { var, axis, extent } => {
+                let mut parts = Vec::with_capacity(*extent);
+                for i in 0..*extent {
+                    env.loops.push((*var, i as i64));
+                    let t = self.tensor(c[0], env);
+                    env.loops.pop();
+                    parts.push(t?);
+                }
+                Tensor(super::Tensor::concat_ax(*axis, &parts))
+            }
+            Op::SchedReduce { var, extent } => {
+                let mut acc: Option<super::Tensor> = None;
+                for i in 0..*extent {
+                    env.loops.push((*var, i as i64));
+                    let t = self.tensor(c[0], env);
+                    env.loops.pop();
+                    let t = t?;
+                    acc = Some(match acc {
+                        None => t,
+                        Some(a) => a.eadd(&t),
+                    });
+                }
+                Tensor(acc.expect("zero-extent reduce"))
+            }
+
+            Op::SliceAx { axis, len } => {
+                let start = self.index(c[0], env)?;
+                let x = self.tensor(c[1], env)?;
+                Tensor(x.slice_ax(*axis, usize::try_from(start).expect("negative slice"), *len))
+            }
+            Op::Reshape(sh) => Tensor(self.tensor(c[0], env)?.reshape(sh.clone())),
+            Op::Bcast(sh) => Tensor(self.tensor(c[0], env)?.bcast(sh.clone())),
+            Op::Pad2d { pad } => Tensor(self.tensor(c[0], env)?.pad2d(*pad)),
+            Op::Im2Col { kh, stride } => Tensor(self.tensor(c[0], env)?.im2col(*kh, *stride)),
+            // Buffers are semantically transparent (cost-only).
+            Op::Buffer { .. } | Op::DblBuffer { .. } => Tensor(self.tensor(c[0], env)?),
+        })
+    }
+}
+
+/// Evaluate `expr` (rooted at its last slot) under `env` with the oracle
+/// backend.
+pub fn eval_expr(expr: &RecExpr, env: &mut Env) -> Result<Tensor, EvalError> {
+    eval_expr_backend(expr, env, &mut Oracle)
+}
+
+/// Evaluate with a custom engine backend (e.g. PJRT-compiled kernels).
+pub fn eval_expr_backend(
+    expr: &RecExpr,
+    env: &mut Env,
+    backend: &mut dyn EngineBackend,
+) -> Result<Tensor, EvalError> {
+    let mut ev = Evaluator { expr, free: expr.free_lvars(), memo: HashMap::new(), backend };
+    ev.tensor(expr.root(), env)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parse_expr;
+
+    fn eval(src: &str, seed: u64) -> Tensor {
+        let e = parse_expr(src).unwrap();
+        e.typecheck().unwrap_or_else(|err| panic!("{src}: {err}"));
+        let mut env = Env::random_for(&e, seed);
+        eval_expr(&e, &mut env).unwrap()
+    }
+
+    #[test]
+    fn invoke_equals_relay_relu() {
+        let a = eval("(relu (input x [128]))", 1);
+        let b = eval("(invoke-relu (relu-engine 128) (input x [128]))", 1);
+        assert!(a.allclose(&b, 0.0));
+    }
+
+    /// Paper Fig. 2, rewrite 1: whole-engine vs loop-over-half-engine.
+    #[test]
+    fn fig2_loop_split_preserves_semantics() {
+        let whole = eval("(invoke-relu (relu-engine 128) (input x [128]))", 2);
+        let split = eval(
+            "(sched-loop i0 0 2 (invoke-relu (relu-engine 64) \
+               (slice 0 64 (imul (lvar i0) 64) (input x [128]))))",
+            2,
+        );
+        assert!(whole.allclose(&split, 0.0));
+    }
+
+    /// Paper Fig. 2, rewrite 2: loop and par are numerically identical.
+    #[test]
+    fn fig2_par_equals_loop() {
+        let l = eval(
+            "(sched-loop i0 0 2 (invoke-relu (relu-engine 64) \
+               (slice 0 64 (imul (lvar i0) 64) (input x [128]))))",
+            3,
+        );
+        let p = eval(
+            "(sched-par i0 0 2 (invoke-relu (relu-engine 64) \
+               (slice 0 64 (imul (lvar i0) 64) (input x [128]))))",
+            3,
+        );
+        assert!(l.allclose(&p, 0.0));
+    }
+
+    #[test]
+    fn sched_reduce_matches_full_matmul() {
+        let full = eval("(dense (input a [4 16]) (weight b [16 4]))", 4);
+        let split = eval(
+            "(sched-reduce r0 2 (invoke-mm (mm-engine 4 8 4) \
+               (slice 1 8 (imul (lvar r0) 8) (input a [4 16])) \
+               (slice 0 8 (imul (lvar r0) 8) (weight b [16 4]))))",
+            4,
+        );
+        assert!(full.allclose(&split, 1e-5));
+    }
+
+    #[test]
+    fn nested_loops_compose() {
+        // Split 128 -> 2 x (2 x 32).
+        let whole = eval("(invoke-relu (relu-engine 128) (input x [128]))", 5);
+        let nested = eval(
+            "(sched-loop a 0 2 (sched-loop b 0 2 (invoke-relu (relu-engine 32) \
+               (slice 0 32 (iadd (imul (lvar a) 64) (imul (lvar b) 32)) (input x [128])))))",
+            5,
+        );
+        assert!(whole.allclose(&nested, 0.0));
+    }
+
+    #[test]
+    fn conv_engine_row_split() {
+        // Full conv vs 2-way output-row split with halo slices.
+        let full = eval(
+            "(invoke-conv (conv-engine 6 6 3 4 3 1) (input x [3 8 8]) (weight w [4 3 3 3]))",
+            6,
+        );
+        let split = eval(
+            "(sched-loop i 1 3 (invoke-conv (conv-engine 2 6 3 4 3 1) \
+               (slice 1 4 (imul (lvar i) 2) (input x [3 8 8])) (weight w [4 3 3 3])))",
+            6,
+        );
+        assert!(full.allclose(&split, 1e-5), "{:?}", full.max_abs_diff(&split));
+    }
+
+    #[test]
+    fn buffers_are_transparent() {
+        let a = eval("(relu (input x [16]))", 7);
+        let b = eval("(buffer sram (relu (input x [16])))", 7);
+        let c = eval("(dbl-buffer dram (relu (input x [16])))", 7);
+        assert!(a.allclose(&b, 0.0));
+        assert!(a.allclose(&c, 0.0));
+    }
+
+    #[test]
+    fn unbound_tensor_errors() {
+        let e = parse_expr("(relu (input nope [4]))").unwrap();
+        let mut env = Env::new();
+        assert!(matches!(eval_expr(&e, &mut env), Err(EvalError::UnboundTensor(_))));
+    }
+
+    #[test]
+    fn memo_consistency_under_loops() {
+        // The same sliced subtree evaluated at different loop indices must
+        // NOT be memo-confused (free-lvar keying).
+        let split = eval(
+            "(sched-loop i0 0 2 (invoke-relu (relu-engine 64) \
+               (slice 0 64 (imul (lvar i0) 64) (input x [128]))))",
+            8,
+        );
+        let whole = eval("(relu (input x [128]))", 8);
+        assert!(whole.allclose(&split, 0.0));
+    }
+}

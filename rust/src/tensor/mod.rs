@@ -1,0 +1,491 @@
+//! Pure-Rust tensor math: the *numeric oracle* for the whole system.
+//!
+//! Everything else that computes — the EngineIR evaluator ([`eval`]), the
+//! PJRT-executed Pallas kernels ([`crate::runtime`]), the simulator's
+//! functional mode — is differential-tested against these straightforward,
+//! obviously-correct loops.
+
+pub mod eval;
+
+pub use eval::{eval_expr, eval_expr_backend, Env, EngineBackend, EvalError, Oracle};
+
+use crate::ir::Shape;
+use std::fmt;
+
+/// A dense row-major `f32` tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Shape,
+    pub data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{}(", self.shape)?;
+        let n = self.data.len().min(8);
+        for (i, v) in self.data[..n].iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{v:.3}")?;
+        }
+        if self.data.len() > n {
+            write!(f, ", …")?;
+        }
+        write!(f, ")")
+    }
+}
+
+impl Tensor {
+    pub fn new(shape: Shape, data: Vec<f32>) -> Self {
+        assert_eq!(shape.numel(), data.len(), "shape/data mismatch");
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Shape) -> Self {
+        let n = shape.numel();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    /// Deterministic pseudo-random tensor (for differential tests): values
+    /// in [-1, 1) derived from `seed` via a splitmix-style hash.
+    pub fn random(shape: Shape, seed: u64) -> Self {
+        let n = shape.numel();
+        let mut data = Vec::with_capacity(n);
+        let mut s = seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(1);
+        for _ in 0..n {
+            s ^= s >> 30;
+            s = s.wrapping_mul(0xbf58476d1ce4e5b9);
+            s ^= s >> 27;
+            s = s.wrapping_mul(0x94d049bb133111eb);
+            s ^= s >> 31;
+            let v = (s >> 11) as f64 / (1u64 << 53) as f64; // [0,1)
+            data.push((v * 2.0 - 1.0) as f32);
+            s = s.wrapping_add(0x9e3779b97f4a7c15);
+        }
+        Tensor { shape, data }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.rank()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1; self.rank()];
+        for i in (0..self.rank().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape.dim(i + 1);
+        }
+        s
+    }
+
+    /// Element access by multi-index (bounds-checked; test/oracle use only).
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        debug_assert_eq!(idx.len(), self.rank());
+        let strides = self.strides();
+        let off: usize = idx.iter().zip(&strides).map(|(i, s)| i * s).sum();
+        self.data[off]
+    }
+
+    /// Max absolute difference; `None` if shapes differ.
+    pub fn max_abs_diff(&self, other: &Tensor) -> Option<f32> {
+        if self.shape != other.shape {
+            return None;
+        }
+        Some(
+            self.data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max),
+        )
+    }
+
+    /// Allclose with absolute tolerance.
+    pub fn allclose(&self, other: &Tensor, tol: f32) -> bool {
+        self.max_abs_diff(other).is_some_and(|d| d <= tol)
+    }
+
+    // ------------------------------------------------------------------
+    // Operators (each mirrors one `infer` rule in `ir::shape`)
+    // ------------------------------------------------------------------
+
+    /// `(m,k) @ (k,n) -> (m,n)`.
+    pub fn matmul(&self, b: &Tensor) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(b.rank(), 2);
+        let (m, k) = (self.shape.dim(0), self.shape.dim(1));
+        let (k2, n) = (b.shape.dim(0), b.shape.dim(1));
+        assert_eq!(k, k2, "matmul inner dims");
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[p * n..(p + 1) * n];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        Tensor::new(Shape::new(&[m, n]), out)
+    }
+
+    pub fn relu(&self) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&v| v.max(0.0)).collect(),
+        }
+    }
+
+    pub fn eadd(&self, b: &Tensor) -> Tensor {
+        assert_eq!(self.shape, b.shape, "eadd shapes");
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().zip(&b.data).map(|(x, y)| x + y).collect(),
+        }
+    }
+
+    /// Bias add: rank-3 `x` gets `b` along dim 0; rank-2 along dim 1.
+    pub fn bias_add(&self, b: &Tensor) -> Tensor {
+        assert_eq!(b.rank(), 1);
+        let mut out = self.clone();
+        match self.rank() {
+            3 => {
+                let (c, h, w) = (self.shape.dim(0), self.shape.dim(1), self.shape.dim(2));
+                assert_eq!(b.numel(), c);
+                for ci in 0..c {
+                    for i in 0..h * w {
+                        out.data[ci * h * w + i] += b.data[ci];
+                    }
+                }
+            }
+            2 => {
+                let (m, n) = (self.shape.dim(0), self.shape.dim(1));
+                assert_eq!(b.numel(), n);
+                for i in 0..m {
+                    for j in 0..n {
+                        out.data[i * n + j] += b.data[j];
+                    }
+                }
+            }
+            r => panic!("bias_add on rank {r}"),
+        }
+        out
+    }
+
+    /// Valid 2-D convolution (pre-padded input): `x:(C,H,W), w:(K,C,KH,KW)`.
+    pub fn conv2d(&self, w: &Tensor, stride: usize) -> Tensor {
+        assert_eq!(self.rank(), 3);
+        assert_eq!(w.rank(), 4);
+        let (c, h, wd) = (self.shape.dim(0), self.shape.dim(1), self.shape.dim(2));
+        let (kout, cin, kh, kw) = (w.shape.dim(0), w.shape.dim(1), w.shape.dim(2), w.shape.dim(3));
+        assert_eq!(c, cin, "conv channels");
+        let oh = (h - kh) / stride + 1;
+        let ow = (wd - kw) / stride + 1;
+        let mut out = vec![0.0f32; kout * oh * ow];
+        for ko in 0..kout {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0.0f32;
+                    for ci in 0..c {
+                        for dy in 0..kh {
+                            let iy = oy * stride + dy;
+                            let xbase = ci * h * wd + iy * wd + ox * stride;
+                            let wbase = ((ko * cin + ci) * kh + dy) * kw;
+                            for dx in 0..kw {
+                                acc += self.data[xbase + dx] * w.data[wbase + dx];
+                            }
+                        }
+                    }
+                    out[(ko * oh + oy) * ow + ox] = acc;
+                }
+            }
+        }
+        Tensor::new(Shape::new(&[kout, oh, ow]), out)
+    }
+
+    /// Max pooling over `(C,H,W)`.
+    pub fn maxpool2d(&self, k: usize, stride: usize) -> Tensor {
+        assert_eq!(self.rank(), 3);
+        let (c, h, w) = (self.shape.dim(0), self.shape.dim(1), self.shape.dim(2));
+        let oh = (h - k) / stride + 1;
+        let ow = (w - k) / stride + 1;
+        let mut out = vec![f32::NEG_INFINITY; c * oh * ow];
+        for ci in 0..c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut m = f32::NEG_INFINITY;
+                    for dy in 0..k {
+                        for dx in 0..k {
+                            m = m.max(
+                                self.data
+                                    [ci * h * w + (oy * stride + dy) * w + (ox * stride + dx)],
+                            );
+                        }
+                    }
+                    out[(ci * oh + oy) * ow + ox] = m;
+                }
+            }
+        }
+        Tensor::new(Shape::new(&[c, oh, ow]), out)
+    }
+
+    pub fn reshape(&self, shape: Shape) -> Tensor {
+        assert_eq!(shape.numel(), self.numel(), "reshape numel");
+        Tensor { shape, data: self.data.clone() }
+    }
+
+    /// Broadcast a rank-1 tensor to `shape` (dim 0 of rank-3, dim 1 of
+    /// rank-2, identity for rank-1) — mirrors `Op::Bcast`.
+    pub fn bcast(&self, shape: Shape) -> Tensor {
+        assert_eq!(self.rank(), 1);
+        match shape.rank() {
+            1 => {
+                assert_eq!(shape.dim(0), self.numel());
+                Tensor { shape, data: self.data.clone() }
+            }
+            2 => {
+                let (m, n) = (shape.dim(0), shape.dim(1));
+                assert_eq!(n, self.numel());
+                let mut data = Vec::with_capacity(m * n);
+                for _ in 0..m {
+                    data.extend_from_slice(&self.data);
+                }
+                Tensor { shape, data }
+            }
+            3 => {
+                let (c, h, w) = (shape.dim(0), shape.dim(1), shape.dim(2));
+                assert_eq!(c, self.numel());
+                let mut data = Vec::with_capacity(c * h * w);
+                for ci in 0..c {
+                    data.extend(std::iter::repeat(self.data[ci]).take(h * w));
+                }
+                Tensor { shape, data }
+            }
+            r => panic!("bcast to rank {r}"),
+        }
+    }
+
+    /// Zero-pad H and W of `(C,H,W)`.
+    pub fn pad2d(&self, pad: usize) -> Tensor {
+        assert_eq!(self.rank(), 3);
+        let (c, h, w) = (self.shape.dim(0), self.shape.dim(1), self.shape.dim(2));
+        let (nh, nw) = (h + 2 * pad, w + 2 * pad);
+        let mut out = vec![0.0f32; c * nh * nw];
+        for ci in 0..c {
+            for y in 0..h {
+                let src = &self.data[ci * h * w + y * w..ci * h * w + (y + 1) * w];
+                let dst = ci * nh * nw + (y + pad) * nw + pad;
+                out[dst..dst + w].copy_from_slice(src);
+            }
+        }
+        Tensor::new(Shape::new(&[c, nh, nw]), out)
+    }
+
+    /// im2col: `(C,H,W) -> (C*KH*KH, OH*OW)` patch matrix, matching
+    /// `Op::Im2Col` — column j holds the receptive field of output pixel j.
+    pub fn im2col(&self, kh: usize, stride: usize) -> Tensor {
+        assert_eq!(self.rank(), 3);
+        let (c, h, w) = (self.shape.dim(0), self.shape.dim(1), self.shape.dim(2));
+        let oh = (h - kh) / stride + 1;
+        let ow = (w - kh) / stride + 1;
+        let rows = c * kh * kh;
+        let cols = oh * ow;
+        let mut out = vec![0.0f32; rows * cols];
+        for ci in 0..c {
+            for dy in 0..kh {
+                for dx in 0..kh {
+                    let r = (ci * kh + dy) * kh + dx;
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            out[r * cols + oy * ow + ox] =
+                                self.data[ci * h * w + (oy * stride + dy) * w + ox * stride + dx];
+                        }
+                    }
+                }
+            }
+        }
+        Tensor::new(Shape::new(&[rows, cols]), out)
+    }
+
+    /// Global average pool `(C,H,W) -> (C,)`.
+    pub fn gap(&self) -> Tensor {
+        assert_eq!(self.rank(), 3);
+        let (c, h, w) = (self.shape.dim(0), self.shape.dim(1), self.shape.dim(2));
+        let mut out = Vec::with_capacity(c);
+        for ci in 0..c {
+            let s: f32 = self.data[ci * h * w..(ci + 1) * h * w].iter().sum();
+            out.push(s / (h * w) as f32);
+        }
+        Tensor::new(Shape::new(&[c]), out)
+    }
+
+    /// Slice `len` elements starting at `start` along `axis`.
+    pub fn slice_ax(&self, axis: usize, start: usize, len: usize) -> Tensor {
+        assert!(axis < self.rank());
+        assert!(start + len <= self.shape.dim(axis), "slice OOB");
+        let outer: usize = self.shape.0[..axis].iter().product();
+        let mid = self.shape.dim(axis);
+        let inner: usize = self.shape.0[axis + 1..].iter().product();
+        let mut out = Vec::with_capacity(outer * len * inner);
+        for o in 0..outer {
+            let base = (o * mid + start) * inner;
+            out.extend_from_slice(&self.data[base..base + len * inner]);
+        }
+        Tensor::new(self.shape.with_dim(axis, len), out)
+    }
+
+    /// Concatenate along `axis` (all other dims equal).
+    pub fn concat_ax(axis: usize, parts: &[Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let first = &parts[0];
+        let total: usize = parts.iter().map(|p| p.shape.dim(axis)).sum();
+        for p in parts {
+            for d in 0..first.rank() {
+                if d != axis {
+                    assert_eq!(p.shape.dim(d), first.shape.dim(d), "concat dims");
+                }
+            }
+        }
+        let outer: usize = first.shape.0[..axis].iter().product();
+        let inner: usize = first.shape.0[axis + 1..].iter().product();
+        let mut out = Vec::with_capacity(outer * total * inner);
+        for o in 0..outer {
+            for p in parts {
+                let mid = p.shape.dim(axis);
+                let base = o * mid * inner;
+                out.extend_from_slice(&p.data[base..base + mid * inner]);
+            }
+        }
+        Tensor::new(first.shape.with_dim(axis, total), out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(d: &[usize]) -> Shape {
+        Shape::new(d)
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Tensor::random(s(&[3, 3]), 1);
+        let mut eye = Tensor::zeros(s(&[3, 3]));
+        for i in 0..3 {
+            eye.data[i * 3 + i] = 1.0;
+        }
+        assert!(a.matmul(&eye).allclose(&a, 1e-6));
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Tensor::new(s(&[2, 2]), vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::new(s(&[2, 2]), vec![1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(a.matmul(&b).data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn relu_clamps() {
+        let t = Tensor::new(s(&[4]), vec![-1.0, 0.0, 2.0, -3.0]);
+        assert_eq!(t.relu().data, vec![0.0, 0.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn conv_matches_im2col_matmul() {
+        // The algebraic identity behind rewrite R4.
+        let x = Tensor::random(s(&[3, 8, 8]), 7);
+        let w = Tensor::random(s(&[4, 3, 3, 3]), 8);
+        let direct = x.conv2d(&w, 1);
+        let col = x.im2col(3, 1); // (27, 36)
+        let wmat = w.reshape(s(&[4, 27]));
+        let viamm = wmat.matmul(&col).reshape(s(&[4, 6, 6]));
+        assert!(direct.allclose(&viamm, 1e-4), "diff={:?}", direct.max_abs_diff(&viamm));
+    }
+
+    #[test]
+    fn conv_stride_2() {
+        let x = Tensor::random(s(&[2, 7, 7]), 3);
+        let w = Tensor::random(s(&[3, 2, 3, 3]), 4);
+        let y = x.conv2d(&w, 2);
+        assert_eq!(y.shape, s(&[3, 3, 3]));
+        // spot-check one output against a hand loop
+        let mut acc = 0.0;
+        for ci in 0..2 {
+            for dy in 0..3 {
+                for dx in 0..3 {
+                    acc += x.at(&[ci, 2 + dy, 4 + dx]) * w.at(&[1, ci, dy, dx]);
+                }
+            }
+        }
+        assert!((y.at(&[1, 1, 2]) - acc).abs() < 1e-5);
+    }
+
+    #[test]
+    fn pad_then_conv_keeps_size() {
+        let x = Tensor::random(s(&[2, 6, 6]), 11);
+        let w = Tensor::random(s(&[2, 2, 3, 3]), 12);
+        let padded = x.pad2d(1).conv2d(&w, 1);
+        assert_eq!(padded.shape, s(&[2, 6, 6]));
+    }
+
+    #[test]
+    fn slice_concat_roundtrip() {
+        let x = Tensor::random(s(&[4, 6]), 5);
+        for axis in 0..2 {
+            let n = x.shape.dim(axis);
+            let a = x.slice_ax(axis, 0, n / 2);
+            let b = x.slice_ax(axis, n / 2, n - n / 2);
+            let back = Tensor::concat_ax(axis, &[a, b]);
+            assert!(back.allclose(&x, 0.0));
+        }
+    }
+
+    #[test]
+    fn maxpool_known() {
+        let x = Tensor::new(s(&[1, 2, 2]), vec![1.0, 5.0, 3.0, 2.0]);
+        assert_eq!(x.maxpool2d(2, 2).data, vec![5.0]);
+    }
+
+    #[test]
+    fn bias_add_both_ranks() {
+        let x3 = Tensor::zeros(s(&[2, 2, 2]));
+        let b = Tensor::new(s(&[2]), vec![1.0, 2.0]);
+        let y = x3.bias_add(&b);
+        assert_eq!(y.data, vec![1.0, 1.0, 1.0, 1.0, 2.0, 2.0, 2.0, 2.0]);
+        let x2 = Tensor::zeros(s(&[2, 2]));
+        let y2 = x2.bias_add(&b);
+        assert_eq!(y2.data, vec![1.0, 2.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn gap_averages() {
+        let x = Tensor::new(s(&[2, 1, 2]), vec![1.0, 3.0, 10.0, 20.0]);
+        assert_eq!(x.gap().data, vec![2.0, 15.0]);
+    }
+
+    #[test]
+    fn bcast_rank3() {
+        let b = Tensor::new(s(&[2]), vec![1.0, 2.0]);
+        let y = b.bcast(s(&[2, 1, 2]));
+        assert_eq!(y.data, vec![1.0, 1.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn random_is_deterministic() {
+        let a = Tensor::random(s(&[16]), 42);
+        let b = Tensor::random(s(&[16]), 42);
+        assert_eq!(a.data, b.data);
+        let c = Tensor::random(s(&[16]), 43);
+        assert_ne!(a.data, c.data);
+    }
+}

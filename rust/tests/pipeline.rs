@@ -1,0 +1,164 @@
+//! Integration: the full pipeline stages against each other.
+//!
+//! * Fig. 1 golden: Relay conv reified to engine + schedule + storage;
+//! * Fig. 2 golden: the exact three programs of the paper's figure coexist
+//!   in one e-class;
+//! * analytic cost model vs the simulator (they must agree on ordering);
+//! * PJRT runtime vs the oracle on a full workload design (needs
+//!   `make artifacts`; skips otherwise);
+//! * property: parser/printer round-trips on every enumerated sample.
+
+use hwsplit::coordinator::{explore, ExploreConfig, RuleSet};
+use hwsplit::cost::{cost_of, CostParams};
+use hwsplit::egraph::{Runner, RunnerLimits};
+use hwsplit::extract::sample_design;
+use hwsplit::ir::{parse_expr, Op};
+use hwsplit::lower::{lower, lower_default, LowerOptions};
+use hwsplit::relay::workloads;
+use hwsplit::rewrites;
+use hwsplit::runtime::{default_artifact_dir, EngineRuntime, PjrtBackend};
+use hwsplit::sim::{simulate, SimConfig};
+use hwsplit::tensor::{eval_expr, eval_expr_backend, Env};
+
+/// Paper Fig. 1: `nn.conv2d` reified into a concrete engine instantiation
+/// with explicit storage.
+#[test]
+fn fig1_conv2d_reification_golden() {
+    let w = workloads::convblock();
+    let lo = lower(&w.expr, LowerOptions { buffers: true });
+    let txt = lo.to_string();
+    assert!(txt.contains("(conv-engine 16 16 3 8 3 1)"), "engine instantiation: {txt}");
+    assert!(txt.contains("(buffer sram (invoke-conv"), "output storage: {txt}");
+    assert!(txt.contains("(pad2d 1"), "padding made explicit: {txt}");
+    // And it still computes conv+bias+relu.
+    let a = eval_expr(&w.expr, &mut Env::random_for(&w.expr, 3)).unwrap();
+    let b = eval_expr(&lo, &mut Env::random_for(&lo, 3)).unwrap();
+    assert!(a.allclose(&b, 1e-4));
+}
+
+/// Paper Fig. 2: after rewrite 1 and rewrite 2, the three programs of the
+/// figure (whole engine / loop over half engine / parallel half engines)
+/// are all members of the same e-class.
+#[test]
+fn fig2_three_programs_share_one_eclass() {
+    let expr = parse_expr("(invoke-relu (relu-engine 128) (input x [128]))").unwrap();
+    let mut runner = Runner::new(expr, rewrites::fig2_rules());
+    runner.run(4);
+    let eg = &runner.egraph;
+    let root = eg.find_ref(runner.root);
+    let kinds: Vec<&Op> = eg.class(root).nodes.iter().map(|n| &n.op).collect();
+    assert!(kinds.iter().any(|op| matches!(op, Op::InvokeRelu)), "original member");
+    assert!(
+        kinds.iter().any(|op| matches!(op, Op::SchedLoop { extent: 2, .. })),
+        "rewrite-1 member (loop)"
+    );
+    assert!(
+        kinds.iter().any(|op| matches!(op, Op::SchedPar { extent: 2, .. })),
+        "rewrite-2 member (par)"
+    );
+}
+
+/// The analytic model and the simulator must agree on the Fig. 2 ordering
+/// (they are independent implementations of the same hardware story).
+#[test]
+fn cost_model_and_simulator_agree_on_orderings() {
+    let whole = parse_expr("(invoke-relu (relu-engine 128) (input x [128]))").unwrap();
+    let looped = parse_expr(
+        "(sched-loop i 0 4 (invoke-relu (relu-engine 32) \
+          (slice 0 32 (imul (lvar i) 32) (input x [128]))))",
+    )
+    .unwrap();
+    let parred = parse_expr(
+        "(sched-par i 0 4 (invoke-relu (relu-engine 32) \
+          (slice 0 32 (imul (lvar i) 32) (input x [128]))))",
+    )
+    .unwrap();
+    let p = CostParams::default();
+    let cfg = SimConfig::default();
+    let (cw, cl, cp) = (cost_of(&whole, &p), cost_of(&looped, &p), cost_of(&parred, &p));
+    let (sw, sl, sp) = (
+        simulate(&whole, &cfg).cycles,
+        simulate(&looped, &cfg).cycles,
+        simulate(&parred, &cfg).cycles,
+    );
+    // Latency ordering: loop slowest in both models.
+    assert!(cl.latency > cw.latency && sl > sw);
+    assert!(cp.latency < cl.latency && sp < sl);
+    // Area ordering: loop smallest, par == whole-ish.
+    assert!(cl.area < cw.area);
+}
+
+/// Full-stack: an enumerated LeNet design runs its engine invocations on
+/// PJRT-compiled Pallas kernels and matches the oracle bit-for-bit-ish.
+#[test]
+fn pjrt_executes_enumerated_mlp_design() {
+    let Ok(rt) = EngineRuntime::new(default_artifact_dir()) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let w = workloads::mlp();
+    let initial = lower_default(&w.expr);
+    let mut runner = Runner::new(initial.clone(), rewrites::paper_rules());
+    runner.run(3);
+
+    // The initial design always has full artifact coverage.
+    let mut backend = PjrtBackend::new(rt);
+    let env = Env::random_for(&initial, 9);
+    let want = eval_expr(&initial, &mut env.clone()).unwrap();
+    let got = eval_expr_backend(&initial, &mut env.clone(), &mut backend).unwrap();
+    assert!(got.allclose(&want, 1e-3), "initial: {:?}", got.max_abs_diff(&want));
+
+    // And a rewritten design with schedules, via constrained extraction.
+    let cand =
+        hwsplit::runtime::extract_covered(&runner.egraph, runner.root, &backend.runtime, true)
+            .expect("an artifact-covered design must exist (the initial one is covered)");
+    assert!(
+        cand.count(|op| op.is_sched()) > 0,
+        "area-leaning covered extraction should pick a split design"
+    );
+    let env = Env::random_for(&cand, 9);
+    let want = eval_expr(&cand, &mut env.clone()).unwrap();
+    let got = eval_expr_backend(&cand, &mut env.clone(), &mut backend).unwrap();
+    assert!(got.allclose(&want, 1e-3), "split design diverged:\n{cand}");
+}
+
+/// Parser/printer round-trip holds for arbitrary enumerated designs, not
+/// just hand-written ones.
+#[test]
+fn printer_parser_roundtrip_on_sampled_designs() {
+    let w = workloads::convblock();
+    let lowered = lower_default(&w.expr);
+    let mut runner = Runner::new(lowered, rewrites::paper_rules())
+        .with_limits(RunnerLimits { max_nodes: 20_000, ..Default::default() });
+    runner.run(4);
+    for seed in 0..10 {
+        let d = sample_design(&runner.egraph, runner.root, seed);
+        let text = d.to_string();
+        let back = parse_expr(&text).unwrap_or_else(|e| panic!("reparse failed: {e}\n{text}"));
+        assert_eq!(back.to_string(), text);
+    }
+}
+
+/// The coordinator end-to-end on a conv workload: frontier non-empty,
+/// baseline computed, and all sim utilizations sane.
+#[test]
+fn explore_pipeline_invariants() {
+    let w = workloads::convblock();
+    let ex = explore(
+        &w,
+        &ExploreConfig {
+            iters: 4,
+            samples: 16,
+            rules: RuleSet::Paper,
+            limits: RunnerLimits { max_nodes: 25_000, ..Default::default() },
+            ..Default::default()
+        },
+    );
+    assert!(!ex.frontier.is_empty());
+    assert!(ex.baseline.cost.area > 0.0);
+    for d in &ex.designs {
+        assert!(d.sim.cycles > 0.0);
+        assert!((0.0..=1.0).contains(&d.sim.utilization));
+        assert!(d.point.cost.latency.is_finite());
+    }
+}

@@ -1,0 +1,164 @@
+//! Integration: rewrite soundness by differential testing.
+//!
+//! For every workload and every rule set: lower, enumerate, sample designs
+//! from the e-graph, and check that each extracted design computes exactly
+//! the same function as the original Relay graph on random inputs. This is
+//! the repo's strongest end-to-end guarantee: if any rewrite, the e-graph,
+//! extraction, or the evaluator were unsound, some sampled design would
+//! diverge.
+
+use hwsplit::coordinator::RuleSet;
+use hwsplit::egraph::{Runner, RunnerLimits};
+use hwsplit::extract::{sample_design, Extractor};
+use hwsplit::lower::lower_default;
+use hwsplit::prop;
+use hwsplit::relay::all_workloads;
+use hwsplit::tensor::{eval_expr, Env};
+
+fn check_workload(name: &str, rules: RuleSet, iters: usize, samples: u64) {
+    let w = all_workloads().into_iter().find(|w| w.name == name).unwrap();
+    let lowered = lower_default(&w.expr);
+    let mut runner = Runner::new(lowered, rules.rules())
+        .with_limits(RunnerLimits { max_nodes: 40_000, ..Default::default() });
+    runner.run(iters);
+    let (eg, root) = (&runner.egraph, runner.root);
+
+    let want = eval_expr(&w.expr, &mut Env::random_for(&w.expr, 77)).unwrap();
+    // Relative tolerance: deep split designs legally reassociate f32 sums
+    // (sched-reduce), so error scales with output magnitude.
+    let tol = 1e-4_f32.max(1e-5 * want.data.iter().fold(0.0f32, |m, v| m.max(v.abs())));
+    // Greedy extractions.
+    type CostFn = fn(
+        &hwsplit::egraph::EGraph,
+        &hwsplit::ir::Node,
+        &dyn Fn(hwsplit::egraph::Id) -> f64,
+    ) -> f64;
+    let costs: [(&str, CostFn); 3] = [
+        ("latency", hwsplit::extract::latency_cost),
+        ("area", hwsplit::extract::area_cost),
+        ("size", hwsplit::extract::size_cost),
+    ];
+    for (tag, cost) in costs {
+        let d = Extractor::new(eg, cost).extract(eg, root);
+        d.typecheck().unwrap_or_else(|e| panic!("{name}/{tag}: ill-typed: {e}"));
+        let got = eval_expr(&d, &mut Env::random_for(&d, 77)).unwrap();
+        assert!(
+            want.allclose(&got, tol),
+            "{name}/{tag} diverged: {:?}",
+            want.max_abs_diff(&got)
+        );
+    }
+    // Random samples.
+    for seed in 0..samples {
+        let d = sample_design(eg, root, seed);
+        d.typecheck().unwrap_or_else(|e| panic!("{name}/sample{seed}: ill-typed: {e}"));
+        let got = eval_expr(&d, &mut Env::random_for(&d, 77)).unwrap();
+        assert!(
+            want.allclose(&got, tol),
+            "{name}/sample{seed} diverged: {:?}\n{d}",
+            want.max_abs_diff(&got)
+        );
+    }
+}
+
+#[test]
+fn relu128_paper_rules_sound() {
+    check_workload("relu128", RuleSet::Paper, 8, 24);
+}
+
+#[test]
+fn convblock_paper_rules_sound() {
+    check_workload("convblock", RuleSet::Paper, 4, 12);
+}
+
+#[test]
+fn ffn_block_all_rules_sound() {
+    check_workload("ffn_block", RuleSet::All, 4, 12);
+}
+
+#[test]
+fn resnet_block_paper_rules_sound() {
+    check_workload("resnet_block", RuleSet::Paper, 3, 8);
+}
+
+#[test]
+fn mlp_all_rules_sound() {
+    check_workload("mlp", RuleSet::All, 4, 10);
+}
+
+#[test]
+fn lenet_paper_rules_sound() {
+    check_workload("lenet", RuleSet::Paper, 3, 6);
+}
+
+/// Property: random rule subsets on random workloads stay sound.
+#[test]
+fn random_rule_subsets_sound() {
+    prop::check("random-rule-subsets", 6, |rng| {
+        let all = hwsplit::rewrites::all_rules();
+        let workloads = all_workloads();
+        let w = &workloads[rng.below(workloads.len())];
+        // Pick a random half of the rules.
+        let rules: Vec<_> = all.into_iter().filter(|_| rng.f64() < 0.5).collect();
+        if rules.is_empty() {
+            return;
+        }
+        let lowered = lower_default(&w.expr);
+        let mut runner = Runner::new(lowered, rules)
+            .with_limits(RunnerLimits { max_nodes: 15_000, ..Default::default() });
+        runner.run(3);
+        let want = eval_expr(&w.expr, &mut Env::random_for(&w.expr, 5)).unwrap();
+        let tol =
+            1e-4_f32.max(1e-5 * want.data.iter().fold(0.0f32, |m, v| m.max(v.abs())));
+        for seed in 0..4 {
+            let d = sample_design(&runner.egraph, runner.root, seed);
+            let got = eval_expr(&d, &mut Env::random_for(&d, 5)).unwrap();
+            assert!(want.allclose(&got, tol), "{} diverged under subset", w.name);
+        }
+    });
+}
+
+/// Property: structural e-graph invariants hold after arbitrary interleaved
+/// rewrite/rebuild sequences (canonical class ids, live children, memo
+/// pointing at live classes).
+#[test]
+fn egraph_invariants_under_random_rewriting() {
+    prop::check("egraph-invariants", 8, |rng| {
+        let workloads = all_workloads();
+        let w = &workloads[rng.below(workloads.len())];
+        let lowered = lower_default(&w.expr);
+        let all = hwsplit::rewrites::all_rules();
+        let mut eg = hwsplit::egraph::EGraph::new();
+        eg.add_expr(&lowered);
+        // Random interleaving of single-rule application rounds.
+        for _ in 0..rng.range(2, 5) {
+            let rule = &all[rng.below(all.len())];
+            let mut matches = rule.search(&eg);
+            matches.truncate(500);
+            for (id, s) in matches {
+                rule.apply(&mut eg, id, &s);
+            }
+            if rng.f64() < 0.7 {
+                eg.rebuild();
+                eg.check_invariants();
+            }
+        }
+        eg.rebuild();
+        eg.check_invariants();
+    });
+}
+
+/// Property: the design-count lower bound never decreases across rewrite
+/// iterations (the e-graph only gains equivalences).
+#[test]
+fn design_count_is_monotone() {
+    let w = all_workloads().into_iter().find(|w| w.name == "convblock").unwrap();
+    let lowered = lower_default(&w.expr);
+    let mut runner = Runner::new(lowered, RuleSet::Paper.rules())
+        .with_limits(RunnerLimits { max_nodes: 20_000, ..Default::default() });
+    let report = runner.run(5);
+    let counts: Vec<f64> = report.iterations.iter().map(|i| i.designs_lower_bound).collect();
+    for pair in counts.windows(2) {
+        assert!(pair[1] >= pair[0], "design count regressed: {counts:?}");
+    }
+}
