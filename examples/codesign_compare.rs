@@ -5,18 +5,19 @@
 //! For each workload, prints the baseline point and the best enumerated
 //! design at (a) the baseline's area budget and (b) unlimited area — the
 //! concrete version of the paper's claim that rewriting finds "more
-//! complex (but potentially more profitable) splits".
+//! complex (but potentially more profitable) splits". Each workload gets
+//! one `Session`: the latency-leaning and area-leaning questions are two
+//! queries over the same enumeration.
 //!
 //! ```sh
 //! cargo run --release --example codesign_compare
 //! ```
 
-use hwsplit::coordinator::{explore, ExploreConfig, RuleSet};
-use hwsplit::egraph::RunnerLimits;
+use hwsplit::prelude::*;
 use hwsplit::relay::all_workloads;
 use hwsplit::report::{fmt_f64, Table};
 
-fn main() {
+fn main() -> hwsplit::Result<()> {
     let mut t = Table::new(
         "enumerated splits vs one-engine-per-kernel-type baseline",
         &[
@@ -32,31 +33,33 @@ fn main() {
     );
 
     for w in all_workloads() {
-        let cfg = ExploreConfig {
-            iters: 5,
-            samples: 48,
-            rules: RuleSet::Paper,
-            limits: RunnerLimits { max_nodes: 50_000, ..Default::default() },
-            ..Default::default()
-        };
-        let ex = explore(&w, &cfg);
-        let b = &ex.baseline.cost;
+        let mut session = Session::builder()
+            .workload(w.clone())
+            .rules(RuleSet::Paper)
+            .iters(5)
+            .limits(RunnerLimits { max_nodes: 50_000, ..Default::default() })
+            .build()?;
+        // Two objectives, one enumeration.
+        let fast = session.query(&Query::new().objective(Objective::Latency).samples(48))?;
+        let small = session.query(&Query::new().objective(Objective::Area).samples(48))?;
+        assert_eq!(session.enumeration_count(), 1);
+        let b = &fast.baseline.cost;
 
         // Best latency among designs within the baseline's area budget.
-        let within = ex
+        let within = fast
             .designs
             .iter()
             .filter(|d| d.point.cost.area <= b.area * 1.0001)
             .map(|d| d.point.cost.latency)
             .fold(f64::INFINITY, f64::min);
         // Best latency anywhere.
-        let best = ex
+        let best = fast
             .designs
             .iter()
             .map(|d| d.point.cost.latency)
             .fold(f64::INFINITY, f64::min);
         // Smallest area at baseline-or-better latency.
-        let min_area = ex
+        let min_area = small
             .designs
             .iter()
             .filter(|d| d.point.cost.latency <= b.latency * 1.0001)
@@ -83,4 +86,5 @@ fn main() {
         "\nspeedup  = baseline latency / best enumerated latency at the same area budget\n\
          area-ratio = baseline area / smallest enumerated area at the same latency"
     );
+    Ok(())
 }

@@ -1,7 +1,8 @@
 //! End-to-end driver (experiment E5): prove all three layers compose.
 //!
-//! 1. The `mlp` workload is reified to its initial EngineIR design and a
-//!    rewritten (split) variant is chosen from the e-graph;
+//! 1. An `mlp` `Session` reifies the workload and enumerates its design
+//!    space (once); the initial design and a rewritten (split) variant are
+//!    extracted from the session's e-graph;
 //! 2. both designs execute **on the PJRT runtime**: every engine
 //!    invocation runs an AOT-compiled Pallas kernel (Layer 1) loaded from
 //!    `artifacts/` (built once by `make artifacts`); the software schedule
@@ -9,45 +10,46 @@
 //! 3. results are validated against the pure-Rust oracle, and a small
 //!    batched workload reports latency/throughput.
 //!
+//! Needs a `--features pjrt` build; the default (stub) build and missing
+//! artifacts both exit gracefully with the typed error.
+//!
 //! ```sh
-//! make artifacts && cargo run --release --example e2e_inference
+//! make artifacts && cargo run --release --features pjrt --example e2e_inference
 //! ```
 
-use hwsplit::egraph::Runner;
+use hwsplit::prelude::*;
 use hwsplit::extract::sample_design;
-use hwsplit::ir::RecExpr;
-use hwsplit::lower::lower_default;
-use hwsplit::relay::workloads;
-use hwsplit::rewrites;
 use hwsplit::runtime::{default_artifact_dir, extract_covered, EngineRuntime, PjrtBackend};
 use hwsplit::tensor::{eval_expr, eval_expr_backend, Env, Tensor};
 use std::time::Instant;
 
-fn main() {
-    let w = workloads::mlp();
-    let initial = lower_default(&w.expr);
-
+fn main() -> hwsplit::Result<()> {
     let rt = match EngineRuntime::new(default_artifact_dir()) {
         Ok(rt) => rt,
         Err(e) => {
-            eprintln!("cannot open artifacts ({e:#}); run `make artifacts` first");
+            eprintln!("cannot open the PJRT runtime ({e}); run `make artifacts` and build \
+                       with --features pjrt (requires vendoring the `xla` crate — see \
+                       Cargo.toml)");
             std::process::exit(2);
         }
     };
     println!("artifact library: {} engines available", rt.available().len());
 
+    let mut session =
+        Session::builder().workload(workloads::mlp()).rules(RuleSet::Paper).iters(4).build()?;
+    let initial = session.lowered().clone();
+
     // Find a *rewritten* design whose engines are all in the library:
-    // constrained extraction (prohibitive cost on uncovered engines),
-    // leaning small so the design genuinely uses schedules; fall back to
-    // random samples if the greedy pick has no schedule.
-    let mut runner = Runner::new(initial.clone(), rewrites::paper_rules());
-    runner.run(4);
-    let mut split: Option<RecExpr> =
-        extract_covered(&runner.egraph, runner.root, &rt, true)
-            .filter(|d| d.count(|op| op.is_sched()) > 0);
+    // constrained extraction over the session's e-graph (prohibitive cost
+    // on uncovered engines), leaning small so the design genuinely uses
+    // schedules; fall back to random samples if the greedy pick has no
+    // schedule.
+    let en = session.enumerate()?;
+    let mut split: Option<RecExpr> = extract_covered(&en.egraph, en.root, &rt, true)
+        .filter(|d| d.count(|op| op.is_sched()) > 0);
     if split.is_none() {
         for seed in 0..400u64 {
-            let cand = sample_design(&runner.egraph, runner.root, seed);
+            let cand = sample_design(&en.egraph, en.root, seed);
             if cand.count(|op| op.is_sched()) > 0
                 && cand.engines().iter().all(|e| rt.has_engine(e))
             {
@@ -70,8 +72,8 @@ fn main() {
 
         // Correctness: PJRT vs oracle on one input.
         let env0 = Env::random_for(&design, 42);
-        let want = eval_expr(&design, &mut env0.clone()).unwrap();
-        let got = eval_expr_backend(&design, &mut env0.clone(), &mut backend).unwrap();
+        let want = eval_expr(&design, &mut env0.clone())?;
+        let got = eval_expr_backend(&design, &mut env0.clone(), &mut backend)?;
         let diff = got.max_abs_diff(&want).unwrap();
         println!("   max |PJRT - oracle| = {diff:.3e}");
         assert!(diff < 1e-3, "numerics diverged");
@@ -84,7 +86,7 @@ fn main() {
         for i in 0..batch {
             let mut env = env0.clone();
             env.bind("x", Tensor::random(hwsplit::ir::Shape::new(&[1, 784]), 1000 + i));
-            let out = eval_expr_backend(&design, &mut env, &mut backend).unwrap();
+            let out = eval_expr_backend(&design, &mut env, &mut backend)?;
             checksum += out.data.iter().sum::<f32>();
         }
         let dt = t0.elapsed();
@@ -102,4 +104,5 @@ fn main() {
         backend.runtime.compiled()
     );
     println!("e2e OK");
+    Ok(())
 }

@@ -1,40 +1,40 @@
 //! Full design-space exploration of the LeNet workload: the paper's §3
-//! evaluation methodology made concrete.
+//! evaluation methodology made concrete, on the `Session` API.
 //!
-//! Pipeline: Relay graph → EngineIR reification → rewrite enumeration →
-//! diverse design sampling → analytic + simulated evaluation on a worker
-//! pool → Pareto frontier vs the one-engine-per-kernel-type baseline.
+//! Pipeline: Relay graph → EngineIR reification → rewrite enumeration
+//! (once) → per-query diverse design sampling → evaluation on the chosen
+//! backend over a worker pool → Pareto frontier vs the
+//! one-engine-per-kernel-type baseline.
 //!
 //! ```sh
 //! cargo run --release --example explore_lenet
 //! ```
 
-use hwsplit::coordinator::{explore, ExploreConfig, RuleSet};
-use hwsplit::egraph::RunnerLimits;
-use hwsplit::relay::workloads;
+use hwsplit::prelude::*;
 use hwsplit::report::{fmt_f64, Table};
 
-fn main() {
+fn main() -> hwsplit::Result<()> {
     let w = workloads::lenet();
-    let cfg = ExploreConfig {
-        iters: 5,
-        samples: 48,
-        rules: RuleSet::Paper,
-        limits: RunnerLimits { max_nodes: 60_000, ..Default::default() },
-        ..Default::default()
-    };
-    println!("exploring `{}` ({} Relay ops) with {:?} rules…\n", w.name, w.expr.len(), cfg.rules);
-    let ex = explore(&w, &cfg);
+    println!("exploring `{}` ({} Relay ops)…\n", w.name, w.expr.len());
+    let mut session = Session::builder()
+        .workload(w)
+        .rules(RuleSet::Paper)
+        .iters(5)
+        .limits(RunnerLimits { max_nodes: 60_000, ..Default::default() })
+        .build()?;
+
+    // One simulator-backed query drives both experiment tables below.
+    let ev = session.query(&Query::new().backend(Backend::Sim).samples(48))?;
 
     println!("enumeration:");
-    println!("{}", ex.report.table());
+    println!("{}", session.enumerate()?.report.table());
 
     // Diversity: the structural spread of the sampled designs (E2).
     let mut t = Table::new(
         "design diversity (E2)",
         &["origin", "engines", "instances", "invokes", "depth", "loops", "pars", "bufKB"],
     );
-    for d in &ex.designs {
+    for d in &ev.designs {
         let s = &d.point.stats;
         t.row(&[
             d.point.origin.clone(),
@@ -50,7 +50,7 @@ fn main() {
     print!("{}", t.render());
 
     // Mean pairwise distance — one number for "how diverse".
-    let pts = &ex.designs;
+    let pts = &ev.designs;
     let mut dist = 0.0;
     let mut n = 0;
     for i in 0..pts.len() {
@@ -66,12 +66,13 @@ fn main() {
         "Pareto frontier vs one-engine-per-kernel-type baseline (E3)",
         &["design", "area", "latency", "sim-cycles", "util%"],
     );
-    for p in &ex.frontier {
-        let sim = ex
+    for p in &ev.frontier {
+        let sim = ev
             .designs
             .iter()
             .find(|d| d.point.origin == p.origin)
-            .map(|d| (d.sim.cycles, d.sim.utilization));
+            .and_then(|d| d.sim.as_ref())
+            .map(|s| (s.cycles, s.utilization));
         f.row(&[
             p.origin.clone(),
             fmt_f64(p.cost.area),
@@ -82,11 +83,23 @@ fn main() {
     }
     f.row(&[
         "BASELINE (FPL'19)".into(),
-        fmt_f64(ex.baseline.cost.area),
-        fmt_f64(ex.baseline.cost.latency),
+        fmt_f64(ev.baseline.cost.area),
+        fmt_f64(ev.baseline.cost.latency),
         String::new(),
         String::new(),
     ]);
     print!("{}", f.render());
-    println!("{}", ex.frontier_vs_baseline());
+    println!("{}", ev.frontier_vs_baseline());
+
+    // A second scenario against the same enumeration: what would the
+    // frontier look like on a bandwidth-starved substrate? Only
+    // extraction+evaluation re-run — the e-graph is reused.
+    let starved = CostParams { dram_bw: 1.0, sram_bw: 8.0, ..Default::default() };
+    let ev2 = session.query(&Query::new().samples(48).params(starved))?;
+    println!(
+        "\nbandwidth-starved scenario (same e-graph, {} enumeration(s) total): {}",
+        session.enumeration_count(),
+        ev2.frontier_vs_baseline()
+    );
+    Ok(())
 }

@@ -1,54 +1,77 @@
-//! Quickstart: the paper's Fig. 2, replayed end to end.
+//! Quickstart: the paper's Fig. 2 economics through the `Session` API.
 //!
-//! A single 128-wide ReLU invocation is enumerated with the paper's two
-//! rewrites (shrink-engine-add-loop; parallelize-loop-add-hardware); the
-//! e-graph then holds the whole time/space-multiplexing spectrum at once.
+//! A single 128-wide ReLU invocation is enumerated **once** with the
+//! paper's two rewrites (shrink-engine-add-loop; parallelize-loop-add-
+//! hardware); the session then answers several different queries — fastest
+//! design, smallest design, simulator-checked designs, functionally-checked
+//! designs — against the same cached e-graph.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
-use hwsplit::cost::{analyze, CostParams};
-use hwsplit::egraph::Runner;
-use hwsplit::extract::{sample_designs, Extractor};
-use hwsplit::ir::parse_expr;
-use hwsplit::rewrites;
-use hwsplit::tensor::{eval_expr, Env};
+use hwsplit::prelude::*;
 
-fn main() {
+fn main() -> hwsplit::Result<()> {
     // The Fig. 2 starting point: one invocation of one 128-wide ReLU unit.
-    let program = parse_expr("(invoke-relu (relu-engine 128) (input x [128]))").unwrap();
-    println!("initial program:\n  {program}\n");
+    let w = workloads::relu128();
+    println!("workload:\n  {}\n", w.expr);
 
-    // Enumerate with the paper's two rewrites.
-    let mut runner = Runner::new(program.clone(), rewrites::fig2_rules());
-    let report = runner.run(8);
-    println!("e-graph growth per rewrite iteration:");
-    println!("{}", report.table());
+    // Build the session: lowering happens now, enumeration lazily on the
+    // first query.
+    let mut session = Session::builder().workload(w.clone()).rules(RuleSet::Fig2).build()?;
 
-    // Pull out some of the equivalent designs the e-graph now represents.
-    let params = CostParams::default();
-    let points = sample_designs(&runner.egraph, runner.root, 16, &params);
-    println!("{} distinct designs sampled; a few of them:\n", points.len());
-    for p in points.iter().take(6) {
-        println!("  area={:>8.1} latency={:>7.1}  {}", p.cost.area, p.cost.latency, p.expr);
+    // Query 1 — fastest design (enumerates the e-graph, once).
+    let fast = session.query(&Query::new().objective(Objective::Latency).samples(16))?;
+    let best_fast = fast.best().expect("nonempty space");
+    println!(
+        "latency-optimal: area={:>8.1} latency={:>7.1}\n  {}\n",
+        best_fast.point.cost.area, best_fast.point.cost.latency, best_fast.point.expr
+    );
+
+    // Query 2 — smallest design. Same e-graph, no re-enumeration.
+    let small = session.query(&Query::new().objective(Objective::Area).samples(16))?;
+    let best_small = small.best().expect("nonempty space");
+    println!(
+        "area-optimal:    area={:>8.1} latency={:>7.1}\n  {}\n",
+        best_small.point.cost.area, best_small.point.cost.latency, best_small.point.expr
+    );
+
+    // Query 3 — the simulator backend plays each schedule out over a
+    // finite engine pool.
+    let simmed = session.query(&Query::new().backend(Backend::Sim).samples(16))?;
+    println!("{} designs under the simulator; a few of them:", simmed.designs.len());
+    for d in simmed.designs.iter().take(6) {
+        let sim = d.sim.as_ref().expect("sim backend reports");
+        println!(
+            "  area={:>8.1} latency={:>7.1} sim-cycles={:>7.0} util={:>3.0}%  {}",
+            d.point.cost.area,
+            d.point.cost.latency,
+            sim.cycles,
+            sim.utilization * 100.0,
+            d.point.expr
+        );
     }
 
-    // Every design computes the same function (differential check).
-    let want = eval_expr(&program, &mut Env::random_for(&program, 7)).unwrap();
-    for p in &points {
-        let got = eval_expr(&p.expr, &mut Env::random_for(&p.expr, 7)).unwrap();
-        assert!(want.allclose(&got, 1e-5), "a sampled design diverged!");
+    // Query 4 — the interpreter backend produces functional outputs;
+    // every design must compute the same function as the workload.
+    let checked = session.query(&Query::new().backend(Backend::Interp).samples(16))?;
+    let want = hwsplit::tensor::eval_expr(
+        &w.expr,
+        &mut hwsplit::tensor::Env::random_for(&w.expr, 0),
+    )?;
+    for d in &checked.designs {
+        let got = d.output.as_ref().expect("interp backend outputs");
+        assert!(want.allclose(got, 1e-5), "a sampled design diverged!");
     }
-    println!("\nall {} sampled designs are functionally identical ✔", points.len());
+    println!(
+        "\nall {} designs are functionally identical ✔ (checked on the interp backend)",
+        checked.designs.len()
+    );
 
-    // The two extremes the paper describes: lots of hardware vs deep loops.
-    let fast = Extractor::new(&runner.egraph, hwsplit::extract::latency_cost)
-        .extract(&runner.egraph, runner.root);
-    let small = Extractor::new(&runner.egraph, hwsplit::extract::area_cost)
-        .extract(&runner.egraph, runner.root);
-    let (cf, _) = analyze(&fast, &params);
-    let (cs, _) = analyze(&small, &params);
-    println!("\nlatency-optimal: area={:.1} latency={:.1}\n  {fast}", cf.area, cf.latency);
-    println!("\narea-optimal:    area={:.1} latency={:.1}\n  {small}", cs.area, cs.latency);
+    // The load-bearing property: four queries, one enumeration.
+    assert_eq!(session.enumeration_count(), 1);
+    println!("queries answered: 4; enumerations paid: {}", session.enumeration_count());
+    println!("\n{}", simmed.frontier_vs_baseline());
+    Ok(())
 }

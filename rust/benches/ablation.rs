@@ -9,13 +9,11 @@
 //!
 //! Run: `cargo bench --bench ablation`
 
-use hwsplit::coordinator::RuleSet;
-use hwsplit::cost::CostParams;
-use hwsplit::egraph::{Rewrite, Runner, RunnerLimits};
-use hwsplit::extract::sample_designs;
-use hwsplit::lower::lower_default;
+use hwsplit::egraph::{Rewrite, RunnerLimits};
 use hwsplit::relay::workloads;
 use hwsplit::report::{fmt_f64, Table};
+use hwsplit::rewrites::RuleSet;
+use hwsplit::session::{Query, Session};
 
 fn run_variant(
     name: &str,
@@ -23,13 +21,19 @@ fn run_variant(
     rules: Vec<Rewrite>,
     t: &mut Table,
 ) {
-    let lowered = lower_default(&workload.expr);
-    let mut runner = Runner::new(lowered, rules)
-        .with_limits(RunnerLimits { max_nodes: 30_000, ..Default::default() });
-    let report = runner.run(5);
-    let pts = sample_designs(&runner.egraph, runner.root, 32, &CostParams::default());
-    let best_lat = pts.iter().map(|p| p.cost.latency).fold(f64::INFINITY, f64::min);
-    let best_area = pts.iter().map(|p| p.cost.area).fold(f64::INFINITY, f64::min);
+    let mut session = Session::builder()
+        .workload(workload.clone())
+        .custom_rules(rules)
+        .iters(5)
+        .limits(RunnerLimits { max_nodes: 30_000, ..Default::default() })
+        .build()
+        .expect("workload lowers");
+    let ev = session.query(&Query::new().samples(32)).expect("query");
+    let report = &session.enumerate().expect("enumerated").report;
+    let best_lat =
+        ev.designs.iter().map(|d| d.point.cost.latency).fold(f64::INFINITY, f64::min);
+    let best_area =
+        ev.designs.iter().map(|d| d.point.cost.area).fold(f64::INFINITY, f64::min);
     t.row(&[
         workload.name.to_string(),
         name.to_string(),

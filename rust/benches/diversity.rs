@@ -10,10 +10,11 @@
 //!
 //! Run: `cargo bench --bench diversity`
 
-use hwsplit::coordinator::{explore, ExploreConfig, RuleSet};
 use hwsplit::egraph::RunnerLimits;
 use hwsplit::relay::all_workloads;
 use hwsplit::report::{fmt_f64, Table};
+use hwsplit::rewrites::RuleSet;
+use hwsplit::session::{Query, Session};
 
 fn main() {
     let mut csv = Table::new(
@@ -30,14 +31,14 @@ fn main() {
         ],
     );
     for w in all_workloads() {
-        let cfg = ExploreConfig {
-            iters: 5,
-            samples: 64,
-            rules: RuleSet::Paper,
-            limits: RunnerLimits { max_nodes: 60_000, ..Default::default() },
-            ..Default::default()
-        };
-        let ex = explore(&w, &cfg);
+        let mut session = Session::builder()
+            .workload(w.clone())
+            .rules(RuleSet::Paper)
+            .iters(5)
+            .limits(RunnerLimits { max_nodes: 60_000, ..Default::default() })
+            .build()
+            .expect("workload lowers");
+        let ex = session.query(&Query::new().samples(64)).expect("query");
 
         let stats: Vec<_> = ex.designs.iter().map(|d| &d.point.stats).collect();
         let mut dist = 0.0;

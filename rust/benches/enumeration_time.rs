@@ -22,7 +22,7 @@ fn main() {
     );
     let mut csv_rows: Vec<Vec<String>> = vec![];
     for w in all_workloads() {
-        let lowered = lower_default(&w.expr);
+        let lowered = lower_default(&w.expr).expect("workload lowers");
         let n0 = lowered.len();
         let t0 = std::time::Instant::now();
         let mut runner = Runner::new(lowered, rewrites::paper_rules()).with_limits(
@@ -93,7 +93,7 @@ fn main() {
     });
 
     // E-matching throughput over a saturated mlp e-graph.
-    let lowered = lower_default(&all_workloads()[4].expr); // mlp
+    let lowered = lower_default(&all_workloads()[4].expr).expect("workload lowers"); // mlp
     let mut runner = Runner::new(lowered, rewrites::paper_rules())
         .with_limits(RunnerLimits { max_nodes: 50_000, ..Default::default() });
     runner.run(6);
@@ -120,7 +120,7 @@ fn main() {
     });
 
     // Parser/printer round-trip (tooling hot path).
-    let big: RecExpr = lower_default(&all_workloads()[5].expr); // lenet
+    let big: RecExpr = lower_default(&all_workloads()[5].expr).expect("workload lowers"); // lenet
     let text = big.to_string();
     bench("parse+print lenet EngineIR", 3, 30, || {
         let e = parse_expr(&text).unwrap();

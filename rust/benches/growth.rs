@@ -18,7 +18,7 @@ fn main() {
         &["workload", "iter", "e-nodes", "e-classes", "designs-lb", "ms"],
     );
     for w in all_workloads() {
-        let lowered = lower_default(&w.expr);
+        let lowered = lower_default(&w.expr).expect("workload lowers");
         let mut runner = Runner::new(lowered, rewrites::paper_rules()).with_limits(
             RunnerLimits { max_nodes: 80_000, ..Default::default() },
         );

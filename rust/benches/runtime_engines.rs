@@ -67,7 +67,7 @@ fn main() {
 
     // ---- end-to-end MLP inference: initial vs split design ----
     let w = workloads::mlp();
-    let initial = lower_default(&w.expr);
+    let initial = lower_default(&w.expr).expect("workload lowers");
     let mut runner = Runner::new(initial.clone(), rewrites::paper_rules());
     runner.run(4);
     let mut split = hwsplit::runtime::extract_covered(&runner.egraph, runner.root, &rt, true)
@@ -114,7 +114,7 @@ fn main() {
 
     // Oracle-only comparison: how much does PJRT dispatch cost vs pure
     // Rust math for the same design?
-    let design = lower_default(&w.expr);
+    let design = lower_default(&w.expr).expect("workload lowers");
     let env0 = Env::random_for(&design, 42);
     bench("e2e inference mlp-initial (pure-Rust oracle)", 3, 30, || {
         let mut env = env0.clone();

@@ -9,10 +9,11 @@
 //!
 //! Run: `cargo bench --bench usefulness`
 
-use hwsplit::coordinator::{explore, ExploreConfig, RuleSet};
 use hwsplit::egraph::RunnerLimits;
 use hwsplit::relay::all_workloads;
 use hwsplit::report::{fmt_f64, Table};
+use hwsplit::rewrites::RuleSet;
+use hwsplit::session::{Backend, Query, Session};
 
 fn main() {
     let mut csv = Table::new(
@@ -20,14 +21,16 @@ fn main() {
         &["workload", "design", "origin", "area", "latency", "sim_cycles", "util"],
     );
     for w in all_workloads() {
-        let cfg = ExploreConfig {
-            iters: 5,
-            samples: 64,
-            rules: RuleSet::Paper,
-            limits: RunnerLimits { max_nodes: 60_000, ..Default::default() },
-            ..Default::default()
-        };
-        let ex = explore(&w, &cfg);
+        let mut session = Session::builder()
+            .workload(w.clone())
+            .rules(RuleSet::Paper)
+            .iters(5)
+            .limits(RunnerLimits { max_nodes: 60_000, ..Default::default() })
+            .build()
+            .expect("workload lowers");
+        let ex = session
+            .query(&Query::new().backend(Backend::Sim).samples(64))
+            .expect("query");
         let b = &ex.baseline.cost;
 
         let mut t = Table::new(
@@ -35,7 +38,8 @@ fn main() {
             &["design", "area", "latency", "sim-cycles", "util%"],
         );
         for p in &ex.frontier {
-            let sim = ex.designs.iter().find(|d| d.point.origin == p.origin).map(|d| &d.sim);
+            let sim =
+                ex.designs.iter().find(|d| d.point.origin == p.origin).and_then(|d| d.sim.as_ref());
             t.row(&[
                 p.origin.clone(),
                 fmt_f64(p.cost.area),

@@ -1,57 +1,33 @@
-//! The design-space-exploration coordinator: Rust owns the whole loop.
+//! Compatibility shim over the [`crate::session`] subsystem.
 //!
-//! One exploration = lower the workload → enumerate with rewrites (the
-//! search phase is fanned out across threads per rule) → sample candidate
-//! designs → evaluate each with the analytic model *and* the simulator on
-//! a worker pool → reduce to the Pareto frontier and compare against the
-//! one-engine-per-kernel-type baseline.
+//! The original one-shot exploration pipeline lived here: every call to
+//! [`explore`] re-lowered the workload, re-enumerated the e-graph, and
+//! evaluated with a hard-wired analytic-model+simulator pair. That shape is
+//! exactly what the paper argues *against* paying repeatedly, so the crate
+//! now fronts a reusable [`Session`](crate::session::Session) — enumerate
+//! once, answer many queries — with pluggable evaluation
+//! [`Backend`](crate::session::Backend)s.
 //!
-//! No async runtime is required (and none is in the vendored dep set):
-//! exploration is a batch pipeline, so scoped OS threads + channels are the
-//! right tool. The e-graph is read-shared (`&EGraph`) during parallel
-//! search/extraction and mutated only in the single-threaded apply phase —
-//! the same discipline the rewrite `Runner` uses.
+//! Everything here is kept so old callers keep compiling: [`explore`] is a
+//! deprecated one-shot wrapper (build session → one `Sim` query → dismantle
+//! into the old [`Exploration`] struct), and the config/result types map
+//! 1:1 onto their session equivalents.
 
-use crate::cost::{analyze, baseline, Baseline, CostParams};
-use crate::egraph::{EGraph, Id, Rewrite, Runner, RunnerLimits, RunnerReport};
-use crate::extract::{pareto_frontier, sample_design, DesignPoint, Extractor};
+use crate::cost::{Baseline, CostParams};
+use crate::egraph::{EGraph, Id, RunnerLimits, RunnerReport};
+use crate::extract::DesignPoint;
 use crate::ir::RecExpr;
-use crate::lower::lower_default;
 use crate::relay::Workload;
-use crate::rewrites;
-use crate::sim::{simulate, SimConfig, SimReport};
+use crate::session::{Backend, Query, Session};
+use crate::sim::SimReport;
 
-/// Which rewrite set to enumerate with.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum RuleSet {
-    /// Only paper Fig. 2's two rewrites (ReLU split + parallelize).
-    Fig2,
-    /// Everything §2 describes.
-    Paper,
-    /// Paper + extensions (fusion, loop reorder, double buffering).
-    All,
-}
+// Moved: `RuleSet` now lives with the rewrite library; `parallel_map` with
+// the session worker pool. Re-exported so existing imports keep working.
+pub use crate::rewrites::RuleSet;
+pub use crate::session::parallel_map;
 
-impl RuleSet {
-    pub fn rules(self) -> Vec<Rewrite> {
-        match self {
-            RuleSet::Fig2 => rewrites::fig2_rules(),
-            RuleSet::Paper => rewrites::paper_rules(),
-            RuleSet::All => rewrites::all_rules(),
-        }
-    }
-
-    pub fn parse(s: &str) -> Option<Self> {
-        Some(match s {
-            "fig2" => RuleSet::Fig2,
-            "paper" => RuleSet::Paper,
-            "all" => RuleSet::All,
-            _ => return None,
-        })
-    }
-}
-
-/// Exploration configuration.
+/// Exploration configuration (the one-shot equivalent of a
+/// [`Session`] + [`Query`] pair).
 #[derive(Debug, Clone)]
 pub struct ExploreConfig {
     pub iters: usize,
@@ -95,140 +71,59 @@ pub struct Exploration {
     pub baseline: Baseline,
 }
 
-fn vlog(phase: &str, t0: std::time::Instant) {
-    if std::env::var_os("HWSPLIT_VERBOSE").is_some() {
-        eprintln!("[explore] {phase}: {:.2?}", t0.elapsed());
-    }
-}
-
-/// Run the full pipeline for one workload.
+/// Run the full pipeline for one workload, once.
+///
+/// Deprecated: every call pays lowering + enumeration again. Build a
+/// [`Session`] and issue [`Query`]s instead — the e-graph is enumerated
+/// once and shared across queries.
+#[deprecated(since = "0.2.0", note = "use session::Session + Query (enumerate once, query many)")]
 pub fn explore(workload: &Workload, cfg: &ExploreConfig) -> Exploration {
-    // 1. Reify (paper Fig. 1).
-    let lowered = lower_default(&workload.expr);
-
-    // 2. Enumerate (paper Fig. 2 & §2).
-    let t0 = std::time::Instant::now();
-    let mut runner =
-        Runner::new(lowered.clone(), cfg.rules.rules()).with_limits(cfg.limits.clone());
-    let report = runner.run(cfg.iters);
-    let (egraph, root) = (runner.egraph, runner.root);
-    vlog("enumerate", t0);
-
-    // 3. Sample candidate designs (greedy endpoints + randomized costs),
-    //    extracting in parallel — extraction only reads the e-graph.
-    let t0 = std::time::Instant::now();
-    let mut exprs: Vec<(String, RecExpr)> = Vec::new();
-    exprs.push((
-        "greedy-latency".into(),
-        Extractor::new(&egraph, crate::extract::latency_cost).extract(&egraph, root),
-    ));
-    exprs.push((
-        "greedy-area".into(),
-        Extractor::new(&egraph, crate::extract::area_cost).extract(&egraph, root),
-    ));
-    vlog("greedy extraction", t0);
-    let t0 = std::time::Instant::now();
-    let sampled: Vec<(String, RecExpr)> = parallel_map(
-        cfg.workers,
-        (0..cfg.samples).collect(),
-        |seed: &usize| (format!("sample-{seed}"), sample_design(&egraph, root, *seed as u64)),
-    );
-    exprs.extend(sampled);
-    vlog("sampling", t0);
-    // Deduplicate structurally identical designs.
-    let t0 = std::time::Instant::now();
-    let mut seen = std::collections::HashSet::new();
-    exprs.retain(|(_, e)| seen.insert(e.to_string()));
-    vlog("dedup", t0);
-
-    // 4. Evaluate each design (analytic + simulator) on the worker pool.
-    let t0 = std::time::Instant::now();
-    let params = cfg.params.clone();
-    let designs: Vec<EvaluatedDesign> = parallel_map(cfg.workers, exprs, |(origin, expr)| {
-        let (cost, stats) = analyze(expr, &params);
-        let sim = simulate(expr, &SimConfig { params: params.clone() });
-        EvaluatedDesign {
-            point: DesignPoint { expr: expr.clone(), cost, stats, origin: origin.clone() },
-            sim,
-        }
-    });
-    vlog("evaluate", t0);
-
-    // 5. Reduce.
-    let frontier = pareto_frontier(&designs.iter().map(|d| d.point.clone()).collect::<Vec<_>>());
-    let base = baseline(&lowered, &cfg.params);
-
+    let mut session = Session::builder()
+        .workload(workload.clone())
+        .rules(cfg.rules)
+        .iters(cfg.iters)
+        .workers(cfg.workers)
+        .limits(cfg.limits.clone())
+        .build()
+        .unwrap_or_else(|e| panic!("explore({}): {e}", workload.name));
+    let ev = session
+        .query(
+            &Query::new()
+                .backend(Backend::Sim)
+                .samples(cfg.samples)
+                .params(cfg.params.clone()),
+        )
+        .unwrap_or_else(|e| panic!("explore({}): {e}", workload.name));
+    let (lowered, en) = session.into_parts().expect("session was enumerated by the query");
     Exploration {
         workload: workload.name.to_string(),
         lowered,
-        report,
-        egraph,
-        root,
-        designs,
-        frontier,
-        baseline: base,
+        report: en.report,
+        egraph: en.egraph,
+        root: en.root,
+        designs: ev
+            .designs
+            .into_iter()
+            .map(|d| EvaluatedDesign {
+                sim: d.sim.expect("Sim backend reports for every design"),
+                point: d.point,
+            })
+            .collect(),
+        frontier: ev.frontier,
+        baseline: ev.baseline,
     }
-}
-
-/// Scoped-thread parallel map preserving input order.
-pub fn parallel_map<T: Send + Sync, R: Send>(
-    workers: usize,
-    items: Vec<T>,
-    f: impl Fn(&T) -> R + Sync,
-) -> Vec<R> {
-    if items.is_empty() {
-        return Vec::new();
-    }
-    let workers = workers.clamp(1, items.len());
-    let results: Vec<std::sync::Mutex<Option<R>>> =
-        items.iter().map(|_| std::sync::Mutex::new(None)).collect();
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if i >= items.len() {
-                    break;
-                }
-                let r = f(&items[i]);
-                *results[i].lock().unwrap() = Some(r);
-            });
-        }
-    });
-    results.into_iter().map(|m| m.into_inner().unwrap().unwrap()).collect()
 }
 
 impl Exploration {
     /// Experiment E3 summary: does the enumerated frontier dominate the
     /// baseline point, and from which side?
     pub fn frontier_vs_baseline(&self) -> String {
-        let b = &self.baseline.cost;
-        let dominating =
-            self.frontier.iter().filter(|p| p.cost.dominates(b)).count();
-        let smaller = self
-            .frontier
-            .iter()
-            .filter(|p| p.cost.area < b.area)
-            .count();
-        let faster = self
-            .frontier
-            .iter()
-            .filter(|p| p.cost.latency < b.latency)
-            .count();
-        format!(
-            "baseline(area={:.1}, lat={:.1}) | frontier: {} points, {} dominate baseline, \
-             {} smaller-area, {} lower-latency",
-            b.area,
-            b.latency,
-            self.frontier.len(),
-            dominating,
-            smaller,
-            faster
-        )
+        crate::session::frontier_vs_baseline_summary(&self.frontier, &self.baseline.cost)
     }
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::relay::workloads;
@@ -251,6 +146,9 @@ mod tests {
         assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
     }
 
+    /// The deprecated one-shot shim must behave exactly like the old
+    /// pipeline: designs + frontier + baseline, all semantically the
+    /// workload.
     #[test]
     fn explore_ffn_end_to_end() {
         let w = workloads::ffn_block();

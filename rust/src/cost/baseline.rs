@@ -157,7 +157,7 @@ mod tests {
     #[test]
     fn mlp_baseline_has_two_engine_types_plus_relu() {
         // mlp lowers to mm + add + relu invokes -> 3 kinds.
-        let lo = lower_default(&workloads::mlp().expr);
+        let lo = lower_default(&workloads::mlp().expr).unwrap();
         let b = baseline(&lo, &CostParams::default());
         assert_eq!(b.engines.len(), 3);
         let mm = b.engines.iter().find(|e| matches!(e.engine, Op::MmEngine { .. })).unwrap();
@@ -168,7 +168,7 @@ mod tests {
 
     #[test]
     fn lenet_baseline_covers_all_kinds() {
-        let lo = lower_default(&workloads::lenet().expr);
+        let lo = lower_default(&workloads::lenet().expr).unwrap();
         let b = baseline(&lo, &CostParams::default());
         let kinds: Vec<OpKind> = b.engines.iter().map(|e| e.engine.kind()).collect();
         assert!(kinds.contains(&OpKind::ConvEngine));
@@ -181,7 +181,7 @@ mod tests {
     fn baseline_area_at_most_initial_design() {
         // Sharing engines can only reduce engine area vs one-per-call-site
         // (per kind the baseline keeps the max engine only).
-        let lo = lower_default(&workloads::mlp().expr);
+        let lo = lower_default(&workloads::mlp().expr).unwrap();
         let b = baseline(&lo, &CostParams::default());
         let (init, _) = crate::cost::analyze(&lo, &CostParams::default());
         assert!(b.cost.engine_area <= init.engine_area + 1e-9);

@@ -15,7 +15,7 @@
 
 use super::graph::EGraph;
 use super::Id;
-use rustc_hash::FxHashMap as HashMap;
+use crate::fx::FxHashMap as HashMap;
 
 /// Cap so products never overflow to `inf` (keeps comparisons meaningful).
 const CAP: f64 = 1e300;

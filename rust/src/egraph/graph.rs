@@ -4,7 +4,7 @@
 use super::unionfind::UnionFind;
 use super::Id;
 use crate::ir::{infer_ty_ref, Node, RecExpr, Ty};
-use rustc_hash::FxHashMap as HashMap;
+use crate::fx::FxHashMap as HashMap;
 
 /// An equivalence class of e-nodes, all computing the same value.
 #[derive(Debug, Clone)]

@@ -1,0 +1,122 @@
+//! The crate-wide typed error. Every fallible API boundary — parsing,
+//! lowering, rule lookup, session building, query evaluation, backend
+//! execution — returns [`Error`] instead of panicking, so library callers
+//! (the CLI, a serving loop, tests) can handle bad input without aborting
+//! the process.
+
+use crate::ir::parse::ParseError;
+use crate::ir::TypeError;
+use crate::tensor::EvalError;
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All the ways the public API can fail.
+#[derive(Debug, Clone)]
+pub enum Error {
+    /// EngineIR text failed to parse.
+    Parse(ParseError),
+    /// An expression failed shape/type inference.
+    Type(TypeError),
+    /// Concrete evaluation failed (unbound tensor, backend failure, …).
+    Eval(EvalError),
+    /// A rewrite-rule name did not resolve (CLI `--rules a,b,c`).
+    UnknownRule(String),
+    /// A rule-set name did not resolve (`fig2` / `paper` / `all`).
+    UnknownRuleSet(String),
+    /// A workload name did not resolve.
+    UnknownWorkload(String),
+    /// A backend name did not resolve (`analytic` / `interp` / `sim` / `pjrt`).
+    UnknownBackend(String),
+    /// Reification hit a structurally invalid input (e.g. a non-tensor
+    /// child where the lowering rules require one).
+    Lower { op: String, detail: String },
+    /// A session was configured inconsistently (missing workload, zero
+    /// samples where designs were requested, …).
+    InvalidConfig(String),
+    /// An evaluation backend failed or is not compiled into this build.
+    Backend { backend: &'static str, detail: String },
+    /// The requested operation needs a feature this build lacks
+    /// (e.g. `pjrt`).
+    Unsupported(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Parse(e) => write!(f, "{e}"),
+            Error::Type(e) => write!(f, "type error: {e}"),
+            Error::Eval(e) => write!(f, "evaluation error: {e}"),
+            Error::UnknownRule(n) => write!(
+                f,
+                "unknown rewrite rule '{n}' (see rewrites::all_rules for valid names)"
+            ),
+            Error::UnknownRuleSet(n) => {
+                write!(f, "unknown rule set '{n}' (expected fig2 | paper | all)")
+            }
+            Error::UnknownWorkload(n) => {
+                write!(f, "unknown workload '{n}' (try `hwsplit workloads`)")
+            }
+            Error::UnknownBackend(n) => write!(
+                f,
+                "unknown backend '{n}' (expected analytic | interp | sim | pjrt)"
+            ),
+            Error::Lower { op, detail } => write!(f, "lowering {op}: {detail}"),
+            Error::InvalidConfig(msg) => write!(f, "invalid configuration: {msg}"),
+            Error::Backend { backend, detail } => write!(f, "{backend} backend: {detail}"),
+            Error::Unsupported(msg) => write!(f, "unsupported: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Parse(e) => Some(e),
+            Error::Type(e) => Some(e),
+            Error::Eval(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<ParseError> for Error {
+    fn from(e: ParseError) -> Self {
+        Error::Parse(e)
+    }
+}
+
+impl From<TypeError> for Error {
+    fn from(e: TypeError) -> Self {
+        Error::Type(e)
+    }
+}
+
+impl From<EvalError> for Error {
+    fn from(e: EvalError) -> Self {
+        Error::Eval(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn displays_are_informative() {
+        let e = Error::UnknownRuleSet("bogus".into());
+        assert!(e.to_string().contains("bogus"));
+        assert!(e.to_string().contains("fig2"));
+        let e = Error::Backend { backend: "pjrt", detail: "no artifacts".into() };
+        assert!(e.to_string().contains("pjrt"));
+    }
+
+    #[test]
+    fn wraps_parse_and_type_errors_with_source() {
+        use std::error::Error as _;
+        let p: Error = crate::ir::parse_expr("(frobnicate)").unwrap_err().into();
+        assert!(p.source().is_some());
+        assert!(p.to_string().contains("parse error"));
+    }
+}

@@ -20,7 +20,7 @@ use crate::cost::{analyze, CostParams, DesignCost, DesignStats};
 use crate::egraph::{EGraph, Id};
 use crate::ir::{Node, Op, RecExpr};
 use crate::prop::Rng;
-use rustc_hash::FxHashMap as HashMap;
+use crate::fx::FxHashMap as HashMap;
 
 /// A per-node extraction cost: receives the candidate e-node and the cost
 /// of each child *class* (already minimized); returns the node's total.

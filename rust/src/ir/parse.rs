@@ -20,9 +20,16 @@ use super::symbol::Symbol;
 use crate::egraph::Id;
 
 /// A parse failure, with a human-readable message.
-#[derive(Debug, Clone, thiserror::Error)]
-#[error("parse error: {0}")]
+#[derive(Debug, Clone)]
 pub struct ParseError(pub String);
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "parse error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 type Result<T> = std::result::Result<T, ParseError>;
 
@@ -270,6 +277,16 @@ pub fn parse_expr(src: &str) -> Result<RecExpr> {
         return Err(ParseError(format!("trailing tokens at {}", p.pos)));
     }
     Ok(p.expr)
+}
+
+/// `"(relu …)".parse::<RecExpr>()` — the idiomatic entry point; errors are
+/// the crate-wide typed [`crate::error::Error`].
+impl std::str::FromStr for RecExpr {
+    type Err = crate::error::Error;
+
+    fn from_str(src: &str) -> std::result::Result<Self, Self::Err> {
+        parse_expr(src).map_err(Into::into)
+    }
 }
 
 #[cfg(test)]

@@ -89,17 +89,32 @@ impl Ty {
 }
 
 /// A shape/type inference failure.
-#[derive(Debug, Clone, thiserror::Error)]
+#[derive(Debug, Clone)]
 pub enum TypeError {
-    #[error("op {op} expected {expected} children, got {got}")]
     Arity { op: String, expected: usize, got: usize },
-    #[error("op {op}: child {child} has type {got:?}, expected {expected}")]
     Child { op: String, child: usize, got: Ty, expected: String },
-    #[error("op {op}: shape mismatch: {msg}")]
     Shape { op: String, msg: String },
-    #[error("union merged incompatible types {a:?} and {b:?}")]
     Merge { a: Ty, b: Ty },
 }
+
+impl std::fmt::Display for TypeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TypeError::Arity { op, expected, got } => {
+                write!(f, "op {op} expected {expected} children, got {got}")
+            }
+            TypeError::Child { op, child, got, expected } => {
+                write!(f, "op {op}: child {child} has type {got:?}, expected {expected}")
+            }
+            TypeError::Shape { op, msg } => write!(f, "op {op}: shape mismatch: {msg}"),
+            TypeError::Merge { a, b } => {
+                write!(f, "union merged incompatible types {a:?} and {b:?}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TypeError {}
 
 fn tensor<'a>(op: &Op, i: usize, tys: &[&'a Ty]) -> Result<&'a Shape, TypeError> {
     tys[i].shape().ok_or_else(|| TypeError::Child {

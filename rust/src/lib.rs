@@ -8,6 +8,39 @@
 //! of functionally-equivalent hardware–software designs is enumerated by
 //! running semantics-preserving rewrites over an e-graph.
 //!
+//! ## The `Session` API
+//!
+//! The paper's point is economic: enumeration is the expensive step, and
+//! the e-graph makes the enumerated space *cheap to re-query*. The crate's
+//! primary API is shaped accordingly — a [`session::Session`] lowers and
+//! enumerates a workload **once** (lazily, cached) and then answers any
+//! number of [`session::Query`]s against the shared read-only e-graph:
+//!
+//! ```no_run
+//! use hwsplit::prelude::*;
+//!
+//! let mut session = Session::builder()
+//!     .workload(hwsplit::relay::workloads::lenet())
+//!     .rules(RuleSet::All)
+//!     .build()?;
+//!
+//! // Pay enumeration once…
+//! let fast = session.query(&Query::new().objective(Objective::Latency).samples(256))?;
+//! // …then re-query freely: new objective, new backend, new cost params.
+//! let small = session.query(&Query::new().objective(Objective::Area).backend(Backend::Sim))?;
+//! let checked = session.query(&Query::new().backend(Backend::Interp).samples(32))?;
+//! assert_eq!(session.enumeration_count(), 1);
+//! # let _ = (fast, small, checked);
+//! # Ok::<(), hwsplit::Error>(())
+//! ```
+//!
+//! Evaluation is backend-pluggable ([`session::Backend`]): the closed-form
+//! **analytic** cost model, the pure-Rust **interp**reter (functional
+//! outputs), the cycle-approximate **sim**ulator, and — with `--features
+//! pjrt` — the **PJRT** runtime executing AOT-compiled Pallas kernels.
+//! Fallible API boundaries return the typed [`Error`] instead of
+//! panicking.
+//!
 //! ## Crate layout
 //!
 //! | module | role |
@@ -16,13 +49,16 @@
 //! | [`egraph`] | from-scratch e-graph: union-find, hashcons, congruence closure, e-matching, rewrite runner |
 //! | [`relay`] | Relay-like frontend operator graphs + workload library |
 //! | [`lower`] | Relay → EngineIR reification (paper Fig. 1) |
-//! | [`rewrites`] | the split-altering rewrite library (paper Fig. 2 + extensions) |
+//! | [`rewrites`] | the split-altering rewrite library (paper Fig. 2 + extensions) + [`rewrites::RuleSet`] |
 //! | [`tensor`] | pure-Rust tensor math + EngineIR evaluator (semantics oracle) |
 //! | [`cost`] | analytic area / latency / energy models over designs |
 //! | [`extract`] | greedy, cost-directed and Pareto design extraction |
 //! | [`sim`] | cycle-approximate accelerator simulator (usefulness oracle) |
-//! | [`runtime`] | PJRT executor for AOT-compiled Pallas engine kernels |
-//! | [`coordinator`] | threaded design-space-exploration driver |
+//! | [`runtime`] | PJRT executor for AOT-compiled Pallas engine kernels (feature `pjrt`; stub otherwise) |
+//! | [`session`] | **the primary API**: reusable sessions, queries, pluggable backends |
+//! | [`coordinator`] | deprecated one-shot `explore` shim over [`session`] |
+//! | [`error`] | the crate-wide typed [`Error`] |
+//! | [`fx`] | in-tree FxHash (zero-dependency fast hashing) |
 //! | [`prop`] | tiny property-testing helpers (PRNG + runners) |
 //! | [`report`] | table / CSV emitters shared by benches |
 
@@ -30,7 +66,9 @@ pub mod bench_util;
 pub mod coordinator;
 pub mod cost;
 pub mod egraph;
+pub mod error;
 pub mod extract;
+pub mod fx;
 pub mod ir;
 pub mod lower;
 pub mod prop;
@@ -38,12 +76,21 @@ pub mod relay;
 pub mod report;
 pub mod rewrites;
 pub mod runtime;
+pub mod session;
 pub mod sim;
 pub mod tensor;
 
+pub use error::{Error, Result};
+
 /// Convenient re-exports for downstream users and the examples.
 pub mod prelude {
-    pub use crate::egraph::{EGraph, Id, Runner};
+    pub use crate::cost::CostParams;
+    pub use crate::egraph::{EGraph, Id, Runner, RunnerLimits};
+    pub use crate::error::{Error, Result};
     pub use crate::ir::{Op, RecExpr, Symbol};
-    pub use crate::rewrites;
+    pub use crate::relay::{workloads, Workload};
+    pub use crate::rewrites::{self, RuleSet};
+    pub use crate::session::{
+        Backend, Evaluation, EvaluatedDesign, Objective, Query, Session,
+    };
 }

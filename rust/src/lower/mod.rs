@@ -19,6 +19,7 @@
 //! | `flatten x` | `reshape x` |
 
 use crate::egraph::Id;
+use crate::error::Error;
 use crate::ir::{in_dim, Node, Op, RecExpr, Shape, Ty};
 
 /// Lowering options.
@@ -38,58 +39,68 @@ impl Default for LowerOptions {
 
 /// Reify a Relay-level graph into EngineIR. Non-Relay nodes pass through
 /// unchanged, so partially-lowered inputs are fine (idempotent).
-pub fn lower(expr: &RecExpr, opts: LowerOptions) -> RecExpr {
-    let tys = expr.types().expect("lower: input must be well-typed");
+///
+/// Errors with [`Error::Type`] if the input fails inference, or
+/// [`Error::Lower`] if a Relay op has a non-tensor child where the
+/// reification rules require one.
+pub fn lower(expr: &RecExpr, opts: LowerOptions) -> Result<RecExpr, Error> {
+    let tys = expr.types()?;
     let mut out = RecExpr::new();
     let mut map: Vec<Id> = Vec::with_capacity(expr.len());
 
     for (slot, node) in expr.nodes().iter().enumerate() {
         let kids: Vec<Id> = node.children.iter().map(|c| map[c.index()]).collect();
-        let shape_of = |i: usize| -> &Shape {
+        let shape_of = |i: usize| -> Result<&Shape, Error> {
             match &tys[expr.nodes()[slot].children[i].index()] {
-                Ty::Tensor(s) => s,
-                other => panic!("lower: expected tensor child, got {other:?}"),
+                Ty::Tensor(s) => Ok(s),
+                other => Err(Error::Lower {
+                    op: node.op.to_string(),
+                    detail: format!("expected tensor child {i}, got {other:?}"),
+                }),
             }
         };
-        let my_shape = || -> &Shape {
+        let my_shape = || -> Result<&Shape, Error> {
             match &tys[slot] {
-                Ty::Tensor(s) => s,
-                other => panic!("lower: expected tensor node, got {other:?}"),
+                Ty::Tensor(s) => Ok(s),
+                other => Err(Error::Lower {
+                    op: node.op.to_string(),
+                    detail: format!("expected tensor node, got {other:?}"),
+                }),
             }
         };
 
         let new_id = match &node.op {
             Op::Dense => {
-                let (x, w) = (shape_of(0), shape_of(1));
+                let (x, w) = (shape_of(0)?, shape_of(1)?);
                 let (m, k, n) = (x.dim(0), x.dim(1), w.dim(1));
                 let e = out.add_leaf(Op::MmEngine { m, k, n });
                 let inv = out.add_op(Op::InvokeMm, &[e, kids[0], kids[1]]);
                 buffered(&mut out, inv, opts)
             }
             Op::Relu => {
-                let s = my_shape().clone();
+                let s = my_shape()?.clone();
                 let numel = s.numel();
                 let e = out.add_leaf(Op::ReluEngine { w: numel });
-                let xin = flat(&mut out, kids[0], shape_of(0));
+                let xin = flat(&mut out, kids[0], shape_of(0)?);
                 let inv = out.add_op(Op::InvokeRelu, &[e, xin]);
                 let backed = unflat(&mut out, inv, &s);
                 buffered(&mut out, backed, opts)
             }
             Op::EAdd => {
-                let s = my_shape().clone();
+                let s = my_shape()?.clone();
                 let numel = s.numel();
                 let e = out.add_leaf(Op::AddEngine { w: numel });
-                let a = flat(&mut out, kids[0], shape_of(0));
-                let b = flat(&mut out, kids[1], shape_of(1));
+                let a = flat(&mut out, kids[0], shape_of(0)?);
+                let b = flat(&mut out, kids[1], shape_of(1)?);
                 let inv = out.add_op(Op::InvokeAdd, &[e, a, b]);
                 let backed = unflat(&mut out, inv, &s);
                 buffered(&mut out, backed, opts)
             }
             Op::BiasAdd => {
-                let s = my_shape().clone();
+                let s = my_shape()?.clone();
                 let numel = s.numel();
                 let e = out.add_leaf(Op::AddEngine { w: numel });
-                let a = flat(&mut out, kids[0], shape_of(0));
+                let a = flat(&mut out, kids[0], shape_of(0)?);
                 let bb = out.add_op(Op::Bcast(s.clone()), &[kids[1]]);
                 let b = flat_shape(&mut out, bb, &s);
                 let inv = out.add_op(Op::InvokeAdd, &[e, a, b]);
@@ -97,9 +108,9 @@ pub fn lower(expr: &RecExpr, opts: LowerOptions) -> RecExpr {
                 buffered(&mut out, backed, opts)
             }
             Op::Conv2d { stride, pad } => {
-                let x = shape_of(0).clone();
-                let w = shape_of(1).clone();
-                let o = my_shape().clone();
+                let x = shape_of(0)?.clone();
+                let w = shape_of(1)?.clone();
+                let o = my_shape()?.clone();
                 let (c, k, kh) = (x.dim(0), w.dim(0), w.dim(2));
                 let (oh, ow) = (o.dim(1), o.dim(2));
                 debug_assert_eq!(in_dim(oh, kh, *stride), x.dim(1) + 2 * pad);
@@ -113,8 +124,8 @@ pub fn lower(expr: &RecExpr, opts: LowerOptions) -> RecExpr {
                 buffered(&mut out, inv, opts)
             }
             Op::MaxPool2d { k, stride } => {
-                let x = shape_of(0);
-                let o = my_shape().clone();
+                let x = shape_of(0)?;
+                let o = my_shape()?.clone();
                 let e = out.add_leaf(Op::PoolEngine {
                     oh: o.dim(1),
                     ow: o.dim(2),
@@ -126,7 +137,7 @@ pub fn lower(expr: &RecExpr, opts: LowerOptions) -> RecExpr {
                 buffered(&mut out, inv, opts)
             }
             Op::Flatten => {
-                let s = my_shape().clone();
+                let s = my_shape()?.clone();
                 out.add_op(Op::Reshape(s), &[kids[0]])
             }
             // Everything else (leaves, already-reified forms, index math)
@@ -135,11 +146,11 @@ pub fn lower(expr: &RecExpr, opts: LowerOptions) -> RecExpr {
         };
         map.push(new_id);
     }
-    out
+    Ok(out)
 }
 
 /// Reify with default options.
-pub fn lower_default(expr: &RecExpr) -> RecExpr {
+pub fn lower_default(expr: &RecExpr) -> Result<RecExpr, Error> {
     lower(expr, LowerOptions::default())
 }
 
@@ -182,7 +193,7 @@ mod tests {
     #[test]
     fn lowered_workloads_typecheck_with_same_type() {
         for w in all_workloads() {
-            let lo = lower_default(&w.expr);
+            let lo = lower_default(&w.expr).unwrap();
             let t0 = w.expr.typecheck().unwrap();
             let t1 = lo.typecheck().unwrap_or_else(|e| panic!("{}: {e}", w.name));
             assert_eq!(t0, t1, "{}", w.name);
@@ -192,7 +203,7 @@ mod tests {
     #[test]
     fn lowering_preserves_semantics() {
         for w in all_workloads() {
-            let lo = lower_default(&w.expr);
+            let lo = lower_default(&w.expr).unwrap();
             let mut env1 = Env::random_for(&w.expr, 42);
             let mut env2 = Env::random_for(&lo, 42);
             let a = eval_expr(&w.expr, &mut env1).unwrap();
@@ -209,7 +220,7 @@ mod tests {
     #[test]
     fn lowering_reifies_every_relay_op() {
         for w in all_workloads() {
-            let lo = lower_default(&w.expr);
+            let lo = lower_default(&w.expr).unwrap();
             let relay_left = lo.count(|op| op.is_relay());
             assert_eq!(relay_left, 0, "{} still has relay ops after lowering", w.name);
         }
@@ -220,7 +231,7 @@ mod tests {
         // convblock = conv + bias-add + relu -> 3 invokes, 3 engines (all
         // distinct kinds/params here).
         let w = crate::relay::workloads::convblock();
-        let lo = lower_default(&w.expr);
+        let lo = lower_default(&w.expr).unwrap();
         assert_eq!(lo.count(|op| op.is_invoke()), 3);
         assert_eq!(lo.engines().len(), 3);
         // paper: "each converted call will be given an explicit storage
@@ -231,8 +242,8 @@ mod tests {
     #[test]
     fn lowering_is_idempotent() {
         let w = crate::relay::workloads::mlp();
-        let lo = lower_default(&w.expr);
-        let lo2 = lower_default(&lo);
+        let lo = lower_default(&w.expr).unwrap();
+        let lo2 = lower_default(&lo).unwrap();
         assert_eq!(lo.to_string(), lo2.to_string());
     }
 
@@ -240,9 +251,20 @@ mod tests {
     fn fig1_shape_conv_reification() {
         // The paper's Fig. 1: nn.conv2d reified into engine + storage.
         let w = crate::relay::workloads::convblock();
-        let lo = lower(&w.expr, LowerOptions { buffers: true });
+        let lo = lower(&w.expr, LowerOptions { buffers: true }).unwrap();
         let txt = lo.to_string();
         assert!(txt.contains("(conv-engine 16 16 3 8 3 1)"), "{txt}");
         assert!(txt.contains("(buffer sram (invoke-conv"), "{txt}");
+    }
+
+    #[test]
+    fn lowering_ill_typed_input_is_a_typed_error() {
+        // dense with mismatched inner dims: inference fails, lower must
+        // return Error::Type, not panic.
+        let e = crate::ir::parse_expr("(dense (input x [1 10]) (weight w [11 4]))").unwrap();
+        match lower_default(&e) {
+            Err(crate::error::Error::Type(_)) => {}
+            other => panic!("expected Error::Type, got {other:?}"),
+        }
     }
 }

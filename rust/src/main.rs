@@ -6,20 +6,25 @@
 //! hwsplit lower     --workload convblock
 //! hwsplit fig2
 //! hwsplit enumerate --workload mlp --iters 8 --rules paper
-//! hwsplit explore   --workload lenet --samples 64 --iters 6 [--csv dir]
+//! hwsplit explore   --workload lenet --samples 64 --iters 6
+//!                   [--backend analytic|interp|sim|pjrt]
+//!                   [--objective latency|area|balanced] [--csv dir]
 //! hwsplit simulate  --workload mlp [--seed 3]
 //! hwsplit run       --workload mlp [--design split] [--artifacts DIR]
 //! ```
+//!
+//! `explore` builds a [`Session`] (enumerate once) and issues one query;
+//! as a library the same session answers many queries — see the crate docs.
 
-use hwsplit::coordinator::{explore, ExploreConfig, RuleSet};
 use hwsplit::egraph::{Runner, RunnerLimits};
 use hwsplit::extract::{sample_design, Extractor};
 use hwsplit::ir::{parse_expr, print::pretty, RecExpr};
 use hwsplit::lower::lower_default;
 use hwsplit::relay::{all_workloads, workload_by_name};
 use hwsplit::report::{fmt_f64, Table};
-use hwsplit::rewrites;
+use hwsplit::rewrites::{self, RuleSet};
 use hwsplit::runtime::{EngineRuntime, PjrtBackend};
+use hwsplit::session::{Backend, Objective, Query, Session};
 use hwsplit::sim::{simulate, SimConfig};
 use hwsplit::tensor::{eval_expr, eval_expr_backend, Env};
 use std::time::Instant;
@@ -52,12 +57,27 @@ impl Args {
     fn usize(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
+
+    /// Parse a typed flag via `FromStr`, exiting with the typed error on
+    /// bad input (rule sets, backends, objectives all share this path).
+    fn typed<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => default,
+            Some(raw) => raw.parse().unwrap_or_else(|e| {
+                eprintln!("--{key}: {e}");
+                std::process::exit(2);
+            }),
+        }
+    }
 }
 
 fn workload_or_die(args: &Args) -> hwsplit::relay::Workload {
     let name = args.get("workload").unwrap_or("relu128");
     workload_by_name(name).unwrap_or_else(|| {
-        eprintln!("unknown workload '{name}' — try `hwsplit workloads`");
+        eprintln!("{}", hwsplit::Error::UnknownWorkload(name.to_string()));
         std::process::exit(2);
     })
 }
@@ -92,7 +112,10 @@ fn cmd_lower(args: &Args) {
     let w = workload_or_die(args);
     println!("-- Relay-level operator graph ({}):\n", w.name);
     println!("{}", pretty(&w.expr));
-    let lo = lower_default(&w.expr);
+    let lo = lower_default(&w.expr).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
     println!("-- EngineIR after reification (paper Fig. 1):\n");
     println!("{}", pretty(&lo));
     let engines = lo.engines();
@@ -124,10 +147,13 @@ fn cmd_fig2() {
 
 fn cmd_enumerate(args: &Args) {
     let w = workload_or_die(args);
-    let rules = RuleSet::parse(args.get("rules").unwrap_or("paper")).unwrap_or(RuleSet::Paper);
+    let rules: RuleSet = args.typed("rules", RuleSet::Paper);
     let iters = args.usize("iters", 8);
     let max_nodes = args.usize("max-nodes", 200_000);
-    let lo = lower_default(&w.expr);
+    let lo = lower_default(&w.expr).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
     println!("workload {} lowered to {} EngineIR nodes", w.name, lo.len());
     let mut runner = Runner::new(lo, rules.rules())
         .with_limits(RunnerLimits { max_nodes, ..Default::default() });
@@ -143,32 +169,54 @@ fn cmd_enumerate(args: &Args) {
 
 fn cmd_explore(args: &Args) {
     let w = workload_or_die(args);
-    let cfg = ExploreConfig {
-        iters: args.usize("iters", 6),
-        samples: args.usize("samples", 64),
-        workers: args.usize("workers", ExploreConfig::default().workers),
-        rules: RuleSet::parse(args.get("rules").unwrap_or("paper")).unwrap_or(RuleSet::Paper),
-        limits: RunnerLimits {
+    let backend: Backend = args.typed("backend", Backend::Sim);
+    let objective: Objective = args.typed("objective", Objective::Latency);
+    let t0 = Instant::now();
+    let mut builder = Session::builder()
+        .workload(w.clone())
+        .rules(args.typed("rules", RuleSet::Paper))
+        .iters(args.usize("iters", 6))
+        .limits(RunnerLimits {
             max_nodes: args.usize("max-nodes", 100_000),
             ..Default::default()
-        },
-        ..Default::default()
-    };
-    let t0 = Instant::now();
-    let ex = explore(&w, &cfg);
-    println!("{}", ex.report.table());
+        });
+    if let Some(workers) = args.get("workers").and_then(|v| v.parse().ok()) {
+        builder = builder.workers(workers);
+    }
+    let mut session = builder.build().unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    let ev = session
+        .query(
+            &Query::new()
+                .objective(objective)
+                .backend(backend)
+                .samples(args.usize("samples", 64)),
+        )
+        .unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2);
+        });
+    println!(
+        "{}",
+        session.enumerate().expect("enumerated by the query").report.table()
+    );
 
     let mut t = Table::new(
-        &format!("sampled designs for {}", w.name),
+        &format!("designs for {} (backend: {})", w.name, ev.backend),
         &["origin", "area", "latency", "sim-cycles", "util%", "engines", "depth", "pars"],
     );
-    for d in &ex.designs {
+    for d in &ev.designs {
         t.row(&[
             d.point.origin.clone(),
             fmt_f64(d.point.cost.area),
             fmt_f64(d.point.cost.latency),
-            fmt_f64(d.sim.cycles),
-            format!("{:.0}", d.sim.utilization * 100.0),
+            d.sim.as_ref().map(|s| fmt_f64(s.cycles)).unwrap_or_default(),
+            d.sim
+                .as_ref()
+                .map(|s| format!("{:.0}", s.utilization * 100.0))
+                .unwrap_or_default(),
             d.point.stats.engines.to_string(),
             d.point.stats.sched_depth.to_string(),
             d.point.stats.pars.to_string(),
@@ -177,11 +225,20 @@ fn cmd_explore(args: &Args) {
     print!("{}", t.render());
 
     let mut f = Table::new("Pareto frontier (area vs latency)", &["origin", "area", "latency"]);
-    for p in &ex.frontier {
+    for p in &ev.frontier {
         f.row(&[p.origin.clone(), fmt_f64(p.cost.area), fmt_f64(p.cost.latency)]);
     }
     print!("{}", f.render());
-    println!("{}", ex.frontier_vs_baseline());
+    if let Some(best) = ev.best() {
+        println!(
+            "best ({:?}): {} area={} latency={}",
+            ev.objective,
+            best.point.origin,
+            fmt_f64(best.point.cost.area),
+            fmt_f64(best.point.cost.latency)
+        );
+    }
+    println!("{}", ev.frontier_vs_baseline());
     println!("explored in {:.2?}", t0.elapsed());
 
     if let Some(dir) = args.get("csv") {
@@ -193,7 +250,10 @@ fn cmd_explore(args: &Args) {
 
 fn cmd_simulate(args: &Args) {
     let w = workload_or_die(args);
-    let lo = lower_default(&w.expr);
+    let lo = lower_default(&w.expr).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
     let seed = args.usize("seed", 0);
     let design = if args.get("seed").is_some() {
         let mut runner = Runner::new(lo.clone(), rewrites::paper_rules());
@@ -225,15 +285,18 @@ fn cmd_run(args: &Args) {
         .map(std::path::PathBuf::from)
         .unwrap_or_else(hwsplit::runtime::default_artifact_dir);
     let rt = EngineRuntime::new(&dir).unwrap_or_else(|e| {
-        eprintln!("{e:#}");
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    let lo = lower_default(&w.expr).unwrap_or_else(|e| {
+        eprintln!("{e}");
         std::process::exit(2);
     });
     let design: RecExpr = match args.get("design").unwrap_or("initial") {
-        "initial" => lower_default(&w.expr),
+        "initial" => lo,
         "split" => {
             // Enumerate, then extract a design constrained to engines with
             // artifacts (prefer a genuinely rewritten one).
-            let lo = lower_default(&w.expr);
             let mut runner = Runner::new(lo.clone(), rewrites::paper_rules());
             runner.run(4);
             hwsplit::runtime::extract_covered(&runner.egraph, runner.root, &rt, true)

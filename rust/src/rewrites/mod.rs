@@ -20,7 +20,48 @@ pub mod split;
 pub mod storage;
 
 use crate::egraph::{EGraph, Id, Rewrite};
+use crate::error::Error;
 use crate::ir::{Node, Op, OpKind};
+
+/// Which rewrite set to enumerate with. Parsed from CLI/env strings via
+/// [`std::str::FromStr`] (`"fig2" | "paper" | "all"`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RuleSet {
+    /// Only paper Fig. 2's two rewrites (ReLU split + parallelize).
+    Fig2,
+    /// Everything §2 describes.
+    Paper,
+    /// Paper + extensions (fusion, loop reorder, double buffering).
+    All,
+}
+
+impl RuleSet {
+    pub fn rules(self) -> Vec<Rewrite> {
+        match self {
+            RuleSet::Fig2 => fig2_rules(),
+            RuleSet::Paper => paper_rules(),
+            RuleSet::All => all_rules(),
+        }
+    }
+
+    #[deprecated(note = "use the std::str::FromStr impl: `s.parse::<RuleSet>()`")]
+    pub fn parse(s: &str) -> Option<Self> {
+        s.parse().ok()
+    }
+}
+
+impl std::str::FromStr for RuleSet {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self, Error> {
+        match s {
+            "fig2" => Ok(RuleSet::Fig2),
+            "paper" => Ok(RuleSet::Paper),
+            "all" => Ok(RuleSet::All),
+            other => Err(Error::UnknownRuleSet(other.to_string())),
+        }
+    }
+}
 
 /// The two rewrites of paper Fig. 2, restricted to ReLU: engine halving and
 /// loop parallelization. Used by the Fig. 2 reproduction bench/example.
@@ -70,16 +111,17 @@ pub fn all_rules() -> Vec<Rewrite> {
     rules
 }
 
-/// Look up rules by name (CLI `--rules a,b,c` support).
-pub fn rules_by_names(names: &[&str]) -> Vec<Rewrite> {
+/// Look up rules by name (CLI `--rules a,b,c` support). Unknown names are
+/// a typed error, not a panic — callers surface them to the user.
+pub fn rules_by_names(names: &[&str]) -> Result<Vec<Rewrite>, Error> {
     let all = all_rules();
     names
         .iter()
         .map(|n| {
             all.iter()
                 .find(|r| r.name == *n)
-                .unwrap_or_else(|| panic!("unknown rule '{n}'"))
-                .clone()
+                .cloned()
+                .ok_or_else(|| Error::UnknownRule(n.to_string()))
         })
         .collect()
 }
@@ -133,14 +175,25 @@ mod tests {
 
     #[test]
     fn rules_by_names_resolves() {
-        let rs = rules_by_names(&["parallelize", "split-relu-x2"]);
+        let rs = rules_by_names(&["parallelize", "split-relu-x2"]).unwrap();
         assert_eq!(rs.len(), 2);
     }
 
     #[test]
-    #[should_panic(expected = "unknown rule")]
-    fn rules_by_names_rejects_unknown() {
-        rules_by_names(&["not-a-rule"]);
+    fn rules_by_names_rejects_unknown_with_typed_error() {
+        let err = rules_by_names(&["not-a-rule"]).unwrap_err();
+        assert!(matches!(err, Error::UnknownRule(ref n) if n == "not-a-rule"), "{err}");
+    }
+
+    #[test]
+    fn ruleset_from_str_roundtrip() {
+        assert_eq!("fig2".parse::<RuleSet>().unwrap(), RuleSet::Fig2);
+        assert_eq!("paper".parse::<RuleSet>().unwrap(), RuleSet::Paper);
+        assert_eq!("all".parse::<RuleSet>().unwrap(), RuleSet::All);
+        assert!(matches!(
+            "bogus".parse::<RuleSet>().unwrap_err(),
+            Error::UnknownRuleSet(ref n) if n == "bogus"
+        ));
     }
 
     /// The paper's headline: Fig. 2 rules on the Fig. 2 program yield

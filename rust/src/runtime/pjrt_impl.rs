@@ -1,0 +1,120 @@
+//! The real PJRT-backed engine runtime (requires the `pjrt` feature and an
+//! `xla` dependency — see the crate manifest). Loads, compiles (once) and
+//! executes AOT engine artifacts.
+
+use super::{artifact_name, engine_out_shape, runtime_err};
+use crate::error::Error;
+use crate::ir::{Op, Shape};
+use crate::tensor::Tensor;
+use std::collections::{HashMap, HashSet};
+use std::path::{Path, PathBuf};
+
+/// Loads, compiles (once) and executes AOT engine artifacts.
+pub struct EngineRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    available: HashSet<String>,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Executions served per artifact (metrics).
+    pub calls: HashMap<String, u64>,
+}
+
+impl EngineRuntime {
+    /// Open the runtime over an artifact directory (reads `manifest.txt`).
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self, Error> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = dir.join("manifest.txt");
+        let listing = std::fs::read_to_string(&manifest).map_err(|e| {
+            runtime_err(format!("reading {manifest:?} — run `make artifacts` first: {e}"))
+        })?;
+        let available: HashSet<String> =
+            listing.lines().map(|l| l.trim().to_string()).filter(|l| !l.is_empty()).collect();
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| runtime_err(format!("PJRT cpu client: {e:?}")))?;
+        Ok(EngineRuntime { client, dir, available, cache: HashMap::new(), calls: HashMap::new() })
+    }
+
+    /// Open over the default directory.
+    pub fn open_default() -> Result<Self, Error> {
+        Self::new(super::default_artifact_dir())
+    }
+
+    /// Artifact names listed in the manifest.
+    pub fn available(&self) -> &HashSet<String> {
+        &self.available
+    }
+
+    /// True if the engine declaration has a compiled artifact available.
+    pub fn has_engine(&self, op: &Op) -> bool {
+        artifact_name(op).is_some_and(|n| self.available.contains(&n))
+    }
+
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable, Error> {
+        if !self.cache.contains_key(name) {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| runtime_err("artifact path not utf-8"))?,
+            )
+            .map_err(|e| runtime_err(format!("loading {path:?}: {e:?}")))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| runtime_err(format!("compiling {name}: {e:?}")))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Number of artifacts compiled so far (cache size).
+    pub fn compiled(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Execute artifact `name` on `inputs`, expecting `out_shape` back.
+    pub fn execute_named(
+        &mut self,
+        name: &str,
+        inputs: &[Tensor],
+        out_shape: &Shape,
+    ) -> Result<Tensor, Error> {
+        *self.calls.entry(name.to_string()).or_insert(0) += 1;
+        let exe = self.executable(name)?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for t in inputs {
+            let dims: Vec<i64> = t.shape.0.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(&t.data)
+                .reshape(&dims)
+                .map_err(|e| runtime_err(format!("reshape literal: {e:?}")))?;
+            literals.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| runtime_err(format!("executing {name}: {e:?}")))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| runtime_err(format!("fetching result of {name}: {e:?}")))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result
+            .to_tuple1()
+            .map_err(|e| runtime_err(format!("untuple {name}: {e:?}")))?;
+        let data = out
+            .to_vec::<f32>()
+            .map_err(|e| runtime_err(format!("download {name}: {e:?}")))?;
+        if data.len() != out_shape.numel() {
+            return Err(runtime_err(format!(
+                "{name}: output has {} elems, expected {} ({out_shape})",
+                data.len(),
+                out_shape.numel()
+            )));
+        }
+        Ok(Tensor::new(out_shape.clone(), data))
+    }
+
+    /// Execute an engine invocation.
+    pub fn execute_engine(&mut self, engine: &Op, inputs: &[Tensor]) -> Result<Tensor, Error> {
+        let name =
+            artifact_name(engine).ok_or_else(|| runtime_err(format!("not an engine: {engine}")))?;
+        let out_shape = engine_out_shape(engine);
+        self.execute_named(&name, inputs, &out_shape)
+    }
+}

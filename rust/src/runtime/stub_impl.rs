@@ -1,0 +1,64 @@
+//! Stub engine runtime for builds without the `pjrt` feature: identical
+//! API, but construction fails with a typed [`Error::Unsupported`] so every
+//! consumer can detect the missing capability and skip or report cleanly.
+
+use super::artifact_name;
+use crate::error::Error;
+use crate::ir::{Op, Shape};
+use crate::tensor::Tensor;
+use std::collections::{HashMap, HashSet};
+use std::path::Path;
+
+const UNSUPPORTED: &str = "PJRT engine runtime is not compiled into this build \
+     (rebuild with `--features pjrt` and a vendored `xla` dependency)";
+
+/// API-compatible stand-in for the PJRT-backed [`EngineRuntime`]. Never
+/// constructible: [`EngineRuntime::new`] always returns
+/// [`Error::Unsupported`].
+pub struct EngineRuntime {
+    available: HashSet<String>,
+    /// Executions served per artifact (metrics).
+    pub calls: HashMap<String, u64>,
+}
+
+impl EngineRuntime {
+    /// Always fails in stub builds.
+    pub fn new(_dir: impl AsRef<Path>) -> Result<Self, Error> {
+        Err(Error::Unsupported(UNSUPPORTED.into()))
+    }
+
+    /// Always fails in stub builds.
+    pub fn open_default() -> Result<Self, Error> {
+        Self::new(super::default_artifact_dir())
+    }
+
+    /// Artifact names listed in the manifest.
+    pub fn available(&self) -> &HashSet<String> {
+        &self.available
+    }
+
+    /// True if the engine declaration has a compiled artifact available.
+    pub fn has_engine(&self, op: &Op) -> bool {
+        artifact_name(op).is_some_and(|n| self.available.contains(&n))
+    }
+
+    /// Number of artifacts compiled so far (cache size).
+    pub fn compiled(&self) -> usize {
+        0
+    }
+
+    /// Unreachable in practice (no instance can exist), kept for API parity.
+    pub fn execute_named(
+        &mut self,
+        _name: &str,
+        _inputs: &[Tensor],
+        _out_shape: &Shape,
+    ) -> Result<Tensor, Error> {
+        Err(Error::Unsupported(UNSUPPORTED.into()))
+    }
+
+    /// Unreachable in practice (no instance can exist), kept for API parity.
+    pub fn execute_engine(&mut self, _engine: &Op, _inputs: &[Tensor]) -> Result<Tensor, Error> {
+        Err(Error::Unsupported(UNSUPPORTED.into()))
+    }
+}

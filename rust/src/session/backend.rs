@@ -1,0 +1,238 @@
+//! Pluggable evaluation backends: every way this crate can "run" a design
+//! sits behind one [`Backend`] selector / [`Evaluator`] trait, so a
+//! [`super::Session`] query picks its evaluator the same way it picks its
+//! objective.
+//!
+//! | backend | what it measures | result fields |
+//! |---|---|---|
+//! | [`Backend::Analytic`] | closed-form area/latency/energy model | (cost is always computed) |
+//! | [`Backend::Interp`] | functional output via the pure-Rust tensor evaluator | `output` |
+//! | [`Backend::Sim`] | cycle-approximate schedule playout with engine contention | `sim` |
+//! | [`Backend::Pjrt`] | functional output with invocations on AOT-compiled Pallas kernels | `output` |
+//!
+//! `Pjrt` needs the `pjrt` cargo feature + built artifacts; without them the
+//! evaluator constructor returns a typed error and callers degrade
+//! gracefully.
+
+use crate::cost::CostParams;
+use crate::error::Error;
+use crate::ir::RecExpr;
+use crate::sim::{simulate, SimConfig, SimReport};
+use crate::tensor::{eval_expr, eval_expr_backend, Env, Tensor};
+
+/// Which evaluation backend a [`super::Query`] runs designs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Closed-form analytic cost model only (fastest; always available).
+    Analytic,
+    /// The pure-Rust EngineIR evaluator — produces functional outputs
+    /// (the semantics oracle).
+    Interp,
+    /// The cycle-approximate accelerator simulator (usefulness oracle).
+    Sim,
+    /// The PJRT runtime: engine invocations on AOT-compiled Pallas
+    /// kernels, software schedule in Rust. Requires `--features pjrt`.
+    Pjrt,
+}
+
+impl Backend {
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Analytic => "analytic",
+            Backend::Interp => "interp",
+            Backend::Sim => "sim",
+            Backend::Pjrt => "pjrt",
+        }
+    }
+
+    /// Whether per-design evaluators are cheap and isolated enough to run
+    /// one per work item on the worker pool. The PJRT runtime holds a
+    /// process-wide client and a compile cache, so it evaluates serially
+    /// through one evaluator instead.
+    pub(crate) fn parallel_safe(self) -> bool {
+        !matches!(self, Backend::Pjrt)
+    }
+
+    /// Construct the evaluator for this backend.
+    pub fn evaluator(self) -> Result<Box<dyn Evaluator>, Error> {
+        Ok(match self {
+            Backend::Analytic => Box::new(AnalyticEval),
+            Backend::Interp => Box::new(InterpEval),
+            Backend::Sim => Box::new(SimEval),
+            Backend::Pjrt => Box::new(PjrtEval::open()?),
+        })
+    }
+}
+
+impl std::fmt::Display for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Backend {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self, Error> {
+        match s {
+            "analytic" => Ok(Backend::Analytic),
+            "interp" => Ok(Backend::Interp),
+            "sim" => Ok(Backend::Sim),
+            "pjrt" => Ok(Backend::Pjrt),
+            other => Err(Error::UnknownBackend(other.to_string())),
+        }
+    }
+}
+
+/// What one backend run of one design produced, beyond the analytic cost
+/// (which every design point carries regardless of backend).
+#[derive(Debug, Clone, Default)]
+pub struct BackendReport {
+    /// Simulator report ([`Backend::Sim`]).
+    pub sim: Option<SimReport>,
+    /// Functional output tensor ([`Backend::Interp`] / [`Backend::Pjrt`]).
+    pub output: Option<Tensor>,
+}
+
+/// One evaluation backend. Implementations are stateful (`&mut self`) so
+/// runtimes can keep compile caches across designs. (No `Send` bound:
+/// parallel evaluation constructs one evaluator per worker-local design,
+/// so evaluators never cross threads — which keeps non-`Send` runtime
+/// clients usable.)
+pub trait Evaluator {
+    fn backend(&self) -> Backend;
+
+    /// Evaluate one concrete design. `seed` derives the input tensors for
+    /// functional backends, so the same seed across designs (and across
+    /// backends) yields directly comparable outputs.
+    fn evaluate(
+        &mut self,
+        expr: &RecExpr,
+        params: &CostParams,
+        seed: u64,
+    ) -> Result<BackendReport, Error>;
+}
+
+/// Analytic model only — the cost is computed for every design point
+/// anyway, so this backend adds nothing per design.
+struct AnalyticEval;
+
+impl Evaluator for AnalyticEval {
+    fn backend(&self) -> Backend {
+        Backend::Analytic
+    }
+
+    fn evaluate(
+        &mut self,
+        _expr: &RecExpr,
+        _params: &CostParams,
+        _seed: u64,
+    ) -> Result<BackendReport, Error> {
+        Ok(BackendReport::default())
+    }
+}
+
+/// Pure-Rust functional evaluation (the `tensor` oracle).
+struct InterpEval;
+
+impl Evaluator for InterpEval {
+    fn backend(&self) -> Backend {
+        Backend::Interp
+    }
+
+    fn evaluate(
+        &mut self,
+        expr: &RecExpr,
+        _params: &CostParams,
+        seed: u64,
+    ) -> Result<BackendReport, Error> {
+        let out = eval_expr(expr, &mut Env::random_for(expr, seed))?;
+        Ok(BackendReport { output: Some(out), ..Default::default() })
+    }
+}
+
+/// Cycle-approximate simulation.
+struct SimEval;
+
+impl Evaluator for SimEval {
+    fn backend(&self) -> Backend {
+        Backend::Sim
+    }
+
+    fn evaluate(
+        &mut self,
+        expr: &RecExpr,
+        params: &CostParams,
+        _seed: u64,
+    ) -> Result<BackendReport, Error> {
+        let sim = simulate(expr, &SimConfig { params: params.clone() });
+        Ok(BackendReport { sim: Some(sim), ..Default::default() })
+    }
+}
+
+/// PJRT execution: invocations on compiled kernels, schedule in Rust.
+/// Engines missing from the artifact manifest fall back to the oracle so
+/// arbitrary enumerated designs stay evaluable.
+struct PjrtEval {
+    backend: crate::runtime::PjrtBackend,
+}
+
+impl PjrtEval {
+    fn open() -> Result<Self, Error> {
+        let rt = crate::runtime::EngineRuntime::open_default()?;
+        Ok(PjrtEval { backend: crate::runtime::PjrtBackend::new(rt).with_fallback() })
+    }
+}
+
+impl Evaluator for PjrtEval {
+    fn backend(&self) -> Backend {
+        Backend::Pjrt
+    }
+
+    fn evaluate(
+        &mut self,
+        expr: &RecExpr,
+        _params: &CostParams,
+        seed: u64,
+    ) -> Result<BackendReport, Error> {
+        let out =
+            eval_expr_backend(expr, &mut Env::random_for(expr, seed), &mut self.backend)?;
+        Ok(BackendReport { output: Some(out), ..Default::default() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parse_expr;
+
+    #[test]
+    fn backend_from_str_roundtrip() {
+        for b in [Backend::Analytic, Backend::Interp, Backend::Sim, Backend::Pjrt] {
+            assert_eq!(b.name().parse::<Backend>().unwrap(), b);
+        }
+        assert!(matches!(
+            "verilog".parse::<Backend>().unwrap_err(),
+            Error::UnknownBackend(ref n) if n == "verilog"
+        ));
+    }
+
+    #[test]
+    fn interp_and_sim_report_their_channels() {
+        let e = parse_expr("(invoke-relu (relu-engine 16) (input x [16]))").unwrap();
+        let p = CostParams::default();
+        let r = Backend::Interp.evaluator().unwrap().evaluate(&e, &p, 1).unwrap();
+        assert!(r.output.is_some() && r.sim.is_none());
+        let r = Backend::Sim.evaluator().unwrap().evaluate(&e, &p, 1).unwrap();
+        assert!(r.sim.is_some() && r.output.is_none());
+        let r = Backend::Analytic.evaluator().unwrap().evaluate(&e, &p, 1).unwrap();
+        assert!(r.sim.is_none() && r.output.is_none());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_backend_unavailable_is_typed() {
+        let err = Backend::Pjrt.evaluator().unwrap_err();
+        assert!(matches!(err, Error::Unsupported(_)), "{err}");
+    }
+}

@@ -1,0 +1,411 @@
+//! The primary API: a reusable, backend-pluggable design-space-exploration
+//! **session**.
+//!
+//! The paper's economic argument is that the e-graph makes the
+//! hardware–software design space *cheap to re-query*: the expensive step —
+//! enumerating every split with rewrites — happens once, and then many
+//! different designs can be extracted and evaluated from the same
+//! structure. [`Session`] is that shape as an API:
+//!
+//! ```no_run
+//! use hwsplit::session::{Backend, Objective, Query, Session};
+//! use hwsplit::relay::workloads;
+//! use hwsplit::rewrites::RuleSet;
+//!
+//! let mut session = Session::builder()
+//!     .workload(workloads::mlp())
+//!     .rules(RuleSet::All)
+//!     .build()?;
+//!
+//! // First query enumerates (once, lazily) then extracts + evaluates.
+//! let fast = session.query(&Query::new().objective(Objective::Latency).samples(256))?;
+//! // Re-querying with a different objective / backend / cost params only
+//! // re-runs extraction + evaluation on the shared read-only e-graph.
+//! let small = session.query(&Query::new().objective(Objective::Area).backend(Backend::Sim))?;
+//! assert_eq!(session.enumeration_count(), 1);
+//! # let _ = (fast, small);
+//! # Ok::<(), hwsplit::Error>(())
+//! ```
+//!
+//! Evaluation backends are pluggable ([`Backend`]): the analytic cost
+//! model, the pure-Rust interpreter, the cycle-approximate simulator, and
+//! (with `--features pjrt`) the PJRT runtime executing AOT-compiled Pallas
+//! kernels.
+//!
+//! Threading: enumeration mutates the e-graph single-threaded (the same
+//! discipline as the rewrite `Runner`); extraction and evaluation only read
+//! it, fanned out across a scoped worker pool ([`parallel_map`]).
+
+mod backend;
+mod query;
+
+pub use backend::{Backend, BackendReport, Evaluator};
+pub use query::{
+    frontier_vs_baseline_summary, EvaluatedDesign, Evaluation, Objective, Query,
+};
+
+pub use crate::rewrites::RuleSet;
+
+use crate::cost::{analyze, baseline, CostParams};
+use crate::egraph::{EGraph, Id, Rewrite, Runner, RunnerLimits, RunnerReport};
+use crate::error::Error;
+use crate::extract::{pareto_frontier, sample_design, DesignPoint, Extractor};
+use crate::ir::RecExpr;
+use crate::lower::{lower, LowerOptions};
+use crate::relay::Workload;
+
+/// The enumerated design space: the e-graph after rewriting, its root
+/// class, and the growth report. Shared read-only by every query.
+#[derive(Debug)]
+pub struct Enumeration {
+    pub egraph: EGraph,
+    pub root: Id,
+    pub report: RunnerReport,
+}
+
+/// Configures and creates a [`Session`]. Obtain via [`Session::builder`].
+#[derive(Debug, Default)]
+pub struct SessionBuilder {
+    workload: Option<Workload>,
+    rules: Option<RuleSet>,
+    custom_rules: Option<Vec<Rewrite>>,
+    iters: Option<usize>,
+    workers: Option<usize>,
+    limits: Option<RunnerLimits>,
+    lower_opts: Option<LowerOptions>,
+}
+
+impl SessionBuilder {
+    /// The workload to explore (required).
+    pub fn workload(mut self, w: Workload) -> Self {
+        self.workload = Some(w);
+        self
+    }
+
+    /// Which rewrite set to enumerate with (default: [`RuleSet::Paper`]).
+    pub fn rules(mut self, rules: RuleSet) -> Self {
+        self.rules = Some(rules);
+        self
+    }
+
+    /// Enumerate with an explicit rule list instead of a named set (used by
+    /// the ablation bench to knock out rule groups).
+    pub fn custom_rules(mut self, rules: Vec<Rewrite>) -> Self {
+        self.custom_rules = Some(rules);
+        self
+    }
+
+    /// Rewrite iteration budget (default 8; further bounded by `limits`).
+    pub fn iters(mut self, iters: usize) -> Self {
+        self.iters = Some(iters);
+        self
+    }
+
+    /// Worker-pool width for extraction/evaluation (default: available
+    /// parallelism).
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = Some(workers);
+        self
+    }
+
+    /// Enumeration budgets (node/time/match caps).
+    pub fn limits(mut self, limits: RunnerLimits) -> Self {
+        self.limits = Some(limits);
+        self
+    }
+
+    /// Lowering options (default: buffered reification, the paper's Fig. 1).
+    pub fn lower_opts(mut self, opts: LowerOptions) -> Self {
+        self.lower_opts = Some(opts);
+        self
+    }
+
+    /// Lower the workload and produce a session. Enumeration has NOT run
+    /// yet — it happens lazily on the first query (or an explicit
+    /// [`Session::enumerate`]).
+    pub fn build(self) -> Result<Session, Error> {
+        let workload = self
+            .workload
+            .ok_or_else(|| Error::InvalidConfig("session has no workload".into()))?;
+        let rules = match (self.custom_rules, self.rules) {
+            (Some(_), Some(_)) => {
+                return Err(Error::InvalidConfig(
+                    "set either rules(RuleSet) or custom_rules(Vec<Rewrite>), not both".into(),
+                ))
+            }
+            (Some(custom), None) => custom,
+            (None, set) => set.unwrap_or(RuleSet::Paper).rules(),
+        };
+        let lowered = lower(&workload.expr, self.lower_opts.unwrap_or_default())?;
+        Ok(Session {
+            workload,
+            lowered,
+            rules,
+            iters: self.iters.unwrap_or(8),
+            workers: self.workers.unwrap_or_else(default_workers),
+            limits: self.limits.unwrap_or_default(),
+            enumerated: None,
+            enumerations: 0,
+        })
+    }
+}
+
+fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+fn vlog(phase: &str, t0: std::time::Instant) {
+    if std::env::var_os("HWSPLIT_VERBOSE").is_some() {
+        eprintln!("[session] {phase}: {:.2?}", t0.elapsed());
+    }
+}
+
+/// A reusable exploration session: owns the lowered workload and the
+/// (lazily built, cached) enumerated e-graph, and answers repeated
+/// [`Query`]s against it. See the module docs for the usage pattern.
+#[derive(Debug)]
+pub struct Session {
+    workload: Workload,
+    lowered: RecExpr,
+    rules: Vec<Rewrite>,
+    iters: usize,
+    workers: usize,
+    limits: RunnerLimits,
+    enumerated: Option<Enumeration>,
+    enumerations: usize,
+}
+
+impl Session {
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::default()
+    }
+
+    /// Shorthand for a default-configured session on one workload.
+    pub fn new(workload: Workload) -> Result<Self, Error> {
+        Session::builder().workload(workload).build()
+    }
+
+    /// The workload this session explores.
+    pub fn workload(&self) -> &Workload {
+        &self.workload
+    }
+
+    /// The reified (EngineIR) initial design.
+    pub fn lowered(&self) -> &RecExpr {
+        &self.lowered
+    }
+
+    /// How many times rewrite enumeration has actually run. Stays at 1 no
+    /// matter how many queries are issued — the test suite pins this.
+    pub fn enumeration_count(&self) -> usize {
+        self.enumerations
+    }
+
+    /// Run rewrite enumeration if it has not run yet; return the cached
+    /// [`Enumeration`] either way.
+    pub fn enumerate(&mut self) -> Result<&Enumeration, Error> {
+        if self.enumerated.is_none() {
+            let t0 = std::time::Instant::now();
+            let mut runner = Runner::new(self.lowered.clone(), self.rules.clone())
+                .with_limits(self.limits.clone());
+            let report = runner.run(self.iters);
+            self.enumerated =
+                Some(Enumeration { egraph: runner.egraph, root: runner.root, report });
+            self.enumerations += 1;
+            vlog("enumerate", t0);
+        }
+        Ok(self.enumerated.as_ref().expect("just enumerated"))
+    }
+
+    /// Answer one query: extract candidate designs from the (shared,
+    /// read-only) e-graph and evaluate them on the query's backend. The
+    /// first call triggers enumeration; subsequent calls — with different
+    /// objectives, sample counts, cost parameters or backends — reuse it.
+    pub fn query(&mut self, q: &Query) -> Result<Evaluation, Error> {
+        self.enumerate()?;
+        let en = self.enumerated.as_ref().expect("enumerated above");
+        let (eg, root) = (&en.egraph, en.root);
+
+        // Extraction: the two greedy endpoints anchor the frontier, then
+        // `samples` randomized-cost extractions (parallel — extraction only
+        // reads the e-graph).
+        let t0 = std::time::Instant::now();
+        let mut exprs: Vec<(String, RecExpr)> = vec![
+            (
+                "greedy-latency".into(),
+                Extractor::new(eg, crate::extract::latency_cost).extract(eg, root),
+            ),
+            (
+                "greedy-area".into(),
+                Extractor::new(eg, crate::extract::area_cost).extract(eg, root),
+            ),
+        ];
+        let sampled: Vec<(String, RecExpr)> =
+            parallel_map(self.workers, (0..q.samples).collect(), |i: &usize| {
+                let seed = q.seed.wrapping_add(*i as u64);
+                (format!("sample-{seed}"), sample_design(eg, root, seed))
+            });
+        exprs.extend(sampled);
+        // Deduplicate structurally identical designs.
+        let mut seen = std::collections::HashSet::new();
+        exprs.retain(|(_, e)| seen.insert(e.to_string()));
+        vlog("extract", t0);
+
+        // Evaluation on the query's backend.
+        let t0 = std::time::Instant::now();
+        let designs = evaluate_all(q, exprs, self.workers)?;
+        vlog("evaluate", t0);
+
+        let frontier =
+            pareto_frontier(&designs.iter().map(|d| d.point.clone()).collect::<Vec<_>>());
+        let base = baseline(&self.lowered, &q.params);
+        Ok(Evaluation {
+            workload: self.workload.name.to_string(),
+            backend: q.backend,
+            objective: q.objective,
+            designs,
+            frontier,
+            baseline: base,
+        })
+    }
+
+    /// Dismantle the session into its lowered expression and enumeration
+    /// (enumerating first if needed) — the compatibility path for the old
+    /// one-shot [`crate::coordinator::explore`].
+    pub fn into_parts(mut self) -> Result<(RecExpr, Enumeration), Error> {
+        self.enumerate()?;
+        Ok((self.lowered, self.enumerated.expect("just enumerated")))
+    }
+}
+
+/// Evaluate extracted designs on the query's backend: the analytic cost +
+/// stats always (they define the [`DesignPoint`]), plus whatever the
+/// backend reports. Parallel-safe backends get one evaluator per design on
+/// the pool; the PJRT runtime evaluates serially through its shared
+/// compile cache.
+fn evaluate_all(
+    q: &Query,
+    exprs: Vec<(String, RecExpr)>,
+    workers: usize,
+) -> Result<Vec<EvaluatedDesign>, Error> {
+    let point = |origin: &str, expr: &RecExpr, params: &CostParams| -> DesignPoint {
+        let (cost, stats) = analyze(expr, params);
+        DesignPoint { expr: expr.clone(), cost, stats, origin: origin.to_string() }
+    };
+    if q.backend.parallel_safe() {
+        parallel_map(workers, exprs, |(origin, expr)| -> Result<EvaluatedDesign, Error> {
+            let report = q.backend.evaluator()?.evaluate(expr, &q.params, q.seed)?;
+            Ok(EvaluatedDesign::new(point(origin, expr, &q.params), report))
+        })
+        .into_iter()
+        .collect()
+    } else {
+        let mut ev = q.backend.evaluator()?;
+        exprs
+            .iter()
+            .map(|(origin, expr)| {
+                let report = ev.evaluate(expr, &q.params, q.seed)?;
+                Ok(EvaluatedDesign::new(point(origin, expr, &q.params), report))
+            })
+            .collect()
+    }
+}
+
+/// Scoped-thread parallel map preserving input order.
+pub fn parallel_map<T: Send + Sync, R: Send>(
+    workers: usize,
+    items: Vec<T>,
+    f: impl Fn(&T) -> R + Sync,
+) -> Vec<R> {
+    if items.is_empty() {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, items.len());
+    let results: Vec<std::sync::Mutex<Option<R>>> =
+        items.iter().map(|_| std::sync::Mutex::new(None)).collect();
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(&items[i]);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    results.into_iter().map(|m| m.into_inner().unwrap().unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::relay::workloads;
+
+    fn small_session(w: Workload) -> Session {
+        Session::builder()
+            .workload(w)
+            .rules(RuleSet::Paper)
+            .iters(4)
+            .workers(4)
+            .limits(RunnerLimits { max_nodes: 30_000, ..Default::default() })
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map(8, (0..100).collect::<Vec<_>>(), |x| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn builder_requires_workload() {
+        let err = Session::builder().build().unwrap_err();
+        assert!(matches!(err, Error::InvalidConfig(_)), "{err}");
+    }
+
+    #[test]
+    fn builder_rejects_conflicting_rule_configs() {
+        let err = Session::builder()
+            .workload(workloads::relu128())
+            .rules(RuleSet::Fig2)
+            .custom_rules(crate::rewrites::fig2_rules())
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, Error::InvalidConfig(_)), "{err}");
+    }
+
+    #[test]
+    fn enumeration_is_lazy_and_cached() {
+        let mut s = small_session(workloads::relu128());
+        assert_eq!(s.enumeration_count(), 0, "build must not enumerate");
+        s.enumerate().unwrap();
+        s.enumerate().unwrap();
+        assert_eq!(s.enumeration_count(), 1);
+    }
+
+    #[test]
+    fn query_returns_designs_and_frontier() {
+        let mut s = small_session(workloads::ffn_block());
+        let ev = s.query(&Query::new().samples(12)).unwrap();
+        assert!(ev.designs.len() >= 3, "need diverse designs");
+        assert!(!ev.frontier.is_empty());
+        assert!(ev.baseline.cost.area > 0.0);
+        assert!(ev.best().is_some());
+    }
+
+    #[test]
+    fn objectives_rank_differently() {
+        let mut s = small_session(workloads::relu128());
+        let fast = s.query(&Query::new().objective(Objective::Latency).samples(16)).unwrap();
+        let small = s.query(&Query::new().objective(Objective::Area).samples(16)).unwrap();
+        assert_eq!(s.enumeration_count(), 1);
+        let f = fast.best().unwrap();
+        let a = small.best().unwrap();
+        assert!(f.point.cost.latency <= a.point.cost.latency);
+        assert!(a.point.cost.area <= f.point.cost.area);
+    }
+}

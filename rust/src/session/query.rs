@@ -1,0 +1,207 @@
+//! Queries and their results: what you ask a [`super::Session`] once the
+//! design space is enumerated. A query is cheap relative to enumeration —
+//! extraction + evaluation over the shared read-only e-graph — so changing
+//! the objective, the sample count, the cost parameters or the backend and
+//! asking again is the intended usage pattern.
+
+use super::backend::{Backend, BackendReport};
+use crate::cost::{Baseline, CostParams, DesignCost};
+use crate::extract::DesignPoint;
+use crate::sim::SimReport;
+use crate::tensor::Tensor;
+
+/// What "best" means for a query.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Objective {
+    /// Minimize end-to-end latency.
+    Latency,
+    /// Minimize area.
+    Area,
+    /// Minimize `latency·(1-w) + area·w` for the given weight in `[0,1]`.
+    Balanced(f64),
+}
+
+impl Objective {
+    /// Scalar score (lower is better) of one design cost.
+    pub fn score(&self, c: &DesignCost) -> f64 {
+        match self {
+            Objective::Latency => c.latency,
+            Objective::Area => c.area,
+            Objective::Balanced(w) => c.scalar(*w),
+        }
+    }
+}
+
+impl std::str::FromStr for Objective {
+    type Err = crate::error::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "latency" => Ok(Objective::Latency),
+            "area" => Ok(Objective::Area),
+            "balanced" => Ok(Objective::Balanced(0.5)),
+            other => Err(crate::error::Error::InvalidConfig(format!(
+                "unknown objective '{other}' (expected latency | area | balanced)"
+            ))),
+        }
+    }
+}
+
+/// One question against an enumerated design space. Builder-style:
+///
+/// ```ignore
+/// Query::new().objective(Objective::Latency).samples(256).backend(Backend::Sim)
+/// ```
+#[derive(Debug, Clone)]
+pub struct Query {
+    pub objective: Objective,
+    /// Randomized-extraction sample count (greedy endpoints are added on
+    /// top).
+    pub samples: usize,
+    /// Base seed for sampled extraction *and* for the input tensors of
+    /// functional backends.
+    pub seed: u64,
+    pub backend: Backend,
+    pub params: CostParams,
+}
+
+impl Default for Query {
+    fn default() -> Self {
+        Query {
+            objective: Objective::Latency,
+            samples: 64,
+            seed: 0,
+            backend: Backend::Analytic,
+            params: CostParams::default(),
+        }
+    }
+}
+
+impl Query {
+    pub fn new() -> Self {
+        Query::default()
+    }
+
+    pub fn objective(mut self, o: Objective) -> Self {
+        self.objective = o;
+        self
+    }
+
+    pub fn samples(mut self, n: usize) -> Self {
+        self.samples = n;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn backend(mut self, b: Backend) -> Self {
+        self.backend = b;
+        self
+    }
+
+    pub fn params(mut self, p: CostParams) -> Self {
+        self.params = p;
+        self
+    }
+}
+
+/// One design evaluated by a query's backend.
+#[derive(Debug, Clone)]
+pub struct EvaluatedDesign {
+    pub point: DesignPoint,
+    /// Simulator report when the query ran on [`Backend::Sim`].
+    pub sim: Option<SimReport>,
+    /// Functional output when the query ran on [`Backend::Interp`] or
+    /// [`Backend::Pjrt`].
+    pub output: Option<Tensor>,
+}
+
+impl EvaluatedDesign {
+    pub(crate) fn new(point: DesignPoint, report: BackendReport) -> Self {
+        EvaluatedDesign { point, sim: report.sim, output: report.output }
+    }
+}
+
+/// The answer to one [`Query`]: evaluated designs, the area/latency Pareto
+/// frontier among them, and the one-engine-per-kernel-type baseline under
+/// the query's cost parameters.
+#[derive(Debug)]
+pub struct Evaluation {
+    pub workload: String,
+    pub backend: Backend,
+    pub objective: Objective,
+    pub designs: Vec<EvaluatedDesign>,
+    pub frontier: Vec<DesignPoint>,
+    pub baseline: Baseline,
+}
+
+impl Evaluation {
+    /// The best design under this query's objective.
+    pub fn best(&self) -> Option<&EvaluatedDesign> {
+        self.designs.iter().min_by(|a, b| {
+            self.objective
+                .score(&a.point.cost)
+                .total_cmp(&self.objective.score(&b.point.cost))
+        })
+    }
+
+    /// Experiment E3 summary: does the enumerated frontier dominate the
+    /// baseline point, and from which side?
+    pub fn frontier_vs_baseline(&self) -> String {
+        frontier_vs_baseline_summary(&self.frontier, &self.baseline.cost)
+    }
+}
+
+/// Shared E3 summary formatter (also used by the deprecated
+/// `coordinator::Exploration`).
+pub fn frontier_vs_baseline_summary(frontier: &[DesignPoint], b: &DesignCost) -> String {
+    let dominating = frontier.iter().filter(|p| p.cost.dominates(b)).count();
+    let smaller = frontier.iter().filter(|p| p.cost.area < b.area).count();
+    let faster = frontier.iter().filter(|p| p.cost.latency < b.latency).count();
+    format!(
+        "baseline(area={:.1}, lat={:.1}) | frontier: {} points, {} dominate baseline, \
+         {} smaller-area, {} lower-latency",
+        b.area,
+        b.latency,
+        frontier.len(),
+        dominating,
+        smaller,
+        faster
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn objective_scores() {
+        let c = DesignCost { area: 10.0, latency: 100.0, ..Default::default() };
+        assert_eq!(Objective::Latency.score(&c), 100.0);
+        assert_eq!(Objective::Area.score(&c), 10.0);
+        assert_eq!(Objective::Balanced(0.5).score(&c), 55.0);
+    }
+
+    #[test]
+    fn query_builder_chains() {
+        let q = Query::new()
+            .objective(Objective::Area)
+            .samples(7)
+            .seed(3)
+            .backend(Backend::Sim);
+        assert_eq!(q.objective, Objective::Area);
+        assert_eq!(q.samples, 7);
+        assert_eq!(q.seed, 3);
+        assert_eq!(q.backend, Backend::Sim);
+    }
+
+    #[test]
+    fn objective_from_str() {
+        assert_eq!("latency".parse::<Objective>().unwrap(), Objective::Latency);
+        assert_eq!("area".parse::<Objective>().unwrap(), Objective::Area);
+        assert!("speed".parse::<Objective>().is_err());
+    }
+}

@@ -14,19 +14,30 @@ use std::collections::HashMap;
 
 /// Evaluation failure (unbound names, ill-formed programs the type checker
 /// would also reject).
-#[derive(Debug, Clone, thiserror::Error)]
+#[derive(Debug, Clone)]
 pub enum EvalError {
-    #[error("unbound tensor '{0}'")]
     UnboundTensor(Symbol),
-    #[error("unbound loop variable '{0}'")]
     UnboundLVar(Symbol),
-    #[error("expected an index expression at {0:?}")]
     NotAnIndex(Id),
-    #[error("expected a tensor at {0:?} (engines have no value)")]
     NotATensor(Id),
-    #[error("engine backend: {0}")]
     Backend(String),
 }
+
+impl std::fmt::Display for EvalError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EvalError::UnboundTensor(s) => write!(f, "unbound tensor '{s}'"),
+            EvalError::UnboundLVar(s) => write!(f, "unbound loop variable '{s}'"),
+            EvalError::NotAnIndex(id) => write!(f, "expected an index expression at {id:?}"),
+            EvalError::NotATensor(id) => {
+                write!(f, "expected a tensor at {id:?} (engines have no value)")
+            }
+            EvalError::Backend(msg) => write!(f, "engine backend: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for EvalError {}
 
 /// How engine invocations execute. The default [`Oracle`] computes them
 /// with the pure-Rust tensor ops; [`crate::runtime::PjrtBackend`] routes

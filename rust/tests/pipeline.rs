@@ -8,15 +8,15 @@
 //!   `make artifacts`; skips otherwise);
 //! * property: parser/printer round-trips on every enumerated sample.
 
-use hwsplit::coordinator::{explore, ExploreConfig, RuleSet};
 use hwsplit::cost::{cost_of, CostParams};
 use hwsplit::egraph::{Runner, RunnerLimits};
 use hwsplit::extract::sample_design;
 use hwsplit::ir::{parse_expr, Op};
 use hwsplit::lower::{lower, lower_default, LowerOptions};
 use hwsplit::relay::workloads;
-use hwsplit::rewrites;
+use hwsplit::rewrites::{self, RuleSet};
 use hwsplit::runtime::{default_artifact_dir, EngineRuntime, PjrtBackend};
+use hwsplit::session::{Backend, Query, Session};
 use hwsplit::sim::{simulate, SimConfig};
 use hwsplit::tensor::{eval_expr, eval_expr_backend, Env};
 
@@ -25,7 +25,7 @@ use hwsplit::tensor::{eval_expr, eval_expr_backend, Env};
 #[test]
 fn fig1_conv2d_reification_golden() {
     let w = workloads::convblock();
-    let lo = lower(&w.expr, LowerOptions { buffers: true });
+    let lo = lower(&w.expr, LowerOptions { buffers: true }).unwrap();
     let txt = lo.to_string();
     assert!(txt.contains("(conv-engine 16 16 3 8 3 1)"), "engine instantiation: {txt}");
     assert!(txt.contains("(buffer sram (invoke-conv"), "output storage: {txt}");
@@ -97,7 +97,7 @@ fn pjrt_executes_enumerated_mlp_design() {
         return;
     };
     let w = workloads::mlp();
-    let initial = lower_default(&w.expr);
+    let initial = lower_default(&w.expr).expect("workload lowers");
     let mut runner = Runner::new(initial.clone(), rewrites::paper_rules());
     runner.run(3);
 
@@ -127,7 +127,7 @@ fn pjrt_executes_enumerated_mlp_design() {
 #[test]
 fn printer_parser_roundtrip_on_sampled_designs() {
     let w = workloads::convblock();
-    let lowered = lower_default(&w.expr);
+    let lowered = lower_default(&w.expr).expect("workload lowers");
     let mut runner = Runner::new(lowered, rewrites::paper_rules())
         .with_limits(RunnerLimits { max_nodes: 20_000, ..Default::default() });
     runner.run(4);
@@ -139,26 +139,25 @@ fn printer_parser_roundtrip_on_sampled_designs() {
     }
 }
 
-/// The coordinator end-to-end on a conv workload: frontier non-empty,
-/// baseline computed, and all sim utilizations sane.
+/// The session end-to-end on a conv workload: frontier non-empty, baseline
+/// computed, and all sim utilizations sane.
 #[test]
-fn explore_pipeline_invariants() {
+fn session_pipeline_invariants() {
     let w = workloads::convblock();
-    let ex = explore(
-        &w,
-        &ExploreConfig {
-            iters: 4,
-            samples: 16,
-            rules: RuleSet::Paper,
-            limits: RunnerLimits { max_nodes: 25_000, ..Default::default() },
-            ..Default::default()
-        },
-    );
+    let mut session = Session::builder()
+        .workload(w)
+        .rules(RuleSet::Paper)
+        .iters(4)
+        .limits(RunnerLimits { max_nodes: 25_000, ..Default::default() })
+        .build()
+        .unwrap();
+    let ex = session.query(&Query::new().backend(Backend::Sim).samples(16)).unwrap();
     assert!(!ex.frontier.is_empty());
     assert!(ex.baseline.cost.area > 0.0);
     for d in &ex.designs {
-        assert!(d.sim.cycles > 0.0);
-        assert!((0.0..=1.0).contains(&d.sim.utilization));
+        let sim = d.sim.as_ref().expect("sim backend reports for every design");
+        assert!(sim.cycles > 0.0);
+        assert!((0.0..=1.0).contains(&sim.utilization));
         assert!(d.point.cost.latency.is_finite());
     }
 }

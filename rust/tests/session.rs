@@ -1,0 +1,214 @@
+//! Integration tests for the `Session` API — the crate's core economic
+//! claim as executable checks:
+//!
+//! * enumeration runs **exactly once** no matter how many queries (with
+//!   different objectives, backends, sample counts, cost params) are
+//!   issued;
+//! * evaluation backends are interchangeable views of the same design set
+//!   and agree on functional outputs;
+//! * the Pareto frontier invariant (only mutually non-dominated points)
+//!   holds property-style over random cost clouds.
+
+use hwsplit::cost::{CostParams, DesignCost, DesignStats};
+use hwsplit::egraph::RunnerLimits;
+use hwsplit::error::Error;
+use hwsplit::extract::{pareto_frontier, DesignPoint};
+use hwsplit::ir::parse_expr;
+use hwsplit::prop;
+use hwsplit::relay::workloads;
+use hwsplit::rewrites::RuleSet;
+use hwsplit::session::{Backend, Objective, Query, Session};
+use hwsplit::tensor::{eval_expr, Env};
+
+fn small_session(w: hwsplit::relay::Workload) -> Session {
+    Session::builder()
+        .workload(w)
+        .rules(RuleSet::Paper)
+        .iters(4)
+        .workers(4)
+        .limits(RunnerLimits { max_nodes: 30_000, ..Default::default() })
+        .build()
+        .unwrap()
+}
+
+/// THE acceptance property: a second (and third, and fourth) query with a
+/// different objective / backend / sample count answers from the cached
+/// e-graph — the rewrite runner executed exactly once.
+#[test]
+fn session_enumerates_exactly_once_across_queries() {
+    let mut s = small_session(workloads::ffn_block());
+    assert_eq!(s.enumeration_count(), 0, "building a session must not enumerate");
+
+    let fast = s.query(&Query::new().objective(Objective::Latency).samples(12)).unwrap();
+    assert_eq!(s.enumeration_count(), 1, "first query pays enumeration");
+
+    // Same samples as `fast` so both objectives rank the identical design
+    // set; `simmed` varies the sample count to show that also re-queries
+    // cheaply.
+    let small = s.query(&Query::new().objective(Objective::Area).samples(12)).unwrap();
+    let simmed = s.query(&Query::new().backend(Backend::Sim).samples(8)).unwrap();
+    let cheap_dram = s
+        .query(&Query::new().params(CostParams { dram_bw: 1.0, ..Default::default() }))
+        .unwrap();
+    assert_eq!(
+        s.enumeration_count(),
+        1,
+        "changed objective/backend/samples/params must not re-enumerate"
+    );
+
+    // All four queries answered from the same space, nontrivially.
+    for ev in [&fast, &small, &simmed, &cheap_dram] {
+        assert!(ev.designs.len() >= 3);
+        assert!(!ev.frontier.is_empty());
+    }
+    // And the objectives genuinely rank differently.
+    let f = fast.best().unwrap().point.cost.clone();
+    let a = small.best().unwrap().point.cost.clone();
+    assert!(f.latency <= a.latency);
+    assert!(a.area <= f.area);
+}
+
+/// Backend-equivalence smoke test: the same query on Analytic, Interp and
+/// Sim extracts the same design set (extraction is deterministic given the
+/// seed), and the Interp outputs prove every design computes the workload's
+/// function — i.e. the backends are different *measurements* of the same
+/// designs, not different designs.
+#[test]
+fn backends_agree_on_design_set_and_functional_outputs() {
+    let w = workloads::ffn_block();
+    let mut s = small_session(w.clone());
+    let q = |b: Backend| Query::new().backend(b).samples(10).seed(7);
+    let analytic = s.query(&q(Backend::Analytic)).unwrap();
+    let interp = s.query(&q(Backend::Interp)).unwrap();
+    let sim = s.query(&q(Backend::Sim)).unwrap();
+    assert_eq!(s.enumeration_count(), 1);
+
+    // Identical design sets across backends.
+    let keys = |ev: &hwsplit::session::Evaluation| {
+        ev.designs.iter().map(|d| d.point.expr.to_string()).collect::<Vec<_>>()
+    };
+    assert_eq!(keys(&analytic), keys(&interp));
+    assert_eq!(keys(&analytic), keys(&sim));
+
+    // Channel shape: analytic adds nothing, interp adds outputs, sim adds
+    // reports.
+    assert!(analytic.designs.iter().all(|d| d.sim.is_none() && d.output.is_none()));
+    assert!(interp.designs.iter().all(|d| d.output.is_some()));
+    assert!(sim.designs.iter().all(|d| d.sim.as_ref().is_some_and(|r| r.cycles > 0.0)));
+
+    // Functional agreement: every design's interp output equals the
+    // workload oracle under the query seed.
+    let want = eval_expr(&w.expr, &mut Env::random_for(&w.expr, 7)).unwrap();
+    for d in &interp.designs {
+        let got = d.output.as_ref().unwrap();
+        assert!(want.allclose(got, 1e-4), "{} diverged from the workload", d.point.origin);
+    }
+
+    // And analytic cost agrees with itself across backends (same designs,
+    // same params → same DesignPoint costs).
+    for (a, s_) in analytic.designs.iter().zip(&sim.designs) {
+        assert_eq!(a.point.cost, s_.point.cost);
+    }
+}
+
+/// In a stub (no `pjrt` feature) build, a Pjrt-backend query fails with
+/// the typed `Unsupported` error and the session stays usable.
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn pjrt_query_unsupported_is_typed_and_nonfatal() {
+    let mut s = small_session(workloads::relu128());
+    let err = s.query(&Query::new().backend(Backend::Pjrt).samples(4)).unwrap_err();
+    assert!(matches!(err, Error::Unsupported(_)), "{err}");
+    // The failed query still paid (and cached) enumeration; a later query
+    // on a supported backend answers fine.
+    let ok = s.query(&Query::new().samples(4)).unwrap();
+    assert!(!ok.designs.is_empty());
+    assert_eq!(s.enumeration_count(), 1);
+}
+
+/// Property: `pareto_frontier` returns exactly the non-dominated subset —
+/// no frontier point is dominated by any input point, and every
+/// non-dominated input cost appears on the frontier.
+#[test]
+fn prop_pareto_frontier_is_exactly_the_nondominated_set() {
+    let expr = parse_expr("(invoke-relu (relu-engine 8) (input x [8]))").unwrap();
+    prop::check("pareto-frontier-nondominated", 50, |rng| {
+        let n = rng.range(1, 40);
+        let points: Vec<DesignPoint> = (0..n)
+            .map(|i| DesignPoint {
+                expr: expr.clone(),
+                cost: DesignCost {
+                    // Coarse grid so ties and duplicates actually occur.
+                    area: (rng.below(12) + 1) as f64,
+                    latency: (rng.below(12) + 1) as f64,
+                    ..Default::default()
+                },
+                stats: DesignStats::default(),
+                origin: format!("p{i}"),
+            })
+            .collect();
+        let frontier = pareto_frontier(&points);
+        assert!(!frontier.is_empty(), "nonempty input must yield a frontier");
+
+        // 1. No frontier point is dominated by any input point.
+        for f in &frontier {
+            for p in &points {
+                assert!(
+                    !p.cost.dominates(&f.cost),
+                    "frontier point ({}, {}) dominated by ({}, {})",
+                    f.cost.area,
+                    f.cost.latency,
+                    p.cost.area,
+                    p.cost.latency
+                );
+            }
+        }
+        // 2. Mutual non-domination inside the frontier, and no duplicate
+        //    (area, latency) pairs.
+        for (i, a) in frontier.iter().enumerate() {
+            for (j, b) in frontier.iter().enumerate() {
+                if i != j {
+                    assert!(!a.cost.dominates(&b.cost));
+                    assert!(
+                        a.cost.area != b.cost.area || a.cost.latency != b.cost.latency,
+                        "duplicate frontier point"
+                    );
+                }
+            }
+        }
+        // 3. Completeness: every non-dominated input cost is represented.
+        for p in &points {
+            let dominated = points.iter().any(|q| q.cost.dominates(&p.cost));
+            if !dominated {
+                assert!(
+                    frontier.iter().any(|f| f.cost.area == p.cost.area
+                        && f.cost.latency == p.cost.latency),
+                    "non-dominated ({}, {}) missing from frontier",
+                    p.cost.area,
+                    p.cost.latency
+                );
+            }
+        }
+        // 4. Sorted by area.
+        for w in frontier.windows(2) {
+            assert!(w[0].cost.area <= w[1].cost.area);
+        }
+    });
+}
+
+/// The builder surfaces configuration mistakes as typed errors.
+#[test]
+fn builder_and_parsers_return_typed_errors() {
+    assert!(matches!(
+        Session::builder().build().unwrap_err(),
+        Error::InvalidConfig(_)
+    ));
+    assert!(matches!(
+        "warp-drive".parse::<Backend>().unwrap_err(),
+        Error::UnknownBackend(_)
+    ));
+    assert!(matches!(
+        "bogus".parse::<RuleSet>().unwrap_err(),
+        Error::UnknownRuleSet(_)
+    ));
+}

@@ -17,7 +17,7 @@ use hwsplit::tensor::{eval_expr, Env};
 
 fn check_workload(name: &str, rules: RuleSet, iters: usize, samples: u64) {
     let w = all_workloads().into_iter().find(|w| w.name == name).unwrap();
-    let lowered = lower_default(&w.expr);
+    let lowered = lower_default(&w.expr).expect("workload lowers");
     let mut runner = Runner::new(lowered, rules.rules())
         .with_limits(RunnerLimits { max_nodes: 40_000, ..Default::default() });
     runner.run(iters);
@@ -103,7 +103,7 @@ fn random_rule_subsets_sound() {
         if rules.is_empty() {
             return;
         }
-        let lowered = lower_default(&w.expr);
+        let lowered = lower_default(&w.expr).expect("workload lowers");
         let mut runner = Runner::new(lowered, rules)
             .with_limits(RunnerLimits { max_nodes: 15_000, ..Default::default() });
         runner.run(3);
@@ -126,7 +126,7 @@ fn egraph_invariants_under_random_rewriting() {
     prop::check("egraph-invariants", 8, |rng| {
         let workloads = all_workloads();
         let w = &workloads[rng.below(workloads.len())];
-        let lowered = lower_default(&w.expr);
+        let lowered = lower_default(&w.expr).expect("workload lowers");
         let all = hwsplit::rewrites::all_rules();
         let mut eg = hwsplit::egraph::EGraph::new();
         eg.add_expr(&lowered);
@@ -153,7 +153,7 @@ fn egraph_invariants_under_random_rewriting() {
 #[test]
 fn design_count_is_monotone() {
     let w = all_workloads().into_iter().find(|w| w.name == "convblock").unwrap();
-    let lowered = lower_default(&w.expr);
+    let lowered = lower_default(&w.expr).expect("workload lowers");
     let mut runner = Runner::new(lowered, RuleSet::Paper.rules())
         .with_limits(RunnerLimits { max_nodes: 20_000, ..Default::default() });
     let report = runner.run(5);
