@@ -40,6 +40,21 @@ pub struct EGraph {
     pub n_unions: usize,
     /// True when `union` has run since the last `rebuild`.
     dirty: bool,
+    /// Classes that gained e-nodes (fresh inserts or union merges) since
+    /// the last [`EGraph::take_dirty`] — the incremental matcher's work
+    /// list. May hold stale/duplicate ids; `take_dirty` canonicalizes.
+    dirty_classes: Vec<Id>,
+    /// Ids that stopped being canonical (the losing root of each union)
+    /// since the last [`EGraph::take_merged_roots`] — consumers holding
+    /// canonical ids use this to invalidate selectively.
+    merged_roots: Vec<Id>,
+    /// Live class count, maintained by `add`/`union` so per-iteration stats
+    /// don't rescan the arena. `num_classes` debug-asserts it against the
+    /// scan.
+    live_classes: usize,
+    /// Live node count across classes (duplicates included until `rebuild`
+    /// compacts them, exactly like the scan it replaces).
+    live_nodes: usize,
 }
 
 impl EGraph {
@@ -59,14 +74,28 @@ impl EGraph {
         self.uf.find_immutable(id)
     }
 
-    /// Number of live e-classes.
+    /// Number of live e-classes. O(1): a live counter maintained by
+    /// `add`/`union`; debug builds assert it against the full scan.
     pub fn num_classes(&self) -> usize {
-        self.classes.iter().filter(|c| c.is_some()).count()
+        debug_assert_eq!(
+            self.live_classes,
+            self.classes.iter().filter(|c| c.is_some()).count(),
+            "live class counter diverged from scan"
+        );
+        self.live_classes
     }
 
-    /// Total number of e-nodes across live classes.
+    /// Total number of e-nodes across live classes. O(1): a live counter
+    /// maintained by `add`/`rebuild`; debug builds assert it against the
+    /// full scan. Like the scan it replaces, this includes not-yet-deduped
+    /// duplicates between a `union` and the next `rebuild`.
     pub fn total_nodes(&self) -> usize {
-        self.classes.iter().flatten().map(|c| c.nodes.len()).sum()
+        debug_assert_eq!(
+            self.live_nodes,
+            self.classes.iter().flatten().map(|c| c.nodes.len()).sum::<usize>(),
+            "live node counter diverged from scan"
+        );
+        self.live_nodes
     }
 
     /// O(1) proxy for [`Self::total_nodes`]: the hashcons size (exact after
@@ -147,6 +176,9 @@ impl EGraph {
         }
         self.classes.push(Some(EClass { id, nodes: vec![node.clone()], parents: vec![], ty }));
         self.memo.insert(node, id);
+        self.live_classes += 1;
+        self.live_nodes += 1;
+        self.dirty_classes.push(id);
         id
     }
 
@@ -185,7 +217,10 @@ impl EGraph {
         kept.nodes.extend(merged.nodes);
         kept.parents.extend(merged.parents);
         self.n_unions += 1;
+        self.live_classes -= 1;
         self.dirty = true;
+        self.dirty_classes.push(keep);
+        self.merged_roots.push(merge);
         self.pending.push(keep);
         (keep, true)
     }
@@ -257,9 +292,71 @@ impl EGraph {
             // deterministic; sorting by Debug strings is catastrophically
             // slow at scale).
             seen.clear();
+            let before = nodes.len();
             nodes.retain(|n| seen.insert(n.clone(), ()).is_none());
+            self.live_nodes -= before - nodes.len();
             self.class_mut(id).nodes = nodes;
         }
+    }
+
+    /// Drain the dirty set: the canonical, deduplicated, ascending ids of
+    /// every class that gained e-nodes (fresh inserts or union merges)
+    /// since the previous drain. Freshly built graphs report every class
+    /// dirty, so an incremental consumer's first round is a full search.
+    /// Call after [`EGraph::rebuild`] so the returned ids are canonical.
+    pub fn take_dirty(&mut self) -> Vec<Id> {
+        let mut out = std::mem::take(&mut self.dirty_classes);
+        for id in &mut out {
+            *id = self.uf.find(*id);
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Drain the ids that stopped being canonical (each union's losing
+    /// root) since the previous drain. A consumer that caches canonical
+    /// ids only needs to re-canonicalize entries mentioning one of these —
+    /// everything else is still canonical. Unsorted, may repeat ids that
+    /// were never canonical from the consumer's viewpoint (classes created
+    /// and merged within one round); both are harmless for invalidation.
+    pub fn take_merged_roots(&mut self) -> Vec<Id> {
+        std::mem::take(&mut self.merged_roots)
+    }
+
+    /// `seeds` plus every class reachable by walking parent back-edges up
+    /// to `levels` hops — i.e. every class where a pattern that reaches
+    /// `levels` deep could root a *new* match after the seed classes
+    /// changed. Returns canonical ids, ascending, deduplicated. Stale seed
+    /// ids are resolved to their canonical (live) class first.
+    pub fn with_ancestors(&self, seeds: &[Id], levels: usize) -> Vec<Id> {
+        let mut seen: HashMap<Id, ()> =
+            HashMap::with_capacity_and_hasher(seeds.len() * 2, Default::default());
+        let mut frontier: Vec<Id> = Vec::with_capacity(seeds.len());
+        for &id in seeds {
+            let id = self.find_ref(id);
+            if seen.insert(id, ()).is_none() {
+                frontier.push(id);
+            }
+        }
+        for _ in 0..levels {
+            let mut next = Vec::new();
+            for &id in &frontier {
+                for &(_, pid) in &self.class(id).parents {
+                    let pid = self.find_ref(pid);
+                    if seen.insert(pid, ()).is_none() {
+                        next.push(pid);
+                    }
+                }
+            }
+            if next.is_empty() {
+                break;
+            }
+            frontier = next;
+        }
+        let mut out: Vec<Id> = seen.into_keys().collect();
+        out.sort_unstable();
+        out
     }
 
     /// Quick structural sanity check used by tests and debug assertions:
@@ -372,6 +469,88 @@ mod tests {
         let root = eg.add_expr(&e);
         assert_eq!(eg.num_classes(), 3);
         assert_eq!(eg.ty(root), &Ty::Tensor(Shape::new(&[128])));
+    }
+
+    #[test]
+    fn dirty_set_tracks_gains_and_drains() {
+        let mut eg = EGraph::new();
+        let x = eg.add(input("x", &[4]));
+        let y = eg.add(input("y", &[4]));
+        let rx = eg.add(Node::new(Op::Relu, vec![x]));
+        // Fresh graph: every class is dirty.
+        assert_eq!(eg.take_dirty(), {
+            let mut v = vec![x, y, rx];
+            v.sort_unstable();
+            v
+        });
+        // Nothing changed since: dirty set is empty.
+        assert!(eg.take_dirty().is_empty());
+        // A union dirties the surviving class (canonicalized).
+        eg.union(x, y);
+        eg.rebuild();
+        let d = eg.take_dirty();
+        assert_eq!(d, vec![eg.find_ref(x)]);
+        // A hashcons hit adds nothing.
+        eg.add(input("x", &[4]));
+        assert!(eg.take_dirty().is_empty());
+    }
+
+    #[test]
+    fn merged_roots_drain_reports_losing_ids() {
+        let mut eg = EGraph::new();
+        let x = eg.add(input("x", &[4]));
+        let y = eg.add(input("y", &[4]));
+        let rx = eg.add(Node::new(Op::Relu, vec![x]));
+        let ry = eg.add(Node::new(Op::Relu, vec![y]));
+        assert!(eg.take_merged_roots().is_empty());
+        eg.union(x, y);
+        eg.rebuild(); // congruence also merges rx/ry
+        let mut merged = eg.take_merged_roots();
+        merged.sort_unstable();
+        // Losers: y (explicit union) and the relu class that lost the
+        // congruence union.
+        assert_eq!(merged.len(), 2);
+        assert!(merged.contains(&y));
+        assert!(merged.contains(&rx.max(ry)));
+        assert!(eg.take_merged_roots().is_empty());
+    }
+
+    #[test]
+    fn with_ancestors_walks_parent_levels() {
+        // relu(relu(relu(x))): ancestors of {x} at level k.
+        let mut eg = EGraph::new();
+        let x = eg.add(input("x", &[4]));
+        let r1 = eg.add(Node::new(Op::Relu, vec![x]));
+        let r2 = eg.add(Node::new(Op::Relu, vec![r1]));
+        let r3 = eg.add(Node::new(Op::Relu, vec![r2]));
+        assert_eq!(eg.with_ancestors(&[x], 0), vec![x]);
+        assert_eq!(eg.with_ancestors(&[x], 1), vec![x, r1]);
+        assert_eq!(eg.with_ancestors(&[x], 2), vec![x, r1, r2]);
+        // Levels past the top are harmless.
+        assert_eq!(eg.with_ancestors(&[x], 10), vec![x, r1, r2, r3]);
+    }
+
+    #[test]
+    fn live_counters_match_scans_through_rewriting() {
+        let mut eg = EGraph::new();
+        let x = eg.add(input("x", &[4]));
+        let y = eg.add(input("y", &[4]));
+        let rx = eg.add(Node::new(Op::Relu, vec![x]));
+        let ry = eg.add(Node::new(Op::Relu, vec![y]));
+        assert_eq!(eg.num_classes(), 4);
+        assert_eq!(eg.total_nodes(), 4);
+        eg.union(x, y);
+        // Pre-rebuild: one class merged away, nodes moved (with a duplicate
+        // pending compaction) — the debug asserts inside the accessors
+        // check counter == scan at every step.
+        assert_eq!(eg.num_classes(), 3);
+        assert_eq!(eg.total_nodes(), 4);
+        eg.rebuild();
+        // Congruence merged the relus and compaction deduped their nodes;
+        // the input class keeps both (distinct) input e-nodes.
+        assert_eq!(eg.find(rx), eg.find(ry));
+        assert_eq!(eg.num_classes(), 2);
+        assert_eq!(eg.total_nodes(), 3);
     }
 
     #[test]

@@ -71,6 +71,20 @@ pub fn search(eg: &EGraph, pat: &Pattern) -> Vec<(Id, Subst)> {
     out
 }
 
+/// Search only the given classes (ids must be live; non-canonical ids are
+/// resolved). The incremental engine's entry point: `&self`-only, so the
+/// frozen e-graph can be shared across search workers.
+pub fn search_classes(eg: &EGraph, pat: &Pattern, ids: &[Id]) -> Vec<(Id, Subst)> {
+    let mut out = Vec::new();
+    for &id in ids {
+        let id = eg.find_ref(id);
+        for s in match_class(eg, pat, id) {
+            out.push((id, s));
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -117,6 +131,19 @@ mod tests {
         let (eg, _) = graph("(eadd (relu (input a [4])) (relu (input b [4])))");
         let pat = pexact(Op::Relu, vec![pvar("?x")]);
         assert_eq!(search(&eg, &pat).len(), 2);
+    }
+
+    #[test]
+    fn search_classes_restricts_to_given_roots() {
+        let (eg, _) = graph("(eadd (relu (input a [4])) (relu (input b [4])))");
+        let pat = pexact(Op::Relu, vec![pvar("?x")]);
+        let all = search(&eg, &pat);
+        assert_eq!(all.len(), 2);
+        let one = search_classes(&eg, &pat, &[all[0].0]);
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0].0, all[0].0);
+        let both: Vec<Id> = all.iter().map(|(id, _)| *id).collect();
+        assert_eq!(search_classes(&eg, &pat, &both).len(), 2);
     }
 
     #[test]

@@ -11,14 +11,23 @@
 //!
 //! * [`unionfind`] — path-halving union-find over [`Id`]s;
 //! * [`graph`] — the [`EGraph`] itself: hashcons, e-classes, deferred
-//!   congruence closure, and a shape/type *analysis* attached to every
-//!   e-class (broken rewrites are caught as analysis merge conflicts);
+//!   congruence closure, a shape/type *analysis* attached to every e-class
+//!   (broken rewrites are caught as analysis merge conflicts), live
+//!   class/node counters, and dirty-set tracking (which classes gained
+//!   nodes since the last search — the incremental engine's work list);
 //! * [`pattern`] — pattern ASTs with variables and op-kind matchers;
-//! * [`matcher`] — backtracking e-matching over the e-graph;
-//! * [`rewrite`] — rewrite = searcher pattern + (possibly dynamic) applier;
-//! * [`runner`] — the iteration engine with node/time budgets, saturation
-//!   detection, and per-iteration growth metrics (the data behind the
-//!   paper's "exponential design space" claim);
+//! * [`matcher`] — backtracking e-matching over the e-graph, whole-graph or
+//!   restricted to a class work list (`&self`-only, so search shards share
+//!   the frozen graph across worker threads);
+//! * [`rewrite`] — rewrite = searcher pattern + (possibly dynamic) applier,
+//!   plus each rule's declared *ancestor reach* for incremental matching;
+//! * [`scheduler`] — pluggable per-iteration rule fairness: the historical
+//!   truncation ([`SimpleScheduler`]) or egg-style exponential backoff
+//!   ([`BackoffScheduler`]);
+//! * [`runner`] — the phased saturation engine: incremental parallel
+//!   search → memoized apply → rebuild, with node/time budgets, saturation
+//!   detection, and per-iteration + per-rule growth metrics (the data
+//!   behind the paper's "exponential design space" claim);
 //! * [`count`] — counting the number of distinct terms an e-graph
 //!   represents (the size of the enumerated design space).
 
@@ -28,12 +37,16 @@ pub mod matcher;
 pub mod pattern;
 pub mod rewrite;
 pub mod runner;
+pub mod scheduler;
 pub mod unionfind;
 
 pub use graph::{EClass, EGraph};
 pub use pattern::{Pattern, Subst};
 pub use rewrite::{Applier, Rewrite};
-pub use runner::{IterationStats, Runner, RunnerLimits, RunnerReport, StopReason};
+pub use runner::{
+    IterationStats, RuleIterStats, Runner, RunnerLimits, RunnerReport, SearchMode, StopReason,
+};
+pub use scheduler::{BackoffScheduler, Scheduler, SchedulerSpec, SimpleScheduler};
 pub use unionfind::UnionFind;
 
 /// An e-class id (also used as the node index inside a

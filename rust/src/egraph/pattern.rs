@@ -38,6 +38,23 @@ pub enum Pattern {
     Node { op: OpMatch, children: Vec<Pattern> },
 }
 
+impl Pattern {
+    /// Nesting depth: a bare variable is 0, a node is 1 + its deepest child.
+    ///
+    /// This bounds how far below a match root any pattern position sits,
+    /// which is what the incremental engine needs: when an e-class changes,
+    /// a *new* match of this pattern can only be rooted within `depth()`
+    /// parent hops of it (see [`crate::egraph::graph::EGraph::with_ancestors`]).
+    pub fn depth(&self) -> usize {
+        match self {
+            Pattern::Var(_) => 0,
+            Pattern::Node { children, .. } => {
+                1 + children.iter().map(Pattern::depth).max().unwrap_or(0)
+            }
+        }
+    }
+}
+
 /// Build a pattern variable.
 pub fn pvar(name: &str) -> Pattern {
     Pattern::Var(Symbol::new(name))
@@ -102,5 +119,17 @@ mod tests {
             Pattern::Node { children, .. } => assert_eq!(children.len(), 2),
             _ => panic!(),
         }
+    }
+
+    #[test]
+    fn depth_counts_node_nesting() {
+        assert_eq!(pvar("?x").depth(), 0);
+        let flat = pkind_(OpKind::EAdd, vec![pvar("?a"), pvar("?b")]);
+        assert_eq!(flat.depth(), 1);
+        let nested = pkind_(
+            OpKind::InvokeRelu,
+            vec![pkind_(OpKind::ReluEngine, vec![]), pvar("?x")],
+        );
+        assert_eq!(nested.depth(), 2);
     }
 }

@@ -25,7 +25,11 @@ pub type Applier = Arc<dyn Fn(&mut EGraph, Id, &Subst) -> Option<Id> + Send + Sy
 
 enum Searcher {
     Pattern(Pattern),
-    NodeScan(OpKind),
+    /// Scan e-nodes of one kind. The `usize` is the applier's *look-down
+    /// depth*: how many child levels below the matched node the applier
+    /// inspects other classes' **nodes** (via `find_in_class`-style peeks).
+    /// 0 for appliers that only read the matched node and child *types*.
+    NodeScan(OpKind, usize),
 }
 
 /// A named, semantics-preserving rewrite rule.
@@ -47,7 +51,7 @@ impl Clone for Rewrite {
             name: self.name.clone(),
             searcher: match &self.searcher {
                 Searcher::Pattern(p) => Searcher::Pattern(p.clone()),
-                Searcher::NodeScan(k) => Searcher::NodeScan(*k),
+                Searcher::NodeScan(k, d) => Searcher::NodeScan(*k, *d),
             },
             applier: Arc::clone(&self.applier),
         }
@@ -65,30 +69,67 @@ impl Rewrite {
     }
 
     /// A node-scan rewrite over all e-nodes of `kind`. The applier receives
-    /// the matched node via `subst.node`.
+    /// the matched node via `subst.node`, and must only read that node and
+    /// its child classes' *types* (which are immutable). Appliers that peek
+    /// at other classes' nodes must declare it via [`Rewrite::node_scan_deep`].
     pub fn node_scan(
         name: &str,
         kind: OpKind,
         applier: impl Fn(&mut EGraph, Id, &Subst) -> Option<Id> + Send + Sync + 'static,
     ) -> Self {
+        Rewrite::node_scan_deep(name, kind, 0, applier)
+    }
+
+    /// Like [`Rewrite::node_scan`], but for appliers that inspect the
+    /// e-nodes of classes up to `look_down` child levels below the matched
+    /// node (e.g. `find_in_class` on a child to locate a nested schedule).
+    /// The incremental engine uses this to re-offer a match whenever any
+    /// class the applier can see changes — under-declaring `look_down`
+    /// loses enumerations relative to a full rescan.
+    pub fn node_scan_deep(
+        name: &str,
+        kind: OpKind,
+        look_down: usize,
+        applier: impl Fn(&mut EGraph, Id, &Subst) -> Option<Id> + Send + Sync + 'static,
+    ) -> Self {
         Rewrite {
             name: name.into(),
-            searcher: Searcher::NodeScan(kind),
+            searcher: Searcher::NodeScan(kind, look_down),
             applier: Arc::new(applier),
+        }
+    }
+
+    /// How many parent hops above a changed e-class a *new* match of this
+    /// rule can be rooted. The incremental engine widens its dirty work
+    /// list by this many ancestor levels per rule (see
+    /// [`super::graph::EGraph::with_ancestors`]).
+    pub fn ancestor_levels(&self) -> usize {
+        match &self.searcher {
+            Searcher::Pattern(p) => p.depth(),
+            Searcher::NodeScan(_, look_down) => *look_down,
         }
     }
 
     /// Find all matches in the current e-graph (no mutation).
     pub fn search(&self, eg: &EGraph) -> Vec<(Id, Subst)> {
+        self.search_classes(eg, &eg.class_ids())
+    }
+
+    /// Find matches rooted at the given classes only (no mutation; `&self`
+    /// e-graph access only, so shards of this call can run on a scoped
+    /// worker pool against the shared frozen graph). Match order is
+    /// deterministic: input class order, then node order within a class.
+    pub fn search_classes(&self, eg: &EGraph, ids: &[Id]) -> Vec<(Id, Subst)> {
         match &self.searcher {
-            Searcher::Pattern(p) => matcher::search(eg, p),
-            Searcher::NodeScan(kind) => {
+            Searcher::Pattern(p) => matcher::search_classes(eg, p, ids),
+            Searcher::NodeScan(kind, _) => {
                 let mut out = Vec::new();
-                for class in eg.classes() {
-                    for node in &class.nodes {
+                for &id in ids {
+                    let id = eg.find_ref(id);
+                    for node in &eg.class(id).nodes {
                         if node.op.kind() == *kind {
                             let subst = Subst { node: Some(node.clone()), ..Default::default() };
-                            out.push((class.id, subst));
+                            out.push((id, subst));
                         }
                     }
                 }
@@ -97,14 +138,21 @@ impl Rewrite {
         }
     }
 
+    /// Apply to one match. `Some(changed)` when the applier fired (built an
+    /// RHS that was unioned in; `changed` says whether that union did
+    /// anything), `None` when it declined. The distinction matters to the
+    /// runner: fired applications are memoized and never replayed, declines
+    /// are retried whenever the match is re-offered (a declining applier
+    /// may succeed later once e.g. a child class gains a schedule node).
+    pub fn try_apply(&self, eg: &mut EGraph, class: Id, subst: &Subst) -> Option<bool> {
+        let rhs = (self.applier)(eg, class, subst)?;
+        let (_, changed) = eg.union(class, rhs);
+        Some(changed)
+    }
+
     /// Apply to one match; returns true if the union changed the e-graph.
     pub fn apply(&self, eg: &mut EGraph, class: Id, subst: &Subst) -> bool {
-        if let Some(rhs) = (self.applier)(eg, class, subst) {
-            let (_, changed) = eg.union(class, rhs);
-            changed
-        } else {
-            false
-        }
+        self.try_apply(eg, class, subst).unwrap_or(false)
     }
 }
 

@@ -1,13 +1,58 @@
-//! The rewrite iteration engine: search all rules, apply all matches, union,
-//! rebuild; repeat until saturation or a budget trips. Records per-iteration
-//! growth statistics — the raw data for the paper's design-space-size
-//! experiments (E1/E4 in DESIGN.md).
+//! The phased saturation engine: **search** (read-only, incremental,
+//! parallel) → **apply** (single-threaded, memoized) → **rebuild**
+//! (congruence repair); repeat until saturation or a budget trips.
+//!
+//! ## Phases
+//!
+//! **Search** never mutates the e-graph, so it fans out over the scoped
+//! worker pool ([`crate::par::parallel_map`]): the work list is sharded
+//! into `(rule × class-chunk)` items and the shard results are merged back
+//! in item order, which makes the match stream — and therefore the whole
+//! run — deterministic regardless of worker count.
+//!
+//! By default search is **incremental** ([`SearchMode::Incremental`]):
+//! after the first iteration, rules only re-match against classes that
+//! gained e-nodes since the last iteration ([`EGraph::take_dirty`]) widened
+//! by each rule's ancestor reach ([`Rewrite::ancestor_levels`]) — a change
+//! `k` levels below a match root can only create new matches for patterns
+//! that look `k` deep. [`SearchMode::FullRescan`] re-matches everything
+//! every iteration; the equivalence tests pin that both modes produce the
+//! same e-graph.
+//!
+//! **Apply** replays the match stream single-threaded. Fired applications
+//! are memoized by `(rule, root class, canonicalized bindings)` and never
+//! replayed: appliers mint fresh loop-variable symbols, so without the memo
+//! every re-found match would union in another α-variant of an RHS the
+//! graph already has, bloating the node budget with junk. Declined matches
+//! are *not* memoized — an applier may legitimately succeed later (e.g.
+//! once a child class gains a schedule node).
+//!
+//! **Rebuild** restores the congruence invariant ([`EGraph::rebuild`]),
+//! feeding the next iteration's dirty set.
+//!
+//! ## Scheduling
+//!
+//! Which rules run, and which of their matches survive, is delegated to a
+//! pluggable [`Scheduler`] (default: [`SimpleScheduler`], the historical
+//! `max_matches_per_rule` truncation; [`BackoffScheduler`] for egg-style
+//! exponential backoff). While a rule is banned the engine banks the dirty
+//! classes it did not get to search (`rule_backlog`) and re-offers them
+//! when the ban lifts, so scheduling delays matches rather than losing
+//! them.
+//!
+//! Per-iteration growth statistics ([`IterationStats`], including per-rule
+//! match/apply counts) remain the raw data for the paper's
+//! design-space-size experiments.
 
 use super::count;
 use super::graph::EGraph;
+use super::pattern::Subst;
 use super::rewrite::Rewrite;
+use super::scheduler::{Scheduler, SimpleScheduler};
 use super::Id;
-use crate::ir::RecExpr;
+use crate::fx::FxHashSet;
+use crate::ir::{Node, Op, RecExpr, Symbol};
+use crate::par::{default_workers, parallel_map};
 use std::time::{Duration, Instant};
 
 /// Why a run stopped.
@@ -23,15 +68,34 @@ pub enum StopReason {
     TimeLimit,
 }
 
+/// How the search phase picks the classes each rule matches against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SearchMode {
+    /// Match only against classes that changed since the last iteration
+    /// (plus each rule's ancestor reach). The default.
+    #[default]
+    Incremental,
+    /// Match against every live class every iteration — the reference
+    /// semantics the equivalence tests compare against.
+    FullRescan,
+}
+
 /// Budgets for a run. Defaults are sized for interactive exploration.
 #[derive(Debug, Clone)]
 pub struct RunnerLimits {
     pub max_iters: usize,
     pub max_nodes: usize,
     pub max_time: Duration,
-    /// Per-rule, per-iteration match cap: a crude fairness throttle so one
-    /// explosive rule cannot starve the rest within an iteration.
+    /// Per-rule, per-iteration match cap applied by the default
+    /// [`SimpleScheduler`]; a custom scheduler may interpret or ignore it.
     pub max_matches_per_rule: usize,
+    /// Recompute the distinct-design lower bound after every iteration
+    /// (an `O(nodes × rounds)` fixpoint — see [`super::count`]). Growth
+    /// experiments want the per-iteration curve; plain enumeration (the
+    /// session path) defaults it off and `designs_lower_bound` in
+    /// [`IterationStats`] is `NaN`. The final count in [`RunnerReport`] is
+    /// always computed.
+    pub track_designs: bool,
 }
 
 impl Default for RunnerLimits {
@@ -41,8 +105,23 @@ impl Default for RunnerLimits {
             max_nodes: 200_000,
             max_time: Duration::from_secs(30),
             max_matches_per_rule: 50_000,
+            track_designs: true,
         }
     }
+}
+
+/// Per-rule search/apply counters for one iteration, indexed like
+/// `Runner::rules` (names in [`RunnerReport::rule_names`]).
+#[derive(Debug, Clone, Default)]
+pub struct RuleIterStats {
+    /// Matches found by the search phase (before scheduler filtering).
+    pub matches: usize,
+    /// Applications that changed the e-graph.
+    pub applied: usize,
+    /// True if the scheduler sidelined the rule this iteration — refused
+    /// the search outright, or dropped some or all of its matches (overflow
+    /// ban / cap truncation). Its pending work is banked and re-offered.
+    pub banned: bool,
 }
 
 /// Growth metrics after one iteration.
@@ -54,9 +133,17 @@ pub struct IterationStats {
     pub applied: usize,
     pub unions_total: usize,
     /// Lower bound on the number of distinct designs rooted at the
-    /// workload (see [`super::count`]).
+    /// workload (see [`super::count`]). `NaN` when
+    /// [`RunnerLimits::track_designs`] is off.
     pub designs_lower_bound: f64,
     pub elapsed: Duration,
+    /// How many e-classes the widest rule's search visited this iteration
+    /// (equals the live class count on iteration 0 and under
+    /// [`SearchMode::FullRescan`]; shrinks toward the dirty-set size as the
+    /// graph stabilizes).
+    pub searched_classes: usize,
+    /// Per-rule breakdown.
+    pub per_rule: Vec<RuleIterStats>,
 }
 
 /// Summary of a completed run.
@@ -68,23 +155,87 @@ pub struct RunnerReport {
     pub classes: usize,
     pub designs_lower_bound: f64,
     pub elapsed: Duration,
+    /// Rule names, indexing [`IterationStats::per_rule`].
+    pub rule_names: Vec<String>,
 }
 
 impl RunnerReport {
     /// Render as an aligned text table (used by examples and benches).
     pub fn table(&self) -> String {
         let mut s = String::from(
-            "iter    e-nodes  e-classes    applied     designs(lb)   elapsed\n",
+            "iter    e-nodes  e-classes   searched    applied     designs(lb)   elapsed\n",
         );
         for it in &self.iterations {
+            let designs = if it.designs_lower_bound.is_nan() {
+                format!("{:>15}", "-")
+            } else {
+                format!("{:>15.4e}", it.designs_lower_bound)
+            };
             s.push_str(&format!(
-                "{:<4} {:>10} {:>10} {:>10} {:>15.4e} {:>9.1?}\n",
-                it.iteration, it.nodes, it.classes, it.applied, it.designs_lower_bound,
+                "{:<4} {:>10} {:>10} {:>10} {:>10} {} {:>9.1?}\n",
+                it.iteration, it.nodes, it.classes, it.searched_classes, it.applied, designs,
                 it.elapsed,
             ));
         }
         s.push_str(&format!("stop: {:?}\n", self.stop));
         s
+    }
+
+    /// Per-rule totals across the run (matches found, effective
+    /// applications, iterations sat out banned), as an aligned table.
+    pub fn rule_table(&self) -> String {
+        let mut s = String::from("rule                      matches    applied     banned\n");
+        for (ri, name) in self.rule_names.iter().enumerate() {
+            let (mut m, mut a, mut b) = (0usize, 0usize, 0usize);
+            for it in &self.iterations {
+                if let Some(r) = it.per_rule.get(ri) {
+                    m += r.matches;
+                    a += r.applied;
+                    b += r.banned as usize;
+                }
+            }
+            s.push_str(&format!("{name:<24} {m:>9} {a:>10} {b:>10}\n"));
+        }
+        s
+    }
+}
+
+/// Memo key for one fired application: rule index, root class, and the
+/// substitution's bindings, all canonical *as of the searched (frozen)
+/// graph*. Keys are computed before any of the iteration's unions and the
+/// stored set is re-canonicalized after every rebuild, so a replayed match
+/// always hits the memo even after its bindings' classes merge. See the
+/// module docs — replaying a fired match would mint a fresh α-variant RHS.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct MatchKey {
+    rule: usize,
+    root: Id,
+    node: Option<Node>,
+    vars: Vec<(Symbol, Id)>,
+    ops: Vec<(Symbol, Op)>,
+}
+
+impl MatchKey {
+    fn of(eg: &EGraph, rule: usize, root: Id, subst: &Subst) -> Self {
+        let mut vars: Vec<(Symbol, Id)> = subst.vars.iter().map(|(&s, &id)| (s, id)).collect();
+        vars.sort_unstable_by_key(|(s, _)| *s);
+        let mut ops: Vec<(Symbol, Op)> =
+            subst.ops.iter().map(|(&s, op)| (s, op.clone())).collect();
+        ops.sort_unstable_by_key(|(s, _)| *s);
+        MatchKey { rule, root, node: subst.node.clone(), vars, ops }.canonicalize(eg)
+    }
+
+    fn canonicalize(mut self, eg: &EGraph) -> Self {
+        self.root = eg.find_ref(self.root);
+        if let Some(n) = &mut self.node {
+            for c in &mut n.children {
+                *c = eg.find_ref(*c);
+            }
+        }
+        for (_, id) in &mut self.vars {
+            *id = eg.find_ref(*id);
+        }
+        self
     }
 }
 
@@ -94,7 +245,18 @@ pub struct Runner {
     pub root: Id,
     pub rules: Vec<Rewrite>,
     pub limits: RunnerLimits,
+    /// Rule scheduler; `None` means "a [`SimpleScheduler`] built from
+    /// `limits.max_matches_per_rule` at run time".
+    pub scheduler: Option<Box<dyn Scheduler>>,
+    /// Worker-pool width for the search phase (≥ 1; 1 searches inline).
+    pub search_workers: usize,
+    pub search_mode: SearchMode,
     pub stats: Vec<IterationStats>,
+    /// Fired-application memo (see [`MatchKey`]).
+    applied_memo: FxHashSet<MatchKey>,
+    /// Dirty classes a banned rule has not yet searched, per rule;
+    /// re-offered when its ban lifts.
+    rule_backlog: Vec<Vec<Id>>,
 }
 
 impl Runner {
@@ -102,11 +264,38 @@ impl Runner {
     pub fn new(expr: RecExpr, rules: Vec<Rewrite>) -> Self {
         let mut egraph = EGraph::new();
         let root = egraph.add_expr(&expr);
-        Runner { egraph, root, rules, limits: RunnerLimits::default(), stats: Vec::new() }
+        let n = rules.len();
+        Runner {
+            egraph,
+            root,
+            rules,
+            limits: RunnerLimits::default(),
+            scheduler: None,
+            search_workers: default_workers(),
+            search_mode: SearchMode::default(),
+            stats: Vec::new(),
+            applied_memo: FxHashSet::default(),
+            rule_backlog: vec![Vec::new(); n],
+        }
     }
 
     pub fn with_limits(mut self, limits: RunnerLimits) -> Self {
         self.limits = limits;
+        self
+    }
+
+    pub fn with_scheduler(mut self, scheduler: Box<dyn Scheduler>) -> Self {
+        self.scheduler = Some(scheduler);
+        self
+    }
+
+    pub fn with_search_workers(mut self, workers: usize) -> Self {
+        self.search_workers = workers.max(1);
+        self
+    }
+
+    pub fn with_search_mode(mut self, mode: SearchMode) -> Self {
+        self.search_mode = mode;
         self
     }
 
@@ -115,19 +304,35 @@ impl Runner {
         let start = Instant::now();
         let mut stop = StopReason::IterLimit;
         let iters = iters.min(self.limits.max_iters);
+        // Take the scheduler out of `self` for the duration of the run so
+        // its `&mut` calls don't alias the rule/e-graph borrows.
+        let mut scheduler: Box<dyn Scheduler> = self.scheduler.take().unwrap_or_else(|| {
+            Box::new(SimpleScheduler::new(self.limits.max_matches_per_rule))
+        });
+        let base = self.stats.len();
         for i in 0..iters {
-            let applied = self.run_one();
-            let designs = count::designs(&self.egraph, self.root, 64);
+            let iteration = base + i;
+            let outcome = self.run_one(iteration, scheduler.as_mut());
+            let designs = if self.limits.track_designs {
+                count::designs(&self.egraph, self.root, 64)
+            } else {
+                f64::NAN
+            };
             self.stats.push(IterationStats {
-                iteration: i,
+                iteration,
                 nodes: self.egraph.total_nodes(),
                 classes: self.egraph.num_classes(),
-                applied,
+                applied: outcome.applied,
                 unions_total: self.egraph.n_unions,
                 designs_lower_bound: designs,
                 elapsed: start.elapsed(),
+                searched_classes: outcome.searched_classes,
+                per_rule: outcome.per_rule,
             });
-            if applied == 0 {
+            // Saturation: nothing changed AND no rule was sitting out a ban
+            // (a banned rule's pending work may still produce new facts
+            // once its window expires).
+            if outcome.applied == 0 && !outcome.any_banned {
                 stop = StopReason::Saturated;
                 break;
             }
@@ -140,6 +345,7 @@ impl Runner {
                 break;
             }
         }
+        self.scheduler = Some(scheduler);
         RunnerReport {
             stop,
             iterations: self.stats.clone(),
@@ -147,45 +353,211 @@ impl Runner {
             classes: self.egraph.num_classes(),
             designs_lower_bound: count::designs(&self.egraph, self.root, 64),
             elapsed: start.elapsed(),
+            rule_names: self.rules.iter().map(|r| r.name.clone()).collect(),
         }
     }
 
-    /// One search-then-apply round; returns how many applications changed
-    /// the e-graph.
-    fn run_one(&mut self) -> usize {
-        // Phase 1: search everything against the frozen e-graph.
-        let mut all: Vec<(usize, Id, super::pattern::Subst)> = Vec::new();
-        for (ri, rule) in self.rules.iter().enumerate() {
-            let mut matches = rule.search(&self.egraph);
-            if matches.len() > self.limits.max_matches_per_rule {
-                matches.truncate(self.limits.max_matches_per_rule);
+    /// One search → apply → rebuild round.
+    fn run_one(&mut self, iteration: usize, scheduler: &mut dyn Scheduler) -> IterOutcome {
+        let nrules = self.rules.len();
+        if self.rule_backlog.len() != nrules {
+            self.rule_backlog = vec![Vec::new(); nrules];
+        }
+        let mut per_rule = vec![RuleIterStats::default(); nrules];
+        let mut any_banned = false;
+
+        // ---- Phase 0: per-rule class work lists ------------------------
+        let dirty = self.egraph.take_dirty();
+        // Where a rule's class work list lives: banned rules have none,
+        // rules with an empty backlog share the per-level expansion cache
+        // (no clone per rule), rules with a banked backlog own a merged
+        // list.
+        enum WorkSource {
+            Banned,
+            Cached(usize),
+            Owned(Vec<Id>),
+        }
+        // Expansion cache by ancestor level; shared by every rule with an
+        // empty backlog (the common case — backlogs only build up under
+        // bans).
+        let mut by_level: Vec<Option<Vec<Id>>> = Vec::new();
+        // Full-rescan runs share the one whole-graph list via level 0.
+        let mut work: Vec<WorkSource> = Vec::with_capacity(nrules);
+        for ri in 0..nrules {
+            if !scheduler.can_search(iteration, ri, &self.rules[ri]) {
+                self.rule_backlog[ri].extend_from_slice(&dirty);
+                per_rule[ri].banned = true;
+                any_banned = true;
+                work.push(WorkSource::Banned);
+                continue;
             }
-            for (id, s) in matches {
-                all.push((ri, id, s));
+            let source = match self.search_mode {
+                SearchMode::FullRescan => {
+                    self.rule_backlog[ri].clear();
+                    if by_level.is_empty() {
+                        by_level.push(Some(self.egraph.class_ids()));
+                    }
+                    WorkSource::Cached(0)
+                }
+                SearchMode::Incremental => {
+                    let levels = self.rules[ri].ancestor_levels();
+                    if self.rule_backlog[ri].is_empty() {
+                        if by_level.len() <= levels {
+                            by_level.resize(levels + 1, None);
+                        }
+                        if by_level[levels].is_none() {
+                            by_level[levels] =
+                                Some(self.egraph.with_ancestors(&dirty, levels));
+                        }
+                        WorkSource::Cached(levels)
+                    } else {
+                        let mut seeds = std::mem::take(&mut self.rule_backlog[ri]);
+                        seeds.extend_from_slice(&dirty);
+                        WorkSource::Owned(self.egraph.with_ancestors(&seeds, levels))
+                    }
+                }
+            };
+            work.push(source);
+        }
+        // Per-rule borrowed views into the cache / owned lists.
+        let lists: Vec<Option<&[Id]>> = work
+            .iter()
+            .map(|w| match w {
+                WorkSource::Banned => None,
+                WorkSource::Cached(level) => Some(by_level[*level].as_deref().expect("cached")),
+                WorkSource::Owned(v) => Some(v.as_slice()),
+            })
+            .collect();
+        let searched_classes = lists.iter().flatten().map(|w| w.len()).max().unwrap_or(0);
+
+        // ---- Phase 1: parallel search over the frozen e-graph ----------
+        // Shard each rule's class list; item order (rule-major, then chunk
+        // order) plus `parallel_map`'s order preservation make the merged
+        // match stream deterministic for any worker count.
+        let eg = &self.egraph;
+        let rules = &self.rules;
+        let chunk = searched_classes.div_ceil(self.search_workers.max(1) * 4).max(64);
+        let mut items: Vec<(usize, &[Id])> = Vec::new();
+        for (ri, w) in lists.iter().enumerate() {
+            if let Some(classes) = w {
+                for c in classes.chunks(chunk) {
+                    items.push((ri, c));
+                }
             }
         }
-        // Phase 2: apply (mutates; matched ids may need re-canonicalizing,
-        // which `EGraph::union` does internally via find).
-        let mut changed = 0;
-        let rules = self.rules.clone();
-        for (ri, id, subst) in all {
-            if rules[ri].apply(&mut self.egraph, id, &subst) {
-                changed += 1;
+        let shard_results: Vec<Vec<(Id, Subst)>> =
+            parallel_map(self.search_workers, items, |&(ri, classes)| {
+                rules[ri].search_classes(eg, classes)
+            });
+        // Re-group shards by rule, in order.
+        let mut found: Vec<Vec<(Id, Subst)>> = vec![Vec::new(); nrules];
+        let mut shard_iter = shard_results.into_iter();
+        for (ri, w) in lists.iter().enumerate() {
+            if let Some(classes) = w {
+                for _ in 0..classes.chunks(chunk).len() {
+                    found[ri].extend(shard_iter.next().expect("shard per chunk"));
+                }
             }
+        }
+
+        // ---- Scheduler filtering (single-threaded) ---------------------
+        // Already-fired matches (memo hits — replays the search re-found)
+        // are dropped BEFORE scheduler accounting, so caps and backoff
+        // thresholds see only genuinely pending work. This is what makes a
+        // cap an actual throttle rather than a starvation trap: every
+        // admitted prefix is new work, so a capped rule still progresses
+        // through its backlog and the run can saturate. Keys are computed
+        // against the still-frozen searched graph — the memo stores
+        // search-time-canonical keys — so the hits are exact.
+        let mut all: Vec<(usize, Id, Subst, MatchKey)> = Vec::new();
+        for (ri, matches) in found.into_iter().enumerate() {
+            let Some(classes) = lists[ri] else { continue };
+            per_rule[ri].matches = matches.len();
+            let pending: Vec<(Id, Subst)> = matches
+                .into_iter()
+                .filter(|(id, s)| {
+                    !self.applied_memo.contains(&MatchKey::of(&self.egraph, ri, *id, s))
+                })
+                .collect();
+            let before = pending.len();
+            let filtered = scheduler.filter_matches(iteration, ri, &self.rules[ri], pending);
+            if filtered.len() < before {
+                // The scheduler dropped pending matches (overflow ban or
+                // cap truncation). Bank the rule's whole work list so they
+                // are re-offered once the scheduler readmits them —
+                // scheduling must delay matches, never lose them. Counting
+                // this as a ban also stops `applied == 0` from reading as
+                // saturation while work is still pending.
+                per_rule[ri].banned = true;
+                any_banned = true;
+                self.rule_backlog[ri].extend_from_slice(classes);
+            }
+            for (id, s) in filtered {
+                let key = MatchKey::of(&self.egraph, ri, id, &s);
+                all.push((ri, id, s, key));
+            }
+        }
+
+        // ---- Phase 2: apply (mutates; single-threaded, memoized) -------
+        let mut changed = 0;
+        for (ri, id, subst, key) in all {
+            // Re-check: a duplicate match earlier in this very stream may
+            // have fired and inserted the same key.
+            if self.applied_memo.contains(&key) {
+                continue;
+            }
+            if let Some(did_change) = self.rules[ri].try_apply(&mut self.egraph, id, &subst) {
+                self.applied_memo.insert(key);
+                if did_change {
+                    changed += 1;
+                    per_rule[ri].applied += 1;
+                }
+            } // else declined: retry whenever re-offered
             if self.egraph.approx_nodes() >= self.limits.max_nodes * 2 {
                 break; // hard brake mid-iteration if a rule explodes
             }
         }
-        // Phase 3: restore congruence.
+
+        // ---- Phase 3: restore congruence -------------------------------
         self.egraph.rebuild();
-        changed
+        // Canonical ids moved for the classes that lost this iteration's
+        // unions: re-canonicalize just the memo keys that mention one of
+        // them (the untouched majority stays put), so replays keep hitting
+        // the memo against the graph the next search phase will freeze.
+        let merged = self.egraph.take_merged_roots();
+        if !merged.is_empty() && !self.applied_memo.is_empty() {
+            let merged: FxHashSet<Id> = merged.into_iter().collect();
+            let is_stale = |k: &MatchKey| {
+                merged.contains(&k.root)
+                    || k.node
+                        .as_ref()
+                        .is_some_and(|n| n.children.iter().any(|c| merged.contains(c)))
+                    || k.vars.iter().any(|(_, id)| merged.contains(id))
+            };
+            let stale: Vec<MatchKey> =
+                self.applied_memo.iter().filter(|k| is_stale(k)).cloned().collect();
+            let eg = &self.egraph;
+            for k in stale {
+                self.applied_memo.remove(&k);
+                self.applied_memo.insert(k.canonicalize(eg));
+            }
+        }
+        IterOutcome { applied: changed, searched_classes, per_rule, any_banned }
     }
+}
+
+struct IterOutcome {
+    applied: usize,
+    searched_classes: usize,
+    per_rule: Vec<RuleIterStats>,
+    any_banned: bool,
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::egraph::rewrite::Rewrite;
+    use crate::egraph::scheduler::BackoffScheduler;
     use crate::ir::{parse_expr, Node, Op, OpKind};
 
     fn commute() -> Rewrite {
@@ -253,5 +625,105 @@ mod tests {
         let t = rep.table();
         assert!(t.contains("e-nodes"));
         assert!(t.contains("Saturated"));
+        let rt = rep.rule_table();
+        assert!(rt.contains("commute-eadd"));
+    }
+
+    #[test]
+    fn incremental_and_full_rescan_agree_on_toy_rules() {
+        let run = |mode: SearchMode, workers: usize| {
+            let e = parse_expr("(eadd (relu (input a [4])) (relu (input b [4])))").unwrap();
+            let mut r = Runner::new(e, vec![commute()])
+                .with_search_mode(mode)
+                .with_search_workers(workers);
+            let rep = r.run(10);
+            (rep.stop.clone(), rep.nodes, rep.classes, rep.designs_lower_bound)
+        };
+        let reference = run(SearchMode::FullRescan, 1);
+        for workers in [1, 4] {
+            assert_eq!(run(SearchMode::Incremental, workers), reference);
+        }
+    }
+
+    #[test]
+    fn per_rule_stats_and_searched_classes_recorded() {
+        let e = parse_expr("(eadd (input a [4]) (input b [4]))").unwrap();
+        let mut r = Runner::new(e, vec![commute()]);
+        let rep = r.run(10);
+        assert_eq!(rep.rule_names, vec!["commute-eadd".to_string()]);
+        let it0 = &rep.iterations[0];
+        assert_eq!(it0.per_rule.len(), 1);
+        assert_eq!(it0.per_rule[0].matches, 1);
+        assert_eq!(it0.per_rule[0].applied, 1);
+        // Iteration 0 searches everything; later iterations only the dirty
+        // neighborhood, which is no larger.
+        assert_eq!(it0.searched_classes, 3);
+        for it in &rep.iterations[1..] {
+            assert!(it.searched_classes <= it0.searched_classes);
+        }
+    }
+
+    #[test]
+    fn track_designs_off_skips_per_iteration_counts() {
+        let e = parse_expr("(eadd (input a [4]) (input b [4]))").unwrap();
+        let mut r = Runner::new(e, vec![commute()])
+            .with_limits(RunnerLimits { track_designs: false, ..Default::default() });
+        let rep = r.run(10);
+        assert!(rep.iterations.iter().all(|it| it.designs_lower_bound.is_nan()));
+        // The final count is still computed.
+        assert_eq!(rep.designs_lower_bound, 2.0);
+        // And the table renders the gap as '-'.
+        assert!(rep.table().contains(" - "));
+    }
+
+    #[test]
+    fn fired_applications_are_not_replayed() {
+        // An applier that mints a fresh symbol per firing (like the split
+        // rules): without the memo, every iteration re-applies the same
+        // match and the e-graph grows α-variant junk forever.
+        let fresh_wrap = Rewrite::node_scan("fresh-wrap", OpKind::InvokeRelu, |eg, _, s| {
+            let n = s.node.as_ref().unwrap();
+            let var = crate::ir::Symbol::fresh("t");
+            let inner = eg.lookup(n).expect("matched node exists");
+            Some(eg.add(Node::new(Op::SchedLoop { var, axis: 0, extent: 1 }, vec![inner])))
+        });
+        let e = parse_expr("(invoke-relu (relu-engine 8) (input x [8]))").unwrap();
+        let mut r = Runner::new(e, vec![fresh_wrap]);
+        let rep = r.run(6);
+        // One firing wraps the invoke in a loop; the wrap node is then a new
+        // member of the root class, matched... but only the *original*
+        // invoke node ever fires (the memo blocks replays), so the graph
+        // stops growing and the run saturates.
+        assert_eq!(rep.stop, StopReason::Saturated);
+        let loops = r
+            .egraph
+            .classes()
+            .flat_map(|c| c.nodes.iter())
+            .filter(|n| matches!(n.op, Op::SchedLoop { .. }))
+            .count();
+        assert_eq!(loops, 1, "memo must block α-variant replays");
+    }
+
+    #[test]
+    fn backoff_scheduler_delays_but_does_not_lose_matches() {
+        // Two commutable sites but a backoff budget of 1 match: the rule
+        // overflows, gets banned, and must still deliver both rewrites
+        // once readmitted (via the banked backlog).
+        let e = parse_expr(
+            "(eadd (eadd (input a [4]) (input b [4])) \
+              (eadd (input c [4]) (input d [4])))",
+        )
+        .unwrap();
+        let mut r = Runner::new(e, vec![commute()])
+            .with_scheduler(Box::new(BackoffScheduler::new(1, 1)));
+        let rep = r.run(30);
+        assert_eq!(rep.stop, StopReason::Saturated);
+        // All three eadd classes hold both operand orders: 2*2*2 designs at
+        // the root... the root eadd's own swap doubles it once more.
+        assert!(rep.designs_lower_bound >= 8.0, "got {}", rep.designs_lower_bound);
+        assert!(
+            rep.iterations.iter().any(|it| it.per_rule[0].banned),
+            "budget of 1 must trigger a ban"
+        );
     }
 }

@@ -1,0 +1,244 @@
+//! Rule scheduling: per-iteration fairness between rewrite rules.
+//!
+//! The search phase asks the scheduler two questions per rule per
+//! iteration: *may this rule search at all?* ([`Scheduler::can_search`] —
+//! banned rules skip the search entirely, which is cheaper than searching
+//! and discarding) and *which of its matches survive?*
+//! ([`Scheduler::filter_matches`]). Two implementations ship:
+//!
+//! * [`SimpleScheduler`] — truncate each rule's match list to a fixed
+//!   per-iteration cap. This is exactly the engine's historical
+//!   `max_matches_per_rule` behavior, kept as the reference semantics the
+//!   equivalence tests pin.
+//! * [`BackoffScheduler`] — egg-style exponential backoff: a rule that
+//!   overflows its match budget contributes *nothing* this iteration and
+//!   sits out an exponentially growing ban window. Unlike prefix
+//!   truncation (which permanently favors matches in low-numbered
+//!   e-classes), backoff lets explosive rules participate fully in the
+//!   iterations where they do run, so cheap rules aren't starved and the
+//!   sampled space is less biased toward the front of the class table.
+//!
+//! The runner re-offers un-searched work to banned rules when their window
+//! expires (see `rule_backlog` in [`super::runner`]), so under the
+//! incremental engine a ban delays — never drops — a rule's matches.
+
+use super::pattern::Subst;
+use super::rewrite::Rewrite;
+use super::runner::RunnerLimits;
+use super::Id;
+use crate::error::Error;
+
+/// Decides, per iteration, which rules search and which matches survive.
+///
+/// Implementations are stateful (ban windows, budgets); the runner owns
+/// the scheduler and calls it from the single-threaded phase boundaries,
+/// never from search workers.
+pub trait Scheduler: std::fmt::Debug + Send {
+    /// May `rule` search this iteration? Returning false skips the search
+    /// phase for the rule; the runner banks the skipped work and re-offers
+    /// it when this returns true again.
+    fn can_search(&mut self, iteration: usize, rule_idx: usize, rule: &Rewrite) -> bool {
+        let _ = (iteration, rule_idx, rule);
+        true
+    }
+
+    /// Inspect — and possibly truncate or drop — a rule's matches for this
+    /// iteration. Called once per searchable rule, after the (parallel)
+    /// search phase has merged its shards in deterministic order.
+    fn filter_matches(
+        &mut self,
+        iteration: usize,
+        rule_idx: usize,
+        rule: &Rewrite,
+        matches: Vec<(Id, Subst)>,
+    ) -> Vec<(Id, Subst)>;
+}
+
+/// The reference scheduler: cap each rule at `match_limit` matches per
+/// iteration by prefix truncation — the engine's historical
+/// `max_matches_per_rule` semantics, preserved for tests and as the
+/// baseline the equivalence suite compares against.
+#[derive(Debug, Clone)]
+pub struct SimpleScheduler {
+    pub match_limit: usize,
+}
+
+impl SimpleScheduler {
+    pub fn new(match_limit: usize) -> Self {
+        SimpleScheduler { match_limit }
+    }
+}
+
+impl Default for SimpleScheduler {
+    fn default() -> Self {
+        SimpleScheduler::new(RunnerLimits::default().max_matches_per_rule)
+    }
+}
+
+impl Scheduler for SimpleScheduler {
+    fn filter_matches(
+        &mut self,
+        _iteration: usize,
+        _rule_idx: usize,
+        _rule: &Rewrite,
+        mut matches: Vec<(Id, Subst)>,
+    ) -> Vec<(Id, Subst)> {
+        if matches.len() > self.match_limit {
+            matches.truncate(self.match_limit);
+        }
+        matches
+    }
+}
+
+/// Per-rule backoff state.
+#[derive(Debug, Clone, Copy, Default)]
+struct RuleBackoff {
+    times_banned: u32,
+    banned_until: usize,
+}
+
+/// Egg-style exponential-backoff scheduler: a rule whose match count
+/// exceeds `match_limit << times_banned` is banned for
+/// `ban_length << times_banned` iterations and contributes no matches this
+/// round. See the module docs for why this beats prefix truncation.
+#[derive(Debug, Clone)]
+pub struct BackoffScheduler {
+    pub match_limit: usize,
+    pub ban_length: usize,
+    stats: Vec<RuleBackoff>,
+}
+
+impl BackoffScheduler {
+    pub fn new(match_limit: usize, ban_length: usize) -> Self {
+        BackoffScheduler { match_limit: match_limit.max(1), ban_length, stats: Vec::new() }
+    }
+
+    fn stat(&mut self, rule_idx: usize) -> &mut RuleBackoff {
+        if self.stats.len() <= rule_idx {
+            self.stats.resize(rule_idx + 1, RuleBackoff::default());
+        }
+        &mut self.stats[rule_idx]
+    }
+}
+
+impl Default for BackoffScheduler {
+    /// egg's defaults: 1000 matches, 5-iteration base ban.
+    fn default() -> Self {
+        BackoffScheduler::new(1000, 5)
+    }
+}
+
+impl Scheduler for BackoffScheduler {
+    fn can_search(&mut self, iteration: usize, rule_idx: usize, _rule: &Rewrite) -> bool {
+        iteration >= self.stat(rule_idx).banned_until
+    }
+
+    fn filter_matches(
+        &mut self,
+        iteration: usize,
+        rule_idx: usize,
+        _rule: &Rewrite,
+        matches: Vec<(Id, Subst)>,
+    ) -> Vec<(Id, Subst)> {
+        let limit = self.match_limit;
+        let ban_length = self.ban_length;
+        let s = self.stat(rule_idx);
+        let threshold = limit.checked_shl(s.times_banned).unwrap_or(usize::MAX);
+        if matches.len() > threshold {
+            let ban = ban_length.checked_shl(s.times_banned).unwrap_or(usize::MAX);
+            s.banned_until = iteration.saturating_add(ban).saturating_add(1);
+            s.times_banned = s.times_banned.saturating_add(1);
+            return Vec::new();
+        }
+        matches
+    }
+}
+
+/// A named scheduler configuration, parseable from CLI / builder strings
+/// (`"simple"` / `"backoff"`). [`SchedulerSpec::build`] instantiates it
+/// against the run's limits; custom [`Scheduler`] impls bypass this and
+/// plug in as boxed trait objects directly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerSpec {
+    /// [`SimpleScheduler`] with the limits' `max_matches_per_rule`.
+    Simple,
+    /// [`BackoffScheduler`] with egg's default budget and ban window.
+    Backoff,
+}
+
+impl SchedulerSpec {
+    pub fn build(self, limits: &RunnerLimits) -> Box<dyn Scheduler> {
+        match self {
+            SchedulerSpec::Simple => Box::new(SimpleScheduler::new(limits.max_matches_per_rule)),
+            SchedulerSpec::Backoff => Box::<BackoffScheduler>::default(),
+        }
+    }
+}
+
+impl std::str::FromStr for SchedulerSpec {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self, Error> {
+        match s {
+            "simple" => Ok(SchedulerSpec::Simple),
+            "backoff" => Ok(SchedulerSpec::Backoff),
+            other => Err(Error::UnknownScheduler(other.to_string())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::OpKind;
+
+    fn dummy_rule() -> Rewrite {
+        Rewrite::node_scan("dummy", OpKind::EAdd, |_, _, _| None)
+    }
+
+    fn fake_matches(n: usize) -> Vec<(Id, Subst)> {
+        (0..n).map(|i| (Id::from_index(i), Subst::default())).collect()
+    }
+
+    #[test]
+    fn simple_truncates_to_limit() {
+        let mut s = SimpleScheduler::new(3);
+        let rule = dummy_rule();
+        assert_eq!(s.filter_matches(0, 0, &rule, fake_matches(10)).len(), 3);
+        assert_eq!(s.filter_matches(1, 0, &rule, fake_matches(2)).len(), 2);
+        assert!(s.can_search(2, 0, &rule), "simple never bans");
+    }
+
+    #[test]
+    fn backoff_bans_exponentially_then_readmits() {
+        let mut s = BackoffScheduler::new(4, 2);
+        let rule = dummy_rule();
+        // Overflow: everything dropped, banned for 2 iterations.
+        assert!(s.filter_matches(0, 0, &rule, fake_matches(5)).is_empty());
+        assert!(!s.can_search(1, 0, &rule));
+        assert!(!s.can_search(2, 0, &rule));
+        assert!(s.can_search(3, 0, &rule));
+        // Second overflow needs > 8 matches and bans for 4.
+        assert_eq!(s.filter_matches(3, 0, &rule, fake_matches(8)).len(), 8);
+        assert!(s.filter_matches(4, 0, &rule, fake_matches(9)).is_empty());
+        assert!(!s.can_search(8, 0, &rule));
+        assert!(s.can_search(9, 0, &rule));
+        // Other rules are unaffected throughout.
+        assert!(s.can_search(1, 1, &rule));
+    }
+
+    #[test]
+    fn spec_parses_and_builds() {
+        let limits = RunnerLimits { max_matches_per_rule: 7, ..Default::default() };
+        assert_eq!("simple".parse::<SchedulerSpec>().unwrap(), SchedulerSpec::Simple);
+        assert_eq!("backoff".parse::<SchedulerSpec>().unwrap(), SchedulerSpec::Backoff);
+        assert!(matches!(
+            "bogus".parse::<SchedulerSpec>().unwrap_err(),
+            Error::UnknownScheduler(ref n) if n == "bogus"
+        ));
+        // Simple picks up the limits' cap.
+        let mut built = SchedulerSpec::Simple.build(&limits);
+        let rule = dummy_rule();
+        assert_eq!(built.filter_matches(0, 0, &rule, fake_matches(20)).len(), 7);
+    }
+}

@@ -25,6 +25,8 @@ pub enum Error {
     UnknownRule(String),
     /// A rule-set name did not resolve (`fig2` / `paper` / `all`).
     UnknownRuleSet(String),
+    /// A rule-scheduler name did not resolve (`simple` / `backoff`).
+    UnknownScheduler(String),
     /// A workload name did not resolve.
     UnknownWorkload(String),
     /// A backend name did not resolve (`analytic` / `interp` / `sim` / `pjrt`).
@@ -54,6 +56,9 @@ impl fmt::Display for Error {
             ),
             Error::UnknownRuleSet(n) => {
                 write!(f, "unknown rule set '{n}' (expected fig2 | paper | all)")
+            }
+            Error::UnknownScheduler(n) => {
+                write!(f, "unknown scheduler '{n}' (expected simple | backoff)")
             }
             Error::UnknownWorkload(n) => {
                 write!(f, "unknown workload '{n}' (try `hwsplit workloads`)")

@@ -2,20 +2,21 @@
 //! equality/hashing are O(1), which matters because symbols appear in every
 //! hashconsed e-node (loop variables, tensor names, buffer kinds).
 
-use once_cell::sync::Lazy;
 use std::collections::HashMap;
 use std::fmt;
 use std::sync::atomic::{AtomicU32, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
 
 struct Interner {
     names: Vec<&'static str>,
     ids: HashMap<&'static str, u32>,
 }
 
-static INTERNER: Lazy<Mutex<Interner>> = Lazy::new(|| {
-    Mutex::new(Interner { names: Vec::new(), ids: HashMap::new() })
-});
+static INTERNER: OnceLock<Mutex<Interner>> = OnceLock::new();
+
+fn interner() -> &'static Mutex<Interner> {
+    INTERNER.get_or_init(|| Mutex::new(Interner { names: Vec::new(), ids: HashMap::new() }))
+}
 
 /// Monotonic counter backing [`Symbol::fresh`]. Fresh names are how rewrite
 /// appliers introduce loop variables without capture: every generated
@@ -29,7 +30,7 @@ pub struct Symbol(u32);
 impl Symbol {
     /// Intern `s`, returning its handle. Idempotent.
     pub fn new(s: &str) -> Self {
-        let mut t = INTERNER.lock().unwrap();
+        let mut t = interner().lock().unwrap();
         if let Some(&id) = t.ids.get(s) {
             return Symbol(id);
         }
@@ -49,7 +50,7 @@ impl Symbol {
 
     /// The interned string.
     pub fn as_str(&self) -> &'static str {
-        INTERNER.lock().unwrap().names[self.0 as usize]
+        interner().lock().unwrap().names[self.0 as usize]
     }
 }
 

@@ -59,6 +59,7 @@
 //! | [`coordinator`] | deprecated one-shot `explore` shim over [`session`] |
 //! | [`error`] | the crate-wide typed [`Error`] |
 //! | [`fx`] | in-tree FxHash (zero-dependency fast hashing) |
+//! | [`par`] | scoped worker pool shared by search/extraction/evaluation fan-outs |
 //! | [`prop`] | tiny property-testing helpers (PRNG + runners) |
 //! | [`report`] | table / CSV emitters shared by benches |
 
@@ -71,6 +72,7 @@ pub mod extract;
 pub mod fx;
 pub mod ir;
 pub mod lower;
+pub mod par;
 pub mod prop;
 pub mod relay;
 pub mod report;

@@ -16,7 +16,7 @@
 //! `explore` builds a [`Session`] (enumerate once) and issues one query;
 //! as a library the same session answers many queries — see the crate docs.
 
-use hwsplit::egraph::{Runner, RunnerLimits};
+use hwsplit::egraph::{Runner, RunnerLimits, SchedulerSpec, SearchMode};
 use hwsplit::extract::{sample_design, Extractor};
 use hwsplit::ir::{parse_expr, print::pretty, RecExpr};
 use hwsplit::lower::lower_default;
@@ -29,7 +29,9 @@ use hwsplit::sim::{simulate, SimConfig};
 use hwsplit::tensor::{eval_expr, eval_expr_backend, Env};
 use std::time::Instant;
 
-/// Minimal flag parser: `--key value` pairs after the subcommand.
+/// Minimal flag parser: `--key value` pairs after the subcommand; a `--key`
+/// immediately followed by another `--flag` (or nothing) is a bare boolean
+/// flag.
 struct Args {
     flags: std::collections::HashMap<String, String>,
 }
@@ -40,9 +42,16 @@ impl Args {
         let mut i = 0;
         while i < argv.len() {
             if let Some(key) = argv[i].strip_prefix("--") {
-                let val = argv.get(i + 1).cloned().unwrap_or_default();
-                flags.insert(key.to_string(), val);
-                i += 2;
+                match argv.get(i + 1) {
+                    Some(v) if !v.starts_with("--") => {
+                        flags.insert(key.to_string(), v.clone());
+                        i += 2;
+                    }
+                    _ => {
+                        flags.insert(key.to_string(), String::new());
+                        i += 1;
+                    }
+                }
             } else {
                 i += 1;
             }
@@ -52,6 +61,11 @@ impl Args {
 
     fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// Bare boolean flag (`--full-rescan`).
+    fn flag(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
     }
 
     fn usize(&self, key: &str, default: usize) -> usize {
@@ -150,16 +164,28 @@ fn cmd_enumerate(args: &Args) {
     let rules: RuleSet = args.typed("rules", RuleSet::Paper);
     let iters = args.usize("iters", 8);
     let max_nodes = args.usize("max-nodes", 200_000);
+    let scheduler: SchedulerSpec = args.typed("scheduler", SchedulerSpec::Simple);
     let lo = lower_default(&w.expr).unwrap_or_else(|e| {
         eprintln!("{e}");
         std::process::exit(2);
     });
     println!("workload {} lowered to {} EngineIR nodes", w.name, lo.len());
+    let limits = RunnerLimits { max_nodes, ..Default::default() };
     let mut runner = Runner::new(lo, rules.rules())
-        .with_limits(RunnerLimits { max_nodes, ..Default::default() });
+        .with_scheduler(scheduler.build(&limits))
+        .with_limits(limits)
+        .with_search_mode(if args.flag("full-rescan") {
+            SearchMode::FullRescan
+        } else {
+            SearchMode::Incremental
+        });
+    if let Some(workers) = args.get("search-workers").and_then(|v| v.parse().ok()) {
+        runner = runner.with_search_workers(workers);
+    }
     let t0 = Instant::now();
     let report = runner.run(iters);
     println!("{}", report.table());
+    println!("{}", report.rule_table());
     println!(
         "designs(lower bound) = {} in {:.2?}",
         fmt_f64(report.designs_lower_bound),
@@ -172,16 +198,23 @@ fn cmd_explore(args: &Args) {
     let backend: Backend = args.typed("backend", Backend::Sim);
     let objective: Objective = args.typed("objective", Objective::Latency);
     let t0 = Instant::now();
+    let limits = RunnerLimits {
+        max_nodes: args.usize("max-nodes", 100_000),
+        ..Default::default()
+    };
+    let scheduler: SchedulerSpec = args.typed("scheduler", SchedulerSpec::Simple);
     let mut builder = Session::builder()
         .workload(w.clone())
         .rules(args.typed("rules", RuleSet::Paper))
         .iters(args.usize("iters", 6))
-        .limits(RunnerLimits {
-            max_nodes: args.usize("max-nodes", 100_000),
-            ..Default::default()
-        });
+        .scheduler(scheduler.build(&limits))
+        .track_designs(args.flag("track-designs"))
+        .limits(limits);
     if let Some(workers) = args.get("workers").and_then(|v| v.parse().ok()) {
         builder = builder.workers(workers);
+    }
+    if let Some(workers) = args.get("search-workers").and_then(|v| v.parse().ok()) {
+        builder = builder.search_workers(workers);
     }
     let mut session = builder.build().unwrap_or_else(|e| {
         eprintln!("{e}");

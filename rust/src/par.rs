@@ -1,0 +1,75 @@
+//! The scoped worker pool shared by every read-only fan-out in the crate:
+//! the saturation engine's parallel search phase ([`crate::egraph::Runner`])
+//! and the session layer's extraction/evaluation fan-out
+//! ([`crate::session`]).
+//!
+//! Deliberately tiny: scoped threads pulling indices off one atomic counter,
+//! results written back by input position. No work stealing, no channels —
+//! the workloads here are hundreds-to-thousands of near-uniform items, where
+//! a shared counter is within noise of a real deque and has nothing to
+//! misconfigure. Order preservation is what the callers actually rely on:
+//! it is what makes the parallel search phase's merge deterministic.
+
+/// Sensible worker-pool width for this machine.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Scoped-thread parallel map preserving input order.
+///
+/// `workers == 1` (or a single item) runs inline on the caller's thread —
+/// same results, no spawn overhead — so callers can pass their configured
+/// width unconditionally.
+pub fn parallel_map<T: Send + Sync, R: Send>(
+    workers: usize,
+    items: Vec<T>,
+    f: impl Fn(&T) -> R + Sync,
+) -> Vec<R> {
+    if items.is_empty() {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, items.len());
+    if workers == 1 {
+        return items.iter().map(f).collect();
+    }
+    let results: Vec<std::sync::Mutex<Option<R>>> =
+        items.iter().map(|_| std::sync::Mutex::new(None)).collect();
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(&items[i]);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    results.into_iter().map(|m| m.into_inner().unwrap().unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order_across_widths() {
+        for workers in [1, 2, 8, 200] {
+            let out = parallel_map(workers, (0..100).collect::<Vec<_>>(), |x| x * 2);
+            assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn empty_input_is_fine() {
+        let out: Vec<i32> = parallel_map(4, Vec::<i32>::new(), |x| *x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn default_workers_is_positive() {
+        assert!(default_workers() >= 1);
+    }
+}

@@ -36,8 +36,13 @@ pub fn conv_as_im2col_mm() -> Rewrite {
 /// Fuse `invoke-relu ∘ (reshape) ∘ (buffer) ∘ invoke-mm` into a single
 /// `invoke-mm-relu` on a fused engine. Walks through at most one reshape
 /// and one buffer (the shapes the lowering produces).
+///
+/// `node_scan_deep(…, 3, …)`: the applier peels up to three class levels
+/// below the matched relu (`find_in_class` through reshape/buffer to the
+/// mm), so the incremental engine re-offers the relu whenever any class in
+/// that window changes.
 pub fn fuse_mm_relu() -> Rewrite {
-    Rewrite::node_scan("fuse-mm-relu", OpKind::InvokeRelu, |eg, _, s| {
+    Rewrite::node_scan_deep("fuse-mm-relu", OpKind::InvokeRelu, 3, |eg, _, s| {
         let n = s.node.as_ref().unwrap();
         // Peel: relu's input may be reshape(buffer(mm)) / buffer(mm) /
         // reshape(mm) / mm.

@@ -13,6 +13,12 @@
 //! Rule-set entry points: [`fig2_rules`] (the paper's two rewrites,
 //! verbatim), [`paper_rules`] (everything §2 describes), [`all_rules`]
 //! (plus the extensions).
+//!
+//! Authoring note for the incremental engine: appliers that inspect other
+//! classes' *nodes* (not just the matched node and child types) must
+//! declare how deep they look via [`Rewrite::node_scan_deep`] — see
+//! [`sched::loop_reorder`] and [`fuse::fuse_mm_relu`]. Fairness between
+//! rules is the [`crate::egraph::Scheduler`]'s job, not the rule author's.
 
 pub mod fuse;
 pub mod sched;
@@ -210,5 +216,29 @@ mod tests {
             "got {}",
             report.designs_lower_bound
         );
+    }
+
+    /// The backoff scheduler delays explosive rules (exponentially growing
+    /// ban windows) but must not shrink the enumerated space: both engines,
+    /// run to saturation, land on the same closure.
+    #[test]
+    fn fig2_backoff_scheduler_reaches_same_space() {
+        use crate::egraph::{BackoffScheduler, RunnerLimits, Scheduler, StopReason};
+        let run = |scheduler: Option<Box<dyn Scheduler>>| {
+            let e = parse_expr("(invoke-relu (relu-engine 128) (input x [128]))").unwrap();
+            let mut runner = Runner::new(e, fig2_rules())
+                .with_limits(RunnerLimits { max_iters: 200, ..Default::default() });
+            if let Some(s) = scheduler {
+                runner = runner.with_scheduler(s);
+            }
+            runner.run(200)
+        };
+        let plain = run(None);
+        let backoff = run(Some(Box::new(BackoffScheduler::new(8, 1))));
+        assert_eq!(plain.stop, StopReason::Saturated);
+        assert_eq!(backoff.stop, StopReason::Saturated);
+        assert_eq!(backoff.designs_lower_bound, plain.designs_lower_bound);
+        assert_eq!(backoff.nodes, plain.nodes);
+        assert_eq!(backoff.classes, plain.classes);
     }
 }

@@ -37,8 +37,12 @@ pub fn serialize() -> Rewrite {
 /// Reorder two directly nested sequential loops over *different* axes:
 /// `(sched-loop v1 a1 f1 (sched-loop v2 a2 f2 B))` ⇒ swapped order.
 /// Valid because block-concatenation along distinct axes commutes.
+///
+/// `node_scan_deep(…, 1, …)`: the applier peeks one level down (the body
+/// class's nodes, via `find_in_class`), so the incremental engine must
+/// re-offer an outer loop whenever its body class changes.
 pub fn loop_reorder() -> Rewrite {
-    Rewrite::node_scan("loop-reorder", OpKind::SchedLoop, |eg, _, s| {
+    Rewrite::node_scan_deep("loop-reorder", OpKind::SchedLoop, 1, |eg, _, s| {
         let outer = s.node.as_ref().unwrap();
         let (v1, a1, f1) = match outer.op {
             Op::SchedLoop { var, axis, extent } => (var, axis, extent),

@@ -32,9 +32,15 @@
 //! (with `--features pjrt`) the PJRT runtime executing AOT-compiled Pallas
 //! kernels.
 //!
-//! Threading: enumeration mutates the e-graph single-threaded (the same
-//! discipline as the rewrite `Runner`); extraction and evaluation only read
-//! it, fanned out across a scoped worker pool ([`parallel_map`]).
+//! Threading: the enumeration *apply* phase mutates the e-graph
+//! single-threaded, but its search phase, like extraction and evaluation,
+//! only reads — all three fan out across the same scoped worker pool
+//! ([`parallel_map`], shared via [`crate::par`]). Enumeration knobs:
+//! [`SessionBuilder::scheduler`] picks the rule-fairness policy,
+//! [`SessionBuilder::search_workers`] sizes the search pool, and
+//! [`SessionBuilder::track_designs`] opts back in to per-iteration design
+//! counting (off by default here — sessions enumerate once and query, they
+//! don't plot growth curves).
 
 mod backend;
 mod query;
@@ -47,11 +53,13 @@ pub use query::{
 pub use crate::rewrites::RuleSet;
 
 use crate::cost::{analyze, baseline, CostParams};
-use crate::egraph::{EGraph, Id, Rewrite, Runner, RunnerLimits, RunnerReport};
+use crate::egraph::{EGraph, Id, Rewrite, Runner, RunnerLimits, RunnerReport, Scheduler};
 use crate::error::Error;
 use crate::extract::{pareto_frontier, sample_design, DesignPoint, Extractor};
 use crate::ir::RecExpr;
 use crate::lower::{lower, LowerOptions};
+pub use crate::par::parallel_map;
+use crate::par::default_workers;
 use crate::relay::Workload;
 
 /// The enumerated design space: the e-graph after rewriting, its root
@@ -71,6 +79,9 @@ pub struct SessionBuilder {
     custom_rules: Option<Vec<Rewrite>>,
     iters: Option<usize>,
     workers: Option<usize>,
+    search_workers: Option<usize>,
+    scheduler: Option<Box<dyn Scheduler>>,
+    track_designs: Option<bool>,
     limits: Option<RunnerLimits>,
     lower_opts: Option<LowerOptions>,
 }
@@ -102,13 +113,47 @@ impl SessionBuilder {
     }
 
     /// Worker-pool width for extraction/evaluation (default: available
-    /// parallelism).
+    /// parallelism). Also the enumeration search phase's default width
+    /// unless [`SessionBuilder::search_workers`] overrides it.
     pub fn workers(mut self, workers: usize) -> Self {
         self.workers = Some(workers);
         self
     }
 
-    /// Enumeration budgets (node/time/match caps).
+    /// Worker-pool width for the enumeration search phase specifically
+    /// (default: the [`SessionBuilder::workers`] setting). Results are
+    /// deterministic for any width.
+    pub fn search_workers(mut self, workers: usize) -> Self {
+        self.search_workers = Some(workers);
+        self
+    }
+
+    /// Rule scheduler for enumeration (default: the engine's
+    /// [`crate::egraph::SimpleScheduler`] built from the limits'
+    /// `max_matches_per_rule`). Pass e.g.
+    /// `Box::new(BackoffScheduler::default())` for egg-style backoff.
+    pub fn scheduler(mut self, scheduler: Box<dyn Scheduler>) -> Self {
+        self.scheduler = Some(scheduler);
+        self
+    }
+
+    /// Recompute the distinct-design lower bound after every enumeration
+    /// iteration. Off by default in the session path — it is an
+    /// `O(nodes × rounds)` fixpoint per iteration that only growth
+    /// experiments read; the final count in the report is always computed.
+    /// When set, this takes precedence over `RunnerLimits::track_designs`
+    /// in [`SessionBuilder::limits`].
+    pub fn track_designs(mut self, on: bool) -> Self {
+        self.track_designs = Some(on);
+        self
+    }
+
+    /// Enumeration budgets (node/time/match caps). One caveat: sessions
+    /// control per-iteration design counting themselves (off unless
+    /// [`SessionBuilder::track_designs`] opts in), so the
+    /// `RunnerLimits::track_designs` field of a limits struct passed here
+    /// is ignored — `..Default::default()` would otherwise silently drag
+    /// in the bare-`Runner` default of `true`.
     pub fn limits(mut self, limits: RunnerLimits) -> Self {
         self.limits = Some(limits);
         self
@@ -137,21 +182,28 @@ impl SessionBuilder {
             (None, set) => set.unwrap_or(RuleSet::Paper).rules(),
         };
         let lowered = lower(&workload.expr, self.lower_opts.unwrap_or_default())?;
+        let workers = self.workers.unwrap_or_else(default_workers);
+        // Sessions enumerate once and answer queries; per-iteration design
+        // counting is a growth-experiment concern, so the session path
+        // controls it via the builder flag (default off) rather than the
+        // limits field — `RunnerLimits::default()` says `true` for bare
+        // `Runner`s, which would silently opt every session in. See
+        // `SessionBuilder::limits`.
+        let mut limits = self.limits.unwrap_or_default();
+        limits.track_designs = self.track_designs.unwrap_or(false);
         Ok(Session {
             workload,
             lowered,
             rules,
             iters: self.iters.unwrap_or(8),
-            workers: self.workers.unwrap_or_else(default_workers),
-            limits: self.limits.unwrap_or_default(),
+            workers,
+            search_workers: self.search_workers.unwrap_or(workers),
+            scheduler: self.scheduler,
+            limits,
             enumerated: None,
             enumerations: 0,
         })
     }
-}
-
-fn default_workers() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
 }
 
 fn vlog(phase: &str, t0: std::time::Instant) {
@@ -170,6 +222,8 @@ pub struct Session {
     rules: Vec<Rewrite>,
     iters: usize,
     workers: usize,
+    search_workers: usize,
+    scheduler: Option<Box<dyn Scheduler>>,
     limits: RunnerLimits,
     enumerated: Option<Enumeration>,
     enumerations: usize,
@@ -207,7 +261,11 @@ impl Session {
         if self.enumerated.is_none() {
             let t0 = std::time::Instant::now();
             let mut runner = Runner::new(self.lowered.clone(), self.rules.clone())
-                .with_limits(self.limits.clone());
+                .with_limits(self.limits.clone())
+                .with_search_workers(self.search_workers);
+            if let Some(scheduler) = self.scheduler.take() {
+                runner = runner.with_scheduler(scheduler);
+            }
             let report = runner.run(self.iters);
             self.enumerated =
                 Some(Enumeration { egraph: runner.egraph, root: runner.root, report });
@@ -311,34 +369,6 @@ fn evaluate_all(
     }
 }
 
-/// Scoped-thread parallel map preserving input order.
-pub fn parallel_map<T: Send + Sync, R: Send>(
-    workers: usize,
-    items: Vec<T>,
-    f: impl Fn(&T) -> R + Sync,
-) -> Vec<R> {
-    if items.is_empty() {
-        return Vec::new();
-    }
-    let workers = workers.clamp(1, items.len());
-    let results: Vec<std::sync::Mutex<Option<R>>> =
-        items.iter().map(|_| std::sync::Mutex::new(None)).collect();
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if i >= items.len() {
-                    break;
-                }
-                let r = f(&items[i]);
-                *results[i].lock().unwrap() = Some(r);
-            });
-        }
-    });
-    results.into_iter().map(|m| m.into_inner().unwrap().unwrap()).collect()
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -353,12 +383,6 @@ mod tests {
             .limits(RunnerLimits { max_nodes: 30_000, ..Default::default() })
             .build()
             .unwrap()
-    }
-
-    #[test]
-    fn parallel_map_preserves_order() {
-        let out = parallel_map(8, (0..100).collect::<Vec<_>>(), |x| x * 2);
-        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
     }
 
     #[test]
@@ -385,6 +409,51 @@ mod tests {
         s.enumerate().unwrap();
         s.enumerate().unwrap();
         assert_eq!(s.enumeration_count(), 1);
+    }
+
+    #[test]
+    fn session_skips_per_iteration_design_counts_by_default() {
+        let mut s = small_session(workloads::relu128());
+        let en = s.enumerate().unwrap();
+        assert!(
+            en.report.iterations.iter().all(|it| it.designs_lower_bound.is_nan()),
+            "session enumeration must not pay the per-iteration design fixpoint"
+        );
+        // The end-of-run count is still there for reporting.
+        assert!(en.report.designs_lower_bound >= 1.0);
+    }
+
+    #[test]
+    fn track_designs_opt_in_restores_growth_curve() {
+        let mut s = Session::builder()
+            .workload(workloads::relu128())
+            .rules(RuleSet::Fig2)
+            .iters(3)
+            .track_designs(true)
+            .build()
+            .unwrap();
+        let en = s.enumerate().unwrap();
+        assert!(en.report.iterations.iter().all(|it| !it.designs_lower_bound.is_nan()));
+    }
+
+    #[test]
+    fn enumeration_is_deterministic_across_search_widths() {
+        let enumerate = |search_workers: usize| {
+            let mut s = Session::builder()
+                .workload(workloads::ffn_block())
+                .rules(RuleSet::Paper)
+                .iters(4)
+                .search_workers(search_workers)
+                .limits(RunnerLimits { max_nodes: 30_000, ..Default::default() })
+                .build()
+                .unwrap();
+            s.enumerate().unwrap();
+            let en = s.enumerated.as_ref().unwrap();
+            (en.egraph.num_classes(), en.egraph.total_nodes(), en.report.designs_lower_bound)
+        };
+        let one = enumerate(1);
+        assert_eq!(enumerate(4), one);
+        assert_eq!(enumerate(16), one);
     }
 
     #[test]

@@ -1,0 +1,121 @@
+//! Engine equivalence: the incremental, parallel saturation engine (the
+//! default) must enumerate exactly the same space as the full-rescan
+//! reference path under the [`SimpleScheduler`] — equal e-class count,
+//! e-node count, and distinct-design lower bound — on the in-tree
+//! workloads, for any search-worker count.
+//!
+//! Fresh loop-variable symbols make the two runs' e-graphs *isomorphic*
+//! rather than identical (a split applied at the same point in both runs
+//! draws different names from the global counter), so the tests compare
+//! structure-determined quantities, never symbol-dependent text.
+
+use hwsplit::egraph::{Runner, RunnerLimits, SearchMode, StopReason};
+use hwsplit::lower::lower_default;
+use hwsplit::prop;
+use hwsplit::relay::workload_by_name;
+use hwsplit::rewrites::RuleSet;
+
+#[derive(Debug, PartialEq)]
+struct Outcome {
+    stop: StopReason,
+    classes: usize,
+    nodes: usize,
+    designs: f64,
+    iterations: usize,
+}
+
+fn enumerate(
+    workload: &str,
+    rules: RuleSet,
+    iters: usize,
+    max_nodes: usize,
+    mode: SearchMode,
+    workers: usize,
+) -> Outcome {
+    let w = workload_by_name(workload).expect("known workload");
+    let lowered = lower_default(&w.expr).expect("workload lowers");
+    let mut runner = Runner::new(lowered, rules.rules())
+        .with_limits(RunnerLimits { max_nodes, ..Default::default() })
+        .with_search_mode(mode)
+        .with_search_workers(workers);
+    let rep = runner.run(iters);
+    Outcome {
+        stop: rep.stop,
+        classes: rep.classes,
+        nodes: rep.nodes,
+        designs: rep.designs_lower_bound,
+        iterations: rep.iterations.len(),
+    }
+}
+
+/// The acceptance workload pair: LeNet (the heaviest in-tree network) and
+/// the quickstart workload (relu128 under the Fig. 2 rules).
+
+#[test]
+fn lenet_incremental_matches_full_rescan() {
+    let reference =
+        enumerate("lenet", RuleSet::Paper, 3, 20_000, SearchMode::FullRescan, 1);
+    for workers in [1, 4] {
+        let incremental =
+            enumerate("lenet", RuleSet::Paper, 3, 20_000, SearchMode::Incremental, workers);
+        assert_eq!(incremental, reference, "workers={workers}");
+    }
+    assert!(reference.nodes > 100, "enumeration must actually grow the graph");
+}
+
+#[test]
+fn quickstart_incremental_matches_full_rescan_to_saturation() {
+    let reference =
+        enumerate("relu128", RuleSet::Fig2, 16, 50_000, SearchMode::FullRescan, 1);
+    let incremental =
+        enumerate("relu128", RuleSet::Fig2, 16, 50_000, SearchMode::Incremental, 4);
+    assert_eq!(incremental, reference);
+    assert_eq!(
+        reference.stop,
+        StopReason::Saturated,
+        "the quickstart space is finite and must saturate under both engines"
+    );
+    assert!(reference.designs >= 3.0, "Fig. 2 yields at least three designs");
+}
+
+/// Property: equivalence holds across random iteration budgets, rule sets
+/// and worker counts on both acceptance workloads.
+#[test]
+fn incremental_engine_equivalence_property() {
+    prop::check("incremental-equivalence", 5, |rng| {
+        let (workload, rules) = *rng.choose(&[
+            ("relu128", RuleSet::Fig2),
+            ("relu128", RuleSet::Paper),
+            ("lenet", RuleSet::Paper),
+        ]);
+        let iters = rng.range(2, 4);
+        let workers = rng.range(1, 8);
+        let reference =
+            enumerate(workload, rules, iters, 15_000, SearchMode::FullRescan, 1);
+        let incremental =
+            enumerate(workload, rules, iters, 15_000, SearchMode::Incremental, workers);
+        assert_eq!(
+            incremental, reference,
+            "{workload}/{rules:?} iters={iters} workers={workers}"
+        );
+    });
+}
+
+/// The incremental engine's whole point: after the first iteration it
+/// searches far fewer classes than live in the graph.
+#[test]
+fn incremental_search_narrows_after_first_iteration() {
+    let w = workload_by_name("lenet").unwrap();
+    let lowered = lower_default(&w.expr).unwrap();
+    let mut runner = Runner::new(lowered, RuleSet::Paper.rules())
+        .with_limits(RunnerLimits { max_nodes: 20_000, ..Default::default() });
+    let rep = runner.run(3);
+    assert!(rep.iterations.len() >= 2, "need at least two iterations");
+    let it1 = &rep.iterations[1];
+    assert!(
+        it1.searched_classes < it1.classes,
+        "iteration 1 searched {} of {} classes — not incremental",
+        it1.searched_classes,
+        it1.classes
+    );
+}
