@@ -1,0 +1,127 @@
+//! Bench — the design-extraction serving layer: serial vs parallel sample
+//! fan-out, cold vs memoized cost tables, and streaming vs collect-then-
+//! filter frontier maintenance. The read side's pitch is that a query
+//! against an already-enumerated session costs sampling + evaluation only —
+//! and, past the first query, not even the extraction fixpoints; this bench
+//! measures each rung and asserts the fast paths answer identically.
+//!
+//! Run: `cargo bench --bench extraction`
+
+use hwsplit::cost::CostParams;
+use hwsplit::egraph::{Runner, RunnerLimits};
+use hwsplit::extract::{
+    analyze_points, extract_designs, pareto_frontier, ExtractCache, ExtractOptions,
+    ParetoFrontier,
+};
+use hwsplit::lower::lower_default;
+use hwsplit::par::default_workers;
+use hwsplit::relay::workload_by_name;
+use hwsplit::report::Table;
+use hwsplit::rewrites::RuleSet;
+use std::time::Instant;
+
+fn enumerated(workload: &str, iters: usize) -> (hwsplit::egraph::EGraph, hwsplit::egraph::Id) {
+    let w = workload_by_name(workload).expect("known workload");
+    let lowered = lower_default(&w.expr).expect("workload lowers");
+    let mut runner = Runner::new(lowered, RuleSet::Paper.rules()).with_limits(RunnerLimits {
+        max_nodes: 60_000,
+        track_designs: false,
+        ..Default::default()
+    });
+    runner.run(iters);
+    (runner.egraph, runner.root)
+}
+
+fn main() {
+    let samples = 64usize;
+    let workers = default_workers();
+    let mut t = Table::new(
+        &format!("extraction: {samples} samples, serial vs parallel({workers}) vs memoized"),
+        &["workload", "designs", "serial(s)", "parallel(s)", "memo(s)", "par-x", "memo-x"],
+    );
+    let mut csv_rows: Vec<Vec<String>> = vec![];
+    for &(name, iters) in &[("relu128", 6), ("mlp", 5), ("lenet", 4)] {
+        let (eg, root) = enumerated(name, iters);
+
+        // Serial, cold cache.
+        let t0 = Instant::now();
+        let serial = extract_designs(
+            &eg,
+            root,
+            &ExtractOptions { samples, seed: 0, workers: 1 },
+            &ExtractCache::new(),
+        );
+        let serial_s = t0.elapsed().as_secs_f64();
+
+        // Parallel, cold cache.
+        let cache = ExtractCache::new();
+        let t0 = Instant::now();
+        let parallel =
+            extract_designs(&eg, root, &ExtractOptions { samples, seed: 0, workers }, &cache);
+        let parallel_s = t0.elapsed().as_secs_f64();
+
+        // Parallel, warm memo (the second-query serving path).
+        let t0 = Instant::now();
+        let memoized =
+            extract_designs(&eg, root, &ExtractOptions { samples, seed: 0, workers }, &cache);
+        let memo_s = t0.elapsed().as_secs_f64();
+
+        // Every rung answers identically.
+        let strs = |set: &hwsplit::extract::ExtractedSet| {
+            set.designs.iter().map(|(_, e)| e.to_string()).collect::<Vec<_>>()
+        };
+        assert_eq!(strs(&serial), strs(&parallel), "{name}: parallel diverged");
+        assert_eq!(strs(&serial), strs(&memoized), "{name}: memoized diverged");
+        assert_eq!(memoized.memo_misses, 0, "{name}: warm pass must rebuild nothing");
+
+        t.row(&[
+            name.to_string(),
+            serial.designs.len().to_string(),
+            format!("{serial_s:.4}"),
+            format!("{parallel_s:.4}"),
+            format!("{memo_s:.4}"),
+            format!("{:.2}x", serial_s / parallel_s.max(1e-9)),
+            format!("{:.2}x", serial_s / memo_s.max(1e-9)),
+        ]);
+        csv_rows.push(vec![
+            name.to_string(),
+            serial.designs.len().to_string(),
+            format!("{serial_s:.5}"),
+            format!("{parallel_s:.5}"),
+            format!("{memo_s:.5}"),
+        ]);
+
+        // Frontier maintenance: streaming insert vs all-vs-all reference.
+        let pts = analyze_points(&serial.designs, &CostParams::default(), workers);
+        let t0 = Instant::now();
+        let reference = pareto_frontier(&pts);
+        let ref_s = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let mut streaming = ParetoFrontier::new();
+        for p in &pts {
+            streaming.insert(p.clone());
+        }
+        let streamed = streaming.into_sorted();
+        let stream_s = t0.elapsed().as_secs_f64();
+        assert_eq!(
+            streamed.iter().map(|p| (p.cost.area, p.cost.latency)).collect::<Vec<_>>(),
+            reference.iter().map(|p| (p.cost.area, p.cost.latency)).collect::<Vec<_>>(),
+            "{name}: streaming frontier diverged"
+        );
+        println!(
+            "{name}: frontier {} pts — reference {ref_s:.6}s, streaming {stream_s:.6}s",
+            streamed.len()
+        );
+    }
+    print!("{}", t.render());
+
+    let mut csv = Table::new(
+        "",
+        &["workload", "designs", "serial_seconds", "parallel_seconds", "memoized_seconds"],
+    );
+    for r in csv_rows {
+        csv.row(&r);
+    }
+    csv.write_csv("bench_results/extraction.csv").ok();
+    println!("wrote bench_results/extraction.csv");
+}

@@ -1,0 +1,100 @@
+//! Bench — the CI quick-mode perf trajectory: tiny-budget runs of the
+//! saturation engine (full-rescan vs incremental) and the extraction
+//! serving layer (cold vs memoized), emitted as machine-readable
+//! `bench_results.json` records `{workload, engine, wall_ms,
+//! designs_per_sec}` so every CI run leaves a comparable perf data point
+//! (uploaded as a workflow artifact — the `BENCH_*` trajectory stops being
+//! empty).
+//!
+//! Budgets are deliberately tiny so the job costs seconds; set
+//! `HWSPLIT_PERF_FULL=1` for locally meaningful numbers.
+//!
+//! Run: `cargo bench --bench perf_quick`
+
+use hwsplit::egraph::{Runner, RunnerLimits, SearchMode};
+use hwsplit::extract::{extract_designs, ExtractCache, ExtractOptions};
+use hwsplit::lower::lower_default;
+use hwsplit::par::default_workers;
+use hwsplit::relay::workload_by_name;
+use hwsplit::report::{JsonRecords, JsonValue};
+use hwsplit::rewrites::RuleSet;
+use std::time::Instant;
+
+fn record(
+    out: &mut JsonRecords,
+    workload: &str,
+    engine: &str,
+    wall_ms: f64,
+    designs_per_sec: f64,
+) {
+    println!("{workload:<10} {engine:<24} {wall_ms:>10.2} ms {designs_per_sec:>14.1} designs/s");
+    out.push(vec![
+        ("workload".to_string(), JsonValue::Str(workload.to_string())),
+        ("engine".to_string(), JsonValue::Str(engine.to_string())),
+        ("wall_ms".to_string(), JsonValue::Num(wall_ms)),
+        ("designs_per_sec".to_string(), JsonValue::Num(designs_per_sec)),
+    ]);
+}
+
+fn main() {
+    let full = std::env::var_os("HWSPLIT_PERF_FULL").is_some();
+    // (workload, rules, iters, max_nodes) — tiny budgets by default.
+    let cases: &[(&str, RuleSet, usize, usize)] = if full {
+        &[
+            ("relu128", RuleSet::Fig2, 16, 50_000),
+            ("mlp", RuleSet::Paper, 6, 50_000),
+            ("lenet", RuleSet::Paper, 5, 50_000),
+        ]
+    } else {
+        &[("relu128", RuleSet::Fig2, 6, 8_000), ("mlp", RuleSet::Paper, 3, 8_000)]
+    };
+    let samples = if full { 64 } else { 16 };
+    let workers = default_workers();
+
+    let mut out = JsonRecords::new();
+    for &(name, rules, iters, max_nodes) in cases {
+        let w = workload_by_name(name).expect("known workload");
+        let lowered = lower_default(&w.expr).expect("workload lowers");
+        let limits =
+            RunnerLimits { max_nodes, track_designs: false, ..Default::default() };
+
+        // Saturation: full-rescan reference vs the incremental engine.
+        // "designs/sec" here is the end-of-run distinct-design lower bound
+        // over the wall-clock — the enumeration-side throughput proxy.
+        let mut incremental_graph = None;
+        for (mode, engine) in [
+            (SearchMode::FullRescan, "saturate-full"),
+            (SearchMode::Incremental, "saturate-incremental"),
+        ] {
+            let mut runner = Runner::new(lowered.clone(), rules.rules())
+                .with_limits(limits.clone())
+                .with_search_mode(mode);
+            let t0 = Instant::now();
+            let rep = runner.run(iters);
+            let secs = t0.elapsed().as_secs_f64().max(1e-9);
+            record(&mut out, name, engine, secs * 1e3, rep.designs_lower_bound / secs);
+            if mode == SearchMode::Incremental {
+                incremental_graph = Some((runner.egraph, runner.root));
+            }
+        }
+
+        // Extraction: cold pass (solves every fixpoint) vs memoized repeat
+        // (the second-query serving path). designs/sec counts requested
+        // extractions.
+        let (eg, root) = incremental_graph.expect("incremental run recorded");
+        let cache = ExtractCache::new();
+        let opts = ExtractOptions { samples, seed: 0, workers };
+        for engine in ["extract-cold", "extract-memoized"] {
+            let t0 = Instant::now();
+            let set = extract_designs(&eg, root, &opts, &cache);
+            let secs = t0.elapsed().as_secs_f64().max(1e-9);
+            if engine == "extract-memoized" {
+                assert_eq!(set.memo_misses, 0, "{name}: repeat pass must be fully memoized");
+            }
+            record(&mut out, name, engine, secs * 1e3, set.requested as f64 / secs);
+        }
+    }
+
+    out.write("bench_results.json").expect("write bench_results.json");
+    println!("wrote bench_results.json ({} records)", out.len());
+}

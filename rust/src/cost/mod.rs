@@ -32,10 +32,12 @@ pub mod baseline;
 
 pub use baseline::{baseline, Baseline, BaselineEngine};
 
+use crate::fx::FxHashMap;
 use crate::ir::{BufKind, Op, RecExpr, Shape, Ty};
 
-/// Technology / substrate constants.
-#[derive(Debug, Clone)]
+/// Technology / substrate constants. `PartialEq` so query batching can
+/// recognize "same params" and share evaluated design sets.
+#[derive(Debug, Clone, PartialEq)]
 pub struct CostParams {
     /// Area units per multiply-accumulate of a matmul/conv engine.
     pub mac_area: f64,
@@ -173,8 +175,10 @@ struct Analyzer<'a> {
     expr: &'a RecExpr,
     tys: Vec<Ty>,
     p: &'a CostParams,
-    /// engine op -> max concurrent instances demanded (par replication)
-    instances: std::collections::HashMap<Op, f64>,
+    /// engine op -> max concurrent instances demanded (par replication).
+    /// Fx-hashed: `analyze` runs once per extracted design per query, so
+    /// this map is on the serving layer's hot path.
+    instances: FxHashMap<Op, f64>,
     sram_bytes: f64,
     dram_traffic: f64,
     energy: f64,

@@ -55,6 +55,14 @@ pub struct EGraph {
     /// Live node count across classes (duplicates included until `rebuild`
     /// compacts them, exactly like the scan it replaces).
     live_nodes: usize,
+    /// Monotone mutation counter: bumped on every genuine insert and every
+    /// effective union — including the congruence unions `rebuild`'s
+    /// repair performs (they route through `union` and move canonical
+    /// ids). Read-side caches (the extraction cost-table memo) key on this
+    /// to detect that the graph they snapshotted is unchanged; only
+    /// hashcons hits, no-op unions and `rebuild`'s final compaction (which
+    /// dedups without changing the represented term set) leave it alone.
+    epoch: u64,
 }
 
 impl EGraph {
@@ -102,6 +110,14 @@ impl EGraph {
     /// a rebuild, slight overcount between unions). Use in hot loops.
     pub fn approx_nodes(&self) -> usize {
         self.memo.len()
+    }
+
+    /// The mutation epoch: changes iff an insert or an effective union —
+    /// explicit or via `rebuild`'s congruence repair — happened since the
+    /// value was last read. Hashcons hits and no-op unions leave it
+    /// untouched.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
     }
 
     /// The class of (canonical) `id`.
@@ -178,6 +194,7 @@ impl EGraph {
         self.memo.insert(node, id);
         self.live_classes += 1;
         self.live_nodes += 1;
+        self.epoch += 1;
         self.dirty_classes.push(id);
         id
     }
@@ -218,6 +235,7 @@ impl EGraph {
         kept.parents.extend(merged.parents);
         self.n_unions += 1;
         self.live_classes -= 1;
+        self.epoch += 1;
         self.dirty = true;
         self.dirty_classes.push(keep);
         self.merged_roots.push(merge);
@@ -551,6 +569,47 @@ mod tests {
         assert_eq!(eg.find(rx), eg.find(ry));
         assert_eq!(eg.num_classes(), 2);
         assert_eq!(eg.total_nodes(), 3);
+    }
+
+    #[test]
+    fn epoch_tracks_genuine_mutations_only() {
+        let mut eg = EGraph::new();
+        let e0 = eg.epoch();
+        let x = eg.add(input("x", &[4]));
+        let y = eg.add(input("y", &[4]));
+        let after_adds = eg.epoch();
+        assert!(after_adds > e0);
+        // Hashcons hit: nothing new is represented.
+        eg.add(input("x", &[4]));
+        assert_eq!(eg.epoch(), after_adds);
+        // Effective union bumps; replayed (no-op) union does not.
+        eg.union(x, y);
+        let after_union = eg.epoch();
+        assert!(after_union > after_adds);
+        // A rebuild with no congruence to repair (leaf classes only) and
+        // only compaction to do leaves the epoch alone.
+        eg.rebuild();
+        let after_rebuild = eg.epoch();
+        assert_eq!(after_rebuild, after_union);
+        eg.union(x, y);
+        assert_eq!(eg.epoch(), after_rebuild);
+    }
+
+    #[test]
+    fn epoch_bumps_on_congruence_unions_during_rebuild() {
+        // relu(x) / relu(y): unioning x=y leaves congruence for rebuild to
+        // repair; that repair unions the relu classes and must bump the
+        // epoch (canonical ids move, so caches keyed on it must refresh).
+        let mut eg = EGraph::new();
+        let x = eg.add(input("x", &[4]));
+        let y = eg.add(input("y", &[4]));
+        let rx = eg.add(Node::new(Op::Relu, vec![x]));
+        let ry = eg.add(Node::new(Op::Relu, vec![y]));
+        eg.union(x, y);
+        let before_rebuild = eg.epoch();
+        eg.rebuild();
+        assert!(eg.epoch() > before_rebuild);
+        assert_eq!(eg.find(rx), eg.find(ry));
     }
 
     #[test]

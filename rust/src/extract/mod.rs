@@ -1,51 +1,72 @@
-//! Extraction: picking concrete designs back out of the e-graph.
+//! Extraction: picking concrete designs back out of the e-graph — as a
+//! **parallel, memoized, streaming** serving layer.
 //!
 //! The paper explicitly scopes extraction out ("the extraction procedure is
 //! out of the scope of this early work") — but the evaluation methodology
-//! (§3 diversity + usefulness) needs concrete design points, so we
-//! implement it as a first-class extension:
+//! (§3 diversity + usefulness) needs *many* concrete design points, and the
+//! ROADMAP's serving goal needs them fast and repeatedly. The read side is
+//! therefore built around three ideas:
 //!
-//! * [`Extractor`] — classic bottom-up fixpoint extraction with a pluggable
-//!   per-node cost function (monotone in child costs ⇒ termination and
-//!   optimality for tree costs);
-//! * [`latency_cost`] / [`size_cost`] — built-in cost functions;
-//! * [`sample_designs`] — randomized-cost extraction: each sample perturbs
-//!   node costs with seeded noise, yielding a *diverse* set of valid
-//!   designs (the paper's diversity experiment);
-//! * [`ParetoExplorer`] — samples + greedy endpoints, evaluated with the
-//!   analytic models, reduced to the area/latency Pareto frontier (the
-//!   usefulness experiment).
+//! 1. **Cost-table memoization.** The expensive part of one extraction is
+//!    the bottom-up cost fixpoint, and it depends only on the e-graph and
+//!    the cost function — not on the query. [`CostTable`] is that fixpoint
+//!    solution as a reusable snapshot, and [`ExtractCache`] memoizes tables
+//!    keyed on ([`CostKind`], graph epoch): shared read-only across
+//!    queries, invalidated only when the e-graph actually changes
+//!    ([`EGraph::epoch`]). A repeated query pays zero fixpoint rebuilds.
+//! 2. **Parallel sampling.** [`extract_designs`] fans the seeded sample
+//!    extractions out over the shared worker pool
+//!    ([`crate::par::parallel_map`]), one independent seeded-RNG extraction
+//!    per item; order-preserving merge makes the result bit-identical for
+//!    any worker count (mirroring the saturation engine's search shards).
+//! 3. **Streaming Pareto frontier.** [`ParetoFrontier`] maintains the
+//!    area/latency frontier incrementally — insert with dominated-point
+//!    eviction, `O(n·|frontier|)` — instead of collecting every sample and
+//!    filtering all-vs-all (`O(n²)`). [`pareto_frontier`] remains as the
+//!    collect-then-filter reference the equivalence tests compare against.
+//!
+//! Entry points: [`Extractor`] (one-off greedy extraction with a pluggable
+//! per-node cost), [`sample_design`] / [`sample_designs`] (seeded diverse
+//! sampling), [`extract_designs`] (the full parallel+memoized pass with
+//! [`ExtractedSet`] memo accounting — what [`crate::session`] queries run),
+//! and [`ParetoExplorer`] (samples + greedy endpoints reduced to the
+//! frontier, streamed).
 
 use crate::cost::{analyze, CostParams, DesignCost, DesignStats};
 use crate::egraph::{EGraph, Id};
-use crate::ir::{Node, Op, RecExpr};
-use crate::prop::Rng;
 use crate::fx::FxHashMap as HashMap;
+use crate::ir::{Node, Op, RecExpr};
+use crate::par::{default_workers, parallel_map};
+use crate::prop::Rng;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// A per-node extraction cost: receives the candidate e-node and the cost
 /// of each child *class* (already minimized); returns the node's total.
 pub type NodeCost<'a> = dyn Fn(&EGraph, &Node, &dyn Fn(Id) -> f64) -> f64 + 'a;
 
-/// Bottom-up fixpoint extractor.
-pub struct Extractor<'c> {
-    cost_fn: Box<NodeCost<'c>>,
+/// The solved bottom-up cost fixpoint for one cost function over one
+/// e-graph: per class, the cheapest e-node and its cost. Self-contained
+/// (no borrow of the cost function), so it can be memoized in an
+/// [`ExtractCache`] and shared read-only across queries and worker threads.
+#[derive(Debug, Clone)]
+pub struct CostTable {
     /// class -> (best cost, best node)
     best: HashMap<Id, (f64, Node)>,
 }
 
-impl<'c> Extractor<'c> {
-    /// Run the fixpoint against `eg` with `cost_fn`.
-    pub fn new(eg: &EGraph, cost_fn: impl Fn(&EGraph, &Node, &dyn Fn(Id) -> f64) -> f64 + 'c) -> Self {
-        let mut ex = Extractor { cost_fn: Box::new(cost_fn), best: HashMap::default() };
-        ex.fixpoint(eg);
-        ex
-    }
-
+impl CostTable {
+    /// Solve the fixpoint for `cost_fn` against `eg`.
+    ///
     /// Worklist fixpoint: when a class's best cost improves, only the
     /// e-nodes that reference it are re-evaluated (near-linear in
     /// practice; the naive repeat-all-passes version is quadratic and
     /// dominates exploration time on large e-graphs).
-    fn fixpoint(&mut self, eg: &EGraph) {
+    pub fn build(
+        eg: &EGraph,
+        cost_fn: impl Fn(&EGraph, &Node, &dyn Fn(Id) -> f64) -> f64,
+    ) -> Self {
+        let mut best: HashMap<Id, (f64, Node)> = HashMap::default();
         // Snapshot nodes and build a child -> referencing-nodes index.
         let mut nodes: Vec<(Id, Node)> = Vec::new();
         for class in eg.classes() {
@@ -65,16 +86,15 @@ impl<'c> Extractor<'c> {
         while let Some(i) = queue.pop_front() {
             queued[i] = false;
             let (cid, node) = &nodes[i];
-            let ready =
-                node.children.iter().all(|&c| self.best.contains_key(&eg.find_ref(c)));
+            let ready = node.children.iter().all(|&c| best.contains_key(&eg.find_ref(c)));
             if !ready {
                 continue;
             }
-            let lookup = |id: Id| self.best[&eg.find_ref(id)].0;
-            let cost = (self.cost_fn)(eg, node, &lookup);
-            let improves = self.best.get(cid).map_or(true, |(old, _)| cost < *old);
+            let lookup = |id: Id| best[&eg.find_ref(id)].0;
+            let cost = cost_fn(eg, node, &lookup);
+            let improves = best.get(cid).map_or(true, |(old, _)| cost < *old);
             if improves {
-                self.best.insert(*cid, (cost, node.clone()));
+                best.insert(*cid, (cost, node.clone()));
                 if let Some(ps) = parents.get(cid) {
                     for &p in ps {
                         if !queued[p] {
@@ -84,6 +104,17 @@ impl<'c> Extractor<'c> {
                     }
                 }
             }
+        }
+        CostTable { best }
+    }
+
+    /// Solve the fixpoint for a named [`CostKind`].
+    pub fn build_kind(eg: &EGraph, kind: &CostKind) -> Self {
+        match kind {
+            CostKind::Size => CostTable::build(eg, size_cost),
+            CostKind::Latency => CostTable::build(eg, latency_cost),
+            CostKind::Area => CostTable::build(eg, area_cost),
+            CostKind::Sampled(seed) => CostTable::build(eg, sampled_cost(*seed)),
         }
     }
 
@@ -121,6 +152,129 @@ impl<'c> Extractor<'c> {
         let new_id = expr.add(Node::new(node.op.clone(), children));
         memo.insert(id, new_id);
         new_id
+    }
+}
+
+/// Bottom-up fixpoint extractor over an arbitrary (possibly closure-
+/// captured) cost function — the one-off convenience front over
+/// [`CostTable`]. Memoizable named costs go through [`ExtractCache`]
+/// instead.
+pub struct Extractor {
+    table: CostTable,
+}
+
+impl Extractor {
+    /// Run the fixpoint against `eg` with `cost_fn`.
+    pub fn new(
+        eg: &EGraph,
+        cost_fn: impl Fn(&EGraph, &Node, &dyn Fn(Id) -> f64) -> f64,
+    ) -> Self {
+        Extractor { table: CostTable::build(eg, cost_fn) }
+    }
+
+    /// Best cost of a class, if extractable.
+    pub fn cost(&self, eg: &EGraph, id: Id) -> Option<f64> {
+        self.table.cost(eg, id)
+    }
+
+    /// Extract the best design rooted at `root`.
+    pub fn extract(&self, eg: &EGraph, root: Id) -> RecExpr {
+        self.table.extract(eg, root)
+    }
+
+    /// Surrender the solved fixpoint for caching.
+    pub fn into_table(self) -> CostTable {
+        self.table
+    }
+}
+
+/// Identity of a memoizable extraction cost function — one half of the
+/// [`ExtractCache`] key (the other half is the graph epoch).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum CostKind {
+    /// [`latency_cost`] (the greedy-latency endpoint).
+    Latency,
+    /// [`area_cost`] (the greedy-area endpoint).
+    Area,
+    /// [`size_cost`] (smallest term).
+    Size,
+    /// [`latency_cost`] under seeded multiplicative noise — one diverse
+    /// sample per seed (see [`sample_design`]).
+    Sampled(u64),
+}
+
+/// Cap on memoized [`CostKind::Sampled`] tables per cache. Named kinds
+/// (greedy endpoints) are never evicted; sampled tables are FIFO-evicted
+/// past this bound so a long-lived session cycling through seeds can't
+/// grow one per-class table per seed forever. Large enough that every
+/// realistic per-query sample count (default 64) stays fully memoized.
+const MAX_SAMPLED_TABLES: usize = 256;
+
+#[derive(Debug, Default)]
+struct CacheInner {
+    /// [`EGraph::epoch`] the cached tables were solved against.
+    epoch: u64,
+    tables: HashMap<CostKind, Arc<CostTable>>,
+    /// Insertion order of the `Sampled` keys currently in `tables`, for
+    /// FIFO eviction at [`MAX_SAMPLED_TABLES`].
+    sampled_order: std::collections::VecDeque<CostKind>,
+}
+
+/// Memo of solved [`CostTable`]s, keyed on (cost-fn identity, graph
+/// epoch): tables are shared read-only across queries and across the
+/// extraction worker pool, and the whole cache self-invalidates the first
+/// time it is consulted after the e-graph changed. One cache serves one
+/// e-graph — the epoch detects *mutation*, not graph identity, so do not
+/// share a cache between graphs (sessions own one per enumeration).
+#[derive(Debug, Default)]
+pub struct ExtractCache {
+    inner: Mutex<CacheInner>,
+}
+
+impl ExtractCache {
+    pub fn new() -> Self {
+        ExtractCache::default()
+    }
+
+    /// Fetch the solved table for `kind`, building it on a miss. Returns
+    /// the table and whether it was a memo hit. Callable concurrently from
+    /// extraction workers: the fixpoint itself runs outside the lock (each
+    /// sample seed is a distinct kind, so concurrent builds don't contend),
+    /// and a racing duplicate build resolves first-insert-wins — harmless,
+    /// since builds are deterministic.
+    pub fn table(&self, eg: &EGraph, kind: CostKind) -> (Arc<CostTable>, bool) {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if inner.epoch != eg.epoch() {
+                inner.tables.clear();
+                inner.sampled_order.clear();
+                inner.epoch = eg.epoch();
+            }
+            if let Some(t) = inner.tables.get(&kind) {
+                return (t.clone(), true);
+            }
+        }
+        let built = Arc::new(CostTable::build_kind(eg, &kind));
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.tables.contains_key(&kind) && matches!(kind, CostKind::Sampled(_)) {
+            inner.sampled_order.push_back(kind.clone());
+            if inner.sampled_order.len() > MAX_SAMPLED_TABLES {
+                if let Some(evict) = inner.sampled_order.pop_front() {
+                    inner.tables.remove(&evict);
+                }
+            }
+        }
+        let entry = inner.tables.entry(kind).or_insert(built);
+        (entry.clone(), false)
+    }
+
+    /// Number of cached tables (for tests / stats).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().tables.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 }
 
@@ -170,6 +324,24 @@ pub fn area_cost(_eg: &EGraph, node: &Node, child: &dyn Fn(Id) -> f64) -> f64 {
     }
 }
 
+/// [`latency_cost`] under per-node deterministic multiplicative noise —
+/// the cost function behind [`CostKind::Sampled`]: each seed flips enough
+/// local decisions to yield a distinct valid design.
+fn sampled_cost(seed: u64) -> impl Fn(&EGraph, &Node, &dyn Fn(Id) -> f64) -> f64 {
+    move |eg, node, child| {
+        // Per-node deterministic noise (cheap structural hash — this runs
+        // in the extraction inner loop).
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        seed.hash(&mut h);
+        node.hash(&mut h);
+        let mut r = Rng::new(h.finish() | 1);
+        // Noise in [0.25, 4.0) — enough to flip most local decisions.
+        let noise = 0.25 * (1.0 + 15.0 * r.f64());
+        latency_cost(eg, node, child) * noise + 1.0
+    }
+}
+
 /// One extracted design point with its evaluation.
 #[derive(Debug, Clone)]
 pub struct DesignPoint {
@@ -183,48 +355,173 @@ pub struct DesignPoint {
 /// Randomized-cost extraction: seeded multiplicative noise on
 /// [`latency_cost`] yields distinct valid designs per seed.
 pub fn sample_design(eg: &EGraph, root: Id, seed: u64) -> RecExpr {
-    // Per-node deterministic noise (cheap structural hash — this runs in
-    // the extraction inner loop).
-    let noise = move |node: &Node| {
-        use std::hash::{Hash, Hasher};
-        let mut h = std::collections::hash_map::DefaultHasher::new();
-        seed.hash(&mut h);
-        node.hash(&mut h);
-        let mut r = Rng::new(h.finish() | 1);
-        // Noise in [0.25, 4.0) — enough to flip most local decisions.
-        0.25 * (1.0 + 15.0 * r.f64())
-    };
-    let ex = Extractor::new(eg, move |eg, node, child| {
-        latency_cost(eg, node, child) * noise(node) + 1.0
-    });
-    ex.extract(eg, root)
+    CostTable::build_kind(eg, &CostKind::Sampled(seed)).extract(eg, root)
 }
 
-/// Draw `n` sampled designs plus the two greedy endpoints; deduplicate by
-/// printed form.
-pub fn sample_designs(eg: &EGraph, root: Id, n: usize, params: &CostParams) -> Vec<DesignPoint> {
-    let mut out: Vec<DesignPoint> = Vec::new();
-    let mut seen = std::collections::HashSet::new();
-    let mut push = |expr: RecExpr, origin: String, out: &mut Vec<DesignPoint>| {
-        let key = expr.to_string();
-        if seen.insert(key) {
-            let (cost, stats) = analyze(&expr, params);
-            out.push(DesignPoint { expr, cost, stats, origin });
-        }
-    };
-    push(
-        Extractor::new(eg, latency_cost).extract(eg, root),
-        "greedy-latency".into(),
-        &mut out,
-    );
-    push(Extractor::new(eg, area_cost).extract(eg, root), "greedy-area".into(), &mut out);
-    for i in 0..n {
-        push(sample_design(eg, root, i as u64), format!("sample-{i}"), &mut out);
+/// Knobs for one [`extract_designs`] pass.
+#[derive(Debug, Clone)]
+pub struct ExtractOptions {
+    /// Seeded sample count (the two greedy endpoints are added on top).
+    pub samples: usize,
+    /// Base seed; sample `i` extracts with seed `seed + i`.
+    pub seed: u64,
+    /// Worker-pool width for the sample fan-out. Results are bit-identical
+    /// for any width.
+    pub workers: usize,
+}
+
+impl Default for ExtractOptions {
+    fn default() -> Self {
+        ExtractOptions { samples: 64, seed: 0, workers: default_workers() }
     }
-    out
 }
 
-/// The area/latency Pareto frontier over a set of design points.
+/// The result of one parallel extraction pass: origin-tagged deduplicated
+/// designs plus memo accounting. Analysis/evaluation is deliberately NOT
+/// here — design *identity* is query-independent (so a batch of queries
+/// can share one set), while costs depend on each query's `CostParams`.
+#[derive(Debug, Clone)]
+pub struct ExtractedSet {
+    /// `(origin, design)`, greedy endpoints first then samples in seed
+    /// order, deduplicated by printed form (first occurrence wins).
+    pub designs: Vec<(String, RecExpr)>,
+    /// Extractions requested (greedy endpoints included).
+    pub requested: usize,
+    /// Cost-table fixpoints reused from the cache.
+    pub memo_hits: usize,
+    /// Cost-table fixpoints solved by this pass.
+    pub memo_misses: usize,
+    /// Wall-clock of the pass.
+    pub elapsed: Duration,
+}
+
+/// The full parallel, memoized extraction pass: the two greedy endpoints
+/// plus `opts.samples` seeded samples, fanned out over the worker pool,
+/// every fixpoint fetched through (and banked in) `cache`. Deterministic:
+/// the result is bit-identical for any `opts.workers`.
+pub fn extract_designs(
+    eg: &EGraph,
+    root: Id,
+    opts: &ExtractOptions,
+    cache: &ExtractCache,
+) -> ExtractedSet {
+    let t0 = Instant::now();
+    let mut hits = 0usize;
+    let mut misses = 0usize;
+    let mut designs: Vec<(String, RecExpr)> = Vec::with_capacity(opts.samples + 2);
+    for (kind, origin) in
+        [(CostKind::Latency, "greedy-latency"), (CostKind::Area, "greedy-area")]
+    {
+        let (table, hit) = cache.table(eg, kind);
+        if hit { hits += 1 } else { misses += 1 }
+        designs.push((origin.to_string(), table.extract(eg, root)));
+    }
+    // One independent seeded extraction per item; `parallel_map` preserves
+    // item order, so the merged stream is identical for any worker count.
+    let sampled: Vec<(RecExpr, bool)> =
+        parallel_map(opts.workers, (0..opts.samples).collect(), |i: &usize| {
+            let seed = opts.seed.wrapping_add(*i as u64);
+            let (table, hit) = cache.table(eg, CostKind::Sampled(seed));
+            (table.extract(eg, root), hit)
+        });
+    for (i, (expr, hit)) in sampled.into_iter().enumerate() {
+        if hit { hits += 1 } else { misses += 1 }
+        designs.push((format!("sample-{}", opts.seed.wrapping_add(i as u64)), expr));
+    }
+    // Deduplicate structurally identical designs (first occurrence wins).
+    let mut seen = std::collections::HashSet::new();
+    designs.retain(|(_, e)| seen.insert(e.to_string()));
+    ExtractedSet {
+        designs,
+        requested: opts.samples + 2,
+        memo_hits: hits,
+        memo_misses: misses,
+        elapsed: t0.elapsed(),
+    }
+}
+
+/// Draw `n` sampled designs plus the two greedy endpoints, analyzed under
+/// `params`; deduplicate by printed form. Convenience front over
+/// [`extract_designs`] with a throwaway cache.
+pub fn sample_designs(eg: &EGraph, root: Id, n: usize, params: &CostParams) -> Vec<DesignPoint> {
+    let cache = ExtractCache::new();
+    let opts = ExtractOptions { samples: n, seed: 0, workers: default_workers() };
+    let set = extract_designs(eg, root, &opts, &cache);
+    analyze_points(&set.designs, params, opts.workers)
+}
+
+/// Analyze origin-tagged designs into [`DesignPoint`]s on the worker pool
+/// (order-preserving). Borrows the design set so a batch of queries can
+/// re-analyze one shared set without copying it per query.
+pub fn analyze_points(
+    designs: &[(String, RecExpr)],
+    params: &CostParams,
+    workers: usize,
+) -> Vec<DesignPoint> {
+    let items: Vec<&(String, RecExpr)> = designs.iter().collect();
+    parallel_map(workers, items, |(origin, expr)| {
+        let (cost, stats) = analyze(expr, params);
+        DesignPoint { expr: expr.clone(), cost, stats, origin: origin.clone() }
+    })
+}
+
+/// Incrementally maintained area/latency Pareto frontier: points stream in
+/// via [`ParetoFrontier::insert`], which rejects dominated or duplicate
+/// arrivals and evicts existing points the arrival dominates. Equivalent
+/// to [`pareto_frontier`] over the same insertion order (the property
+/// tests pin this), but `O(n·|frontier|)` instead of `O(n²)`.
+#[derive(Debug, Clone, Default)]
+pub struct ParetoFrontier {
+    points: Vec<DesignPoint>,
+}
+
+impl ParetoFrontier {
+    pub fn new() -> Self {
+        ParetoFrontier::default()
+    }
+
+    /// Offer one point; returns whether it joined the frontier. A rejected
+    /// point is dominated by (or duplicates the (area, latency) of) a
+    /// current member; an accepted point evicts every member it dominates.
+    pub fn insert(&mut self, p: DesignPoint) -> bool {
+        let dominated_or_dup = self.points.iter().any(|q| {
+            q.cost.dominates(&p.cost)
+                || (q.cost.area == p.cost.area && q.cost.latency == p.cost.latency)
+        });
+        if dominated_or_dup {
+            return false;
+        }
+        self.points.retain(|q| !p.cost.dominates(&q.cost));
+        self.points.push(p);
+        true
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Current members (insertion order).
+    pub fn points(&self) -> &[DesignPoint] {
+        &self.points
+    }
+
+    /// Finish: the frontier sorted by area ascending (the order
+    /// [`pareto_frontier`] produces — no two frontier members share an
+    /// area, so the order is total).
+    pub fn into_sorted(mut self) -> Vec<DesignPoint> {
+        self.points.sort_by(|a, b| a.cost.area.total_cmp(&b.cost.area));
+        self.points
+    }
+}
+
+/// The area/latency Pareto frontier over a set of design points — the
+/// all-vs-all collect-then-filter **reference** implementation. Serving
+/// paths stream through [`ParetoFrontier`] instead; the equivalence tests
+/// compare the two.
 pub fn pareto_frontier(points: &[DesignPoint]) -> Vec<DesignPoint> {
     let mut frontier: Vec<DesignPoint> = Vec::new();
     for p in points {
@@ -240,24 +537,89 @@ pub fn pareto_frontier(points: &[DesignPoint]) -> Vec<DesignPoint> {
     frontier
 }
 
-/// High-level helper: enumerate (via a prepared e-graph) then sample then
-/// reduce to the frontier.
+/// Extraction-side run stats, the read-path sibling of
+/// [`crate::egraph::RunnerReport`]: throughput, memo effectiveness and the
+/// streamed frontier trajectory of one query's extraction pass.
+#[derive(Debug, Clone, Default)]
+pub struct ExtractReport {
+    /// Extractions requested (greedy endpoints included).
+    pub requested: usize,
+    /// Distinct designs after deduplication.
+    pub distinct: usize,
+    /// Cost-table fixpoints reused from the session memo.
+    pub memo_hits: usize,
+    /// Cost-table fixpoints solved by this pass (0 on a fully warm memo).
+    pub memo_misses: usize,
+    /// Wall-clock of the extraction pass (sampling only, not evaluation).
+    pub elapsed: Duration,
+    /// Frontier size after each streamed insertion round (one entry per
+    /// evaluated design, in arrival order).
+    pub frontier_sizes: Vec<usize>,
+}
+
+impl ExtractReport {
+    /// Sampling throughput (requested extractions per second).
+    pub fn samples_per_sec(&self) -> f64 {
+        self.requested as f64 / self.elapsed.as_secs_f64().max(1e-9)
+    }
+
+    /// Fraction of fixpoints served from the memo (1.0 = zero rebuilds).
+    pub fn memo_hit_rate(&self) -> f64 {
+        let total = self.memo_hits + self.memo_misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.memo_hits as f64 / total as f64
+    }
+
+    /// Final frontier size.
+    pub fn frontier_size(&self) -> usize {
+        self.frontier_sizes.last().copied().unwrap_or(0)
+    }
+
+    /// One-line render for CLIs and benches.
+    pub fn line(&self) -> String {
+        format!(
+            "extraction: {} requested -> {} distinct in {:.2?} \
+             ({:.0} samples/s, memo {:.0}% hit / {} built, frontier {})",
+            self.requested,
+            self.distinct,
+            self.elapsed,
+            self.samples_per_sec(),
+            self.memo_hit_rate() * 100.0,
+            self.memo_misses,
+            self.frontier_size(),
+        )
+    }
+}
+
+/// High-level helper: enumerate (via a prepared e-graph) then sample
+/// (parallel) then stream down to the frontier.
 pub struct ParetoExplorer {
     pub samples: usize,
     pub params: CostParams,
+    /// Worker-pool width for sampling + analysis (result-identical for any
+    /// width).
+    pub workers: usize,
 }
 
 impl Default for ParetoExplorer {
     fn default() -> Self {
-        ParetoExplorer { samples: 64, params: CostParams::default() }
+        ParetoExplorer { samples: 64, params: CostParams::default(), workers: default_workers() }
     }
 }
 
 impl ParetoExplorer {
     pub fn explore(&self, eg: &EGraph, root: Id) -> (Vec<DesignPoint>, Vec<DesignPoint>) {
-        let pts = sample_designs(eg, root, self.samples, &self.params);
-        let frontier = pareto_frontier(&pts);
-        (pts, frontier)
+        let cache = ExtractCache::new();
+        let opts = ExtractOptions { samples: self.samples, seed: 0, workers: self.workers };
+        let set = extract_designs(eg, root, &opts, &cache);
+        let pts = analyze_points(&set.designs, &self.params, self.workers);
+        let mut frontier = ParetoFrontier::new();
+        for p in &pts {
+            frontier.insert(p.clone());
+        }
+        (pts, frontier.into_sorted())
     }
 }
 
@@ -330,5 +692,119 @@ mod tests {
         if frontier.len() >= 2 {
             assert!(frontier[0].cost.area < frontier.last().unwrap().cost.area);
         }
+    }
+
+    #[test]
+    fn extract_designs_is_identical_across_worker_counts() {
+        let (eg, root) = enumerated(FIG2, 6);
+        let render = |workers: usize| {
+            let cache = ExtractCache::new();
+            let opts = ExtractOptions { samples: 16, seed: 3, workers };
+            extract_designs(&eg, root, &opts, &cache)
+                .designs
+                .into_iter()
+                .map(|(origin, e)| (origin, e.to_string()))
+                .collect::<Vec<_>>()
+        };
+        let one = render(1);
+        assert!(one.len() >= 3);
+        assert_eq!(render(2), one);
+        assert_eq!(render(4), one);
+    }
+
+    #[test]
+    fn cache_hits_on_unchanged_graph_and_invalidates_on_mutation() {
+        let (mut eg, root) = enumerated(FIG2, 6);
+        let cache = ExtractCache::new();
+        let opts = ExtractOptions { samples: 8, seed: 0, workers: 2 };
+        let cold = extract_designs(&eg, root, &opts, &cache);
+        assert_eq!(cold.memo_misses, opts.samples + 2);
+        assert_eq!(cold.memo_hits, 0);
+
+        // Warm pass: zero fixpoint rebuilds, identical designs.
+        let warm = extract_designs(&eg, root, &opts, &cache);
+        assert_eq!(warm.memo_misses, 0, "unchanged graph must serve from the memo");
+        assert_eq!(warm.memo_hits, opts.samples + 2);
+        let strs = |set: &ExtractedSet| {
+            set.designs.iter().map(|(_, e)| e.to_string()).collect::<Vec<_>>()
+        };
+        assert_eq!(strs(&cold), strs(&warm));
+
+        // Mutating the e-graph bumps the epoch and invalidates the cache.
+        let before = eg.epoch();
+        eg.add_expr(&parse_expr("(input fresh [7])").unwrap());
+        assert!(eg.epoch() > before);
+        let cool = extract_designs(&eg, root, &opts, &cache);
+        assert_eq!(cool.memo_misses, opts.samples + 2);
+        assert_eq!(strs(&cool), strs(&warm), "an unrelated input must not change designs");
+    }
+
+    #[test]
+    fn sampled_table_memo_is_bounded_fifo() {
+        // A long-lived cache cycling through seeds must not grow without
+        // bound: sampled tables are FIFO-evicted past MAX_SAMPLED_TABLES.
+        let e = parse_expr(FIG2).unwrap();
+        let mut eg = EGraph::new();
+        eg.add_expr(&e);
+        let cache = ExtractCache::new();
+        let n = MAX_SAMPLED_TABLES as u64 + 44;
+        for seed in 0..n {
+            cache.table(&eg, CostKind::Sampled(seed));
+        }
+        assert!(cache.len() <= MAX_SAMPLED_TABLES);
+        // Newest seed retained; the oldest were evicted.
+        let (_, hit_new) = cache.table(&eg, CostKind::Sampled(n - 1));
+        assert!(hit_new);
+        let (_, hit_old) = cache.table(&eg, CostKind::Sampled(0));
+        assert!(!hit_old, "seed 0 must have been FIFO-evicted");
+    }
+
+    #[test]
+    fn sample_design_matches_sampled_cost_table() {
+        // `sample_design` and the memoized `CostKind::Sampled` path are the
+        // same extraction.
+        let (eg, root) = enumerated(FIG2, 6);
+        let cache = ExtractCache::new();
+        for seed in [0u64, 1, 9] {
+            let direct = sample_design(&eg, root, seed);
+            let (table, _) = cache.table(&eg, CostKind::Sampled(seed));
+            assert_eq!(direct.to_string(), table.extract(&eg, root).to_string());
+        }
+    }
+
+    #[test]
+    fn streaming_frontier_matches_reference_on_samples() {
+        let (eg, root) = enumerated(FIG2, 6);
+        let pts = sample_designs(&eg, root, 24, &CostParams::default());
+        let mut streaming = ParetoFrontier::new();
+        for p in &pts {
+            streaming.insert(p.clone());
+        }
+        let stream = streaming
+            .into_sorted()
+            .iter()
+            .map(|p| (p.cost.area, p.cost.latency, p.origin.clone()))
+            .collect::<Vec<_>>();
+        let reference = pareto_frontier(&pts)
+            .iter()
+            .map(|p| (p.cost.area, p.cost.latency, p.origin.clone()))
+            .collect::<Vec<_>>();
+        assert_eq!(stream, reference);
+    }
+
+    #[test]
+    fn extract_report_rates() {
+        let r = ExtractReport {
+            requested: 10,
+            distinct: 7,
+            memo_hits: 8,
+            memo_misses: 2,
+            elapsed: Duration::from_millis(5),
+            frontier_sizes: vec![1, 2, 2, 3],
+        };
+        assert!((r.memo_hit_rate() - 0.8).abs() < 1e-12);
+        assert_eq!(r.frontier_size(), 3);
+        assert!(r.samples_per_sec() > 0.0);
+        assert!(r.line().contains("frontier 3"));
     }
 }

@@ -52,7 +52,7 @@
 //! | [`rewrites`] | the split-altering rewrite library (paper Fig. 2 + extensions) + [`rewrites::RuleSet`] |
 //! | [`tensor`] | pure-Rust tensor math + EngineIR evaluator (semantics oracle) |
 //! | [`cost`] | analytic area / latency / energy models over designs |
-//! | [`extract`] | greedy, cost-directed and Pareto design extraction |
+//! | [`extract`] | parallel, memoized design extraction: cost-table memo, seeded sampling, streaming Pareto frontier |
 //! | [`sim`] | cycle-approximate accelerator simulator (usefulness oracle) |
 //! | [`runtime`] | PJRT executor for AOT-compiled Pallas engine kernels (feature `pjrt`; stub otherwise) |
 //! | [`session`] | **the primary API**: reusable sessions, queries, pluggable backends |

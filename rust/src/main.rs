@@ -216,17 +216,72 @@ fn cmd_explore(args: &Args) {
     if let Some(workers) = args.get("search-workers").and_then(|v| v.parse().ok()) {
         builder = builder.search_workers(workers);
     }
+    if let Some(workers) = args.get("extract-workers").and_then(|v| v.parse().ok()) {
+        builder = builder.extract_workers(workers);
+    }
     let mut session = builder.build().unwrap_or_else(|e| {
         eprintln!("{e}");
         std::process::exit(2);
     });
+    let samples = args.usize("samples", 64);
+
+    // Batched mode: `--objectives latency,area` answers every objective
+    // against ONE shared design sample set (one extraction pass, memoized
+    // cost tables) via `Session::run_queries`.
+    if let Some(list) = args.get("objectives") {
+        if args.get("objective").is_some() {
+            eprintln!("--objective and --objectives are mutually exclusive; pick one");
+            std::process::exit(2);
+        }
+        let objectives: Vec<Objective> = list
+            .split(',')
+            .map(|s| {
+                s.trim().parse().unwrap_or_else(|e| {
+                    eprintln!("--objectives: {e}");
+                    std::process::exit(2);
+                })
+            })
+            .collect();
+        let queries: Vec<Query> = objectives
+            .iter()
+            .map(|&o| Query::new().objective(o).backend(backend).samples(samples))
+            .collect();
+        let evs = session.run_queries(&queries).unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2);
+        });
+        println!(
+            "{}",
+            session.enumerate().expect("enumerated by the batch").report.table()
+        );
+        if let Some(first) = evs.first() {
+            println!("{}", first.extract.line());
+        }
+        let mut t = Table::new(
+            &format!("batched queries for {} (backend: {backend})", w.name),
+            &["objective", "best", "area", "latency", "frontier"],
+        );
+        for ev in &evs {
+            let best = ev.best().expect("nonempty design set");
+            t.row(&[
+                format!("{:?}", ev.objective),
+                best.point.origin.clone(),
+                fmt_f64(best.point.cost.area),
+                fmt_f64(best.point.cost.latency),
+                ev.frontier.len().to_string(),
+            ]);
+        }
+        print!("{}", t.render());
+        println!("explored in {:.2?}", t0.elapsed());
+        if let Some(dir) = args.get("csv") {
+            t.write_csv(format!("{dir}/{}_objectives.csv", w.name)).expect("write csv");
+            println!("wrote CSV to {dir}/");
+        }
+        return;
+    }
+
     let ev = session
-        .query(
-            &Query::new()
-                .objective(objective)
-                .backend(backend)
-                .samples(args.usize("samples", 64)),
-        )
+        .query(&Query::new().objective(objective).backend(backend).samples(samples))
         .unwrap_or_else(|e| {
             eprintln!("{e}");
             std::process::exit(2);
@@ -235,6 +290,7 @@ fn cmd_explore(args: &Args) {
         "{}",
         session.enumerate().expect("enumerated by the query").report.table()
     );
+    println!("{}", ev.extract.line());
 
     let mut t = Table::new(
         &format!("designs for {} (backend: {})", w.name, ev.backend),

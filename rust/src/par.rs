@@ -32,22 +32,34 @@ pub fn parallel_map<T: Send + Sync, R: Send>(
     if workers == 1 {
         return items.iter().map(f).collect();
     }
-    let results: Vec<std::sync::Mutex<Option<R>>> =
-        items.iter().map(|_| std::sync::Mutex::new(None)).collect();
+    // Each worker accumulates `(index, result)` pairs locally and hands the
+    // batch back through its join handle — no per-item lock on the hot
+    // path; the single-threaded merge rebuilds input order.
     let next = std::sync::atomic::AtomicUsize::new(0);
     std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if i >= items.len() {
-                    break;
-                }
-                let r = f(&items[i]);
-                *results[i].lock().unwrap() = Some(r);
-            });
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut local: Vec<(usize, R)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        if i >= items.len() {
+                            break;
+                        }
+                        local.push((i, f(&items[i])));
+                    }
+                    local
+                })
+            })
+            .collect();
+        let mut results: Vec<Option<R>> = items.iter().map(|_| None).collect();
+        for h in handles {
+            for (i, r) in h.join().expect("worker panicked") {
+                results[i] = Some(r);
+            }
         }
-    });
-    results.into_iter().map(|m| m.into_inner().unwrap().unwrap()).collect()
+        results.into_iter().map(|r| r.expect("every index visited")).collect()
+    })
 }
 
 #[cfg(test)]

@@ -16,7 +16,7 @@ pub mod workloads;
 pub use workloads::{all_workloads, workload_by_name, Workload};
 
 use crate::egraph::Id;
-use crate::ir::{Op, RecExpr, Shape, Symbol, Ty};
+use crate::ir::{infer_ty, Op, RecExpr, Shape, Symbol, Ty};
 
 /// A typed builder for Relay-level operator graphs. Every method checks
 /// shapes eagerly (via the EngineIR type checker), so a workload that
@@ -24,22 +24,29 @@ use crate::ir::{Op, RecExpr, Shape, Symbol, Ty};
 #[derive(Debug, Default)]
 pub struct GraphBuilder {
     expr: RecExpr,
+    /// Per-slot types, maintained incrementally as nodes are pushed (the
+    /// same values `expr.types()` would recompute from scratch).
+    tys: Vec<Ty>,
 }
 
 impl GraphBuilder {
     pub fn new() -> Self {
-        GraphBuilder { expr: RecExpr::new() }
+        GraphBuilder::default()
     }
 
     fn push(&mut self, op: Op, children: &[Id]) -> Id {
-        let id = self.expr.add_op(op, children);
-        // Eager validation: typecheck the growing prefix. O(n²) overall but
-        // workload construction is tiny and this catches authoring bugs at
-        // the exact offending layer.
-        if let Err(e) = self.expr.typecheck() {
-            panic!("GraphBuilder produced ill-typed graph: {e}");
+        // Eager validation: infer just the new node against its
+        // already-validated children. The prefix is well-typed by
+        // induction, so this catches authoring bugs at the exact offending
+        // layer in O(1) per push instead of re-typechecking the whole
+        // prefix (O(n²) over a build).
+        let child_tys: Vec<Ty> =
+            children.iter().map(|&c| self.tys[c.index()].clone()).collect();
+        match infer_ty(&op, &child_tys) {
+            Ok(ty) => self.tys.push(ty),
+            Err(e) => panic!("GraphBuilder produced ill-typed graph: {e}"),
         }
-        id
+        self.expr.add_op(op, children)
     }
 
     /// Workload input tensor.
@@ -82,8 +89,8 @@ impl GraphBuilder {
 
     /// Shape of an already-built node (for layer helpers).
     pub fn shape_of(&self, id: Id) -> Shape {
-        match self.expr.types().expect("builder keeps graphs well-typed")[id.index()].clone() {
-            Ty::Tensor(s) => s,
+        match &self.tys[id.index()] {
+            Ty::Tensor(s) => s.clone(),
             other => panic!("node {id:?} is not a tensor: {other:?}"),
         }
     }
@@ -163,6 +170,20 @@ mod tests {
         let x = b.input("img", &[3, 32, 32]);
         let y = b.conv_relu(x, "c1", 8, 3, 1, 1);
         assert_eq!(b.shape_of(y), Shape::new(&[8, 32, 32]));
+    }
+
+    #[test]
+    fn incremental_types_match_full_typecheck() {
+        // The builder's per-push inference must agree with the from-scratch
+        // pass on a deep graph (this used to be re-run per push, O(n²)).
+        let mut b = GraphBuilder::new();
+        let mut x = b.input("x", &[1, 32]);
+        for i in 0..40 {
+            x = b.dense_layer(x, &format!("fc{i}"), 32, i % 2 == 0);
+        }
+        let cached = b.tys.clone();
+        let e = b.finish_at(x);
+        assert_eq!(e.types().unwrap(), cached);
     }
 
     #[test]

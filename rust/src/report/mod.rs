@@ -81,6 +81,97 @@ impl Table {
     }
 }
 
+/// A JSON scalar for the machine-readable bench records (no serde in the
+/// zero-dependency build). Non-finite numbers serialize as `null` — JSON
+/// has no NaN/Infinity.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonValue {
+    Str(String),
+    Num(f64),
+    Int(i64),
+}
+
+impl JsonValue {
+    fn render(&self) -> String {
+        match self {
+            JsonValue::Str(s) => {
+                let mut out = String::with_capacity(s.len() + 2);
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\t' => out.push_str("\\t"),
+                        '\r' => out.push_str("\\r"),
+                        c if (c as u32) < 0x20 => {
+                            let _ = write!(out, "\\u{:04x}", c as u32);
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+                out
+            }
+            JsonValue::Num(v) if !v.is_finite() => "null".to_string(),
+            JsonValue::Num(v) => format!("{v}"),
+            JsonValue::Int(v) => format!("{v}"),
+        }
+    }
+}
+
+/// A flat list of key/value records rendered as a JSON array of objects —
+/// the `bench_results.json` format the CI perf job uploads, one record per
+/// measured (workload, engine) cell.
+#[derive(Debug, Clone, Default)]
+pub struct JsonRecords {
+    records: Vec<Vec<(String, JsonValue)>>,
+}
+
+impl JsonRecords {
+    pub fn new() -> Self {
+        JsonRecords::default()
+    }
+
+    pub fn push(&mut self, record: Vec<(String, JsonValue)>) {
+        self.records.push(record);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("[\n");
+        for (i, rec) in self.records.iter().enumerate() {
+            let fields: Vec<String> = rec
+                .iter()
+                .map(|(k, v)| format!("{}: {}", JsonValue::Str(k.clone()).render(), v.render()))
+                .collect();
+            let _ = write!(out, "  {{{}}}", fields.join(", "));
+            out.push_str(if i + 1 < self.records.len() { ",\n" } else { "\n" });
+        }
+        out.push(']');
+        out.push('\n');
+        out
+    }
+
+    /// Write the records, creating parent directories as needed.
+    pub fn write(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_json().as_bytes())
+    }
+}
+
 /// Format a float compactly (3 significant-ish digits, scientific for big).
 pub fn fmt_f64(v: f64) -> String {
     if v == 0.0 {
@@ -128,5 +219,25 @@ mod tests {
     fn row_arity_checked() {
         let mut t = Table::new("", &["a", "b"]);
         t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn json_records_render_escaped_and_typed() {
+        let mut j = JsonRecords::new();
+        j.push(vec![
+            ("workload".into(), JsonValue::Str("le\"net\n".into())),
+            ("wall_ms".into(), JsonValue::Num(12.5)),
+            ("designs_per_sec".into(), JsonValue::Num(f64::NAN)),
+            ("n".into(), JsonValue::Int(3)),
+        ]);
+        j.push(vec![("workload".into(), JsonValue::Str("mlp".into()))]);
+        let s = j.to_json();
+        assert!(s.starts_with("[\n"));
+        assert!(s.contains(r#""workload": "le\"net\n""#), "{s}");
+        assert!(s.contains(r#""wall_ms": 12.5"#));
+        assert!(s.contains(r#""designs_per_sec": null"#), "NaN must be null: {s}");
+        assert!(s.contains(r#""n": 3"#));
+        assert!(s.trim_end().ends_with(']'));
+        assert_eq!(j.len(), 2);
     }
 }

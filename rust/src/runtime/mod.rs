@@ -17,26 +17,29 @@
 //!   split, executed literally.
 //!
 //! The `xla` bindings are not vendored in this build environment, so the
-//! real implementation is gated behind the `pjrt` cargo feature. The
-//! default build substitutes a **stub** with the identical API whose
-//! constructor returns [`Error::Unsupported`] — every consumer (the CLI
-//! `run` command, the e2e example, the runtime bench, `Backend::Pjrt`
-//! session queries) degrades to a clean typed error or a skip instead of
-//! failing to link.
+//! real executor is gated behind **both** the `pjrt` and `xla-runtime`
+//! cargo features: `pjrt` alone selects all the PJRT wiring with a **stub**
+//! executor of identical API whose constructor returns
+//! [`Error::Unsupported`] (this is the configuration the CI feature matrix
+//! builds), and `xla-runtime` — which additionally requires vendoring the
+//! `xla` crate, see the manifest — swaps in the real implementation. Every
+//! consumer (the CLI `run` command, the e2e example, the runtime bench,
+//! `Backend::Pjrt` session queries) degrades to a clean typed error or a
+//! skip instead of failing to link.
 
 use crate::error::Error;
 use crate::ir::{Op, Shape};
 use crate::tensor::EngineBackend;
 use std::path::PathBuf;
 
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", feature = "xla-runtime"))]
 mod pjrt_impl;
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", feature = "xla-runtime"))]
 pub use pjrt_impl::EngineRuntime;
 
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(all(feature = "pjrt", feature = "xla-runtime")))]
 mod stub_impl;
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(all(feature = "pjrt", feature = "xla-runtime")))]
 pub use stub_impl::EngineRuntime;
 
 /// Locate the artifacts directory: `$HWSPLIT_ARTIFACTS` or `<repo>/artifacts`.
@@ -198,7 +201,7 @@ mod tests {
         );
     }
 
-    #[cfg(not(feature = "pjrt"))]
+    #[cfg(not(all(feature = "pjrt", feature = "xla-runtime")))]
     #[test]
     fn stub_runtime_reports_typed_unsupported_error() {
         let err = EngineRuntime::new(default_artifact_dir()).unwrap_err();

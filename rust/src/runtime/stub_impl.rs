@@ -1,6 +1,7 @@
-//! Stub engine runtime for builds without the `pjrt` feature: identical
-//! API, but construction fails with a typed [`Error::Unsupported`] so every
-//! consumer can detect the missing capability and skip or report cleanly.
+//! Stub engine runtime for builds without the full `pjrt` + `xla-runtime`
+//! feature pair: identical API, but construction fails with a typed
+//! [`Error::Unsupported`] so every consumer can detect the missing
+//! capability and skip or report cleanly.
 
 use super::artifact_name;
 use crate::error::Error;
@@ -10,7 +11,7 @@ use std::collections::{HashMap, HashSet};
 use std::path::Path;
 
 const UNSUPPORTED: &str = "PJRT engine runtime is not compiled into this build \
-     (rebuild with `--features pjrt` and a vendored `xla` dependency)";
+     (rebuild with `--features pjrt,xla-runtime` and a vendored `xla` dependency)";
 
 /// API-compatible stand-in for the PJRT-backed [`EngineRuntime`]. Never
 /// constructible: [`EngineRuntime::new`] always returns

@@ -41,6 +41,17 @@
 //! [`SessionBuilder::track_designs`] opts back in to per-iteration design
 //! counting (off by default here — sessions enumerate once and query, they
 //! don't plot growth curves).
+//!
+//! The read side is parallel, memoized and streaming (see
+//! [`crate::extract`]): sampled extractions fan out over
+//! [`SessionBuilder::extract_workers`] (bit-identical results for any
+//! width), the per-cost-function extraction fixpoints are memoized in a
+//! session-owned [`crate::extract::ExtractCache`] — so a repeat query pays
+//! **zero** fixpoint rebuilds, pinned by the memo stats in
+//! [`Evaluation`]'s `extract` report — and the Pareto frontier
+//! is maintained incrementally as evaluated designs stream in.
+//! [`Session::run_queries`] answers a whole batch of queries against one
+//! shared design sample set.
 
 mod backend;
 mod query;
@@ -52,10 +63,13 @@ pub use query::{
 
 pub use crate::rewrites::RuleSet;
 
-use crate::cost::{analyze, baseline, CostParams};
+use crate::cost::baseline;
 use crate::egraph::{EGraph, Id, Rewrite, Runner, RunnerLimits, RunnerReport, Scheduler};
 use crate::error::Error;
-use crate::extract::{pareto_frontier, sample_design, DesignPoint, Extractor};
+use crate::extract::{
+    analyze_points, extract_designs, DesignPoint, ExtractCache, ExtractOptions, ExtractReport,
+    ExtractedSet, ParetoFrontier,
+};
 use crate::ir::RecExpr;
 use crate::lower::{lower, LowerOptions};
 pub use crate::par::parallel_map;
@@ -80,6 +94,7 @@ pub struct SessionBuilder {
     iters: Option<usize>,
     workers: Option<usize>,
     search_workers: Option<usize>,
+    extract_workers: Option<usize>,
     scheduler: Option<Box<dyn Scheduler>>,
     track_designs: Option<bool>,
     limits: Option<RunnerLimits>,
@@ -125,6 +140,14 @@ impl SessionBuilder {
     /// deterministic for any width.
     pub fn search_workers(mut self, workers: usize) -> Self {
         self.search_workers = Some(workers);
+        self
+    }
+
+    /// Worker-pool width for the extraction sample fan-out specifically
+    /// (default: the [`SessionBuilder::workers`] setting). The extracted
+    /// design set is bit-identical for any width.
+    pub fn extract_workers(mut self, workers: usize) -> Self {
+        self.extract_workers = Some(workers);
         self
     }
 
@@ -182,7 +205,9 @@ impl SessionBuilder {
             (None, set) => set.unwrap_or(RuleSet::Paper).rules(),
         };
         let lowered = lower(&workload.expr, self.lower_opts.unwrap_or_default())?;
-        let workers = self.workers.unwrap_or_else(default_workers);
+        // Worker widths are ≥ 1 (0 would be meaningless; the pool also
+        // clamps, this just keeps the session's own bookkeeping sane).
+        let workers = self.workers.unwrap_or_else(default_workers).max(1);
         // Sessions enumerate once and answer queries; per-iteration design
         // counting is a growth-experiment concern, so the session path
         // controls it via the builder flag (default off) rather than the
@@ -197,11 +222,13 @@ impl SessionBuilder {
             rules,
             iters: self.iters.unwrap_or(8),
             workers,
-            search_workers: self.search_workers.unwrap_or(workers),
+            search_workers: self.search_workers.unwrap_or(workers).max(1),
+            extract_workers: self.extract_workers.unwrap_or(workers).max(1),
             scheduler: self.scheduler,
             limits,
             enumerated: None,
             enumerations: 0,
+            extract_cache: ExtractCache::new(),
         })
     }
 }
@@ -223,10 +250,17 @@ pub struct Session {
     iters: usize,
     workers: usize,
     search_workers: usize,
+    extract_workers: usize,
     scheduler: Option<Box<dyn Scheduler>>,
     limits: RunnerLimits,
     enumerated: Option<Enumeration>,
     enumerations: usize,
+    /// Memo of solved extraction cost tables, shared read-only across
+    /// queries (and across the extraction worker pool); self-invalidates on
+    /// graph-epoch change, which for a session means never after
+    /// enumeration — so every query past the first pays zero fixpoint
+    /// rebuilds for seeds it has seen.
+    extract_cache: ExtractCache,
 }
 
 impl Session {
@@ -276,55 +310,118 @@ impl Session {
     }
 
     /// Answer one query: extract candidate designs from the (shared,
-    /// read-only) e-graph and evaluate them on the query's backend. The
-    /// first call triggers enumeration; subsequent calls — with different
-    /// objectives, sample counts, cost parameters or backends — reuse it.
+    /// read-only) e-graph — parallel sample fan-out, cost fixpoints served
+    /// from the session memo — and evaluate them on the query's backend.
+    /// The first call triggers enumeration; subsequent calls — with
+    /// different objectives, sample counts, cost parameters or backends —
+    /// reuse both the e-graph and every cost table already solved.
     pub fn query(&mut self, q: &Query) -> Result<Evaluation, Error> {
+        let set = self.extract(q.samples, q.seed)?;
+        self.answer(q, &set)
+    }
+
+    /// Answer a batch of queries against **one shared design sample set**:
+    /// the extraction pass runs once per distinct `(samples, seed)` pair —
+    /// once total for the common batch that varies only objective, backend
+    /// or cost params — and analysis + backend evaluation run once per
+    /// distinct `(samples, seed, backend, params)`, so a batch that varies
+    /// only the *objective* (which affects ranking, not measurement) pays
+    /// extraction AND evaluation exactly once. Mixed-seed batches still
+    /// share every cost-table fixpoint through the session memo. Results
+    /// are identical to issuing the queries one by one.
+    pub fn run_queries(&mut self, queries: &[Query]) -> Result<Vec<Evaluation>, Error> {
+        type SetKey = (usize, u64);
+        type EvalKey = (SetKey, Backend, crate::cost::CostParams);
+        // Each query's evaluation identity, precomputed so the last user of
+        // a shared evaluation can take it by move instead of cloning.
+        let ekeys: Vec<EvalKey> = queries
+            .iter()
+            .map(|q| ((q.samples, q.seed), q.backend, q.params.clone()))
+            .collect();
+        let mut sets: Vec<(SetKey, ExtractedSet)> = Vec::new();
+        let mut evals: Vec<(EvalKey, Vec<EvaluatedDesign>)> = Vec::new();
+        let mut out = Vec::with_capacity(queries.len());
+        for (i, q) in queries.iter().enumerate() {
+            let key = (q.samples, q.seed);
+            if !sets.iter().any(|(k, _)| *k == key) {
+                let set = self.extract(q.samples, q.seed)?;
+                sets.push((key, set));
+            }
+            let set = &sets.iter().find(|(k, _)| *k == key).expect("inserted above").1;
+            if !evals.iter().any(|(k, _)| *k == ekeys[i]) {
+                let designs = self.evaluate_set(q, set)?;
+                evals.push((ekeys[i].clone(), designs));
+            }
+            let pos = evals.iter().position(|(k, _)| *k == ekeys[i]).expect("inserted above");
+            let designs = if ekeys[i + 1..].contains(&ekeys[i]) {
+                evals[pos].1.clone()
+            } else {
+                evals.swap_remove(pos).1
+            };
+            out.push(self.finish(q, set, designs));
+        }
+        Ok(out)
+    }
+
+    /// The shared extraction pass (enumerating first if needed): greedy
+    /// endpoints + seeded samples over the worker pool, fixpoints through
+    /// the session memo.
+    fn extract(&mut self, samples: usize, seed: u64) -> Result<ExtractedSet, Error> {
         self.enumerate()?;
         let en = self.enumerated.as_ref().expect("enumerated above");
-        let (eg, root) = (&en.egraph, en.root);
-
-        // Extraction: the two greedy endpoints anchor the frontier, then
-        // `samples` randomized-cost extractions (parallel — extraction only
-        // reads the e-graph).
         let t0 = std::time::Instant::now();
-        let mut exprs: Vec<(String, RecExpr)> = vec![
-            (
-                "greedy-latency".into(),
-                Extractor::new(eg, crate::extract::latency_cost).extract(eg, root),
-            ),
-            (
-                "greedy-area".into(),
-                Extractor::new(eg, crate::extract::area_cost).extract(eg, root),
-            ),
-        ];
-        let sampled: Vec<(String, RecExpr)> =
-            parallel_map(self.workers, (0..q.samples).collect(), |i: &usize| {
-                let seed = q.seed.wrapping_add(*i as u64);
-                (format!("sample-{seed}"), sample_design(eg, root, seed))
-            });
-        exprs.extend(sampled);
-        // Deduplicate structurally identical designs.
-        let mut seen = std::collections::HashSet::new();
-        exprs.retain(|(_, e)| seen.insert(e.to_string()));
+        let opts = ExtractOptions { samples, seed, workers: self.extract_workers };
+        let set = extract_designs(&en.egraph, en.root, &opts, &self.extract_cache);
         vlog("extract", t0);
+        Ok(set)
+    }
 
-        // Evaluation on the query's backend.
+    /// Analyze + evaluate one extracted set under one query, streaming the
+    /// Pareto frontier as evaluated designs arrive.
+    fn answer(&self, q: &Query, set: &ExtractedSet) -> Result<Evaluation, Error> {
+        let designs = self.evaluate_set(q, set)?;
+        Ok(self.finish(q, set, designs))
+    }
+
+    /// The measurement half of a query: analyze the shared design set under
+    /// the query's cost params, then run its backend. Depends on
+    /// `(backend, params, seed)` but NOT the objective, so batches share it.
+    fn evaluate_set(&self, q: &Query, set: &ExtractedSet) -> Result<Vec<EvaluatedDesign>, Error> {
         let t0 = std::time::Instant::now();
-        let designs = evaluate_all(q, exprs, self.workers)?;
+        let points = analyze_points(&set.designs, &q.params, self.extract_workers);
+        let designs = evaluate_all(q, points, self.workers)?;
         vlog("evaluate", t0);
+        Ok(designs)
+    }
 
-        let frontier =
-            pareto_frontier(&designs.iter().map(|d| d.point.clone()).collect::<Vec<_>>());
+    /// The ranking half of a query: stream the Pareto frontier over the
+    /// evaluated designs (dominated-point eviction per insert, trajectory
+    /// into the report) and assemble the [`Evaluation`].
+    fn finish(&self, q: &Query, set: &ExtractedSet, designs: Vec<EvaluatedDesign>) -> Evaluation {
+        let mut frontier = ParetoFrontier::new();
+        let mut frontier_sizes = Vec::with_capacity(designs.len());
+        for d in &designs {
+            frontier.insert(d.point.clone());
+            frontier_sizes.push(frontier.len());
+        }
+        let extract = ExtractReport {
+            requested: set.requested,
+            distinct: set.designs.len(),
+            memo_hits: set.memo_hits,
+            memo_misses: set.memo_misses,
+            elapsed: set.elapsed,
+            frontier_sizes,
+        };
         let base = baseline(&self.lowered, &q.params);
-        Ok(Evaluation {
+        Evaluation {
             workload: self.workload.name.to_string(),
             backend: q.backend,
             objective: q.objective,
             designs,
-            frontier,
+            frontier: frontier.into_sorted(),
             baseline: base,
-        })
+            extract,
+        }
     }
 
     /// Dismantle the session into its lowered expression and enumeration
@@ -336,34 +433,28 @@ impl Session {
     }
 }
 
-/// Evaluate extracted designs on the query's backend: the analytic cost +
-/// stats always (they define the [`DesignPoint`]), plus whatever the
-/// backend reports. Parallel-safe backends get one evaluator per design on
-/// the pool; the PJRT runtime evaluates serially through its shared
-/// compile cache.
+/// Evaluate analyzed design points on the query's backend. Parallel-safe
+/// backends get one evaluator per design on the pool; the PJRT runtime
+/// evaluates serially through its shared compile cache.
 fn evaluate_all(
     q: &Query,
-    exprs: Vec<(String, RecExpr)>,
+    points: Vec<DesignPoint>,
     workers: usize,
 ) -> Result<Vec<EvaluatedDesign>, Error> {
-    let point = |origin: &str, expr: &RecExpr, params: &CostParams| -> DesignPoint {
-        let (cost, stats) = analyze(expr, params);
-        DesignPoint { expr: expr.clone(), cost, stats, origin: origin.to_string() }
-    };
     if q.backend.parallel_safe() {
-        parallel_map(workers, exprs, |(origin, expr)| -> Result<EvaluatedDesign, Error> {
-            let report = q.backend.evaluator()?.evaluate(expr, &q.params, q.seed)?;
-            Ok(EvaluatedDesign::new(point(origin, expr, &q.params), report))
+        parallel_map(workers, points, |p| -> Result<EvaluatedDesign, Error> {
+            let report = q.backend.evaluator()?.evaluate(&p.expr, &q.params, q.seed)?;
+            Ok(EvaluatedDesign::new(p.clone(), report))
         })
         .into_iter()
         .collect()
     } else {
         let mut ev = q.backend.evaluator()?;
-        exprs
-            .iter()
-            .map(|(origin, expr)| {
-                let report = ev.evaluate(expr, &q.params, q.seed)?;
-                Ok(EvaluatedDesign::new(point(origin, expr, &q.params), report))
+        points
+            .into_iter()
+            .map(|p| {
+                let report = ev.evaluate(&p.expr, &q.params, q.seed)?;
+                Ok(EvaluatedDesign::new(p, report))
             })
             .collect()
     }
@@ -464,6 +555,79 @@ mod tests {
         assert!(!ev.frontier.is_empty());
         assert!(ev.baseline.cost.area > 0.0);
         assert!(ev.best().is_some());
+    }
+
+    #[test]
+    fn second_query_serves_from_the_cost_table_memo() {
+        let mut s = small_session(workloads::relu128());
+        let q1 = s.query(&Query::new().objective(Objective::Latency).samples(10)).unwrap();
+        assert!(q1.extract.memo_misses > 0, "cold query must solve fixpoints");
+        // Different objective, same sample set: zero fixpoint rebuilds.
+        let q2 = s.query(&Query::new().objective(Objective::Area).samples(10)).unwrap();
+        assert_eq!(q2.extract.memo_misses, 0, "warm query must not rebuild extractors");
+        assert_eq!(q2.extract.memo_hits, 12); // 10 samples + 2 greedy endpoints
+        assert_eq!(s.enumeration_count(), 1);
+    }
+
+    #[test]
+    fn run_queries_shares_one_sample_set() {
+        let mut s = small_session(workloads::relu128());
+        let batch = [
+            Query::new().objective(Objective::Latency).samples(10),
+            Query::new().objective(Objective::Area).samples(10),
+            Query::new().objective(Objective::Balanced(0.5)).samples(10),
+        ];
+        let evs = s.run_queries(&batch).unwrap();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(s.enumeration_count(), 1);
+        // One extraction pass: every evaluation reports the same pass and
+        // the same design identity set.
+        let keys = |ev: &Evaluation| {
+            ev.designs.iter().map(|d| d.point.expr.to_string()).collect::<Vec<_>>()
+        };
+        for ev in &evs[1..] {
+            assert_eq!(keys(ev), keys(&evs[0]));
+            assert_eq!(ev.extract.memo_misses, evs[0].extract.memo_misses);
+        }
+        // A follow-up single query on the same sample set is fully warm.
+        let after = s.query(&Query::new().samples(10)).unwrap();
+        assert_eq!(after.extract.memo_misses, 0);
+    }
+
+    #[test]
+    fn extraction_is_deterministic_across_extract_widths() {
+        let render = |extract_workers: usize| {
+            let mut s = Session::builder()
+                .workload(workloads::relu128())
+                .rules(RuleSet::Paper)
+                .iters(4)
+                .extract_workers(extract_workers)
+                .limits(RunnerLimits { max_nodes: 30_000, ..Default::default() })
+                .build()
+                .unwrap();
+            let ev = s.query(&Query::new().samples(16)).unwrap();
+            ev.designs.iter().map(|d| d.point.expr.to_string()).collect::<Vec<_>>()
+        };
+        let one = render(1);
+        assert!(one.len() >= 3);
+        assert_eq!(render(2), one);
+        assert_eq!(render(4), one);
+    }
+
+    #[test]
+    fn streamed_frontier_matches_reference_filter() {
+        let mut s = small_session(workloads::ffn_block());
+        let ev = s.query(&Query::new().samples(16)).unwrap();
+        let reference = crate::extract::pareto_frontier(
+            &ev.designs.iter().map(|d| d.point.clone()).collect::<Vec<_>>(),
+        );
+        let key = |ps: &[DesignPoint]| {
+            ps.iter().map(|p| (p.cost.area, p.cost.latency, p.origin.clone())).collect::<Vec<_>>()
+        };
+        assert_eq!(key(&ev.frontier), key(&reference));
+        // The recorded trajectory ends at the final frontier size.
+        assert_eq!(ev.extract.frontier_size(), ev.frontier.len());
+        assert_eq!(ev.extract.frontier_sizes.len(), ev.designs.len());
     }
 
     #[test]

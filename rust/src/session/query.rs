@@ -6,7 +6,7 @@
 
 use super::backend::{Backend, BackendReport};
 use crate::cost::{Baseline, CostParams, DesignCost};
-use crate::extract::DesignPoint;
+use crate::extract::{DesignPoint, ExtractReport};
 use crate::sim::SimReport;
 use crate::tensor::Tensor;
 
@@ -126,8 +126,11 @@ impl EvaluatedDesign {
 }
 
 /// The answer to one [`Query`]: evaluated designs, the area/latency Pareto
-/// frontier among them, and the one-engine-per-kernel-type baseline under
-/// the query's cost parameters.
+/// frontier among them (streamed — see [`crate::extract::ParetoFrontier`]),
+/// the one-engine-per-kernel-type baseline under the query's cost
+/// parameters, and the extraction-side run stats (throughput, memo hit
+/// rate, frontier trajectory). In a [`super::Session::run_queries`] batch,
+/// `extract` describes the shared extraction pass the batch reused.
 #[derive(Debug)]
 pub struct Evaluation {
     pub workload: String,
@@ -136,6 +139,7 @@ pub struct Evaluation {
     pub designs: Vec<EvaluatedDesign>,
     pub frontier: Vec<DesignPoint>,
     pub baseline: Baseline,
+    pub extract: ExtractReport,
 }
 
 impl Evaluation {

@@ -1,0 +1,219 @@
+//! Integration tests for the parallel, memoized, streaming extraction
+//! layer — the ISSUE-3 acceptance properties as executable checks:
+//!
+//! * parallel `extract_designs` is **bit-identical** across
+//!   `extract_workers ∈ {1, 2, 4}` (property-tested over seeds/sample
+//!   counts on `relu128`, plain on LeNet);
+//! * the streaming Pareto frontier equals the collect-then-filter
+//!   reference, both on random cost clouds (property) and on real
+//!   LeNet / `relu128` query results;
+//! * a second `Query` against an unchanged session performs **zero**
+//!   extractor fixpoint rebuilds, observed via the memo hit-rate stat.
+
+use hwsplit::cost::{DesignCost, DesignStats};
+use hwsplit::egraph::{Runner, RunnerLimits};
+use hwsplit::extract::{
+    extract_designs, pareto_frontier, DesignPoint, ExtractCache, ExtractOptions, ParetoFrontier,
+};
+use hwsplit::ir::parse_expr;
+use hwsplit::prop;
+use hwsplit::relay::{workloads, Workload};
+use hwsplit::rewrites::RuleSet;
+use hwsplit::session::{Objective, Query, Session};
+
+/// Enumerate one workload with small budgets, once, for direct
+/// extract-layer tests.
+fn enumerated(w: &Workload, iters: usize) -> (hwsplit::egraph::EGraph, hwsplit::egraph::Id) {
+    let lowered = hwsplit::lower::lower_default(&w.expr).expect("workload lowers");
+    let mut runner = Runner::new(lowered, RuleSet::Paper.rules()).with_limits(RunnerLimits {
+        max_nodes: 30_000,
+        track_designs: false,
+        ..Default::default()
+    });
+    runner.run(iters);
+    (runner.egraph, runner.root)
+}
+
+fn rendered(
+    eg: &hwsplit::egraph::EGraph,
+    root: hwsplit::egraph::Id,
+    opts: &ExtractOptions,
+) -> Vec<(String, String)> {
+    let cache = ExtractCache::new();
+    extract_designs(eg, root, opts, &cache)
+        .designs
+        .into_iter()
+        .map(|(origin, e)| (origin, e.to_string()))
+        .collect()
+}
+
+/// Property: the extracted design set is bit-identical for any worker
+/// count, over random seeds and sample counts (relu128).
+#[test]
+fn prop_parallel_extraction_is_bit_identical_across_worker_counts() {
+    let (eg, root) = enumerated(&workloads::relu128(), 5);
+    prop::check("extract-worker-equivalence", 12, |rng| {
+        let samples = rng.range(1, 24);
+        let seed = rng.next_u64();
+        let base = rendered(&eg, root, &ExtractOptions { samples, seed, workers: 1 });
+        for workers in [2usize, 4] {
+            let got = rendered(&eg, root, &ExtractOptions { samples, seed, workers });
+            assert_eq!(got, base, "workers={workers} diverged (seed {seed:#x})");
+        }
+    });
+}
+
+/// The same equivalence on LeNet — a deep multi-engine e-graph.
+#[test]
+fn lenet_extraction_is_bit_identical_across_worker_counts() {
+    let (eg, root) = enumerated(&workloads::lenet(), 3);
+    let opts = |workers| ExtractOptions { samples: 12, seed: 7, workers };
+    let base = rendered(&eg, root, &opts(1));
+    assert!(base.len() >= 3, "LeNet must yield a diverse set");
+    assert_eq!(rendered(&eg, root, &opts(2)), base);
+    assert_eq!(rendered(&eg, root, &opts(4)), base);
+}
+
+/// Property: streaming insert-with-eviction equals the collect-then-filter
+/// reference on random cost clouds (ties and duplicates included).
+#[test]
+fn prop_streaming_frontier_equals_reference_filter() {
+    let expr = parse_expr("(invoke-relu (relu-engine 8) (input x [8]))").unwrap();
+    prop::check("streaming-frontier-equivalence", 60, |rng| {
+        let n = rng.range(1, 50);
+        let points: Vec<DesignPoint> = (0..n)
+            .map(|i| DesignPoint {
+                expr: expr.clone(),
+                cost: DesignCost {
+                    // Coarse grid so ties and duplicates actually occur.
+                    area: (rng.below(10) + 1) as f64,
+                    latency: (rng.below(10) + 1) as f64,
+                    ..Default::default()
+                },
+                stats: DesignStats::default(),
+                origin: format!("p{i}"),
+            })
+            .collect();
+        let mut streaming = ParetoFrontier::new();
+        let mut sizes = Vec::new();
+        for p in &points {
+            streaming.insert(p.clone());
+            sizes.push(streaming.len());
+        }
+        // Sizes are recorded per round and never exceed the running count.
+        for (i, s) in sizes.iter().enumerate() {
+            assert!(*s >= 1 && *s <= i + 1);
+        }
+        let key = |ps: &[DesignPoint]| {
+            ps.iter()
+                .map(|p| (p.cost.area, p.cost.latency, p.origin.clone()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(key(&streaming.into_sorted()), key(&pareto_frontier(&points)));
+    });
+}
+
+/// The streamed frontier a real query reports equals the reference filter
+/// over its evaluated designs — on relu128 and LeNet.
+#[test]
+fn query_frontier_equals_reference_on_relu128_and_lenet() {
+    for (w, iters) in [(workloads::relu128(), 4), (workloads::lenet(), 3)] {
+        let mut s = Session::builder()
+            .workload(w)
+            .rules(RuleSet::Paper)
+            .iters(iters)
+            .limits(RunnerLimits { max_nodes: 30_000, ..Default::default() })
+            .build()
+            .unwrap();
+        let ev = s.query(&Query::new().samples(16)).unwrap();
+        let reference =
+            pareto_frontier(&ev.designs.iter().map(|d| d.point.clone()).collect::<Vec<_>>());
+        let key = |ps: &[DesignPoint]| {
+            ps.iter()
+                .map(|p| (p.cost.area, p.cost.latency, p.origin.clone()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(key(&ev.frontier), key(&reference), "{}", ev.workload);
+        assert_eq!(ev.extract.frontier_size(), ev.frontier.len());
+    }
+}
+
+/// THE memo acceptance property: the second query against an unchanged
+/// session rebuilds zero extractor fixpoints — every cost table is served
+/// from the session memo — and still answers identically.
+#[test]
+fn second_query_performs_zero_fixpoint_rebuilds() {
+    let mut s = Session::builder()
+        .workload(workloads::ffn_block())
+        .rules(RuleSet::Paper)
+        .iters(4)
+        .limits(RunnerLimits { max_nodes: 30_000, ..Default::default() })
+        .build()
+        .unwrap();
+    let q = |o: Objective| Query::new().objective(o).samples(12).seed(5);
+
+    let cold = s.query(&q(Objective::Latency)).unwrap();
+    assert_eq!(
+        cold.extract.memo_misses,
+        12 + 2,
+        "cold query solves one fixpoint per sample plus the greedy endpoints"
+    );
+    assert_eq!(cold.extract.memo_hits, 0);
+
+    let warm = s.query(&q(Objective::Area)).unwrap();
+    assert_eq!(warm.extract.memo_misses, 0, "unchanged session must not rebuild");
+    assert_eq!(warm.extract.memo_hits, 12 + 2);
+    assert!((warm.extract.memo_hit_rate() - 1.0).abs() < 1e-12);
+    assert_eq!(s.enumeration_count(), 1);
+
+    // Same design identities, re-ranked.
+    let keys = |ev: &hwsplit::session::Evaluation| {
+        ev.designs.iter().map(|d| d.point.expr.to_string()).collect::<Vec<_>>()
+    };
+    assert_eq!(keys(&cold), keys(&warm));
+}
+
+/// `run_queries` shares one extraction pass across a batch and leaves the
+/// memo warm for follow-up queries.
+#[test]
+fn batched_queries_share_extraction_and_warm_the_memo() {
+    let mut s = Session::builder()
+        .workload(workloads::relu128())
+        .rules(RuleSet::Paper)
+        .iters(4)
+        .limits(RunnerLimits { max_nodes: 30_000, ..Default::default() })
+        .build()
+        .unwrap();
+    let batch = [
+        Query::new().objective(Objective::Latency).samples(8),
+        Query::new().objective(Objective::Area).samples(8),
+    ];
+    let evs = s.run_queries(&batch).unwrap();
+    assert_eq!(evs.len(), 2);
+    assert_eq!(s.enumeration_count(), 1);
+    // The batch reports one shared pass...
+    assert_eq!(evs[0].extract.memo_misses, 8 + 2);
+    assert_eq!(evs[1].extract.memo_misses, 8 + 2, "shared pass is reported verbatim");
+    // ...and a later lone query finds everything memoized.
+    let after = s.query(&Query::new().samples(8)).unwrap();
+    assert_eq!(after.extract.memo_misses, 0);
+    // Batched answers equal the sequential ones.
+    let mut s2 = Session::builder()
+        .workload(workloads::relu128())
+        .rules(RuleSet::Paper)
+        .iters(4)
+        .limits(RunnerLimits { max_nodes: 30_000, ..Default::default() })
+        .build()
+        .unwrap();
+    for (q, batched) in batch.iter().zip(&evs) {
+        let solo = s2.query(q).unwrap();
+        let keys = |ev: &hwsplit::session::Evaluation| {
+            ev.designs.iter().map(|d| d.point.expr.to_string()).collect::<Vec<_>>()
+        };
+        assert_eq!(keys(&solo), keys(batched));
+        assert_eq!(
+            solo.best().unwrap().point.expr.to_string(),
+            batched.best().unwrap().point.expr.to_string()
+        );
+    }
+}
