@@ -15,7 +15,7 @@ Artifact naming (must match `rust/src/runtime/mod.rs::artifact_name`):
     mmrelu_{m}x{k}x{n}.hlo.txt
     relu_{w}.hlo.txt
     add_{w}.hlo.txt
-    conv_{oh}x{ow}x{c}x{k}x{kh}x{s}.hlo.txt
+    conv_{oh}x{ow}x{c}x{k}x{kh}x{kw}x{s}.hlo.txt
     pool_{oh}x{ow}x{c}x{k}x{s}.hlo.txt
     model_mlp.hlo.txt                      (full Layer-2 forward)
 
@@ -77,12 +77,12 @@ def build_engine(spec: str):
         (w,) = params
         return f"add_{w}", add_engine(w), (f32(w), f32(w))
     if kind == "conv":
-        oh, ow, c, k, kh, s = params
-        ih, iw = (oh - 1) * s + kh, (ow - 1) * s + kh
+        oh, ow, c, k, kh, kw, s = params
+        ih, iw = (oh - 1) * s + kh, (ow - 1) * s + kw
         return (
-            f"conv_{oh}x{ow}x{c}x{k}x{kh}x{s}",
-            conv_engine(oh, ow, c, k, kh, s),
-            (f32(c, ih, iw), f32(k, c, kh, kh)),
+            f"conv_{oh}x{ow}x{c}x{k}x{kh}x{kw}x{s}",
+            conv_engine(oh, ow, c, k, kh, kw, s),
+            (f32(c, ih, iw), f32(k, c, kh, kw)),
         )
     if kind == "pool":
         oh, ow, c, k, s = params
@@ -113,11 +113,11 @@ DEFAULT_SPECS = [
     "add 32",
     "mmrelu 1 128 64",
     # lenet initial design
-    "conv 28 28 1 8 5 1",
+    "conv 28 28 1 8 5 5 1",
     "add 6272",
     "relu 6272",
     "pool 14 14 8 2 2",
-    "conv 10 10 8 16 5 1",
+    "conv 10 10 8 16 5 5 1",
     "add 1600",
     "relu 1600",
     "pool 5 5 16 2 2",
@@ -129,7 +129,7 @@ DEFAULT_SPECS = [
     "relu 84",
     "mm 1 84 10",
     # lenet split variants (channel-split conv2, row-split pool1)
-    "conv 10 10 8 8 5 1",
+    "conv 10 10 8 8 5 5 1",
     "pool 7 14 8 2 2",
 ]
 

@@ -7,7 +7,7 @@ parameterized exactly like the Rust `Op` variants:
 - ``mm.mm_relu_engine(m, k, n)``      — `(mm-relu-engine m k n)`
 - ``elementwise.relu_engine(w)``      — `(relu-engine w)`
 - ``elementwise.add_engine(w)``       — `(add-engine w)`
-- ``conv.conv_engine(oh,ow,c,k,kh,s)``— `(conv-engine oh ow c k kh s)`
+- ``conv.conv_engine(oh,ow,c,k,kh,kw,s)``— `(conv-engine oh ow c k kh kw s)`
 - ``conv.pool_engine(oh,ow,c,k,s)``   — `(pool-engine oh ow c k s)`
 
 ``ref`` holds the pure-jnp oracles the kernels are tested against.

@@ -21,17 +21,19 @@ from .mm import mm_engine
 
 
 @functools.lru_cache(maxsize=None)
-def conv_engine(oh: int, ow: int, c: int, k: int, kh: int, stride: int):
-    """The `(conv-engine oh ow c k kh stride)` unit.
+def conv_engine(oh: int, ow: int, c: int, k: int, kh: int, kw: int, stride: int):
+    """The `(conv-engine oh ow c k kh kw stride)` unit.
 
-    Callable ``(x:(c,ih,iw), w:(k,c,kh,kh)) -> (k,oh,ow)`` with
+    Callable ``(x:(c,ih,iw), w:(k,c,kh,kw)) -> (k,oh,ow)`` with
     ``ih = (oh-1)*stride + kh`` (valid conv over a pre-padded tile).
+    Kernels are rectangular; ``kw`` is required so stale square-kernel
+    positional calls fail loudly instead of silently binding stride to kw.
     """
-    ckk = c * kh * kh
+    ckk = c * kh * kw
     mm = mm_engine(k, ckk, oh * ow)
 
     def run(x, w):
-        cols = ref.im2col(x, kh, stride)  # staging (data movement)
+        cols = ref.im2col(x, kh, kw, stride)  # staging (data movement)
         wmat = w.reshape(k, ckk)
         return mm(wmat, cols).reshape(k, oh, ow)
 

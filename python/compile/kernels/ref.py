@@ -36,20 +36,20 @@ def conv2d(x, w, stride=1):
     oh = (h - kh) // stride + 1
     ow = (wd - kw) // stride + 1
     # im2col formulation (the same identity rewrite R4 uses).
-    cols = im2col(x, kh, stride)  # (c*kh*kw, oh*ow)
+    cols = im2col(x, kh, kw, stride)  # (c*kh*kw, oh*ow)
     wmat = w.reshape(k, c * kh * kw)
     return mm(wmat, cols).reshape(k, oh, ow)
 
 
-def im2col(x, kh, stride=1):
-    """(C,H,W) -> (C*KH*KH, OH*OW) patch matrix (row-major patch order)."""
+def im2col(x, kh, kw, stride=1):
+    """(C,H,W) -> (C*KH*KW, OH*OW) patch matrix (row-major patch order)."""
     c, h, w = x.shape
     oh = (h - kh) // stride + 1
-    ow = (w - kh) // stride + 1
+    ow = (w - kw) // stride + 1
     rows = []
     for ci in range(c):
         for dy in range(kh):
-            for dx in range(kh):
+            for dx in range(kw):
                 patch = x[ci, dy : dy + oh * stride : stride, dx : dx + ow * stride : stride]
                 rows.append(patch.reshape(-1))
     return jnp.stack(rows)

@@ -82,12 +82,12 @@ def mlp_forward(params, x):
 
 def _conv_layer(x, w, b, pad, stride):
     c, h, wd = x.shape
-    k, _, kh, _ = w.shape
+    k, _, kh, kw = w.shape
     if pad:
         x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
     oh = (x.shape[1] - kh) // stride + 1
-    ow = (x.shape[2] - kh) // stride + 1
-    y = conv_engine(oh, ow, c, k, kh, stride)(x, w)
+    ow = (x.shape[2] - kw) // stride + 1
+    y = conv_engine(oh, ow, c, k, kh, kw, stride)(x, w)
     flat = y.reshape(-1)
     bb = jnp.broadcast_to(b[:, None, None], y.shape).reshape(-1)
     flat = add_engine(flat.shape[0])(flat, bb)

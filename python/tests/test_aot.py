@@ -15,7 +15,7 @@ def test_build_engine_all_kinds():
         ("mmrelu 1 128 64", "mmrelu_1x128x64"),
         ("relu 128", "relu_128"),
         ("add 64", "add_64"),
-        ("conv 28 28 1 8 5 1", "conv_28x28x1x8x5x1"),
+        ("conv 28 28 1 8 5 5 1", "conv_28x28x1x8x5x5x1"),
         ("pool 14 14 8 2 2", "pool_14x14x8x2x2"),
     ]:
         name, fn, args = aot.build_engine(spec)
@@ -57,7 +57,7 @@ def test_default_specs_cover_mlp_and_lenet_initial_designs():
         "mm_1x784x128",
         "relu_128",
         "add_10",
-        "conv_28x28x1x8x5x1",
+        "conv_28x28x1x8x5x5x1",
         "pool_5x5x16x2x2",
         "mm_1x84x10",
     ]:

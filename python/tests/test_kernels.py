@@ -119,7 +119,7 @@ def test_conv_engine_matches_ref(c, k, kh, oh, stride):
     ih = (oh - 1) * stride + kh
     x = rand(c * 31 + kh, c, ih, ih)
     w = rand(k * 17 + kh, k, c, kh, kh)
-    got = conv_engine(oh, ow, c, k, kh, stride)(x, w)
+    got = conv_engine(oh, ow, c, k, kh, kh, stride)(x, w)
     want = ref.conv2d(x, w, stride)
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
 
@@ -145,7 +145,7 @@ def test_im2col_matches_conv_identity():
     x = rand(3, 3, 8, 8)
     w = rand(4, 4, 3, 3, 3)
     direct = ref.conv2d(x, w, 1)
-    via = ref.mm(w.reshape(4, 27), ref.im2col(x, 3, 1)).reshape(4, 6, 6)
+    via = ref.mm(w.reshape(4, 27), ref.im2col(x, 3, 3, 1)).reshape(4, 6, 6)
     np.testing.assert_allclose(direct, via, rtol=1e-5, atol=1e-5)
 
 

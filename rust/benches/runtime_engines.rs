@@ -35,7 +35,7 @@ fn main() {
         Op::MmEngine { m: 1, k: 784, n: 128 },
         Op::MmEngine { m: 1, k: 128, n: 64 },
         Op::MmReluEngine { m: 1, k: 128, n: 64 },
-        Op::ConvEngine { oh: 28, ow: 28, c: 1, k: 8, kh: 5, stride: 1 },
+        Op::ConvEngine { oh: 28, ow: 28, c: 1, k: 8, kh: 5, kw: 5, stride: 1 },
         Op::PoolEngine { oh: 14, ow: 14, c: 8, k: 2, stride: 2 },
     ];
     let mut t = Table::new(
@@ -134,12 +134,12 @@ fn example_args(e: &Op) -> Vec<Tensor> {
             Tensor::random(Shape::new(&[w]), 4),
             Tensor::random(Shape::new(&[w]), 5),
         ],
-        Op::ConvEngine { oh, ow, c, k, kh, stride } => {
+        Op::ConvEngine { oh, ow, c, k, kh, kw, stride } => {
             let ih = (oh - 1) * stride + kh;
-            let iw = (ow - 1) * stride + kh;
+            let iw = (ow - 1) * stride + kw;
             vec![
                 Tensor::random(Shape::new(&[c, ih, iw]), 6),
-                Tensor::random(Shape::new(&[k, c, kh, kh]), 7),
+                Tensor::random(Shape::new(&[k, c, kh, kw]), 7),
             ]
         }
         Op::PoolEngine { oh, ow, c, k, stride } => {

@@ -31,60 +31,20 @@ fn kind_key(op: &Op) -> OpKind {
 }
 
 /// Merge two engines of the same kind into the elementwise-max-parameter
-/// engine (the baseline's "sized for the largest call").
+/// engine (the baseline's "sized for the largest call") — the merge rule
+/// lives in the engine's registry spec.
 fn max_engine(a: &Op, b: &Op) -> Op {
-    use Op::*;
-    match (a, b) {
-        (MmEngine { m, k, n }, MmEngine { m: m2, k: k2, n: n2 }) => {
-            MmEngine { m: (*m).max(*m2), k: (*k).max(*k2), n: (*n).max(*n2) }
-        }
-        (MmReluEngine { m, k, n }, MmReluEngine { m: m2, k: k2, n: n2 }) => {
-            MmReluEngine { m: (*m).max(*m2), k: (*k).max(*k2), n: (*n).max(*n2) }
-        }
-        (ReluEngine { w }, ReluEngine { w: w2 }) => ReluEngine { w: (*w).max(*w2) },
-        (AddEngine { w }, AddEngine { w: w2 }) => AddEngine { w: (*w).max(*w2) },
-        (
-            ConvEngine { oh, ow, c, k, kh, stride },
-            ConvEngine { oh: a1, ow: a2, c: a3, k: a4, kh: a5, stride: _ },
-        ) => ConvEngine {
-            oh: (*oh).max(*a1),
-            ow: (*ow).max(*a2),
-            c: (*c).max(*a3),
-            k: (*k).max(*a4),
-            kh: (*kh).max(*a5),
-            stride: *stride,
-        },
-        (
-            PoolEngine { oh, ow, c, k, stride },
-            PoolEngine { oh: b1, ow: b2, c: b3, k: b4, stride: _ },
-        ) => PoolEngine {
-            oh: (*oh).max(*b1),
-            ow: (*ow).max(*b2),
-            c: (*c).max(*b3),
-            k: (*k).max(*b4),
-            stride: *stride,
-        },
+    match a.spec().engine {
+        Some(e) if a.kind() == b.kind() => (e.merge_max)(a, b),
         _ => a.clone(),
     }
 }
 
 /// Engine I/O element count for one (maximal) invocation.
 fn engine_io(op: &Op) -> f64 {
-    match *op {
-        Op::MmEngine { m, k, n } | Op::MmReluEngine { m, k, n } => (m * k + k * n + m * n) as f64,
-        Op::ReluEngine { w } => 2.0 * w as f64,
-        Op::AddEngine { w } => 3.0 * w as f64,
-        Op::ConvEngine { oh, ow, c, k, kh, stride } => {
-            let ih = (oh - 1) * stride + kh;
-            let iw = (ow - 1) * stride + kh;
-            (c * ih * iw + k * c * kh * kh + k * oh * ow) as f64
-        }
-        Op::PoolEngine { oh, ow, c, k, stride } => {
-            let ih = (oh - 1) * stride + k;
-            let iw = (ow - 1) * stride + k;
-            (c * ih * iw + c * oh * ow) as f64
-        }
-        _ => 0.0,
+    match op.spec().engine {
+        Some(e) => (e.io)(op),
+        None => 0.0,
     }
 }
 

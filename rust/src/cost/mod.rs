@@ -33,7 +33,8 @@ pub mod baseline;
 pub use baseline::{baseline, Baseline, BaselineEngine};
 
 use crate::fx::FxHashMap;
-use crate::ir::{BufKind, Op, RecExpr, Shape, Ty};
+use crate::ir::spec::AreaClass;
+use crate::ir::{BufKind, Op, OpClass, RecExpr, Shape, Ty};
 
 /// Technology / substrate constants. `PartialEq` so query batching can
 /// recognize "same params" and share evaluated design sets.
@@ -84,15 +85,18 @@ impl Default for CostParams {
     }
 }
 
-/// Unit area of one instance of an engine declaration.
+/// Unit area of one instance of an engine declaration (registry-driven:
+/// the engine's MAC count priced at its spec's area class).
 pub fn engine_area(op: &Op, p: &CostParams) -> f64 {
-    let macs = op.engine_macs() as f64;
-    match op {
-        Op::MmEngine { .. } | Op::MmReluEngine { .. } | Op::ConvEngine { .. } => macs * p.mac_area,
-        Op::ReluEngine { .. } | Op::AddEngine { .. } | Op::PoolEngine { .. } => {
-            macs * p.lane_area
+    match op.spec().engine {
+        Some(e) => {
+            let unit = match e.area {
+                AreaClass::Mac => p.mac_area,
+                AreaClass::Lane => p.lane_area,
+            };
+            (e.macs)(op) as f64 * unit
         }
-        _ => 0.0,
+        None => 0.0,
     }
 }
 
@@ -221,15 +225,23 @@ impl<'a> Analyzer<'a> {
     }
 
     /// Price one node (see [`Self::walk`] for the hoisting wrapper).
+    /// Dispatch is by registry *class*: the open categories (invokes, data
+    /// movement, unreified Relay ops) price themselves from their spec, so
+    /// new ops need no arm here.
     fn walk_node(&mut self, id: crate::egraph::Id, par_mult: f64, depth: usize) -> f64 {
         let node = self.expr.node(id).clone();
         let c = &node.children;
+        let spec = node.op.spec();
         match &node.op {
-            Op::Int(_) | Op::LVar(_) | Op::IMul | Op::IAdd => 0.0,
-            Op::Input(..) | Op::Weight(..) => 0.0,
-
-            // Engine declarations: area accounted at invocation sites.
-            op if op.is_engine() => 0.0,
+            // Scalars, leaves and engine declarations are free here (engine
+            // area is accounted at invocation sites).
+            op if matches!(
+                op.class(),
+                OpClass::Index | OpClass::Leaf | OpClass::Engine
+            ) =>
+            {
+                0.0
+            }
 
             op if op.is_invoke() => {
                 let engine = self.expr.node(c[0]).op.clone();
@@ -271,14 +283,21 @@ impl<'a> Analyzer<'a> {
                 *extent as f64 * (body + self.p.loop_overhead) + (*extent as f64 - 1.0) * acc
             }
 
-            Op::SliceAx { .. } => self.walk(c[1], par_mult, depth), // addressing is free
-            Op::Reshape(_) => self.walk(c[0], par_mult, depth),     // view
-            Op::Bcast(_) => self.walk(c[0], par_mult, depth),       // wiring
-            Op::Pad2d { .. } | Op::Im2Col { .. } => {
-                let lat = self.walk(c[0], par_mult, depth);
-                let out = self.shape(id).numel() as f64;
-                self.energy += out * self.p.e_sram;
-                lat + out / self.p.sram_bw
+            // Data movement: free addressing (slice/reshape/bcast) or a
+            // materializing layout transform (pad2d/im2col/transpose),
+            // per the spec's `data_traffic` flag. Index children price 0.
+            op if matches!(op.class(), OpClass::Data) => {
+                let mut lat = 0.0;
+                for &arg in c {
+                    lat += self.walk(arg, par_mult, depth);
+                }
+                if spec.data_traffic {
+                    let out = self.shape(id).numel() as f64;
+                    self.energy += out * self.p.e_sram;
+                    lat + out / self.p.sram_bw
+                } else {
+                    lat
+                }
             }
 
             Op::Buffer { kind } | Op::DblBuffer { kind } => {
@@ -302,27 +321,20 @@ impl<'a> Analyzer<'a> {
                 }
             }
 
-            // Un-reified Relay compute: host fallback.
+            // Un-reified Relay compute: host fallback, work model from the
+            // op's spec (`host_work`, default output-element count).
             op => {
+                debug_assert!(matches!(op.class(), OpClass::Relay), "unpriced op {op}");
                 self.stats.unreified += 1;
                 let mut lat = 0.0;
                 for &arg in c {
                     lat += self.walk(arg, par_mult, depth);
                 }
-                let out = self.shape(id).numel() as f64;
-                let work = match op {
-                    Op::Conv2d { .. } | Op::Dense => {
-                        // MACs: out * reduction length
-                        let red = match op {
-                            Op::Dense => self.shape(c[0]).dim(1) as f64,
-                            _ => {
-                                let w = self.shape(c[1]);
-                                (w.dim(1) * w.dim(2) * w.dim(3)) as f64
-                            }
-                        };
-                        out * red
-                    }
-                    _ => out,
+                let out = self.shape(id).clone();
+                let child_shapes: Vec<&Shape> = c.iter().map(|&a| self.shape(a)).collect();
+                let work = match spec.host_work {
+                    Some(f) => f(op, &out, &child_shapes),
+                    None => out.numel() as f64,
                 };
                 lat + work * self.p.host_penalty
             }

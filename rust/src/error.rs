@@ -61,7 +61,11 @@ impl fmt::Display for Error {
                 write!(f, "unknown scheduler '{n}' (expected simple | backoff)")
             }
             Error::UnknownWorkload(n) => {
-                write!(f, "unknown workload '{n}' (try `hwsplit workloads`)")
+                write!(
+                    f,
+                    "unknown workload '{n}' (available: {})",
+                    crate::relay::workload_names().join(" | ")
+                )
             }
             Error::UnknownBackend(n) => write!(
                 f,
@@ -115,6 +119,15 @@ mod tests {
         assert!(e.to_string().contains("fig2"));
         let e = Error::Backend { backend: "pjrt", detail: "no artifacts".into() };
         assert!(e.to_string().contains("pjrt"));
+    }
+
+    #[test]
+    fn unknown_workload_lists_every_available_name() {
+        let msg = Error::UnknownWorkload("lemon".into()).to_string();
+        assert!(msg.contains("lemon"));
+        for name in crate::relay::workload_names() {
+            assert!(msg.contains(name), "missing '{name}' in: {msg}");
+        }
     }
 
     #[test]

@@ -304,7 +304,10 @@ pub fn latency_cost(eg: &EGraph, node: &Node, child: &dyn Fn(Id) -> f64) -> f64 
         Op::SchedPar { extent, .. } => kids + (*extent as f64).log2().ceil() * p.loop_overhead,
         Op::SchedReduce { extent, .. } => *extent as f64 * (kids + p.loop_overhead),
         Op::Buffer { .. } | Op::DblBuffer { .. } => kids + 1.0,
-        Op::Pad2d { .. } | Op::Im2Col { .. } => kids + 4.0,
+        // Materializing layout transforms (pad2d/im2col/transpose/…).
+        op if matches!(op.class(), crate::ir::OpClass::Data) && op.spec().data_traffic => {
+            kids + 4.0
+        }
         op if op.is_relay() => kids + 1e7, // host fallback: avoid at all costs
         _ => kids,
     }

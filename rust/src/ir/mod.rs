@@ -23,9 +23,11 @@ pub mod parse;
 pub mod print;
 pub mod recexpr;
 pub mod shape;
+pub mod spec;
 pub mod symbol;
 
 pub use op::{BufKind, Op, OpKind};
+pub use spec::{OpClass, OpSpec};
 pub use parse::parse_expr;
 pub use recexpr::{Node, RecExpr};
 pub use shape::{infer as infer_ty, infer_ref as infer_ty_ref, in_dim, out_dim, EngineSig, Shape, Ty, TypeError};

@@ -13,6 +13,11 @@
 //! * Schedules bind **named** loop variables ([`Op::SchedLoop`] etc. carry a
 //!   [`Symbol`]); rewrites always bind fresh names, so there is no capture
 //!   and no de Bruijn shifting inside the e-graph.
+//! * Everything *about* an op other than its identity — arity, attribute
+//!   schema, shape rule, reference kernel, lowering template, cost model —
+//!   lives in the op's [`crate::ir::spec::OpSpec`] registry entry. Adding an
+//!   operator means adding the variant here (plus its [`Op::kind`] arm) and
+//!   one registry entry; no other match site in the crate grows an arm.
 
 use super::shape::Shape;
 use super::symbol::Symbol;
@@ -63,7 +68,8 @@ pub enum Op {
     // ------------------------------------------------------------------
     // Relay-level operators (pre-reification; N=1 inference, CHW layout)
     // ------------------------------------------------------------------
-    /// 2-D convolution; children `[x:(C,H,W), w:(K,C,KH,KW)]`.
+    /// 2-D convolution; children `[x:(C,H,W), w:(K,C,KH,KW)]` (KH and KW
+    /// may differ — kernels are rectangular).
     Conv2d { stride: usize, pad: usize },
     /// Dense / fully-connected; children `[x:(M,K), w:(K,N)]`.
     Dense,
@@ -80,6 +86,21 @@ pub enum Op {
     Flatten,
     /// Global average pool `(C,H,W) -> (C)`; children `[x]`.
     GlobalAvgPool,
+    /// General matrix multiply of two *computed* tensors (unlike [`Op::Dense`]
+    /// both operands are usually activations); children `[a:(M,K), b:(K,N)]`.
+    Matmul,
+    /// Batched matmul; children `[a:(B,M,K), b:(B,K,N)] -> (B,M,N)`.
+    BatchMatmul,
+    /// Row-wise softmax over the last axis; children `[x]` (rank 1 or 2).
+    Softmax,
+    /// Layer normalization over the last axis (non-affine, ε=1e-5);
+    /// children `[x]` (rank 1 or 2).
+    LayerNorm,
+    /// Elementwise GELU (tanh approximation); children `[x]` (any shape).
+    Gelu,
+    /// Depthwise 2-D convolution (channel multiplier 1); children
+    /// `[x:(C,H,W), w:(C,KH,KW)]`.
+    DepthwiseConv2d { stride: usize, pad: usize },
 
     // ------------------------------------------------------------------
     // Hardware engine declarations (leaves; paper Fig. 1)
@@ -92,12 +113,22 @@ pub enum Op {
     ReluEngine { w: usize },
     /// `w`-wide vector adder.
     AddEngine { w: usize },
-    /// Direct convolution engine producing an `(k, oh, ow)` output tile from
-    /// a `(c, ih, iw)` input tile with a square `kh` kernel (paper Fig. 1's
-    /// `conv_engine<H, W, C, K>`).
-    ConvEngine { oh: usize, ow: usize, c: usize, k: usize, kh: usize, stride: usize },
+    /// Direct convolution engine producing a `(k, oh, ow)` output tile from
+    /// a `(c, ih, iw)` input tile with a rectangular `kh`×`kw` kernel
+    /// (paper Fig. 1's `conv_engine<H, W, C, K>`, generalized).
+    ConvEngine { oh: usize, ow: usize, c: usize, k: usize, kh: usize, kw: usize, stride: usize },
     /// Max-pool engine producing `(c, oh, ow)` from `(c, ih, iw)`.
     PoolEngine { oh: usize, ow: usize, c: usize, k: usize, stride: usize },
+    /// `w`-wide row softmax unit (normalization is coupled across the row,
+    /// so this engine does not split along `w`).
+    SoftmaxEngine { w: usize },
+    /// `w`-wide row layer-normalization unit (same coupling as softmax).
+    LayerNormEngine { w: usize },
+    /// `w`-wide vector GELU unit.
+    GeluEngine { w: usize },
+    /// Depthwise convolution engine producing `(c, oh, ow)` from a
+    /// `(c, ih, iw)` tile with a per-channel `kh`×`kw` kernel.
+    DwConvEngine { oh: usize, ow: usize, c: usize, kh: usize, kw: usize, stride: usize },
 
     // ------------------------------------------------------------------
     // Engine invocations: children `[engine, tensor args...]`
@@ -110,10 +141,18 @@ pub enum Op {
     InvokeRelu,
     /// `[e:AddEngine, x:(w,), y:(w,)] -> (w,)`.
     InvokeAdd,
-    /// `[e:ConvEngine, x:(c,ih,iw), w:(k,c,kh,kh)] -> (k,oh,ow)`.
+    /// `[e:ConvEngine, x:(c,ih,iw), w:(k,c,kh,kw)] -> (k,oh,ow)`.
     InvokeConv,
     /// `[e:PoolEngine, x:(c,ih,iw)] -> (c,oh,ow)`.
     InvokePool,
+    /// `[e:SoftmaxEngine, x:(w,)] -> (w,)`.
+    InvokeSoftmax,
+    /// `[e:LayerNormEngine, x:(w,)] -> (w,)`.
+    InvokeLayerNorm,
+    /// `[e:GeluEngine, x:(w,)] -> (w,)`.
+    InvokeGelu,
+    /// `[e:DwConvEngine, x:(c,ih,iw), w:(c,kh,kw)] -> (c,oh,ow)`.
+    InvokeDwConv,
 
     // ------------------------------------------------------------------
     // Software schedules: children `[body]`
@@ -141,8 +180,10 @@ pub enum Op {
     Bcast(Shape),
     /// Zero-pad H and W of a `(C,H,W)` tensor; children `[x]`.
     Pad2d { pad: usize },
-    /// im2col: `(c,ih,iw) -> (c*kh*kh, oh*ow)` patch matrix; children `[x]`.
-    Im2Col { kh: usize, stride: usize },
+    /// im2col: `(c,ih,iw) -> (c*kh*kw, oh*ow)` patch matrix; children `[x]`.
+    Im2Col { kh: usize, kw: usize, stride: usize },
+    /// Matrix transpose `(m,n) -> (n,m)`; children `[x]`.
+    Transpose,
     /// Materialize the child into an explicit storage buffer.
     Buffer { kind: BufKind },
     /// Double-buffered materialization (pipelining rewrite R6).
@@ -150,7 +191,13 @@ pub enum Op {
 }
 
 /// Coarse operator classification used by pattern matching ([`OpKind`]
-/// matchers bind any op of a kind) and by cost/statistics code.
+/// matchers bind any op of a kind), by the [`crate::ir::spec`] registry
+/// (one [`crate::ir::spec::OpSpec`] per kind, indexed by discriminant), and
+/// by cost/statistics code.
+///
+/// Declaration order is the registry index: [`OpKind::ALL`] and the spec
+/// table in `ir::spec` list kinds in exactly this order (checked at
+/// registry construction).
 #[derive(Copy, Clone, PartialEq, Eq, Hash, Debug)]
 pub enum OpKind {
     Int,
@@ -189,6 +236,85 @@ pub enum OpKind {
     Im2Col,
     Buffer,
     DblBuffer,
+    Matmul,
+    BatchMatmul,
+    Transpose,
+    Softmax,
+    LayerNorm,
+    Gelu,
+    DepthwiseConv2d,
+    SoftmaxEngine,
+    LayerNormEngine,
+    GeluEngine,
+    DwConvEngine,
+    InvokeSoftmax,
+    InvokeLayerNorm,
+    InvokeGelu,
+    InvokeDwConv,
+}
+
+impl OpKind {
+    /// Every kind, in declaration (= registry) order. Kept in sync with the
+    /// enum by the registry constructor, which asserts
+    /// `ALL[i] as usize == i` for every entry.
+    pub const ALL: &'static [OpKind] = &[
+        OpKind::Int,
+        OpKind::LVar,
+        OpKind::IMul,
+        OpKind::IAdd,
+        OpKind::Input,
+        OpKind::Weight,
+        OpKind::Conv2d,
+        OpKind::Dense,
+        OpKind::Relu,
+        OpKind::BiasAdd,
+        OpKind::EAdd,
+        OpKind::MaxPool2d,
+        OpKind::Flatten,
+        OpKind::GlobalAvgPool,
+        OpKind::MmEngine,
+        OpKind::MmReluEngine,
+        OpKind::ReluEngine,
+        OpKind::AddEngine,
+        OpKind::ConvEngine,
+        OpKind::PoolEngine,
+        OpKind::InvokeMm,
+        OpKind::InvokeMmRelu,
+        OpKind::InvokeRelu,
+        OpKind::InvokeAdd,
+        OpKind::InvokeConv,
+        OpKind::InvokePool,
+        OpKind::SchedLoop,
+        OpKind::SchedPar,
+        OpKind::SchedReduce,
+        OpKind::SliceAx,
+        OpKind::Reshape,
+        OpKind::Bcast,
+        OpKind::Pad2d,
+        OpKind::Im2Col,
+        OpKind::Buffer,
+        OpKind::DblBuffer,
+        OpKind::Matmul,
+        OpKind::BatchMatmul,
+        OpKind::Transpose,
+        OpKind::Softmax,
+        OpKind::LayerNorm,
+        OpKind::Gelu,
+        OpKind::DepthwiseConv2d,
+        OpKind::SoftmaxEngine,
+        OpKind::LayerNormEngine,
+        OpKind::GeluEngine,
+        OpKind::DwConvEngine,
+        OpKind::InvokeSoftmax,
+        OpKind::InvokeLayerNorm,
+        OpKind::InvokeGelu,
+        OpKind::InvokeDwConv,
+    ];
+
+    /// This kind's registry entry.
+    pub fn spec(self) -> &'static super::spec::OpSpec {
+        super::spec::of(self)
+    }
 }
 
 impl Op {
@@ -209,18 +335,32 @@ impl Op {
             Op::MaxPool2d { .. } => OpKind::MaxPool2d,
             Op::Flatten => OpKind::Flatten,
             Op::GlobalAvgPool => OpKind::GlobalAvgPool,
+            Op::Matmul => OpKind::Matmul,
+            Op::BatchMatmul => OpKind::BatchMatmul,
+            Op::Softmax => OpKind::Softmax,
+            Op::LayerNorm => OpKind::LayerNorm,
+            Op::Gelu => OpKind::Gelu,
+            Op::DepthwiseConv2d { .. } => OpKind::DepthwiseConv2d,
             Op::MmEngine { .. } => OpKind::MmEngine,
             Op::MmReluEngine { .. } => OpKind::MmReluEngine,
             Op::ReluEngine { .. } => OpKind::ReluEngine,
             Op::AddEngine { .. } => OpKind::AddEngine,
             Op::ConvEngine { .. } => OpKind::ConvEngine,
             Op::PoolEngine { .. } => OpKind::PoolEngine,
+            Op::SoftmaxEngine { .. } => OpKind::SoftmaxEngine,
+            Op::LayerNormEngine { .. } => OpKind::LayerNormEngine,
+            Op::GeluEngine { .. } => OpKind::GeluEngine,
+            Op::DwConvEngine { .. } => OpKind::DwConvEngine,
             Op::InvokeMm => OpKind::InvokeMm,
             Op::InvokeMmRelu => OpKind::InvokeMmRelu,
             Op::InvokeRelu => OpKind::InvokeRelu,
             Op::InvokeAdd => OpKind::InvokeAdd,
             Op::InvokeConv => OpKind::InvokeConv,
             Op::InvokePool => OpKind::InvokePool,
+            Op::InvokeSoftmax => OpKind::InvokeSoftmax,
+            Op::InvokeLayerNorm => OpKind::InvokeLayerNorm,
+            Op::InvokeGelu => OpKind::InvokeGelu,
+            Op::InvokeDwConv => OpKind::InvokeDwConv,
             Op::SchedLoop { .. } => OpKind::SchedLoop,
             Op::SchedPar { .. } => OpKind::SchedPar,
             Op::SchedReduce { .. } => OpKind::SchedReduce,
@@ -229,161 +369,85 @@ impl Op {
             Op::Bcast(_) => OpKind::Bcast,
             Op::Pad2d { .. } => OpKind::Pad2d,
             Op::Im2Col { .. } => OpKind::Im2Col,
+            Op::Transpose => OpKind::Transpose,
             Op::Buffer { .. } => OpKind::Buffer,
             Op::DblBuffer { .. } => OpKind::DblBuffer,
         }
     }
 
+    /// This op's registry entry.
+    pub fn spec(&self) -> &'static super::spec::OpSpec {
+        super::spec::of(self.kind())
+    }
+
+    /// This op's registry class.
+    pub fn class(&self) -> super::spec::OpClass {
+        self.spec().class
+    }
+
     /// Number of children this op expects, if fixed (all EngineIR ops have
     /// fixed arity; this is `None` only for future variadic ops).
     pub fn arity(&self) -> Option<usize> {
-        Some(match self.kind() {
-            OpKind::Int
-            | OpKind::LVar
-            | OpKind::Input
-            | OpKind::Weight
-            | OpKind::MmEngine
-            | OpKind::MmReluEngine
-            | OpKind::ReluEngine
-            | OpKind::AddEngine
-            | OpKind::ConvEngine
-            | OpKind::PoolEngine => 0,
-            OpKind::Relu
-            | OpKind::Flatten
-            | OpKind::GlobalAvgPool
-            | OpKind::MaxPool2d
-            | OpKind::Reshape
-            | OpKind::Bcast
-            | OpKind::Pad2d
-            | OpKind::Im2Col
-            | OpKind::Buffer
-            | OpKind::DblBuffer
-            | OpKind::SchedLoop
-            | OpKind::SchedPar
-            | OpKind::SchedReduce => 1,
-            OpKind::IMul
-            | OpKind::IAdd
-            | OpKind::Conv2d
-            | OpKind::Dense
-            | OpKind::BiasAdd
-            | OpKind::EAdd
-            | OpKind::InvokeRelu
-            | OpKind::InvokePool
-            | OpKind::SliceAx => 2,
-            OpKind::InvokeMm
-            | OpKind::InvokeMmRelu
-            | OpKind::InvokeAdd
-            | OpKind::InvokeConv => 3,
-        })
+        Some(self.spec().arity)
     }
 
     /// True for hardware engine declarations.
     pub fn is_engine(&self) -> bool {
-        matches!(
-            self.kind(),
-            OpKind::MmEngine
-                | OpKind::MmReluEngine
-                | OpKind::ReluEngine
-                | OpKind::AddEngine
-                | OpKind::ConvEngine
-                | OpKind::PoolEngine
-        )
+        matches!(self.class(), super::spec::OpClass::Engine)
     }
 
     /// True for engine invocations.
     pub fn is_invoke(&self) -> bool {
-        matches!(
-            self.kind(),
-            OpKind::InvokeMm
-                | OpKind::InvokeMmRelu
-                | OpKind::InvokeRelu
-                | OpKind::InvokeAdd
-                | OpKind::InvokeConv
-                | OpKind::InvokePool
-        )
+        matches!(self.class(), super::spec::OpClass::Invoke)
     }
 
     /// True for software schedule combinators.
     pub fn is_sched(&self) -> bool {
-        matches!(self.kind(), OpKind::SchedLoop | OpKind::SchedPar | OpKind::SchedReduce)
+        matches!(self.class(), super::spec::OpClass::Sched)
     }
 
     /// True for Relay-level (unreified) operators.
     pub fn is_relay(&self) -> bool {
-        matches!(
-            self.kind(),
-            OpKind::Conv2d
-                | OpKind::Dense
-                | OpKind::Relu
-                | OpKind::BiasAdd
-                | OpKind::EAdd
-                | OpKind::MaxPool2d
-                | OpKind::Flatten
-                | OpKind::GlobalAvgPool
-        )
+        matches!(self.class(), super::spec::OpClass::Relay)
     }
 
     /// Multiply–accumulate count of one invocation of an engine declaration
     /// (0 for non-engines). The basis of the area and latency models.
     pub fn engine_macs(&self) -> u64 {
-        match *self {
-            Op::MmEngine { m, k, n } | Op::MmReluEngine { m, k, n } => (m * k * n) as u64,
-            Op::ReluEngine { w } | Op::AddEngine { w } => w as u64,
-            Op::ConvEngine { oh, ow, c, k, kh, .. } => (oh * ow * c * k * kh * kh) as u64,
-            Op::PoolEngine { oh, ow, c, k, .. } => (oh * ow * c * k * k) as u64,
-            _ => 0,
+        match self.spec().engine {
+            Some(e) => (e.macs)(self),
+            None => 0,
         }
     }
 }
 
 impl fmt::Display for Op {
-    /// Head symbol used by the s-expression printer/parser.
+    /// Human-readable head form, derived from the registry: leaves print
+    /// their full s-expression (`(mm-engine 16 16 16)`), non-leaf ops print
+    /// `head[labeled,attrs]` (`conv2d[s1,p1]`, `sched-loop[i0,a0,x2]`).
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        match self {
-            Op::Int(v) => write!(f, "{v}"),
-            Op::LVar(s) => write!(f, "(lvar {s})"),
-            Op::IMul => write!(f, "imul"),
-            Op::IAdd => write!(f, "iadd"),
-            Op::Input(s, sh) => write!(f, "(input {s}{sh})"),
-            Op::Weight(s, sh) => write!(f, "(weight {s}{sh})"),
-            Op::Conv2d { stride, pad } => write!(f, "conv2d[s{stride},p{pad}]"),
-            Op::Dense => write!(f, "dense"),
-            Op::Relu => write!(f, "relu"),
-            Op::BiasAdd => write!(f, "bias-add"),
-            Op::EAdd => write!(f, "eadd"),
-            Op::MaxPool2d { k, stride } => write!(f, "maxpool2d[k{k},s{stride}]"),
-            Op::Flatten => write!(f, "flatten"),
-            Op::GlobalAvgPool => write!(f, "gap"),
-            Op::MmEngine { m, k, n } => write!(f, "(mm-engine {m} {k} {n})"),
-            Op::MmReluEngine { m, k, n } => write!(f, "(mm-relu-engine {m} {k} {n})"),
-            Op::ReluEngine { w } => write!(f, "(relu-engine {w})"),
-            Op::AddEngine { w } => write!(f, "(add-engine {w})"),
-            Op::ConvEngine { oh, ow, c, k, kh, stride } => {
-                write!(f, "(conv-engine {oh} {ow} {c} {k} {kh} {stride})")
+        if let Op::Int(v) = self {
+            return write!(f, "{v}");
+        }
+        let spec = self.spec();
+        let attrs = (spec.attrs_of)(self);
+        if spec.arity == 0 {
+            write!(f, "({}", spec.name)?;
+            for a in &attrs {
+                write!(f, " {}", a.sexpr())?;
             }
-            Op::PoolEngine { oh, ow, c, k, stride } => {
-                write!(f, "(pool-engine {oh} {ow} {c} {k} {stride})")
+            write!(f, ")")
+        } else if attrs.is_empty() {
+            write!(f, "{}", spec.name)
+        } else {
+            write!(f, "{}[", spec.name)?;
+            for (i, (a, (label, _))) in attrs.iter().zip(spec.attrs.iter()).enumerate() {
+                if i > 0 {
+                    write!(f, ",")?;
+                }
+                write!(f, "{label}{}", a.compact())?;
             }
-            Op::InvokeMm => write!(f, "invoke-mm"),
-            Op::InvokeMmRelu => write!(f, "invoke-mm-relu"),
-            Op::InvokeRelu => write!(f, "invoke-relu"),
-            Op::InvokeAdd => write!(f, "invoke-add"),
-            Op::InvokeConv => write!(f, "invoke-conv"),
-            Op::InvokePool => write!(f, "invoke-pool"),
-            Op::SchedLoop { var, axis, extent } => {
-                write!(f, "sched-loop[{var},a{axis},x{extent}]")
-            }
-            Op::SchedPar { var, axis, extent } => {
-                write!(f, "sched-par[{var},a{axis},x{extent}]")
-            }
-            Op::SchedReduce { var, extent } => write!(f, "sched-reduce[{var},x{extent}]"),
-            Op::SliceAx { axis, len } => write!(f, "slice[a{axis},l{len}]"),
-            Op::Reshape(sh) => write!(f, "reshape{sh}"),
-            Op::Bcast(sh) => write!(f, "bcast{sh}"),
-            Op::Pad2d { pad } => write!(f, "pad2d[{pad}]"),
-            Op::Im2Col { kh, stride } => write!(f, "im2col[k{kh},s{stride}]"),
-            Op::Buffer { kind } => write!(f, "buffer[{}]", kind.as_str()),
-            Op::DblBuffer { kind } => write!(f, "dbl-buffer[{}]", kind.as_str()),
+            write!(f, "]")
         }
     }
 }
@@ -398,15 +462,22 @@ mod tests {
         assert_eq!(Op::Relu.arity(), Some(1));
         assert_eq!(Op::MmEngine { m: 4, k: 4, n: 4 }.arity(), Some(0));
         assert_eq!(Op::SliceAx { axis: 0, len: 4 }.arity(), Some(2));
+        assert_eq!(Op::Matmul.arity(), Some(2));
+        assert_eq!(Op::InvokeDwConv.arity(), Some(3));
     }
 
     #[test]
     fn engine_classification() {
         assert!(Op::ReluEngine { w: 8 }.is_engine());
+        assert!(Op::SoftmaxEngine { w: 8 }.is_engine());
         assert!(!Op::InvokeRelu.is_engine());
         assert!(Op::InvokeRelu.is_invoke());
+        assert!(Op::InvokeGelu.is_invoke());
         assert!(Op::SchedLoop { var: Symbol::new("i"), axis: 0, extent: 2 }.is_sched());
         assert!(Op::Dense.is_relay());
+        assert!(Op::Softmax.is_relay());
+        // Transpose is data movement, not host compute.
+        assert!(!Op::Transpose.is_relay());
     }
 
     #[test]
@@ -415,6 +486,10 @@ mod tests {
         let big = Op::MmEngine { m: 8, k: 4, n: 4 }.engine_macs();
         assert_eq!(big, 2 * small);
         assert_eq!(Op::ReluEngine { w: 128 }.engine_macs(), 128);
+        // Rectangular conv engine: macs scale with kh*kw.
+        let sq = Op::ConvEngine { oh: 2, ow: 2, c: 1, k: 1, kh: 3, kw: 3, stride: 1 };
+        let rect = Op::ConvEngine { oh: 2, ow: 2, c: 1, k: 1, kh: 3, kw: 1, stride: 1 };
+        assert_eq!(sq.engine_macs(), 3 * rect.engine_macs());
     }
 
     #[test]
@@ -425,5 +500,27 @@ mod tests {
         // Same parameters -> same engine declaration -> shared hardware.
         assert!(s.contains(&Op::MmEngine { m: 16, k: 16, n: 16 }));
         assert!(!s.contains(&Op::MmEngine { m: 16, k: 16, n: 8 }));
+    }
+
+    #[test]
+    fn display_head_forms() {
+        assert_eq!(Op::Conv2d { stride: 1, pad: 1 }.to_string(), "conv2d[s1,p1]");
+        assert_eq!(
+            Op::SchedLoop { var: Symbol::new("i0"), axis: 0, extent: 2 }.to_string(),
+            "sched-loop[i0,a0,x2]"
+        );
+        // Shape attrs drop their own brackets in the head form.
+        assert_eq!(Op::Reshape(Shape::new(&[2, 2])).to_string(), "reshape[2,2]");
+        // Leaves print their full s-expression.
+        assert_eq!(Op::MmEngine { m: 4, k: 8, n: 2 }.to_string(), "(mm-engine 4 8 2)");
+        assert_eq!(Op::Int(7).to_string(), "7");
+        assert_eq!(Op::Dense.to_string(), "dense");
+    }
+
+    #[test]
+    fn opkind_all_is_registry_order() {
+        for (i, &k) in OpKind::ALL.iter().enumerate() {
+            assert_eq!(k as usize, i, "{k:?} out of registry order");
+        }
     }
 }

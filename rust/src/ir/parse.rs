@@ -3,19 +3,20 @@
 //! Grammar (informal):
 //!
 //! ```text
-//! expr   := INT | (lvar SYM) | (imul e e) | (iadd e e)
-//!         | (input SYM shape) | (weight SYM shape)
-//!         | (conv2d STRIDE PAD e e) | (dense e e) | (relu e) | ...
-//!         | (mm-engine M K N) | (relu-engine W) | ...
-//!         | (invoke-mm e e e) | ...
-//!         | (sched-loop SYM AXIS EXTENT e) | (sched-par ...) | (sched-reduce SYM EXTENT e)
-//!         | (slice AXIS LEN e e) | (reshape shape e) | (buffer KIND e) | ...
+//! expr   := INT | (HEAD attr* expr*)
+//! attr   := INT | SYM | shape | 'sram' | 'dram'
 //! shape  := '[' INT* ']'
 //! ```
+//!
+//! The parser is fully registry-driven: the head symbol selects an
+//! [`crate::ir::spec::OpSpec`], whose attribute schema drives attr reading
+//! and whose arity drives child reading. Adding an op requires no change
+//! here.
 
 use super::op::{BufKind, Op};
 use super::recexpr::{Node, RecExpr};
 use super::shape::Shape;
+use super::spec::{self, AttrKind, AttrVal};
 use super::symbol::Symbol;
 use crate::egraph::Id;
 
@@ -114,6 +115,11 @@ impl<'a> Parser<'a> {
         a.parse().map_err(|_| ParseError(format!("expected integer, got '{a}'")))
     }
 
+    fn i64_atom(&mut self) -> Result<i64> {
+        let a = self.atom()?;
+        a.parse().map_err(|_| ParseError(format!("expected integer, got '{a}'")))
+    }
+
     fn sym_atom(&mut self) -> Result<Symbol> {
         Ok(Symbol::new(&self.atom()?))
     }
@@ -162,109 +168,25 @@ impl<'a> Parser<'a> {
         (0..n).map(|_| self.expr()).collect()
     }
 
+    /// Schema-driven form parsing: head → spec; read each attribute slot
+    /// per the spec's schema, rebuild the op, then read `arity` children.
     fn form(&mut self, head: &str) -> Result<Id> {
-        let e = match head {
-            "lvar" => Node::leaf(Op::LVar(self.sym_atom()?)),
-            "imul" => Node::new(Op::IMul, self.children(2)?),
-            "iadd" => Node::new(Op::IAdd, self.children(2)?),
-            "input" => {
-                let s = self.sym_atom()?;
-                Node::leaf(Op::Input(s, self.shape()?))
-            }
-            "weight" => {
-                let s = self.sym_atom()?;
-                Node::leaf(Op::Weight(s, self.shape()?))
-            }
-            "conv2d" => {
-                let stride = self.usize_atom()?;
-                let pad = self.usize_atom()?;
-                Node::new(Op::Conv2d { stride, pad }, self.children(2)?)
-            }
-            "dense" => Node::new(Op::Dense, self.children(2)?),
-            "relu" => Node::new(Op::Relu, self.children(1)?),
-            "bias-add" => Node::new(Op::BiasAdd, self.children(2)?),
-            "eadd" => Node::new(Op::EAdd, self.children(2)?),
-            "maxpool2d" => {
-                let k = self.usize_atom()?;
-                let stride = self.usize_atom()?;
-                Node::new(Op::MaxPool2d { k, stride }, self.children(1)?)
-            }
-            "flatten" => Node::new(Op::Flatten, self.children(1)?),
-            "gap" => Node::new(Op::GlobalAvgPool, self.children(1)?),
-            "mm-engine" => {
-                let (m, k, n) = (self.usize_atom()?, self.usize_atom()?, self.usize_atom()?);
-                Node::leaf(Op::MmEngine { m, k, n })
-            }
-            "mm-relu-engine" => {
-                let (m, k, n) = (self.usize_atom()?, self.usize_atom()?, self.usize_atom()?);
-                Node::leaf(Op::MmReluEngine { m, k, n })
-            }
-            "relu-engine" => Node::leaf(Op::ReluEngine { w: self.usize_atom()? }),
-            "add-engine" => Node::leaf(Op::AddEngine { w: self.usize_atom()? }),
-            "conv-engine" => {
-                let oh = self.usize_atom()?;
-                let ow = self.usize_atom()?;
-                let c = self.usize_atom()?;
-                let k = self.usize_atom()?;
-                let kh = self.usize_atom()?;
-                let stride = self.usize_atom()?;
-                Node::leaf(Op::ConvEngine { oh, ow, c, k, kh, stride })
-            }
-            "pool-engine" => {
-                let oh = self.usize_atom()?;
-                let ow = self.usize_atom()?;
-                let c = self.usize_atom()?;
-                let k = self.usize_atom()?;
-                let stride = self.usize_atom()?;
-                Node::leaf(Op::PoolEngine { oh, ow, c, k, stride })
-            }
-            "invoke-mm" => Node::new(Op::InvokeMm, self.children(3)?),
-            "invoke-mm-relu" => Node::new(Op::InvokeMmRelu, self.children(3)?),
-            "invoke-relu" => Node::new(Op::InvokeRelu, self.children(2)?),
-            "invoke-add" => Node::new(Op::InvokeAdd, self.children(3)?),
-            "invoke-conv" => Node::new(Op::InvokeConv, self.children(3)?),
-            "invoke-pool" => Node::new(Op::InvokePool, self.children(2)?),
-            "sched-loop" | "sched-par" => {
-                let var = self.sym_atom()?;
-                let axis = self.usize_atom()?;
-                let extent = self.usize_atom()?;
-                let kids = self.children(1)?;
-                let op = if head == "sched-loop" {
-                    Op::SchedLoop { var, axis, extent }
-                } else {
-                    Op::SchedPar { var, axis, extent }
-                };
-                Node::new(op, kids)
-            }
-            "sched-reduce" => {
-                let var = self.sym_atom()?;
-                let extent = self.usize_atom()?;
-                Node::new(Op::SchedReduce { var, extent }, self.children(1)?)
-            }
-            "slice" => {
-                let axis = self.usize_atom()?;
-                let len = self.usize_atom()?;
-                Node::new(Op::SliceAx { axis, len }, self.children(2)?)
-            }
-            "reshape" => {
-                let sh = self.shape()?;
-                Node::new(Op::Reshape(sh), self.children(1)?)
-            }
-            "bcast" => {
-                let sh = self.shape()?;
-                Node::new(Op::Bcast(sh), self.children(1)?)
-            }
-            "pad2d" => Node::new(Op::Pad2d { pad: self.usize_atom()? }, self.children(1)?),
-            "im2col" => {
-                let kh = self.usize_atom()?;
-                let stride = self.usize_atom()?;
-                Node::new(Op::Im2Col { kh, stride }, self.children(1)?)
-            }
-            "buffer" => Node::new(Op::Buffer { kind: self.bufkind()? }, self.children(1)?),
-            "dbl-buffer" => Node::new(Op::DblBuffer { kind: self.bufkind()? }, self.children(1)?),
-            other => return Err(ParseError(format!("unknown form '{other}'"))),
-        };
-        Ok(self.expr.add(e))
+        let spec = spec::by_name(head)
+            .ok_or_else(|| ParseError(format!("unknown form '{head}'")))?;
+        let mut attrs = Vec::with_capacity(spec.attrs.len());
+        for (_, kind) in spec.attrs {
+            attrs.push(match kind {
+                AttrKind::U => AttrVal::U(self.usize_atom()?),
+                AttrKind::I => AttrVal::I(self.i64_atom()?),
+                AttrKind::Sym => AttrVal::Sym(self.sym_atom()?),
+                AttrKind::Sh => AttrVal::Sh(self.shape()?),
+                AttrKind::Buf => AttrVal::Buf(self.bufkind()?),
+            });
+        }
+        let op = (spec.from_attrs)(&attrs)
+            .ok_or_else(|| ParseError(format!("bad attributes for '{head}'")))?;
+        let kids = self.children(spec.arity)?;
+        Ok(self.expr.add(Node::new(op, kids)))
     }
 }
 
@@ -299,10 +221,15 @@ mod tests {
         "(sched-par p1 0 2 (invoke-relu (relu-engine 64) (slice 0 64 (imul (lvar p1) 64) (input x [128]))))",
         "(invoke-mm (mm-engine 16 16 16) (input a [16 16]) (weight w [16 16]))",
         "(dense (flatten (maxpool2d 2 2 (relu (conv2d 1 1 (input img [3 32 32]) (weight k1 [8 3 3 3]))))) (weight w2 [2048 10]))",
-        "(invoke-conv (conv-engine 2 4 3 8 3 1) (slice 1 4 (imul (lvar i) 2) (pad2d 1 (input img [3 8 8]))) (weight k [8 3 3 3]))",
+        "(invoke-conv (conv-engine 2 4 3 8 3 3 1) (slice 1 4 (imul (lvar i) 2) (pad2d 1 (input img [3 8 8]))) (weight k [8 3 3 3]))",
         "(sched-reduce r0 2 (invoke-mm (mm-engine 4 8 4) (slice 1 8 (imul (lvar r0) 8) (input a [4 16])) (slice 0 8 (imul (lvar r0) 8) (weight b [16 4]))))",
         "(buffer sram (reshape [1 16] (invoke-relu (relu-engine 16) (reshape [16] (input x [4 4])))))",
         "(eadd (bcast [8] (weight b [8])) (gap (input t [8 5 5])))",
+        "(matmul (softmax (matmul (input q [4 8]) (transpose (input k [4 8])))) (input v [4 8]))",
+        "(layernorm (gelu (dense (input x [2 16]) (weight w [16 16]))))",
+        "(dwconv2d 1 1 (input img [8 14 14]) (weight dw [8 3 3]))",
+        "(invoke-dw-conv (dw-conv-engine 4 4 8 3 3 1) (input x [8 6 6]) (weight w [8 3 3]))",
+        "(batch-matmul (input a [2 4 8]) (input b [2 8 4]))",
     ];
 
     #[test]
@@ -325,6 +252,8 @@ mod tests {
         assert!(parse_expr("(relu").is_err());
         assert!(parse_expr("(relu (input x [4])) trailing").is_err());
         assert!(parse_expr("").is_err());
+        // wrong attribute kind for the schema
+        assert!(parse_expr("(buffer nowhere (input x [4]))").is_err());
     }
 
     #[test]
@@ -333,5 +262,13 @@ mod tests {
         let e = parse_expr(CASES[4]).unwrap();
         let ty = e.typecheck().unwrap();
         assert_eq!(ty, crate::ir::Ty::Tensor(crate::ir::Shape::new(&[1, 10])));
+    }
+
+    #[test]
+    fn typechecks_attention_core() {
+        // softmax(q @ k^T) @ v — the single-head attention core.
+        let e = parse_expr(CASES[9]).unwrap();
+        let ty = e.typecheck().unwrap();
+        assert_eq!(ty, crate::ir::Ty::Tensor(crate::ir::Shape::new(&[4, 8])));
     }
 }

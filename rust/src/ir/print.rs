@@ -1,16 +1,16 @@
 //! S-expression printer for EngineIR. The grammar is the exact inverse of
-//! [`super::parse`]; `parse(print(e))` round-trips (tested there).
+//! [`super::parse`]; `parse(print(e))` round-trips (tested there, and per
+//! op in `tests/registry.rs`).
+//!
+//! The printer is fully registry-driven: every op renders as
+//! `(head attrs... children...)` using its [`crate::ir::spec::OpSpec`]'s
+//! head name and attribute extractor. Only the bare integer literal is
+//! special-cased. Adding an op requires no change here.
 
 use super::op::Op;
 use super::recexpr::RecExpr;
-use super::shape::Shape;
 use crate::egraph::Id;
 use std::fmt::Write;
-
-fn shape_str(s: &Shape) -> String {
-    let dims: Vec<String> = s.0.iter().map(|d| d.to_string()).collect();
-    format!("[{}]", dims.join(" "))
-}
 
 /// Render the subtree of `expr` rooted at `id` as an s-expression.
 /// Shared subtrees are printed in full at each use (the *term*, not the DAG).
@@ -22,174 +22,21 @@ pub fn to_sexpr(expr: &RecExpr, id: Id) -> String {
 
 fn write_sexpr(expr: &RecExpr, id: Id, out: &mut String) {
     let node = expr.node(id);
-    let kids = |out: &mut String, e: &RecExpr| {
-        for &c in &node.children {
-            out.push(' ');
-            write_sexpr(e, c, out);
-        }
-    };
-    match &node.op {
-        Op::Int(v) => {
-            write!(out, "{v}").unwrap();
-        }
-        Op::LVar(s) => {
-            write!(out, "(lvar {s})").unwrap();
-        }
-        Op::IMul => {
-            out.push_str("(imul");
-            kids(out, expr);
-            out.push(')');
-        }
-        Op::IAdd => {
-            out.push_str("(iadd");
-            kids(out, expr);
-            out.push(')');
-        }
-        Op::Input(name, sh) => {
-            write!(out, "(input {name} {})", shape_str(sh)).unwrap();
-        }
-        Op::Weight(name, sh) => {
-            write!(out, "(weight {name} {})", shape_str(sh)).unwrap();
-        }
-        Op::Conv2d { stride, pad } => {
-            write!(out, "(conv2d {stride} {pad}").unwrap();
-            kids(out, expr);
-            out.push(')');
-        }
-        Op::Dense => {
-            out.push_str("(dense");
-            kids(out, expr);
-            out.push(')');
-        }
-        Op::Relu => {
-            out.push_str("(relu");
-            kids(out, expr);
-            out.push(')');
-        }
-        Op::BiasAdd => {
-            out.push_str("(bias-add");
-            kids(out, expr);
-            out.push(')');
-        }
-        Op::EAdd => {
-            out.push_str("(eadd");
-            kids(out, expr);
-            out.push(')');
-        }
-        Op::MaxPool2d { k, stride } => {
-            write!(out, "(maxpool2d {k} {stride}").unwrap();
-            kids(out, expr);
-            out.push(')');
-        }
-        Op::Flatten => {
-            out.push_str("(flatten");
-            kids(out, expr);
-            out.push(')');
-        }
-        Op::GlobalAvgPool => {
-            out.push_str("(gap");
-            kids(out, expr);
-            out.push(')');
-        }
-        Op::MmEngine { m, k, n } => {
-            write!(out, "(mm-engine {m} {k} {n})").unwrap();
-        }
-        Op::MmReluEngine { m, k, n } => {
-            write!(out, "(mm-relu-engine {m} {k} {n})").unwrap();
-        }
-        Op::ReluEngine { w } => {
-            write!(out, "(relu-engine {w})").unwrap();
-        }
-        Op::AddEngine { w } => {
-            write!(out, "(add-engine {w})").unwrap();
-        }
-        Op::ConvEngine { oh, ow, c, k, kh, stride } => {
-            write!(out, "(conv-engine {oh} {ow} {c} {k} {kh} {stride})").unwrap();
-        }
-        Op::PoolEngine { oh, ow, c, k, stride } => {
-            write!(out, "(pool-engine {oh} {ow} {c} {k} {stride})").unwrap();
-        }
-        Op::InvokeMm => {
-            out.push_str("(invoke-mm");
-            kids(out, expr);
-            out.push(')');
-        }
-        Op::InvokeMmRelu => {
-            out.push_str("(invoke-mm-relu");
-            kids(out, expr);
-            out.push(')');
-        }
-        Op::InvokeRelu => {
-            out.push_str("(invoke-relu");
-            kids(out, expr);
-            out.push(')');
-        }
-        Op::InvokeAdd => {
-            out.push_str("(invoke-add");
-            kids(out, expr);
-            out.push(')');
-        }
-        Op::InvokeConv => {
-            out.push_str("(invoke-conv");
-            kids(out, expr);
-            out.push(')');
-        }
-        Op::InvokePool => {
-            out.push_str("(invoke-pool");
-            kids(out, expr);
-            out.push(')');
-        }
-        Op::SchedLoop { var, axis, extent } => {
-            write!(out, "(sched-loop {var} {axis} {extent}").unwrap();
-            kids(out, expr);
-            out.push(')');
-        }
-        Op::SchedPar { var, axis, extent } => {
-            write!(out, "(sched-par {var} {axis} {extent}").unwrap();
-            kids(out, expr);
-            out.push(')');
-        }
-        Op::SchedReduce { var, extent } => {
-            write!(out, "(sched-reduce {var} {extent}").unwrap();
-            kids(out, expr);
-            out.push(')');
-        }
-        Op::SliceAx { axis, len } => {
-            write!(out, "(slice {axis} {len}").unwrap();
-            kids(out, expr);
-            out.push(')');
-        }
-        Op::Reshape(sh) => {
-            write!(out, "(reshape {}", shape_str(sh)).unwrap();
-            kids(out, expr);
-            out.push(')');
-        }
-        Op::Bcast(sh) => {
-            write!(out, "(bcast {}", shape_str(sh)).unwrap();
-            kids(out, expr);
-            out.push(')');
-        }
-        Op::Pad2d { pad } => {
-            write!(out, "(pad2d {pad}").unwrap();
-            kids(out, expr);
-            out.push(')');
-        }
-        Op::Im2Col { kh, stride } => {
-            write!(out, "(im2col {kh} {stride}").unwrap();
-            kids(out, expr);
-            out.push(')');
-        }
-        Op::Buffer { kind } => {
-            write!(out, "(buffer {}", kind.as_str()).unwrap();
-            kids(out, expr);
-            out.push(')');
-        }
-        Op::DblBuffer { kind } => {
-            write!(out, "(dbl-buffer {}", kind.as_str()).unwrap();
-            kids(out, expr);
-            out.push(')');
-        }
+    if let Op::Int(v) = &node.op {
+        write!(out, "{v}").unwrap();
+        return;
     }
+    let spec = node.op.spec();
+    write!(out, "({}", spec.name).unwrap();
+    for attr in (spec.attrs_of)(&node.op) {
+        out.push(' ');
+        out.push_str(&attr.sexpr());
+    }
+    for &c in &node.children {
+        out.push(' ');
+        write_sexpr(expr, c, out);
+    }
+    out.push(')');
 }
 
 /// Indented multi-line pretty printer (for CLI / example output).
@@ -212,20 +59,8 @@ fn pretty_rec(expr: &RecExpr, id: Id, indent: usize, out: &mut String) {
         let _ = writeln!(out, "{pad}{flat}");
         return;
     }
-    let head = {
-        // Everything before the first child in the flat form.
-        let mut tmp = RecExpr::new();
-        let hollow = super::recexpr::Node::new(node.op.clone(), vec![]);
-        // Print just the head symbol by formatting a leaf-ified copy when
-        // the op is structurally a leaf; otherwise synthesize from Display.
-        if node.op.arity() == Some(0) {
-            tmp.add(hollow);
-            to_sexpr(&tmp, tmp.root())
-        } else {
-            format!("({}", node.op)
-        }
-    };
-    let _ = writeln!(out, "{pad}{head}");
+    // Head: the op's Display form (head symbol + bracketed attrs).
+    let _ = writeln!(out, "{pad}({}", node.op);
     for &c in &node.children {
         pretty_rec(expr, c, indent + 1, out);
     }
@@ -260,5 +95,14 @@ mod tests {
         let s = e.to_string();
         assert!(s.starts_with("(sched-loop i0 0 2 "), "{s}");
         assert!(s.contains("(slice 0 64 (imul (lvar i0) 64)"), "{s}");
+    }
+
+    #[test]
+    fn prints_new_ops_via_registry() {
+        let mut e = RecExpr::new();
+        let x = e.add_leaf(Op::Input(Symbol::new("x"), Shape::new(&[4, 8])));
+        let t = e.add_op(Op::Transpose, &[x]);
+        e.add_op(Op::Softmax, &[t]);
+        assert_eq!(e.to_string(), "(softmax (transpose (input x [4 8])))");
     }
 }

@@ -5,6 +5,9 @@
 //! signature. Rewrites are *shape-preserving by construction*, and the
 //! analysis double-checks this: a [`TypeError`] on `union` indicates a
 //! broken rewrite (this is exercised heavily by the differential tests).
+//!
+//! The per-op shape rules live in each op's [`crate::ir::spec::OpSpec`]
+//! entry; [`infer_ref`] checks arity and dispatches through the registry.
 
 use super::op::Op;
 use std::fmt;
@@ -116,7 +119,8 @@ impl std::fmt::Display for TypeError {
 
 impl std::error::Error for TypeError {}
 
-fn tensor<'a>(op: &Op, i: usize, tys: &[&'a Ty]) -> Result<&'a Shape, TypeError> {
+/// Child `i` must be a tensor (shape-rule helper for registry entries).
+pub(crate) fn tensor<'a>(op: &Op, i: usize, tys: &[&'a Ty]) -> Result<&'a Shape, TypeError> {
     tys[i].shape().ok_or_else(|| TypeError::Child {
         op: op.to_string(),
         child: i,
@@ -125,7 +129,8 @@ fn tensor<'a>(op: &Op, i: usize, tys: &[&'a Ty]) -> Result<&'a Shape, TypeError>
     })
 }
 
-fn index(op: &Op, i: usize, tys: &[&Ty]) -> Result<(), TypeError> {
+/// Child `i` must be an index expression.
+pub(crate) fn index(op: &Op, i: usize, tys: &[&Ty]) -> Result<(), TypeError> {
     if matches!(tys[i], &Ty::Index) {
         Ok(())
     } else {
@@ -138,7 +143,8 @@ fn index(op: &Op, i: usize, tys: &[&Ty]) -> Result<(), TypeError> {
     }
 }
 
-fn engine<'a>(op: &Op, i: usize, tys: &[&'a Ty]) -> Result<&'a Op, TypeError> {
+/// Child `i` must be an engine declaration.
+pub(crate) fn engine<'a>(op: &Op, i: usize, tys: &[&'a Ty]) -> Result<&'a Op, TypeError> {
     tys[i].engine().ok_or_else(|| TypeError::Child {
         op: op.to_string(),
         child: i,
@@ -147,7 +153,8 @@ fn engine<'a>(op: &Op, i: usize, tys: &[&'a Ty]) -> Result<&'a Op, TypeError> {
     })
 }
 
-fn shape_err(op: &Op, msg: impl Into<String>) -> TypeError {
+/// Shape-mismatch error constructor for registry shape rules.
+pub(crate) fn shape_err(op: &Op, msg: impl Into<String>) -> TypeError {
     TypeError::Shape { op: op.to_string(), msg: msg.into() }
 }
 
@@ -168,7 +175,8 @@ pub fn in_dim(o: usize, k: usize, stride: usize) -> usize {
 }
 
 /// Infer the type of `op` given its children's types. This is the single
-/// source of truth for EngineIR's static semantics.
+/// entry point for EngineIR's static semantics; the per-op rules live in
+/// the [`crate::ir::spec`] registry.
 pub fn infer(op: &Op, tys: &[Ty]) -> Result<Ty, TypeError> {
     let refs: Vec<&Ty> = tys.iter().collect();
     infer_ref(op, &refs)
@@ -177,236 +185,15 @@ pub fn infer(op: &Op, tys: &[Ty]) -> Result<Ty, TypeError> {
 /// By-reference variant of [`infer`] — the e-graph hot path uses this to
 /// avoid cloning child types (shapes allocate) on every node insertion.
 pub fn infer_ref(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
-    if let Some(a) = op.arity() {
-        if tys.len() != a {
-            return Err(TypeError::Arity { op: op.to_string(), expected: a, got: tys.len() });
-        }
+    let spec = op.spec();
+    if tys.len() != spec.arity {
+        return Err(TypeError::Arity {
+            op: op.to_string(),
+            expected: spec.arity,
+            got: tys.len(),
+        });
     }
-    match op {
-        Op::Int(_) | Op::LVar(_) => Ok(Ty::Index),
-        Op::IMul | Op::IAdd => {
-            index(op, 0, tys)?;
-            index(op, 1, tys)?;
-            Ok(Ty::Index)
-        }
-        Op::Input(_, sh) | Op::Weight(_, sh) => Ok(Ty::Tensor(sh.clone())),
-
-        // ---- Relay level ----
-        Op::Conv2d { stride, pad } => {
-            let x = tensor(op, 0, tys)?;
-            let w = tensor(op, 1, tys)?;
-            if x.rank() != 3 || w.rank() != 4 {
-                return Err(shape_err(op, format!("want x rank 3, w rank 4; got {x} {w}")));
-            }
-            let (c, h, wd) = (x.dim(0), x.dim(1), x.dim(2));
-            let (kout, cin, kh, kw) = (w.dim(0), w.dim(1), w.dim(2), w.dim(3));
-            if cin != c || kh != kw {
-                return Err(shape_err(op, format!("channels/kernel mismatch: x{x} w{w}")));
-            }
-            let oh = out_dim(h + 2 * pad, kh, *stride)
-                .ok_or_else(|| shape_err(op, "H does not tile"))?;
-            let ow = out_dim(wd + 2 * pad, kw, *stride)
-                .ok_or_else(|| shape_err(op, "W does not tile"))?;
-            Ok(Ty::Tensor(Shape::new(&[kout, oh, ow])))
-        }
-        Op::Dense => {
-            let x = tensor(op, 0, tys)?;
-            let w = tensor(op, 1, tys)?;
-            if x.rank() != 2 || w.rank() != 2 || x.dim(1) != w.dim(0) {
-                return Err(shape_err(op, format!("dense shapes x{x} w{w}")));
-            }
-            Ok(Ty::Tensor(Shape::new(&[x.dim(0), w.dim(1)])))
-        }
-        Op::Relu => Ok(Ty::Tensor(tensor(op, 0, tys)?.clone())),
-        Op::BiasAdd => {
-            let x = tensor(op, 0, tys)?;
-            let b = tensor(op, 1, tys)?;
-            if b.rank() != 1 {
-                return Err(shape_err(op, format!("bias must be rank 1, got {b}")));
-            }
-            let want = match x.rank() {
-                3 => x.dim(0),
-                2 => x.dim(1),
-                _ => return Err(shape_err(op, format!("bias-add on rank {}", x.rank()))),
-            };
-            if b.dim(0) != want {
-                return Err(shape_err(op, format!("bias {b} vs x {x}")));
-            }
-            Ok(Ty::Tensor(x.clone()))
-        }
-        Op::EAdd => {
-            let x = tensor(op, 0, tys)?;
-            let y = tensor(op, 1, tys)?;
-            if x != y {
-                return Err(shape_err(op, format!("eadd {x} vs {y}")));
-            }
-            Ok(Ty::Tensor(x.clone()))
-        }
-        Op::MaxPool2d { k, stride } => {
-            let x = tensor(op, 0, tys)?;
-            if x.rank() != 3 {
-                return Err(shape_err(op, format!("maxpool on {x}")));
-            }
-            let oh =
-                out_dim(x.dim(1), *k, *stride).ok_or_else(|| shape_err(op, "H does not tile"))?;
-            let ow =
-                out_dim(x.dim(2), *k, *stride).ok_or_else(|| shape_err(op, "W does not tile"))?;
-            Ok(Ty::Tensor(Shape::new(&[x.dim(0), oh, ow])))
-        }
-        Op::Flatten => {
-            let x = tensor(op, 0, tys)?;
-            Ok(Ty::Tensor(Shape::new(&[1, x.numel()])))
-        }
-        Op::GlobalAvgPool => {
-            let x = tensor(op, 0, tys)?;
-            if x.rank() != 3 {
-                return Err(shape_err(op, format!("gap on {x}")));
-            }
-            Ok(Ty::Tensor(Shape::new(&[x.dim(0)])))
-        }
-
-        // ---- engines ----
-        Op::MmEngine { .. }
-        | Op::MmReluEngine { .. }
-        | Op::ReluEngine { .. }
-        | Op::AddEngine { .. }
-        | Op::ConvEngine { .. }
-        | Op::PoolEngine { .. } => Ok(Ty::Engine(EngineSig(op.clone()))),
-
-        // ---- invocations ----
-        Op::InvokeMm | Op::InvokeMmRelu => {
-            let e = engine(op, 0, tys)?;
-            let (m, k, n) = match (op, e) {
-                (Op::InvokeMm, Op::MmEngine { m, k, n }) => (*m, *k, *n),
-                (Op::InvokeMmRelu, Op::MmReluEngine { m, k, n }) => (*m, *k, *n),
-                _ => return Err(shape_err(op, format!("wrong engine {e}"))),
-            };
-            let a = tensor(op, 1, tys)?;
-            let b = tensor(op, 2, tys)?;
-            if a != &Shape::new(&[m, k]) || b != &Shape::new(&[k, n]) {
-                return Err(shape_err(op, format!("mm({m},{k},{n}) got a{a} b{b}")));
-            }
-            Ok(Ty::Tensor(Shape::new(&[m, n])))
-        }
-        Op::InvokeRelu => {
-            let e = engine(op, 0, tys)?;
-            let w = match e {
-                Op::ReluEngine { w } => *w,
-                _ => return Err(shape_err(op, format!("wrong engine {e}"))),
-            };
-            let x = tensor(op, 1, tys)?;
-            if x != &Shape::new(&[w]) {
-                return Err(shape_err(op, format!("relu({w}) got {x}")));
-            }
-            Ok(Ty::Tensor(x.clone()))
-        }
-        Op::InvokeAdd => {
-            let e = engine(op, 0, tys)?;
-            let w = match e {
-                Op::AddEngine { w } => *w,
-                _ => return Err(shape_err(op, format!("wrong engine {e}"))),
-            };
-            let x = tensor(op, 1, tys)?;
-            let y = tensor(op, 2, tys)?;
-            if x != &Shape::new(&[w]) || y != &Shape::new(&[w]) {
-                return Err(shape_err(op, format!("add({w}) got {x} {y}")));
-            }
-            Ok(Ty::Tensor(x.clone()))
-        }
-        Op::InvokeConv => {
-            let e = engine(op, 0, tys)?;
-            let (oh, ow, c, k, kh, stride) = match e {
-                Op::ConvEngine { oh, ow, c, k, kh, stride } => (*oh, *ow, *c, *k, *kh, *stride),
-                _ => return Err(shape_err(op, format!("wrong engine {e}"))),
-            };
-            let x = tensor(op, 1, tys)?;
-            let w = tensor(op, 2, tys)?;
-            let want_x = Shape::new(&[c, in_dim(oh, kh, stride), in_dim(ow, kh, stride)]);
-            let want_w = Shape::new(&[k, c, kh, kh]);
-            if x != &want_x || w != &want_w {
-                return Err(shape_err(
-                    op,
-                    format!("conv engine wants x{want_x} w{want_w}; got x{x} w{w}"),
-                ));
-            }
-            Ok(Ty::Tensor(Shape::new(&[k, oh, ow])))
-        }
-        Op::InvokePool => {
-            let e = engine(op, 0, tys)?;
-            let (oh, ow, c, k, stride) = match e {
-                Op::PoolEngine { oh, ow, c, k, stride } => (*oh, *ow, *c, *k, *stride),
-                _ => return Err(shape_err(op, format!("wrong engine {e}"))),
-            };
-            let x = tensor(op, 1, tys)?;
-            let want = Shape::new(&[c, in_dim(oh, k, stride), in_dim(ow, k, stride)]);
-            if x != &want {
-                return Err(shape_err(op, format!("pool engine wants {want}; got {x}")));
-            }
-            Ok(Ty::Tensor(Shape::new(&[c, oh, ow])))
-        }
-
-        // ---- schedules ----
-        Op::SchedLoop { axis, extent, .. } | Op::SchedPar { axis, extent, .. } => {
-            let b = tensor(op, 0, tys)?;
-            if *axis >= b.rank() {
-                return Err(shape_err(op, format!("axis {axis} out of range for {b}")));
-            }
-            Ok(Ty::Tensor(b.with_dim(*axis, b.dim(*axis) * extent)))
-        }
-        Op::SchedReduce { .. } => Ok(Ty::Tensor(tensor(op, 0, tys)?.clone())),
-
-        // ---- data movement / storage ----
-        Op::SliceAx { axis, len } => {
-            index(op, 0, tys)?;
-            let x = tensor(op, 1, tys)?;
-            if *axis >= x.rank() || *len > x.dim(*axis) {
-                return Err(shape_err(op, format!("slice a{axis} l{len} of {x}")));
-            }
-            Ok(Ty::Tensor(x.with_dim(*axis, *len)))
-        }
-        Op::Reshape(sh) => {
-            let x = tensor(op, 0, tys)?;
-            if x.numel() != sh.numel() {
-                return Err(shape_err(op, format!("reshape {x} -> {sh}")));
-            }
-            Ok(Ty::Tensor(sh.clone()))
-        }
-        Op::Bcast(sh) => {
-            let b = tensor(op, 0, tys)?;
-            if b.rank() != 1 {
-                return Err(shape_err(op, format!("bcast of rank {}", b.rank())));
-            }
-            let ok = match sh.rank() {
-                3 => sh.dim(0) == b.dim(0),
-                2 => sh.dim(1) == b.dim(0),
-                1 => sh.dim(0) == b.dim(0),
-                _ => false,
-            };
-            if !ok {
-                return Err(shape_err(op, format!("bcast {b} -> {sh}")));
-            }
-            Ok(Ty::Tensor(sh.clone()))
-        }
-        Op::Pad2d { pad } => {
-            let x = tensor(op, 0, tys)?;
-            if x.rank() != 3 {
-                return Err(shape_err(op, format!("pad2d on {x}")));
-            }
-            Ok(Ty::Tensor(Shape::new(&[x.dim(0), x.dim(1) + 2 * pad, x.dim(2) + 2 * pad])))
-        }
-        Op::Im2Col { kh, stride } => {
-            let x = tensor(op, 0, tys)?;
-            if x.rank() != 3 {
-                return Err(shape_err(op, format!("im2col on {x}")));
-            }
-            let oh = out_dim(x.dim(1), *kh, *stride)
-                .ok_or_else(|| shape_err(op, "H does not tile"))?;
-            let ow = out_dim(x.dim(2), *kh, *stride)
-                .ok_or_else(|| shape_err(op, "W does not tile"))?;
-            Ok(Ty::Tensor(Shape::new(&[x.dim(0) * kh * kh, oh * ow])))
-        }
-        Op::Buffer { .. } | Op::DblBuffer { .. } => Ok(Ty::Tensor(tensor(op, 0, tys)?.clone())),
-    }
+    (spec.shape)(op, tys)
 }
 
 #[cfg(test)]
@@ -448,9 +235,58 @@ mod tests {
     }
 
     #[test]
+    fn conv2d_accepts_rectangular_kernels() {
+        // 1x7 kernel: H unchanged by kh=1, W shrinks by kw=7.
+        let ty = infer(
+            &Op::Conv2d { stride: 1, pad: 0 },
+            &[t(&[3, 16, 16]), t(&[8, 3, 1, 7])],
+        )
+        .unwrap();
+        assert_eq!(ty, t(&[8, 16, 10]));
+    }
+
+    #[test]
     fn dense_shape() {
         assert_eq!(infer(&Op::Dense, &[t(&[1, 784]), t(&[784, 128])]).unwrap(), t(&[1, 128]));
         assert!(infer(&Op::Dense, &[t(&[1, 784]), t(&[783, 128])]).is_err());
+    }
+
+    #[test]
+    fn matmul_matches_dense_rule() {
+        assert_eq!(infer(&Op::Matmul, &[t(&[16, 64]), t(&[64, 16])]).unwrap(), t(&[16, 16]));
+    }
+
+    #[test]
+    fn batch_matmul_shape() {
+        assert_eq!(
+            infer(&Op::BatchMatmul, &[t(&[4, 2, 8]), t(&[4, 8, 2])]).unwrap(),
+            t(&[4, 2, 2])
+        );
+        assert!(infer(&Op::BatchMatmul, &[t(&[4, 2, 8]), t(&[3, 8, 2])]).is_err());
+    }
+
+    #[test]
+    fn transpose_softmax_layernorm_shapes() {
+        assert_eq!(infer(&Op::Transpose, &[t(&[2, 5])]).unwrap(), t(&[5, 2]));
+        assert_eq!(infer(&Op::Softmax, &[t(&[4, 8])]).unwrap(), t(&[4, 8]));
+        assert_eq!(infer(&Op::LayerNorm, &[t(&[8])]).unwrap(), t(&[8]));
+        assert!(infer(&Op::Softmax, &[t(&[2, 3, 4])]).is_err());
+    }
+
+    #[test]
+    fn depthwise_conv_shape() {
+        let ty = infer(
+            &Op::DepthwiseConv2d { stride: 1, pad: 1 },
+            &[t(&[16, 14, 14]), t(&[16, 3, 3])],
+        )
+        .unwrap();
+        assert_eq!(ty, t(&[16, 14, 14]));
+        // channel mismatch rejected
+        assert!(infer(
+            &Op::DepthwiseConv2d { stride: 1, pad: 0 },
+            &[t(&[16, 14, 14]), t(&[8, 3, 3])]
+        )
+        .is_err());
     }
 
     #[test]
@@ -472,10 +308,25 @@ mod tests {
             c: 3,
             k: 8,
             kh: 3,
+            kw: 3,
             stride: 1,
         }));
         let ty = infer(&Op::InvokeConv, &[e, t(&[3, 4, 6]), t(&[8, 3, 3, 3])]).unwrap();
         assert_eq!(ty, t(&[8, 2, 4]));
+    }
+
+    #[test]
+    fn invoke_dwconv_halo_shape() {
+        let e = Ty::Engine(EngineSig(Op::DwConvEngine {
+            oh: 2,
+            ow: 4,
+            c: 3,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+        }));
+        let ty = infer(&Op::InvokeDwConv, &[e, t(&[3, 4, 6]), t(&[3, 3, 3])]).unwrap();
+        assert_eq!(ty, t(&[3, 2, 4]));
     }
 
     #[test]
@@ -501,8 +352,11 @@ mod tests {
     #[test]
     fn im2col_shape() {
         // (3,32,32) with 3x3 stride 1 -> (27, 900)
-        let ty = infer(&Op::Im2Col { kh: 3, stride: 1 }, &[t(&[3, 32, 32])]).unwrap();
+        let ty = infer(&Op::Im2Col { kh: 3, kw: 3, stride: 1 }, &[t(&[3, 32, 32])]).unwrap();
         assert_eq!(ty, t(&[27, 900]));
+        // Rectangular 3x1 window: (3*3*1, 30*32)
+        let ty = infer(&Op::Im2Col { kh: 3, kw: 1, stride: 1 }, &[t(&[3, 32, 32])]).unwrap();
+        assert_eq!(ty, t(&[9, 960]));
     }
 
     #[test]

@@ -1,0 +1,1913 @@
+//! The operator registry: one declarative [`OpSpec`] per [`OpKind`].
+//!
+//! This is the single place an operator is *described*: its s-expression
+//! head, arity, attribute schema (how parameters print and parse), shape
+//! rule, reference eval kernel, Relay→EngineIR lowering template, and cost
+//! model (engine area/IO or host-fallback work). Every generic consumer —
+//! the type checker ([`crate::ir::shape::infer_ref`]), the evaluator
+//! ([`crate::tensor::eval`]), the printer/parser, the reification pass
+//! ([`crate::lower`]), the analytic cost model and simulator — dispatches
+//! through this table instead of matching on `Op` directly, so **adding an
+//! operator means adding its `Op` variant and one entry here**; no other
+//! match site in the crate grows an arm.
+//!
+//! Each entry also carries an `exemplar` s-expression with its expected
+//! type: `tests/registry.rs` parses, prints, type-checks, evaluates, lowers
+//! and costs every exemplar, so an op cannot land half-wired.
+
+use super::op::{BufKind, Op, OpKind};
+use super::shape::{engine, in_dim, index, out_dim, shape_err, tensor, EngineSig};
+use super::shape::{Shape, Ty, TypeError};
+use super::symbol::Symbol;
+use crate::egraph::Id;
+use crate::error::Error;
+use crate::lower::LowerCtx;
+use crate::tensor::{EvalError, Tensor};
+use std::collections::HashMap;
+use std::sync::OnceLock;
+
+/// Structural role of an op. Generic passes (eval, cost, sim, extraction)
+/// switch on the *class*; per-op behavior within a class comes from the
+/// spec's function fields. The `Index`, `Sched` and `Storage` classes are
+/// closed structural features of the language; `Relay`, `Engine`, `Invoke`
+/// and `Data` are open — new ops slot in without new match arms.
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub enum OpClass {
+    /// Integer index scalars (`Int`, `LVar`, `IMul`, `IAdd`).
+    Index,
+    /// Workload tensor leaves (`Input`, `Weight`).
+    Leaf,
+    /// Relay-level compute ops (unreified; host-fallback cost).
+    Relay,
+    /// Hardware engine declarations.
+    Engine,
+    /// Engine invocations (`[engine, tensor args...]`).
+    Invoke,
+    /// Software schedules (`sched-loop` / `sched-par` / `sched-reduce`).
+    Sched,
+    /// Data movement (slices, reshapes, broadcasts, layout transforms).
+    Data,
+    /// Storage materialization points (`buffer` / `dbl-buffer`).
+    Storage,
+}
+
+/// Attribute slot kinds, schema-driving the parser.
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub enum AttrKind {
+    /// Unsigned size parameter.
+    U,
+    /// Signed integer literal.
+    I,
+    /// Interned symbol (names, loop variables).
+    Sym,
+    /// Static shape (`[a b c]`).
+    Sh,
+    /// Buffer kind (`sram` / `dram`).
+    Buf,
+}
+
+/// A concrete attribute value (printer output / parser input).
+#[derive(Clone, Debug)]
+pub enum AttrVal {
+    U(usize),
+    I(i64),
+    Sym(Symbol),
+    Sh(Shape),
+    Buf(BufKind),
+}
+
+/// Join a shape's dims with `sep` (shared by the attr renderings).
+fn dims(s: &Shape, sep: &str) -> String {
+    let v: Vec<String> = s.0.iter().map(|d| d.to_string()).collect();
+    v.join(sep)
+}
+
+impl AttrVal {
+    pub fn u(&self) -> Option<usize> {
+        match self {
+            AttrVal::U(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn i(&self) -> Option<i64> {
+        match self {
+            AttrVal::I(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn sym(&self) -> Option<Symbol> {
+        match self {
+            AttrVal::Sym(s) => Some(*s),
+            _ => None,
+        }
+    }
+
+    pub fn sh(&self) -> Option<&Shape> {
+        match self {
+            AttrVal::Sh(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn buf(&self) -> Option<BufKind> {
+        match self {
+            AttrVal::Buf(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Compact rendering for `Op`'s bracketed `Display` head form
+    /// (`reshape[2,2]`): like [`Self::sexpr`] but shapes drop their own
+    /// brackets, since the head form supplies the enclosing pair.
+    pub fn compact(&self) -> String {
+        match self {
+            AttrVal::Sh(s) => dims(s, ","),
+            other => other.sexpr(),
+        }
+    }
+
+    /// The s-expression rendering of this attribute.
+    pub fn sexpr(&self) -> String {
+        match self {
+            AttrVal::U(v) => v.to_string(),
+            AttrVal::I(v) => v.to_string(),
+            AttrVal::Sym(s) => s.to_string(),
+            AttrVal::Sh(s) => format!("[{}]", dims(s, " ")),
+            AttrVal::Buf(b) => b.as_str().to_string(),
+        }
+    }
+}
+
+/// Area model class of an engine: MAC-array (matmul/conv) or lane-array
+/// (elementwise/pool/normalization units).
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub enum AreaClass {
+    Mac,
+    Lane,
+}
+
+/// Cost/identity description of a hardware engine declaration.
+#[derive(Copy, Clone)]
+pub struct EngineSpec {
+    /// Multiply–accumulates of one invocation (area & energy basis).
+    pub macs: fn(&Op) -> u64,
+    /// MAC- or lane-class area pricing.
+    pub area: AreaClass,
+    /// I/O element count of one (maximal) invocation (streaming model).
+    pub io: fn(&Op) -> f64,
+    /// Elementwise-max parameter merge (baseline's "sized for the largest
+    /// call"); both ops are guaranteed to be this spec's kind.
+    pub merge_max: fn(&Op, &Op) -> Op,
+    /// Output shape of one invocation.
+    pub out_shape: fn(&Op) -> Shape,
+}
+
+/// Expected type of an exemplar term (golden for the registry tests).
+#[derive(Copy, Clone, Debug)]
+pub enum ExemplarTy {
+    Index,
+    Engine,
+    Tensor(&'static [usize]),
+}
+
+/// Reference eval kernel: child/argument tensors in, output tensor out.
+pub type EvalFn = fn(&Op, &[Tensor]) -> Result<Tensor, EvalError>;
+
+/// One operator's complete description. See the module docs.
+pub struct OpSpec {
+    pub kind: OpKind,
+    /// S-expression head symbol (`"conv2d"`, `"invoke-mm"`, …).
+    pub name: &'static str,
+    /// Fixed child count.
+    pub arity: usize,
+    pub class: OpClass,
+    /// Attribute schema: `(display label, kind)` per slot, in print order.
+    pub attrs: &'static [(&'static str, AttrKind)],
+    /// Extract this op's attributes (printer side).
+    pub attrs_of: fn(&Op) -> Vec<AttrVal>,
+    /// Rebuild the op from parsed attributes (parser side).
+    pub from_attrs: fn(&[AttrVal]) -> Option<Op>,
+    /// Shape/type rule given child types.
+    pub shape: fn(&Op, &[&Ty]) -> Result<Ty, TypeError>,
+    /// Reference kernel for `Relay`/`Data` ops (`op` is the node's own op).
+    pub eval: Option<EvalFn>,
+    /// Oracle kernel for `Invoke` ops (`op` is the *engine* declaration).
+    pub invoke_eval: Option<EvalFn>,
+    /// Relay→EngineIR reification template (`Relay` ops and `Flatten`).
+    pub lower: Option<fn(&mut LowerCtx) -> Result<Id, Error>>,
+    /// Engine cost spec (`Engine` ops only).
+    pub engine: Option<EngineSpec>,
+    /// Host-fallback work model for unreified `Relay` ops:
+    /// `(op, out shape, child shapes) -> ops`; default is `out.numel()`.
+    pub host_work: Option<fn(&Op, &Shape, &[&Shape]) -> f64>,
+    /// `Data` ops: true if the op materializes/moves elements (priced as
+    /// SRAM traffic), false for free addressing/views.
+    pub data_traffic: bool,
+    /// A minimal closed term exercising this op (registry tests parse,
+    /// print, type-check, evaluate, lower and cost it).
+    pub exemplar: &'static str,
+    pub exemplar_ty: ExemplarTy,
+}
+
+// ---------------------------------------------------------------------
+// Shape rules (each mirrors one oracle kernel in `crate::tensor`)
+// ---------------------------------------------------------------------
+
+fn sh_index(_op: &Op, _tys: &[&Ty]) -> Result<Ty, TypeError> {
+    Ok(Ty::Index)
+}
+
+fn sh_ibin(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
+    index(op, 0, tys)?;
+    index(op, 1, tys)?;
+    Ok(Ty::Index)
+}
+
+fn sh_leaf(op: &Op, _tys: &[&Ty]) -> Result<Ty, TypeError> {
+    match op {
+        Op::Input(_, sh) | Op::Weight(_, sh) => Ok(Ty::Tensor(sh.clone())),
+        _ => unreachable!("sh_leaf on {op}"),
+    }
+}
+
+fn sh_conv2d(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
+    let (stride, pad) = match op {
+        Op::Conv2d { stride, pad } => (*stride, *pad),
+        _ => unreachable!(),
+    };
+    let x = tensor(op, 0, tys)?;
+    let w = tensor(op, 1, tys)?;
+    if x.rank() != 3 || w.rank() != 4 {
+        return Err(shape_err(op, format!("want x rank 3, w rank 4; got {x} {w}")));
+    }
+    let (c, h, wd) = (x.dim(0), x.dim(1), x.dim(2));
+    let (kout, cin, kh, kw) = (w.dim(0), w.dim(1), w.dim(2), w.dim(3));
+    if cin != c {
+        return Err(shape_err(op, format!("channel mismatch: x{x} w{w}")));
+    }
+    let oh = out_dim(h + 2 * pad, kh, stride).ok_or_else(|| shape_err(op, "H does not tile"))?;
+    let ow = out_dim(wd + 2 * pad, kw, stride).ok_or_else(|| shape_err(op, "W does not tile"))?;
+    Ok(Ty::Tensor(Shape::new(&[kout, oh, ow])))
+}
+
+fn sh_dense(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
+    let x = tensor(op, 0, tys)?;
+    let w = tensor(op, 1, tys)?;
+    if x.rank() != 2 || w.rank() != 2 || x.dim(1) != w.dim(0) {
+        return Err(shape_err(op, format!("matmul shapes x{x} w{w}")));
+    }
+    Ok(Ty::Tensor(Shape::new(&[x.dim(0), w.dim(1)])))
+}
+
+/// Output type = child-0 tensor type (elementwise ops, `sched-reduce`,
+/// storage buffers).
+fn sh_same(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
+    Ok(Ty::Tensor(tensor(op, 0, tys)?.clone()))
+}
+
+fn sh_bias_add(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
+    let x = tensor(op, 0, tys)?;
+    let b = tensor(op, 1, tys)?;
+    if b.rank() != 1 {
+        return Err(shape_err(op, format!("bias must be rank 1, got {b}")));
+    }
+    let want = match x.rank() {
+        3 => x.dim(0),
+        2 => x.dim(1),
+        _ => return Err(shape_err(op, format!("bias-add on rank {}", x.rank()))),
+    };
+    if b.dim(0) != want {
+        return Err(shape_err(op, format!("bias {b} vs x {x}")));
+    }
+    Ok(Ty::Tensor(x.clone()))
+}
+
+fn sh_eadd(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
+    let x = tensor(op, 0, tys)?;
+    let y = tensor(op, 1, tys)?;
+    if x != y {
+        return Err(shape_err(op, format!("eadd {x} vs {y}")));
+    }
+    Ok(Ty::Tensor(x.clone()))
+}
+
+fn sh_maxpool(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
+    let (k, stride) = match op {
+        Op::MaxPool2d { k, stride } => (*k, *stride),
+        _ => unreachable!(),
+    };
+    let x = tensor(op, 0, tys)?;
+    if x.rank() != 3 {
+        return Err(shape_err(op, format!("maxpool on {x}")));
+    }
+    let oh = out_dim(x.dim(1), k, stride).ok_or_else(|| shape_err(op, "H does not tile"))?;
+    let ow = out_dim(x.dim(2), k, stride).ok_or_else(|| shape_err(op, "W does not tile"))?;
+    Ok(Ty::Tensor(Shape::new(&[x.dim(0), oh, ow])))
+}
+
+fn sh_flatten(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
+    let x = tensor(op, 0, tys)?;
+    Ok(Ty::Tensor(Shape::new(&[1, x.numel()])))
+}
+
+fn sh_gap(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
+    let x = tensor(op, 0, tys)?;
+    if x.rank() != 3 {
+        return Err(shape_err(op, format!("gap on {x}")));
+    }
+    Ok(Ty::Tensor(Shape::new(&[x.dim(0)])))
+}
+
+fn sh_bmm(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
+    let a = tensor(op, 0, tys)?;
+    let b = tensor(op, 1, tys)?;
+    if a.rank() != 3 || b.rank() != 3 || a.dim(0) != b.dim(0) || a.dim(2) != b.dim(1) {
+        return Err(shape_err(op, format!("batch-matmul shapes a{a} b{b}")));
+    }
+    Ok(Ty::Tensor(Shape::new(&[a.dim(0), a.dim(1), b.dim(2)])))
+}
+
+fn sh_transpose(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
+    let x = tensor(op, 0, tys)?;
+    if x.rank() != 2 {
+        return Err(shape_err(op, format!("transpose on rank {}", x.rank())));
+    }
+    Ok(Ty::Tensor(Shape::new(&[x.dim(1), x.dim(0)])))
+}
+
+fn sh_rowwise(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
+    let x = tensor(op, 0, tys)?;
+    if x.rank() != 1 && x.rank() != 2 {
+        return Err(shape_err(op, format!("row-wise op on rank {}", x.rank())));
+    }
+    Ok(Ty::Tensor(x.clone()))
+}
+
+fn sh_dwconv2d(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
+    let (stride, pad) = match op {
+        Op::DepthwiseConv2d { stride, pad } => (*stride, *pad),
+        _ => unreachable!(),
+    };
+    let x = tensor(op, 0, tys)?;
+    let w = tensor(op, 1, tys)?;
+    if x.rank() != 3 || w.rank() != 3 {
+        return Err(shape_err(op, format!("want x rank 3, w rank 3; got {x} {w}")));
+    }
+    if w.dim(0) != x.dim(0) {
+        return Err(shape_err(op, format!("channel mismatch: x{x} w{w}")));
+    }
+    let oh = out_dim(x.dim(1) + 2 * pad, w.dim(1), stride)
+        .ok_or_else(|| shape_err(op, "H does not tile"))?;
+    let ow = out_dim(x.dim(2) + 2 * pad, w.dim(2), stride)
+        .ok_or_else(|| shape_err(op, "W does not tile"))?;
+    Ok(Ty::Tensor(Shape::new(&[x.dim(0), oh, ow])))
+}
+
+fn sh_engine(op: &Op, _tys: &[&Ty]) -> Result<Ty, TypeError> {
+    Ok(Ty::Engine(EngineSig(op.clone())))
+}
+
+fn sh_invoke_mm(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
+    let e = engine(op, 0, tys)?;
+    let (m, k, n) = match (op.kind(), e) {
+        (OpKind::InvokeMm, Op::MmEngine { m, k, n }) => (*m, *k, *n),
+        (OpKind::InvokeMmRelu, Op::MmReluEngine { m, k, n }) => (*m, *k, *n),
+        _ => return Err(shape_err(op, format!("wrong engine {e}"))),
+    };
+    let a = tensor(op, 1, tys)?;
+    let b = tensor(op, 2, tys)?;
+    if a != &Shape::new(&[m, k]) || b != &Shape::new(&[k, n]) {
+        return Err(shape_err(op, format!("mm({m},{k},{n}) got a{a} b{b}")));
+    }
+    Ok(Ty::Tensor(Shape::new(&[m, n])))
+}
+
+/// Shared shape rule for `w`-wide unary elementwise/row invocations
+/// (relu, gelu, softmax, layernorm).
+fn sh_invoke_elem(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
+    let e = engine(op, 0, tys)?;
+    let w = match (op.kind(), e) {
+        (OpKind::InvokeRelu, Op::ReluEngine { w })
+        | (OpKind::InvokeGelu, Op::GeluEngine { w })
+        | (OpKind::InvokeSoftmax, Op::SoftmaxEngine { w })
+        | (OpKind::InvokeLayerNorm, Op::LayerNormEngine { w }) => *w,
+        _ => return Err(shape_err(op, format!("wrong engine {e}"))),
+    };
+    let x = tensor(op, 1, tys)?;
+    if x != &Shape::new(&[w]) {
+        return Err(shape_err(op, format!("elem({w}) got {x}")));
+    }
+    Ok(Ty::Tensor(x.clone()))
+}
+
+fn sh_invoke_add(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
+    let e = engine(op, 0, tys)?;
+    let w = match e {
+        Op::AddEngine { w } => *w,
+        _ => return Err(shape_err(op, format!("wrong engine {e}"))),
+    };
+    let x = tensor(op, 1, tys)?;
+    let y = tensor(op, 2, tys)?;
+    if x != &Shape::new(&[w]) || y != &Shape::new(&[w]) {
+        return Err(shape_err(op, format!("add({w}) got {x} {y}")));
+    }
+    Ok(Ty::Tensor(x.clone()))
+}
+
+fn sh_invoke_conv(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
+    let e = engine(op, 0, tys)?;
+    let (oh, ow, c, k, kh, kw, stride) = match e {
+        Op::ConvEngine { oh, ow, c, k, kh, kw, stride } => (*oh, *ow, *c, *k, *kh, *kw, *stride),
+        _ => return Err(shape_err(op, format!("wrong engine {e}"))),
+    };
+    let x = tensor(op, 1, tys)?;
+    let w = tensor(op, 2, tys)?;
+    let want_x = Shape::new(&[c, in_dim(oh, kh, stride), in_dim(ow, kw, stride)]);
+    let want_w = Shape::new(&[k, c, kh, kw]);
+    if x != &want_x || w != &want_w {
+        return Err(shape_err(
+            op,
+            format!("conv engine wants x{want_x} w{want_w}; got x{x} w{w}"),
+        ));
+    }
+    Ok(Ty::Tensor(Shape::new(&[k, oh, ow])))
+}
+
+fn sh_invoke_pool(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
+    let e = engine(op, 0, tys)?;
+    let (oh, ow, c, k, stride) = match e {
+        Op::PoolEngine { oh, ow, c, k, stride } => (*oh, *ow, *c, *k, *stride),
+        _ => return Err(shape_err(op, format!("wrong engine {e}"))),
+    };
+    let x = tensor(op, 1, tys)?;
+    let want = Shape::new(&[c, in_dim(oh, k, stride), in_dim(ow, k, stride)]);
+    if x != &want {
+        return Err(shape_err(op, format!("pool engine wants {want}; got {x}")));
+    }
+    Ok(Ty::Tensor(Shape::new(&[c, oh, ow])))
+}
+
+fn sh_invoke_dwconv(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
+    let e = engine(op, 0, tys)?;
+    let (oh, ow, c, kh, kw, stride) = match e {
+        Op::DwConvEngine { oh, ow, c, kh, kw, stride } => (*oh, *ow, *c, *kh, *kw, *stride),
+        _ => return Err(shape_err(op, format!("wrong engine {e}"))),
+    };
+    let x = tensor(op, 1, tys)?;
+    let w = tensor(op, 2, tys)?;
+    let want_x = Shape::new(&[c, in_dim(oh, kh, stride), in_dim(ow, kw, stride)]);
+    let want_w = Shape::new(&[c, kh, kw]);
+    if x != &want_x || w != &want_w {
+        return Err(shape_err(
+            op,
+            format!("dw-conv engine wants x{want_x} w{want_w}; got x{x} w{w}"),
+        ));
+    }
+    Ok(Ty::Tensor(Shape::new(&[c, oh, ow])))
+}
+
+fn sh_sched_map(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
+    let (axis, extent) = match op {
+        Op::SchedLoop { axis, extent, .. } | Op::SchedPar { axis, extent, .. } => {
+            (*axis, *extent)
+        }
+        _ => unreachable!(),
+    };
+    let b = tensor(op, 0, tys)?;
+    if axis >= b.rank() {
+        return Err(shape_err(op, format!("axis {axis} out of range for {b}")));
+    }
+    Ok(Ty::Tensor(b.with_dim(axis, b.dim(axis) * extent)))
+}
+
+fn sh_slice(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
+    let (axis, len) = match op {
+        Op::SliceAx { axis, len } => (*axis, *len),
+        _ => unreachable!(),
+    };
+    index(op, 0, tys)?;
+    let x = tensor(op, 1, tys)?;
+    if axis >= x.rank() || len > x.dim(axis) {
+        return Err(shape_err(op, format!("slice a{axis} l{len} of {x}")));
+    }
+    Ok(Ty::Tensor(x.with_dim(axis, len)))
+}
+
+fn sh_reshape(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
+    let sh = match op {
+        Op::Reshape(sh) => sh,
+        _ => unreachable!(),
+    };
+    let x = tensor(op, 0, tys)?;
+    if x.numel() != sh.numel() {
+        return Err(shape_err(op, format!("reshape {x} -> {sh}")));
+    }
+    Ok(Ty::Tensor(sh.clone()))
+}
+
+fn sh_bcast(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
+    let sh = match op {
+        Op::Bcast(sh) => sh,
+        _ => unreachable!(),
+    };
+    let b = tensor(op, 0, tys)?;
+    if b.rank() != 1 {
+        return Err(shape_err(op, format!("bcast of rank {}", b.rank())));
+    }
+    let ok = match sh.rank() {
+        3 => sh.dim(0) == b.dim(0),
+        2 => sh.dim(1) == b.dim(0),
+        1 => sh.dim(0) == b.dim(0),
+        _ => false,
+    };
+    if !ok {
+        return Err(shape_err(op, format!("bcast {b} -> {sh}")));
+    }
+    Ok(Ty::Tensor(sh.clone()))
+}
+
+fn sh_pad2d(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
+    let pad = match op {
+        Op::Pad2d { pad } => *pad,
+        _ => unreachable!(),
+    };
+    let x = tensor(op, 0, tys)?;
+    if x.rank() != 3 {
+        return Err(shape_err(op, format!("pad2d on {x}")));
+    }
+    Ok(Ty::Tensor(Shape::new(&[x.dim(0), x.dim(1) + 2 * pad, x.dim(2) + 2 * pad])))
+}
+
+fn sh_im2col(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
+    let (kh, kw, stride) = match op {
+        Op::Im2Col { kh, kw, stride } => (*kh, *kw, *stride),
+        _ => unreachable!(),
+    };
+    let x = tensor(op, 0, tys)?;
+    if x.rank() != 3 {
+        return Err(shape_err(op, format!("im2col on {x}")));
+    }
+    let oh = out_dim(x.dim(1), kh, stride).ok_or_else(|| shape_err(op, "H does not tile"))?;
+    let ow = out_dim(x.dim(2), kw, stride).ok_or_else(|| shape_err(op, "W does not tile"))?;
+    Ok(Ty::Tensor(Shape::new(&[x.dim(0) * kh * kw, oh * ow])))
+}
+
+// ---------------------------------------------------------------------
+// Reference eval kernels (Relay/Data ops; args are the child tensors)
+// ---------------------------------------------------------------------
+
+fn ev_conv2d(op: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
+    let (stride, pad) = match *op {
+        Op::Conv2d { stride, pad } => (stride, pad),
+        _ => unreachable!(),
+    };
+    let x = if pad > 0 { args[0].pad2d(pad) } else { args[0].clone() };
+    Ok(x.conv2d(&args[1], stride))
+}
+
+fn ev_matmul(_op: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
+    Ok(args[0].matmul(&args[1]))
+}
+
+fn ev_relu(_op: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
+    Ok(args[0].relu())
+}
+
+fn ev_bias_add(_op: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
+    Ok(args[0].bias_add(&args[1]))
+}
+
+fn ev_eadd(_op: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
+    Ok(args[0].eadd(&args[1]))
+}
+
+fn ev_maxpool(op: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
+    let (k, stride) = match *op {
+        Op::MaxPool2d { k, stride } => (k, stride),
+        _ => unreachable!(),
+    };
+    Ok(args[0].maxpool2d(k, stride))
+}
+
+fn ev_flatten(_op: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
+    let n = args[0].numel();
+    Ok(args[0].reshape(Shape::new(&[1, n])))
+}
+
+fn ev_gap(_op: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
+    Ok(args[0].gap())
+}
+
+fn ev_bmm(_op: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
+    Ok(args[0].batch_matmul(&args[1]))
+}
+
+fn ev_transpose(_op: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
+    Ok(args[0].transpose2())
+}
+
+fn ev_softmax(_op: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
+    Ok(args[0].softmax_last())
+}
+
+fn ev_layernorm(_op: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
+    Ok(args[0].layernorm_last(1e-5))
+}
+
+fn ev_gelu(_op: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
+    Ok(args[0].gelu())
+}
+
+fn ev_dwconv(op: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
+    let (stride, pad) = match *op {
+        Op::DepthwiseConv2d { stride, pad } => (stride, pad),
+        _ => unreachable!(),
+    };
+    let x = if pad > 0 { args[0].pad2d(pad) } else { args[0].clone() };
+    Ok(x.depthwise_conv2d(&args[1], stride))
+}
+
+fn ev_reshape(op: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
+    let sh = match op {
+        Op::Reshape(sh) => sh.clone(),
+        _ => unreachable!(),
+    };
+    Ok(args[0].reshape(sh))
+}
+
+fn ev_bcast(op: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
+    let sh = match op {
+        Op::Bcast(sh) => sh.clone(),
+        _ => unreachable!(),
+    };
+    Ok(args[0].bcast(sh))
+}
+
+fn ev_pad2d(op: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
+    let pad = match *op {
+        Op::Pad2d { pad } => pad,
+        _ => unreachable!(),
+    };
+    Ok(args[0].pad2d(pad))
+}
+
+fn ev_im2col(op: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
+    let (kh, kw, stride) = match *op {
+        Op::Im2Col { kh, kw, stride } => (kh, kw, stride),
+        _ => unreachable!(),
+    };
+    Ok(args[0].im2col(kh, kw, stride))
+}
+
+// ---------------------------------------------------------------------
+// Oracle invoke kernels (the op given is the *engine* declaration)
+// ---------------------------------------------------------------------
+
+fn iv_mm(_engine: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
+    Ok(args[0].matmul(&args[1]))
+}
+
+fn iv_mm_relu(_engine: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
+    Ok(args[0].matmul(&args[1]).relu())
+}
+
+fn iv_relu(_engine: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
+    Ok(args[0].relu())
+}
+
+fn iv_add(_engine: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
+    Ok(args[0].eadd(&args[1]))
+}
+
+fn iv_conv(engine: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
+    let stride = match engine {
+        Op::ConvEngine { stride, .. } => *stride,
+        _ => 1,
+    };
+    Ok(args[0].conv2d(&args[1], stride))
+}
+
+fn iv_pool(engine: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
+    let (k, stride) = match engine {
+        Op::PoolEngine { k, stride, .. } => (*k, *stride),
+        _ => (1, 1),
+    };
+    Ok(args[0].maxpool2d(k, stride))
+}
+
+fn iv_softmax(_engine: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
+    Ok(args[0].softmax_last())
+}
+
+fn iv_layernorm(_engine: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
+    Ok(args[0].layernorm_last(1e-5))
+}
+
+fn iv_gelu(_engine: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
+    Ok(args[0].gelu())
+}
+
+fn iv_dwconv(engine: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
+    let stride = match engine {
+        Op::DwConvEngine { stride, .. } => *stride,
+        _ => 1,
+    };
+    Ok(args[0].depthwise_conv2d(&args[1], stride))
+}
+
+// ---------------------------------------------------------------------
+// Lowering templates (paper Fig. 1 reification, one per Relay op)
+// ---------------------------------------------------------------------
+
+/// `dense`/`matmul` → `buffer (invoke-mm (mm-engine m k n) a b)`.
+fn lo_mm(cx: &mut LowerCtx) -> Result<Id, Error> {
+    let x = cx.child_shape(0)?;
+    let w = cx.child_shape(1)?;
+    let (m, k, n) = (x.dim(0), x.dim(1), w.dim(1));
+    let a = cx.kid(0);
+    let b = cx.kid(1);
+    let e = cx.add_leaf(Op::MmEngine { m, k, n });
+    let inv = cx.add(Op::InvokeMm, &[e, a, b]);
+    Ok(cx.buffered(inv))
+}
+
+/// Shared template for whole-tensor elementwise units (relu, gelu):
+/// flatten → invoke on a numel-wide engine → reshape back.
+fn lo_elementwise(cx: &mut LowerCtx, mk_engine: fn(usize) -> Op, invoke: Op) -> Result<Id, Error> {
+    let s = cx.out_shape()?;
+    let xs = cx.child_shape(0)?;
+    let x0 = cx.kid(0);
+    let e = cx.add_leaf(mk_engine(s.numel()));
+    let xin = cx.flat(x0, &xs);
+    let inv = cx.add(invoke, &[e, xin]);
+    let backed = cx.unflat(inv, &s);
+    Ok(cx.buffered(backed))
+}
+
+fn lo_relu(cx: &mut LowerCtx) -> Result<Id, Error> {
+    lo_elementwise(cx, |w| Op::ReluEngine { w }, Op::InvokeRelu)
+}
+
+fn lo_gelu(cx: &mut LowerCtx) -> Result<Id, Error> {
+    lo_elementwise(cx, |w| Op::GeluEngine { w }, Op::InvokeGelu)
+}
+
+fn lo_eadd(cx: &mut LowerCtx) -> Result<Id, Error> {
+    let s = cx.out_shape()?;
+    let s0 = cx.child_shape(0)?;
+    let s1 = cx.child_shape(1)?;
+    let a0 = cx.kid(0);
+    let b0 = cx.kid(1);
+    let e = cx.add_leaf(Op::AddEngine { w: s.numel() });
+    let a = cx.flat(a0, &s0);
+    let b = cx.flat(b0, &s1);
+    let inv = cx.add(Op::InvokeAdd, &[e, a, b]);
+    let backed = cx.unflat(inv, &s);
+    Ok(cx.buffered(backed))
+}
+
+fn lo_bias_add(cx: &mut LowerCtx) -> Result<Id, Error> {
+    let s = cx.out_shape()?;
+    let s0 = cx.child_shape(0)?;
+    let a0 = cx.kid(0);
+    let b0 = cx.kid(1);
+    let e = cx.add_leaf(Op::AddEngine { w: s.numel() });
+    let a = cx.flat(a0, &s0);
+    let bb = cx.add(Op::Bcast(s.clone()), &[b0]);
+    let b = cx.flat(bb, &s);
+    let inv = cx.add(Op::InvokeAdd, &[e, a, b]);
+    let backed = cx.unflat(inv, &s);
+    Ok(cx.buffered(backed))
+}
+
+fn lo_conv2d(cx: &mut LowerCtx) -> Result<Id, Error> {
+    let (stride, pad) = match *cx.op() {
+        Op::Conv2d { stride, pad } => (stride, pad),
+        _ => unreachable!(),
+    };
+    let x = cx.child_shape(0)?;
+    let w = cx.child_shape(1)?;
+    let o = cx.out_shape()?;
+    let (c, k, kh, kw) = (x.dim(0), w.dim(0), w.dim(2), w.dim(3));
+    let (oh, ow) = (o.dim(1), o.dim(2));
+    debug_assert_eq!(in_dim(oh, kh, stride), x.dim(1) + 2 * pad);
+    let x0 = cx.kid(0);
+    let w0 = cx.kid(1);
+    let e = cx.add_leaf(Op::ConvEngine { oh, ow, c, k, kh, kw, stride });
+    let xin = if pad > 0 { cx.add(Op::Pad2d { pad }, &[x0]) } else { x0 };
+    let inv = cx.add(Op::InvokeConv, &[e, xin, w0]);
+    Ok(cx.buffered(inv))
+}
+
+fn lo_maxpool(cx: &mut LowerCtx) -> Result<Id, Error> {
+    let (k, stride) = match *cx.op() {
+        Op::MaxPool2d { k, stride } => (k, stride),
+        _ => unreachable!(),
+    };
+    let x = cx.child_shape(0)?;
+    let o = cx.out_shape()?;
+    let x0 = cx.kid(0);
+    let e = cx.add_leaf(Op::PoolEngine {
+        oh: o.dim(1),
+        ow: o.dim(2),
+        c: x.dim(0),
+        k,
+        stride,
+    });
+    let inv = cx.add(Op::InvokePool, &[e, x0]);
+    Ok(cx.buffered(inv))
+}
+
+fn lo_flatten(cx: &mut LowerCtx) -> Result<Id, Error> {
+    let s = cx.out_shape()?;
+    let x0 = cx.kid(0);
+    Ok(cx.add(Op::Reshape(s), &[x0]))
+}
+
+/// Shared template for row-coupled units (softmax, layernorm): rank-1
+/// tensors invoke directly; rank-2 tensors become a `sched-loop` over
+/// per-row invocations — the initial design point already exposes a
+/// schedule the `parallelize` rewrite can act on.
+fn lo_rowwise(cx: &mut LowerCtx, mk_engine: fn(usize) -> Op, invoke: Op) -> Result<Id, Error> {
+    let s = cx.out_shape()?;
+    match s.rank() {
+        1 => {
+            let x0 = cx.kid(0);
+            let e = cx.add_leaf(mk_engine(s.dim(0)));
+            let inv = cx.add(invoke, &[e, x0]);
+            Ok(cx.buffered(inv))
+        }
+        2 => {
+            let (m, n) = (s.dim(0), s.dim(1));
+            let var = Symbol::fresh("rw");
+            let x0 = cx.kid(0);
+            let sl = cx.loop_slice(var, 0, 1, 1, x0);
+            let row = cx.add(Op::Reshape(Shape::new(&[n])), &[sl]);
+            let e = cx.add_leaf(mk_engine(n));
+            let inv = cx.add(invoke, &[e, row]);
+            let back = cx.add(Op::Reshape(Shape::new(&[1, n])), &[inv]);
+            let lp = cx.add(Op::SchedLoop { var, axis: 0, extent: m }, &[back]);
+            Ok(cx.buffered(lp))
+        }
+        r => Err(cx.lower_err(format!("row-wise op on rank {r}"))),
+    }
+}
+
+fn lo_softmax(cx: &mut LowerCtx) -> Result<Id, Error> {
+    lo_rowwise(cx, |w| Op::SoftmaxEngine { w }, Op::InvokeSoftmax)
+}
+
+fn lo_layernorm(cx: &mut LowerCtx) -> Result<Id, Error> {
+    lo_rowwise(cx, |w| Op::LayerNormEngine { w }, Op::InvokeLayerNorm)
+}
+
+/// `batch-matmul` → `sched-loop` over the batch with per-slice `invoke-mm`
+/// (the mm engine is shared across iterations by hashconsing; mm split
+/// rewrites then apply inside the loop).
+fn lo_bmm(cx: &mut LowerCtx) -> Result<Id, Error> {
+    let a = cx.child_shape(0)?;
+    let b = cx.child_shape(1)?;
+    let (bt, m, k, n) = (a.dim(0), a.dim(1), a.dim(2), b.dim(2));
+    let var = Symbol::fresh("b");
+    let a0 = cx.kid(0);
+    let b0 = cx.kid(1);
+    let sa = cx.loop_slice(var, 0, 1, 1, a0);
+    let sb = cx.loop_slice(var, 0, 1, 1, b0);
+    let ra = cx.add(Op::Reshape(Shape::new(&[m, k])), &[sa]);
+    let rb = cx.add(Op::Reshape(Shape::new(&[k, n])), &[sb]);
+    let e = cx.add_leaf(Op::MmEngine { m, k, n });
+    let inv = cx.add(Op::InvokeMm, &[e, ra, rb]);
+    let back = cx.add(Op::Reshape(Shape::new(&[1, m, n])), &[inv]);
+    let lp = cx.add(Op::SchedLoop { var, axis: 0, extent: bt }, &[back]);
+    Ok(cx.buffered(lp))
+}
+
+fn lo_dwconv(cx: &mut LowerCtx) -> Result<Id, Error> {
+    let (stride, pad) = match *cx.op() {
+        Op::DepthwiseConv2d { stride, pad } => (stride, pad),
+        _ => unreachable!(),
+    };
+    let x = cx.child_shape(0)?;
+    let w = cx.child_shape(1)?;
+    let o = cx.out_shape()?;
+    let x0 = cx.kid(0);
+    let w0 = cx.kid(1);
+    let e = cx.add_leaf(Op::DwConvEngine {
+        oh: o.dim(1),
+        ow: o.dim(2),
+        c: x.dim(0),
+        kh: w.dim(1),
+        kw: w.dim(2),
+        stride,
+    });
+    let xin = if pad > 0 { cx.add(Op::Pad2d { pad }, &[x0]) } else { x0 };
+    let inv = cx.add(Op::InvokeDwConv, &[e, xin, w0]);
+    Ok(cx.buffered(inv))
+}
+
+// ---------------------------------------------------------------------
+// Host-fallback work models (unreified Relay ops; default out.numel())
+// ---------------------------------------------------------------------
+
+fn hw_mm(_op: &Op, out: &Shape, ch: &[&Shape]) -> f64 {
+    out.numel() as f64 * ch[0].dim(1) as f64
+}
+
+fn hw_bmm(_op: &Op, out: &Shape, ch: &[&Shape]) -> f64 {
+    out.numel() as f64 * ch[0].dim(2) as f64
+}
+
+fn hw_conv(_op: &Op, out: &Shape, ch: &[&Shape]) -> f64 {
+    out.numel() as f64 * (ch[1].dim(1) * ch[1].dim(2) * ch[1].dim(3)) as f64
+}
+
+fn hw_dwconv(_op: &Op, out: &Shape, ch: &[&Shape]) -> f64 {
+    out.numel() as f64 * (ch[1].dim(1) * ch[1].dim(2)) as f64
+}
+
+fn hw_rowwise(_op: &Op, out: &Shape, _ch: &[&Shape]) -> f64 {
+    // Multi-pass row reductions (max/exp/sum or mean/var/normalize).
+    4.0 * out.numel() as f64
+}
+
+// ---------------------------------------------------------------------
+// Engine cost specs
+// ---------------------------------------------------------------------
+
+fn mm_params(op: &Op) -> (usize, usize, usize) {
+    match *op {
+        Op::MmEngine { m, k, n } | Op::MmReluEngine { m, k, n } => (m, k, n),
+        _ => unreachable!("mm_params on {op}"),
+    }
+}
+
+fn mm_macs(op: &Op) -> u64 {
+    let (m, k, n) = mm_params(op);
+    (m * k * n) as u64
+}
+
+fn mm_io(op: &Op) -> f64 {
+    let (m, k, n) = mm_params(op);
+    (m * k + k * n + m * n) as f64
+}
+
+fn mm_merge(a: &Op, b: &Op) -> Op {
+    let (m, k, n) = mm_params(a);
+    let (m2, k2, n2) = mm_params(b);
+    let (m, k, n) = (m.max(m2), k.max(k2), n.max(n2));
+    match a {
+        Op::MmEngine { .. } => Op::MmEngine { m, k, n },
+        _ => Op::MmReluEngine { m, k, n },
+    }
+}
+
+fn mm_out(op: &Op) -> Shape {
+    let (m, _, n) = mm_params(op);
+    Shape::new(&[m, n])
+}
+
+/// Width of a `w`-parameterized vector/row engine.
+fn w_param(op: &Op) -> usize {
+    match *op {
+        Op::ReluEngine { w }
+        | Op::AddEngine { w }
+        | Op::GeluEngine { w }
+        | Op::SoftmaxEngine { w }
+        | Op::LayerNormEngine { w } => w,
+        _ => unreachable!("w_param on {op}"),
+    }
+}
+
+fn w_macs(op: &Op) -> u64 {
+    w_param(op) as u64
+}
+
+/// Softmax/layernorm do several passes over the row (max/exp/sum or
+/// mean/var/normalize): charge 4 lanes-worth per element.
+fn w_macs_x4(op: &Op) -> u64 {
+    4 * w_param(op) as u64
+}
+
+fn w_io2(op: &Op) -> f64 {
+    2.0 * w_param(op) as f64
+}
+
+fn w_io3(op: &Op) -> f64 {
+    3.0 * w_param(op) as f64
+}
+
+fn w_merge(a: &Op, b: &Op) -> Op {
+    let w = w_param(a).max(w_param(b));
+    match a {
+        Op::ReluEngine { .. } => Op::ReluEngine { w },
+        Op::AddEngine { .. } => Op::AddEngine { w },
+        Op::GeluEngine { .. } => Op::GeluEngine { w },
+        Op::SoftmaxEngine { .. } => Op::SoftmaxEngine { w },
+        Op::LayerNormEngine { .. } => Op::LayerNormEngine { w },
+        _ => unreachable!(),
+    }
+}
+
+fn w_out(op: &Op) -> Shape {
+    Shape::new(&[w_param(op)])
+}
+
+fn conv_macs(op: &Op) -> u64 {
+    match *op {
+        Op::ConvEngine { oh, ow, c, k, kh, kw, .. } => (oh * ow * c * k * kh * kw) as u64,
+        _ => unreachable!(),
+    }
+}
+
+fn conv_io(op: &Op) -> f64 {
+    match *op {
+        Op::ConvEngine { oh, ow, c, k, kh, kw, stride } => {
+            let ih = in_dim(oh, kh, stride);
+            let iw = in_dim(ow, kw, stride);
+            (c * ih * iw + k * c * kh * kw + k * oh * ow) as f64
+        }
+        _ => unreachable!(),
+    }
+}
+
+fn conv_merge(a: &Op, b: &Op) -> Op {
+    match (a, b) {
+        (
+            Op::ConvEngine { oh, ow, c, k, kh, kw, stride },
+            Op::ConvEngine { oh: a1, ow: a2, c: a3, k: a4, kh: a5, kw: a6, stride: _ },
+        ) => Op::ConvEngine {
+            oh: (*oh).max(*a1),
+            ow: (*ow).max(*a2),
+            c: (*c).max(*a3),
+            k: (*k).max(*a4),
+            kh: (*kh).max(*a5),
+            kw: (*kw).max(*a6),
+            stride: *stride,
+        },
+        _ => unreachable!(),
+    }
+}
+
+fn conv_out(op: &Op) -> Shape {
+    match *op {
+        Op::ConvEngine { oh, ow, k, .. } => Shape::new(&[k, oh, ow]),
+        _ => unreachable!(),
+    }
+}
+
+fn pool_macs(op: &Op) -> u64 {
+    match *op {
+        Op::PoolEngine { oh, ow, c, k, .. } => (oh * ow * c * k * k) as u64,
+        _ => unreachable!(),
+    }
+}
+
+fn pool_io(op: &Op) -> f64 {
+    match *op {
+        Op::PoolEngine { oh, ow, c, k, stride } => {
+            let ih = in_dim(oh, k, stride);
+            let iw = in_dim(ow, k, stride);
+            (c * ih * iw + c * oh * ow) as f64
+        }
+        _ => unreachable!(),
+    }
+}
+
+fn pool_merge(a: &Op, b: &Op) -> Op {
+    match (a, b) {
+        (
+            Op::PoolEngine { oh, ow, c, k, stride },
+            Op::PoolEngine { oh: b1, ow: b2, c: b3, k: b4, stride: _ },
+        ) => Op::PoolEngine {
+            oh: (*oh).max(*b1),
+            ow: (*ow).max(*b2),
+            c: (*c).max(*b3),
+            k: (*k).max(*b4),
+            stride: *stride,
+        },
+        _ => unreachable!(),
+    }
+}
+
+fn pool_out(op: &Op) -> Shape {
+    match *op {
+        Op::PoolEngine { oh, ow, c, .. } => Shape::new(&[c, oh, ow]),
+        _ => unreachable!(),
+    }
+}
+
+fn dwconv_macs(op: &Op) -> u64 {
+    match *op {
+        Op::DwConvEngine { oh, ow, c, kh, kw, .. } => (oh * ow * c * kh * kw) as u64,
+        _ => unreachable!(),
+    }
+}
+
+fn dwconv_io(op: &Op) -> f64 {
+    match *op {
+        Op::DwConvEngine { oh, ow, c, kh, kw, stride } => {
+            let ih = in_dim(oh, kh, stride);
+            let iw = in_dim(ow, kw, stride);
+            (c * ih * iw + c * kh * kw + c * oh * ow) as f64
+        }
+        _ => unreachable!(),
+    }
+}
+
+fn dwconv_merge(a: &Op, b: &Op) -> Op {
+    match (a, b) {
+        (
+            Op::DwConvEngine { oh, ow, c, kh, kw, stride },
+            Op::DwConvEngine { oh: b1, ow: b2, c: b3, kh: b4, kw: b5, stride: _ },
+        ) => Op::DwConvEngine {
+            oh: (*oh).max(*b1),
+            ow: (*ow).max(*b2),
+            c: (*c).max(*b3),
+            kh: (*kh).max(*b4),
+            kw: (*kw).max(*b5),
+            stride: *stride,
+        },
+        _ => unreachable!(),
+    }
+}
+
+fn dwconv_out(op: &Op) -> Shape {
+    match *op {
+        Op::DwConvEngine { oh, ow, c, .. } => Shape::new(&[c, oh, ow]),
+        _ => unreachable!(),
+    }
+}
+
+// ---------------------------------------------------------------------
+// The registry
+// ---------------------------------------------------------------------
+
+use self::AttrKind as A;
+use self::ExemplarTy as X;
+use self::OpClass as C;
+
+/// Baseline entry: unit op of the given class. Entries override fields via
+/// struct-update syntax.
+fn base(
+    kind: OpKind,
+    name: &'static str,
+    arity: usize,
+    class: OpClass,
+    shape: fn(&Op, &[&Ty]) -> Result<Ty, TypeError>,
+) -> OpSpec {
+    OpSpec {
+        kind,
+        name,
+        arity,
+        class,
+        attrs: &[],
+        attrs_of: |_| Vec::new(),
+        from_attrs: |_| None,
+        shape,
+        eval: None,
+        invoke_eval: None,
+        lower: None,
+        engine: None,
+        host_work: None,
+        data_traffic: false,
+        exemplar: "",
+        exemplar_ty: X::Index,
+    }
+}
+
+const MM_COST: EngineSpec = EngineSpec {
+    macs: mm_macs,
+    area: AreaClass::Mac,
+    io: mm_io,
+    merge_max: mm_merge,
+    out_shape: mm_out,
+};
+
+const CONV_COST: EngineSpec = EngineSpec {
+    macs: conv_macs,
+    area: AreaClass::Mac,
+    io: conv_io,
+    merge_max: conv_merge,
+    out_shape: conv_out,
+};
+
+const POOL_COST: EngineSpec = EngineSpec {
+    macs: pool_macs,
+    area: AreaClass::Lane,
+    io: pool_io,
+    merge_max: pool_merge,
+    out_shape: pool_out,
+};
+
+const DWCONV_COST: EngineSpec = EngineSpec {
+    macs: dwconv_macs,
+    area: AreaClass::Mac,
+    io: dwconv_io,
+    merge_max: dwconv_merge,
+    out_shape: dwconv_out,
+};
+
+/// Lane-class `w`-wide engine cost spec (relu/add/gelu: `macs` = `w`).
+const LANE_COST: EngineSpec = EngineSpec {
+    macs: w_macs,
+    area: AreaClass::Lane,
+    io: w_io2,
+    merge_max: w_merge,
+    out_shape: w_out,
+};
+
+/// Row-reduction engines (softmax/layernorm): multi-pass, 4 lanes/element.
+const ROW_COST: EngineSpec = EngineSpec {
+    macs: w_macs_x4,
+    area: AreaClass::Lane,
+    io: w_io2,
+    merge_max: w_merge,
+    out_shape: w_out,
+};
+
+fn build_specs() -> Vec<OpSpec> {
+    vec![
+        // ---- index scalars ------------------------------------------------
+        OpSpec {
+            attrs: &[("", A::I)],
+            attrs_of: |op| match op {
+                Op::Int(v) => vec![AttrVal::I(*v)],
+                _ => unreachable!(),
+            },
+            from_attrs: |a| Some(Op::Int(a[0].i()?)),
+            exemplar: "7",
+            ..base(OpKind::Int, "int", 0, C::Index, sh_index)
+        },
+        OpSpec {
+            attrs: &[("", A::Sym)],
+            attrs_of: |op| match op {
+                Op::LVar(s) => vec![AttrVal::Sym(*s)],
+                _ => unreachable!(),
+            },
+            from_attrs: |a| Some(Op::LVar(a[0].sym()?)),
+            exemplar: "(lvar i)",
+            ..base(OpKind::LVar, "lvar", 0, C::Index, sh_index)
+        },
+        OpSpec {
+            from_attrs: |_| Some(Op::IMul),
+            exemplar: "(imul 2 3)",
+            ..base(OpKind::IMul, "imul", 2, C::Index, sh_ibin)
+        },
+        OpSpec {
+            from_attrs: |_| Some(Op::IAdd),
+            exemplar: "(iadd 2 3)",
+            ..base(OpKind::IAdd, "iadd", 2, C::Index, sh_ibin)
+        },
+        // ---- workload tensor leaves --------------------------------------
+        OpSpec {
+            attrs: &[("", A::Sym), ("", A::Sh)],
+            attrs_of: |op| match op {
+                Op::Input(s, sh) => vec![AttrVal::Sym(*s), AttrVal::Sh(sh.clone())],
+                _ => unreachable!(),
+            },
+            from_attrs: |a| Some(Op::Input(a[0].sym()?, a[1].sh()?.clone())),
+            exemplar: "(input x [4 4])",
+            exemplar_ty: X::Tensor(&[4, 4]),
+            ..base(OpKind::Input, "input", 0, C::Leaf, sh_leaf)
+        },
+        OpSpec {
+            attrs: &[("", A::Sym), ("", A::Sh)],
+            attrs_of: |op| match op {
+                Op::Weight(s, sh) => vec![AttrVal::Sym(*s), AttrVal::Sh(sh.clone())],
+                _ => unreachable!(),
+            },
+            from_attrs: |a| Some(Op::Weight(a[0].sym()?, a[1].sh()?.clone())),
+            exemplar: "(weight w [8])",
+            exemplar_ty: X::Tensor(&[8]),
+            ..base(OpKind::Weight, "weight", 0, C::Leaf, sh_leaf)
+        },
+        // ---- Relay-level compute -----------------------------------------
+        OpSpec {
+            attrs: &[("s", A::U), ("p", A::U)],
+            attrs_of: |op| match op {
+                Op::Conv2d { stride, pad } => vec![AttrVal::U(*stride), AttrVal::U(*pad)],
+                _ => unreachable!(),
+            },
+            from_attrs: |a| Some(Op::Conv2d { stride: a[0].u()?, pad: a[1].u()? }),
+            eval: Some(ev_conv2d),
+            lower: Some(lo_conv2d),
+            host_work: Some(hw_conv),
+            exemplar: "(conv2d 1 0 (input x [3 8 8]) (weight w [4 3 3 3]))",
+            exemplar_ty: X::Tensor(&[4, 6, 6]),
+            ..base(OpKind::Conv2d, "conv2d", 2, C::Relay, sh_conv2d)
+        },
+        OpSpec {
+            from_attrs: |_| Some(Op::Dense),
+            eval: Some(ev_matmul),
+            lower: Some(lo_mm),
+            host_work: Some(hw_mm),
+            exemplar: "(dense (input x [2 8]) (weight w [8 4]))",
+            exemplar_ty: X::Tensor(&[2, 4]),
+            ..base(OpKind::Dense, "dense", 2, C::Relay, sh_dense)
+        },
+        OpSpec {
+            from_attrs: |_| Some(Op::Relu),
+            eval: Some(ev_relu),
+            lower: Some(lo_relu),
+            exemplar: "(relu (input x [8]))",
+            exemplar_ty: X::Tensor(&[8]),
+            ..base(OpKind::Relu, "relu", 1, C::Relay, sh_same)
+        },
+        OpSpec {
+            from_attrs: |_| Some(Op::BiasAdd),
+            eval: Some(ev_bias_add),
+            lower: Some(lo_bias_add),
+            exemplar: "(bias-add (input x [2 4]) (weight b [4]))",
+            exemplar_ty: X::Tensor(&[2, 4]),
+            ..base(OpKind::BiasAdd, "bias-add", 2, C::Relay, sh_bias_add)
+        },
+        OpSpec {
+            from_attrs: |_| Some(Op::EAdd),
+            eval: Some(ev_eadd),
+            lower: Some(lo_eadd),
+            exemplar: "(eadd (input x [4]) (input y [4]))",
+            exemplar_ty: X::Tensor(&[4]),
+            ..base(OpKind::EAdd, "eadd", 2, C::Relay, sh_eadd)
+        },
+        OpSpec {
+            attrs: &[("k", A::U), ("s", A::U)],
+            attrs_of: |op| match op {
+                Op::MaxPool2d { k, stride } => vec![AttrVal::U(*k), AttrVal::U(*stride)],
+                _ => unreachable!(),
+            },
+            from_attrs: |a| Some(Op::MaxPool2d { k: a[0].u()?, stride: a[1].u()? }),
+            eval: Some(ev_maxpool),
+            lower: Some(lo_maxpool),
+            exemplar: "(maxpool2d 2 2 (input x [3 8 8]))",
+            exemplar_ty: X::Tensor(&[3, 4, 4]),
+            ..base(OpKind::MaxPool2d, "maxpool2d", 1, C::Relay, sh_maxpool)
+        },
+        OpSpec {
+            from_attrs: |_| Some(Op::Flatten),
+            eval: Some(ev_flatten),
+            lower: Some(lo_flatten),
+            exemplar: "(flatten (input x [2 3]))",
+            exemplar_ty: X::Tensor(&[1, 6]),
+            ..base(OpKind::Flatten, "flatten", 1, C::Relay, sh_flatten)
+        },
+        OpSpec {
+            from_attrs: |_| Some(Op::GlobalAvgPool),
+            eval: Some(ev_gap),
+            lower: None, // no engine form yet: gap stays host-side
+            exemplar: "(gap (input x [3 4 4]))",
+            exemplar_ty: X::Tensor(&[3]),
+            ..base(OpKind::GlobalAvgPool, "gap", 1, C::Relay, sh_gap)
+        },
+        // ---- engines ------------------------------------------------------
+        OpSpec {
+            attrs: &[("", A::U), ("", A::U), ("", A::U)],
+            attrs_of: |op| match op {
+                Op::MmEngine { m, k, n } => {
+                    vec![AttrVal::U(*m), AttrVal::U(*k), AttrVal::U(*n)]
+                }
+                _ => unreachable!(),
+            },
+            from_attrs: |a| Some(Op::MmEngine { m: a[0].u()?, k: a[1].u()?, n: a[2].u()? }),
+            engine: Some(MM_COST),
+            exemplar: "(mm-engine 4 4 4)",
+            exemplar_ty: X::Engine,
+            ..base(OpKind::MmEngine, "mm-engine", 0, C::Engine, sh_engine)
+        },
+        OpSpec {
+            attrs: &[("", A::U), ("", A::U), ("", A::U)],
+            attrs_of: |op| match op {
+                Op::MmReluEngine { m, k, n } => {
+                    vec![AttrVal::U(*m), AttrVal::U(*k), AttrVal::U(*n)]
+                }
+                _ => unreachable!(),
+            },
+            from_attrs: |a| {
+                Some(Op::MmReluEngine { m: a[0].u()?, k: a[1].u()?, n: a[2].u()? })
+            },
+            engine: Some(MM_COST),
+            exemplar: "(mm-relu-engine 4 4 4)",
+            exemplar_ty: X::Engine,
+            ..base(OpKind::MmReluEngine, "mm-relu-engine", 0, C::Engine, sh_engine)
+        },
+        OpSpec {
+            attrs: &[("", A::U)],
+            attrs_of: |op| match op {
+                Op::ReluEngine { w } => vec![AttrVal::U(*w)],
+                _ => unreachable!(),
+            },
+            from_attrs: |a| Some(Op::ReluEngine { w: a[0].u()? }),
+            engine: Some(LANE_COST),
+            exemplar: "(relu-engine 8)",
+            exemplar_ty: X::Engine,
+            ..base(OpKind::ReluEngine, "relu-engine", 0, C::Engine, sh_engine)
+        },
+        OpSpec {
+            attrs: &[("", A::U)],
+            attrs_of: |op| match op {
+                Op::AddEngine { w } => vec![AttrVal::U(*w)],
+                _ => unreachable!(),
+            },
+            from_attrs: |a| Some(Op::AddEngine { w: a[0].u()? }),
+            engine: Some(EngineSpec { io: w_io3, ..LANE_COST }),
+            exemplar: "(add-engine 8)",
+            exemplar_ty: X::Engine,
+            ..base(OpKind::AddEngine, "add-engine", 0, C::Engine, sh_engine)
+        },
+        OpSpec {
+            attrs: &[
+                ("", A::U),
+                ("", A::U),
+                ("", A::U),
+                ("", A::U),
+                ("", A::U),
+                ("", A::U),
+                ("", A::U),
+            ],
+            attrs_of: |op| match op {
+                Op::ConvEngine { oh, ow, c, k, kh, kw, stride } => vec![
+                    AttrVal::U(*oh),
+                    AttrVal::U(*ow),
+                    AttrVal::U(*c),
+                    AttrVal::U(*k),
+                    AttrVal::U(*kh),
+                    AttrVal::U(*kw),
+                    AttrVal::U(*stride),
+                ],
+                _ => unreachable!(),
+            },
+            from_attrs: |a| {
+                Some(Op::ConvEngine {
+                    oh: a[0].u()?,
+                    ow: a[1].u()?,
+                    c: a[2].u()?,
+                    k: a[3].u()?,
+                    kh: a[4].u()?,
+                    kw: a[5].u()?,
+                    stride: a[6].u()?,
+                })
+            },
+            engine: Some(CONV_COST),
+            exemplar: "(conv-engine 2 2 3 4 3 3 1)",
+            exemplar_ty: X::Engine,
+            ..base(OpKind::ConvEngine, "conv-engine", 0, C::Engine, sh_engine)
+        },
+        OpSpec {
+            attrs: &[("", A::U), ("", A::U), ("", A::U), ("", A::U), ("", A::U)],
+            attrs_of: |op| match op {
+                Op::PoolEngine { oh, ow, c, k, stride } => vec![
+                    AttrVal::U(*oh),
+                    AttrVal::U(*ow),
+                    AttrVal::U(*c),
+                    AttrVal::U(*k),
+                    AttrVal::U(*stride),
+                ],
+                _ => unreachable!(),
+            },
+            from_attrs: |a| {
+                Some(Op::PoolEngine {
+                    oh: a[0].u()?,
+                    ow: a[1].u()?,
+                    c: a[2].u()?,
+                    k: a[3].u()?,
+                    stride: a[4].u()?,
+                })
+            },
+            engine: Some(POOL_COST),
+            exemplar: "(pool-engine 2 2 3 2 2)",
+            exemplar_ty: X::Engine,
+            ..base(OpKind::PoolEngine, "pool-engine", 0, C::Engine, sh_engine)
+        },
+        // ---- invocations --------------------------------------------------
+        OpSpec {
+            from_attrs: |_| Some(Op::InvokeMm),
+            invoke_eval: Some(iv_mm),
+            exemplar: "(invoke-mm (mm-engine 2 4 2) (input a [2 4]) (weight b [4 2]))",
+            exemplar_ty: X::Tensor(&[2, 2]),
+            ..base(OpKind::InvokeMm, "invoke-mm", 3, C::Invoke, sh_invoke_mm)
+        },
+        OpSpec {
+            from_attrs: |_| Some(Op::InvokeMmRelu),
+            invoke_eval: Some(iv_mm_relu),
+            exemplar: "(invoke-mm-relu (mm-relu-engine 2 4 2) (input a [2 4]) (weight b [4 2]))",
+            exemplar_ty: X::Tensor(&[2, 2]),
+            ..base(OpKind::InvokeMmRelu, "invoke-mm-relu", 3, C::Invoke, sh_invoke_mm)
+        },
+        OpSpec {
+            from_attrs: |_| Some(Op::InvokeRelu),
+            invoke_eval: Some(iv_relu),
+            exemplar: "(invoke-relu (relu-engine 8) (input x [8]))",
+            exemplar_ty: X::Tensor(&[8]),
+            ..base(OpKind::InvokeRelu, "invoke-relu", 2, C::Invoke, sh_invoke_elem)
+        },
+        OpSpec {
+            from_attrs: |_| Some(Op::InvokeAdd),
+            invoke_eval: Some(iv_add),
+            exemplar: "(invoke-add (add-engine 4) (input x [4]) (input y [4]))",
+            exemplar_ty: X::Tensor(&[4]),
+            ..base(OpKind::InvokeAdd, "invoke-add", 3, C::Invoke, sh_invoke_add)
+        },
+        OpSpec {
+            from_attrs: |_| Some(Op::InvokeConv),
+            invoke_eval: Some(iv_conv),
+            exemplar: "(invoke-conv (conv-engine 2 2 3 4 3 3 1) (input x [3 4 4]) (weight w [4 3 3 3]))",
+            exemplar_ty: X::Tensor(&[4, 2, 2]),
+            ..base(OpKind::InvokeConv, "invoke-conv", 3, C::Invoke, sh_invoke_conv)
+        },
+        OpSpec {
+            from_attrs: |_| Some(Op::InvokePool),
+            invoke_eval: Some(iv_pool),
+            exemplar: "(invoke-pool (pool-engine 2 2 3 2 2) (input x [3 4 4]))",
+            exemplar_ty: X::Tensor(&[3, 2, 2]),
+            ..base(OpKind::InvokePool, "invoke-pool", 2, C::Invoke, sh_invoke_pool)
+        },
+        // ---- schedules ----------------------------------------------------
+        OpSpec {
+            attrs: &[("", A::Sym), ("a", A::U), ("x", A::U)],
+            attrs_of: |op| match op {
+                Op::SchedLoop { var, axis, extent } => {
+                    vec![AttrVal::Sym(*var), AttrVal::U(*axis), AttrVal::U(*extent)]
+                }
+                _ => unreachable!(),
+            },
+            from_attrs: |a| {
+                Some(Op::SchedLoop { var: a[0].sym()?, axis: a[1].u()?, extent: a[2].u()? })
+            },
+            exemplar: "(sched-loop i 0 2 (slice 0 2 (imul (lvar i) 2) (input x [4])))",
+            exemplar_ty: X::Tensor(&[4]),
+            ..base(OpKind::SchedLoop, "sched-loop", 1, C::Sched, sh_sched_map)
+        },
+        OpSpec {
+            attrs: &[("", A::Sym), ("a", A::U), ("x", A::U)],
+            attrs_of: |op| match op {
+                Op::SchedPar { var, axis, extent } => {
+                    vec![AttrVal::Sym(*var), AttrVal::U(*axis), AttrVal::U(*extent)]
+                }
+                _ => unreachable!(),
+            },
+            from_attrs: |a| {
+                Some(Op::SchedPar { var: a[0].sym()?, axis: a[1].u()?, extent: a[2].u()? })
+            },
+            exemplar: "(sched-par i 0 2 (slice 0 2 (imul (lvar i) 2) (input x [4])))",
+            exemplar_ty: X::Tensor(&[4]),
+            ..base(OpKind::SchedPar, "sched-par", 1, C::Sched, sh_sched_map)
+        },
+        OpSpec {
+            attrs: &[("", A::Sym), ("x", A::U)],
+            attrs_of: |op| match op {
+                Op::SchedReduce { var, extent } => {
+                    vec![AttrVal::Sym(*var), AttrVal::U(*extent)]
+                }
+                _ => unreachable!(),
+            },
+            from_attrs: |a| Some(Op::SchedReduce { var: a[0].sym()?, extent: a[1].u()? }),
+            exemplar: "(sched-reduce r 2 (slice 0 2 (imul (lvar r) 2) (input x [4])))",
+            exemplar_ty: X::Tensor(&[2]),
+            ..base(OpKind::SchedReduce, "sched-reduce", 1, C::Sched, sh_same)
+        },
+        // ---- data movement & storage -------------------------------------
+        OpSpec {
+            attrs: &[("a", A::U), ("l", A::U)],
+            attrs_of: |op| match op {
+                Op::SliceAx { axis, len } => vec![AttrVal::U(*axis), AttrVal::U(*len)],
+                _ => unreachable!(),
+            },
+            from_attrs: |a| Some(Op::SliceAx { axis: a[0].u()?, len: a[1].u()? }),
+            exemplar: "(slice 0 2 1 (input x [4]))",
+            exemplar_ty: X::Tensor(&[2]),
+            ..base(OpKind::SliceAx, "slice", 2, C::Data, sh_slice)
+        },
+        OpSpec {
+            attrs: &[("", A::Sh)],
+            attrs_of: |op| match op {
+                Op::Reshape(sh) => vec![AttrVal::Sh(sh.clone())],
+                _ => unreachable!(),
+            },
+            from_attrs: |a| Some(Op::Reshape(a[0].sh()?.clone())),
+            eval: Some(ev_reshape),
+            exemplar: "(reshape [2 2] (input x [4]))",
+            exemplar_ty: X::Tensor(&[2, 2]),
+            ..base(OpKind::Reshape, "reshape", 1, C::Data, sh_reshape)
+        },
+        OpSpec {
+            attrs: &[("", A::Sh)],
+            attrs_of: |op| match op {
+                Op::Bcast(sh) => vec![AttrVal::Sh(sh.clone())],
+                _ => unreachable!(),
+            },
+            from_attrs: |a| Some(Op::Bcast(a[0].sh()?.clone())),
+            eval: Some(ev_bcast),
+            exemplar: "(bcast [2 4] (input b [4]))",
+            exemplar_ty: X::Tensor(&[2, 4]),
+            ..base(OpKind::Bcast, "bcast", 1, C::Data, sh_bcast)
+        },
+        OpSpec {
+            attrs: &[("", A::U)],
+            attrs_of: |op| match op {
+                Op::Pad2d { pad } => vec![AttrVal::U(*pad)],
+                _ => unreachable!(),
+            },
+            from_attrs: |a| Some(Op::Pad2d { pad: a[0].u()? }),
+            eval: Some(ev_pad2d),
+            data_traffic: true,
+            exemplar: "(pad2d 1 (input x [1 2 2]))",
+            exemplar_ty: X::Tensor(&[1, 4, 4]),
+            ..base(OpKind::Pad2d, "pad2d", 1, C::Data, sh_pad2d)
+        },
+        OpSpec {
+            attrs: &[("kh", A::U), ("kw", A::U), ("s", A::U)],
+            attrs_of: |op| match op {
+                Op::Im2Col { kh, kw, stride } => {
+                    vec![AttrVal::U(*kh), AttrVal::U(*kw), AttrVal::U(*stride)]
+                }
+                _ => unreachable!(),
+            },
+            from_attrs: |a| {
+                Some(Op::Im2Col { kh: a[0].u()?, kw: a[1].u()?, stride: a[2].u()? })
+            },
+            eval: Some(ev_im2col),
+            data_traffic: true,
+            exemplar: "(im2col 2 2 1 (input x [1 3 3]))",
+            exemplar_ty: X::Tensor(&[4, 4]),
+            ..base(OpKind::Im2Col, "im2col", 1, C::Data, sh_im2col)
+        },
+        OpSpec {
+            attrs: &[("", A::Buf)],
+            attrs_of: |op| match op {
+                Op::Buffer { kind } => vec![AttrVal::Buf(*kind)],
+                _ => unreachable!(),
+            },
+            from_attrs: |a| Some(Op::Buffer { kind: a[0].buf()? }),
+            exemplar: "(buffer sram (input x [4]))",
+            exemplar_ty: X::Tensor(&[4]),
+            ..base(OpKind::Buffer, "buffer", 1, C::Storage, sh_same)
+        },
+        OpSpec {
+            attrs: &[("", A::Buf)],
+            attrs_of: |op| match op {
+                Op::DblBuffer { kind } => vec![AttrVal::Buf(*kind)],
+                _ => unreachable!(),
+            },
+            from_attrs: |a| Some(Op::DblBuffer { kind: a[0].buf()? }),
+            exemplar: "(dbl-buffer dram (input x [4]))",
+            exemplar_ty: X::Tensor(&[4]),
+            ..base(OpKind::DblBuffer, "dbl-buffer", 1, C::Storage, sh_same)
+        },
+        // ---- transformer / depthwise extension ops -----------------------
+        OpSpec {
+            from_attrs: |_| Some(Op::Matmul),
+            eval: Some(ev_matmul),
+            lower: Some(lo_mm),
+            host_work: Some(hw_mm),
+            exemplar: "(matmul (input a [2 8]) (input b [8 4]))",
+            exemplar_ty: X::Tensor(&[2, 4]),
+            ..base(OpKind::Matmul, "matmul", 2, C::Relay, sh_dense)
+        },
+        OpSpec {
+            from_attrs: |_| Some(Op::BatchMatmul),
+            eval: Some(ev_bmm),
+            lower: Some(lo_bmm),
+            host_work: Some(hw_bmm),
+            exemplar: "(batch-matmul (input a [2 3 4]) (input b [2 4 5]))",
+            exemplar_ty: X::Tensor(&[2, 3, 5]),
+            ..base(OpKind::BatchMatmul, "batch-matmul", 2, C::Relay, sh_bmm)
+        },
+        OpSpec {
+            from_attrs: |_| Some(Op::Transpose),
+            eval: Some(ev_transpose),
+            data_traffic: true,
+            exemplar: "(transpose (input x [2 3]))",
+            exemplar_ty: X::Tensor(&[3, 2]),
+            ..base(OpKind::Transpose, "transpose", 1, C::Data, sh_transpose)
+        },
+        OpSpec {
+            from_attrs: |_| Some(Op::Softmax),
+            eval: Some(ev_softmax),
+            lower: Some(lo_softmax),
+            host_work: Some(hw_rowwise),
+            exemplar: "(softmax (input x [2 4]))",
+            exemplar_ty: X::Tensor(&[2, 4]),
+            ..base(OpKind::Softmax, "softmax", 1, C::Relay, sh_rowwise)
+        },
+        OpSpec {
+            from_attrs: |_| Some(Op::LayerNorm),
+            eval: Some(ev_layernorm),
+            lower: Some(lo_layernorm),
+            host_work: Some(hw_rowwise),
+            exemplar: "(layernorm (input x [2 4]))",
+            exemplar_ty: X::Tensor(&[2, 4]),
+            ..base(OpKind::LayerNorm, "layernorm", 1, C::Relay, sh_rowwise)
+        },
+        OpSpec {
+            from_attrs: |_| Some(Op::Gelu),
+            eval: Some(ev_gelu),
+            lower: Some(lo_gelu),
+            exemplar: "(gelu (input x [8]))",
+            exemplar_ty: X::Tensor(&[8]),
+            ..base(OpKind::Gelu, "gelu", 1, C::Relay, sh_same)
+        },
+        OpSpec {
+            attrs: &[("s", A::U), ("p", A::U)],
+            attrs_of: |op| match op {
+                Op::DepthwiseConv2d { stride, pad } => {
+                    vec![AttrVal::U(*stride), AttrVal::U(*pad)]
+                }
+                _ => unreachable!(),
+            },
+            from_attrs: |a| Some(Op::DepthwiseConv2d { stride: a[0].u()?, pad: a[1].u()? }),
+            eval: Some(ev_dwconv),
+            lower: Some(lo_dwconv),
+            host_work: Some(hw_dwconv),
+            exemplar: "(dwconv2d 1 1 (input x [3 8 8]) (weight w [3 3 3]))",
+            exemplar_ty: X::Tensor(&[3, 8, 8]),
+            ..base(OpKind::DepthwiseConv2d, "dwconv2d", 2, C::Relay, sh_dwconv2d)
+        },
+        OpSpec {
+            attrs: &[("", A::U)],
+            attrs_of: |op| match op {
+                Op::SoftmaxEngine { w } => vec![AttrVal::U(*w)],
+                _ => unreachable!(),
+            },
+            from_attrs: |a| Some(Op::SoftmaxEngine { w: a[0].u()? }),
+            engine: Some(ROW_COST),
+            exemplar: "(softmax-engine 8)",
+            exemplar_ty: X::Engine,
+            ..base(OpKind::SoftmaxEngine, "softmax-engine", 0, C::Engine, sh_engine)
+        },
+        OpSpec {
+            attrs: &[("", A::U)],
+            attrs_of: |op| match op {
+                Op::LayerNormEngine { w } => vec![AttrVal::U(*w)],
+                _ => unreachable!(),
+            },
+            from_attrs: |a| Some(Op::LayerNormEngine { w: a[0].u()? }),
+            engine: Some(ROW_COST),
+            exemplar: "(layernorm-engine 8)",
+            exemplar_ty: X::Engine,
+            ..base(OpKind::LayerNormEngine, "layernorm-engine", 0, C::Engine, sh_engine)
+        },
+        OpSpec {
+            attrs: &[("", A::U)],
+            attrs_of: |op| match op {
+                Op::GeluEngine { w } => vec![AttrVal::U(*w)],
+                _ => unreachable!(),
+            },
+            from_attrs: |a| Some(Op::GeluEngine { w: a[0].u()? }),
+            engine: Some(LANE_COST),
+            exemplar: "(gelu-engine 8)",
+            exemplar_ty: X::Engine,
+            ..base(OpKind::GeluEngine, "gelu-engine", 0, C::Engine, sh_engine)
+        },
+        OpSpec {
+            attrs: &[("", A::U), ("", A::U), ("", A::U), ("", A::U), ("", A::U), ("", A::U)],
+            attrs_of: |op| match op {
+                Op::DwConvEngine { oh, ow, c, kh, kw, stride } => vec![
+                    AttrVal::U(*oh),
+                    AttrVal::U(*ow),
+                    AttrVal::U(*c),
+                    AttrVal::U(*kh),
+                    AttrVal::U(*kw),
+                    AttrVal::U(*stride),
+                ],
+                _ => unreachable!(),
+            },
+            from_attrs: |a| {
+                Some(Op::DwConvEngine {
+                    oh: a[0].u()?,
+                    ow: a[1].u()?,
+                    c: a[2].u()?,
+                    kh: a[3].u()?,
+                    kw: a[4].u()?,
+                    stride: a[5].u()?,
+                })
+            },
+            engine: Some(DWCONV_COST),
+            exemplar: "(dw-conv-engine 2 2 3 3 3 1)",
+            exemplar_ty: X::Engine,
+            ..base(OpKind::DwConvEngine, "dw-conv-engine", 0, C::Engine, sh_engine)
+        },
+        OpSpec {
+            from_attrs: |_| Some(Op::InvokeSoftmax),
+            invoke_eval: Some(iv_softmax),
+            exemplar: "(invoke-softmax (softmax-engine 4) (input x [4]))",
+            exemplar_ty: X::Tensor(&[4]),
+            ..base(OpKind::InvokeSoftmax, "invoke-softmax", 2, C::Invoke, sh_invoke_elem)
+        },
+        OpSpec {
+            from_attrs: |_| Some(Op::InvokeLayerNorm),
+            invoke_eval: Some(iv_layernorm),
+            exemplar: "(invoke-layernorm (layernorm-engine 4) (input x [4]))",
+            exemplar_ty: X::Tensor(&[4]),
+            ..base(OpKind::InvokeLayerNorm, "invoke-layernorm", 2, C::Invoke, sh_invoke_elem)
+        },
+        OpSpec {
+            from_attrs: |_| Some(Op::InvokeGelu),
+            invoke_eval: Some(iv_gelu),
+            exemplar: "(invoke-gelu (gelu-engine 4) (input x [4]))",
+            exemplar_ty: X::Tensor(&[4]),
+            ..base(OpKind::InvokeGelu, "invoke-gelu", 2, C::Invoke, sh_invoke_elem)
+        },
+        OpSpec {
+            from_attrs: |_| Some(Op::InvokeDwConv),
+            invoke_eval: Some(iv_dwconv),
+            exemplar: "(invoke-dw-conv (dw-conv-engine 2 2 3 3 3 1) (input x [3 4 4]) (weight w [3 3 3]))",
+            exemplar_ty: X::Tensor(&[3, 2, 2]),
+            ..base(OpKind::InvokeDwConv, "invoke-dw-conv", 3, C::Invoke, sh_invoke_dwconv)
+        },
+    ]
+}
+
+/// The registry: specs indexed by `OpKind` discriminant plus a head-name
+/// index for the parser.
+pub struct Registry {
+    specs: Vec<OpSpec>,
+    by_name: HashMap<&'static str, OpKind>,
+}
+
+static REGISTRY: OnceLock<Registry> = OnceLock::new();
+
+fn registry() -> &'static Registry {
+    REGISTRY.get_or_init(|| {
+        let specs = build_specs();
+        assert_eq!(specs.len(), OpKind::ALL.len(), "registry incomplete");
+        let mut by_name = HashMap::new();
+        for (i, s) in specs.iter().enumerate() {
+            assert_eq!(
+                s.kind as usize, i,
+                "registry order mismatch at {i}: {:?}",
+                s.kind
+            );
+            assert!(
+                by_name.insert(s.name, s.kind).is_none(),
+                "duplicate head name '{}'",
+                s.name
+            );
+        }
+        Registry { specs, by_name }
+    })
+}
+
+/// The spec for a kind (O(1) array index).
+pub fn of(kind: OpKind) -> &'static OpSpec {
+    &registry().specs[kind as usize]
+}
+
+/// Parser-side lookup by s-expression head name.
+pub fn by_name(name: &str) -> Option<&'static OpSpec> {
+    registry().by_name.get(name).map(|&k| of(k))
+}
+
+/// All specs in registry order (for exhaustive tests).
+pub fn all_specs() -> &'static [OpSpec] {
+    &registry().specs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every class-mandated field is populated — an op cannot be registered
+    /// half-wired.
+    #[test]
+    fn registry_internally_consistent() {
+        for s in all_specs() {
+            assert!(!s.exemplar.is_empty(), "{:?}: missing exemplar", s.kind);
+            match s.class {
+                C::Relay => {
+                    assert!(s.eval.is_some(), "{:?}: relay op without eval kernel", s.kind);
+                }
+                C::Engine => {
+                    assert!(s.engine.is_some(), "{:?}: engine without cost spec", s.kind);
+                    assert_eq!(s.arity, 0, "{:?}: engines are leaves", s.kind);
+                }
+                C::Invoke => {
+                    assert!(s.invoke_eval.is_some(), "{:?}: invoke without kernel", s.kind);
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn lookup_by_kind_and_name_agree() {
+        for &k in OpKind::ALL {
+            let s = of(k);
+            assert_eq!(s.kind, k);
+            assert_eq!(by_name(s.name).unwrap().kind, k);
+        }
+        assert!(by_name("frobnicate").is_none());
+    }
+
+    #[test]
+    fn engine_merge_is_elementwise_max() {
+        let a = Op::ConvEngine { oh: 2, ow: 8, c: 3, k: 4, kh: 3, kw: 1, stride: 1 };
+        let b = Op::ConvEngine { oh: 4, ow: 2, c: 3, k: 8, kh: 1, kw: 3, stride: 1 };
+        let m = (of(OpKind::ConvEngine).engine.unwrap().merge_max)(&a, &b);
+        assert_eq!(
+            m,
+            Op::ConvEngine { oh: 4, ow: 8, c: 3, k: 8, kh: 3, kw: 3, stride: 1 }
+        );
+    }
+}
+

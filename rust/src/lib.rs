@@ -46,6 +46,7 @@
 //! | module | role |
 //! |---|---|
 //! | [`ir`] | EngineIR term language: ops, `RecExpr`, parser, printer, shapes |
+//! | [`ir::spec`] | **the operator registry**: one declarative `OpSpec` per op (arity, attrs, shape rule, eval kernel, lowering template, cost) — every generic pass dispatches through it |
 //! | [`egraph`] | from-scratch e-graph: union-find, hashcons, congruence closure, e-matching, rewrite runner |
 //! | [`relay`] | Relay-like frontend operator graphs + workload library |
 //! | [`lower`] | Relay → EngineIR reification (paper Fig. 1) |
@@ -56,7 +57,6 @@
 //! | [`sim`] | cycle-approximate accelerator simulator (usefulness oracle) |
 //! | [`runtime`] | PJRT executor for AOT-compiled Pallas engine kernels (feature `pjrt`; stub otherwise) |
 //! | [`session`] | **the primary API**: reusable sessions, queries, pluggable backends |
-//! | [`coordinator`] | deprecated one-shot `explore` shim over [`session`] |
 //! | [`error`] | the crate-wide typed [`Error`] |
 //! | [`fx`] | in-tree FxHash (zero-dependency fast hashing) |
 //! | [`par`] | scoped worker pool shared by search/extraction/evaluation fan-outs |
@@ -64,7 +64,6 @@
 //! | [`report`] | table / CSV emitters shared by benches |
 
 pub mod bench_util;
-pub mod coordinator;
 pub mod cost;
 pub mod egraph;
 pub mod error;

@@ -8,19 +8,28 @@
 //! rewrite library then moves work from hardware into software (and back)
 //! starting from here.
 //!
+//! The per-op reification templates live in each op's
+//! [`crate::ir::spec::OpSpec::lower`] entry; this module provides the
+//! traversal and the [`LowerCtx`] the templates build against. Ops without
+//! a template (engines, schedules, data movement, already-reified forms)
+//! pass through structurally, so partially-lowered inputs are fine
+//! (idempotent).
+//!
 //! | Relay op | reified form |
 //! |---|---|
-//! | `dense x w` | `buffer (invoke-mm (mm-engine m k n) x w)` |
-//! | `relu x` | `buffer (reshape (invoke-relu (relu-engine numel) (reshape x)))` |
-//! | `bias-add x b` | `buffer (reshape (invoke-add (add-engine numel) (reshape x) (reshape (bcast b))))` |
-//! | `eadd x y` | `buffer (reshape (invoke-add …))` |
-//! | `conv2d s p x w` | `buffer (invoke-conv (conv-engine oh ow c k kh s) (pad2d p x) w)` |
+//! | `dense x w` / `matmul a b` | `buffer (invoke-mm (mm-engine m k n) a b)` |
+//! | `batch-matmul a b` | `buffer (sched-loop b (reshape (invoke-mm …slices…)))` |
+//! | `relu x` / `gelu x` | `buffer (reshape (invoke-* (…-engine numel) (reshape x)))` |
+//! | `bias-add x b` / `eadd x y` | `buffer (reshape (invoke-add (add-engine numel) …))` |
+//! | `conv2d s p x w` | `buffer (invoke-conv (conv-engine oh ow c k kh kw s) (pad2d p x) w)` |
+//! | `dwconv2d s p x w` | `buffer (invoke-dw-conv (dw-conv-engine oh ow c kh kw s) (pad2d p x) w)` |
 //! | `maxpool2d k s x` | `buffer (invoke-pool (pool-engine oh ow c k s) x)` |
+//! | `softmax x` / `layernorm x` | rank-1: direct invoke; rank-2: `sched-loop` over rows |
 //! | `flatten x` | `reshape x` |
 
 use crate::egraph::Id;
 use crate::error::Error;
-use crate::ir::{in_dim, Node, Op, RecExpr, Shape, Ty};
+use crate::ir::{Node, Op, RecExpr, Shape, Symbol, Ty};
 
 /// Lowering options.
 #[derive(Debug, Clone, Copy)]
@@ -37,8 +46,115 @@ impl Default for LowerOptions {
     }
 }
 
-/// Reify a Relay-level graph into EngineIR. Non-Relay nodes pass through
-/// unchanged, so partially-lowered inputs are fine (idempotent).
+/// Per-node reification context handed to the registry's lowering
+/// templates: typed access to the original node plus builders over the
+/// output expression.
+pub struct LowerCtx<'a> {
+    out: &'a mut RecExpr,
+    node: &'a Node,
+    tys: &'a [Ty],
+    slot: usize,
+    /// The node's children, already mapped into the output expression.
+    kids: &'a [Id],
+    opts: LowerOptions,
+}
+
+impl LowerCtx<'_> {
+    /// The op being reified.
+    pub fn op(&self) -> &Op {
+        &self.node.op
+    }
+
+    /// Output-expression id of original child `i`.
+    pub fn kid(&self, i: usize) -> Id {
+        self.kids[i]
+    }
+
+    /// Shape of original child `i` (errors on non-tensor children).
+    pub fn child_shape(&self, i: usize) -> Result<Shape, Error> {
+        match &self.tys[self.node.children[i].index()] {
+            Ty::Tensor(s) => Ok(s.clone()),
+            other => Err(Error::Lower {
+                op: self.node.op.to_string(),
+                detail: format!("expected tensor child {i}, got {other:?}"),
+            }),
+        }
+    }
+
+    /// Shape of the node being reified.
+    pub fn out_shape(&self) -> Result<Shape, Error> {
+        match &self.tys[self.slot] {
+            Ty::Tensor(s) => Ok(s.clone()),
+            other => Err(Error::Lower {
+                op: self.node.op.to_string(),
+                detail: format!("expected tensor node, got {other:?}"),
+            }),
+        }
+    }
+
+    /// A lowering error for this op.
+    pub fn lower_err(&self, detail: impl Into<String>) -> Error {
+        Error::Lower { op: self.node.op.to_string(), detail: detail.into() }
+    }
+
+    /// Append `op` applied to `kids` to the output expression.
+    pub fn add(&mut self, op: Op, kids: &[Id]) -> Id {
+        self.out.add_op(op, kids)
+    }
+
+    /// Append a leaf op (engine declarations, literals).
+    pub fn add_leaf(&mut self, op: Op) -> Id {
+        self.out.add_leaf(op)
+    }
+
+    /// Wrap `id` in `(buffer sram …)` when buffers are enabled.
+    pub fn buffered(&mut self, id: Id) -> Id {
+        if self.opts.buffers {
+            self.add(Op::Buffer { kind: crate::ir::BufKind::Sram }, &[id])
+        } else {
+            id
+        }
+    }
+
+    /// Reshape `id` (of shape `s`) to rank-1 unless it already is.
+    pub fn flat(&mut self, id: Id, s: &Shape) -> Id {
+        if s.rank() == 1 {
+            id
+        } else {
+            self.add(Op::Reshape(Shape::new(&[s.numel()])), &[id])
+        }
+    }
+
+    /// Reshape rank-1 `id` back to `s` unless `s` is rank-1.
+    pub fn unflat(&mut self, id: Id, s: &Shape) -> Id {
+        if s.rank() == 1 {
+            id
+        } else {
+            self.add(Op::Reshape(s.clone()), &[id])
+        }
+    }
+
+    /// `(slice axis len (imul (lvar var) chunk) x)` — the schedule-indexed
+    /// slice shape shared by loop-emitting lowerings (and, on the e-graph
+    /// side, by the split rewrites).
+    pub fn loop_slice(
+        &mut self,
+        var: Symbol,
+        axis: usize,
+        chunk_stride: usize,
+        len: usize,
+        x: Id,
+    ) -> Id {
+        let lv = self.add_leaf(Op::LVar(var));
+        let c = self.add_leaf(Op::Int(chunk_stride as i64));
+        let start = self.add(Op::IMul, &[lv, c]);
+        self.add(Op::SliceAx { axis, len }, &[start, x])
+    }
+}
+
+/// Reify a Relay-level graph into EngineIR via the registry's lowering
+/// templates. Non-Relay nodes pass through unchanged, so partially-lowered
+/// inputs are fine (idempotent).
 ///
 /// Errors with [`Error::Type`] if the input fails inference, or
 /// [`Error::Lower`] if a Relay op has a non-tensor child where the
@@ -50,99 +166,15 @@ pub fn lower(expr: &RecExpr, opts: LowerOptions) -> Result<RecExpr, Error> {
 
     for (slot, node) in expr.nodes().iter().enumerate() {
         let kids: Vec<Id> = node.children.iter().map(|c| map[c.index()]).collect();
-        let shape_of = |i: usize| -> Result<&Shape, Error> {
-            match &tys[expr.nodes()[slot].children[i].index()] {
-                Ty::Tensor(s) => Ok(s),
-                other => Err(Error::Lower {
-                    op: node.op.to_string(),
-                    detail: format!("expected tensor child {i}, got {other:?}"),
-                }),
-            }
-        };
-        let my_shape = || -> Result<&Shape, Error> {
-            match &tys[slot] {
-                Ty::Tensor(s) => Ok(s),
-                other => Err(Error::Lower {
-                    op: node.op.to_string(),
-                    detail: format!("expected tensor node, got {other:?}"),
-                }),
-            }
-        };
-
-        let new_id = match &node.op {
-            Op::Dense => {
-                let (x, w) = (shape_of(0)?, shape_of(1)?);
-                let (m, k, n) = (x.dim(0), x.dim(1), w.dim(1));
-                let e = out.add_leaf(Op::MmEngine { m, k, n });
-                let inv = out.add_op(Op::InvokeMm, &[e, kids[0], kids[1]]);
-                buffered(&mut out, inv, opts)
-            }
-            Op::Relu => {
-                let s = my_shape()?.clone();
-                let numel = s.numel();
-                let e = out.add_leaf(Op::ReluEngine { w: numel });
-                let xin = flat(&mut out, kids[0], shape_of(0)?);
-                let inv = out.add_op(Op::InvokeRelu, &[e, xin]);
-                let backed = unflat(&mut out, inv, &s);
-                buffered(&mut out, backed, opts)
-            }
-            Op::EAdd => {
-                let s = my_shape()?.clone();
-                let numel = s.numel();
-                let e = out.add_leaf(Op::AddEngine { w: numel });
-                let a = flat(&mut out, kids[0], shape_of(0)?);
-                let b = flat(&mut out, kids[1], shape_of(1)?);
-                let inv = out.add_op(Op::InvokeAdd, &[e, a, b]);
-                let backed = unflat(&mut out, inv, &s);
-                buffered(&mut out, backed, opts)
-            }
-            Op::BiasAdd => {
-                let s = my_shape()?.clone();
-                let numel = s.numel();
-                let e = out.add_leaf(Op::AddEngine { w: numel });
-                let a = flat(&mut out, kids[0], shape_of(0)?);
-                let bb = out.add_op(Op::Bcast(s.clone()), &[kids[1]]);
-                let b = flat_shape(&mut out, bb, &s);
-                let inv = out.add_op(Op::InvokeAdd, &[e, a, b]);
-                let backed = unflat(&mut out, inv, &s);
-                buffered(&mut out, backed, opts)
-            }
-            Op::Conv2d { stride, pad } => {
-                let x = shape_of(0)?.clone();
-                let w = shape_of(1)?.clone();
-                let o = my_shape()?.clone();
-                let (c, k, kh) = (x.dim(0), w.dim(0), w.dim(2));
-                let (oh, ow) = (o.dim(1), o.dim(2));
-                debug_assert_eq!(in_dim(oh, kh, *stride), x.dim(1) + 2 * pad);
-                let e = out.add_leaf(Op::ConvEngine { oh, ow, c, k, kh, stride: *stride });
-                let xin = if *pad > 0 {
-                    out.add_op(Op::Pad2d { pad: *pad }, &[kids[0]])
-                } else {
-                    kids[0]
-                };
-                let inv = out.add_op(Op::InvokeConv, &[e, xin, kids[1]]);
-                buffered(&mut out, inv, opts)
-            }
-            Op::MaxPool2d { k, stride } => {
-                let x = shape_of(0)?;
-                let o = my_shape()?.clone();
-                let e = out.add_leaf(Op::PoolEngine {
-                    oh: o.dim(1),
-                    ow: o.dim(2),
-                    c: x.dim(0),
-                    k: *k,
-                    stride: *stride,
-                });
-                let inv = out.add_op(Op::InvokePool, &[e, kids[0]]);
-                buffered(&mut out, inv, opts)
-            }
-            Op::Flatten => {
-                let s = my_shape()?.clone();
-                out.add_op(Op::Reshape(s), &[kids[0]])
+        let new_id = match node.op.spec().lower {
+            Some(template) => {
+                let mut cx =
+                    LowerCtx { out: &mut out, node, tys: &tys, slot, kids: &kids, opts };
+                template(&mut cx)?
             }
             // Everything else (leaves, already-reified forms, index math)
             // passes through structurally.
-            other => out.add(Node::new(other.clone(), kids)),
+            None => out.add(Node::new(node.op.clone(), kids)),
         };
         map.push(new_id);
     }
@@ -152,36 +184,6 @@ pub fn lower(expr: &RecExpr, opts: LowerOptions) -> Result<RecExpr, Error> {
 /// Reify with default options.
 pub fn lower_default(expr: &RecExpr) -> Result<RecExpr, Error> {
     lower(expr, LowerOptions::default())
-}
-
-fn buffered(out: &mut RecExpr, id: Id, opts: LowerOptions) -> Id {
-    if opts.buffers {
-        out.add_op(Op::Buffer { kind: crate::ir::BufKind::Sram }, &[id])
-    } else {
-        id
-    }
-}
-
-/// Reshape `id` (of shape `s`) to rank-1 unless it already is.
-fn flat(out: &mut RecExpr, id: Id, s: &Shape) -> Id {
-    if s.rank() == 1 {
-        id
-    } else {
-        out.add_op(Op::Reshape(Shape::new(&[s.numel()])), &[id])
-    }
-}
-
-fn flat_shape(out: &mut RecExpr, id: Id, s: &Shape) -> Id {
-    flat(out, id, s)
-}
-
-/// Reshape rank-1 `id` back to `s` unless `s` is rank-1.
-fn unflat(out: &mut RecExpr, id: Id, s: &Shape) -> Id {
-    if s.rank() == 1 {
-        id
-    } else {
-        out.add_op(Op::Reshape(s.clone()), &[id])
-    }
 }
 
 #[cfg(test)]
@@ -253,8 +255,35 @@ mod tests {
         let w = crate::relay::workloads::convblock();
         let lo = lower(&w.expr, LowerOptions { buffers: true }).unwrap();
         let txt = lo.to_string();
-        assert!(txt.contains("(conv-engine 16 16 3 8 3 1)"), "{txt}");
+        assert!(txt.contains("(conv-engine 16 16 3 8 3 3 1)"), "{txt}");
         assert!(txt.contains("(buffer sram (invoke-conv"), "{txt}");
+    }
+
+    #[test]
+    fn rowwise_lowering_emits_schedule() {
+        // softmax over a matrix becomes a per-row sched-loop the schedule
+        // rewrites (parallelize) can immediately act on.
+        let e = crate::ir::parse_expr("(softmax (input x [4 8]))").unwrap();
+        let lo = lower_default(&e).unwrap();
+        let txt = lo.to_string();
+        assert!(txt.contains("(sched-loop"), "{txt}");
+        assert!(txt.contains("(softmax-engine 8)"), "{txt}");
+        assert_eq!(lo.typecheck().unwrap(), e.typecheck().unwrap());
+        // and rank-1 softmax invokes directly, no schedule
+        let e1 = crate::ir::parse_expr("(softmax (input x [8]))").unwrap();
+        let lo1 = lower_default(&e1).unwrap();
+        assert_eq!(lo1.count(|op| op.is_sched()), 0);
+    }
+
+    #[test]
+    fn batch_matmul_lowers_to_batch_loop() {
+        let e = crate::ir::parse_expr("(batch-matmul (input a [2 4 8]) (input b [2 8 4]))")
+            .unwrap();
+        let lo = lower_default(&e).unwrap();
+        let txt = lo.to_string();
+        assert!(txt.contains("(sched-loop"), "{txt}");
+        assert!(txt.contains("(mm-engine 4 8 4)"), "{txt}");
+        assert_eq!(lo.typecheck().unwrap(), e.typecheck().unwrap());
     }
 
     #[test]

@@ -13,7 +13,7 @@
 
 pub mod workloads;
 
-pub use workloads::{all_workloads, workload_by_name, Workload};
+pub use workloads::{all_workloads, workload_by_name, workload_names, Workload};
 
 use crate::egraph::Id;
 use crate::ir::{infer_ty, Op, RecExpr, Shape, Symbol, Ty};
@@ -87,6 +87,35 @@ impl GraphBuilder {
         self.push(Op::Flatten, &[x])
     }
 
+    /// General matmul of two computed tensors (attention scores etc.).
+    pub fn matmul(&mut self, a: Id, b: Id) -> Id {
+        self.push(Op::Matmul, &[a, b])
+    }
+
+    pub fn batch_matmul(&mut self, a: Id, b: Id) -> Id {
+        self.push(Op::BatchMatmul, &[a, b])
+    }
+
+    pub fn transpose(&mut self, x: Id) -> Id {
+        self.push(Op::Transpose, &[x])
+    }
+
+    pub fn softmax(&mut self, x: Id) -> Id {
+        self.push(Op::Softmax, &[x])
+    }
+
+    pub fn layer_norm(&mut self, x: Id) -> Id {
+        self.push(Op::LayerNorm, &[x])
+    }
+
+    pub fn gelu(&mut self, x: Id) -> Id {
+        self.push(Op::Gelu, &[x])
+    }
+
+    pub fn depthwise_conv2d(&mut self, x: Id, w: Id, stride: usize, pad: usize) -> Id {
+        self.push(Op::DepthwiseConv2d { stride, pad }, &[x, w])
+    }
+
     /// Shape of an already-built node (for layer helpers).
     pub fn shape_of(&self, id: Id) -> Shape {
         match &self.tys[id.index()] {
@@ -127,6 +156,29 @@ impl GraphBuilder {
         } else {
             d
         }
+    }
+
+    /// `relu(dwconv(x) + bias)` — the depthwise half of a separable block.
+    pub fn dwconv_relu(&mut self, x: Id, name: &str, k: usize, stride: usize, pad: usize) -> Id {
+        let ch = self.shape_of(x).dim(0);
+        let w = self.weight(&format!("{name}_w"), &[ch, k, k]);
+        let b = self.weight(&format!("{name}_b"), &[ch]);
+        let c = self.depthwise_conv2d(x, w, stride, pad);
+        let c = self.bias_add(c, b);
+        self.relu(c)
+    }
+
+    /// Single-head scaled-dot-product-shaped attention (unscaled — the
+    /// scale constant is cost-irrelevant and EngineIR has no scalar-mul):
+    /// `softmax(Q Kᵀ) V` with learned Q/K/V projections.
+    pub fn attention(&mut self, x: Id, name: &str) -> Id {
+        let q = self.dense_layer(x, &format!("{name}_q"), self.shape_of(x).dim(1), false);
+        let k = self.dense_layer(x, &format!("{name}_k"), self.shape_of(x).dim(1), false);
+        let v = self.dense_layer(x, &format!("{name}_v"), self.shape_of(x).dim(1), false);
+        let kt = self.transpose(k);
+        let scores = self.matmul(q, kt);
+        let probs = self.softmax(scores);
+        self.matmul(probs, v)
     }
 
     /// Finish, returning the operator graph rooted at the last-added node.

@@ -5,6 +5,17 @@
 //! the halving/splitting rewrites, and (b) e-graph saturation at the default
 //! budgets finishes interactively. `relu128` is the paper's own Fig. 2
 //! running example.
+//!
+//! The suite spans three workload families:
+//!
+//! * **classic CNN/MLP** — `relu128`, `convblock`, `resnet_block`, `mlp`,
+//!   `lenet`: dense/conv/pool/relu, the paper's original territory;
+//! * **transformer** — `ffn_block` (dense+residual) and `attn_block`
+//!   (single-head attention + GELU FFN + layernorm, BERT-tiny shapes:
+//!   seq 16, hidden 128, FFN 512) using `matmul`/`transpose`/`softmax`/
+//!   `layernorm`/`gelu`;
+//! * **mobile CNN** — `mobile_block`, a MobileNet-style depthwise-separable
+//!   unit (`dwconv2d` 3×3 + pointwise 1×1 conv).
 
 use super::GraphBuilder;
 use crate::ir::RecExpr;
@@ -105,9 +116,76 @@ pub fn ffn_block() -> Workload {
     }
 }
 
+/// A transformer encoder block with single-head attention (BERT-tiny
+/// shapes: seq 16, hidden 128, FFN 512): Q/K/V projections, softmax
+/// attention, output projection, residual + layernorm, GELU FFN,
+/// residual + layernorm.
+pub fn attn_block() -> Workload {
+    let mut b = GraphBuilder::new();
+    let x = b.input("x", &[16, 128]);
+    let ctx = b.attention(x, "attn");
+    let proj = b.dense_layer(ctx, "attn_o", 128, false);
+    let r1 = b.add(proj, x);
+    let n1 = b.layer_norm(r1);
+    let up = b.dense_layer(n1, "ffn_up", 512, false);
+    let act = b.gelu(up);
+    let down = b.dense_layer(act, "ffn_down", 128, false);
+    let r2 = b.add(down, n1);
+    b.layer_norm(r2);
+    Workload {
+        name: "attn_block",
+        description: "BERT-tiny encoder block: 1-head attention + GELU FFN + layernorm (16x128)",
+        expr: b.finish(),
+    }
+}
+
+/// A MobileNet-style depthwise-separable block: 3×3 depthwise conv
+/// (+bias+relu) followed by a 1×1 pointwise conv (+bias+relu) that doubles
+/// the channels.
+pub fn mobile_block() -> Workload {
+    let mut b = GraphBuilder::new();
+    let x = b.input("img", &[16, 14, 14]);
+    let dw = b.dwconv_relu(x, "dw", 3, 1, 1); // (16,14,14)
+    let pw_w = b.weight("pw_w", &[32, 16, 1, 1]);
+    let pw_b = b.weight("pw_b", &[32]);
+    let pw = b.conv2d(dw, pw_w, 1, 0); // (32,14,14)
+    let pw = b.bias_add(pw, pw_b);
+    b.relu(pw);
+    Workload {
+        name: "mobile_block",
+        description: "MobileNet depthwise-separable block: 3x3 dwconv + 1x1 conv (16->32ch, 14x14)",
+        expr: b.finish(),
+    }
+}
+
 /// All workloads, in rough size order.
 pub fn all_workloads() -> Vec<Workload> {
-    vec![relu128(), convblock(), ffn_block(), resnet_block(), mlp(), lenet()]
+    vec![
+        relu128(),
+        convblock(),
+        ffn_block(),
+        resnet_block(),
+        mlp(),
+        lenet(),
+        mobile_block(),
+        attn_block(),
+    ]
+}
+
+/// The CLI names of every workload (for error messages and docs). Kept as
+/// a static list so error Display paths don't pay graph construction;
+/// `workload_names_match_constructors` pins it to [`all_workloads`].
+pub fn workload_names() -> &'static [&'static str] {
+    &[
+        "relu128",
+        "convblock",
+        "ffn_block",
+        "resnet_block",
+        "mlp",
+        "lenet",
+        "mobile_block",
+        "attn_block",
+    ]
 }
 
 /// Look up a workload by CLI name.
@@ -153,7 +231,36 @@ mod tests {
     #[test]
     fn lookup_by_name() {
         assert!(workload_by_name("lenet").is_some());
+        assert!(workload_by_name("attn_block").is_some());
+        assert!(workload_by_name("mobile_block").is_some());
         assert!(workload_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn attn_block_shape_and_ops() {
+        let w = attn_block();
+        assert_eq!(w.expr.typecheck().unwrap(), Ty::Tensor(Shape::new(&[16, 128])));
+        use crate::ir::Op;
+        assert!(w.expr.count(|op| matches!(op, Op::Matmul)) >= 2, "QK^T and PV matmuls");
+        assert_eq!(w.expr.count(|op| matches!(op, Op::Softmax)), 1);
+        assert_eq!(w.expr.count(|op| matches!(op, Op::LayerNorm)), 2);
+        assert_eq!(w.expr.count(|op| matches!(op, Op::Gelu)), 1);
+        assert_eq!(w.expr.count(|op| matches!(op, Op::Transpose)), 1);
+    }
+
+    #[test]
+    fn mobile_block_shape_and_ops() {
+        let w = mobile_block();
+        assert_eq!(w.expr.typecheck().unwrap(), Ty::Tensor(Shape::new(&[32, 14, 14])));
+        use crate::ir::Op;
+        assert_eq!(w.expr.count(|op| matches!(op, Op::DepthwiseConv2d { .. })), 1);
+        assert_eq!(w.expr.count(|op| matches!(op, Op::Conv2d { .. })), 1);
+    }
+
+    #[test]
+    fn workload_names_match_constructors() {
+        let built: Vec<&str> = all_workloads().iter().map(|w| w.name).collect();
+        assert_eq!(workload_names(), built.as_slice());
     }
 
     #[test]

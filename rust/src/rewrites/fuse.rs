@@ -14,19 +14,19 @@ use super::engine_of;
 use crate::egraph::{Rewrite};
 use crate::ir::{Node, Op, OpKind, Shape, Symbol};
 
-/// `(invoke-conv (conv-engine oh ow c k kh s) x w)` ⇒
-/// `(reshape [k oh ow] (invoke-mm (mm-engine k c*kh*kh oh*ow)
-///     (reshape [k c*kh*kh] w) (im2col kh s x)))`
+/// `(invoke-conv (conv-engine oh ow c k kh kw s) x w)` ⇒
+/// `(reshape [k oh ow] (invoke-mm (mm-engine k c*kh*kw oh*ow)
+///     (reshape [k c*kh*kw] w) (im2col kh kw s x)))`
 pub fn conv_as_im2col_mm() -> Rewrite {
     Rewrite::node_scan("conv-as-im2col-mm", OpKind::InvokeConv, |eg, _, s| {
         let n = s.node.as_ref().unwrap();
-        let (oh, ow, c, k, kh, stride) = match engine_of(eg, n)? {
-            Op::ConvEngine { oh, ow, c, k, kh, stride } => (oh, ow, c, k, kh, stride),
+        let (oh, ow, c, k, kh, kw, stride) = match engine_of(eg, n)? {
+            Op::ConvEngine { oh, ow, c, k, kh, kw, stride } => (oh, ow, c, k, kh, kw, stride),
             _ => return None,
         };
-        let ckk = c * kh * kh;
+        let ckk = c * kh * kw;
         let wmat = eg.add(Node::new(Op::Reshape(Shape::new(&[k, ckk])), vec![n.children[2]]));
-        let col = eg.add(Node::new(Op::Im2Col { kh, stride }, vec![n.children[1]]));
+        let col = eg.add(Node::new(Op::Im2Col { kh, kw, stride }, vec![n.children[1]]));
         let e = eg.add(Node::leaf(Op::MmEngine { m: k, k: ckk, n: oh * ow }));
         let mm = eg.add(Node::new(Op::InvokeMm, vec![e, wmat, col]));
         Some(eg.add(Node::new(Op::Reshape(Shape::new(&[k, oh, ow])), vec![mm])))
@@ -152,7 +152,7 @@ mod tests {
     #[test]
     fn im2col_rewrite_fires_and_introduces_mm_engine() {
         let (eg, _, applied) = apply_once(
-            "(invoke-conv (conv-engine 6 6 3 4 3 1) (input x [3 8 8]) (weight w [4 3 3 3]))",
+            "(invoke-conv (conv-engine 6 6 3 4 3 3 1) (input x [3 8 8]) (weight w [4 3 3 3]))",
             conv_as_im2col_mm(),
         );
         assert_eq!(applied, 1);

@@ -5,7 +5,7 @@
 //!
 //! | group | rules | direction |
 //! |---|---|---|
-//! | [`split`] | `split-{relu,add}-x{2,4}`, `split-mm-{m,n,k}-x2`, `split-conv-{oh,ow,k,c}-x2`, `split-pool-{c,oh}-x2` | smaller hardware, more software (Fig. 2 rewrite 1, generalized) |
+//! | [`split`] | `split-{relu,add,gelu}-x{2,4}`, `split-mm-{m,n,k}-x2`, `split-conv-{oh,ow,k,c}-x2`, `split-pool-{c,oh}-x2`, `split-dwconv-{c,oh}-x2` | smaller hardware, more software (Fig. 2 rewrite 1, generalized) |
 //! | [`sched`] | `parallelize`, `serialize`, `loop-reorder` | trade time-multiplexing for hardware replication (Fig. 2 rewrite 2) |
 //! | [`fuse`] | `conv-as-im2col-mm`, `fuse-mm-relu` | share/merge engines across op types |
 //! | [`storage`] | `sram-to-dram`, `dram-to-sram`, `double-buffer`, `undouble-buffer` | storage choices |
@@ -91,6 +91,9 @@ pub fn paper_rules() -> Vec<Rewrite> {
         split::split_conv_c(2),
         split::split_pool_c(2),
         split::split_pool_oh(2),
+        split::split_gelu(2),
+        split::split_dwconv_c(2),
+        split::split_dwconv_oh(2),
         sched::parallelize(),
         sched::serialize(),
         fuse::conv_as_im2col_mm(),

@@ -144,8 +144,8 @@ pub fn split_conv_oh(factor: usize) -> Rewrite {
         OpKind::InvokeConv,
         move |eg, _, s| {
             let n = s.node.as_ref().unwrap();
-            let (oh, ow, c, k, kh, stride) = match engine_of(eg, n)? {
-                Op::ConvEngine { oh, ow, c, k, kh, stride } => (oh, ow, c, k, kh, stride),
+            let (oh, ow, c, k, kh, kw, stride) = match engine_of(eg, n)? {
+                Op::ConvEngine { oh, ow, c, k, kh, kw, stride } => (oh, ow, c, k, kh, kw, stride),
                 _ => return None,
             };
             if oh % factor != 0 || oh / factor < 1 || oh / factor == oh {
@@ -157,7 +157,7 @@ pub fn split_conv_oh(factor: usize) -> Rewrite {
             let var = fresh("r");
             // Row chunk i starts at input row i*ohc*stride.
             let sx = slice_for_loop(eg, var, 1, ohc * stride, in_rows, n.children[1]);
-            let e = eg.add(Node::leaf(Op::ConvEngine { oh: ohc, ow, c, k, kh, stride }));
+            let e = eg.add(Node::leaf(Op::ConvEngine { oh: ohc, ow, c, k, kh, kw, stride }));
             let inv = eg.add(Node::new(Op::InvokeConv, vec![e, sx, n.children[2]]));
             Some(eg.add(Node::new(Op::SchedLoop { var, axis: 1, extent: factor }, vec![inv])))
         },
@@ -171,18 +171,20 @@ pub fn split_conv_ow(factor: usize) -> Rewrite {
         OpKind::InvokeConv,
         move |eg, _, s| {
             let n = s.node.as_ref().unwrap();
-            let (oh, ow, c, k, kh, stride) = match engine_of(eg, n)? {
-                Op::ConvEngine { oh, ow, c, k, kh, stride } => (oh, ow, c, k, kh, stride),
+            let (oh, ow, c, k, kh, kw, stride) = match engine_of(eg, n)? {
+                Op::ConvEngine { oh, ow, c, k, kh, kw, stride } => (oh, ow, c, k, kh, kw, stride),
                 _ => return None,
             };
             if ow % factor != 0 || ow / factor < 1 || ow / factor == ow {
                 return None;
             }
             let owc = ow / factor;
-            let in_cols = in_dim(owc, kh, stride);
+            // Input cols per output chunk: the halo is kw wide (was kh
+            // before kernels went rectangular — a latent square-kernel bug).
+            let in_cols = in_dim(owc, kw, stride);
             let var = fresh("q");
             let sx = slice_for_loop(eg, var, 2, owc * stride, in_cols, n.children[1]);
-            let e = eg.add(Node::leaf(Op::ConvEngine { oh, ow: owc, c, k, kh, stride }));
+            let e = eg.add(Node::leaf(Op::ConvEngine { oh, ow: owc, c, k, kh, kw, stride }));
             let inv = eg.add(Node::new(Op::InvokeConv, vec![e, sx, n.children[2]]));
             Some(eg.add(Node::new(Op::SchedLoop { var, axis: 2, extent: factor }, vec![inv])))
         },
@@ -196,8 +198,8 @@ pub fn split_conv_k(factor: usize) -> Rewrite {
         OpKind::InvokeConv,
         move |eg, _, s| {
             let n = s.node.as_ref().unwrap();
-            let (oh, ow, c, k, kh, stride) = match engine_of(eg, n)? {
-                Op::ConvEngine { oh, ow, c, k, kh, stride } => (oh, ow, c, k, kh, stride),
+            let (oh, ow, c, k, kh, kw, stride) = match engine_of(eg, n)? {
+                Op::ConvEngine { oh, ow, c, k, kh, kw, stride } => (oh, ow, c, k, kh, kw, stride),
                 _ => return None,
             };
             if k % factor != 0 || k / factor < 1 || k / factor == k {
@@ -206,7 +208,7 @@ pub fn split_conv_k(factor: usize) -> Rewrite {
             let kc = k / factor;
             let var = fresh("g");
             let sw = slice_for_loop(eg, var, 0, kc, kc, n.children[2]);
-            let e = eg.add(Node::leaf(Op::ConvEngine { oh, ow, c, k: kc, kh, stride }));
+            let e = eg.add(Node::leaf(Op::ConvEngine { oh, ow, c, k: kc, kh, kw, stride }));
             let inv = eg.add(Node::new(Op::InvokeConv, vec![e, n.children[1], sw]));
             Some(eg.add(Node::new(Op::SchedLoop { var, axis: 0, extent: factor }, vec![inv])))
         },
@@ -220,8 +222,8 @@ pub fn split_conv_c(factor: usize) -> Rewrite {
         OpKind::InvokeConv,
         move |eg, _, s| {
             let n = s.node.as_ref().unwrap();
-            let (oh, ow, c, k, kh, stride) = match engine_of(eg, n)? {
-                Op::ConvEngine { oh, ow, c, k, kh, stride } => (oh, ow, c, k, kh, stride),
+            let (oh, ow, c, k, kh, kw, stride) = match engine_of(eg, n)? {
+                Op::ConvEngine { oh, ow, c, k, kh, kw, stride } => (oh, ow, c, k, kh, kw, stride),
                 _ => return None,
             };
             if c % factor != 0 || c / factor < 1 || c / factor == c {
@@ -231,7 +233,7 @@ pub fn split_conv_c(factor: usize) -> Rewrite {
             let var = fresh("c");
             let sx = slice_for_loop(eg, var, 0, cc, cc, n.children[1]);
             let sw = slice_for_loop(eg, var, 1, cc, cc, n.children[2]);
-            let e = eg.add(Node::leaf(Op::ConvEngine { oh, ow, c: cc, k, kh, stride }));
+            let e = eg.add(Node::leaf(Op::ConvEngine { oh, ow, c: cc, k, kh, kw, stride }));
             let inv = eg.add(Node::new(Op::InvokeConv, vec![e, sx, sw]));
             Some(eg.add(Node::new(Op::SchedReduce { var, extent: factor }, vec![inv])))
         },
@@ -282,6 +284,85 @@ pub fn split_pool_oh(factor: usize) -> Rewrite {
             let sx = slice_for_loop(eg, var, 1, ohc * stride, in_rows, n.children[1]);
             let e = eg.add(Node::leaf(Op::PoolEngine { oh: ohc, ow, c, k, stride }));
             let inv = eg.add(Node::new(Op::InvokePool, vec![e, sx]));
+            Some(eg.add(Node::new(Op::SchedLoop { var, axis: 1, extent: factor }, vec![inv])))
+        },
+    )
+}
+
+/// Same shape as [`split_relu`] for the vector GELU unit.
+pub fn split_gelu(factor: usize) -> Rewrite {
+    Rewrite::node_scan(
+        &format!("split-gelu-x{factor}"),
+        OpKind::InvokeGelu,
+        move |eg, _, s| {
+            let n = s.node.as_ref().unwrap();
+            let w = match engine_of(eg, n)? {
+                Op::GeluEngine { w } => w,
+                _ => return None,
+            };
+            if w % factor != 0 || w / factor < MIN_DIM {
+                return None;
+            }
+            let chunk = w / factor;
+            let var = fresh("gl");
+            let slice = slice_for_loop(eg, var, 0, chunk, chunk, n.children[1]);
+            let e = eg.add(Node::leaf(Op::GeluEngine { w: chunk }));
+            let inv = eg.add(Node::new(Op::InvokeGelu, vec![e, slice]));
+            Some(eg.add(Node::new(Op::SchedLoop { var, axis: 0, extent: factor }, vec![inv])))
+        },
+    )
+}
+
+/// Split a depthwise-conv engine along channels (channels are fully
+/// independent in depthwise conv: slice both `x` and `w` along dim 0).
+/// Note: softmax/layernorm engines have NO width split — normalization
+/// couples the whole row, so no such rule exists (their row *loops* still
+/// parallelize via `sched::parallelize`).
+pub fn split_dwconv_c(factor: usize) -> Rewrite {
+    Rewrite::node_scan(
+        &format!("split-dwconv-c-x{factor}"),
+        OpKind::InvokeDwConv,
+        move |eg, _, s| {
+            let n = s.node.as_ref().unwrap();
+            let (oh, ow, c, kh, kw, stride) = match engine_of(eg, n)? {
+                Op::DwConvEngine { oh, ow, c, kh, kw, stride } => (oh, ow, c, kh, kw, stride),
+                _ => return None,
+            };
+            if c % factor != 0 || c / factor < 1 || c / factor == c {
+                return None;
+            }
+            let cc = c / factor;
+            let var = fresh("dc");
+            let sx = slice_for_loop(eg, var, 0, cc, cc, n.children[1]);
+            let sw = slice_for_loop(eg, var, 0, cc, cc, n.children[2]);
+            let e = eg.add(Node::leaf(Op::DwConvEngine { oh, ow, c: cc, kh, kw, stride }));
+            let inv = eg.add(Node::new(Op::InvokeDwConv, vec![e, sx, sw]));
+            Some(eg.add(Node::new(Op::SchedLoop { var, axis: 0, extent: factor }, vec![inv])))
+        },
+    )
+}
+
+/// Split a depthwise-conv engine along output rows (halo slices, like
+/// [`split_conv_oh`]).
+pub fn split_dwconv_oh(factor: usize) -> Rewrite {
+    Rewrite::node_scan(
+        &format!("split-dwconv-oh-x{factor}"),
+        OpKind::InvokeDwConv,
+        move |eg, _, s| {
+            let n = s.node.as_ref().unwrap();
+            let (oh, ow, c, kh, kw, stride) = match engine_of(eg, n)? {
+                Op::DwConvEngine { oh, ow, c, kh, kw, stride } => (oh, ow, c, kh, kw, stride),
+                _ => return None,
+            };
+            if oh % factor != 0 || oh / factor < 1 || oh / factor == oh {
+                return None;
+            }
+            let ohc = oh / factor;
+            let in_rows = in_dim(ohc, kh, stride);
+            let var = fresh("dr");
+            let sx = slice_for_loop(eg, var, 1, ohc * stride, in_rows, n.children[1]);
+            let e = eg.add(Node::leaf(Op::DwConvEngine { oh: ohc, ow, c, kh, kw, stride }));
+            let inv = eg.add(Node::new(Op::InvokeDwConv, vec![e, sx, n.children[2]]));
             Some(eg.add(Node::new(Op::SchedLoop { var, axis: 1, extent: factor }, vec![inv])))
         },
     )
@@ -370,7 +451,7 @@ mod tests {
     #[test]
     fn conv_splits_fire() {
         let src =
-            "(invoke-conv (conv-engine 8 8 4 8 3 1) (input x [4 10 10]) (weight w [8 4 3 3]))";
+            "(invoke-conv (conv-engine 8 8 4 8 3 3 1) (input x [4 10 10]) (weight w [8 4 3 3]))";
         for (rule, expect) in [
             (split_conv_oh(2), 1),
             (split_conv_ow(2), 1),
@@ -389,5 +470,37 @@ mod tests {
         let (_, _, a1) = apply_once(src, split_pool_c(2));
         let (_, _, a2) = apply_once(src, split_pool_oh(2));
         assert_eq!((a1, a2), (1, 1));
+    }
+
+    #[test]
+    fn gelu_split_fires_and_declines_below_min() {
+        let (_, _, a1) =
+            apply_once("(invoke-gelu (gelu-engine 32) (input x [32]))", split_gelu(2));
+        assert_eq!(a1, 1);
+        let (_, _, a2) =
+            apply_once("(invoke-gelu (gelu-engine 4) (input x [4]))", split_gelu(2));
+        assert_eq!(a2, 0);
+    }
+
+    #[test]
+    fn dwconv_splits_fire() {
+        let src = "(invoke-dw-conv (dw-conv-engine 8 8 4 3 3 1) \
+                     (input x [4 10 10]) (weight w [4 3 3]))";
+        let (_, _, a1) = apply_once(src, split_dwconv_c(2));
+        let (_, _, a2) = apply_once(src, split_dwconv_oh(2));
+        assert_eq!((a1, a2), (1, 1));
+    }
+
+    #[test]
+    fn rect_conv_ow_split_uses_kw_halo() {
+        // 3x1 kernel: a W split needs only kw=1 halo columns, so an
+        // 8-wide output over an 8-wide input splits into 2x4 exactly.
+        let src = "(invoke-conv (conv-engine 8 8 4 8 3 1 1) \
+                     (input x [4 10 8]) (weight w [8 4 3 1]))";
+        let (eg, root, applied) = apply_once(src, split_conv_ow(2));
+        assert_eq!(applied, 1);
+        let has_loop =
+            eg.class(root).nodes.iter().any(|n| matches!(n.op, Op::SchedLoop { .. }));
+        assert!(has_loop);
     }
 }

@@ -51,29 +51,30 @@ pub fn default_artifact_dir() -> PathBuf {
 }
 
 /// The artifact base name for an engine declaration (the naming contract
-/// with `python/compile/aot.py`).
+/// with `python/compile/aot.py`). Engines without a Pallas kernel yet
+/// (softmax/layernorm/gelu/dw-conv) return `None` and are treated as
+/// uncovered — `extract_covered` steers around them and `PjrtBackend`
+/// falls back to the oracle (or errors in strict mode).
 pub fn artifact_name(op: &Op) -> Option<String> {
     Some(match *op {
         Op::MmEngine { m, k, n } => format!("mm_{m}x{k}x{n}"),
         Op::MmReluEngine { m, k, n } => format!("mmrelu_{m}x{k}x{n}"),
         Op::ReluEngine { w } => format!("relu_{w}"),
         Op::AddEngine { w } => format!("add_{w}"),
-        Op::ConvEngine { oh, ow, c, k, kh, stride } => {
-            format!("conv_{oh}x{ow}x{c}x{k}x{kh}x{stride}")
+        Op::ConvEngine { oh, ow, c, k, kh, kw, stride } => {
+            format!("conv_{oh}x{ow}x{c}x{k}x{kh}x{kw}x{stride}")
         }
         Op::PoolEngine { oh, ow, c, k, stride } => format!("pool_{oh}x{ow}x{c}x{k}x{stride}"),
         _ => return None,
     })
 }
 
-/// Output shape of one engine invocation (mirrors `ir::shape::infer`).
+/// Output shape of one engine invocation (from the registry's engine spec,
+/// which mirrors `ir::shape::infer`).
 pub fn engine_out_shape(engine: &Op) -> Shape {
-    match *engine {
-        Op::MmEngine { m, n, .. } | Op::MmReluEngine { m, n, .. } => Shape::new(&[m, n]),
-        Op::ReluEngine { w } | Op::AddEngine { w } => Shape::new(&[w]),
-        Op::ConvEngine { oh, ow, k, .. } => Shape::new(&[k, oh, ow]),
-        Op::PoolEngine { oh, ow, c, .. } => Shape::new(&[c, oh, ow]),
-        _ => panic!("not an engine: {engine}"),
+    match engine.spec().engine {
+        Some(e) => (e.out_shape)(engine),
+        None => panic!("not an engine: {engine}"),
     }
 }
 
@@ -182,11 +183,21 @@ mod tests {
         );
         assert_eq!(artifact_name(&Op::ReluEngine { w: 128 }).unwrap(), "relu_128");
         assert_eq!(
-            artifact_name(&Op::ConvEngine { oh: 28, ow: 28, c: 1, k: 8, kh: 5, stride: 1 })
-                .unwrap(),
-            "conv_28x28x1x8x5x1"
+            artifact_name(&Op::ConvEngine {
+                oh: 28,
+                ow: 28,
+                c: 1,
+                k: 8,
+                kh: 5,
+                kw: 5,
+                stride: 1
+            })
+            .unwrap(),
+            "conv_28x28x1x8x5x5x1"
         );
         assert_eq!(artifact_name(&Op::Relu), None);
+        // New engines have no Pallas kernels yet: uncovered, not a panic.
+        assert_eq!(artifact_name(&Op::GeluEngine { w: 8 }), None);
     }
 
     #[test]

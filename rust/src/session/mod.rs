@@ -425,8 +425,8 @@ impl Session {
     }
 
     /// Dismantle the session into its lowered expression and enumeration
-    /// (enumerating first if needed) — the compatibility path for the old
-    /// one-shot [`crate::coordinator::explore`].
+    /// (enumerating first if needed), for callers that want to own the
+    /// e-graph after querying.
     pub fn into_parts(mut self) -> Result<(RecExpr, Enumeration), Error> {
         self.enumerate()?;
         Ok((self.lowered, self.enumerated.expect("just enumerated")))

@@ -159,8 +159,7 @@ impl Evaluation {
     }
 }
 
-/// Shared E3 summary formatter (also used by the deprecated
-/// `coordinator::Exploration`).
+/// Shared E3 summary formatter.
 pub fn frontier_vs_baseline_summary(frontier: &[DesignPoint], b: &DesignCost) -> String {
     let dominating = frontier.iter().filter(|p| p.cost.dominates(b)).count();
     let smaller = frontier.iter().filter(|p| p.cost.area < b.area).count();

@@ -145,13 +145,20 @@ impl<'a> Sim<'a> {
         self.run_node(id, t0)
     }
 
+    /// Dispatch is by registry class (like the analytic model): open
+    /// categories price themselves from their spec, so new ops need no arm.
     fn run_node(&mut self, id: crate::egraph::Id, t0: f64) -> f64 {
         let node = self.expr.node(id).clone();
         let c = &node.children;
+        let spec = node.op.spec();
         match &node.op {
-            Op::Int(_) | Op::LVar(_) | Op::IMul | Op::IAdd => t0,
-            Op::Input(..) | Op::Weight(..) => t0,
-            op if op.is_engine() => t0,
+            op if matches!(
+                op.class(),
+                crate::ir::OpClass::Index | crate::ir::OpClass::Leaf | crate::ir::OpClass::Engine
+            ) =>
+            {
+                t0
+            }
 
             op if op.is_invoke() => {
                 // Operands must be ready first.
@@ -207,11 +214,19 @@ impl<'a> Sim<'a> {
                 t
             }
 
-            Op::SliceAx { .. } => self.run(c[1], t0),
-            Op::Reshape(_) | Op::Bcast(_) => self.run(c[0], t0),
-            Op::Pad2d { .. } | Op::Im2Col { .. } => {
-                let t = self.run(c[0], t0);
-                t + self.shape(id).numel() as f64 / self.p.sram_bw
+            // Data movement: views are free; materializing transforms
+            // (pad2d/im2col/transpose) pay SRAM traffic. Index children
+            // cost nothing.
+            op if matches!(op.class(), crate::ir::OpClass::Data) => {
+                let mut t = t0;
+                for &arg in c {
+                    t = self.run(arg, t);
+                }
+                if spec.data_traffic {
+                    t + self.shape(id).numel() as f64 / self.p.sram_bw
+                } else {
+                    t
+                }
             }
             Op::Buffer { kind } | Op::DblBuffer { kind } => {
                 let elems = self.shape(id).numel() as f64;
@@ -229,21 +244,18 @@ impl<'a> Sim<'a> {
                 }
             }
 
-            // Un-reified Relay op: host fallback, same pricing as the
-            // analytic model.
+            // Un-reified Relay op: host fallback, same work model as the
+            // analytic cost (the op's spec `host_work`).
             op => {
                 let mut t = t0;
                 for &arg in c {
                     t = self.run(arg, t);
                 }
-                let out = self.shape(id).numel() as f64;
-                let work = match op {
-                    Op::Dense => out * self.shape(c[0]).dim(1) as f64,
-                    Op::Conv2d { .. } => {
-                        let w = self.shape(c[1]);
-                        out * (w.dim(1) * w.dim(2) * w.dim(3)) as f64
-                    }
-                    _ => out,
+                let out = self.shape(id).clone();
+                let child_shapes: Vec<&Shape> = c.iter().map(|&a| self.shape(a)).collect();
+                let work = match spec.host_work {
+                    Some(f) => f(op, &out, &child_shapes),
+                    None => out.numel() as f64,
                 };
                 t + work * self.p.host_penalty
             }

@@ -6,10 +6,16 @@
 //! Schedules evaluate numerically identically whether sequential
 //! (`sched-loop`) or parallel (`sched-par`) — they differ only in cost —
 //! which is exactly the paper's "functional equivalence across splits".
+//!
+//! The evaluator owns only the language's *structural* features: index
+//! arithmetic, leaf binding, slicing, schedule iteration/reduction, and
+//! storage transparency. All per-op compute — Relay kernels, data-layout
+//! transforms, and the [`Oracle`]'s engine semantics — dispatches through
+//! the [`crate::ir::spec`] registry, so new ops need no evaluator changes.
 
 use super::Tensor;
 use crate::egraph::Id;
-use crate::ir::{Op, OpKind, RecExpr, Symbol};
+use crate::ir::{Op, OpClass, OpKind, RecExpr, Symbol};
 use std::collections::HashMap;
 
 /// Evaluation failure (unbound names, ill-formed programs the type checker
@@ -49,7 +55,7 @@ pub trait EngineBackend {
         -> Result<Tensor, EvalError>;
 }
 
-/// Reference backend: engine semantics via the tensor oracle.
+/// Reference backend: engine semantics via the registry's invoke kernels.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct Oracle;
 
@@ -60,27 +66,10 @@ impl EngineBackend for Oracle {
         kind: OpKind,
         args: &[Tensor],
     ) -> Result<Tensor, EvalError> {
-        Ok(match kind {
-            OpKind::InvokeMm => args[0].matmul(&args[1]),
-            OpKind::InvokeMmRelu => args[0].matmul(&args[1]).relu(),
-            OpKind::InvokeRelu => args[0].relu(),
-            OpKind::InvokeAdd => args[0].eadd(&args[1]),
-            OpKind::InvokeConv => {
-                let stride = match engine {
-                    Op::ConvEngine { stride, .. } => *stride,
-                    _ => 1,
-                };
-                args[0].conv2d(&args[1], stride)
-            }
-            OpKind::InvokePool => {
-                let (k, stride) = match engine {
-                    Op::PoolEngine { k, stride, .. } => (*k, *stride),
-                    _ => (1, 1),
-                };
-                args[0].maxpool2d(k, stride)
-            }
-            other => return Err(EvalError::Backend(format!("not an invoke kind: {other:?}"))),
-        })
+        match kind.spec().invoke_eval {
+            Some(kernel) => kernel(engine, args),
+            None => Err(EvalError::Backend(format!("not an invoke kind: {kind:?}"))),
+        }
     }
 }
 
@@ -178,50 +167,30 @@ impl<'a, 'b> Evaluator<'a, 'b> {
     fn eval_node(&mut self, node: &crate::ir::Node, env: &mut Env) -> Result<Value, EvalError> {
         use Value::*;
         let c = &node.children;
-        Ok(match &node.op {
-            Op::Int(v) => Index(*v),
-            Op::LVar(s) => Index(env.lvar(*s).ok_or(EvalError::UnboundLVar(*s))?),
-            Op::IMul => Index(self.index(c[0], env)? * self.index(c[1], env)?),
-            Op::IAdd => Index(self.index(c[0], env)? + self.index(c[1], env)?),
+        let spec = node.op.spec();
+        Ok(match spec.class {
+            // ---- structural core: index arithmetic ----
+            OpClass::Index => match &node.op {
+                Op::Int(v) => Index(*v),
+                Op::LVar(s) => Index(env.lvar(*s).ok_or(EvalError::UnboundLVar(*s))?),
+                Op::IMul => Index(self.index(c[0], env)? * self.index(c[1], env)?),
+                Op::IAdd => Index(self.index(c[0], env)? + self.index(c[1], env)?),
+                _ => unreachable!(),
+            },
 
-            Op::Input(name, _) | Op::Weight(name, _) => Tensor(
-                env.tensors.get(name).cloned().ok_or(EvalError::UnboundTensor(*name))?,
-            ),
-
-            // Relay level — direct oracle calls.
-            Op::Conv2d { stride, pad } => {
-                let x = self.tensor(c[0], env)?;
-                let w = self.tensor(c[1], env)?;
-                let x = if *pad > 0 { x.pad2d(*pad) } else { x };
-                Tensor(x.conv2d(&w, *stride))
-            }
-            Op::Dense => Tensor(self.tensor(c[0], env)?.matmul(&self.tensor(c[1], env)?)),
-            Op::Relu => Tensor(self.tensor(c[0], env)?.relu()),
-            Op::BiasAdd => Tensor(self.tensor(c[0], env)?.bias_add(&self.tensor(c[1], env)?)),
-            Op::EAdd => Tensor(self.tensor(c[0], env)?.eadd(&self.tensor(c[1], env)?)),
-            Op::MaxPool2d { k, stride } => Tensor(self.tensor(c[0], env)?.maxpool2d(*k, *stride)),
-            Op::Flatten => {
-                let x = self.tensor(c[0], env)?;
-                let n = x.numel();
-                Tensor(x.reshape(crate::ir::Shape::new(&[1, n])))
-            }
-            Op::GlobalAvgPool => Tensor(self.tensor(c[0], env)?.gap()),
+            // ---- leaves: environment lookup ----
+            OpClass::Leaf => match &node.op {
+                Op::Input(name, _) | Op::Weight(name, _) => Tensor(
+                    env.tensors.get(name).cloned().ok_or(EvalError::UnboundTensor(*name))?,
+                ),
+                _ => unreachable!(),
+            },
 
             // Engines have no runtime value; invocations ignore slot 0's
             // "value" and use the engine op's semantics directly.
-            Op::MmEngine { .. }
-            | Op::MmReluEngine { .. }
-            | Op::ReluEngine { .. }
-            | Op::AddEngine { .. }
-            | Op::ConvEngine { .. }
-            | Op::PoolEngine { .. } => return Err(EvalError::NotATensor(Id::from_index(0))),
+            OpClass::Engine => return Err(EvalError::NotATensor(Id::from_index(0))),
 
-            Op::InvokeMm
-            | Op::InvokeMmRelu
-            | Op::InvokeRelu
-            | Op::InvokeAdd
-            | Op::InvokeConv
-            | Op::InvokePool => {
+            OpClass::Invoke => {
                 let engine = self.expr.node(c[0]).op.clone();
                 let mut args = Vec::with_capacity(c.len() - 1);
                 for &a in &c[1..] {
@@ -230,42 +199,62 @@ impl<'a, 'b> Evaluator<'a, 'b> {
                 Tensor(self.backend.invoke(&engine, node.op.kind(), &args)?)
             }
 
-            Op::SchedLoop { var, axis, extent } | Op::SchedPar { var, axis, extent } => {
-                let mut parts = Vec::with_capacity(*extent);
-                for i in 0..*extent {
-                    env.loops.push((*var, i as i64));
-                    let t = self.tensor(c[0], env);
-                    env.loops.pop();
-                    parts.push(t?);
+            // ---- structural core: schedules bind loop variables ----
+            OpClass::Sched => match &node.op {
+                Op::SchedLoop { var, axis, extent } | Op::SchedPar { var, axis, extent } => {
+                    let mut parts = Vec::with_capacity(*extent);
+                    for i in 0..*extent {
+                        env.loops.push((*var, i as i64));
+                        let t = self.tensor(c[0], env);
+                        env.loops.pop();
+                        parts.push(t?);
+                    }
+                    Tensor(super::Tensor::concat_ax(*axis, &parts))
                 }
-                Tensor(super::Tensor::concat_ax(*axis, &parts))
-            }
-            Op::SchedReduce { var, extent } => {
-                let mut acc: Option<super::Tensor> = None;
-                for i in 0..*extent {
-                    env.loops.push((*var, i as i64));
-                    let t = self.tensor(c[0], env);
-                    env.loops.pop();
-                    let t = t?;
-                    acc = Some(match acc {
-                        None => t,
-                        Some(a) => a.eadd(&t),
-                    });
+                Op::SchedReduce { var, extent } => {
+                    let mut acc: Option<super::Tensor> = None;
+                    for i in 0..*extent {
+                        env.loops.push((*var, i as i64));
+                        let t = self.tensor(c[0], env);
+                        env.loops.pop();
+                        let t = t?;
+                        acc = Some(match acc {
+                            None => t,
+                            Some(a) => a.eadd(&t),
+                        });
+                    }
+                    Tensor(acc.expect("zero-extent reduce"))
                 }
-                Tensor(acc.expect("zero-extent reduce"))
+                _ => unreachable!(),
+            },
+
+            // ---- compute & layout: registry kernels ----
+            // SliceAx is the one data op with a dynamic *index* child; it
+            // stays structural. Everything else evaluates its child tensors
+            // and calls the spec's reference kernel.
+            OpClass::Relay | OpClass::Data => {
+                if let Op::SliceAx { axis, len } = &node.op {
+                    let start = self.index(c[0], env)?;
+                    let x = self.tensor(c[1], env)?;
+                    Tensor(x.slice_ax(
+                        *axis,
+                        usize::try_from(start).expect("negative slice"),
+                        *len,
+                    ))
+                } else {
+                    let kernel = spec.eval.ok_or_else(|| {
+                        EvalError::Backend(format!("no eval kernel for {}", node.op))
+                    })?;
+                    let mut args = Vec::with_capacity(c.len());
+                    for &a in c {
+                        args.push(self.tensor(a, env)?);
+                    }
+                    Tensor(kernel(&node.op, &args)?)
+                }
             }
 
-            Op::SliceAx { axis, len } => {
-                let start = self.index(c[0], env)?;
-                let x = self.tensor(c[1], env)?;
-                Tensor(x.slice_ax(*axis, usize::try_from(start).expect("negative slice"), *len))
-            }
-            Op::Reshape(sh) => Tensor(self.tensor(c[0], env)?.reshape(sh.clone())),
-            Op::Bcast(sh) => Tensor(self.tensor(c[0], env)?.bcast(sh.clone())),
-            Op::Pad2d { pad } => Tensor(self.tensor(c[0], env)?.pad2d(*pad)),
-            Op::Im2Col { kh, stride } => Tensor(self.tensor(c[0], env)?.im2col(*kh, *stride)),
             // Buffers are semantically transparent (cost-only).
-            Op::Buffer { .. } | Op::DblBuffer { .. } => Tensor(self.tensor(c[0], env)?),
+            OpClass::Storage => Tensor(self.tensor(c[0], env)?),
         })
     }
 }
@@ -361,15 +350,51 @@ mod tests {
     fn conv_engine_row_split() {
         // Full conv vs 2-way output-row split with halo slices.
         let full = eval(
-            "(invoke-conv (conv-engine 6 6 3 4 3 1) (input x [3 8 8]) (weight w [4 3 3 3]))",
+            "(invoke-conv (conv-engine 6 6 3 4 3 3 1) (input x [3 8 8]) (weight w [4 3 3 3]))",
             6,
         );
         let split = eval(
-            "(sched-loop i 1 3 (invoke-conv (conv-engine 2 6 3 4 3 1) \
+            "(sched-loop i 1 3 (invoke-conv (conv-engine 2 6 3 4 3 3 1) \
                (slice 1 4 (imul (lvar i) 2) (input x [3 8 8])) (weight w [4 3 3 3])))",
             6,
         );
         assert!(full.allclose(&split, 1e-5), "{:?}", full.max_abs_diff(&split));
+    }
+
+    #[test]
+    fn invoke_equals_relay_new_ops() {
+        // Each new engine's oracle kernel matches its Relay op.
+        let a = eval("(softmax (input x [16]))", 11);
+        let b = eval("(invoke-softmax (softmax-engine 16) (input x [16]))", 11);
+        assert!(a.allclose(&b, 0.0));
+        let a = eval("(layernorm (input x [16]))", 12);
+        let b = eval("(invoke-layernorm (layernorm-engine 16) (input x [16]))", 12);
+        assert!(a.allclose(&b, 0.0));
+        let a = eval("(gelu (input x [16]))", 13);
+        let b = eval("(invoke-gelu (gelu-engine 16) (input x [16]))", 13);
+        assert!(a.allclose(&b, 0.0));
+        let a = eval("(dwconv2d 1 0 (input x [3 6 6]) (weight w [3 3 3]))", 14);
+        let b = eval(
+            "(invoke-dw-conv (dw-conv-engine 4 4 3 3 3 1) (input x [3 6 6]) (weight w [3 3 3]))",
+            14,
+        );
+        assert!(a.allclose(&b, 0.0));
+    }
+
+    #[test]
+    fn dwconv_engine_channel_split() {
+        // Depthwise channels are independent: 2-way channel split is exact.
+        let full = eval(
+            "(invoke-dw-conv (dw-conv-engine 4 4 4 3 3 1) (input x [4 6 6]) (weight w [4 3 3]))",
+            15,
+        );
+        let split = eval(
+            "(sched-loop ch 0 2 (invoke-dw-conv (dw-conv-engine 4 4 2 3 3 1) \
+               (slice 0 2 (imul (lvar ch) 2) (input x [4 6 6])) \
+               (slice 0 2 (imul (lvar ch) 2) (weight w [4 3 3]))))",
+            15,
+        );
+        assert!(full.allclose(&split, 0.0));
     }
 
     #[test]

@@ -290,20 +290,21 @@ impl Tensor {
         Tensor::new(Shape::new(&[c, nh, nw]), out)
     }
 
-    /// im2col: `(C,H,W) -> (C*KH*KH, OH*OW)` patch matrix, matching
+    /// im2col: `(C,H,W) -> (C*KH*KW, OH*OW)` patch matrix, matching
     /// `Op::Im2Col` — column j holds the receptive field of output pixel j.
-    pub fn im2col(&self, kh: usize, stride: usize) -> Tensor {
+    /// Kernels are rectangular (`kh`×`kw`).
+    pub fn im2col(&self, kh: usize, kw: usize, stride: usize) -> Tensor {
         assert_eq!(self.rank(), 3);
         let (c, h, w) = (self.shape.dim(0), self.shape.dim(1), self.shape.dim(2));
         let oh = (h - kh) / stride + 1;
-        let ow = (w - kh) / stride + 1;
-        let rows = c * kh * kh;
+        let ow = (w - kw) / stride + 1;
+        let rows = c * kh * kw;
         let cols = oh * ow;
         let mut out = vec![0.0f32; rows * cols];
         for ci in 0..c {
             for dy in 0..kh {
-                for dx in 0..kh {
-                    let r = (ci * kh + dy) * kh + dx;
+                for dx in 0..kw {
+                    let r = (ci * kh + dy) * kw + dx;
                     for oy in 0..oh {
                         for ox in 0..ow {
                             out[r * cols + oy * ow + ox] =
@@ -314,6 +315,126 @@ impl Tensor {
             }
         }
         Tensor::new(Shape::new(&[rows, cols]), out)
+    }
+
+    /// Depthwise (channel multiplier 1) valid convolution:
+    /// `x:(C,H,W), w:(C,KH,KW) -> (C,OH,OW)` — each channel convolved with
+    /// its own rectangular kernel.
+    pub fn depthwise_conv2d(&self, w: &Tensor, stride: usize) -> Tensor {
+        assert_eq!(self.rank(), 3);
+        assert_eq!(w.rank(), 3);
+        let (c, h, wd) = (self.shape.dim(0), self.shape.dim(1), self.shape.dim(2));
+        let (c2, kh, kw) = (w.shape.dim(0), w.shape.dim(1), w.shape.dim(2));
+        assert_eq!(c, c2, "depthwise channels");
+        let oh = (h - kh) / stride + 1;
+        let ow = (wd - kw) / stride + 1;
+        let mut out = vec![0.0f32; c * oh * ow];
+        for ci in 0..c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0.0f32;
+                    for dy in 0..kh {
+                        let iy = oy * stride + dy;
+                        let xbase = ci * h * wd + iy * wd + ox * stride;
+                        let wbase = (ci * kh + dy) * kw;
+                        for dx in 0..kw {
+                            acc += self.data[xbase + dx] * w.data[wbase + dx];
+                        }
+                    }
+                    out[(ci * oh + oy) * ow + ox] = acc;
+                }
+            }
+        }
+        Tensor::new(Shape::new(&[c, oh, ow]), out)
+    }
+
+    /// Matrix transpose `(m,n) -> (n,m)`.
+    pub fn transpose2(&self) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (m, n) = (self.shape.dim(0), self.shape.dim(1));
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor::new(Shape::new(&[n, m]), out)
+    }
+
+    /// Batched matmul `(B,M,K) @ (B,K,N) -> (B,M,N)`.
+    pub fn batch_matmul(&self, b: &Tensor) -> Tensor {
+        assert_eq!(self.rank(), 3);
+        assert_eq!(b.rank(), 3);
+        let (bt, m, k) = (self.shape.dim(0), self.shape.dim(1), self.shape.dim(2));
+        let (bt2, k2, n) = (b.shape.dim(0), b.shape.dim(1), b.shape.dim(2));
+        assert_eq!(bt, bt2, "batch dims");
+        assert_eq!(k, k2, "batch-matmul inner dims");
+        let mut out = Vec::with_capacity(bt * m * n);
+        for bi in 0..bt {
+            let a = Tensor::new(
+                Shape::new(&[m, k]),
+                self.data[bi * m * k..(bi + 1) * m * k].to_vec(),
+            );
+            let bb = Tensor::new(
+                Shape::new(&[k, n]),
+                b.data[bi * k * n..(bi + 1) * k * n].to_vec(),
+            );
+            out.extend_from_slice(&a.matmul(&bb).data);
+        }
+        Tensor::new(Shape::new(&[bt, m, n]), out)
+    }
+
+    /// Numerically-stable softmax over the last axis (any rank; leading
+    /// axes are treated as independent rows).
+    pub fn softmax_last(&self) -> Tensor {
+        let last = self.shape.dim(self.rank() - 1);
+        let rows = self.numel() / last;
+        let mut out = self.data.clone();
+        for r in 0..rows {
+            let row = &mut out[r * last..(r + 1) * last];
+            let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f32;
+            for v in row.iter_mut() {
+                *v = (*v - max).exp();
+                sum += *v;
+            }
+            for v in row.iter_mut() {
+                *v /= sum;
+            }
+        }
+        Tensor { shape: self.shape.clone(), data: out }
+    }
+
+    /// Layer normalization over the last axis (population variance,
+    /// non-affine): `(x - mean) / sqrt(var + eps)`.
+    pub fn layernorm_last(&self, eps: f32) -> Tensor {
+        let last = self.shape.dim(self.rank() - 1);
+        let rows = self.numel() / last;
+        let mut out = self.data.clone();
+        for r in 0..rows {
+            let row = &mut out[r * last..(r + 1) * last];
+            let mean = row.iter().sum::<f32>() / last as f32;
+            let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / last as f32;
+            let inv = 1.0 / (var + eps).sqrt();
+            for v in row.iter_mut() {
+                *v = (*v - mean) * inv;
+            }
+        }
+        Tensor { shape: self.shape.clone(), data: out }
+    }
+
+    /// Elementwise GELU, tanh approximation:
+    /// `0.5·x·(1 + tanh(√(2/π)·(x + 0.044715·x³)))`.
+    pub fn gelu(&self) -> Tensor {
+        const C: f32 = 0.797_884_6; // sqrt(2/pi)
+        Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .map(|&x| 0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh()))
+                .collect(),
+        }
     }
 
     /// Global average pool `(C,H,W) -> (C,)`.
@@ -406,7 +527,7 @@ mod tests {
         let x = Tensor::random(s(&[3, 8, 8]), 7);
         let w = Tensor::random(s(&[4, 3, 3, 3]), 8);
         let direct = x.conv2d(&w, 1);
-        let col = x.im2col(3, 1); // (27, 36)
+        let col = x.im2col(3, 3, 1); // (27, 36)
         let wmat = w.reshape(s(&[4, 27]));
         let viamm = wmat.matmul(&col).reshape(s(&[4, 6, 6]));
         assert!(direct.allclose(&viamm, 1e-4), "diff={:?}", direct.max_abs_diff(&viamm));
@@ -478,6 +599,97 @@ mod tests {
         let b = Tensor::new(s(&[2]), vec![1.0, 2.0]);
         let y = b.bcast(s(&[2, 1, 2]));
         assert_eq!(y.data, vec![1.0, 1.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn rect_conv_matches_im2col_matmul() {
+        // The R4 identity must hold for rectangular kernels too.
+        let x = Tensor::random(s(&[2, 8, 8]), 17);
+        let w = Tensor::random(s(&[4, 2, 3, 1]), 18);
+        let direct = x.conv2d(&w, 1);
+        let col = x.im2col(3, 1, 1); // (6, 48)
+        let wmat = w.reshape(s(&[4, 6]));
+        let viamm = wmat.matmul(&col).reshape(s(&[4, 6, 8]));
+        assert!(direct.allclose(&viamm, 1e-4));
+    }
+
+    #[test]
+    fn depthwise_matches_grouped_direct() {
+        // Depthwise == per-channel 1-in-1-out convs.
+        let x = Tensor::random(s(&[3, 6, 6]), 21);
+        let w = Tensor::random(s(&[3, 3, 3]), 22);
+        let got = x.depthwise_conv2d(&w, 1);
+        assert_eq!(got.shape, s(&[3, 4, 4]));
+        for ci in 0..3 {
+            let xc = x.slice_ax(0, ci, 1);
+            let wc = w.slice_ax(0, ci, 1).reshape(s(&[1, 1, 3, 3]));
+            let want = xc.conv2d(&wc, 1);
+            let gc = got.slice_ax(0, ci, 1);
+            assert!(gc.allclose(&want, 1e-5), "channel {ci}");
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let x = Tensor::random(s(&[3, 5]), 9);
+        let t = x.transpose2();
+        assert_eq!(t.shape, s(&[5, 3]));
+        assert_eq!(t.at(&[2, 1]), x.at(&[1, 2]));
+        assert!(t.transpose2().allclose(&x, 0.0));
+    }
+
+    #[test]
+    fn batch_matmul_matches_per_slice() {
+        let a = Tensor::random(s(&[2, 3, 4]), 31);
+        let b = Tensor::random(s(&[2, 4, 5]), 32);
+        let y = a.batch_matmul(&b);
+        assert_eq!(y.shape, s(&[2, 3, 5]));
+        for bi in 0..2 {
+            let ai = a.slice_ax(0, bi, 1).reshape(s(&[3, 4]));
+            let bbi = b.slice_ax(0, bi, 1).reshape(s(&[4, 5]));
+            let want = ai.matmul(&bbi);
+            let got = y.slice_ax(0, bi, 1).reshape(s(&[3, 5]));
+            assert!(got.allclose(&want, 1e-5), "batch {bi}");
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let x = Tensor::random(s(&[4, 8]), 41);
+        let y = x.softmax_last();
+        for r in 0..4 {
+            let sum: f32 = y.data[r * 8..(r + 1) * 8].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "row {r}: {sum}");
+            assert!(y.data[r * 8..(r + 1) * 8].iter().all(|&v| v >= 0.0));
+        }
+        // Invariant to per-row shifts (numerical stability path).
+        let shifted = Tensor {
+            shape: x.shape.clone(),
+            data: x.data.iter().map(|v| v + 100.0).collect(),
+        };
+        assert!(shifted.softmax_last().allclose(&y, 1e-5));
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let x = Tensor::random(s(&[2, 16]), 51);
+        let y = x.layernorm_last(1e-5);
+        for r in 0..2 {
+            let row = &y.data[r * 16..(r + 1) * 16];
+            let mean: f32 = row.iter().sum::<f32>() / 16.0;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 16.0;
+            assert!(mean.abs() < 1e-5, "row {r} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-3, "row {r} var {var}");
+        }
+    }
+
+    #[test]
+    fn gelu_fixed_points() {
+        let x = Tensor::new(s(&[3]), vec![0.0, 10.0, -10.0]);
+        let y = x.gelu();
+        assert!(y.data[0].abs() < 1e-6);
+        assert!((y.data[1] - 10.0).abs() < 1e-3, "gelu(10) ≈ 10");
+        assert!(y.data[2].abs() < 1e-3, "gelu(-10) ≈ 0");
     }
 
     #[test]

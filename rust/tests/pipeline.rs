@@ -27,7 +27,7 @@ fn fig1_conv2d_reification_golden() {
     let w = workloads::convblock();
     let lo = lower(&w.expr, LowerOptions { buffers: true }).unwrap();
     let txt = lo.to_string();
-    assert!(txt.contains("(conv-engine 16 16 3 8 3 1)"), "engine instantiation: {txt}");
+    assert!(txt.contains("(conv-engine 16 16 3 8 3 3 1)"), "engine instantiation: {txt}");
     assert!(txt.contains("(buffer sram (invoke-conv"), "output storage: {txt}");
     assert!(txt.contains("(pad2d 1"), "padding made explicit: {txt}");
     // And it still computes conv+bias+relu.

@@ -1,0 +1,105 @@
+//! Registry-driven exhaustive operator tests: for EVERY [`OpKind`], the
+//! spec's exemplar term must parse, print back identically, type-check to
+//! the declared golden type, and — for tensor-valued exemplars — evaluate,
+//! lower (leaving no Relay ops behind) and cost to finite numbers.
+//!
+//! This is the "an op can't ship half-wired" guarantee: registering an
+//! operator in `ir::spec` without a working shape rule, eval kernel,
+//! printer/parser schema, lowering template, or cost hook fails here by
+//! construction, for the op's own exemplar.
+
+use hwsplit::cost::{cost_of, CostParams};
+use hwsplit::ir::spec::{self, ExemplarTy};
+use hwsplit::ir::{parse_expr, OpKind, Shape, Ty};
+use hwsplit::lower::lower_default;
+use hwsplit::tensor::{eval_expr, Env};
+
+#[test]
+fn every_opkind_has_a_spec_in_order() {
+    let specs = spec::all_specs();
+    assert_eq!(specs.len(), OpKind::ALL.len());
+    for (&kind, s) in OpKind::ALL.iter().zip(specs) {
+        assert_eq!(s.kind, kind);
+    }
+}
+
+/// Print→parse round-trip golden, per op.
+#[test]
+fn exemplar_print_parse_roundtrip() {
+    for &kind in OpKind::ALL {
+        let s = spec::of(kind);
+        let e = parse_expr(s.exemplar)
+            .unwrap_or_else(|err| panic!("{kind:?}: exemplar fails to parse: {err}"));
+        assert_eq!(
+            e.to_string(),
+            s.exemplar,
+            "{kind:?}: print(parse(exemplar)) is not the exemplar"
+        );
+    }
+}
+
+/// Shape-inference golden, per op.
+#[test]
+fn exemplar_shape_inference_golden() {
+    for &kind in OpKind::ALL {
+        let s = spec::of(kind);
+        let e = parse_expr(s.exemplar).unwrap();
+        let ty = e
+            .typecheck()
+            .unwrap_or_else(|err| panic!("{kind:?}: exemplar fails inference: {err}"));
+        match s.exemplar_ty {
+            ExemplarTy::Index => assert_eq!(ty, Ty::Index, "{kind:?}"),
+            ExemplarTy::Engine => {
+                assert!(matches!(ty, Ty::Engine(_)), "{kind:?}: expected engine, got {ty:?}")
+            }
+            ExemplarTy::Tensor(dims) => {
+                assert_eq!(ty, Ty::Tensor(Shape::new(dims)), "{kind:?}")
+            }
+        }
+    }
+}
+
+/// Tensor-valued exemplars run the whole pipeline: evaluate (eval kernel
+/// wired), lower (no Relay op survives reification), and cost (the analytic
+/// model prices the lowered design without panicking).
+#[test]
+fn tensor_exemplars_evaluate_lower_and_cost() {
+    for &kind in OpKind::ALL {
+        let s = spec::of(kind);
+        let ExemplarTy::Tensor(dims) = s.exemplar_ty else { continue };
+        let e = parse_expr(s.exemplar).unwrap();
+
+        let mut env = Env::random_for(&e, 7);
+        let out = eval_expr(&e, &mut env)
+            .unwrap_or_else(|err| panic!("{kind:?}: exemplar fails to evaluate: {err}"));
+        assert_eq!(out.shape, Shape::new(dims), "{kind:?}: eval shape");
+        assert!(out.data.iter().all(|v| v.is_finite()), "{kind:?}: non-finite eval");
+
+        let lo = lower_default(&e)
+            .unwrap_or_else(|err| panic!("{kind:?}: exemplar fails to lower: {err}"));
+        // GlobalAvgPool deliberately has no engine form yet; everything
+        // else must fully reify.
+        if kind != OpKind::GlobalAvgPool {
+            assert_eq!(
+                lo.count(|op| op.is_relay()),
+                0,
+                "{kind:?}: Relay ops survive lowering"
+            );
+        }
+        // Lowering preserves semantics on the exemplar.
+        let mut env2 = Env::random_for(&lo, 7);
+        let lowered_out = eval_expr(&lo, &mut env2)
+            .unwrap_or_else(|err| panic!("{kind:?}: lowered exemplar fails eval: {err}"));
+        assert!(
+            out.allclose(&lowered_out, 1e-4),
+            "{kind:?}: lowering changed semantics: {:?}",
+            out.max_abs_diff(&lowered_out)
+        );
+
+        let cost = cost_of(&lo, &CostParams::default());
+        assert!(
+            cost.latency.is_finite() && cost.latency >= 0.0 && cost.area >= 0.0,
+            "{kind:?}: bad cost {cost:?}"
+        );
+    }
+}

@@ -68,6 +68,47 @@ fn session_enumerates_exactly_once_across_queries() {
     assert!(a.area <= f.area);
 }
 
+/// Ported from the removed `coordinator::explore` shim tests: the
+/// enumerated set must contain a smaller-area design than the one-engine-
+/// per-kernel-type baseline (a deep loop over a narrow engine).
+#[test]
+fn relu128_frontier_beats_baseline_somewhere() {
+    let mut s = small_session(workloads::relu128());
+    let ev = s.query(&Query::new().backend(Backend::Sim).samples(12)).unwrap();
+    let b = &ev.baseline.cost;
+    assert!(
+        ev.designs.iter().any(|d| d.point.cost.area < b.area),
+        "no smaller-than-baseline design found: {}",
+        ev.frontier_vs_baseline()
+    );
+}
+
+/// Acceptance for the registry-era workloads: `attn_block` and
+/// `mobile_block` enumerate under the full rule set and extract a
+/// non-trivial Pareto frontier (≥2 mutually non-dominated area/latency
+/// trade-offs), all from designs that still compute the workload.
+#[test]
+fn new_workloads_enumerate_nontrivial_frontiers() {
+    for w in [workloads::attn_block(), workloads::mobile_block()] {
+        let name = w.name;
+        let mut s = Session::builder()
+            .workload(w)
+            .rules(RuleSet::All)
+            .iters(3)
+            .workers(4)
+            .limits(RunnerLimits { max_nodes: 30_000, ..Default::default() })
+            .build()
+            .unwrap();
+        let ev = s.query(&Query::new().samples(16)).unwrap();
+        assert!(ev.designs.len() >= 3, "{name}: too few designs");
+        assert!(
+            ev.frontier.len() >= 2,
+            "{name}: trivial frontier ({} points)",
+            ev.frontier.len()
+        );
+    }
+}
+
 /// Backend-equivalence smoke test: the same query on Analytic, Interp and
 /// Sim extracts the same design set (extraction is deterministic given the
 /// seed), and the Interp outputs prove every design computes the workload's

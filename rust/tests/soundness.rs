@@ -7,7 +7,7 @@
 //! extraction, or the evaluator were unsound, some sampled design would
 //! diverge.
 
-use hwsplit::coordinator::RuleSet;
+use hwsplit::rewrites::RuleSet;
 use hwsplit::egraph::{Runner, RunnerLimits};
 use hwsplit::extract::{sample_design, Extractor};
 use hwsplit::lower::lower_default;
@@ -89,6 +89,19 @@ fn mlp_all_rules_sound() {
 #[test]
 fn lenet_paper_rules_sound() {
     check_workload("lenet", RuleSet::Paper, 3, 6);
+}
+
+/// Transformer block: matmul/softmax/layernorm/gelu reifications and the
+/// mm/gelu splits applied to them stay semantics-preserving.
+#[test]
+fn attn_block_all_rules_sound() {
+    check_workload("attn_block", RuleSet::All, 2, 6);
+}
+
+/// Depthwise-separable block: dwconv reification + channel/row splits.
+#[test]
+fn mobile_block_paper_rules_sound() {
+    check_workload("mobile_block", RuleSet::Paper, 3, 8);
 }
 
 /// Property: random rule subsets on random workloads stay sound.
