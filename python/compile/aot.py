@@ -9,14 +9,20 @@ emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
 version the published `xla` crate links) rejects; the text parser reassigns
 ids and round-trips cleanly. See /opt/xla-example/README.md.
 
-Artifact naming (must match `rust/src/runtime/mod.rs::artifact_name`):
+Artifact naming (must match `rust/src/runtime/mod.rs::artifact_name`;
+every Engine-class op has a contract — the Rust registry test pins it):
 
     mm_{m}x{k}x{n}.hlo.txt
     mmrelu_{m}x{k}x{n}.hlo.txt
     relu_{w}.hlo.txt
     add_{w}.hlo.txt
+    emul_{w}.hlo.txt
+    gelu_{w}.hlo.txt
+    softmax_{w}.hlo.txt
+    layernorm_{w}.hlo.txt
     conv_{oh}x{ow}x{c}x{k}x{kh}x{kw}x{s}.hlo.txt
-    pool_{oh}x{ow}x{c}x{k}x{s}.hlo.txt
+    pool_{oh}x{ow}x{c}x{kh}x{kw}x{s}.hlo.txt
+    dwconv_{oh}x{ow}x{c}x{kh}x{kw}x{s}.hlo.txt
     model_mlp.hlo.txt                      (full Layer-2 forward)
 
 `manifest.txt` lists every emitted artifact (one name per line); the Rust
@@ -35,10 +41,15 @@ from . import model
 from .kernels import (
     add_engine,
     conv_engine,
+    dwconv_engine,
+    emul_engine,
+    gelu_engine,
+    layernorm_engine,
     mm_engine,
     mm_relu_engine,
     pool_engine,
     relu_engine,
+    softmax_engine,
 )
 
 
@@ -76,6 +87,18 @@ def build_engine(spec: str):
     if kind == "add":
         (w,) = params
         return f"add_{w}", add_engine(w), (f32(w), f32(w))
+    if kind == "emul":
+        (w,) = params
+        return f"emul_{w}", emul_engine(w), (f32(w), f32(w))
+    if kind == "gelu":
+        (w,) = params
+        return f"gelu_{w}", gelu_engine(w), (f32(w),)
+    if kind == "softmax":
+        (w,) = params
+        return f"softmax_{w}", softmax_engine(w), (f32(w),)
+    if kind == "layernorm":
+        (w,) = params
+        return f"layernorm_{w}", layernorm_engine(w), (f32(w),)
     if kind == "conv":
         oh, ow, c, k, kh, kw, s = params
         ih, iw = (oh - 1) * s + kh, (ow - 1) * s + kw
@@ -85,15 +108,29 @@ def build_engine(spec: str):
             (f32(c, ih, iw), f32(k, c, kh, kw)),
         )
     if kind == "pool":
-        oh, ow, c, k, s = params
-        ih, iw = (oh - 1) * s + k, (ow - 1) * s + k
-        return f"pool_{oh}x{ow}x{c}x{k}x{s}", pool_engine(oh, ow, c, k, s), (f32(c, ih, iw),)
+        oh, ow, c, kh, kw, s = params
+        ih, iw = (oh - 1) * s + kh, (ow - 1) * s + kw
+        return (
+            f"pool_{oh}x{ow}x{c}x{kh}x{kw}x{s}",
+            pool_engine(oh, ow, c, kh, kw, s),
+            (f32(c, ih, iw),),
+        )
+    if kind == "dwconv":
+        oh, ow, c, kh, kw, s = params
+        ih, iw = (oh - 1) * s + kh, (ow - 1) * s + kw
+        return (
+            f"dwconv_{oh}x{ow}x{c}x{kh}x{kw}x{s}",
+            dwconv_engine(oh, ow, c, kh, kw, s),
+            (f32(c, ih, iw), f32(c, kh, kw)),
+        )
     raise ValueError(f"unknown engine spec: {spec!r}")
 
 
 # The default engine library: every engine in the *initial* (one engine per
 # call site) designs of the `mlp` and `lenet` workloads, plus a set of split
-# variants so the e2e example can also run a rewritten design.
+# variants so the e2e example can also run a rewritten design, plus the
+# transformer (`attn_block`/`attn_block_mh4`) and mobile
+# (`mobile_block`/`mobile_block_s2`) engines.
 DEFAULT_SPECS = [
     # mlp initial design
     "mm 1 784 128",
@@ -116,11 +153,11 @@ DEFAULT_SPECS = [
     "conv 28 28 1 8 5 5 1",
     "add 6272",
     "relu 6272",
-    "pool 14 14 8 2 2",
+    "pool 14 14 8 2 2 2",
     "conv 10 10 8 16 5 5 1",
     "add 1600",
     "relu 1600",
-    "pool 5 5 16 2 2",
+    "pool 5 5 16 2 2 2",
     "mm 1 400 120",
     "add 120",
     "relu 120",
@@ -130,7 +167,35 @@ DEFAULT_SPECS = [
     "mm 1 84 10",
     # lenet split variants (channel-split conv2, row-split pool1)
     "conv 10 10 8 8 5 5 1",
-    "pool 7 14 8 2 2",
+    "pool 7 14 8 2 2 2",
+    # attn_block / attn_block_mh4 initial designs (seq 16, hidden 128,
+    # FFN 512, 4 heads of width 32): projection/FFN matmuls, single-head
+    # and per-head score/context matmuls, row engines, GELU, and the
+    # affine-layernorm emul/add tail.
+    "mm 16 128 128",
+    "mm 16 128 512",
+    "mm 16 512 128",
+    "mm 16 128 16",
+    "mm 16 16 128",
+    "mm 16 32 16",
+    "mm 16 16 32",
+    "add 2048",
+    "add 8192",
+    "emul 2048",
+    "gelu 8192",
+    "softmax 16",
+    "layernorm 128",
+    # mobile_block / mobile_block_s2 initial designs (add 6272 / relu 6272
+    # and add 2048 are shared with entries above)
+    "dwconv 14 14 16 3 3 1",
+    "dwconv 8 8 16 3 3 2",
+    "conv 14 14 16 32 1 1 1",
+    "conv 8 8 16 32 1 1 1",
+    "add 3136",
+    "relu 3136",
+    "add 1024",
+    "relu 1024",
+    "relu 2048",
 ]
 
 # The MLP parameter order for the full-model artifact (documented contract

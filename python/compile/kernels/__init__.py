@@ -7,13 +7,19 @@ parameterized exactly like the Rust `Op` variants:
 - ``mm.mm_relu_engine(m, k, n)``      — `(mm-relu-engine m k n)`
 - ``elementwise.relu_engine(w)``      — `(relu-engine w)`
 - ``elementwise.add_engine(w)``       — `(add-engine w)`
+- ``elementwise.emul_engine(w)``      — `(emul-engine w)`
+- ``elementwise.gelu_engine(w)``      — `(gelu-engine w)`
+- ``rowwise.softmax_engine(w)``       — `(softmax-engine w)`
+- ``rowwise.layernorm_engine(w)``     — `(layernorm-engine w)`
 - ``conv.conv_engine(oh,ow,c,k,kh,kw,s)``— `(conv-engine oh ow c k kh kw s)`
-- ``conv.pool_engine(oh,ow,c,k,s)``   — `(pool-engine oh ow c k s)`
+- ``conv.pool_engine(oh,ow,c,kh,kw,s)``  — `(pool-engine oh ow c kh kw s)`
+- ``conv.dwconv_engine(oh,ow,c,kh,kw,s)``— `(dw-conv-engine oh ow c kh kw s)`
 
 ``ref`` holds the pure-jnp oracles the kernels are tested against.
 """
 
-from . import conv, elementwise, mm, ref  # noqa: F401
-from .conv import conv_engine, pool_engine  # noqa: F401
-from .elementwise import add_engine, relu_engine  # noqa: F401
+from . import conv, elementwise, mm, ref, rowwise  # noqa: F401
+from .conv import conv_engine, dwconv_engine, pool_engine  # noqa: F401
+from .elementwise import add_engine, emul_engine, gelu_engine, relu_engine  # noqa: F401
 from .mm import mm_engine, mm_relu_engine  # noqa: F401
+from .rowwise import layernorm_engine, softmax_engine  # noqa: F401

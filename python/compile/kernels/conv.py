@@ -6,8 +6,13 @@ also how TPUs actually execute convolutions on the MXU. The im2col gather
 is the HBM->VMEM staging step; the MACs all run in the mm kernel.
 
 `pool-engine` is a Pallas kernel over channel blocks: each grid step loads
-one channel tile of the input window into VMEM and reduces the k*k
-shifted views with `jnp.maximum` (VPU work, no MXU).
+one channel tile of the input window into VMEM and reduces the kh*kw
+shifted views with `jnp.maximum` (VPU work, no MXU); windows are
+rectangular like conv kernels.
+
+`dwconv-engine` follows the same per-channel grid: each step multiplies
+kh*kw shifted input views by its channel's kernel taps and accumulates
+(depthwise conv has no cross-channel reduction, so no MXU either).
 """
 
 import functools
@@ -40,11 +45,11 @@ def conv_engine(oh: int, ow: int, c: int, k: int, kh: int, kw: int, stride: int)
     return run
 
 
-def _pool_kernel(x_ref, o_ref, *, k, stride, oh, ow):
+def _pool_kernel(x_ref, o_ref, *, kh, kw, stride, oh, ow):
     x = x_ref[...]  # (bc, ih, iw)
     out = jnp.full((x.shape[0], oh, ow), -jnp.inf, dtype=x.dtype)
-    for dy in range(k):
-        for dx in range(k):
+    for dy in range(kh):
+        for dx in range(kw):
             out = jnp.maximum(
                 out, x[:, dy : dy + oh * stride : stride, dx : dx + ow * stride : stride]
             )
@@ -52,17 +57,57 @@ def _pool_kernel(x_ref, o_ref, *, k, stride, oh, ow):
 
 
 @functools.lru_cache(maxsize=None)
-def pool_engine(oh: int, ow: int, c: int, k: int, stride: int):
-    """The `(pool-engine oh ow c k stride)` unit: `(c,ih,iw) -> (c,oh,ow)`."""
-    ih = (oh - 1) * stride + k
-    iw = (ow - 1) * stride + k
+def pool_engine(oh: int, ow: int, c: int, kh: int, kw: int, stride: int):
+    """The `(pool-engine oh ow c kh kw stride)` unit: `(c,ih,iw) -> (c,oh,ow)`.
+
+    Windows are rectangular; ``kw`` is required so stale square-window
+    positional calls fail loudly instead of binding stride to kw.
+    """
+    ih = (oh - 1) * stride + kh
+    iw = (ow - 1) * stride + kw
     # One channel per grid step keeps the VMEM tile minimal; channels are
     # independent so this is also the natural split axis in hardware.
-    body = functools.partial(_pool_kernel, k=k, stride=stride, oh=oh, ow=ow)
+    body = functools.partial(_pool_kernel, kh=kh, kw=kw, stride=stride, oh=oh, ow=ow)
     return pl.pallas_call(
         body,
         grid=(c,),
         in_specs=[pl.BlockSpec((1, ih, iw), lambda ci: (ci, 0, 0))],
+        out_specs=pl.BlockSpec((1, oh, ow), lambda ci: (ci, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, oh, ow), jnp.float32),
+        interpret=True,
+    )
+
+
+def _dwconv_kernel(x_ref, w_ref, o_ref, *, kh, kw, stride, oh, ow):
+    x = x_ref[...]  # (1, ih, iw)
+    w = w_ref[...]  # (1, kh, kw)
+    acc = jnp.zeros((x.shape[0], oh, ow), x.dtype)
+    for dy in range(kh):
+        for dx in range(kw):
+            acc = acc + (
+                w[:, dy, dx][:, None, None]
+                * x[:, dy : dy + oh * stride : stride, dx : dx + ow * stride : stride]
+            )
+    o_ref[...] = acc
+
+
+@functools.lru_cache(maxsize=None)
+def dwconv_engine(oh: int, ow: int, c: int, kh: int, kw: int, stride: int):
+    """The `(dw-conv-engine oh ow c kh kw stride)` unit.
+
+    Callable ``(x:(c,ih,iw), w:(c,kh,kw)) -> (c,oh,ow)`` with
+    ``ih = (oh-1)*stride + kh`` (valid conv over a pre-padded tile).
+    """
+    ih = (oh - 1) * stride + kh
+    iw = (ow - 1) * stride + kw
+    body = functools.partial(_dwconv_kernel, kh=kh, kw=kw, stride=stride, oh=oh, ow=ow)
+    return pl.pallas_call(
+        body,
+        grid=(c,),
+        in_specs=[
+            pl.BlockSpec((1, ih, iw), lambda ci: (ci, 0, 0)),
+            pl.BlockSpec((1, kh, kw), lambda ci: (ci, 0, 0)),
+        ],
         out_specs=pl.BlockSpec((1, oh, ow), lambda ci: (ci, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((c, oh, ow), jnp.float32),
         interpret=True,

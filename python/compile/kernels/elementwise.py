@@ -1,5 +1,7 @@
-"""Vector elementwise engines (Layer 1): the paper Fig. 2 `relu-engine W`
-and the `add-engine W` used by reified bias/residual adds.
+"""Vector elementwise engines (Layer 1): the paper Fig. 2 `relu-engine W`,
+the `add-engine W` used by reified bias/residual adds, the `emul-engine W`
+carrying affine layernorm's gamma scale, and the `gelu-engine W` behind
+the transformer FFN activation.
 
 These map to the TPU VPU (8x128 vector lanes): the BlockSpec streams the
 flat vector through VMEM in lane-aligned chunks. Width is the engine's
@@ -34,12 +36,44 @@ def _add_kernel(x_ref, y_ref, o_ref):
     o_ref[...] = x_ref[...] + y_ref[...]
 
 
+def _emul_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] * y_ref[...]
+
+
+def _gelu_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    c = 0.7978845608028654  # sqrt(2/pi)
+    o_ref[...] = 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
 @functools.lru_cache(maxsize=None)
 def relu_engine(w: int):
     """The `(relu-engine w)` unit as a callable ``x -> relu(x)``."""
+    return _unary(_relu_kernel, w)
+
+
+@functools.lru_cache(maxsize=None)
+def add_engine(w: int):
+    """The `(add-engine w)` unit as a callable ``(x, y) -> x + y``."""
+    return _binary(_add_kernel, w)
+
+
+@functools.lru_cache(maxsize=None)
+def emul_engine(w: int):
+    """The `(emul-engine w)` unit as a callable ``(x, y) -> x * y``."""
+    return _binary(_emul_kernel, w)
+
+
+@functools.lru_cache(maxsize=None)
+def gelu_engine(w: int):
+    """The `(gelu-engine w)` unit as a callable ``x -> gelu(x)``."""
+    return _unary(_gelu_kernel, w)
+
+
+def _unary(kernel_body, w: int):
     bw = pick_block_w(w)
     return pl.pallas_call(
-        _relu_kernel,
+        kernel_body,
         grid=(w // bw,),
         in_specs=[pl.BlockSpec((bw,), lambda i: (i,))],
         out_specs=pl.BlockSpec((bw,), lambda i: (i,)),
@@ -48,12 +82,10 @@ def relu_engine(w: int):
     )
 
 
-@functools.lru_cache(maxsize=None)
-def add_engine(w: int):
-    """The `(add-engine w)` unit as a callable ``(x, y) -> x + y``."""
+def _binary(kernel_body, w: int):
     bw = pick_block_w(w)
     return pl.pallas_call(
-        _add_kernel,
+        kernel_body,
         grid=(w // bw,),
         in_specs=[
             pl.BlockSpec((bw,), lambda i: (i,)),

@@ -55,15 +55,57 @@ def im2col(x, kh, kw, stride=1):
     return jnp.stack(rows)
 
 
-def maxpool2d(x, k, stride):
-    """(C,H,W) max pool."""
+def maxpool2d(x, kh, kw, stride):
+    """(C,H,W) max pool over a rectangular ``kh``x``kw`` window."""
     c, h, w = x.shape
-    oh = (h - k) // stride + 1
-    ow = (w - k) // stride + 1
+    oh = (h - kh) // stride + 1
+    ow = (w - kw) // stride + 1
     out = jnp.full((c, oh, ow), -jnp.inf, dtype=x.dtype)
-    for dy in range(k):
-        for dx in range(k):
+    for dy in range(kh):
+        for dx in range(kw):
             out = jnp.maximum(
                 out, x[:, dy : dy + oh * stride : stride, dx : dx + ow * stride : stride]
+            )
+    return out
+
+
+def emul(x, y):
+    """Elementwise multiply on flat vectors."""
+    return x * y
+
+
+def gelu(x):
+    """GELU, tanh approximation — mirrors the Rust oracle exactly."""
+    c = 0.7978845608028654  # sqrt(2/pi)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+def softmax(x):
+    """Numerically-stable softmax over the last axis."""
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def layernorm(x, eps=1e-5):
+    """Non-affine layernorm over the last axis (population variance)."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps)
+
+
+def dwconv2d(x, w, stride=1):
+    """Depthwise valid conv: x:(C,H,W), w:(C,KH,KW) -> (C,OH,OW)."""
+    c, h, wd = x.shape
+    c2, kh, kw = w.shape
+    assert c == c2
+    oh = (h - kh) // stride + 1
+    ow = (wd - kw) // stride + 1
+    out = jnp.zeros((c, oh, ow), x.dtype)
+    for dy in range(kh):
+        for dx in range(kw):
+            out = out + (
+                w[:, dy, dx][:, None, None]
+                * x[:, dy : dy + oh * stride : stride, dx : dx + ow * stride : stride]
             )
     return out

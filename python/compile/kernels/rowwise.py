@@ -1,0 +1,58 @@
+"""Row-coupled normalization engines (Layer 1): `softmax-engine W` and
+`layernorm-engine W`.
+
+Unlike the vector engines, the row statistics (max/sum or mean/variance)
+couple every lane, so the whole row lives in one VMEM block and there is
+deliberately no width-blocked grid — mirroring the Rust side, where these
+engines carry no `split-*` rewrite (the registry's documented exemptions).
+The schedule dimension is the *row loop around* the engine, which the
+`parallelize` rewrite replicates.
+
+`layernorm-engine` is non-affine by contract: the EngineIR lowering runs
+the gamma/beta affine tail on `emul-engine` / `add-engine` invocations.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-5  # matches the Rust oracle's layernorm epsilon
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    m = jnp.max(x)
+    e = jnp.exp(x - m)
+    o_ref[...] = e / jnp.sum(e)
+
+
+def _layernorm_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    mu = jnp.mean(x)
+    var = jnp.mean((x - mu) ** 2)
+    o_ref[...] = (x - mu) / jnp.sqrt(var + EPS)
+
+
+def _row_unit(kernel_body, w: int):
+    return pl.pallas_call(
+        kernel_body,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((w,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((w,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((w,), jnp.float32),
+        interpret=True,
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def softmax_engine(w: int):
+    """The `(softmax-engine w)` row unit: `(w,) -> (w,)`."""
+    return _row_unit(_softmax_kernel, w)
+
+
+@functools.lru_cache(maxsize=None)
+def layernorm_engine(w: int):
+    """The `(layernorm-engine w)` row unit (non-affine): `(w,) -> (w,)`."""
+    return _row_unit(_layernorm_kernel, w)

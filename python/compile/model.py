@@ -98,9 +98,9 @@ def _conv_layer(x, w, b, pad, stride):
 def lenet_forward(params, x):
     """LeNet inference for one (1, 28, 28) input."""
     h = _conv_layer(x, params["c1_w"], params["c1_b"], pad=2, stride=1)  # (8,28,28)
-    h = pool_engine(14, 14, 8, 2, 2)(h)  # (8,14,14)
+    h = pool_engine(14, 14, 8, 2, 2, 2)(h)  # (8,14,14)
     h = _conv_layer(h, params["c2_w"], params["c2_b"], pad=0, stride=1)  # (16,10,10)
-    h = pool_engine(5, 5, 16, 2, 2)(h)  # (16,5,5)
+    h = pool_engine(5, 5, 16, 2, 2, 2)(h)  # (16,5,5)
     h = h.reshape(1, 400)
     h = _dense_layer(h, params["fc1_w"], params["fc1_b"], True)
     h = _dense_layer(h, params["fc2_w"], params["fc2_b"], True)
@@ -123,9 +123,9 @@ def lenet_reference(params, x):
 
     h = jnp.pad(x, ((0, 0), (2, 2), (2, 2)))
     h = jnp.maximum(ref.conv2d(h, params["c1_w"]) + params["c1_b"][:, None, None], 0.0)
-    h = ref.maxpool2d(h, 2, 2)
+    h = ref.maxpool2d(h, 2, 2, 2)
     h = jnp.maximum(ref.conv2d(h, params["c2_w"]) + params["c2_b"][:, None, None], 0.0)
-    h = ref.maxpool2d(h, 2, 2)
+    h = ref.maxpool2d(h, 2, 2, 2)
     h = h.reshape(1, 400)
     h = jnp.maximum(h @ params["fc1_w"] + params["fc1_b"], 0.0)
     h = jnp.maximum(h @ params["fc2_w"] + params["fc2_b"], 0.0)

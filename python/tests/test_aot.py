@@ -15,8 +15,13 @@ def test_build_engine_all_kinds():
         ("mmrelu 1 128 64", "mmrelu_1x128x64"),
         ("relu 128", "relu_128"),
         ("add 64", "add_64"),
+        ("emul 64", "emul_64"),
+        ("gelu 128", "gelu_128"),
+        ("softmax 16", "softmax_16"),
+        ("layernorm 128", "layernorm_128"),
         ("conv 28 28 1 8 5 5 1", "conv_28x28x1x8x5x5x1"),
-        ("pool 14 14 8 2 2", "pool_14x14x8x2x2"),
+        ("pool 14 14 8 2 4 2", "pool_14x14x8x2x4x2"),
+        ("dwconv 8 8 16 3 3 2", "dwconv_8x8x16x3x3x2"),
     ]:
         name, fn, args = aot.build_engine(spec)
         assert name == want
@@ -51,15 +56,25 @@ def test_emit_skips_existing_unless_forced():
         assert p1 == p2 and os.path.getmtime(p2) == stamp
 
 
-def test_default_specs_cover_mlp_and_lenet_initial_designs():
+def test_default_specs_cover_workload_initial_designs():
     names = [aot.build_engine(s)[0] for s in aot.DEFAULT_SPECS]
     for required in [
         "mm_1x784x128",
         "relu_128",
         "add_10",
         "conv_28x28x1x8x5x5x1",
-        "pool_5x5x16x2x2",
+        "pool_5x5x16x2x2x2",
         "mm_1x84x10",
+        # transformer engines (attn_block / attn_block_mh4)
+        "softmax_16",
+        "layernorm_128",
+        "gelu_8192",
+        "emul_2048",
+        "mm_16x128x16",
+        "mm_16x32x16",
+        # mobile engines (mobile_block / mobile_block_s2)
+        "dwconv_14x14x16x3x3x1",
+        "dwconv_8x8x16x3x3x2",
     ]:
         assert required in names
 

@@ -11,11 +11,16 @@ from hypothesis import given, settings, strategies as st
 from compile.kernels import (
     add_engine,
     conv_engine,
+    dwconv_engine,
+    emul_engine,
+    gelu_engine,
+    layernorm_engine,
     mm_engine,
     mm_relu_engine,
     pool_engine,
     ref,
     relu_engine,
+    softmax_engine,
 )
 from compile.kernels.mm import pick_block_k, vmem_footprint
 
@@ -93,6 +98,43 @@ def test_add_engine_matches_ref(w):
     np.testing.assert_allclose(add_engine(w)(x, y), ref.add(x, y), rtol=1e-6, atol=1e-6)
 
 
+@settings(**SETTINGS)
+@given(w=st.sampled_from([4, 10, 64, 128, 2048]))
+def test_emul_engine_matches_ref(w):
+    x, y = rand(w, w), rand(w + 1, w)
+    np.testing.assert_allclose(emul_engine(w)(x, y), ref.emul(x, y), rtol=1e-6, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(w=st.sampled_from([4, 32, 128, 8192]))
+def test_gelu_engine_matches_ref(w):
+    x = rand(w + 2, w)
+    np.testing.assert_allclose(gelu_engine(w)(x), ref.gelu(x), rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# row-coupled normalization engines
+# ----------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(w=st.sampled_from([4, 16, 128]))
+def test_softmax_engine_matches_ref(w):
+    x = rand(w + 3, w)
+    got = softmax_engine(w)(x)
+    np.testing.assert_allclose(got, ref.softmax(x), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got).sum(), 1.0, rtol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(w=st.sampled_from([4, 16, 128]))
+def test_layernorm_engine_matches_ref(w):
+    x = rand(w + 5, w)
+    got = np.asarray(layernorm_engine(w)(x))
+    np.testing.assert_allclose(got, ref.layernorm(x), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(got.mean(), 0.0, atol=1e-5)
+
+
 def test_relu_engine_edge_values():
     w = 8
     x = jnp.array([0.0, -0.0, 1e30, -1e30, jnp.inf, -jnp.inf, 1e-38, -1e-38], jnp.float32)
@@ -127,17 +169,62 @@ def test_conv_engine_matches_ref(c, k, kh, oh, stride):
 @settings(**SETTINGS)
 @given(
     c=st.sampled_from([1, 8, 16]),
-    k=st.sampled_from([2, 3]),
+    kh=st.sampled_from([2, 3]),
+    kw=st.sampled_from([2, 4]),
     oh=st.sampled_from([5, 7, 14]),
     stride=st.sampled_from([1, 2]),
 )
-def test_pool_engine_matches_ref(c, k, oh, stride):
+def test_pool_engine_matches_ref(c, kh, kw, oh, stride):
     ow = oh
-    ih = (oh - 1) * stride + k
-    x = rand(c * 3 + oh, c, ih, ih)
-    got = pool_engine(oh, ow, c, k, stride)(x)
-    want = ref.maxpool2d(x, k, stride)
+    ih = (oh - 1) * stride + kh
+    iw = (ow - 1) * stride + kw
+    x = rand(c * 3 + oh + kw, c, ih, iw)
+    got = pool_engine(oh, ow, c, kh, kw, stride)(x)
+    want = ref.maxpool2d(x, kh, kw, stride)
     np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+@settings(**SETTINGS)
+@given(
+    c=st.sampled_from([1, 4, 16]),
+    kh=st.sampled_from([3, 5]),
+    oh=st.sampled_from([4, 8, 14]),
+    stride=st.sampled_from([1, 2]),
+)
+def test_dwconv_engine_matches_ref(c, kh, oh, stride):
+    ow = oh
+    ih = (oh - 1) * stride + kh
+    x = rand(c * 11 + oh, c, ih, ih)
+    w = rand(c * 5 + kh, c, kh, kh)
+    got = dwconv_engine(oh, ow, c, kh, kh, stride)(x, w)
+    want = ref.dwconv2d(x, w, stride)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_conv_engine_rectangular_kernel():
+    # 3x1 and 1x5 kernels: the kh/kw distinction must reach im2col's patch
+    # stride and the mm engine's ckk dimension.
+    for kh, kw in [(3, 1), (1, 5)]:
+        c, k, oh, stride = 3, 4, 6, 1
+        ih = (oh - 1) * stride + kh
+        iw = (oh - 1) * stride + kw
+        x = rand(c * 7 + kh + kw, c, ih, iw)
+        w = rand(k * 3 + kw, k, c, kh, kw)
+        got = conv_engine(oh, oh, c, k, kh, kw, stride)(x, w)
+        want = ref.conv2d(x, w, stride)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_dwconv_engine_rectangular_kernel():
+    c, oh, stride = 4, 5, 2
+    kh, kw = 3, 5
+    ih = (oh - 1) * stride + kh
+    iw = (oh - 1) * stride + kw
+    x = rand(17, c, ih, iw)
+    w = rand(19, c, kh, kw)
+    got = dwconv_engine(oh, oh, c, kh, kw, stride)(x, w)
+    want = ref.dwconv2d(x, w, stride)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
 
 
 def test_im2col_matches_conv_identity():

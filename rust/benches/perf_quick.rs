@@ -45,14 +45,18 @@ fn main() {
             ("mlp", RuleSet::Paper, 6, 50_000),
             ("lenet", RuleSet::Paper, 5, 50_000),
             ("attn_block", RuleSet::All, 4, 50_000),
+            ("attn_block_mh4", RuleSet::All, 3, 50_000),
             ("mobile_block", RuleSet::Paper, 5, 50_000),
+            ("mobile_block_s2", RuleSet::Paper, 5, 50_000),
         ]
     } else {
         &[
             ("relu128", RuleSet::Fig2, 6, 8_000),
             ("mlp", RuleSet::Paper, 3, 8_000),
             ("attn_block", RuleSet::All, 2, 8_000),
+            ("attn_block_mh4", RuleSet::All, 2, 8_000),
             ("mobile_block", RuleSet::Paper, 3, 8_000),
+            ("mobile_block_s2", RuleSet::Paper, 3, 8_000),
         ]
     };
     let samples = if full { 64 } else { 16 };

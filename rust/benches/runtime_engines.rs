@@ -36,7 +36,7 @@ fn main() {
         Op::MmEngine { m: 1, k: 128, n: 64 },
         Op::MmReluEngine { m: 1, k: 128, n: 64 },
         Op::ConvEngine { oh: 28, ow: 28, c: 1, k: 8, kh: 5, kw: 5, stride: 1 },
-        Op::PoolEngine { oh: 14, ow: 14, c: 8, k: 2, stride: 2 },
+        Op::PoolEngine { oh: 14, ow: 14, c: 8, kh: 2, kw: 2, stride: 2 },
     ];
     let mut t = Table::new(
         "PJRT engine invocation latency",
@@ -142,9 +142,9 @@ fn example_args(e: &Op) -> Vec<Tensor> {
                 Tensor::random(Shape::new(&[k, c, kh, kw]), 7),
             ]
         }
-        Op::PoolEngine { oh, ow, c, k, stride } => {
-            let ih = (oh - 1) * stride + k;
-            let iw = (ow - 1) * stride + k;
+        Op::PoolEngine { oh, ow, c, kh, kw, stride } => {
+            let ih = (oh - 1) * stride + kh;
+            let iw = (ow - 1) * stride + kw;
             vec![Tensor::random(Shape::new(&[c, ih, iw]), 8)]
         }
         _ => vec![Tensor::zeros(out)],

@@ -80,8 +80,8 @@ pub enum Op {
     BiasAdd,
     /// Elementwise add; children `[x, y]` (same shape).
     EAdd,
-    /// Max pooling; children `[x:(C,H,W)]`.
-    MaxPool2d { k: usize, stride: usize },
+    /// Max pooling; children `[x:(C,H,W)]` (rectangular `kh`×`kw` window).
+    MaxPool2d { kh: usize, kw: usize, stride: usize },
     /// Flatten to `(1, numel)`; children `[x]`.
     Flatten,
     /// Global average pool `(C,H,W) -> (C)`; children `[x]`.
@@ -91,11 +91,17 @@ pub enum Op {
     Matmul,
     /// Batched matmul; children `[a:(B,M,K), b:(B,K,N)] -> (B,M,N)`.
     BatchMatmul,
-    /// Row-wise softmax over the last axis; children `[x]` (rank 1 or 2).
+    /// Row-wise softmax over the last axis; children `[x]` (rank 1, 2 or 3;
+    /// leading axes are independent rows).
     Softmax,
-    /// Layer normalization over the last axis (non-affine, ε=1e-5);
-    /// children `[x]` (rank 1 or 2).
+    /// Affine layer normalization over the last axis (ε=1e-5):
+    /// `gamma ⊙ norm(x) + beta`; children `[x, gamma, beta]` with `x` of
+    /// rank 1 or 2 and `gamma`/`beta` rank 1 of the last-axis length.
     LayerNorm,
+    /// Elementwise multiply (Hadamard product); children `[x, y]` (same
+    /// shape). The scale half of affine layernorm, and the op the
+    /// `emul-engine` reifies.
+    Emul,
     /// Elementwise GELU (tanh approximation); children `[x]` (any shape).
     Gelu,
     /// Depthwise 2-D convolution (channel multiplier 1); children
@@ -117,8 +123,9 @@ pub enum Op {
     /// a `(c, ih, iw)` input tile with a rectangular `kh`×`kw` kernel
     /// (paper Fig. 1's `conv_engine<H, W, C, K>`, generalized).
     ConvEngine { oh: usize, ow: usize, c: usize, k: usize, kh: usize, kw: usize, stride: usize },
-    /// Max-pool engine producing `(c, oh, ow)` from `(c, ih, iw)`.
-    PoolEngine { oh: usize, ow: usize, c: usize, k: usize, stride: usize },
+    /// Max-pool engine producing `(c, oh, ow)` from `(c, ih, iw)` with a
+    /// rectangular `kh`×`kw` window (square pooling is the `kh == kw` case).
+    PoolEngine { oh: usize, ow: usize, c: usize, kh: usize, kw: usize, stride: usize },
     /// `w`-wide row softmax unit (normalization is coupled across the row,
     /// so this engine does not split along `w`).
     SoftmaxEngine { w: usize },
@@ -126,6 +133,9 @@ pub enum Op {
     LayerNormEngine { w: usize },
     /// `w`-wide vector GELU unit.
     GeluEngine { w: usize },
+    /// `w`-wide vector elementwise-multiply unit (the `add-engine`'s
+    /// multiplicative sibling; carries affine layernorm's gamma scale).
+    EmulEngine { w: usize },
     /// Depthwise convolution engine producing `(c, oh, ow)` from a
     /// `(c, ih, iw)` tile with a per-channel `kh`×`kw` kernel.
     DwConvEngine { oh: usize, ow: usize, c: usize, kh: usize, kw: usize, stride: usize },
@@ -153,6 +163,8 @@ pub enum Op {
     InvokeGelu,
     /// `[e:DwConvEngine, x:(c,ih,iw), w:(c,kh,kw)] -> (c,oh,ow)`.
     InvokeDwConv,
+    /// `[e:EmulEngine, x:(w,), y:(w,)] -> (w,)`.
+    InvokeEmul,
 
     // ------------------------------------------------------------------
     // Software schedules: children `[body]`
@@ -182,7 +194,9 @@ pub enum Op {
     Pad2d { pad: usize },
     /// im2col: `(c,ih,iw) -> (c*kh*kw, oh*ow)` patch matrix; children `[x]`.
     Im2Col { kh: usize, kw: usize, stride: usize },
-    /// Matrix transpose `(m,n) -> (n,m)`; children `[x]`.
+    /// Transpose of the trailing two axes: `(m,n) -> (n,m)` for rank 2,
+    /// `(b,m,n) -> (b,n,m)` for rank 3 (the batched form multi-head
+    /// attention uses to pack per-head operands); children `[x]`.
     Transpose,
     /// Materialize the child into an explicit storage buffer.
     Buffer { kind: BufKind },
@@ -251,6 +265,9 @@ pub enum OpKind {
     InvokeLayerNorm,
     InvokeGelu,
     InvokeDwConv,
+    Emul,
+    EmulEngine,
+    InvokeEmul,
 }
 
 impl OpKind {
@@ -309,6 +326,9 @@ impl OpKind {
         OpKind::InvokeLayerNorm,
         OpKind::InvokeGelu,
         OpKind::InvokeDwConv,
+        OpKind::Emul,
+        OpKind::EmulEngine,
+        OpKind::InvokeEmul,
     ];
 
     /// This kind's registry entry.
@@ -339,6 +359,7 @@ impl Op {
             Op::BatchMatmul => OpKind::BatchMatmul,
             Op::Softmax => OpKind::Softmax,
             Op::LayerNorm => OpKind::LayerNorm,
+            Op::Emul => OpKind::Emul,
             Op::Gelu => OpKind::Gelu,
             Op::DepthwiseConv2d { .. } => OpKind::DepthwiseConv2d,
             Op::MmEngine { .. } => OpKind::MmEngine,
@@ -350,6 +371,7 @@ impl Op {
             Op::SoftmaxEngine { .. } => OpKind::SoftmaxEngine,
             Op::LayerNormEngine { .. } => OpKind::LayerNormEngine,
             Op::GeluEngine { .. } => OpKind::GeluEngine,
+            Op::EmulEngine { .. } => OpKind::EmulEngine,
             Op::DwConvEngine { .. } => OpKind::DwConvEngine,
             Op::InvokeMm => OpKind::InvokeMm,
             Op::InvokeMmRelu => OpKind::InvokeMmRelu,
@@ -361,6 +383,7 @@ impl Op {
             Op::InvokeLayerNorm => OpKind::InvokeLayerNorm,
             Op::InvokeGelu => OpKind::InvokeGelu,
             Op::InvokeDwConv => OpKind::InvokeDwConv,
+            Op::InvokeEmul => OpKind::InvokeEmul,
             Op::SchedLoop { .. } => OpKind::SchedLoop,
             Op::SchedPar { .. } => OpKind::SchedPar,
             Op::SchedReduce { .. } => OpKind::SchedReduce,
@@ -464,12 +487,19 @@ mod tests {
         assert_eq!(Op::SliceAx { axis: 0, len: 4 }.arity(), Some(2));
         assert_eq!(Op::Matmul.arity(), Some(2));
         assert_eq!(Op::InvokeDwConv.arity(), Some(3));
+        assert_eq!(Op::Emul.arity(), Some(2));
+        assert_eq!(Op::InvokeEmul.arity(), Some(3));
+        // Affine layernorm takes gamma and beta operands.
+        assert_eq!(Op::LayerNorm.arity(), Some(3));
     }
 
     #[test]
     fn engine_classification() {
         assert!(Op::ReluEngine { w: 8 }.is_engine());
         assert!(Op::SoftmaxEngine { w: 8 }.is_engine());
+        assert!(Op::EmulEngine { w: 8 }.is_engine());
+        assert!(Op::InvokeEmul.is_invoke());
+        assert!(Op::Emul.is_relay());
         assert!(!Op::InvokeRelu.is_engine());
         assert!(Op::InvokeRelu.is_invoke());
         assert!(Op::InvokeGelu.is_invoke());

@@ -268,9 +268,40 @@ mod tests {
     #[test]
     fn transpose_softmax_layernorm_shapes() {
         assert_eq!(infer(&Op::Transpose, &[t(&[2, 5])]).unwrap(), t(&[5, 2]));
+        // Batched (rank-3) transpose swaps the trailing axes.
+        assert_eq!(infer(&Op::Transpose, &[t(&[4, 2, 5])]).unwrap(), t(&[4, 5, 2]));
+        assert!(infer(&Op::Transpose, &[t(&[2, 3, 4, 5])]).is_err());
         assert_eq!(infer(&Op::Softmax, &[t(&[4, 8])]).unwrap(), t(&[4, 8]));
-        assert_eq!(infer(&Op::LayerNorm, &[t(&[8])]).unwrap(), t(&[8]));
-        assert!(infer(&Op::Softmax, &[t(&[2, 3, 4])]).is_err());
+        // Rank-3 softmax (per-head attention scores) is row-wise too.
+        assert_eq!(infer(&Op::Softmax, &[t(&[2, 3, 4])]).unwrap(), t(&[2, 3, 4]));
+        assert!(infer(&Op::Softmax, &[t(&[2, 3, 4, 5])]).is_err());
+        // Affine layernorm: gamma/beta must match the last axis.
+        assert_eq!(
+            infer(&Op::LayerNorm, &[t(&[8]), t(&[8]), t(&[8])]).unwrap(),
+            t(&[8])
+        );
+        assert_eq!(
+            infer(&Op::LayerNorm, &[t(&[2, 8]), t(&[8]), t(&[8])]).unwrap(),
+            t(&[2, 8])
+        );
+        assert!(infer(&Op::LayerNorm, &[t(&[2, 8]), t(&[4]), t(&[8])]).is_err());
+        assert!(infer(&Op::LayerNorm, &[t(&[2, 8]), t(&[8]), t(&[2])]).is_err());
+    }
+
+    #[test]
+    fn emul_requires_same_shape() {
+        assert_eq!(infer(&Op::Emul, &[t(&[4]), t(&[4])]).unwrap(), t(&[4]));
+        assert!(infer(&Op::Emul, &[t(&[4]), t(&[5])]).is_err());
+    }
+
+    #[test]
+    fn rect_pool_shape() {
+        let ty = infer(
+            &Op::MaxPool2d { kh: 2, kw: 4, stride: 2 },
+            &[t(&[3, 8, 8])],
+        )
+        .unwrap();
+        assert_eq!(ty, t(&[3, 4, 3]));
     }
 
     #[test]

@@ -205,6 +205,14 @@ pub struct OpSpec {
     /// `Data` ops: true if the op materializes/moves elements (priced as
     /// SRAM traffic), false for free addressing/views.
     pub data_traffic: bool,
+    /// `Engine` ops: the rule-name prefix of this engine's split-rewrite
+    /// family (e.g. `"split-conv"` covers `split-conv-{oh,ow,k,c}-x2`).
+    /// `None` on an engine is a **documented exemption** — the engine's
+    /// computation is coupled across its whole width so no split exists
+    /// (softmax/layernorm row engines). `tests/registry.rs` pins the
+    /// exemption set and asserts every declared family has at least one
+    /// registered rule, so a new engine can't ship split-less by accident.
+    pub split_family: Option<&'static str>,
     /// A minimal closed term exercising this op (registry tests parse,
     /// print, type-check, evaluate, lower and cost it).
     pub exemplar: &'static str,
@@ -294,16 +302,16 @@ fn sh_eadd(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
 }
 
 fn sh_maxpool(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
-    let (k, stride) = match op {
-        Op::MaxPool2d { k, stride } => (*k, *stride),
+    let (kh, kw, stride) = match op {
+        Op::MaxPool2d { kh, kw, stride } => (*kh, *kw, *stride),
         _ => unreachable!(),
     };
     let x = tensor(op, 0, tys)?;
     if x.rank() != 3 {
         return Err(shape_err(op, format!("maxpool on {x}")));
     }
-    let oh = out_dim(x.dim(1), k, stride).ok_or_else(|| shape_err(op, "H does not tile"))?;
-    let ow = out_dim(x.dim(2), k, stride).ok_or_else(|| shape_err(op, "W does not tile"))?;
+    let oh = out_dim(x.dim(1), kh, stride).ok_or_else(|| shape_err(op, "H does not tile"))?;
+    let ow = out_dim(x.dim(2), kw, stride).ok_or_else(|| shape_err(op, "W does not tile"))?;
     Ok(Ty::Tensor(Shape::new(&[x.dim(0), oh, ow])))
 }
 
@@ -331,16 +339,35 @@ fn sh_bmm(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
 
 fn sh_transpose(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
     let x = tensor(op, 0, tys)?;
-    if x.rank() != 2 {
-        return Err(shape_err(op, format!("transpose on rank {}", x.rank())));
+    match x.rank() {
+        2 => Ok(Ty::Tensor(Shape::new(&[x.dim(1), x.dim(0)]))),
+        3 => Ok(Ty::Tensor(Shape::new(&[x.dim(0), x.dim(2), x.dim(1)]))),
+        r => Err(shape_err(op, format!("transpose on rank {r}"))),
     }
-    Ok(Ty::Tensor(Shape::new(&[x.dim(1), x.dim(0)])))
 }
 
+/// Row-wise over the last axis; leading axes (up to rank 3, as in
+/// multi-head attention's per-head score rows) are independent rows.
 fn sh_rowwise(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
     let x = tensor(op, 0, tys)?;
-    if x.rank() != 1 && x.rank() != 2 {
+    if x.rank() < 1 || x.rank() > 3 {
         return Err(shape_err(op, format!("row-wise op on rank {}", x.rank())));
+    }
+    Ok(Ty::Tensor(x.clone()))
+}
+
+/// Affine layernorm: `x` rank 1 or 2, `gamma`/`beta` rank 1 of the
+/// last-axis length.
+fn sh_layernorm(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
+    let x = tensor(op, 0, tys)?;
+    if x.rank() != 1 && x.rank() != 2 {
+        return Err(shape_err(op, format!("layernorm on rank {}", x.rank())));
+    }
+    let n = x.dim(x.rank() - 1);
+    let g = tensor(op, 1, tys)?;
+    let b = tensor(op, 2, tys)?;
+    if g != &Shape::new(&[n]) || b != &Shape::new(&[n]) {
+        return Err(shape_err(op, format!("layernorm({n}) gamma{g} beta{b}")));
     }
     Ok(Ty::Tensor(x.clone()))
 }
@@ -402,10 +429,13 @@ fn sh_invoke_elem(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
     Ok(Ty::Tensor(x.clone()))
 }
 
+/// Shared shape rule for `w`-wide binary elementwise invocations
+/// (add, emul).
 fn sh_invoke_add(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
     let e = engine(op, 0, tys)?;
-    let w = match e {
-        Op::AddEngine { w } => *w,
+    let w = match (op.kind(), e) {
+        (OpKind::InvokeAdd, Op::AddEngine { w })
+        | (OpKind::InvokeEmul, Op::EmulEngine { w }) => *w,
         _ => return Err(shape_err(op, format!("wrong engine {e}"))),
     };
     let x = tensor(op, 1, tys)?;
@@ -437,12 +467,12 @@ fn sh_invoke_conv(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
 
 fn sh_invoke_pool(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
     let e = engine(op, 0, tys)?;
-    let (oh, ow, c, k, stride) = match e {
-        Op::PoolEngine { oh, ow, c, k, stride } => (*oh, *ow, *c, *k, *stride),
+    let (oh, ow, c, kh, kw, stride) = match e {
+        Op::PoolEngine { oh, ow, c, kh, kw, stride } => (*oh, *ow, *c, *kh, *kw, *stride),
         _ => return Err(shape_err(op, format!("wrong engine {e}"))),
     };
     let x = tensor(op, 1, tys)?;
-    let want = Shape::new(&[c, in_dim(oh, k, stride), in_dim(ow, k, stride)]);
+    let want = Shape::new(&[c, in_dim(oh, kh, stride), in_dim(ow, kw, stride)]);
     if x != &want {
         return Err(shape_err(op, format!("pool engine wants {want}; got {x}")));
     }
@@ -583,12 +613,16 @@ fn ev_eadd(_op: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
     Ok(args[0].eadd(&args[1]))
 }
 
+fn ev_emul(_op: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
+    Ok(args[0].emul(&args[1]))
+}
+
 fn ev_maxpool(op: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
-    let (k, stride) = match *op {
-        Op::MaxPool2d { k, stride } => (k, stride),
+    let (kh, kw, stride) = match *op {
+        Op::MaxPool2d { kh, kw, stride } => (kh, kw, stride),
         _ => unreachable!(),
     };
-    Ok(args[0].maxpool2d(k, stride))
+    Ok(args[0].maxpool2d(kh, kw, stride))
 }
 
 fn ev_flatten(_op: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
@@ -605,7 +639,7 @@ fn ev_bmm(_op: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
 }
 
 fn ev_transpose(_op: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
-    Ok(args[0].transpose2())
+    Ok(args[0].transpose_last())
 }
 
 fn ev_softmax(_op: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
@@ -613,7 +647,7 @@ fn ev_softmax(_op: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
 }
 
 fn ev_layernorm(_op: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
-    Ok(args[0].layernorm_last(1e-5))
+    Ok(args[0].layernorm_affine_last(&args[1], &args[2], 1e-5))
 }
 
 fn ev_gelu(_op: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
@@ -681,6 +715,10 @@ fn iv_add(_engine: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
     Ok(args[0].eadd(&args[1]))
 }
 
+fn iv_emul(_engine: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
+    Ok(args[0].emul(&args[1]))
+}
+
 fn iv_conv(engine: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
     let stride = match engine {
         Op::ConvEngine { stride, .. } => *stride,
@@ -690,11 +728,11 @@ fn iv_conv(engine: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
 }
 
 fn iv_pool(engine: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
-    let (k, stride) = match engine {
-        Op::PoolEngine { k, stride, .. } => (*k, *stride),
-        _ => (1, 1),
+    let (kh, kw, stride) = match engine {
+        Op::PoolEngine { kh, kw, stride, .. } => (*kh, *kw, *stride),
+        _ => (1, 1, 1),
     };
-    Ok(args[0].maxpool2d(k, stride))
+    Ok(args[0].maxpool2d(kh, kw, stride))
 }
 
 fn iv_softmax(_engine: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
@@ -754,18 +792,28 @@ fn lo_gelu(cx: &mut LowerCtx) -> Result<Id, Error> {
     lo_elementwise(cx, |w| Op::GeluEngine { w }, Op::InvokeGelu)
 }
 
-fn lo_eadd(cx: &mut LowerCtx) -> Result<Id, Error> {
+/// Shared template for whole-tensor binary elementwise units (eadd, emul):
+/// flatten both operands → invoke on a numel-wide engine → reshape back.
+fn lo_ebin(cx: &mut LowerCtx, mk_engine: fn(usize) -> Op, invoke: Op) -> Result<Id, Error> {
     let s = cx.out_shape()?;
     let s0 = cx.child_shape(0)?;
     let s1 = cx.child_shape(1)?;
     let a0 = cx.kid(0);
     let b0 = cx.kid(1);
-    let e = cx.add_leaf(Op::AddEngine { w: s.numel() });
+    let e = cx.add_leaf(mk_engine(s.numel()));
     let a = cx.flat(a0, &s0);
     let b = cx.flat(b0, &s1);
-    let inv = cx.add(Op::InvokeAdd, &[e, a, b]);
+    let inv = cx.add(invoke, &[e, a, b]);
     let backed = cx.unflat(inv, &s);
     Ok(cx.buffered(backed))
+}
+
+fn lo_eadd(cx: &mut LowerCtx) -> Result<Id, Error> {
+    lo_ebin(cx, |w| Op::AddEngine { w }, Op::InvokeAdd)
+}
+
+fn lo_emul(cx: &mut LowerCtx) -> Result<Id, Error> {
+    lo_ebin(cx, |w| Op::EmulEngine { w }, Op::InvokeEmul)
 }
 
 fn lo_bias_add(cx: &mut LowerCtx) -> Result<Id, Error> {
@@ -802,8 +850,8 @@ fn lo_conv2d(cx: &mut LowerCtx) -> Result<Id, Error> {
 }
 
 fn lo_maxpool(cx: &mut LowerCtx) -> Result<Id, Error> {
-    let (k, stride) = match *cx.op() {
-        Op::MaxPool2d { k, stride } => (k, stride),
+    let (kh, kw, stride) = match *cx.op() {
+        Op::MaxPool2d { kh, kw, stride } => (kh, kw, stride),
         _ => unreachable!(),
     };
     let x = cx.child_shape(0)?;
@@ -813,7 +861,8 @@ fn lo_maxpool(cx: &mut LowerCtx) -> Result<Id, Error> {
         oh: o.dim(1),
         ow: o.dim(2),
         c: x.dim(0),
-        k,
+        kh,
+        kw,
         stride,
     });
     let inv = cx.add(Op::InvokePool, &[e, x0]);
@@ -826,41 +875,75 @@ fn lo_flatten(cx: &mut LowerCtx) -> Result<Id, Error> {
     Ok(cx.add(Op::Reshape(s), &[x0]))
 }
 
-/// Shared template for row-coupled units (softmax, layernorm): rank-1
-/// tensors invoke directly; rank-2 tensors become a `sched-loop` over
-/// per-row invocations — the initial design point already exposes a
-/// schedule the `parallelize` rewrite can act on.
-fn lo_rowwise(cx: &mut LowerCtx, mk_engine: fn(usize) -> Op, invoke: Op) -> Result<Id, Error> {
-    let s = cx.out_shape()?;
+/// Rank-recursive reification core for row-coupled units (softmax,
+/// layernorm's normalization half): rank-1 tensors invoke directly;
+/// rank-2 tensors become a `sched-loop` over per-row invocations; rank-3
+/// tensors (per-head attention scores) add an outer `sched-loop` over the
+/// leading axis — every initial design point exposes schedules the
+/// `parallelize` rewrite can act on. Returns the *unbuffered* result.
+fn rowwise_core(
+    cx: &mut LowerCtx,
+    mk_engine: fn(usize) -> Op,
+    invoke: &Op,
+    x: Id,
+    s: &Shape,
+) -> Result<Id, Error> {
     match s.rank() {
         1 => {
-            let x0 = cx.kid(0);
             let e = cx.add_leaf(mk_engine(s.dim(0)));
-            let inv = cx.add(invoke, &[e, x0]);
-            Ok(cx.buffered(inv))
+            Ok(cx.add(invoke.clone(), &[e, x]))
         }
         2 => {
             let (m, n) = (s.dim(0), s.dim(1));
             let var = Symbol::fresh("rw");
-            let x0 = cx.kid(0);
-            let sl = cx.loop_slice(var, 0, 1, 1, x0);
+            let sl = cx.loop_slice(var, 0, 1, 1, x);
             let row = cx.add(Op::Reshape(Shape::new(&[n])), &[sl]);
             let e = cx.add_leaf(mk_engine(n));
-            let inv = cx.add(invoke, &[e, row]);
+            let inv = cx.add(invoke.clone(), &[e, row]);
             let back = cx.add(Op::Reshape(Shape::new(&[1, n])), &[inv]);
-            let lp = cx.add(Op::SchedLoop { var, axis: 0, extent: m }, &[back]);
-            Ok(cx.buffered(lp))
+            Ok(cx.add(Op::SchedLoop { var, axis: 0, extent: m }, &[back]))
+        }
+        3 => {
+            let (b, m, n) = (s.dim(0), s.dim(1), s.dim(2));
+            let var = Symbol::fresh("rb");
+            let sl = cx.loop_slice(var, 0, 1, 1, x);
+            let mat = cx.add(Op::Reshape(Shape::new(&[m, n])), &[sl]);
+            let inner = rowwise_core(cx, mk_engine, invoke, mat, &Shape::new(&[m, n]))?;
+            let back = cx.add(Op::Reshape(Shape::new(&[1, m, n])), &[inner]);
+            Ok(cx.add(Op::SchedLoop { var, axis: 0, extent: b }, &[back]))
         }
         r => Err(cx.lower_err(format!("row-wise op on rank {r}"))),
     }
 }
 
 fn lo_softmax(cx: &mut LowerCtx) -> Result<Id, Error> {
-    lo_rowwise(cx, |w| Op::SoftmaxEngine { w }, Op::InvokeSoftmax)
+    let s = cx.out_shape()?;
+    let x0 = cx.kid(0);
+    let core = rowwise_core(cx, |w| Op::SoftmaxEngine { w }, &Op::InvokeSoftmax, x0, &s)?;
+    Ok(cx.buffered(core))
 }
 
+/// Affine layernorm: the row-coupled normalization half runs on the
+/// `layernorm-engine` (per-row schedule, exactly as before), then the
+/// affine tail — `gamma ⊙ · + beta` — runs on numel-wide `emul-engine` /
+/// `add-engine` invocations over broadcast gamma/beta.
 fn lo_layernorm(cx: &mut LowerCtx) -> Result<Id, Error> {
-    lo_rowwise(cx, |w| Op::LayerNormEngine { w }, Op::InvokeLayerNorm)
+    let s = cx.out_shape()?;
+    let x0 = cx.kid(0);
+    let g0 = cx.kid(1);
+    let b0 = cx.kid(2);
+    let norm = rowwise_core(cx, |w| Op::LayerNormEngine { w }, &Op::InvokeLayerNorm, x0, &s)?;
+    let gb = cx.add(Op::Bcast(s.clone()), &[g0]);
+    let bb = cx.add(Op::Bcast(s.clone()), &[b0]);
+    let fx = cx.flat(norm, &s);
+    let fg = cx.flat(gb, &s);
+    let fb = cx.flat(bb, &s);
+    let em = cx.add_leaf(Op::EmulEngine { w: s.numel() });
+    let scaled = cx.add(Op::InvokeEmul, &[em, fx, fg]);
+    let ae = cx.add_leaf(Op::AddEngine { w: s.numel() });
+    let shifted = cx.add(Op::InvokeAdd, &[ae, scaled, fb]);
+    let backed = cx.unflat(shifted, &s);
+    Ok(cx.buffered(backed))
 }
 
 /// `batch-matmul` → `sched-loop` over the batch with per-slice `invoke-mm`
@@ -973,6 +1056,7 @@ fn w_param(op: &Op) -> usize {
     match *op {
         Op::ReluEngine { w }
         | Op::AddEngine { w }
+        | Op::EmulEngine { w }
         | Op::GeluEngine { w }
         | Op::SoftmaxEngine { w }
         | Op::LayerNormEngine { w } => w,
@@ -1003,6 +1087,7 @@ fn w_merge(a: &Op, b: &Op) -> Op {
     match a {
         Op::ReluEngine { .. } => Op::ReluEngine { w },
         Op::AddEngine { .. } => Op::AddEngine { w },
+        Op::EmulEngine { .. } => Op::EmulEngine { w },
         Op::GeluEngine { .. } => Op::GeluEngine { w },
         Op::SoftmaxEngine { .. } => Op::SoftmaxEngine { w },
         Op::LayerNormEngine { .. } => Op::LayerNormEngine { w },
@@ -1059,16 +1144,16 @@ fn conv_out(op: &Op) -> Shape {
 
 fn pool_macs(op: &Op) -> u64 {
     match *op {
-        Op::PoolEngine { oh, ow, c, k, .. } => (oh * ow * c * k * k) as u64,
+        Op::PoolEngine { oh, ow, c, kh, kw, .. } => (oh * ow * c * kh * kw) as u64,
         _ => unreachable!(),
     }
 }
 
 fn pool_io(op: &Op) -> f64 {
     match *op {
-        Op::PoolEngine { oh, ow, c, k, stride } => {
-            let ih = in_dim(oh, k, stride);
-            let iw = in_dim(ow, k, stride);
+        Op::PoolEngine { oh, ow, c, kh, kw, stride } => {
+            let ih = in_dim(oh, kh, stride);
+            let iw = in_dim(ow, kw, stride);
             (c * ih * iw + c * oh * ow) as f64
         }
         _ => unreachable!(),
@@ -1078,13 +1163,14 @@ fn pool_io(op: &Op) -> f64 {
 fn pool_merge(a: &Op, b: &Op) -> Op {
     match (a, b) {
         (
-            Op::PoolEngine { oh, ow, c, k, stride },
-            Op::PoolEngine { oh: b1, ow: b2, c: b3, k: b4, stride: _ },
+            Op::PoolEngine { oh, ow, c, kh, kw, stride },
+            Op::PoolEngine { oh: b1, ow: b2, c: b3, kh: b4, kw: b5, stride: _ },
         ) => Op::PoolEngine {
             oh: (*oh).max(*b1),
             ow: (*ow).max(*b2),
             c: (*c).max(*b3),
-            k: (*k).max(*b4),
+            kh: (*kh).max(*b4),
+            kw: (*kw).max(*b5),
             stride: *stride,
         },
         _ => unreachable!(),
@@ -1172,6 +1258,7 @@ fn base(
         engine: None,
         host_work: None,
         data_traffic: false,
+        split_family: None,
         exemplar: "",
         exemplar_ty: X::Index,
     }
@@ -1332,16 +1419,22 @@ fn build_specs() -> Vec<OpSpec> {
             ..base(OpKind::EAdd, "eadd", 2, C::Relay, sh_eadd)
         },
         OpSpec {
-            attrs: &[("k", A::U), ("s", A::U)],
+            attrs: &[("kh", A::U), ("kw", A::U), ("s", A::U)],
             attrs_of: |op| match op {
-                Op::MaxPool2d { k, stride } => vec![AttrVal::U(*k), AttrVal::U(*stride)],
+                Op::MaxPool2d { kh, kw, stride } => {
+                    vec![AttrVal::U(*kh), AttrVal::U(*kw), AttrVal::U(*stride)]
+                }
                 _ => unreachable!(),
             },
-            from_attrs: |a| Some(Op::MaxPool2d { k: a[0].u()?, stride: a[1].u()? }),
+            from_attrs: |a| {
+                Some(Op::MaxPool2d { kh: a[0].u()?, kw: a[1].u()?, stride: a[2].u()? })
+            },
             eval: Some(ev_maxpool),
             lower: Some(lo_maxpool),
-            exemplar: "(maxpool2d 2 2 (input x [3 8 8]))",
-            exemplar_ty: X::Tensor(&[3, 4, 4]),
+            // Deliberately non-square: pins the rectangular window through
+            // the whole parse/print/shape/eval/lower/cost harness.
+            exemplar: "(maxpool2d 2 4 2 (input x [3 8 8]))",
+            exemplar_ty: X::Tensor(&[3, 4, 3]),
             ..base(OpKind::MaxPool2d, "maxpool2d", 1, C::Relay, sh_maxpool)
         },
         OpSpec {
@@ -1371,6 +1464,7 @@ fn build_specs() -> Vec<OpSpec> {
             },
             from_attrs: |a| Some(Op::MmEngine { m: a[0].u()?, k: a[1].u()?, n: a[2].u()? }),
             engine: Some(MM_COST),
+            split_family: Some("split-mm"),
             exemplar: "(mm-engine 4 4 4)",
             exemplar_ty: X::Engine,
             ..base(OpKind::MmEngine, "mm-engine", 0, C::Engine, sh_engine)
@@ -1387,6 +1481,7 @@ fn build_specs() -> Vec<OpSpec> {
                 Some(Op::MmReluEngine { m: a[0].u()?, k: a[1].u()?, n: a[2].u()? })
             },
             engine: Some(MM_COST),
+            split_family: Some("split-mmrelu"),
             exemplar: "(mm-relu-engine 4 4 4)",
             exemplar_ty: X::Engine,
             ..base(OpKind::MmReluEngine, "mm-relu-engine", 0, C::Engine, sh_engine)
@@ -1399,6 +1494,7 @@ fn build_specs() -> Vec<OpSpec> {
             },
             from_attrs: |a| Some(Op::ReluEngine { w: a[0].u()? }),
             engine: Some(LANE_COST),
+            split_family: Some("split-relu"),
             exemplar: "(relu-engine 8)",
             exemplar_ty: X::Engine,
             ..base(OpKind::ReluEngine, "relu-engine", 0, C::Engine, sh_engine)
@@ -1411,6 +1507,7 @@ fn build_specs() -> Vec<OpSpec> {
             },
             from_attrs: |a| Some(Op::AddEngine { w: a[0].u()? }),
             engine: Some(EngineSpec { io: w_io3, ..LANE_COST }),
+            split_family: Some("split-add"),
             exemplar: "(add-engine 8)",
             exemplar_ty: X::Engine,
             ..base(OpKind::AddEngine, "add-engine", 0, C::Engine, sh_engine)
@@ -1449,18 +1546,20 @@ fn build_specs() -> Vec<OpSpec> {
                 })
             },
             engine: Some(CONV_COST),
+            split_family: Some("split-conv"),
             exemplar: "(conv-engine 2 2 3 4 3 3 1)",
             exemplar_ty: X::Engine,
             ..base(OpKind::ConvEngine, "conv-engine", 0, C::Engine, sh_engine)
         },
         OpSpec {
-            attrs: &[("", A::U), ("", A::U), ("", A::U), ("", A::U), ("", A::U)],
+            attrs: &[("", A::U), ("", A::U), ("", A::U), ("", A::U), ("", A::U), ("", A::U)],
             attrs_of: |op| match op {
-                Op::PoolEngine { oh, ow, c, k, stride } => vec![
+                Op::PoolEngine { oh, ow, c, kh, kw, stride } => vec![
                     AttrVal::U(*oh),
                     AttrVal::U(*ow),
                     AttrVal::U(*c),
-                    AttrVal::U(*k),
+                    AttrVal::U(*kh),
+                    AttrVal::U(*kw),
                     AttrVal::U(*stride),
                 ],
                 _ => unreachable!(),
@@ -1470,12 +1569,14 @@ fn build_specs() -> Vec<OpSpec> {
                     oh: a[0].u()?,
                     ow: a[1].u()?,
                     c: a[2].u()?,
-                    k: a[3].u()?,
-                    stride: a[4].u()?,
+                    kh: a[3].u()?,
+                    kw: a[4].u()?,
+                    stride: a[5].u()?,
                 })
             },
             engine: Some(POOL_COST),
-            exemplar: "(pool-engine 2 2 3 2 2)",
+            split_family: Some("split-pool"),
+            exemplar: "(pool-engine 2 2 3 2 4 2)",
             exemplar_ty: X::Engine,
             ..base(OpKind::PoolEngine, "pool-engine", 0, C::Engine, sh_engine)
         },
@@ -1518,7 +1619,7 @@ fn build_specs() -> Vec<OpSpec> {
         OpSpec {
             from_attrs: |_| Some(Op::InvokePool),
             invoke_eval: Some(iv_pool),
-            exemplar: "(invoke-pool (pool-engine 2 2 3 2 2) (input x [3 4 4]))",
+            exemplar: "(invoke-pool (pool-engine 2 2 3 2 4 2) (input x [3 4 6]))",
             exemplar_ty: X::Tensor(&[3, 2, 2]),
             ..base(OpKind::InvokePool, "invoke-pool", 2, C::Invoke, sh_invoke_pool)
         },
@@ -1695,9 +1796,9 @@ fn build_specs() -> Vec<OpSpec> {
             eval: Some(ev_layernorm),
             lower: Some(lo_layernorm),
             host_work: Some(hw_rowwise),
-            exemplar: "(layernorm (input x [2 4]))",
+            exemplar: "(layernorm (input x [2 4]) (weight g [4]) (weight b [4]))",
             exemplar_ty: X::Tensor(&[2, 4]),
-            ..base(OpKind::LayerNorm, "layernorm", 1, C::Relay, sh_rowwise)
+            ..base(OpKind::LayerNorm, "layernorm", 3, C::Relay, sh_layernorm)
         },
         OpSpec {
             from_attrs: |_| Some(Op::Gelu),
@@ -1731,6 +1832,8 @@ fn build_specs() -> Vec<OpSpec> {
             },
             from_attrs: |a| Some(Op::SoftmaxEngine { w: a[0].u()? }),
             engine: Some(ROW_COST),
+            // split_family: None — normalization couples the whole row, so
+            // the softmax engine has no width split (documented exemption).
             exemplar: "(softmax-engine 8)",
             exemplar_ty: X::Engine,
             ..base(OpKind::SoftmaxEngine, "softmax-engine", 0, C::Engine, sh_engine)
@@ -1743,6 +1846,7 @@ fn build_specs() -> Vec<OpSpec> {
             },
             from_attrs: |a| Some(Op::LayerNormEngine { w: a[0].u()? }),
             engine: Some(ROW_COST),
+            // split_family: None — same row coupling as softmax (exempt).
             exemplar: "(layernorm-engine 8)",
             exemplar_ty: X::Engine,
             ..base(OpKind::LayerNormEngine, "layernorm-engine", 0, C::Engine, sh_engine)
@@ -1755,6 +1859,7 @@ fn build_specs() -> Vec<OpSpec> {
             },
             from_attrs: |a| Some(Op::GeluEngine { w: a[0].u()? }),
             engine: Some(LANE_COST),
+            split_family: Some("split-gelu"),
             exemplar: "(gelu-engine 8)",
             exemplar_ty: X::Engine,
             ..base(OpKind::GeluEngine, "gelu-engine", 0, C::Engine, sh_engine)
@@ -1783,6 +1888,7 @@ fn build_specs() -> Vec<OpSpec> {
                 })
             },
             engine: Some(DWCONV_COST),
+            split_family: Some("split-dwconv"),
             exemplar: "(dw-conv-engine 2 2 3 3 3 1)",
             exemplar_ty: X::Engine,
             ..base(OpKind::DwConvEngine, "dw-conv-engine", 0, C::Engine, sh_engine)
@@ -1814,6 +1920,35 @@ fn build_specs() -> Vec<OpSpec> {
             exemplar: "(invoke-dw-conv (dw-conv-engine 2 2 3 3 3 1) (input x [3 4 4]) (weight w [3 3 3]))",
             exemplar_ty: X::Tensor(&[3, 2, 2]),
             ..base(OpKind::InvokeDwConv, "invoke-dw-conv", 3, C::Invoke, sh_invoke_dwconv)
+        },
+        // ---- elementwise multiply (affine layernorm's scale path) --------
+        OpSpec {
+            from_attrs: |_| Some(Op::Emul),
+            eval: Some(ev_emul),
+            lower: Some(lo_emul),
+            exemplar: "(emul (input x [4]) (input y [4]))",
+            exemplar_ty: X::Tensor(&[4]),
+            ..base(OpKind::Emul, "emul", 2, C::Relay, sh_eadd)
+        },
+        OpSpec {
+            attrs: &[("", A::U)],
+            attrs_of: |op| match op {
+                Op::EmulEngine { w } => vec![AttrVal::U(*w)],
+                _ => unreachable!(),
+            },
+            from_attrs: |a| Some(Op::EmulEngine { w: a[0].u()? }),
+            engine: Some(EngineSpec { io: w_io3, ..LANE_COST }),
+            split_family: Some("split-emul"),
+            exemplar: "(emul-engine 8)",
+            exemplar_ty: X::Engine,
+            ..base(OpKind::EmulEngine, "emul-engine", 0, C::Engine, sh_engine)
+        },
+        OpSpec {
+            from_attrs: |_| Some(Op::InvokeEmul),
+            invoke_eval: Some(iv_emul),
+            exemplar: "(invoke-emul (emul-engine 4) (input x [4]) (input y [4]))",
+            exemplar_ty: X::Tensor(&[4]),
+            ..base(OpKind::InvokeEmul, "invoke-emul", 3, C::Invoke, sh_invoke_add)
         },
     ]
 }

@@ -20,11 +20,12 @@
 //! | `dense x w` / `matmul a b` | `buffer (invoke-mm (mm-engine m k n) a b)` |
 //! | `batch-matmul a b` | `buffer (sched-loop b (reshape (invoke-mm …slices…)))` |
 //! | `relu x` / `gelu x` | `buffer (reshape (invoke-* (…-engine numel) (reshape x)))` |
-//! | `bias-add x b` / `eadd x y` | `buffer (reshape (invoke-add (add-engine numel) …))` |
+//! | `bias-add x b` / `eadd x y` / `emul x y` | `buffer (reshape (invoke-{add,emul} ({add,emul}-engine numel) …))` |
 //! | `conv2d s p x w` | `buffer (invoke-conv (conv-engine oh ow c k kh kw s) (pad2d p x) w)` |
 //! | `dwconv2d s p x w` | `buffer (invoke-dw-conv (dw-conv-engine oh ow c kh kw s) (pad2d p x) w)` |
-//! | `maxpool2d k s x` | `buffer (invoke-pool (pool-engine oh ow c k s) x)` |
-//! | `softmax x` / `layernorm x` | rank-1: direct invoke; rank-2: `sched-loop` over rows |
+//! | `maxpool2d kh kw s x` | `buffer (invoke-pool (pool-engine oh ow c kh kw s) x)` |
+//! | `softmax x` | rank-1: direct invoke; rank-2: `sched-loop` over rows; rank-3: nested `sched-loop`s (leading axis, then rows) |
+//! | `layernorm x g b` | the softmax row schedule on `layernorm-engine`, then a numel-wide `invoke-emul`/`invoke-add` affine tail over broadcast `g`/`b` |
 //! | `flatten x` | `reshape x` |
 
 use crate::egraph::Id;
@@ -273,6 +274,40 @@ mod tests {
         let e1 = crate::ir::parse_expr("(softmax (input x [8]))").unwrap();
         let lo1 = lower_default(&e1).unwrap();
         assert_eq!(lo1.count(|op| op.is_sched()), 0);
+    }
+
+    #[test]
+    fn affine_layernorm_lowers_norm_plus_emul_add_tail() {
+        let e = crate::ir::parse_expr(
+            "(layernorm (input x [4 8]) (weight g [8]) (weight b [8]))",
+        )
+        .unwrap();
+        let lo = lower_default(&e).unwrap();
+        let txt = lo.to_string();
+        assert!(txt.contains("(layernorm-engine 8)"), "{txt}");
+        assert!(txt.contains("(emul-engine 32)"), "{txt}");
+        assert!(txt.contains("(add-engine 32)"), "{txt}");
+        assert!(txt.contains("(sched-loop"), "{txt}");
+        assert_eq!(lo.typecheck().unwrap(), e.typecheck().unwrap());
+        // Semantics: norm * gamma + beta, exactly.
+        let a = eval_expr(&e, &mut Env::random_for(&e, 33)).unwrap();
+        let b = eval_expr(&lo, &mut Env::random_for(&lo, 33)).unwrap();
+        assert!(a.allclose(&b, 1e-5), "{:?}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn rank3_softmax_lowers_to_nested_row_schedule() {
+        // Per-head attention scores: (heads, rows, width) -> outer loop
+        // over heads, inner loop over rows, one width-wide row engine.
+        let e = crate::ir::parse_expr("(softmax (input s [4 6 8]))").unwrap();
+        let lo = lower_default(&e).unwrap();
+        let txt = lo.to_string();
+        assert!(txt.contains("(softmax-engine 8)"), "{txt}");
+        assert_eq!(lo.count(|op| matches!(op, crate::ir::Op::SchedLoop { .. })), 2, "{txt}");
+        assert_eq!(lo.typecheck().unwrap(), e.typecheck().unwrap());
+        let a = eval_expr(&e, &mut Env::random_for(&e, 34)).unwrap();
+        let b = eval_expr(&lo, &mut Env::random_for(&lo, 34)).unwrap();
+        assert!(a.allclose(&b, 1e-5), "{:?}", a.max_abs_diff(&b));
     }
 
     #[test]

@@ -79,8 +79,19 @@ impl GraphBuilder {
         self.push(Op::EAdd, &[x, y])
     }
 
+    /// Elementwise (Hadamard) multiply.
+    pub fn emul(&mut self, x: Id, y: Id) -> Id {
+        self.push(Op::Emul, &[x, y])
+    }
+
+    /// Square-window max pooling (the common case).
     pub fn maxpool2d(&mut self, x: Id, k: usize, stride: usize) -> Id {
-        self.push(Op::MaxPool2d { k, stride }, &[x])
+        self.maxpool2d_rect(x, k, k, stride)
+    }
+
+    /// Rectangular-window max pooling.
+    pub fn maxpool2d_rect(&mut self, x: Id, kh: usize, kw: usize, stride: usize) -> Id {
+        self.push(Op::MaxPool2d { kh, kw, stride }, &[x])
     }
 
     pub fn flatten(&mut self, x: Id) -> Id {
@@ -96,16 +107,28 @@ impl GraphBuilder {
         self.push(Op::BatchMatmul, &[a, b])
     }
 
+    /// Transpose of the trailing two axes (rank 2 or 3).
     pub fn transpose(&mut self, x: Id) -> Id {
         self.push(Op::Transpose, &[x])
+    }
+
+    /// Reshape to a static shape (same element count).
+    pub fn reshape(&mut self, x: Id, dims: &[usize]) -> Id {
+        self.push(Op::Reshape(Shape::new(dims)), &[x])
     }
 
     pub fn softmax(&mut self, x: Id) -> Id {
         self.push(Op::Softmax, &[x])
     }
 
-    pub fn layer_norm(&mut self, x: Id) -> Id {
-        self.push(Op::LayerNorm, &[x])
+    /// Affine layer normalization with learned `{name}_g` / `{name}_b`
+    /// scale and shift parameters over the last axis.
+    pub fn layer_norm(&mut self, x: Id, name: &str) -> Id {
+        let s = self.shape_of(x);
+        let n = s.dim(s.rank() - 1);
+        let g = self.weight(&format!("{name}_g"), &[n]);
+        let b = self.weight(&format!("{name}_b"), &[n]);
+        self.push(Op::LayerNorm, &[x, g, b])
     }
 
     pub fn gelu(&mut self, x: Id) -> Id {
@@ -181,6 +204,49 @@ impl GraphBuilder {
         self.matmul(probs, v)
     }
 
+    /// Pack a `(S, H)` projection into per-head rank-3 form. Row-major
+    /// layout makes the head axis contiguous only after transposing:
+    /// `(S,H) -> (H,S) -> reshape (heads, dh, S)`; the optional batched
+    /// transpose then yields `(heads, S, dh)`.
+    fn pack_heads(&mut self, p: Id, heads: usize, seq_major: bool) -> Id {
+        let s = self.shape_of(p);
+        let (seq, h) = (s.dim(0), s.dim(1));
+        let dh = h / heads;
+        let t = self.transpose(p); // (H, S)
+        let r = self.reshape(t, &[heads, dh, seq]); // (heads, dh, S)
+        if seq_major {
+            self.transpose(r) // (heads, S, dh)
+        } else {
+            r
+        }
+    }
+
+    /// Multi-head scaled-dot-product-shaped attention (unscaled, like
+    /// [`Self::attention`]): Q/K/V projections packed as rank-3
+    /// `(heads, ·, ·)` tensors, per-head `softmax(Q_h K_hᵀ) V_h` routed
+    /// through `batch-matmul` (whose loop lowering the head-split rewrites
+    /// act on), heads re-concatenated along the feature axis. `heads` must
+    /// divide the hidden dimension.
+    pub fn attention_mh(&mut self, x: Id, name: &str, heads: usize) -> Id {
+        let s = self.shape_of(x);
+        let (seq, h) = (s.dim(0), s.dim(1));
+        assert_eq!(h % heads, 0, "heads must divide hidden dim");
+        let q = self.dense_layer(x, &format!("{name}_q"), h, false);
+        let k = self.dense_layer(x, &format!("{name}_k"), h, false);
+        let v = self.dense_layer(x, &format!("{name}_v"), h, false);
+        let qp = self.pack_heads(q, heads, true); // (heads, S, dh)
+        let kp = self.pack_heads(k, heads, false); // (heads, dh, S) = K_hᵀ
+        let vp = self.pack_heads(v, heads, true); // (heads, S, dh)
+        let scores = self.batch_matmul(qp, kp); // (heads, S, S)
+        let probs = self.softmax(scores);
+        let ctx = self.batch_matmul(probs, vp); // (heads, S, dh)
+        // Unpack: (heads, S, dh) -> (heads, dh, S) -> (H, S) -> (S, H),
+        // which is exactly concat-over-heads along the feature axis.
+        let cb = self.transpose(ctx);
+        let cr = self.reshape(cb, &[h, seq]);
+        self.transpose(cr)
+    }
+
     /// Finish, returning the operator graph rooted at the last-added node.
     pub fn finish(self) -> RecExpr {
         assert!(!self.expr.is_empty(), "empty workload");
@@ -236,6 +302,66 @@ mod tests {
         let cached = b.tys.clone();
         let e = b.finish_at(x);
         assert_eq!(e.types().unwrap(), cached);
+    }
+
+    #[test]
+    fn single_head_attention_is_mh_with_one_head() {
+        // attention_mh(·, 1) must compute exactly attention(·): the head
+        // packing degenerates to transposes/reshapes that cancel. Same
+        // weight names, so Env::random_for binds identical parameters.
+        use crate::tensor::{eval_expr, Env};
+        let build = |mh: bool| {
+            let mut b = GraphBuilder::new();
+            let x = b.input("x", &[4, 8]);
+            let y = if mh { b.attention_mh(x, "a", 1) } else { b.attention(x, "a") };
+            b.finish_at(y)
+        };
+        let sh = build(false);
+        let mh = build(true);
+        assert_eq!(mh.typecheck().unwrap(), sh.typecheck().unwrap());
+        let a = eval_expr(&sh, &mut Env::random_for(&sh, 23)).unwrap();
+        let b = eval_expr(&mh, &mut Env::random_for(&mh, 23)).unwrap();
+        assert!(a.allclose(&b, 1e-5), "diff {:?}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn multi_head_attention_partitions_features() {
+        // With block-diagonal-free random weights the 2-head result must
+        // equal hand-computed per-head attention over feature halves.
+        use crate::ir::Shape;
+        use crate::tensor::{eval_expr, Env, Tensor};
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[4, 8]);
+        let y = b.attention_mh(x, "a", 2);
+        let e = b.finish_at(y);
+        let env = Env::random_for(&e, 31);
+        let got = eval_expr(&e, &mut env.clone()).unwrap();
+
+        // Reference: dense projections + per-head softmax(QKᵀ)V.
+        let g = |n: &str| env.tensors[&crate::ir::Symbol::new(n)].clone();
+        let proj = |w: &str, bias: &str| g("x").matmul(&g(w)).bias_add(&g(bias));
+        let (q, k, v) = (proj("a_q_w", "a_q_b"), proj("a_k_w", "a_k_b"), proj("a_v_w", "a_v_b"));
+        let mut parts = Vec::new();
+        for h in 0..2 {
+            let qh = q.slice_ax(1, h * 4, 4);
+            let kh = k.slice_ax(1, h * 4, 4);
+            let vh = v.slice_ax(1, h * 4, 4);
+            let probs = qh.matmul(&kh.transpose_last()).softmax_last();
+            parts.push(probs.matmul(&vh));
+        }
+        let want = Tensor::concat_ax(1, &parts);
+        assert_eq!(got.shape, Shape::new(&[4, 8]));
+        assert!(got.allclose(&want, 1e-5), "diff {:?}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn affine_layer_norm_creates_params() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[2, 8]);
+        let y = b.layer_norm(x, "ln");
+        let e = b.finish_at(y);
+        assert_eq!(e.count(|op| matches!(op, Op::Weight(..))), 2);
+        assert_eq!(e.typecheck().unwrap(), crate::ir::Ty::Tensor(Shape::new(&[2, 8])));
     }
 
     #[test]

@@ -10,12 +10,17 @@
 //!
 //! * **classic CNN/MLP** — `relu128`, `convblock`, `resnet_block`, `mlp`,
 //!   `lenet`: dense/conv/pool/relu, the paper's original territory;
-//! * **transformer** — `ffn_block` (dense+residual) and `attn_block`
-//!   (single-head attention + GELU FFN + layernorm, BERT-tiny shapes:
-//!   seq 16, hidden 128, FFN 512) using `matmul`/`transpose`/`softmax`/
-//!   `layernorm`/`gelu`;
+//! * **transformer** — `ffn_block` (dense+residual), `attn_block`
+//!   (single-head attention + GELU FFN + affine layernorm, BERT-tiny
+//!   shapes: seq 16, hidden 128, FFN 512) and `attn_block_mh4` (the same
+//!   block with 4-head attention: Q/K/V packed as rank-3 `(heads, ·, ·)`
+//!   tensors routed through `batch-matmul`, so the head axis is a
+//!   first-class split/parallelization dimension) using `matmul`/
+//!   `batch-matmul`/`transpose`/`softmax`/`layernorm`/`gelu`/`emul`;
 //! * **mobile CNN** — `mobile_block`, a MobileNet-style depthwise-separable
-//!   unit (`dwconv2d` 3×3 + pointwise 1×1 conv).
+//!   unit (`dwconv2d` 3×3 + pointwise 1×1 conv), and `mobile_block_s2`,
+//!   its stride-2 downsampling variant (exercises the halo math of
+//!   `split-dwconv-oh` under stride > 1).
 
 use super::GraphBuilder;
 use crate::ir::RecExpr;
@@ -118,23 +123,46 @@ pub fn ffn_block() -> Workload {
 
 /// A transformer encoder block with single-head attention (BERT-tiny
 /// shapes: seq 16, hidden 128, FFN 512): Q/K/V projections, softmax
-/// attention, output projection, residual + layernorm, GELU FFN,
-/// residual + layernorm.
+/// attention, output projection, residual + affine layernorm, GELU FFN,
+/// residual + affine layernorm.
 pub fn attn_block() -> Workload {
     let mut b = GraphBuilder::new();
     let x = b.input("x", &[16, 128]);
     let ctx = b.attention(x, "attn");
     let proj = b.dense_layer(ctx, "attn_o", 128, false);
     let r1 = b.add(proj, x);
-    let n1 = b.layer_norm(r1);
+    let n1 = b.layer_norm(r1, "ln1");
     let up = b.dense_layer(n1, "ffn_up", 512, false);
     let act = b.gelu(up);
     let down = b.dense_layer(act, "ffn_down", 128, false);
     let r2 = b.add(down, n1);
-    b.layer_norm(r2);
+    b.layer_norm(r2, "ln2");
     Workload {
         name: "attn_block",
-        description: "BERT-tiny encoder block: 1-head attention + GELU FFN + layernorm (16x128)",
+        description: "BERT-tiny encoder block: 1-head attention + GELU FFN + affine layernorm (16x128)",
+        expr: b.finish(),
+    }
+}
+
+/// The same encoder block with 4-head attention: per-head Q/K/V packed as
+/// rank-3 `(4, 16, 32)` tensors, scores and context routed through
+/// `batch-matmul` (which lowers to a head-axis `sched-loop` the
+/// `split-bmm-batch` / `parallelize` rewrites act on).
+pub fn attn_block_mh4() -> Workload {
+    let mut b = GraphBuilder::new();
+    let x = b.input("x", &[16, 128]);
+    let ctx = b.attention_mh(x, "attn", 4);
+    let proj = b.dense_layer(ctx, "attn_o", 128, false);
+    let r1 = b.add(proj, x);
+    let n1 = b.layer_norm(r1, "ln1");
+    let up = b.dense_layer(n1, "ffn_up", 512, false);
+    let act = b.gelu(up);
+    let down = b.dense_layer(act, "ffn_down", 128, false);
+    let r2 = b.add(down, n1);
+    b.layer_norm(r2, "ln2");
+    Workload {
+        name: "attn_block_mh4",
+        description: "BERT-tiny encoder block: 4-head attention (batch-matmul over heads) + GELU FFN + affine layernorm (16x128)",
         expr: b.finish(),
     }
 }
@@ -158,6 +186,26 @@ pub fn mobile_block() -> Workload {
     }
 }
 
+/// The stride-2 MobileNet downsampling block: 3×3 depthwise conv with
+/// stride 2 (+bias+relu) halving the spatial dims, then the 1×1 pointwise
+/// conv doubling the channels. The 8×8 output keeps `split-dwconv-oh`'s
+/// stride-2 halo slices power-of-two divisible.
+pub fn mobile_block_s2() -> Workload {
+    let mut b = GraphBuilder::new();
+    let x = b.input("img", &[16, 15, 15]);
+    let dw = b.dwconv_relu(x, "dw", 3, 2, 1); // (16,8,8)
+    let pw_w = b.weight("pw_w", &[32, 16, 1, 1]);
+    let pw_b = b.weight("pw_b", &[32]);
+    let pw = b.conv2d(dw, pw_w, 1, 0); // (32,8,8)
+    let pw = b.bias_add(pw, pw_b);
+    b.relu(pw);
+    Workload {
+        name: "mobile_block_s2",
+        description: "MobileNet stride-2 downsampling block: 3x3/s2 dwconv + 1x1 conv (16->32ch, 15x15->8x8)",
+        expr: b.finish(),
+    }
+}
+
 /// All workloads, in rough size order.
 pub fn all_workloads() -> Vec<Workload> {
     vec![
@@ -168,7 +216,9 @@ pub fn all_workloads() -> Vec<Workload> {
         mlp(),
         lenet(),
         mobile_block(),
+        mobile_block_s2(),
         attn_block(),
+        attn_block_mh4(),
     ]
 }
 
@@ -184,7 +234,9 @@ pub fn workload_names() -> &'static [&'static str] {
         "mlp",
         "lenet",
         "mobile_block",
+        "mobile_block_s2",
         "attn_block",
+        "attn_block_mh4",
     ]
 }
 
@@ -232,7 +284,9 @@ mod tests {
     fn lookup_by_name() {
         assert!(workload_by_name("lenet").is_some());
         assert!(workload_by_name("attn_block").is_some());
+        assert!(workload_by_name("attn_block_mh4").is_some());
         assert!(workload_by_name("mobile_block").is_some());
+        assert!(workload_by_name("mobile_block_s2").is_some());
         assert!(workload_by_name("nope").is_none());
     }
 
@@ -246,6 +300,40 @@ mod tests {
         assert_eq!(w.expr.count(|op| matches!(op, Op::LayerNorm)), 2);
         assert_eq!(w.expr.count(|op| matches!(op, Op::Gelu)), 1);
         assert_eq!(w.expr.count(|op| matches!(op, Op::Transpose)), 1);
+    }
+
+    #[test]
+    fn attn_block_mh4_shape_and_ops() {
+        let w = attn_block_mh4();
+        assert_eq!(w.expr.typecheck().unwrap(), Ty::Tensor(Shape::new(&[16, 128])));
+        use crate::ir::Op;
+        assert_eq!(
+            w.expr.count(|op| matches!(op, Op::BatchMatmul)),
+            2,
+            "per-head QK^T and PV batch-matmuls"
+        );
+        assert_eq!(w.expr.count(|op| matches!(op, Op::Softmax)), 1);
+        assert_eq!(w.expr.count(|op| matches!(op, Op::LayerNorm)), 2);
+        // Affine layernorm: gamma/beta weights exist per norm.
+        assert_eq!(
+            w.expr.count(|op| matches!(op, Op::Weight(s, _) if s.as_str().ends_with("_g"))),
+            2
+        );
+        // Packing/unpacking uses batched + 2-D transposes and reshapes.
+        assert!(w.expr.count(|op| matches!(op, Op::Transpose)) >= 4);
+        assert!(w.expr.count(|op| matches!(op, Op::Reshape(_))) >= 4);
+    }
+
+    #[test]
+    fn mobile_block_s2_shape_and_ops() {
+        let w = mobile_block_s2();
+        assert_eq!(w.expr.typecheck().unwrap(), Ty::Tensor(Shape::new(&[32, 8, 8])));
+        use crate::ir::Op;
+        assert_eq!(
+            w.expr.count(|op| matches!(op, Op::DepthwiseConv2d { stride: 2, .. })),
+            1
+        );
+        assert_eq!(w.expr.count(|op| matches!(op, Op::Conv2d { .. })), 1);
     }
 
     #[test]

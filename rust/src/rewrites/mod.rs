@@ -5,7 +5,7 @@
 //!
 //! | group | rules | direction |
 //! |---|---|---|
-//! | [`split`] | `split-{relu,add,gelu}-x{2,4}`, `split-mm-{m,n,k}-x2`, `split-conv-{oh,ow,k,c}-x2`, `split-pool-{c,oh}-x2`, `split-dwconv-{c,oh}-x2` | smaller hardware, more software (Fig. 2 rewrite 1, generalized) |
+//! | [`split`] | `split-{relu,add}-x{2,4}`, `split-{emul,gelu}-x2`, `split-mm-{m,n,k}-x2`, `split-conv-{oh,ow,k,c}-x2`, `split-pool-{c,oh,ow}-x2`, `split-dwconv-{c,oh}-x2`, `split-bmm-batch[-par]-x2` | smaller hardware, more software (Fig. 2 rewrite 1, generalized; the bmm-batch rules tile the head axis of the canonical batch-matmul loop) |
 //! | [`sched`] | `parallelize`, `serialize`, `loop-reorder` | trade time-multiplexing for hardware replication (Fig. 2 rewrite 2) |
 //! | [`fuse`] | `conv-as-im2col-mm`, `fuse-mm-relu` | share/merge engines across op types |
 //! | [`storage`] | `sram-to-dram`, `dram-to-sram`, `double-buffer`, `undouble-buffer` | storage choices |
@@ -91,7 +91,9 @@ pub fn paper_rules() -> Vec<Rewrite> {
         split::split_conv_c(2),
         split::split_pool_c(2),
         split::split_pool_oh(2),
+        split::split_pool_ow(2),
         split::split_gelu(2),
+        split::split_emul(2),
         split::split_dwconv_c(2),
         split::split_dwconv_oh(2),
         sched::parallelize(),
@@ -113,6 +115,8 @@ pub fn all_rules() -> Vec<Rewrite> {
         fuse::fuse_mm_relu(),
         fuse::split_mmrelu_m(2),
         fuse::split_mmrelu_n(2),
+        split::split_bmm_batch(2),
+        split::split_bmm_batch_par(2),
         sched::loop_reorder(),
         storage::double_buffer(),
         storage::undouble_buffer(),

@@ -13,7 +13,7 @@
 
 use super::{engine_of, slice_for_loop};
 use crate::egraph::{EGraph, Id, Rewrite, Subst};
-use crate::ir::{in_dim, Node, Op, OpKind, Symbol};
+use crate::ir::{in_dim, Node, Op, OpKind, Shape, Symbol};
 
 /// Smallest engine dimension worth creating: splits below this are declined
 /// (they bloat the space without adding interesting hardware points).
@@ -247,8 +247,8 @@ pub fn split_pool_c(factor: usize) -> Rewrite {
         OpKind::InvokePool,
         move |eg, _, s| {
             let n = s.node.as_ref().unwrap();
-            let (oh, ow, c, k, stride) = match engine_of(eg, n)? {
-                Op::PoolEngine { oh, ow, c, k, stride } => (oh, ow, c, k, stride),
+            let (oh, ow, c, kh, kw, stride) = match engine_of(eg, n)? {
+                Op::PoolEngine { oh, ow, c, kh, kw, stride } => (oh, ow, c, kh, kw, stride),
                 _ => return None,
             };
             if c % factor != 0 || c / factor < 1 || c / factor == c {
@@ -257,34 +257,60 @@ pub fn split_pool_c(factor: usize) -> Rewrite {
             let cc = c / factor;
             let var = fresh("pc");
             let sx = slice_for_loop(eg, var, 0, cc, cc, n.children[1]);
-            let e = eg.add(Node::leaf(Op::PoolEngine { oh, ow, c: cc, k, stride }));
+            let e = eg.add(Node::leaf(Op::PoolEngine { oh, ow, c: cc, kh, kw, stride }));
             let inv = eg.add(Node::new(Op::InvokePool, vec![e, sx]));
             Some(eg.add(Node::new(Op::SchedLoop { var, axis: 0, extent: factor }, vec![inv])))
         },
     )
 }
 
-/// Split a pool engine along output rows (halo slices, like conv).
+/// Split a pool engine along output rows (`kh` halo slices, like conv).
 pub fn split_pool_oh(factor: usize) -> Rewrite {
     Rewrite::node_scan(
         &format!("split-pool-oh-x{factor}"),
         OpKind::InvokePool,
         move |eg, _, s| {
             let n = s.node.as_ref().unwrap();
-            let (oh, ow, c, k, stride) = match engine_of(eg, n)? {
-                Op::PoolEngine { oh, ow, c, k, stride } => (oh, ow, c, k, stride),
+            let (oh, ow, c, kh, kw, stride) = match engine_of(eg, n)? {
+                Op::PoolEngine { oh, ow, c, kh, kw, stride } => (oh, ow, c, kh, kw, stride),
                 _ => return None,
             };
             if oh % factor != 0 || oh / factor < 1 || oh / factor == oh {
                 return None;
             }
             let ohc = oh / factor;
-            let in_rows = in_dim(ohc, k, stride);
+            let in_rows = in_dim(ohc, kh, stride);
             let var = fresh("pr");
             let sx = slice_for_loop(eg, var, 1, ohc * stride, in_rows, n.children[1]);
-            let e = eg.add(Node::leaf(Op::PoolEngine { oh: ohc, ow, c, k, stride }));
+            let e = eg.add(Node::leaf(Op::PoolEngine { oh: ohc, ow, c, kh, kw, stride }));
             let inv = eg.add(Node::new(Op::InvokePool, vec![e, sx]));
             Some(eg.add(Node::new(Op::SchedLoop { var, axis: 1, extent: factor }, vec![inv])))
+        },
+    )
+}
+
+/// Split a pool engine along output columns (`kw` halo slices — only
+/// correct now that the engine carries a rectangular window).
+pub fn split_pool_ow(factor: usize) -> Rewrite {
+    Rewrite::node_scan(
+        &format!("split-pool-ow-x{factor}"),
+        OpKind::InvokePool,
+        move |eg, _, s| {
+            let n = s.node.as_ref().unwrap();
+            let (oh, ow, c, kh, kw, stride) = match engine_of(eg, n)? {
+                Op::PoolEngine { oh, ow, c, kh, kw, stride } => (oh, ow, c, kh, kw, stride),
+                _ => return None,
+            };
+            if ow % factor != 0 || ow / factor < 1 || ow / factor == ow {
+                return None;
+            }
+            let owc = ow / factor;
+            let in_cols = in_dim(owc, kw, stride);
+            let var = fresh("pq");
+            let sx = slice_for_loop(eg, var, 2, owc * stride, in_cols, n.children[1]);
+            let e = eg.add(Node::leaf(Op::PoolEngine { oh, ow: owc, c, kh, kw, stride }));
+            let inv = eg.add(Node::new(Op::InvokePool, vec![e, sx]));
+            Some(eg.add(Node::new(Op::SchedLoop { var, axis: 2, extent: factor }, vec![inv])))
         },
     )
 }
@@ -342,6 +368,32 @@ pub fn split_dwconv_c(factor: usize) -> Rewrite {
     )
 }
 
+/// Same shape as [`split_add`] for the vector elementwise-multiply unit
+/// (slices both inputs).
+pub fn split_emul(factor: usize) -> Rewrite {
+    Rewrite::node_scan(
+        &format!("split-emul-x{factor}"),
+        OpKind::InvokeEmul,
+        move |eg, _, s| {
+            let n = s.node.as_ref().unwrap();
+            let w = match engine_of(eg, n)? {
+                Op::EmulEngine { w } => w,
+                _ => return None,
+            };
+            if w % factor != 0 || w / factor < MIN_DIM {
+                return None;
+            }
+            let chunk = w / factor;
+            let var = fresh("em");
+            let sa = slice_for_loop(eg, var, 0, chunk, chunk, n.children[1]);
+            let sb = slice_for_loop(eg, var, 0, chunk, chunk, n.children[2]);
+            let e = eg.add(Node::leaf(Op::EmulEngine { w: chunk }));
+            let inv = eg.add(Node::new(Op::InvokeEmul, vec![e, sa, sb]));
+            Some(eg.add(Node::new(Op::SchedLoop { var, axis: 0, extent: factor }, vec![inv])))
+        },
+    )
+}
+
 /// Split a depthwise-conv engine along output rows (halo slices, like
 /// [`split_conv_oh`]).
 pub fn split_dwconv_oh(factor: usize) -> Rewrite {
@@ -366,6 +418,160 @@ pub fn split_dwconv_oh(factor: usize) -> Rewrite {
             Some(eg.add(Node::new(Op::SchedLoop { var, axis: 1, extent: factor }, vec![inv])))
         },
     )
+}
+
+// ---------------------------------------------------------------------
+// Head/batch-axis splitting of the canonical batch-matmul loop
+// ---------------------------------------------------------------------
+
+/// One operand of the canonical per-slice matmul body:
+/// `(reshape SH (slice AXIS LEN (imul (lvar v) CHUNK) SRC))`.
+struct SliceMapOperand {
+    reshape_sh: Shape,
+    axis: usize,
+    len: usize,
+    chunk: usize,
+    src: Id,
+}
+
+/// Match the slice-map operand chain rooted at class `cls`, parameterized
+/// by loop variable `v`. Every level scans the class's e-nodes for the
+/// canonical member, so the match survives class growth.
+fn slice_map_operand(eg: &EGraph, cls: Id, v: Symbol) -> Option<SliceMapOperand> {
+    for r in &eg.class(cls).nodes {
+        let Op::Reshape(sh) = &r.op else { continue };
+        for sl in &eg.class(r.children[0]).nodes {
+            let Op::SliceAx { axis, len } = &sl.op else { continue };
+            let (axis, len) = (*axis, *len);
+            for st in &eg.class(sl.children[0]).nodes {
+                if !matches!(st.op, Op::IMul) {
+                    continue;
+                }
+                let lv_ok = eg
+                    .class(st.children[0])
+                    .nodes
+                    .iter()
+                    .any(|n| matches!(n.op, Op::LVar(s) if s == v));
+                if !lv_ok {
+                    continue;
+                }
+                let chunk = eg.class(st.children[1]).nodes.iter().find_map(|n| match n.op {
+                    Op::Int(c) if c >= 0 => Some(c as usize),
+                    _ => None,
+                });
+                if let Some(chunk) = chunk {
+                    return Some(SliceMapOperand {
+                        reshape_sh: sh.clone(),
+                        axis,
+                        len,
+                        chunk,
+                        src: sl.children[1],
+                    });
+                }
+            }
+        }
+    }
+    None
+}
+
+/// Rebuild one operand chain with the tiled start expression
+/// `(iadd (imul (lvar outer) inner_extent*chunk) (imul (lvar inner) chunk))`.
+fn tiled_operand(
+    eg: &mut EGraph,
+    op: &SliceMapOperand,
+    outer: Symbol,
+    inner: Symbol,
+    inner_extent: usize,
+) -> Id {
+    let lo = eg.add(Node::leaf(Op::LVar(outer)));
+    let co = eg.add(Node::leaf(Op::Int((inner_extent * op.chunk) as i64)));
+    let so = eg.add(Node::new(Op::IMul, vec![lo, co]));
+    let li = eg.add(Node::leaf(Op::LVar(inner)));
+    let ci = eg.add(Node::leaf(Op::Int(op.chunk as i64)));
+    let si = eg.add(Node::new(Op::IMul, vec![li, ci]));
+    let start = eg.add(Node::new(Op::IAdd, vec![so, si]));
+    let sl = eg.add(Node::new(Op::SliceAx { axis: op.axis, len: op.len }, vec![start, op.src]));
+    eg.add(Node::new(Op::Reshape(op.reshape_sh.clone()), vec![sl]))
+}
+
+/// Tile the canonical batch-matmul loop along its batch/head axis.
+///
+/// `lo_bmm` reifies `batch-matmul` as
+/// `(sched-loop v a B (reshape … (invoke-mm e (reshape … (slice … (imul (lvar v) c) A))
+///                                            (reshape … (slice … (imul (lvar v) c) B)))))`
+/// — one mm engine time-multiplexed over the batch. This rule splits that
+/// loop `factor` ways: an outer schedule of `factor` iterations over an
+/// inner loop of `B/factor`, with slice starts re-indexed to
+/// `outer·(B/factor)·c + inner·c`. On `attn_block_mh{h}` the batch axis IS
+/// the head axis, so with `parallelize` (or the `-par` variant below,
+/// which emits the parallel outer schedule directly) extraction can trade
+/// head-parallel area against latency.
+///
+/// `node_scan_deep(…, 6, …)`: the applier descends body → reshape →
+/// invoke-mm → operand reshape → slice → start → lvar/int.
+fn split_bmm_batch_impl(factor: usize, par: bool) -> Rewrite {
+    let name = if par {
+        format!("split-bmm-batch-par-x{factor}")
+    } else {
+        format!("split-bmm-batch-x{factor}")
+    };
+    Rewrite::node_scan_deep(&name, OpKind::SchedLoop, 6, move |eg, _, s| {
+        let lp = s.node.as_ref().unwrap();
+        let (v, axis, extent) = match lp.op {
+            Op::SchedLoop { var, axis, extent } => (var, axis, extent),
+            _ => return None,
+        };
+        // Inner extents of 1 add nothing; require a real tile both ways.
+        if factor < 2 || extent % factor != 0 || extent / factor < 2 {
+            return None;
+        }
+        // Locate the canonical per-slice invoke-mm body.
+        let mut found = None;
+        'search: for back in &eg.class(lp.children[0]).nodes {
+            let Op::Reshape(back_sh) = &back.op else { continue };
+            for inv in &eg.class(back.children[0]).nodes {
+                if !matches!(inv.op, Op::InvokeMm) {
+                    continue;
+                }
+                let a = slice_map_operand(eg, inv.children[1], v);
+                let b = slice_map_operand(eg, inv.children[2], v);
+                if let (Some(a), Some(b)) = (a, b) {
+                    found = Some((back_sh.clone(), inv.children[0], a, b));
+                    break 'search;
+                }
+            }
+        }
+        let (back_sh, engine, a, b) = found?;
+        let inner_extent = extent / factor;
+        let outer_v = fresh("hb");
+        let inner_v = fresh("hh");
+        let ra = tiled_operand(eg, &a, outer_v, inner_v, inner_extent);
+        let rb = tiled_operand(eg, &b, outer_v, inner_v, inner_extent);
+        let inv = eg.add(Node::new(Op::InvokeMm, vec![engine, ra, rb]));
+        let back = eg.add(Node::new(Op::Reshape(back_sh), vec![inv]));
+        let inner = eg.add(Node::new(
+            Op::SchedLoop { var: inner_v, axis, extent: inner_extent },
+            vec![back],
+        ));
+        let outer = if par {
+            Op::SchedPar { var: outer_v, axis, extent: factor }
+        } else {
+            Op::SchedLoop { var: outer_v, axis, extent: factor }
+        };
+        Some(eg.add(Node::new(outer, vec![inner])))
+    })
+}
+
+/// `split-bmm-batch-x{f}`: sequential outer tile (see
+/// [`split_bmm_batch_impl`]).
+pub fn split_bmm_batch(factor: usize) -> Rewrite {
+    split_bmm_batch_impl(factor, false)
+}
+
+/// `split-bmm-batch-par-x{f}`: the head-axis `sched-par` variant — the
+/// outer tile runs `factor` engine instances concurrently.
+pub fn split_bmm_batch_par(factor: usize) -> Rewrite {
+    split_bmm_batch_impl(factor, true)
 }
 
 #[cfg(test)]
@@ -466,10 +672,102 @@ mod tests {
 
     #[test]
     fn pool_splits_fire() {
-        let src = "(invoke-pool (pool-engine 4 4 8 2 2) (input x [8 8 8]))";
+        let src = "(invoke-pool (pool-engine 4 4 8 2 2 2) (input x [8 8 8]))";
         let (_, _, a1) = apply_once(src, split_pool_c(2));
         let (_, _, a2) = apply_once(src, split_pool_oh(2));
-        assert_eq!((a1, a2), (1, 1));
+        let (_, _, a3) = apply_once(src, split_pool_ow(2));
+        assert_eq!((a1, a2, a3), (1, 1, 1));
+    }
+
+    #[test]
+    fn rect_pool_ow_split_uses_kw_halo() {
+        // 2x4 window, stride 1: a W split needs kw=4 halo columns, so an
+        // 8-wide output needs (4-1)*1+4 = 7 input columns per half.
+        let src = "(invoke-pool (pool-engine 8 8 3 2 4 1) (input x [3 9 11]))";
+        let (eg, root, applied) = apply_once(src, split_pool_ow(2));
+        assert_eq!(applied, 1);
+        let has_loop =
+            eg.class(root).nodes.iter().any(|n| matches!(n.op, Op::SchedLoop { axis: 2, .. }));
+        assert!(has_loop);
+    }
+
+    #[test]
+    fn emul_split_fires_and_declines_below_min() {
+        let src = "(invoke-emul (emul-engine 32) (input x [32]) (input y [32]))";
+        let (eg, root, a1) = apply_once(src, split_emul(2));
+        assert_eq!(a1, 1);
+        assert!(eg.class(root).nodes.iter().any(|n| matches!(n.op, Op::SchedLoop { .. })));
+        let (_, _, a2) =
+            apply_once("(invoke-emul (emul-engine 4) (input x [4]) (input y [4]))", split_emul(2));
+        assert_eq!(a2, 0);
+    }
+
+    /// The canonical batch-matmul loop (as `lo_bmm` emits it) for a
+    /// 4-batch 4x8 @ 8x8 product.
+    const BMM_LOOP: &str = "(sched-loop b 0 4 (reshape [1 4 8] (invoke-mm (mm-engine 4 8 8) \
+        (reshape [4 8] (slice 0 1 (imul (lvar b) 1) (input qa [4 4 8]))) \
+        (reshape [8 8] (slice 0 1 (imul (lvar b) 1) (input kb [4 8 8]))))))";
+
+    #[test]
+    fn bmm_batch_split_tiles_the_head_loop() {
+        let (eg, root, applied) = apply_once(BMM_LOOP, split_bmm_batch(2));
+        assert_eq!(applied, 1);
+        // The root class gains an outer 2-tile whose body is an inner
+        // 2-loop over the re-indexed slices.
+        let outer = eg
+            .class(root)
+            .nodes
+            .iter()
+            .find(|n| matches!(n.op, Op::SchedLoop { extent: 2, .. }))
+            .expect("outer tile");
+        let inner_ok = eg
+            .class(outer.children[0])
+            .nodes
+            .iter()
+            .any(|n| matches!(n.op, Op::SchedLoop { extent: 2, .. }));
+        assert!(inner_ok, "inner tile");
+    }
+
+    #[test]
+    fn bmm_batch_par_split_emits_parallel_outer_tile() {
+        let (eg, root, applied) = apply_once(BMM_LOOP, split_bmm_batch_par(2));
+        assert_eq!(applied, 1);
+        assert!(eg
+            .class(root)
+            .nodes
+            .iter()
+            .any(|n| matches!(n.op, Op::SchedPar { extent: 2, .. })));
+    }
+
+    #[test]
+    fn bmm_batch_tiling_is_semantics_preserving() {
+        // The textual form of the rule's RHS computes the same batched
+        // product: start re-indexing o*(B/f)*c + i*c walks the same blocks.
+        use crate::tensor::{eval_expr, Env};
+        let e = parse_expr(BMM_LOOP).unwrap();
+        let want = eval_expr(&e, &mut Env::random_for(&e, 7)).unwrap();
+        let tiled = "(sched-loop o 0 2 (sched-loop i 0 2 (reshape [1 4 8] (invoke-mm (mm-engine 4 8 8) \
+            (reshape [4 8] (slice 0 1 (iadd (imul (lvar o) 2) (imul (lvar i) 1)) (input qa [4 4 8]))) \
+            (reshape [8 8] (slice 0 1 (iadd (imul (lvar o) 2) (imul (lvar i) 1)) (input kb [4 8 8])))))))";
+        let t = parse_expr(tiled).unwrap();
+        assert_eq!(t.typecheck().unwrap(), e.typecheck().unwrap());
+        let got = eval_expr(&t, &mut Env::random_for(&t, 7)).unwrap();
+        assert!(want.allclose(&got, 1e-6), "{:?}", want.max_abs_diff(&got));
+    }
+
+    #[test]
+    fn bmm_batch_split_declines_tiny_and_non_canonical_loops() {
+        // Batch 2 would leave an inner extent of 1: decline.
+        let small = "(sched-loop b 0 2 (reshape [1 4 8] (invoke-mm (mm-engine 4 8 8) \
+            (reshape [4 8] (slice 0 1 (imul (lvar b) 1) (input qa [2 4 8]))) \
+            (reshape [8 8] (slice 0 1 (imul (lvar b) 1) (input kb [2 8 8]))))))";
+        let (_, _, a1) = apply_once(small, split_bmm_batch(2));
+        assert_eq!(a1, 0);
+        // A row-wise loop with no per-slice invoke-mm body: decline.
+        let rows = "(sched-loop r 0 4 (reshape [1 8] (invoke-relu (relu-engine 8) \
+            (reshape [8] (slice 0 1 (imul (lvar r) 1) (input x [4 8]))))))";
+        let (_, _, a2) = apply_once(rows, split_bmm_batch(2));
+        assert_eq!(a2, 0);
     }
 
     #[test]

@@ -51,20 +51,31 @@ pub fn default_artifact_dir() -> PathBuf {
 }
 
 /// The artifact base name for an engine declaration (the naming contract
-/// with `python/compile/aot.py`). Engines without a Pallas kernel yet
-/// (softmax/layernorm/gelu/dw-conv) return `None` and are treated as
-/// uncovered — `extract_covered` steers around them and `PjrtBackend`
-/// falls back to the oracle (or errors in strict mode).
+/// with `python/compile/aot.py`). **Every** Engine-class op maps to
+/// `Some(..)` — `tests/registry.rs` pins this, so a new engine can't ship
+/// silently unrunnable on PJRT. Non-engine ops return `None`; whether a
+/// *specific instantiation* is runnable still depends on the artifact
+/// library (`extract_covered` steers around missing instantiations and
+/// `PjrtBackend` falls back to the oracle, or errors in strict mode).
 pub fn artifact_name(op: &Op) -> Option<String> {
     Some(match *op {
         Op::MmEngine { m, k, n } => format!("mm_{m}x{k}x{n}"),
         Op::MmReluEngine { m, k, n } => format!("mmrelu_{m}x{k}x{n}"),
         Op::ReluEngine { w } => format!("relu_{w}"),
         Op::AddEngine { w } => format!("add_{w}"),
+        Op::EmulEngine { w } => format!("emul_{w}"),
+        Op::GeluEngine { w } => format!("gelu_{w}"),
+        Op::SoftmaxEngine { w } => format!("softmax_{w}"),
+        Op::LayerNormEngine { w } => format!("layernorm_{w}"),
         Op::ConvEngine { oh, ow, c, k, kh, kw, stride } => {
             format!("conv_{oh}x{ow}x{c}x{k}x{kh}x{kw}x{stride}")
         }
-        Op::PoolEngine { oh, ow, c, k, stride } => format!("pool_{oh}x{ow}x{c}x{k}x{stride}"),
+        Op::PoolEngine { oh, ow, c, kh, kw, stride } => {
+            format!("pool_{oh}x{ow}x{c}x{kh}x{kw}x{stride}")
+        }
+        Op::DwConvEngine { oh, ow, c, kh, kw, stride } => {
+            format!("dwconv_{oh}x{ow}x{c}x{kh}x{kw}x{stride}")
+        }
         _ => return None,
     })
 }
@@ -196,8 +207,42 @@ mod tests {
             "conv_28x28x1x8x5x5x1"
         );
         assert_eq!(artifact_name(&Op::Relu), None);
-        // New engines have no Pallas kernels yet: uncovered, not a panic.
-        assert_eq!(artifact_name(&Op::GeluEngine { w: 8 }), None);
+        // Row/vector engines and depthwise conv have kernel contracts too.
+        assert_eq!(artifact_name(&Op::GeluEngine { w: 8 }).unwrap(), "gelu_8");
+        assert_eq!(artifact_name(&Op::EmulEngine { w: 16 }).unwrap(), "emul_16");
+        assert_eq!(artifact_name(&Op::SoftmaxEngine { w: 16 }).unwrap(), "softmax_16");
+        assert_eq!(artifact_name(&Op::LayerNormEngine { w: 128 }).unwrap(), "layernorm_128");
+        assert_eq!(
+            artifact_name(&Op::PoolEngine { oh: 14, ow: 14, c: 8, kh: 2, kw: 4, stride: 2 })
+                .unwrap(),
+            "pool_14x14x8x2x4x2"
+        );
+        assert_eq!(
+            artifact_name(&Op::DwConvEngine { oh: 8, ow: 8, c: 16, kh: 3, kw: 3, stride: 2 })
+                .unwrap(),
+            "dwconv_8x8x16x3x3x2"
+        );
+    }
+
+    /// Every Engine-class op kind has an artifact-name contract: the
+    /// registry exemplar of each engine maps to `Some(..)`. There are no
+    /// exemptions — an engine that can't name its artifact can't run on
+    /// PJRT, silently, which is exactly the bug class this pins away.
+    #[test]
+    fn every_engine_kind_has_an_artifact_name() {
+        use crate::ir::spec::{self, OpClass};
+        for s in spec::all_specs() {
+            if s.class != OpClass::Engine {
+                continue;
+            }
+            let e = crate::ir::parse_expr(s.exemplar).unwrap();
+            let op = &e.node(e.root()).op;
+            assert!(
+                artifact_name(op).is_some(),
+                "{:?}: engine has no artifact_name contract",
+                s.kind
+            );
+        }
     }
 
     #[test]
@@ -207,7 +252,7 @@ mod tests {
             Shape::new(&[2, 4])
         );
         assert_eq!(
-            engine_out_shape(&Op::PoolEngine { oh: 5, ow: 5, c: 16, k: 2, stride: 2 }),
+            engine_out_shape(&Op::PoolEngine { oh: 5, ow: 5, c: 16, kh: 2, kw: 2, stride: 2 }),
             Shape::new(&[16, 5, 5])
         );
     }

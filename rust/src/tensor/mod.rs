@@ -153,6 +153,15 @@ impl Tensor {
         }
     }
 
+    /// Elementwise (Hadamard) multiply.
+    pub fn emul(&self, b: &Tensor) -> Tensor {
+        assert_eq!(self.shape, b.shape, "emul shapes");
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().zip(&b.data).map(|(x, y)| x * y).collect(),
+        }
+    }
+
     /// Bias add: rank-3 `x` gets `b` along dim 0; rank-2 along dim 1.
     pub fn bias_add(&self, b: &Tensor) -> Tensor {
         assert_eq!(b.rank(), 1);
@@ -212,19 +221,19 @@ impl Tensor {
         Tensor::new(Shape::new(&[kout, oh, ow]), out)
     }
 
-    /// Max pooling over `(C,H,W)`.
-    pub fn maxpool2d(&self, k: usize, stride: usize) -> Tensor {
+    /// Max pooling over `(C,H,W)` with a rectangular `kh`×`kw` window.
+    pub fn maxpool2d(&self, kh: usize, kw: usize, stride: usize) -> Tensor {
         assert_eq!(self.rank(), 3);
         let (c, h, w) = (self.shape.dim(0), self.shape.dim(1), self.shape.dim(2));
-        let oh = (h - k) / stride + 1;
-        let ow = (w - k) / stride + 1;
+        let oh = (h - kh) / stride + 1;
+        let ow = (w - kw) / stride + 1;
         let mut out = vec![f32::NEG_INFINITY; c * oh * ow];
         for ci in 0..c {
             for oy in 0..oh {
                 for ox in 0..ow {
                     let mut m = f32::NEG_INFINITY;
-                    for dy in 0..k {
-                        for dx in 0..k {
+                    for dy in 0..kh {
+                        for dx in 0..kw {
                             m = m.max(
                                 self.data
                                     [ci * h * w + (oy * stride + dy) * w + (ox * stride + dx)],
@@ -348,17 +357,28 @@ impl Tensor {
         Tensor::new(Shape::new(&[c, oh, ow]), out)
     }
 
-    /// Matrix transpose `(m,n) -> (n,m)`.
-    pub fn transpose2(&self) -> Tensor {
-        assert_eq!(self.rank(), 2);
-        let (m, n) = (self.shape.dim(0), self.shape.dim(1));
-        let mut out = vec![0.0f32; m * n];
-        for i in 0..m {
-            for j in 0..n {
-                out[j * m + i] = self.data[i * n + j];
+    /// Transpose of the trailing two axes: `(m,n) -> (n,m)` for rank 2,
+    /// `(b,m,n) -> (b,n,m)` for rank 3 (batched).
+    pub fn transpose_last(&self) -> Tensor {
+        let r = self.rank();
+        assert!(r == 2 || r == 3, "transpose_last on rank {r}");
+        let b = if r == 3 { self.shape.dim(0) } else { 1 };
+        let (m, n) = (self.shape.dim(r - 2), self.shape.dim(r - 1));
+        let mut out = vec![0.0f32; b * m * n];
+        for bi in 0..b {
+            let base = bi * m * n;
+            for i in 0..m {
+                for j in 0..n {
+                    out[base + j * m + i] = self.data[base + i * n + j];
+                }
             }
         }
-        Tensor::new(Shape::new(&[n, m]), out)
+        let shape = if r == 3 {
+            Shape::new(&[b, n, m])
+        } else {
+            Shape::new(&[n, m])
+        };
+        Tensor::new(shape, out)
     }
 
     /// Batched matmul `(B,M,K) @ (B,K,N) -> (B,M,N)`.
@@ -421,6 +441,24 @@ impl Tensor {
             }
         }
         Tensor { shape: self.shape.clone(), data: out }
+    }
+
+    /// Affine layer normalization over the last axis:
+    /// `gamma ⊙ norm(x) + beta`, broadcast per row. `gamma`/`beta` are
+    /// rank 1 of the last-axis length.
+    pub fn layernorm_affine_last(&self, gamma: &Tensor, beta: &Tensor, eps: f32) -> Tensor {
+        let last = self.shape.dim(self.rank() - 1);
+        assert_eq!(gamma.shape, Shape::new(&[last]), "gamma shape");
+        assert_eq!(beta.shape, Shape::new(&[last]), "beta shape");
+        let mut out = self.layernorm_last(eps);
+        let rows = self.numel() / last;
+        for r in 0..rows {
+            let row = &mut out.data[r * last..(r + 1) * last];
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = *v * gamma.data[j] + beta.data[j];
+            }
+        }
+        out
     }
 
     /// Elementwise GELU, tanh approximation:
@@ -574,7 +612,27 @@ mod tests {
     #[test]
     fn maxpool_known() {
         let x = Tensor::new(s(&[1, 2, 2]), vec![1.0, 5.0, 3.0, 2.0]);
-        assert_eq!(x.maxpool2d(2, 2).data, vec![5.0]);
+        assert_eq!(x.maxpool2d(2, 2, 2).data, vec![5.0]);
+    }
+
+    #[test]
+    fn maxpool_rectangular_window() {
+        // 1x2 window, stride 1: row-wise pairwise max.
+        let x = Tensor::new(s(&[1, 2, 3]), vec![1.0, 5.0, 3.0, 2.0, 0.0, 4.0]);
+        let y = x.maxpool2d(1, 2, 1);
+        assert_eq!(y.shape, s(&[1, 2, 2]));
+        assert_eq!(y.data, vec![5.0, 5.0, 2.0, 4.0]);
+        // 2x1 window: column-wise pairwise max.
+        let y = x.maxpool2d(2, 1, 1);
+        assert_eq!(y.shape, s(&[1, 1, 3]));
+        assert_eq!(y.data, vec![2.0, 5.0, 4.0]);
+    }
+
+    #[test]
+    fn emul_known_values() {
+        let a = Tensor::new(s(&[4]), vec![1.0, -2.0, 3.0, 0.5]);
+        let b = Tensor::new(s(&[4]), vec![2.0, 2.0, -1.0, 4.0]);
+        assert_eq!(a.emul(&b).data, vec![2.0, -4.0, -3.0, 2.0]);
     }
 
     #[test]
@@ -632,10 +690,23 @@ mod tests {
     #[test]
     fn transpose_involution() {
         let x = Tensor::random(s(&[3, 5]), 9);
-        let t = x.transpose2();
+        let t = x.transpose_last();
         assert_eq!(t.shape, s(&[5, 3]));
         assert_eq!(t.at(&[2, 1]), x.at(&[1, 2]));
-        assert!(t.transpose2().allclose(&x, 0.0));
+        assert!(t.transpose_last().allclose(&x, 0.0));
+    }
+
+    #[test]
+    fn batched_transpose_matches_per_slice() {
+        let x = Tensor::random(s(&[4, 3, 5]), 19);
+        let t = x.transpose_last();
+        assert_eq!(t.shape, s(&[4, 5, 3]));
+        for bi in 0..4 {
+            let want = x.slice_ax(0, bi, 1).reshape(s(&[3, 5])).transpose_last();
+            let got = t.slice_ax(0, bi, 1).reshape(s(&[5, 3]));
+            assert!(got.allclose(&want, 0.0), "batch {bi}");
+        }
+        assert!(t.transpose_last().allclose(&x, 0.0));
     }
 
     #[test]
@@ -681,6 +752,25 @@ mod tests {
             assert!(mean.abs() < 1e-5, "row {r} mean {mean}");
             assert!((var - 1.0).abs() < 1e-3, "row {r} var {var}");
         }
+    }
+
+    #[test]
+    fn layernorm_affine_scales_and_shifts() {
+        let x = Tensor::random(s(&[2, 16]), 61);
+        let gamma = Tensor::random(s(&[16]), 62);
+        let beta = Tensor::random(s(&[16]), 63);
+        let got = x.layernorm_affine_last(&gamma, &beta, 1e-5);
+        let norm = x.layernorm_last(1e-5);
+        for r in 0..2 {
+            for j in 0..16 {
+                let want = norm.data[r * 16 + j] * gamma.data[j] + beta.data[j];
+                assert!((got.data[r * 16 + j] - want).abs() < 1e-6);
+            }
+        }
+        // Unit gamma, zero beta reduces to the non-affine form.
+        let ones = Tensor::new(s(&[16]), vec![1.0; 16]);
+        let zeros = Tensor::zeros(s(&[16]));
+        assert!(x.layernorm_affine_last(&ones, &zeros, 1e-5).allclose(&norm, 0.0));
     }
 
     #[test]

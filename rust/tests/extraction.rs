@@ -173,6 +173,89 @@ fn second_query_performs_zero_fixpoint_rebuilds() {
     assert_eq!(keys(&cold), keys(&warm));
 }
 
+/// ISSUE-5 acceptance, space side: on `attn_block_mh4` the head-axis
+/// tilings fire during saturation, and the latency-greedy extraction
+/// (which always prefers `sched-par` over `sched-loop`) lands on a design
+/// that parallelizes along the leading (head) axis.
+#[test]
+fn attn_block_mh4_head_axis_splits_enter_the_space() {
+    use hwsplit::extract::{latency_cost, Extractor};
+    use hwsplit::ir::Op;
+    let w = workloads::attn_block_mh4();
+    let lowered = hwsplit::lower::lower_default(&w.expr).expect("workload lowers");
+    let mut runner = Runner::new(lowered, RuleSet::All.rules()).with_limits(RunnerLimits {
+        max_nodes: 30_000,
+        track_designs: false,
+        ..Default::default()
+    });
+    let report = runner.run(2);
+    let fired = |name: &str| -> usize {
+        let ri = report
+            .rule_names
+            .iter()
+            .position(|n| n == name)
+            .unwrap_or_else(|| panic!("rule {name} not in the set"));
+        report
+            .iterations
+            .iter()
+            .map(|it| it.per_rule.get(ri).map_or(0, |r| r.applied))
+            .sum()
+    };
+    assert!(
+        fired("split-bmm-batch-x2") >= 1,
+        "head tiling never applied:\n{}",
+        report.rule_table()
+    );
+    assert!(
+        fired("split-bmm-batch-par-x2") >= 1,
+        "parallel head tiling never applied:\n{}",
+        report.rule_table()
+    );
+    // The latency-greedy design parallelizes a leading-axis schedule (the
+    // head loop of the batch-matmuls and/or the per-head softmax sweep).
+    let d = Extractor::new(&runner.egraph, latency_cost).extract(&runner.egraph, runner.root);
+    d.typecheck().expect("greedy design well-typed");
+    assert!(
+        d.count(|op| matches!(op, Op::SchedPar { axis: 0, extent } if *extent >= 2)) >= 1,
+        "latency-greedy design has no head-axis parallelism:\n{d}"
+    );
+}
+
+/// ISSUE-5 acceptance, serving side: `attn_block_mh4` extracts a ≥2-point
+/// Pareto frontier; every evaluated design round-trips print→parse; and
+/// the frontier matches-or-dominates the single-head initial design's
+/// area at equal budget (the per-head 16x32x16 score engines are 4x
+/// smaller than the fused 16x128x16 one, and the splits shrink them
+/// further).
+#[test]
+fn attn_block_mh4_frontier_roundtrips_and_undercuts_single_head_area() {
+    use hwsplit::cost::{cost_of, CostParams};
+    let mut s = Session::builder()
+        .workload(workloads::attn_block_mh4())
+        .rules(RuleSet::All)
+        .iters(2)
+        .limits(RunnerLimits { max_nodes: 30_000, ..Default::default() })
+        .build()
+        .unwrap();
+    let ev = s.query(&Query::new().samples(16)).unwrap();
+    assert!(ev.designs.len() >= 3, "too few designs");
+    assert!(ev.frontier.len() >= 2, "trivial frontier ({} points)", ev.frontier.len());
+    for d in &ev.designs {
+        let txt = d.point.expr.to_string();
+        let back = parse_expr(&txt).unwrap_or_else(|e| panic!("reparse failed: {e}\n{txt}"));
+        assert_eq!(back.to_string(), txt, "print→parse round-trip");
+    }
+    let single_head = hwsplit::lower::lower_default(&workloads::attn_block().expr).unwrap();
+    let sh_initial = cost_of(&single_head, &CostParams::default());
+    assert!(
+        ev.frontier.iter().any(|p| p.cost.area <= sh_initial.area),
+        "no multi-head frontier point at or below the single-head initial area \
+         ({} vs {:?})",
+        sh_initial.area,
+        ev.frontier.iter().map(|p| p.cost.area).collect::<Vec<_>>()
+    );
+}
+
 /// `run_queries` shares one extraction pass across a batch and leaves the
 /// memo warm for follow-up queries.
 #[test]

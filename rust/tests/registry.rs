@@ -59,6 +59,62 @@ fn exemplar_shape_inference_golden() {
     }
 }
 
+/// Per ROADMAP: rewrite coverage per engine kind is registry-driven, not
+/// hand-maintained. Every Engine-class op either declares its
+/// split-rewrite family (`OpSpec::split_family`) — which must resolve to
+/// at least one registered rule — or sits on the explicit exemption list
+/// below. A new engine with neither fails here by construction.
+#[test]
+fn every_engine_has_a_split_rule_or_documented_exemption() {
+    use hwsplit::ir::spec::OpClass;
+    let rules = hwsplit::rewrites::all_rules();
+    let mut exempt = Vec::new();
+    for s in spec::all_specs() {
+        if s.class != OpClass::Engine {
+            continue;
+        }
+        match s.split_family {
+            Some(prefix) => assert!(
+                rules.iter().any(|r| r.name.starts_with(prefix)),
+                "{:?}: declared split family '{prefix}' has no registered rule",
+                s.kind
+            ),
+            None => exempt.push(s.kind),
+        }
+    }
+    // Row-coupled normalization engines only: softmax/layernorm cannot
+    // split along their width (the row statistics couple every lane).
+    assert_eq!(
+        exempt,
+        vec![OpKind::SoftmaxEngine, OpKind::LayerNormEngine],
+        "unexpected split exemptions"
+    );
+}
+
+/// The rectangular-pooling satellite: a non-square `kh`×`kw` window goes
+/// through parse/print, shape inference, eval, lowering and cost — and the
+/// pool engine prices `kh*kw` windows, not `k²`.
+#[test]
+fn rectangular_pool_window_end_to_end() {
+    use hwsplit::ir::Op;
+    let src = "(maxpool2d 2 4 2 (input x [3 8 8]))";
+    let e = parse_expr(src).unwrap();
+    assert_eq!(e.to_string(), src);
+    assert_eq!(e.typecheck().unwrap(), Ty::Tensor(Shape::new(&[3, 4, 3])));
+    let mut env = Env::random_for(&e, 9);
+    let out = eval_expr(&e, &mut env).unwrap();
+    assert_eq!(out.shape, Shape::new(&[3, 4, 3]));
+    let lo = lower_default(&e).unwrap();
+    assert!(lo.to_string().contains("(pool-engine 4 3 3 2 4 2)"), "{lo}");
+    let got = eval_expr(&lo, &mut Env::random_for(&lo, 9)).unwrap();
+    assert!(out.allclose(&got, 1e-5));
+    let cost = cost_of(&lo, &CostParams::default());
+    assert!(cost.latency.is_finite() && cost.area > 0.0);
+    let rect = Op::PoolEngine { oh: 4, ow: 3, c: 3, kh: 2, kw: 4, stride: 2 };
+    let sq = Op::PoolEngine { oh: 4, ow: 3, c: 3, kh: 2, kw: 2, stride: 2 };
+    assert_eq!(rect.engine_macs(), 2 * sq.engine_macs());
+}
+
 /// Tensor-valued exemplars run the whole pipeline: evaluate (eval kernel
 /// wired), lower (no Relay op survives reification), and cost (the analytic
 /// model prices the lowered design without panicking).

@@ -89,7 +89,7 @@ fn relu128_frontier_beats_baseline_somewhere() {
 /// trade-offs), all from designs that still compute the workload.
 #[test]
 fn new_workloads_enumerate_nontrivial_frontiers() {
-    for w in [workloads::attn_block(), workloads::mobile_block()] {
+    for w in [workloads::attn_block(), workloads::mobile_block(), workloads::mobile_block_s2()] {
         let name = w.name;
         let mut s = Session::builder()
             .workload(w)

@@ -91,17 +91,78 @@ fn lenet_paper_rules_sound() {
     check_workload("lenet", RuleSet::Paper, 3, 6);
 }
 
-/// Transformer block: matmul/softmax/layernorm/gelu reifications and the
-/// mm/gelu splits applied to them stay semantics-preserving.
+/// Transformer block: matmul/softmax/affine-layernorm/gelu reifications
+/// and the mm/gelu/emul splits applied to them stay semantics-preserving.
 #[test]
 fn attn_block_all_rules_sound() {
     check_workload("attn_block", RuleSet::All, 2, 6);
+}
+
+/// Multi-head transformer block: head packing (batched transposes +
+/// reshapes), the batch-matmul loop lowering, rank-3 softmax, and the
+/// head-axis `split-bmm-batch[-par]` tilings all preserve semantics under
+/// saturation — every sampled design still computes 4-head attention.
+#[test]
+fn attn_block_mh4_all_rules_sound() {
+    check_workload("attn_block_mh4", RuleSet::All, 2, 6);
 }
 
 /// Depthwise-separable block: dwconv reification + channel/row splits.
 #[test]
 fn mobile_block_paper_rules_sound() {
     check_workload("mobile_block", RuleSet::Paper, 3, 8);
+}
+
+/// Stride-2 downsampling block: `split-dwconv-oh`'s halo slices must stay
+/// sound when the engine stride is 2, not just 1.
+#[test]
+fn mobile_block_s2_paper_rules_sound() {
+    check_workload("mobile_block_s2", RuleSet::Paper, 3, 8);
+}
+
+/// Property: the `split-dwconv-oh` halo math — input chunk length
+/// `(ohc-1)*stride + kh`, chunk start `i*ohc*stride` — is exact for
+/// stride ∈ {1, 2} across output heights and kernel sizes: every design in
+/// the 2-element space (whole engine / row-split loop) evaluates
+/// identically.
+#[test]
+fn dwconv_oh_halo_sound_under_stride() {
+    use hwsplit::egraph::EGraph;
+    use hwsplit::rewrites::split::split_dwconv_oh;
+    for &(oh, kh, stride) in &[(8usize, 3usize, 1usize), (8, 3, 2), (4, 3, 2), (8, 5, 2), (6, 3, 2)]
+    {
+        let (c, ow, kw) = (4usize, oh, kh);
+        let ih = (oh - 1) * stride + kh;
+        let iw = (ow - 1) * stride + kw;
+        let src = format!(
+            "(invoke-dw-conv (dw-conv-engine {oh} {ow} {c} {kh} {kw} {stride}) \
+               (input x [{c} {ih} {iw}]) (weight w [{c} {kh} {kw}]))"
+        );
+        let e = hwsplit::ir::parse_expr(&src).unwrap();
+        let want = eval_expr(&e, &mut Env::random_for(&e, 21)).unwrap();
+        let mut eg = EGraph::new();
+        let root = eg.add_expr(&e);
+        let rule = split_dwconv_oh(2);
+        let mut applied = 0;
+        for (id, s) in rule.search(&eg) {
+            if rule.apply(&mut eg, id, &s) {
+                applied += 1;
+            }
+        }
+        eg.rebuild();
+        assert_eq!(applied, 1, "oh={oh} kh={kh} s={stride}: split must fire");
+        for seed in 0..6 {
+            let d = sample_design(&eg, root, seed);
+            d.typecheck()
+                .unwrap_or_else(|e| panic!("oh={oh} kh={kh} s={stride}: ill-typed: {e}"));
+            let got = eval_expr(&d, &mut Env::random_for(&d, 21)).unwrap();
+            assert!(
+                want.allclose(&got, 1e-5),
+                "oh={oh} kh={kh} s={stride} seed={seed}: halo math diverged: {:?}\n{d}",
+                want.max_abs_diff(&got)
+            );
+        }
+    }
 }
 
 /// Property: random rule subsets on random workloads stay sound.
