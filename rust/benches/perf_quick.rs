@@ -11,6 +11,7 @@
 //!
 //! Run: `cargo bench --bench perf_quick`
 
+use hwsplit::bench_util::{snapshot_fixture, snapshot_fixture_path};
 use hwsplit::egraph::{Runner, RunnerLimits, SearchMode};
 use hwsplit::extract::{extract_designs, ExtractCache, ExtractOptions};
 use hwsplit::lower::lower_default;
@@ -18,6 +19,7 @@ use hwsplit::par::default_workers;
 use hwsplit::relay::workload_by_name;
 use hwsplit::report::{JsonRecords, JsonValue};
 use hwsplit::rewrites::RuleSet;
+use hwsplit::session::Session;
 use std::time::Instant;
 
 fn record(
@@ -105,6 +107,25 @@ fn main() {
             record(&mut out, name, engine, secs * 1e3, set.requested as f64 / secs);
         }
     }
+
+    // Snapshot serving: the daemon's startup economics. Cold-load the
+    // saturated attn_block_mh4 fixture from disk — built through the same
+    // `bench_util::snapshot_fixture` helper the serving bench uses, with
+    // this run's budget — instead of paying saturation again. "designs/sec"
+    // is the snapshot's design lower bound over the load wall-clock.
+    let (sname, srules) = ("attn_block_mh4", RuleSet::All);
+    let (siters, snodes) = if full { (3, 50_000) } else { (2, 8_000) };
+    let _ = snapshot_fixture(sname, srules, siters, snodes); // ensure on disk
+    let spath = snapshot_fixture_path(sname, srules, siters, snodes);
+    let t0 = Instant::now();
+    let loaded = Session::load_snapshot(&spath).expect("snapshot fixture loads");
+    let secs = t0.elapsed().as_secs_f64().max(1e-9);
+    assert_eq!(loaded.enumeration_count(), 0, "cold load must not re-saturate");
+    let designs = loaded
+        .enumeration()
+        .map(|en| en.report.designs_lower_bound)
+        .unwrap_or(0.0);
+    record(&mut out, sname, "snapshot-load", secs * 1e3, designs / secs);
 
     out.write("bench_results.json").expect("write bench_results.json");
     println!("wrote bench_results.json ({} records)", out.len());

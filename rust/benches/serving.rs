@@ -1,0 +1,195 @@
+//! Bench — the snapshot-serving trajectory: cold-loading a persisted
+//! saturated e-graph vs re-saturating from scratch, and concurrent query
+//! throughput against one shared loaded session (the `hwsplit serve` data
+//! path, minus the socket). Results merge into `bench_results.json` next
+//! to the `perf_quick` records as `{workload, engine, wall_ms, ...}` rows,
+//! with `queries_per_sec` / `p50_ms` / `p99_ms` on the throughput row.
+//!
+//! Budgets are deliberately tiny so the CI job costs seconds; set
+//! `HWSPLIT_PERF_FULL=1` for locally meaningful numbers.
+//!
+//! Run: `cargo bench --bench serving`
+
+use hwsplit::bench_util::{black_box, snapshot_fixture, snapshot_fixture_path};
+use hwsplit::egraph::RunnerLimits;
+use hwsplit::relay::workload_by_name;
+use hwsplit::report::{JsonRecords, JsonValue};
+use hwsplit::rewrites::RuleSet;
+use hwsplit::serve::json::Json;
+use hwsplit::serve::percentile;
+use hwsplit::session::{Objective, Query, Session};
+use std::sync::Arc;
+use std::time::Instant;
+
+const WORKLOAD: &str = "attn_block_mh4";
+const RULES: RuleSet = RuleSet::All;
+const RESULTS: &str = "bench_results.json";
+/// Engine labels this bench owns in `bench_results.json` (replaced on
+/// every run; everything else in the file is preserved).
+const OWNED_ENGINES: &[&str] =
+    &["serve-cold-load", "serve-resaturate", "serve-throughput"];
+
+fn main() {
+    let full = std::env::var_os("HWSPLIT_PERF_FULL").is_some();
+    let (iters, max_nodes) = if full { (3, 50_000) } else { (2, 8_000) };
+    let samples = if full { 64 } else { 16 };
+    let clients: usize = 8;
+    let per_client: usize = if full { 32 } else { 6 };
+
+    let mut rows: Vec<Vec<(String, JsonValue)>> = Vec::new();
+
+    // --- Cold-load vs resaturate (the daemon's startup story) ------------
+    let _ = snapshot_fixture(WORKLOAD, RULES, iters, max_nodes); // ensure on disk
+    let path = snapshot_fixture_path(WORKLOAD, RULES, iters, max_nodes);
+
+    let t0 = Instant::now();
+    let session = Session::load_snapshot(&path).expect("snapshot fixture loads");
+    let cold_ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(session.enumeration_count(), 0, "cold load must not re-saturate");
+
+    let t0 = Instant::now();
+    {
+        let w = workload_by_name(WORKLOAD).expect("known workload");
+        let mut fresh = Session::builder()
+            .workload(w)
+            .rules(RULES)
+            .iters(iters)
+            .limits(RunnerLimits { max_nodes, track_designs: false, ..Default::default() })
+            .build()
+            .expect("fresh session builds");
+        fresh.enumerate().expect("fresh enumeration");
+    }
+    let resat_ms = t0.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "{WORKLOAD:<14} cold-load {cold_ms:>9.2} ms   resaturate {resat_ms:>9.2} ms   \
+         (x{:.1})",
+        resat_ms / cold_ms.max(1e-9)
+    );
+    rows.push(row(WORKLOAD, "serve-cold-load", cold_ms, &[]));
+    rows.push(row(WORKLOAD, "serve-resaturate", resat_ms, &[]));
+
+    // --- Concurrent query throughput over one shared session -------------
+    // Warm the memo with each seed the clients will issue, so the timed
+    // section measures the steady-state serving path (memoized extraction
+    // + evaluation), like a long-running daemon — then fan out.
+    for seed in 0..4u64 {
+        let _ = session
+            .answer_query(&Query::new().samples(samples).seed(seed))
+            .expect("warmup query answers");
+    }
+    let session = Arc::new(session);
+    let objectives =
+        [Objective::Latency, Objective::Area, Objective::Balanced(0.5)];
+
+    let t0 = Instant::now();
+    let mut latencies: Vec<f64> = Vec::with_capacity(clients * per_client);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let session = &session;
+                scope.spawn(move || {
+                    let mut lat = Vec::with_capacity(per_client);
+                    for i in 0..per_client {
+                        let q = Query::new()
+                            .objective(objectives[(c + i) % objectives.len()])
+                            .samples(samples)
+                            .seed((i % 4) as u64);
+                        let t = Instant::now();
+                        let ev = session.answer_query(&q).expect("query answers");
+                        black_box(ev.designs.len());
+                        lat.push(t.elapsed().as_secs_f64() * 1e3);
+                    }
+                    lat
+                })
+            })
+            .collect();
+        for h in handles {
+            latencies.extend(h.join().expect("client thread"));
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    latencies.sort_by(f64::total_cmp);
+    let served = latencies.len();
+    let qps = served as f64 / wall;
+    let p50 = percentile(&latencies, 50.0);
+    let p99 = percentile(&latencies, 99.0);
+    println!(
+        "{WORKLOAD:<14} {clients} clients x {per_client} queries: \
+         {qps:>8.1} queries/s   p50 {p50:.2} ms   p99 {p99:.2} ms"
+    );
+    rows.push(row(
+        WORKLOAD,
+        "serve-throughput",
+        wall * 1e3,
+        &[
+            ("queries_per_sec", qps),
+            ("p50_ms", p50),
+            ("p99_ms", p99),
+            ("clients", clients as f64),
+            ("queries", served as f64),
+        ],
+    ));
+
+    merge_into_results(RESULTS, rows);
+    println!("merged {} serving records into {RESULTS}", OWNED_ENGINES.len());
+}
+
+/// One `bench_results.json` record: the shared `{workload, engine,
+/// wall_ms}` shape plus any extra numeric fields.
+fn row(
+    workload: &str,
+    engine: &str,
+    wall_ms: f64,
+    extra: &[(&str, f64)],
+) -> Vec<(String, JsonValue)> {
+    let mut rec = vec![
+        ("workload".to_string(), JsonValue::Str(workload.to_string())),
+        ("engine".to_string(), JsonValue::Str(engine.to_string())),
+        ("wall_ms".to_string(), JsonValue::Num(wall_ms)),
+    ];
+    for &(k, v) in extra {
+        rec.push((k.to_string(), JsonValue::Num(v)));
+    }
+    rec
+}
+
+/// Rewrite `bench_results.json` preserving every record whose `engine`
+/// this bench does not own (`JsonRecords::write` truncates, so records
+/// from `perf_quick` must be carried over), then appending `new_rows`.
+fn merge_into_results(path: &str, new_rows: Vec<Vec<(String, JsonValue)>>) {
+    let mut out = JsonRecords::new();
+    if let Ok(text) = std::fs::read_to_string(path) {
+        if let Ok(parsed) = Json::parse(&text) {
+            if let Some(records) = parsed.as_array() {
+                for rec in records {
+                    let engine = rec.get("engine").and_then(Json::as_str).unwrap_or("");
+                    if OWNED_ENGINES.contains(&engine) {
+                        continue;
+                    }
+                    if let Json::Obj(fields) = rec {
+                        out.push(
+                            fields.iter().map(|(k, v)| (k.clone(), to_value(v))).collect(),
+                        );
+                    }
+                }
+            }
+        }
+    }
+    for rec in new_rows {
+        out.push(rec);
+    }
+    out.write(path).expect("write bench_results.json");
+}
+
+/// Re-encode a parsed scalar for the record writer. Records only ever
+/// hold strings and numbers; anything else round-trips as its display
+/// form so no data is silently dropped.
+fn to_value(j: &Json) -> JsonValue {
+    match j {
+        Json::Str(s) => JsonValue::Str(s.clone()),
+        Json::Num(v) => JsonValue::Num(*v),
+        Json::Bool(b) => JsonValue::Str(b.to_string()),
+        Json::Null => JsonValue::Num(f64::NAN), // renders as null again
+        other => JsonValue::Str(format!("{other:?}")),
+    }
+}

@@ -1,9 +1,15 @@
 //! A tiny benchmarking harness for the `harness = false` bench binaries
 //! (criterion is not in the vendored dependency set). Provides warmup,
 //! repeated timed runs, and median/mean/min reporting, plus a `black_box`
-//! to defeat constant folding.
+//! to defeat constant folding — and the shared snapshot-fixture helpers
+//! the `perf_quick` and `serving` benches both build on.
 
+use crate::egraph::RunnerLimits;
+use crate::relay::workload_by_name;
+use crate::rewrites::RuleSet;
+use crate::session::Session;
 use std::hint::black_box as std_black_box;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 /// Re-export of `std::hint::black_box` under the criterion-familiar name.
@@ -72,6 +78,51 @@ pub fn bench_auto(name: &str, target: Duration, mut f: impl FnMut()) -> BenchRes
     bench(name, runs.min(3), runs, f)
 }
 
+/// Where the shared snapshot fixtures live. The filename is tagged with
+/// the enumeration budget so a changed bench budget never silently reuses
+/// a stale fixture from an earlier run.
+pub fn snapshot_fixture_path(
+    workload: &str,
+    rules: RuleSet,
+    iters: usize,
+    max_nodes: usize,
+) -> PathBuf {
+    let set = match rules {
+        RuleSet::Fig2 => "fig2",
+        RuleSet::Paper => "paper",
+        RuleSet::All => "all",
+    };
+    PathBuf::from("target/snapshots")
+        .join(format!("{workload}-{set}-i{iters}-n{max_nodes}.hws"))
+}
+
+/// Return a session for `workload` backed by the on-disk snapshot fixture,
+/// saturating and saving it on first use. Both bench binaries go through
+/// this helper so they measure against the identical saturated graph; a
+/// loaded fixture answers queries with zero re-saturation.
+pub fn snapshot_fixture(
+    workload: &str,
+    rules: RuleSet,
+    iters: usize,
+    max_nodes: usize,
+) -> Session {
+    let path = snapshot_fixture_path(workload, rules, iters, max_nodes);
+    if let Ok(session) = Session::load_snapshot(&path) {
+        return session;
+    }
+    let w = workload_by_name(workload)
+        .unwrap_or_else(|| panic!("unknown workload '{workload}'"));
+    let mut session = Session::builder()
+        .workload(w)
+        .rules(rules)
+        .iters(iters)
+        .limits(RunnerLimits { max_nodes, track_designs: false, ..Default::default() })
+        .build()
+        .expect("fixture session builds");
+    session.save_snapshot(&path).expect("fixture snapshot writes");
+    session
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -83,6 +134,19 @@ mod tests {
         });
         assert_eq!(r.runs, 11);
         assert!(r.min <= r.median && r.median <= r.max);
+    }
+
+    #[test]
+    fn snapshot_fixture_builds_then_loads() {
+        // A budget no bench uses, so this test owns the file.
+        let p = snapshot_fixture_path("relu128", RuleSet::Fig2, 3, 3_000);
+        let _ = std::fs::remove_file(&p);
+        let s1 = snapshot_fixture("relu128", RuleSet::Fig2, 3, 3_000);
+        assert!(p.exists(), "first call must write the fixture");
+        assert_eq!(s1.enumeration_count(), 1);
+        let s2 = snapshot_fixture("relu128", RuleSet::Fig2, 3, 3_000);
+        assert_eq!(s2.enumeration_count(), 0, "second call must load, not re-saturate");
+        assert!(s2.enumeration().is_some(), "loaded fixture is ready to serve");
     }
 
     #[test]

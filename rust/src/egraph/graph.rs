@@ -25,6 +25,23 @@ pub struct EClass {
     pub ty: Ty,
 }
 
+/// Owned raw parts of an [`EGraph`] — the exact mutable state the snapshot
+/// codec persists. Derived state (hashcons memo, live counters) is absent
+/// by design; [`EGraph::from_parts`] recomputes it.
+#[derive(Debug, Clone)]
+pub(crate) struct EGraphParts {
+    /// Union-find parent array (`parents[i] == i` marks a root).
+    pub parents: Vec<u32>,
+    pub classes: Vec<Option<EClass>>,
+    pub arena: Vec<Node>,
+    pub pending: Vec<Id>,
+    pub n_unions: usize,
+    pub dirty: bool,
+    pub dirty_classes: Vec<Id>,
+    pub merged_roots: Vec<Id>,
+    pub epoch: u64,
+}
+
 /// The e-graph. See the module docs of [`crate::egraph`].
 #[derive(Debug, Clone, Default)]
 pub struct EGraph {
@@ -377,6 +394,62 @@ impl EGraph {
         out
     }
 
+    /// Dismantle into owned raw parts for the snapshot codec. The memo and
+    /// the live counters are **not** part of the raw form: both are derived
+    /// state that [`EGraph::from_parts`] reconstructs from the classes (the
+    /// memo maps each class's canonical nodes back to the class, which is
+    /// exactly what `add`/`lookup` consult after canonicalizing).
+    pub(crate) fn to_parts(&self) -> EGraphParts {
+        EGraphParts {
+            parents: self.uf.raw_parents().to_vec(),
+            classes: self.classes.clone(),
+            arena: self.arena.clone(),
+            pending: self.pending.clone(),
+            n_unions: self.n_unions,
+            dirty: self.dirty,
+            dirty_classes: self.dirty_classes.clone(),
+            merged_roots: self.merged_roots.clone(),
+            epoch: self.epoch,
+        }
+    }
+
+    /// Rebuild an e-graph from raw parts (snapshot load). Derived state —
+    /// the hashcons memo and the live class/node counters — is recomputed
+    /// from the classes; everything else (union-find, arena, counters,
+    /// **epoch**) is restored verbatim, so epoch-keyed read caches built
+    /// against the saved graph stay valid against the loaded one. The
+    /// caller (the snapshot decoder) is responsible for structural bounds
+    /// checks; this constructor only re-derives.
+    pub(crate) fn from_parts(parts: EGraphParts) -> Self {
+        let mut memo: HashMap<Node, Id> = HashMap::with_capacity_and_hasher(
+            parts.arena.len(),
+            Default::default(),
+        );
+        let mut live_classes = 0;
+        let mut live_nodes = 0;
+        for class in parts.classes.iter().flatten() {
+            live_classes += 1;
+            live_nodes += class.nodes.len();
+            for node in &class.nodes {
+                memo.insert(node.clone(), class.id);
+            }
+        }
+        EGraph {
+            uf: UnionFind::from_raw(parts.parents),
+            classes: parts.classes,
+            memo,
+            arena: parts.arena,
+            pending: parts.pending,
+            n_unions: parts.n_unions,
+            dirty: parts.dirty,
+            dirty_classes: parts.dirty_classes,
+            merged_roots: parts.merged_roots,
+            live_classes,
+            live_nodes,
+            epoch: parts.epoch,
+        }
+    }
+
     /// Quick structural sanity check used by tests and debug assertions:
     /// every node's children are live canonical classes, and the memo maps
     /// every canonical node to its canonical class.
@@ -610,6 +683,31 @@ mod tests {
         eg.rebuild();
         assert!(eg.epoch() > before_rebuild);
         assert_eq!(eg.find(rx), eg.find(ry));
+    }
+
+    #[test]
+    fn raw_parts_roundtrip_preserves_state_and_rebuilds_memo() {
+        let mut eg = EGraph::new();
+        let x = eg.add(input("x", &[4]));
+        let y = eg.add(input("y", &[4]));
+        let rx = eg.add(Node::new(Op::Relu, vec![x]));
+        let ry = eg.add(Node::new(Op::Relu, vec![y]));
+        eg.union(x, y);
+        eg.rebuild();
+        let mut back = EGraph::from_parts(eg.to_parts());
+        back.check_invariants();
+        assert_eq!(back.epoch(), eg.epoch());
+        assert_eq!(back.num_classes(), eg.num_classes());
+        assert_eq!(back.total_nodes(), eg.total_nodes());
+        assert_eq!(back.n_unions, eg.n_unions);
+        assert_eq!(back.find(rx), eg.find_ref(rx));
+        assert_eq!(back.find(ry), eg.find_ref(ry));
+        // The rebuilt memo hash-conses: re-adding an existing node is a hit
+        // (no epoch bump), and the pending dirty set carried over verbatim.
+        let before = back.epoch();
+        assert_eq!(back.add(input("x", &[4])), back.find(x));
+        assert_eq!(back.epoch(), before);
+        assert_eq!(back.take_dirty(), eg.take_dirty());
     }
 
     #[test]

@@ -33,7 +33,7 @@ use crate::error::Error;
 /// Implementations are stateful (ban windows, budgets); the runner owns
 /// the scheduler and calls it from the single-threaded phase boundaries,
 /// never from search workers.
-pub trait Scheduler: std::fmt::Debug + Send {
+pub trait Scheduler: std::fmt::Debug + Send + Sync {
     /// May `rule` search this iteration? Returning false skips the search
     /// phase for the rule; the runner banks the skipped work and re-offers
     /// it when this returns true again.

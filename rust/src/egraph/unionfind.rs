@@ -76,6 +76,20 @@ impl UnionFind {
     pub fn same(&mut self, a: Id, b: Id) -> bool {
         self.find(a) == self.find(b)
     }
+
+    /// The raw parent array, for the snapshot codec. `parents[i] == i`
+    /// marks a root; path compression state is incidental and carried
+    /// verbatim.
+    pub(crate) fn raw_parents(&self) -> &[u32] {
+        &self.parents
+    }
+
+    /// Rebuild from a raw parent array (snapshot load). The caller is
+    /// responsible for having validated that every entry indexes into the
+    /// array.
+    pub(crate) fn from_raw(parents: Vec<u32>) -> Self {
+        UnionFind { parents }
+    }
 }
 
 #[cfg(test)]

@@ -42,6 +42,15 @@ pub enum Error {
     /// The requested operation needs a feature this build lacks
     /// (e.g. `pjrt`).
     Unsupported(String),
+    /// An underlying I/O operation failed (snapshot read/write, serving
+    /// socket). Stores the rendered `std::io::Error` — the crate error is
+    /// `Clone` and `io::Error` is not.
+    Io(String),
+    /// A snapshot file carries a format version this build cannot read.
+    SnapshotVersion { found: u32, supported: u32 },
+    /// A snapshot file is structurally invalid: bad magic, truncated,
+    /// checksum mismatch, or an undecodable payload.
+    SnapshotCorrupt(String),
 }
 
 impl fmt::Display for Error {
@@ -75,6 +84,13 @@ impl fmt::Display for Error {
             Error::InvalidConfig(msg) => write!(f, "invalid configuration: {msg}"),
             Error::Backend { backend, detail } => write!(f, "{backend} backend: {detail}"),
             Error::Unsupported(msg) => write!(f, "unsupported: {msg}"),
+            Error::Io(msg) => write!(f, "i/o error: {msg}"),
+            Error::SnapshotVersion { found, supported } => write!(
+                f,
+                "snapshot format version {found} is not readable by this build \
+                 (supports version {supported}); re-save the snapshot"
+            ),
+            Error::SnapshotCorrupt(msg) => write!(f, "corrupt snapshot: {msg}"),
         }
     }
 }
@@ -108,6 +124,12 @@ impl From<EvalError> for Error {
     }
 }
 
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e.to_string())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -128,6 +150,30 @@ mod tests {
         for name in crate::relay::workload_names() {
             assert!(msg.contains(name), "missing '{name}' in: {msg}");
         }
+    }
+
+    #[test]
+    fn io_errors_convert_and_display() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "no such snapshot");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+        assert!(e.to_string().contains("no such snapshot"), "{e}");
+        assert!(e.to_string().contains("i/o error"), "{e}");
+    }
+
+    #[test]
+    fn snapshot_version_names_both_versions() {
+        let msg = Error::SnapshotVersion { found: 9, supported: 1 }.to_string();
+        assert!(msg.contains('9'), "{msg}");
+        assert!(msg.contains('1'), "{msg}");
+        assert!(msg.contains("version"), "{msg}");
+    }
+
+    #[test]
+    fn snapshot_corrupt_carries_detail() {
+        let msg = Error::SnapshotCorrupt("checksum mismatch at byte 12".into()).to_string();
+        assert!(msg.contains("corrupt snapshot"), "{msg}");
+        assert!(msg.contains("checksum mismatch"), "{msg}");
     }
 
     #[test]

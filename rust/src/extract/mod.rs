@@ -123,6 +123,16 @@ impl CostTable {
         self.best.get(&eg.find_ref(id)).map(|(c, _)| *c)
     }
 
+    /// The solved `class -> (cost, node)` map, for the snapshot codec.
+    pub(crate) fn raw_entries(&self) -> &HashMap<Id, (f64, Node)> {
+        &self.best
+    }
+
+    /// Rebuild from a decoded entry map (snapshot load).
+    pub(crate) fn from_raw(best: HashMap<Id, (f64, Node)>) -> Self {
+        CostTable { best }
+    }
+
     /// Extract the best design rooted at `root`.
     pub fn extract(&self, eg: &EGraph, root: Id) -> RecExpr {
         let mut expr = RecExpr::new();
@@ -276,6 +286,53 @@ impl ExtractCache {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    /// Export the cache contents for the snapshot codec: the epoch the
+    /// tables were solved against, every table in a deterministic order
+    /// (named kinds first, then sampled by seed — `HashMap` iteration order
+    /// must not leak into snapshot bytes), and the sampled-key FIFO order.
+    pub(crate) fn export(&self) -> CacheExport {
+        let inner = self.inner.lock().unwrap();
+        let mut tables: Vec<(CostKind, Arc<CostTable>)> =
+            inner.tables.iter().map(|(k, t)| (k.clone(), t.clone())).collect();
+        tables.sort_by_key(|(k, _)| kind_rank(k));
+        CacheExport {
+            epoch: inner.epoch,
+            tables,
+            sampled_order: inner.sampled_order.iter().cloned().collect(),
+        }
+    }
+
+    /// Rebuild a cache from exported contents (snapshot load). Tables stay
+    /// valid as long as the loaded graph reports the same epoch — which
+    /// [`crate::egraph`]'s raw-parts round trip guarantees.
+    pub(crate) fn import(export: CacheExport) -> Self {
+        ExtractCache {
+            inner: Mutex::new(CacheInner {
+                epoch: export.epoch,
+                tables: export.tables.into_iter().collect(),
+                sampled_order: export.sampled_order.into_iter().collect(),
+            }),
+        }
+    }
+}
+
+/// Deterministic ordering key for [`CostKind`]s in exports.
+fn kind_rank(k: &CostKind) -> (u8, u64) {
+    match k {
+        CostKind::Latency => (0, 0),
+        CostKind::Area => (1, 0),
+        CostKind::Size => (2, 0),
+        CostKind::Sampled(seed) => (3, *seed),
+    }
+}
+
+/// Owned [`ExtractCache`] contents, the unit the snapshot codec persists.
+#[derive(Debug)]
+pub(crate) struct CacheExport {
+    pub epoch: u64,
+    pub tables: Vec<(CostKind, Arc<CostTable>)>,
+    pub sampled_order: Vec<CostKind>,
 }
 
 /// Node-count cost (smallest term).
@@ -327,18 +384,62 @@ pub fn area_cost(_eg: &EGraph, node: &Node, child: &dyn Fn(Id) -> f64) -> f64 {
     }
 }
 
+/// Process-stable structural hash of an e-node: registry name + attribute
+/// values + children ids through the in-tree deterministic [`FxHasher`].
+/// Symbols hash by their *string*, not their intern id — intern ids depend
+/// on interning order, which differs between processes, and the sampled
+/// extraction noise below must be bit-identical across a snapshot
+/// save/load boundary.
+fn stable_node_hash(seed: u64, node: &Node) -> u64 {
+    use crate::fx::FxHasher;
+    use crate::ir::spec::AttrVal;
+    use std::hash::Hasher;
+    let mut h = FxHasher::default();
+    h.write_u64(seed);
+    let spec = node.op.spec();
+    h.write(spec.name.as_bytes());
+    for attr in (spec.attrs_of)(&node.op) {
+        match attr {
+            AttrVal::U(v) => {
+                h.write_u8(0);
+                h.write_u64(v as u64);
+            }
+            AttrVal::I(v) => {
+                h.write_u8(1);
+                h.write_u64(v as u64);
+            }
+            AttrVal::Sym(s) => {
+                h.write_u8(2);
+                h.write(s.as_str().as_bytes());
+            }
+            AttrVal::Sh(s) => {
+                h.write_u8(3);
+                h.write_u64(s.0.len() as u64);
+                for &d in &s.0 {
+                    h.write_u64(d as u64);
+                }
+            }
+            AttrVal::Buf(b) => {
+                h.write_u8(4);
+                h.write(b.as_str().as_bytes());
+            }
+        }
+    }
+    for &c in &node.children {
+        h.write_u32(c.index() as u32);
+    }
+    h.finish()
+}
+
 /// [`latency_cost`] under per-node deterministic multiplicative noise —
 /// the cost function behind [`CostKind::Sampled`]: each seed flips enough
-/// local decisions to yield a distinct valid design.
+/// local decisions to yield a distinct valid design. The noise hashes the
+/// node *structurally* ([`stable_node_hash`]), so a given (graph, seed)
+/// pair extracts the same design in every process — the property the
+/// snapshot round-trip tests pin.
 fn sampled_cost(seed: u64) -> impl Fn(&EGraph, &Node, &dyn Fn(Id) -> f64) -> f64 {
     move |eg, node, child| {
-        // Per-node deterministic noise (cheap structural hash — this runs
-        // in the extraction inner loop).
-        use std::hash::{Hash, Hasher};
-        let mut h = std::collections::hash_map::DefaultHasher::new();
-        seed.hash(&mut h);
-        node.hash(&mut h);
-        let mut r = Rng::new(h.finish() | 1);
+        let mut r = Rng::new(stable_node_hash(seed, node) | 1);
         // Noise in [0.25, 4.0) — enough to flip most local decisions.
         let noise = 0.25 * (1.0 + 15.0 * r.f64());
         latency_cost(eg, node, child) * noise + 1.0

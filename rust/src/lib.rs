@@ -54,6 +54,8 @@
 //! | [`tensor`] | pure-Rust tensor math + EngineIR evaluator (semantics oracle) |
 //! | [`cost`] | analytic area / latency / energy models over designs |
 //! | [`extract`] | parallel, memoized design extraction: cost-table memo, seeded sampling, streaming Pareto frontier |
+//! | [`persist`] | versioned zero-dependency snapshot format: saturated e-graph + cost tables on disk, loaded with zero re-saturation |
+//! | [`serve`] | `hwsplit serve`: long-running TCP daemon answering design-space queries from loaded snapshots |
 //! | [`sim`] | cycle-approximate accelerator simulator (usefulness oracle) |
 //! | [`runtime`] | PJRT executor for AOT-compiled Pallas engine kernels (feature `pjrt`; stub otherwise) |
 //! | [`session`] | **the primary API**: reusable sessions, queries, pluggable backends |
@@ -72,11 +74,13 @@ pub mod fx;
 pub mod ir;
 pub mod lower;
 pub mod par;
+pub mod persist;
 pub mod prop;
 pub mod relay;
 pub mod report;
 pub mod rewrites;
 pub mod runtime;
+pub mod serve;
 pub mod session;
 pub mod sim;
 pub mod tensor;

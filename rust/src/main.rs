@@ -9,12 +9,16 @@
 //! hwsplit explore   --workload lenet --samples 64 --iters 6
 //!                   [--backend analytic|interp|sim|pjrt]
 //!                   [--objective latency|area|balanced] [--csv dir]
+//!                   [--snapshot-out file.hws] [--snapshot-in file.hws]
+//! hwsplit serve     --snapshots a.hws,b.hws [--port 7878] [--max-sessions 4]
 //! hwsplit simulate  --workload mlp [--seed 3]
 //! hwsplit run       --workload mlp [--design split] [--artifacts DIR]
 //! ```
 //!
 //! `explore` builds a [`Session`] (enumerate once) and issues one query;
 //! as a library the same session answers many queries — see the crate docs.
+//! `--snapshot-out` persists the saturated e-graph (+ warm cost tables) and
+//! `--snapshot-in` / `serve` answer from it with zero re-saturation.
 
 use hwsplit::egraph::{Runner, RunnerLimits, SchedulerSpec, SearchMode};
 use hwsplit::extract::{sample_design, Extractor};
@@ -24,6 +28,7 @@ use hwsplit::relay::{all_workloads, workload_by_name};
 use hwsplit::report::{fmt_f64, Table};
 use hwsplit::rewrites::{self, RuleSet};
 use hwsplit::runtime::{EngineRuntime, PjrtBackend};
+use hwsplit::serve::{Server, SessionStore};
 use hwsplit::session::{Backend, Objective, Query, Session};
 use hwsplit::sim::{simulate, SimConfig};
 use hwsplit::tensor::{eval_expr, eval_expr_backend, Env};
@@ -106,6 +111,7 @@ fn main() {
         "fig2" => cmd_fig2(),
         "enumerate" => cmd_enumerate(&args),
         "explore" => cmd_explore(&args),
+        "serve" => cmd_serve(&args),
         "simulate" => cmd_simulate(&args),
         "run" => cmd_run(&args),
         _ => {
@@ -194,35 +200,54 @@ fn cmd_enumerate(args: &Args) {
 }
 
 fn cmd_explore(args: &Args) {
-    let w = workload_or_die(args);
     let backend: Backend = args.typed("backend", Backend::Sim);
     let objective: Objective = args.typed("objective", Objective::Latency);
     let t0 = Instant::now();
-    let limits = RunnerLimits {
-        max_nodes: args.usize("max-nodes", 100_000),
-        ..Default::default()
+    // `--snapshot-in` resumes from a persisted enumeration (workload +
+    // rules come from the snapshot; queries run with zero re-saturation);
+    // otherwise build a session and enumerate here.
+    let mut session = if let Some(path) = args.get("snapshot-in") {
+        let mut s = Session::load_snapshot(path).unwrap_or_else(|e| {
+            eprintln!("{path}: {e}");
+            std::process::exit(2);
+        });
+        if let Some(workers) = args.get("workers").and_then(|v| v.parse().ok()) {
+            s.set_workers(workers);
+        }
+        if let Some(workers) = args.get("extract-workers").and_then(|v| v.parse().ok()) {
+            s.set_extract_workers(workers);
+        }
+        println!("loaded snapshot {path} (workload: {})", s.workload().name);
+        s
+    } else {
+        let w = workload_or_die(args);
+        let limits = RunnerLimits {
+            max_nodes: args.usize("max-nodes", 100_000),
+            ..Default::default()
+        };
+        let scheduler: SchedulerSpec = args.typed("scheduler", SchedulerSpec::Simple);
+        let mut builder = Session::builder()
+            .workload(w)
+            .rules(args.typed("rules", RuleSet::Paper))
+            .iters(args.usize("iters", 6))
+            .scheduler(scheduler.build(&limits))
+            .track_designs(args.flag("track-designs"))
+            .limits(limits);
+        if let Some(workers) = args.get("workers").and_then(|v| v.parse().ok()) {
+            builder = builder.workers(workers);
+        }
+        if let Some(workers) = args.get("search-workers").and_then(|v| v.parse().ok()) {
+            builder = builder.search_workers(workers);
+        }
+        if let Some(workers) = args.get("extract-workers").and_then(|v| v.parse().ok()) {
+            builder = builder.extract_workers(workers);
+        }
+        builder.build().unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2);
+        })
     };
-    let scheduler: SchedulerSpec = args.typed("scheduler", SchedulerSpec::Simple);
-    let mut builder = Session::builder()
-        .workload(w.clone())
-        .rules(args.typed("rules", RuleSet::Paper))
-        .iters(args.usize("iters", 6))
-        .scheduler(scheduler.build(&limits))
-        .track_designs(args.flag("track-designs"))
-        .limits(limits);
-    if let Some(workers) = args.get("workers").and_then(|v| v.parse().ok()) {
-        builder = builder.workers(workers);
-    }
-    if let Some(workers) = args.get("search-workers").and_then(|v| v.parse().ok()) {
-        builder = builder.search_workers(workers);
-    }
-    if let Some(workers) = args.get("extract-workers").and_then(|v| v.parse().ok()) {
-        builder = builder.extract_workers(workers);
-    }
-    let mut session = builder.build().unwrap_or_else(|e| {
-        eprintln!("{e}");
-        std::process::exit(2);
-    });
+    let w = session.workload().clone();
     let samples = args.usize("samples", 64);
 
     // Batched mode: `--objectives latency,area` answers every objective
@@ -277,6 +302,7 @@ fn cmd_explore(args: &Args) {
             t.write_csv(format!("{dir}/{}_objectives.csv", w.name)).expect("write csv");
             println!("wrote CSV to {dir}/");
         }
+        maybe_save_snapshot(args, &mut session);
         return;
     }
 
@@ -335,6 +361,61 @@ fn cmd_explore(args: &Args) {
         f.write_csv(format!("{dir}/{}_frontier.csv", w.name)).expect("write csv");
         println!("wrote CSVs to {dir}/");
     }
+    maybe_save_snapshot(args, &mut session);
+}
+
+/// `--snapshot-out FILE`: persist the session's enumerated space — run
+/// *after* the queries so every cost table they solved ships in the
+/// snapshot and loaders start warm.
+fn maybe_save_snapshot(args: &Args, session: &mut Session) {
+    if let Some(path) = args.get("snapshot-out") {
+        session.save_snapshot(path).unwrap_or_else(|e| {
+            eprintln!("--snapshot-out {path}: {e}");
+            std::process::exit(2);
+        });
+        println!("wrote snapshot to {path}");
+    }
+}
+
+/// `hwsplit serve`: load snapshots, answer line-delimited JSON queries over
+/// TCP until a client sends `{"cmd":"shutdown"}`. See [`hwsplit::serve`]
+/// for the protocol.
+fn cmd_serve(args: &Args) {
+    let snapshots = args.get("snapshots").unwrap_or_else(|| {
+        eprintln!("serve needs --snapshots FILE[,FILE...] (write them with explore --snapshot-out)");
+        std::process::exit(2);
+    });
+    let port = args.usize("port", 7878);
+    let host = args.get("host").unwrap_or("127.0.0.1");
+    let mut store = SessionStore::new(args.usize("max-sessions", 4));
+    for path in snapshots.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        match store.register(path) {
+            Ok(workload) => println!("registered workload '{workload}' from {path}"),
+            Err(e) => {
+                eprintln!("{path}: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+    let server = Server::bind(&format!("{host}:{port}"), std::sync::Arc::new(store))
+        .unwrap_or_else(|e| {
+            eprintln!("bind {host}:{port}: {e}");
+            std::process::exit(2);
+        });
+    println!(
+        "hwsplit serve listening on {} ({} workloads registered)",
+        server.local_addr().expect("bound socket has an address"),
+        snapshots.split(',').filter(|p| !p.trim().is_empty()).count(),
+    );
+    server.run().unwrap_or_else(|e| {
+        eprintln!("serve: {e}");
+        std::process::exit(1);
+    });
+    let s = server.stats().summary();
+    println!(
+        "shut down after {} queries ({} errors), {:.1} queries/sec, p50 {:.2} ms, p99 {:.2} ms",
+        s.served, s.errors, s.queries_per_sec, s.p50_ms, s.p99_ms
+    );
 }
 
 fn cmd_simulate(args: &Args) {

@@ -1,0 +1,796 @@
+//! Snapshot persistence: a saturated e-graph on disk, ready to serve.
+//!
+//! The paper's economics are "enumerate once, query many" — but without
+//! persistence the amortization dies with the process: every CLI run pays
+//! saturation again. This module snapshots a [`Session`]'s enumerated
+//! state — the [`EGraph`] (nodes, union-find, class data, **epoch**), the
+//! runner report, and every solved [`CostTable`] in the extraction memo —
+//! into a versioned, zero-dependency binary format, so a fresh process can
+//! load it and answer queries **bit-identically** with zero re-saturation
+//! and zero fixpoint rebuilds ([`Session::load_snapshot`] restores the
+//! graph epoch verbatim, so the epoch-keyed [`ExtractCache`] stays warm).
+//!
+//! ## File layout
+//!
+//! ```text
+//! magic               8  b"HWSPLIT\0"
+//! format version      u32
+//! workload name       str         (cheap to peek — serving discovers the
+//! workload fingerprint u64         workload per file without decoding the
+//! rule-set hash       u64          payload)
+//! payload length      u64
+//! payload checksum    u64         (FxHash over the payload bytes)
+//! payload             …           lowered text, rule names, e-graph raw
+//!                                 parts, root, report summary, cost tables
+//! ```
+//!
+//! All integers are little-endian. Strings are `u32` length + UTF-8 bytes.
+//! Operators are encoded **through the registry** ([`crate::ir::spec`]):
+//! spec name + attribute values per the spec's schema — no per-op code, so
+//! new registry entries persist for free. Symbols are stored as strings
+//! and re-interned on load (intern ids are process-local).
+//!
+//! Every malformed input surfaces as a typed error instead of a panic:
+//! [`Error::SnapshotCorrupt`] (bad magic, truncation, checksum or payload
+//! decode failure), [`Error::SnapshotVersion`] (readable header, newer
+//! format), [`Error::Io`] (filesystem).
+//!
+//! [`Session`]: crate::session::Session
+//! [`Session::load_snapshot`]: crate::session::Session::load_snapshot
+
+use crate::egraph::graph::EGraphParts;
+use crate::egraph::{EClass, EGraph, Id, RunnerReport, StopReason};
+use crate::error::{Error, Result};
+use crate::extract::{CacheExport, CostKind, CostTable, ExtractCache};
+use crate::fx::{FxHashMap, FxHasher};
+use crate::ir::spec::{AttrKind, AttrVal};
+use crate::ir::{parse_expr, spec, BufKind, EngineSig, Node, Op, RecExpr, Shape, Symbol, Ty};
+use std::hash::Hasher as _;
+use std::io::{Read as _, Write as _};
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// First 8 bytes of every snapshot file.
+pub const MAGIC: &[u8; 8] = b"HWSPLIT\0";
+
+/// The snapshot format this build reads and writes.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// FxHash of a byte string (the checksum / fingerprint primitive — the
+/// in-tree [`FxHasher`] is seed-free and therefore process-stable).
+fn fx_bytes(bytes: &[u8]) -> u64 {
+    let mut h = FxHasher::default();
+    h.write(bytes);
+    h.finish()
+}
+
+/// Fingerprint of a workload definition (its printed Relay expression):
+/// detects a snapshot written against a *different* definition of the same
+/// workload name.
+pub fn workload_fingerprint(workload_src: &str) -> u64 {
+    fx_bytes(workload_src.as_bytes())
+}
+
+/// Order-sensitive hash of a rule-name list.
+pub fn ruleset_hash(names: &[String]) -> u64 {
+    let mut h = FxHasher::default();
+    for n in names {
+        h.write(n.as_bytes());
+        h.write_u8(b'\n');
+    }
+    h.finish()
+}
+
+/// Cheap header metadata, readable without decoding (or even reading) the
+/// payload — serving uses this to map snapshot files to workloads.
+#[derive(Debug, Clone)]
+pub struct SnapshotMeta {
+    pub format_version: u32,
+    /// Workload name the snapshot was written for.
+    pub workload: String,
+    /// [`workload_fingerprint`] of the writing process's workload source.
+    pub workload_fingerprint: u64,
+    /// [`ruleset_hash`] of the rule names the space was enumerated with.
+    pub ruleset_hash: u64,
+    /// Payload size in bytes.
+    pub payload_len: u64,
+}
+
+/// Read just the header of a snapshot file.
+pub fn peek_header(path: impl AsRef<Path>) -> Result<SnapshotMeta> {
+    // The header is tiny; read a bounded prefix instead of the whole file.
+    let mut f = std::fs::File::open(path.as_ref())?;
+    let mut buf = vec![0u8; 4096];
+    let mut filled = 0;
+    while filled < buf.len() {
+        let n = f.read(&mut buf[filled..])?;
+        if n == 0 {
+            break;
+        }
+        filled += n;
+    }
+    buf.truncate(filled);
+    let mut dec = Dec::new(&buf);
+    let (meta, _checksum) = decode_header(&mut dec)?;
+    Ok(meta)
+}
+
+// ---------------------------------------------------------------------
+// Encode
+// ---------------------------------------------------------------------
+
+/// Everything one snapshot persists, borrowed from the writing session.
+pub(crate) struct SnapshotParts<'a> {
+    pub workload_name: &'a str,
+    /// Printed workload source (fingerprinted into the header).
+    pub workload_src: String,
+    pub lowered: &'a RecExpr,
+    pub rule_names: Vec<String>,
+    pub egraph: &'a EGraph,
+    pub root: Id,
+    pub report: &'a RunnerReport,
+    pub cache: &'a ExtractCache,
+}
+
+/// Encode a snapshot into bytes (header + checksummed payload).
+pub(crate) fn encode_snapshot(parts: &SnapshotParts) -> Vec<u8> {
+    let mut p = Enc::default();
+    p.str(&parts.lowered.to_string());
+    p.u32(parts.rule_names.len() as u32);
+    for name in &parts.rule_names {
+        p.str(name);
+    }
+    encode_egraph(&mut p, parts.egraph);
+    p.id(parts.root);
+    encode_report(&mut p, parts.report);
+    encode_cache(&mut p, &parts.cache.export());
+    let payload = p.buf;
+
+    let mut out = Enc::default();
+    out.buf.extend_from_slice(MAGIC);
+    out.u32(FORMAT_VERSION);
+    out.str(parts.workload_name);
+    out.u64(workload_fingerprint(&parts.workload_src));
+    out.u64(ruleset_hash(&parts.rule_names));
+    out.u64(payload.len() as u64);
+    out.u64(fx_bytes(&payload));
+    out.buf.extend_from_slice(&payload);
+    out.buf
+}
+
+/// Encode + write to `path`, creating parent directories as needed.
+pub(crate) fn write_snapshot(path: impl AsRef<Path>, parts: &SnapshotParts) -> Result<()> {
+    let bytes = encode_snapshot(parts);
+    if let Some(dir) = path.as_ref().parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let mut f = std::fs::File::create(path.as_ref())?;
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+fn encode_egraph(e: &mut Enc, eg: &EGraph) {
+    let parts = eg.to_parts();
+    e.u64(parts.parents.len() as u64);
+    for &p in &parts.parents {
+        e.u32(p);
+    }
+    e.u64(parts.arena.len() as u64);
+    for n in &parts.arena {
+        e.node(n);
+    }
+    debug_assert_eq!(parts.classes.len(), parts.parents.len());
+    for class in &parts.classes {
+        match class {
+            None => e.u8(0),
+            Some(c) => {
+                e.u8(1);
+                e.id(c.id);
+                e.ty(&c.ty);
+                e.u32(c.nodes.len() as u32);
+                for n in &c.nodes {
+                    e.node(n);
+                }
+                e.u32(c.parents.len() as u32);
+                for &(arena_idx, pid) in &c.parents {
+                    e.u32(arena_idx);
+                    e.id(pid);
+                }
+            }
+        }
+    }
+    e.u32(parts.pending.len() as u32);
+    for &id in &parts.pending {
+        e.id(id);
+    }
+    e.u64(parts.n_unions as u64);
+    e.u8(parts.dirty as u8);
+    e.u32(parts.dirty_classes.len() as u32);
+    for &id in &parts.dirty_classes {
+        e.id(id);
+    }
+    e.u32(parts.merged_roots.len() as u32);
+    for &id in &parts.merged_roots {
+        e.id(id);
+    }
+    e.u64(parts.epoch);
+}
+
+fn encode_report(e: &mut Enc, r: &RunnerReport) {
+    e.u8(match r.stop {
+        StopReason::Saturated => 0,
+        StopReason::IterLimit => 1,
+        StopReason::NodeLimit => 2,
+        StopReason::TimeLimit => 3,
+    });
+    e.u64(r.nodes as u64);
+    e.u64(r.classes as u64);
+    e.f64(r.designs_lower_bound);
+    e.u64(r.elapsed.as_nanos().min(u64::MAX as u128) as u64);
+    e.u32(r.rule_names.len() as u32);
+    for n in &r.rule_names {
+        e.str(n);
+    }
+    // Per-iteration stats are growth-experiment data, not serving state:
+    // deliberately not persisted (loads restore an empty iteration list).
+}
+
+fn encode_cache(e: &mut Enc, export: &CacheExport) {
+    e.u64(export.epoch);
+    e.u32(export.tables.len() as u32);
+    for (kind, table) in &export.tables {
+        e.kind(kind);
+        // Deterministic entry order: snapshot bytes must not depend on
+        // HashMap iteration order.
+        let mut entries: Vec<(&Id, &(f64, Node))> = table.raw_entries().iter().collect();
+        entries.sort_by_key(|(id, _)| **id);
+        e.u64(entries.len() as u64);
+        for (id, (cost, node)) in entries {
+            e.id(*id);
+            e.f64(*cost);
+            e.node(node);
+        }
+    }
+    e.u32(export.sampled_order.len() as u32);
+    for kind in &export.sampled_order {
+        e.kind(kind);
+    }
+}
+
+/// Little-endian byte sink.
+#[derive(Default)]
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    fn id(&mut self, id: Id) {
+        self.u32(id.index() as u32);
+    }
+
+    fn shape(&mut self, s: &Shape) {
+        self.u32(s.0.len() as u32);
+        for &d in &s.0 {
+            self.u64(d as u64);
+        }
+    }
+
+    fn ty(&mut self, ty: &Ty) {
+        match ty {
+            Ty::Index => self.u8(0),
+            Ty::Tensor(shape) => {
+                self.u8(1);
+                self.shape(shape);
+            }
+            Ty::Engine(sig) => {
+                self.u8(2);
+                self.op(&sig.0);
+            }
+        }
+    }
+
+    /// Registry-driven operator encoding: spec name + schema'd attributes.
+    fn op(&mut self, op: &Op) {
+        let spec = op.spec();
+        self.str(spec.name);
+        let attrs = (spec.attrs_of)(op);
+        debug_assert_eq!(attrs.len(), spec.attrs.len(), "attr schema drift for {}", spec.name);
+        for attr in attrs {
+            match attr {
+                AttrVal::U(v) => self.u64(v as u64),
+                AttrVal::I(v) => self.u64(v as u64),
+                AttrVal::Sym(s) => self.str(s.as_str()),
+                AttrVal::Sh(s) => self.shape(&s),
+                AttrVal::Buf(b) => self.u8(match b {
+                    BufKind::Sram => 0,
+                    BufKind::Dram => 1,
+                }),
+            }
+        }
+    }
+
+    fn node(&mut self, n: &Node) {
+        self.op(&n.op);
+        self.u32(n.children.len() as u32);
+        for &c in &n.children {
+            self.id(c);
+        }
+    }
+
+    fn kind(&mut self, k: &CostKind) {
+        match k {
+            CostKind::Latency => self.u8(0),
+            CostKind::Area => self.u8(1),
+            CostKind::Size => self.u8(2),
+            CostKind::Sampled(seed) => {
+                self.u8(3);
+                self.u64(*seed);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Decode
+// ---------------------------------------------------------------------
+
+/// A decoded snapshot, ready for [`crate::session::Session::load_snapshot`]
+/// to validate against the live workload/rule libraries.
+pub(crate) struct LoadedSnapshot {
+    pub meta: SnapshotMeta,
+    pub lowered: RecExpr,
+    pub rule_names: Vec<String>,
+    pub egraph: EGraph,
+    pub root: Id,
+    pub report: RunnerReport,
+    pub cache: ExtractCache,
+}
+
+/// Read + decode a snapshot file.
+pub(crate) fn read_snapshot(path: impl AsRef<Path>) -> Result<LoadedSnapshot> {
+    let bytes = std::fs::read(path.as_ref())?;
+    decode_snapshot(&bytes)
+}
+
+/// Decode a snapshot from bytes. Every structural defect — truncation, bad
+/// magic, checksum mismatch, out-of-range ids, unknown operators — returns
+/// [`Error::SnapshotCorrupt`]; an unreadable format version returns
+/// [`Error::SnapshotVersion`].
+pub(crate) fn decode_snapshot(bytes: &[u8]) -> Result<LoadedSnapshot> {
+    let mut dec = Dec::new(bytes);
+    let (meta, checksum) = decode_header(&mut dec)?;
+    let payload = dec.take(meta.payload_len as usize, "payload")?;
+    if !dec.at_end() {
+        return Err(corrupt("trailing bytes after payload"));
+    }
+    if fx_bytes(payload) != checksum {
+        return Err(corrupt("payload checksum mismatch"));
+    }
+    let mut p = Dec::new(payload);
+    let lowered_text = p.str("lowered program")?;
+    let lowered = parse_expr(&lowered_text)
+        .map_err(|e| corrupt(&format!("stored lowered program does not parse: {e}")))?;
+    let n_rules = p.u32("rule count")?;
+    let mut rule_names = Vec::with_capacity(n_rules as usize);
+    for _ in 0..n_rules {
+        rule_names.push(p.str("rule name")?);
+    }
+    if ruleset_hash(&rule_names) != meta.ruleset_hash {
+        return Err(corrupt("rule-set hash does not match the stored rule names"));
+    }
+    let (egraph, n_classes) = decode_egraph(&mut p)?;
+    let root = p.class_id("root", n_classes)?;
+    let report = decode_report(&mut p)?;
+    let cache = decode_cache(&mut p, n_classes)?;
+    if !p.at_end() {
+        return Err(corrupt("trailing bytes inside payload"));
+    }
+    Ok(LoadedSnapshot { meta, lowered, rule_names, egraph, root, report, cache })
+}
+
+fn decode_header(dec: &mut Dec) -> Result<(SnapshotMeta, u64)> {
+    let magic = dec.take(MAGIC.len(), "magic")?;
+    if magic != MAGIC {
+        return Err(corrupt("bad magic (not a hwsplit snapshot)"));
+    }
+    let format_version = dec.u32("format version")?;
+    if format_version != FORMAT_VERSION {
+        return Err(Error::SnapshotVersion {
+            found: format_version,
+            supported: FORMAT_VERSION,
+        });
+    }
+    let workload = dec.str("workload name")?;
+    let workload_fingerprint = dec.u64("workload fingerprint")?;
+    let ruleset_hash = dec.u64("rule-set hash")?;
+    let payload_len = dec.u64("payload length")?;
+    let checksum = dec.u64("payload checksum")?;
+    Ok((
+        SnapshotMeta { format_version, workload, workload_fingerprint, ruleset_hash, payload_len },
+        checksum,
+    ))
+}
+
+fn decode_egraph(p: &mut Dec) -> Result<(EGraph, usize)> {
+    let n = p.u64("class count")? as usize;
+    let mut parents = Vec::with_capacity(n);
+    for _ in 0..n {
+        let par = p.u32("union-find parent")?;
+        if par as usize >= n {
+            return Err(corrupt("union-find parent out of range"));
+        }
+        parents.push(par);
+    }
+    let arena_len = p.u64("arena length")? as usize;
+    let mut arena = Vec::with_capacity(arena_len);
+    for _ in 0..arena_len {
+        arena.push(p.node("arena node", n)?);
+    }
+    let mut classes: Vec<Option<EClass>> = Vec::with_capacity(n);
+    for slot in 0..n {
+        if p.u8("class presence")? == 0 {
+            classes.push(None);
+            continue;
+        }
+        let id = p.class_id("class id", n)?;
+        if id.index() != slot {
+            return Err(corrupt("class id does not match its slot"));
+        }
+        let ty = p.ty()?;
+        let n_nodes = p.u32("class node count")?;
+        let mut nodes = Vec::with_capacity(n_nodes as usize);
+        for _ in 0..n_nodes {
+            nodes.push(p.node("class node", n)?);
+        }
+        let n_parents = p.u32("class parent count")?;
+        let mut cparents = Vec::with_capacity(n_parents as usize);
+        for _ in 0..n_parents {
+            let arena_idx = p.u32("parent arena index")?;
+            if arena_idx as usize >= arena_len {
+                return Err(corrupt("parent arena index out of range"));
+            }
+            let pid = p.class_id("parent class id", n)?;
+            cparents.push((arena_idx, pid));
+        }
+        classes.push(Some(EClass { id, nodes, parents: cparents, ty }));
+    }
+    let n_pending = p.u32("pending count")?;
+    let mut pending = Vec::with_capacity(n_pending as usize);
+    for _ in 0..n_pending {
+        pending.push(p.class_id("pending id", n)?);
+    }
+    let n_unions = p.u64("union count")? as usize;
+    let dirty = p.u8("dirty flag")? != 0;
+    let n_dirty = p.u32("dirty-class count")?;
+    let mut dirty_classes = Vec::with_capacity(n_dirty as usize);
+    for _ in 0..n_dirty {
+        dirty_classes.push(p.class_id("dirty class id", n)?);
+    }
+    let n_merged = p.u32("merged-root count")?;
+    let mut merged_roots = Vec::with_capacity(n_merged as usize);
+    for _ in 0..n_merged {
+        merged_roots.push(p.class_id("merged root id", n)?);
+    }
+    let epoch = p.u64("epoch")?;
+    let eg = EGraph::from_parts(EGraphParts {
+        parents,
+        classes,
+        arena,
+        pending,
+        n_unions,
+        dirty,
+        dirty_classes,
+        merged_roots,
+        epoch,
+    });
+    Ok((eg, n))
+}
+
+fn decode_report(p: &mut Dec) -> Result<RunnerReport> {
+    let stop = match p.u8("stop reason")? {
+        0 => StopReason::Saturated,
+        1 => StopReason::IterLimit,
+        2 => StopReason::NodeLimit,
+        3 => StopReason::TimeLimit,
+        _ => return Err(corrupt("unknown stop reason")),
+    };
+    let nodes = p.u64("report nodes")? as usize;
+    let classes = p.u64("report classes")? as usize;
+    let designs_lower_bound = p.f64("designs lower bound")?;
+    let elapsed = Duration::from_nanos(p.u64("report elapsed")?);
+    let n_rules = p.u32("report rule count")?;
+    let mut rule_names = Vec::with_capacity(n_rules as usize);
+    for _ in 0..n_rules {
+        rule_names.push(p.str("report rule name")?);
+    }
+    Ok(RunnerReport {
+        stop,
+        iterations: Vec::new(),
+        nodes,
+        classes,
+        designs_lower_bound,
+        elapsed,
+        rule_names,
+    })
+}
+
+fn decode_cache(p: &mut Dec, n_classes: usize) -> Result<ExtractCache> {
+    let epoch = p.u64("cache epoch")?;
+    let n_tables = p.u32("cache table count")?;
+    let mut tables = Vec::with_capacity(n_tables as usize);
+    for _ in 0..n_tables {
+        let kind = p.kind()?;
+        let n_entries = p.u64("cost-table entry count")? as usize;
+        let mut best: FxHashMap<Id, (f64, Node)> =
+            FxHashMap::with_capacity_and_hasher(n_entries, Default::default());
+        for _ in 0..n_entries {
+            let id = p.class_id("cost-table class id", n_classes)?;
+            let cost = p.f64("cost-table cost")?;
+            let node = p.node("cost-table node", n_classes)?;
+            best.insert(id, (cost, node));
+        }
+        tables.push((kind, Arc::new(CostTable::from_raw(best))));
+    }
+    let n_order = p.u32("sampled-order count")?;
+    let mut sampled_order = Vec::with_capacity(n_order as usize);
+    for _ in 0..n_order {
+        sampled_order.push(p.kind()?);
+    }
+    Ok(ExtractCache::import(CacheExport { epoch, tables, sampled_order }))
+}
+
+fn corrupt(msg: &str) -> Error {
+    Error::SnapshotCorrupt(msg.to_string())
+}
+
+/// Bounds-checked little-endian byte source: every read names what it was
+/// reading, so truncation errors say *where* the file ran out.
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Dec { buf, pos: 0 }
+    }
+
+    fn at_end(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).ok_or_else(|| corrupt("length overflow"))?;
+        if end > self.buf.len() {
+            return Err(corrupt(&format!("truncated while reading {what}")));
+        }
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self, what: &str) -> Result<f64> {
+        Ok(f64::from_bits(self.u64(what)?))
+    }
+
+    fn str(&mut self, what: &str) -> Result<String> {
+        let len = self.u32(what)? as usize;
+        let bytes = self.take(len, what)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| corrupt(&format!("non-UTF-8 string for {what}")))
+    }
+
+    /// An [`Id`] that must index into a graph of `bound` classes.
+    fn class_id(&mut self, what: &str, bound: usize) -> Result<Id> {
+        let raw = self.u32(what)?;
+        if raw as usize >= bound {
+            return Err(corrupt(&format!("{what} out of range")));
+        }
+        Ok(Id::from_index(raw as usize))
+    }
+
+    fn ty(&mut self) -> Result<Ty> {
+        Ok(match self.u8("type tag")? {
+            0 => Ty::Index,
+            1 => Ty::Tensor(self.shape()?),
+            2 => Ty::Engine(EngineSig(self.op()?)),
+            _ => return Err(corrupt("unknown type tag")),
+        })
+    }
+
+    fn shape(&mut self) -> Result<Shape> {
+        let rank = self.u32("shape rank")? as usize;
+        if rank > 64 {
+            return Err(corrupt("implausible shape rank"));
+        }
+        let mut dims = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            dims.push(self.u64("shape dim")? as usize);
+        }
+        Ok(Shape(dims))
+    }
+
+    /// Registry-driven operator decoding: look the spec up by name, read
+    /// attributes per its schema, rebuild through `from_attrs`.
+    fn op(&mut self) -> Result<Op> {
+        let name = self.str("op name")?;
+        let spec = spec::by_name(&name)
+            .ok_or_else(|| corrupt(&format!("unknown operator '{name}'")))?;
+        let mut attrs = Vec::with_capacity(spec.attrs.len());
+        for &(_, kind) in spec.attrs {
+            attrs.push(match kind {
+                AttrKind::U => AttrVal::U(self.u64("op attr")? as usize),
+                AttrKind::I => AttrVal::I(self.u64("op attr")? as i64),
+                AttrKind::Sym => AttrVal::Sym(Symbol::new(&self.str("op attr")?)),
+                AttrKind::Sh => AttrVal::Sh(self.shape()?),
+                AttrKind::Buf => AttrVal::Buf(match self.u8("op attr")? {
+                    0 => BufKind::Sram,
+                    1 => BufKind::Dram,
+                    _ => return Err(corrupt("unknown buffer kind")),
+                }),
+            });
+        }
+        (spec.from_attrs)(&attrs)
+            .ok_or_else(|| corrupt(&format!("invalid attributes for operator '{name}'")))
+    }
+
+    fn node(&mut self, what: &str, bound: usize) -> Result<Node> {
+        let op = self.op()?;
+        let n = self.u32(what)? as usize;
+        if op.arity().map_or(false, |a| a != n) {
+            return Err(corrupt(&format!("arity mismatch for {what}")));
+        }
+        let mut children = Vec::with_capacity(n);
+        for _ in 0..n {
+            children.push(self.class_id(what, bound)?);
+        }
+        Ok(Node::new(op, children))
+    }
+
+    fn kind(&mut self) -> Result<CostKind> {
+        Ok(match self.u8("cost kind")? {
+            0 => CostKind::Latency,
+            1 => CostKind::Area,
+            2 => CostKind::Size,
+            3 => CostKind::Sampled(self.u64("sampled seed")?),
+            _ => return Err(corrupt("unknown cost kind")),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::egraph::Runner;
+    use crate::rewrites;
+
+    fn snapshot_bytes() -> Vec<u8> {
+        let expr = parse_expr("(invoke-relu (relu-engine 128) (input x [128]))").unwrap();
+        let mut runner = Runner::new(expr.clone(), rewrites::fig2_rules());
+        let report = runner.run(6);
+        let cache = ExtractCache::new();
+        // Warm a few tables so the cache section is non-trivial.
+        let opts = crate::extract::ExtractOptions { samples: 4, seed: 0, workers: 2 };
+        crate::extract::extract_designs(&runner.egraph, runner.root, &opts, &cache);
+        let rule_names: Vec<String> =
+            rewrites::fig2_rules().iter().map(|r| r.name.clone()).collect();
+        encode_snapshot(&SnapshotParts {
+            workload_name: "fig2",
+            workload_src: expr.to_string(),
+            lowered: &expr,
+            rule_names,
+            egraph: &runner.egraph,
+            root: runner.root,
+            report: &report,
+            cache: &cache,
+        })
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_preserves_graph_and_cache() {
+        let bytes = snapshot_bytes();
+        let snap = decode_snapshot(&bytes).expect("roundtrip decodes");
+        assert_eq!(snap.meta.workload, "fig2");
+        assert_eq!(snap.meta.format_version, FORMAT_VERSION);
+        snap.egraph.check_invariants();
+        // Cache carries the graph epoch, so it is warm against the loaded
+        // graph: a repeat extraction pays zero fixpoint rebuilds.
+        let opts = crate::extract::ExtractOptions { samples: 4, seed: 0, workers: 2 };
+        let set =
+            crate::extract::extract_designs(&snap.egraph, snap.root, &opts, &snap.cache);
+        assert_eq!(set.memo_misses, 0, "loaded cache must be warm");
+        assert_eq!(set.memo_hits, 6);
+    }
+
+    #[test]
+    fn encoding_is_deterministic() {
+        // Stable bytes: HashMap iteration order must not leak into the
+        // file (cost tables and entries are explicitly ordered).
+        assert_eq!(snapshot_bytes(), snapshot_bytes());
+    }
+
+    #[test]
+    fn bad_magic_is_corrupt_not_panic() {
+        let mut bytes = snapshot_bytes();
+        bytes[0] = b'X';
+        assert!(matches!(decode_snapshot(&bytes), Err(Error::SnapshotCorrupt(_))));
+    }
+
+    #[test]
+    fn future_version_is_a_version_error() {
+        let mut bytes = snapshot_bytes();
+        bytes[8..12].copy_from_slice(&99u32.to_le_bytes());
+        match decode_snapshot(&bytes) {
+            Err(Error::SnapshotVersion { found: 99, supported }) => {
+                assert_eq!(supported, FORMAT_VERSION)
+            }
+            other => panic!("expected SnapshotVersion, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncation_and_bitflips_are_corrupt_not_panic() {
+        let bytes = snapshot_bytes();
+        // Truncations at a spread of byte offsets.
+        for cut in [0, 4, 11, bytes.len() / 2, bytes.len() - 1] {
+            match decode_snapshot(&bytes[..cut]) {
+                Err(Error::SnapshotCorrupt(_)) => {}
+                other => panic!("cut at {cut}: expected SnapshotCorrupt, got {other:?}"),
+            }
+        }
+        // A payload bitflip must fail the checksum.
+        let mut flipped = bytes.clone();
+        let last = flipped.len() - 1;
+        flipped[last] ^= 0x40;
+        assert!(matches!(decode_snapshot(&flipped), Err(Error::SnapshotCorrupt(_))));
+    }
+
+    #[test]
+    fn peek_header_reads_meta_without_payload() {
+        let bytes = snapshot_bytes();
+        let dir = std::env::temp_dir().join("hwsplit_persist_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("peek.hws");
+        std::fs::write(&path, &bytes).unwrap();
+        let meta = peek_header(&path).unwrap();
+        assert_eq!(meta.workload, "fig2");
+        assert!(meta.payload_len > 0);
+        let _ = std::fs::remove_file(&path);
+    }
+}

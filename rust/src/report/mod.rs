@@ -92,7 +92,9 @@ pub enum JsonValue {
 }
 
 impl JsonValue {
-    fn render(&self) -> String {
+    /// Render as a JSON literal (also used by the serving layer's
+    /// hand-rolled response writer).
+    pub fn render(&self) -> String {
         match self {
             JsonValue::Str(s) => {
                 let mut out = String::with_capacity(s.len() + 2);

@@ -1,0 +1,532 @@
+//! `hwsplit serve` — a long-running daemon answering design-space queries
+//! from persisted snapshots.
+//!
+//! This is the paper's "enumerate once, query many" economics pushed past
+//! process lifetime: saturation happens offline (`hwsplit explore
+//! --snapshot-out`), and the daemon [`Session::load_snapshot`]s the result
+//! — enumerated *and* warm — then serves concurrent clients over
+//! line-delimited JSON on TCP (std-only; no HTTP framework in the
+//! zero-dependency build).
+//!
+//! ## Protocol
+//!
+//! One request per line, one JSON object per response line:
+//!
+//! ```text
+//! → {"cmd":"query","workload":"relu128","objective":"latency","samples":16,"seed":0}
+//! ← {"ok":true,"workload":"relu128","objective":"latency","designs":12,
+//!    "frontier":3,"best_area":128,"best_latency":34.1,"memo_hits":18,
+//!    "memo_misses":0,"latency_ms":1.42}
+//! → {"cmd":"stats"}
+//! ← {"ok":true,"served":9,"errors":1,"queries_per_sec":310.2,
+//!    "p50_ms":1.4,"p99_ms":6.0,"cached_sessions":2}
+//! → {"cmd":"ping"}        ← {"ok":true,"pong":true}
+//! → {"cmd":"shutdown"}    ← {"ok":true,"shutting_down":true}
+//! ```
+//!
+//! ## Architecture
+//!
+//! * [`SessionStore`] — lazily loads one [`Session`] per snapshot file and
+//!   bounds residency with an LRU (`--max-sessions`): serving many
+//!   workloads from one daemon without holding every e-graph at once.
+//! * One thread per connection; each request fans its extraction over the
+//!   session's worker pool through [`Session::answer_query`] (`&self`-only
+//!   — many threads share one `Arc<Session>`, cost-table fixpoints are
+//!   shared through the session memo).
+//! * **Error isolation**: a malformed line or failed query answers
+//!   `{"ok":false,"error":...}` on that connection and affects nothing
+//!   else; connection I/O errors kill only their own thread.
+//! * [`ServerStats`] — per-request latency + throughput counters behind
+//!   atomics, drained by `{"cmd":"stats"}` (and by the serving bench).
+//!
+//! [`Session`]: crate::session::Session
+//! [`Session::load_snapshot`]: crate::session::Session::load_snapshot
+//! [`Session::answer_query`]: crate::session::Session::answer_query
+
+pub mod json;
+
+use crate::error::{Error, Result};
+use crate::persist;
+use crate::report::JsonValue;
+use crate::session::{Evaluation, Objective, Query, Session};
+use json::Json;
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Multi-workload session residency: a registry of snapshot files (one
+/// per workload, discovered via [`persist::peek_header`] without decoding
+/// payloads) and an LRU-bounded cache of loaded [`Session`]s. `get` loads
+/// lazily outside the lock; the cache never holds more than `max_sessions`
+/// entries (the serving tests pin this).
+pub struct SessionStore {
+    registry: HashMap<String, PathBuf>,
+    max_sessions: usize,
+    inner: Mutex<StoreInner>,
+}
+
+#[derive(Default)]
+struct StoreInner {
+    sessions: HashMap<String, Arc<Session>>,
+    /// Workload names, least-recently-used first.
+    lru: VecDeque<String>,
+}
+
+impl SessionStore {
+    pub fn new(max_sessions: usize) -> Self {
+        SessionStore {
+            registry: HashMap::new(),
+            max_sessions: max_sessions.max(1),
+            inner: Mutex::new(StoreInner::default()),
+        }
+    }
+
+    /// Register a snapshot file, keyed by the workload its header names.
+    /// Cheap (header peek only); returns the workload name.
+    pub fn register(&mut self, path: impl Into<PathBuf>) -> Result<String> {
+        let path = path.into();
+        let meta = persist::peek_header(&path)?;
+        self.registry.insert(meta.workload.clone(), path);
+        Ok(meta.workload)
+    }
+
+    /// Registered workload names (sorted, for stable output).
+    pub fn workloads(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.registry.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// Number of sessions currently resident.
+    pub fn cached_count(&self) -> usize {
+        self.inner.lock().unwrap().sessions.len()
+    }
+
+    /// Seed the cache with an already-built session (CLI pre-warm, tests).
+    /// Subject to the same LRU bound as lazy loads.
+    pub fn insert_session(&self, workload: &str, session: Arc<Session>) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.sessions.insert(workload.to_string(), session);
+        Self::touch(&mut inner, workload);
+        self.evict(&mut inner);
+    }
+
+    /// The session for `workload`, loading its snapshot on first use.
+    /// Snapshot decode runs *outside* the store lock, so a cold workload
+    /// doesn't stall queries against resident ones; a racing duplicate
+    /// load resolves first-insert-wins.
+    pub fn get(&self, workload: &str) -> Result<Arc<Session>> {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if let Some(s) = inner.sessions.get(workload).cloned() {
+                Self::touch(&mut inner, workload);
+                return Ok(s);
+            }
+        }
+        let path = self
+            .registry
+            .get(workload)
+            .ok_or_else(|| Error::UnknownWorkload(workload.to_string()))?;
+        let loaded = Arc::new(Session::load_snapshot(path)?);
+        let mut inner = self.inner.lock().unwrap();
+        let session =
+            inner.sessions.entry(workload.to_string()).or_insert_with(|| loaded).clone();
+        Self::touch(&mut inner, workload);
+        self.evict(&mut inner);
+        Ok(session)
+    }
+
+    fn touch(inner: &mut StoreInner, workload: &str) {
+        inner.lru.retain(|n| n != workload);
+        inner.lru.push_back(workload.to_string());
+    }
+
+    fn evict(&self, inner: &mut StoreInner) {
+        while inner.sessions.len() > self.max_sessions {
+            match inner.lru.pop_front() {
+                Some(victim) => {
+                    inner.sessions.remove(&victim);
+                }
+                None => break, // sessions not in the LRU can't be chosen
+            }
+        }
+    }
+}
+
+/// Lock-light serving counters: request count and error count as atomics,
+/// per-request latencies appended under a mutex (drained by `stats`
+/// requests and the serving bench).
+pub struct ServerStats {
+    served: AtomicUsize,
+    errors: AtomicUsize,
+    latencies_ms: Mutex<Vec<f64>>,
+    started: Instant,
+}
+
+impl Default for ServerStats {
+    fn default() -> Self {
+        ServerStats::new()
+    }
+}
+
+impl ServerStats {
+    pub fn new() -> Self {
+        ServerStats {
+            served: AtomicUsize::new(0),
+            errors: AtomicUsize::new(0),
+            latencies_ms: Mutex::new(Vec::new()),
+            started: Instant::now(),
+        }
+    }
+
+    /// Record one successfully answered query.
+    pub fn record(&self, latency_ms: f64) {
+        self.served.fetch_add(1, Ordering::Relaxed);
+        self.latencies_ms.lock().unwrap().push(latency_ms);
+    }
+
+    /// Record one failed request (parse error, unknown workload, …).
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn served(&self) -> usize {
+        self.served.load(Ordering::Relaxed)
+    }
+
+    pub fn errors(&self) -> usize {
+        self.errors.load(Ordering::Relaxed)
+    }
+
+    /// Throughput + latency percentiles since construction.
+    pub fn summary(&self) -> StatsSummary {
+        let mut lat = self.latencies_ms.lock().unwrap().clone();
+        lat.sort_by(f64::total_cmp);
+        let elapsed = self.started.elapsed().as_secs_f64();
+        let served = self.served();
+        StatsSummary {
+            served,
+            errors: self.errors(),
+            queries_per_sec: if elapsed > 0.0 { served as f64 / elapsed } else { 0.0 },
+            p50_ms: percentile(&lat, 50.0),
+            p99_ms: percentile(&lat, 99.0),
+        }
+    }
+}
+
+/// One point-in-time view of [`ServerStats`].
+#[derive(Debug, Clone, Copy)]
+pub struct StatsSummary {
+    pub served: usize,
+    pub errors: usize,
+    pub queries_per_sec: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice (`NaN` when
+/// empty). Shared by the stats endpoint and the serving bench.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// The TCP daemon: accept loop + one handler thread per connection.
+pub struct Server {
+    store: Arc<SessionStore>,
+    stats: Arc<ServerStats>,
+    listener: TcpListener,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Bind to `addr` (e.g. `"127.0.0.1:7878"`; port 0 picks a free port —
+    /// the tests do this).
+    pub fn bind(addr: &str, store: Arc<SessionStore>) -> Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        Ok(Server {
+            store,
+            stats: Arc::new(ServerStats::new()),
+            listener,
+            shutdown: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    pub fn stats(&self) -> Arc<ServerStats> {
+        self.stats.clone()
+    }
+
+    /// Ask the accept loop to stop, nudging it out of `accept()` with a
+    /// throwaway connection. Callable from any thread.
+    pub fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Ok(addr) = self.listener.local_addr() {
+            // Ignore failure: if the listener is already gone, done anyway.
+            let _ = TcpStream::connect(addr);
+        }
+    }
+
+    /// Run the accept loop until [`Server::request_shutdown`] (or a client
+    /// sends `{"cmd":"shutdown"}`). Handler threads are detached; each owns
+    /// exactly one connection, so a panic or I/O error on one client never
+    /// touches another.
+    pub fn run(&self) -> Result<()> {
+        let addr = self.listener.local_addr()?;
+        for stream in self.listener.incoming() {
+            if self.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match stream {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            let store = self.store.clone();
+            let stats = self.stats.clone();
+            let shutdown = self.shutdown.clone();
+            std::thread::spawn(move || {
+                let _ = handle_client(stream, &store, &stats, &shutdown, addr);
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Serve one connection: read line-delimited requests until EOF (or a
+/// shutdown request). Request-level failures answer an error object and
+/// keep the connection; only I/O failures end it.
+fn handle_client(
+    stream: TcpStream,
+    store: &SessionStore,
+    stats: &ServerStats,
+    shutdown: &AtomicBool,
+    listener_addr: SocketAddr,
+) -> std::io::Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let (response, stop) = handle_line(trimmed, store, stats);
+        writer.write_all(response.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        if stop {
+            shutdown.store(true, Ordering::SeqCst);
+            let _ = TcpStream::connect(listener_addr); // nudge the acceptor
+            return Ok(());
+        }
+    }
+}
+
+/// Answer one request line. Returns the JSON response and whether this
+/// request asked the daemon to shut down. Never panics on bad input —
+/// every failure becomes `{"ok":false,...}` (and counts as an error).
+/// Exposed for the CLI's one-shot mode and the tests.
+pub fn handle_line(line: &str, store: &SessionStore, stats: &ServerStats) -> (String, bool) {
+    match handle_request(line, store, stats) {
+        Ok(reply) => reply,
+        Err(e) => {
+            stats.record_error();
+            (error_response(&e.to_string()), false)
+        }
+    }
+}
+
+fn handle_request(
+    line: &str,
+    store: &SessionStore,
+    stats: &ServerStats,
+) -> Result<(String, bool)> {
+    let req = Json::parse(line).map_err(|e| Error::InvalidConfig(format!("bad request: {e}")))?;
+    let cmd = req.get("cmd").and_then(Json::as_str).unwrap_or("query");
+    match cmd {
+        "ping" => Ok(("{\"ok\":true,\"pong\":true}".to_string(), false)),
+        "shutdown" => Ok(("{\"ok\":true,\"shutting_down\":true}".to_string(), true)),
+        "stats" => {
+            let s = stats.summary();
+            let fields = [
+                ("served", JsonValue::Int(s.served as i64)),
+                ("errors", JsonValue::Int(s.errors as i64)),
+                ("queries_per_sec", JsonValue::Num(s.queries_per_sec)),
+                ("p50_ms", JsonValue::Num(s.p50_ms)),
+                ("p99_ms", JsonValue::Num(s.p99_ms)),
+                ("cached_sessions", JsonValue::Int(store.cached_count() as i64)),
+                ("workloads", JsonValue::Str(store.workloads().join(","))),
+            ];
+            Ok((ok_response(&fields), false))
+        }
+        "query" => {
+            let workload = req
+                .get("workload")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::InvalidConfig("query needs a 'workload' field".into()))?;
+            let objective: Objective = req
+                .get("objective")
+                .and_then(Json::as_str)
+                .unwrap_or("latency")
+                .parse()?;
+            let samples = req
+                .get("samples")
+                .map(|v| {
+                    v.as_u64()
+                        .ok_or_else(|| Error::InvalidConfig("'samples' must be a non-negative integer".into()))
+                })
+                .transpose()?
+                .unwrap_or(16) as usize;
+            let seed = req
+                .get("seed")
+                .map(|v| {
+                    v.as_u64()
+                        .ok_or_else(|| Error::InvalidConfig("'seed' must be a non-negative integer".into()))
+                })
+                .transpose()?
+                .unwrap_or(0);
+            let session = store.get(workload)?;
+            let t0 = Instant::now();
+            let q = Query::new().objective(objective).samples(samples).seed(seed);
+            let ev = session.answer_query(&q)?;
+            let latency_ms = t0.elapsed().as_secs_f64() * 1e3;
+            stats.record(latency_ms);
+            Ok((query_response(&ev, latency_ms), false))
+        }
+        other => Err(Error::InvalidConfig(format!(
+            "unknown cmd '{other}' (expected query | stats | ping | shutdown)"
+        ))),
+    }
+}
+
+fn objective_name(o: Objective) -> &'static str {
+    match o {
+        Objective::Latency => "latency",
+        Objective::Area => "area",
+        Objective::Balanced(_) => "balanced",
+    }
+}
+
+fn query_response(ev: &Evaluation, latency_ms: f64) -> String {
+    let best = ev.best();
+    let fields = [
+        ("workload", JsonValue::Str(ev.workload.clone())),
+        ("objective", JsonValue::Str(objective_name(ev.objective).to_string())),
+        ("designs", JsonValue::Int(ev.designs.len() as i64)),
+        ("frontier", JsonValue::Int(ev.frontier.len() as i64)),
+        ("best_area", JsonValue::Num(best.map_or(f64::NAN, |d| d.point.cost.area))),
+        ("best_latency", JsonValue::Num(best.map_or(f64::NAN, |d| d.point.cost.latency))),
+        ("memo_hits", JsonValue::Int(ev.extract.memo_hits as i64)),
+        ("memo_misses", JsonValue::Int(ev.extract.memo_misses as i64)),
+        ("latency_ms", JsonValue::Num(latency_ms)),
+    ];
+    ok_response(&fields)
+}
+
+/// `{"ok":true, <fields...>}` through the report emitter's escaping.
+fn ok_response(fields: &[(&str, JsonValue)]) -> String {
+    let mut out = String::from("{\"ok\":true");
+    for (k, v) in fields {
+        out.push(',');
+        out.push_str(&JsonValue::Str(k.to_string()).render());
+        out.push(':');
+        out.push_str(&v.render());
+    }
+    out.push('}');
+    out
+}
+
+fn error_response(msg: &str) -> String {
+    format!("{{\"ok\":false,\"error\":{}}}", JsonValue::Str(msg.to_string()).render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::relay::workloads;
+    use crate::rewrites::RuleSet;
+
+    fn tiny_session() -> Arc<Session> {
+        let mut s = Session::builder()
+            .workload(workloads::relu128())
+            .rules(RuleSet::Fig2)
+            .iters(4)
+            .workers(2)
+            .build()
+            .unwrap();
+        s.enumerate().unwrap();
+        Arc::new(s)
+    }
+
+    #[test]
+    fn handle_line_answers_query_and_isolates_errors() {
+        let store = SessionStore::new(4);
+        store.insert_session("relu128", tiny_session());
+        let stats = ServerStats::new();
+        // Malformed line: error response, connection-level state untouched.
+        let (bad, stop) = handle_line("not json", &store, &stats);
+        assert!(bad.starts_with("{\"ok\":false"));
+        assert!(!stop);
+        assert_eq!(stats.errors(), 1);
+        // Unknown workload: typed error surfaced, not a panic.
+        let (unknown, _) = handle_line(r#"{"cmd":"query","workload":"nope"}"#, &store, &stats);
+        assert!(unknown.contains("unknown workload"), "{unknown}");
+        // Valid query answers with design counts.
+        let (good, stop) =
+            handle_line(r#"{"workload":"relu128","samples":4,"seed":1}"#, &store, &stats);
+        assert!(!stop);
+        let parsed = Json::parse(&good).expect("response is valid JSON");
+        assert_eq!(parsed.get("ok").and_then(Json::as_bool), Some(true));
+        assert!(parsed.get("designs").and_then(Json::as_u64).unwrap() >= 2);
+        assert_eq!(parsed.get("workload").and_then(Json::as_str), Some("relu128"));
+        assert_eq!(stats.served(), 1);
+        // Stats reflect the traffic.
+        let (stats_resp, _) = handle_line(r#"{"cmd":"stats"}"#, &store, &stats);
+        let s = Json::parse(&stats_resp).unwrap();
+        assert_eq!(s.get("served").and_then(Json::as_u64), Some(1));
+        assert_eq!(s.get("errors").and_then(Json::as_u64), Some(2));
+    }
+
+    #[test]
+    fn shutdown_command_signals_stop() {
+        let store = SessionStore::new(1);
+        let stats = ServerStats::new();
+        let (resp, stop) = handle_line(r#"{"cmd":"shutdown"}"#, &store, &stats);
+        assert!(stop);
+        assert!(resp.contains("shutting_down"));
+    }
+
+    #[test]
+    fn lru_store_never_exceeds_bound() {
+        let store = SessionStore::new(2);
+        store.insert_session("a", tiny_session());
+        store.insert_session("b", tiny_session());
+        store.insert_session("c", tiny_session());
+        assert_eq!(store.cached_count(), 2);
+        // "a" was least recently used — evicted first.
+        assert!(store.get("a").is_err(), "evicted and unregistered: must miss");
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 50.0), 3.0);
+        assert_eq!(percentile(&v, 100.0), 5.0);
+        assert!(percentile(&[], 50.0).is_nan());
+    }
+}

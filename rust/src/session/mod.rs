@@ -74,7 +74,9 @@ use crate::ir::RecExpr;
 use crate::lower::{lower, LowerOptions};
 pub use crate::par::parallel_map;
 use crate::par::default_workers;
+use crate::persist;
 use crate::relay::Workload;
+use std::path::Path;
 
 /// The enumerated design space: the e-graph after rewriting, its root
 /// class, and the growth report. Shared read-only by every query.
@@ -422,6 +424,122 @@ impl Session {
             baseline: base,
             extract,
         }
+    }
+
+    /// The cached enumeration, if it has run (or was loaded from a
+    /// snapshot). Serving and benches use this to reach the shared
+    /// read-only e-graph without forcing enumeration.
+    pub fn enumeration(&self) -> Option<&Enumeration> {
+        self.enumerated.as_ref()
+    }
+
+    /// Answer one query through `&self` — the serving path. Requires an
+    /// already-enumerated session ([`Session::enumerate`] or
+    /// [`Session::load_snapshot`]): with enumeration done, every remaining
+    /// phase (extraction, analysis, evaluation, ranking) only *reads* the
+    /// e-graph, so an `Arc<Session>` can answer queries from many threads
+    /// concurrently — cost-table fixpoints are shared through the
+    /// internally-synchronized session memo. Results are identical to
+    /// [`Session::query`].
+    pub fn answer_query(&self, q: &Query) -> Result<Evaluation, Error> {
+        let en = self.enumerated.as_ref().ok_or_else(|| {
+            Error::InvalidConfig(
+                "answer_query needs an enumerated session: call enumerate() first \
+                 or load a snapshot"
+                    .into(),
+            )
+        })?;
+        let t0 = std::time::Instant::now();
+        let opts =
+            ExtractOptions { samples: q.samples, seed: q.seed, workers: self.extract_workers };
+        let set = extract_designs(&en.egraph, en.root, &opts, &self.extract_cache);
+        vlog("extract", t0);
+        self.answer(q, &set)
+    }
+
+    /// Persist the enumerated design space (enumerating first if needed):
+    /// the saturated e-graph with its epoch, the growth report, and every
+    /// cost-table fixpoint currently memoized — so a loading process starts
+    /// not just enumerated but *warm*. See [`crate::persist`] for the
+    /// format and [`Session::load_snapshot`] for the inverse.
+    pub fn save_snapshot(&mut self, path: impl AsRef<Path>) -> Result<(), Error> {
+        self.enumerate()?;
+        let en = self.enumerated.as_ref().expect("just enumerated");
+        persist::write_snapshot(
+            path,
+            &persist::SnapshotParts {
+                workload_name: self.workload.name,
+                workload_src: self.workload.expr.to_string(),
+                lowered: &self.lowered,
+                rule_names: self.rules.iter().map(|r| r.name.clone()).collect(),
+                egraph: &en.egraph,
+                root: en.root,
+                report: &en.report,
+                cache: &self.extract_cache,
+            },
+        )
+    }
+
+    /// Load a session from a snapshot written by [`Session::save_snapshot`].
+    ///
+    /// The loaded session is enumerated (queries run immediately, zero
+    /// re-saturation — [`Session::enumeration_count`] stays 0, which the
+    /// round-trip tests pin) and *warm*: the persisted cost tables carry
+    /// the graph epoch, so a query the writing process already answered
+    /// pays zero fixpoint rebuilds here too, and answers **bit-identically**
+    /// (sampled-extraction noise is process-stable by construction).
+    ///
+    /// Validation: the workload must exist in this build's library
+    /// ([`Error::UnknownWorkload`]) with an unchanged definition and every
+    /// persisted rule name must resolve ([`Error::UnknownRule`]) — a
+    /// snapshot from a drifted build is rejected, not misanswered.
+    pub fn load_snapshot(path: impl AsRef<Path>) -> Result<Session, Error> {
+        let snap = persist::read_snapshot(path)?;
+        let workload = crate::relay::workload_by_name(&snap.meta.workload)
+            .ok_or_else(|| Error::UnknownWorkload(snap.meta.workload.clone()))?;
+        if persist::workload_fingerprint(&workload.expr.to_string())
+            != snap.meta.workload_fingerprint
+        {
+            return Err(Error::SnapshotCorrupt(format!(
+                "snapshot was written against a different definition of workload '{}'",
+                workload.name
+            )));
+        }
+        let names: Vec<&str> = snap.rule_names.iter().map(|s| s.as_str()).collect();
+        let rules = crate::rewrites::rules_by_names(&names)?;
+        let workers = default_workers().max(1);
+        let limits = RunnerLimits { track_designs: false, ..Default::default() };
+        Ok(Session {
+            workload,
+            lowered: snap.lowered,
+            rules,
+            iters: 0, // enumeration already ran in the writing process
+            workers,
+            search_workers: workers,
+            extract_workers: workers,
+            scheduler: None,
+            limits,
+            enumerated: Some(Enumeration {
+                egraph: snap.egraph,
+                root: snap.root,
+                report: snap.report,
+            }),
+            // Zero: this process never re-saturates (the tests pin it).
+            enumerations: 0,
+            extract_cache: snap.cache,
+        })
+    }
+
+    /// Resize the evaluation worker pool (snapshot loads default to the
+    /// machine's parallelism; the CLI overrides through this).
+    pub fn set_workers(&mut self, workers: usize) {
+        self.workers = workers.max(1);
+    }
+
+    /// Resize the extraction fan-out pool. Results are bit-identical for
+    /// any width.
+    pub fn set_extract_workers(&mut self, workers: usize) {
+        self.extract_workers = workers.max(1);
     }
 
     /// Dismantle the session into its lowered expression and enumeration

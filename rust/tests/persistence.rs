@@ -1,0 +1,209 @@
+//! Snapshot round-trip properties: a session saved to disk and loaded in
+//! a fresh `Session` answers queries **bit-identically** with **zero
+//! re-saturation** and a **warm extraction memo** — across workloads and
+//! extraction worker counts — and damaged files surface as typed errors,
+//! never panics.
+
+use hwsplit::error::Error;
+use hwsplit::persist;
+use hwsplit::rewrites::RuleSet;
+use hwsplit::session::{Evaluation, Objective, Query, Session};
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+/// Per-test scratch file under the OS temp dir (unique per process, so
+/// parallel test binaries never collide).
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("hwsplit-persistence-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("scratch dir");
+    dir.join(name)
+}
+
+/// The round-trip workload matrix: small budgets, one rule set each.
+const CASES: &[(&str, RuleSet, usize, usize)] = &[
+    ("relu128", RuleSet::Fig2, 4, 8_000),
+    ("lenet", RuleSet::Paper, 3, 8_000),
+    ("attn_block_mh4", RuleSet::All, 2, 8_000),
+    ("mobile_block_s2", RuleSet::Paper, 3, 8_000),
+];
+
+fn build_session(name: &str, rules: RuleSet, iters: usize, max_nodes: usize) -> Session {
+    Session::builder()
+        .workload(hwsplit::relay::workload_by_name(name).expect("known workload"))
+        .rules(rules)
+        .iters(iters)
+        .limits(hwsplit::egraph::RunnerLimits {
+            max_nodes,
+            track_designs: false,
+            ..Default::default()
+        })
+        .build()
+        .expect("session builds")
+}
+
+/// The query batch every round-trip case answers: mixed objectives, two
+/// seeds — enough to exercise greedy + sampled cost tables.
+fn batch() -> Vec<Query> {
+    vec![
+        Query::new().objective(Objective::Latency).samples(6).seed(0),
+        Query::new().objective(Objective::Area).samples(6).seed(0),
+        Query::new().objective(Objective::Balanced(0.5)).samples(6).seed(9),
+    ]
+}
+
+/// Canonical timing-free rendering of a batch answer, for bit-identity
+/// comparison across processes/sessions (wall-clock fields excluded; all
+/// design identities, costs, frontier points and memo-relevant counts
+/// included).
+fn canon(evals: &[Evaluation]) -> String {
+    let mut s = String::new();
+    for ev in evals {
+        let _ = writeln!(
+            s,
+            "workload={} objective={:?} backend={:?} requested={} distinct={}",
+            ev.workload, ev.objective, ev.backend, ev.extract.requested, ev.extract.distinct
+        );
+        let _ = writeln!(s, "baseline={:?}", ev.baseline.cost);
+        for d in &ev.designs {
+            let _ = writeln!(s, "design [{}] {} {:?}", d.point.origin, d.point.expr, d.point.cost);
+        }
+        for p in &ev.frontier {
+            let _ = writeln!(s, "frontier {} {:?}", p.expr, p.cost);
+        }
+    }
+    s
+}
+
+#[test]
+fn save_load_roundtrip_is_bit_identical_across_workloads_and_workers() {
+    for &(name, rules, iters, max_nodes) in CASES {
+        for workers in [1usize, 4] {
+            let path = scratch(&format!("{name}-w{workers}.hws"));
+
+            let mut original = build_session(name, rules, iters, max_nodes);
+            original.set_extract_workers(workers);
+            let expected = canon(&original.run_queries(&batch()).expect("original answers"));
+            original.save_snapshot(&path).expect("snapshot saves");
+            assert_eq!(original.enumeration_count(), 1, "{name}: one enumeration on save side");
+
+            let mut loaded = Session::load_snapshot(&path).expect("snapshot loads");
+            loaded.set_extract_workers(workers);
+            let answers = loaded.run_queries(&batch()).expect("loaded session answers");
+            assert_eq!(
+                canon(&answers),
+                expected,
+                "{name} (workers={workers}): loaded answers must be bit-identical"
+            );
+            assert_eq!(
+                loaded.enumeration_count(),
+                0,
+                "{name}: a loaded session must never re-run fixpoint enumeration"
+            );
+            for ev in &answers {
+                assert_eq!(
+                    ev.extract.memo_misses, 0,
+                    "{name} (workers={workers}): every cost table the batch needs was \
+                     persisted, so the loaded memo must serve all of them"
+                );
+                assert!(ev.extract.memo_hits > 0, "{name}: hits must register");
+            }
+        }
+    }
+}
+
+#[test]
+fn loaded_session_epoch_keeps_new_seeds_cacheable() {
+    // A seed the save side never touched: first query solves its tables
+    // (misses), the repeat is fully memoized — proving the persisted graph
+    // epoch and cache epoch agree (a mismatch would invalidate the memo on
+    // every query).
+    let path = scratch("epoch.hws");
+    let mut original = build_session("relu128", RuleSet::Fig2, 4, 8_000);
+    original.save_snapshot(&path).expect("snapshot saves");
+
+    let mut loaded = Session::load_snapshot(&path).expect("snapshot loads");
+    let fresh = Query::new().samples(5).seed(123);
+    let first = loaded.query(&fresh).expect("first answer");
+    assert!(first.extract.memo_misses > 0, "unseen seed must solve tables once");
+    let second = loaded.query(&fresh).expect("second answer");
+    assert_eq!(second.extract.memo_misses, 0, "repeat must be fully memoized");
+    assert_eq!(second.extract.memo_hits, first.extract.memo_hits + first.extract.memo_misses);
+    assert_eq!(loaded.enumeration_count(), 0);
+}
+
+#[test]
+fn snapshot_header_peek_matches_session() {
+    let path = scratch("peek.hws");
+    let mut s = build_session("lenet", RuleSet::Paper, 2, 8_000);
+    s.save_snapshot(&path).expect("snapshot saves");
+
+    let meta = persist::peek_header(&path).expect("header peeks");
+    assert_eq!(meta.workload, "lenet");
+    assert_eq!(meta.format_version, persist::FORMAT_VERSION);
+    assert_eq!(
+        meta.workload_fingerprint,
+        persist::workload_fingerprint(&s.workload().expr.to_string())
+    );
+    assert!(meta.payload_len > 0);
+}
+
+#[test]
+fn truncated_snapshots_are_corrupt_errors_not_panics() {
+    let path = scratch("trunc-src.hws");
+    let mut s = build_session("relu128", RuleSet::Fig2, 4, 8_000);
+    s.save_snapshot(&path).expect("snapshot saves");
+    let bytes = std::fs::read(&path).expect("snapshot reads");
+
+    for cut in [0, 3, 9, 20, bytes.len() / 2, bytes.len() - 1] {
+        let p = scratch(&format!("trunc-{cut}.hws"));
+        std::fs::write(&p, &bytes[..cut]).expect("truncated write");
+        match Session::load_snapshot(&p) {
+            Err(Error::SnapshotCorrupt(msg)) => {
+                assert!(!msg.is_empty(), "corrupt error should say what broke")
+            }
+            other => panic!("cut at {cut}: expected SnapshotCorrupt, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn bad_magic_and_future_version_are_typed_errors() {
+    let path = scratch("damage-src.hws");
+    let mut s = build_session("relu128", RuleSet::Fig2, 4, 8_000);
+    s.save_snapshot(&path).expect("snapshot saves");
+    let bytes = std::fs::read(&path).expect("snapshot reads");
+
+    let mut wrong_magic = bytes.clone();
+    wrong_magic[0] ^= 0xFF;
+    let p = scratch("bad-magic.hws");
+    std::fs::write(&p, &wrong_magic).expect("write");
+    assert!(matches!(Session::load_snapshot(&p), Err(Error::SnapshotCorrupt(_))));
+
+    let mut future = bytes.clone();
+    future[8..12].copy_from_slice(&99u32.to_le_bytes());
+    let p = scratch("future-version.hws");
+    std::fs::write(&p, &future).expect("write");
+    match Session::load_snapshot(&p) {
+        Err(Error::SnapshotVersion { found, supported }) => {
+            assert_eq!(found, 99);
+            assert_eq!(supported, persist::FORMAT_VERSION);
+        }
+        other => panic!("expected SnapshotVersion, got {other:?}"),
+    }
+
+    // Payload bit-flip: caught by the checksum before any decode runs.
+    let mut flipped = bytes;
+    let last = flipped.len() - 1;
+    flipped[last] ^= 0x01;
+    let p = scratch("bit-flip.hws");
+    std::fs::write(&p, &flipped).expect("write");
+    assert!(matches!(Session::load_snapshot(&p), Err(Error::SnapshotCorrupt(_))));
+}
+
+#[test]
+fn missing_file_is_an_io_error() {
+    match Session::load_snapshot(scratch("does-not-exist.hws")) {
+        Err(Error::Io(msg)) => assert!(!msg.is_empty()),
+        other => panic!("expected Io, got {other:?}"),
+    }
+}

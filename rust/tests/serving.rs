@@ -1,0 +1,216 @@
+//! Serving-layer properties: many threads sharing one loaded session get
+//! answers identical to a serial baseline, the LRU session store never
+//! exceeds its residency bound, and the TCP daemon survives concurrent
+//! clients, malformed requests and a clean shutdown.
+
+use hwsplit::egraph::RunnerLimits;
+use hwsplit::relay::workload_by_name;
+use hwsplit::rewrites::RuleSet;
+use hwsplit::serve::json::Json;
+use hwsplit::serve::{Server, SessionStore};
+use hwsplit::session::{Evaluation, Objective, Query, Session};
+use std::fmt::Write as _;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("hwsplit-serving-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("scratch dir");
+    dir.join(name)
+}
+
+fn build_session(name: &str, rules: RuleSet, iters: usize) -> Session {
+    Session::builder()
+        .workload(workload_by_name(name).expect("known workload"))
+        .rules(rules)
+        .iters(iters)
+        .limits(RunnerLimits { max_nodes: 8_000, track_designs: false, ..Default::default() })
+        .build()
+        .expect("session builds")
+}
+
+/// Timing-free canonical answer rendering (same idea as the persistence
+/// tests: identity, costs, frontier — no wall-clock).
+fn canon(ev: &Evaluation) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "objective={:?} requested={}", ev.objective, ev.extract.requested);
+    for d in &ev.designs {
+        let _ = writeln!(s, "design [{}] {} {:?}", d.point.origin, d.point.expr, d.point.cost);
+    }
+    for p in &ev.frontier {
+        let _ = writeln!(s, "frontier {} {:?}", p.expr, p.cost);
+    }
+    s
+}
+
+const OBJECTIVES: [Objective; 3] =
+    [Objective::Latency, Objective::Area, Objective::Balanced(0.5)];
+
+#[test]
+fn eight_concurrent_clients_match_the_serial_baseline() {
+    let mut session = build_session("relu128", RuleSet::Fig2, 4);
+    session.enumerate().expect("enumerates");
+
+    // 8 mixed-objective, mixed-seed queries: answer serially first…
+    let queries: Vec<Query> = (0..8)
+        .map(|i| {
+            Query::new()
+                .objective(OBJECTIVES[i % OBJECTIVES.len()])
+                .samples(6)
+                .seed((i % 2) as u64)
+        })
+        .collect();
+    let serial: Vec<String> = queries
+        .iter()
+        .map(|q| canon(&session.answer_query(q).expect("serial answer")))
+        .collect();
+
+    // …then concurrently, one thread per query, all sharing the session.
+    let session = Arc::new(session);
+    let concurrent: Vec<String> = std::thread::scope(|scope| {
+        let handles: Vec<_> = queries
+            .iter()
+            .map(|q| {
+                let session = &session;
+                scope.spawn(move || canon(&session.answer_query(q).expect("parallel answer")))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+
+    assert_eq!(concurrent, serial, "concurrent answers must match the serial baseline");
+    assert_eq!(session.enumeration_count(), 1, "the graph is enumerated exactly once");
+}
+
+#[test]
+fn session_store_lru_never_exceeds_its_bound() {
+    // Three real snapshots, residency bounded at two.
+    let mut store = SessionStore::new(2);
+    for (name, rules) in
+        [("relu128", RuleSet::Fig2), ("mlp", RuleSet::Paper), ("mobile_block", RuleSet::Paper)]
+    {
+        let path = scratch(&format!("lru-{name}.hws"));
+        build_session(name, rules, 2).save_snapshot(&path).expect("snapshot saves");
+        assert_eq!(store.register(&path).expect("registers"), name);
+    }
+    assert_eq!(store.workloads(), vec!["mlp", "mobile_block", "relu128"]);
+
+    let store = Arc::new(store);
+    // Touch every workload, repeatedly and out of order; the cache must
+    // never hold more than two sessions.
+    for name in ["relu128", "mlp", "mobile_block", "relu128", "mobile_block", "mlp"] {
+        let session = store.get(name).expect("loads from snapshot");
+        assert!(session.enumeration().is_some(), "{name}: loaded ready-to-serve");
+        assert_eq!(session.enumeration_count(), 0, "{name}: no re-saturation on load");
+        assert!(store.cached_count() <= 2, "{name}: LRU bound exceeded");
+    }
+    // mlp was touched last, so it must be resident; a repeat get is a
+    // cache hit (same Arc).
+    let a = store.get("mlp").expect("resident");
+    let b = store.get("mlp").expect("resident");
+    assert!(Arc::ptr_eq(&a, &b), "repeat get must hit the cache");
+
+    assert!(
+        matches!(store.get("nonexistent"), Err(hwsplit::Error::UnknownWorkload(_))),
+        "unregistered workloads are typed errors"
+    );
+}
+
+#[test]
+fn tcp_daemon_serves_concurrent_clients_with_error_isolation() {
+    // One snapshot-backed store behind a real TCP server on an OS-picked
+    // port.
+    let path = scratch("daemon-relu128.hws");
+    build_session("relu128", RuleSet::Fig2, 4).save_snapshot(&path).expect("snapshot saves");
+    let mut store = SessionStore::new(4);
+    store.register(&path).expect("registers");
+
+    let server = Arc::new(Server::bind("127.0.0.1:0", Arc::new(store)).expect("binds"));
+    let addr = server.local_addr().expect("bound addr");
+    let acceptor = {
+        let server = server.clone();
+        std::thread::spawn(move || server.run())
+    };
+
+    let clients = 8;
+    let per_client = 3;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            handles.push(scope.spawn(move || {
+                let stream = TcpStream::connect(addr).expect("connects");
+                let mut reader = BufReader::new(stream.try_clone().expect("clones"));
+                let mut writer = stream;
+                let mut line = String::new();
+
+                for i in 0..per_client {
+                    let obj = ["latency", "area", "balanced"][(c + i) % 3];
+                    writeln!(
+                        writer,
+                        "{{\"cmd\":\"query\",\"workload\":\"relu128\",\
+                         \"objective\":\"{obj}\",\"samples\":5,\"seed\":{}}}",
+                        i % 2
+                    )
+                    .expect("writes");
+                    line.clear();
+                    reader.read_line(&mut line).expect("reads");
+                    let j = Json::parse(line.trim()).expect("valid response json");
+                    assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true), "{line}");
+                    assert_eq!(j.get("workload").and_then(Json::as_str), Some("relu128"));
+                    assert_eq!(j.get("objective").and_then(Json::as_str), Some(obj));
+                    assert!(j.get("designs").and_then(Json::as_u64).unwrap_or(0) >= 2, "{line}");
+                }
+
+                // A malformed line errors this request only…
+                writeln!(writer, "this is not json").expect("writes");
+                line.clear();
+                reader.read_line(&mut line).expect("reads");
+                let j = Json::parse(line.trim()).expect("error response is still json");
+                assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false), "{line}");
+                assert!(j.get("error").and_then(Json::as_str).is_some(), "{line}");
+
+                // …and an unknown workload likewise; the connection lives on.
+                writeln!(writer, "{{\"cmd\":\"query\",\"workload\":\"nope\"}}").expect("writes");
+                line.clear();
+                reader.read_line(&mut line).expect("reads");
+                assert!(line.contains("\"ok\":false"), "{line}");
+
+                writeln!(writer, "{{\"cmd\":\"ping\"}}").expect("writes");
+                line.clear();
+                reader.read_line(&mut line).expect("reads");
+                assert!(line.contains("\"pong\":true"), "{line}");
+            }));
+        }
+        for h in handles {
+            h.join().expect("client thread");
+        }
+    });
+
+    // Stats reflect every client: served queries and isolated errors.
+    let stream = TcpStream::connect(addr).expect("connects");
+    let mut reader = BufReader::new(stream.try_clone().expect("clones"));
+    let mut writer = stream;
+    let mut line = String::new();
+    writeln!(writer, "{{\"cmd\":\"stats\"}}").expect("writes");
+    reader.read_line(&mut line).expect("reads");
+    let j = Json::parse(line.trim()).expect("stats json");
+    assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true), "{line}");
+    assert_eq!(
+        j.get("served").and_then(Json::as_u64),
+        Some((clients * per_client) as u64),
+        "{line}"
+    );
+    assert_eq!(j.get("errors").and_then(Json::as_u64), Some(2 * clients as u64), "{line}");
+    assert_eq!(j.get("cached_sessions").and_then(Json::as_u64), Some(1), "{line}");
+    assert_eq!(j.get("workloads").and_then(Json::as_str), Some("relu128"), "{line}");
+
+    // Graceful shutdown: the request is acknowledged and the accept loop
+    // exits.
+    line.clear();
+    writeln!(writer, "{{\"cmd\":\"shutdown\"}}").expect("writes");
+    reader.read_line(&mut line).expect("reads");
+    assert!(line.contains("\"shutting_down\":true"), "{line}");
+    acceptor.join().expect("accept loop joins").expect("accept loop ran clean");
+}
