@@ -13,7 +13,7 @@ use hwsplit::rewrites::{sched, split};
 
 fn class_snapshot(eg: &EGraph, root: hwsplit::egraph::Id) -> Vec<String> {
     let mut v: Vec<String> =
-        eg.class(root).nodes.iter().map(|n| format!("{}", n.op)).collect();
+        eg.class_nodes(root).map(|n| format!("{}", n.op)).collect();
     v.sort();
     v
 }
@@ -84,7 +84,7 @@ fn main() {
     // Engine inventory after saturation: the hardware design points found.
     let mut widths: Vec<usize> = vec![];
     for class in runner.egraph.classes() {
-        for n in &class.nodes {
+        for n in runner.egraph.class_nodes(class.id) {
             if let Op::ReluEngine { w } = n.op {
                 widths.push(w);
             }

@@ -1,10 +1,19 @@
 //! Bench — the CI quick-mode perf trajectory: tiny-budget runs of the
-//! saturation engine (full-rescan vs incremental) and the extraction
-//! serving layer (cold vs memoized), emitted as machine-readable
-//! `bench_results.json` records `{workload, engine, wall_ms,
-//! designs_per_sec}` so every CI run leaves a comparable perf data point
-//! (uploaded as a workflow artifact — the `BENCH_*` trajectory stops being
-//! empty).
+//! saturation engine (full-rescan vs incremental), the wave-parallel apply
+//! phase (1 vs 4 workers), the cost-table solver (scratch vs incremental
+//! re-relaxation) and the extraction serving layer (cold vs memoized),
+//! emitted as machine-readable `bench_results.json` records `{workload,
+//! engine, wall_ms, designs_per_sec, ...}` so every CI run leaves a
+//! comparable perf data point (uploaded as a workflow artifact — the
+//! `BENCH_*` trajectory stops being empty). Saturation rows additionally
+//! carry `saturation_wall_ms` and the per-phase breakdown
+//! (`search_ms`/`apply_ms`/`rebuild_ms`/`apply_waves`), so regressions are
+//! attributable to a phase, not just a total.
+//!
+//! Two correctness gates ride along as hard asserts (CI fails on a
+//! violation, not just a slowdown): the apply phase must leave the e-graph
+//! identical for any worker count, and the incremental cost table must
+//! agree bit-exactly with a from-scratch solve.
 //!
 //! Budgets are deliberately tiny so the job costs seconds; set
 //! `HWSPLIT_PERF_FULL=1` for locally meaningful numbers.
@@ -13,7 +22,10 @@
 
 use hwsplit::bench_util::{snapshot_fixture, snapshot_fixture_path};
 use hwsplit::egraph::{Runner, RunnerLimits, SearchMode};
-use hwsplit::extract::{extract_designs, ExtractCache, ExtractOptions};
+use hwsplit::extract::{
+    costs_agree, extract_designs, CostKind, CostTable, ExtractCache, ExtractOptions,
+};
+use hwsplit::ir::{Node, Op};
 use hwsplit::lower::lower_default;
 use hwsplit::par::default_workers;
 use hwsplit::relay::workload_by_name;
@@ -28,14 +40,33 @@ fn record(
     engine: &str,
     wall_ms: f64,
     designs_per_sec: f64,
+    extra: &[(&str, f64)],
 ) {
-    println!("{workload:<10} {engine:<24} {wall_ms:>10.2} ms {designs_per_sec:>14.1} designs/s");
-    out.push(vec![
+    println!("{workload:<14} {engine:<24} {wall_ms:>10.2} ms {designs_per_sec:>14.1} designs/s");
+    let mut fields = vec![
         ("workload".to_string(), JsonValue::Str(workload.to_string())),
         ("engine".to_string(), JsonValue::Str(engine.to_string())),
         ("wall_ms".to_string(), JsonValue::Num(wall_ms)),
         ("designs_per_sec".to_string(), JsonValue::Num(designs_per_sec)),
-    ]);
+    ];
+    for &(k, v) in extra {
+        fields.push((k.to_string(), JsonValue::Num(v)));
+    }
+    out.push(fields);
+}
+
+/// The saturation breakdown columns: total wall plus summed per-phase
+/// wall-clock and the wave count from the report.
+fn saturation_extra(rep: &hwsplit::egraph::RunnerReport, wall_ms: f64) -> Vec<(&'static str, f64)> {
+    let (search, apply, rebuild) = rep.phase_totals();
+    let waves: usize = rep.iterations.iter().map(|i| i.apply_waves).sum();
+    vec![
+        ("saturation_wall_ms", wall_ms),
+        ("search_ms", search.as_secs_f64() * 1e3),
+        ("apply_ms", apply.as_secs_f64() * 1e3),
+        ("rebuild_ms", rebuild.as_secs_f64() * 1e3),
+        ("apply_waves", waves as f64),
+    ]
 }
 
 fn main() {
@@ -48,6 +79,7 @@ fn main() {
             ("lenet", RuleSet::Paper, 5, 50_000),
             ("attn_block", RuleSet::All, 4, 50_000),
             ("attn_block_mh4", RuleSet::All, 3, 50_000),
+            ("attn_block_gqa", RuleSet::All, 3, 50_000),
             ("mobile_block", RuleSet::Paper, 5, 50_000),
             ("mobile_block_s2", RuleSet::Paper, 5, 50_000),
         ]
@@ -57,6 +89,7 @@ fn main() {
             ("mlp", RuleSet::Paper, 3, 8_000),
             ("attn_block", RuleSet::All, 2, 8_000),
             ("attn_block_mh4", RuleSet::All, 2, 8_000),
+            ("attn_block_gqa", RuleSet::All, 2, 8_000),
             ("mobile_block", RuleSet::Paper, 3, 8_000),
             ("mobile_block_s2", RuleSet::Paper, 3, 8_000),
         ]
@@ -85,7 +118,14 @@ fn main() {
             let t0 = Instant::now();
             let rep = runner.run(iters);
             let secs = t0.elapsed().as_secs_f64().max(1e-9);
-            record(&mut out, name, engine, secs * 1e3, rep.designs_lower_bound / secs);
+            record(
+                &mut out,
+                name,
+                engine,
+                secs * 1e3,
+                rep.designs_lower_bound / secs,
+                &saturation_extra(&rep, secs * 1e3),
+            );
             if mode == SearchMode::Incremental {
                 incremental_graph = Some((runner.egraph, runner.root));
             }
@@ -94,7 +134,7 @@ fn main() {
         // Extraction: cold pass (solves every fixpoint) vs memoized repeat
         // (the second-query serving path). designs/sec counts requested
         // extractions.
-        let (eg, root) = incremental_graph.expect("incremental run recorded");
+        let (mut eg, root) = incremental_graph.expect("incremental run recorded");
         let cache = ExtractCache::new();
         let opts = ExtractOptions { samples, seed: 0, workers };
         for engine in ["extract-cold", "extract-memoized"] {
@@ -104,7 +144,77 @@ fn main() {
             if engine == "extract-memoized" {
                 assert_eq!(set.memo_misses, 0, "{name}: repeat pass must be fully memoized");
             }
-            record(&mut out, name, engine, secs * 1e3, set.requested as f64 / secs);
+            record(&mut out, name, engine, secs * 1e3, set.requested as f64 / secs, &[]);
+        }
+
+        // Cost tables: from-scratch solve vs incremental re-relaxation
+        // after a post-saturation mutation. `prev` is warmed on the
+        // saturated graph, then two fresh parent nodes over the root bump
+        // the epoch (dirty-log records); the incremental path re-relaxes
+        // only the dirty ancestor closure. Bit-exact agreement is a hard
+        // assert, so CI fails on divergence, not just on slowdown.
+        // "designs/sec" is classes solved per second for these rows.
+        let kind = CostKind::Latency;
+        let prev = CostTable::build_kind(&eg, &kind);
+        let since = eg.epoch();
+        let r1 = eg.add(Node::new(Op::Relu, vec![root]));
+        eg.add(Node::new(Op::Relu, vec![r1]));
+        eg.rebuild();
+        let dirty = eg.changed_since(since).expect("dirty log covers the mutation");
+        let classes = eg.num_classes() as f64;
+        let t0 = Instant::now();
+        let scratch = CostTable::build_kind(&eg, &kind);
+        let secs = t0.elapsed().as_secs_f64().max(1e-9);
+        record(&mut out, name, "costtable-scratch", secs * 1e3, classes / secs, &[]);
+        let t0 = Instant::now();
+        let incr = CostTable::build_kind_incremental(&eg, &kind, &prev, &dirty);
+        let secs = t0.elapsed().as_secs_f64().max(1e-9);
+        record(&mut out, name, "costtable-incremental", secs * 1e3, classes / secs, &[]);
+        assert!(
+            costs_agree(&scratch, &incr, &eg),
+            "{name}: incremental cost table diverged from scratch"
+        );
+    }
+
+    // Parallel apply: the same saturation at apply width 1 vs 4. The
+    // wave-partitioned apply phase stages against the frozen graph and
+    // commits in stream order, so the e-graph must come out identical for
+    // any width — node/class/design counts are asserted here (the
+    // `engine_equiv` integration test checks full graph fingerprints);
+    // the rows expose what the width buys in apply-phase wall-clock.
+    let (pname, prules) = ("attn_block_mh4", RuleSet::All);
+    let (piters, pnodes) = if full { (3, 50_000) } else { (2, 8_000) };
+    let w = workload_by_name(pname).expect("known workload");
+    let lowered = lower_default(&w.expr).expect("workload lowers");
+    let mut baseline = None;
+    for apply_workers in [1usize, 4] {
+        let mut runner = Runner::new(lowered.clone(), prules.rules())
+            .with_limits(RunnerLimits {
+                max_nodes: pnodes,
+                track_designs: false,
+                ..Default::default()
+            })
+            .with_apply_workers(apply_workers);
+        let t0 = Instant::now();
+        let rep = runner.run(piters);
+        let secs = t0.elapsed().as_secs_f64().max(1e-9);
+        record(
+            &mut out,
+            pname,
+            &format!("apply-workers-{apply_workers}"),
+            secs * 1e3,
+            rep.designs_lower_bound / secs,
+            &saturation_extra(&rep, secs * 1e3),
+        );
+        match baseline {
+            None => baseline = Some((rep.nodes, rep.classes, rep.designs_lower_bound)),
+            Some((n, c, d)) => {
+                assert_eq!(
+                    (rep.nodes, rep.classes, rep.designs_lower_bound),
+                    (n, c, d),
+                    "{pname}: apply width changed the e-graph"
+                );
+            }
         }
     }
 
@@ -125,7 +235,7 @@ fn main() {
         .enumeration()
         .map(|en| en.report.designs_lower_bound)
         .unwrap_or(0.0);
-    record(&mut out, sname, "snapshot-load", secs * 1e3, designs / secs);
+    record(&mut out, sname, "snapshot-load", secs * 1e3, designs / secs, &[]);
 
     out.write("bench_results.json").expect("write bench_results.json");
     println!("wrote bench_results.json ({} records)", out.len());

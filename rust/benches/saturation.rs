@@ -3,10 +3,12 @@
 //! pitch is that search cost tracks the *change* per iteration instead of
 //! the accumulated graph size; this bench measures that gap directly and
 //! asserts the two engines enumerate identical spaces while doing so.
+//! A second section times the wave-parallel apply phase at width 1 vs 4
+//! (identical spaces asserted again — the commit step is stream-ordered).
 //!
 //! Run: `cargo bench --bench saturation`
 
-use hwsplit::egraph::{Runner, RunnerLimits, SearchMode, StopReason};
+use hwsplit::egraph::{Runner, RunnerLimits, RunnerReport, SearchMode, StopReason};
 use hwsplit::lower::lower_default;
 use hwsplit::relay::workload_by_name;
 use hwsplit::report::Table;
@@ -114,6 +116,62 @@ fn main() {
         ]);
     }
     print!("{}", g.render());
+
+    // ---- apply phase: wave-parallel staging at width 1 vs 4 -------------
+    // Same saturation, only the apply fan-out differs: matches are cut
+    // into conflict-free waves, right-hand sides are staged in parallel
+    // against the frozen graph, and intents commit single-threaded in
+    // stream order — so the enumerated spaces must be identical and only
+    // the apply-phase wall-clock may move.
+    let run_width = |workload: &str, rules: RuleSet, iters: usize, width: usize| -> (f64, RunnerReport) {
+        let w = workload_by_name(workload).expect("known workload");
+        let lowered = lower_default(&w.expr).expect("workload lowers");
+        let mut runner = Runner::new(lowered, rules.rules())
+            .with_limits(RunnerLimits {
+                max_nodes: 60_000,
+                track_designs: false,
+                ..Default::default()
+            })
+            .with_apply_workers(width);
+        let t0 = Instant::now();
+        let rep = runner.run(iters);
+        (t0.elapsed().as_secs_f64(), rep)
+    };
+    let mut a = Table::new(
+        "apply phase: staged wave-parallel apply, width 1 vs 4 (identical spaces asserted)",
+        &["workload", "e-nodes", "waves", "apply@1(s)", "apply@4(s)", "speedup", "total@4(s)"],
+    );
+    for &(name, rules, iters) in
+        &[("lenet", RuleSet::Paper, 5usize), ("attn_block_mh4", RuleSet::All, 3)]
+    {
+        let (secs1, rep1) = run_width(name, rules, iters, 1);
+        let (secs4, rep4) = run_width(name, rules, iters, 4);
+        assert_eq!(
+            (rep1.nodes, rep1.classes),
+            (rep4.nodes, rep4.classes),
+            "{name}: apply width changed the enumerated space"
+        );
+        let apply1 = rep1.phase_totals().1.as_secs_f64();
+        let apply4 = rep4.phase_totals().1.as_secs_f64();
+        let waves: usize = rep4.iterations.iter().map(|it| it.apply_waves).sum();
+        a.row(&[
+            name.to_string(),
+            rep4.nodes.to_string(),
+            waves.to_string(),
+            format!("{apply1:.3}"),
+            format!("{apply4:.3}"),
+            format!("{:.2}x", apply1 / apply4.max(1e-9)),
+            format!("{secs4:.3}"),
+        ]);
+        csv_rows.push(vec![
+            format!("{name}-apply-width"),
+            rep4.nodes.to_string(),
+            format!("{apply1:.4}"),
+            format!("{apply4:.4}"),
+        ]);
+        let _ = secs1;
+    }
+    print!("{}", a.render());
 
     let mut csv = Table::new("", &["case", "e_nodes", "full_seconds", "incremental_seconds"]);
     for r in csv_rows {

@@ -79,8 +79,11 @@ pub fn bench_auto(name: &str, target: Duration, mut f: impl FnMut()) -> BenchRes
 }
 
 /// Where the shared snapshot fixtures live. The filename is tagged with
-/// the enumeration budget so a changed bench budget never silently reuses
-/// a stale fixture from an earlier run.
+/// the enumeration budget — so a changed bench budget never silently
+/// reuses a stale fixture from an earlier run — and with the persist
+/// [`FORMAT_VERSION`](crate::persist::FORMAT_VERSION), so a format bump
+/// re-saturates rather than serving benches from a fixture that exercises
+/// the old codec's back-compat path instead of the current encoder.
 pub fn snapshot_fixture_path(
     workload: &str,
     rules: RuleSet,
@@ -92,8 +95,9 @@ pub fn snapshot_fixture_path(
         RuleSet::Paper => "paper",
         RuleSet::All => "all",
     };
+    let version = crate::persist::FORMAT_VERSION;
     PathBuf::from("target/snapshots")
-        .join(format!("{workload}-{set}-i{iters}-n{max_nodes}.hws"))
+        .join(format!("{workload}-{set}-i{iters}-n{max_nodes}-v{version}.hws"))
 }
 
 /// Return a session for `workload` backed by the on-disk snapshot fixture,
@@ -147,6 +151,16 @@ mod tests {
         let s2 = snapshot_fixture("relu128", RuleSet::Fig2, 3, 3_000);
         assert_eq!(s2.enumeration_count(), 0, "second call must load, not re-saturate");
         assert!(s2.enumeration().is_some(), "loaded fixture is ready to serve");
+    }
+
+    #[test]
+    fn fixture_path_is_versioned_by_snapshot_format() {
+        let p = snapshot_fixture_path("relu128", RuleSet::Fig2, 3, 3_000);
+        let name = p.file_name().unwrap().to_string_lossy().into_owned();
+        assert!(
+            name.contains(&format!("-v{}", crate::persist::FORMAT_VERSION)),
+            "fixture name must carry the persist format version: {name}"
+        );
     }
 
     #[test]

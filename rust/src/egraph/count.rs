@@ -29,7 +29,7 @@ pub fn class_counts(eg: &EGraph, max_rounds: usize) -> HashMap<Id, f64> {
         let mut changed = false;
         for class in eg.classes() {
             let mut total = 0.0f64;
-            for node in &class.nodes {
+            for node in eg.class_nodes(class.id) {
                 let mut prod = 1.0f64;
                 for &c in &node.children {
                     let c = eg.find_ref(c);

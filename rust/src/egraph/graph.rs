@@ -1,28 +1,46 @@
 //! The e-graph proper: hashcons + e-classes + deferred congruence closure,
 //! with a shape/type analysis on every class.
+//!
+//! Node storage is **arena-interned** (see [`super::intern`]): every
+//! inserted node body lives once in `arena`, and classes, parent back-edges
+//! and the hashcons all reference it by [`NodeId`]. `add` performs zero
+//! node clones on both the hit and miss paths, and `rebuild`'s parent
+//! re-canonicalization mutates arena slots in place instead of cloning.
 
+use super::intern::{node_hash, NodeId, NodeTable};
 use super::unionfind::UnionFind;
 use super::Id;
-use crate::ir::{infer_ty_ref, Node, RecExpr, Ty};
 use crate::fx::FxHashMap as HashMap;
+use crate::ir::{infer_ty_ref, Node, RecExpr, Ty};
 
 /// An equivalence class of e-nodes, all computing the same value.
 #[derive(Debug, Clone)]
 pub struct EClass {
     /// Canonical id (valid as of the last rebuild).
     pub id: Id,
-    /// The e-nodes in this class. Children are canonical as of the last
-    /// rebuild; use [`EGraph::find`] when chasing them after unions.
-    pub nodes: Vec<Node>,
-    /// Parent e-nodes (as indices into the e-graph's node arena) and the
-    /// class each was memoized into — the congruence-closure back-edges.
-    /// Indices instead of owned nodes: `add` is the hot path and cloning
-    /// the node once per child measurably hurts insert throughput.
-    pub(crate) parents: Vec<(u32, Id)>,
+    /// The e-nodes in this class, as arena indices — resolve through
+    /// [`EGraph::class_nodes`] / [`EGraph::node`]. Children are canonical
+    /// as of the last rebuild; use [`EGraph::find`] when chasing them after
+    /// unions.
+    pub(crate) node_ids: Vec<NodeId>,
+    /// Parent e-nodes (as arena indices) and the class each was memoized
+    /// into — the congruence-closure back-edges.
+    pub(crate) parents: Vec<(NodeId, Id)>,
     /// Analysis data: the type (index / tensor shape / engine signature).
     /// Every member of a class must agree — this is the semantic guardrail
     /// that catches broken rewrites at union time.
     pub ty: Ty,
+}
+
+impl EClass {
+    /// Number of e-nodes in this class.
+    pub fn len(&self) -> usize {
+        self.node_ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.node_ids.is_empty()
+    }
 }
 
 /// Owned raw parts of an [`EGraph`] — the exact mutable state the snapshot
@@ -47,9 +65,10 @@ pub(crate) struct EGraphParts {
 pub struct EGraph {
     uf: UnionFind,
     classes: Vec<Option<EClass>>, // indexed by Id; None once merged away
-    memo: HashMap<Node, Id>,
-    /// Arena of all inserted (canonical-at-insert-time) nodes; parent
-    /// back-edges index into this.
+    /// Hashcons: node content → class, content-compared through the arena.
+    memo: NodeTable,
+    /// Arena of all inserted node bodies — the single owning store;
+    /// classes, parent back-edges and the memo reference it by [`NodeId`].
     arena: Vec<Node>,
     /// Classes whose parents must be re-canonicalized (deferred congruence).
     pending: Vec<Id>,
@@ -65,6 +84,14 @@ pub struct EGraph {
     /// since the last [`EGraph::take_merged_roots`] — consumers holding
     /// canonical ids use this to invalidate selectively.
     merged_roots: Vec<Id>,
+    /// Append-only `(epoch, class)` mutation log backing
+    /// [`EGraph::changed_since`] — the non-draining channel incremental
+    /// read-side consumers (the cost-table cache) use, independent of the
+    /// runner-drained `dirty_classes`.
+    dirty_log: Vec<(u64, Id)>,
+    /// Epoch before which `dirty_log` has no records (0 for fresh graphs;
+    /// the load-time epoch for snapshot-restored ones).
+    dirty_log_base: u64,
     /// Live class count, maintained by `add`/`union` so per-iteration stats
     /// don't rescan the arena. `num_classes` debug-asserts it against the
     /// scan.
@@ -117,7 +144,7 @@ impl EGraph {
     pub fn total_nodes(&self) -> usize {
         debug_assert_eq!(
             self.live_nodes,
-            self.classes.iter().flatten().map(|c| c.nodes.len()).sum::<usize>(),
+            self.classes.iter().flatten().map(|c| c.node_ids.len()).sum::<usize>(),
             "live node counter diverged from scan"
         );
         self.live_nodes
@@ -127,6 +154,12 @@ impl EGraph {
     /// a rebuild, slight overcount between unions). Use in hot loops.
     pub fn approx_nodes(&self) -> usize {
         self.memo.len()
+    }
+
+    /// Total ids ever allocated (live + merged-away). Stage-local ids start
+    /// here: any id `>=` this value cannot name a frozen-graph class.
+    pub(crate) fn id_count(&self) -> usize {
+        self.classes.len()
     }
 
     /// The mutation epoch: changes iff an insert or an effective union —
@@ -158,24 +191,39 @@ impl EGraph {
         self.classes.iter().flatten().map(|c| c.id).collect()
     }
 
+    /// The e-nodes of `id`'s class, resolved through the arena.
+    pub fn class_nodes(&self, id: Id) -> impl Iterator<Item = &Node> + '_ {
+        self.class(id).node_ids.iter().map(|nid| &self.arena[nid.index()])
+    }
+
+    /// The interned body of one e-node.
+    pub fn node(&self, nid: NodeId) -> &Node {
+        &self.arena[nid.index()]
+    }
+
     /// Type of `id`'s class.
     pub fn ty(&self, id: Id) -> &Ty {
         &self.class(id).ty
     }
 
-    #[inline]
-    fn canonicalize(&mut self, node: &Node) -> Node {
+    /// Look up a node without inserting it.
+    pub fn lookup(&mut self, node: &Node) -> Option<Id> {
         let mut n = node.clone();
         for c in &mut n.children {
             *c = self.uf.find(*c);
         }
-        n
+        self.memo.get(node_hash(&n), &n, &self.arena).map(|id| self.uf.find(id))
     }
 
-    /// Look up a node without inserting it.
-    pub fn lookup(&mut self, node: &Node) -> Option<Id> {
-        let n = self.canonicalize(node);
-        self.memo.get(&n).map(|&id| self.uf.find(id))
+    /// Look up a node without inserting it (`&self`-only: no path
+    /// compression — the staged-apply path probes the frozen graph from
+    /// worker threads through this).
+    pub fn lookup_ref(&self, node: &Node) -> Option<Id> {
+        let mut n = node.clone();
+        for c in &mut n.children {
+            *c = self.find_ref(*c);
+        }
+        self.memo.get(node_hash(&n), &n, &self.arena).map(|id| self.find_ref(id))
     }
 
     /// Insert an e-node (children must be existing class ids), returning its
@@ -187,7 +235,8 @@ impl EGraph {
         for c in &mut node.children {
             *c = self.uf.find(*c);
         }
-        if let Some(&id) = self.memo.get(&node) {
+        let h = node_hash(&node);
+        if let Some(id) = self.memo.get(h, &node, &self.arena) {
             return self.uf.find(id);
         }
         // Compute the analysis before allocating the class (by reference:
@@ -202,17 +251,19 @@ impl EGraph {
 
         let id = self.uf.make_set();
         debug_assert_eq!(id.index(), self.classes.len());
-        let arena_idx = self.arena.len() as u32;
-        self.arena.push(node.clone());
+        let nid = NodeId::from_index(self.arena.len());
         for &c in &node.children {
-            self.class_mut(c).parents.push((arena_idx, id));
+            self.class_mut(c).parents.push((nid, id));
         }
-        self.classes.push(Some(EClass { id, nodes: vec![node.clone()], parents: vec![], ty }));
-        self.memo.insert(node, id);
+        self.classes.push(Some(EClass { id, node_ids: vec![nid], parents: vec![], ty }));
+        // The node moves into the arena — its single owning store.
+        self.arena.push(node);
+        self.memo.insert(h, nid, id, &self.arena);
         self.live_classes += 1;
         self.live_nodes += 1;
         self.epoch += 1;
         self.dirty_classes.push(id);
+        self.dirty_log.push((self.epoch, id));
         id
     }
 
@@ -248,13 +299,14 @@ impl EGraph {
         let merge = if keep == ra { rb } else { ra };
         let merged = self.classes[merge.index()].take().expect("double merge");
         let kept = self.classes[keep.index()].as_mut().expect("lost keeper");
-        kept.nodes.extend(merged.nodes);
+        kept.node_ids.extend(merged.node_ids);
         kept.parents.extend(merged.parents);
         self.n_unions += 1;
         self.live_classes -= 1;
         self.epoch += 1;
         self.dirty = true;
         self.dirty_classes.push(keep);
+        self.dirty_log.push((self.epoch, keep));
         self.merged_roots.push(merge);
         self.pending.push(keep);
         (keep, true)
@@ -273,8 +325,10 @@ impl EGraph {
             repairs += 1;
             self.repair(id);
         }
-        // Compact: canonicalize and dedup every class's nodes so matching
-        // and counting see a canonical view.
+        // Compact: dedup every class's node list so matching and counting
+        // see each distinct node once. (Arena content is already canonical:
+        // every node with a merged child sits in that child's parents list,
+        // which `repair` re-canonicalized in place.)
         if self.dirty {
             self.compact();
             self.dirty = false;
@@ -284,53 +338,89 @@ impl EGraph {
 
     fn repair(&mut self, id: Id) {
         let parents = std::mem::take(&mut self.class_mut(id).parents);
-        let mut new_parents: HashMap<Node, (u32, Id)> =
+        let mut new_parents: Vec<(NodeId, Id)> = Vec::with_capacity(parents.len());
+        // Content-dedup for the rebuilt parent list: hash → indices into
+        // `new_parents`, compared through the arena (no node clones).
+        let mut dedup: HashMap<u64, Vec<usize>> =
             HashMap::with_capacity_and_hasher(parents.len(), Default::default());
-        for (pidx, pid) in parents {
-            // The parent node's key in the memo may be stale; remove it.
-            let stale = self.arena[pidx as usize].clone();
-            self.memo.remove(&stale);
-            let pnode = self.canonicalize(&stale);
+        for (nid, pid) in parents {
+            // The parent node's memo entry may be keyed by stale content;
+            // remove it before mutating the arena slot.
+            let stale_h = node_hash(&self.arena[nid.index()]);
+            self.memo.remove(stale_h, &self.arena[nid.index()], &self.arena);
+            // Re-canonicalize the arena slot *in place* — this is the
+            // rebuild path's zero-clone payoff.
+            {
+                let node = &mut self.arena[nid.index()];
+                let uf = &mut self.uf;
+                for c in &mut node.children {
+                    *c = uf.find(*c);
+                }
+            }
+            let h = node_hash(&self.arena[nid.index()]);
             let pid = self.uf.find(pid);
-            if let Some(&existing) = self.memo.get(&pnode) {
+            let mut entry = (nid, pid);
+            if let Some(existing) = self.memo.get(h, &self.arena[nid.index()], &self.arena) {
                 let existing = self.uf.find(existing);
                 if existing != pid {
                     // Congruence: same op, same (canonical) children, two
                     // classes -> they must be equal.
                     let (keep, _) = self.union(existing, pid);
-                    new_parents.insert(pnode, (pidx, keep));
-                    continue;
+                    entry = (nid, keep);
+                } else {
+                    self.memo.insert(h, nid, pid, &self.arena);
+                }
+            } else {
+                self.memo.insert(h, nid, pid, &self.arena);
+            }
+            // Dedup content-equal parent entries (last wins, matching the
+            // historical map semantics).
+            let bucket = dedup.entry(h).or_default();
+            let slot = bucket.iter().copied().find(|&i| {
+                self.arena[new_parents[i].0.index()] == self.arena[entry.0.index()]
+            });
+            match slot {
+                Some(i) => new_parents[i] = entry,
+                None => {
+                    bucket.push(new_parents.len());
+                    new_parents.push(entry);
                 }
             }
-            // Keep the arena entry canonical so future repairs start from
-            // fresher children (memo key must match what we insert).
-            self.arena[pidx as usize] = pnode.clone();
-            self.memo.insert(pnode.clone(), pid);
-            new_parents.insert(pnode, (pidx, pid));
         }
         let id = self.uf.find(id);
-        self.class_mut(id).parents = new_parents.into_values().collect();
+        self.class_mut(id).parents = new_parents;
     }
 
     fn compact(&mut self) {
         let ids = self.class_ids();
-        let mut seen: HashMap<Node, ()> = HashMap::default();
+        let mut dedup: HashMap<u64, Vec<NodeId>> = HashMap::default();
         for id in ids {
             let id = self.uf.find(id);
-            let mut nodes = std::mem::take(&mut self.class_mut(id).nodes);
-            for n in &mut nodes {
-                for c in &mut n.children {
-                    *c = self.uf.find(*c);
+            let node_ids = std::mem::take(&mut self.class_mut(id).node_ids);
+            dedup.clear();
+            let before = node_ids.len();
+            let mut kept: Vec<NodeId> = Vec::with_capacity(before);
+            for nid in node_ids {
+                debug_assert!(
+                    self.arena[nid.index()]
+                        .children
+                        .iter()
+                        .all(|&c| self.find_ref(c) == c),
+                    "compact saw a non-canonical node that repair missed"
+                );
+                let h = node_hash(&self.arena[nid.index()]);
+                let bucket = dedup.entry(h).or_default();
+                if bucket
+                    .iter()
+                    .any(|&k| self.arena[k.index()] == self.arena[nid.index()])
+                {
+                    continue; // duplicate content, preserve first-seen order
                 }
+                bucket.push(nid);
+                kept.push(nid);
             }
-            // Dedup canonical nodes, preserving first-seen order (cheap and
-            // deterministic; sorting by Debug strings is catastrophically
-            // slow at scale).
-            seen.clear();
-            let before = nodes.len();
-            nodes.retain(|n| seen.insert(n.clone(), ()).is_none());
-            self.live_nodes -= before - nodes.len();
-            self.class_mut(id).nodes = nodes;
+            self.live_nodes -= before - kept.len();
+            self.class_mut(id).node_ids = kept;
         }
     }
 
@@ -357,6 +447,24 @@ impl EGraph {
     /// and merged within one round); both are harmless for invalidation.
     pub fn take_merged_roots(&mut self) -> Vec<Id> {
         std::mem::take(&mut self.merged_roots)
+    }
+
+    /// The canonical ids of every class that changed (gained nodes or won a
+    /// union) after mutation epoch `since`, or `None` when the graph's
+    /// mutation log does not reach back that far (snapshot-restored graphs
+    /// only log post-load changes). Unlike [`EGraph::take_dirty`] this is
+    /// `&self`-only and non-draining — many read-side consumers can ask
+    /// independently. Sorted ascending, deduplicated.
+    pub fn changed_since(&self, since: u64) -> Option<Vec<Id>> {
+        if since < self.dirty_log_base {
+            return None;
+        }
+        let start = self.dirty_log.partition_point(|&(e, _)| e <= since);
+        let mut out: Vec<Id> =
+            self.dirty_log[start..].iter().map(|&(_, id)| self.find_ref(id)).collect();
+        out.sort_unstable();
+        out.dedup();
+        Some(out)
     }
 
     /// `seeds` plus every class reachable by walking parent back-edges up
@@ -394,11 +502,12 @@ impl EGraph {
         out
     }
 
-    /// Dismantle into owned raw parts for the snapshot codec. The memo and
-    /// the live counters are **not** part of the raw form: both are derived
-    /// state that [`EGraph::from_parts`] reconstructs from the classes (the
-    /// memo maps each class's canonical nodes back to the class, which is
-    /// exactly what `add`/`lookup` consult after canonicalizing).
+    /// Dismantle into owned raw parts for the snapshot codec. The memo, the
+    /// live counters and the mutation log are **not** part of the raw form:
+    /// memo and counters are derived state [`EGraph::from_parts`]
+    /// reconstructs from the classes, and the log is a transient read-side
+    /// channel (restored graphs report `changed_since` coverage only from
+    /// the load epoch forward).
     pub(crate) fn to_parts(&self) -> EGraphParts {
         EGraphParts {
             parents: self.uf.raw_parents().to_vec(),
@@ -421,17 +530,15 @@ impl EGraph {
     /// caller (the snapshot decoder) is responsible for structural bounds
     /// checks; this constructor only re-derives.
     pub(crate) fn from_parts(parts: EGraphParts) -> Self {
-        let mut memo: HashMap<Node, Id> = HashMap::with_capacity_and_hasher(
-            parts.arena.len(),
-            Default::default(),
-        );
+        let mut memo = NodeTable::with_capacity(parts.arena.len());
         let mut live_classes = 0;
         let mut live_nodes = 0;
         for class in parts.classes.iter().flatten() {
             live_classes += 1;
-            live_nodes += class.nodes.len();
-            for node in &class.nodes {
-                memo.insert(node.clone(), class.id);
+            live_nodes += class.node_ids.len();
+            for &nid in &class.node_ids {
+                let h = node_hash(&parts.arena[nid.index()]);
+                memo.insert(h, nid, class.id, &parts.arena);
             }
         }
         EGraph {
@@ -444,6 +551,8 @@ impl EGraph {
             dirty: parts.dirty,
             dirty_classes: parts.dirty_classes,
             merged_roots: parts.merged_roots,
+            dirty_log: Vec::new(),
+            dirty_log_base: parts.epoch,
             live_classes,
             live_nodes,
             epoch: parts.epoch,
@@ -456,8 +565,8 @@ impl EGraph {
     pub fn check_invariants(&self) {
         for class in self.classes() {
             assert_eq!(self.find_ref(class.id), class.id, "class id not canonical");
-            for node in &class.nodes {
-                for &c in &node.children {
+            for &nid in &class.node_ids {
+                for &c in &self.arena[nid.index()].children {
                     let c = self.find_ref(c);
                     assert!(
                         self.classes[c.index()].is_some(),
@@ -467,7 +576,8 @@ impl EGraph {
                 }
             }
         }
-        for (node, &id) in &self.memo {
+        for (nid, id) in self.memo.iter() {
+            let node = &self.arena[nid.index()];
             let canon_ok = node.children.iter().all(|&c| self.find_ref(c) == c);
             if canon_ok {
                 let id = self.find_ref(id);
@@ -563,6 +673,19 @@ mod tests {
     }
 
     #[test]
+    fn class_nodes_resolve_through_arena() {
+        let mut eg = EGraph::new();
+        let x = eg.add(input("x", &[4]));
+        let y = eg.add(input("y", &[4]));
+        eg.union(x, y);
+        eg.rebuild();
+        let ops: Vec<String> =
+            eg.class_nodes(x).map(|n| n.op.to_string()).collect();
+        assert_eq!(ops.len(), 2, "merged class holds both distinct inputs");
+        assert_eq!(eg.class(x).len(), 2);
+    }
+
+    #[test]
     fn dirty_set_tracks_gains_and_drains() {
         let mut eg = EGraph::new();
         let x = eg.add(input("x", &[4]));
@@ -584,6 +707,36 @@ mod tests {
         // A hashcons hit adds nothing.
         eg.add(input("x", &[4]));
         assert!(eg.take_dirty().is_empty());
+    }
+
+    #[test]
+    fn changed_since_is_nondraining_and_epoch_scoped() {
+        let mut eg = EGraph::new();
+        let e0 = eg.epoch();
+        let x = eg.add(input("x", &[4]));
+        let y = eg.add(input("y", &[4]));
+        let mid = eg.epoch();
+        let rx = eg.add(Node::new(Op::Relu, vec![x]));
+        // Full-history query sees all three classes; repeatable (&self).
+        let all = eg.changed_since(e0).unwrap();
+        assert_eq!(all, {
+            let mut v = vec![x, y, rx];
+            v.sort_unstable();
+            v
+        });
+        assert_eq!(eg.changed_since(e0).unwrap(), all);
+        // Mid-epoch query sees only later mutations.
+        assert_eq!(eg.changed_since(mid).unwrap(), vec![rx]);
+        assert!(eg.changed_since(eg.epoch()).unwrap().is_empty());
+        // Unions log the surviving class, canonicalized at read time.
+        eg.union(x, y);
+        eg.rebuild();
+        let after = eg.changed_since(mid).unwrap();
+        assert!(after.contains(&eg.find_ref(x)));
+        // A restored graph's log doesn't reach back before the load epoch.
+        let restored = EGraph::from_parts(eg.to_parts());
+        assert_eq!(restored.changed_since(restored.epoch()), Some(vec![]));
+        assert_eq!(restored.changed_since(e0), None);
     }
 
     #[test]

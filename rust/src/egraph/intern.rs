@@ -1,0 +1,273 @@
+//! Arena interning for e-nodes: every inserted [`Node`] body lives exactly
+//! once in a `Vec`-backed arena and is referenced everywhere else — class
+//! membership lists, parent back-edges, the hashcons — by a `u32` [`NodeId`].
+//!
+//! The hashcons itself is a [`NodeTable`]: an open-addressing FxHash table
+//! mapping *node content* to `(NodeId, class Id)` without owning a second
+//! copy of any node. Lookups probe by hash and compare content through the
+//! arena (the raw-entry pattern), so the table stores 20 bytes per entry
+//! where the old `HashMap<Node, Id>` stored a full cloned `Node` per key.
+//! `rebuild()` exploits the same indirection to re-canonicalize parent
+//! nodes *in place* in the arena — a re-key is two table probes, zero node
+//! clones.
+
+use super::Id;
+use crate::fx::FxHasher;
+use crate::ir::Node;
+use std::hash::{Hash, Hasher};
+
+/// Index of an interned e-node body in the [`EGraph`](super::EGraph) arena.
+#[derive(Copy, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(u32);
+
+impl NodeId {
+    #[inline]
+    pub fn from_index(i: usize) -> Self {
+        NodeId(u32::try_from(i).expect("e-graph overflow: more than u32::MAX e-nodes"))
+    }
+
+    #[inline]
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl std::fmt::Debug for NodeId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "n{}", self.0)
+    }
+}
+
+/// FxHash of a node's content (op + children), the probe key for
+/// [`NodeTable`]. Callers hash once and thread the value through
+/// `get`/`insert`/`remove` so a re-key costs no re-hash.
+#[inline]
+pub(crate) fn node_hash(node: &Node) -> u64 {
+    let mut h = FxHasher::default();
+    node.hash(&mut h);
+    h.finish()
+}
+
+/// One slot of the open-addressing table.
+#[derive(Copy, Clone)]
+enum Slot {
+    Empty,
+    /// A deleted entry; probes continue past it, inserts may reuse it.
+    Tomb,
+    Full { hash: u64, nid: NodeId, class: Id },
+}
+
+/// The hashcons: node content → `(NodeId, class)`, content-compared through
+/// the arena. Linear probing, power-of-two capacity, tombstone deletion
+/// (cleared on growth). Replace-by-content `insert` preserves the old
+/// `HashMap<Node, Id>` semantics: at most one entry per distinct content.
+pub(crate) struct NodeTable {
+    slots: Vec<Slot>,
+    /// Live entries (what [`NodeTable::len`] reports).
+    live: usize,
+    /// Live + tombstones — the probe-length load factor.
+    used: usize,
+}
+
+impl Default for NodeTable {
+    fn default() -> Self {
+        NodeTable { slots: vec![Slot::Empty; 16], live: 0, used: 0 }
+    }
+}
+
+impl NodeTable {
+    pub fn with_capacity(n: usize) -> Self {
+        let cap = (n * 2).next_power_of_two().max(16);
+        NodeTable { slots: vec![Slot::Empty; cap], live: 0, used: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    #[inline]
+    fn mask(&self) -> usize {
+        self.slots.len() - 1
+    }
+
+    /// The class of the entry whose content equals `node`, if present.
+    pub fn get(&self, hash: u64, node: &Node, arena: &[Node]) -> Option<Id> {
+        let mask = self.mask();
+        let mut i = hash as usize & mask;
+        loop {
+            match self.slots[i] {
+                Slot::Empty => return None,
+                Slot::Tomb => {}
+                Slot::Full { hash: h, nid, class } => {
+                    if h == hash && &arena[nid.index()] == node {
+                        return Some(class);
+                    }
+                }
+            }
+            i = (i + 1) & mask;
+        }
+    }
+
+    /// Insert `arena[nid] → class`, replacing any existing entry of equal
+    /// content (the existing entry keeps its own `NodeId`; content equality
+    /// makes the difference unobservable to lookups).
+    pub fn insert(&mut self, hash: u64, nid: NodeId, class: Id, arena: &[Node]) {
+        if self.used * 8 >= self.slots.len() * 7 {
+            self.grow(arena);
+        }
+        let node = &arena[nid.index()];
+        let mask = self.mask();
+        let mut i = hash as usize & mask;
+        let mut first_tomb: Option<usize> = None;
+        loop {
+            match self.slots[i] {
+                Slot::Empty => {
+                    let dst = first_tomb.unwrap_or(i);
+                    if first_tomb.is_none() {
+                        self.used += 1;
+                    }
+                    self.slots[dst] = Slot::Full { hash, nid, class };
+                    self.live += 1;
+                    return;
+                }
+                Slot::Tomb => {
+                    if first_tomb.is_none() {
+                        first_tomb = Some(i);
+                    }
+                }
+                Slot::Full { hash: h, nid: enid, class: _ } => {
+                    if h == hash && &arena[enid.index()] == node {
+                        self.slots[i] = Slot::Full { hash, nid: enid, class };
+                        return;
+                    }
+                }
+            }
+            i = (i + 1) & mask;
+        }
+    }
+
+    /// Remove the entry whose content equals `node`, returning its class.
+    pub fn remove(&mut self, hash: u64, node: &Node, arena: &[Node]) -> Option<Id> {
+        let mask = self.mask();
+        let mut i = hash as usize & mask;
+        loop {
+            match self.slots[i] {
+                Slot::Empty => return None,
+                Slot::Tomb => {}
+                Slot::Full { hash: h, nid, class } => {
+                    if h == hash && &arena[nid.index()] == node {
+                        self.slots[i] = Slot::Tomb;
+                        self.live -= 1;
+                        return Some(class);
+                    }
+                }
+            }
+            i = (i + 1) & mask;
+        }
+    }
+
+    /// All live `(NodeId, class)` entries, in unspecified order (used by
+    /// invariant checks only — never on a result-determining path).
+    pub fn iter(&self) -> impl Iterator<Item = (NodeId, Id)> + '_ {
+        self.slots.iter().filter_map(|s| match s {
+            Slot::Full { nid, class, .. } => Some((*nid, *class)),
+            _ => None,
+        })
+    }
+
+    fn grow(&mut self, arena: &[Node]) {
+        // Double when genuinely full; same-size rehash when tombstones are
+        // the bulk of the load (deletion-heavy phases like rebuild).
+        let cap = if self.live * 4 >= self.slots.len() {
+            self.slots.len() * 2
+        } else {
+            self.slots.len()
+        };
+        let old = std::mem::replace(&mut self.slots, vec![Slot::Empty; cap]);
+        self.live = 0;
+        self.used = 0;
+        for s in old {
+            if let Slot::Full { hash, nid, class } = s {
+                self.insert(hash, nid, class, arena);
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for NodeTable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "NodeTable({} live / {} slots)", self.live, self.slots.len())
+    }
+}
+
+impl Clone for NodeTable {
+    fn clone(&self) -> Self {
+        NodeTable { slots: self.slots.clone(), live: self.live, used: self.used }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{Op, Shape, Symbol};
+
+    fn nodes() -> Vec<Node> {
+        (0..100)
+            .map(|i| Node::leaf(Op::Input(Symbol::new(&format!("x{i}")), Shape::new(&[4]))))
+            .collect()
+    }
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let arena = nodes();
+        let mut t = NodeTable::default();
+        for (i, n) in arena.iter().enumerate() {
+            t.insert(node_hash(n), NodeId::from_index(i), Id::from_index(i), &arena);
+        }
+        assert_eq!(t.len(), arena.len());
+        for (i, n) in arena.iter().enumerate() {
+            assert_eq!(t.get(node_hash(n), n, &arena), Some(Id::from_index(i)));
+        }
+        let victim = &arena[7];
+        assert_eq!(t.remove(node_hash(victim), victim, &arena), Some(Id::from_index(7)));
+        assert_eq!(t.get(node_hash(victim), victim, &arena), None);
+        assert_eq!(t.len(), arena.len() - 1);
+        // The probe chain past the tombstone still reaches later entries.
+        for (i, n) in arena.iter().enumerate().filter(|(i, _)| *i != 7) {
+            assert_eq!(t.get(node_hash(n), n, &arena), Some(Id::from_index(i)));
+        }
+    }
+
+    #[test]
+    fn insert_replaces_by_content() {
+        // Two arena slots with identical content: the table keeps one entry.
+        let n = Node::leaf(Op::Int(42));
+        let arena = vec![n.clone(), n.clone()];
+        let mut t = NodeTable::default();
+        let h = node_hash(&n);
+        t.insert(h, NodeId::from_index(0), Id::from_index(3), &arena);
+        t.insert(h, NodeId::from_index(1), Id::from_index(9), &arena);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.get(h, &n, &arena), Some(Id::from_index(9)));
+    }
+
+    #[test]
+    fn survives_growth_and_tombstone_churn() {
+        let arena = nodes();
+        let mut t = NodeTable::default();
+        // Repeated insert/remove cycles force tombstone accumulation and
+        // same-size rehashes.
+        for round in 0..5 {
+            for (i, n) in arena.iter().enumerate() {
+                t.insert(node_hash(n), NodeId::from_index(i), Id::from_index(i), &arena);
+            }
+            for (i, n) in arena.iter().enumerate() {
+                if i % 2 == round % 2 {
+                    assert!(t.remove(node_hash(n), n, &arena).is_some());
+                }
+            }
+        }
+        assert_eq!(t.len(), 50);
+        assert_eq!(t.iter().count(), 50);
+    }
+}

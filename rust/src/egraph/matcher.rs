@@ -34,7 +34,7 @@ fn match_rec(eg: &EGraph, pat: &Pattern, id: Id, subst: Subst, out: &mut Vec<Sub
             }
         }
         Pattern::Node { op, children } => {
-            for node in &eg.class(id).nodes {
+            for node in eg.class_nodes(id) {
                 if !op.matches(&node.op) || node.children.len() != children.len() {
                     continue;
                 }

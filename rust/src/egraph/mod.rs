@@ -15,6 +15,9 @@
 //!   (broken rewrites are caught as analysis merge conflicts), live
 //!   class/node counters, and dirty-set tracking (which classes gained
 //!   nodes since the last search — the incremental engine's work list);
+//! * [`intern`] — arena interning: node bodies stored once, referenced by
+//!   `u32` [`NodeId`] from classes, parent edges and the open-addressing
+//!   hashcons (content compared through the arena, never cloned);
 //! * [`pattern`] — pattern ASTs with variables and op-kind matchers;
 //! * [`matcher`] — backtracking e-matching over the e-graph, whole-graph or
 //!   restricted to a class work list (`&self`-only, so search shards share
@@ -25,14 +28,17 @@
 //!   truncation ([`SimpleScheduler`]) or egg-style exponential backoff
 //!   ([`BackoffScheduler`]);
 //! * [`runner`] — the phased saturation engine: incremental parallel
-//!   search → memoized apply → rebuild, with node/time budgets, saturation
-//!   detection, and per-iteration + per-rule growth metrics (the data
-//!   behind the paper's "exponential design space" claim);
+//!   search → memoized parallel apply (conflict-free waves staged against
+//!   the frozen graph on the worker pool, committed single-threaded in
+//!   deterministic match order) → rebuild, with node/time budgets,
+//!   saturation detection, and per-iteration + per-rule growth metrics
+//!   (the data behind the paper's "exponential design space" claim);
 //! * [`count`] — counting the number of distinct terms an e-graph
 //!   represents (the size of the enumerated design space).
 
 pub mod count;
 pub mod graph;
+pub mod intern;
 pub mod matcher;
 pub mod pattern;
 pub mod rewrite;
@@ -41,8 +47,9 @@ pub mod scheduler;
 pub mod unionfind;
 
 pub use graph::{EClass, EGraph};
+pub use intern::NodeId;
 pub use pattern::{Pattern, Subst};
-pub use rewrite::{Applier, Rewrite};
+pub use rewrite::{Applier, ApplyGraph, Rewrite};
 pub use runner::{
     IterationStats, RuleIterStats, Runner, RunnerLimits, RunnerReport, SearchMode, StopReason,
 };

@@ -1,5 +1,5 @@
 //! Rewrites: a searcher (pattern or e-node scan) plus an applier that builds
-//! the equivalent right-hand side directly into the e-graph.
+//! the equivalent right-hand side through an [`ApplyGraph`].
 //!
 //! Two searcher styles:
 //!
@@ -12,16 +12,222 @@
 //!
 //! Appliers return the id of the newly built equivalent class (or `None` to
 //! decline); the [`super::Runner`] unions it with the matched class.
+//!
+//! ## The two application modes
+//!
+//! [`ApplyGraph`] is the applier's only view of the e-graph, and it comes
+//! in two flavors:
+//!
+//! * **Direct** — a `&mut EGraph`; `add` inserts immediately. Used by the
+//!   legacy [`Rewrite::try_apply`]/[`Rewrite::apply`] entry points (tests,
+//!   one-off drivers).
+//! * **Staged** — a `&EGraph` *frozen* snapshot plus a local scratch arena.
+//!   `add` canonicalizes against the frozen union-find, probes the frozen
+//!   hashcons, and otherwise records the node locally, handing back a
+//!   stage-local id. The runner fans staging across worker threads (the
+//!   graph is only read), then replays each intent's node list through the
+//!   real `EGraph::add` single-threaded in deterministic match order — so
+//!   the committed e-graph is bit-identical for any `--apply-workers`.
+//!
+//! Appliers observe the same API either way: `add`, `ty`, `class_nodes`,
+//! and `fresh_var` (which in staged mode mints *deterministic* names from
+//! the match's position in the stream instead of a global counter — the
+//! other half of the bit-identity guarantee).
 
 use super::graph::EGraph;
 use super::matcher;
 use super::pattern::{Pattern, Subst};
 use super::Id;
-use crate::ir::OpKind;
+use crate::fx::FxHashMap;
+use crate::ir::{infer_ty_ref, Node, OpKind, Symbol, Ty};
 use std::sync::Arc;
 
 /// Applier callback: build the RHS for a match, returning its class.
-pub type Applier = Arc<dyn Fn(&mut EGraph, Id, &Subst) -> Option<Id> + Send + Sync>;
+pub type Applier = Arc<dyn Fn(&mut ApplyGraph, Id, &Subst) -> Option<Id> + Send + Sync>;
+
+/// The applier's view of the e-graph: either a live mutable graph or a
+/// frozen graph plus stage-local scratch (see the module docs).
+pub enum ApplyGraph<'a> {
+    Direct(&'a mut EGraph),
+    Staged(Stage<'a>),
+}
+
+impl<'a> ApplyGraph<'a> {
+    /// Insert an e-node (hash-consed; staged mode defers the real insert
+    /// to the commit replay).
+    pub fn add(&mut self, node: Node) -> Id {
+        match self {
+            ApplyGraph::Direct(eg) => eg.add(node),
+            ApplyGraph::Staged(s) => s.add(node),
+        }
+    }
+
+    /// Type of `id`'s class (stage-local ids resolve to their inferred ty).
+    pub fn ty(&self, id: Id) -> &Ty {
+        match self {
+            ApplyGraph::Direct(eg) => eg.ty(id),
+            ApplyGraph::Staged(s) => s.ty(id),
+        }
+    }
+
+    /// The e-nodes of `id`'s class. A stage-local class holds exactly the
+    /// one node staged for it.
+    pub fn class_nodes(&self, id: Id) -> Box<dyn Iterator<Item = &Node> + '_> {
+        match self {
+            ApplyGraph::Direct(eg) => Box::new(eg.class_nodes(id)),
+            ApplyGraph::Staged(s) => s.class_nodes(id),
+        }
+    }
+
+    /// Look up a node's class without inserting (stage-local nodes
+    /// included in staged mode).
+    pub fn lookup(&self, node: &Node) -> Option<Id> {
+        match self {
+            ApplyGraph::Direct(eg) => eg.lookup_ref(node),
+            ApplyGraph::Staged(s) => s.lookup(node),
+        }
+    }
+
+    /// Mint a fresh loop-variable symbol. Staged mode derives the name
+    /// deterministically from the match's stream position (worker-count
+    /// independent); direct mode falls back to the global counter.
+    pub fn fresh_var(&mut self, prefix: &str) -> Symbol {
+        match self {
+            ApplyGraph::Direct(_) => Symbol::fresh(prefix),
+            ApplyGraph::Staged(s) => s.fresh_var(prefix),
+        }
+    }
+}
+
+/// Scratch state for one staged application: local nodes (ids `>= base`),
+/// a local hashcons, and the deterministic fresh-name tag.
+pub struct Stage<'a> {
+    eg: &'a EGraph,
+    /// Ids below this are frozen-graph classes; at or above, stage-local.
+    base: usize,
+    /// Stage-local nodes in `add` order, with their inferred types.
+    /// Children are frozen-canonical (base) or stage-local ids.
+    nodes: Vec<(Node, Ty)>,
+    memo: FxHashMap<Node, Id>,
+    /// Position tag `"{iteration}_{match_index}"` baked into fresh names.
+    tag: String,
+    fresh_k: usize,
+}
+
+impl<'a> Stage<'a> {
+    pub(crate) fn new(eg: &'a EGraph, tag: String) -> Self {
+        Stage {
+            eg,
+            base: eg.id_count(),
+            nodes: Vec::new(),
+            memo: FxHashMap::default(),
+            tag,
+            fresh_k: 0,
+        }
+    }
+
+    fn add(&mut self, mut node: Node) -> Id {
+        let mut has_local = false;
+        for c in &mut node.children {
+            if c.index() < self.base {
+                *c = self.eg.find_ref(*c);
+            } else {
+                has_local = true;
+            }
+        }
+        // Nodes whose children all exist in the frozen graph may already be
+        // hash-consed there; stage-local children can't be (their ids are
+        // not valid in the base graph).
+        if !has_local {
+            if let Some(id) = self.eg.lookup_ref(&node) {
+                return id;
+            }
+        }
+        if let Some(&id) = self.memo.get(&node) {
+            return id;
+        }
+        let ty = {
+            let child_tys: Vec<&Ty> = node.children.iter().map(|&c| self.ty(c)).collect();
+            infer_ty_ref(&node.op, &child_tys).unwrap_or_else(|e| {
+                panic!("ill-typed e-node {}: {e}", node.op);
+            })
+        };
+        let id = Id::from_index(self.base + self.nodes.len());
+        self.memo.insert(node.clone(), id);
+        self.nodes.push((node, ty));
+        id
+    }
+
+    fn ty(&self, id: Id) -> &Ty {
+        if id.index() < self.base {
+            self.eg.ty(id)
+        } else {
+            &self.nodes[id.index() - self.base].1
+        }
+    }
+
+    fn lookup(&self, node: &Node) -> Option<Id> {
+        let mut n = node.clone();
+        let mut has_local = false;
+        for c in &mut n.children {
+            if c.index() < self.base {
+                *c = self.eg.find_ref(*c);
+            } else {
+                has_local = true;
+            }
+        }
+        if !has_local {
+            if let Some(id) = self.eg.lookup_ref(&n) {
+                return Some(id);
+            }
+        }
+        self.memo.get(&n).copied()
+    }
+
+    fn class_nodes(&self, id: Id) -> Box<dyn Iterator<Item = &Node> + '_> {
+        if id.index() < self.base {
+            Box::new(self.eg.class_nodes(id))
+        } else {
+            Box::new(std::iter::once(&self.nodes[id.index() - self.base].0))
+        }
+    }
+
+    fn fresh_var(&mut self, prefix: &str) -> Symbol {
+        let k = self.fresh_k;
+        self.fresh_k += 1;
+        Symbol::new(&format!("{prefix}_{}_{k}", self.tag))
+    }
+}
+
+/// The outcome of staging one match: the nodes to replay (in `add` order)
+/// and the applier's returned class. Committing means re-adding each node
+/// (remapping stage-local child ids through the ids the real adds return)
+/// and unioning the mapped `result` with the match root.
+pub(crate) struct ApplyIntent {
+    pub base: usize,
+    pub nodes: Vec<Node>,
+    pub result: Id,
+}
+
+impl ApplyIntent {
+    /// Replay this intent into the live graph. Returns the mapped result
+    /// class (the caller unions it with the match root).
+    pub fn commit(self, eg: &mut EGraph) -> Id {
+        let mut local: Vec<Id> = Vec::with_capacity(self.nodes.len());
+        for node in self.nodes {
+            let mapped =
+                node.map_children(
+                    |c| if c.index() < self.base { c } else { local[c.index() - self.base] },
+                );
+            local.push(eg.add(mapped));
+        }
+        if self.result.index() < self.base {
+            self.result
+        } else {
+            local[self.result.index() - self.base]
+        }
+    }
+}
 
 enum Searcher {
     Pattern(Pattern),
@@ -63,7 +269,7 @@ impl Rewrite {
     pub fn pattern(
         name: &str,
         pat: Pattern,
-        applier: impl Fn(&mut EGraph, Id, &Subst) -> Option<Id> + Send + Sync + 'static,
+        applier: impl Fn(&mut ApplyGraph, Id, &Subst) -> Option<Id> + Send + Sync + 'static,
     ) -> Self {
         Rewrite { name: name.into(), searcher: Searcher::Pattern(pat), applier: Arc::new(applier) }
     }
@@ -75,7 +281,7 @@ impl Rewrite {
     pub fn node_scan(
         name: &str,
         kind: OpKind,
-        applier: impl Fn(&mut EGraph, Id, &Subst) -> Option<Id> + Send + Sync + 'static,
+        applier: impl Fn(&mut ApplyGraph, Id, &Subst) -> Option<Id> + Send + Sync + 'static,
     ) -> Self {
         Rewrite::node_scan_deep(name, kind, 0, applier)
     }
@@ -90,7 +296,7 @@ impl Rewrite {
         name: &str,
         kind: OpKind,
         look_down: usize,
-        applier: impl Fn(&mut EGraph, Id, &Subst) -> Option<Id> + Send + Sync + 'static,
+        applier: impl Fn(&mut ApplyGraph, Id, &Subst) -> Option<Id> + Send + Sync + 'static,
     ) -> Self {
         Rewrite {
             name: name.into(),
@@ -126,7 +332,7 @@ impl Rewrite {
                 let mut out = Vec::new();
                 for &id in ids {
                     let id = eg.find_ref(id);
-                    for node in &eg.class(id).nodes {
+                    for node in eg.class_nodes(id) {
                         if node.op.kind() == *kind {
                             let subst = Subst { node: Some(node.clone()), ..Default::default() };
                             out.push((id, subst));
@@ -138,6 +344,28 @@ impl Rewrite {
         }
     }
 
+    /// Stage one match against the frozen graph: run the applier against a
+    /// [`Stage`], returning the intent to commit later (or `None` when the
+    /// applier declined). `tag` is the deterministic fresh-name seed
+    /// (iteration + match index). `&self` graph access only — safe to fan
+    /// across worker threads.
+    pub(crate) fn stage(
+        &self,
+        eg: &EGraph,
+        class: Id,
+        subst: &Subst,
+        tag: String,
+    ) -> Option<ApplyIntent> {
+        let mut g = ApplyGraph::Staged(Stage::new(eg, tag));
+        let result = (self.applier)(&mut g, class, subst)?;
+        let ApplyGraph::Staged(stage) = g else { unreachable!() };
+        Some(ApplyIntent {
+            base: stage.base,
+            nodes: stage.nodes.into_iter().map(|(n, _)| n).collect(),
+            result,
+        })
+    }
+
     /// Apply to one match. `Some(changed)` when the applier fired (built an
     /// RHS that was unioned in; `changed` says whether that union did
     /// anything), `None` when it declined. The distinction matters to the
@@ -145,7 +373,8 @@ impl Rewrite {
     /// are retried whenever the match is re-offered (a declining applier
     /// may succeed later once e.g. a child class gains a schedule node).
     pub fn try_apply(&self, eg: &mut EGraph, class: Id, subst: &Subst) -> Option<bool> {
-        let rhs = (self.applier)(eg, class, subst)?;
+        let mut g = ApplyGraph::Direct(eg);
+        let rhs = (self.applier)(&mut g, class, subst)?;
         let (_, changed) = eg.union(class, rhs);
         Some(changed)
     }
@@ -163,10 +392,10 @@ mod tests {
 
     /// A toy rewrite: eadd(x, y) => eadd(y, x).
     fn commute() -> Rewrite {
-        Rewrite::node_scan("commute-eadd", OpKind::EAdd, |eg, _id, subst| {
+        Rewrite::node_scan("commute-eadd", OpKind::EAdd, |g, _id, subst| {
             let n = subst.node.as_ref().unwrap();
             let swapped = Node::new(Op::EAdd, vec![n.children[1], n.children[0]]);
-            Some(eg.add(swapped))
+            Some(g.add(swapped))
         })
     }
 
@@ -184,7 +413,7 @@ mod tests {
         }
         eg.rebuild();
         // Both orders now live in the root class.
-        assert_eq!(eg.class(root).nodes.len(), 2);
+        assert_eq!(eg.class(root).len(), 2);
 
         // Re-applying discovers the swapped node but unions are no-ops.
         let matches = rw.search(&eg);
@@ -205,5 +434,55 @@ mod tests {
             rw.apply(&mut eg, id, &s);
         }
         assert_eq!(eg.total_nodes(), before);
+    }
+
+    #[test]
+    fn staged_apply_commits_to_same_graph_as_direct() {
+        let e = parse_expr("(eadd (input a [4]) (input b [4]))").unwrap();
+        let rw = commute();
+
+        let mut direct = EGraph::new();
+        let droot = direct.add_expr(&e);
+        for (id, s) in rw.search(&direct) {
+            rw.apply(&mut direct, id, &s);
+        }
+        direct.rebuild();
+
+        let mut staged = EGraph::new();
+        let sroot = staged.add_expr(&e);
+        let matches = rw.search(&staged);
+        let intents: Vec<(Id, ApplyIntent)> = matches
+            .iter()
+            .enumerate()
+            .filter_map(|(i, (id, s))| {
+                rw.stage(&staged, *id, s, format!("0_{i}")).map(|it| (*id, it))
+            })
+            .collect();
+        for (root, intent) in intents {
+            let rhs = intent.commit(&mut staged);
+            staged.union(root, rhs);
+        }
+        staged.rebuild();
+
+        assert_eq!(direct.class(droot).len(), staged.class(sroot).len());
+        assert_eq!(direct.num_classes(), staged.num_classes());
+        assert_eq!(direct.total_nodes(), staged.total_nodes());
+    }
+
+    #[test]
+    fn staged_add_hits_frozen_hashcons() {
+        // Staging a node that already exists returns the frozen id and
+        // records nothing to replay.
+        let e = parse_expr("(eadd (input a [4]) (input b [4]))").unwrap();
+        let mut eg = EGraph::new();
+        let root = eg.add_expr(&e);
+        let existing = eg.class_nodes(root).next().unwrap().clone();
+        let rw = Rewrite::node_scan("noop", OpKind::EAdd, move |g, _, _| {
+            Some(g.add(existing.clone()))
+        });
+        let (id, s) = rw.search(&eg).pop().unwrap();
+        let intent = rw.stage(&eg, id, &s, "0_0".to_string()).unwrap();
+        assert!(intent.nodes.is_empty());
+        assert_eq!(intent.result, root);
     }
 }

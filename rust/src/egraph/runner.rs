@@ -1,6 +1,7 @@
 //! The phased saturation engine: **search** (read-only, incremental,
-//! parallel) → **apply** (single-threaded, memoized) → **rebuild**
-//! (congruence repair); repeat until saturation or a budget trips.
+//! parallel) → **apply** (staged in parallel waves, committed
+//! deterministically, memoized) → **rebuild** (congruence repair); repeat
+//! until saturation or a budget trips.
 //!
 //! ## Phases
 //!
@@ -19,13 +20,24 @@
 //! every iteration; the equivalence tests pin that both modes produce the
 //! same e-graph.
 //!
-//! **Apply** replays the match stream single-threaded. Fired applications
-//! are memoized by `(rule, root class, canonicalized bindings)` and never
-//! replayed: appliers mint fresh loop-variable symbols, so without the memo
-//! every re-found match would union in another α-variant of an RHS the
-//! graph already has, bloating the node budget with junk. Declined matches
-//! are *not* memoized — an applier may legitimately succeed later (e.g.
-//! once a child class gains a schedule node).
+//! **Apply** walks the scheduler-filtered match stream in deterministic
+//! order, cutting it into *waves* of matches whose footprints (root class +
+//! binding classes, under the current union-find) are pairwise disjoint.
+//! Each wave's appliers run **in parallel** against the frozen graph
+//! (`--apply-workers` wide), building node/union *intents*
+//! ([`super::rewrite::ApplyIntent`]) through the staged
+//! [`super::rewrite::ApplyGraph`]; the intents are then committed
+//! single-threaded, in stream order. Wave boundaries and commit order
+//! depend only on the (deterministic) match stream — and staged appliers
+//! mint position-derived fresh symbols instead of drawing from the global
+//! counter — so the resulting e-graph is **bit-identical for any worker
+//! count**. Fired applications are memoized by `(rule, root class,
+//! canonicalized bindings)` and never replayed: appliers mint fresh
+//! loop-variable symbols, so without the memo every re-found match would
+//! union in another α-variant of an RHS the graph already has, bloating
+//! the node budget with junk. Declined matches are *not* memoized — an
+//! applier may legitimately succeed later (e.g. once a child class gains a
+//! schedule node).
 //!
 //! **Rebuild** restores the congruence invariant ([`EGraph::rebuild`]),
 //! feeding the next iteration's dirty set.
@@ -47,7 +59,7 @@
 use super::count;
 use super::graph::EGraph;
 use super::pattern::Subst;
-use super::rewrite::Rewrite;
+use super::rewrite::{ApplyIntent, Rewrite};
 use super::scheduler::{Scheduler, SimpleScheduler};
 use super::Id;
 use crate::fx::FxHashSet;
@@ -142,6 +154,18 @@ pub struct IterationStats {
     /// [`SearchMode::FullRescan`]; shrinks toward the dirty-set size as the
     /// graph stabilizes).
     pub searched_classes: usize,
+    /// Wall-clock of the search phase (work lists + parallel match +
+    /// scheduler filtering).
+    pub search_time: Duration,
+    /// Wall-clock of the apply phase (wave partitioning + parallel staging
+    /// + sequential commit).
+    pub apply_time: Duration,
+    /// Wall-clock of the rebuild phase (congruence repair + memo
+    /// re-canonicalization).
+    pub rebuild_time: Duration,
+    /// How many conflict-free waves the apply phase cut the match stream
+    /// into (1 when every match's footprint was disjoint).
+    pub apply_waves: usize,
     /// Per-rule breakdown.
     pub per_rule: Vec<RuleIterStats>,
 }
@@ -160,6 +184,19 @@ pub struct RunnerReport {
 }
 
 impl RunnerReport {
+    /// Summed per-phase wall-clock across all iterations:
+    /// `(search, apply, rebuild)`. The perf benches report these as the
+    /// saturation breakdown.
+    pub fn phase_totals(&self) -> (Duration, Duration, Duration) {
+        let mut t = (Duration::ZERO, Duration::ZERO, Duration::ZERO);
+        for it in &self.iterations {
+            t.0 += it.search_time;
+            t.1 += it.apply_time;
+            t.2 += it.rebuild_time;
+        }
+        t
+    }
+
     /// Render as an aligned text table (used by examples and benches).
     pub fn table(&self) -> String {
         let mut s = String::from(
@@ -250,6 +287,11 @@ pub struct Runner {
     pub scheduler: Option<Box<dyn Scheduler>>,
     /// Worker-pool width for the search phase (≥ 1; 1 searches inline).
     pub search_workers: usize,
+    /// Worker-pool width for staging each apply wave (≥ 1; 1 stages
+    /// inline). Any value produces the bit-identical e-graph — staging is
+    /// a pure function of the frozen graph and commits replay in stream
+    /// order either way.
+    pub apply_workers: usize,
     pub search_mode: SearchMode,
     pub stats: Vec<IterationStats>,
     /// Fired-application memo (see [`MatchKey`]).
@@ -272,6 +314,7 @@ impl Runner {
             limits: RunnerLimits::default(),
             scheduler: None,
             search_workers: default_workers(),
+            apply_workers: default_workers(),
             search_mode: SearchMode::default(),
             stats: Vec::new(),
             applied_memo: FxHashSet::default(),
@@ -291,6 +334,11 @@ impl Runner {
 
     pub fn with_search_workers(mut self, workers: usize) -> Self {
         self.search_workers = workers.max(1);
+        self
+    }
+
+    pub fn with_apply_workers(mut self, workers: usize) -> Self {
+        self.apply_workers = workers.max(1);
         self
     }
 
@@ -327,6 +375,10 @@ impl Runner {
                 designs_lower_bound: designs,
                 elapsed: start.elapsed(),
                 searched_classes: outcome.searched_classes,
+                search_time: outcome.search_time,
+                apply_time: outcome.apply_time,
+                rebuild_time: outcome.rebuild_time,
+                apply_waves: outcome.apply_waves,
                 per_rule: outcome.per_rule,
             });
             // Saturation: nothing changed AND no rule was sitting out a ban
@@ -359,6 +411,7 @@ impl Runner {
 
     /// One search → apply → rebuild round.
     fn run_one(&mut self, iteration: usize, scheduler: &mut dyn Scheduler) -> IterOutcome {
+        let search_t0 = Instant::now();
         let nrules = self.rules.len();
         if self.rule_backlog.len() != nrules {
             self.rule_backlog = vec![Vec::new(); nrules];
@@ -497,28 +550,74 @@ impl Runner {
                 all.push((ri, id, s, key));
             }
         }
+        let search_time = search_t0.elapsed();
 
-        // ---- Phase 2: apply (mutates; single-threaded, memoized) -------
+        // ---- Phase 2: apply (staged in parallel waves, committed in
+        // deterministic stream order) ------------------------------------
+        // Walk the match stream in order, claiming each match's footprint
+        // (root + binding classes, canonical under the *current*
+        // union-find). When a match touches an already-claimed class, cut
+        // a wave: stage the wave's appliers in parallel against the frozen
+        // graph, then commit their intents sequentially in stream order.
+        // Wave boundaries depend only on the deterministic stream, and the
+        // commit replay is single-threaded — so the e-graph that results
+        // is bit-identical for any `apply_workers`.
+        let apply_t0 = Instant::now();
         let mut changed = 0;
-        for (ri, id, subst, key) in all {
-            // Re-check: a duplicate match earlier in this very stream may
-            // have fired and inserted the same key.
-            if self.applied_memo.contains(&key) {
-                continue;
+        let mut apply_waves = 0;
+        let mut pos = 0;
+        'waves: while pos < all.len() {
+            let mut claimed: FxHashSet<Id> = FxHashSet::default();
+            let mut end = pos;
+            while end < all.len() {
+                let fp = footprint(&self.egraph, all[end].1, &all[end].2);
+                if end > pos && fp.iter().any(|f| claimed.contains(f)) {
+                    break;
+                }
+                claimed.extend(fp);
+                end += 1;
             }
-            if let Some(did_change) = self.rules[ri].try_apply(&mut self.egraph, id, &subst) {
-                self.applied_memo.insert(key);
+            apply_waves += 1;
+
+            // Stage the wave against the frozen graph (read-only: safe to
+            // fan out). The per-match tag (iteration + stream index) seeds
+            // deterministic fresh symbols.
+            let eg = &self.egraph;
+            let rules = &self.rules;
+            let intents: Vec<Option<ApplyIntent>> =
+                parallel_map(self.apply_workers, (pos..end).collect(), |&i| {
+                    let (ri, id, subst, _) = &all[i];
+                    rules[*ri].stage(eg, *id, subst, format!("{iteration}_{i}"))
+                });
+
+            // Commit sequentially, in stream order.
+            for (i, intent) in (pos..end).zip(intents) {
+                let Some(intent) = intent else {
+                    continue; // declined: retry whenever re-offered
+                };
+                let (ri, id, _, key) = &all[i];
+                // Re-check: a duplicate match earlier in this very stream
+                // may have fired and inserted the same key.
+                if self.applied_memo.contains(key) {
+                    continue;
+                }
+                let rhs = intent.commit(&mut self.egraph);
+                let (_, did_change) = self.egraph.union(*id, rhs);
+                self.applied_memo.insert(key.clone());
                 if did_change {
                     changed += 1;
-                    per_rule[ri].applied += 1;
+                    per_rule[*ri].applied += 1;
                 }
-            } // else declined: retry whenever re-offered
-            if self.egraph.approx_nodes() >= self.limits.max_nodes * 2 {
-                break; // hard brake mid-iteration if a rule explodes
+                if self.egraph.approx_nodes() >= self.limits.max_nodes * 2 {
+                    break 'waves; // hard brake if a rule explodes
+                }
             }
+            pos = end;
         }
+        let apply_time = apply_t0.elapsed();
 
         // ---- Phase 3: restore congruence -------------------------------
+        let rebuild_t0 = Instant::now();
         self.egraph.rebuild();
         // Canonical ids moved for the classes that lost this iteration's
         // unions: re-canonicalize just the memo keys that mention one of
@@ -542,8 +641,39 @@ impl Runner {
                 self.applied_memo.insert(k.canonicalize(eg));
             }
         }
-        IterOutcome { applied: changed, searched_classes, per_rule, any_banned }
+        let rebuild_time = rebuild_t0.elapsed();
+        IterOutcome {
+            applied: changed,
+            searched_classes,
+            per_rule,
+            any_banned,
+            search_time,
+            apply_time,
+            rebuild_time,
+            apply_waves,
+        }
     }
+}
+
+/// The classes one match reads or merges: its root plus every class its
+/// substitution binds (pattern variables and the matched node's children),
+/// canonicalized under the current union-find. Two matches with disjoint
+/// footprints can be staged in the same parallel wave without either
+/// observing state the other is about to commit.
+fn footprint(eg: &EGraph, root: Id, subst: &Subst) -> Vec<Id> {
+    let mut fp = Vec::with_capacity(1 + subst.vars.len());
+    fp.push(eg.find_ref(root));
+    for &id in subst.vars.values() {
+        fp.push(eg.find_ref(id));
+    }
+    if let Some(n) = &subst.node {
+        for &c in &n.children {
+            fp.push(eg.find_ref(c));
+        }
+    }
+    fp.sort_unstable();
+    fp.dedup();
+    fp
 }
 
 struct IterOutcome {
@@ -551,6 +681,10 @@ struct IterOutcome {
     searched_classes: usize,
     per_rule: Vec<RuleIterStats>,
     any_banned: bool,
+    search_time: Duration,
+    apply_time: Duration,
+    rebuild_time: Duration,
+    apply_waves: usize,
 }
 
 #[cfg(test)]
@@ -695,10 +829,10 @@ mod tests {
         // invoke node ever fires (the memo blocks replays), so the graph
         // stops growing and the run saturates.
         assert_eq!(rep.stop, StopReason::Saturated);
-        let loops = r
-            .egraph
+        let eg = &r.egraph;
+        let loops = eg
             .classes()
-            .flat_map(|c| c.nodes.iter())
+            .flat_map(|c| eg.class_nodes(c.id))
             .filter(|n| matches!(n.op, Op::SchedLoop { .. }))
             .count();
         assert_eq!(loops, 1, "memo must block α-variant replays");

@@ -13,7 +13,13 @@
 //!    solution as a reusable snapshot, and [`ExtractCache`] memoizes tables
 //!    keyed on ([`CostKind`], graph epoch): shared read-only across
 //!    queries, invalidated only when the e-graph actually changes
-//!    ([`EGraph::epoch`]). A repeated query pays zero fixpoint rebuilds.
+//!    ([`EGraph::epoch`]). A repeated query pays zero fixpoint rebuilds —
+//!    and when the graph *has* changed, a stale table is not discarded but
+//!    **incrementally re-solved** ([`CostTable::build_incremental`]): the
+//!    previous fixpoint seeds the worklist and only the dirty ancestor
+//!    closure (from [`EGraph::changed_since`]) is re-relaxed, reaching the
+//!    same least fixpoint a scratch build would (asserted in debug builds;
+//!    `HWSPLIT_COST_INCR=0` opts out).
 //! 2. **Parallel sampling.** [`extract_designs`] fans the seeded sample
 //!    extractions out over the shared worker pool
 //!    ([`crate::par::parallel_map`]), one independent seeded-RNG extraction
@@ -66,45 +72,63 @@ impl CostTable {
         eg: &EGraph,
         cost_fn: impl Fn(&EGraph, &Node, &dyn Fn(Id) -> f64) -> f64,
     ) -> Self {
+        let (nodes, parents) = snapshot(eg);
+        let queue: std::collections::VecDeque<usize> = (0..nodes.len()).collect();
+        let best = relax(eg, &cost_fn, HashMap::default(), &nodes, &parents, queue);
+        CostTable { best }
+    }
+
+    /// Re-solve the fixpoint after an e-graph mutation, seeded from the
+    /// previous solution. Every previous entry is the cost of a term that
+    /// still exists (nodes are never removed, classes only merge), so the
+    /// find-remapped, min-merged seed is a valid upper bound per class and
+    /// relaxation only moves costs *down* — to the same least fixpoint a
+    /// from-scratch build reaches ([`costs_agree`] pins this, and the
+    /// cache's debug builds assert it on every incremental reuse).
+    ///
+    /// Only the dirty frontier is re-queued: e-nodes *in* a changed class
+    /// (new or merged alternatives) and e-nodes *referencing* one (a merge
+    /// may have lowered the child's min). Improvements propagate to
+    /// transitive ancestors through the ordinary worklist relaxation.
+    pub fn build_incremental(
+        eg: &EGraph,
+        cost_fn: impl Fn(&EGraph, &Node, &dyn Fn(Id) -> f64) -> f64,
+        prev: &CostTable,
+        dirty: &[Id],
+    ) -> Self {
         let mut best: HashMap<Id, (f64, Node)> = HashMap::default();
-        // Snapshot nodes and build a child -> referencing-nodes index.
-        let mut nodes: Vec<(Id, Node)> = Vec::new();
-        for class in eg.classes() {
-            for node in &class.nodes {
-                nodes.push((class.id, node.clone()));
-            }
-        }
-        let mut parents: HashMap<Id, Vec<usize>> = HashMap::default();
-        for (i, (_, node)) in nodes.iter().enumerate() {
-            for &c in &node.children {
-                parents.entry(eg.find_ref(c)).or_default().push(i);
-            }
-        }
-        // Seed with every node; drain with re-push on improvement.
-        let mut queue: std::collections::VecDeque<usize> = (0..nodes.len()).collect();
-        let mut queued: Vec<bool> = vec![true; nodes.len()];
-        while let Some(i) = queue.pop_front() {
-            queued[i] = false;
-            let (cid, node) = &nodes[i];
-            let ready = node.children.iter().all(|&c| best.contains_key(&eg.find_ref(c)));
-            if !ready {
-                continue;
-            }
-            let lookup = |id: Id| best[&eg.find_ref(id)].0;
-            let cost = cost_fn(eg, node, &lookup);
-            let improves = best.get(cid).map_or(true, |(old, _)| cost < *old);
-            if improves {
-                best.insert(*cid, (cost, node.clone()));
-                if let Some(ps) = parents.get(cid) {
-                    for &p in ps {
-                        if !queued[p] {
-                            queued[p] = true;
-                            queue.push_back(p);
-                        }
+        for (&id, entry) in prev.best.iter() {
+            let id = eg.find_ref(id);
+            match best.entry(id) {
+                std::collections::hash_map::Entry::Vacant(v) => {
+                    v.insert(entry.clone());
+                }
+                std::collections::hash_map::Entry::Occupied(mut o) => {
+                    if entry.0 < o.get().0 {
+                        o.insert(entry.clone());
                     }
                 }
             }
         }
+        let (nodes, parents) = snapshot(eg);
+        let mut by_class: HashMap<Id, Vec<usize>> = HashMap::default();
+        for (i, (cid, _)) in nodes.iter().enumerate() {
+            by_class.entry(*cid).or_default().push(i);
+        }
+        let mut queue = std::collections::VecDeque::new();
+        let mut seeded = vec![false; nodes.len()];
+        for d in dirty {
+            let d = eg.find_ref(*d);
+            for idx in [by_class.get(&d), parents.get(&d)].into_iter().flatten() {
+                for &i in idx {
+                    if !seeded[i] {
+                        seeded[i] = true;
+                        queue.push_back(i);
+                    }
+                }
+            }
+        }
+        let best = relax(eg, &cost_fn, best, &nodes, &parents, queue);
         CostTable { best }
     }
 
@@ -115,6 +139,23 @@ impl CostTable {
             CostKind::Latency => CostTable::build(eg, latency_cost),
             CostKind::Area => CostTable::build(eg, area_cost),
             CostKind::Sampled(seed) => CostTable::build(eg, sampled_cost(*seed)),
+        }
+    }
+
+    /// [`CostTable::build_incremental`] for a named [`CostKind`].
+    pub fn build_kind_incremental(
+        eg: &EGraph,
+        kind: &CostKind,
+        prev: &CostTable,
+        dirty: &[Id],
+    ) -> Self {
+        match kind {
+            CostKind::Size => CostTable::build_incremental(eg, size_cost, prev, dirty),
+            CostKind::Latency => CostTable::build_incremental(eg, latency_cost, prev, dirty),
+            CostKind::Area => CostTable::build_incremental(eg, area_cost, prev, dirty),
+            CostKind::Sampled(seed) => {
+                CostTable::build_incremental(eg, sampled_cost(*seed), prev, dirty)
+            }
         }
     }
 
@@ -163,6 +204,86 @@ impl CostTable {
         memo.insert(id, new_id);
         new_id
     }
+}
+
+/// Snapshot every e-node with its class, plus a child -> referencing-nodes
+/// index (both shared by the scratch and incremental fixpoint builds).
+fn snapshot(eg: &EGraph) -> (Vec<(Id, Node)>, HashMap<Id, Vec<usize>>) {
+    let mut nodes: Vec<(Id, Node)> = Vec::new();
+    for class in eg.classes() {
+        for node in eg.class_nodes(class.id) {
+            nodes.push((class.id, node.clone()));
+        }
+    }
+    let mut parents: HashMap<Id, Vec<usize>> = HashMap::default();
+    for (i, (_, node)) in nodes.iter().enumerate() {
+        for &c in &node.children {
+            parents.entry(eg.find_ref(c)).or_default().push(i);
+        }
+    }
+    (nodes, parents)
+}
+
+/// Worklist relaxation to the least cost fixpoint: drain the queue,
+/// re-queueing the parents of any class whose best improves. `best` may be
+/// pre-seeded with upper bounds (the incremental path); relaxation only
+/// ever lowers entries.
+fn relax(
+    eg: &EGraph,
+    cost_fn: &impl Fn(&EGraph, &Node, &dyn Fn(Id) -> f64) -> f64,
+    mut best: HashMap<Id, (f64, Node)>,
+    nodes: &[(Id, Node)],
+    parents: &HashMap<Id, Vec<usize>>,
+    mut queue: std::collections::VecDeque<usize>,
+) -> HashMap<Id, (f64, Node)> {
+    let mut queued: Vec<bool> = vec![false; nodes.len()];
+    for &i in &queue {
+        queued[i] = true;
+    }
+    while let Some(i) = queue.pop_front() {
+        queued[i] = false;
+        let (cid, node) = &nodes[i];
+        let ready = node.children.iter().all(|&c| best.contains_key(&eg.find_ref(c)));
+        if !ready {
+            continue;
+        }
+        let lookup = |id: Id| best[&eg.find_ref(id)].0;
+        let cost = cost_fn(eg, node, &lookup);
+        let improves = best.get(cid).map_or(true, |(old, _)| cost < *old);
+        if improves {
+            best.insert(*cid, (cost, node.clone()));
+            if let Some(ps) = parents.get(cid) {
+                for &p in ps {
+                    if !queued[p] {
+                        queued[p] = true;
+                        queue.push_back(p);
+                    }
+                }
+            }
+        }
+    }
+    best
+}
+
+/// Do two solved tables assign the same cost to every class? The winning
+/// *node* may differ (tie-breaking depends on relaxation order); the cost
+/// fixpoint itself is unique, and this is the equivalence the incremental
+/// build is held to — bit-exact, since per-node cost arithmetic is
+/// deterministic given equal child costs.
+pub fn costs_agree(a: &CostTable, b: &CostTable, eg: &EGraph) -> bool {
+    let canon = |t: &CostTable| -> HashMap<Id, f64> {
+        t.best.iter().map(|(&id, (c, _))| (eg.find_ref(id), *c)).collect()
+    };
+    let (ca, cb) = (canon(a), canon(b));
+    ca.len() == cb.len()
+        && ca.iter().all(|(id, c)| cb.get(id).is_some_and(|d| c.to_bits() == d.to_bits()))
+}
+
+/// Incremental cost-table reuse is on unless `HWSPLIT_COST_INCR=0` — the
+/// escape hatch the perf CI uses to benchmark scratch vs incremental.
+fn incremental_enabled() -> bool {
+    static ON: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *ON.get_or_init(|| std::env::var("HWSPLIT_COST_INCR").map_or(true, |v| v != "0"))
 }
 
 /// Bottom-up fixpoint extractor over an arbitrary (possibly closure-
@@ -222,9 +343,10 @@ const MAX_SAMPLED_TABLES: usize = 256;
 
 #[derive(Debug, Default)]
 struct CacheInner {
-    /// [`EGraph::epoch`] the cached tables were solved against.
-    epoch: u64,
-    tables: HashMap<CostKind, Arc<CostTable>>,
+    /// Per-kind solved tables, each tagged with the [`EGraph::epoch`] it
+    /// was solved against. A stale entry is not discarded on epoch bump:
+    /// it is the *seed* for the next incremental re-solve.
+    tables: HashMap<CostKind, (u64, Arc<CostTable>)>,
     /// Insertion order of the `Sampled` keys currently in `tables`, for
     /// FIFO eviction at [`MAX_SAMPLED_TABLES`].
     sampled_order: std::collections::VecDeque<CostKind>,
@@ -253,29 +375,52 @@ impl ExtractCache {
     /// and a racing duplicate build resolves first-insert-wins — harmless,
     /// since builds are deterministic.
     pub fn table(&self, eg: &EGraph, kind: CostKind) -> (Arc<CostTable>, bool) {
-        {
-            let mut inner = self.inner.lock().unwrap();
-            if inner.epoch != eg.epoch() {
-                inner.tables.clear();
-                inner.sampled_order.clear();
-                inner.epoch = eg.epoch();
+        let epoch = eg.epoch();
+        // A stale entry isn't a plain miss: it seeds an incremental
+        // re-solve over just the dirty ancestor closure (when the graph's
+        // dirty log still covers the entry's epoch).
+        let prev = {
+            let inner = self.inner.lock().unwrap();
+            match inner.tables.get(&kind) {
+                Some((e, t)) if *e == epoch => return (t.clone(), true),
+                Some((e, t)) => Some((*e, t.clone())),
+                None => None,
             }
-            if let Some(t) = inner.tables.get(&kind) {
-                return (t.clone(), true);
+        };
+        let built = Arc::new(match prev {
+            Some((since, old)) if incremental_enabled() => {
+                match eg.changed_since(since) {
+                    Some(dirty) => {
+                        let t = CostTable::build_kind_incremental(eg, &kind, &old, &dirty);
+                        debug_assert!(
+                            costs_agree(&t, &CostTable::build_kind(eg, &kind), eg),
+                            "incremental cost table diverged from scratch ({kind:?})"
+                        );
+                        t
+                    }
+                    None => CostTable::build_kind(eg, &kind),
+                }
+            }
+            _ => CostTable::build_kind(eg, &kind),
+        });
+        let mut inner = self.inner.lock().unwrap();
+        if let Some((e, t)) = inner.tables.get(&kind) {
+            if *e == epoch {
+                // A racing build won; builds are deterministic, keep it.
+                return (t.clone(), false);
             }
         }
-        let built = Arc::new(CostTable::build_kind(eg, &kind));
-        let mut inner = self.inner.lock().unwrap();
-        if !inner.tables.contains_key(&kind) && matches!(kind, CostKind::Sampled(_)) {
-            inner.sampled_order.push_back(kind.clone());
+        let newly = !inner.tables.contains_key(&kind);
+        inner.tables.insert(kind.clone(), (epoch, built.clone()));
+        if newly && matches!(kind, CostKind::Sampled(_)) {
+            inner.sampled_order.push_back(kind);
             if inner.sampled_order.len() > MAX_SAMPLED_TABLES {
                 if let Some(evict) = inner.sampled_order.pop_front() {
                     inner.tables.remove(&evict);
                 }
             }
         }
-        let entry = inner.tables.entry(kind).or_insert(built);
-        (entry.clone(), false)
+        (built, false)
     }
 
     /// Number of cached tables (for tests / stats).
@@ -293,24 +438,24 @@ impl ExtractCache {
     /// must not leak into snapshot bytes), and the sampled-key FIFO order.
     pub(crate) fn export(&self) -> CacheExport {
         let inner = self.inner.lock().unwrap();
-        let mut tables: Vec<(CostKind, Arc<CostTable>)> =
-            inner.tables.iter().map(|(k, t)| (k.clone(), t.clone())).collect();
-        tables.sort_by_key(|(k, _)| kind_rank(k));
-        CacheExport {
-            epoch: inner.epoch,
-            tables,
-            sampled_order: inner.sampled_order.iter().cloned().collect(),
-        }
+        let mut tables: Vec<(CostKind, u64, Arc<CostTable>)> =
+            inner.tables.iter().map(|(k, (e, t))| (k.clone(), *e, t.clone())).collect();
+        tables.sort_by_key(|(k, _, _)| kind_rank(k));
+        CacheExport { tables, sampled_order: inner.sampled_order.iter().cloned().collect() }
     }
 
     /// Rebuild a cache from exported contents (snapshot load). Tables stay
-    /// valid as long as the loaded graph reports the same epoch — which
-    /// [`crate::egraph`]'s raw-parts round trip guarantees.
+    /// valid as long as the loaded graph reports the epoch each entry was
+    /// solved against — which [`crate::egraph`]'s raw-parts round trip
+    /// guarantees for up-to-date entries.
     pub(crate) fn import(export: CacheExport) -> Self {
         ExtractCache {
             inner: Mutex::new(CacheInner {
-                epoch: export.epoch,
-                tables: export.tables.into_iter().collect(),
+                tables: export
+                    .tables
+                    .into_iter()
+                    .map(|(k, e, t)| (k, (e, t)))
+                    .collect(),
                 sampled_order: export.sampled_order.into_iter().collect(),
             }),
         }
@@ -328,10 +473,10 @@ fn kind_rank(k: &CostKind) -> (u8, u64) {
 }
 
 /// Owned [`ExtractCache`] contents, the unit the snapshot codec persists.
+/// Each table carries the [`EGraph::epoch`] it was solved against.
 #[derive(Debug)]
 pub(crate) struct CacheExport {
-    pub epoch: u64,
-    pub tables: Vec<(CostKind, Arc<CostTable>)>,
+    pub tables: Vec<(CostKind, u64, Arc<CostTable>)>,
     pub sampled_order: Vec<CostKind>,
 }
 
@@ -841,6 +986,39 @@ mod tests {
         let cool = extract_designs(&eg, root, &opts, &cache);
         assert_eq!(cool.memo_misses, opts.samples + 2);
         assert_eq!(strs(&cool), strs(&warm), "an unrelated input must not change designs");
+    }
+
+    #[test]
+    fn incremental_cost_tables_match_scratch_after_mutation() {
+        // Warm tables against a partially-enumerated graph, mutate it
+        // (adds + a union), then check the stale-seeded incremental
+        // re-solve lands on the same cost fixpoint as a scratch build.
+        let (mut eg, root) = enumerated(FIG2, 4);
+        let kinds = [CostKind::Latency, CostKind::Area, CostKind::Size, CostKind::Sampled(7)];
+        let cache = ExtractCache::new();
+        for k in &kinds {
+            cache.table(&eg, k.clone());
+        }
+        let alias = eg.add_expr(&parse_expr("(relu (input x [128]))").unwrap());
+        eg.union(root, alias);
+        eg.rebuild();
+        for k in &kinds {
+            let (incr, hit) = cache.table(&eg, k.clone());
+            assert!(!hit, "epoch bumped, must re-solve");
+            let scratch = CostTable::build_kind(&eg, k);
+            assert!(costs_agree(&incr, &scratch, &eg), "diverged for {k:?}");
+            // And the table is re-memoized at the new epoch.
+            let (_, rehit) = cache.table(&eg, k.clone());
+            assert!(rehit);
+        }
+    }
+
+    #[test]
+    fn build_incremental_with_empty_dirty_set_is_identity() {
+        let (eg, _) = enumerated(FIG2, 4);
+        let scratch = CostTable::build_kind(&eg, &CostKind::Latency);
+        let incr = CostTable::build_kind_incremental(&eg, &CostKind::Latency, &scratch, &[]);
+        assert!(costs_agree(&incr, &scratch, &eg));
     }
 
     #[test]

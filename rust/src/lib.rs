@@ -47,13 +47,13 @@
 //! |---|---|
 //! | [`ir`] | EngineIR term language: ops, `RecExpr`, parser, printer, shapes |
 //! | [`ir::spec`] | **the operator registry**: one declarative `OpSpec` per op (arity, attrs, shape rule, eval kernel, lowering template, cost) — every generic pass dispatches through it |
-//! | [`egraph`] | from-scratch e-graph: union-find, hashcons, congruence closure, e-matching, rewrite runner |
+//! | [`egraph`] | from-scratch e-graph: union-find, arena-interned nodes, hashcons, congruence closure, e-matching, wave-parallel rewrite runner |
 //! | [`relay`] | Relay-like frontend operator graphs + workload library |
 //! | [`lower`] | Relay → EngineIR reification (paper Fig. 1) |
 //! | [`rewrites`] | the split-altering rewrite library (paper Fig. 2 + extensions) + [`rewrites::RuleSet`] |
 //! | [`tensor`] | pure-Rust tensor math + EngineIR evaluator (semantics oracle) |
 //! | [`cost`] | analytic area / latency / energy models over designs |
-//! | [`extract`] | parallel, memoized design extraction: cost-table memo, seeded sampling, streaming Pareto frontier |
+//! | [`extract`] | parallel, memoized design extraction: incremental cost-table memo, seeded sampling, streaming Pareto frontier |
 //! | [`persist`] | versioned zero-dependency snapshot format: saturated e-graph + cost tables on disk, loaded with zero re-saturation |
 //! | [`serve`] | `hwsplit serve`: long-running TCP daemon answering design-space queries from loaded snapshots |
 //! | [`sim`] | cycle-approximate accelerator simulator (usefulness oracle) |

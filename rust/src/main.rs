@@ -188,6 +188,9 @@ fn cmd_enumerate(args: &Args) {
     if let Some(workers) = args.get("search-workers").and_then(|v| v.parse().ok()) {
         runner = runner.with_search_workers(workers);
     }
+    if let Some(workers) = args.get("apply-workers").and_then(|v| v.parse().ok()) {
+        runner = runner.with_apply_workers(workers);
+    }
     let t0 = Instant::now();
     let report = runner.run(iters);
     println!("{}", report.table());
@@ -238,6 +241,9 @@ fn cmd_explore(args: &Args) {
         }
         if let Some(workers) = args.get("search-workers").and_then(|v| v.parse().ok()) {
             builder = builder.search_workers(workers);
+        }
+        if let Some(workers) = args.get("apply-workers").and_then(|v| v.parse().ok()) {
+            builder = builder.apply_workers(workers);
         }
         if let Some(workers) = args.get("extract-workers").and_then(|v| v.parse().ok()) {
             builder = builder.extract_workers(workers);

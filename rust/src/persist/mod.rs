@@ -24,6 +24,11 @@
 //!                                 parts, root, report summary, cost tables
 //! ```
 //!
+//! Version 2 (current) encodes each e-node body exactly once, in the arena
+//! section; class member lists and parent back-edges are `u32` arena
+//! indices. Version 1 files (which re-encoded every class member in full)
+//! are still readable — see [`FORMAT_VERSION`].
+//!
 //! All integers are little-endian. Strings are `u32` length + UTF-8 bytes.
 //! Operators are encoded **through the registry** ([`crate::ir::spec`]):
 //! spec name + attribute values per the spec's schema — no per-op code, so
@@ -39,7 +44,7 @@
 //! [`Session::load_snapshot`]: crate::session::Session::load_snapshot
 
 use crate::egraph::graph::EGraphParts;
-use crate::egraph::{EClass, EGraph, Id, RunnerReport, StopReason};
+use crate::egraph::{EClass, EGraph, Id, NodeId, RunnerReport, StopReason};
 use crate::error::{Error, Result};
 use crate::extract::{CacheExport, CostKind, CostTable, ExtractCache};
 use crate::fx::{FxHashMap, FxHasher};
@@ -54,8 +59,14 @@ use std::time::Duration;
 /// First 8 bytes of every snapshot file.
 pub const MAGIC: &[u8; 8] = b"HWSPLIT\0";
 
-/// The snapshot format this build reads and writes.
-pub const FORMAT_VERSION: u32 = 1;
+/// The snapshot format this build writes. Version 2 is arena-aware: node
+/// bodies are encoded once (the arena section) and classes reference them
+/// by `u32` arena index, instead of re-encoding every class member in full
+/// as version 1 did. Cost-table cache entries also carry a per-entry epoch
+/// (v1 stored one cache-wide epoch). Version 1 files remain readable —
+/// the decoder maps their duplicated class nodes back onto arena slots by
+/// content.
+pub const FORMAT_VERSION: u32 = 2;
 
 /// FxHash of a byte string (the checksum / fingerprint primitive — the
 /// in-tree [`FxHasher`] is seed-free and therefore process-stable).
@@ -190,13 +201,15 @@ fn encode_egraph(e: &mut Enc, eg: &EGraph) {
                 e.u8(1);
                 e.id(c.id);
                 e.ty(&c.ty);
-                e.u32(c.nodes.len() as u32);
-                for n in &c.nodes {
-                    e.node(n);
+                // v2: classes reference arena slots — each node body is in
+                // the file exactly once.
+                e.u32(c.node_ids.len() as u32);
+                for &nid in &c.node_ids {
+                    e.u32(nid.index() as u32);
                 }
                 e.u32(c.parents.len() as u32);
-                for &(arena_idx, pid) in &c.parents {
-                    e.u32(arena_idx);
+                for &(nid, pid) in &c.parents {
+                    e.u32(nid.index() as u32);
                     e.id(pid);
                 }
             }
@@ -239,10 +252,10 @@ fn encode_report(e: &mut Enc, r: &RunnerReport) {
 }
 
 fn encode_cache(e: &mut Enc, export: &CacheExport) {
-    e.u64(export.epoch);
     e.u32(export.tables.len() as u32);
-    for (kind, table) in &export.tables {
+    for (kind, epoch, table) in &export.tables {
         e.kind(kind);
+        e.u64(*epoch);
         // Deterministic entry order: snapshot bytes must not depend on
         // HashMap iteration order.
         let mut entries: Vec<(&Id, &(f64, Node))> = table.raw_entries().iter().collect();
@@ -402,10 +415,10 @@ pub(crate) fn decode_snapshot(bytes: &[u8]) -> Result<LoadedSnapshot> {
     if ruleset_hash(&rule_names) != meta.ruleset_hash {
         return Err(corrupt("rule-set hash does not match the stored rule names"));
     }
-    let (egraph, n_classes) = decode_egraph(&mut p)?;
+    let (egraph, n_classes) = decode_egraph(&mut p, meta.format_version)?;
     let root = p.class_id("root", n_classes)?;
     let report = decode_report(&mut p)?;
-    let cache = decode_cache(&mut p, n_classes)?;
+    let cache = decode_cache(&mut p, meta.format_version, n_classes)?;
     if !p.at_end() {
         return Err(corrupt("trailing bytes inside payload"));
     }
@@ -418,7 +431,7 @@ fn decode_header(dec: &mut Dec) -> Result<(SnapshotMeta, u64)> {
         return Err(corrupt("bad magic (not a hwsplit snapshot)"));
     }
     let format_version = dec.u32("format version")?;
-    if format_version != FORMAT_VERSION {
+    if !(1..=FORMAT_VERSION).contains(&format_version) {
         return Err(Error::SnapshotVersion {
             found: format_version,
             supported: FORMAT_VERSION,
@@ -435,7 +448,7 @@ fn decode_header(dec: &mut Dec) -> Result<(SnapshotMeta, u64)> {
     ))
 }
 
-fn decode_egraph(p: &mut Dec) -> Result<(EGraph, usize)> {
+fn decode_egraph(p: &mut Dec, version: u32) -> Result<(EGraph, usize)> {
     let n = p.u64("class count")? as usize;
     let mut parents = Vec::with_capacity(n);
     for _ in 0..n {
@@ -450,6 +463,17 @@ fn decode_egraph(p: &mut Dec) -> Result<(EGraph, usize)> {
     for _ in 0..arena_len {
         arena.push(p.node("arena node", n)?);
     }
+    // v1 files re-encode every class member in full; map those bodies back
+    // onto arena slots by content. A body whose arena copy drifted (v1
+    // canonicalized class nodes and arena entries on different schedules)
+    // is appended — parent back-edges index the original slots, which
+    // append never moves.
+    let mut by_content: FxHashMap<Node, NodeId> = FxHashMap::default();
+    if version == 1 {
+        for (i, node) in arena.iter().enumerate() {
+            by_content.entry(node.clone()).or_insert_with(|| NodeId::from_index(i));
+        }
+    }
     let mut classes: Vec<Option<EClass>> = Vec::with_capacity(n);
     for slot in 0..n {
         if p.u8("class presence")? == 0 {
@@ -462,9 +486,26 @@ fn decode_egraph(p: &mut Dec) -> Result<(EGraph, usize)> {
         }
         let ty = p.ty()?;
         let n_nodes = p.u32("class node count")?;
-        let mut nodes = Vec::with_capacity(n_nodes as usize);
+        let mut node_ids = Vec::with_capacity(n_nodes as usize);
         for _ in 0..n_nodes {
-            nodes.push(p.node("class node", n)?);
+            if version == 1 {
+                let node = p.node("class node", n)?;
+                let nid = match by_content.entry(node.clone()) {
+                    std::collections::hash_map::Entry::Occupied(o) => *o.get(),
+                    std::collections::hash_map::Entry::Vacant(v) => {
+                        let nid = NodeId::from_index(arena.len());
+                        arena.push(node);
+                        *v.insert(nid)
+                    }
+                };
+                node_ids.push(nid);
+            } else {
+                let raw = p.u32("class node id")? as usize;
+                if raw >= arena_len {
+                    return Err(corrupt("class node id out of range"));
+                }
+                node_ids.push(NodeId::from_index(raw));
+            }
         }
         let n_parents = p.u32("class parent count")?;
         let mut cparents = Vec::with_capacity(n_parents as usize);
@@ -474,9 +515,9 @@ fn decode_egraph(p: &mut Dec) -> Result<(EGraph, usize)> {
                 return Err(corrupt("parent arena index out of range"));
             }
             let pid = p.class_id("parent class id", n)?;
-            cparents.push((arena_idx, pid));
+            cparents.push((NodeId::from_index(arena_idx as usize), pid));
         }
-        classes.push(Some(EClass { id, nodes, parents: cparents, ty }));
+        classes.push(Some(EClass { id, node_ids, parents: cparents, ty }));
     }
     let n_pending = p.u32("pending count")?;
     let mut pending = Vec::with_capacity(n_pending as usize);
@@ -538,12 +579,17 @@ fn decode_report(p: &mut Dec) -> Result<RunnerReport> {
     })
 }
 
-fn decode_cache(p: &mut Dec, n_classes: usize) -> Result<ExtractCache> {
-    let epoch = p.u64("cache epoch")?;
+fn decode_cache(p: &mut Dec, version: u32, n_classes: usize) -> Result<ExtractCache> {
+    // v1 stored one cache-wide epoch before the tables; v2 tags each entry.
+    let global_epoch = if version == 1 { Some(p.u64("cache epoch")?) } else { None };
     let n_tables = p.u32("cache table count")?;
     let mut tables = Vec::with_capacity(n_tables as usize);
     for _ in 0..n_tables {
         let kind = p.kind()?;
+        let epoch = match global_epoch {
+            Some(e) => e,
+            None => p.u64("cache table epoch")?,
+        };
         let n_entries = p.u64("cost-table entry count")? as usize;
         let mut best: FxHashMap<Id, (f64, Node)> =
             FxHashMap::with_capacity_and_hasher(n_entries, Default::default());
@@ -553,14 +599,14 @@ fn decode_cache(p: &mut Dec, n_classes: usize) -> Result<ExtractCache> {
             let node = p.node("cost-table node", n_classes)?;
             best.insert(id, (cost, node));
         }
-        tables.push((kind, Arc::new(CostTable::from_raw(best))));
+        tables.push((kind, epoch, Arc::new(CostTable::from_raw(best))));
     }
     let n_order = p.u32("sampled-order count")?;
     let mut sampled_order = Vec::with_capacity(n_order as usize);
     for _ in 0..n_order {
         sampled_order.push(p.kind()?);
     }
-    Ok(ExtractCache::import(CacheExport { epoch, tables, sampled_order }))
+    Ok(ExtractCache::import(CacheExport { tables, sampled_order }))
 }
 
 fn corrupt(msg: &str) -> Error {
@@ -736,6 +782,124 @@ mod tests {
             crate::extract::extract_designs(&snap.egraph, snap.root, &opts, &snap.cache);
         assert_eq!(set.memo_misses, 0, "loaded cache must be warm");
         assert_eq!(set.memo_hits, 6);
+    }
+
+    /// Encode in the legacy v1 layout — full node bodies per class, one
+    /// cache-wide epoch — exercising the reader's back-compat path.
+    fn encode_snapshot_v1(parts: &SnapshotParts) -> Vec<u8> {
+        let mut p = Enc::default();
+        p.str(&parts.lowered.to_string());
+        p.u32(parts.rule_names.len() as u32);
+        for name in &parts.rule_names {
+            p.str(name);
+        }
+        let gp = parts.egraph.to_parts();
+        p.u64(gp.parents.len() as u64);
+        for &par in &gp.parents {
+            p.u32(par);
+        }
+        p.u64(gp.arena.len() as u64);
+        for n in &gp.arena {
+            p.node(n);
+        }
+        for class in &gp.classes {
+            match class {
+                None => p.u8(0),
+                Some(c) => {
+                    p.u8(1);
+                    p.id(c.id);
+                    p.ty(&c.ty);
+                    p.u32(c.node_ids.len() as u32);
+                    for &nid in &c.node_ids {
+                        p.node(&gp.arena[nid.index()]);
+                    }
+                    p.u32(c.parents.len() as u32);
+                    for &(nid, pid) in &c.parents {
+                        p.u32(nid.index() as u32);
+                        p.id(pid);
+                    }
+                }
+            }
+        }
+        p.u32(gp.pending.len() as u32);
+        for &id in &gp.pending {
+            p.id(id);
+        }
+        p.u64(gp.n_unions as u64);
+        p.u8(gp.dirty as u8);
+        p.u32(gp.dirty_classes.len() as u32);
+        for &id in &gp.dirty_classes {
+            p.id(id);
+        }
+        p.u32(gp.merged_roots.len() as u32);
+        for &id in &gp.merged_roots {
+            p.id(id);
+        }
+        p.u64(gp.epoch);
+        p.id(parts.root);
+        encode_report(&mut p, parts.report);
+        let export = parts.cache.export();
+        p.u64(parts.egraph.epoch());
+        p.u32(export.tables.len() as u32);
+        for (kind, _, table) in &export.tables {
+            p.kind(kind);
+            let mut entries: Vec<(&Id, &(f64, Node))> = table.raw_entries().iter().collect();
+            entries.sort_by_key(|(id, _)| **id);
+            p.u64(entries.len() as u64);
+            for (id, (cost, node)) in entries {
+                p.id(*id);
+                p.f64(*cost);
+                p.node(node);
+            }
+        }
+        p.u32(export.sampled_order.len() as u32);
+        for kind in &export.sampled_order {
+            p.kind(kind);
+        }
+        let payload = p.buf;
+        let mut out = Enc::default();
+        out.buf.extend_from_slice(MAGIC);
+        out.u32(1);
+        out.str(parts.workload_name);
+        out.u64(workload_fingerprint(&parts.workload_src));
+        out.u64(ruleset_hash(&parts.rule_names));
+        out.u64(payload.len() as u64);
+        out.u64(fx_bytes(&payload));
+        out.buf.extend_from_slice(&payload);
+        out.buf
+    }
+
+    #[test]
+    fn v1_snapshots_remain_readable_and_serve_identically() {
+        let expr = parse_expr("(invoke-relu (relu-engine 128) (input x [128]))").unwrap();
+        let mut runner = Runner::new(expr.clone(), rewrites::fig2_rules());
+        let report = runner.run(6);
+        let cache = ExtractCache::new();
+        let opts = crate::extract::ExtractOptions { samples: 4, seed: 0, workers: 2 };
+        crate::extract::extract_designs(&runner.egraph, runner.root, &opts, &cache);
+        let parts = SnapshotParts {
+            workload_name: "fig2",
+            workload_src: expr.to_string(),
+            lowered: &expr,
+            rule_names: rewrites::fig2_rules().iter().map(|r| r.name.clone()).collect(),
+            egraph: &runner.egraph,
+            root: runner.root,
+            report: &report,
+            cache: &cache,
+        };
+        let v1 = decode_snapshot(&encode_snapshot_v1(&parts)).expect("v1 decodes");
+        let v2 = decode_snapshot(&encode_snapshot(&parts)).expect("v2 decodes");
+        assert_eq!(v1.meta.format_version, 1);
+        assert_eq!(v2.meta.format_version, FORMAT_VERSION);
+        v1.egraph.check_invariants();
+        // Both decodes answer queries identically, with warm caches.
+        let serve = |snap: &LoadedSnapshot| {
+            let set =
+                crate::extract::extract_designs(&snap.egraph, snap.root, &opts, &snap.cache);
+            assert_eq!(set.memo_misses, 0, "loaded cache must be warm");
+            set.designs.iter().map(|(o, e)| (o.clone(), e.to_string())).collect::<Vec<_>>()
+        };
+        assert_eq!(serve(&v1), serve(&v2));
     }
 
     #[test]

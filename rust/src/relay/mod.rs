@@ -247,6 +247,46 @@ impl GraphBuilder {
         self.transpose(cr)
     }
 
+    /// Grouped-query attention (GQA, unscaled like [`Self::attention`]):
+    /// `q_heads` query heads share `kv_heads` K/V heads. The K and V
+    /// projections are built ONCE and packed as rank-3 `(kv_heads, ·, ·)`
+    /// tensors; the query heads form `q_heads / kv_heads` groups of
+    /// `kv_heads` heads each, and every group batch-matmuls against the
+    /// SAME K/V pack — the graph genuinely shares one K/V subtree across
+    /// multiple `batch-matmul` consumers, which is what makes GQA's
+    /// design space differ from `attention_mh`'s. Each group's context is
+    /// unpacked and sent through its own output projection; group outputs
+    /// are summed (concat-then-project with a block-partitioned weight).
+    pub fn attention_gqa(&mut self, x: Id, name: &str, q_heads: usize, kv_heads: usize) -> Id {
+        let s = self.shape_of(x);
+        let (seq, h) = (s.dim(0), s.dim(1));
+        assert_eq!(q_heads % kv_heads, 0, "kv_heads must divide q_heads");
+        assert_eq!(h % q_heads, 0, "q_heads must divide hidden dim");
+        let dh = h / q_heads;
+        let kv_dim = kv_heads * dh;
+        let k = self.dense_layer(x, &format!("{name}_k"), kv_dim, false);
+        let v = self.dense_layer(x, &format!("{name}_v"), kv_dim, false);
+        let kp = self.pack_heads(k, kv_heads, false); // (kv_heads, dh, S) = K_hᵀ
+        let vp = self.pack_heads(v, kv_heads, true); // (kv_heads, S, dh)
+        let mut out = None;
+        for g in 0..q_heads / kv_heads {
+            let q = self.dense_layer(x, &format!("{name}_q{g}"), kv_dim, false);
+            let qp = self.pack_heads(q, kv_heads, true); // (kv_heads, S, dh)
+            let scores = self.batch_matmul(qp, kp); // (kv_heads, S, S)
+            let probs = self.softmax(scores);
+            let ctx = self.batch_matmul(probs, vp); // (kv_heads, S, dh)
+            let cb = self.transpose(ctx); // (kv_heads, dh, S)
+            let cr = self.reshape(cb, &[kv_dim, seq]);
+            let cu = self.transpose(cr); // (S, kv_dim)
+            let proj = self.dense_layer(cu, &format!("{name}_o{g}"), h, false);
+            out = Some(match out {
+                None => proj,
+                Some(acc) => self.add(acc, proj),
+            });
+        }
+        out.expect("q_heads must be positive")
+    }
+
     /// Finish, returning the operator graph rooted at the last-added node.
     pub fn finish(self) -> RecExpr {
         assert!(!self.expr.is_empty(), "empty workload");
@@ -350,6 +390,47 @@ mod tests {
             parts.push(probs.matmul(&vh));
         }
         let want = Tensor::concat_ax(1, &parts);
+        assert_eq!(got.shape, Shape::new(&[4, 8]));
+        assert!(got.allclose(&want, 1e-5), "diff {:?}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn grouped_query_attention_shares_kv_across_groups() {
+        // 4 query heads over 2 shared K/V heads: group g's head j must
+        // attend against K/V head j (the SAME K/V slices for both groups).
+        // Reference-computed per group from the bound projections.
+        use crate::tensor::{eval_expr, Env, Tensor};
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[4, 8]);
+        let y = b.attention_gqa(x, "a", 4, 2);
+        let e = b.finish_at(y);
+        let env = Env::random_for(&e, 47);
+        let got = eval_expr(&e, &mut env.clone()).unwrap();
+
+        let g = |n: &str| env.tensors[&crate::ir::Symbol::new(n)].clone();
+        let proj = |w: &str, bias: &str| g("x").matmul(&g(w)).bias_add(&g(bias));
+        let (k, v) = (proj("a_k_w", "a_k_b"), proj("a_v_w", "a_v_b"));
+        let mut want: Option<Tensor> = None;
+        for grp in 0..2 {
+            let q = proj(&format!("a_q{grp}_w"), &format!("a_q{grp}_b"));
+            let mut parts = Vec::new();
+            for h in 0..2 {
+                let qh = q.slice_ax(1, h * 2, 2);
+                let kh = k.slice_ax(1, h * 2, 2);
+                let vh = v.slice_ax(1, h * 2, 2);
+                let probs = qh.matmul(&kh.transpose_last()).softmax_last();
+                parts.push(probs.matmul(&vh));
+            }
+            let ctx = Tensor::concat_ax(1, &parts);
+            let o = ctx
+                .matmul(&g(&format!("a_o{grp}_w")))
+                .bias_add(&g(&format!("a_o{grp}_b")));
+            want = Some(match want {
+                None => o,
+                Some(acc) => acc.eadd(&o),
+            });
+        }
+        let want = want.unwrap();
         assert_eq!(got.shape, Shape::new(&[4, 8]));
         assert!(got.allclose(&want, 1e-5), "diff {:?}", got.max_abs_diff(&want));
     }

@@ -15,7 +15,9 @@
 //!   shapes: seq 16, hidden 128, FFN 512) and `attn_block_mh4` (the same
 //!   block with 4-head attention: Q/K/V packed as rank-3 `(heads, ·, ·)`
 //!   tensors routed through `batch-matmul`, so the head axis is a
-//!   first-class split/parallelization dimension) using `matmul`/
+//!   first-class split/parallelization dimension) and `attn_block_gqa`
+//!   (grouped-query attention: 4 Q heads sharing 2 K/V heads, one K/V
+//!   subtree with two `batch-matmul` consumers) using `matmul`/
 //!   `batch-matmul`/`transpose`/`softmax`/`layernorm`/`gelu`/`emul`;
 //! * **mobile CNN** — `mobile_block`, a MobileNet-style depthwise-separable
 //!   unit (`dwconv2d` 3×3 + pointwise 1×1 conv), and `mobile_block_s2`,
@@ -167,6 +169,33 @@ pub fn attn_block_mh4() -> Workload {
     }
 }
 
+/// The grouped-query variant of the encoder block: 4 query heads share 2
+/// K/V heads. K and V are projected ONCE and both query-head groups
+/// batch-matmul against the same rank-3 `(2, ·, ·)` K/V pack, so the
+/// e-graph holds one shared K/V subtree with two `batch-matmul`
+/// consumers — extraction must weigh replicating engines for the private
+/// Q paths against the shared K/V work, a trade-off `attn_block_mh4`
+/// (fully private heads) does not expose. The per-group output
+/// projections live inside `attention_gqa`, so the residual adds its
+/// summed output directly.
+pub fn attn_block_gqa() -> Workload {
+    let mut b = GraphBuilder::new();
+    let x = b.input("x", &[16, 128]);
+    let ctx = b.attention_gqa(x, "attn", 4, 2);
+    let r1 = b.add(ctx, x);
+    let n1 = b.layer_norm(r1, "ln1");
+    let up = b.dense_layer(n1, "ffn_up", 512, false);
+    let act = b.gelu(up);
+    let down = b.dense_layer(act, "ffn_down", 128, false);
+    let r2 = b.add(down, n1);
+    b.layer_norm(r2, "ln2");
+    Workload {
+        name: "attn_block_gqa",
+        description: "BERT-tiny encoder block: grouped-query attention (4 Q heads, 2 shared K/V heads) + GELU FFN + affine layernorm (16x128)",
+        expr: b.finish(),
+    }
+}
+
 /// A MobileNet-style depthwise-separable block: 3×3 depthwise conv
 /// (+bias+relu) followed by a 1×1 pointwise conv (+bias+relu) that doubles
 /// the channels.
@@ -219,6 +248,7 @@ pub fn all_workloads() -> Vec<Workload> {
         mobile_block_s2(),
         attn_block(),
         attn_block_mh4(),
+        attn_block_gqa(),
     ]
 }
 
@@ -237,6 +267,7 @@ pub fn workload_names() -> &'static [&'static str] {
         "mobile_block_s2",
         "attn_block",
         "attn_block_mh4",
+        "attn_block_gqa",
     ]
 }
 
@@ -285,6 +316,7 @@ mod tests {
         assert!(workload_by_name("lenet").is_some());
         assert!(workload_by_name("attn_block").is_some());
         assert!(workload_by_name("attn_block_mh4").is_some());
+        assert!(workload_by_name("attn_block_gqa").is_some());
         assert!(workload_by_name("mobile_block").is_some());
         assert!(workload_by_name("mobile_block_s2").is_some());
         assert!(workload_by_name("nope").is_none());
@@ -322,6 +354,29 @@ mod tests {
         // Packing/unpacking uses batched + 2-D transposes and reshapes.
         assert!(w.expr.count(|op| matches!(op, Op::Transpose)) >= 4);
         assert!(w.expr.count(|op| matches!(op, Op::Reshape(_))) >= 4);
+    }
+
+    #[test]
+    fn attn_block_gqa_shape_and_ops() {
+        let w = attn_block_gqa();
+        assert_eq!(w.expr.typecheck().unwrap(), Ty::Tensor(Shape::new(&[16, 128])));
+        use crate::ir::Op;
+        assert_eq!(
+            w.expr.count(|op| matches!(op, Op::BatchMatmul)),
+            4,
+            "QK^T and PV batch-matmuls per query-head group"
+        );
+        assert_eq!(w.expr.count(|op| matches!(op, Op::Softmax)), 2, "one per group");
+        // Shared K/V: exactly one K and one V projection weight, but TWO
+        // per-group Q and output projection weights.
+        let weights = |suffix: &str| {
+            w.expr
+                .count(|op| matches!(op, Op::Weight(s, _) if s.as_str().starts_with("attn_") && s.as_str().ends_with(suffix)))
+        };
+        assert_eq!(weights("k_w"), 1);
+        assert_eq!(weights("v_w"), 1);
+        assert_eq!(weights("q0_w") + weights("q1_w"), 2);
+        assert_eq!(weights("o0_w") + weights("o1_w"), 2);
     }
 
     #[test]

@@ -158,7 +158,7 @@ mod tests {
         assert_eq!(applied, 1);
         let mut found = false;
         for class in eg.classes() {
-            for n in &class.nodes {
+            for n in eg.class_nodes(class.id) {
                 if n.op == (Op::MmEngine { m: 4, k: 27, n: 36 }) {
                     found = true;
                 }
@@ -176,14 +176,12 @@ mod tests {
         assert_eq!(applied, 1);
         // Root class should now reach an invoke-mm-relu behind a reshape.
         let reshapes: Vec<_> = eg
-            .class(root)
-            .nodes
-            .iter()
+            .class_nodes(root)
             .filter(|n| n.op.kind() == OpKind::Reshape)
             .cloned()
             .collect();
         let fused = reshapes.iter().any(|rs| {
-            super::super::find_in_class(&eg, rs.children[0], OpKind::InvokeMmRelu).is_some()
+            eg.class_nodes(rs.children[0]).any(|n| n.op.kind() == OpKind::InvokeMmRelu)
         });
         assert!(fused);
     }

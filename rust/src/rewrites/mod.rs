@@ -5,7 +5,7 @@
 //!
 //! | group | rules | direction |
 //! |---|---|---|
-//! | [`split`] | `split-{relu,add}-x{2,4}`, `split-{emul,gelu}-x2`, `split-mm-{m,n,k}-x2`, `split-conv-{oh,ow,k,c}-x2`, `split-pool-{c,oh,ow}-x2`, `split-dwconv-{c,oh}-x2`, `split-bmm-batch[-par]-x2` | smaller hardware, more software (Fig. 2 rewrite 1, generalized; the bmm-batch rules tile the head axis of the canonical batch-matmul loop) |
+//! | [`split`] | `split-{relu,add}-x{2,4}`, `split-{emul,gelu}-x2`, `split-mm-{m,n,k}-x2`, `split-conv-{oh,ow,k,c}-x2`, `split-pool-{c,oh,ow}-x2`, `split-dwconv-{c,oh}-x2`, `split-bmm-batch[-par]-x{2,4}` | smaller hardware, more software (Fig. 2 rewrite 1, generalized; the bmm-batch rules tile the head axis of the canonical batch-matmul loop, emitting canonical `iadd`-offset slice starts so tilings compose) |
 //! | [`sched`] | `parallelize`, `serialize`, `loop-reorder` | trade time-multiplexing for hardware replication (Fig. 2 rewrite 2) |
 //! | [`fuse`] | `conv-as-im2col-mm`, `fuse-mm-relu` | share/merge engines across op types |
 //! | [`storage`] | `sram-to-dram`, `dram-to-sram`, `double-buffer`, `undouble-buffer` | storage choices |
@@ -25,7 +25,7 @@ pub mod sched;
 pub mod split;
 pub mod storage;
 
-use crate::egraph::{EGraph, Id, Rewrite};
+use crate::egraph::{ApplyGraph, Id, Rewrite};
 use crate::error::Error;
 use crate::ir::{Node, Op, OpKind};
 
@@ -117,6 +117,8 @@ pub fn all_rules() -> Vec<Rewrite> {
         fuse::split_mmrelu_n(2),
         split::split_bmm_batch(2),
         split::split_bmm_batch_par(2),
+        split::split_bmm_batch(4),
+        split::split_bmm_batch_par(4),
         sched::loop_reorder(),
         storage::double_buffer(),
         storage::undouble_buffer(),
@@ -145,19 +147,19 @@ pub fn rules_by_names(names: &[&str]) -> Result<Vec<Rewrite>, Error> {
 
 /// The engine op of an invocation node's first child (via the class type —
 /// every class of engine type has exactly one engine signature).
-pub(crate) fn engine_of(eg: &EGraph, invoke: &Node) -> Option<Op> {
+pub(crate) fn engine_of(eg: &ApplyGraph, invoke: &Node) -> Option<Op> {
     eg.ty(invoke.children[0]).engine().cloned()
 }
 
 /// Find an e-node of `kind` inside class `id`.
-pub(crate) fn find_in_class(eg: &EGraph, id: Id, kind: OpKind) -> Option<Node> {
-    eg.class(id).nodes.iter().find(|n| n.op.kind() == kind).cloned()
+pub(crate) fn find_in_class(eg: &ApplyGraph, id: Id, kind: OpKind) -> Option<Node> {
+    eg.class_nodes(id).find(|n| n.op.kind() == kind).cloned()
 }
 
 /// Build `(slice axis len (imul (lvar var) chunk) x)` — the canonical
 /// schedule-indexed slice used by all split rewrites.
 pub(crate) fn slice_for_loop(
-    eg: &mut EGraph,
+    eg: &mut ApplyGraph,
     var: crate::ir::Symbol,
     axis: usize,
     chunk_stride: usize,

@@ -84,7 +84,7 @@ mod tests {
             rw.apply(&mut eg, id, &s);
         }
         eg.rebuild();
-        assert!(eg.class(root).nodes.iter().any(|n| matches!(n.op, Op::SchedPar { .. })));
+        assert!(eg.class_nodes(root).any(|n| matches!(n.op, Op::SchedPar { .. })));
     }
 
     #[test]
@@ -113,11 +113,8 @@ mod tests {
         }
         eg.rebuild();
         // The class now holds a loop whose outer axis is 1.
-        let has_swapped = eg
-            .class(root)
-            .nodes
-            .iter()
-            .any(|n| matches!(n.op, Op::SchedLoop { axis: 1, .. }));
+        let has_swapped =
+            eg.class_nodes(root).any(|n| matches!(n.op, Op::SchedLoop { axis: 1, .. }));
         assert!(has_swapped);
 
         // Differential check of the textual swap.

@@ -12,16 +12,12 @@
 //! dynamic node-scan appliers.
 
 use super::{engine_of, slice_for_loop};
-use crate::egraph::{EGraph, Id, Rewrite, Subst};
+use crate::egraph::{ApplyGraph, Id, Rewrite, Subst};
 use crate::ir::{in_dim, Node, Op, OpKind, Shape, Symbol};
 
 /// Smallest engine dimension worth creating: splits below this are declined
 /// (they bloat the space without adding interesting hardware points).
 pub const MIN_DIM: usize = 4;
-
-fn fresh(prefix: &str) -> Symbol {
-    Symbol::fresh(prefix)
-}
 
 /// `(invoke-relu (relu-engine w) x)` ⇒
 /// `(sched-loop i 0 f (invoke-relu (relu-engine w/f) (slice 0 w/f (imul (lvar i) w/f) x)))`
@@ -29,7 +25,7 @@ pub fn split_relu(factor: usize) -> Rewrite {
     Rewrite::node_scan(
         &format!("split-relu-x{factor}"),
         OpKind::InvokeRelu,
-        move |eg: &mut EGraph, _id: Id, s: &Subst| {
+        move |eg: &mut ApplyGraph, _id: Id, s: &Subst| {
             let n = s.node.as_ref().unwrap();
             let w = match engine_of(eg, n)? {
                 Op::ReluEngine { w } => w,
@@ -39,7 +35,7 @@ pub fn split_relu(factor: usize) -> Rewrite {
                 return None;
             }
             let chunk = w / factor;
-            let var = fresh("i");
+            let var = eg.fresh_var("i");
             let slice = slice_for_loop(eg, var, 0, chunk, chunk, n.children[1]);
             let e = eg.add(Node::leaf(Op::ReluEngine { w: chunk }));
             let inv = eg.add(Node::new(Op::InvokeRelu, vec![e, slice]));
@@ -63,7 +59,7 @@ pub fn split_add(factor: usize) -> Rewrite {
                 return None;
             }
             let chunk = w / factor;
-            let var = fresh("i");
+            let var = eg.fresh_var("i");
             let sa = slice_for_loop(eg, var, 0, chunk, chunk, n.children[1]);
             let sb = slice_for_loop(eg, var, 0, chunk, chunk, n.children[2]);
             let e = eg.add(Node::leaf(Op::AddEngine { w: chunk }));
@@ -87,7 +83,7 @@ pub fn split_mm_m(factor: usize) -> Rewrite {
             return None;
         }
         let chunk = m / factor;
-        let var = fresh("m");
+        let var = eg.fresh_var("m");
         let sa = slice_for_loop(eg, var, 0, chunk, chunk, n.children[1]);
         let e = eg.add(Node::leaf(Op::MmEngine { m: chunk, k, n: nn }));
         let inv = eg.add(Node::new(Op::InvokeMm, vec![e, sa, n.children[2]]));
@@ -107,7 +103,7 @@ pub fn split_mm_n(factor: usize) -> Rewrite {
             return None;
         }
         let chunk = nn / factor;
-        let var = fresh("n");
+        let var = eg.fresh_var("n");
         let sb = slice_for_loop(eg, var, 1, chunk, chunk, n.children[2]);
         let e = eg.add(Node::leaf(Op::MmEngine { m, k, n: chunk }));
         let inv = eg.add(Node::new(Op::InvokeMm, vec![e, n.children[1], sb]));
@@ -128,7 +124,7 @@ pub fn split_mm_k(factor: usize) -> Rewrite {
             return None;
         }
         let chunk = k / factor;
-        let var = fresh("k");
+        let var = eg.fresh_var("k");
         let sa = slice_for_loop(eg, var, 1, chunk, chunk, n.children[1]);
         let sb = slice_for_loop(eg, var, 0, chunk, chunk, n.children[2]);
         let e = eg.add(Node::leaf(Op::MmEngine { m, k: chunk, n: nn }));
@@ -154,7 +150,7 @@ pub fn split_conv_oh(factor: usize) -> Rewrite {
             let ohc = oh / factor;
             // Input rows per output chunk (the halo): (ohc-1)*stride + kh.
             let in_rows = in_dim(ohc, kh, stride);
-            let var = fresh("r");
+            let var = eg.fresh_var("r");
             // Row chunk i starts at input row i*ohc*stride.
             let sx = slice_for_loop(eg, var, 1, ohc * stride, in_rows, n.children[1]);
             let e = eg.add(Node::leaf(Op::ConvEngine { oh: ohc, ow, c, k, kh, kw, stride }));
@@ -182,7 +178,7 @@ pub fn split_conv_ow(factor: usize) -> Rewrite {
             // Input cols per output chunk: the halo is kw wide (was kh
             // before kernels went rectangular — a latent square-kernel bug).
             let in_cols = in_dim(owc, kw, stride);
-            let var = fresh("q");
+            let var = eg.fresh_var("q");
             let sx = slice_for_loop(eg, var, 2, owc * stride, in_cols, n.children[1]);
             let e = eg.add(Node::leaf(Op::ConvEngine { oh, ow: owc, c, k, kh, kw, stride }));
             let inv = eg.add(Node::new(Op::InvokeConv, vec![e, sx, n.children[2]]));
@@ -206,7 +202,7 @@ pub fn split_conv_k(factor: usize) -> Rewrite {
                 return None;
             }
             let kc = k / factor;
-            let var = fresh("g");
+            let var = eg.fresh_var("g");
             let sw = slice_for_loop(eg, var, 0, kc, kc, n.children[2]);
             let e = eg.add(Node::leaf(Op::ConvEngine { oh, ow, c, k: kc, kh, kw, stride }));
             let inv = eg.add(Node::new(Op::InvokeConv, vec![e, n.children[1], sw]));
@@ -230,7 +226,7 @@ pub fn split_conv_c(factor: usize) -> Rewrite {
                 return None;
             }
             let cc = c / factor;
-            let var = fresh("c");
+            let var = eg.fresh_var("c");
             let sx = slice_for_loop(eg, var, 0, cc, cc, n.children[1]);
             let sw = slice_for_loop(eg, var, 1, cc, cc, n.children[2]);
             let e = eg.add(Node::leaf(Op::ConvEngine { oh, ow, c: cc, k, kh, kw, stride }));
@@ -255,7 +251,7 @@ pub fn split_pool_c(factor: usize) -> Rewrite {
                 return None;
             }
             let cc = c / factor;
-            let var = fresh("pc");
+            let var = eg.fresh_var("pc");
             let sx = slice_for_loop(eg, var, 0, cc, cc, n.children[1]);
             let e = eg.add(Node::leaf(Op::PoolEngine { oh, ow, c: cc, kh, kw, stride }));
             let inv = eg.add(Node::new(Op::InvokePool, vec![e, sx]));
@@ -280,7 +276,7 @@ pub fn split_pool_oh(factor: usize) -> Rewrite {
             }
             let ohc = oh / factor;
             let in_rows = in_dim(ohc, kh, stride);
-            let var = fresh("pr");
+            let var = eg.fresh_var("pr");
             let sx = slice_for_loop(eg, var, 1, ohc * stride, in_rows, n.children[1]);
             let e = eg.add(Node::leaf(Op::PoolEngine { oh: ohc, ow, c, kh, kw, stride }));
             let inv = eg.add(Node::new(Op::InvokePool, vec![e, sx]));
@@ -306,7 +302,7 @@ pub fn split_pool_ow(factor: usize) -> Rewrite {
             }
             let owc = ow / factor;
             let in_cols = in_dim(owc, kw, stride);
-            let var = fresh("pq");
+            let var = eg.fresh_var("pq");
             let sx = slice_for_loop(eg, var, 2, owc * stride, in_cols, n.children[1]);
             let e = eg.add(Node::leaf(Op::PoolEngine { oh, ow: owc, c, kh, kw, stride }));
             let inv = eg.add(Node::new(Op::InvokePool, vec![e, sx]));
@@ -330,7 +326,7 @@ pub fn split_gelu(factor: usize) -> Rewrite {
                 return None;
             }
             let chunk = w / factor;
-            let var = fresh("gl");
+            let var = eg.fresh_var("gl");
             let slice = slice_for_loop(eg, var, 0, chunk, chunk, n.children[1]);
             let e = eg.add(Node::leaf(Op::GeluEngine { w: chunk }));
             let inv = eg.add(Node::new(Op::InvokeGelu, vec![e, slice]));
@@ -358,7 +354,7 @@ pub fn split_dwconv_c(factor: usize) -> Rewrite {
                 return None;
             }
             let cc = c / factor;
-            let var = fresh("dc");
+            let var = eg.fresh_var("dc");
             let sx = slice_for_loop(eg, var, 0, cc, cc, n.children[1]);
             let sw = slice_for_loop(eg, var, 0, cc, cc, n.children[2]);
             let e = eg.add(Node::leaf(Op::DwConvEngine { oh, ow, c: cc, kh, kw, stride }));
@@ -384,7 +380,7 @@ pub fn split_emul(factor: usize) -> Rewrite {
                 return None;
             }
             let chunk = w / factor;
-            let var = fresh("em");
+            let var = eg.fresh_var("em");
             let sa = slice_for_loop(eg, var, 0, chunk, chunk, n.children[1]);
             let sb = slice_for_loop(eg, var, 0, chunk, chunk, n.children[2]);
             let e = eg.add(Node::leaf(Op::EmulEngine { w: chunk }));
@@ -411,7 +407,7 @@ pub fn split_dwconv_oh(factor: usize) -> Rewrite {
             }
             let ohc = oh / factor;
             let in_rows = in_dim(ohc, kh, stride);
-            let var = fresh("dr");
+            let var = eg.fresh_var("dr");
             let sx = slice_for_loop(eg, var, 1, ohc * stride, in_rows, n.children[1]);
             let e = eg.add(Node::leaf(Op::DwConvEngine { oh: ohc, ow, c, kh, kw, stride }));
             let inv = eg.add(Node::new(Op::InvokeDwConv, vec![e, sx, n.children[2]]));
@@ -425,59 +421,117 @@ pub fn split_dwconv_oh(factor: usize) -> Rewrite {
 // ---------------------------------------------------------------------
 
 /// One operand of the canonical per-slice matmul body:
-/// `(reshape SH (slice AXIS LEN (imul (lvar v) CHUNK) SRC))`.
+/// `(reshape SH (slice AXIS LEN START SRC))` where `START` is either
+/// `(imul (lvar v) CHUNK)` (an untiled loop) or, in *canonical iadd form*,
+/// `(iadd OFFSET (imul (lvar v) CHUNK))` with `OFFSET` independent of `v`
+/// (a loop that previous tilings already re-indexed).
 struct SliceMapOperand {
     reshape_sh: Shape,
     axis: usize,
     len: usize,
     chunk: usize,
+    /// The `v`-independent addend of an iadd-form start (`None` for the
+    /// plain `imul` form).
+    offset: Option<Id>,
     src: Id,
+}
+
+/// The `CHUNK` of an `(imul (lvar v) CHUNK)` member of class `cls`, if any.
+fn imul_lvar_chunk(eg: &ApplyGraph, cls: Id, v: Symbol) -> Option<usize> {
+    for st in eg.class_nodes(cls) {
+        if !matches!(st.op, Op::IMul) {
+            continue;
+        }
+        let lv_ok = eg.class_nodes(st.children[0]).any(|n| matches!(n.op, Op::LVar(s) if s == v));
+        if !lv_ok {
+            continue;
+        }
+        let chunk = eg.class_nodes(st.children[1]).find_map(|n| match n.op {
+            Op::Int(c) if c >= 0 => Some(c as usize),
+            _ => None,
+        });
+        if chunk.is_some() {
+            return chunk;
+        }
+    }
+    None
+}
+
+/// True when class `cls` is recognizably independent of loop variable `v`:
+/// an int literal, an `imul` of some *other* loop variable, or an `iadd` of
+/// such terms — exactly the start-offset shapes canonical tilings build.
+/// Referencing an offset that secretly depends on `v` would leave `v` free
+/// in the rewritten body, so unrecognized shapes decline the match.
+fn start_independent_of(eg: &ApplyGraph, cls: Id, v: Symbol, depth: usize) -> bool {
+    if depth == 0 {
+        return false;
+    }
+    eg.class_nodes(cls).any(|n| match n.op {
+        Op::Int(_) => true,
+        Op::IMul => eg
+            .class_nodes(n.children[0])
+            .any(|l| matches!(l.op, Op::LVar(s) if s != v)),
+        Op::IAdd => {
+            start_independent_of(eg, n.children[0], v, depth - 1)
+                && start_independent_of(eg, n.children[1], v, depth - 1)
+        }
+        _ => false,
+    })
 }
 
 /// Match the slice-map operand chain rooted at class `cls`, parameterized
 /// by loop variable `v`. Every level scans the class's e-nodes for the
-/// canonical member, so the match survives class growth.
-fn slice_map_operand(eg: &EGraph, cls: Id, v: Symbol) -> Option<SliceMapOperand> {
-    for r in &eg.class(cls).nodes {
+/// canonical member, so the match survives class growth — including the
+/// iadd-form starts earlier tilings of the same loop nest produced.
+fn slice_map_operand(eg: &ApplyGraph, cls: Id, v: Symbol) -> Option<SliceMapOperand> {
+    for r in eg.class_nodes(cls) {
         let Op::Reshape(sh) = &r.op else { continue };
-        for sl in &eg.class(r.children[0]).nodes {
+        for sl in eg.class_nodes(r.children[0]) {
             let Op::SliceAx { axis, len } = &sl.op else { continue };
             let (axis, len) = (*axis, *len);
-            for st in &eg.class(sl.children[0]).nodes {
-                if !matches!(st.op, Op::IMul) {
-                    continue;
-                }
-                let lv_ok = eg
-                    .class(st.children[0])
-                    .nodes
-                    .iter()
-                    .any(|n| matches!(n.op, Op::LVar(s) if s == v));
-                if !lv_ok {
-                    continue;
-                }
-                let chunk = eg.class(st.children[1]).nodes.iter().find_map(|n| match n.op {
-                    Op::Int(c) if c >= 0 => Some(c as usize),
-                    _ => None,
+            let start = sl.children[0];
+            // Untiled form: start = (imul (lvar v) chunk).
+            if let Some(chunk) = imul_lvar_chunk(eg, start, v) {
+                return Some(SliceMapOperand {
+                    reshape_sh: sh.clone(),
+                    axis,
+                    len,
+                    chunk,
+                    offset: None,
+                    src: sl.children[1],
                 });
-                if let Some(chunk) = chunk {
-                    return Some(SliceMapOperand {
-                        reshape_sh: sh.clone(),
-                        axis,
-                        len,
-                        chunk,
-                        src: sl.children[1],
-                    });
+            }
+            // Canonical iadd form: start = (iadd offset (imul (lvar v) chunk)).
+            for st in eg.class_nodes(start) {
+                if !matches!(st.op, Op::IAdd) {
+                    continue;
                 }
+                let Some(chunk) = imul_lvar_chunk(eg, st.children[1], v) else { continue };
+                if !start_independent_of(eg, st.children[0], v, 4) {
+                    continue;
+                }
+                return Some(SliceMapOperand {
+                    reshape_sh: sh.clone(),
+                    axis,
+                    len,
+                    chunk,
+                    offset: Some(st.children[0]),
+                    src: sl.children[1],
+                });
             }
         }
     }
     None
 }
 
-/// Rebuild one operand chain with the tiled start expression
-/// `(iadd (imul (lvar outer) inner_extent*chunk) (imul (lvar inner) chunk))`.
+/// Rebuild one operand chain with the tiled start in canonical iadd form:
+/// `(iadd OFFSET' (imul (lvar inner) chunk))` where `OFFSET'` folds any
+/// pre-existing offset with the new outer term
+/// `(imul (lvar outer) inner_extent*chunk)`. Keeping the start
+/// right-leaning with the innermost variable outermost in the iadd is what
+/// lets [`slice_map_operand`] re-match the inner loop for further tiling.
 fn tiled_operand(
-    eg: &mut EGraph,
+    eg: &mut ApplyGraph,
     op: &SliceMapOperand,
     outer: Symbol,
     inner: Symbol,
@@ -486,10 +540,14 @@ fn tiled_operand(
     let lo = eg.add(Node::leaf(Op::LVar(outer)));
     let co = eg.add(Node::leaf(Op::Int((inner_extent * op.chunk) as i64)));
     let so = eg.add(Node::new(Op::IMul, vec![lo, co]));
+    let offset = match op.offset {
+        None => so,
+        Some(off) => eg.add(Node::new(Op::IAdd, vec![off, so])),
+    };
     let li = eg.add(Node::leaf(Op::LVar(inner)));
     let ci = eg.add(Node::leaf(Op::Int(op.chunk as i64)));
     let si = eg.add(Node::new(Op::IMul, vec![li, ci]));
-    let start = eg.add(Node::new(Op::IAdd, vec![so, si]));
+    let start = eg.add(Node::new(Op::IAdd, vec![offset, si]));
     let sl = eg.add(Node::new(Op::SliceAx { axis: op.axis, len: op.len }, vec![start, op.src]));
     eg.add(Node::new(Op::Reshape(op.reshape_sh.clone()), vec![sl]))
 }
@@ -527,9 +585,9 @@ fn split_bmm_batch_impl(factor: usize, par: bool) -> Rewrite {
         }
         // Locate the canonical per-slice invoke-mm body.
         let mut found = None;
-        'search: for back in &eg.class(lp.children[0]).nodes {
+        'search: for back in eg.class_nodes(lp.children[0]) {
             let Op::Reshape(back_sh) = &back.op else { continue };
-            for inv in &eg.class(back.children[0]).nodes {
+            for inv in eg.class_nodes(back.children[0]) {
                 if !matches!(inv.op, Op::InvokeMm) {
                     continue;
                 }
@@ -543,8 +601,8 @@ fn split_bmm_batch_impl(factor: usize, par: bool) -> Rewrite {
         }
         let (back_sh, engine, a, b) = found?;
         let inner_extent = extent / factor;
-        let outer_v = fresh("hb");
-        let inner_v = fresh("hh");
+        let outer_v = eg.fresh_var("hb");
+        let inner_v = eg.fresh_var("hh");
         let ra = tiled_operand(eg, &a, outer_v, inner_v, inner_extent);
         let rb = tiled_operand(eg, &b, outer_v, inner_v, inner_extent);
         let inv = eg.add(Node::new(Op::InvokeMm, vec![engine, ra, rb]));
@@ -577,7 +635,7 @@ pub fn split_bmm_batch_par(factor: usize) -> Rewrite {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::egraph::Runner;
+    use crate::egraph::{EGraph, Runner};
     use crate::ir::parse_expr;
 
     /// Apply one rule once to a seed program and return the e-graph.
@@ -604,8 +662,7 @@ mod tests {
         );
         assert_eq!(applied, 1);
         // The root class now also contains a sched-loop node.
-        let has_loop =
-            eg.class(root).nodes.iter().any(|n| matches!(n.op, Op::SchedLoop { .. }));
+        let has_loop = eg.class_nodes(root).any(|n| matches!(n.op, Op::SchedLoop { .. }));
         assert!(has_loop);
     }
 
@@ -631,7 +688,7 @@ mod tests {
         // Engines 64, 32, 16, 8, 4 should all exist as e-nodes.
         let mut widths: Vec<usize> = vec![];
         for class in runner.egraph.classes() {
-            for n in &class.nodes {
+            for n in runner.egraph.class_nodes(class.id) {
                 if let Op::ReluEngine { w } = n.op {
                     widths.push(w);
                 }
@@ -649,8 +706,7 @@ mod tests {
             split_mm_k(2),
         );
         assert_eq!(applied, 1);
-        let has_reduce =
-            eg.class(root).nodes.iter().any(|n| matches!(n.op, Op::SchedReduce { .. }));
+        let has_reduce = eg.class_nodes(root).any(|n| matches!(n.op, Op::SchedReduce { .. }));
         assert!(has_reduce);
     }
 
@@ -687,7 +743,7 @@ mod tests {
         let (eg, root, applied) = apply_once(src, split_pool_ow(2));
         assert_eq!(applied, 1);
         let has_loop =
-            eg.class(root).nodes.iter().any(|n| matches!(n.op, Op::SchedLoop { axis: 2, .. }));
+            eg.class_nodes(root).any(|n| matches!(n.op, Op::SchedLoop { axis: 2, .. }));
         assert!(has_loop);
     }
 
@@ -696,7 +752,7 @@ mod tests {
         let src = "(invoke-emul (emul-engine 32) (input x [32]) (input y [32]))";
         let (eg, root, a1) = apply_once(src, split_emul(2));
         assert_eq!(a1, 1);
-        assert!(eg.class(root).nodes.iter().any(|n| matches!(n.op, Op::SchedLoop { .. })));
+        assert!(eg.class_nodes(root).any(|n| matches!(n.op, Op::SchedLoop { .. })));
         let (_, _, a2) =
             apply_once("(invoke-emul (emul-engine 4) (input x [4]) (input y [4]))", split_emul(2));
         assert_eq!(a2, 0);
@@ -715,15 +771,11 @@ mod tests {
         // The root class gains an outer 2-tile whose body is an inner
         // 2-loop over the re-indexed slices.
         let outer = eg
-            .class(root)
-            .nodes
-            .iter()
+            .class_nodes(root)
             .find(|n| matches!(n.op, Op::SchedLoop { extent: 2, .. }))
             .expect("outer tile");
         let inner_ok = eg
-            .class(outer.children[0])
-            .nodes
-            .iter()
+            .class_nodes(outer.children[0])
             .any(|n| matches!(n.op, Op::SchedLoop { extent: 2, .. }));
         assert!(inner_ok, "inner tile");
     }
@@ -732,11 +784,7 @@ mod tests {
     fn bmm_batch_par_split_emits_parallel_outer_tile() {
         let (eg, root, applied) = apply_once(BMM_LOOP, split_bmm_batch_par(2));
         assert_eq!(applied, 1);
-        assert!(eg
-            .class(root)
-            .nodes
-            .iter()
-            .any(|n| matches!(n.op, Op::SchedPar { extent: 2, .. })));
+        assert!(eg.class_nodes(root).any(|n| matches!(n.op, Op::SchedPar { extent: 2, .. })));
     }
 
     #[test]
@@ -797,8 +845,61 @@ mod tests {
                      (input x [4 10 8]) (weight w [8 4 3 1]))";
         let (eg, root, applied) = apply_once(src, split_conv_ow(2));
         assert_eq!(applied, 1);
-        let has_loop =
-            eg.class(root).nodes.iter().any(|n| matches!(n.op, Op::SchedLoop { .. }));
+        let has_loop = eg.class_nodes(root).any(|n| matches!(n.op, Op::SchedLoop { .. }));
         assert!(has_loop);
+    }
+
+    /// The canonical 8-batch loop — deep enough for two levels of tiling.
+    const BMM_LOOP8: &str = "(sched-loop b 0 8 (reshape [1 4 8] (invoke-mm (mm-engine 4 8 8) \
+        (reshape [4 8] (slice 0 1 (imul (lvar b) 1) (input qa [8 4 8]))) \
+        (reshape [8 8] (slice 0 1 (imul (lvar b) 1) (input kb [8 8 8]))))))";
+
+    #[test]
+    fn bmm_batch_factor4_tiles_eight_heads() {
+        let (eg, root, applied) = apply_once(BMM_LOOP8, split_bmm_batch(4));
+        assert_eq!(applied, 1);
+        let outer = eg
+            .class_nodes(root)
+            .find(|n| matches!(n.op, Op::SchedLoop { extent: 4, .. }))
+            .expect("outer 4-tile");
+        assert!(eg
+            .class_nodes(outer.children[0])
+            .any(|n| matches!(n.op, Op::SchedLoop { extent: 2, .. })));
+    }
+
+    #[test]
+    fn bmm_batch_split_rematches_iadd_starts() {
+        // A once-tiled inner loop (iadd-form slice starts, as tiled_operand
+        // emits them) must still match, so deeper tilings compose.
+        let once_tiled = "(sched-loop i 0 4 (reshape [1 4 8] (invoke-mm (mm-engine 4 8 8) \
+            (reshape [4 8] (slice 0 1 (iadd (imul (lvar o) 4) (imul (lvar i) 1)) (input qa [8 4 8]))) \
+            (reshape [8 8] (slice 0 1 (iadd (imul (lvar o) 4) (imul (lvar i) 1)) (input kb [8 8 8]))))))";
+        let (eg, root, applied) = apply_once(once_tiled, split_bmm_batch(2));
+        assert_eq!(applied, 1, "iadd-form starts must stay re-matchable");
+        // The re-tiled start folds the old offset: offset' = o*4 + outer*2.
+        let outer = eg
+            .class_nodes(root)
+            .find(|n| matches!(n.op, Op::SchedLoop { extent: 2, .. }))
+            .expect("outer tile");
+        assert!(eg
+            .class_nodes(outer.children[0])
+            .any(|n| matches!(n.op, Op::SchedLoop { extent: 2, .. })));
+    }
+
+    #[test]
+    fn bmm_batch_two_level_tiling_is_semantics_preserving() {
+        // Textual form of tiling BMM_LOOP8 twice (x2 then x2 on the inner
+        // loop, offsets folded the way tiled_operand does): same product.
+        use crate::tensor::{eval_expr, Env};
+        let e = parse_expr(BMM_LOOP8).unwrap();
+        let want = eval_expr(&e, &mut Env::random_for(&e, 11)).unwrap();
+        let twice = "(sched-loop o 0 2 (sched-loop m 0 2 (sched-loop i 0 2 \
+            (reshape [1 4 8] (invoke-mm (mm-engine 4 8 8) \
+            (reshape [4 8] (slice 0 1 (iadd (iadd (imul (lvar o) 4) (imul (lvar m) 2)) (imul (lvar i) 1)) (input qa [8 4 8]))) \
+            (reshape [8 8] (slice 0 1 (iadd (iadd (imul (lvar o) 4) (imul (lvar m) 2)) (imul (lvar i) 1)) (input kb [8 8 8]))))))))";
+        let t = parse_expr(twice).unwrap();
+        assert_eq!(t.typecheck().unwrap(), e.typecheck().unwrap());
+        let got = eval_expr(&t, &mut Env::random_for(&t, 11)).unwrap();
+        assert!(want.allclose(&got, 1e-6), "{:?}", want.max_abs_diff(&got));
     }
 }

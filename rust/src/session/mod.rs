@@ -32,15 +32,17 @@
 //! (with `--features pjrt`) the PJRT runtime executing AOT-compiled Pallas
 //! kernels.
 //!
-//! Threading: the enumeration *apply* phase mutates the e-graph
-//! single-threaded, but its search phase, like extraction and evaluation,
-//! only reads — all three fan out across the same scoped worker pool
+//! Threading: the enumeration *commit* step mutates the e-graph
+//! single-threaded, but everything else — rule search, the apply phase's
+//! wave-parallel staging of rewrite right-hand sides, extraction and
+//! evaluation — only reads, fanning out across the same scoped worker pool
 //! ([`parallel_map`], shared via [`crate::par`]). Enumeration knobs:
 //! [`SessionBuilder::scheduler`] picks the rule-fairness policy,
-//! [`SessionBuilder::search_workers`] sizes the search pool, and
-//! [`SessionBuilder::track_designs`] opts back in to per-iteration design
-//! counting (off by default here — sessions enumerate once and query, they
-//! don't plot growth curves).
+//! [`SessionBuilder::search_workers`] / [`SessionBuilder::apply_workers`]
+//! size the search and apply pools (bit-identical results for any width),
+//! and [`SessionBuilder::track_designs`] opts back in to per-iteration
+//! design counting (off by default here — sessions enumerate once and
+//! query, they don't plot growth curves).
 //!
 //! The read side is parallel, memoized and streaming (see
 //! [`crate::extract`]): sampled extractions fan out over
@@ -96,6 +98,7 @@ pub struct SessionBuilder {
     iters: Option<usize>,
     workers: Option<usize>,
     search_workers: Option<usize>,
+    apply_workers: Option<usize>,
     extract_workers: Option<usize>,
     scheduler: Option<Box<dyn Scheduler>>,
     track_designs: Option<bool>,
@@ -142,6 +145,15 @@ impl SessionBuilder {
     /// deterministic for any width.
     pub fn search_workers(mut self, workers: usize) -> Self {
         self.search_workers = Some(workers);
+        self
+    }
+
+    /// Worker-pool width for the enumeration apply phase's staging fan-out
+    /// (default: the [`SessionBuilder::workers`] setting). Intents are
+    /// committed in deterministic stream order, so the resulting e-graph is
+    /// bit-identical for any width.
+    pub fn apply_workers(mut self, workers: usize) -> Self {
+        self.apply_workers = Some(workers);
         self
     }
 
@@ -225,6 +237,7 @@ impl SessionBuilder {
             iters: self.iters.unwrap_or(8),
             workers,
             search_workers: self.search_workers.unwrap_or(workers).max(1),
+            apply_workers: self.apply_workers.unwrap_or(workers).max(1),
             extract_workers: self.extract_workers.unwrap_or(workers).max(1),
             scheduler: self.scheduler,
             limits,
@@ -252,6 +265,7 @@ pub struct Session {
     iters: usize,
     workers: usize,
     search_workers: usize,
+    apply_workers: usize,
     extract_workers: usize,
     scheduler: Option<Box<dyn Scheduler>>,
     limits: RunnerLimits,
@@ -298,7 +312,8 @@ impl Session {
             let t0 = std::time::Instant::now();
             let mut runner = Runner::new(self.lowered.clone(), self.rules.clone())
                 .with_limits(self.limits.clone())
-                .with_search_workers(self.search_workers);
+                .with_search_workers(self.search_workers)
+                .with_apply_workers(self.apply_workers);
             if let Some(scheduler) = self.scheduler.take() {
                 runner = runner.with_scheduler(scheduler);
             }
@@ -516,6 +531,7 @@ impl Session {
             iters: 0, // enumeration already ran in the writing process
             workers,
             search_workers: workers,
+            apply_workers: workers,
             extract_workers: workers,
             scheduler: None,
             limits,

@@ -101,6 +101,141 @@ fn incremental_engine_equivalence_property() {
     });
 }
 
+// ---------------------------------------------------------------------
+// Parallel apply determinism
+// ---------------------------------------------------------------------
+//
+// Unlike the engine-mode comparison above, apply *width* must be truly
+// invisible: staging fans out against the frozen graph but intents commit
+// single-threaded in stream order, and staged fresh loop-variable names
+// are derived from (iteration, stream index) rather than a global
+// counter — so the e-graphs are bit-identical, not merely isomorphic.
+
+/// A complete structural rendering of the e-graph: epoch, then every live
+/// class in id order with its type and its e-nodes in member order. Equal
+/// fingerprints mean the same classes holding the same nodes in the same
+/// slots after the same mutation history.
+fn fingerprint(eg: &hwsplit::egraph::EGraph) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "epoch={} classes={} nodes={}",
+        eg.epoch(),
+        eg.num_classes(),
+        eg.total_nodes()
+    );
+    let mut classes: Vec<_> = eg.classes().collect();
+    classes.sort_by_key(|c| c.id);
+    for c in classes {
+        let _ = writeln!(s, "class {:?} ty={:?}", c.id, c.ty);
+        for n in eg.class_nodes(c.id) {
+            let _ = writeln!(s, "  {n:?}");
+        }
+    }
+    s
+}
+
+/// Every report field except wall-clock durations (those legitimately
+/// vary run to run; nothing else may).
+fn canon_report(r: &hwsplit::egraph::RunnerReport) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "stop={:?} nodes={} classes={} designs={}",
+        r.stop, r.nodes, r.classes, r.designs_lower_bound
+    );
+    let _ = writeln!(s, "rules={:?}", r.rule_names);
+    for it in &r.iterations {
+        let _ = writeln!(
+            s,
+            "iter {} nodes={} classes={} applied={} unions={} designs={} searched={} waves={}",
+            it.iteration,
+            it.nodes,
+            it.classes,
+            it.applied,
+            it.unions_total,
+            it.designs_lower_bound,
+            it.searched_classes,
+            it.apply_waves
+        );
+        for pr in &it.per_rule {
+            let _ = writeln!(s, "  {pr:?}");
+        }
+    }
+    s
+}
+
+fn saturate_at_width(
+    workload: &str,
+    rules: RuleSet,
+    iters: usize,
+    apply_workers: usize,
+) -> (String, String) {
+    let w = workload_by_name(workload).expect("known workload");
+    let lowered = lower_default(&w.expr).expect("workload lowers");
+    let mut runner = Runner::new(lowered, rules.rules())
+        .with_limits(RunnerLimits { max_nodes: 12_000, ..Default::default() })
+        .with_apply_workers(apply_workers);
+    let rep = runner.run(iters);
+    (fingerprint(&runner.egraph), canon_report(&rep))
+}
+
+fn check_apply_widths(workload: &str, rules: RuleSet, iters: usize) {
+    let (fp1, rep1) = saturate_at_width(workload, rules, iters, 1);
+    for workers in [2usize, 4] {
+        let (fp, rep) = saturate_at_width(workload, rules, iters, workers);
+        assert_eq!(fp, fp1, "{workload}: e-graph differs at apply-workers={workers}");
+        assert_eq!(rep, rep1, "{workload}: report differs at apply-workers={workers}");
+    }
+}
+
+#[test]
+fn lenet_is_bit_identical_across_apply_widths() {
+    check_apply_widths("lenet", RuleSet::Paper, 3);
+}
+
+#[test]
+fn attn_block_mh4_is_bit_identical_across_apply_widths() {
+    check_apply_widths("attn_block_mh4", RuleSet::All, 2);
+}
+
+/// Session-level: widths 1 and 4 must serve identical designs and an
+/// identical Pareto frontier (Debug-rendered identities and costs; timing
+/// fields excluded by construction).
+#[test]
+fn served_frontiers_are_identical_across_apply_widths() {
+    use hwsplit::session::{Objective, Query, Session};
+    use std::fmt::Write as _;
+    let serve = |apply_workers: usize| -> String {
+        let mut session = Session::builder()
+            .workload(workload_by_name("attn_block_mh4").expect("known workload"))
+            .rules(RuleSet::All)
+            .iters(2)
+            .limits(RunnerLimits {
+                max_nodes: 8_000,
+                track_designs: false,
+                ..Default::default()
+            })
+            .apply_workers(apply_workers)
+            .build()
+            .expect("session builds");
+        let ev = session
+            .query(&Query::new().objective(Objective::Latency).samples(8).seed(3))
+            .expect("query answers");
+        let mut s = String::new();
+        for d in &ev.designs {
+            let _ = writeln!(s, "design [{}] {} {:?}", d.point.origin, d.point.expr, d.point.cost);
+        }
+        for p in &ev.frontier {
+            let _ = writeln!(s, "frontier {} {:?}", p.expr, p.cost);
+        }
+        s
+    };
+    assert_eq!(serve(1), serve(4), "served designs/frontier differ across apply widths");
+}
+
 /// The incremental engine's whole point: after the first iteration it
 /// searches far fewer classes than live in the graph.
 #[test]

@@ -24,6 +24,7 @@ const CASES: &[(&str, RuleSet, usize, usize)] = &[
     ("relu128", RuleSet::Fig2, 4, 8_000),
     ("lenet", RuleSet::Paper, 3, 8_000),
     ("attn_block_mh4", RuleSet::All, 2, 8_000),
+    ("attn_block_gqa", RuleSet::All, 2, 8_000),
     ("mobile_block_s2", RuleSet::Paper, 3, 8_000),
 ];
 

@@ -46,7 +46,7 @@ fn fig2_three_programs_share_one_eclass() {
     runner.run(4);
     let eg = &runner.egraph;
     let root = eg.find_ref(runner.root);
-    let kinds: Vec<&Op> = eg.class(root).nodes.iter().map(|n| &n.op).collect();
+    let kinds: Vec<&Op> = eg.class_nodes(root).map(|n| &n.op).collect();
     assert!(kinds.iter().any(|op| matches!(op, Op::InvokeRelu)), "original member");
     assert!(
         kinds.iter().any(|op| matches!(op, Op::SchedLoop { extent: 2, .. })),

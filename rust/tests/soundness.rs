@@ -107,6 +107,16 @@ fn attn_block_mh4_all_rules_sound() {
     check_workload("attn_block_mh4", RuleSet::All, 2, 6);
 }
 
+/// Grouped-query transformer block: both query-head groups batch-matmul
+/// against the SAME shared K/V pack, so the lowered graph holds one K/V
+/// subtree with two consumers. Head-axis tilings and everything downstream
+/// must stay semantics-preserving when rewrites fire inside that shared
+/// subtree (a change there affects both groups at once).
+#[test]
+fn attn_block_gqa_all_rules_sound() {
+    check_workload("attn_block_gqa", RuleSet::All, 2, 6);
+}
+
 /// Depthwise-separable block: dwconv reification + channel/row splits.
 #[test]
 fn mobile_block_paper_rules_sound() {
