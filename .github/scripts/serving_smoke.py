@@ -1,0 +1,108 @@
+#!/usr/bin/env python3
+"""CI smoke for `hwsplit serve`: drive the daemon end to end over the wire.
+
+Run against a daemon started with:
+  hwsplit serve --snapshots <file> --port <port> \
+      --serve-workers 1 --queue-depth 1 --request-timeout-ms 5000
+
+The 1-worker/1-slot sizing makes backpressure deterministic: with
+connection A parked on the worker and B in the queue slot, C must be
+refused with a typed `busy` error. Protocol spec: docs/serving.md.
+"""
+
+import json
+import socket
+import sys
+import time
+
+HOST = "127.0.0.1"
+PORT = int(sys.argv[1]) if len(sys.argv) > 1 else 7979
+
+
+def connect(retries=60):
+    for _ in range(retries):
+        try:
+            s = socket.create_connection((HOST, PORT), timeout=30)
+            s.settimeout(30)
+            return s
+        except OSError:
+            time.sleep(0.5)
+    raise SystemExit("daemon never came up")
+
+
+def rpc(f, req):
+    f.write(json.dumps(req) + "\n")
+    f.flush()
+    line = f.readline()
+    if not line:
+        raise SystemExit(f"connection closed instead of answering {req}")
+    return json.loads(line)
+
+
+def expect(cond, what, resp):
+    if not cond:
+        raise SystemExit(f"FAIL {what}: {resp}")
+    print(f"ok: {what}")
+
+
+a = connect()
+fa = a.makefile("rw")
+resp = rpc(fa, {"cmd": "ping"})
+expect(resp.get("pong") is True, "ping answers pong", resp)
+
+resp = rpc(fa, {"cmd": "query", "workload": "relu128", "samples": 8})
+expect(
+    resp.get("ok") is True and resp.get("workload") == "relu128",
+    "query served from the snapshot",
+    resp,
+)
+
+# Busy injection: the single worker is parked on connection A; B takes the
+# one queue slot; C must be refused immediately with a typed busy error.
+b = connect(retries=1)
+time.sleep(0.5)  # let the acceptor enqueue B
+c = connect(retries=1)
+line = c.makefile("r").readline()
+expect(bool(line), "refused connection still gets a reply line", line)
+busy = json.loads(line)
+expect(
+    busy.get("ok") is False
+    and busy.get("code") == "busy"
+    and isinstance(busy.get("retry_after_ms"), int),
+    "queue overflow answers typed busy with a retry hint",
+    busy,
+)
+c.close()
+
+resp = rpc(fa, {"cmd": "reload"})
+expect(
+    resp.get("ok") is True and "relu128" in resp.get("reloaded", ""),
+    "hot reload swaps the resident snapshot",
+    resp,
+)
+
+stats = rpc(fa, {"cmd": "stats"})
+expect(
+    stats.get("served") == 1
+    and stats.get("rejected") == 1
+    and stats.get("queue_depth") == 1
+    and stats.get("timeouts") == 0
+    and stats.get("errors") == 0,
+    "stats counters are exact (served/rejected/queued)",
+    stats,
+)
+
+# Free the worker; the queued connection B must now be served.
+fa.close()
+a.close()
+fb = b.makefile("rw")
+resp = rpc(fb, {"cmd": "query", "workload": "relu128", "samples": 8})
+expect(
+    resp.get("ok") is True,
+    "queued connection drains once the worker frees",
+    resp,
+)
+
+resp = rpc(fb, {"cmd": "shutdown"})
+expect(resp.get("shutting_down") is True, "graceful shutdown acknowledged", resp)
+print("serving smoke passed")

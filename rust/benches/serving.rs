@@ -1,9 +1,13 @@
 //! Bench — the snapshot-serving trajectory: cold-loading a persisted
 //! saturated e-graph vs re-saturating from scratch, and concurrent query
 //! throughput against one shared loaded session (the `hwsplit serve` data
-//! path, minus the socket). Results merge into `bench_results.json` next
-//! to the `perf_quick` records as `{workload, engine, wall_ms, ...}` rows,
-//! with `queries_per_sec` / `p50_ms` / `p99_ms` on the throughput row.
+//! path, minus the socket), plus an overload run against a real TCP
+//! daemon sized far below the offered load — proving degradation is
+//! graceful: typed `busy` rejects, bounded p99 for what is admitted, zero
+//! hangs. Results merge into `bench_results.json` next to the
+//! `perf_quick` records as `{workload, engine, wall_ms, ...}` rows, with
+//! `queries_per_sec` / `p50_ms` / `p99_ms` on the throughput row and
+//! `offered` / `completed` / `rejected` on the overload row.
 //!
 //! Budgets are deliberately tiny so the CI job costs seconds; set
 //! `HWSPLIT_PERF_FULL=1` for locally meaningful numbers.
@@ -16,10 +20,12 @@ use hwsplit::relay::workload_by_name;
 use hwsplit::report::{JsonRecords, JsonValue};
 use hwsplit::rewrites::RuleSet;
 use hwsplit::serve::json::Json;
-use hwsplit::serve::percentile;
+use hwsplit::serve::{percentile, ServeConfig, Server, SessionStore};
 use hwsplit::session::{Objective, Query, Session};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 const WORKLOAD: &str = "attn_block_mh4";
 const RULES: RuleSet = RuleSet::All;
@@ -27,7 +33,7 @@ const RESULTS: &str = "bench_results.json";
 /// Engine labels this bench owns in `bench_results.json` (replaced on
 /// every run; everything else in the file is preserved).
 const OWNED_ENGINES: &[&str] =
-    &["serve-cold-load", "serve-resaturate", "serve-throughput"];
+    &["serve-cold-load", "serve-resaturate", "serve-throughput", "serve-overload"];
 
 fn main() {
     let full = std::env::var_os("HWSPLIT_PERF_FULL").is_some();
@@ -130,8 +136,121 @@ fn main() {
         ],
     ));
 
+    // --- Overload: offered load > capacity degrades gracefully -----------
+    // A real TCP daemon sized tiny (2 workers, queue depth 2) under 16
+    // concurrent one-shot clients. The contract under overload: every
+    // connection gets an answer (a result or a typed `busy` — never a
+    // hang), the admitted requests keep a bounded p99, and the excess
+    // shows up as nonzero typed rejects instead of unbounded queueing.
+    let mut store = SessionStore::new(2);
+    store.register(&path).expect("fixture registers");
+    let config = ServeConfig {
+        workers: 2,
+        queue_depth: 2,
+        request_timeout_ms: 10_000,
+        ..ServeConfig::default()
+    };
+    let server =
+        Arc::new(Server::bind_with("127.0.0.1:0", Arc::new(store), config).expect("binds"));
+    let addr = server.local_addr().expect("bound addr");
+    let acceptor = {
+        let server = server.clone();
+        std::thread::spawn(move || server.run())
+    };
+
+    let request = format!("{{\"workload\":\"{WORKLOAD}\",\"samples\":{samples},\"seed\":0}}\n");
+    // Pre-warm: the first query decodes the snapshot and fills the memo,
+    // so the timed section measures steady-state overload behavior.
+    assert!(one_shot(addr, &request).0, "pre-warm query must complete");
+
+    let threads: usize = 16;
+    let shots: usize = if full { 8 } else { 4 };
+    let offered = threads * shots;
+    let t0 = Instant::now();
+    let mut admitted_lat: Vec<f64> = Vec::new();
+    let mut rejected = 0usize;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                let request = &request;
+                scope.spawn(move || {
+                    let mut lat = Vec::new();
+                    let mut rej = 0usize;
+                    for _ in 0..shots {
+                        let (completed, ms) = one_shot(addr, request);
+                        if completed {
+                            lat.push(ms);
+                        } else {
+                            rej += 1;
+                        }
+                    }
+                    (lat, rej)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (lat, rej) = h.join().expect("overload client");
+            admitted_lat.extend(lat);
+            rejected += rej;
+        }
+    });
+    let overload_wall = t0.elapsed().as_secs_f64().max(1e-9);
+    server.request_shutdown();
+    acceptor.join().expect("accept loop joins").expect("accept loop ran clean");
+
+    admitted_lat.sort_by(f64::total_cmp);
+    let completed = admitted_lat.len();
+    let overload_p99 = percentile(&admitted_lat, 99.0);
+    let overload_qps = completed as f64 / overload_wall;
+    assert_eq!(completed + rejected, offered, "every connection got an answer");
+    assert!(completed > 0, "the admitted fraction must be served");
+    assert!(rejected > 0, "offered load 4x capacity must produce typed rejects");
+    assert!(overload_p99.is_finite(), "admitted requests keep a measurable p99");
+    println!(
+        "{WORKLOAD:<14} overload {threads}x{shots} vs 2+2 capacity: \
+         {completed} completed, {rejected} rejected (typed busy), \
+         p99 {overload_p99:.2} ms, {overload_qps:.1} queries/s"
+    );
+    rows.push(row(
+        WORKLOAD,
+        "serve-overload",
+        overload_wall * 1e3,
+        &[
+            ("offered", offered as f64),
+            ("completed", completed as f64),
+            ("rejected", rejected as f64),
+            ("queries_per_sec", overload_qps),
+            ("p99_ms", overload_p99),
+            ("workers", 2.0),
+            ("queue_depth", 2.0),
+        ],
+    ));
+
     merge_into_results(RESULTS, rows);
     println!("merged {} serving records into {RESULTS}", OWNED_ENGINES.len());
+}
+
+/// One connect → query → single response line → close. Returns
+/// `(completed, latency_ms)`: `completed` is `false` for a typed `busy`
+/// refusal. Anything else — garbage, a hang past the read timeout, an
+/// unexpected error — panics, because an overloaded daemon must still
+/// answer every connection in a typed way.
+fn one_shot(addr: SocketAddr, request: &str) -> (bool, f64) {
+    let t = Instant::now();
+    let stream = TcpStream::connect(addr).expect("connects");
+    stream.set_read_timeout(Some(Duration::from_secs(30))).expect("read timeout set");
+    let mut writer = stream.try_clone().expect("clones");
+    let mut reader = BufReader::new(stream);
+    writer.write_all(request.as_bytes()).expect("writes");
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("an overloaded daemon must still answer");
+    let j = Json::parse(line.trim()).expect("response is valid JSON");
+    let ms = t.elapsed().as_secs_f64() * 1e3;
+    match (j.get("ok").and_then(Json::as_bool), j.get("code").and_then(Json::as_str)) {
+        (Some(true), _) => (true, ms),
+        (Some(false), Some("busy")) => (false, ms),
+        _ => panic!("unexpected overload response: {line}"),
+    }
 }
 
 /// One `bench_results.json` record: the shared `{workload, engine,

@@ -51,6 +51,14 @@ pub enum Error {
     /// A snapshot file is structurally invalid: bad magic, truncated,
     /// checksum mismatch, or an undecodable payload.
     SnapshotCorrupt(String),
+    /// The serving daemon's bounded pending queue is full — typed
+    /// backpressure instead of unbounded queueing. Carries the queue
+    /// occupancy at refusal time and a retry hint derived from observed
+    /// service latency (also sent on the wire as `retry_after_ms`).
+    Busy { queued: usize, retry_after_ms: u64 },
+    /// A request ran past its deadline (`--request-timeout-ms`). `phase`
+    /// names the pipeline stage whose cooperative check observed it.
+    Timeout { phase: &'static str },
 }
 
 impl fmt::Display for Error {
@@ -91,6 +99,13 @@ impl fmt::Display for Error {
                  (supports version {supported}); re-save the snapshot"
             ),
             Error::SnapshotCorrupt(msg) => write!(f, "corrupt snapshot: {msg}"),
+            Error::Busy { queued, retry_after_ms } => write!(
+                f,
+                "server busy: {queued} connections pending; retry in ~{retry_after_ms} ms"
+            ),
+            Error::Timeout { phase } => {
+                write!(f, "request deadline exceeded (observed in {phase})")
+            }
         }
     }
 }
@@ -174,6 +189,21 @@ mod tests {
         let msg = Error::SnapshotCorrupt("checksum mismatch at byte 12".into()).to_string();
         assert!(msg.contains("corrupt snapshot"), "{msg}");
         assert!(msg.contains("checksum mismatch"), "{msg}");
+    }
+
+    #[test]
+    fn busy_carries_queue_depth_and_retry_hint() {
+        let msg = Error::Busy { queued: 7, retry_after_ms: 120 }.to_string();
+        assert!(msg.contains("busy"), "{msg}");
+        assert!(msg.contains('7'), "{msg}");
+        assert!(msg.contains("120"), "{msg}");
+    }
+
+    #[test]
+    fn timeout_names_the_observing_phase() {
+        let msg = Error::Timeout { phase: "extract" }.to_string();
+        assert!(msg.contains("deadline"), "{msg}");
+        assert!(msg.contains("extract"), "{msg}");
     }
 
     #[test]

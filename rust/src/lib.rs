@@ -55,7 +55,7 @@
 //! | [`cost`] | analytic area / latency / energy models over designs |
 //! | [`extract`] | parallel, memoized design extraction: incremental cost-table memo, seeded sampling, streaming Pareto frontier |
 //! | [`persist`] | versioned zero-dependency snapshot format: saturated e-graph + cost tables on disk, loaded with zero re-saturation |
-//! | [`serve`] | `hwsplit serve`: long-running TCP daemon answering design-space queries from loaded snapshots |
+//! | [`serve`] | `hwsplit serve`: TCP daemon (bounded worker pool, typed backpressure, per-request deadlines, hot snapshot reload) answering design-space queries from loaded snapshots — wire protocol spec in `docs/serving.md` |
 //! | [`sim`] | cycle-approximate accelerator simulator (usefulness oracle) |
 //! | [`runtime`] | PJRT executor for AOT-compiled Pallas engine kernels (feature `pjrt`; stub otherwise) |
 //! | [`session`] | **the primary API**: reusable sessions, queries, pluggable backends |
@@ -64,6 +64,11 @@
 //! | [`par`] | scoped worker pool shared by search/extraction/evaluation fan-outs |
 //! | [`prop`] | tiny property-testing helpers (PRNG + runners) |
 //! | [`report`] | table / CSV emitters shared by benches |
+//!
+//! A one-page dataflow map of how these fit together (relay → e-graph
+//! saturation → extraction → persistence → serving, with the design
+//! decisions behind each stage) lives in `docs/architecture.md`; the
+//! serving wire protocol is specified in `docs/serving.md`.
 
 pub mod bench_util;
 pub mod cost;

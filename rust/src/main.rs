@@ -11,6 +11,9 @@
 //!                   [--objective latency|area|balanced] [--csv dir]
 //!                   [--snapshot-out file.hws] [--snapshot-in file.hws]
 //! hwsplit serve     --snapshots a.hws,b.hws [--port 7878] [--max-sessions 4]
+//!                   [--serve-workers N] [--queue-depth 64]
+//!                   [--request-timeout-ms 10000] [--max-connections 256]
+//!                   [--reload-marker FILE]
 //! hwsplit simulate  --workload mlp [--seed 3]
 //! hwsplit run       --workload mlp [--design split] [--artifacts DIR]
 //! ```
@@ -28,7 +31,7 @@ use hwsplit::relay::{all_workloads, workload_by_name};
 use hwsplit::report::{fmt_f64, Table};
 use hwsplit::rewrites::{self, RuleSet};
 use hwsplit::runtime::{EngineRuntime, PjrtBackend};
-use hwsplit::serve::{Server, SessionStore};
+use hwsplit::serve::{ServeConfig, Server, SessionStore};
 use hwsplit::session::{Backend, Objective, Query, Session};
 use hwsplit::sim::{simulate, SimConfig};
 use hwsplit::tensor::{eval_expr, eval_expr_backend, Env};
@@ -384,8 +387,8 @@ fn maybe_save_snapshot(args: &Args, session: &mut Session) {
 }
 
 /// `hwsplit serve`: load snapshots, answer line-delimited JSON queries over
-/// TCP until a client sends `{"cmd":"shutdown"}`. See [`hwsplit::serve`]
-/// for the protocol.
+/// TCP until a client sends `{"cmd":"shutdown"}`. Wire protocol spec:
+/// `docs/serving.md`; architecture: [`hwsplit::serve`].
 fn cmd_serve(args: &Args) {
     let snapshots = args.get("snapshots").unwrap_or_else(|| {
         eprintln!("serve needs --snapshots FILE[,FILE...] (write them with explore --snapshot-out)");
@@ -393,6 +396,15 @@ fn cmd_serve(args: &Args) {
     });
     let port = args.usize("port", 7878);
     let host = args.get("host").unwrap_or("127.0.0.1");
+    let defaults = ServeConfig::default();
+    let config = ServeConfig {
+        workers: args.usize("serve-workers", defaults.workers),
+        queue_depth: args.usize("queue-depth", defaults.queue_depth).max(1),
+        request_timeout_ms: args.usize("request-timeout-ms", defaults.request_timeout_ms as usize)
+            as u64,
+        max_connections: args.usize("max-connections", defaults.max_connections).max(1),
+        reload_marker: args.get("reload-marker").map(std::path::PathBuf::from),
+    };
     let mut store = SessionStore::new(args.usize("max-sessions", 4));
     for path in snapshots.split(',').map(str::trim).filter(|p| !p.is_empty()) {
         match store.register(path) {
@@ -403,15 +415,22 @@ fn cmd_serve(args: &Args) {
             }
         }
     }
-    let server = Server::bind(&format!("{host}:{port}"), std::sync::Arc::new(store))
-        .unwrap_or_else(|e| {
-            eprintln!("bind {host}:{port}: {e}");
-            std::process::exit(2);
-        });
+    let server =
+        Server::bind_with(&format!("{host}:{port}"), std::sync::Arc::new(store), config.clone())
+            .unwrap_or_else(|e| {
+                eprintln!("bind {host}:{port}: {e}");
+                std::process::exit(2);
+            });
+    let mode = if config.workers == 0 {
+        format!("legacy thread-per-connection, cap {}", config.max_connections)
+    } else {
+        format!("{} workers, queue depth {}", config.workers, config.queue_depth)
+    };
     println!(
-        "hwsplit serve listening on {} ({} workloads registered)",
+        "hwsplit serve listening on {} ({} workloads registered; {mode}; request timeout {} ms)",
         server.local_addr().expect("bound socket has an address"),
         snapshots.split(',').filter(|p| !p.trim().is_empty()).count(),
+        config.request_timeout_ms,
     );
     server.run().unwrap_or_else(|e| {
         eprintln!("serve: {e}");
@@ -419,8 +438,9 @@ fn cmd_serve(args: &Args) {
     });
     let s = server.stats().summary();
     println!(
-        "shut down after {} queries ({} errors), {:.1} queries/sec, p50 {:.2} ms, p99 {:.2} ms",
-        s.served, s.errors, s.queries_per_sec, s.p50_ms, s.p99_ms
+        "shut down after {} queries ({} errors, {} rejected, {} timeouts), \
+         {:.1} queries/sec, p50 {:.2} ms, p99 {:.2} ms",
+        s.served, s.errors, s.rejected, s.timeouts, s.queries_per_sec, s.p50_ms, s.p99_ms
     );
 }
 

@@ -10,6 +10,14 @@
 //! and zero fixpoint rebuilds ([`Session::load_snapshot`] restores the
 //! graph epoch verbatim, so the epoch-keyed [`ExtractCache`] stays warm).
 //!
+//! Snapshots are the serving daemon's unit of deployment: `hwsplit serve`
+//! registers one workload per file (via [`peek_header`], no payload
+//! decode), lazily loads sessions on first query, and **hot-reloads** a
+//! re-written file in place — [`crate::serve::SessionStore::reload`]
+//! re-decodes resident snapshots and atomically swaps them without
+//! dropping in-flight connections, so a fleet can roll new enumerations
+//! with zero downtime (see `docs/serving.md`).
+//!
 //! ## File layout
 //!
 //! ```text

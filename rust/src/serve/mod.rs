@@ -10,62 +10,86 @@
 //!
 //! ## Protocol
 //!
-//! One request per line, one JSON object per response line:
-//!
-//! ```text
-//! → {"cmd":"query","workload":"relu128","objective":"latency","samples":16,"seed":0}
-//! ← {"ok":true,"workload":"relu128","objective":"latency","designs":12,
-//!    "frontier":3,"best_area":128,"best_latency":34.1,"memo_hits":18,
-//!    "memo_misses":0,"latency_ms":1.42}
-//! → {"cmd":"stats"}
-//! ← {"ok":true,"served":9,"errors":1,"queries_per_sec":310.2,
-//!    "p50_ms":1.4,"p99_ms":6.0,"cached_sessions":2}
-//! → {"cmd":"ping"}        ← {"ok":true,"pong":true}
-//! → {"cmd":"shutdown"}    ← {"ok":true,"shutting_down":true}
-//! ```
+//! One request per line, one JSON object per response line. Commands:
+//! `query` / `stats` / `ping` / `reload` / `shutdown`; failures answer
+//! `{"ok":false,"code":...,"error":...}` with a typed code from
+//! [`protocol::ErrorCode`]. **The authoritative wire-protocol spec is
+//! `docs/serving.md`** — request/response schemas, the full error
+//! taxonomy, timeout/backpressure semantics and client examples; a test
+//! cross-checks that document against the protocol enums.
 //!
 //! ## Architecture
 //!
-//! * [`SessionStore`] — lazily loads one [`Session`] per snapshot file and
-//!   bounds residency with an LRU (`--max-sessions`): serving many
-//!   workloads from one daemon without holding every e-graph at once.
-//! * One thread per connection; each request fans its extraction over the
-//!   session's worker pool through [`Session::answer_query`] (`&self`-only
-//!   — many threads share one `Arc<Session>`, cost-table fixpoints are
-//!   shared through the session memo).
-//! * **Error isolation**: a malformed line or failed query answers
-//!   `{"ok":false,"error":...}` on that connection and affects nothing
-//!   else; connection I/O errors kill only their own thread.
-//! * [`ServerStats`] — per-request latency + throughput counters behind
-//!   atomics, drained by `{"cmd":"stats"}` (and by the serving bench).
+//! * **Bounded acceptor + fixed worker pool** ([`ServeConfig`]): the
+//!   accept loop owns the listener and hands connections to
+//!   `--serve-workers` pool threads through a bounded queue
+//!   (`--queue-depth`). When the queue is full the acceptor answers an
+//!   immediate typed `busy` error with a `retry_after_ms` hint and drops
+//!   the connection — load past capacity degrades into fast typed
+//!   rejections, never unbounded thread spawn or queueing. (Setting
+//!   `--serve-workers 0` restores the legacy thread-per-connection path,
+//!   now hard-capped at `--max-connections` with the same busy refusal.)
+//! * **Per-request deadlines** (`--request-timeout-ms`): socket
+//!   read/write timeouts bound slow clients, and each request carries a
+//!   deadline into [`Session::answer_query`], whose phase-boundary checks
+//!   turn an over-budget query into a typed `timeout` error instead of a
+//!   held worker.
+//! * **Hot snapshot reload**: the `reload` command — or touching the
+//!   `--reload-marker` file, checked on every accepted connection —
+//!   atomically swaps each resident workload's [`Session`] for a fresh
+//!   decode of its snapshot ([`SessionStore::reload`]). In-flight
+//!   connections keep their `Arc<Session>` and complete on the old graph;
+//!   a failed decode aborts the whole reload with the old sessions
+//!   untouched.
+//! * [`SessionStore`] — lazily loads one [`Session`] per snapshot file
+//!   and bounds residency with an LRU (`--max-sessions`); racing lazy
+//!   loads resolve first-insert-wins.
+//! * **Error isolation**: a malformed line or failed query answers a
+//!   typed error on that connection and affects nothing else; connection
+//!   I/O errors end only their own connection. Persistent accept-loop
+//!   failures surface as a typed error from [`Server::run`] after bounded
+//!   retries — the listener is never silently dropped.
+//! * [`ServerStats`] — served/error/rejected/timeout counters, queue
+//!   depth, latency percentiles and per-workload served counts behind
+//!   atomics, drained by `{"cmd":"stats"}` (and by the serving bench's
+//!   overload rows).
 //!
 //! [`Session`]: crate::session::Session
 //! [`Session::load_snapshot`]: crate::session::Session::load_snapshot
 //! [`Session::answer_query`]: crate::session::Session::answer_query
 
 pub mod json;
+pub mod protocol;
+
+pub use protocol::{Command, ErrorCode};
 
 use crate::error::{Error, Result};
 use crate::persist;
 use crate::report::JsonValue;
 use crate::session::{Evaluation, Objective, Query, Session};
 use json::Json;
+use protocol::{error_response, ok_response};
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant, SystemTime};
 
 /// Multi-workload session residency: a registry of snapshot files (one
 /// per workload, discovered via [`persist::peek_header`] without decoding
 /// payloads) and an LRU-bounded cache of loaded [`Session`]s. `get` loads
 /// lazily outside the lock; the cache never holds more than `max_sessions`
-/// entries (the serving tests pin this).
+/// entries (the serving tests pin this). [`SessionStore::reload`] swaps
+/// resident sessions for fresh decodes without disturbing in-flight
+/// `Arc<Session>` holders.
 pub struct SessionStore {
     registry: HashMap<String, PathBuf>,
     max_sessions: usize,
+    /// Bumped once per successful [`SessionStore::reload`]; serving
+    /// exposes it so clients can observe snapshot swaps.
+    generation: AtomicUsize,
     inner: Mutex<StoreInner>,
 }
 
@@ -81,6 +105,7 @@ impl SessionStore {
         SessionStore {
             registry: HashMap::new(),
             max_sessions: max_sessions.max(1),
+            generation: AtomicUsize::new(0),
             inner: Mutex::new(StoreInner::default()),
         }
     }
@@ -104,6 +129,11 @@ impl SessionStore {
     /// Number of sessions currently resident.
     pub fn cached_count(&self) -> usize {
         self.inner.lock().unwrap().sessions.len()
+    }
+
+    /// How many successful [`SessionStore::reload`]s have run.
+    pub fn generation(&self) -> usize {
+        self.generation.load(Ordering::SeqCst)
     }
 
     /// Seed the cache with an already-built session (CLI pre-warm, tests).
@@ -133,11 +163,46 @@ impl SessionStore {
             .ok_or_else(|| Error::UnknownWorkload(workload.to_string()))?;
         let loaded = Arc::new(Session::load_snapshot(path)?);
         let mut inner = self.inner.lock().unwrap();
-        let session =
-            inner.sessions.entry(workload.to_string()).or_insert_with(|| loaded).clone();
+        let session = inner.sessions.entry(workload.to_string()).or_insert(loaded).clone();
         Self::touch(&mut inner, workload);
         self.evict(&mut inner);
         Ok(session)
+    }
+
+    /// Hot snapshot reload: re-decode every **resident** workload's
+    /// snapshot from disk and atomically swap it into the cache. Returns
+    /// the reloaded workload names (sorted).
+    ///
+    /// Semantics the serving tests pin:
+    /// * **In-flight queries are untouched** — connections hold their own
+    ///   `Arc<Session>` clone, so a swap retires the old graph only once
+    ///   the last in-flight query drops it.
+    /// * **All-or-nothing** — every decode runs *outside* the lock first;
+    ///   any failure (e.g. [`Error::SnapshotCorrupt`]) aborts the whole
+    ///   reload with the old sessions still serving.
+    /// * Non-resident workloads need no swap: their next lazy
+    ///   [`SessionStore::get`] reads the file fresh anyway (and racing
+    ///   lazy loads keep their first-insert-wins resolution).
+    pub fn reload(&self) -> Result<Vec<String>> {
+        let mut resident: Vec<String> = {
+            let inner = self.inner.lock().unwrap();
+            self.registry.keys().filter(|n| inner.sessions.contains_key(*n)).cloned().collect()
+        };
+        resident.sort();
+        let mut fresh = Vec::with_capacity(resident.len());
+        for name in &resident {
+            let path = self.registry.get(name).expect("resident implies registered");
+            fresh.push((name.clone(), Arc::new(Session::load_snapshot(path)?)));
+        }
+        {
+            let mut inner = self.inner.lock().unwrap();
+            for (name, session) in fresh {
+                inner.sessions.insert(name.clone(), session);
+                Self::touch(&mut inner, &name);
+            }
+        }
+        self.generation.fetch_add(1, Ordering::SeqCst);
+        Ok(resident)
     }
 
     fn touch(inner: &mut StoreInner, workload: &str) {
@@ -157,13 +222,27 @@ impl SessionStore {
     }
 }
 
-/// Lock-light serving counters: request count and error count as atomics,
-/// per-request latencies appended under a mutex (drained by `stats`
-/// requests and the serving bench).
+/// Lock-light serving counters: request outcomes and the queue-depth
+/// gauge as atomics, per-request latencies and per-workload served counts
+/// under mutexes (drained by `stats` requests and the serving bench).
+///
+/// Counter taxonomy (each failed request increments **exactly one**):
+/// * `served` — successful `query` responses.
+/// * `errors` — error responses on an established connection (bad
+///   request, unknown workload, snapshot/internal failures).
+/// * `rejected` — typed `busy` refusals (full queue / connection cap).
+/// * `timeouts` — requests that exceeded their deadline.
 pub struct ServerStats {
     served: AtomicUsize,
     errors: AtomicUsize,
+    rejected: AtomicUsize,
+    timeouts: AtomicUsize,
+    reloads: AtomicUsize,
+    accept_errors: AtomicUsize,
+    /// Connections accepted but not yet picked up by a pool worker.
+    queue_depth: AtomicUsize,
     latencies_ms: Mutex<Vec<f64>>,
+    per_workload: Mutex<HashMap<String, usize>>,
     started: Instant,
 }
 
@@ -178,20 +257,57 @@ impl ServerStats {
         ServerStats {
             served: AtomicUsize::new(0),
             errors: AtomicUsize::new(0),
+            rejected: AtomicUsize::new(0),
+            timeouts: AtomicUsize::new(0),
+            reloads: AtomicUsize::new(0),
+            accept_errors: AtomicUsize::new(0),
+            queue_depth: AtomicUsize::new(0),
             latencies_ms: Mutex::new(Vec::new()),
+            per_workload: Mutex::new(HashMap::new()),
             started: Instant::now(),
         }
     }
 
-    /// Record one successfully answered query.
-    pub fn record(&self, latency_ms: f64) {
+    /// Record one successfully answered query against `workload`.
+    pub fn record(&self, workload: &str, latency_ms: f64) {
         self.served.fetch_add(1, Ordering::Relaxed);
         self.latencies_ms.lock().unwrap().push(latency_ms);
+        *self.per_workload.lock().unwrap().entry(workload.to_string()).or_insert(0) += 1;
     }
 
     /// Record one failed request (parse error, unknown workload, …).
     pub fn record_error(&self) {
         self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one typed `busy` refusal.
+    pub fn record_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one request that exceeded its deadline.
+    pub fn record_timeout(&self) {
+        self.timeouts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one completed hot reload.
+    pub fn record_reload(&self) {
+        self.reloads.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one accept-loop failure (the loop retries with backoff).
+    pub fn record_accept_error(&self) {
+        self.accept_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A connection entered the pending queue.
+    pub fn queue_arrived(&self) {
+        self.queue_depth.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// A connection left the pending queue (picked up or refused).
+    pub fn queue_departed(&self) {
+        self.queue_depth.fetch_sub(1, Ordering::SeqCst);
     }
 
     pub fn served(&self) -> usize {
@@ -200,6 +316,49 @@ impl ServerStats {
 
     pub fn errors(&self) -> usize {
         self.errors.load(Ordering::Relaxed)
+    }
+
+    pub fn rejected(&self) -> usize {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    pub fn timeouts(&self) -> usize {
+        self.timeouts.load(Ordering::Relaxed)
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth.load(Ordering::SeqCst)
+    }
+
+    /// Served counts per workload (sorted by name).
+    pub fn workload_counts(&self) -> Vec<(String, usize)> {
+        let mut counts: Vec<(String, usize)> = self
+            .per_workload
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), *v))
+            .collect();
+        counts.sort();
+        counts
+    }
+
+    /// The busy response's `retry_after_ms` hint: the median observed
+    /// service latency times the queue occupancy ahead of a retrying
+    /// client, clamped to a sane range (50 ms/request before any query
+    /// has completed).
+    pub fn retry_hint_ms(&self, queued: usize) -> u64 {
+        let per_request = {
+            let lat = self.latencies_ms.lock().unwrap();
+            if lat.is_empty() {
+                50.0
+            } else {
+                let mut sorted = lat.clone();
+                sorted.sort_by(f64::total_cmp);
+                percentile(&sorted, 50.0).max(1.0)
+            }
+        };
+        ((per_request * queued.max(1) as f64) as u64).clamp(10, 5_000)
     }
 
     /// Throughput + latency percentiles since construction.
@@ -211,7 +370,15 @@ impl ServerStats {
         StatsSummary {
             served,
             errors: self.errors(),
-            queries_per_sec: if elapsed > 0.0 { served as f64 / elapsed } else { 0.0 },
+            rejected: self.rejected(),
+            timeouts: self.timeouts(),
+            reloads: self.reloads.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth(),
+            queries_per_sec: if elapsed > 0.0 {
+                served as f64 / elapsed
+            } else {
+                0.0
+            },
             p50_ms: percentile(&lat, 50.0),
             p99_ms: percentile(&lat, 99.0),
         }
@@ -223,6 +390,10 @@ impl ServerStats {
 pub struct StatsSummary {
     pub served: usize,
     pub errors: usize,
+    pub rejected: usize,
+    pub timeouts: usize,
+    pub reloads: usize,
+    pub queue_depth: usize,
     pub queries_per_sec: f64,
     pub p50_ms: f64,
     pub p99_ms: f64,
@@ -238,24 +409,72 @@ pub fn percentile(sorted: &[f64], p: f64) -> f64 {
     sorted[idx.min(sorted.len() - 1)]
 }
 
-/// The TCP daemon: accept loop + one handler thread per connection.
+/// Daemon sizing and robustness knobs (every field has a CLI flag — see
+/// `hwsplit serve` in `usage.txt` and the semantics in `docs/serving.md`).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Fixed worker-pool width (`--serve-workers`). `0` selects the
+    /// legacy thread-per-connection path, hard-capped at
+    /// [`ServeConfig::max_connections`].
+    pub workers: usize,
+    /// Bound on connections accepted but not yet picked up by a worker
+    /// (`--queue-depth`); past it the acceptor answers `busy`.
+    pub queue_depth: usize,
+    /// Per-request deadline in milliseconds (`--request-timeout-ms`);
+    /// `0` disables deadlines. Also bounds socket writes.
+    pub request_timeout_ms: u64,
+    /// Legacy-path concurrent-connection hard cap (`--max-connections`).
+    pub max_connections: usize,
+    /// Optional marker file (`--reload-marker`): when its mtime changes
+    /// (or it appears), the next accepted connection triggers a hot
+    /// snapshot reload, same as the `reload` command.
+    pub reload_marker: Option<PathBuf>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            workers: crate::par::default_workers().clamp(2, 16),
+            queue_depth: 64,
+            request_timeout_ms: 10_000,
+            max_connections: 256,
+            reload_marker: None,
+        }
+    }
+}
+
+/// How often blocked reads/dequeues wake to observe the shutdown flag.
+const POLL_INTERVAL: Duration = Duration::from_millis(100);
+/// Consecutive accept failures tolerated (with backoff) before
+/// [`Server::run`] surfaces a typed error instead of spinning.
+const MAX_ACCEPT_ERROR_STREAK: u32 = 100;
+
+/// The TCP daemon: a bounded accept loop feeding a fixed worker pool
+/// (or, with `workers: 0`, the capped legacy thread-per-connection path).
 pub struct Server {
     store: Arc<SessionStore>,
     stats: Arc<ServerStats>,
     listener: TcpListener,
     shutdown: Arc<AtomicBool>,
+    config: ServeConfig,
 }
 
 impl Server {
     /// Bind to `addr` (e.g. `"127.0.0.1:7878"`; port 0 picks a free port —
-    /// the tests do this).
+    /// the tests do this) with the default [`ServeConfig`].
     pub fn bind(addr: &str, store: Arc<SessionStore>) -> Result<Server> {
+        Server::bind_with(addr, store, ServeConfig::default())
+    }
+
+    /// Bind with explicit pool/timeout/reload configuration.
+    pub fn bind_with(addr: &str, store: Arc<SessionStore>, config: ServeConfig) -> Result<Server> {
         let listener = TcpListener::bind(addr)?;
         Ok(Server {
             store,
             stats: Arc::new(ServerStats::new()),
             listener,
             shutdown: Arc::new(AtomicBool::new(false)),
+            config,
         })
     }
 
@@ -265,6 +484,10 @@ impl Server {
 
     pub fn stats(&self) -> Arc<ServerStats> {
         self.stats.clone()
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.config
     }
 
     /// Ask the accept loop to stop, nudging it out of `accept()` with a
@@ -277,75 +500,364 @@ impl Server {
         }
     }
 
-    /// Run the accept loop until [`Server::request_shutdown`] (or a client
-    /// sends `{"cmd":"shutdown"}`). Handler threads are detached; each owns
-    /// exactly one connection, so a panic or I/O error on one client never
-    /// touches another.
+    /// Run the daemon until [`Server::request_shutdown`] (or a client
+    /// sends `{"cmd":"shutdown"}`). With `workers > 0` this is the
+    /// bounded pool; `workers == 0` selects the legacy
+    /// thread-per-connection path (hard-capped). Graceful shutdown stops
+    /// accepting, lets in-progress requests finish, and closes
+    /// connections still waiting in the queue unanswered.
     pub fn run(&self) -> Result<()> {
+        if self.config.workers == 0 {
+            self.run_legacy()
+        } else {
+            self.run_pool()
+        }
+    }
+
+    fn run_pool(&self) -> Result<()> {
         let addr = self.listener.local_addr()?;
+        let (tx, rx) = mpsc::sync_channel::<TcpStream>(self.config.queue_depth);
+        let rx = Arc::new(Mutex::new(rx));
+        let workers: Vec<_> = (0..self.config.workers)
+            .map(|_| {
+                let rx = rx.clone();
+                let store = self.store.clone();
+                let stats = self.stats.clone();
+                let shutdown = self.shutdown.clone();
+                let config = self.config.clone();
+                std::thread::spawn(move || {
+                    worker_loop(&rx, &store, &stats, &shutdown, &config, addr)
+                })
+            })
+            .collect();
+
+        let mut marker = MarkerWatch::new(self.config.reload_marker.clone());
+        let mut err_streak = 0u32;
         for stream in self.listener.incoming() {
             if self.shutdown.load(Ordering::SeqCst) {
                 break;
             }
             let stream = match stream {
-                Ok(s) => s,
-                Err(_) => continue,
+                Ok(s) => {
+                    err_streak = 0;
+                    s
+                }
+                Err(e) => {
+                    self.note_accept_error(&mut err_streak, &e)?;
+                    continue;
+                }
             };
+            self.check_marker(&mut marker);
+            // Gauge rises before the send so a racing dequeue can never
+            // observe a decrement ahead of its increment.
+            self.stats.queue_arrived();
+            match tx.try_send(stream) {
+                Ok(()) => {}
+                Err(mpsc::TrySendError::Full(stream)) => {
+                    self.stats.queue_departed();
+                    self.reject_busy(stream, self.config.queue_depth);
+                }
+                Err(mpsc::TrySendError::Disconnected(_)) => break,
+            }
+        }
+        // Dropping the sender drains the pool: idle workers observe the
+        // disconnect, busy workers finish their connection first.
+        drop(tx);
+        for w in workers {
+            let _ = w.join();
+        }
+        Ok(())
+    }
+
+    /// The legacy thread-per-connection path (`--serve-workers 0`), kept
+    /// for comparison benches — now refusing connections past
+    /// `max_connections` with the same typed busy error instead of
+    /// spawning without bound.
+    fn run_legacy(&self) -> Result<()> {
+        let addr = self.listener.local_addr()?;
+        let active = Arc::new(AtomicUsize::new(0));
+        let mut marker = MarkerWatch::new(self.config.reload_marker.clone());
+        let mut err_streak = 0u32;
+        for stream in self.listener.incoming() {
+            if self.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match stream {
+                Ok(s) => {
+                    err_streak = 0;
+                    s
+                }
+                Err(e) => {
+                    self.note_accept_error(&mut err_streak, &e)?;
+                    continue;
+                }
+            };
+            self.check_marker(&mut marker);
+            if active.load(Ordering::SeqCst) >= self.config.max_connections {
+                let queued = active.load(Ordering::SeqCst);
+                self.reject_busy(stream, queued);
+                continue;
+            }
+            active.fetch_add(1, Ordering::SeqCst);
+            let guard = ActiveGuard(active.clone());
             let store = self.store.clone();
             let stats = self.stats.clone();
             let shutdown = self.shutdown.clone();
+            let config = self.config.clone();
             std::thread::spawn(move || {
-                let _ = handle_client(stream, &store, &stats, &shutdown, addr);
+                let _guard = guard; // decrements even if the handler panics
+                let _ = serve_connection(stream, &store, &stats, &shutdown, &config, addr);
             });
         }
         Ok(())
     }
+
+    /// Accept failures back off and count; a persistent streak becomes a
+    /// typed error from `run` instead of a hot spin or a silent return.
+    fn note_accept_error(&self, streak: &mut u32, e: &std::io::Error) -> Result<()> {
+        self.stats.record_accept_error();
+        *streak += 1;
+        if *streak >= MAX_ACCEPT_ERROR_STREAK {
+            return Err(Error::Io(format!(
+                "accept loop failing persistently ({streak} consecutive errors): {e}"
+            )));
+        }
+        std::thread::sleep(Duration::from_millis(10));
+        Ok(())
+    }
+
+    fn check_marker(&self, marker: &mut MarkerWatch) {
+        if marker.changed() {
+            match self.store.reload() {
+                Ok(_) => self.stats.record_reload(),
+                Err(e) => {
+                    self.stats.record_error();
+                    eprintln!("serve: marker-triggered reload failed ({e}); serving old snapshots");
+                }
+            }
+        }
+    }
+
+    /// Typed backpressure: answer one `busy` line (bounded write) and
+    /// close the connection.
+    fn reject_busy(&self, mut stream: TcpStream, queued: usize) {
+        self.stats.record_rejected();
+        let hint = self.stats.retry_hint_ms(queued);
+        let err = Error::Busy { queued, retry_after_ms: hint };
+        let resp = error_response(
+            ErrorCode::Busy,
+            &err.to_string(),
+            &[("retry_after_ms", JsonValue::Int(hint as i64))],
+        );
+        let _ = stream.set_write_timeout(Some(Duration::from_millis(250)));
+        if stream.write_all(resp.as_bytes()).is_ok() {
+            let _ = stream.write_all(b"\n");
+        }
+        // Lingering close: the refused client's request is still unread in
+        // our receive buffer, and closing with unread data sends RST —
+        // which can race the busy line off the client's socket. Send FIN,
+        // then drain briefly until the client closes, so the reply is
+        // reliably delivered. Bounded: a client that neither sends nor
+        // closes costs the acceptor at most the read timeout.
+        let _ = stream.shutdown(std::net::Shutdown::Write);
+        let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
+        let mut sink = [0u8; 512];
+        while let Ok(n) = std::io::Read::read(&mut stream, &mut sink) {
+            if n == 0 {
+                break;
+            }
+        }
+    }
+}
+
+/// Decrements the legacy path's active-connection count on drop, so a
+/// panicking handler can't leak a slot.
+struct ActiveGuard(Arc<AtomicUsize>);
+
+impl Drop for ActiveGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Watches the optional reload-marker file for mtime changes (or
+/// appearance). The initial state is whatever exists at startup, so a
+/// pre-existing marker does not trigger a spurious reload.
+struct MarkerWatch {
+    path: Option<PathBuf>,
+    last: Option<SystemTime>,
+}
+
+impl MarkerWatch {
+    fn new(path: Option<PathBuf>) -> MarkerWatch {
+        let last = path.as_deref().and_then(mtime);
+        MarkerWatch { path, last }
+    }
+
+    fn changed(&mut self) -> bool {
+        let Some(path) = self.path.as_deref() else {
+            return false;
+        };
+        let now = mtime(path);
+        if now.is_some() && now != self.last {
+            self.last = now;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+fn mtime(p: &Path) -> Option<SystemTime> {
+    std::fs::metadata(p).ok().and_then(|m| m.modified().ok())
+}
+
+/// One pool worker: dequeue a connection, serve it to completion, repeat.
+/// Dequeues poll so the worker observes shutdown while idle; the sender
+/// disconnecting (acceptor exit) drains the pool.
+fn worker_loop(
+    rx: &Mutex<mpsc::Receiver<TcpStream>>,
+    store: &SessionStore,
+    stats: &ServerStats,
+    shutdown: &AtomicBool,
+    config: &ServeConfig,
+    listener_addr: SocketAddr,
+) {
+    loop {
+        let stream = {
+            let rx = rx.lock().unwrap();
+            match rx.recv_timeout(POLL_INTERVAL) {
+                Ok(s) => s,
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if shutdown.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    continue;
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => return,
+            }
+        };
+        stats.queue_departed();
+        let _ = serve_connection(stream, store, stats, shutdown, config, listener_addr);
+        if shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+    }
 }
 
 /// Serve one connection: read line-delimited requests until EOF (or a
-/// shutdown request). Request-level failures answer an error object and
-/// keep the connection; only I/O failures end it.
-fn handle_client(
+/// shutdown request). Request-level failures answer a typed error object
+/// and keep the connection; only I/O failures end it. Reads poll on
+/// [`POLL_INTERVAL`] so an idle connection observes shutdown (partial
+/// lines survive the poll — `read_line` appends); writes are bounded by
+/// the request timeout so a stuck client can't wedge a worker.
+fn serve_connection(
     stream: TcpStream,
     store: &SessionStore,
     stats: &ServerStats,
     shutdown: &AtomicBool,
+    config: &ServeConfig,
     listener_addr: SocketAddr,
 ) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(POLL_INTERVAL))?;
+    let write_ms = if config.request_timeout_ms > 0 {
+        config.request_timeout_ms
+    } else {
+        10_000
+    };
+    stream.set_write_timeout(Some(Duration::from_millis(write_ms)))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
     let mut line = String::new();
     loop {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(()); // client closed
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // client closed
+            Ok(_) => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if shutdown.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+                continue; // idle poll; `line` keeps any partial request
+            }
+            Err(e) => return Err(e),
         }
         let trimmed = line.trim();
-        if trimmed.is_empty() {
-            continue;
+        if !trimmed.is_empty() {
+            // The deadline clock starts when the full request line is in.
+            let ctx = RequestCtx {
+                deadline: (config.request_timeout_ms > 0)
+                    .then(|| Instant::now() + Duration::from_millis(config.request_timeout_ms)),
+                timeout_ms: config.request_timeout_ms,
+            };
+            let (response, stop) = handle_line_at(trimmed, store, stats, &ctx);
+            writer.write_all(response.as_bytes())?;
+            writer.write_all(b"\n")?;
+            writer.flush()?;
+            if stop {
+                shutdown.store(true, Ordering::SeqCst);
+                let _ = TcpStream::connect(listener_addr); // nudge the acceptor
+                return Ok(());
+            }
         }
-        let (response, stop) = handle_line(trimmed, store, stats);
-        writer.write_all(response.as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
-        if stop {
-            shutdown.store(true, Ordering::SeqCst);
-            let _ = TcpStream::connect(listener_addr); // nudge the acceptor
+        line.clear();
+        if shutdown.load(Ordering::SeqCst) {
             return Ok(());
         }
     }
 }
 
-/// Answer one request line. Returns the JSON response and whether this
-/// request asked the daemon to shut down. Never panics on bad input —
-/// every failure becomes `{"ok":false,...}` (and counts as an error).
-/// Exposed for the CLI's one-shot mode and the tests.
+/// Per-request context: the deadline derived from `--request-timeout-ms`
+/// at request receipt (None = no deadline) plus the configured budget,
+/// echoed in timeout responses.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RequestCtx {
+    pub deadline: Option<Instant>,
+    pub timeout_ms: u64,
+}
+
+/// Answer one request line with no deadline (the CLI's one-shot mode and
+/// tests). See [`handle_line_at`].
 pub fn handle_line(line: &str, store: &SessionStore, stats: &ServerStats) -> (String, bool) {
-    match handle_request(line, store, stats) {
+    handle_line_at(line, store, stats, &RequestCtx::default())
+}
+
+/// Answer one request line under a request context. Returns the JSON
+/// response and whether this request asked the daemon to shut down.
+/// Never panics on bad input — every failure becomes a typed
+/// `{"ok":false,"code":...}` response and increments exactly one of the
+/// error/timeout/rejected counters (see [`ServerStats`]).
+pub fn handle_line_at(
+    line: &str,
+    store: &SessionStore,
+    stats: &ServerStats,
+    ctx: &RequestCtx,
+) -> (String, bool) {
+    match handle_request(line, store, stats, ctx) {
         Ok(reply) => reply,
         Err(e) => {
-            stats.record_error();
-            (error_response(&e.to_string()), false)
+            let code = ErrorCode::classify(&e);
+            let mut extra: Vec<(&str, JsonValue)> = Vec::new();
+            match code {
+                ErrorCode::Timeout => {
+                    stats.record_timeout();
+                    if ctx.timeout_ms > 0 {
+                        extra.push(("timeout_ms", JsonValue::Int(ctx.timeout_ms as i64)));
+                    }
+                }
+                ErrorCode::Busy => {
+                    stats.record_rejected();
+                    if let Error::Busy { retry_after_ms, .. } = &e {
+                        extra.push(("retry_after_ms", JsonValue::Int(*retry_after_ms as i64)));
+                    }
+                }
+                _ => stats.record_error(),
+            }
+            (error_response(code, &e.to_string(), &extra), false)
         }
     }
 }
@@ -354,26 +866,51 @@ fn handle_request(
     line: &str,
     store: &SessionStore,
     stats: &ServerStats,
+    ctx: &RequestCtx,
 ) -> Result<(String, bool)> {
     let req = Json::parse(line).map_err(|e| Error::InvalidConfig(format!("bad request: {e}")))?;
-    let cmd = req.get("cmd").and_then(Json::as_str).unwrap_or("query");
+    let cmd_name = req.get("cmd").and_then(Json::as_str).unwrap_or("query");
+    let cmd = Command::parse(cmd_name).ok_or_else(|| {
+        Error::InvalidConfig(format!("unknown cmd '{cmd_name}' (expected {})", Command::names()))
+    })?;
     match cmd {
-        "ping" => Ok(("{\"ok\":true,\"pong\":true}".to_string(), false)),
-        "shutdown" => Ok(("{\"ok\":true,\"shutting_down\":true}".to_string(), true)),
-        "stats" => {
+        Command::Ping => Ok(("{\"ok\":true,\"pong\":true}".to_string(), false)),
+        Command::Shutdown => Ok(("{\"ok\":true,\"shutting_down\":true}".to_string(), true)),
+        Command::Reload => {
+            let names = store.reload()?;
+            stats.record_reload();
+            let fields = [
+                ("reloaded", JsonValue::Str(names.join(","))),
+                ("generation", JsonValue::Int(store.generation() as i64)),
+            ];
+            Ok((ok_response(&fields), false))
+        }
+        Command::Stats => {
             let s = stats.summary();
+            let by_workload = stats
+                .workload_counts()
+                .into_iter()
+                .map(|(w, n)| format!("{w}={n}"))
+                .collect::<Vec<_>>()
+                .join(",");
             let fields = [
                 ("served", JsonValue::Int(s.served as i64)),
                 ("errors", JsonValue::Int(s.errors as i64)),
+                ("rejected", JsonValue::Int(s.rejected as i64)),
+                ("timeouts", JsonValue::Int(s.timeouts as i64)),
+                ("reloads", JsonValue::Int(s.reloads as i64)),
+                ("queue_depth", JsonValue::Int(s.queue_depth as i64)),
                 ("queries_per_sec", JsonValue::Num(s.queries_per_sec)),
                 ("p50_ms", JsonValue::Num(s.p50_ms)),
                 ("p99_ms", JsonValue::Num(s.p99_ms)),
                 ("cached_sessions", JsonValue::Int(store.cached_count() as i64)),
+                ("generation", JsonValue::Int(store.generation() as i64)),
                 ("workloads", JsonValue::Str(store.workloads().join(","))),
+                ("served_by_workload", JsonValue::Str(by_workload)),
             ];
             Ok((ok_response(&fields), false))
         }
-        "query" => {
+        Command::Query => {
             let workload = req
                 .get("workload")
                 .and_then(Json::as_str)
@@ -386,30 +923,30 @@ fn handle_request(
             let samples = req
                 .get("samples")
                 .map(|v| {
-                    v.as_u64()
-                        .ok_or_else(|| Error::InvalidConfig("'samples' must be a non-negative integer".into()))
+                    v.as_u64().ok_or_else(|| {
+                        Error::InvalidConfig("'samples' must be a non-negative integer".into())
+                    })
                 })
                 .transpose()?
                 .unwrap_or(16) as usize;
             let seed = req
                 .get("seed")
                 .map(|v| {
-                    v.as_u64()
-                        .ok_or_else(|| Error::InvalidConfig("'seed' must be a non-negative integer".into()))
+                    v.as_u64().ok_or_else(|| {
+                        Error::InvalidConfig("'seed' must be a non-negative integer".into())
+                    })
                 })
                 .transpose()?
                 .unwrap_or(0);
             let session = store.get(workload)?;
             let t0 = Instant::now();
-            let q = Query::new().objective(objective).samples(samples).seed(seed);
+            let mut q = Query::new().objective(objective).samples(samples).seed(seed);
+            q.deadline = ctx.deadline;
             let ev = session.answer_query(&q)?;
             let latency_ms = t0.elapsed().as_secs_f64() * 1e3;
-            stats.record(latency_ms);
+            stats.record(workload, latency_ms);
             Ok((query_response(&ev, latency_ms), false))
         }
-        other => Err(Error::InvalidConfig(format!(
-            "unknown cmd '{other}' (expected query | stats | ping | shutdown)"
-        ))),
     }
 }
 
@@ -435,23 +972,6 @@ fn query_response(ev: &Evaluation, latency_ms: f64) -> String {
         ("latency_ms", JsonValue::Num(latency_ms)),
     ];
     ok_response(&fields)
-}
-
-/// `{"ok":true, <fields...>}` through the report emitter's escaping.
-fn ok_response(fields: &[(&str, JsonValue)]) -> String {
-    let mut out = String::from("{\"ok\":true");
-    for (k, v) in fields {
-        out.push(',');
-        out.push_str(&JsonValue::Str(k.to_string()).render());
-        out.push(':');
-        out.push_str(&v.render());
-    }
-    out.push('}');
-    out
-}
-
-fn error_response(msg: &str) -> String {
-    format!("{{\"ok\":false,\"error\":{}}}", JsonValue::Str(msg.to_string()).render())
 }
 
 #[cfg(test)]
@@ -480,11 +1000,17 @@ mod tests {
         // Malformed line: error response, connection-level state untouched.
         let (bad, stop) = handle_line("not json", &store, &stats);
         assert!(bad.starts_with("{\"ok\":false"));
+        assert!(bad.contains("\"code\":\"bad_request\""), "{bad}");
         assert!(!stop);
         assert_eq!(stats.errors(), 1);
         // Unknown workload: typed error surfaced, not a panic.
         let (unknown, _) = handle_line(r#"{"cmd":"query","workload":"nope"}"#, &store, &stats);
         assert!(unknown.contains("unknown workload"), "{unknown}");
+        assert!(unknown.contains("\"code\":\"unknown_workload\""), "{unknown}");
+        // Unknown command: bad_request naming the valid set.
+        let (what, _) = handle_line(r#"{"cmd":"frobnicate"}"#, &store, &stats);
+        assert!(what.contains("\"code\":\"bad_request\""), "{what}");
+        assert!(what.contains("reload"), "must list valid commands: {what}");
         // Valid query answers with design counts.
         let (good, stop) =
             handle_line(r#"{"workload":"relu128","samples":4,"seed":1}"#, &store, &stats);
@@ -494,11 +1020,38 @@ mod tests {
         assert!(parsed.get("designs").and_then(Json::as_u64).unwrap() >= 2);
         assert_eq!(parsed.get("workload").and_then(Json::as_str), Some("relu128"));
         assert_eq!(stats.served(), 1);
-        // Stats reflect the traffic.
+        // Stats reflect the traffic, including per-workload counts.
         let (stats_resp, _) = handle_line(r#"{"cmd":"stats"}"#, &store, &stats);
         let s = Json::parse(&stats_resp).unwrap();
         assert_eq!(s.get("served").and_then(Json::as_u64), Some(1));
-        assert_eq!(s.get("errors").and_then(Json::as_u64), Some(2));
+        assert_eq!(s.get("errors").and_then(Json::as_u64), Some(3));
+        assert_eq!(s.get("rejected").and_then(Json::as_u64), Some(0));
+        assert_eq!(s.get("timeouts").and_then(Json::as_u64), Some(0));
+        assert_eq!(s.get("queue_depth").and_then(Json::as_u64), Some(0));
+        assert_eq!(s.get("served_by_workload").and_then(Json::as_str), Some("relu128=1"));
+    }
+
+    #[test]
+    fn expired_deadline_is_a_typed_timeout_with_exact_counters() {
+        let store = SessionStore::new(4);
+        store.insert_session("relu128", tiny_session());
+        let stats = ServerStats::new();
+        let ctx = RequestCtx {
+            deadline: Some(Instant::now() - Duration::from_millis(1)),
+            timeout_ms: 1,
+        };
+        let (resp, stop) =
+            handle_line_at(r#"{"workload":"relu128","samples":4}"#, &store, &stats, &ctx);
+        assert!(!stop);
+        let j = Json::parse(&resp).unwrap();
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false), "{resp}");
+        assert_eq!(j.get("code").and_then(Json::as_str), Some("timeout"), "{resp}");
+        assert_eq!(j.get("timeout_ms").and_then(Json::as_u64), Some(1), "{resp}");
+        // Exactly one counter moved.
+        assert_eq!(stats.timeouts(), 1);
+        assert_eq!(stats.errors(), 0);
+        assert_eq!(stats.served(), 0);
+        assert_eq!(stats.rejected(), 0);
     }
 
     #[test]
@@ -528,5 +1081,18 @@ mod tests {
         assert_eq!(percentile(&v, 50.0), 3.0);
         assert_eq!(percentile(&v, 100.0), 5.0);
         assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn retry_hint_scales_with_queue_and_clamps() {
+        let stats = ServerStats::new();
+        // No latency data yet: 50 ms/request default.
+        assert_eq!(stats.retry_hint_ms(1), 50);
+        stats.record("w", 100.0);
+        assert_eq!(stats.retry_hint_ms(2), 200);
+        assert_eq!(stats.retry_hint_ms(1_000_000), 5_000, "clamped above");
+        stats.record("w", 0.001); // tiny latencies clamp below
+        let hint = stats.retry_hint_ms(1);
+        assert!(hint >= 10, "{hint}");
     }
 }

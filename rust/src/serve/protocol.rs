@@ -1,0 +1,209 @@
+//! The serving wire protocol, as data: the command set and the error
+//! taxonomy are **enums**, and every response string is rendered through
+//! this module — so the protocol a running daemon speaks is exactly what
+//! these types enumerate. The authoritative human-readable spec lives in
+//! `docs/serving.md`; `rust/tests/serving.rs` cross-checks that document
+//! against [`Command::ALL`] and [`ErrorCode::ALL`], so a command or error
+//! variant cannot ship undocumented.
+//!
+//! Shape recap (one JSON object per line, both directions):
+//!
+//! * requests: `{"cmd":"<command>", ...command fields}`
+//! * success: `{"ok":true, ...}`
+//! * failure: `{"ok":false,"code":"<error code>","error":"<message>", ...}`
+
+use crate::error::Error;
+use crate::report::JsonValue;
+
+/// Every command the daemon understands. `query` is the default when a
+/// request omits `"cmd"` (so bare `{"workload":...}` lines work).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Command {
+    /// Liveness probe; answers `{"ok":true,"pong":true}`.
+    Ping,
+    /// Answer a design-space query against one workload's session.
+    Query,
+    /// Serving counters: served/errors/rejected/timeouts, latency
+    /// percentiles, queue depth, per-workload served counts.
+    Stats,
+    /// Hot snapshot reload: atomically re-load every resident workload's
+    /// snapshot from disk without dropping in-flight connections.
+    Reload,
+    /// Acknowledge, then stop the accept loop and drain the worker pool.
+    Shutdown,
+}
+
+impl Command {
+    /// The full command set, in documentation order.
+    pub const ALL: [Command; 5] =
+        [Command::Ping, Command::Query, Command::Stats, Command::Reload, Command::Shutdown];
+
+    /// The wire name (`"cmd"` field value).
+    pub fn name(self) -> &'static str {
+        match self {
+            Command::Ping => "ping",
+            Command::Query => "query",
+            Command::Stats => "stats",
+            Command::Reload => "reload",
+            Command::Shutdown => "shutdown",
+        }
+    }
+
+    /// Resolve a wire name; `None` for unknown commands (the caller turns
+    /// that into a [`ErrorCode::BadRequest`] naming the valid set).
+    pub fn parse(name: &str) -> Option<Command> {
+        Command::ALL.into_iter().find(|c| c.name() == name)
+    }
+
+    /// The valid command names, for error messages.
+    pub fn names() -> String {
+        Command::ALL.map(Command::name).join(" | ")
+    }
+}
+
+/// The error taxonomy: every `{"ok":false}` response carries exactly one
+/// of these in its `"code"` field, so clients can branch on machine-
+/// readable codes instead of matching message text.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Unparseable JSON, an unknown command, or invalid/missing request
+    /// fields. Counted in the `errors` stat.
+    BadRequest,
+    /// The named workload is not registered with this daemon. Counted in
+    /// the `errors` stat.
+    UnknownWorkload,
+    /// Typed backpressure: the bounded pending-connection queue (or the
+    /// legacy path's connection cap) is full. Sent with a
+    /// `retry_after_ms` hint; counted in the `rejected` stat.
+    Busy,
+    /// The request exceeded its `--request-timeout-ms` deadline. Sent
+    /// with the configured `timeout_ms`; counted in the `timeouts` stat.
+    Timeout,
+    /// A snapshot on disk failed to decode (corrupt, truncated, or a
+    /// format version this build cannot read) — surfaced by lazy loads
+    /// and `reload`. Counted in the `errors` stat.
+    SnapshotCorrupt,
+    /// Any other failure (evaluation errors, unsupported backends, …).
+    /// Counted in the `errors` stat.
+    Internal,
+}
+
+impl ErrorCode {
+    /// The full error taxonomy, in documentation order.
+    pub const ALL: [ErrorCode; 6] = [
+        ErrorCode::BadRequest,
+        ErrorCode::UnknownWorkload,
+        ErrorCode::Busy,
+        ErrorCode::Timeout,
+        ErrorCode::SnapshotCorrupt,
+        ErrorCode::Internal,
+    ];
+
+    /// The wire name (`"code"` field value).
+    pub fn name(self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::UnknownWorkload => "unknown_workload",
+            ErrorCode::Busy => "busy",
+            ErrorCode::Timeout => "timeout",
+            ErrorCode::SnapshotCorrupt => "snapshot_corrupt",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    /// Map a crate error onto its wire code.
+    pub fn classify(e: &Error) -> ErrorCode {
+        match e {
+            Error::UnknownWorkload(_) => ErrorCode::UnknownWorkload,
+            Error::Busy { .. } => ErrorCode::Busy,
+            Error::Timeout { .. } => ErrorCode::Timeout,
+            Error::SnapshotCorrupt(_) | Error::SnapshotVersion { .. } => ErrorCode::SnapshotCorrupt,
+            Error::Parse(_) | Error::InvalidConfig(_) => ErrorCode::BadRequest,
+            _ => ErrorCode::Internal,
+        }
+    }
+}
+
+/// `{"ok":true, <fields...>}` through the report emitter's escaping.
+pub fn ok_response(fields: &[(&str, JsonValue)]) -> String {
+    let mut out = String::from("{\"ok\":true");
+    push_fields(&mut out, fields);
+    out.push('}');
+    out
+}
+
+/// `{"ok":false,"code":...,"error":..., <extra fields...>}`. The extra
+/// fields carry code-specific payloads (`retry_after_ms` for `busy`,
+/// `timeout_ms` for `timeout`).
+pub fn error_response(code: ErrorCode, msg: &str, extra: &[(&str, JsonValue)]) -> String {
+    let mut out = format!(
+        "{{\"ok\":false,\"code\":{},\"error\":{}",
+        JsonValue::Str(code.name().to_string()).render(),
+        JsonValue::Str(msg.to_string()).render()
+    );
+    push_fields(&mut out, extra);
+    out.push('}');
+    out
+}
+
+fn push_fields(out: &mut String, fields: &[(&str, JsonValue)]) {
+    for (k, v) in fields {
+        out.push(',');
+        out.push_str(&JsonValue::Str(k.to_string()).render());
+        out.push(':');
+        out.push_str(&v.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::json::Json;
+
+    #[test]
+    fn command_names_round_trip_and_are_unique() {
+        for cmd in Command::ALL {
+            assert_eq!(Command::parse(cmd.name()), Some(cmd));
+        }
+        let mut names: Vec<_> = Command::ALL.map(Command::name).to_vec();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), Command::ALL.len());
+        assert_eq!(Command::parse("frobnicate"), None);
+        assert!(Command::names().contains("reload"));
+    }
+
+    #[test]
+    fn error_codes_are_unique_and_classify_typed_errors() {
+        let mut names: Vec<_> = ErrorCode::ALL.map(ErrorCode::name).to_vec();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), ErrorCode::ALL.len());
+
+        let cases: [(Error, ErrorCode); 6] = [
+            (Error::InvalidConfig("x".into()), ErrorCode::BadRequest),
+            (Error::UnknownWorkload("x".into()), ErrorCode::UnknownWorkload),
+            (Error::Busy { queued: 1, retry_after_ms: 10 }, ErrorCode::Busy),
+            (Error::Timeout { phase: "extract" }, ErrorCode::Timeout),
+            (Error::SnapshotCorrupt("bit flip".into()), ErrorCode::SnapshotCorrupt),
+            (Error::Unsupported("pjrt".into()), ErrorCode::Internal),
+        ];
+        for (err, want) in cases {
+            assert_eq!(ErrorCode::classify(&err), want, "{err}");
+        }
+    }
+
+    #[test]
+    fn error_response_is_valid_json_with_code_and_extras() {
+        let resp = error_response(
+            ErrorCode::Busy,
+            "queue full",
+            &[("retry_after_ms", JsonValue::Int(50))],
+        );
+        let j = Json::parse(&resp).expect("valid JSON");
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(j.get("code").and_then(Json::as_str), Some("busy"));
+        assert_eq!(j.get("error").and_then(Json::as_str), Some("queue full"));
+        assert_eq!(j.get("retry_after_ms").and_then(Json::as_u64), Some(50));
+    }
+}

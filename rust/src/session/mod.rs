@@ -456,6 +456,12 @@ impl Session {
     /// concurrently — cost-table fixpoints are shared through the
     /// internally-synchronized session memo. Results are identical to
     /// [`Session::query`].
+    ///
+    /// Deadline-aware ([`Query::deadline`]): the deadline is checked
+    /// cooperatively before extraction, between extraction and
+    /// evaluation, and per design inside evaluation, so an over-budget
+    /// request returns [`Error::Timeout`] at the next phase boundary
+    /// instead of holding a serving worker indefinitely.
     pub fn answer_query(&self, q: &Query) -> Result<Evaluation, Error> {
         let en = self.enumerated.as_ref().ok_or_else(|| {
             Error::InvalidConfig(
@@ -464,11 +470,13 @@ impl Session {
                     .into(),
             )
         })?;
+        q.check_deadline("extract")?;
         let t0 = std::time::Instant::now();
         let opts =
             ExtractOptions { samples: q.samples, seed: q.seed, workers: self.extract_workers };
         let set = extract_designs(&en.egraph, en.root, &opts, &self.extract_cache);
         vlog("extract", t0);
+        q.check_deadline("analyze")?;
         self.answer(q, &set)
     }
 
@@ -569,7 +577,9 @@ impl Session {
 
 /// Evaluate analyzed design points on the query's backend. Parallel-safe
 /// backends get one evaluator per design on the pool; the PJRT runtime
-/// evaluates serially through its shared compile cache.
+/// evaluates serially through its shared compile cache. Each design
+/// re-checks the query deadline before evaluating, so an over-budget
+/// request fails between designs rather than after the whole set.
 fn evaluate_all(
     q: &Query,
     points: Vec<DesignPoint>,
@@ -577,6 +587,7 @@ fn evaluate_all(
 ) -> Result<Vec<EvaluatedDesign>, Error> {
     if q.backend.parallel_safe() {
         parallel_map(workers, points, |p| -> Result<EvaluatedDesign, Error> {
+            q.check_deadline("evaluate")?;
             let report = q.backend.evaluator()?.evaluate(&p.expr, &q.params, q.seed)?;
             Ok(EvaluatedDesign::new(p.clone(), report))
         })
@@ -587,6 +598,7 @@ fn evaluate_all(
         points
             .into_iter()
             .map(|p| {
+                q.check_deadline("evaluate")?;
                 let report = ev.evaluate(&p.expr, &q.params, q.seed)?;
                 Ok(EvaluatedDesign::new(p, report))
             })

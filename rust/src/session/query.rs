@@ -9,6 +9,7 @@ use crate::cost::{Baseline, CostParams, DesignCost};
 use crate::extract::{DesignPoint, ExtractReport};
 use crate::sim::SimReport;
 use crate::tensor::Tensor;
+use std::time::{Duration, Instant};
 
 /// What "best" means for a query.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -63,6 +64,14 @@ pub struct Query {
     pub seed: u64,
     pub backend: Backend,
     pub params: CostParams,
+    /// Optional wall-clock deadline. Extraction and evaluation check it
+    /// cooperatively at phase boundaries and return [`Error::Timeout`]
+    /// instead of running past it — the serving daemon derives one from
+    /// `--request-timeout-ms` at request receipt. `None` (the default)
+    /// means no deadline.
+    ///
+    /// [`Error::Timeout`]: crate::error::Error::Timeout
+    pub deadline: Option<Instant>,
 }
 
 impl Default for Query {
@@ -73,6 +82,7 @@ impl Default for Query {
             seed: 0,
             backend: Backend::Analytic,
             params: CostParams::default(),
+            deadline: None,
         }
     }
 }
@@ -105,6 +115,28 @@ impl Query {
     pub fn params(mut self, p: CostParams) -> Self {
         self.params = p;
         self
+    }
+
+    /// Absolute deadline for answering this query.
+    pub fn deadline(mut self, at: Instant) -> Self {
+        self.deadline = Some(at);
+        self
+    }
+
+    /// Relative deadline: `budget` of wall-clock from now.
+    pub fn deadline_in(self, budget: Duration) -> Self {
+        self.deadline(Instant::now() + budget)
+    }
+
+    /// Cooperative deadline check, shared by every query-answering phase
+    /// (and by the serving daemon): `Err(Error::Timeout)` once the
+    /// deadline has passed, `Ok(())` otherwise (including when no
+    /// deadline is set).
+    pub fn check_deadline(&self, phase: &'static str) -> Result<(), crate::error::Error> {
+        match self.deadline {
+            Some(d) if Instant::now() > d => Err(crate::error::Error::Timeout { phase }),
+            _ => Ok(()),
+        }
     }
 }
 
@@ -199,6 +231,18 @@ mod tests {
         assert_eq!(q.samples, 7);
         assert_eq!(q.seed, 3);
         assert_eq!(q.backend, Backend::Sim);
+    }
+
+    #[test]
+    fn deadline_check_is_none_by_default_and_trips_when_past() {
+        let q = Query::new();
+        assert!(q.deadline.is_none());
+        assert!(q.check_deadline("extract").is_ok());
+        let generous = Query::new().deadline_in(Duration::from_secs(3600));
+        assert!(generous.check_deadline("extract").is_ok());
+        let expired = Query::new().deadline(Instant::now() - Duration::from_millis(1));
+        let err = expired.check_deadline("evaluate").unwrap_err();
+        assert!(matches!(err, crate::error::Error::Timeout { phase: "evaluate" }), "{err}");
     }
 
     #[test]

@@ -1,19 +1,26 @@
 //! Serving-layer properties: many threads sharing one loaded session get
 //! answers identical to a serial baseline, the LRU session store never
 //! exceeds its residency bound, and the TCP daemon survives concurrent
-//! clients, malformed requests and a clean shutdown.
+//! clients, malformed requests and a clean shutdown. The hardening layer
+//! is pinned here too: queue saturation answers typed `busy` (never a
+//! hang), over-deadline requests answer typed `timeout` with exact
+//! counters, hot reload swaps sessions under in-flight queries, the
+//! legacy path refuses connections past its hard cap, and
+//! `docs/serving.md` is cross-checked against the protocol enums so no
+//! command or error code ships undocumented.
 
 use hwsplit::egraph::RunnerLimits;
 use hwsplit::relay::workload_by_name;
 use hwsplit::rewrites::RuleSet;
 use hwsplit::serve::json::Json;
-use hwsplit::serve::{Server, SessionStore};
+use hwsplit::serve::{Command, ErrorCode, ServeConfig, Server, SessionStore};
 use hwsplit::session::{Evaluation, Objective, Query, Session};
 use std::fmt::Write as _;
 use std::io::{BufRead, BufReader, Write};
-use std::net::TcpStream;
+use std::net::{SocketAddr, TcpStream};
 use std::path::PathBuf;
 use std::sync::Arc;
+use std::time::Duration;
 
 fn scratch(name: &str) -> PathBuf {
     let dir = std::env::temp_dir().join(format!("hwsplit-serving-{}", std::process::id()));
@@ -213,4 +220,244 @@ fn tcp_daemon_serves_concurrent_clients_with_error_isolation() {
     reader.read_line(&mut line).expect("reads");
     assert!(line.contains("\"shutting_down\":true"), "{line}");
     acceptor.join().expect("accept loop joins").expect("accept loop ran clean");
+}
+
+/// One line-oriented protocol client (request out, JSON response in).
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connects");
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .expect("never hang a test on a dead daemon");
+        Client { reader: BufReader::new(stream.try_clone().expect("clones")), writer: stream }
+    }
+
+    fn read_response(&mut self) -> Json {
+        let mut line = String::new();
+        self.reader.read_line(&mut line).expect("reads a response line");
+        Json::parse(line.trim()).expect("response is valid JSON")
+    }
+
+    fn send(&mut self, req: &str) -> Json {
+        writeln!(self.writer, "{req}").expect("writes");
+        self.read_response()
+    }
+}
+
+fn snapshot_backed_store(tag: &str, max_sessions: usize) -> (SessionStore, PathBuf) {
+    let path = scratch(&format!("{tag}-relu128.hws"));
+    build_session("relu128", RuleSet::Fig2, 4).save_snapshot(&path).expect("snapshot saves");
+    let mut store = SessionStore::new(max_sessions);
+    store.register(&path).expect("registers");
+    (store, path)
+}
+
+#[test]
+fn queue_saturation_yields_typed_busy_never_a_hang() {
+    let (store, _path) = snapshot_backed_store("busy", 4);
+    let config = ServeConfig {
+        workers: 1,
+        queue_depth: 1,
+        request_timeout_ms: 30_000,
+        ..ServeConfig::default()
+    };
+    let server =
+        Arc::new(Server::bind_with("127.0.0.1:0", Arc::new(store), config).expect("binds"));
+    let addr = server.local_addr().expect("bound addr");
+    let acceptor = {
+        let server = server.clone();
+        std::thread::spawn(move || server.run())
+    };
+
+    // A: confirmed owned by the single worker (ping round-trips).
+    let mut a = Client::connect(addr);
+    assert_eq!(a.send(r#"{"cmd":"ping"}"#).get("pong").and_then(Json::as_bool), Some(true));
+
+    // B: accepted, sits in the single queue slot (the worker is on A).
+    let mut b = Client::connect(addr);
+    std::thread::sleep(Duration::from_millis(200)); // let the acceptor enqueue B
+
+    // C: queue full — immediate typed busy with a retry hint, then close.
+    let mut c = Client::connect(addr);
+    let busy = c.read_response();
+    assert_eq!(busy.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(busy.get("code").and_then(Json::as_str), Some("busy"));
+    assert!(busy.get("retry_after_ms").and_then(Json::as_u64).unwrap_or(0) >= 10);
+    assert!(busy.get("error").and_then(Json::as_str).unwrap_or("").contains("busy"));
+
+    // The held connection still works, and the counters are exact.
+    let stats = a.send(r#"{"cmd":"stats"}"#);
+    assert_eq!(stats.get("rejected").and_then(Json::as_u64), Some(1), "exactly one refusal");
+    assert_eq!(stats.get("queue_depth").and_then(Json::as_u64), Some(1), "B is still queued");
+    assert_eq!(stats.get("errors").and_then(Json::as_u64), Some(0));
+
+    // Freeing the worker drains the queue: B gets served.
+    drop(a);
+    assert_eq!(b.send(r#"{"cmd":"ping"}"#).get("pong").and_then(Json::as_bool), Some(true));
+    assert!(b.send(r#"{"cmd":"shutdown"}"#).get("shutting_down").is_some());
+    acceptor.join().expect("accept loop joins").expect("accept loop ran clean");
+}
+
+#[test]
+fn over_deadline_request_is_a_typed_timeout_with_exact_counters() {
+    // Cold store + a 4096-sample query against a 1 ms budget: snapshot
+    // decode plus extraction cannot finish inside it, so the cooperative
+    // phase checks must trip.
+    let (store, _path) = snapshot_backed_store("timeout", 4);
+    let config = ServeConfig { workers: 1, request_timeout_ms: 1, ..ServeConfig::default() };
+    let server =
+        Arc::new(Server::bind_with("127.0.0.1:0", Arc::new(store), config).expect("binds"));
+    let addr = server.local_addr().expect("bound addr");
+    let acceptor = {
+        let server = server.clone();
+        std::thread::spawn(move || server.run())
+    };
+
+    let mut client = Client::connect(addr);
+    let resp = client.send(r#"{"cmd":"query","workload":"relu128","samples":4096}"#);
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(resp.get("code").and_then(Json::as_str), Some("timeout"));
+    assert_eq!(resp.get("timeout_ms").and_then(Json::as_u64), Some(1));
+    assert!(resp.get("error").and_then(Json::as_str).unwrap_or("").contains("deadline"));
+
+    // Exactly one counter moved — a timeout is not an error or a reject.
+    let stats = client.send(r#"{"cmd":"stats"}"#);
+    assert_eq!(stats.get("timeouts").and_then(Json::as_u64), Some(1));
+    assert_eq!(stats.get("errors").and_then(Json::as_u64), Some(0));
+    assert_eq!(stats.get("served").and_then(Json::as_u64), Some(0));
+    assert_eq!(stats.get("rejected").and_then(Json::as_u64), Some(0));
+
+    client.send(r#"{"cmd":"shutdown"}"#);
+    acceptor.join().expect("accept loop joins").expect("accept loop ran clean");
+}
+
+#[test]
+fn reload_swaps_sessions_under_in_flight_queries() {
+    let (store, _path) = snapshot_backed_store("reload", 4);
+    let store = Arc::new(store);
+    assert_eq!(store.generation(), 0);
+
+    let before = store.get("relu128").expect("loads");
+    let q = Query::new().samples(6).seed(1);
+    let baseline = canon(&before.answer_query(&q).expect("answers"));
+
+    // Queries on the old Arc race the swap; both must succeed.
+    let in_flight = {
+        let session = before.clone();
+        let q = q.clone();
+        std::thread::spawn(move || canon(&session.answer_query(&q).expect("in-flight answer")))
+    };
+    let reloaded = store.reload().expect("reload succeeds");
+    assert_eq!(reloaded, vec!["relu128".to_string()]);
+    assert_eq!(store.generation(), 1);
+    assert_eq!(in_flight.join().expect("in-flight thread"), baseline);
+
+    // The store now serves a *different* session with identical answers.
+    let after = store.get("relu128").expect("resident");
+    assert!(!Arc::ptr_eq(&before, &after), "reload must swap the resident session");
+    assert_eq!(canon(&after.answer_query(&q).expect("answers")), baseline);
+    assert_eq!(after.enumeration_count(), 0, "reload never re-saturates");
+}
+
+#[test]
+fn reload_command_and_marker_file_trigger_hot_swap() {
+    let (store, _path) = snapshot_backed_store("marker", 4);
+    let marker = scratch("reload-marker");
+    let config = ServeConfig {
+        workers: 2,
+        reload_marker: Some(marker.clone()),
+        ..ServeConfig::default()
+    };
+    let server =
+        Arc::new(Server::bind_with("127.0.0.1:0", Arc::new(store), config).expect("binds"));
+    let addr = server.local_addr().expect("bound addr");
+    let acceptor = {
+        let server = server.clone();
+        std::thread::spawn(move || server.run())
+    };
+
+    // Make the workload resident, then reload over the wire.
+    let mut client = Client::connect(addr);
+    let q = client.send(r#"{"workload":"relu128","samples":4}"#);
+    assert_eq!(q.get("ok").and_then(Json::as_bool), Some(true), "warm-up query");
+    let r = client.send(r#"{"cmd":"reload"}"#);
+    assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(r.get("reloaded").and_then(Json::as_str), Some("relu128"));
+    assert_eq!(r.get("generation").and_then(Json::as_u64), Some(1));
+
+    // Touching the marker file reloads on the next accepted connection.
+    std::fs::write(&marker, b"bump").expect("touches marker");
+    let mut second = Client::connect(addr);
+    assert_eq!(
+        second.send(r#"{"cmd":"ping"}"#).get("pong").and_then(Json::as_bool),
+        Some(true)
+    );
+    let stats = second.send(r#"{"cmd":"stats"}"#);
+    assert_eq!(stats.get("reloads").and_then(Json::as_u64), Some(2), "wire + marker");
+    assert_eq!(stats.get("generation").and_then(Json::as_u64), Some(2));
+    // The swapped session still answers.
+    let q = second.send(r#"{"workload":"relu128","samples":4}"#);
+    assert_eq!(q.get("ok").and_then(Json::as_bool), Some(true), "post-reload query");
+
+    second.send(r#"{"cmd":"shutdown"}"#);
+    acceptor.join().expect("accept loop joins").expect("accept loop ran clean");
+}
+
+#[test]
+fn legacy_path_refuses_connections_past_its_hard_cap() {
+    let (store, _path) = snapshot_backed_store("legacy", 4);
+    // workers: 0 selects thread-per-connection — now with a hard cap.
+    let config = ServeConfig { workers: 0, max_connections: 1, ..ServeConfig::default() };
+    let server =
+        Arc::new(Server::bind_with("127.0.0.1:0", Arc::new(store), config).expect("binds"));
+    let addr = server.local_addr().expect("bound addr");
+    let acceptor = {
+        let server = server.clone();
+        std::thread::spawn(move || server.run())
+    };
+
+    // A occupies the only slot (ping proves its handler is live).
+    let mut a = Client::connect(addr);
+    assert_eq!(a.send(r#"{"cmd":"ping"}"#).get("pong").and_then(Json::as_bool), Some(true));
+
+    // B is over the cap: typed busy, not an unbounded thread.
+    let mut b = Client::connect(addr);
+    let busy = b.read_response();
+    assert_eq!(busy.get("code").and_then(Json::as_str), Some("busy"));
+    assert!(busy.get("retry_after_ms").and_then(Json::as_u64).is_some());
+
+    server.request_shutdown();
+    acceptor.join().expect("accept loop joins").expect("accept loop ran clean");
+}
+
+#[test]
+fn docs_serving_md_documents_every_command_and_error_code() {
+    let doc = include_str!(concat!(env!("CARGO_MANIFEST_DIR"), "/docs/serving.md"));
+    for cmd in Command::ALL {
+        let needle = format!("\"cmd\":\"{}\"", cmd.name());
+        assert!(
+            doc.contains(&needle),
+            "docs/serving.md must document the '{}' command (missing {needle})",
+            cmd.name()
+        );
+    }
+    for code in ErrorCode::ALL {
+        let needle = format!("\"code\":\"{}\"", code.name());
+        assert!(
+            doc.contains(&needle),
+            "docs/serving.md must document the '{}' error code (missing {needle})",
+            code.name()
+        );
+    }
+    // The knobs that define the serving contract are named too.
+    for flag in
+        ["--serve-workers", "--queue-depth", "--request-timeout-ms", "--reload-marker"]
+    {
+        assert!(doc.contains(flag), "docs/serving.md must document {flag}");
+    }
 }
