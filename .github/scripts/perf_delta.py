@@ -1,0 +1,54 @@
+#!/usr/bin/env python3
+"""Print the perf trajectory delta between two bench_results.json files.
+
+Usage: perf_delta.py <previous.json> <current.json>
+
+Records are keyed by (workload, engine); for every key present in both
+files, the throughput metrics (`designs_per_sec`, `queries_per_sec`) are
+compared and the relative change printed. A missing previous file is not
+an error — the first run on a branch has no trajectory yet — so CI can
+run this unconditionally after a best-effort artifact download.
+"""
+
+import json
+import os
+import sys
+
+METRICS = ("designs_per_sec", "queries_per_sec")
+
+
+def load(path):
+    with open(path) as f:
+        records = json.load(f)
+    return {(r.get("workload", ""), r.get("engine", "")): r for r in records}
+
+
+def main():
+    prev_path, curr_path = sys.argv[1], sys.argv[2]
+    if not os.path.exists(prev_path):
+        print(f"no previous bench results at {prev_path}; nothing to compare")
+        return
+    prev, curr = load(prev_path), load(curr_path)
+
+    printed = 0
+    for key in sorted(curr):
+        workload, engine = key
+        for metric in METRICS:
+            now = curr[key].get(metric)
+            was = prev.get(key, {}).get(metric)
+            if not isinstance(now, (int, float)) or not isinstance(was, (int, float)):
+                continue
+            if was <= 0:
+                continue
+            pct = 100.0 * (now - was) / was
+            print(
+                f"{workload:<16} {engine:<22} {metric:<16} "
+                f"{was:>10.1f} -> {now:>10.1f}  ({pct:+.1f}%)"
+            )
+            printed += 1
+    if printed == 0:
+        print("no overlapping throughput metrics between the two runs")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,22 +1,35 @@
 #!/usr/bin/env python3
 """CI smoke for `hwsplit serve`: drive the daemon end to end over the wire.
 
-Run against a daemon started with:
+Single-process mode (default) runs against a daemon started with:
   hwsplit serve --snapshots <file> --port <port> \
       --serve-workers 1 --queue-depth 1 --request-timeout-ms 5000
 
 The 1-worker/1-slot sizing makes backpressure deterministic: with
 connection A parked on the worker and B in the queue slot, C must be
-refused with a typed `busy` error. Protocol spec: docs/serving.md.
+refused with a typed `busy` error.
+
+Sharded mode (`--shards`, second argv) runs against a supervisor started
+with:
+  hwsplit serve --shards 2 --snapshots <relu128>,<mlp> --port <port>
+
+and exercises the router: queries on both shards, aggregated stats,
+fault injection (SIGKILL one child, assert the supervisor restarts it
+and the query succeeds again), broadcast reload and shutdown.
+
+Protocol spec: docs/serving.md.
 """
 
 import json
+import os
+import signal
 import socket
 import sys
 import time
 
 HOST = "127.0.0.1"
 PORT = int(sys.argv[1]) if len(sys.argv) > 1 else 7979
+SHARDED = "--shards" in sys.argv[2:]
 
 
 def connect(retries=60):
@@ -45,64 +58,153 @@ def expect(cond, what, resp):
     print(f"ok: {what}")
 
 
-a = connect()
-fa = a.makefile("rw")
-resp = rpc(fa, {"cmd": "ping"})
-expect(resp.get("pong") is True, "ping answers pong", resp)
+def one_shot(req):
+    s = connect(retries=1)
+    try:
+        return rpc(s.makefile("rw"), req)
+    finally:
+        s.close()
 
-resp = rpc(fa, {"cmd": "query", "workload": "relu128", "samples": 8})
-expect(
-    resp.get("ok") is True and resp.get("workload") == "relu128",
-    "query served from the snapshot",
-    resp,
-)
 
-# Busy injection: the single worker is parked on connection A; B takes the
-# one queue slot; C must be refused immediately with a typed busy error.
-b = connect(retries=1)
-time.sleep(0.5)  # let the acceptor enqueue B
-c = connect(retries=1)
-line = c.makefile("r").readline()
-expect(bool(line), "refused connection still gets a reply line", line)
-busy = json.loads(line)
-expect(
-    busy.get("ok") is False
-    and busy.get("code") == "busy"
-    and isinstance(busy.get("retry_after_ms"), int),
-    "queue overflow answers typed busy with a retry hint",
-    busy,
-)
-c.close()
+def single_process():
+    a = connect()
+    fa = a.makefile("rw")
+    resp = rpc(fa, {"cmd": "ping"})
+    expect(resp.get("pong") is True, "ping answers pong", resp)
 
-resp = rpc(fa, {"cmd": "reload"})
-expect(
-    resp.get("ok") is True and "relu128" in resp.get("reloaded", ""),
-    "hot reload swaps the resident snapshot",
-    resp,
-)
+    resp = rpc(fa, {"cmd": "query", "workload": "relu128", "samples": 8})
+    expect(
+        resp.get("ok") is True and resp.get("workload") == "relu128",
+        "query served from the snapshot",
+        resp,
+    )
 
-stats = rpc(fa, {"cmd": "stats"})
-expect(
-    stats.get("served") == 1
-    and stats.get("rejected") == 1
-    and stats.get("queue_depth") == 1
-    and stats.get("timeouts") == 0
-    and stats.get("errors") == 0,
-    "stats counters are exact (served/rejected/queued)",
-    stats,
-)
+    # Busy injection: the single worker is parked on connection A; B takes
+    # the one queue slot; C must be refused immediately with a typed busy
+    # error.
+    b = connect(retries=1)
+    time.sleep(0.5)  # let the acceptor enqueue B
+    c = connect(retries=1)
+    line = c.makefile("r").readline()
+    expect(bool(line), "refused connection still gets a reply line", line)
+    busy = json.loads(line)
+    expect(
+        busy.get("ok") is False
+        and busy.get("code") == "busy"
+        and isinstance(busy.get("retry_after_ms"), int),
+        "queue overflow answers typed busy with a retry hint",
+        busy,
+    )
+    c.close()
 
-# Free the worker; the queued connection B must now be served.
-fa.close()
-a.close()
-fb = b.makefile("rw")
-resp = rpc(fb, {"cmd": "query", "workload": "relu128", "samples": 8})
-expect(
-    resp.get("ok") is True,
-    "queued connection drains once the worker frees",
-    resp,
-)
+    resp = rpc(fa, {"cmd": "reload"})
+    expect(
+        resp.get("ok") is True and "relu128" in resp.get("reloaded", ""),
+        "hot reload swaps the resident snapshot",
+        resp,
+    )
 
-resp = rpc(fb, {"cmd": "shutdown"})
-expect(resp.get("shutting_down") is True, "graceful shutdown acknowledged", resp)
-print("serving smoke passed")
+    stats = rpc(fa, {"cmd": "stats"})
+    expect(
+        stats.get("served") == 1
+        and stats.get("rejected") == 1
+        and stats.get("queue_depth") == 1
+        and stats.get("timeouts") == 0
+        and stats.get("errors") == 0,
+        "stats counters are exact (served/rejected/queued)",
+        stats,
+    )
+
+    # Free the worker; the queued connection B must now be served.
+    fa.close()
+    a.close()
+    fb = b.makefile("rw")
+    resp = rpc(fb, {"cmd": "query", "workload": "relu128", "samples": 8})
+    expect(
+        resp.get("ok") is True,
+        "queued connection drains once the worker frees",
+        resp,
+    )
+
+    resp = rpc(fb, {"cmd": "shutdown"})
+    expect(resp.get("shutting_down") is True, "graceful shutdown acknowledged", resp)
+    print("serving smoke passed")
+
+
+def query_until_ok(workload, timeout_s=60):
+    """Poll one workload through the router until it answers ok. While the
+    owning shard is mid-restart the router must answer typed busy — any
+    other failure is a smoke failure."""
+    deadline = time.time() + timeout_s
+    while time.time() < deadline:
+        resp = one_shot({"cmd": "query", "workload": workload, "samples": 4})
+        if resp.get("ok") is True:
+            return resp
+        if resp.get("code") != "busy":
+            raise SystemExit(f"FAIL mid-restart response must be typed busy: {resp}")
+        time.sleep(0.5)
+    raise SystemExit(f"FAIL {workload} never came back after the restart")
+
+
+def sharded():
+    a = connect()
+    fa = a.makefile("rw")
+    resp = rpc(fa, {"cmd": "ping"})
+    expect(resp.get("pong") is True, "router answers ping locally", resp)
+
+    for workload in ("relu128", "mlp"):
+        resp = rpc(fa, {"cmd": "query", "workload": workload, "samples": 8})
+        expect(
+            resp.get("ok") is True and resp.get("workload") == workload,
+            f"query for {workload} routed to its shard",
+            resp,
+        )
+
+    stats = rpc(fa, {"cmd": "stats"})
+    pids = [int(p) for p in stats.get("shard_pids", "").split(",") if p]
+    expect(
+        stats.get("shards") == 2
+        and stats.get("served") == 2
+        and stats.get("restarts") == 0
+        and len(pids) == 2,
+        "aggregated stats see both shards with exact sums",
+        stats,
+    )
+
+    # Fault injection: SIGKILL one child; the supervisor must notice,
+    # restart it, and the routed query must succeed again.
+    os.kill(pids[0], signal.SIGKILL)
+    print(f"killed shard child pid {pids[0]}")
+    for workload in ("relu128", "mlp"):
+        resp = query_until_ok(workload)
+        expect(resp.get("ok") is True, f"{workload} serves after the restart", resp)
+
+    deadline = time.time() + 60
+    while True:
+        stats = one_shot({"cmd": "stats"})
+        new_pids = [int(p) for p in stats.get("shard_pids", "").split(",") if p]
+        if stats.get("restarts", 0) >= 1 and pids[0] not in new_pids:
+            break
+        if time.time() > deadline:
+            raise SystemExit(f"FAIL restart never surfaced in stats: {stats}")
+        time.sleep(0.5)
+    expect(True, "the restart is counted and the dead pid replaced", stats)
+
+    resp = one_shot({"cmd": "reload"})
+    expect(
+        resp.get("ok") is True
+        and "relu128" in resp.get("reloaded", "")
+        and "mlp" in resp.get("reloaded", ""),
+        "reload broadcasts to every shard",
+        resp,
+    )
+
+    resp = one_shot({"cmd": "shutdown"})
+    expect(resp.get("shutting_down") is True, "broadcast shutdown acknowledged", resp)
+    print("sharded serving smoke passed")
+
+
+if SHARDED:
+    sharded()
+else:
+    single_process()

@@ -9,6 +9,16 @@
 //! `queries_per_sec` / `p50_ms` / `p99_ms` on the throughput row and
 //! `offered` / `completed` / `rejected` on the overload row.
 //!
+//! Two more serving trajectories ride the same file: `serve-shards-N`
+//! drives the identical mixed four-workload load through the multi-process
+//! supervisor (`hwsplit::serve::shard`) at widths 1/2/4 — the shards-1 row
+//! is the single-child baseline, so the aggregate `queries_per_sec` rows
+//! read directly as the sharding speedup (the 2x-at-4-shards expectation
+//! needs >= 4 cores; the ratio is reported either way) — and
+//! `serve-delta-snapshot` times encoding+loading a v3 delta of a widened
+//! rule set against re-encoding the full v2 snapshot, asserting the delta
+//! is the smaller artifact.
+//!
 //! Budgets are deliberately tiny so the CI job costs seconds; set
 //! `HWSPLIT_PERF_FULL=1` for locally meaningful numbers.
 //!
@@ -20,6 +30,7 @@ use hwsplit::relay::workload_by_name;
 use hwsplit::report::{JsonRecords, JsonValue};
 use hwsplit::rewrites::RuleSet;
 use hwsplit::serve::json::Json;
+use hwsplit::serve::shard::{ShardConfig, ShardServer};
 use hwsplit::serve::{percentile, ServeConfig, Server, SessionStore};
 use hwsplit::session::{Objective, Query, Session};
 use std::io::{BufRead, BufReader, Write};
@@ -32,8 +43,16 @@ const RULES: RuleSet = RuleSet::All;
 const RESULTS: &str = "bench_results.json";
 /// Engine labels this bench owns in `bench_results.json` (replaced on
 /// every run; everything else in the file is preserved).
-const OWNED_ENGINES: &[&str] =
-    &["serve-cold-load", "serve-resaturate", "serve-throughput", "serve-overload"];
+const OWNED_ENGINES: &[&str] = &[
+    "serve-cold-load",
+    "serve-resaturate",
+    "serve-throughput",
+    "serve-overload",
+    "serve-shards-1",
+    "serve-shards-2",
+    "serve-shards-4",
+    "serve-delta-snapshot",
+];
 
 fn main() {
     let full = std::env::var_os("HWSPLIT_PERF_FULL").is_some();
@@ -226,8 +245,174 @@ fn main() {
         ],
     ));
 
+    // --- Shard-parallel serving: aggregate throughput by shard width -----
+    // Four workloads spread across child daemons; every width serves the
+    // identical mixed load through the supervisor's router, so the rows
+    // are directly comparable (shards-1 is one child process plus the same
+    // router hop, not the in-process daemon above).
+    let shard_cases: [(&str, RuleSet); 4] = [
+        (WORKLOAD, RULES),
+        ("relu128", RuleSet::Fig2),
+        ("mlp", RuleSet::Paper),
+        ("lenet", RuleSet::Paper),
+    ];
+    let shard_paths: Vec<String> = shard_cases
+        .iter()
+        .map(|&(name, rules)| {
+            let _ = snapshot_fixture(name, rules, iters, max_nodes); // ensure on disk
+            snapshot_fixture_path(name, rules, iters, max_nodes).to_string_lossy().into_owned()
+        })
+        .collect();
+    let names: Vec<&str> = shard_cases.iter().map(|&(n, _)| n).collect();
+    let routed_per_client: usize = if full { 16 } else { 4 };
+    let mut shards1_qps = f64::NAN;
+    for shards in [1usize, 2, 4] {
+        let config = ShardConfig::new(env!("CARGO_BIN_EXE_hwsplit"), shards);
+        let server = Arc::new(
+            ShardServer::bind("127.0.0.1:0", &shard_paths, config).expect("supervisor binds"),
+        );
+        let addr = server.local_addr().expect("bound addr");
+        let runner = {
+            let server = server.clone();
+            std::thread::spawn(move || server.run())
+        };
+        // Pre-warm every child (snapshot decode + memo fill for seed 0),
+        // so the timed section measures steady-state routed serving.
+        for &name in &names {
+            let req = format!("{{\"workload\":\"{name}\",\"samples\":{samples},\"seed\":0}}\n");
+            assert!(one_shot(addr, &req).0, "pre-warm query must complete");
+        }
+        let (shard_wall, mut lats) =
+            routed_throughput(addr, clients, routed_per_client, &names, samples);
+        server.request_shutdown();
+        runner.join().expect("supervisor joins").expect("supervisor ran clean");
+        lats.sort_by(f64::total_cmp);
+        let qps = lats.len() as f64 / shard_wall;
+        if shards == 1 {
+            shards1_qps = qps;
+        }
+        let speedup = qps / shards1_qps.max(1e-9);
+        let p50 = percentile(&lats, 50.0);
+        let p99 = percentile(&lats, 99.0);
+        println!(
+            "{WORKLOAD:<14} shards-{shards} aggregate: {qps:>8.1} queries/s   \
+             p50 {p50:.2} ms   p99 {p99:.2} ms   (x{speedup:.2} vs shards-1)"
+        );
+        let mut extra = vec![
+            ("queries_per_sec", qps),
+            ("p50_ms", p50),
+            ("p99_ms", p99),
+            ("shards", shards as f64),
+            ("clients", clients as f64),
+            ("queries", lats.len() as f64),
+        ];
+        if shards > 1 {
+            extra.push(("speedup_vs_1", speedup));
+        }
+        rows.push(row(WORKLOAD, &format!("serve-shards-{shards}"), shard_wall * 1e3, &extra));
+    }
+
+    // --- Delta snapshot: persist the growth, not the world ----------------
+    // Widen a Paper-rules base to the full rule set, then persist the
+    // grown graph both ways. The delta must be the smaller artifact; the
+    // row records encode/load wall-clock and byte sizes for both.
+    let _ = snapshot_fixture(WORKLOAD, RuleSet::Paper, iters, max_nodes); // ensure on disk
+    let base_path = snapshot_fixture_path(WORKLOAD, RuleSet::Paper, iters, max_nodes);
+    let mut grown = Session::load_snapshot(&base_path).expect("base fixture loads");
+    grown.extend_rules(RuleSet::All, 1).expect("rule set widens");
+    let full_path = base_path.with_extension("full.hws");
+    let delta_path = base_path.with_extension("delta.hws");
+
+    let t0 = Instant::now();
+    grown.save_snapshot(&full_path).expect("full re-encode saves");
+    let full_encode_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t0 = Instant::now();
+    black_box(Session::load_snapshot(&full_path).expect("full loads").enumeration_count());
+    let full_load_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let t0 = Instant::now();
+    grown.save_snapshot_delta(&delta_path, &base_path).expect("delta saves");
+    let delta_encode_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t0 = Instant::now();
+    black_box(Session::load_snapshot(&delta_path).expect("delta chain loads").enumeration_count());
+    let delta_load_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let full_bytes = std::fs::metadata(&full_path).expect("full meta").len();
+    let delta_bytes = std::fs::metadata(&delta_path).expect("delta meta").len();
+    assert!(
+        delta_bytes < full_bytes,
+        "delta ({delta_bytes} B) must beat the full re-encode ({full_bytes} B)"
+    );
+    println!(
+        "{WORKLOAD:<14} delta-vs-full: encode {delta_encode_ms:.2} vs {full_encode_ms:.2} ms   \
+         load {delta_load_ms:.2} vs {full_load_ms:.2} ms   \
+         {delta_bytes} vs {full_bytes} bytes"
+    );
+    rows.push(row(
+        WORKLOAD,
+        "serve-delta-snapshot",
+        delta_encode_ms + delta_load_ms,
+        &[
+            ("delta_encode_ms", delta_encode_ms),
+            ("delta_load_ms", delta_load_ms),
+            ("full_encode_ms", full_encode_ms),
+            ("full_load_ms", full_load_ms),
+            ("delta_bytes", delta_bytes as f64),
+            ("full_bytes", full_bytes as f64),
+        ],
+    ));
+
     merge_into_results(RESULTS, rows);
     println!("merged {} serving records into {RESULTS}", OWNED_ENGINES.len());
+}
+
+/// Fan `clients` persistent connections at the router, each issuing
+/// `per_client` queries round-robin across `names`. Returns the wall
+/// clock (seconds) and per-query latencies (ms); any non-ok response
+/// panics — a healthy sharded deployment answers everything.
+fn routed_throughput(
+    addr: SocketAddr,
+    clients: usize,
+    per_client: usize,
+    names: &[&str],
+    samples: usize,
+) -> (f64, Vec<f64>) {
+    let t0 = Instant::now();
+    let mut latencies: Vec<f64> = Vec::with_capacity(clients * per_client);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                scope.spawn(move || {
+                    let stream = TcpStream::connect(addr).expect("connects");
+                    stream
+                        .set_read_timeout(Some(Duration::from_secs(60)))
+                        .expect("read timeout set");
+                    let mut writer = stream.try_clone().expect("clones");
+                    let mut reader = BufReader::new(stream);
+                    let mut lat = Vec::with_capacity(per_client);
+                    let mut line = String::new();
+                    for i in 0..per_client {
+                        let name = names[(c + i) % names.len()];
+                        let req = format!(
+                            "{{\"workload\":\"{name}\",\"samples\":{samples},\"seed\":{}}}\n",
+                            i % 2
+                        );
+                        let t = Instant::now();
+                        writer.write_all(req.as_bytes()).expect("writes");
+                        line.clear();
+                        reader.read_line(&mut line).expect("router answers");
+                        assert!(line.contains("\"ok\":true"), "routed query failed: {line}");
+                        lat.push(t.elapsed().as_secs_f64() * 1e3);
+                    }
+                    lat
+                })
+            })
+            .collect();
+        for h in handles {
+            latencies.extend(h.join().expect("routed client"));
+        }
+    });
+    (t0.elapsed().as_secs_f64().max(1e-9), latencies)
 }
 
 /// One connect → query → single response line → close. Returns

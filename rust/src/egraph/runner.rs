@@ -322,6 +322,29 @@ impl Runner {
         }
     }
 
+    /// Build a runner over an **existing** e-graph (a snapshot-restored
+    /// enumeration being extended with more rules). Restored graphs carry
+    /// no dirty backlog for the incremental matcher — their dirty set was
+    /// drained by the writing process — so the search mode defaults to
+    /// [`SearchMode::FullRescan`]; with the default incremental mode the
+    /// first iteration would find nothing and report spurious saturation.
+    pub fn from_egraph(egraph: EGraph, root: Id, rules: Vec<Rewrite>) -> Self {
+        let n = rules.len();
+        Runner {
+            egraph,
+            root,
+            rules,
+            limits: RunnerLimits::default(),
+            scheduler: None,
+            search_workers: default_workers(),
+            apply_workers: default_workers(),
+            search_mode: SearchMode::FullRescan,
+            stats: Vec::new(),
+            applied_memo: FxHashSet::default(),
+            rule_backlog: vec![Vec::new(); n],
+        }
+    }
+
     pub fn with_limits(mut self, limits: RunnerLimits) -> Self {
         self.limits = limits;
         self

@@ -54,8 +54,8 @@
 //! | [`tensor`] | pure-Rust tensor math + EngineIR evaluator (semantics oracle) |
 //! | [`cost`] | analytic area / latency / energy models over designs |
 //! | [`extract`] | parallel, memoized design extraction: incremental cost-table memo, seeded sampling, streaming Pareto frontier |
-//! | [`persist`] | versioned zero-dependency snapshot format: saturated e-graph + cost tables on disk, loaded with zero re-saturation |
-//! | [`serve`] | `hwsplit serve`: TCP daemon (bounded worker pool, typed backpressure, per-request deadlines, hot snapshot reload) answering design-space queries from loaded snapshots — wire protocol spec in `docs/serving.md` |
+//! | [`persist`] | versioned zero-dependency snapshot format: saturated e-graph + cost tables on disk, loaded with zero re-saturation; v3 *delta* snapshots persist only the growth against a fingerprint-checked base file |
+//! | [`serve`] | `hwsplit serve`: TCP daemon (bounded worker pool, typed backpressure, per-request deadlines, hot snapshot reload) answering design-space queries from loaded snapshots; [`serve::shard`] scales past one process — a supervisor/router over health-checked child daemons — wire protocol spec in `docs/serving.md` |
 //! | [`sim`] | cycle-approximate accelerator simulator (usefulness oracle) |
 //! | [`runtime`] | PJRT executor for AOT-compiled Pallas engine kernels (feature `pjrt`; stub otherwise) |
 //! | [`session`] | **the primary API**: reusable sessions, queries, pluggable backends |

@@ -10,10 +10,12 @@
 //!                   [--backend analytic|interp|sim|pjrt]
 //!                   [--objective latency|area|balanced] [--csv dir]
 //!                   [--snapshot-out file.hws] [--snapshot-in file.hws]
+//!                   [--extend-rules paper|all] [--snapshot-delta-out file.hws]
 //! hwsplit serve     --snapshots a.hws,b.hws [--port 7878] [--max-sessions 4]
-//!                   [--serve-workers N] [--queue-depth 64]
+//!                   [--shards N] [--serve-workers N] [--queue-depth 64]
 //!                   [--request-timeout-ms 10000] [--max-connections 256]
 //!                   [--reload-marker FILE]
+//! hwsplit snapshot-info file.hws
 //! hwsplit simulate  --workload mlp [--seed 3]
 //! hwsplit run       --workload mlp [--design split] [--artifacts DIR]
 //! ```
@@ -22,6 +24,10 @@
 //! as a library the same session answers many queries — see the crate docs.
 //! `--snapshot-out` persists the saturated e-graph (+ warm cost tables) and
 //! `--snapshot-in` / `serve` answer from it with zero re-saturation.
+//! `--extend-rules` re-saturates a loaded snapshot under a wider rule set,
+//! and `--snapshot-delta-out` persists just the growth as a v3 delta
+//! against the `--snapshot-in` base. `serve --shards N` runs the
+//! supervisor/router described in [`hwsplit::serve::shard`].
 
 use hwsplit::egraph::{Runner, RunnerLimits, SchedulerSpec, SearchMode};
 use hwsplit::extract::{sample_design, Extractor};
@@ -31,6 +37,7 @@ use hwsplit::relay::{all_workloads, workload_by_name};
 use hwsplit::report::{fmt_f64, Table};
 use hwsplit::rewrites::{self, RuleSet};
 use hwsplit::runtime::{EngineRuntime, PjrtBackend};
+use hwsplit::serve::shard::{ShardConfig, ShardServer};
 use hwsplit::serve::{ServeConfig, Server, SessionStore};
 use hwsplit::session::{Backend, Objective, Query, Session};
 use hwsplit::sim::{simulate, SimConfig};
@@ -115,6 +122,7 @@ fn main() {
         "enumerate" => cmd_enumerate(&args),
         "explore" => cmd_explore(&args),
         "serve" => cmd_serve(&args),
+        "snapshot-info" => cmd_snapshot_info(&argv[1..]),
         "simulate" => cmd_simulate(&args),
         "run" => cmd_run(&args),
         _ => {
@@ -256,6 +264,25 @@ fn cmd_explore(args: &Args) {
             std::process::exit(2);
         })
     };
+    // `--extend-rules SET`: widen a loaded snapshot's rule set and
+    // re-saturate incrementally (rules already present are skipped); pair
+    // with `--snapshot-delta-out` to persist just the growth.
+    if let Some(set) = args.get("extend-rules") {
+        if args.get("snapshot-in").is_none() {
+            eprintln!("--extend-rules needs --snapshot-in (it re-saturates a loaded snapshot)");
+            std::process::exit(2);
+        }
+        let rules: RuleSet = set.parse().unwrap_or_else(|e| {
+            eprintln!("--extend-rules: {e}");
+            std::process::exit(2);
+        });
+        let iters = args.usize("extend-iters", 4);
+        let added = session.extend_rules(rules, iters).unwrap_or_else(|e| {
+            eprintln!("--extend-rules {set}: {e}");
+            std::process::exit(2);
+        });
+        println!("extended rule set with {added} new rules");
+    }
     let w = session.workload().clone();
     let samples = args.usize("samples", 64);
 
@@ -375,7 +402,9 @@ fn cmd_explore(args: &Args) {
 
 /// `--snapshot-out FILE`: persist the session's enumerated space — run
 /// *after* the queries so every cost table they solved ships in the
-/// snapshot and loaders start warm.
+/// snapshot and loaders start warm. `--snapshot-delta-out FILE` persists
+/// a v3 delta against the `--snapshot-in` base instead of re-encoding
+/// the whole graph.
 fn maybe_save_snapshot(args: &Args, session: &mut Session) {
     if let Some(path) = args.get("snapshot-out") {
         session.save_snapshot(path).unwrap_or_else(|e| {
@@ -383,6 +412,17 @@ fn maybe_save_snapshot(args: &Args, session: &mut Session) {
             std::process::exit(2);
         });
         println!("wrote snapshot to {path}");
+    }
+    if let Some(path) = args.get("snapshot-delta-out") {
+        let Some(base) = args.get("snapshot-in") else {
+            eprintln!("--snapshot-delta-out needs --snapshot-in as the delta base");
+            std::process::exit(2);
+        };
+        session.save_snapshot_delta(path, base).unwrap_or_else(|e| {
+            eprintln!("--snapshot-delta-out {path}: {e}");
+            std::process::exit(2);
+        });
+        println!("wrote delta snapshot to {path} (base {base})");
     }
 }
 
@@ -396,6 +436,11 @@ fn cmd_serve(args: &Args) {
     });
     let port = args.usize("port", 7878);
     let host = args.get("host").unwrap_or("127.0.0.1");
+    let shards = args.usize("shards", 1);
+    if shards >= 2 {
+        cmd_serve_sharded(args, snapshots, shards, host, port);
+        return;
+    }
     let defaults = ServeConfig::default();
     let config = ServeConfig {
         workers: args.usize("serve-workers", defaults.workers),
@@ -442,6 +487,92 @@ fn cmd_serve(args: &Args) {
          {:.1} queries/sec, p50 {:.2} ms, p99 {:.2} ms",
         s.served, s.errors, s.rejected, s.timeouts, s.queries_per_sec, s.p50_ms, s.p99_ms
     );
+}
+
+/// `serve --shards N`: supervisor mode. Partition the snapshots across N
+/// child daemons of this same binary and route requests by workload —
+/// topology and semantics in [`hwsplit::serve::shard`] / `docs/serving.md`.
+fn cmd_serve_sharded(args: &Args, snapshots: &str, shards: usize, host: &str, port: usize) {
+    let program = std::env::current_exe().unwrap_or_else(|e| {
+        eprintln!("serve --shards: cannot locate own binary: {e}");
+        std::process::exit(2);
+    });
+    let mut config = ShardConfig::new(program, shards);
+    config.host = host.to_string();
+    config.request_timeout_ms = args.usize("request-timeout-ms", 10_000) as u64;
+    // Per-daemon knobs are forwarded so every child shares them.
+    let forwarded = [
+        "serve-workers",
+        "queue-depth",
+        "request-timeout-ms",
+        "max-connections",
+        "max-sessions",
+        "reload-marker",
+    ];
+    for flag in forwarded {
+        if let Some(v) = args.get(flag) {
+            config.child_args.push(format!("--{flag}"));
+            config.child_args.push(v.to_string());
+        }
+    }
+    let paths: Vec<String> = snapshots
+        .split(',')
+        .map(str::trim)
+        .filter(|p| !p.is_empty())
+        .map(String::from)
+        .collect();
+    let server = ShardServer::bind(&format!("{host}:{port}"), &paths, config).unwrap_or_else(|e| {
+        eprintln!("serve --shards {shards}: {e}");
+        std::process::exit(2);
+    });
+    for path in &paths {
+        let shard = hwsplit::persist::peek_header(path)
+            .ok()
+            .and_then(|m| server.shard_of(&m.workload));
+        if let Some(shard) = shard {
+            println!("registered {path} on shard {shard}");
+        }
+    }
+    println!(
+        "hwsplit serve listening on {} (router over {} shards; {} workloads registered; \
+         request timeout {} ms)",
+        server.local_addr().expect("bound socket has an address"),
+        server.shard_count(),
+        paths.len(),
+        args.usize("request-timeout-ms", 10_000),
+    );
+    server.run().unwrap_or_else(|e| {
+        eprintln!("serve: {e}");
+        std::process::exit(1);
+    });
+    println!(
+        "router shut down ({} shard restarts, {} router errors)",
+        server.restarts(),
+        server.router_errors()
+    );
+}
+
+/// `snapshot-info FILE`: print a snapshot's header metadata without
+/// decoding (or even reading) its payload.
+fn cmd_snapshot_info(argv: &[String]) {
+    let Some(path) = argv.iter().find(|a| !a.starts_with("--")) else {
+        eprintln!("snapshot-info needs a snapshot file path");
+        std::process::exit(2);
+    };
+    let meta = hwsplit::persist::peek_header(path).unwrap_or_else(|e| {
+        eprintln!("{path}: {e}");
+        std::process::exit(2);
+    });
+    let kind = if meta.base_fingerprint.is_some() { "delta" } else { "full" };
+    println!("snapshot:             {path}");
+    println!("format version:       {} ({kind})", meta.format_version);
+    println!("workload:             {}", meta.workload);
+    println!("workload fingerprint: {:#018x}", meta.workload_fingerprint);
+    println!("rule-set hash:        {:#018x}", meta.ruleset_hash);
+    if let Some(base) = meta.base_fingerprint {
+        println!("base fingerprint:     {base:#018x}");
+    }
+    println!("payload:              {} bytes", meta.payload_len);
 }
 
 fn cmd_simulate(args: &Args) {

@@ -10,9 +10,17 @@
 //! misconfigure. Order preservation is what the callers actually rely on:
 //! it is what makes the parallel search phase's merge deterministic.
 
-/// Sensible worker-pool width for this machine.
+/// Sensible worker-pool width for this machine: the full
+/// `available_parallelism` (every `*-workers` flag defaults through here).
 pub fn default_workers() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    workers_from(std::thread::available_parallelism().ok())
+}
+
+/// [`default_workers`] with the platform probe factored out so the
+/// fallback is testable: when the machine's parallelism is unknowable,
+/// run serial (1) rather than guessing wider than the hardware.
+pub(crate) fn workers_from(probed: Option<std::num::NonZeroUsize>) -> usize {
+    probed.map(std::num::NonZeroUsize::get).unwrap_or(1)
 }
 
 /// Scoped-thread parallel map preserving input order.
@@ -83,5 +91,12 @@ mod tests {
     #[test]
     fn default_workers_is_positive() {
         assert!(default_workers() >= 1);
+    }
+
+    #[test]
+    fn unknowable_parallelism_falls_back_to_serial() {
+        assert_eq!(workers_from(None), 1);
+        assert_eq!(workers_from(std::num::NonZeroUsize::new(8)), 8);
+        assert_eq!(workers_from(std::num::NonZeroUsize::new(1)), 1);
     }
 }

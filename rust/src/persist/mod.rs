@@ -32,10 +32,21 @@
 //!                                 parts, root, report summary, cost tables
 //! ```
 //!
-//! Version 2 (current) encodes each e-node body exactly once, in the arena
-//! section; class member lists and parent back-edges are `u32` arena
-//! indices. Version 1 files (which re-encoded every class member in full)
-//! are still readable — see [`FORMAT_VERSION`].
+//! Version 2 (current full format) encodes each e-node body exactly once,
+//! in the arena section; class member lists and parent back-edges are
+//! `u32` arena indices. Version 1 files (which re-encoded every class
+//! member in full) are still readable — see [`FORMAT_VERSION`].
+//!
+//! Version 3 files are **deltas**: the header gains a base-fingerprint
+//! `u64` (FxHash of the entire base file's bytes) between the rule-set
+//! hash and the payload length, and the payload stores the base's file
+//! name plus only the union-find entries, arena nodes, class slots, and
+//! cost-table rows that differ from the base — so re-persisting after an
+//! extended-rule-set re-saturation writes KBs instead of re-encoding the
+//! world. [`read_snapshot`] resolves the base as a **sibling file** of
+//! the delta and validates its fingerprint before overlaying; chains are
+//! exactly one level deep (a delta's base must be a full snapshot). Full
+//! snapshots keep writing version 2 — see [`DELTA_FORMAT_VERSION`].
 //!
 //! All integers are little-endian. Strings are `u32` length + UTF-8 bytes.
 //! Operators are encoded **through the registry** ([`crate::ir::spec`]):
@@ -60,7 +71,7 @@ use crate::ir::spec::{AttrKind, AttrVal};
 use crate::ir::{parse_expr, spec, BufKind, EngineSig, Node, Op, RecExpr, Shape, Symbol, Ty};
 use std::hash::Hasher as _;
 use std::io::{Read as _, Write as _};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -75,6 +86,14 @@ pub const MAGIC: &[u8; 8] = b"HWSPLIT\0";
 /// the decoder maps their duplicated class nodes back onto arena slots by
 /// content.
 pub const FORMAT_VERSION: u32 = 2;
+
+/// The **delta** snapshot format: version 3 files encode a diff against a
+/// full (v1/v2) base file, identified by an FxHash fingerprint of the
+/// base's bytes in the header. Written by [`write_snapshot_delta`]; read
+/// transparently by [`read_snapshot`], which resolves the base as a
+/// sibling file. Deltas never serve as bases themselves — a chain is
+/// exactly one level deep.
+pub const DELTA_FORMAT_VERSION: u32 = 3;
 
 /// FxHash of a byte string (the checksum / fingerprint primitive — the
 /// in-tree [`FxHasher`] is seed-free and therefore process-stable).
@@ -112,6 +131,10 @@ pub struct SnapshotMeta {
     pub workload_fingerprint: u64,
     /// [`ruleset_hash`] of the rule names the space was enumerated with.
     pub ruleset_hash: u64,
+    /// For delta snapshots (format version [`DELTA_FORMAT_VERSION`]): the
+    /// FxHash fingerprint of the base file's bytes. `None` for full
+    /// snapshots.
+    pub base_fingerprint: Option<u64>,
     /// Payload size in bytes.
     pub payload_len: u64,
 }
@@ -191,6 +214,231 @@ pub(crate) fn write_snapshot(path: impl AsRef<Path>, parts: &SnapshotParts) -> R
     Ok(())
 }
 
+/// Encode a **delta** snapshot (format [`DELTA_FORMAT_VERSION`]) against a
+/// full base file's bytes: only the union-find entries, arena nodes,
+/// class slots, and cost-table rows that differ from the decoded base are
+/// written, plus the base's file name and fingerprint so the reader can
+/// resolve and validate the chain.
+///
+/// The applicability gate is the e-graph's mutation log
+/// ([`EGraph::changed_since`]): a graph whose log no longer reaches back
+/// to the base epoch was not grown in-place from this base, so callers
+/// must write a full snapshot instead. The log only *gates* — unions drop
+/// the loser's slot and rebuilds rewrite parent back-edges without
+/// logging those slots, so the encoder diffs the full raw parts
+/// structurally rather than trusting the log's slot list.
+pub(crate) fn encode_snapshot_delta(
+    parts: &SnapshotParts,
+    base_bytes: &[u8],
+    base_name: &str,
+) -> Result<Vec<u8>> {
+    {
+        let mut bd = Dec::new(base_bytes);
+        let (bmeta, _) = decode_header(&mut bd)?;
+        if bmeta.format_version == DELTA_FORMAT_VERSION {
+            // Chains resolve exactly one level: a delta's base must be full.
+            return Err(Error::InvalidConfig("delta base must be a full snapshot".into()));
+        }
+    }
+    let base = decode_snapshot(base_bytes)?;
+    if base.meta.workload != parts.workload_name {
+        return Err(Error::InvalidConfig(format!(
+            "delta base is for workload '{}', not '{}'",
+            base.meta.workload, parts.workload_name
+        )));
+    }
+    if base.meta.workload_fingerprint != workload_fingerprint(&parts.workload_src) {
+        return Err(Error::InvalidConfig("delta base has a different workload definition".into()));
+    }
+    let base_epoch = base.egraph.epoch();
+    if parts.egraph.epoch() < base_epoch || parts.egraph.changed_since(base_epoch).is_none() {
+        // The mutation log no longer reaches back to the base epoch: this
+        // graph was not grown in-place from the base, write a full snapshot.
+        return Err(Error::InvalidConfig("graph was not grown from this delta base".into()));
+    }
+    let cur = parts.egraph.to_parts();
+    let old = base.egraph.to_parts();
+    if cur.parents.len() < old.parents.len() || cur.arena.len() < old.arena.len() {
+        return Err(Error::InvalidConfig("graph is smaller than the delta base".into()));
+    }
+
+    let mut p = Enc::default();
+    p.str(base_name);
+    p.u64(base_epoch);
+    // Base dimensions, re-checked at decode time: a delta is only valid
+    // against the exact graph it was diffed from.
+    p.u64(old.parents.len() as u64);
+    p.u64(old.arena.len() as u64);
+    p.str(&parts.lowered.to_string());
+    p.u32(parts.rule_names.len() as u32);
+    for name in &parts.rule_names {
+        p.str(name);
+    }
+    encode_egraph_delta(&mut p, &cur, &old);
+    p.id(parts.root);
+    encode_report(&mut p, parts.report);
+    encode_cache_delta(&mut p, &parts.cache.export(), &base.cache.export());
+    let payload = p.buf;
+
+    let mut out = Enc::default();
+    out.buf.extend_from_slice(MAGIC);
+    out.u32(DELTA_FORMAT_VERSION);
+    out.str(parts.workload_name);
+    out.u64(workload_fingerprint(&parts.workload_src));
+    out.u64(ruleset_hash(&parts.rule_names));
+    out.u64(fx_bytes(base_bytes));
+    out.u64(payload.len() as u64);
+    out.u64(fx_bytes(&payload));
+    out.buf.extend_from_slice(&payload);
+    Ok(out.buf)
+}
+
+/// Encode a delta against the full snapshot at `base_path` and write it to
+/// `path`, creating parent directories as needed. The delta stores the
+/// base's *file name* (not its path): [`read_snapshot`] resolves the base
+/// as a sibling of the delta file, so the pair deploys as a unit.
+pub(crate) fn write_snapshot_delta(
+    path: impl AsRef<Path>,
+    base_path: impl AsRef<Path>,
+    parts: &SnapshotParts,
+) -> Result<()> {
+    let base_bytes = std::fs::read(base_path.as_ref())?;
+    let base_name = base_path
+        .as_ref()
+        .file_name()
+        .and_then(|n| n.to_str())
+        .ok_or_else(|| Error::InvalidConfig("delta base path has no UTF-8 file name".into()))?;
+    let bytes = encode_snapshot_delta(parts, &base_bytes, base_name)?;
+    if let Some(dir) = path.as_ref().parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let mut f = std::fs::File::create(path.as_ref())?;
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+/// The e-graph diff: changed slots below the base lengths as explicit
+/// `(index, value)` pairs, appended slots in order (their count is implied
+/// by the new totals), and the small transient sections (pending list,
+/// dirty log heads, epoch) whole — they are a few ids each.
+fn encode_egraph_delta(e: &mut Enc, cur: &EGraphParts, old: &EGraphParts) {
+    let base_n = old.parents.len();
+    let base_arena = old.arena.len();
+    e.u64(cur.parents.len() as u64);
+    let changed: Vec<usize> = (0..base_n).filter(|&i| cur.parents[i] != old.parents[i]).collect();
+    e.u32(changed.len() as u32);
+    for i in changed {
+        e.u32(i as u32);
+        e.u32(cur.parents[i]);
+    }
+    for &par in &cur.parents[base_n..] {
+        e.u32(par);
+    }
+    e.u64(cur.arena.len() as u64);
+    let changed: Vec<usize> = (0..base_arena).filter(|&i| cur.arena[i] != old.arena[i]).collect();
+    e.u32(changed.len() as u32);
+    for i in changed {
+        e.u32(i as u32);
+        e.node(&cur.arena[i]);
+    }
+    for node in &cur.arena[base_arena..] {
+        e.node(node);
+    }
+    let changed: Vec<usize> =
+        (0..base_n).filter(|&i| !class_slot_eq(&cur.classes[i], &old.classes[i])).collect();
+    e.u32(changed.len() as u32);
+    for i in changed {
+        e.u32(i as u32);
+        encode_class_slot(e, &cur.classes[i]);
+    }
+    for class in &cur.classes[base_n..] {
+        encode_class_slot(e, class);
+    }
+    e.u32(cur.pending.len() as u32);
+    for &id in &cur.pending {
+        e.id(id);
+    }
+    e.u64(cur.n_unions as u64);
+    e.u8(cur.dirty as u8);
+    e.u32(cur.dirty_classes.len() as u32);
+    for &id in &cur.dirty_classes {
+        e.id(id);
+    }
+    e.u32(cur.merged_roots.len() as u32);
+    for &id in &cur.merged_roots {
+        e.id(id);
+    }
+    e.u64(cur.epoch);
+}
+
+/// Structural equality of two class slots ([`EClass`] derives no
+/// `PartialEq` — equality is only meaningful per-field here, for diffing).
+fn class_slot_eq(a: &Option<EClass>, b: &Option<EClass>) -> bool {
+    match (a, b) {
+        (None, None) => true,
+        (Some(a), Some(b)) => {
+            a.id == b.id && a.ty == b.ty && a.node_ids == b.node_ids && a.parents == b.parents
+        }
+        _ => false,
+    }
+}
+
+/// The cost-table diff. The delta's table list is authoritative (kinds the
+/// base solved but the current cache dropped — LRU-evicted sampled tables
+/// — simply don't appear); each table is either whole (mode 0, a kind the
+/// base never solved) or upserts + removals against the base's table of
+/// the same kind (mode 1).
+fn encode_cache_delta(e: &mut Enc, cur: &CacheExport, base: &CacheExport) {
+    e.u32(cur.tables.len() as u32);
+    for (kind, epoch, table) in &cur.tables {
+        e.kind(kind);
+        e.u64(*epoch);
+        let base_table = base.tables.iter().find(|(k, _, _)| k == kind).map(|(_, _, t)| t);
+        match base_table {
+            None => {
+                e.u8(0);
+                encode_table_entries(e, table);
+            }
+            Some(bt) => {
+                e.u8(1);
+                let mut upserts: Vec<(&Id, &(f64, Node))> = table
+                    .raw_entries()
+                    .iter()
+                    .filter(|(id, (cost, node))| {
+                        bt.raw_entries().get(id).map_or(true, |(bc, bn)| {
+                            bc.to_bits() != cost.to_bits() || bn != node
+                        })
+                    })
+                    .collect();
+                upserts.sort_by_key(|(id, _)| **id);
+                e.u64(upserts.len() as u64);
+                for (id, (cost, node)) in upserts {
+                    e.id(*id);
+                    e.f64(*cost);
+                    e.node(node);
+                }
+                let mut removed: Vec<Id> = bt
+                    .raw_entries()
+                    .keys()
+                    .filter(|id| !table.raw_entries().contains_key(id))
+                    .copied()
+                    .collect();
+                removed.sort_unstable();
+                e.u32(removed.len() as u32);
+                for id in removed {
+                    e.id(id);
+                }
+            }
+        }
+    }
+    e.u32(cur.sampled_order.len() as u32);
+    for kind in &cur.sampled_order {
+        e.kind(kind);
+    }
+}
+
 fn encode_egraph(e: &mut Enc, eg: &EGraph) {
     let parts = eg.to_parts();
     e.u64(parts.parents.len() as u64);
@@ -203,25 +451,7 @@ fn encode_egraph(e: &mut Enc, eg: &EGraph) {
     }
     debug_assert_eq!(parts.classes.len(), parts.parents.len());
     for class in &parts.classes {
-        match class {
-            None => e.u8(0),
-            Some(c) => {
-                e.u8(1);
-                e.id(c.id);
-                e.ty(&c.ty);
-                // v2: classes reference arena slots — each node body is in
-                // the file exactly once.
-                e.u32(c.node_ids.len() as u32);
-                for &nid in &c.node_ids {
-                    e.u32(nid.index() as u32);
-                }
-                e.u32(c.parents.len() as u32);
-                for &(nid, pid) in &c.parents {
-                    e.u32(nid.index() as u32);
-                    e.id(pid);
-                }
-            }
-        }
+        encode_class_slot(e, class);
     }
     e.u32(parts.pending.len() as u32);
     for &id in &parts.pending {
@@ -238,6 +468,30 @@ fn encode_egraph(e: &mut Enc, eg: &EGraph) {
         e.id(id);
     }
     e.u64(parts.epoch);
+}
+
+/// One class slot in the v2 layout: presence byte, then id/ty/member arena
+/// indices/parent back-edges — each node body is in the file exactly once
+/// (the arena section). Shared by the full encoder and the delta differ so
+/// the two layouts cannot drift.
+fn encode_class_slot(e: &mut Enc, class: &Option<EClass>) {
+    match class {
+        None => e.u8(0),
+        Some(c) => {
+            e.u8(1);
+            e.id(c.id);
+            e.ty(&c.ty);
+            e.u32(c.node_ids.len() as u32);
+            for &nid in &c.node_ids {
+                e.u32(nid.index() as u32);
+            }
+            e.u32(c.parents.len() as u32);
+            for &(nid, pid) in &c.parents {
+                e.u32(nid.index() as u32);
+                e.id(pid);
+            }
+        }
+    }
 }
 
 fn encode_report(e: &mut Enc, r: &RunnerReport) {
@@ -264,20 +518,24 @@ fn encode_cache(e: &mut Enc, export: &CacheExport) {
     for (kind, epoch, table) in &export.tables {
         e.kind(kind);
         e.u64(*epoch);
-        // Deterministic entry order: snapshot bytes must not depend on
-        // HashMap iteration order.
-        let mut entries: Vec<(&Id, &(f64, Node))> = table.raw_entries().iter().collect();
-        entries.sort_by_key(|(id, _)| **id);
-        e.u64(entries.len() as u64);
-        for (id, (cost, node)) in entries {
-            e.id(*id);
-            e.f64(*cost);
-            e.node(node);
-        }
+        encode_table_entries(e, table);
     }
     e.u32(export.sampled_order.len() as u32);
     for kind in &export.sampled_order {
         e.kind(kind);
+    }
+}
+
+/// One cost table's entries, sorted by class id — snapshot bytes must not
+/// depend on HashMap iteration order.
+fn encode_table_entries(e: &mut Enc, table: &CostTable) {
+    let mut entries: Vec<(&Id, &(f64, Node))> = table.raw_entries().iter().collect();
+    entries.sort_by_key(|(id, _)| **id);
+    e.u64(entries.len() as u64);
+    for (id, (cost, node)) in entries {
+        e.id(*id);
+        e.f64(*cost);
+        e.node(node);
     }
 }
 
@@ -391,10 +649,42 @@ pub(crate) struct LoadedSnapshot {
     pub cache: ExtractCache,
 }
 
-/// Read + decode a snapshot file.
+/// Read + decode a snapshot file. A delta file (format
+/// [`DELTA_FORMAT_VERSION`]) is resolved transparently: its base is read
+/// from the sibling file it names, fingerprint-validated, and overlaid —
+/// callers see one [`LoadedSnapshot`] either way.
 pub(crate) fn read_snapshot(path: impl AsRef<Path>) -> Result<LoadedSnapshot> {
-    let bytes = std::fs::read(path.as_ref())?;
-    decode_snapshot(&bytes)
+    let path = path.as_ref();
+    let bytes = std::fs::read(path)?;
+    let mut dec = Dec::new(&bytes);
+    let (meta, _) = decode_header(&mut dec)?;
+    if meta.format_version != DELTA_FORMAT_VERSION {
+        return decode_snapshot(&bytes);
+    }
+    let base_name = delta_base_name(&bytes)?;
+    let base_path = match path.parent() {
+        Some(dir) if !dir.as_os_str().is_empty() => dir.join(&base_name),
+        _ => PathBuf::from(&base_name),
+    };
+    let base_bytes = std::fs::read(&base_path).map_err(|e| {
+        Error::SnapshotCorrupt(format!("delta base '{}' is unreadable: {e}", base_path.display()))
+    })?;
+    decode_snapshot_delta(&bytes, &base_bytes)
+}
+
+/// The base file name a delta snapshot resolves against: the first payload
+/// field, returned only after the payload checksum verifies.
+pub fn delta_base_name(bytes: &[u8]) -> Result<String> {
+    let mut dec = Dec::new(bytes);
+    let (meta, checksum) = decode_header(&mut dec)?;
+    if meta.format_version != DELTA_FORMAT_VERSION {
+        return Err(corrupt("not a delta snapshot"));
+    }
+    let payload = dec.take(meta.payload_len as usize, "payload")?;
+    if fx_bytes(payload) != checksum {
+        return Err(corrupt("payload checksum mismatch"));
+    }
+    Dec::new(payload).str("base file name")
 }
 
 /// Decode a snapshot from bytes. Every structural defect — truncation, bad
@@ -404,6 +694,9 @@ pub(crate) fn read_snapshot(path: impl AsRef<Path>) -> Result<LoadedSnapshot> {
 pub(crate) fn decode_snapshot(bytes: &[u8]) -> Result<LoadedSnapshot> {
     let mut dec = Dec::new(bytes);
     let (meta, checksum) = decode_header(&mut dec)?;
+    if meta.format_version == DELTA_FORMAT_VERSION {
+        return Err(corrupt("delta snapshot needs its base file; load it by path"));
+    }
     let payload = dec.take(meta.payload_len as usize, "payload")?;
     if !dec.at_end() {
         return Err(corrupt("trailing bytes after payload"));
@@ -433,25 +726,239 @@ pub(crate) fn decode_snapshot(bytes: &[u8]) -> Result<LoadedSnapshot> {
     Ok(LoadedSnapshot { meta, lowered, rule_names, egraph, root, report, cache })
 }
 
+/// Decode a delta snapshot by overlaying it onto its base file's bytes.
+/// On top of the usual corruption checks, the chain itself is validated:
+/// the base's fingerprint must match the delta header, the base must be a
+/// full snapshot (one-level chains), and the delta's recorded base epoch
+/// and dimensions must match the decoded base exactly.
+pub(crate) fn decode_snapshot_delta(bytes: &[u8], base_bytes: &[u8]) -> Result<LoadedSnapshot> {
+    let mut dec = Dec::new(bytes);
+    let (meta, checksum) = decode_header(&mut dec)?;
+    if meta.format_version != DELTA_FORMAT_VERSION {
+        return Err(corrupt("not a delta snapshot"));
+    }
+    let payload = dec.take(meta.payload_len as usize, "payload")?;
+    if !dec.at_end() {
+        return Err(corrupt("trailing bytes after payload"));
+    }
+    if fx_bytes(payload) != checksum {
+        return Err(corrupt("payload checksum mismatch"));
+    }
+    let base_fp = meta.base_fingerprint.expect("v3 headers carry a base fingerprint");
+    if fx_bytes(base_bytes) != base_fp {
+        return Err(corrupt("base fingerprint mismatch (wrong or rewritten base file)"));
+    }
+    {
+        let mut bd = Dec::new(base_bytes);
+        let (bmeta, _) = decode_header(&mut bd)?;
+        if bmeta.format_version == DELTA_FORMAT_VERSION {
+            return Err(corrupt("delta chained on a delta base (chains resolve one level)"));
+        }
+    }
+    let base = decode_snapshot(base_bytes)?;
+    if base.meta.workload != meta.workload {
+        return Err(corrupt("delta and base disagree on the workload"));
+    }
+    let mut p = Dec::new(payload);
+    // The base name was already consumed by the caller to find the file;
+    // re-read it here to keep one sequential payload cursor.
+    let _base_name = p.str("base file name")?;
+    let base_epoch = p.u64("base epoch")?;
+    if base.egraph.epoch() != base_epoch {
+        return Err(corrupt("delta was written against a different base epoch"));
+    }
+    let base_parts = base.egraph.to_parts();
+    let decl_n = p.u64("base class count")? as usize;
+    let decl_arena = p.u64("base arena length")? as usize;
+    if decl_n != base_parts.parents.len() || decl_arena != base_parts.arena.len() {
+        return Err(corrupt("delta was written against a different base graph"));
+    }
+    let lowered_text = p.str("lowered program")?;
+    let lowered = parse_expr(&lowered_text)
+        .map_err(|e| corrupt(&format!("stored lowered program does not parse: {e}")))?;
+    let n_rules = p.u32("rule count")?;
+    let mut rule_names = Vec::with_capacity(n_rules as usize);
+    for _ in 0..n_rules {
+        rule_names.push(p.str("rule name")?);
+    }
+    if ruleset_hash(&rule_names) != meta.ruleset_hash {
+        return Err(corrupt("rule-set hash does not match the stored rule names"));
+    }
+    let (egraph, n_classes) = decode_egraph_delta(&mut p, base_parts)?;
+    let root = p.class_id("root", n_classes)?;
+    let report = decode_report(&mut p)?;
+    let cache = decode_cache_delta(&mut p, &base.cache.export(), n_classes)?;
+    if !p.at_end() {
+        return Err(corrupt("trailing bytes inside payload"));
+    }
+    Ok(LoadedSnapshot { meta, lowered, rule_names, egraph, root, report, cache })
+}
+
+/// Overlay a delta's e-graph diff onto the decoded base parts (see
+/// [`encode_egraph_delta`] for the section layout).
+fn decode_egraph_delta(p: &mut Dec, base: EGraphParts) -> Result<(EGraph, usize)> {
+    let base_n = base.parents.len();
+    let base_arena = base.arena.len();
+    let n = p.u64("class count")? as usize;
+    if n < base_n {
+        return Err(corrupt("delta shrinks the union-find"));
+    }
+    let mut parents = base.parents;
+    let n_changed = p.u32("changed union-find count")?;
+    for _ in 0..n_changed {
+        let idx = p.u32("union-find index")? as usize;
+        if idx >= base_n {
+            return Err(corrupt("changed union-find index out of range"));
+        }
+        let par = p.u32("union-find parent")?;
+        if par as usize >= n {
+            return Err(corrupt("union-find parent out of range"));
+        }
+        parents[idx] = par;
+    }
+    for _ in base_n..n {
+        let par = p.u32("union-find parent")?;
+        if par as usize >= n {
+            return Err(corrupt("union-find parent out of range"));
+        }
+        parents.push(par);
+    }
+    let arena_len = p.u64("arena length")? as usize;
+    if arena_len < base_arena {
+        return Err(corrupt("delta shrinks the arena"));
+    }
+    let mut arena = base.arena;
+    let n_changed = p.u32("changed arena count")?;
+    for _ in 0..n_changed {
+        let idx = p.u32("arena index")? as usize;
+        if idx >= base_arena {
+            return Err(corrupt("changed arena index out of range"));
+        }
+        arena[idx] = p.node("arena node", n)?;
+    }
+    for _ in base_arena..arena_len {
+        arena.push(p.node("arena node", n)?);
+    }
+    let mut classes = base.classes;
+    classes.resize(n, None);
+    let n_changed = p.u32("changed class count")?;
+    for _ in 0..n_changed {
+        let slot = p.u32("class slot")? as usize;
+        if slot >= base_n {
+            return Err(corrupt("changed class slot out of range"));
+        }
+        classes[slot] = decode_class_slot(p, slot, n, arena_len)?;
+    }
+    for (slot, class) in classes.iter_mut().enumerate().take(n).skip(base_n) {
+        *class = decode_class_slot(p, slot, n, arena_len)?;
+    }
+    let n_pending = p.u32("pending count")?;
+    let mut pending = Vec::with_capacity(n_pending as usize);
+    for _ in 0..n_pending {
+        pending.push(p.class_id("pending id", n)?);
+    }
+    let n_unions = p.u64("union count")? as usize;
+    let dirty = p.u8("dirty flag")? != 0;
+    let n_dirty = p.u32("dirty-class count")?;
+    let mut dirty_classes = Vec::with_capacity(n_dirty as usize);
+    for _ in 0..n_dirty {
+        dirty_classes.push(p.class_id("dirty class id", n)?);
+    }
+    let n_merged = p.u32("merged-root count")?;
+    let mut merged_roots = Vec::with_capacity(n_merged as usize);
+    for _ in 0..n_merged {
+        merged_roots.push(p.class_id("merged root id", n)?);
+    }
+    let epoch = p.u64("epoch")?;
+    let eg = EGraph::from_parts(EGraphParts {
+        parents,
+        classes,
+        arena,
+        pending,
+        n_unions,
+        dirty,
+        dirty_classes,
+        merged_roots,
+        epoch,
+    });
+    Ok((eg, n))
+}
+
+/// Overlay a delta's cost-table diff onto the base's exported cache (see
+/// [`encode_cache_delta`] for the section layout).
+fn decode_cache_delta(p: &mut Dec, base: &CacheExport, n_classes: usize) -> Result<ExtractCache> {
+    let n_tables = p.u32("cache table count")?;
+    let mut tables = Vec::with_capacity(n_tables as usize);
+    for _ in 0..n_tables {
+        let kind = p.kind()?;
+        let epoch = p.u64("cache table epoch")?;
+        let table = match p.u8("cost-table mode")? {
+            0 => CostTable::from_raw(decode_table_entries(p, n_classes)?),
+            1 => {
+                let bt = base
+                    .tables
+                    .iter()
+                    .find(|(k, _, _)| *k == kind)
+                    .map(|(_, _, t)| t)
+                    .ok_or_else(|| corrupt("cost-table diff has no base table of its kind"))?;
+                let mut best = bt.raw_entries().clone();
+                let n_up = p.u64("cost-table upsert count")? as usize;
+                for _ in 0..n_up {
+                    let id = p.class_id("cost-table class id", n_classes)?;
+                    let cost = p.f64("cost-table cost")?;
+                    let node = p.node("cost-table node", n_classes)?;
+                    best.insert(id, (cost, node));
+                }
+                let n_rm = p.u32("cost-table removal count")?;
+                for _ in 0..n_rm {
+                    let id = p.class_id("cost-table removed id", n_classes)?;
+                    best.remove(&id);
+                }
+                CostTable::from_raw(best)
+            }
+            _ => return Err(corrupt("unknown cost-table mode")),
+        };
+        tables.push((kind, epoch, Arc::new(table)));
+    }
+    let n_order = p.u32("sampled-order count")?;
+    let mut sampled_order = Vec::with_capacity(n_order as usize);
+    for _ in 0..n_order {
+        sampled_order.push(p.kind()?);
+    }
+    Ok(ExtractCache::import(CacheExport { tables, sampled_order }))
+}
+
 fn decode_header(dec: &mut Dec) -> Result<(SnapshotMeta, u64)> {
     let magic = dec.take(MAGIC.len(), "magic")?;
     if magic != MAGIC {
         return Err(corrupt("bad magic (not a hwsplit snapshot)"));
     }
     let format_version = dec.u32("format version")?;
-    if !(1..=FORMAT_VERSION).contains(&format_version) {
+    if !(1..=DELTA_FORMAT_VERSION).contains(&format_version) {
         return Err(Error::SnapshotVersion {
             found: format_version,
-            supported: FORMAT_VERSION,
+            supported: DELTA_FORMAT_VERSION,
         });
     }
     let workload = dec.str("workload name")?;
     let workload_fingerprint = dec.u64("workload fingerprint")?;
     let ruleset_hash = dec.u64("rule-set hash")?;
+    let base_fingerprint = if format_version == DELTA_FORMAT_VERSION {
+        Some(dec.u64("base fingerprint")?)
+    } else {
+        None
+    };
     let payload_len = dec.u64("payload length")?;
     let checksum = dec.u64("payload checksum")?;
     Ok((
-        SnapshotMeta { format_version, workload, workload_fingerprint, ruleset_hash, payload_len },
+        SnapshotMeta {
+            format_version,
+            workload,
+            workload_fingerprint,
+            ruleset_hash,
+            base_fingerprint,
+            payload_len,
+        },
         checksum,
     ))
 }
@@ -484,6 +991,10 @@ fn decode_egraph(p: &mut Dec, version: u32) -> Result<(EGraph, usize)> {
     }
     let mut classes: Vec<Option<EClass>> = Vec::with_capacity(n);
     for slot in 0..n {
+        if version != 1 {
+            classes.push(decode_class_slot(p, slot, n, arena_len)?);
+            continue;
+        }
         if p.u8("class presence")? == 0 {
             classes.push(None);
             continue;
@@ -496,24 +1007,16 @@ fn decode_egraph(p: &mut Dec, version: u32) -> Result<(EGraph, usize)> {
         let n_nodes = p.u32("class node count")?;
         let mut node_ids = Vec::with_capacity(n_nodes as usize);
         for _ in 0..n_nodes {
-            if version == 1 {
-                let node = p.node("class node", n)?;
-                let nid = match by_content.entry(node.clone()) {
-                    std::collections::hash_map::Entry::Occupied(o) => *o.get(),
-                    std::collections::hash_map::Entry::Vacant(v) => {
-                        let nid = NodeId::from_index(arena.len());
-                        arena.push(node);
-                        *v.insert(nid)
-                    }
-                };
-                node_ids.push(nid);
-            } else {
-                let raw = p.u32("class node id")? as usize;
-                if raw >= arena_len {
-                    return Err(corrupt("class node id out of range"));
+            let node = p.node("class node", n)?;
+            let nid = match by_content.entry(node.clone()) {
+                std::collections::hash_map::Entry::Occupied(o) => *o.get(),
+                std::collections::hash_map::Entry::Vacant(v) => {
+                    let nid = NodeId::from_index(arena.len());
+                    arena.push(node);
+                    *v.insert(nid)
                 }
-                node_ids.push(NodeId::from_index(raw));
-            }
+            };
+            node_ids.push(nid);
         }
         let n_parents = p.u32("class parent count")?;
         let mut cparents = Vec::with_capacity(n_parents as usize);
@@ -559,6 +1062,45 @@ fn decode_egraph(p: &mut Dec, version: u32) -> Result<(EGraph, usize)> {
     Ok((eg, n))
 }
 
+/// Decode one class slot in the v2 layout (arena-index members) — the
+/// counterpart of [`encode_class_slot`], shared by the full reader and the
+/// delta overlay. `n` bounds class ids, `arena_len` bounds arena indices.
+fn decode_class_slot(
+    p: &mut Dec,
+    slot: usize,
+    n: usize,
+    arena_len: usize,
+) -> Result<Option<EClass>> {
+    if p.u8("class presence")? == 0 {
+        return Ok(None);
+    }
+    let id = p.class_id("class id", n)?;
+    if id.index() != slot {
+        return Err(corrupt("class id does not match its slot"));
+    }
+    let ty = p.ty()?;
+    let n_nodes = p.u32("class node count")?;
+    let mut node_ids = Vec::with_capacity(n_nodes as usize);
+    for _ in 0..n_nodes {
+        let raw = p.u32("class node id")? as usize;
+        if raw >= arena_len {
+            return Err(corrupt("class node id out of range"));
+        }
+        node_ids.push(NodeId::from_index(raw));
+    }
+    let n_parents = p.u32("class parent count")?;
+    let mut cparents = Vec::with_capacity(n_parents as usize);
+    for _ in 0..n_parents {
+        let arena_idx = p.u32("parent arena index")?;
+        if arena_idx as usize >= arena_len {
+            return Err(corrupt("parent arena index out of range"));
+        }
+        let pid = p.class_id("parent class id", n)?;
+        cparents.push((NodeId::from_index(arena_idx as usize), pid));
+    }
+    Ok(Some(EClass { id, node_ids, parents: cparents, ty }))
+}
+
 fn decode_report(p: &mut Dec) -> Result<RunnerReport> {
     let stop = match p.u8("stop reason")? {
         0 => StopReason::Saturated,
@@ -598,15 +1140,7 @@ fn decode_cache(p: &mut Dec, version: u32, n_classes: usize) -> Result<ExtractCa
             Some(e) => e,
             None => p.u64("cache table epoch")?,
         };
-        let n_entries = p.u64("cost-table entry count")? as usize;
-        let mut best: FxHashMap<Id, (f64, Node)> =
-            FxHashMap::with_capacity_and_hasher(n_entries, Default::default());
-        for _ in 0..n_entries {
-            let id = p.class_id("cost-table class id", n_classes)?;
-            let cost = p.f64("cost-table cost")?;
-            let node = p.node("cost-table node", n_classes)?;
-            best.insert(id, (cost, node));
-        }
+        let best = decode_table_entries(p, n_classes)?;
         tables.push((kind, epoch, Arc::new(CostTable::from_raw(best))));
     }
     let n_order = p.u32("sampled-order count")?;
@@ -615,6 +1149,19 @@ fn decode_cache(p: &mut Dec, version: u32, n_classes: usize) -> Result<ExtractCa
         sampled_order.push(p.kind()?);
     }
     Ok(ExtractCache::import(CacheExport { tables, sampled_order }))
+}
+
+fn decode_table_entries(p: &mut Dec, n_classes: usize) -> Result<FxHashMap<Id, (f64, Node)>> {
+    let n_entries = p.u64("cost-table entry count")? as usize;
+    let mut best: FxHashMap<Id, (f64, Node)> =
+        FxHashMap::with_capacity_and_hasher(n_entries, Default::default());
+    for _ in 0..n_entries {
+        let id = p.class_id("cost-table class id", n_classes)?;
+        let cost = p.f64("cost-table cost")?;
+        let node = p.node("cost-table node", n_classes)?;
+        best.insert(id, (cost, node));
+    }
+    Ok(best)
 }
 
 fn corrupt(msg: &str) -> Error {
@@ -930,7 +1477,7 @@ mod tests {
         bytes[8..12].copy_from_slice(&99u32.to_le_bytes());
         match decode_snapshot(&bytes) {
             Err(Error::SnapshotVersion { found: 99, supported }) => {
-                assert_eq!(supported, FORMAT_VERSION)
+                assert_eq!(supported, DELTA_FORMAT_VERSION)
             }
             other => panic!("expected SnapshotVersion, got {other:?}"),
         }
@@ -962,7 +1509,143 @@ mod tests {
         std::fs::write(&path, &bytes).unwrap();
         let meta = peek_header(&path).unwrap();
         assert_eq!(meta.workload, "fig2");
+        assert_eq!(meta.base_fingerprint, None);
         assert!(meta.payload_len > 0);
         let _ = std::fs::remove_file(&path);
+    }
+
+    /// Saturate with the fig2 rules, snapshot that as the base, then
+    /// extend the rule set (`split-relu-x4`) and re-saturate **in place**
+    /// — the exact workflow deltas exist for. Returns the base bytes, the
+    /// delta of the extended graph against it, and a full re-encode of
+    /// the same extended graph.
+    fn delta_fixture() -> (Vec<u8>, Vec<u8>, Vec<u8>) {
+        let expr = parse_expr("(invoke-relu (relu-engine 128) (input x [128]))").unwrap();
+        let opts = crate::extract::ExtractOptions { samples: 4, seed: 0, workers: 2 };
+        let mut runner = Runner::new(expr.clone(), rewrites::fig2_rules());
+        let base_report = runner.run(6);
+        let base_cache = ExtractCache::new();
+        crate::extract::extract_designs(&runner.egraph, runner.root, &opts, &base_cache);
+        let base_names: Vec<String> =
+            rewrites::fig2_rules().iter().map(|r| r.name.clone()).collect();
+        let base_bytes = encode_snapshot(&SnapshotParts {
+            workload_name: "fig2",
+            workload_src: expr.to_string(),
+            lowered: &expr,
+            rule_names: base_names,
+            egraph: &runner.egraph,
+            root: runner.root,
+            report: &base_report,
+            cache: &base_cache,
+        });
+
+        let mut ext_rules = rewrites::fig2_rules();
+        ext_rules.push(rewrites::split::split_relu(4));
+        let ext_names: Vec<String> = ext_rules.iter().map(|r| r.name.clone()).collect();
+        let mut ext = Runner::from_egraph(runner.egraph, runner.root, ext_rules);
+        let ext_report = ext.run(4);
+        let ext_cache = ExtractCache::new();
+        crate::extract::extract_designs(&ext.egraph, ext.root, &opts, &ext_cache);
+        let parts = SnapshotParts {
+            workload_name: "fig2",
+            workload_src: expr.to_string(),
+            lowered: &expr,
+            rule_names: ext_names,
+            egraph: &ext.egraph,
+            root: ext.root,
+            report: &ext_report,
+            cache: &ext_cache,
+        };
+        let full_bytes = encode_snapshot(&parts);
+        let delta_bytes =
+            encode_snapshot_delta(&parts, &base_bytes, "base.hws").expect("delta encodes");
+        (base_bytes, delta_bytes, full_bytes)
+    }
+
+    fn reencode(s: &LoadedSnapshot) -> Vec<u8> {
+        encode_snapshot(&SnapshotParts {
+            workload_name: &s.meta.workload,
+            workload_src: s.lowered.to_string(),
+            lowered: &s.lowered,
+            rule_names: s.rule_names.clone(),
+            egraph: &s.egraph,
+            root: s.root,
+            report: &s.report,
+            cache: &s.cache,
+        })
+    }
+
+    #[test]
+    fn delta_overlay_is_bit_identical_to_full_snapshot() {
+        let (base, delta, full) = delta_fixture();
+        // The delta encodes only the diff, so it beats the full re-encode.
+        assert!(delta.len() < full.len(), "delta {} >= full {}", delta.len(), full.len());
+        assert_eq!(delta_base_name(&delta).unwrap(), "base.hws");
+        let via_delta = decode_snapshot_delta(&delta, &base).expect("delta decodes");
+        let direct = decode_snapshot(&full).expect("full decodes");
+        assert_eq!(via_delta.meta.format_version, DELTA_FORMAT_VERSION);
+        via_delta.egraph.check_invariants();
+        // Bit-identical restored state: the encoder is deterministic, so
+        // byte equality of the re-encodes is state equality of the loads.
+        assert_eq!(reencode(&via_delta), reencode(&direct));
+    }
+
+    #[test]
+    fn delta_corruption_matrix_is_typed_errors() {
+        let (base, delta, _full) = delta_fixture();
+        // Truncations at a spread of byte offsets.
+        for cut in [0, 4, 11, delta.len() / 2, delta.len() - 1] {
+            match decode_snapshot_delta(&delta[..cut], &base) {
+                Err(Error::SnapshotCorrupt(_)) => {}
+                other => panic!("cut at {cut}: expected SnapshotCorrupt, got {other:?}"),
+            }
+        }
+        // A rewritten base file fails the fingerprint in the delta header.
+        let mut wrong_base = base.clone();
+        let last = wrong_base.len() - 1;
+        wrong_base[last] ^= 0x01;
+        match decode_snapshot_delta(&delta, &wrong_base) {
+            Err(Error::SnapshotCorrupt(msg)) => assert!(msg.contains("fingerprint")),
+            other => panic!("expected fingerprint mismatch, got {other:?}"),
+        }
+        // A delta chained on a delta is rejected even when the fingerprint
+        // is made to match (header offset 36 = after magic, version,
+        // "fig2", workload fingerprint, and rule-set hash).
+        let mut chained = delta.clone();
+        chained[36..44].copy_from_slice(&fx_bytes(&delta).to_le_bytes());
+        match decode_snapshot_delta(&chained, &delta) {
+            Err(Error::SnapshotCorrupt(msg)) => assert!(msg.contains("chain")),
+            other => panic!("expected chain rejection, got {other:?}"),
+        }
+        // Loading a delta without its base is corrupt, not a panic.
+        assert!(matches!(decode_snapshot(&delta), Err(Error::SnapshotCorrupt(_))));
+    }
+
+    #[test]
+    fn delta_encode_gates_reject_foreign_bases() {
+        let (base, delta, full) = delta_fixture();
+        // A graph *loaded* from the extended snapshot has a mutation log
+        // starting at its own epoch — it cannot attest it grew from the
+        // older base, so the encoder refuses and demands a full snapshot.
+        let loaded = decode_snapshot(&full).unwrap();
+        let parts = SnapshotParts {
+            workload_name: &loaded.meta.workload,
+            workload_src: loaded.lowered.to_string(),
+            lowered: &loaded.lowered,
+            rule_names: loaded.rule_names.clone(),
+            egraph: &loaded.egraph,
+            root: loaded.root,
+            report: &loaded.report,
+            cache: &loaded.cache,
+        };
+        assert!(matches!(
+            encode_snapshot_delta(&parts, &base, "base.hws"),
+            Err(Error::InvalidConfig(_))
+        ));
+        // A delta never serves as a base (chains are one level deep).
+        assert!(matches!(
+            encode_snapshot_delta(&parts, &delta, "delta.hws"),
+            Err(Error::InvalidConfig(_))
+        ));
     }
 }

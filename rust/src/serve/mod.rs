@@ -60,6 +60,7 @@
 
 pub mod json;
 pub mod protocol;
+pub mod shard;
 
 pub use protocol::{Command, ErrorCode};
 
@@ -434,7 +435,7 @@ pub struct ServeConfig {
 impl Default for ServeConfig {
     fn default() -> Self {
         ServeConfig {
-            workers: crate::par::default_workers().clamp(2, 16),
+            workers: crate::par::default_workers(),
             queue_depth: 64,
             request_timeout_ms: 10_000,
             max_connections: 256,
@@ -1081,6 +1082,20 @@ mod tests {
         assert_eq!(percentile(&v, 50.0), 3.0);
         assert_eq!(percentile(&v, 100.0), 5.0);
         assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn retry_hint_clamp_holds_at_queue_position_zero_and_extremes() {
+        // Queue position 0 prices like position 1 (`queued.max(1)`), and
+        // the documented 10..=5000 ms clamp holds at every extreme.
+        let stats = ServerStats::new();
+        assert_eq!(stats.retry_hint_ms(0), 50, "no samples yet: the 50 ms default");
+        stats.record("w", 1e9); // pathological latency sample
+        assert_eq!(stats.retry_hint_ms(0), 5_000, "upper clamp at queue position 0");
+        assert_eq!(stats.retry_hint_ms(usize::MAX), 5_000, "upper clamp at extreme occupancy");
+        let stats = ServerStats::new();
+        stats.record("w", 0.0); // zero-latency sample exercises the floor
+        assert_eq!(stats.retry_hint_ms(0), 10, "lower clamp at queue position 0");
     }
 
     #[test]

@@ -1,0 +1,760 @@
+//! `hwsplit serve --shards N` — the multi-process supervisor/router that
+//! scales serving past one process.
+//!
+//! One process owning every workload serializes on a single
+//! [`super::SessionStore`] and accept path; this module shards that work
+//! across N **child daemons of the same binary** and keeps the wire
+//! protocol identical, so clients cannot tell a sharded deployment from a
+//! single process:
+//!
+//! * **Partitioning** ([`partition_workloads`]): workload names are
+//!   ordered by `(fx-hash, name)` and dealt round-robin, so the
+//!   assignment is stable across restarts and independent of the
+//!   `--snapshots` argument order. Each shard is spawned with exactly its
+//!   subset of snapshot files.
+//! * **Supervision**: children are spawned with `--port 0` (their bound
+//!   address is parsed from the `listening on <addr>` startup line),
+//!   health-checked by `ping` every [`HEALTH_INTERVAL`], and restarted
+//!   with exponential backoff when they crash or stop answering — fault
+//!   tolerance the single process cannot have. Child stdout is relayed to
+//!   the supervisor's stderr under a `[shard i]` prefix.
+//! * **Routing**: the router answers `ping` locally, forwards each
+//!   `query` verbatim to the shard owning its workload (pass-through
+//!   proxying of the request and response lines, so routed responses are
+//!   byte-identical to single-process ones — including typed
+//!   `busy`/`timeout` errors produced by the owning child), fans `stats`
+//!   out to every shard and aggregates, and broadcasts `reload` /
+//!   `shutdown`. Anything unroutable — unparseable JSON, unknown
+//!   commands, a query without a known workload — is forwarded to shard
+//!   0, which both renders the identical typed error *and* counts it, so
+//!   aggregate counters stay a pure per-shard sum.
+//! * **Degradation**: a request hitting a shard that is mid-restart
+//!   answers a typed `busy` error with a `retry_after_ms` hint (counted
+//!   in the router-local `router_errors` stat, never in the per-shard
+//!   sums).
+//!
+//! `stats` aggregation semantics (pinned by `rust/tests/serving_sharded.rs`
+//! and documented in `docs/serving.md`): counters and `queries_per_sec`
+//! are exact sums, `p50_ms`/`p99_ms` are the max across shards (a
+//! conservative bound — true percentiles would need raw latencies on the
+//! wire), `generation` is the min (every shard has seen at least that
+//! many reloads), plus router-only fields: `shards`, `restarts`,
+//! `router_errors`, `shard_generations`, `shard_pids`.
+
+use super::json::Json;
+use super::protocol::{error_response, ok_response, Command, ErrorCode};
+use crate::error::{Error, Result};
+use crate::fx::FxHasher;
+use crate::persist;
+use crate::report::JsonValue;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::hash::Hasher;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command as Process, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// How often the supervisor health-checks every child.
+const HEALTH_INTERVAL: Duration = Duration::from_millis(250);
+/// Consecutive failed pings tolerated on a still-running child before it
+/// is declared wedged and restarted (a crashed child restarts at once).
+const PING_FAIL_LIMIT: u32 = 3;
+/// Bound on connecting to a shard (proxying and pinging).
+const PROXY_CONNECT_TIMEOUT: Duration = Duration::from_millis(1_000);
+/// Bound on the ping round-trip's read/write halves.
+const PING_IO_TIMEOUT: Duration = Duration::from_millis(1_000);
+/// `retry_after_ms` hint on the router's shard-unavailable `busy` answer:
+/// roughly one restart backoff step.
+const RESTART_HINT_MS: i64 = 500;
+/// How long a shutdown broadcast waits for a child before killing it.
+const REAP_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Stable workload→shard assignment: order names by `(fx-hash, name)` and
+/// deal round-robin. Deterministic, independent of input order, and
+/// balanced to within one workload per shard.
+pub fn partition_workloads<T: AsRef<str>>(names: &[T], shards: usize) -> Vec<Vec<String>> {
+    let shards = shards.max(1);
+    let mut ordered: Vec<(u64, &str)> =
+        names.iter().map(|n| (fx_str(n.as_ref()), n.as_ref())).collect();
+    ordered.sort_unstable();
+    let mut groups = vec![Vec::new(); shards];
+    for (i, (_, name)) in ordered.into_iter().enumerate() {
+        groups[i % shards].push(name.to_string());
+    }
+    groups
+}
+
+fn fx_str(s: &str) -> u64 {
+    let mut h = FxHasher::default();
+    h.write(s.as_bytes());
+    h.finish()
+}
+
+fn join_u64s(vals: &[u64]) -> String {
+    vals.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(",")
+}
+
+/// Supervisor knobs. `child_args` is appended verbatim to every child's
+/// `serve` invocation (worker counts, queue depth, timeouts, …).
+#[derive(Debug, Clone)]
+pub struct ShardConfig {
+    /// The binary to spawn shards from — the CLI passes
+    /// `std::env::current_exe()`, tests pass `env!("CARGO_BIN_EXE_hwsplit")`.
+    pub program: PathBuf,
+    /// Requested shard count; capped at the number of distinct workloads
+    /// so no child is spawned empty.
+    pub shards: usize,
+    /// Host children bind to (they always take `--port 0`).
+    pub host: String,
+    /// The children's `--request-timeout-ms`; the router's proxy read
+    /// deadline is this plus a margin (30 s when deadlines are disabled).
+    pub request_timeout_ms: u64,
+    /// Extra flags forwarded to every child's `serve` command line.
+    pub child_args: Vec<String>,
+}
+
+impl ShardConfig {
+    pub fn new(program: impl Into<PathBuf>, shards: usize) -> ShardConfig {
+        ShardConfig {
+            program: program.into(),
+            shards,
+            host: "127.0.0.1".to_string(),
+            request_timeout_ms: 10_000,
+            child_args: Vec::new(),
+        }
+    }
+}
+
+/// One child daemon: its current address and process handle. Replaced
+/// wholesale on restart (the address changes — children bind port 0).
+struct ShardSlot {
+    addr: SocketAddr,
+    child: Child,
+}
+
+/// Everything needed to (re)spawn one shard.
+struct ShardSpec {
+    index: usize,
+    program: PathBuf,
+    args: Vec<String>,
+}
+
+/// The supervisor: owns the router listener, the child processes, and the
+/// health-check/restart loop. Constructed via [`ShardServer::bind`] (which
+/// spawns the children), driven by [`ShardServer::run`].
+pub struct ShardServer {
+    listener: TcpListener,
+    shutdown: Arc<AtomicBool>,
+    slots: Arc<Vec<Mutex<ShardSlot>>>,
+    specs: Arc<Vec<ShardSpec>>,
+    route: Arc<HashMap<String, usize>>,
+    restarts: Arc<AtomicUsize>,
+    router_errors: Arc<AtomicUsize>,
+    config: ShardConfig,
+}
+
+/// The per-connection router state: shared slots/routing plus counters.
+#[derive(Clone)]
+struct RouterCtx {
+    slots: Arc<Vec<Mutex<ShardSlot>>>,
+    route: Arc<HashMap<String, usize>>,
+    shutdown: Arc<AtomicBool>,
+    restarts: Arc<AtomicUsize>,
+    router_errors: Arc<AtomicUsize>,
+    request_timeout_ms: u64,
+    listener_addr: SocketAddr,
+}
+
+impl ShardServer {
+    /// Bind the router on `addr`, partition `snapshots` by the workload
+    /// each header names, and spawn one child daemon per shard. Fails —
+    /// with already-spawned children reaped — if any snapshot header is
+    /// unreadable or any child dies during startup.
+    pub fn bind(addr: &str, snapshots: &[String], config: ShardConfig) -> Result<ShardServer> {
+        let mut by_workload: HashMap<String, String> = HashMap::new();
+        for path in snapshots {
+            let meta = persist::peek_header(path)?;
+            by_workload.insert(meta.workload, path.clone());
+        }
+        if by_workload.is_empty() {
+            return Err(Error::InvalidConfig("sharded serve needs at least one snapshot".into()));
+        }
+        let names: Vec<String> = by_workload.keys().cloned().collect();
+        let groups = partition_workloads(&names, config.shards.clamp(1, by_workload.len()));
+        let mut route = HashMap::new();
+        let mut specs = Vec::new();
+        for (i, group) in groups.iter().enumerate() {
+            for w in group {
+                route.insert(w.clone(), i);
+            }
+            let paths: Vec<String> = group.iter().map(|w| by_workload[w].clone()).collect();
+            let mut args = vec![
+                "serve".to_string(),
+                "--snapshots".to_string(),
+                paths.join(","),
+                "--host".to_string(),
+                config.host.clone(),
+                "--port".to_string(),
+                "0".to_string(),
+            ];
+            args.extend(config.child_args.iter().cloned());
+            specs.push(ShardSpec { index: i, program: config.program.clone(), args });
+        }
+        let listener = TcpListener::bind(addr)?;
+        let mut slots = Vec::with_capacity(specs.len());
+        for spec in &specs {
+            match spawn_shard(spec) {
+                Ok(slot) => slots.push(Mutex::new(slot)),
+                Err(e) => {
+                    for slot in &slots {
+                        let mut s = slot.lock().unwrap();
+                        let _ = s.child.kill();
+                        let _ = s.child.wait();
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        Ok(ShardServer {
+            listener,
+            shutdown: Arc::new(AtomicBool::new(false)),
+            slots: Arc::new(slots),
+            specs: Arc::new(specs),
+            route: Arc::new(route),
+            restarts: Arc::new(AtomicUsize::new(0)),
+            router_errors: Arc::new(AtomicUsize::new(0)),
+            config,
+        })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// How many child daemons this supervisor runs (the requested shard
+    /// count capped at the distinct-workload count).
+    pub fn shard_count(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Which shard owns `workload` (None for unregistered names — the
+    /// router forwards those to shard 0 for the typed error).
+    pub fn shard_of(&self, workload: &str) -> Option<usize> {
+        self.route.get(workload).copied()
+    }
+
+    /// Current child addresses (a restart changes the restarted shard's).
+    pub fn shard_addrs(&self) -> Vec<SocketAddr> {
+        self.slots.iter().map(|s| s.lock().unwrap().addr).collect()
+    }
+
+    /// Current child process ids.
+    pub fn shard_pids(&self) -> Vec<u32> {
+        self.slots.iter().map(|s| s.lock().unwrap().child.id()).collect()
+    }
+
+    /// How many child restarts the health loop has performed.
+    pub fn restarts(&self) -> usize {
+        self.restarts.load(Ordering::SeqCst)
+    }
+
+    /// Router-local failures (shard unreachable while proxying) — kept
+    /// out of the per-shard sums so those aggregate exactly.
+    pub fn router_errors(&self) -> usize {
+        self.router_errors.load(Ordering::SeqCst)
+    }
+
+    /// Kill one child outright (fault-injection hook for tests and the CI
+    /// smoke script — the health loop notices and restarts it).
+    pub fn kill_shard(&self, shard: usize) -> Result<()> {
+        let slot = self
+            .slots
+            .get(shard)
+            .ok_or_else(|| Error::InvalidConfig(format!("no shard {shard}")))?;
+        let mut s = slot.lock().unwrap();
+        s.child.kill().map_err(|e| Error::Io(format!("kill shard {shard}: {e}")))?;
+        let _ = s.child.wait();
+        Ok(())
+    }
+
+    /// Ask the router to stop, nudging it out of `accept()`. Children are
+    /// shut down and reaped by [`ShardServer::run`] on its way out.
+    pub fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Ok(addr) = self.listener.local_addr() {
+            let _ = TcpStream::connect(addr);
+        }
+    }
+
+    /// Run the supervisor until shutdown (client `{"cmd":"shutdown"}` or
+    /// [`ShardServer::request_shutdown`]): spawn the health/restart loop
+    /// and accept router connections. On exit the health loop is joined
+    /// first (so nothing restarts a child mid-teardown), then shutdown is
+    /// broadcast and every child reaped — by force after [`REAP_TIMEOUT`].
+    pub fn run(&self) -> Result<()> {
+        let ctx = self.router_ctx()?;
+        let health = {
+            let slots = self.slots.clone();
+            let specs = self.specs.clone();
+            let shutdown = self.shutdown.clone();
+            let restarts = self.restarts.clone();
+            std::thread::spawn(move || health_loop(&slots, &specs, &shutdown, &restarts))
+        };
+        let result = self.accept_loop(&ctx);
+        self.shutdown.store(true, Ordering::SeqCst);
+        let _ = health.join();
+        self.shutdown_children();
+        result
+    }
+
+    fn accept_loop(&self, ctx: &RouterCtx) -> Result<()> {
+        let mut err_streak = 0u32;
+        for stream in self.listener.incoming() {
+            if self.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match stream {
+                Ok(s) => {
+                    err_streak = 0;
+                    s
+                }
+                Err(e) => {
+                    err_streak += 1;
+                    if err_streak >= super::MAX_ACCEPT_ERROR_STREAK {
+                        return Err(Error::Io(format!(
+                            "router accept loop failing persistently ({err_streak} errors): {e}"
+                        )));
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                    continue;
+                }
+            };
+            let ctx = ctx.clone();
+            std::thread::spawn(move || {
+                let _ = route_connection(stream, &ctx);
+            });
+        }
+        Ok(())
+    }
+
+    fn router_ctx(&self) -> Result<RouterCtx> {
+        Ok(RouterCtx {
+            slots: self.slots.clone(),
+            route: self.route.clone(),
+            shutdown: self.shutdown.clone(),
+            restarts: self.restarts.clone(),
+            router_errors: self.router_errors.clone(),
+            request_timeout_ms: self.config.request_timeout_ms,
+            listener_addr: self.listener.local_addr()?,
+        })
+    }
+
+    /// Broadcast `shutdown` to every child, then reap: wait up to
+    /// [`REAP_TIMEOUT`] for a clean exit before killing.
+    fn shutdown_children(&self) {
+        for slot in self.slots.iter() {
+            let addr = slot.lock().unwrap().addr;
+            let _ = proxy_io(addr, "{\"cmd\":\"shutdown\"}", 1_000);
+        }
+        for (i, slot) in self.slots.iter().enumerate() {
+            let mut s = slot.lock().unwrap();
+            let deadline = Instant::now() + REAP_TIMEOUT;
+            loop {
+                match s.child.try_wait() {
+                    Ok(Some(_)) => break,
+                    Ok(None) if Instant::now() < deadline => {
+                        std::thread::sleep(Duration::from_millis(50));
+                    }
+                    _ => {
+                        let _ = s.child.kill();
+                        let _ = s.child.wait();
+                        eprintln!("serve: shard {i} did not exit in time; killed");
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Spawn one child daemon and wait for it to announce its address: lines
+/// before `listening on <addr>` (snapshot registration) are relayed to
+/// stderr under a `[shard i]` prefix, as is everything after (from a
+/// background drain thread). Fails if the child exits first.
+fn spawn_shard(spec: &ShardSpec) -> Result<ShardSlot> {
+    let mut child = Process::new(&spec.program)
+        .args(&spec.args)
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .map_err(|e| Error::Io(format!("spawn shard {}: {e}", spec.index)))?;
+    let stdout = child.stdout.take().expect("stdout piped above");
+    let mut reader = BufReader::new(stdout);
+    let index = spec.index;
+    let addr = loop {
+        let mut line = String::new();
+        let n = reader
+            .read_line(&mut line)
+            .map_err(|e| Error::Io(format!("read shard {index} startup output: {e}")))?;
+        if n == 0 {
+            let status = child.wait().map(|s| s.to_string()).unwrap_or_else(|e| e.to_string());
+            return Err(Error::Io(format!("shard {index} exited during startup ({status})")));
+        }
+        if let Some(rest) = line.split("listening on ").nth(1) {
+            let token = rest.split_whitespace().next().unwrap_or("");
+            break token.parse::<SocketAddr>().map_err(|e| {
+                Error::Io(format!("shard {index} announced a bad address '{token}': {e}"))
+            })?;
+        }
+        eprintln!("[shard {index}] {}", line.trim_end());
+    };
+    std::thread::spawn(move || {
+        for line in reader.lines().map_while(std::io::Result::ok) {
+            eprintln!("[shard {index}] {line}");
+        }
+    });
+    Ok(ShardSlot { addr, child })
+}
+
+/// The supervisor's health/restart loop: every [`HEALTH_INTERVAL`], check
+/// each child for exit (`try_wait`) and liveness (`ping`). A crashed
+/// child restarts immediately; a live-but-unresponsive one is given
+/// [`PING_FAIL_LIMIT`] strikes. Restarts back off exponentially
+/// (100 ms · 2^strikes, capped at 5 s) so a crash-looping child cannot
+/// busy-spin the supervisor. The backoff sleeps **outside** the slot lock
+/// — the router keeps failing fast (typed `busy`) meanwhile.
+fn health_loop(
+    slots: &[Mutex<ShardSlot>],
+    specs: &[ShardSpec],
+    shutdown: &AtomicBool,
+    restarts: &AtomicUsize,
+) {
+    let mut fails = vec![0u32; slots.len()];
+    while !shutdown.load(Ordering::SeqCst) {
+        std::thread::sleep(HEALTH_INTERVAL);
+        for (i, slot) in slots.iter().enumerate() {
+            if shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            let (addr, exited) = {
+                let mut s = slot.lock().unwrap();
+                (s.addr, matches!(s.child.try_wait(), Ok(Some(_))))
+            };
+            if !exited && ping_ok(addr) {
+                fails[i] = 0;
+                continue;
+            }
+            fails[i] += 1;
+            if !exited && fails[i] < PING_FAIL_LIMIT {
+                continue; // tolerate a transient ping miss on a live child
+            }
+            let backoff = Duration::from_millis((100u64 << fails[i].min(6)).min(5_000));
+            std::thread::sleep(backoff);
+            if shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            match spawn_shard(&specs[i]) {
+                Ok(fresh) => {
+                    let fresh_addr = fresh.addr;
+                    let mut s = slot.lock().unwrap();
+                    let _ = s.child.kill();
+                    let _ = s.child.wait();
+                    *s = fresh;
+                    drop(s);
+                    restarts.fetch_add(1, Ordering::SeqCst);
+                    fails[i] = 0;
+                    eprintln!("serve: restarted shard {i} on {fresh_addr}");
+                }
+                Err(e) => eprintln!("serve: shard {i} restart failed ({e}); retrying"),
+            }
+        }
+    }
+}
+
+/// One ping round-trip against a shard, fully time-bounded.
+fn ping_ok(addr: SocketAddr) -> bool {
+    let Ok(mut stream) = TcpStream::connect_timeout(&addr, PROXY_CONNECT_TIMEOUT) else {
+        return false;
+    };
+    let _ = stream.set_write_timeout(Some(PING_IO_TIMEOUT));
+    let _ = stream.set_read_timeout(Some(PING_IO_TIMEOUT));
+    if stream.write_all(b"{\"cmd\":\"ping\"}\n").is_err() {
+        return false;
+    }
+    let mut line = String::new();
+    let mut reader = BufReader::new(stream);
+    matches!(reader.read_line(&mut line), Ok(n) if n > 0) && line.contains("\"pong\":true")
+}
+
+/// Serve one router connection: same line-loop shape as the single-process
+/// daemon (polling reads observe shutdown; partial lines survive polls).
+fn route_connection(stream: TcpStream, ctx: &RouterCtx) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(super::POLL_INTERVAL))?;
+    stream.set_write_timeout(Some(Duration::from_millis(10_000)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // client closed
+            Ok(_) => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if ctx.shutdown.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+                continue; // idle poll; `line` keeps any partial request
+            }
+            Err(e) => return Err(e),
+        }
+        let trimmed = line.trim();
+        if !trimmed.is_empty() {
+            let (response, stop) = route_line(trimmed, ctx);
+            writer.write_all(response.as_bytes())?;
+            writer.write_all(b"\n")?;
+            writer.flush()?;
+            if stop {
+                ctx.shutdown.store(true, Ordering::SeqCst);
+                let _ = TcpStream::connect(ctx.listener_addr); // nudge the acceptor
+                return Ok(());
+            }
+        }
+        line.clear();
+        if ctx.shutdown.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+    }
+}
+
+/// Route one request line. Pass-through proxying keeps routed responses
+/// byte-identical to a single process (the serving_sharded tests pin
+/// this); unroutable lines go to shard 0 so exactly one shard renders
+/// *and counts* the typed error.
+fn route_line(line: &str, ctx: &RouterCtx) -> (String, bool) {
+    let req = match Json::parse(line) {
+        Ok(req) => req,
+        Err(_) => return (forward(ctx, 0, line), false),
+    };
+    let cmd_name = req.get("cmd").and_then(Json::as_str).unwrap_or("query");
+    match Command::parse(cmd_name) {
+        None => (forward(ctx, 0, line), false),
+        Some(Command::Ping) => ("{\"ok\":true,\"pong\":true}".to_string(), false),
+        Some(Command::Shutdown) => ("{\"ok\":true,\"shutting_down\":true}".to_string(), true),
+        Some(Command::Stats) => (aggregate_stats(ctx), false),
+        Some(Command::Reload) => (broadcast_reload(ctx), false),
+        Some(Command::Query) => {
+            let shard = req
+                .get("workload")
+                .and_then(Json::as_str)
+                .and_then(|w| ctx.route.get(w).copied())
+                .unwrap_or(0);
+            (forward(ctx, shard, line), false)
+        }
+    }
+}
+
+/// Proxy a line to a shard, collapsing proxy failure into its rendered
+/// `busy` response.
+fn forward(ctx: &RouterCtx, shard: usize, line: &str) -> String {
+    match proxy_to(ctx, shard, line) {
+        Ok(resp) | Err(resp) => resp,
+    }
+}
+
+/// Proxy one request line to `shard`. `Err` carries the fully rendered
+/// router response for an unreachable shard: a typed `busy` with a retry
+/// hint (the shard is most likely mid-restart), counted in
+/// `router_errors` so per-shard counter sums stay exact.
+fn proxy_to(ctx: &RouterCtx, shard: usize, line: &str) -> std::result::Result<String, String> {
+    let addr = ctx.slots[shard].lock().unwrap().addr;
+    match proxy_io(addr, line, ctx.request_timeout_ms) {
+        Ok(resp) => Ok(resp),
+        Err(e) => {
+            ctx.router_errors.fetch_add(1, Ordering::SeqCst);
+            let msg = format!("shard {shard} is unavailable ({e}); retry shortly");
+            Err(error_response(
+                ErrorCode::Busy,
+                &msg,
+                &[("retry_after_ms", JsonValue::Int(RESTART_HINT_MS))],
+            ))
+        }
+    }
+}
+
+/// One request/response round-trip against a shard address, every phase
+/// time-bounded. The read deadline is the children's request timeout plus
+/// a margin (30 s when deadlines are disabled) — the child's own typed
+/// `timeout` answer arrives well within it.
+fn proxy_io(addr: SocketAddr, line: &str, timeout_ms: u64) -> std::io::Result<String> {
+    let mut stream = TcpStream::connect_timeout(&addr, PROXY_CONNECT_TIMEOUT)?;
+    stream.set_write_timeout(Some(PROXY_CONNECT_TIMEOUT))?;
+    let wait = if timeout_ms == 0 { 30_000 } else { timeout_ms + 2_000 };
+    stream.set_read_timeout(Some(Duration::from_millis(wait)))?;
+    stream.write_all(line.as_bytes())?;
+    stream.write_all(b"\n")?;
+    let mut reader = BufReader::new(stream);
+    let mut resp = String::new();
+    let n = reader.read_line(&mut resp)?;
+    if n == 0 {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            "shard closed the connection",
+        ));
+    }
+    while resp.ends_with('\n') || resp.ends_with('\r') {
+        resp.pop();
+    }
+    Ok(resp)
+}
+
+/// Fan `stats` out to every shard and aggregate: exact sums for counters
+/// and `queries_per_sec`, max for the latency percentiles (conservative),
+/// min for `generation`, union for workloads, per-workload sums — plus
+/// the router-only `shards`/`restarts`/`router_errors`/`shard_generations`
+/// /`shard_pids` fields. A shard failure relays that shard's (or the
+/// router's `busy`) response instead.
+fn aggregate_stats(ctx: &RouterCtx) -> String {
+    let mut replies = Vec::with_capacity(ctx.slots.len());
+    for shard in 0..ctx.slots.len() {
+        match proxy_to(ctx, shard, "{\"cmd\":\"stats\"}") {
+            Ok(line) => match Json::parse(&line) {
+                Ok(j) if j.get("ok").and_then(Json::as_bool) == Some(true) => replies.push(j),
+                _ => return line,
+            },
+            Err(resp) => return resp,
+        }
+    }
+    let sum = |key: &str| -> i64 {
+        replies.iter().map(|j| j.get(key).and_then(Json::as_u64).unwrap_or(0) as i64).sum()
+    };
+    let fmax = |key: &str| -> f64 {
+        replies.iter().filter_map(|j| j.get(key).and_then(Json::as_f64)).fold(f64::NAN, f64::max)
+    };
+    let qps: f64 =
+        replies.iter().filter_map(|j| j.get("queries_per_sec").and_then(Json::as_f64)).sum();
+    let generations: Vec<u64> =
+        replies.iter().map(|j| j.get("generation").and_then(Json::as_u64).unwrap_or(0)).collect();
+    let min_gen = generations.iter().copied().min().unwrap_or(0);
+    let mut workloads = BTreeSet::new();
+    let mut by_workload: BTreeMap<String, u64> = BTreeMap::new();
+    for j in &replies {
+        for w in j.get("workloads").and_then(Json::as_str).unwrap_or("").split(',') {
+            if !w.is_empty() {
+                workloads.insert(w.to_string());
+            }
+        }
+        for entry in j.get("served_by_workload").and_then(Json::as_str).unwrap_or("").split(',') {
+            if let Some((w, n)) = entry.rsplit_once('=') {
+                *by_workload.entry(w.to_string()).or_insert(0) += n.parse::<u64>().unwrap_or(0);
+            }
+        }
+    }
+    let entries: Vec<String> = by_workload.into_iter().map(|(w, n)| format!("{w}={n}")).collect();
+    let served_by_workload = entries.join(",");
+    let pids: Vec<u64> = ctx.slots.iter().map(|s| s.lock().unwrap().child.id() as u64).collect();
+    let fields = [
+        ("served", JsonValue::Int(sum("served"))),
+        ("errors", JsonValue::Int(sum("errors"))),
+        ("rejected", JsonValue::Int(sum("rejected"))),
+        ("timeouts", JsonValue::Int(sum("timeouts"))),
+        ("reloads", JsonValue::Int(sum("reloads"))),
+        ("queue_depth", JsonValue::Int(sum("queue_depth"))),
+        ("queries_per_sec", JsonValue::Num(qps)),
+        ("p50_ms", JsonValue::Num(fmax("p50_ms"))),
+        ("p99_ms", JsonValue::Num(fmax("p99_ms"))),
+        ("cached_sessions", JsonValue::Int(sum("cached_sessions"))),
+        ("generation", JsonValue::Int(min_gen as i64)),
+        ("workloads", JsonValue::Str(workloads.into_iter().collect::<Vec<_>>().join(","))),
+        ("served_by_workload", JsonValue::Str(served_by_workload)),
+        ("shards", JsonValue::Int(ctx.slots.len() as i64)),
+        ("restarts", JsonValue::Int(ctx.restarts.load(Ordering::SeqCst) as i64)),
+        ("router_errors", JsonValue::Int(ctx.router_errors.load(Ordering::SeqCst) as i64)),
+        ("shard_generations", JsonValue::Str(join_u64s(&generations))),
+        ("shard_pids", JsonValue::Str(join_u64s(&pids))),
+    ];
+    ok_response(&fields)
+}
+
+/// Broadcast `reload` to every shard. All-ok answers aggregate like the
+/// single-process response (union of reloaded names, min generation); any
+/// shard failure relays that shard's response verbatim.
+fn broadcast_reload(ctx: &RouterCtx) -> String {
+    let mut names = BTreeSet::new();
+    let mut min_gen = u64::MAX;
+    for shard in 0..ctx.slots.len() {
+        match proxy_to(ctx, shard, "{\"cmd\":\"reload\"}") {
+            Ok(line) => match Json::parse(&line) {
+                Ok(j) if j.get("ok").and_then(Json::as_bool) == Some(true) => {
+                    for w in j.get("reloaded").and_then(Json::as_str).unwrap_or("").split(',') {
+                        if !w.is_empty() {
+                            names.insert(w.to_string());
+                        }
+                    }
+                    min_gen = min_gen.min(j.get("generation").and_then(Json::as_u64).unwrap_or(0));
+                }
+                _ => return line,
+            },
+            Err(resp) => return resp,
+        }
+    }
+    let fields = [
+        ("reloaded", JsonValue::Str(names.into_iter().collect::<Vec<_>>().join(","))),
+        ("generation", JsonValue::Int(if min_gen == u64::MAX { 0 } else { min_gen as i64 })),
+    ];
+    ok_response(&fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_is_stable_balanced_and_order_independent() {
+        let names = ["relu128", "mlp", "lenet", "attn_block_mh4", "convblock"];
+        let a = partition_workloads(&names, 2);
+        let mut reversed: Vec<&str> = names.to_vec();
+        reversed.reverse();
+        let b = partition_workloads(&reversed, 2);
+        assert_eq!(a, b, "assignment must not depend on input order");
+        assert_eq!(a.len(), 2);
+        assert_eq!(a.iter().map(Vec::len).sum::<usize>(), names.len());
+        assert!(a[0].len().abs_diff(a[1].len()) <= 1, "{a:?}");
+        // Every workload lands on exactly one shard.
+        let mut all: Vec<&String> = a.iter().flatten().collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), names.len());
+    }
+
+    #[test]
+    fn partition_degenerate_widths() {
+        let names = ["a", "b", "c"];
+        let one = partition_workloads(&names, 1);
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0].len(), 3);
+        // More shards than workloads: trailing shards stay empty (the
+        // supervisor caps its shard count before calling this).
+        let five = partition_workloads(&names, 5);
+        assert_eq!(five.len(), 5);
+        assert_eq!(five.iter().map(Vec::len).sum::<usize>(), 3);
+        // Zero clamps to one.
+        assert_eq!(partition_workloads(&names, 0).len(), 1);
+    }
+
+    #[test]
+    fn partition_spreads_real_workload_names() {
+        // The stable-hash order should not degenerate to one shard for
+        // the actual registry (guards against a pathological hash).
+        let names: Vec<&str> = crate::relay::all_workloads().iter().map(|w| w.name).collect();
+        let groups = partition_workloads(&names, 2);
+        assert!(!groups[0].is_empty() && !groups[1].is_empty(), "{groups:?}");
+    }
+}

@@ -554,6 +554,80 @@ impl Session {
         })
     }
 
+    /// Extend the enumerated design space with additional rules **in
+    /// place**: re-saturate the existing e-graph (enumerating first if
+    /// needed) with the union of the current rule list and `set`, instead
+    /// of enumerating from scratch. Returns how many rules were actually
+    /// new; zero means the set brought nothing and the graph is untouched.
+    /// The epoch-keyed extract cache stays: queries after a graph-changing
+    /// extension re-solve their fixpoints, a no-op extension stays warm.
+    ///
+    /// This is the delta-snapshot workflow (see
+    /// [`Session::save_snapshot_delta`]): load or save a full base,
+    /// extend, persist only the diff.
+    pub fn extend_rules(&mut self, set: RuleSet, iters: usize) -> Result<usize, Error> {
+        self.enumerate()?;
+        let new_rules: Vec<Rewrite> = set
+            .rules()
+            .into_iter()
+            .filter(|r| !self.rules.iter().any(|have| have.name == r.name))
+            .collect();
+        if new_rules.is_empty() {
+            return Ok(0);
+        }
+        let added = new_rules.len();
+        let t0 = std::time::Instant::now();
+        let en = self.enumerated.take().expect("enumerated above");
+        let mut rules = self.rules.clone();
+        rules.extend(new_rules);
+        // An already-committed (or snapshot-restored) graph carries no
+        // dirty backlog for the incremental matcher — `from_egraph`
+        // defaults to a full rescan so the new rules see every class.
+        let mut runner = Runner::from_egraph(en.egraph, en.root, rules.clone())
+            .with_limits(self.limits.clone())
+            .with_search_workers(self.search_workers)
+            .with_apply_workers(self.apply_workers);
+        let report = runner.run(iters);
+        self.rules = rules;
+        self.enumerated = Some(Enumeration { egraph: runner.egraph, root: runner.root, report });
+        self.enumerations += 1;
+        vlog("extend", t0);
+        Ok(added)
+    }
+
+    /// Persist the enumerated design space as a **delta** against an
+    /// existing full snapshot file (see [`crate::persist`], format v3):
+    /// only the e-graph slots and cost-table rows that differ from the
+    /// base are written, so re-persisting after [`Session::extend_rules`]
+    /// writes KBs instead of re-encoding the world. The base must be the
+    /// snapshot this session's graph was grown from — the encoder checks
+    /// that through the graph's mutation log and refuses otherwise. The
+    /// delta records the base's *file name*: keep the pair as siblings,
+    /// and [`Session::load_snapshot`] resolves and fingerprint-validates
+    /// the chain transparently.
+    pub fn save_snapshot_delta(
+        &mut self,
+        path: impl AsRef<Path>,
+        base_path: impl AsRef<Path>,
+    ) -> Result<(), Error> {
+        self.enumerate()?;
+        let en = self.enumerated.as_ref().expect("just enumerated");
+        persist::write_snapshot_delta(
+            path,
+            base_path,
+            &persist::SnapshotParts {
+                workload_name: self.workload.name,
+                workload_src: self.workload.expr.to_string(),
+                lowered: &self.lowered,
+                rule_names: self.rules.iter().map(|r| r.name.clone()).collect(),
+                egraph: &en.egraph,
+                root: en.root,
+                report: &en.report,
+                cache: &self.extract_cache,
+            },
+        )
+    }
+
     /// Resize the evaluation worker pool (snapshot loads default to the
     /// machine's parallelism; the CLI overrides through this).
     pub fn set_workers(&mut self, workers: usize) {
@@ -774,6 +848,39 @@ mod tests {
         // The recorded trajectory ends at the final frontier size.
         assert_eq!(ev.extract.frontier_size(), ev.frontier.len());
         assert_eq!(ev.extract.frontier_sizes.len(), ev.designs.len());
+    }
+
+    #[test]
+    fn extend_rules_and_delta_snapshot_roundtrip() {
+        let dir = std::env::temp_dir().join("hwsplit_session_delta_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let base_path = dir.join("relu128.hws");
+        let delta_path = dir.join("relu128.d1.hws");
+        let mut writer = Session::builder()
+            .workload(workloads::relu128())
+            .rules(RuleSet::Fig2)
+            .iters(4)
+            .build()
+            .unwrap();
+        writer.save_snapshot(&base_path).unwrap();
+        // Load the base, grow it in place with the wider rule set.
+        let mut s = Session::load_snapshot(&base_path).unwrap();
+        let added = s.extend_rules(RuleSet::Paper, 4).unwrap();
+        assert!(added > 0, "paper set must bring rules fig2 lacks");
+        // A set the session already covers is a no-op.
+        assert_eq!(s.extend_rules(RuleSet::Fig2, 4).unwrap(), 0);
+        s.save_snapshot_delta(&delta_path, &base_path).unwrap();
+        // The delta chain loads like any snapshot and answers queries
+        // identically to the in-memory extended session.
+        let mut loaded = Session::load_snapshot(&delta_path).unwrap();
+        assert_eq!(loaded.enumeration_count(), 0);
+        let q = Query::new().samples(8);
+        let key = |ev: &Evaluation| {
+            ev.designs.iter().map(|d| d.point.expr.to_string()).collect::<Vec<_>>()
+        };
+        assert_eq!(key(&loaded.query(&q).unwrap()), key(&s.query(&q).unwrap()));
+        let _ = std::fs::remove_file(&base_path);
+        let _ = std::fs::remove_file(&delta_path);
     }
 
     #[test]

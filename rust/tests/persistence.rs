@@ -2,7 +2,10 @@
 //! a fresh `Session` answers queries **bit-identically** with **zero
 //! re-saturation** and a **warm extraction memo** — across workloads and
 //! extraction worker counts — and damaged files surface as typed errors,
-//! never panics.
+//! never panics. The v3 delta format rides the same contract: a delta
+//! resolved against its base answers identically to a full re-encode (in
+//! fewer bytes), and every way the chain can break — truncation, a bit
+//! flip, a rewritten or missing base — is a typed corruption error.
 
 use hwsplit::error::Error;
 use hwsplit::persist;
@@ -187,7 +190,7 @@ fn bad_magic_and_future_version_are_typed_errors() {
     match Session::load_snapshot(&p) {
         Err(Error::SnapshotVersion { found, supported }) => {
             assert_eq!(found, 99);
-            assert_eq!(supported, persist::FORMAT_VERSION);
+            assert_eq!(supported, persist::DELTA_FORMAT_VERSION);
         }
         other => panic!("expected SnapshotVersion, got {other:?}"),
     }
@@ -199,6 +202,110 @@ fn bad_magic_and_future_version_are_typed_errors() {
     let p = scratch("bit-flip.hws");
     std::fs::write(&p, &flipped).expect("write");
     assert!(matches!(Session::load_snapshot(&p), Err(Error::SnapshotCorrupt(_))));
+}
+
+#[test]
+fn delta_snapshot_chain_answers_identically_to_a_full_snapshot() {
+    let base_path = scratch("delta-base.hws");
+    let mut base = build_session("relu128", RuleSet::Fig2, 4, 8_000);
+    base.save_snapshot(&base_path).expect("base saves");
+
+    // Grow a loaded copy, then persist the growth twice: as a full v2
+    // re-encode and as a v3 delta against the base file.
+    let mut grown = Session::load_snapshot(&base_path).expect("base loads");
+    let added = grown.extend_rules(RuleSet::Paper, 2).expect("rule set widens");
+    assert!(added > 0, "Paper must add rules beyond Fig2");
+    let expected = canon(&grown.run_queries(&batch()).expect("grown answers"));
+    let full_path = scratch("delta-full.hws");
+    grown.save_snapshot(&full_path).expect("full re-encode saves");
+    let delta_path = scratch("delta-delta.hws");
+    grown.save_snapshot_delta(&delta_path, &base_path).expect("delta saves");
+
+    // The delta is the point: smaller than re-encoding the world.
+    let full_len = std::fs::metadata(&full_path).expect("full meta").len();
+    let delta_len = std::fs::metadata(&delta_path).expect("delta meta").len();
+    assert!(delta_len < full_len, "delta ({delta_len} B) must beat full ({full_len} B)");
+
+    // Header peek sees the chain without decoding the payload…
+    let meta = persist::peek_header(&delta_path).expect("delta header peeks");
+    assert_eq!(meta.format_version, persist::DELTA_FORMAT_VERSION);
+    assert_eq!(meta.workload, "relu128");
+    assert!(meta.base_fingerprint.is_some(), "v3 headers carry the base fingerprint");
+    let delta_bytes = std::fs::read(&delta_path).expect("delta reads");
+    let named = persist::delta_base_name(&delta_bytes).expect("delta names its base");
+    assert_eq!(named, "delta-base.hws");
+
+    // …and resolving it answers bit-identically to the full re-encode,
+    // with zero re-saturation either way.
+    for path in [&full_path, &delta_path] {
+        let mut loaded = Session::load_snapshot(path).expect("chain loads");
+        assert_eq!(
+            canon(&loaded.run_queries(&batch()).expect("loaded answers")),
+            expected,
+            "{}: loaded answers must be bit-identical",
+            path.display()
+        );
+        assert_eq!(loaded.enumeration_count(), 0, "{}", path.display());
+    }
+}
+
+#[test]
+fn damaged_delta_chains_are_corrupt_errors_not_panics() {
+    let base_path = scratch("chain-base.hws");
+    let mut base = build_session("relu128", RuleSet::Fig2, 4, 8_000);
+    base.save_snapshot(&base_path).expect("base saves");
+    let mut grown = Session::load_snapshot(&base_path).expect("base loads");
+    grown.extend_rules(RuleSet::Paper, 1).expect("rule set widens");
+    let delta_path = scratch("chain-delta.hws");
+    grown.save_snapshot_delta(&delta_path, &base_path).expect("delta saves");
+    let base_bytes = std::fs::read(&base_path).expect("base reads");
+    let delta_bytes = std::fs::read(&delta_path).expect("delta reads");
+
+    // Truncation anywhere in the delta file is typed corruption.
+    for cut in [0, 3, 9, 20, delta_bytes.len() / 2, delta_bytes.len() - 1] {
+        let p = scratch(&format!("chain-trunc-{cut}.hws"));
+        std::fs::write(&p, &delta_bytes[..cut]).expect("truncated write");
+        match Session::load_snapshot(&p) {
+            Err(Error::SnapshotCorrupt(msg)) => {
+                assert!(!msg.is_empty(), "corrupt error should say what broke")
+            }
+            other => panic!("cut at {cut}: expected SnapshotCorrupt, got {other:?}"),
+        }
+    }
+
+    // A payload bit-flip fails the delta's own checksum.
+    let mut flipped = delta_bytes.clone();
+    let last = flipped.len() - 1;
+    flipped[last] ^= 0x01;
+    let p = scratch("chain-flip.hws");
+    std::fs::write(&p, &flipped).expect("write");
+    match Session::load_snapshot(&p) {
+        Err(Error::SnapshotCorrupt(msg)) => assert!(msg.contains("checksum"), "{msg}"),
+        other => panic!("expected SnapshotCorrupt, got {other:?}"),
+    }
+
+    // A rewritten base no longer matches the delta's base fingerprint:
+    // stale chains are refused, not silently mis-resolved.
+    let bad_dir = scratch("chain-badbase");
+    std::fs::create_dir_all(&bad_dir).expect("dir");
+    let mut bad_base = base_bytes.clone();
+    let last = bad_base.len() - 1;
+    bad_base[last] ^= 0x01;
+    std::fs::write(bad_dir.join("chain-base.hws"), &bad_base).expect("write");
+    std::fs::write(bad_dir.join("chain-delta.hws"), &delta_bytes).expect("write");
+    match Session::load_snapshot(bad_dir.join("chain-delta.hws")) {
+        Err(Error::SnapshotCorrupt(msg)) => assert!(msg.contains("base fingerprint"), "{msg}"),
+        other => panic!("expected SnapshotCorrupt, got {other:?}"),
+    }
+
+    // A missing base is typed too, naming the file the chain wanted.
+    let lone_dir = scratch("chain-nobase");
+    std::fs::create_dir_all(&lone_dir).expect("dir");
+    std::fs::write(lone_dir.join("chain-delta.hws"), &delta_bytes).expect("write");
+    match Session::load_snapshot(lone_dir.join("chain-delta.hws")) {
+        Err(Error::SnapshotCorrupt(msg)) => assert!(msg.contains("unreadable"), "{msg}"),
+        other => panic!("expected SnapshotCorrupt, got {other:?}"),
+    }
 }
 
 #[test]

@@ -1,0 +1,274 @@
+//! Sharded-serving properties, pinned end-to-end against real child
+//! processes (`env!("CARGO_BIN_EXE_hwsplit")`): routed responses are
+//! byte-identical to a single-process daemon answering the same requests
+//! (wall-clock `latency_ms` aside), `stats` counters aggregate as exact
+//! sums with the router-only fields appended, `reload`/`shutdown`
+//! broadcast to every shard, and a killed child is restarted by the
+//! supervisor — with typed `busy` answers (never hangs) while it is down
+//! and working queries again once it is back.
+
+use hwsplit::egraph::RunnerLimits;
+use hwsplit::relay::workload_by_name;
+use hwsplit::rewrites::RuleSet;
+use hwsplit::serve::json::Json;
+use hwsplit::serve::shard::{ShardConfig, ShardServer};
+use hwsplit::serve::{Server, SessionStore};
+use hwsplit::session::Session;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("hwsplit-sharded-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("scratch dir");
+    dir.join(name)
+}
+
+fn build_session(name: &str, rules: RuleSet, iters: usize) -> Session {
+    Session::builder()
+        .workload(workload_by_name(name).expect("known workload"))
+        .rules(rules)
+        .iters(iters)
+        .limits(RunnerLimits { max_nodes: 8_000, track_designs: false, ..Default::default() })
+        .build()
+        .expect("session builds")
+}
+
+/// Two small snapshots — enough workloads for two non-empty shards.
+fn two_workload_snapshots(tag: &str) -> Vec<String> {
+    [("relu128", RuleSet::Fig2, 4), ("mlp", RuleSet::Paper, 2)]
+        .into_iter()
+        .map(|(name, rules, iters)| {
+            let path = scratch(&format!("{tag}-{name}.hws"));
+            build_session(name, rules, iters).save_snapshot(&path).expect("snapshot saves");
+            path.to_string_lossy().into_owned()
+        })
+        .collect()
+}
+
+fn bind_sharded(snapshots: &[String], shards: usize) -> (Arc<ShardServer>, SocketAddr) {
+    let config = ShardConfig::new(env!("CARGO_BIN_EXE_hwsplit"), shards);
+    let server =
+        Arc::new(ShardServer::bind("127.0.0.1:0", snapshots, config).expect("supervisor binds"));
+    let addr = server.local_addr().expect("bound addr");
+    (server, addr)
+}
+
+/// One line-oriented wire client returning raw response lines, so tests
+/// can compare routed and direct responses byte-for-byte.
+struct Wire {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Wire {
+    fn connect(addr: SocketAddr) -> Wire {
+        let stream = TcpStream::connect(addr).expect("connects");
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .expect("never hang a test on a dead daemon");
+        Wire { reader: BufReader::new(stream.try_clone().expect("clones")), writer: stream }
+    }
+
+    fn send(&mut self, req: &str) -> String {
+        writeln!(self.writer, "{req}").expect("writes");
+        let mut line = String::new();
+        self.reader.read_line(&mut line).expect("reads a response line");
+        line.trim_end().to_string()
+    }
+
+    fn send_json(&mut self, req: &str) -> Json {
+        Json::parse(&self.send(req)).expect("response is valid JSON")
+    }
+}
+
+/// Query responses end with a wall-clock `latency_ms` field — the only
+/// non-deterministic bytes. Strip it; everything before must match.
+fn strip_latency(resp: &str) -> String {
+    match resp.rfind(",\"latency_ms\":") {
+        Some(i) if resp.ends_with('}') => format!("{}}}", &resp[..i]),
+        _ => resp.to_string(),
+    }
+}
+
+#[test]
+fn routed_responses_are_byte_identical_to_single_process() {
+    let snapshots = two_workload_snapshots("bytes");
+
+    // The baseline: one in-process daemon owning both workloads.
+    let mut store = SessionStore::new(4);
+    for path in &snapshots {
+        store.register(path).expect("registers");
+    }
+    let direct_server = Arc::new(Server::bind("127.0.0.1:0", Arc::new(store)).expect("binds"));
+    let direct_addr = direct_server.local_addr().expect("bound addr");
+    let direct_acceptor = {
+        let server = direct_server.clone();
+        std::thread::spawn(move || server.run())
+    };
+
+    // The subject: a 2-shard supervisor over the same snapshot files.
+    let (sharded, sharded_addr) = bind_sharded(&snapshots, 2);
+    assert_eq!(sharded.shard_count(), 2);
+    let runner = {
+        let server = sharded.clone();
+        std::thread::spawn(move || server.run())
+    };
+
+    let mut direct = Wire::connect(direct_addr);
+    let mut routed = Wire::connect(sharded_addr);
+
+    // Successful queries: every workload × objective × seed answers ok and
+    // byte-equal once the trailing latency field is stripped.
+    for workload in ["relu128", "mlp"] {
+        for objective in ["latency", "area", "balanced"] {
+            for seed in [0, 1] {
+                let req = format!(
+                    "{{\"cmd\":\"query\",\"workload\":\"{workload}\",\
+                     \"objective\":\"{objective}\",\"samples\":5,\"seed\":{seed}}}"
+                );
+                let a = direct.send(&req);
+                let b = routed.send(&req);
+                assert!(a.contains("\"ok\":true"), "direct must answer ok: {a}");
+                assert!(b.contains("\"latency_ms\":"), "routed answers carry latency: {b}");
+                assert_eq!(strip_latency(&a), strip_latency(&b), "req {req}");
+            }
+        }
+    }
+
+    // Error and control responses carry no wall-clock fields: exact bytes.
+    for req in [
+        "{\"cmd\":\"ping\"}",
+        "this is not json",
+        "{\"cmd\":\"frobnicate\"}",
+        "{\"cmd\":\"query\",\"workload\":\"nope\"}",
+        "{\"cmd\":\"query\"}",
+        "{\"cmd\":\"query\",\"workload\":\"relu128\",\"objective\":\"bogus\"}",
+    ] {
+        assert_eq!(direct.send(req), routed.send(req), "req {req}");
+    }
+
+    assert!(direct.send("{\"cmd\":\"shutdown\"}").contains("\"shutting_down\":true"));
+    direct_acceptor.join().expect("direct accept loop joins").expect("ran clean");
+    assert!(routed.send("{\"cmd\":\"shutdown\"}").contains("\"shutting_down\":true"));
+    runner.join().expect("supervisor joins").expect("supervisor ran clean");
+}
+
+#[test]
+fn stats_aggregate_exactly_and_reload_broadcasts_to_every_shard() {
+    let snapshots = two_workload_snapshots("stats");
+    let (server, addr) = bind_sharded(&snapshots, 2);
+    let runner = {
+        let server = server.clone();
+        std::thread::spawn(move || server.run())
+    };
+    let mut client = Wire::connect(addr);
+
+    // Known traffic: three served queries split 2/1 across the workloads,
+    // plus two errors (both rendered and counted by shard 0).
+    for req in [
+        "{\"cmd\":\"query\",\"workload\":\"relu128\",\"samples\":4,\"seed\":0}",
+        "{\"cmd\":\"query\",\"workload\":\"relu128\",\"samples\":4,\"seed\":1}",
+        "{\"cmd\":\"query\",\"workload\":\"mlp\",\"samples\":4,\"seed\":0}",
+    ] {
+        let resp = client.send_json(req);
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "req {req}");
+    }
+    for req in ["this is not json", "{\"cmd\":\"query\",\"workload\":\"nope\"}"] {
+        let resp = client.send_json(req);
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false), "req {req}");
+    }
+
+    // Aggregated stats: counters are exact sums, router fields appended.
+    let stats = client.send_json("{\"cmd\":\"stats\"}");
+    assert_eq!(stats.get("served").and_then(Json::as_u64), Some(3));
+    assert_eq!(stats.get("errors").and_then(Json::as_u64), Some(2));
+    assert_eq!(stats.get("rejected").and_then(Json::as_u64), Some(0));
+    assert_eq!(stats.get("timeouts").and_then(Json::as_u64), Some(0));
+    assert_eq!(stats.get("queue_depth").and_then(Json::as_u64), Some(0));
+    assert_eq!(stats.get("cached_sessions").and_then(Json::as_u64), Some(2));
+    assert_eq!(stats.get("generation").and_then(Json::as_u64), Some(0));
+    assert_eq!(stats.get("workloads").and_then(Json::as_str), Some("mlp,relu128"));
+    assert_eq!(stats.get("served_by_workload").and_then(Json::as_str), Some("mlp=1,relu128=2"));
+    assert_eq!(stats.get("shards").and_then(Json::as_u64), Some(2));
+    assert_eq!(stats.get("restarts").and_then(Json::as_u64), Some(0));
+    assert_eq!(stats.get("router_errors").and_then(Json::as_u64), Some(0));
+    assert_eq!(stats.get("shard_generations").and_then(Json::as_str), Some("0,0"));
+    let pids: Vec<String> = server.shard_pids().iter().map(|p| p.to_string()).collect();
+    assert_eq!(stats.get("shard_pids").and_then(Json::as_str), Some(pids.join(",").as_str()));
+
+    // Reload broadcasts: both shards swap their resident workload, and the
+    // aggregate mirrors the single-process shape (union + min generation).
+    let reload = client.send_json("{\"cmd\":\"reload\"}");
+    assert_eq!(reload.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(reload.get("reloaded").and_then(Json::as_str), Some("mlp,relu128"));
+    assert_eq!(reload.get("generation").and_then(Json::as_u64), Some(1));
+    let stats = client.send_json("{\"cmd\":\"stats\"}");
+    assert_eq!(stats.get("reloads").and_then(Json::as_u64), Some(2), "one reload per shard");
+    assert_eq!(stats.get("generation").and_then(Json::as_u64), Some(1));
+    assert_eq!(stats.get("shard_generations").and_then(Json::as_str), Some("1,1"));
+    // The swapped sessions still answer.
+    let resp = client.send_json("{\"cmd\":\"query\",\"workload\":\"mlp\",\"samples\":4}");
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "post-reload query");
+
+    // Shutdown broadcasts too: acknowledged on the wire, children reaped,
+    // supervisor joins clean.
+    assert!(client.send("{\"cmd\":\"shutdown\"}").contains("\"shutting_down\":true"));
+    runner.join().expect("supervisor joins").expect("supervisor ran clean");
+}
+
+#[test]
+fn killed_shard_is_restarted_and_serves_again() {
+    let snapshots = two_workload_snapshots("restart");
+    let (server, addr) = bind_sharded(&snapshots, 2);
+    let runner = {
+        let server = server.clone();
+        std::thread::spawn(move || server.run())
+    };
+
+    // Warm up both shards, then kill the one owning relu128.
+    let mut client = Wire::connect(addr);
+    for workload in ["relu128", "mlp"] {
+        let req = format!("{{\"cmd\":\"query\",\"workload\":\"{workload}\",\"samples\":4}}");
+        let resp = client.send_json(&req);
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "warm-up {workload}");
+    }
+    let target = server.shard_of("relu128").expect("relu128 is routed");
+    let pid_before = server.shard_pids()[target];
+    server.kill_shard(target).expect("fault injection");
+
+    // Until the health loop restarts it, failures must be typed busy with
+    // a retry hint — never a hang; eventually the query succeeds again.
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut recovered = false;
+    while Instant::now() < deadline {
+        let mut probe = Wire::connect(addr);
+        let resp = probe.send_json("{\"cmd\":\"query\",\"workload\":\"relu128\",\"samples\":4}");
+        if resp.get("ok").and_then(Json::as_bool) == Some(true) {
+            recovered = true;
+            break;
+        }
+        assert_eq!(
+            resp.get("code").and_then(Json::as_str),
+            Some("busy"),
+            "mid-restart failures must be typed busy: {resp:?}"
+        );
+        assert!(resp.get("retry_after_ms").and_then(Json::as_u64).unwrap_or(0) >= 10);
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    assert!(recovered, "the supervisor must restart the killed shard");
+    assert!(server.restarts() >= 1, "the restart is counted");
+    assert_ne!(server.shard_pids()[target], pid_before, "a fresh child was spawned");
+
+    // The untouched shard served throughout, and the router kept its
+    // failures out of the per-shard sums.
+    let resp = client.send_json("{\"cmd\":\"query\",\"workload\":\"mlp\",\"samples\":4}");
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "other shard unaffected");
+    let stats = client.send_json("{\"cmd\":\"stats\"}");
+    assert!(stats.get("restarts").and_then(Json::as_u64).unwrap_or(0) >= 1, "{stats:?}");
+
+    server.request_shutdown();
+    runner.join().expect("supervisor joins").expect("supervisor ran clean");
+}
