@@ -1,0 +1,211 @@
+#!/usr/bin/env python3
+"""Generate the checked-in ONNX test fixtures for the Rust importer.
+
+Hand-encodes the protobuf wire format with the stdlib only (no `onnx`
+package, no protoc) — mirroring the zero-dependency reader in
+`rust/src/import/proto.rs`. Field numbers come from onnx/onnx.proto:
+
+    ModelProto      ir_version=1 graph=7 opset_import=8
+    GraphProto      node=1 name=2 initializer=5 input=11 output=12
+    NodeProto       input=1 output=2 name=3 op_type=4 attribute=5
+    AttributeProto  name=1 f=2 i=3 s=4 floats=7 ints=8 type=20
+    TensorProto     dims=1 data_type=2 float_data=4 name=8 raw_data=9
+    ValueInfoProto  name=1 type=2 -> tensor_type=1 -> elem_type=1 shape=2
+                    -> dim=1 -> dim_value=1
+
+Fixtures (all far under the 100 KB budget):
+
+  mobilenet_slice.onnx   [1,3,112,112] -> Conv(3->8,k3,s2,SAME_UPPER) ->
+                         Relu -> depthwise Conv(k3,s1,pad 1/side) -> Relu ->
+                         1x1 Conv(8->16) -> Relu -> GlobalAveragePool
+  attention_slice.onnx   [4,8] -> Gemm q/k/v (transB=1) -> Transpose(K) ->
+                         MatMul -> Mul(1/sqrt(8)) -> Softmax -> MatMul
+  unsupported_slice.onnx [1,3,8,8] -> Conv(dilations=2) -> HardSwish
+                         (both intentionally outside the mapped subset; the
+                         golden unsupported-op report test pins its output)
+
+Run from the repo root:  python3 python/tests/gen_onnx_fixtures.py
+"""
+
+import math
+import os
+import struct
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "rust", "tests", "fixtures")
+
+DT_FLOAT = 1
+
+# ---- protobuf wire-format primitives --------------------------------------
+
+
+def varint(n):
+    n %= 1 << 64  # two's-complement for negative int64 (e.g. axis=-1)
+    out = bytearray()
+    while True:
+        b = n & 0x7F
+        n >>= 7
+        if n:
+            out.append(b | 0x80)
+        else:
+            out.append(b)
+            return bytes(out)
+
+
+def key(field, wire):
+    return varint(field << 3 | wire)
+
+
+def ld(field, payload):
+    """Length-delimited field (strings, bytes, sub-messages)."""
+    return key(field, 2) + varint(len(payload)) + payload
+
+
+def s(field, text):
+    return ld(field, text.encode())
+
+
+def vint(field, n):
+    return key(field, 0) + varint(n)
+
+
+# ---- ONNX message builders ------------------------------------------------
+
+
+def attr_int(name, v):
+    return ld(5, s(1, name) + vint(3, v) + vint(20, 2))  # type INT
+
+
+def attr_ints(name, vs):
+    body = s(1, name) + b"".join(vint(8, v) for v in vs) + vint(20, 7)  # INTS
+    return ld(5, body)
+
+
+def attr_str(name, text):
+    return ld(5, s(1, name) + s(4, text) + vint(20, 3))  # STRING
+
+
+def node(op_type, name, inputs, outputs, attrs=b""):
+    body = b"".join(s(1, i) for i in inputs)
+    body += b"".join(s(2, o) for o in outputs)
+    body += s(3, name) + s(4, op_type) + attrs
+    return ld(1, body)  # GraphProto.node
+
+
+def tensor(name, dims, values, raw=True):
+    """Float32 initializer; `raw` picks raw_data vs float_data encoding so
+    the fixtures exercise both decode paths in the Rust reader."""
+    body = b"".join(vint(1, d) for d in dims) + vint(2, DT_FLOAT) + s(8, name)
+    if raw:
+        body += ld(9, struct.pack("<%df" % len(values), *values))
+    else:
+        body += b"".join(key(4, 5) + struct.pack("<f", v) for v in values)
+    return ld(5, body)  # GraphProto.initializer
+
+
+def value_info(name, dims, field=11):
+    dim_msgs = b"".join(ld(1, vint(1, d)) for d in dims)  # shape.dim
+    tensor_type = vint(1, DT_FLOAT) + ld(2, dim_msgs)
+    ty = ld(1, tensor_type)  # TypeProto.tensor_type
+    return ld(field, s(1, name) + ld(2, ty))
+
+
+def model(graph_name, nodes, initializers, inputs, outputs):
+    graph = b"".join(nodes) + s(2, graph_name) + b"".join(initializers)
+    graph += b"".join(value_info(n, d, 11) for n, d in inputs)
+    graph += b"".join(value_info(n, d, 12) for n, d in outputs)
+    opset = ld(8, vint(2, 13))  # OperatorSetIdProto{version: 13}
+    return vint(1, 8) + ld(7, graph) + opset  # ir_version=8
+
+
+# ---- deterministic pseudo-weights (no numpy, reproducible forever) --------
+
+
+def weights(n, seed):
+    state = seed * 6364136223846793005 + 1442695040888963407
+    out = []
+    for _ in range(n):
+        state = (state * 6364136223846793005 + 1442695040888963407) % (1 << 64)
+        out.append(((state >> 33) / float(1 << 31)) - 0.5)  # [-0.5, 0.5)
+    return out
+
+
+# ---- fixtures -------------------------------------------------------------
+
+
+def mobilenet_slice():
+    nodes = [
+        node("Conv", "conv1", ["x", "conv1_w", "conv1_b"], ["t1"],
+             attr_str("auto_pad", "SAME_UPPER") + attr_ints("strides", [2, 2])),
+        node("Relu", "relu1", ["t1"], ["t2"]),
+        node("Conv", "dwconv", ["t2", "dw_w", "dw_b"], ["t3"],
+             attr_int("group", 8) + attr_ints("pads", [1, 1, 1, 1])
+             + attr_ints("strides", [1, 1])),
+        node("Relu", "relu2", ["t3"], ["t4"]),
+        node("Conv", "pwconv", ["t4", "pw_w", "pw_b"], ["t5"]),
+        node("Relu", "relu3", ["t5"], ["t6"]),
+        node("GlobalAveragePool", "gap", ["t6"], ["y"]),
+    ]
+    inits = [
+        tensor("conv1_w", [8, 3, 3, 3], weights(8 * 3 * 3 * 3, 1)),
+        tensor("conv1_b", [8], weights(8, 2), raw=False),
+        tensor("dw_w", [8, 1, 3, 3], weights(8 * 9, 3)),
+        tensor("dw_b", [8], weights(8, 4)),
+        tensor("pw_w", [16, 8, 1, 1], weights(16 * 8, 5)),
+        tensor("pw_b", [16], weights(16, 6), raw=False),
+    ]
+    return model("mobilenet_slice", nodes, inits,
+                 [("x", [1, 3, 112, 112])], [("y", [1, 16, 1, 1])])
+
+
+def attention_slice():
+    trans_b = attr_int("transB", 1)
+    nodes = [
+        node("Gemm", "proj_q", ["x", "wq", "bq"], ["q"], trans_b),
+        node("Gemm", "proj_k", ["x", "wk", "bk"], ["k"], trans_b),
+        node("Gemm", "proj_v", ["x", "wv", "bv"], ["v"], trans_b),
+        node("Transpose", "kt", ["k"], ["k_t"], attr_ints("perm", [1, 0])),
+        node("MatMul", "scores", ["q", "k_t"], ["sc"]),
+        node("Mul", "scale", ["sc", "inv_sqrt_dh"], ["scs"]),
+        node("Softmax", "probs", ["scs"], ["p"], attr_int("axis", -1)),
+        node("MatMul", "context", ["p", "v"], ["y"]),
+    ]
+    inits = [
+        tensor("wq", [8, 8], weights(64, 11)),
+        tensor("bq", [8], weights(8, 12)),
+        tensor("wk", [8, 8], weights(64, 13)),
+        tensor("bk", [8], weights(8, 14)),
+        tensor("wv", [8, 8], weights(64, 15)),
+        tensor("bv", [8], weights(8, 16)),
+        tensor("inv_sqrt_dh", [], [1.0 / math.sqrt(8.0)]),
+    ]
+    return model("attention_slice", nodes, inits, [("x", [4, 8])], [("y", [4, 8])])
+
+
+def unsupported_slice():
+    nodes = [
+        node("Conv", "conv_dilated", ["x", "w"], ["t1"],
+             attr_ints("dilations", [2, 2]) + attr_ints("pads", [2, 2, 2, 2])),
+        node("HardSwish", "hswish_0", ["t1"], ["y"]),
+    ]
+    inits = [tensor("w", [4, 3, 3, 3], weights(4 * 27, 21))]
+    return model("unsupported_slice", nodes, inits,
+                 [("x", [1, 3, 8, 8])], [("y", [1, 4, 8, 8])])
+
+
+def main():
+    os.makedirs(OUT_DIR, exist_ok=True)
+    for name, build in [
+        ("mobilenet_slice.onnx", mobilenet_slice),
+        ("attention_slice.onnx", attention_slice),
+        ("unsupported_slice.onnx", unsupported_slice),
+    ]:
+        path = os.path.join(OUT_DIR, name)
+        data = build()
+        assert len(data) < 100_000, "%s exceeds the 100 KB fixture budget" % name
+        with open(path, "wb") as f:
+            f.write(data)
+        print("wrote %s (%d bytes)" % (path, len(data)))
+
+
+if __name__ == "__main__":
+    main()

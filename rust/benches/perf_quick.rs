@@ -237,6 +237,35 @@ fn main() {
         .unwrap_or(0.0);
     record(&mut out, sname, "snapshot-load", secs * 1e3, designs / secs, &[]);
 
+    // ONNX import: the real-model front door's overhead. Decode + map +
+    // validate both checked-in fixtures repeatedly (the parse is
+    // microseconds, so a single shot would just measure timer noise);
+    // "designs/sec" is relay nodes built per second for these rows.
+    let reps = if full { 500 } else { 50 };
+    for fixture in ["mobilenet_slice", "attention_slice"] {
+        let path = format!(
+            "{}/rust/tests/fixtures/{fixture}.onnx",
+            env!("CARGO_MANIFEST_DIR")
+        );
+        let bytes = std::fs::read(&path).expect("fixture on disk");
+        let t0 = Instant::now();
+        let mut nodes = 0usize;
+        for _ in 0..reps {
+            let w = hwsplit::import::import_onnx_bytes(&bytes, fixture)
+                .expect("fixture imports with zero unsupported ops");
+            nodes = w.expr.len();
+        }
+        let secs = t0.elapsed().as_secs_f64().max(1e-9);
+        record(
+            &mut out,
+            fixture,
+            "onnx-import",
+            secs * 1e3 / reps as f64,
+            (nodes * reps) as f64 / secs,
+            &[("relay_nodes", nodes as f64), ("model_bytes", bytes.len() as f64)],
+        );
+    }
+
     out.write("bench_results.json").expect("write bench_results.json");
     println!("wrote bench_results.json ({} records)", out.len());
 }

@@ -48,7 +48,7 @@ fn main() {
                 sim.map(|s| format!("{:.0}", s.utilization * 100.0)).unwrap_or_default(),
             ]);
             csv.row(&[
-                w.name.into(),
+                w.name.clone(),
                 "frontier".into(),
                 p.origin.clone(),
                 fmt_f64(p.cost.area),
@@ -65,7 +65,7 @@ fn main() {
             String::new(),
         ]);
         csv.row(&[
-            w.name.into(),
+            w.name.clone(),
             "baseline".into(),
             "one-engine-per-kind".into(),
             fmt_f64(b.area),

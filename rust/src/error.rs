@@ -81,7 +81,7 @@ impl fmt::Display for Error {
                 write!(
                     f,
                     "unknown workload '{n}' (available: {})",
-                    crate::relay::workload_names().join(" | ")
+                    crate::relay::known_workload_names().join(" | ")
                 )
             }
             Error::UnknownBackend(n) => write!(
@@ -165,6 +165,20 @@ mod tests {
         for name in crate::relay::workload_names() {
             assert!(msg.contains(name), "missing '{name}' in: {msg}");
         }
+    }
+
+    #[test]
+    fn unknown_workload_suggests_registered_workloads_too() {
+        let mut b = crate::relay::GraphBuilder::new();
+        let x = b.input("x", &[4]);
+        b.relu(x);
+        crate::relay::register_workload(crate::relay::Workload {
+            name: "err_test_imported_wl".to_string(),
+            description: "registered for the suggestion-list test".to_string(),
+            expr: b.finish(),
+        });
+        let msg = Error::UnknownWorkload("lemon".into()).to_string();
+        assert!(msg.contains("err_test_imported_wl"), "{msg}");
     }
 
     #[test]

@@ -1,0 +1,1042 @@
+//! Real-model front-end: ONNX → relay import.
+//!
+//! The paper's pipeline starts from workloads "written in Relay"; this
+//! module grows that front door to real exported models. An `.onnx` file
+//! is decoded by the zero-dependency [`proto`] reader, each graph node is
+//! mapped through a declarative table ([`supported_ops`]) onto the typed
+//! [`GraphBuilder`], and the result is an ordinary [`Workload`] — it
+//! saturates, snapshots (embedded as format v4), and serves exactly like
+//! the built-in library.
+//!
+//! Import conventions:
+//!
+//! * **Batch-1 squeeze** — rank-4 `[1, C, H, W]` activations become the
+//!   crate's rank-3 `[C, H, W]`; any other batch size is rejected.
+//! * **Initializers become [`Op::Constant`] leaves** — trained weights are
+//!   inlined (content-hashed, so shared initializers intern to one
+//!   e-node), which keeps imported workloads self-contained: the interp
+//!   backend evaluates the *trained* network, not random weights.
+//! * **Padding** — ONNX `pads = [top, left, bottom, right]` maps onto the
+//!   IR's total `pad_h = top + bottom` / `pad_w = left + right`, accepted
+//!   only when the begin-side is `floor(total/2)` (the IR's fixed
+//!   floor-before/ceil-after split, which equals ONNX `SAME_UPPER`).
+//!   `auto_pad = SAME_UPPER` is computed from the input shape via
+//!   [`same_pad`]; `VALID` means zero.
+//! * **Unsupported ops report, they don't panic** — every node the table
+//!   cannot express is collected into an [`ImportReport`] (op type, node
+//!   name, attributes, reason); the import fails with the full list, not
+//!   the first casualty. Nodes downstream of a failed node are skipped
+//!   silently (they are casualties, not themselves unsupported).
+//!
+//! [`Op::Constant`]: crate::ir::Op::Constant
+
+pub mod proto;
+
+use crate::egraph::Id;
+use crate::error::Error;
+use crate::relay::{same_pad, GraphBuilder, Workload};
+use proto::{GraphProto, NodeProto, TensorProto};
+use std::collections::{HashMap, HashSet};
+use std::path::Path;
+
+/// One ONNX op the importer cannot express, with enough context to fix
+/// the model (or extend the mapping table) without re-running.
+#[derive(Debug, Clone, PartialEq)]
+pub struct UnsupportedOp {
+    /// ONNX `op_type` (e.g. `HardSwish`).
+    pub op_type: String,
+    /// ONNX node name (may be empty — exporters are inconsistent).
+    pub node_name: String,
+    /// Attribute name → rendered value, in model order.
+    pub attrs: Vec<(String, String)>,
+    /// Why the mapping refused: no table entry, or an attribute/shape the
+    /// relay subset cannot express.
+    pub reason: String,
+}
+
+/// Structured import failure: every unsupported node in the model, so one
+/// run reports the full porting surface.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ImportReport {
+    /// Graph name from the model (or the workload name if unnamed).
+    pub model: String,
+    /// Total node count in the graph.
+    pub total_nodes: usize,
+    pub unsupported: Vec<UnsupportedOp>,
+}
+
+impl std::fmt::Display for ImportReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "cannot import '{}': {} unsupported node(s) out of {}",
+            self.model,
+            self.unsupported.len(),
+            self.total_nodes
+        )?;
+        for u in &self.unsupported {
+            write!(f, "  - {} '{}': {}", u.op_type, u.node_name, u.reason)?;
+            if !u.attrs.is_empty() {
+                let rendered: Vec<String> =
+                    u.attrs.iter().map(|(k, v)| format!("{k}={v}")).collect();
+                write!(f, " [attrs: {}]", rendered.join(", "))?;
+            }
+            writeln!(f)?;
+        }
+        Ok(())
+    }
+}
+
+/// Why an import failed: a structurally bad model, or mappable structure
+/// containing unsupported ops (with the full report).
+#[derive(Debug)]
+pub enum ImportError {
+    /// The file is not a readable ONNX model (bad protobuf, non-float
+    /// tensors, symbolic shapes, undefined tensors, …).
+    Model(String),
+    /// The model decoded fine but contains ops outside the relay subset.
+    Unsupported(Box<ImportReport>),
+}
+
+impl std::fmt::Display for ImportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ImportError::Model(m) => write!(f, "malformed ONNX model: {m}"),
+            ImportError::Unsupported(r) => write!(f, "{r}"),
+        }
+    }
+}
+
+impl From<ImportError> for Error {
+    fn from(e: ImportError) -> Self {
+        match e {
+            ImportError::Model(m) => Error::InvalidConfig(format!("onnx import: {m}")),
+            ImportError::Unsupported(r) => Error::Unsupported(r.to_string()),
+        }
+    }
+}
+
+/// Import an `.onnx` file as a [`Workload`] named after the file stem.
+pub fn import_onnx(path: impl AsRef<Path>) -> Result<Workload, Error> {
+    let path = path.as_ref();
+    let bytes =
+        std::fs::read(path).map_err(|e| Error::Io(format!("{}: {e}", path.display())))?;
+    import_onnx_bytes(&bytes, &sanitize_name(path))
+}
+
+/// Import serialized ONNX bytes as a [`Workload`] with the given name.
+pub fn import_onnx_bytes(bytes: &[u8], name: &str) -> Result<Workload, Error> {
+    try_import(bytes, name).map_err(Error::from)
+}
+
+/// Like [`import_onnx_bytes`] but preserving the structured
+/// [`ImportError`] (the CLI and tests want the typed report).
+pub fn try_import(bytes: &[u8], name: &str) -> Result<Workload, ImportError> {
+    let model = proto::parse_model(bytes).map_err(ImportError::Model)?;
+    import_graph(&model.graph, name)
+}
+
+/// The `(onnx op_type, relay mapping)` table — source of truth for
+/// `docs/importer.md` and the CLI's import help.
+pub fn supported_ops() -> impl Iterator<Item = (&'static str, &'static str)> {
+    MAPPINGS.iter().map(|m| (m.op_type, m.maps_to))
+}
+
+/// Workload name from a model path: lowercased stem, non-alphanumerics
+/// folded to `_` (so it is addressable in EngineIR text and CLI flags).
+fn sanitize_name(path: &Path) -> String {
+    let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("onnx_model");
+    let name: String = stem
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+        .collect();
+    if name.chars().all(|c| c == '_') {
+        "onnx_model".to_string()
+    } else {
+        name
+    }
+}
+
+type EmitFn = for<'m> fn(&mut Importer<'m>, &'m NodeProto) -> Result<(), String>;
+
+struct OpMapping {
+    op_type: &'static str,
+    /// Human-readable target, surfaced through [`supported_ops`].
+    maps_to: &'static str,
+    emit: EmitFn,
+}
+
+const MAPPINGS: &[OpMapping] = &[
+    OpMapping { op_type: "Add", maps_to: "bias-add / eadd", emit: emit_add },
+    OpMapping { op_type: "Conv", maps_to: "conv2d / dwconv2d (+ bias-add)", emit: emit_conv },
+    OpMapping { op_type: "Flatten", maps_to: "flatten", emit: emit_flatten },
+    OpMapping { op_type: "Gemm", maps_to: "dense (+ bias-add)", emit: emit_gemm },
+    OpMapping { op_type: "GlobalAveragePool", maps_to: "gap", emit: emit_gap },
+    OpMapping { op_type: "Identity", maps_to: "aliased (no node)", emit: emit_identity },
+    OpMapping { op_type: "MatMul", maps_to: "matmul / batch-matmul", emit: emit_matmul },
+    OpMapping { op_type: "MaxPool", maps_to: "maxpool2d", emit: emit_maxpool },
+    OpMapping { op_type: "Mul", maps_to: "emul (+ bcast const)", emit: emit_mul },
+    OpMapping { op_type: "Relu", maps_to: "relu", emit: emit_relu },
+    OpMapping { op_type: "Reshape", maps_to: "reshape", emit: emit_reshape },
+    OpMapping { op_type: "Softmax", maps_to: "softmax", emit: emit_softmax },
+    OpMapping { op_type: "Transpose", maps_to: "transpose", emit: emit_transpose },
+];
+
+/// Build a [`Workload`] from a decoded graph. Separated from the byte
+/// entry points so tests can construct [`GraphProto`] values directly.
+fn import_graph(g: &GraphProto, name: &str) -> Result<Workload, ImportError> {
+    let display_name = if g.name.is_empty() { name } else { g.name.as_str() };
+    if g.outputs.is_empty() {
+        return Err(ImportError::Model("graph has no outputs".into()));
+    }
+    if g.nodes.is_empty() {
+        return Err(ImportError::Model("graph has no nodes".into()));
+    }
+
+    let mut imp = Importer::new(g)?;
+    let mut unsupported: Vec<UnsupportedOp> = Vec::new();
+    // Outputs of failed nodes: downstream consumers are skipped silently
+    // (casualties of an upstream failure, not themselves unsupported).
+    let mut failed: HashSet<&str> = HashSet::new();
+
+    for n in &g.nodes {
+        let mapping = MAPPINGS.iter().find(|m| m.op_type == n.op_type);
+        let outcome = match mapping {
+            None => Err("no ONNX→relay mapping for this op type".to_string()),
+            Some(_) if n.inputs.iter().any(|i| failed.contains(i.as_str())) => {
+                failed.extend(n.outputs.iter().map(String::as_str));
+                continue;
+            }
+            Some(m) => (m.emit)(&mut imp, n),
+        };
+        if let Err(reason) = outcome {
+            unsupported.push(UnsupportedOp {
+                op_type: n.op_type.clone(),
+                node_name: n.name.clone(),
+                attrs: n
+                    .attrs
+                    .iter()
+                    .map(|a| (a.name.clone(), a.render_value()))
+                    .collect(),
+                reason,
+            });
+            failed.extend(n.outputs.iter().map(String::as_str));
+        }
+    }
+
+    if !unsupported.is_empty() {
+        return Err(ImportError::Unsupported(Box::new(ImportReport {
+            model: display_name.to_string(),
+            total_nodes: g.nodes.len(),
+            unsupported,
+        })));
+    }
+
+    let out = g.outputs[0].name.as_str();
+    let root = *imp
+        .env
+        .get(out)
+        .ok_or_else(|| ImportError::Model(format!("graph output '{out}' was never produced")))?;
+    let node_count = g.nodes.len();
+    let expr = imp.b.finish();
+    if expr.root() != root {
+        // The RecExpr root is its final node; an aliased or non-final
+        // output would silently change the workload's meaning.
+        return Err(ImportError::Model(format!(
+            "graph output '{out}' is not the final computed node"
+        )));
+    }
+    Ok(Workload {
+        name: name.to_string(),
+        description: format!("ONNX import of '{display_name}' ({node_count} nodes)"),
+        expr,
+    })
+}
+
+/// Mapping state: the typed builder plus the tensor-name environment.
+///
+/// Every `GraphBuilder` push is pre-validated by the emit functions —
+/// the builder's eager type checker panics on ill-typed pushes, and a
+/// malformed *model* must report, not abort.
+struct Importer<'m> {
+    b: GraphBuilder,
+    /// Tensor name → built node, for graph inputs (lazily pushed),
+    /// materialized initializers, and node outputs.
+    env: HashMap<&'m str, Id>,
+    /// Graph inputs not yet pushed (name → squeezed dims).
+    pending_inputs: HashMap<&'m str, Vec<usize>>,
+    /// Initializers not yet materialized.
+    inits: HashMap<&'m str, &'m TensorProto>,
+}
+
+impl<'m> Importer<'m> {
+    fn new(g: &'m GraphProto) -> Result<Self, ImportError> {
+        let mut inits: HashMap<&str, &TensorProto> = HashMap::new();
+        for t in &g.initializers {
+            inits.insert(t.name.as_str(), t);
+        }
+        let mut pending_inputs = HashMap::new();
+        for vi in &g.inputs {
+            // Older exporters also list initializers under graph.input.
+            if inits.contains_key(vi.name.as_str()) {
+                continue;
+            }
+            let dims = squeeze_input_dims(&vi.name, &vi.dims).map_err(ImportError::Model)?;
+            pending_inputs.insert(vi.name.as_str(), dims);
+        }
+        Ok(Importer { b: GraphBuilder::new(), env: HashMap::new(), pending_inputs, inits })
+    }
+
+    /// Resolve a tensor name to a built node, lazily pushing graph inputs
+    /// and materializing initializers as `const` leaves.
+    fn tensor(&mut self, name: &'m str) -> Result<Id, String> {
+        if let Some(&id) = self.env.get(name) {
+            return Ok(id);
+        }
+        if let Some(dims) = self.pending_inputs.remove(name) {
+            let id = self.b.input(name, &dims);
+            self.env.insert(name, id);
+            return Ok(id);
+        }
+        if let Some(t) = self.inits.get(name) {
+            let (dims, vals) = init_data(t)?;
+            let id = self.b.constant(&dims, &vals);
+            self.env.insert(name, id);
+            return Ok(id);
+        }
+        Err(format!("tensor '{name}' is not defined (initializer, input, or node output)"))
+    }
+
+    /// The dims a tensor would have if resolved — without building
+    /// anything, so shape validation can precede materialization.
+    fn dims_of(&self, name: &str) -> Result<Vec<usize>, String> {
+        if let Some(&id) = self.env.get(name) {
+            let s = self.b.shape_of(id);
+            return Ok((0..s.rank()).map(|i| s.dim(i)).collect());
+        }
+        if let Some(dims) = self.pending_inputs.get(name) {
+            return Ok(dims.clone());
+        }
+        if let Some(t) = self.inits.get(name) {
+            return t.shape();
+        }
+        Err(format!("tensor '{name}' is not defined (initializer, input, or node output)"))
+    }
+
+    /// Raw initializer payload, for ops that consume weights structurally
+    /// (conv weight reshape, Gemm transB pre-transpose, scalar scale).
+    fn init_data(&self, name: &str) -> Result<(Vec<usize>, Vec<f32>), String> {
+        let t = self
+            .inits
+            .get(name)
+            .ok_or_else(|| format!("'{name}' must be an initializer (a trained constant)"))?;
+        init_data(t)
+    }
+
+    fn is_init(&self, name: &str) -> bool {
+        self.inits.contains_key(name)
+    }
+
+    fn bind(&mut self, n: &'m NodeProto, id: Id) -> Result<(), String> {
+        let out = n
+            .outputs
+            .first()
+            .ok_or_else(|| "node has no outputs".to_string())?;
+        self.env.insert(out.as_str(), id);
+        Ok(())
+    }
+}
+
+/// Validate and extract an initializer's shape + payload.
+fn init_data(t: &TensorProto) -> Result<(Vec<usize>, Vec<f32>), String> {
+    let dims = t.shape()?;
+    let vals = t.f32_values()?;
+    let numel: usize = dims.iter().product();
+    if vals.len() != numel {
+        return Err(format!(
+            "initializer '{}' declares shape {dims:?} ({numel} elements) but carries {}",
+            t.name,
+            vals.len()
+        ));
+    }
+    Ok((dims, vals))
+}
+
+/// Graph-input dims: static, positive, rank ≤ 3 after squeezing a
+/// leading batch-1 from rank-4 NCHW.
+fn squeeze_input_dims(name: &str, dims: &[i64]) -> Result<Vec<usize>, String> {
+    let mut out = Vec::with_capacity(dims.len());
+    for &d in dims {
+        if d <= 0 {
+            return Err(format!(
+                "input '{name}' has symbolic or non-positive dim {d}; re-export with static shapes"
+            ));
+        }
+        out.push(d as usize);
+    }
+    if out.len() == 4 {
+        if out[0] != 1 {
+            return Err(format!("input '{name}' has batch size {} (only 1 imports)", out[0]));
+        }
+        out.remove(0);
+    }
+    if out.is_empty() || out.len() > 3 {
+        return Err(format!("input '{name}' has rank {} (1–3 after batch squeeze)", out.len()));
+    }
+    Ok(out)
+}
+
+// ---- per-op emit functions ----------------------------------------------
+
+fn one_input<'m>(n: &'m NodeProto) -> Result<&'m str, String> {
+    match n.inputs.as_slice() {
+        [x] => Ok(x.as_str()),
+        other => Err(format!("expected 1 input, got {}", other.len())),
+    }
+}
+
+fn two_inputs<'m>(n: &'m NodeProto) -> Result<(&'m str, &'m str), String> {
+    match n.inputs.as_slice() {
+        [a, b] => Ok((a.as_str(), b.as_str())),
+        other => Err(format!("expected 2 inputs, got {}", other.len())),
+    }
+}
+
+/// Stride from the `strides` attribute: the IR has one stride for both
+/// spatial dims.
+fn isotropic_stride(n: &NodeProto) -> Result<usize, String> {
+    match n.attr_ints("strides") {
+        None => Ok(1),
+        Some([s]) => usize::try_from(*s).map_err(|_| format!("negative stride {s}")),
+        Some([sh, sw]) if sh == sw => {
+            usize::try_from(*sh).map_err(|_| format!("negative stride {sh}"))
+        }
+        Some(other) => Err(format!("anisotropic strides {other:?} unsupported")),
+    }
+}
+
+fn reject_dilations(n: &NodeProto) -> Result<(), String> {
+    if let Some(d) = n.attr_ints("dilations") {
+        if d.iter().any(|&x| x != 1) {
+            return Err(format!("dilations {d:?} unsupported (only 1)"));
+        }
+    }
+    Ok(())
+}
+
+/// ONNX explicit `pads = [top, left, bottom, right]` → the IR's total
+/// `(pad_h, pad_w)`. The IR always splits a total `p` as `floor(p/2)`
+/// before / `ceil(p/2)` after, so only that split is expressible.
+fn explicit_pads(n: &NodeProto) -> Result<(usize, usize), String> {
+    let pads = match n.attr_ints("pads") {
+        None => return Ok((0, 0)),
+        Some(p) => p,
+    };
+    let &[top, left, bottom, right] = pads else {
+        return Err(format!("pads {pads:?} unsupported (want [top, left, bottom, right])"));
+    };
+    let as_usize = |v: i64| usize::try_from(v).map_err(|_| format!("negative pad {v}"));
+    let (top, left, bottom, right) =
+        (as_usize(top)?, as_usize(left)?, as_usize(bottom)?, as_usize(right)?);
+    let (pad_h, pad_w) = (top + bottom, left + right);
+    if top != pad_h / 2 || left != pad_w / 2 {
+        return Err(format!(
+            "pads [{top}, {left}, {bottom}, {right}] split differs from the IR's \
+             floor-before/ceil-after convention"
+        ));
+    }
+    Ok((pad_h, pad_w))
+}
+
+/// `(padded - k)` must tile exactly by `stride` (the IR has no ceil-mode
+/// or implicit crop).
+fn check_window(dim: usize, pad: usize, k: usize, stride: usize, axis: &str) -> Result<(), String> {
+    let padded = dim + pad;
+    if padded < k || (padded - k) % stride != 0 {
+        return Err(format!(
+            "window k={k} stride={stride} does not tile the padded {axis} extent {padded}"
+        ));
+    }
+    Ok(())
+}
+
+fn emit_conv<'m>(imp: &mut Importer<'m>, n: &'m NodeProto) -> Result<(), String> {
+    let (x_name, w_name) = match n.inputs.as_slice() {
+        [x, w] => (x.as_str(), w.as_str()),
+        [x, w, _b] => (x.as_str(), w.as_str()),
+        other => return Err(format!("expected 2–3 inputs, got {}", other.len())),
+    };
+    reject_dilations(n)?;
+    let stride = isotropic_stride(n)?;
+    if stride == 0 {
+        return Err("stride 0".into());
+    }
+    let xdims = imp.dims_of(x_name)?;
+    let [c, h, w] = xdims[..] else {
+        return Err(format!("conv input has shape {xdims:?} (want [C, H, W] after batch squeeze)"));
+    };
+    let (wdims, wvals) = imp.init_data(w_name)?;
+    let [oc, icg, kh, kw] = wdims[..] else {
+        return Err(format!("conv weight has shape {wdims:?} (want [OC, IC/group, kh, kw])"));
+    };
+
+    let (pad_h, pad_w) = match n.attr_s("auto_pad").as_deref() {
+        None | Some("NOTSET") | Some("") => explicit_pads(n)?,
+        Some("VALID") => (0, 0),
+        Some("SAME_UPPER") => (same_pad(h, kh, stride), same_pad(w, kw, stride)),
+        Some(other) => return Err(format!("auto_pad {other} unsupported")),
+    };
+    check_window(h, pad_h, kh, stride, "height")?;
+    check_window(w, pad_w, kw, stride, "width")?;
+
+    let group = n.attr_i("group", 1);
+    let y = if group == 1 {
+        if icg != c {
+            return Err(format!("weight expects {icg} input channels, input has {c}"));
+        }
+        let wid = imp.b.constant(&wdims, &wvals);
+        let x = imp.tensor(x_name)?;
+        imp.b.conv2d(x, wid, stride, pad_h, pad_w)
+    } else if group == c as i64 && icg == 1 && oc == c {
+        // Depthwise: ONNX weight [C, 1, kh, kw] is the IR's [C, kh, kw].
+        let wid = imp.b.constant(&[c, kh, kw], &wvals);
+        let x = imp.tensor(x_name)?;
+        imp.b.depthwise_conv2d(x, wid, stride, pad_h, pad_w)
+    } else {
+        return Err(format!(
+            "group={group} with weight {wdims:?} unsupported (want group=1 or depthwise)"
+        ));
+    };
+
+    let y = match n.inputs.get(2) {
+        None => y,
+        Some(b_name) => {
+            let (bdims, bvals) = imp.init_data(b_name)?;
+            if bdims != [oc] {
+                return Err(format!("conv bias has shape {bdims:?} (want [{oc}])"));
+            }
+            let bid = imp.b.constant(&bdims, &bvals);
+            imp.b.bias_add(y, bid)
+        }
+    };
+    imp.bind(n, y)
+}
+
+fn emit_relu<'m>(imp: &mut Importer<'m>, n: &'m NodeProto) -> Result<(), String> {
+    let x_name = one_input(n)?;
+    let dims = imp.dims_of(x_name)?;
+    if dims.is_empty() || dims.len() > 3 {
+        return Err(format!("relu input has rank {} (want 1–3)", dims.len()));
+    }
+    let x = imp.tensor(x_name)?;
+    let y = imp.b.relu(x);
+    imp.bind(n, y)
+}
+
+fn emit_gemm<'m>(imp: &mut Importer<'m>, n: &'m NodeProto) -> Result<(), String> {
+    let (a_name, b_name) = match n.inputs.as_slice() {
+        [a, b] => (a.as_str(), b.as_str()),
+        [a, b, _c] => (a.as_str(), b.as_str()),
+        other => return Err(format!("expected 2–3 inputs, got {}", other.len())),
+    };
+    if n.attr_f("alpha", 1.0) != 1.0 || n.attr_f("beta", 1.0) != 1.0 {
+        return Err(format!(
+            "alpha={} beta={} unsupported (want 1)",
+            n.attr_f("alpha", 1.0),
+            n.attr_f("beta", 1.0)
+        ));
+    }
+    if n.attr_i("transA", 0) != 0 {
+        return Err("transA=1 unsupported".into());
+    }
+    let adims = imp.dims_of(a_name)?;
+    let [_rows, k] = adims[..] else {
+        return Err(format!("Gemm input has shape {adims:?} (want rank 2)"));
+    };
+    let (wdims, wvals) = imp.init_data(b_name)?;
+    let [d0, d1] = wdims[..] else {
+        return Err(format!("Gemm weight has shape {wdims:?} (want rank 2)"));
+    };
+    // `dense` computes X[n,k] @ W[k,m]; transB=1 stores W as [m,k], so
+    // pre-transpose the constant *data* at import time.
+    let (wdims, wvals) = if n.attr_i("transB", 0) == 1 {
+        let (m, kk) = (d0, d1);
+        let mut t = vec![0.0f32; wvals.len()];
+        for i in 0..m {
+            for j in 0..kk {
+                t[j * m + i] = wvals[i * kk + j];
+            }
+        }
+        (vec![kk, m], t)
+    } else {
+        (wdims, wvals)
+    };
+    if wdims[0] != k {
+        return Err(format!("Gemm weight expects {} input features, input has {k}", wdims[0]));
+    }
+    let wid = imp.b.constant(&wdims, &wvals);
+    let a = imp.tensor(a_name)?;
+    let y = imp.b.dense(a, wid);
+    let y = match n.inputs.get(2) {
+        None => y,
+        Some(c_name) => {
+            let (cdims, cvals) = imp.init_data(c_name)?;
+            if cdims != [wdims[1]] {
+                return Err(format!("Gemm bias has shape {cdims:?} (want [{}])", wdims[1]));
+            }
+            let cid = imp.b.constant(&cdims, &cvals);
+            imp.b.bias_add(y, cid)
+        }
+    };
+    imp.bind(n, y)
+}
+
+fn emit_matmul<'m>(imp: &mut Importer<'m>, n: &'m NodeProto) -> Result<(), String> {
+    let (a_name, b_name) = two_inputs(n)?;
+    let adims = imp.dims_of(a_name)?;
+    let bdims = imp.dims_of(b_name)?;
+    match (adims.as_slice(), bdims.as_slice()) {
+        ([_, ak], [bk, _]) if ak == bk => {
+            let a = imp.tensor(a_name)?;
+            let b = imp.tensor(b_name)?;
+            let y = imp.b.matmul(a, b);
+            imp.bind(n, y)
+        }
+        ([ab, _, ak], [bb, bk, _]) if ab == bb && ak == bk => {
+            let a = imp.tensor(a_name)?;
+            let b = imp.tensor(b_name)?;
+            let y = imp.b.batch_matmul(a, b);
+            imp.bind(n, y)
+        }
+        _ => Err(format!("MatMul shapes {adims:?} × {bdims:?} unsupported")),
+    }
+}
+
+fn emit_mul<'m>(imp: &mut Importer<'m>, n: &'m NodeProto) -> Result<(), String> {
+    let (a_name, b_name) = two_inputs(n)?;
+    let adims = imp.dims_of(a_name)?;
+    let bdims = imp.dims_of(b_name)?;
+    // Scalar constant on either side → broadcast scale (`1/√dh` etc.).
+    for (t_name, t_dims, c_name) in
+        [(a_name, &adims, b_name), (b_name, &bdims, a_name)]
+    {
+        if imp.is_init(c_name) {
+            let (_, cvals) = imp.init_data(c_name)?;
+            if cvals.len() == 1 {
+                if t_dims.is_empty() || t_dims.len() > 3 {
+                    return Err(format!("Mul input has rank {} (want 1–3)", t_dims.len()));
+                }
+                let x = imp.tensor(t_name)?;
+                let y = imp.b.scale(x, cvals[0]);
+                return imp.bind(n, y);
+            }
+        }
+    }
+    if adims == bdims && !adims.is_empty() && adims.len() <= 3 {
+        let a = imp.tensor(a_name)?;
+        let b = imp.tensor(b_name)?;
+        let y = imp.b.emul(a, b);
+        return imp.bind(n, y);
+    }
+    // Rank-1 constant against the broadcast axis (channel for rank 3,
+    // features for rank 2).
+    for (t_name, t_dims, c_name, c_dims) in
+        [(a_name, &adims, b_name, &bdims), (b_name, &bdims, a_name, &adims)]
+    {
+        let bcast_dim = match t_dims.as_slice() {
+            [c, _, _] => *c,
+            [_, f] => *f,
+            _ => continue,
+        };
+        if c_dims.as_slice() == [bcast_dim] {
+            let c = imp.tensor(c_name)?;
+            let b = imp.b.bcast(c, t_dims);
+            let x = imp.tensor(t_name)?;
+            let y = imp.b.emul(x, b);
+            return imp.bind(n, y);
+        }
+    }
+    Err(format!("Mul shapes {adims:?} × {bdims:?} unsupported"))
+}
+
+fn emit_add<'m>(imp: &mut Importer<'m>, n: &'m NodeProto) -> Result<(), String> {
+    let (a_name, b_name) = two_inputs(n)?;
+    let adims = imp.dims_of(a_name)?;
+    let bdims = imp.dims_of(b_name)?;
+    if adims == bdims && !adims.is_empty() && adims.len() <= 3 {
+        let a = imp.tensor(a_name)?;
+        let b = imp.tensor(b_name)?;
+        let y = imp.b.add(a, b);
+        return imp.bind(n, y);
+    }
+    // Rank-1 bias against the bias axis (channel for rank 3, features
+    // for rank 2) — `Add(x, b)` is how exporters spell bias-add.
+    for (t_name, t_dims, c_name, c_dims) in
+        [(a_name, &adims, b_name, &bdims), (b_name, &bdims, a_name, &adims)]
+    {
+        let bias_dim = match t_dims.as_slice() {
+            [c, _, _] => *c,
+            [_, f] => *f,
+            _ => continue,
+        };
+        if c_dims.as_slice() == [bias_dim] {
+            let x = imp.tensor(t_name)?;
+            let b = imp.tensor(c_name)?;
+            let y = imp.b.bias_add(x, b);
+            return imp.bind(n, y);
+        }
+    }
+    Err(format!("Add shapes {adims:?} + {bdims:?} unsupported"))
+}
+
+fn emit_softmax<'m>(imp: &mut Importer<'m>, n: &'m NodeProto) -> Result<(), String> {
+    let x_name = one_input(n)?;
+    let dims = imp.dims_of(x_name)?;
+    if dims.len() < 2 || dims.len() > 3 {
+        return Err(format!("softmax input has rank {} (want 2–3)", dims.len()));
+    }
+    let axis = n.attr_i("axis", -1);
+    if axis != -1 && axis != dims.len() as i64 - 1 {
+        return Err(format!("axis={axis} unsupported (last axis only)"));
+    }
+    let x = imp.tensor(x_name)?;
+    let y = imp.b.softmax(x);
+    imp.bind(n, y)
+}
+
+fn emit_transpose<'m>(imp: &mut Importer<'m>, n: &'m NodeProto) -> Result<(), String> {
+    let x_name = one_input(n)?;
+    let dims = imp.dims_of(x_name)?;
+    let perm = n.attr_ints("perm");
+    let ok = match (dims.len(), perm) {
+        (2, None) | (2, Some([1, 0])) => true,
+        (3, Some([0, 2, 1])) => true,
+        _ => false,
+    };
+    if !ok {
+        return Err(format!(
+            "perm {perm:?} on rank {} unsupported (trailing-axes swap only)",
+            dims.len()
+        ));
+    }
+    let x = imp.tensor(x_name)?;
+    let y = imp.b.transpose(x);
+    imp.bind(n, y)
+}
+
+fn emit_reshape<'m>(imp: &mut Importer<'m>, n: &'m NodeProto) -> Result<(), String> {
+    let (x_name, shape_name) = two_inputs(n)?;
+    let xdims = imp.dims_of(x_name)?;
+    let numel: usize = xdims.iter().product();
+    let shape_t = imp
+        .inits
+        .get(shape_name)
+        .ok_or_else(|| "reshape target must be a constant shape tensor".to_string())?;
+    let target = shape_t.i64_values()?;
+    // Resolve -1 (infer); reject 0 (copy-dim — ambiguous after squeeze).
+    let mut dims: Vec<usize> = Vec::with_capacity(target.len());
+    let mut infer_at: Option<usize> = None;
+    for (i, &d) in target.iter().enumerate() {
+        match d {
+            -1 if infer_at.is_none() => {
+                infer_at = Some(i);
+                dims.push(1);
+            }
+            d if d > 0 => dims.push(d as usize),
+            _ => return Err(format!("reshape target {target:?} unsupported")),
+        }
+    }
+    if let Some(i) = infer_at {
+        let rest: usize = dims.iter().product();
+        if rest == 0 || numel % rest != 0 {
+            return Err(format!("cannot infer -1 in reshape target {target:?}"));
+        }
+        dims[i] = numel / rest;
+    }
+    // Squeeze a leading batch-1 from a rank-4 target (mirrors inputs).
+    if dims.len() == 4 && dims[0] == 1 {
+        dims.remove(0);
+    }
+    if dims.is_empty() || dims.len() > 3 {
+        return Err(format!("reshape target rank {} unsupported (1–3)", dims.len()));
+    }
+    if dims.iter().product::<usize>() != numel {
+        return Err(format!("reshape {xdims:?} → {dims:?} changes the element count"));
+    }
+    let x = imp.tensor(x_name)?;
+    let y = imp.b.reshape(x, &dims);
+    imp.bind(n, y)
+}
+
+fn emit_flatten<'m>(imp: &mut Importer<'m>, n: &'m NodeProto) -> Result<(), String> {
+    let x_name = one_input(n)?;
+    let dims = imp.dims_of(x_name)?;
+    if dims.len() != 3 {
+        return Err(format!("flatten input has rank {} (want 3)", dims.len()));
+    }
+    // ONNX axis=1 on [1, C, H, W] → [1, C·H·W]; the batch is already
+    // squeezed here, so axis 0 and 1 coincide.
+    let axis = n.attr_i("axis", 1);
+    if !(0..=1).contains(&axis) {
+        return Err(format!("flatten axis={axis} unsupported"));
+    }
+    let x = imp.tensor(x_name)?;
+    let y = imp.b.flatten(x);
+    imp.bind(n, y)
+}
+
+fn emit_gap<'m>(imp: &mut Importer<'m>, n: &'m NodeProto) -> Result<(), String> {
+    let x_name = one_input(n)?;
+    let dims = imp.dims_of(x_name)?;
+    if dims.len() != 3 {
+        return Err(format!("global-avg-pool input has rank {} (want 3)", dims.len()));
+    }
+    let x = imp.tensor(x_name)?;
+    let y = imp.b.global_avg_pool(x);
+    imp.bind(n, y)
+}
+
+fn emit_maxpool<'m>(imp: &mut Importer<'m>, n: &'m NodeProto) -> Result<(), String> {
+    let x_name = one_input(n)?;
+    reject_dilations(n)?;
+    if n.attr_i("ceil_mode", 0) != 0 {
+        return Err("ceil_mode=1 unsupported".into());
+    }
+    match n.attr_s("auto_pad").as_deref() {
+        None | Some("NOTSET") | Some("") | Some("VALID") => {}
+        Some(other) => return Err(format!("auto_pad {other} unsupported for MaxPool")),
+    }
+    if explicit_pads(n)? != (0, 0) {
+        return Err("padded MaxPool unsupported (the IR's maxpool has no pad)".into());
+    }
+    let (kh, kw) = match n.attr_ints("kernel_shape") {
+        Some(&[kh, kw]) => (kh, kw),
+        other => return Err(format!("kernel_shape {other:?} unsupported")),
+    };
+    let (kh, kw) = (
+        usize::try_from(kh).map_err(|_| format!("negative kernel {kh}"))?,
+        usize::try_from(kw).map_err(|_| format!("negative kernel {kw}"))?,
+    );
+    let stride = isotropic_stride(n)?;
+    if stride == 0 {
+        return Err("stride 0".into());
+    }
+    let dims = imp.dims_of(x_name)?;
+    let [_, h, w] = dims[..] else {
+        return Err(format!("maxpool input has shape {dims:?} (want [C, H, W])"));
+    };
+    check_window(h, 0, kh, stride, "height")?;
+    check_window(w, 0, kw, stride, "width")?;
+    let x = imp.tensor(x_name)?;
+    let y = imp.b.maxpool2d_rect(x, kh, kw, stride);
+    imp.bind(n, y)
+}
+
+fn emit_identity<'m>(imp: &mut Importer<'m>, n: &'m NodeProto) -> Result<(), String> {
+    let x_name = one_input(n)?;
+    let x = imp.tensor(x_name)?;
+    imp.bind(n, x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::proto::{AttributeProto, TensorProto, ValueInfoProto, DT_FLOAT};
+    use super::*;
+    use crate::ir::Shape;
+
+    fn float_init(name: &str, dims: &[i64], vals: &[f32]) -> TensorProto {
+        TensorProto {
+            dims: dims.to_vec(),
+            data_type: DT_FLOAT,
+            float_data: vals.to_vec(),
+            name: name.to_string(),
+            ..Default::default()
+        }
+    }
+
+    fn vi(name: &str, dims: &[i64]) -> ValueInfoProto {
+        ValueInfoProto { name: name.to_string(), dims: dims.to_vec() }
+    }
+
+    fn node(op: &str, name: &str, ins: &[&str], out: &str) -> NodeProto {
+        NodeProto {
+            inputs: ins.iter().map(|s| s.to_string()).collect(),
+            outputs: vec![out.to_string()],
+            name: name.to_string(),
+            op_type: op.to_string(),
+            attrs: Vec::new(),
+        }
+    }
+
+    fn attr_ints(name: &str, vals: &[i64]) -> AttributeProto {
+        AttributeProto {
+            name: name.to_string(),
+            ints: vals.to_vec(),
+            kind: 7,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn imports_a_conv_relu_graph_with_same_upper_pads() {
+        // [1,3,8,8] --Conv(3→4, k3, s2, pads [0,0,1,1])--> Relu
+        let mut conv = node("Conv", "c0", &["x", "w", "b"], "t0");
+        conv.attrs.push(attr_ints("strides", &[2, 2]));
+        conv.attrs.push(attr_ints("pads", &[0, 0, 1, 1]));
+        let g = GraphProto {
+            name: "convnet".into(),
+            nodes: vec![conv, node("Relu", "r0", &["t0"], "y")],
+            initializers: vec![
+                float_init("w", &[4, 3, 3, 3], &[0.01; 108]),
+                float_init("b", &[4], &[0.5; 4]),
+            ],
+            inputs: vec![vi("x", &[1, 3, 8, 8])],
+            outputs: vec![vi("y", &[1, 4, 4, 4])],
+        };
+        let w = import_graph(&g, "convnet").expect("imports");
+        assert_eq!(w.name, "convnet");
+        // SAME_UPPER on 8/s2/k3: total pad 1, out = ceil(8/2) = 4.
+        assert_eq!(
+            w.expr.typecheck().unwrap(),
+            crate::ir::Ty::Tensor(Shape::new(&[4, 4, 4]))
+        );
+        // Weights arrived as constant leaves, not symbols.
+        assert_eq!(w.expr.count(|op| matches!(op, crate::ir::Op::Constant(_))), 2);
+        assert_eq!(w.expr.count(|op| matches!(op, crate::ir::Op::Weight(..))), 0);
+    }
+
+    #[test]
+    fn depthwise_conv_reshapes_the_onnx_weight_layout() {
+        let mut conv = node("Conv", "dw", &["x", "w"], "y");
+        conv.attrs.push(AttributeProto {
+            name: "group".into(),
+            i: 3,
+            kind: 2,
+            ..Default::default()
+        });
+        conv.attrs.push(attr_ints("pads", &[1, 1, 1, 1]));
+        let g = GraphProto {
+            name: String::new(),
+            nodes: vec![conv],
+            initializers: vec![float_init("w", &[3, 1, 3, 3], &[0.1; 27])],
+            inputs: vec![vi("x", &[1, 3, 6, 6])],
+            outputs: vec![vi("y", &[1, 3, 6, 6])],
+        };
+        let w = import_graph(&g, "dwnet").expect("imports");
+        assert_eq!(
+            w.expr.typecheck().unwrap(),
+            crate::ir::Ty::Tensor(Shape::new(&[3, 6, 6]))
+        );
+        assert_eq!(w.expr.count(|op| matches!(op, crate::ir::Op::DepthwiseConv2d { .. })), 1);
+    }
+
+    #[test]
+    fn gemm_trans_b_pre_transposes_the_constant() {
+        // W stored [out=2, in=3] with transB=1 must act like [3, 2].
+        let mut gemm = node("Gemm", "fc", &["x", "w"], "y");
+        gemm.attrs.push(AttributeProto {
+            name: "transB".into(),
+            i: 1,
+            kind: 2,
+            ..Default::default()
+        });
+        let g = GraphProto {
+            name: String::new(),
+            nodes: vec![gemm],
+            initializers: vec![float_init("w", &[2, 3], &[1., 2., 3., 4., 5., 6.])],
+            inputs: vec![vi("x", &[1, 3])],
+            outputs: vec![vi("y", &[1, 2])],
+        };
+        let w = import_graph(&g, "fcnet").expect("imports");
+        assert_eq!(
+            w.expr.typecheck().unwrap(),
+            crate::ir::Ty::Tensor(Shape::new(&[1, 2]))
+        );
+        // The evaluated result must match x @ Wᵀ.
+        use crate::tensor::{eval_expr, Env, Tensor};
+        let mut env = Env::new();
+        env.tensors.insert(
+            crate::ir::Symbol::new("x"),
+            Tensor::new(Shape::new(&[1, 3]), vec![1.0, 0.0, 2.0]),
+        );
+        let got = eval_expr(&w.expr, &mut env).unwrap();
+        // x @ Wᵀ: [1*1 + 0*2 + 2*3, 1*4 + 0*5 + 2*6] = [7, 16].
+        assert_eq!(got.data, vec![7.0, 16.0]);
+    }
+
+    #[test]
+    fn unsupported_ops_are_collected_not_cascaded() {
+        // HardSwish has no mapping; the downstream Relu consuming its
+        // output must be skipped silently, not double-reported.
+        let g = GraphProto {
+            name: "oddnet".into(),
+            nodes: vec![
+                node("Relu", "r0", &["x"], "t0"),
+                node("HardSwish", "hs0", &["t0"], "t1"),
+                node("Relu", "r1", &["t1"], "y"),
+            ],
+            initializers: vec![],
+            inputs: vec![vi("x", &[16])],
+            outputs: vec![vi("y", &[16])],
+        };
+        let err = import_graph(&g, "oddnet").unwrap_err();
+        let ImportError::Unsupported(report) = err else {
+            panic!("want Unsupported, got {err:?}")
+        };
+        assert_eq!(report.total_nodes, 3);
+        assert_eq!(report.unsupported.len(), 1);
+        assert_eq!(report.unsupported[0].op_type, "HardSwish");
+        assert_eq!(report.unsupported[0].node_name, "hs0");
+    }
+
+    #[test]
+    fn bad_pad_split_reports_with_attrs() {
+        let mut conv = node("Conv", "c0", &["x", "w"], "y");
+        // Total pad 2 split [2, 0] — the IR can only split it [1, 1].
+        conv.attrs.push(attr_ints("pads", &[2, 0, 0, 2]));
+        let g = GraphProto {
+            name: String::new(),
+            nodes: vec![conv],
+            initializers: vec![float_init("w", &[4, 3, 3, 3], &[0.01; 108])],
+            inputs: vec![vi("x", &[1, 3, 8, 8])],
+            outputs: vec![vi("y", &[1, 4, 8, 8])],
+        };
+        let err = import_graph(&g, "badpad").unwrap_err();
+        let ImportError::Unsupported(report) = err else {
+            panic!("want Unsupported, got {err:?}")
+        };
+        let u = &report.unsupported[0];
+        assert_eq!(u.op_type, "Conv");
+        assert!(u.reason.contains("floor-before/ceil-after"), "{}", u.reason);
+        assert!(u.attrs.iter().any(|(k, v)| k == "pads" && v == "[2, 0, 0, 2]"));
+        // And the rendered report carries all of it.
+        let text = report.to_string();
+        assert!(text.contains("Conv 'c0'"), "{text}");
+        assert!(text.contains("pads=[2, 0, 0, 2]"), "{text}");
+    }
+
+    #[test]
+    fn scalar_mul_becomes_a_broadcast_scale() {
+        let g = GraphProto {
+            name: String::new(),
+            nodes: vec![node("Mul", "sc", &["x", "k"], "y")],
+            initializers: vec![float_init("k", &[], &[0.25])],
+            inputs: vec![vi("x", &[4, 8])],
+            outputs: vec![vi("y", &[4, 8])],
+        };
+        let w = import_graph(&g, "scalenet").expect("imports");
+        use crate::tensor::{eval_expr, Env};
+        let env = Env::random_for(&w.expr, 11);
+        let got = eval_expr(&w.expr, &mut env.clone()).unwrap();
+        let x = env.tensors[&crate::ir::Symbol::new("x")].clone();
+        for (g, x) in got.data.iter().zip(&x.data) {
+            assert!((g - x * 0.25).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn name_sanitization_makes_cli_safe_names() {
+        assert_eq!(sanitize_name(Path::new("/tmp/MobileNet-V1.slice.onnx")), "mobilenet_v1_slice");
+        assert_eq!(sanitize_name(Path::new("---.onnx")), "onnx_model");
+    }
+}

@@ -1,0 +1,578 @@
+//! A zero-dependency reader for the subset of the ONNX protobuf schema the
+//! importer needs.
+//!
+//! ONNX models are protobuf messages (`onnx.proto`), but depending on
+//! `protoc`/`prost` for five message types would violate the crate's
+//! zero-dependency rule — so this module hand-decodes the wire format:
+//! varints, the four wire types (varint / fixed64 / length-delimited /
+//! fixed32), and packed-or-unpacked repeated scalars. Unknown fields are
+//! skipped by wire type, so models carrying metadata, doc strings, or
+//! newer fields decode fine; only the fields named below are retained.
+//!
+//! Field numbers (from `onnx/onnx.proto`, stable since ONNX IR v3):
+//!
+//! ```text
+//! ModelProto      graph=7
+//! GraphProto      node=1 name=2 initializer=5 input=11 output=12
+//! NodeProto       input=1 output=2 name=3 op_type=4 attribute=5
+//! AttributeProto  name=1 f=2 i=3 s=4 floats=7 ints=8 type=20
+//! TensorProto     dims=1 data_type=2 float_data=4 int64_data=7 name=8 raw_data=9
+//! ValueInfoProto  name=1 type=2 → TypeProto.tensor_type=1
+//!                 → elem_type=1 shape=2 → dim=1 → dim_value=1
+//! ```
+//!
+//! Every malformed input returns `Err(String)` (the importer wraps it into
+//! the crate's typed error) — no panics on attacker-controlled bytes.
+
+/// ONNX `TensorProto.DataType.FLOAT`.
+pub const DT_FLOAT: i64 = 1;
+/// ONNX `TensorProto.DataType.INT64`.
+pub const DT_INT64: i64 = 7;
+
+#[derive(Debug, Default)]
+pub struct ModelProto {
+    pub graph: GraphProto,
+}
+
+#[derive(Debug, Default)]
+pub struct GraphProto {
+    pub name: String,
+    pub nodes: Vec<NodeProto>,
+    pub initializers: Vec<TensorProto>,
+    pub inputs: Vec<ValueInfoProto>,
+    pub outputs: Vec<ValueInfoProto>,
+}
+
+#[derive(Debug, Default)]
+pub struct NodeProto {
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+    pub name: String,
+    pub op_type: String,
+    pub attrs: Vec<AttributeProto>,
+}
+
+impl NodeProto {
+    /// Attribute by name (ONNX attributes are a flat named list).
+    pub fn attr(&self, name: &str) -> Option<&AttributeProto> {
+        self.attrs.iter().find(|a| a.name == name)
+    }
+
+    pub fn attr_i(&self, name: &str, default: i64) -> i64 {
+        self.attr(name).map_or(default, |a| a.i)
+    }
+
+    pub fn attr_f(&self, name: &str, default: f32) -> f32 {
+        self.attr(name).map_or(default, |a| a.f)
+    }
+
+    pub fn attr_s(&self, name: &str) -> Option<String> {
+        self.attr(name).map(|a| String::from_utf8_lossy(&a.s).into_owned())
+    }
+
+    pub fn attr_ints(&self, name: &str) -> Option<&[i64]> {
+        self.attr(name).map(|a| a.ints.as_slice())
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct AttributeProto {
+    pub name: String,
+    pub f: f32,
+    pub i: i64,
+    pub s: Vec<u8>,
+    pub floats: Vec<f32>,
+    pub ints: Vec<i64>,
+    /// `AttributeProto.AttributeType` discriminant (FLOAT=1, INT=2,
+    /// STRING=3, FLOATS=6, INTS=7, …). Retained for report rendering.
+    pub kind: i64,
+}
+
+impl AttributeProto {
+    /// Render the attribute's value for the unsupported-op report —
+    /// deterministic and compact, e.g. `strides=[2, 2]` or `alpha=0.5`.
+    pub fn render_value(&self) -> String {
+        match self.kind {
+            1 => format!("{}", self.f),
+            2 => format!("{}", self.i),
+            3 => String::from_utf8_lossy(&self.s).into_owned(),
+            6 => format!("{:?}", self.floats),
+            7 => format!("{:?}", self.ints),
+            _ if !self.ints.is_empty() => format!("{:?}", self.ints),
+            _ if !self.floats.is_empty() => format!("{:?}", self.floats),
+            _ if !self.s.is_empty() => String::from_utf8_lossy(&self.s).into_owned(),
+            _ => format!("{}", self.i),
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct TensorProto {
+    pub dims: Vec<i64>,
+    pub data_type: i64,
+    pub float_data: Vec<f32>,
+    pub int64_data: Vec<i64>,
+    pub raw_data: Vec<u8>,
+    pub name: String,
+}
+
+impl TensorProto {
+    /// The tensor's shape as `usize` dims (rejects negative dims).
+    pub fn shape(&self) -> Result<Vec<usize>, String> {
+        self.dims
+            .iter()
+            .map(|&d| {
+                usize::try_from(d)
+                    .map_err(|_| format!("initializer '{}' has negative dim {d}", self.name))
+            })
+            .collect()
+    }
+
+    /// f32 payload, from whichever encoding the writer chose (`raw_data`
+    /// little-endian bytes or the `float_data` repeated field).
+    pub fn f32_values(&self) -> Result<Vec<f32>, String> {
+        if self.data_type != DT_FLOAT {
+            return Err(format!(
+                "initializer '{}' has data type {} (only float32 tensors import)",
+                self.name, self.data_type
+            ));
+        }
+        if !self.raw_data.is_empty() {
+            if self.raw_data.len() % 4 != 0 {
+                return Err(format!("initializer '{}': raw_data not a multiple of 4", self.name));
+            }
+            return Ok(self
+                .raw_data
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect());
+        }
+        Ok(self.float_data.clone())
+    }
+
+    /// i64 payload (shape tensors for `Reshape`).
+    pub fn i64_values(&self) -> Result<Vec<i64>, String> {
+        if self.data_type != DT_INT64 {
+            return Err(format!(
+                "initializer '{}' has data type {} where int64 was expected",
+                self.name, self.data_type
+            ));
+        }
+        if !self.raw_data.is_empty() {
+            if self.raw_data.len() % 8 != 0 {
+                return Err(format!("initializer '{}': raw_data not a multiple of 8", self.name));
+            }
+            return Ok(self
+                .raw_data
+                .chunks_exact(8)
+                .map(|c| i64::from_le_bytes(c.try_into().expect("chunks_exact(8)")))
+                .collect());
+        }
+        Ok(self.int64_data.clone())
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct ValueInfoProto {
+    pub name: String,
+    /// Static tensor dims from the nested `TypeProto`; a symbolic dim
+    /// (`dim_param`) decodes as 0 and is rejected by the importer.
+    pub dims: Vec<i64>,
+}
+
+/// Decode a serialized `ModelProto`.
+pub fn parse_model(bytes: &[u8]) -> Result<ModelProto, String> {
+    let mut model = ModelProto::default();
+    let mut r = Reader::new(bytes);
+    let mut saw_graph = false;
+    while !r.at_end() {
+        let (field, wire) = r.key()?;
+        match (field, wire) {
+            (7, 2) => {
+                model.graph = parse_graph(r.len_delim()?)?;
+                saw_graph = true;
+            }
+            _ => r.skip(wire)?,
+        }
+    }
+    if !saw_graph {
+        return Err("model has no graph (not an ONNX ModelProto?)".into());
+    }
+    Ok(model)
+}
+
+fn parse_graph(bytes: &[u8]) -> Result<GraphProto, String> {
+    let mut g = GraphProto::default();
+    let mut r = Reader::new(bytes);
+    while !r.at_end() {
+        let (field, wire) = r.key()?;
+        match (field, wire) {
+            (1, 2) => g.nodes.push(parse_node(r.len_delim()?)?),
+            (2, 2) => g.name = r.string()?,
+            (5, 2) => g.initializers.push(parse_tensor(r.len_delim()?)?),
+            (11, 2) => g.inputs.push(parse_value_info(r.len_delim()?)?),
+            (12, 2) => g.outputs.push(parse_value_info(r.len_delim()?)?),
+            _ => r.skip(wire)?,
+        }
+    }
+    Ok(g)
+}
+
+fn parse_node(bytes: &[u8]) -> Result<NodeProto, String> {
+    let mut n = NodeProto::default();
+    let mut r = Reader::new(bytes);
+    while !r.at_end() {
+        let (field, wire) = r.key()?;
+        match (field, wire) {
+            (1, 2) => n.inputs.push(r.string()?),
+            (2, 2) => n.outputs.push(r.string()?),
+            (3, 2) => n.name = r.string()?,
+            (4, 2) => n.op_type = r.string()?,
+            (5, 2) => n.attrs.push(parse_attr(r.len_delim()?)?),
+            _ => r.skip(wire)?,
+        }
+    }
+    Ok(n)
+}
+
+fn parse_attr(bytes: &[u8]) -> Result<AttributeProto, String> {
+    let mut a = AttributeProto::default();
+    let mut r = Reader::new(bytes);
+    while !r.at_end() {
+        let (field, wire) = r.key()?;
+        match (field, wire) {
+            (1, 2) => a.name = r.string()?,
+            (2, 5) => a.f = r.f32()?,
+            (3, 0) => a.i = r.varint()? as i64,
+            (4, 2) => a.s = r.len_delim()?.to_vec(),
+            (7, 5) => a.floats.push(r.f32()?),
+            (7, 2) => {
+                // Packed repeated float.
+                let mut p = Reader::new(r.len_delim()?);
+                while !p.at_end() {
+                    a.floats.push(p.f32()?);
+                }
+            }
+            (8, 0) => a.ints.push(r.varint()? as i64),
+            (8, 2) => {
+                // Packed repeated int64.
+                let mut p = Reader::new(r.len_delim()?);
+                while !p.at_end() {
+                    a.ints.push(p.varint()? as i64);
+                }
+            }
+            (20, 0) => a.kind = r.varint()? as i64,
+            _ => r.skip(wire)?,
+        }
+    }
+    Ok(a)
+}
+
+fn parse_tensor(bytes: &[u8]) -> Result<TensorProto, String> {
+    let mut t = TensorProto::default();
+    let mut r = Reader::new(bytes);
+    while !r.at_end() {
+        let (field, wire) = r.key()?;
+        match (field, wire) {
+            (1, 0) => t.dims.push(r.varint()? as i64),
+            (1, 2) => {
+                let mut p = Reader::new(r.len_delim()?);
+                while !p.at_end() {
+                    t.dims.push(p.varint()? as i64);
+                }
+            }
+            (2, 0) => t.data_type = r.varint()? as i64,
+            (4, 5) => t.float_data.push(r.f32()?),
+            (4, 2) => {
+                let mut p = Reader::new(r.len_delim()?);
+                while !p.at_end() {
+                    t.float_data.push(p.f32()?);
+                }
+            }
+            (7, 0) => t.int64_data.push(r.varint()? as i64),
+            (7, 2) => {
+                let mut p = Reader::new(r.len_delim()?);
+                while !p.at_end() {
+                    t.int64_data.push(p.varint()? as i64);
+                }
+            }
+            (8, 2) => t.name = r.string()?,
+            (9, 2) => t.raw_data = r.len_delim()?.to_vec(),
+            _ => r.skip(wire)?,
+        }
+    }
+    Ok(t)
+}
+
+fn parse_value_info(bytes: &[u8]) -> Result<ValueInfoProto, String> {
+    let mut v = ValueInfoProto::default();
+    let mut r = Reader::new(bytes);
+    while !r.at_end() {
+        let (field, wire) = r.key()?;
+        match (field, wire) {
+            (1, 2) => v.name = r.string()?,
+            (2, 2) => v.dims = parse_type_dims(r.len_delim()?)?,
+            _ => r.skip(wire)?,
+        }
+    }
+    Ok(v)
+}
+
+/// `TypeProto` → `tensor_type.shape.dim[*].dim_value`, flattened.
+fn parse_type_dims(bytes: &[u8]) -> Result<Vec<i64>, String> {
+    let mut dims = Vec::new();
+    let mut r = Reader::new(bytes);
+    while !r.at_end() {
+        let (field, wire) = r.key()?;
+        match (field, wire) {
+            (1, 2) => {
+                // TypeProto.tensor_type (TensorTypeProto)
+                let mut tt = Reader::new(r.len_delim()?);
+                while !tt.at_end() {
+                    let (f, w) = tt.key()?;
+                    match (f, w) {
+                        (2, 2) => {
+                            // TensorTypeProto.shape (TensorShapeProto)
+                            let mut sh = Reader::new(tt.len_delim()?);
+                            while !sh.at_end() {
+                                let (f, w) = sh.key()?;
+                                match (f, w) {
+                                    (1, 2) => {
+                                        // TensorShapeProto.dim (Dimension)
+                                        let mut d = Reader::new(sh.len_delim()?);
+                                        let mut val = 0i64;
+                                        while !d.at_end() {
+                                            let (f, w) = d.key()?;
+                                            match (f, w) {
+                                                (1, 0) => val = d.varint()? as i64,
+                                                _ => d.skip(w)?,
+                                            }
+                                        }
+                                        dims.push(val);
+                                    }
+                                    _ => sh.skip(w)?,
+                                }
+                            }
+                        }
+                        _ => tt.skip(w)?,
+                    }
+                }
+            }
+            _ => r.skip(wire)?,
+        }
+    }
+    Ok(dims)
+}
+
+/// Bounds-checked protobuf wire reader.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    fn at_end(&self) -> bool {
+        self.pos >= self.buf.len()
+    }
+
+    fn byte(&mut self) -> Result<u8, String> {
+        let b = *self.buf.get(self.pos).ok_or("truncated protobuf")?;
+        self.pos += 1;
+        Ok(b)
+    }
+
+    fn varint(&mut self) -> Result<u64, String> {
+        let mut out = 0u64;
+        for shift in (0..64).step_by(7) {
+            let b = self.byte()?;
+            out |= u64::from(b & 0x7f) << shift;
+            if b & 0x80 == 0 {
+                return Ok(out);
+            }
+        }
+        Err("varint longer than 10 bytes".into())
+    }
+
+    /// Field key: `(field_number, wire_type)`.
+    fn key(&mut self) -> Result<(u64, u8), String> {
+        let k = self.varint()?;
+        Ok((k >> 3, (k & 7) as u8))
+    }
+
+    fn len_delim(&mut self) -> Result<&'a [u8], String> {
+        let len = self.varint()? as usize;
+        let end = self.pos.checked_add(len).ok_or("length overflow")?;
+        if end > self.buf.len() {
+            return Err("truncated length-delimited field".into());
+        }
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        String::from_utf8(self.len_delim()?.to_vec()).map_err(|_| "non-UTF-8 string".into())
+    }
+
+    fn f32(&mut self) -> Result<f32, String> {
+        let end = self.pos.checked_add(4).ok_or("length overflow")?;
+        if end > self.buf.len() {
+            return Err("truncated fixed32".into());
+        }
+        let v = f32::from_le_bytes(self.buf[self.pos..end].try_into().expect("4 bytes"));
+        self.pos = end;
+        Ok(v)
+    }
+
+    /// Skip one field's payload by wire type (unknown-field tolerance).
+    fn skip(&mut self, wire: u8) -> Result<(), String> {
+        match wire {
+            0 => {
+                self.varint()?;
+            }
+            1 => {
+                let end = self.pos.checked_add(8).ok_or("length overflow")?;
+                if end > self.buf.len() {
+                    return Err("truncated fixed64".into());
+                }
+                self.pos = end;
+            }
+            2 => {
+                self.len_delim()?;
+            }
+            5 => {
+                let end = self.pos.checked_add(4).ok_or("length overflow")?;
+                if end > self.buf.len() {
+                    return Err("truncated fixed32".into());
+                }
+                self.pos = end;
+            }
+            w => return Err(format!("unsupported wire type {w}")),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-encode a tiny model and read it back — the writer here mirrors
+    /// the fixture generator in `python/tests/gen_onnx_fixtures.py`.
+    fn varint(mut v: u64, out: &mut Vec<u8>) {
+        loop {
+            let b = (v & 0x7f) as u8;
+            v >>= 7;
+            if v == 0 {
+                out.push(b);
+                break;
+            }
+            out.push(b | 0x80);
+        }
+    }
+
+    fn key(field: u64, wire: u64, out: &mut Vec<u8>) {
+        varint(field << 3 | wire, out);
+    }
+
+    fn ld(field: u64, payload: &[u8], out: &mut Vec<u8>) {
+        key(field, 2, out);
+        varint(payload.len() as u64, out);
+        out.extend_from_slice(payload);
+    }
+
+    fn test_model_bytes() -> Vec<u8> {
+        // NodeProto: Relu(x) -> y, named "act"
+        let mut node = Vec::new();
+        ld(1, b"x", &mut node);
+        ld(2, b"y", &mut node);
+        ld(3, b"act", &mut node);
+        ld(4, b"Relu", &mut node);
+        // AttributeProto: axis = -1 (INT) — exercises negative varint
+        let mut attr = Vec::new();
+        ld(1, b"axis", &mut attr);
+        key(3, 0, &mut attr);
+        varint((-1i64) as u64, &mut attr);
+        key(20, 0, &mut attr);
+        varint(2, &mut attr);
+        ld(5, &attr, &mut node);
+        // TensorProto initializer: w = [2] float32 {1.5, -0.25}, raw_data
+        let mut tensor = Vec::new();
+        key(1, 0, &mut tensor);
+        varint(2, &mut tensor);
+        key(2, 0, &mut tensor);
+        varint(DT_FLOAT as u64, &mut tensor);
+        ld(8, b"w", &mut tensor);
+        let mut raw = Vec::new();
+        raw.extend_from_slice(&1.5f32.to_le_bytes());
+        raw.extend_from_slice(&(-0.25f32).to_le_bytes());
+        ld(9, &raw, &mut tensor);
+        // ValueInfoProto: x : float32[4, 8]
+        let mut dim4 = Vec::new();
+        key(1, 0, &mut dim4);
+        varint(4, &mut dim4);
+        let mut dim8 = Vec::new();
+        key(1, 0, &mut dim8);
+        varint(8, &mut dim8);
+        let mut shape = Vec::new();
+        ld(1, &dim4, &mut shape);
+        ld(1, &dim8, &mut shape);
+        let mut tt = Vec::new();
+        key(1, 0, &mut tt);
+        varint(DT_FLOAT as u64, &mut tt);
+        ld(2, &shape, &mut tt);
+        let mut ty = Vec::new();
+        ld(1, &tt, &mut ty);
+        let mut vi = Vec::new();
+        ld(1, b"x", &mut vi);
+        ld(2, &ty, &mut vi);
+        // GraphProto
+        let mut graph = Vec::new();
+        ld(1, &node, &mut graph);
+        ld(2, b"tiny", &mut graph);
+        ld(5, &tensor, &mut graph);
+        ld(11, &vi, &mut graph);
+        ld(12, &vi, &mut graph);
+        // ModelProto (with an unknown field 1 = ir_version to skip)
+        let mut model = Vec::new();
+        key(1, 0, &mut model);
+        varint(8, &mut model);
+        ld(7, &graph, &mut model);
+        model
+    }
+
+    #[test]
+    fn roundtrips_a_hand_encoded_model() {
+        let m = parse_model(&test_model_bytes()).expect("parses");
+        assert_eq!(m.graph.name, "tiny");
+        assert_eq!(m.graph.nodes.len(), 1);
+        let n = &m.graph.nodes[0];
+        assert_eq!(n.op_type, "Relu");
+        assert_eq!(n.name, "act");
+        assert_eq!(n.inputs, ["x"]);
+        assert_eq!(n.outputs, ["y"]);
+        assert_eq!(n.attr_i("axis", 0), -1);
+        assert_eq!(m.graph.initializers.len(), 1);
+        let t = &m.graph.initializers[0];
+        assert_eq!(t.name, "w");
+        assert_eq!(t.shape().unwrap(), [2]);
+        assert_eq!(t.f32_values().unwrap(), [1.5, -0.25]);
+        assert_eq!(m.graph.inputs[0].name, "x");
+        assert_eq!(m.graph.inputs[0].dims, [4, 8]);
+    }
+
+    #[test]
+    fn malformed_bytes_error_instead_of_panicking() {
+        assert!(parse_model(&[]).is_err(), "no graph");
+        assert!(parse_model(&[0xff; 16]).is_err(), "garbage");
+        let good = test_model_bytes();
+        for cut in [1, 5, good.len() / 2, good.len() - 1] {
+            // Truncations either fail or drop the graph — never panic.
+            let _ = parse_model(&good[..cut]);
+        }
+    }
+}

@@ -26,7 +26,7 @@ pub mod shape;
 pub mod spec;
 pub mod symbol;
 
-pub use op::{BufKind, Op, OpKind};
+pub use op::{BufKind, ConstData, Op, OpKind};
 pub use spec::{OpClass, OpSpec};
 pub use parse::parse_expr;
 pub use recexpr::{Node, RecExpr};

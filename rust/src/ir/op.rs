@@ -22,6 +22,72 @@
 use super::shape::Shape;
 use super::symbol::Symbol;
 use std::fmt;
+use std::sync::Arc;
+
+/// Inline constant tensor data: a static shape plus its `f32` values,
+/// stored as raw bit patterns (`u32`) so the payload is `Eq`/`Hash`-exact
+/// (e-graph hashconsing interns identical constants structurally, like
+/// engine declarations). The content hash is precomputed once at
+/// construction — e-nodes carrying megabyte weights hash in O(1).
+#[derive(Clone)]
+pub struct ConstData {
+    shape: Shape,
+    bits: Arc<Vec<u32>>,
+    hash: u64,
+}
+
+impl ConstData {
+    pub fn new(shape: Shape, values: &[f32]) -> Self {
+        assert_eq!(shape.numel(), values.len(), "const shape/data mismatch");
+        let bits: Vec<u32> = values.iter().map(|v| v.to_bits()).collect();
+        use std::hash::{Hash, Hasher};
+        let mut h = crate::fx::FxHasher::default();
+        shape.hash(&mut h);
+        bits.hash(&mut h);
+        ConstData { shape, bits: Arc::new(bits), hash: h.finish() }
+    }
+
+    pub fn shape(&self) -> &Shape {
+        &self.shape
+    }
+
+    /// The stored values, decoded back to `f32`.
+    pub fn values(&self) -> Vec<f32> {
+        self.bits.iter().map(|&b| f32::from_bits(b)).collect()
+    }
+
+    /// Raw bit patterns (exact-roundtrip persistence uses these).
+    pub fn bits(&self) -> &[u32] {
+        &self.bits
+    }
+
+    /// The precomputed content hash.
+    pub fn content_hash(&self) -> u64 {
+        self.hash
+    }
+}
+
+impl PartialEq for ConstData {
+    fn eq(&self, other: &Self) -> bool {
+        self.hash == other.hash && self.shape == other.shape && self.bits == other.bits
+    }
+}
+
+impl Eq for ConstData {}
+
+impl std::hash::Hash for ConstData {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        state.write_u64(self.hash);
+    }
+}
+
+impl fmt::Debug for ConstData {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Content hash, not values: Debug feeds e-graph dumps and structural
+        // fingerprints, where a megabyte literal would be noise.
+        write!(f, "ConstData{}#{:016x}", self.shape, self.hash)
+    }
+}
 
 /// Storage kind for explicit buffer materialization points.
 #[derive(Copy, Clone, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
@@ -69,8 +135,12 @@ pub enum Op {
     // Relay-level operators (pre-reification; N=1 inference, CHW layout)
     // ------------------------------------------------------------------
     /// 2-D convolution; children `[x:(C,H,W), w:(K,C,KH,KW)]` (KH and KW
-    /// may differ — kernels are rectangular).
-    Conv2d { stride: usize, pad: usize },
+    /// may differ — kernels are rectangular). `pad_h`/`pad_w` are the
+    /// **total** zero padding added to H and W respectively, split
+    /// `floor(p/2)` before / `ceil(p/2)` after (ONNX `SAME_UPPER`), so odd
+    /// totals — e.g. SAME padding for a stride-2 3×3 kernel — are exact.
+    /// The old symmetric `pad: p` is `pad_h = pad_w = 2p`.
+    Conv2d { stride: usize, pad_h: usize, pad_w: usize },
     /// Dense / fully-connected; children `[x:(M,K), w:(K,N)]`.
     Dense,
     /// Elementwise ReLU; children `[x]` (any shape).
@@ -105,8 +175,12 @@ pub enum Op {
     /// Elementwise GELU (tanh approximation); children `[x]` (any shape).
     Gelu,
     /// Depthwise 2-D convolution (channel multiplier 1); children
-    /// `[x:(C,H,W), w:(C,KH,KW)]`.
-    DepthwiseConv2d { stride: usize, pad: usize },
+    /// `[x:(C,H,W), w:(C,KH,KW)]`. Padding semantics as [`Op::Conv2d`]:
+    /// total per dimension, SAME_UPPER split.
+    DepthwiseConv2d { stride: usize, pad_h: usize, pad_w: usize },
+    /// Inline constant tensor (imported model weights, attention scale
+    /// vectors): a leaf carrying its data, content-hashed for interning.
+    Constant(ConstData),
 
     // ------------------------------------------------------------------
     // Hardware engine declarations (leaves; paper Fig. 1)
@@ -190,8 +264,10 @@ pub enum Op {
     /// Broadcast a 1-D tensor to `shape` along dim 0 (rank-3 result) or
     /// dim 1 (rank-2 result); children `[b]`.
     Bcast(Shape),
-    /// Zero-pad H and W of a `(C,H,W)` tensor; children `[x]`.
-    Pad2d { pad: usize },
+    /// Zero-pad H and W of a `(C,H,W)` tensor; children `[x]`. `pad_h` /
+    /// `pad_w` are **total** padding per dimension, split `floor(p/2)`
+    /// before / `ceil(p/2)` after (SAME_UPPER — see [`Op::Conv2d`]).
+    Pad2d { pad_h: usize, pad_w: usize },
     /// im2col: `(c,ih,iw) -> (c*kh*kw, oh*ow)` patch matrix; children `[x]`.
     Im2Col { kh: usize, kw: usize, stride: usize },
     /// Transpose of the trailing two axes: `(m,n) -> (n,m)` for rank 2,
@@ -268,6 +344,7 @@ pub enum OpKind {
     Emul,
     EmulEngine,
     InvokeEmul,
+    Constant,
 }
 
 impl OpKind {
@@ -329,6 +406,7 @@ impl OpKind {
         OpKind::Emul,
         OpKind::EmulEngine,
         OpKind::InvokeEmul,
+        OpKind::Constant,
     ];
 
     /// This kind's registry entry.
@@ -347,6 +425,7 @@ impl Op {
             Op::IAdd => OpKind::IAdd,
             Op::Input(..) => OpKind::Input,
             Op::Weight(..) => OpKind::Weight,
+            Op::Constant(_) => OpKind::Constant,
             Op::Conv2d { .. } => OpKind::Conv2d,
             Op::Dense => OpKind::Dense,
             Op::Relu => OpKind::Relu,
@@ -447,7 +526,7 @@ impl Op {
 impl fmt::Display for Op {
     /// Human-readable head form, derived from the registry: leaves print
     /// their full s-expression (`(mm-engine 16 16 16)`), non-leaf ops print
-    /// `head[labeled,attrs]` (`conv2d[s1,p1]`, `sched-loop[i0,a0,x2]`).
+    /// `head[labeled,attrs]` (`conv2d[s1,ph2,pw2]`, `sched-loop[i0,a0,x2]`).
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         if let Op::Int(v) = self {
             return write!(f, "{v}");
@@ -534,7 +613,14 @@ mod tests {
 
     #[test]
     fn display_head_forms() {
-        assert_eq!(Op::Conv2d { stride: 1, pad: 1 }.to_string(), "conv2d[s1,p1]");
+        assert_eq!(
+            Op::Conv2d { stride: 1, pad_h: 2, pad_w: 2 }.to_string(),
+            "conv2d[s1,ph2,pw2]"
+        );
+        assert_eq!(
+            Op::DepthwiseConv2d { stride: 2, pad_h: 1, pad_w: 1 }.to_string(),
+            "dwconv2d[s2,ph1,pw1]"
+        );
         assert_eq!(
             Op::SchedLoop { var: Symbol::new("i0"), axis: 0, extent: 2 }.to_string(),
             "sched-loop[i0,a0,x2]"
@@ -545,6 +631,28 @@ mod tests {
         assert_eq!(Op::MmEngine { m: 4, k: 8, n: 2 }.to_string(), "(mm-engine 4 8 2)");
         assert_eq!(Op::Int(7).to_string(), "7");
         assert_eq!(Op::Dense.to_string(), "dense");
+    }
+
+    #[test]
+    fn constants_intern_by_content() {
+        use std::collections::HashSet;
+        let c = |vals: &[f32]| Op::Constant(ConstData::new(Shape::new(&[vals.len()]), vals));
+        let mut s = HashSet::new();
+        s.insert(c(&[1.0, 2.0]));
+        // Same shape + same bits -> same e-node -> hashcons sharing.
+        assert!(s.contains(&c(&[1.0, 2.0])));
+        assert!(!s.contains(&c(&[1.0, 2.5])));
+        // -0.0 and 0.0 differ bitwise: constants are bit-exact, not
+        // numerically fuzzy (float Eq through bit patterns is total).
+        assert_ne!(
+            ConstData::new(Shape::new(&[1]), &[0.0]),
+            ConstData::new(Shape::new(&[1]), &[-0.0])
+        );
+        let a = ConstData::new(Shape::new(&[2]), &[3.0, -0.5]);
+        let b = ConstData::new(Shape::new(&[2]), &[3.0, -0.5]);
+        assert_eq!(a.content_hash(), b.content_hash());
+        assert_eq!(a.values(), vec![3.0, -0.5]);
+        assert!(Op::Constant(a).arity() == Some(0));
     }
 
     #[test]

@@ -4,8 +4,9 @@
 //!
 //! ```text
 //! expr   := INT | (HEAD attr* expr*)
-//! attr   := INT | SYM | shape | 'sram' | 'dram'
+//! attr   := INT | SYM | shape | floats | 'sram' | 'dram'
 //! shape  := '[' INT* ']'
+//! floats := '[' FLOAT* ']'
 //! ```
 //!
 //! The parser is fully registry-driven: the head symbol selects an
@@ -139,6 +140,27 @@ impl<'a> Parser<'a> {
         }
     }
 
+    fn f32_list(&mut self) -> Result<Vec<f32>> {
+        self.expect(Tok::LBrack)?;
+        let mut vals = Vec::new();
+        loop {
+            match self.peek() {
+                Some(Tok::RBrack) => {
+                    self.pos += 1;
+                    return Ok(vals);
+                }
+                Some(Tok::Atom(_)) => {
+                    let a = self.atom()?;
+                    vals.push(
+                        a.parse()
+                            .map_err(|_| ParseError(format!("expected float, got '{a}'")))?,
+                    );
+                }
+                t => return Err(ParseError(format!("bad float-list token {t:?}"))),
+            }
+        }
+    }
+
     fn bufkind(&mut self) -> Result<BufKind> {
         match self.atom()?.as_str() {
             "sram" => Ok(BufKind::Sram),
@@ -181,6 +203,7 @@ impl<'a> Parser<'a> {
                 AttrKind::Sym => AttrVal::Sym(self.sym_atom()?),
                 AttrKind::Sh => AttrVal::Sh(self.shape()?),
                 AttrKind::Buf => AttrVal::Buf(self.bufkind()?),
+                AttrKind::F32s => AttrVal::F32s(self.f32_list()?),
             });
         }
         let op = (spec.from_attrs)(&attrs)
@@ -220,10 +243,10 @@ mod tests {
         "(sched-loop i0 0 2 (invoke-relu (relu-engine 64) (slice 0 64 (imul (lvar i0) 64) (input x [128]))))",
         "(sched-par p1 0 2 (invoke-relu (relu-engine 64) (slice 0 64 (imul (lvar p1) 64) (input x [128]))))",
         "(invoke-mm (mm-engine 16 16 16) (input a [16 16]) (weight w [16 16]))",
-        "(dense (flatten (maxpool2d 2 2 2 (relu (conv2d 1 1 (input img [3 32 32]) (weight k1 [8 3 3 3]))))) (weight w2 [2048 10]))",
+        "(dense (flatten (maxpool2d 2 2 2 (relu (conv2d 1 2 2 (input img [3 32 32]) (weight k1 [8 3 3 3]))))) (weight w2 [2048 10]))",
         "(maxpool2d 2 4 2 (input img [3 8 8]))",
         "(invoke-pool (pool-engine 2 2 3 2 4 2) (input x [3 4 6]))",
-        "(invoke-conv (conv-engine 2 4 3 8 3 3 1) (slice 1 4 (imul (lvar i) 2) (pad2d 1 (input img [3 8 8]))) (weight k [8 3 3 3]))",
+        "(invoke-conv (conv-engine 2 4 3 8 3 3 1) (slice 1 4 (imul (lvar i) 2) (pad2d 2 2 (input img [3 8 8]))) (weight k [8 3 3 3]))",
         "(sched-reduce r0 2 (invoke-mm (mm-engine 4 8 4) (slice 1 8 (imul (lvar r0) 8) (input a [4 16])) (slice 0 8 (imul (lvar r0) 8) (weight b [16 4]))))",
         "(buffer sram (reshape [1 16] (invoke-relu (relu-engine 16) (reshape [16] (input x [4 4])))))",
         "(eadd (bcast [8] (weight b [8])) (gap (input t [8 5 5])))",
@@ -232,9 +255,10 @@ mod tests {
         "(emul (input x [8]) (input y [8]))",
         "(invoke-emul (emul-engine 8) (input x [8]) (input y [8]))",
         "(transpose (input p [2 4 8]))",
-        "(dwconv2d 1 1 (input img [8 14 14]) (weight dw [8 3 3]))",
+        "(dwconv2d 1 2 2 (input img [8 14 14]) (weight dw [8 3 3]))",
         "(invoke-dw-conv (dw-conv-engine 4 4 8 3 3 1) (input x [8 6 6]) (weight w [8 3 3]))",
         "(batch-matmul (input a [2 4 8]) (input b [2 8 4]))",
+        "(emul (input x [2 2]) (const [2 2] [1.5 -0.25 0.0 3.5]))",
     ];
 
     #[test]
@@ -272,7 +296,7 @@ mod tests {
     #[test]
     fn typechecks_attention_core() {
         // softmax(q @ k^T) @ v — the single-head attention core.
-        let e = parse_expr(CASES[9]).unwrap();
+        let e = parse_expr(CASES[11]).unwrap();
         let ty = e.typecheck().unwrap();
         assert_eq!(ty, crate::ir::Ty::Tensor(crate::ir::Shape::new(&[4, 8])));
     }

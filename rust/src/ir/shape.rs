@@ -208,7 +208,7 @@ mod tests {
     #[test]
     fn conv2d_shape() {
         let ty = infer(
-            &Op::Conv2d { stride: 1, pad: 1 },
+            &Op::Conv2d { stride: 1, pad_h: 2, pad_w: 2 },
             &[t(&[3, 32, 32]), t(&[8, 3, 3, 3])],
         )
         .unwrap();
@@ -218,7 +218,7 @@ mod tests {
     #[test]
     fn conv2d_stride2() {
         let ty = infer(
-            &Op::Conv2d { stride: 2, pad: 0 },
+            &Op::Conv2d { stride: 2, pad_h: 0, pad_w: 0 },
             &[t(&[3, 33, 33]), t(&[8, 3, 3, 3])],
         )
         .unwrap();
@@ -228,7 +228,7 @@ mod tests {
     #[test]
     fn conv2d_rejects_channel_mismatch() {
         assert!(infer(
-            &Op::Conv2d { stride: 1, pad: 0 },
+            &Op::Conv2d { stride: 1, pad_h: 0, pad_w: 0 },
             &[t(&[4, 8, 8]), t(&[8, 3, 3, 3])]
         )
         .is_err());
@@ -238,7 +238,7 @@ mod tests {
     fn conv2d_accepts_rectangular_kernels() {
         // 1x7 kernel: H unchanged by kh=1, W shrinks by kw=7.
         let ty = infer(
-            &Op::Conv2d { stride: 1, pad: 0 },
+            &Op::Conv2d { stride: 1, pad_h: 0, pad_w: 0 },
             &[t(&[3, 16, 16]), t(&[8, 3, 1, 7])],
         )
         .unwrap();
@@ -307,14 +307,14 @@ mod tests {
     #[test]
     fn depthwise_conv_shape() {
         let ty = infer(
-            &Op::DepthwiseConv2d { stride: 1, pad: 1 },
+            &Op::DepthwiseConv2d { stride: 1, pad_h: 2, pad_w: 2 },
             &[t(&[16, 14, 14]), t(&[16, 3, 3])],
         )
         .unwrap();
         assert_eq!(ty, t(&[16, 14, 14]));
         // channel mismatch rejected
         assert!(infer(
-            &Op::DepthwiseConv2d { stride: 1, pad: 0 },
+            &Op::DepthwiseConv2d { stride: 1, pad_h: 0, pad_w: 0 },
             &[t(&[16, 14, 14]), t(&[8, 3, 3])]
         )
         .is_err());

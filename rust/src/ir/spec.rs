@@ -15,7 +15,7 @@
 //! type: `tests/registry.rs` parses, prints, type-checks, evaluates, lowers
 //! and costs every exemplar, so an op cannot land half-wired.
 
-use super::op::{BufKind, Op, OpKind};
+use super::op::{BufKind, ConstData, Op, OpKind};
 use super::shape::{engine, in_dim, index, out_dim, shape_err, tensor, EngineSig};
 use super::shape::{Shape, Ty, TypeError};
 use super::symbol::Symbol;
@@ -64,6 +64,9 @@ pub enum AttrKind {
     Sh,
     /// Buffer kind (`sram` / `dram`).
     Buf,
+    /// Inline f32 tensor data (`[1.5 -0.25 ...]`), printed with Rust's
+    /// shortest-round-trip float formatting so parse ∘ print is bit-exact.
+    F32s,
 }
 
 /// A concrete attribute value (printer output / parser input).
@@ -74,6 +77,7 @@ pub enum AttrVal {
     Sym(Symbol),
     Sh(Shape),
     Buf(BufKind),
+    F32s(Vec<f32>),
 }
 
 /// Join a shape's dims with `sep` (shared by the attr renderings).
@@ -118,6 +122,13 @@ impl AttrVal {
         }
     }
 
+    pub fn f32s(&self) -> Option<&[f32]> {
+        match self {
+            AttrVal::F32s(v) => Some(v),
+            _ => None,
+        }
+    }
+
     /// Compact rendering for `Op`'s bracketed `Display` head form
     /// (`reshape[2,2]`): like [`Self::sexpr`] but shapes drop their own
     /// brackets, since the head form supplies the enclosing pair.
@@ -136,6 +147,12 @@ impl AttrVal {
             AttrVal::Sym(s) => s.to_string(),
             AttrVal::Sh(s) => format!("[{}]", dims(s, " ")),
             AttrVal::Buf(b) => b.as_str().to_string(),
+            // `{:?}` is Rust's shortest round-trip float form, so
+            // parse(print(x)) reproduces the exact bits.
+            AttrVal::F32s(v) => {
+                let parts: Vec<String> = v.iter().map(|x| format!("{x:?}")).collect();
+                format!("[{}]", parts.join(" "))
+            }
         }
     }
 }
@@ -241,8 +258,8 @@ fn sh_leaf(op: &Op, _tys: &[&Ty]) -> Result<Ty, TypeError> {
 }
 
 fn sh_conv2d(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
-    let (stride, pad) = match op {
-        Op::Conv2d { stride, pad } => (*stride, *pad),
+    let (stride, pad_h, pad_w) = match op {
+        Op::Conv2d { stride, pad_h, pad_w } => (*stride, *pad_h, *pad_w),
         _ => unreachable!(),
     };
     let x = tensor(op, 0, tys)?;
@@ -255,9 +272,16 @@ fn sh_conv2d(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
     if cin != c {
         return Err(shape_err(op, format!("channel mismatch: x{x} w{w}")));
     }
-    let oh = out_dim(h + 2 * pad, kh, stride).ok_or_else(|| shape_err(op, "H does not tile"))?;
-    let ow = out_dim(wd + 2 * pad, kw, stride).ok_or_else(|| shape_err(op, "W does not tile"))?;
+    let oh = out_dim(h + pad_h, kh, stride).ok_or_else(|| shape_err(op, "H does not tile"))?;
+    let ow = out_dim(wd + pad_w, kw, stride).ok_or_else(|| shape_err(op, "W does not tile"))?;
     Ok(Ty::Tensor(Shape::new(&[kout, oh, ow])))
+}
+
+fn sh_const(op: &Op, _tys: &[&Ty]) -> Result<Ty, TypeError> {
+    match op {
+        Op::Constant(c) => Ok(Ty::Tensor(c.shape().clone())),
+        _ => unreachable!("sh_const on {op}"),
+    }
 }
 
 fn sh_dense(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
@@ -373,8 +397,8 @@ fn sh_layernorm(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
 }
 
 fn sh_dwconv2d(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
-    let (stride, pad) = match op {
-        Op::DepthwiseConv2d { stride, pad } => (*stride, *pad),
+    let (stride, pad_h, pad_w) = match op {
+        Op::DepthwiseConv2d { stride, pad_h, pad_w } => (*stride, *pad_h, *pad_w),
         _ => unreachable!(),
     };
     let x = tensor(op, 0, tys)?;
@@ -385,9 +409,9 @@ fn sh_dwconv2d(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
     if w.dim(0) != x.dim(0) {
         return Err(shape_err(op, format!("channel mismatch: x{x} w{w}")));
     }
-    let oh = out_dim(x.dim(1) + 2 * pad, w.dim(1), stride)
+    let oh = out_dim(x.dim(1) + pad_h, w.dim(1), stride)
         .ok_or_else(|| shape_err(op, "H does not tile"))?;
-    let ow = out_dim(x.dim(2) + 2 * pad, w.dim(2), stride)
+    let ow = out_dim(x.dim(2) + pad_w, w.dim(2), stride)
         .ok_or_else(|| shape_err(op, "W does not tile"))?;
     Ok(Ty::Tensor(Shape::new(&[x.dim(0), oh, ow])))
 }
@@ -559,15 +583,15 @@ fn sh_bcast(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
 }
 
 fn sh_pad2d(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
-    let pad = match op {
-        Op::Pad2d { pad } => *pad,
+    let (pad_h, pad_w) = match op {
+        Op::Pad2d { pad_h, pad_w } => (*pad_h, *pad_w),
         _ => unreachable!(),
     };
     let x = tensor(op, 0, tys)?;
     if x.rank() != 3 {
         return Err(shape_err(op, format!("pad2d on {x}")));
     }
-    Ok(Ty::Tensor(Shape::new(&[x.dim(0), x.dim(1) + 2 * pad, x.dim(2) + 2 * pad])))
+    Ok(Ty::Tensor(Shape::new(&[x.dim(0), x.dim(1) + pad_h, x.dim(2) + pad_w])))
 }
 
 fn sh_im2col(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
@@ -589,11 +613,15 @@ fn sh_im2col(op: &Op, tys: &[&Ty]) -> Result<Ty, TypeError> {
 // ---------------------------------------------------------------------
 
 fn ev_conv2d(op: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
-    let (stride, pad) = match *op {
-        Op::Conv2d { stride, pad } => (stride, pad),
+    let (stride, pad_h, pad_w) = match *op {
+        Op::Conv2d { stride, pad_h, pad_w } => (stride, pad_h, pad_w),
         _ => unreachable!(),
     };
-    let x = if pad > 0 { args[0].pad2d(pad) } else { args[0].clone() };
+    let x = if pad_h > 0 || pad_w > 0 {
+        args[0].pad2d(pad_h, pad_w)
+    } else {
+        args[0].clone()
+    };
     Ok(x.conv2d(&args[1], stride))
 }
 
@@ -655,11 +683,15 @@ fn ev_gelu(_op: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
 }
 
 fn ev_dwconv(op: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
-    let (stride, pad) = match *op {
-        Op::DepthwiseConv2d { stride, pad } => (stride, pad),
+    let (stride, pad_h, pad_w) = match *op {
+        Op::DepthwiseConv2d { stride, pad_h, pad_w } => (stride, pad_h, pad_w),
         _ => unreachable!(),
     };
-    let x = if pad > 0 { args[0].pad2d(pad) } else { args[0].clone() };
+    let x = if pad_h > 0 || pad_w > 0 {
+        args[0].pad2d(pad_h, pad_w)
+    } else {
+        args[0].clone()
+    };
     Ok(x.depthwise_conv2d(&args[1], stride))
 }
 
@@ -680,11 +712,11 @@ fn ev_bcast(op: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
 }
 
 fn ev_pad2d(op: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
-    let pad = match *op {
-        Op::Pad2d { pad } => pad,
+    let (pad_h, pad_w) = match *op {
+        Op::Pad2d { pad_h, pad_w } => (pad_h, pad_w),
         _ => unreachable!(),
     };
-    Ok(args[0].pad2d(pad))
+    Ok(args[0].pad2d(pad_h, pad_w))
 }
 
 fn ev_im2col(op: &Op, args: &[Tensor]) -> Result<Tensor, EvalError> {
@@ -831,8 +863,8 @@ fn lo_bias_add(cx: &mut LowerCtx) -> Result<Id, Error> {
 }
 
 fn lo_conv2d(cx: &mut LowerCtx) -> Result<Id, Error> {
-    let (stride, pad) = match *cx.op() {
-        Op::Conv2d { stride, pad } => (stride, pad),
+    let (stride, pad_h, pad_w) = match *cx.op() {
+        Op::Conv2d { stride, pad_h, pad_w } => (stride, pad_h, pad_w),
         _ => unreachable!(),
     };
     let x = cx.child_shape(0)?;
@@ -840,11 +872,16 @@ fn lo_conv2d(cx: &mut LowerCtx) -> Result<Id, Error> {
     let o = cx.out_shape()?;
     let (c, k, kh, kw) = (x.dim(0), w.dim(0), w.dim(2), w.dim(3));
     let (oh, ow) = (o.dim(1), o.dim(2));
-    debug_assert_eq!(in_dim(oh, kh, stride), x.dim(1) + 2 * pad);
+    debug_assert_eq!(in_dim(oh, kh, stride), x.dim(1) + pad_h);
+    debug_assert_eq!(in_dim(ow, kw, stride), x.dim(2) + pad_w);
     let x0 = cx.kid(0);
     let w0 = cx.kid(1);
     let e = cx.add_leaf(Op::ConvEngine { oh, ow, c, k, kh, kw, stride });
-    let xin = if pad > 0 { cx.add(Op::Pad2d { pad }, &[x0]) } else { x0 };
+    let xin = if pad_h > 0 || pad_w > 0 {
+        cx.add(Op::Pad2d { pad_h, pad_w }, &[x0])
+    } else {
+        x0
+    };
     let inv = cx.add(Op::InvokeConv, &[e, xin, w0]);
     Ok(cx.buffered(inv))
 }
@@ -968,8 +1005,8 @@ fn lo_bmm(cx: &mut LowerCtx) -> Result<Id, Error> {
 }
 
 fn lo_dwconv(cx: &mut LowerCtx) -> Result<Id, Error> {
-    let (stride, pad) = match *cx.op() {
-        Op::DepthwiseConv2d { stride, pad } => (stride, pad),
+    let (stride, pad_h, pad_w) = match *cx.op() {
+        Op::DepthwiseConv2d { stride, pad_h, pad_w } => (stride, pad_h, pad_w),
         _ => unreachable!(),
     };
     let x = cx.child_shape(0)?;
@@ -985,7 +1022,11 @@ fn lo_dwconv(cx: &mut LowerCtx) -> Result<Id, Error> {
         kw: w.dim(2),
         stride,
     });
-    let xin = if pad > 0 { cx.add(Op::Pad2d { pad }, &[x0]) } else { x0 };
+    let xin = if pad_h > 0 || pad_w > 0 {
+        cx.add(Op::Pad2d { pad_h, pad_w }, &[x0])
+    } else {
+        x0
+    };
     let inv = cx.add(Op::InvokeDwConv, &[e, xin, w0]);
     Ok(cx.buffered(inv))
 }
@@ -1372,16 +1413,20 @@ fn build_specs() -> Vec<OpSpec> {
         },
         // ---- Relay-level compute -----------------------------------------
         OpSpec {
-            attrs: &[("s", A::U), ("p", A::U)],
+            attrs: &[("s", A::U), ("ph", A::U), ("pw", A::U)],
             attrs_of: |op| match op {
-                Op::Conv2d { stride, pad } => vec![AttrVal::U(*stride), AttrVal::U(*pad)],
+                Op::Conv2d { stride, pad_h, pad_w } => {
+                    vec![AttrVal::U(*stride), AttrVal::U(*pad_h), AttrVal::U(*pad_w)]
+                }
                 _ => unreachable!(),
             },
-            from_attrs: |a| Some(Op::Conv2d { stride: a[0].u()?, pad: a[1].u()? }),
+            from_attrs: |a| {
+                Some(Op::Conv2d { stride: a[0].u()?, pad_h: a[1].u()?, pad_w: a[2].u()? })
+            },
             eval: Some(ev_conv2d),
             lower: Some(lo_conv2d),
             host_work: Some(hw_conv),
-            exemplar: "(conv2d 1 0 (input x [3 8 8]) (weight w [4 3 3 3]))",
+            exemplar: "(conv2d 1 0 0 (input x [3 8 8]) (weight w [4 3 3 3]))",
             exemplar_ty: X::Tensor(&[4, 6, 6]),
             ..base(OpKind::Conv2d, "conv2d", 2, C::Relay, sh_conv2d)
         },
@@ -1704,15 +1749,15 @@ fn build_specs() -> Vec<OpSpec> {
             ..base(OpKind::Bcast, "bcast", 1, C::Data, sh_bcast)
         },
         OpSpec {
-            attrs: &[("", A::U)],
+            attrs: &[("ph", A::U), ("pw", A::U)],
             attrs_of: |op| match op {
-                Op::Pad2d { pad } => vec![AttrVal::U(*pad)],
+                Op::Pad2d { pad_h, pad_w } => vec![AttrVal::U(*pad_h), AttrVal::U(*pad_w)],
                 _ => unreachable!(),
             },
-            from_attrs: |a| Some(Op::Pad2d { pad: a[0].u()? }),
+            from_attrs: |a| Some(Op::Pad2d { pad_h: a[0].u()?, pad_w: a[1].u()? }),
             eval: Some(ev_pad2d),
             data_traffic: true,
-            exemplar: "(pad2d 1 (input x [1 2 2]))",
+            exemplar: "(pad2d 2 2 (input x [1 2 2]))",
             exemplar_ty: X::Tensor(&[1, 4, 4]),
             ..base(OpKind::Pad2d, "pad2d", 1, C::Data, sh_pad2d)
         },
@@ -1809,18 +1854,24 @@ fn build_specs() -> Vec<OpSpec> {
             ..base(OpKind::Gelu, "gelu", 1, C::Relay, sh_same)
         },
         OpSpec {
-            attrs: &[("s", A::U), ("p", A::U)],
+            attrs: &[("s", A::U), ("ph", A::U), ("pw", A::U)],
             attrs_of: |op| match op {
-                Op::DepthwiseConv2d { stride, pad } => {
-                    vec![AttrVal::U(*stride), AttrVal::U(*pad)]
+                Op::DepthwiseConv2d { stride, pad_h, pad_w } => {
+                    vec![AttrVal::U(*stride), AttrVal::U(*pad_h), AttrVal::U(*pad_w)]
                 }
                 _ => unreachable!(),
             },
-            from_attrs: |a| Some(Op::DepthwiseConv2d { stride: a[0].u()?, pad: a[1].u()? }),
+            from_attrs: |a| {
+                Some(Op::DepthwiseConv2d {
+                    stride: a[0].u()?,
+                    pad_h: a[1].u()?,
+                    pad_w: a[2].u()?,
+                })
+            },
             eval: Some(ev_dwconv),
             lower: Some(lo_dwconv),
             host_work: Some(hw_dwconv),
-            exemplar: "(dwconv2d 1 1 (input x [3 8 8]) (weight w [3 3 3]))",
+            exemplar: "(dwconv2d 1 2 2 (input x [3 8 8]) (weight w [3 3 3]))",
             exemplar_ty: X::Tensor(&[3, 8, 8]),
             ..base(OpKind::DepthwiseConv2d, "dwconv2d", 2, C::Relay, sh_dwconv2d)
         },
@@ -1949,6 +2000,27 @@ fn build_specs() -> Vec<OpSpec> {
             exemplar: "(invoke-emul (emul-engine 4) (input x [4]) (input y [4]))",
             exemplar_ty: X::Tensor(&[4]),
             ..base(OpKind::InvokeEmul, "invoke-emul", 3, C::Invoke, sh_invoke_add)
+        },
+        // ---- inline constant tensors (imported initializers) --------------
+        OpSpec {
+            attrs: &[("", A::Sh), ("", A::F32s)],
+            attrs_of: |op| match op {
+                Op::Constant(c) => {
+                    vec![AttrVal::Sh(c.shape().clone()), AttrVal::F32s(c.values())]
+                }
+                _ => unreachable!(),
+            },
+            from_attrs: |a| {
+                let sh = a[0].sh()?.clone();
+                let vals = a[1].f32s()?;
+                if sh.numel() != vals.len() {
+                    return None;
+                }
+                Some(Op::Constant(ConstData::new(sh, vals)))
+            },
+            exemplar: "(const [2] [1.5 -0.25])",
+            exemplar_ty: X::Tensor(&[2]),
+            ..base(OpKind::Constant, "const", 0, C::Leaf, sh_const)
         },
     ]
 }

@@ -49,6 +49,7 @@
 //! | [`ir::spec`] | **the operator registry**: one declarative `OpSpec` per op (arity, attrs, shape rule, eval kernel, lowering template, cost) — every generic pass dispatches through it |
 //! | [`egraph`] | from-scratch e-graph: union-find, arena-interned nodes, hashcons, congruence closure, e-matching, wave-parallel rewrite runner |
 //! | [`relay`] | Relay-like frontend operator graphs + workload library |
+//! | [`import`] | real-model front door: zero-dependency ONNX → relay importer (`hwsplit explore --model net.onnx`) with a structured unsupported-op report |
 //! | [`lower`] | Relay → EngineIR reification (paper Fig. 1) |
 //! | [`rewrites`] | the split-altering rewrite library (paper Fig. 2 + extensions) + [`rewrites::RuleSet`] |
 //! | [`tensor`] | pure-Rust tensor math + EngineIR evaluator (semantics oracle) |
@@ -76,6 +77,7 @@ pub mod egraph;
 pub mod error;
 pub mod extract;
 pub mod fx;
+pub mod import;
 pub mod ir;
 pub mod lower;
 pub mod par;

@@ -21,8 +21,8 @@
 //! | `batch-matmul a b` | `buffer (sched-loop b (reshape (invoke-mm …slices…)))` |
 //! | `relu x` / `gelu x` | `buffer (reshape (invoke-* (…-engine numel) (reshape x)))` |
 //! | `bias-add x b` / `eadd x y` / `emul x y` | `buffer (reshape (invoke-{add,emul} ({add,emul}-engine numel) …))` |
-//! | `conv2d s p x w` | `buffer (invoke-conv (conv-engine oh ow c k kh kw s) (pad2d p x) w)` |
-//! | `dwconv2d s p x w` | `buffer (invoke-dw-conv (dw-conv-engine oh ow c kh kw s) (pad2d p x) w)` |
+//! | `conv2d s ph pw x w` | `buffer (invoke-conv (conv-engine oh ow c k kh kw s) (pad2d ph pw x) w)` — `ph`/`pw` are TOTAL per-dim pads, split floor-before/ceil-after |
+//! | `dwconv2d s ph pw x w` | `buffer (invoke-dw-conv (dw-conv-engine oh ow c kh kw s) (pad2d ph pw x) w)` |
 //! | `maxpool2d kh kw s x` | `buffer (invoke-pool (pool-engine oh ow c kh kw s) x)` |
 //! | `softmax x` | rank-1: direct invoke; rank-2: `sched-loop` over rows; rank-3: nested `sched-loop`s (leading axis, then rows) |
 //! | `layernorm x g b` | the softmax row schedule on `layernorm-engine`, then a numel-wide `invoke-emul`/`invoke-add` affine tail over broadcast `g`/`b` |

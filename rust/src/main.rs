@@ -7,6 +7,7 @@
 //! hwsplit fig2
 //! hwsplit enumerate --workload mlp --iters 8 --rules paper
 //! hwsplit explore   --workload lenet --samples 64 --iters 6
+//!                   [--model net.onnx]
 //!                   [--backend analytic|interp|sim|pjrt]
 //!                   [--objective latency|area|balanced] [--csv dir]
 //!                   [--snapshot-out file.hws] [--snapshot-in file.hws]
@@ -22,6 +23,9 @@
 //!
 //! `explore` builds a [`Session`] (enumerate once) and issues one query;
 //! as a library the same session answers many queries — see the crate docs.
+//! `--model net.onnx` imports a real exported model through
+//! [`hwsplit::import`] instead of naming a built-in workload; unsupported
+//! ops are reported all at once (op type, node name, attributes).
 //! `--snapshot-out` persists the saturated e-graph (+ warm cost tables) and
 //! `--snapshot-in` / `serve` answer from it with zero re-saturation.
 //! `--extend-rules` re-saturates a loaded snapshot under a wider rule set,
@@ -234,7 +238,27 @@ fn cmd_explore(args: &Args) {
         println!("loaded snapshot {path} (workload: {})", s.workload().name);
         s
     } else {
-        let w = workload_or_die(args);
+        // `--model net.onnx` imports a real model as the workload; it is
+        // registered so error suggestions and later lookups know the name.
+        let w = if let Some(model) = args.get("model") {
+            if args.get("workload").is_some() {
+                eprintln!("--workload and --model are mutually exclusive; pick one");
+                std::process::exit(2);
+            }
+            let w = hwsplit::import::import_onnx(model).unwrap_or_else(|e| {
+                eprintln!("--model {model}: {e}");
+                std::process::exit(2);
+            });
+            hwsplit::relay::register_workload(w.clone());
+            println!(
+                "imported {model} as workload '{}' ({} relay nodes)",
+                w.name,
+                w.expr.len()
+            );
+            w
+        } else {
+            workload_or_die(args)
+        };
         let limits = RunnerLimits {
             max_nodes: args.usize("max-nodes", 100_000),
             ..Default::default()

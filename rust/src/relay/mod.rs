@@ -13,10 +13,21 @@
 
 pub mod workloads;
 
-pub use workloads::{all_workloads, workload_by_name, workload_names, Workload};
+pub use workloads::{
+    all_workloads, known_workload_names, register_workload, registered_names,
+    registered_workload, workload_by_name, workload_names, Workload,
+};
 
 use crate::egraph::Id;
-use crate::ir::{infer_ty, Op, RecExpr, Shape, Symbol, Ty};
+use crate::ir::{infer_ty, ConstData, Op, RecExpr, Shape, Symbol, Ty};
+
+/// Total SAME padding for one spatial dim: the smallest pad making
+/// `out = ceil(in / stride)` (ONNX `SAME_UPPER`). The padded extent is
+/// `(out-1)*stride + k`, so the window sweep always tiles exactly.
+pub fn same_pad(input: usize, k: usize, stride: usize) -> usize {
+    let out = input.div_ceil(stride);
+    ((out - 1) * stride + k).saturating_sub(input)
+}
 
 /// A typed builder for Relay-level operator graphs. Every method checks
 /// shapes eagerly (via the EngineIR type checker), so a workload that
@@ -59,8 +70,27 @@ impl GraphBuilder {
         self.push(Op::Weight(Symbol::new(name), Shape::new(dims)), &[])
     }
 
-    pub fn conv2d(&mut self, x: Id, w: Id, stride: usize, pad: usize) -> Id {
-        self.push(Op::Conv2d { stride, pad }, &[x, w])
+    /// 2-D convolution. `pad_h`/`pad_w` are the TOTAL padding per spatial
+    /// dim (split floor-before/ceil-after); the old symmetric per-side
+    /// `pad: p` is `conv2d_sym(x, w, stride, p)`.
+    pub fn conv2d(&mut self, x: Id, w: Id, stride: usize, pad_h: usize, pad_w: usize) -> Id {
+        self.push(Op::Conv2d { stride, pad_h, pad_w }, &[x, w])
+    }
+
+    /// Legacy symmetric padding: `p` zeros on each of the four sides,
+    /// i.e. `pad_h = pad_w = 2p` total.
+    pub fn conv2d_sym(&mut self, x: Id, w: Id, stride: usize, p: usize) -> Id {
+        self.conv2d(x, w, stride, 2 * p, 2 * p)
+    }
+
+    /// SAME-padded convolution: pads are computed from the input shape so
+    /// `out = ceil(in / stride)` per spatial dim (ONNX `SAME_UPPER`).
+    pub fn conv2d_same(&mut self, x: Id, w: Id, stride: usize) -> Id {
+        let xs = self.shape_of(x);
+        let ws = self.shape_of(w);
+        let pad_h = same_pad(xs.dim(1), ws.dim(2), stride);
+        let pad_w = same_pad(xs.dim(2), ws.dim(3), stride);
+        self.conv2d(x, w, stride, pad_h, pad_w)
     }
 
     pub fn dense(&mut self, x: Id, w: Id) -> Id {
@@ -96,6 +126,11 @@ impl GraphBuilder {
 
     pub fn flatten(&mut self, x: Id) -> Id {
         self.push(Op::Flatten, &[x])
+    }
+
+    /// Global average pooling: rank-3 `[C, H, W]` → rank-1 `[C]`.
+    pub fn global_avg_pool(&mut self, x: Id) -> Id {
+        self.push(Op::GlobalAvgPool, &[x])
     }
 
     /// General matmul of two computed tensors (attention scores etc.).
@@ -135,8 +170,58 @@ impl GraphBuilder {
         self.push(Op::Gelu, &[x])
     }
 
-    pub fn depthwise_conv2d(&mut self, x: Id, w: Id, stride: usize, pad: usize) -> Id {
-        self.push(Op::DepthwiseConv2d { stride, pad }, &[x, w])
+    /// Depthwise 2-D convolution; `pad_h`/`pad_w` are TOTAL padding per
+    /// spatial dim, as in [`Self::conv2d`].
+    pub fn depthwise_conv2d(
+        &mut self,
+        x: Id,
+        w: Id,
+        stride: usize,
+        pad_h: usize,
+        pad_w: usize,
+    ) -> Id {
+        self.push(Op::DepthwiseConv2d { stride, pad_h, pad_w }, &[x, w])
+    }
+
+    /// Legacy symmetric padding for depthwise conv (`pad_h = pad_w = 2p`).
+    pub fn depthwise_conv2d_sym(&mut self, x: Id, w: Id, stride: usize, p: usize) -> Id {
+        self.depthwise_conv2d(x, w, stride, 2 * p, 2 * p)
+    }
+
+    /// SAME-padded depthwise convolution (ONNX `SAME_UPPER`).
+    pub fn depthwise_conv2d_same(&mut self, x: Id, w: Id, stride: usize) -> Id {
+        let xs = self.shape_of(x);
+        let ws = self.shape_of(w);
+        let pad_h = same_pad(xs.dim(1), ws.dim(1), stride);
+        let pad_w = same_pad(xs.dim(2), ws.dim(2), stride);
+        self.depthwise_conv2d(x, w, stride, pad_h, pad_w)
+    }
+
+    /// Inline constant tensor (imported initializers, scale factors).
+    pub fn constant(&mut self, dims: &[usize], values: &[f32]) -> Id {
+        self.push(Op::Constant(ConstData::new(Shape::new(dims), values)), &[])
+    }
+
+    /// Broadcast a rank-1 tensor to `dims` (channel-wise for rank 3,
+    /// row-wise for rank 2).
+    pub fn bcast(&mut self, x: Id, dims: &[usize]) -> Id {
+        self.push(Op::Bcast(Shape::new(dims)), &[x])
+    }
+
+    /// Multiply every element by a compile-time scalar — `1/√dh` attention
+    /// scaling and friends — via a broadcast `const` and `emul`.
+    pub fn scale(&mut self, x: Id, factor: f32) -> Id {
+        let s = self.shape_of(x);
+        // `bcast` replicates a rank-1 tensor (channel-wise for rank 3,
+        // row-wise for rank 2); a uniform fill makes it a scalar scale.
+        let n = match s.rank() {
+            3 | 1 => s.dim(0),
+            2 => s.dim(1),
+            r => panic!("scale on rank {r}"),
+        };
+        let c = self.constant(&[n], &vec![factor; n]);
+        let b = self.push(Op::Bcast(s), &[c]);
+        self.emul(x, b)
     }
 
     /// Shape of an already-built node (for layer helpers).
@@ -149,7 +234,8 @@ impl GraphBuilder {
 
     // ---- compound layers -------------------------------------------------
 
-    /// `relu(conv(x) + bias)` — the standard conv block.
+    /// `relu(conv(x) + bias)` — the standard conv block. `pad` is the
+    /// TOTAL padding applied to both spatial dims.
     pub fn conv_relu(
         &mut self,
         x: Id,
@@ -162,7 +248,7 @@ impl GraphBuilder {
         let in_ch = self.shape_of(x).dim(0);
         let w = self.weight(&format!("{name}_w"), &[out_ch, in_ch, k, k]);
         let b = self.weight(&format!("{name}_b"), &[out_ch]);
-        let c = self.conv2d(x, w, stride, pad);
+        let c = self.conv2d(x, w, stride, pad, pad);
         let c = self.bias_add(c, b);
         self.relu(c)
     }
@@ -182,11 +268,12 @@ impl GraphBuilder {
     }
 
     /// `relu(dwconv(x) + bias)` — the depthwise half of a separable block.
+    /// `pad` is the TOTAL padding applied to both spatial dims.
     pub fn dwconv_relu(&mut self, x: Id, name: &str, k: usize, stride: usize, pad: usize) -> Id {
         let ch = self.shape_of(x).dim(0);
         let w = self.weight(&format!("{name}_w"), &[ch, k, k]);
         let b = self.weight(&format!("{name}_b"), &[ch]);
-        let c = self.depthwise_conv2d(x, w, stride, pad);
+        let c = self.depthwise_conv2d(x, w, stride, pad, pad);
         let c = self.bias_add(c, b);
         self.relu(c)
     }
@@ -326,8 +413,38 @@ mod tests {
     fn conv_relu_layer_shapes() {
         let mut b = GraphBuilder::new();
         let x = b.input("img", &[3, 32, 32]);
-        let y = b.conv_relu(x, "c1", 8, 3, 1, 1);
+        let y = b.conv_relu(x, "c1", 8, 3, 1, 2);
         assert_eq!(b.shape_of(y), Shape::new(&[8, 32, 32]));
+    }
+
+    #[test]
+    fn same_pad_matches_onnx_semantics() {
+        // 112×112 stride-2 k3: out = ceil(112/2) = 56, total pad 1.
+        assert_eq!(same_pad(112, 3, 2), 1);
+        // stride-1 k3 keeps size with total pad 2.
+        assert_eq!(same_pad(14, 3, 1), 2);
+        // already-tiling input needs no pad.
+        assert_eq!(same_pad(8, 2, 2), 0);
+        let mut b = GraphBuilder::new();
+        let x = b.input("img", &[3, 112, 112]);
+        let w = b.weight("w", &[8, 3, 3, 3]);
+        let y = b.conv2d_same(x, w, 2);
+        assert_eq!(b.shape_of(y), Shape::new(&[8, 56, 56]));
+    }
+
+    #[test]
+    fn scale_multiplies_elementwise() {
+        use crate::tensor::{eval_expr, Env};
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[4, 8]);
+        let y = b.scale(x, 0.25);
+        let e = b.finish_at(y);
+        let env = Env::random_for(&e, 7);
+        let got = eval_expr(&e, &mut env.clone()).unwrap();
+        let want = env.tensors[&crate::ir::Symbol::new("x")].clone();
+        for (g, w) in got.data.iter().zip(&want.data) {
+            assert!((g - w * 0.25).abs() < 1e-6);
+        }
     }
 
     #[test]

@@ -30,8 +30,8 @@ use crate::ir::RecExpr;
 /// A named workload: a Relay-level operator graph plus metadata.
 #[derive(Debug, Clone)]
 pub struct Workload {
-    pub name: &'static str,
-    pub description: &'static str,
+    pub name: String,
+    pub description: String,
     pub expr: RecExpr,
 }
 
@@ -41,8 +41,8 @@ pub fn relu128() -> Workload {
     let x = b.input("x", &[128]);
     b.relu(x);
     Workload {
-        name: "relu128",
-        description: "Fig. 2 running example: one 128-wide ReLU",
+        name: "relu128".to_string(),
+        description: "Fig. 2 running example: one 128-wide ReLU".to_string(),
         expr: b.finish(),
     }
 }
@@ -55,8 +55,8 @@ pub fn mlp() -> Workload {
     let h2 = b.dense_layer(h1, "fc2", 64, true);
     b.dense_layer(h2, "fc3", 10, false);
     Workload {
-        name: "mlp",
-        description: "3-layer MLP 784-128-64-10 (dense + bias + relu)",
+        name: "mlp".to_string(),
+        description: "3-layer MLP 784-128-64-10 (dense + bias + relu)".to_string(),
         expr: b.finish(),
     }
 }
@@ -65,7 +65,7 @@ pub fn mlp() -> Workload {
 pub fn lenet() -> Workload {
     let mut b = GraphBuilder::new();
     let x = b.input("img", &[1, 28, 28]);
-    let c1 = b.conv_relu(x, "c1", 8, 5, 1, 2); // (8,28,28)
+    let c1 = b.conv_relu(x, "c1", 8, 5, 1, 4); // (8,28,28)
     let p1 = b.maxpool2d(c1, 2, 2); // (8,14,14)
     let c2 = b.conv_relu(p1, "c2", 16, 5, 1, 0); // (16,10,10)
     let p2 = b.maxpool2d(c2, 2, 2); // (16,5,5)
@@ -74,8 +74,8 @@ pub fn lenet() -> Workload {
     let d2 = b.dense_layer(d1, "fc2", 84, true);
     b.dense_layer(d2, "fc3", 10, false);
     Workload {
-        name: "lenet",
-        description: "LeNet-style CNN: 2x(conv+relu+pool) + 3 dense layers",
+        name: "lenet".to_string(),
+        description: "LeNet-style CNN: 2x(conv+relu+pool) + 3 dense layers".to_string(),
         expr: b.finish(),
     }
 }
@@ -84,10 +84,10 @@ pub fn lenet() -> Workload {
 pub fn convblock() -> Workload {
     let mut b = GraphBuilder::new();
     let x = b.input("img", &[3, 16, 16]);
-    b.conv_relu(x, "c1", 8, 3, 1, 1);
+    b.conv_relu(x, "c1", 8, 3, 1, 2);
     Workload {
-        name: "convblock",
-        description: "One 3x3 conv (3->8 ch, 16x16, pad 1) + bias + relu — Fig. 1's unit",
+        name: "convblock".to_string(),
+        description: "One 3x3 conv (3->8 ch, 16x16, pad 1) + bias + relu — Fig. 1's unit".to_string(),
         expr: b.finish(),
     }
 }
@@ -96,14 +96,14 @@ pub fn convblock() -> Workload {
 pub fn resnet_block() -> Workload {
     let mut b = GraphBuilder::new();
     let x = b.input("img", &[8, 16, 16]);
-    let c1 = b.conv_relu(x, "c1", 8, 3, 1, 1);
+    let c1 = b.conv_relu(x, "c1", 8, 3, 1, 2);
     let w2 = b.weight("c2_w", &[8, 8, 3, 3]);
-    let c2 = b.conv2d(c1, w2, 1, 1);
+    let c2 = b.conv2d(c1, w2, 1, 2, 2);
     let s = b.add(c2, x);
     b.relu(s);
     Workload {
-        name: "resnet_block",
-        description: "Residual block: conv-relu-conv + skip add + relu (8ch, 16x16)",
+        name: "resnet_block".to_string(),
+        description: "Residual block: conv-relu-conv + skip add + relu (8ch, 16x16)".to_string(),
         expr: b.finish(),
     }
 }
@@ -117,8 +117,8 @@ pub fn ffn_block() -> Workload {
     let s = b.add(d, x);
     b.relu(s);
     Workload {
-        name: "ffn_block",
-        description: "Transformer FFN: dense 64->256->64 + residual add",
+        name: "ffn_block".to_string(),
+        description: "Transformer FFN: dense 64->256->64 + residual add".to_string(),
         expr: b.finish(),
     }
 }
@@ -140,8 +140,8 @@ pub fn attn_block() -> Workload {
     let r2 = b.add(down, n1);
     b.layer_norm(r2, "ln2");
     Workload {
-        name: "attn_block",
-        description: "BERT-tiny encoder block: 1-head attention + GELU FFN + affine layernorm (16x128)",
+        name: "attn_block".to_string(),
+        description: "BERT-tiny encoder block: 1-head attention + GELU FFN + affine layernorm (16x128)".to_string(),
         expr: b.finish(),
     }
 }
@@ -163,8 +163,8 @@ pub fn attn_block_mh4() -> Workload {
     let r2 = b.add(down, n1);
     b.layer_norm(r2, "ln2");
     Workload {
-        name: "attn_block_mh4",
-        description: "BERT-tiny encoder block: 4-head attention (batch-matmul over heads) + GELU FFN + affine layernorm (16x128)",
+        name: "attn_block_mh4".to_string(),
+        description: "BERT-tiny encoder block: 4-head attention (batch-matmul over heads) + GELU FFN + affine layernorm (16x128)".to_string(),
         expr: b.finish(),
     }
 }
@@ -190,8 +190,8 @@ pub fn attn_block_gqa() -> Workload {
     let r2 = b.add(down, n1);
     b.layer_norm(r2, "ln2");
     Workload {
-        name: "attn_block_gqa",
-        description: "BERT-tiny encoder block: grouped-query attention (4 Q heads, 2 shared K/V heads) + GELU FFN + affine layernorm (16x128)",
+        name: "attn_block_gqa".to_string(),
+        description: "BERT-tiny encoder block: grouped-query attention (4 Q heads, 2 shared K/V heads) + GELU FFN + affine layernorm (16x128)".to_string(),
         expr: b.finish(),
     }
 }
@@ -202,15 +202,15 @@ pub fn attn_block_gqa() -> Workload {
 pub fn mobile_block() -> Workload {
     let mut b = GraphBuilder::new();
     let x = b.input("img", &[16, 14, 14]);
-    let dw = b.dwconv_relu(x, "dw", 3, 1, 1); // (16,14,14)
+    let dw = b.dwconv_relu(x, "dw", 3, 1, 2); // (16,14,14)
     let pw_w = b.weight("pw_w", &[32, 16, 1, 1]);
     let pw_b = b.weight("pw_b", &[32]);
-    let pw = b.conv2d(dw, pw_w, 1, 0); // (32,14,14)
+    let pw = b.conv2d(dw, pw_w, 1, 0, 0); // (32,14,14)
     let pw = b.bias_add(pw, pw_b);
     b.relu(pw);
     Workload {
-        name: "mobile_block",
-        description: "MobileNet depthwise-separable block: 3x3 dwconv + 1x1 conv (16->32ch, 14x14)",
+        name: "mobile_block".to_string(),
+        description: "MobileNet depthwise-separable block: 3x3 dwconv + 1x1 conv (16->32ch, 14x14)".to_string(),
         expr: b.finish(),
     }
 }
@@ -222,15 +222,15 @@ pub fn mobile_block() -> Workload {
 pub fn mobile_block_s2() -> Workload {
     let mut b = GraphBuilder::new();
     let x = b.input("img", &[16, 15, 15]);
-    let dw = b.dwconv_relu(x, "dw", 3, 2, 1); // (16,8,8)
+    let dw = b.dwconv_relu(x, "dw", 3, 2, 2); // (16,8,8)
     let pw_w = b.weight("pw_w", &[32, 16, 1, 1]);
     let pw_b = b.weight("pw_b", &[32]);
-    let pw = b.conv2d(dw, pw_w, 1, 0); // (32,8,8)
+    let pw = b.conv2d(dw, pw_w, 1, 0, 0); // (32,8,8)
     let pw = b.bias_add(pw, pw_b);
     b.relu(pw);
     Workload {
-        name: "mobile_block_s2",
-        description: "MobileNet stride-2 downsampling block: 3x3/s2 dwconv + 1x1 conv (16->32ch, 15x15->8x8)",
+        name: "mobile_block_s2".to_string(),
+        description: "MobileNet stride-2 downsampling block: 3x3/s2 dwconv + 1x1 conv (16->32ch, 15x15->8x8)".to_string(),
         expr: b.finish(),
     }
 }
@@ -271,9 +271,56 @@ pub fn workload_names() -> &'static [&'static str] {
     ]
 }
 
-/// Look up a workload by CLI name.
+/// Look up a workload by CLI name: the static library first, then the
+/// process-global dynamic registry (imported models).
 pub fn workload_by_name(name: &str) -> Option<Workload> {
-    all_workloads().into_iter().find(|w| w.name == name)
+    all_workloads()
+        .into_iter()
+        .find(|w| w.name == name)
+        .or_else(|| registered_workload(name))
+}
+
+// ---------------------------------------------------------------------
+// Dynamic workload registry (imported models)
+// ---------------------------------------------------------------------
+
+use std::collections::HashMap;
+use std::sync::RwLock;
+
+static REGISTERED: RwLock<Option<HashMap<String, Workload>>> = RwLock::new(None);
+
+/// Register a dynamically-built workload (an imported ONNX model, a
+/// snapshot-embedded graph) so `workload_by_name`, error suggestions and
+/// snapshot loading see it exactly like a built-in. Re-registering a name
+/// replaces the previous entry; built-in names cannot be shadowed
+/// (`workload_by_name` checks the static library first).
+pub fn register_workload(w: Workload) {
+    let mut guard = REGISTERED.write().unwrap();
+    guard.get_or_insert_with(HashMap::new).insert(w.name.clone(), w);
+}
+
+/// A dynamically-registered workload by name.
+pub fn registered_workload(name: &str) -> Option<Workload> {
+    REGISTERED.read().unwrap().as_ref()?.get(name).cloned()
+}
+
+/// Names of every dynamically-registered workload (sorted, for stable
+/// error messages).
+pub fn registered_names() -> Vec<String> {
+    let mut v: Vec<String> = match REGISTERED.read().unwrap().as_ref() {
+        Some(m) => m.keys().cloned().collect(),
+        None => Vec::new(),
+    };
+    v.sort();
+    v
+}
+
+/// Every name `workload_by_name` resolves: the static library plus the
+/// dynamic registry — the list error suggestions must print.
+pub fn known_workload_names() -> Vec<String> {
+    let mut v: Vec<String> = workload_names().iter().map(|s| s.to_string()).collect();
+    v.extend(registered_names());
+    v
 }
 
 #[cfg(test)]
@@ -402,15 +449,32 @@ mod tests {
 
     #[test]
     fn workload_names_match_constructors() {
-        let built: Vec<&str> = all_workloads().iter().map(|w| w.name).collect();
+        let built: Vec<String> = all_workloads().into_iter().map(|w| w.name).collect();
         assert_eq!(workload_names(), built.as_slice());
     }
 
     #[test]
     fn workloads_have_distinct_names() {
-        let names: Vec<_> = all_workloads().iter().map(|w| w.name).collect();
+        let names: Vec<String> = all_workloads().into_iter().map(|w| w.name).collect();
         let mut dedup = names.clone();
         dedup.dedup();
         assert_eq!(names.len(), dedup.len());
+    }
+
+    #[test]
+    fn dynamic_registry_resolves_and_lists() {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[8]);
+        b.relu(x);
+        register_workload(Workload {
+            name: "test_dynamic_wl".to_string(),
+            description: "registry test".to_string(),
+            expr: b.finish(),
+        });
+        assert!(workload_by_name("test_dynamic_wl").is_some());
+        assert!(registered_names().contains(&"test_dynamic_wl".to_string()));
+        assert!(known_workload_names().contains(&"test_dynamic_wl".to_string()));
+        // Built-ins stay first-class and un-shadowable.
+        assert!(known_workload_names().contains(&"relu128".to_string()));
     }
 }

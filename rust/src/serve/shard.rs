@@ -753,7 +753,8 @@ mod tests {
     fn partition_spreads_real_workload_names() {
         // The stable-hash order should not degenerate to one shard for
         // the actual registry (guards against a pathological hash).
-        let names: Vec<&str> = crate::relay::all_workloads().iter().map(|w| w.name).collect();
+        let wls = crate::relay::all_workloads();
+        let names: Vec<&str> = wls.iter().map(|w| w.name.as_str()).collect();
         let groups = partition_workloads(&names, 2);
         assert!(!groups[0].is_empty() && !groups[1].is_empty(), "{groups:?}");
     }

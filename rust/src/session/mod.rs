@@ -491,8 +491,9 @@ impl Session {
         persist::write_snapshot(
             path,
             &persist::SnapshotParts {
-                workload_name: self.workload.name,
+                workload_name: &self.workload.name,
                 workload_src: self.workload.expr.to_string(),
+                workload_description: self.embedded_description(),
                 lowered: &self.lowered,
                 rule_names: self.rules.iter().map(|r| r.name.clone()).collect(),
                 egraph: &en.egraph,
@@ -512,14 +513,32 @@ impl Session {
     /// pays zero fixpoint rebuilds here too, and answers **bit-identically**
     /// (sampled-extraction noise is process-stable by construction).
     ///
-    /// Validation: the workload must exist in this build's library
-    /// ([`Error::UnknownWorkload`]) with an unchanged definition and every
-    /// persisted rule name must resolve ([`Error::UnknownRule`]) — a
-    /// snapshot from a drifted build is rejected, not misanswered.
+    /// Validation: the workload must exist in this build's library or the
+    /// process's dynamic registry ([`Error::UnknownWorkload`]) with an
+    /// unchanged definition, and every persisted rule name must resolve
+    /// ([`Error::UnknownRule`]) — a snapshot from a drifted build is
+    /// rejected, not misanswered. A v4 snapshot of an **imported** workload
+    /// carries its own definition: the loader parses the embedded source,
+    /// registers it ([`crate::relay::register_workload`]), and proceeds —
+    /// the file is self-contained.
     pub fn load_snapshot(path: impl AsRef<Path>) -> Result<Session, Error> {
         let snap = persist::read_snapshot(path)?;
-        let workload = crate::relay::workload_by_name(&snap.meta.workload)
-            .ok_or_else(|| Error::UnknownWorkload(snap.meta.workload.clone()))?;
+        let workload = match crate::relay::workload_by_name(&snap.meta.workload) {
+            Some(w) => w,
+            None => {
+                let src = snap
+                    .workload_src
+                    .clone()
+                    .ok_or_else(|| Error::UnknownWorkload(snap.meta.workload.clone()))?;
+                let w = Workload {
+                    name: snap.meta.workload.clone(),
+                    description: snap.workload_description.clone().unwrap_or_default(),
+                    expr: crate::ir::parse_expr(&src)?,
+                };
+                crate::relay::register_workload(w.clone());
+                w
+            }
+        };
         if persist::workload_fingerprint(&workload.expr.to_string())
             != snap.meta.workload_fingerprint
         {
@@ -616,8 +635,9 @@ impl Session {
             path,
             base_path,
             &persist::SnapshotParts {
-                workload_name: self.workload.name,
+                workload_name: &self.workload.name,
                 workload_src: self.workload.expr.to_string(),
+                workload_description: self.embedded_description(),
                 lowered: &self.lowered,
                 rule_names: self.rules.iter().map(|r| r.name.clone()).collect(),
                 egraph: &en.egraph,
@@ -626,6 +646,18 @@ impl Session {
                 cache: &self.extract_cache,
             },
         )
+    }
+
+    /// What snapshots embed for this workload: `Some(description)` — which
+    /// selects the self-contained v4 format — iff the workload is absent
+    /// from the static library (i.e. it was imported/registered at
+    /// runtime, so a fresh loading process has no constructor for it).
+    fn embedded_description(&self) -> Option<String> {
+        if crate::relay::workload_names().contains(&self.workload.name.as_str()) {
+            None
+        } else {
+            Some(self.workload.description.clone())
+        }
     }
 
     /// Resize the evaluation worker pool (snapshot loads default to the
@@ -881,6 +913,36 @@ mod tests {
         assert_eq!(key(&loaded.query(&q).unwrap()), key(&s.query(&q).unwrap()));
         let _ = std::fs::remove_file(&base_path);
         let _ = std::fs::remove_file(&delta_path);
+    }
+
+    #[test]
+    fn imported_workload_snapshot_is_self_contained() {
+        let dir = std::env::temp_dir().join("hwsplit_session_import_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("imported.hws");
+        let mut b = crate::relay::GraphBuilder::new();
+        let x = b.input("x", &[64]);
+        b.relu(x);
+        let w = Workload {
+            name: "session_test_imported".to_string(),
+            description: "session import roundtrip test".to_string(),
+            expr: b.finish(),
+        };
+        let mut writer =
+            Session::builder().workload(w).rules(RuleSet::Fig2).iters(4).build().unwrap();
+        writer.save_snapshot(&path).unwrap();
+        // The workload is not in the static library, so the loader must be
+        // served entirely by the snapshot's embedded (v4) definition.
+        let mut loaded = Session::load_snapshot(&path).unwrap();
+        assert_eq!(loaded.workload().name, "session_test_imported");
+        assert_eq!(loaded.workload().description, "session import roundtrip test");
+        assert_eq!(loaded.enumeration_count(), 0);
+        let ev = loaded.query(&Query::new().samples(8)).unwrap();
+        assert!(!ev.designs.is_empty());
+        // The loader registered the definition for this process, so error
+        // suggestions and repeat lookups now see it.
+        assert!(crate::relay::registered_workload("session_test_imported").is_some());
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

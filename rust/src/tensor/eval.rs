@@ -183,6 +183,10 @@ impl<'a, 'b> Evaluator<'a, 'b> {
                 Op::Input(name, _) | Op::Weight(name, _) => Tensor(
                     env.tensors.get(name).cloned().ok_or(EvalError::UnboundTensor(*name))?,
                 ),
+                // Constants carry their own data — no environment binding.
+                Op::Constant(c) => {
+                    Tensor(super::Tensor::new(c.shape().clone(), c.values()))
+                }
                 _ => unreachable!(),
             },
 
@@ -378,7 +382,7 @@ mod tests {
         let a = eval("(gelu (input x [16]))", 13);
         let b = eval("(invoke-gelu (gelu-engine 16) (input x [16]))", 13);
         assert!(a.allclose(&b, 0.0));
-        let a = eval("(dwconv2d 1 0 (input x [3 6 6]) (weight w [3 3 3]))", 14);
+        let a = eval("(dwconv2d 1 0 0 (input x [3 6 6]) (weight w [3 3 3]))", 14);
         let b = eval(
             "(invoke-dw-conv (dw-conv-engine 4 4 3 3 3 1) (input x [3 6 6]) (weight w [3 3 3]))",
             14,

@@ -283,16 +283,19 @@ impl Tensor {
         }
     }
 
-    /// Zero-pad H and W of `(C,H,W)`.
-    pub fn pad2d(&self, pad: usize) -> Tensor {
+    /// Zero-pad H and W of `(C,H,W)`. `pad_h`/`pad_w` are the TOTAL padding
+    /// per spatial dim, split `floor(p/2)` before / `ceil(p/2)` after
+    /// (ONNX `SAME_UPPER`); a symmetric pad of `p` per side is `2p` total.
+    pub fn pad2d(&self, pad_h: usize, pad_w: usize) -> Tensor {
         assert_eq!(self.rank(), 3);
         let (c, h, w) = (self.shape.dim(0), self.shape.dim(1), self.shape.dim(2));
-        let (nh, nw) = (h + 2 * pad, w + 2 * pad);
+        let (nh, nw) = (h + pad_h, w + pad_w);
+        let (top, left) = (pad_h / 2, pad_w / 2);
         let mut out = vec![0.0f32; c * nh * nw];
         for ci in 0..c {
             for y in 0..h {
                 let src = &self.data[ci * h * w + y * w..ci * h * w + (y + 1) * w];
-                let dst = ci * nh * nw + (y + pad) * nw + pad;
+                let dst = ci * nh * nw + (y + top) * nw + left;
                 out[dst..dst + w].copy_from_slice(src);
             }
         }
@@ -593,8 +596,25 @@ mod tests {
     fn pad_then_conv_keeps_size() {
         let x = Tensor::random(s(&[2, 6, 6]), 11);
         let w = Tensor::random(s(&[2, 2, 3, 3]), 12);
-        let padded = x.pad2d(1).conv2d(&w, 1);
+        let padded = x.pad2d(2, 2).conv2d(&w, 1);
         assert_eq!(padded.shape, s(&[2, 6, 6]));
+    }
+
+    #[test]
+    fn asymmetric_pad_splits_floor_before_ceil_after() {
+        // pad_h=3 on H=2: 1 zero-row above, 2 below; pad_w=1 on W=2: 0
+        // left, 1 right (SAME_UPPER: floor(p/2) before, ceil(p/2) after).
+        let x = Tensor::new(s(&[1, 2, 2]), vec![1.0, 2.0, 3.0, 4.0]);
+        let p = x.pad2d(3, 1);
+        assert_eq!(p.shape, s(&[1, 5, 3]));
+        assert_eq!(p.at(&[0, 0, 0]), 0.0);
+        assert_eq!(p.at(&[0, 1, 0]), 1.0);
+        assert_eq!(p.at(&[0, 1, 1]), 2.0);
+        assert_eq!(p.at(&[0, 1, 2]), 0.0);
+        assert_eq!(p.at(&[0, 2, 0]), 3.0);
+        assert_eq!(p.at(&[0, 2, 1]), 4.0);
+        assert_eq!(p.at(&[0, 3, 0]), 0.0);
+        assert_eq!(p.at(&[0, 4, 2]), 0.0);
     }
 
     #[test]

@@ -236,6 +236,72 @@ fn served_frontiers_are_identical_across_apply_widths() {
     assert_eq!(serve(1), serve(4), "served designs/frontier differ across apply widths");
 }
 
+// ---------------------------------------------------------------------
+// Asymmetric padding (total pad_h/pad_w)
+// ---------------------------------------------------------------------
+//
+// `conv2d_sym(stride, p)` is sugar for a TOTAL per-dim pad of `2p`; the
+// enumeration engine must not be able to tell the two spellings apart.
+
+fn saturate_expr(expr: hwsplit::ir::RecExpr) -> (String, String) {
+    let lowered = lower_default(&expr).expect("workload lowers");
+    let mut runner = Runner::new(lowered, RuleSet::Paper.rules())
+        .with_limits(RunnerLimits { max_nodes: 12_000, ..Default::default() });
+    let rep = runner.run(3);
+    (fingerprint(&runner.egraph), canon_report(&rep))
+}
+
+/// Symmetric sugar vs explicit total pads: identical relay terms, hence
+/// bit-identical saturated e-graphs and iteration reports.
+#[test]
+fn symmetric_pad_sugar_saturates_bit_identically_to_explicit_total_pads() {
+    use hwsplit::relay::GraphBuilder;
+    let build = |explicit: bool| {
+        let mut b = GraphBuilder::new();
+        let x = b.input("x", &[3, 16, 16]);
+        let w = b.weight("w", &[8, 3, 3, 3]);
+        let c = if explicit {
+            b.conv2d(x, w, 1, 2, 2) // total 2 per dim = 1 before + 1 after
+        } else {
+            b.conv2d_sym(x, w, 1, 1)
+        };
+        b.relu(c);
+        b.finish()
+    };
+    assert_eq!(build(false), build(true), "sugar must desugar to total pads");
+    let (fp_sym, rep_sym) = saturate_expr(build(false));
+    let (fp_exp, rep_exp) = saturate_expr(build(true));
+    assert_eq!(fp_sym, fp_exp, "e-graphs differ between pad spellings");
+    assert_eq!(rep_sym, rep_exp, "iteration reports differ between pad spellings");
+}
+
+/// A genuinely asymmetric pad (pad_h ≠ pad_w, both odd totals, so the
+/// floor-before/ceil-after split is exercised on both axes) must lower,
+/// type-check, saturate and evaluate like any other conv.
+#[test]
+fn asymmetric_pad_enumerates_and_evaluates() {
+    use hwsplit::ir::{Shape, Ty};
+    use hwsplit::relay::GraphBuilder;
+    use hwsplit::tensor::{eval_expr, Env};
+    let mut b = GraphBuilder::new();
+    let x = b.input("x", &[3, 14, 10]);
+    let w = b.weight("w", &[4, 3, 3, 3]);
+    let c = b.conv2d(x, w, 2, 1, 3); // out: (14+1-3)/2+1=7, (10+3-3)/2+1=6
+    b.relu(c);
+    let expr = b.finish();
+    assert_eq!(expr.typecheck().unwrap(), Ty::Tensor(Shape::new(&[4, 7, 6])));
+    let out = eval_expr(&expr, &mut Env::random_for(&expr, 9)).expect("evaluates");
+    assert_eq!(out.shape, Shape::new(&[4, 7, 6]));
+    assert!(out.data.iter().all(|v| v.is_finite()));
+
+    let lowered = lower_default(&expr).expect("asymmetric conv lowers");
+    let mut runner = Runner::new(lowered, RuleSet::Paper.rules())
+        .with_limits(RunnerLimits { max_nodes: 12_000, ..Default::default() });
+    let rep = runner.run(3);
+    assert!(rep.nodes > 50, "asymmetric conv must still grow a design space");
+    assert!(rep.designs_lower_bound >= 2.0, "expected at least two designs");
+}
+
 /// The incremental engine's whole point: after the first iteration it
 /// searches far fewer classes than live in the graph.
 #[test]

@@ -29,7 +29,7 @@ fn fig1_conv2d_reification_golden() {
     let txt = lo.to_string();
     assert!(txt.contains("(conv-engine 16 16 3 8 3 3 1)"), "engine instantiation: {txt}");
     assert!(txt.contains("(buffer sram (invoke-conv"), "output storage: {txt}");
-    assert!(txt.contains("(pad2d 1"), "padding made explicit: {txt}");
+    assert!(txt.contains("(pad2d 2 2"), "total padding made explicit: {txt}");
     // And it still computes conv+bias+relu.
     let a = eval_expr(&w.expr, &mut Env::random_for(&w.expr, 3)).unwrap();
     let b = eval_expr(&lo, &mut Env::random_for(&lo, 3)).unwrap();

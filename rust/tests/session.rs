@@ -90,7 +90,7 @@ fn relu128_frontier_beats_baseline_somewhere() {
 #[test]
 fn new_workloads_enumerate_nontrivial_frontiers() {
     for w in [workloads::attn_block(), workloads::mobile_block(), workloads::mobile_block_s2()] {
-        let name = w.name;
+        let name = w.name.clone();
         let mut s = Session::builder()
             .workload(w)
             .rules(RuleSet::All)
